@@ -1,0 +1,113 @@
+//! E1 — Table 1: time to create a 3 GiB dataset, native access library
+//! vs forwarding VOL plugin over 1/2/3 (+ more) nodes.
+//!
+//! Paper (§4.1): native 26.28 s; forwarding 61.12 / 36.07 / 29.34 s for
+//! 1/2/3 nodes — the forwarding overhead is offset at 3 nodes. We
+//! reproduce the *shape* on the calibrated simulated testbed at 1/32
+//! scale and report paper-scale seconds.
+//!
+//! Run: `cargo bench --bench e1_table1_forwarding`
+
+use skyhook_map::config::ClusterConfig;
+use skyhook_map::dataset::{Dataspace, Hyperslab};
+use skyhook_map::simnet::{CostParams, SimScale};
+use skyhook_map::store::Cluster;
+use skyhook_map::util::bench::table;
+use skyhook_map::util::rng::Xoshiro256;
+use skyhook_map::vol::{vol_registry, ForwardingBackend, NativeBackend, VolFile};
+
+const PAPER_BYTES: u64 = 3 << 30;
+const SCALE: f64 = 32.0;
+
+fn main() {
+    let scale = SimScale::new(SCALE);
+    let elems = (scale.dataset_bytes(PAPER_BYTES) / 4) as usize;
+    let mut rng = Xoshiro256::new(1);
+    let data: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
+    let space = Dataspace::new(&[elems as u64]).unwrap();
+    let chunk = vec![(elems / 256) as u64];
+
+    // Native baseline.
+    let mut native = VolFile::open(Box::new(NativeBackend::new(CostParams::paper_testbed())));
+    native.create_dataset("d", &space, &chunk).unwrap();
+    let t0 = native.now();
+    native.write_all("d", &data).unwrap();
+    let native_s = scale.to_paper_seconds(native.now() - t0);
+
+    let mut rows = vec![vec![
+        "native (no plugin)".to_string(),
+        "1".to_string(),
+        format!("{native_s:.2}"),
+        "26.28".to_string(),
+        "-".to_string(),
+    ]];
+
+    // Forwarding plugin, 1..=6 nodes (paper stops at 3; we extend to show
+    // diminishing returns once the client-side serialization dominates).
+    let paper = [Some(61.12), Some(36.07), Some(29.34), None, None, None];
+    let mut measured = Vec::new();
+    for (i, osds) in (1usize..=6).enumerate() {
+        let cfg = ClusterConfig {
+            osds,
+            replicas: 1,
+            ..Default::default()
+        };
+        let cluster = Cluster::new(&cfg, vol_registry());
+        let mut fwd = VolFile::open(Box::new(ForwardingBackend::new(cluster)));
+        fwd.create_dataset("d", &space, &chunk).unwrap();
+        let t0 = fwd.now();
+        fwd.write_all("d", &data).unwrap();
+        let s = scale.to_paper_seconds(fwd.now() - t0);
+        measured.push(s);
+        // Spot-check integrity.
+        let got = fwd
+            .read("d", &Hyperslab::new(&[42], &[8]).unwrap())
+            .unwrap();
+        assert_eq!(got, &data[42..50]);
+        rows.push(vec![
+            "forwarding plugin".to_string(),
+            osds.to_string(),
+            format!("{s:.2}"),
+            paper[i].map(|p| format!("{p}")).unwrap_or("-".into()),
+            paper[i]
+                .map(|p| format!("{:+.1}%", (measured[i] - p) / p * 100.0))
+                .unwrap_or("-".into()),
+        ]);
+    }
+
+    table(
+        "E1 / Table 1: create 3 GiB dataset (paper-scale seconds, sim testbed)",
+        &["writer", "nodes", "measured (s)", "paper (s)", "error"],
+        &rows,
+    );
+
+    // Shape assertions (the reproduction criteria).
+    let overhead = measured[0] / native_s;
+    println!("\nshape checks:");
+    println!(
+        "  forwarding/1-node = {overhead:.2}x native (paper: 61.12/26.28 = 2.33x)  {}",
+        if (1.8..=2.9).contains(&overhead) { "OK" } else { "FAIL" }
+    );
+    // Strict monotonicity over the paper's 1..3 range; beyond that,
+    // random placement imbalance can flatten the curve.
+    let monotone = measured[..3].windows(2).all(|w| w[1] < w[0]);
+    println!(
+        "  makespan decreases over 1..3 nodes: {}",
+        if monotone { "OK" } else { "FAIL" }
+    );
+    let offset3 = measured[2] < 1.25 * native_s;
+    // (paper: 29.34 vs 26.28 — 'at least 3 nodes are required ... to
+    // offset the forwarding plugin overhead')
+    println!(
+        "  3 nodes ≈ offsets the overhead ({:.2}s vs native {native_s:.2}s): {}",
+        measured[2],
+        if offset3 { "OK" } else { "FAIL" }
+    );
+    let fit_a = {
+        // Fit t(n) = a + b/n on nodes 1 and 3 like the paper data.
+        (3.0 * measured[2] - measured[0]) / 2.0
+    };
+    println!("  serial client term a = {fit_a:.2}s (paper fit: 13.45s)");
+    assert!(monotone && (1.8..=2.9).contains(&overhead) && offset3);
+    println!("\ne1_table1_forwarding OK");
+}

@@ -1,0 +1,126 @@
+//! E2 — Figure 4 workflow: pushdown vs client-side query execution.
+//!
+//! Sweeps predicate selectivity and measures (a) bytes crossing the
+//! client↔storage network, (b) simulated latency, (c) wall time, for
+//! aggregate and row queries. Expected shape: pushdown moves
+//! ~selectivity-proportional bytes for row queries and O(#objects)
+//! constant-size partials for algebraic aggregates; client-side always
+//! moves the whole dataset.
+//!
+//! Run: `cargo bench --bench e2_pushdown`
+
+use skyhook_map::config::Config;
+use skyhook_map::dataset::partition::PartitionSpec;
+use skyhook_map::dataset::table::gen;
+use skyhook_map::dataset::Layout;
+use skyhook_map::launch::Stack;
+use skyhook_map::skyhook::{AggFunc, CmpOp, ExecMode, Predicate, Query};
+use skyhook_map::util::bench::table;
+use skyhook_map::util::bytes::fmt_size;
+
+fn main() {
+    let cfg = Config::from_text(
+        "[cluster]\nosds = 6\nreplicas = 1\n[driver]\nworkers = 6\n",
+    )
+    .unwrap();
+    let stack = Stack::build(&cfg).unwrap();
+    let rows = 300_000;
+    let batch = gen::sensor_table(rows, 7);
+    stack
+        .driver
+        .write_table(
+            "t",
+            &batch,
+            Layout::Col,
+            &PartitionSpec::with_target(256 * 1024),
+            None,
+        )
+        .unwrap();
+
+    // val ~ N(50,15): thresholds giving ~selectivity fractions.
+    let cases = [
+        ("~0.1%", 96.0),
+        ("~2%", 81.0),
+        ("~16%", 65.0),
+        ("~50%", 50.0),
+        ("100%", -1e9),
+    ];
+
+    // Aggregate queries.
+    let mut agg_rows = Vec::new();
+    for (label, thr) in cases {
+        let q = Query::scan("t")
+            .filter(Predicate::cmp("val", CmpOp::Gt, thr))
+            .aggregate(AggFunc::Mean, "val")
+            .aggregate(AggFunc::Count, "val");
+        stack.driver.reset_time();
+        let push = stack.driver.execute(&q, Some(ExecMode::Pushdown)).unwrap();
+        stack.driver.reset_time();
+        let client = stack.driver.execute(&q, Some(ExecMode::ClientSide)).unwrap();
+        assert!((push.aggregates[1] - client.aggregates[1]).abs() < 0.5);
+        agg_rows.push(vec![
+            label.to_string(),
+            format!("{:.0}", push.aggregates[1]),
+            fmt_size(push.stats.bytes_moved),
+            fmt_size(client.stats.bytes_moved),
+            format!("{:.4}", push.stats.sim_seconds),
+            format!("{:.4}", client.stats.sim_seconds),
+            format!(
+                "{:.1}x",
+                client.stats.sim_seconds / push.stats.sim_seconds
+            ),
+        ]);
+    }
+    table(
+        "E2a: aggregate mean(val) where val>thr — pushdown vs client-side",
+        &[
+            "selectivity",
+            "matches",
+            "push bytes",
+            "client bytes",
+            "push sim s",
+            "client sim s",
+            "speedup",
+        ],
+        &agg_rows,
+    );
+
+    // Row queries (results must come back, so pushdown advantage shrinks
+    // as selectivity grows — the crossover the planner cares about).
+    let mut row_rows = Vec::new();
+    for (label, thr) in cases {
+        let q = Query::scan("t")
+            .filter(Predicate::cmp("val", CmpOp::Gt, thr))
+            .select(&["ts", "val"]);
+        stack.driver.reset_time();
+        let push = stack.driver.execute(&q, Some(ExecMode::Pushdown)).unwrap();
+        stack.driver.reset_time();
+        let client = stack.driver.execute(&q, Some(ExecMode::ClientSide)).unwrap();
+        assert_eq!(
+            push.rows.as_ref().unwrap().nrows(),
+            client.rows.as_ref().unwrap().nrows()
+        );
+        row_rows.push(vec![
+            label.to_string(),
+            push.rows.as_ref().unwrap().nrows().to_string(),
+            fmt_size(push.stats.bytes_moved),
+            fmt_size(client.stats.bytes_moved),
+            format!("{:.4}", push.stats.sim_seconds),
+            format!("{:.4}", client.stats.sim_seconds),
+        ]);
+    }
+    table(
+        "E2b: row retrieval select ts,val where val>thr",
+        &[
+            "selectivity",
+            "rows",
+            "push bytes",
+            "client bytes",
+            "push sim s",
+            "client sim s",
+        ],
+        &row_rows,
+    );
+
+    println!("\ne2_pushdown OK");
+}

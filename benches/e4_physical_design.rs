@@ -1,0 +1,135 @@
+//! E4 — §5 bullet 2: physical design management.
+//!
+//! Row vs columnar object layout across query projectivity (how many of
+//! the 16 columns a query touches), plus the storage-side transform cost
+//! and its break-even. Also times the raw layout codecs (wall clock) and,
+//! when artifacts are present, the PJRT transform kernel.
+//!
+//! Run: `cargo bench --bench e4_physical_design`
+
+use skyhook_map::config::Config;
+use skyhook_map::dataset::layout::{decode_batch, decode_projection, encode_batch};
+use skyhook_map::dataset::partition::PartitionSpec;
+use skyhook_map::dataset::table::gen;
+use skyhook_map::dataset::Layout;
+use skyhook_map::launch::Stack;
+use skyhook_map::skyhook::{AggFunc, Query};
+use skyhook_map::util::bench::{black_box, report, table, Bench};
+
+fn main() {
+    let rows = 150_000;
+    let ncols = 16;
+    let batch = gen::wide_table(rows, ncols, 9);
+
+    // ---- query-path comparison over the cluster ------------------------
+    let mut out = Vec::new();
+    for projectivity in [1usize, 4, 16] {
+        let mut sims = Vec::new();
+        for layout in [Layout::Row, Layout::Col] {
+            let cfg = Config::from_text("[cluster]\nosds = 4\nreplicas = 1\n").unwrap();
+            let stack = Stack::build(&cfg).unwrap();
+            stack
+                .driver
+                .write_table(
+                    "w",
+                    &batch,
+                    layout,
+                    &PartitionSpec::with_target(512 * 1024),
+                    None,
+                )
+                .unwrap();
+            let mut q = Query::scan("w");
+            for c in 0..projectivity {
+                q = q.aggregate(AggFunc::Mean, &format!("c{c}"));
+            }
+            stack.driver.reset_time();
+            let r = stack.driver.execute(&q, None).unwrap();
+            sims.push(r.stats.sim_seconds);
+        }
+        out.push(vec![
+            format!("{projectivity}/{ncols}"),
+            format!("{:.4}", sims[0]),
+            format!("{:.4}", sims[1]),
+            format!("{:.2}x", sims[0] / sims[1]),
+        ]);
+    }
+    table(
+        "E4a: mean over k of 16 columns — row vs col objects (sim seconds)",
+        &["projectivity", "row", "col", "col speedup"],
+        &out,
+    );
+
+    // ---- transform cost + break-even -----------------------------------
+    let cfg = Config::from_text("[cluster]\nosds = 4\nreplicas = 1\n").unwrap();
+    let stack = Stack::build(&cfg).unwrap();
+    stack
+        .driver
+        .write_table(
+            "w",
+            &batch,
+            Layout::Row,
+            &PartitionSpec::with_target(512 * 1024),
+            None,
+        )
+        .unwrap();
+    let q = Query::scan("w").aggregate(AggFunc::Mean, "c0");
+    stack.driver.reset_time();
+    let before = stack.driver.execute(&q, None).unwrap().stats.sim_seconds;
+    stack.driver.reset_time();
+    let tcost = stack
+        .driver
+        .transform_layout("w", Layout::Col)
+        .unwrap()
+        .sim_seconds;
+    stack.driver.reset_time();
+    let after = stack.driver.execute(&q, None).unwrap().stats.sim_seconds;
+    println!(
+        "\nE4b: transform-at-storage cost {tcost:.3}s; query {before:.4}s -> {after:.4}s; \
+         break-even after {:.1} queries",
+        tcost / (before - after).max(1e-9)
+    );
+
+    // ---- codec microbenches (wall clock) --------------------------------
+    let small = gen::wide_table(20_000, ncols, 2);
+    let row_bytes = encode_batch(&small, Layout::Row);
+    let col_bytes = encode_batch(&small, Layout::Col);
+    let b = Bench::new().warmup(1).samples(8);
+    let results = vec![
+        b.run_bytes("encode row", row_bytes.len() as u64, || {
+            black_box(encode_batch(&small, Layout::Row));
+        }),
+        b.run_bytes("encode col", col_bytes.len() as u64, || {
+            black_box(encode_batch(&small, Layout::Col));
+        }),
+        b.run_bytes("decode row (full)", row_bytes.len() as u64, || {
+            black_box(decode_batch(&row_bytes).unwrap());
+        }),
+        b.run_bytes("decode col (full)", col_bytes.len() as u64, || {
+            black_box(decode_batch(&col_bytes).unwrap());
+        }),
+        b.run_bytes("project 1/16 from row", row_bytes.len() as u64, || {
+            black_box(decode_projection(&row_bytes, &["c3"]).unwrap());
+        }),
+        b.run_bytes("project 1/16 from col", col_bytes.len() as u64, || {
+            black_box(decode_projection(&col_bytes, &["c3"]).unwrap());
+        }),
+    ];
+    report("E4c: layout codec microbenches (20k x 16 f32)", &results);
+
+    // ---- PJRT transform kernel (when artifacts exist) --------------------
+    if std::path::Path::new("artifacts/transform_r2c.hlo.txt").exists() {
+        use skyhook_map::runtime::{PjrtEngine, COLS, ROWS};
+        let engine = PjrtEngine::load("artifacts").unwrap();
+        let data: Vec<f32> = (0..ROWS * COLS).map(|i| i as f32).collect();
+        let r = Bench::new().warmup(1).samples(5).run_bytes(
+            "pjrt transform r2c (16384x8)",
+            (ROWS * COLS * 4) as u64,
+            || {
+                black_box(engine.transform(&data, true).unwrap());
+            },
+        );
+        report("E4d: AOT Pallas transform kernel", &[r]);
+    }
+
+    println!("\ne4_physical_design OK");
+}

@@ -1,0 +1,105 @@
+//! E5 — §3.2: composability of access operations.
+//!
+//! Algebraic aggregates (count/sum/mean/var/min/max) decompose into
+//! constant-size partials: pushdown moves O(#objects) bytes. The holistic
+//! median does not: the filtered values must travel. Sweeps dataset size
+//! and reports bytes moved + simulated latency for both, plus the
+//! co-partitioning remedy measured in E7.
+//!
+//! Run: `cargo bench --bench e5_composability`
+
+use skyhook_map::config::Config;
+use skyhook_map::dataset::partition::PartitionSpec;
+use skyhook_map::dataset::table::gen;
+use skyhook_map::dataset::Layout;
+use skyhook_map::launch::Stack;
+use skyhook_map::skyhook::{AggFunc, Query};
+use skyhook_map::util::bench::table;
+use skyhook_map::util::bytes::fmt_size;
+
+fn main() {
+    let mut rows_out = Vec::new();
+    for rows in [50_000usize, 100_000, 200_000, 400_000] {
+        let cfg = Config::from_text(
+            "[cluster]\nosds = 6\nreplicas = 1\n[driver]\nworkers = 6\n",
+        )
+        .unwrap();
+        let stack = Stack::build(&cfg).unwrap();
+        let batch = gen::sensor_table(rows, 13);
+        stack
+            .driver
+            .write_table(
+                "t",
+                &batch,
+                Layout::Col,
+                &PartitionSpec::with_target(256 * 1024),
+                None,
+            )
+            .unwrap();
+        let objects = stack
+            .driver
+            .execute(&Query::scan("t").aggregate(AggFunc::Count, "val"), None)
+            .unwrap()
+            .stats
+            .objects;
+
+        stack.driver.reset_time();
+        let mean = stack
+            .driver
+            .execute(&Query::scan("t").aggregate(AggFunc::Mean, "val"), None)
+            .unwrap();
+        stack.driver.reset_time();
+        let median = stack
+            .driver
+            .execute(&Query::scan("t").aggregate(AggFunc::Median, "val"), None)
+            .unwrap();
+        // The §3.2 remedy: a de-composable approximation (mergeable
+        // quantile sketch — constant-size partials like the mean).
+        stack.driver.reset_time();
+        let (approx, bound, sketch_stats) = stack
+            .driver
+            .approx_quantile("t", "val", 0.5, &skyhook_map::skyhook::Predicate::True)
+            .unwrap();
+
+        // Sanity: median of N(50,15) ≈ 50; sketch within its bound.
+        assert!((median.aggregates[0] - 50.0).abs() < 1.0);
+        assert!((approx - median.aggregates[0]).abs() <= 2.0 * bound);
+
+        rows_out.push(vec![
+            rows.to_string(),
+            objects.to_string(),
+            fmt_size(mean.stats.bytes_moved),
+            fmt_size(median.stats.bytes_moved),
+            fmt_size(sketch_stats.bytes_moved),
+            format!("{:.4}", mean.stats.sim_seconds),
+            format!("{:.4}", median.stats.sim_seconds),
+            format!(
+                "{:.0}x",
+                median.stats.bytes_moved as f64 / mean.stats.bytes_moved as f64
+            ),
+            format!("{:.3}", (approx - median.aggregates[0]).abs()),
+        ]);
+    }
+    table(
+        "E5: algebraic (mean) vs holistic (median) aggregate pushdown",
+        &[
+            "rows",
+            "objects",
+            "mean bytes",
+            "median bytes",
+            "sketch bytes",
+            "mean sim s",
+            "median sim s",
+            "median penalty",
+            "sketch err",
+        ],
+        &rows_out,
+    );
+    println!(
+        "\nexpected shape: mean's bytes stay ~O(objects) and flat per row count;\n\
+         median's bytes grow linearly with rows. The sketch column is the §3.2\n\
+         remedy implemented: a de-composable approximation whose partials are\n\
+         constant-size (like the mean) with the measured absolute error shown."
+    );
+    println!("\ne5_composability OK");
+}

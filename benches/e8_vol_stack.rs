@@ -1,0 +1,121 @@
+//! E8 — Figure 2: the cost of VOL plugin indirection.
+//!
+//! Microbenchmarks the access-library operation path for the native
+//! backend vs the forwarding plugin (client-side decompose + scatter/
+//! gather + server-local plugin), per §4.1's observation that "this model
+//! introduces an extra forwarding plugin which also introduces additional
+//! overhead" — quantifying the per-op price and where parallelism buys it
+//! back. Reports wall time (real code path) and simulated time (testbed).
+//!
+//! Run: `cargo bench --bench e8_vol_stack`
+
+use skyhook_map::config::ClusterConfig;
+use skyhook_map::dataset::{Dataspace, Hyperslab};
+use skyhook_map::simnet::CostParams;
+use skyhook_map::store::Cluster;
+use skyhook_map::util::bench::{black_box, report, Bench};
+use skyhook_map::util::rng::Xoshiro256;
+use skyhook_map::vol::{vol_registry, ForwardingBackend, NativeBackend, VolFile};
+
+fn native_file() -> VolFile {
+    VolFile::open(Box::new(NativeBackend::new(CostParams::paper_testbed())))
+}
+
+fn fwd_file(osds: usize) -> VolFile {
+    let cluster = Cluster::new(
+        &ClusterConfig {
+            osds,
+            replicas: 1,
+            ..Default::default()
+        },
+        vol_registry(),
+    );
+    VolFile::open(Box::new(ForwardingBackend::new(cluster)))
+}
+
+fn main() {
+    let space = Dataspace::new(&[512, 512]).unwrap();
+    let chunk = [128u64, 128];
+    let data: Vec<f32> = {
+        let mut rng = Xoshiro256::new(3);
+        (0..space.numel()).map(|_| rng.f32()).collect()
+    };
+
+    let b = Bench::new().warmup(1).samples(8);
+
+    // Whole-dataset write+read, wall clock.
+    let mut results = Vec::new();
+    results.push(b.run_bytes("native write 1MiB", 1 << 20, || {
+        let mut f = native_file();
+        f.create_dataset("d", &space, &chunk).unwrap();
+        f.write_all("d", &data).unwrap();
+        black_box(());
+    }));
+    for osds in [1usize, 4] {
+        results.push(b.run_bytes(
+            &format!("forwarding write 1MiB ({osds} OSDs)"),
+            1 << 20,
+            || {
+                let mut f = fwd_file(osds);
+                f.create_dataset("d", &space, &chunk).unwrap();
+                f.write_all("d", &data).unwrap();
+                black_box(());
+            },
+        ));
+    }
+    report("E8a: dataset create+write, wall clock", &results);
+
+    // Small-op latency: read a 4x4 hyperslab 200 times.
+    let mut results = Vec::new();
+    {
+        let mut f = native_file();
+        f.create_dataset("d", &space, &chunk).unwrap();
+        f.write_all("d", &data).unwrap();
+        let slab = Hyperslab::new(&[100, 100], &[4, 4]).unwrap();
+        results.push(b.run_items("native 4x4 reads", 200, || {
+            for _ in 0..200 {
+                black_box(f.read("d", &slab).unwrap());
+            }
+        }));
+    }
+    {
+        let mut f = fwd_file(4);
+        f.create_dataset("d", &space, &chunk).unwrap();
+        f.write_all("d", &data).unwrap();
+        let slab = Hyperslab::new(&[100, 100], &[4, 4]).unwrap();
+        results.push(b.run_items("forwarding 4x4 reads (pushdown)", 200, || {
+            for _ in 0..200 {
+                black_box(f.read("d", &slab).unwrap());
+            }
+        }));
+    }
+    report("E8b: small hyperslab read latency, wall clock", &results);
+
+    // Simulated per-op overhead on the calibrated testbed.
+    let mut f_native = native_file();
+    f_native.create_dataset("d", &space, &chunk).unwrap();
+    f_native.write_all("d", &data).unwrap();
+    let mut f_fwd = fwd_file(4);
+    f_fwd.create_dataset("d", &space, &chunk).unwrap();
+    f_fwd.write_all("d", &data).unwrap();
+    let slab = Hyperslab::new(&[10, 10], &[8, 8]).unwrap();
+    let t0 = f_native.now();
+    for _ in 0..100 {
+        f_native.read("d", &slab).unwrap();
+    }
+    let native_sim = (f_native.now() - t0) / 100.0;
+    let t0 = f_fwd.now();
+    for _ in 0..100 {
+        f_fwd.read("d", &slab).unwrap();
+    }
+    let fwd_sim = (f_fwd.now() - t0) / 100.0;
+    println!(
+        "\nE8c: simulated per-op read latency: native {:.1}µs vs forwarding {:.1}µs \
+         ({:.1}x — the network hop + plugin cost, repaid by scale-out in E1/E6)",
+        native_sim * 1e6,
+        fwd_sim * 1e6,
+        fwd_sim / native_sim
+    );
+
+    println!("\ne8_vol_stack OK");
+}

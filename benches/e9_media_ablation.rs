@@ -1,0 +1,112 @@
+//! E9 — ablation over storage media (§1 / abstract): "access libraries
+//! often implement buffering and data layout that assume that large,
+//! single-threaded sequential access ... while this is true for spinning
+//! media, it is not true for flash media."
+//!
+//! Runs the same two workloads — (a) large sequential dataset write,
+//! (b) many small parallel random hyperslab reads — under the HDD,
+//! paper-testbed and flash cost profiles, native vs forwarding/scale-out,
+//! showing how the media shift flips the winner for small parallel I/O.
+//!
+//! Run: `cargo bench --bench e9_media_ablation`
+
+use skyhook_map::config::{ClusterConfig, CostProfile};
+use skyhook_map::dataset::{Dataspace, Hyperslab};
+use skyhook_map::store::Cluster;
+use skyhook_map::util::bench::table;
+use skyhook_map::util::rng::Xoshiro256;
+use skyhook_map::vol::{vol_registry, ForwardingBackend, NativeBackend, VolFile};
+
+fn main() {
+    let elems = 1usize << 20; // 4 MiB dataset
+    let data: Vec<f32> = {
+        let mut r = Xoshiro256::new(5);
+        (0..elems).map(|_| r.f32()).collect()
+    };
+    let space = Dataspace::new(&[elems as u64]).unwrap();
+    let chunk = vec![(elems / 128) as u64];
+
+    let mut rows = Vec::new();
+    for (profile, label) in [
+        (CostProfile::Hdd, "hdd"),
+        (CostProfile::PaperTestbed, "paper"),
+        (CostProfile::Flash, "flash"),
+    ] {
+        // Native single node.
+        let mut native = VolFile::open(Box::new(NativeBackend::new(profile.params())));
+        native.create_dataset("d", &space, &chunk).unwrap();
+        let t0 = native.now();
+        native.write_all("d", &data).unwrap();
+        let native_write = native.now() - t0;
+        // Same total bytes two ways: one sequential whole-dataset read
+        // on the single native device, vs 1024 random 1024-element (4 KiB)
+        // reads spread over 8 OSDs by 8 concurrent sessions.
+        let t0 = native.now();
+        native.read("d", &Hyperslab::whole(&space)).unwrap();
+        let native_seq = native.now() - t0;
+
+        // Forwarding over 8 OSDs.
+        let cluster = Cluster::new(
+            &ClusterConfig {
+                osds: 8,
+                replicas: 1,
+                profile,
+                ..Default::default()
+            },
+            vol_registry(),
+        );
+        let mut fwd = VolFile::open(Box::new(ForwardingBackend::new(cluster)));
+        fwd.create_dataset("d", &space, &chunk).unwrap();
+        let t0 = fwd.now();
+        fwd.write_all("d", &data).unwrap();
+        let fwd_write = fwd.now() - t0;
+        // 1024 x 4 KiB random reads = the same 4 MiB, issued by 8
+        // concurrent client sessions (small *parallel* random access).
+        let mut rng = Xoshiro256::new(9);
+        let mut session_end = [0.0f64; 8];
+        for i in 0..1024 {
+            let start = rng.range(0, elems - 1025) as u64;
+            let s = i % 8;
+            let before = fwd.now();
+            fwd.read("d", &Hyperslab::new(&[start], &[1024]).unwrap())
+                .unwrap();
+            session_end[s] += fwd.now() - before;
+        }
+        let fwd_rand = session_end.iter().cloned().fold(0.0, f64::max);
+
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.4}", native_write),
+            format!("{:.4}", fwd_write),
+            format!("{:.4}", native_seq),
+            format!("{:.4}", fwd_rand),
+            format!("{:.1}x", fwd_rand / native_seq),
+            if fwd_rand < native_seq { "parallel-random" } else { "sequential" }.to_string(),
+        ]);
+    }
+    table(
+        "E9: media ablation — same 4 MiB, sequential vs small-parallel-random (sim s)",
+        &[
+            "profile",
+            "native write",
+            "fwd write",
+            "seq read 4MiB",
+            "rand read 4MiB",
+            "rand/seq",
+            "4 MiB read winner",
+        ],
+        &rows,
+    );
+    println!(
+        "\nexpected shape (abstract/§1): on spinning media the per-op seek cost\n\
+         (8 ms) makes small random access ~30x worse than one sequential\n\
+         read — the assumption baked into access libraries. On the paper\n\
+         testbed the per-op floor is 300 µs and the gap shrinks to ~3x.\n\
+         On all-flash the *medium* no longer penalizes random access\n\
+         (30 µs/op): the residual gap is the network round-trip, i.e. the\n\
+         bottleneck moved from device seek to fabric latency — exactly why\n\
+         §1 calls the old buffering/layout assumptions outdated, and why\n\
+         server-local (pushdown) access that avoids the round-trips wins."
+    );
+    println!("\ne9_media_ablation OK");
+}

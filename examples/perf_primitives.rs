@@ -1,0 +1,24 @@
+//! Perf harness for the L3 hot-path primitives tracked in
+//! EXPERIMENTS.md §Perf (predicate eval, masked filter, layout codecs).
+//! Not a paper experiment — used by the optimization loop.
+
+use skyhook_map::dataset::layout::{decode_batch, encode_batch, Layout};
+use skyhook_map::dataset::table::gen;
+use skyhook_map::skyhook::{CmpOp, Predicate};
+use skyhook_map::util::bench::{black_box, report, Bench};
+
+fn main() {
+    let b = Bench::new().warmup(2).samples(10);
+    let batch = gen::sensor_table(400_000, 1);
+    let mask = Predicate::cmp("val", CmpOp::Gt, 50.0).eval(&batch).unwrap();
+    let enc_row = encode_batch(&batch, Layout::Row);
+    let enc_col = encode_batch(&batch, Layout::Col);
+    let results = vec![
+        b.run_items("predicate eval 400k", 400_000, || { black_box(Predicate::cmp("val", CmpOp::Gt, 50.0).eval(&batch).unwrap()); }),
+        b.run_items("filter 50% 400k x4cols", 400_000, || { black_box(batch.filter(&mask).unwrap()); }),
+        b.run_bytes("encode col", enc_col.len() as u64, || { black_box(encode_batch(&batch, Layout::Col)); }),
+        b.run_bytes("decode col", enc_col.len() as u64, || { black_box(decode_batch(&enc_col).unwrap()); }),
+        b.run_bytes("decode row", enc_row.len() as u64, || { black_box(decode_batch(&enc_row).unwrap()); }),
+    ];
+    report("hot-path primitives", &results);
+}

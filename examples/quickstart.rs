@@ -1,0 +1,115 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! Builds a small simulated cluster, maps a table dataset onto objects,
+//! runs pushdown queries, and shows what the VOL layer does for an
+//! HDF5-style array. Run with:
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use skyhook_map::config::Config;
+use skyhook_map::dataset::partition::PartitionSpec;
+use skyhook_map::dataset::table::gen;
+use skyhook_map::dataset::{Dataspace, Hyperslab, Layout};
+use skyhook_map::launch::Stack;
+use skyhook_map::skyhook::{AggFunc, CmpOp, ExecMode, Predicate, Query};
+use skyhook_map::util::bytes::fmt_size;
+use skyhook_map::vol::{ForwardingBackend, VolFile};
+
+fn main() -> skyhook_map::Result<()> {
+    // 1. Build the stack from config (8 simulated OSDs, 2x replication).
+    let cfg = Config::from_text(
+        r#"
+[cluster]
+osds = 8
+replicas = 2
+profile = "paper"
+
+[driver]
+workers = 4
+"#,
+    )?;
+    let stack = Stack::build(&cfg)?;
+    println!("== cluster: 8 OSDs, 2 replicas ==");
+
+    // 2. Map a table dataset onto objects (SkyhookDM path).
+    let table = gen::sensor_table(50_000, 7);
+    let report = stack.driver.write_table(
+        "readings",
+        &table,
+        Layout::Col,
+        &PartitionSpec::with_target(128 * 1024),
+        None,
+    )?;
+    println!(
+        "wrote {} rows as {} objects ({}), simulated {:.3}s",
+        table.nrows(),
+        report.objects,
+        fmt_size(report.bytes_written),
+        report.sim_seconds
+    );
+
+    // 3. Offload select/filter/aggregate to the storage servers.
+    let query = Query::scan("readings")
+        .filter(Predicate::cmp("val", CmpOp::Gt, 65.0))
+        .aggregate(AggFunc::Count, "val")
+        .aggregate(AggFunc::Mean, "val")
+        .aggregate(AggFunc::Max, "val");
+    let pushdown = stack.driver.execute(&query, Some(ExecMode::Pushdown))?;
+    let client = stack.driver.execute(&query, Some(ExecMode::ClientSide))?;
+    println!("\n== query: count/mean/max of val where val > 65 ==");
+    println!(
+        "pushdown:    count={} mean={:.3} max={:.3} | moved {} in {:.4}s (sim)",
+        pushdown.aggregates[0],
+        pushdown.aggregates[1],
+        pushdown.aggregates[2],
+        fmt_size(pushdown.stats.bytes_moved),
+        pushdown.stats.sim_seconds
+    );
+    println!(
+        "client-side: count={} mean={:.3} max={:.3} | moved {} in {:.4}s (sim)",
+        client.aggregates[0],
+        client.aggregates[1],
+        client.aggregates[2],
+        fmt_size(client.stats.bytes_moved),
+        client.stats.sim_seconds
+    );
+    println!(
+        "pushdown moved {:.0}x fewer bytes",
+        client.stats.bytes_moved as f64 / pushdown.stats.bytes_moved as f64
+    );
+
+    // 4. Group-by on the storage tier.
+    let top = stack.driver.execute(
+        &Query::scan("readings")
+            .group("sensor")
+            .aggregate(AggFunc::Count, "val"),
+        None,
+    )?;
+    let groups = top.groups.unwrap();
+    println!("\n== rows per sensor (top 5 of {}) ==", groups.len());
+    let mut sorted = groups.clone();
+    sorted.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for (k, v) in sorted.iter().take(5) {
+        println!("sensor {k:>3}: {v:>6} rows");
+    }
+
+    // 5. The HDF5-VOL view: an array dataset through the forwarding plugin.
+    let mut file = VolFile::open(Box::new(ForwardingBackend::new(stack.cluster.clone())));
+    let space = Dataspace::new(&[1024, 1024])?;
+    file.create_dataset("temps", &space, &[256, 256])?;
+    let data: Vec<f32> = (0..space.numel()).map(|i| (i % 1000) as f32 * 0.1).collect();
+    file.write_all("temps", &data)?;
+    let corner = file.read("temps", &Hyperslab::new(&[510, 510], &[4, 4])?)?;
+    println!("\n== HDF5 VOL: 1024x1024 array as 16 chunk objects ==");
+    println!("hyperslab [510..514, 510..514] = {corner:?}");
+    println!(
+        "cluster now stores {} across {} objects",
+        fmt_size(stack.cluster.total_bytes_stored()),
+        stack.cluster.list_objects().len()
+    );
+
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! Streaming ingestion: the data-pipeline front end.
+//!
+//! Simulates a fleet of sensors emitting record batches, streams them
+//! through the credit-backpressured ingestor into co-located objects,
+//! and queries the live dataset — demonstrating the §2 goal-1 write path
+//! ("gather data from the same logical units into the same storage
+//! locations") as a continuous pipeline.
+//!
+//! ```text
+//! cargo run --release --example streaming_ingest
+//! ```
+
+use skyhook_map::config::Config;
+use skyhook_map::coordinator::{IngestConfig, Ingestor};
+use skyhook_map::dataset::table::gen;
+use skyhook_map::dataset::Layout;
+use skyhook_map::launch::Stack;
+use skyhook_map::skyhook::{AggFunc, Query};
+use skyhook_map::util::bytes::fmt_size;
+use skyhook_map::util::pool::ThreadPool;
+use std::sync::Arc;
+
+fn main() -> skyhook_map::Result<()> {
+    let cfg = Config::from_text("[cluster]\nosds = 6\nreplicas = 2\n")?;
+    let stack = Stack::build(&cfg)?;
+    let pool = Arc::new(ThreadPool::new(4));
+
+    // Two independent streams with different locality groups, interleaved
+    // like two ingestion pipelines sharing the cluster.
+    let site_a = gen::sensor_table(60_000, 101);
+    let site_b = gen::sensor_table(40_000, 202);
+    let mut ing_a = Ingestor::open(
+        stack.cluster.clone(),
+        Arc::clone(&pool),
+        "site_a",
+        &site_a.schema,
+        IngestConfig {
+            target_object_bytes: 96 * 1024,
+            layout: Layout::Col,
+            max_inflight: 4,
+            locality: Some("siteA".into()),
+        },
+    )?;
+    let mut ing_b = Ingestor::open(
+        stack.cluster.clone(),
+        Arc::clone(&pool),
+        "site_b",
+        &site_b.schema,
+        IngestConfig {
+            target_object_bytes: 96 * 1024,
+            layout: Layout::Col,
+            max_inflight: 4,
+            locality: Some("siteB".into()),
+        },
+    )?;
+
+    // Interleave pushes in arrival-sized batches.
+    let step = 2_048;
+    let (mut ia, mut ib) = (0, 0);
+    while ia < site_a.nrows() || ib < site_b.nrows() {
+        if ia < site_a.nrows() {
+            let hi = (ia + step).min(site_a.nrows());
+            ing_a.push(&site_a.slice(ia, hi)?)?;
+            ia = hi;
+        }
+        if ib < site_b.nrows() {
+            let hi = (ib + step).min(site_b.nrows());
+            ing_b.push(&site_b.slice(ib, hi)?)?;
+            ib = hi;
+        }
+    }
+    let rep_a = ing_a.finish()?;
+    let rep_b = ing_b.finish()?;
+    for (name, rep) in [("site_a", &rep_a), ("site_b", &rep_b)] {
+        println!(
+            "{name}: {} rows -> {} objects ({}), sim {:.3}s, {} backpressure stalls",
+            rep.rows,
+            rep.objects,
+            fmt_size(rep.bytes_written),
+            rep.sim_seconds,
+            rep.stalls
+        );
+    }
+
+    // Each site's objects are co-located in their own placement group.
+    for site in ["site_a", "site_b"] {
+        let (meta, _) =
+            skyhook_map::dataset::metadata::load_meta(&stack.cluster, 0.0, site)?;
+        let mut primaries: Vec<_> = meta
+            .object_names(site)
+            .iter()
+            .map(|n| stack.cluster.placement(n)[0])
+            .collect();
+        primaries.sort_unstable();
+        primaries.dedup();
+        println!("{site}: all objects on OSD set {primaries:?}");
+    }
+
+    // Query the streamed datasets.
+    for site in ["site_a", "site_b"] {
+        let r = stack.driver.execute(
+            &Query::scan(site)
+                .group("sensor")
+                .aggregate(AggFunc::Mean, "val"),
+            None,
+        )?;
+        let groups = r.groups.unwrap();
+        println!(
+            "{site}: {} sensors, global mean of group means {:.2}, moved {}",
+            groups.len(),
+            groups.iter().map(|(_, v)| v).sum::<f64>() / groups.len() as f64,
+            fmt_size(r.stats.bytes_moved)
+        );
+    }
+
+    println!("\nstreaming_ingest OK");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+"""AOT lowering: JAX/Pallas entry points -> HLO *text* artifacts.
+
+HLO text (NOT `lowered.compile()` or serialized protos) is the
+interchange format: the image's xla_extension 0.5.1 rejects jax>=0.5's
+64-bit-instruction-id protos, while the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md). The Rust runtime
+loads these with `HloModuleProto::from_text_file` and compiles them on
+the PJRT CPU client.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entries():
+    """(name, fn, example args) for every artifact."""
+    r = model.ROWS
+    c = model.COLS
+    f32 = jnp.float32
+    vec = jax.ShapeDtypeStruct((r,), f32)
+    mat = jax.ShapeDtypeStruct((r, c), f32)
+    matT = jax.ShapeDtypeStruct((c, r), f32)
+    sel = jax.ShapeDtypeStruct((c,), f32)
+    thr = jax.ShapeDtypeStruct((1,), f32)
+    return [
+        ("filter_agg", model.masked_moments_entry, (vec, vec)),
+        ("stats", model.matrix_moments_entry, (mat, vec)),
+        ("chunk_pipeline", model.chunk_pipeline_entry, (mat, sel, thr, vec)),
+        ("transform_r2c", model.row_to_col_entry, (mat,)),
+        ("transform_c2r", model.col_to_row_entry, (matT,)),
+    ]
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, fn, example in entries():
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: masked moments of a value vector.
+
+This is the compute hot-spot of the Skyhook-Extension's `agg` pushdown:
+for one column chunk and one predicate mask, produce the constant-size
+partial-aggregate state [count, sum, sumsq, min, max] that crosses the
+network instead of the data.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  - fixed chunk of ROWS=16384 f32 values (64 KiB) + mask (64 KiB), tiled
+    into TILE=2048-element blocks: each grid step's working set is
+    2*8 KiB — trivially VMEM-resident, and the grid pipeline overlaps the
+    HBM->VMEM DMA of tile i+1 with the reduction of tile i (the role
+    threadblock double-buffering plays on GPU);
+  - masked *reduction*, not compaction: output shape is fixed at (8,)
+    (8*4 B, lane-aligned) regardless of selectivity, so there are no
+    data-dependent shapes — the TPU rethink of row filtering;
+  - accumulation across grid steps uses the revisiting output block
+    (out index_map -> 0), the canonical Pallas reduction pattern.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU perf is estimated from the BlockSpec footprint.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Fixed logical chunk length (padded by the caller; pad rows have mask 0).
+ROWS = 16384
+# Per-grid-step tile.
+TILE = 2048
+
+GRID = ROWS // TILE
+
+
+def _kernel(x_ref, m_ref, o_ref):
+    i = pl.program_id(0)
+    x = x_ref[...]
+    m = m_ref[...]
+    cnt = jnp.sum(m)
+    s = jnp.sum(x * m)
+    ss = jnp.sum(x * x * m)
+    mn = jnp.min(jnp.where(m > 0, x, ref.BIG))
+    mx = jnp.max(jnp.where(m > 0, x, -ref.BIG))
+    zero = jnp.float32(0)
+    part = jnp.stack([cnt, s, ss, mn, mx, zero, zero, zero])
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(i > 0)
+    def _accum():
+        prev = o_ref[...]
+        o_ref[...] = jnp.stack(
+            [
+                prev[0] + part[0],
+                prev[1] + part[1],
+                prev[2] + part[2],
+                jnp.minimum(prev[3], part[3]),
+                jnp.maximum(prev[4], part[4]),
+                zero,
+                zero,
+                zero,
+            ]
+        )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def masked_moments(values, mask):
+    """Pallas masked moments. values/mask: (ROWS,) f32 -> (8,) f32."""
+    assert values.shape == (ROWS,), values.shape
+    assert mask.shape == (ROWS,), mask.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(GRID,),
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((8,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+        interpret=True,
+    )(values.astype(jnp.float32), mask.astype(jnp.float32))

@@ -1,0 +1,78 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+asserts allclose between kernel and reference across shapes, masks and
+value distributions (see python/tests/).
+"""
+
+import jax.numpy as jnp
+
+# Sentinel returned for min/max of an empty masked set. The Rust caller
+# checks count > 0 before trusting min/max, so any finite sentinel works;
+# it keeps the kernel branch-free on TPU. A plain Python float: Pallas
+# kernels may not close over traced array constants.
+BIG = 3.4e38
+
+
+def masked_moments(values, mask):
+    """Moments of `values` where `mask` is set.
+
+    Args:
+      values: (R,) f32
+      mask:   (R,) f32 of 0.0 / 1.0
+    Returns:
+      (8,) f32: [count, sum, sumsq, min, max, 0, 0, 0]
+    """
+    values = values.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+    cnt = jnp.sum(mask)
+    s = jnp.sum(values * mask)
+    ss = jnp.sum(values * values * mask)
+    mn = jnp.min(jnp.where(mask > 0, values, BIG))
+    mx = jnp.max(jnp.where(mask > 0, values, -BIG))
+    zero = jnp.float32(0)
+    return jnp.stack([cnt, s, ss, mn, mx, zero, zero, zero])
+
+
+def matrix_masked_moments(matrix, mask):
+    """Per-column masked moments.
+
+    Args:
+      matrix: (R, C) f32
+      mask:   (R,) f32 of 0.0 / 1.0
+    Returns:
+      (C, 8) f32, row c = masked_moments(matrix[:, c], mask)
+    """
+    matrix = matrix.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+    m = mask[:, None]
+    cnt_col = jnp.full((matrix.shape[1],), jnp.sum(mask), dtype=jnp.float32)
+    s = jnp.sum(matrix * m, axis=0)
+    ss = jnp.sum(matrix * matrix * m, axis=0)
+    mn = jnp.min(jnp.where(m > 0, matrix, BIG), axis=0)
+    mx = jnp.max(jnp.where(m > 0, matrix, -BIG), axis=0)
+    zeros = jnp.zeros_like(s)
+    return jnp.stack([cnt_col, s, ss, mn, mx, zeros, zeros, zeros], axis=1)
+
+
+def transpose(matrix):
+    """Row-major -> column-major transform (and back): plain transpose."""
+    return matrix.T
+
+
+def chunk_pipeline(matrix, colsel, threshold, valid):
+    """The fused L2 reference: predicate -> mask -> per-column moments.
+
+    Args:
+      matrix:    (R, C) f32 column chunk
+      colsel:    (C,)  f32 one-hot selecting the predicate column
+      threshold: (1,)  f32 predicate threshold (op is `>`)
+      valid:     (R,)  f32 row-validity mask (padding rows = 0)
+    Returns:
+      (C, 8) f32 per-column moments of rows where
+      matrix[:, sel] > threshold and valid.
+    """
+    matrix = matrix.astype(jnp.float32)
+    pred_col = matrix @ colsel.astype(jnp.float32)
+    mask = (pred_col > threshold[0]).astype(jnp.float32) * valid.astype(jnp.float32)
+    return matrix_masked_moments(matrix, mask)

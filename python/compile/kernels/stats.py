@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: per-column masked moments of a column chunk.
+
+The matrix form of `filter_agg`: one (ROWS, COLS) f32 chunk + one shared
+row mask -> (COLS, 8) per-column partials. Used by the fused L2 pipeline
+so a whole multi-column chunk is aggregated in one kernel launch.
+
+TPU mapping: grid over (row-tile, column); each step reduces a
+(TILE, 1) strip against the (TILE,) mask slice and accumulates into the
+revisiting (1, 8) output block. Working set per step = TILE*4 B values +
+TILE*4 B mask — VMEM-resident with room for double buffering.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+ROWS = 16384
+COLS = 8
+TILE = 2048
+
+GRID_R = ROWS // TILE
+
+
+def _kernel(x_ref, m_ref, o_ref):
+    i = pl.program_id(0)  # row tile
+    x = x_ref[...]  # (TILE, 1)
+    m = m_ref[...]  # (TILE,)
+    xv = x[:, 0]
+    cnt = jnp.sum(m)
+    s = jnp.sum(xv * m)
+    ss = jnp.sum(xv * xv * m)
+    mn = jnp.min(jnp.where(m > 0, xv, ref.BIG))
+    mx = jnp.max(jnp.where(m > 0, xv, -ref.BIG))
+    zero = jnp.float32(0)
+    part = jnp.stack([cnt, s, ss, mn, mx, zero, zero, zero])[None, :]  # (1, 8)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(i > 0)
+    def _accum():
+        prev = o_ref[...]
+        o_ref[...] = jnp.concatenate(
+            [
+                prev[:, 0:1] + part[:, 0:1],
+                prev[:, 1:2] + part[:, 1:2],
+                prev[:, 2:3] + part[:, 2:3],
+                jnp.minimum(prev[:, 3:4], part[:, 3:4]),
+                jnp.maximum(prev[:, 4:5], part[:, 4:5]),
+                prev[:, 5:8],
+            ],
+            axis=1,
+        )
+
+
+@jax.jit
+def matrix_masked_moments(matrix, mask):
+    """(ROWS, COLS) f32 + (ROWS,) mask -> (COLS, 8) f32 partials."""
+    assert matrix.shape == (ROWS, COLS), matrix.shape
+    assert mask.shape == (ROWS,), mask.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(GRID_R, COLS),
+        in_specs=[
+            pl.BlockSpec((TILE, 1), lambda i, c: (i, c)),
+            pl.BlockSpec((TILE,), lambda i, c: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, 8), lambda i, c: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((COLS, 8), jnp.float32),
+        interpret=True,
+    )(matrix.astype(jnp.float32), mask.astype(jnp.float32))

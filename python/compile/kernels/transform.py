@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: tiled row<->column layout transform (transpose).
+
+Physical design management (§5) re-organizes objects between row- and
+column-oriented layouts on the storage server. For fixed-width numeric
+chunks that is a (ROWS, COLS) transpose; this kernel does it in
+(TILE, COLS) strips so each grid step's working set stays VMEM-sized,
+writing (COLS, TILE) output tiles.
+
+On a real TPU the in-VMEM transpose lowers to efficient vector shuffles;
+lane-dim padding to 128 would be added by Mosaic. interpret=True here.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 16384
+COLS = 8
+TILE = 2048
+
+GRID = ROWS // TILE
+
+
+def _kernel(x_ref, o_ref):
+    # x: (TILE, COLS) strip -> o: (COLS, TILE) strip.
+    o_ref[...] = x_ref[...].T
+
+
+@jax.jit
+def row_to_col(matrix):
+    """(ROWS, COLS) f32 -> (COLS, ROWS) f32 transpose."""
+    assert matrix.shape == (ROWS, COLS), matrix.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(GRID,),
+        in_specs=[pl.BlockSpec((TILE, COLS), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((COLS, TILE), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((COLS, ROWS), jnp.float32),
+        interpret=True,
+    )(matrix.astype(jnp.float32))
+
+
+def _kernel_back(x_ref, o_ref):
+    o_ref[...] = x_ref[...].T
+
+
+@jax.jit
+def col_to_row(matrix):
+    """(COLS, ROWS) f32 -> (ROWS, COLS) f32 transpose."""
+    assert matrix.shape == (COLS, ROWS), matrix.shape
+    return pl.pallas_call(
+        _kernel_back,
+        grid=(GRID,),
+        in_specs=[pl.BlockSpec((COLS, TILE), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((TILE, COLS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ROWS, COLS), jnp.float32),
+        interpret=True,
+    )(matrix.astype(jnp.float32))

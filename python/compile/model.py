@@ -1,0 +1,60 @@
+"""L2: the JAX compute graph for storage-side chunk processing.
+
+Composes the L1 Pallas kernels into the fused graphs that get AOT-lowered
+to HLO and executed by the Rust runtime inside Skyhook-Extension calls:
+
+  - `masked_moments_entry`   — one column + mask -> (8,) partials
+  - `matrix_moments_entry`   — (R, C) chunk + mask -> (C, 8) partials
+  - `chunk_pipeline_entry`   — the fully fused pushdown: predicate
+    evaluation (select column, compare against threshold), mask
+    combination with row validity, then per-column masked moments — one
+    HLO module, no host round-trips between filter and aggregate (the L2
+    fusion target in DESIGN.md §Perf)
+  - `row_to_col_entry` / `col_to_row_entry` — physical design transform
+
+Everything here runs ONCE at build time (`make artifacts`); Python is
+never on the request path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import filter_agg, stats, transform
+
+ROWS = filter_agg.ROWS
+COLS = stats.COLS
+
+
+def masked_moments_entry(values, mask):
+    """(ROWS,) f32, (ROWS,) f32 -> (8,) f32 via the L1 kernel."""
+    return (filter_agg.masked_moments(values, mask),)
+
+
+def matrix_moments_entry(matrix, mask):
+    """(ROWS, COLS) f32, (ROWS,) f32 -> (COLS, 8) f32 via the L1 kernel."""
+    return (stats.matrix_masked_moments(matrix, mask),)
+
+
+def chunk_pipeline_entry(matrix, colsel, threshold, valid):
+    """Fused predicate + aggregate over one chunk.
+
+    Args:
+      matrix:    (ROWS, COLS) f32
+      colsel:    (COLS,) f32 one-hot predicate column selector
+      threshold: (1,) f32, predicate is `col > threshold`
+      valid:     (ROWS,) f32 row-validity mask (padding rows = 0)
+    Returns:
+      ((COLS, 8) f32,) per-column masked moments
+    """
+    pred_col = matrix @ colsel  # (ROWS,)
+    mask = (pred_col > threshold[0]).astype(jnp.float32) * valid
+    return (stats.matrix_masked_moments(matrix, mask),)
+
+
+def row_to_col_entry(matrix):
+    """(ROWS, COLS) -> (COLS, ROWS) layout transform via the L1 kernel."""
+    return (transform.row_to_col(matrix),)
+
+
+def col_to_row_entry(matrix):
+    """(COLS, ROWS) -> (ROWS, COLS) layout transform via the L1 kernel."""
+    return (transform.col_to_row(matrix),)

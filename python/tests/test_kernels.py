@@ -1,0 +1,194 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Each Pallas kernel is checked against its pure-jnp oracle in ref.py,
+including hypothesis sweeps over value distributions, mask densities and
+padding patterns.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import filter_agg, ref, stats, transform
+
+ROWS = filter_agg.ROWS
+COLS = stats.COLS
+
+RNG = np.random.default_rng(0)
+
+
+def pad_to_rows(values, mask):
+    """Pad arbitrary-length inputs to the kernel's fixed ROWS."""
+    n = len(values)
+    assert n <= ROWS
+    v = np.zeros(ROWS, np.float32)
+    m = np.zeros(ROWS, np.float32)
+    v[:n] = values
+    m[:n] = mask
+    return v, m
+
+
+def assert_moments_close(got, want, *, empty_ok=True):
+    got = np.asarray(got)
+    want = np.asarray(want)
+    assert got.shape == want.shape
+    # count exact
+    np.testing.assert_array_equal(got[..., 0], want[..., 0])
+    # sums: tile-order accumulation differs from the reference's single
+    # reduction, so allow float32-level tolerance.
+    np.testing.assert_allclose(got[..., 1], want[..., 1], rtol=2e-5, atol=1e-3)
+    np.testing.assert_allclose(got[..., 2], want[..., 2], rtol=2e-4, atol=1e-2)
+    # min/max exact when the masked set is non-empty
+    np.testing.assert_allclose(got[..., 3], want[..., 3], rtol=1e-6)
+    np.testing.assert_allclose(got[..., 4], want[..., 4], rtol=1e-6)
+
+
+class TestMaskedMoments:
+    def test_dense_mask(self):
+        v = RNG.normal(50, 15, ROWS).astype(np.float32)
+        m = np.ones(ROWS, np.float32)
+        got = filter_agg.masked_moments(jnp.asarray(v), jnp.asarray(m))
+        want = ref.masked_moments(jnp.asarray(v), jnp.asarray(m))
+        assert_moments_close(got, want)
+        # and against numpy directly
+        assert float(got[0]) == ROWS
+        np.testing.assert_allclose(float(got[1]), v.sum(), rtol=1e-5)
+        assert float(got[3]) == v.min()
+        assert float(got[4]) == v.max()
+
+    def test_empty_mask(self):
+        v = RNG.normal(0, 1, ROWS).astype(np.float32)
+        m = np.zeros(ROWS, np.float32)
+        got = filter_agg.masked_moments(jnp.asarray(v), jnp.asarray(m))
+        assert float(got[0]) == 0.0
+        assert float(got[1]) == 0.0
+        assert float(got[2]) == 0.0
+        # min/max are sentinels; Rust checks count first.
+        assert float(got[3]) >= 3e38
+        assert float(got[4]) <= -3e38
+
+    def test_single_element(self):
+        v = np.zeros(ROWS, np.float32)
+        m = np.zeros(ROWS, np.float32)
+        v[7] = -3.5
+        m[7] = 1.0
+        got = filter_agg.masked_moments(jnp.asarray(v), jnp.asarray(m))
+        assert float(got[0]) == 1.0
+        assert float(got[1]) == -3.5
+        np.testing.assert_allclose(float(got[2]), 12.25, rtol=1e-6)
+        assert float(got[3]) == -3.5
+        assert float(got[4]) == -3.5
+
+    def test_mask_in_last_tile_only(self):
+        # Exercises cross-tile accumulation: data only in the final tile.
+        v = np.zeros(ROWS, np.float32)
+        m = np.zeros(ROWS, np.float32)
+        v[-3:] = [1.0, 2.0, 3.0]
+        m[-3:] = 1.0
+        got = filter_agg.masked_moments(jnp.asarray(v), jnp.asarray(m))
+        assert float(got[0]) == 3.0
+        assert float(got[1]) == 6.0
+        assert float(got[3]) == 1.0
+        assert float(got[4]) == 3.0
+
+    def test_negative_values(self):
+        v = -np.abs(RNG.normal(10, 3, ROWS)).astype(np.float32)
+        m = (RNG.random(ROWS) < 0.5).astype(np.float32)
+        got = filter_agg.masked_moments(jnp.asarray(v), jnp.asarray(m))
+        want = ref.masked_moments(jnp.asarray(v), jnp.asarray(m))
+        assert_moments_close(got, want)
+        assert float(got[4]) < 0.0
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(min_value=0, max_value=ROWS),
+        density=st.floats(min_value=0.0, max_value=1.0),
+        scale=st.floats(min_value=0.1, max_value=1000.0),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_sweep(self, n, density, scale, seed):
+        rng = np.random.default_rng(seed)
+        values = rng.normal(0, scale, n).astype(np.float32)
+        mask = (rng.random(n) < density).astype(np.float32)
+        v, m = pad_to_rows(values, mask)
+        got = filter_agg.masked_moments(jnp.asarray(v), jnp.asarray(m))
+        want = ref.masked_moments(jnp.asarray(v), jnp.asarray(m))
+        assert_moments_close(got, want)
+
+
+class TestMatrixMoments:
+    def test_matches_reference(self):
+        mat = RNG.normal(0, 10, (ROWS, COLS)).astype(np.float32)
+        mask = (RNG.random(ROWS) < 0.3).astype(np.float32)
+        got = stats.matrix_masked_moments(jnp.asarray(mat), jnp.asarray(mask))
+        want = ref.matrix_masked_moments(jnp.asarray(mat), jnp.asarray(mask))
+        assert got.shape == (COLS, 8)
+        assert_moments_close(np.asarray(got), np.asarray(want))
+
+    def test_each_column_independent(self):
+        mat = np.zeros((ROWS, COLS), np.float32)
+        for c in range(COLS):
+            mat[:, c] = c + 1
+        mask = np.ones(ROWS, np.float32)
+        got = np.asarray(
+            stats.matrix_masked_moments(jnp.asarray(mat), jnp.asarray(mask))
+        )
+        for c in range(COLS):
+            assert got[c, 0] == ROWS
+            np.testing.assert_allclose(got[c, 1], (c + 1) * ROWS, rtol=1e-6)
+            assert got[c, 3] == c + 1
+            assert got[c, 4] == c + 1
+
+    def test_empty_mask_matrix(self):
+        mat = RNG.normal(0, 1, (ROWS, COLS)).astype(np.float32)
+        mask = np.zeros(ROWS, np.float32)
+        got = np.asarray(
+            stats.matrix_masked_moments(jnp.asarray(mat), jnp.asarray(mask))
+        )
+        np.testing.assert_array_equal(got[:, 0], 0.0)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        density=st.floats(min_value=0.0, max_value=1.0),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_matrix(self, density, seed):
+        rng = np.random.default_rng(seed)
+        mat = rng.normal(5, 100, (ROWS, COLS)).astype(np.float32)
+        mask = (rng.random(ROWS) < density).astype(np.float32)
+        got = stats.matrix_masked_moments(jnp.asarray(mat), jnp.asarray(mask))
+        want = ref.matrix_masked_moments(jnp.asarray(mat), jnp.asarray(mask))
+        assert_moments_close(np.asarray(got), np.asarray(want))
+
+
+class TestTransform:
+    def test_roundtrip(self):
+        mat = RNG.normal(0, 1, (ROWS, COLS)).astype(np.float32)
+        t = transform.row_to_col(jnp.asarray(mat))
+        assert t.shape == (COLS, ROWS)
+        np.testing.assert_array_equal(np.asarray(t), mat.T)
+        back = transform.col_to_row(t)
+        np.testing.assert_array_equal(np.asarray(back), mat)
+
+    def test_matches_reference(self):
+        mat = np.arange(ROWS * COLS, dtype=np.float32).reshape(ROWS, COLS)
+        got = transform.row_to_col(jnp.asarray(mat))
+        want = ref.transpose(jnp.asarray(mat))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestWrongShapes:
+    def test_vector_kernel_rejects_bad_shapes(self):
+        with pytest.raises(AssertionError):
+            filter_agg.masked_moments(
+                jnp.zeros(ROWS + 1, jnp.float32), jnp.zeros(ROWS + 1, jnp.float32)
+            )
+
+    def test_matrix_kernel_rejects_bad_shapes(self):
+        with pytest.raises(AssertionError):
+            stats.matrix_masked_moments(
+                jnp.zeros((ROWS, COLS + 1), jnp.float32),
+                jnp.zeros(ROWS, jnp.float32),
+            )

@@ -1,0 +1,124 @@
+"""L2 model tests: the fused chunk pipeline vs the reference, plus AOT
+lowering shape checks (the artifacts the Rust runtime will load)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+
+ROWS = model.ROWS
+COLS = model.COLS
+
+RNG = np.random.default_rng(1)
+
+
+def onehot(c):
+    v = np.zeros(COLS, np.float32)
+    v[c] = 1.0
+    return v
+
+
+class TestChunkPipeline:
+    def test_matches_reference(self):
+        mat = RNG.normal(50, 15, (ROWS, COLS)).astype(np.float32)
+        sel = onehot(2)
+        thr = np.array([55.0], np.float32)
+        valid = np.ones(ROWS, np.float32)
+        (got,) = model.chunk_pipeline_entry(
+            jnp.asarray(mat), jnp.asarray(sel), jnp.asarray(thr), jnp.asarray(valid)
+        )
+        want = ref.chunk_pipeline(
+            jnp.asarray(mat), jnp.asarray(sel), jnp.asarray(thr), jnp.asarray(valid)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got)[:, 0], np.asarray(want)[:, 0]
+        )
+        np.testing.assert_allclose(
+            np.asarray(got)[:, 1:5], np.asarray(want)[:, 1:5], rtol=2e-4, atol=1e-2
+        )
+
+    def test_against_numpy_semantics(self):
+        mat = RNG.normal(0, 10, (ROWS, COLS)).astype(np.float32)
+        sel = onehot(0)
+        thr = np.array([0.0], np.float32)
+        valid = np.ones(ROWS, np.float32)
+        (got,) = model.chunk_pipeline_entry(
+            jnp.asarray(mat), jnp.asarray(sel), jnp.asarray(thr), jnp.asarray(valid)
+        )
+        got = np.asarray(got)
+        keep = mat[:, 0] > 0.0
+        assert got[0, 0] == keep.sum()
+        np.testing.assert_allclose(got[1, 1], mat[keep, 1].sum(), rtol=1e-4)
+        if keep.any():
+            np.testing.assert_allclose(got[3, 3], mat[keep, 3].min(), rtol=1e-6)
+
+    def test_padding_rows_excluded(self):
+        mat = np.full((ROWS, COLS), 100.0, np.float32)
+        valid = np.zeros(ROWS, np.float32)
+        valid[:10] = 1.0
+        (got,) = model.chunk_pipeline_entry(
+            jnp.asarray(mat),
+            jnp.asarray(onehot(0)),
+            jnp.asarray(np.array([0.0], np.float32)),
+            jnp.asarray(valid),
+        )
+        assert float(np.asarray(got)[0, 0]) == 10.0
+
+    def test_no_rows_pass(self):
+        mat = np.zeros((ROWS, COLS), np.float32)
+        (got,) = model.chunk_pipeline_entry(
+            jnp.asarray(mat),
+            jnp.asarray(onehot(0)),
+            jnp.asarray(np.array([1e9], np.float32)),
+            jnp.asarray(np.ones(ROWS, np.float32)),
+        )
+        assert float(np.asarray(got)[0, 0]) == 0.0
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        col=st.integers(min_value=0, max_value=COLS - 1),
+        thr=st.floats(min_value=-50, max_value=50),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_pipeline(self, col, thr, seed):
+        rng = np.random.default_rng(seed)
+        mat = rng.normal(0, 30, (ROWS, COLS)).astype(np.float32)
+        valid = (rng.random(ROWS) < 0.9).astype(np.float32)
+        (got,) = model.chunk_pipeline_entry(
+            jnp.asarray(mat),
+            jnp.asarray(onehot(col)),
+            jnp.asarray(np.array([thr], np.float32)),
+            jnp.asarray(valid),
+        )
+        keep = (mat[:, col] > thr) & (valid > 0)
+        got = np.asarray(got)
+        assert got[0, 0] == keep.sum()
+        for c in range(COLS):
+            np.testing.assert_allclose(
+                got[c, 1], mat[keep, c].sum(), rtol=3e-4, atol=2e-2
+            )
+
+
+class TestAotLowering:
+    def test_all_entries_lower_to_hlo_text(self):
+        for name, fn, example in aot.entries():
+            lowered = jax.jit(fn).lower(*example)
+            text = aot.to_hlo_text(lowered)
+            assert text.startswith("HloModule"), name
+            assert "ENTRY" in text, name
+            # No Mosaic custom-calls (interpret=True requirement).
+            assert "tpu_custom_call" not in text, name
+
+    def test_artifact_names_match_makefile(self):
+        names = {n for n, _, _ in aot.entries()}
+        assert names == {
+            "filter_agg",
+            "stats",
+            "chunk_pipeline",
+            "transform_r2c",
+            "transform_c2r",
+        }

@@ -1,0 +1,320 @@
+//! Typed configuration for the whole system, parsed from a TOML-subset
+//! file (see [`toml_lite`]). One config file describes the simulated
+//! cluster, the Skyhook driver, and dataset-mapping defaults; the CLI and
+//! all examples/benches build their stacks from this.
+
+pub mod toml_lite;
+
+use crate::error::{Error, Result};
+use crate::simnet::CostParams;
+use crate::util::bytes::parse_size;
+use toml_lite::Doc;
+
+/// Which calibrated device/network profile to simulate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CostProfile {
+    /// Calibrated against the paper's Table 1 testbed.
+    PaperTestbed,
+    /// Modern all-flash cluster.
+    Flash,
+    /// Spinning media.
+    Hdd,
+}
+
+impl CostProfile {
+    pub fn params(self) -> CostParams {
+        match self {
+            CostProfile::PaperTestbed => CostParams::paper_testbed(),
+            CostProfile::Flash => CostParams::flash(),
+            CostProfile::Hdd => CostParams::hdd(),
+        }
+    }
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "paper" | "paper_testbed" => Ok(CostProfile::PaperTestbed),
+            "flash" | "ssd" => Ok(CostProfile::Flash),
+            "hdd" => Ok(CostProfile::Hdd),
+            other => Err(Error::Config(format!("unknown cost profile {other:?}"))),
+        }
+    }
+}
+
+/// Simulated storage cluster shape.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Number of simulated OSDs (storage servers).
+    pub osds: usize,
+    /// Replication factor for all pools.
+    pub replicas: usize,
+    /// Target object size the partitioner aims for.
+    pub target_object_size: u64,
+    /// Device/network cost profile.
+    pub profile: CostProfile,
+    /// Placement-group count (power of two recommended).
+    pub pg_count: u32,
+    /// Deterministic seed for placement and workload generation.
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            osds: 4,
+            replicas: 2,
+            target_object_size: 4 * 1024 * 1024,
+            profile: CostProfile::PaperTestbed,
+            pg_count: 128,
+            seed: 42,
+        }
+    }
+}
+
+/// Skyhook driver / worker pool shape.
+#[derive(Clone, Debug)]
+pub struct DriverConfig {
+    /// Worker threads executing sub-queries.
+    pub workers: usize,
+    /// Max sub-queries batched into one dispatch round.
+    pub batch_size: usize,
+    /// Credits for write-path backpressure (in-flight object writes).
+    pub write_credits: usize,
+    /// Use the PJRT compute runtime for pushdown kernels when artifacts
+    /// are available (falls back to the native rust scan otherwise).
+    pub use_pjrt: bool,
+}
+
+impl Default for DriverConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            batch_size: 16,
+            write_credits: 32,
+            use_pjrt: false,
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub cluster: ClusterConfig,
+    pub driver: DriverConfig,
+    /// Directory holding AOT artifacts (HLO text files).
+    pub artifacts_dir: String,
+}
+
+impl Config {
+    /// Parse from TOML-subset text. Unknown keys are rejected so typos
+    /// fail loudly.
+    pub fn from_text(text: &str) -> Result<Config> {
+        let doc = Doc::parse(text)?;
+        let mut cfg = Config {
+            artifacts_dir: "artifacts".into(),
+            ..Default::default()
+        };
+
+        for sec in doc.section_names() {
+            match sec {
+                "" | "cluster" | "driver" => {}
+                other => return Err(Error::Config(format!("unknown section [{other}]"))),
+            }
+        }
+
+        if let Some(root) = doc.section("") {
+            for key in root.keys() {
+                match key.as_str() {
+                    "artifacts_dir" => {}
+                    other => {
+                        return Err(Error::Config(format!("unknown key {other:?} at root")))
+                    }
+                }
+            }
+        }
+        if let Some(s) = doc.get_str("artifacts_dir") {
+            cfg.artifacts_dir = s.to_string();
+        }
+
+        if let Some(sec) = doc.section("cluster") {
+            for key in sec.keys() {
+                match key.as_str() {
+                    "osds" | "replicas" | "target_object_size" | "profile" | "pg_count"
+                    | "seed" => {}
+                    other => {
+                        return Err(Error::Config(format!("unknown key cluster.{other}")))
+                    }
+                }
+            }
+        }
+        if let Some(n) = doc.get_int("cluster.osds") {
+            cfg.cluster.osds = usize::try_from(n)
+                .ok()
+                .filter(|&v| v > 0)
+                .ok_or_else(|| Error::Config(format!("cluster.osds must be >=1, got {n}")))?;
+        }
+        if let Some(n) = doc.get_int("cluster.replicas") {
+            cfg.cluster.replicas = usize::try_from(n)
+                .ok()
+                .filter(|&v| v > 0)
+                .ok_or_else(|| Error::Config(format!("cluster.replicas must be >=1, got {n}")))?;
+        }
+        if let Some(s) = doc.get_str("cluster.target_object_size") {
+            cfg.cluster.target_object_size = parse_size(s)?;
+        } else if let Some(n) = doc.get_int("cluster.target_object_size") {
+            cfg.cluster.target_object_size = n
+                .try_into()
+                .map_err(|_| Error::Config("negative object size".into()))?;
+        }
+        if let Some(s) = doc.get_str("cluster.profile") {
+            cfg.cluster.profile = CostProfile::from_str(s)?;
+        }
+        if let Some(n) = doc.get_int("cluster.pg_count") {
+            cfg.cluster.pg_count = u32::try_from(n)
+                .ok()
+                .filter(|&v| v > 0)
+                .ok_or_else(|| Error::Config(format!("cluster.pg_count must be >=1, got {n}")))?;
+        }
+        if let Some(n) = doc.get_int("cluster.seed") {
+            cfg.cluster.seed = n as u64;
+        }
+
+        if let Some(sec) = doc.section("driver") {
+            for key in sec.keys() {
+                match key.as_str() {
+                    "workers" | "batch_size" | "write_credits" | "use_pjrt" => {}
+                    other => return Err(Error::Config(format!("unknown key driver.{other}"))),
+                }
+            }
+        }
+        if let Some(n) = doc.get_int("driver.workers") {
+            cfg.driver.workers = usize::try_from(n)
+                .ok()
+                .filter(|&v| v > 0)
+                .ok_or_else(|| Error::Config(format!("driver.workers must be >=1, got {n}")))?;
+        }
+        if let Some(n) = doc.get_int("driver.batch_size") {
+            cfg.driver.batch_size = usize::try_from(n)
+                .ok()
+                .filter(|&v| v > 0)
+                .ok_or_else(|| Error::Config(format!("driver.batch_size must be >=1, got {n}")))?;
+        }
+        if let Some(n) = doc.get_int("driver.write_credits") {
+            cfg.driver.write_credits = usize::try_from(n)
+                .ok()
+                .filter(|&v| v > 0)
+                .ok_or_else(|| {
+                    Error::Config(format!("driver.write_credits must be >=1, got {n}"))
+                })?;
+        }
+        if let Some(b) = doc.get_bool("driver.use_pjrt") {
+            cfg.driver.use_pjrt = b;
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_text(&text)
+    }
+
+    /// Invariant checks shared by the builders.
+    pub fn validate(&self) -> Result<()> {
+        if self.cluster.replicas > self.cluster.osds {
+            return Err(Error::Config(format!(
+                "replicas ({}) > osds ({})",
+                self.cluster.replicas, self.cluster.osds
+            )));
+        }
+        if self.cluster.target_object_size == 0 {
+            return Err(Error::Config("target_object_size must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = Config::from_text(
+            r#"
+artifacts_dir = "out/arts"
+
+[cluster]
+osds = 8
+replicas = 3
+target_object_size = "8MiB"
+profile = "flash"
+pg_count = 256
+seed = 7
+
+[driver]
+workers = 12
+batch_size = 32
+write_credits = 64
+use_pjrt = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.artifacts_dir, "out/arts");
+        assert_eq!(cfg.cluster.osds, 8);
+        assert_eq!(cfg.cluster.replicas, 3);
+        assert_eq!(cfg.cluster.target_object_size, 8 * 1024 * 1024);
+        assert_eq!(cfg.cluster.profile, CostProfile::Flash);
+        assert_eq!(cfg.cluster.pg_count, 256);
+        assert_eq!(cfg.cluster.seed, 7);
+        assert_eq!(cfg.driver.workers, 12);
+        assert!(cfg.driver.use_pjrt);
+    }
+
+    #[test]
+    fn object_size_as_int() {
+        let cfg = Config::from_text("[cluster]\ntarget_object_size = 1048576").unwrap();
+        assert_eq!(cfg.cluster.target_object_size, 1 << 20);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_sections() {
+        assert!(Config::from_text("[clutser]\nosds = 2").is_err());
+        assert!(Config::from_text("[cluster]\nodss = 2").is_err());
+        assert!(Config::from_text("typo_at_root = 1").is_err());
+        assert!(Config::from_text("[driver]\nworker = 1").is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_values() {
+        assert!(Config::from_text("[cluster]\nosds = 0").is_err());
+        assert!(Config::from_text("[cluster]\nosds = -2").is_err());
+        assert!(Config::from_text("[cluster]\nprofile = \"tape\"").is_err());
+        assert!(Config::from_text("[driver]\nworkers = 0").is_err());
+    }
+
+    #[test]
+    fn rejects_replicas_exceeding_osds() {
+        let e = Config::from_text("[cluster]\nosds = 2\nreplicas = 3").unwrap_err();
+        assert!(e.to_string().contains("replicas"));
+    }
+
+    #[test]
+    fn profile_aliases() {
+        for (s, p) in [
+            ("paper", CostProfile::PaperTestbed),
+            ("paper_testbed", CostProfile::PaperTestbed),
+            ("ssd", CostProfile::Flash),
+            ("hdd", CostProfile::Hdd),
+        ] {
+            let cfg = Config::from_text(&format!("[cluster]\nprofile = \"{s}\"")).unwrap();
+            assert_eq!(cfg.cluster.profile, p);
+        }
+    }
+}

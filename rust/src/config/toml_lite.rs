@@ -1,0 +1,381 @@
+//! A TOML-subset parser (serde/toml are unavailable offline).
+//!
+//! Supported: `[section]` and `[section.sub]` headers, `key = value` with
+//! string / integer / float / bool / homogeneous-array values, `#`
+//! comments, and bare or quoted keys. Unsupported TOML (dates, inline
+//! tables, arrays-of-tables, multiline strings) is rejected with a line
+//! number — the config surface of this project doesn't need it.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed TOML-subset value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: dotted section path → (key → value).
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    /// Parse a document from text.
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut doc = Doc::default();
+        let mut current = String::new(); // root section ""
+        doc.sections.entry(current.clone()).or_default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated section header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err(lineno, "empty section name"));
+                }
+                if name.starts_with('[') {
+                    return Err(err(lineno, "arrays of tables are not supported"));
+                }
+                validate_key_path(name).map_err(|m| err(lineno, &m))?;
+                current = name.to_string();
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+            let key = line[..eq].trim().trim_matches('"').to_string();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim()).map_err(|m| err(lineno, &m))?;
+            let sec = doc.sections.entry(current.clone()).or_default();
+            if sec.insert(key.clone(), value).is_some() {
+                return Err(err(lineno, &format!("duplicate key {key:?}")));
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Look up `section` (dotted, "" = root).
+    pub fn section(&self, name: &str) -> Option<&BTreeMap<String, Value>> {
+        self.sections.get(name)
+    }
+
+    /// All section names (including root "").
+    pub fn section_names(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    /// `get("cluster.osds")` → value of key `osds` in section `cluster`.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        let (sec, key) = match path.rfind('.') {
+            Some(i) => (&path[..i], &path[i + 1..]),
+            None => ("", path),
+        };
+        // Try the split interpretation first, then a root-level key with a
+        // literal dot (we never create those, but be forgiving).
+        self.sections
+            .get(sec)
+            .and_then(|m| m.get(key))
+            .or_else(|| self.sections.get("").and_then(|m| m.get(path)))
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(Value::as_str)
+    }
+    pub fn get_int(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(Value::as_int)
+    }
+    pub fn get_float(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(Value::as_float)
+    }
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(Value::as_bool)
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("line {}: {msg}", lineno + 1))
+}
+
+/// Strip a `#` comment that is not inside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn validate_key_path(path: &str) -> std::result::Result<(), String> {
+    for part in path.split('.') {
+        if part.is_empty() {
+            return Err(format!("bad section path {path:?}"));
+        }
+        if !part
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+        {
+            return Err(format!("bad section path {path:?}"));
+        }
+    }
+    Ok(())
+}
+
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(unescape(inner)?));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner)? {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(Value::Array(items));
+    }
+    // Numbers: allow underscores as digit separators like TOML.
+    let cleaned: String = s.chars().filter(|c| *c != '_').collect();
+    if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
+        if let Ok(f) = cleaned.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+    }
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+/// Split an array body on commas, respecting quoted strings and nesting.
+fn split_top_level(s: &str) -> std::result::Result<Vec<&str>, String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => {
+                depth = depth.checked_sub(1).ok_or("unbalanced ]")?;
+            }
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        return Err("unterminated string in array".into());
+    }
+    if depth != 0 {
+        return Err("unbalanced [ in array".into());
+    }
+    parts.push(&s[start..]);
+    Ok(parts)
+}
+
+fn unescape(s: &str) -> std::result::Result<String, String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => return Err(format!("bad escape: \\{other:?}")),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_document() {
+        let doc = Doc::parse(
+            r#"
+# global
+name = "demo"
+replicas = 3
+ratio = 0.5
+debug = true
+
+[cluster]
+osds = 8
+object_size = "4MiB"
+
+[cluster.net]
+latency_us = 200
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name"), Some("demo"));
+        assert_eq!(doc.get_int("replicas"), Some(3));
+        assert_eq!(doc.get_float("ratio"), Some(0.5));
+        assert_eq!(doc.get_bool("debug"), Some(true));
+        assert_eq!(doc.get_int("cluster.osds"), Some(8));
+        assert_eq!(doc.get_str("cluster.object_size"), Some("4MiB"));
+        assert_eq!(doc.get_int("cluster.net.latency_us"), Some(200));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = Doc::parse("x = 4").unwrap();
+        assert_eq!(doc.get_float("x"), Some(4.0));
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = Doc::parse(r#"xs = [1, 2, 3]
+names = ["a", "b"]
+empty = []"#)
+            .unwrap();
+        let xs = doc.get("xs").unwrap().as_array().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[2].as_int(), Some(3));
+        let names = doc.get("names").unwrap().as_array().unwrap();
+        assert_eq!(names[1].as_str(), Some("b"));
+        assert_eq!(doc.get("empty").unwrap().as_array().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let doc = Doc::parse(r##"x = "a#b" # trailing comment"##).unwrap();
+        assert_eq!(doc.get_str("x"), Some("a#b"));
+    }
+
+    #[test]
+    fn escapes() {
+        let doc = Doc::parse(r#"x = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(doc.get_str("x"), Some("a\nb\t\"c\""));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = Doc::parse("n = 1_000_000\nf = 1_0.5").unwrap();
+        assert_eq!(doc.get_int("n"), Some(1_000_000));
+        assert_eq!(doc.get_float("f"), Some(10.5));
+    }
+
+    #[test]
+    fn negative_and_scientific() {
+        let doc = Doc::parse("a = -5\nb = 1e-3\nc = -2.5E2").unwrap();
+        assert_eq!(doc.get_int("a"), Some(-5));
+        assert_eq!(doc.get_float("b"), Some(1e-3));
+        assert_eq!(doc.get_float("c"), Some(-250.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Doc::parse("ok = 1\nbroken").unwrap_err();
+        assert!(e.to_string().contains("line 2"), "{e}");
+        let e = Doc::parse("x = ").unwrap_err();
+        assert!(e.to_string().contains("line 1"), "{e}");
+    }
+
+    #[test]
+    fn rejects_duplicates_and_bad_sections() {
+        assert!(Doc::parse("a = 1\na = 2").is_err());
+        assert!(Doc::parse("[]").is_err());
+        assert!(Doc::parse("[a b]").is_err());
+        assert!(Doc::parse("[[tables]]").is_err());
+        assert!(Doc::parse("[unterminated").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(Doc::parse(r#"x = "unterminated"#).is_err());
+        assert!(Doc::parse("x = [1, 2").is_err());
+        assert!(Doc::parse("x = nope").is_err());
+    }
+
+    #[test]
+    fn missing_lookups_are_none() {
+        let doc = Doc::parse("[a]\nb = 1").unwrap();
+        assert!(doc.get("a.c").is_none());
+        assert!(doc.get("z.b").is_none());
+        assert!(doc.get_str("a.b").is_none()); // wrong type
+    }
+}

@@ -1,0 +1,287 @@
+//! Dynamic batching for chunk-compute requests.
+//!
+//! The PJRT executables have fixed shapes; amortizing dispatch overhead
+//! means packing many small pushdown requests into full kernel launches.
+//! The batcher collects submissions until either `max_batch` items are
+//! pending or `max_wait` elapses since the first item of the batch
+//! (vLLM-style time/size dual trigger), then hands the whole batch to the
+//! processor on a dedicated thread.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Batcher statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BatchStats {
+    pub batches: u64,
+    pub items: u64,
+    pub full_batches: u64,
+}
+
+struct Submission<T, R> {
+    item: T,
+    resp: mpsc::Sender<R>,
+}
+
+enum Msg<T, R> {
+    Submit(Submission<T, R>),
+    Shutdown,
+}
+
+/// A generic dynamic batcher. `processor` receives 1..=max_batch items
+/// and must return exactly one result per item, in order.
+pub struct Batcher<T: Send + 'static, R: Send + 'static> {
+    tx: Mutex<mpsc::Sender<Msg<T, R>>>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    stats: Arc<Mutex<BatchStats>>,
+}
+
+impl<T: Send + 'static, R: Send + 'static> Batcher<T, R> {
+    pub fn new<F>(policy: BatchPolicy, processor: F) -> Arc<Self>
+    where
+        F: Fn(Vec<T>) -> Vec<R> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg<T, R>>();
+        let stats = Arc::new(Mutex::new(BatchStats::default()));
+        let stats2 = Arc::clone(&stats);
+        let handle = std::thread::Builder::new()
+            .name("skyhook-batcher".into())
+            .spawn(move || batch_loop(rx, policy, processor, stats2))
+            .expect("spawn batcher");
+        Arc::new(Self {
+            tx: Mutex::new(tx),
+            handle: Mutex::new(Some(handle)),
+            stats,
+        })
+    }
+
+    /// Submit one item; blocks until its result is ready.
+    pub fn submit(&self, item: T) -> R {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Msg::Submit(Submission { item, resp: rtx }))
+            .expect("batcher gone");
+        rrx.recv().expect("batcher dropped request")
+    }
+
+    pub fn stats(&self) -> BatchStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+impl<T: Send + 'static, R: Send + 'static> Drop for Batcher<T, R> {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Msg::Shutdown);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn batch_loop<T, R, F>(
+    rx: mpsc::Receiver<Msg<T, R>>,
+    policy: BatchPolicy,
+    processor: F,
+    stats: Arc<Mutex<BatchStats>>,
+) where
+    F: Fn(Vec<T>) -> Vec<R>,
+{
+    let max_batch = policy.max_batch.max(1);
+    'outer: loop {
+        // Wait for the first item of a batch.
+        let first = match rx.recv() {
+            Ok(Msg::Submit(s)) => s,
+            Ok(Msg::Shutdown) | Err(_) => break,
+        };
+        let mut pending = vec![first];
+        let deadline = Instant::now() + policy.max_wait;
+        // Fill until full or deadline.
+        while pending.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Submit(s)) => pending.push(s),
+                Ok(Msg::Shutdown) => {
+                    flush(&processor, pending, &stats, max_batch);
+                    break 'outer;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    flush(&processor, pending, &stats, max_batch);
+                    break 'outer;
+                }
+            }
+        }
+        flush(&processor, pending, &stats, max_batch);
+    }
+}
+
+fn flush<T, R, F>(
+    processor: &F,
+    pending: Vec<Submission<T, R>>,
+    stats: &Arc<Mutex<BatchStats>>,
+    max_batch: usize,
+) where
+    F: Fn(Vec<T>) -> Vec<R>,
+{
+    if pending.is_empty() {
+        return;
+    }
+    {
+        let mut s = stats.lock().unwrap();
+        s.batches += 1;
+        s.items += pending.len() as u64;
+        if pending.len() >= max_batch {
+            s.full_batches += 1;
+        }
+    }
+    let (items, resps): (Vec<T>, Vec<mpsc::Sender<R>>) = pending
+        .into_iter()
+        .map(|s| (s.item, s.resp))
+        .unzip();
+    let results = processor(items);
+    assert_eq!(
+        results.len(),
+        resps.len(),
+        "processor must return one result per item"
+    );
+    for (r, tx) in results.into_iter().zip(resps) {
+        let _ = tx.send(r);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool::WaitGroup;
+
+    #[test]
+    fn single_item_flushes_on_timeout() {
+        let b = Batcher::new(
+            BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_millis(5),
+            },
+            |items: Vec<u32>| items.iter().map(|x| x * 2).collect(),
+        );
+        assert_eq!(b.submit(21), 42);
+        let s = b.stats();
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.items, 1);
+        assert_eq!(s.full_batches, 0);
+    }
+
+    #[test]
+    fn concurrent_submitters_get_batched() {
+        let b = Batcher::new(
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(20),
+            },
+            |items: Vec<u32>| items.iter().map(|x| x + 1).collect(),
+        );
+        let wg = WaitGroup::new();
+        let mut handles = Vec::new();
+        for i in 0..32u32 {
+            let b = Arc::clone(&b);
+            let g = wg.add();
+            handles.push(std::thread::spawn(move || {
+                let r = b.submit(i);
+                drop(g);
+                assert_eq!(r, i + 1);
+            }));
+        }
+        wg.wait();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = b.stats();
+        assert_eq!(s.items, 32);
+        assert!(
+            s.batches < 32,
+            "expected batching, got {} batches",
+            s.batches
+        );
+    }
+
+    #[test]
+    fn results_map_to_correct_submitters() {
+        let b = Batcher::new(
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(10),
+            },
+            |items: Vec<u64>| items.iter().map(|x| x * x).collect(),
+        );
+        let mut handles = Vec::new();
+        for i in 0..20u64 {
+            let b = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || (i, b.submit(i))));
+        }
+        for h in handles {
+            let (i, r) = h.join().unwrap();
+            assert_eq!(r, i * i, "submitter {i} got wrong result");
+        }
+    }
+
+    #[test]
+    fn full_batch_triggers_immediately() {
+        // With a huge max_wait, only the size trigger can flush.
+        let b = Batcher::new(
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_secs(5),
+            },
+            |items: Vec<u32>| items.iter().map(|x| *x).collect(),
+        );
+        let wg = WaitGroup::new();
+        let mut handles = Vec::new();
+        let start = Instant::now();
+        for i in 0..4u32 {
+            let b = Arc::clone(&b);
+            let g = wg.add();
+            handles.push(std::thread::spawn(move || {
+                let r = b.submit(i);
+                drop(g);
+                r
+            }));
+        }
+        wg.wait();
+        assert!(
+            start.elapsed() < Duration::from_secs(2),
+            "size trigger should flush fast"
+        );
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(b.stats().full_batches, 1);
+    }
+
+    #[test]
+    fn drop_flushes_cleanly() {
+        let b = Batcher::new(BatchPolicy::default(), |items: Vec<u8>| items);
+        assert_eq!(b.submit(9), 9);
+        drop(b); // must join without hanging
+    }
+}

@@ -1,0 +1,158 @@
+//! Metrics registry: named counters + latency histograms for the request
+//! path. Snapshots feed the CLI's `stats` output and the benches.
+
+use crate::util::stats::Histogram;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Thread-safe metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
+}
+
+/// Snapshot of one histogram.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment a counter.
+    pub fn incr(&self, name: &str, by: u64) {
+        *self
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0) += by;
+    }
+
+    /// Record a latency/duration observation (seconds).
+    pub fn observe(&self, name: &str, seconds: f64) {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(Histogram::for_latency)
+            .record(seconds);
+    }
+
+    /// Counter value (0 if never written).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Histogram snapshot.
+    pub fn histogram(&self, name: &str) -> Option<HistSnapshot> {
+        self.histograms.lock().unwrap().get(name).map(|h| HistSnapshot {
+            count: h.count(),
+            mean: h.mean(),
+            p50: h.p50(),
+            p95: h.p95(),
+            max: h.max(),
+        })
+    }
+
+    /// All counters, sorted by name.
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
+    }
+
+    /// Render a human-readable report.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str("== counters ==\n");
+        for (k, v) in self.counters() {
+            out.push_str(&format!("{k:<40} {v}\n"));
+        }
+        out.push_str("== latencies ==\n");
+        let hists = self.histograms.lock().unwrap();
+        for (k, h) in hists.iter() {
+            out.push_str(&format!(
+                "{k:<40} n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms\n",
+                h.count(),
+                h.mean() * 1e3,
+                h.p50() * 1e3,
+                h.p95() * 1e3,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("reqs", 1);
+        m.incr("reqs", 2);
+        assert_eq!(m.counter("reqs"), 3);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn histograms_record() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe("lat", i as f64 * 1e-3);
+        }
+        let s = m.histogram("lat").unwrap();
+        assert_eq!(s.count, 100);
+        assert!(s.p50 > 0.03 && s.p50 < 0.07, "p50={}", s.p50);
+        assert!(m.histogram("none").is_none());
+    }
+
+    #[test]
+    fn report_contains_entries() {
+        let m = Metrics::new();
+        m.incr("writes", 5);
+        m.observe("q", 0.01);
+        let r = m.report();
+        assert!(r.contains("writes"));
+        assert!(r.contains("q"));
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let m = Arc::new(Metrics::new());
+        let mut hs = Vec::new();
+        for _ in 0..8 {
+            let m = Arc::clone(&m);
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    m.incr("c", 1);
+                    m.observe("h", 0.001);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("c"), 8000);
+        assert_eq!(m.histogram("h").unwrap().count, 8000);
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 request-path coordination: routing, admission control, dynamic
+//! batching, rebalance planning, and metrics.
+
+pub mod backpressure;
+pub mod batcher;
+pub mod ingest;
+pub mod metrics;
+pub mod rebalance;
+pub mod router;
+
+pub use backpressure::{Credit, CreditGate};
+pub use batcher::{BatchPolicy, BatchStats, Batcher};
+pub use ingest::{IngestConfig, IngestReport, Ingestor};
+pub use metrics::Metrics;
+pub use rebalance::{plan_moves, Move, PlanSummary};
+pub use router::{Request, Response, Router};

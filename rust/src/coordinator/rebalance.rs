@@ -1,0 +1,169 @@
+//! Rebalance planning: given two osdmap epochs, compute exactly which
+//! objects must move where — the preview/throttling layer above
+//! `Cluster::rebalance` (§2 goal 1's "load balancing, elasticity").
+
+use crate::store::placement::{OsdId, OsdMap};
+
+/// One planned object movement.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Move {
+    pub object: String,
+    pub from: OsdId,
+    pub to: OsdId,
+}
+
+/// Summary of a movement plan.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PlanSummary {
+    pub objects_total: usize,
+    pub objects_moving: usize,
+    pub moves: usize,
+    /// Fraction of objects whose placement changed.
+    pub churn: f64,
+}
+
+/// Compute the movement plan between two maps for `objects`.
+///
+/// A move is emitted per (object, new OSD) that doesn't hold the object
+/// under the old map, sourced from an old holder that is preferably also
+/// surviving (first old OSD as source, matching Cluster::rebalance).
+pub fn plan_moves(
+    before: &OsdMap,
+    after: &OsdMap,
+    objects: &[String],
+    replicas: usize,
+) -> (Vec<Move>, PlanSummary) {
+    let mut moves = Vec::new();
+    let mut moving = 0usize;
+    for obj in objects {
+        let old = before.place(obj, replicas);
+        let new = after.place(obj, replicas);
+        let added: Vec<OsdId> = new
+            .iter()
+            .copied()
+            .filter(|id| !old.contains(id))
+            .collect();
+        if !added.is_empty() {
+            moving += 1;
+        }
+        for to in added {
+            moves.push(Move {
+                object: obj.clone(),
+                from: old[0],
+                to,
+            });
+        }
+    }
+    let summary = PlanSummary {
+        objects_total: objects.len(),
+        objects_moving: moving,
+        moves: moves.len(),
+        churn: if objects.is_empty() {
+            0.0
+        } else {
+            moving as f64 / objects.len() as f64
+        },
+    };
+    (moves, summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn objects(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("obj.{i:04}")).collect()
+    }
+
+    #[test]
+    fn no_change_no_moves() {
+        let m = OsdMap::new(4, 128);
+        let (moves, s) = plan_moves(&m, &m.clone(), &objects(100), 2);
+        assert!(moves.is_empty());
+        assert_eq!(s.objects_moving, 0);
+        assert_eq!(s.churn, 0.0);
+    }
+
+    #[test]
+    fn adding_osd_moves_bounded_fraction() {
+        let before = OsdMap::new(8, 256);
+        let mut after = before.clone();
+        after.add_osd(1.0);
+        let objs = objects(800);
+        let (moves, s) = plan_moves(&before, &after, &objs, 1);
+        // Ideal churn for 8→9 is 1/9 ≈ 11%; allow 2x slack.
+        assert!(s.churn > 0.02 && s.churn < 0.25, "churn={}", s.churn);
+        // Every move targets the new OSD (id 8) under replicas=1.
+        assert!(moves.iter().all(|m| m.to == 8));
+        assert_eq!(s.moves, moves.len());
+        assert_eq!(s.objects_total, 800);
+    }
+
+    #[test]
+    fn removing_osd_moves_only_its_objects() {
+        let before = OsdMap::new(6, 256);
+        let mut after = before.clone();
+        after.set_weight(2, 0.0);
+        let objs = objects(600);
+        let (moves, _) = plan_moves(&before, &after, &objs, 1);
+        for mv in &moves {
+            // Every moving object was primary on the removed OSD.
+            assert_eq!(before.place(&mv.object, 1)[0], 2, "{mv:?}");
+            assert_ne!(mv.to, 2);
+        }
+        assert!(!moves.is_empty());
+    }
+
+    #[test]
+    fn replicated_moves_have_valid_sources() {
+        let before = OsdMap::new(5, 128);
+        let mut after = before.clone();
+        after.add_osd(2.0);
+        let objs = objects(300);
+        let (moves, _) = plan_moves(&before, &after, &objs, 3);
+        for mv in &moves {
+            let old = before.place(&mv.object, 3);
+            assert!(old.contains(&mv.from), "source must hold the object");
+            assert!(!old.contains(&mv.to), "target must be new");
+        }
+    }
+
+    #[test]
+    fn empty_object_list() {
+        let m = OsdMap::new(3, 64);
+        let mut m2 = m.clone();
+        m2.add_osd(1.0);
+        let (moves, s) = plan_moves(&m, &m2, &[], 1);
+        assert!(moves.is_empty());
+        assert_eq!(s.churn, 0.0);
+    }
+
+    #[test]
+    fn plan_matches_cluster_rebalance_count() {
+        use crate::config::ClusterConfig;
+        use crate::store::Cluster;
+        let cfg = ClusterConfig {
+            osds: 3,
+            replicas: 1,
+            ..Default::default()
+        };
+        let c = Cluster::with_defaults(&cfg);
+        let mut names = Vec::new();
+        for i in 0..80 {
+            let n = format!("pm.{i}");
+            c.write_object(0.0, &n, b"xx").unwrap();
+            names.push(n);
+        }
+        // Snapshot maps around the topology change.
+        let before = OsdMap::new(3, cfg.pg_count);
+        let mut after = before.clone();
+        after.add_osd(1.0);
+        let (_, summary) = plan_moves(&before, &after, &names, 1);
+        c.add_osd(1.0);
+        let (moved, _) = c.rebalance().unwrap();
+        assert_eq!(
+            moved as usize, summary.moves,
+            "plan and execution disagree"
+        );
+    }
+}

@@ -1,0 +1,230 @@
+//! The front-door request router: the piece of L3 that a deployment would
+//! put its clients behind. Wraps the Skyhook driver with admission
+//! control (write credits), per-request metrics, and a uniform
+//! request/response surface used by the CLI `serve` loop and examples.
+
+use super::backpressure::CreditGate;
+use super::metrics::Metrics;
+use crate::dataset::partition::PartitionSpec;
+use crate::dataset::table::Batch;
+use crate::dataset::Layout;
+use crate::error::Result;
+use crate::skyhook::{Driver, ExecMode, Query, QueryResult, WriteReport};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A routable request.
+pub enum Request {
+    /// Ingest a table as a new dataset.
+    WriteTable {
+        dataset: String,
+        batch: Batch,
+        layout: Layout,
+        spec: PartitionSpec,
+    },
+    /// Run a query.
+    Query {
+        query: Query,
+        force_mode: Option<ExecMode>,
+    },
+    /// Build a secondary index.
+    BuildIndex { dataset: String, column: String },
+    /// Physical-design transform.
+    Transform { dataset: String, target: Layout },
+}
+
+/// Response union.
+pub enum Response {
+    Write(WriteReport),
+    Query(QueryResult),
+    Index(u64),
+    Transform(WriteReport),
+}
+
+/// The router.
+pub struct Router {
+    driver: Arc<Driver>,
+    write_gate: CreditGate,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Router {
+    pub fn new(driver: Arc<Driver>, write_credits: usize) -> Self {
+        Self {
+            driver,
+            write_gate: CreditGate::new(write_credits),
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    pub fn driver(&self) -> &Arc<Driver> {
+        &self.driver
+    }
+
+    /// Route one request, recording metrics.
+    pub fn handle(&self, req: Request) -> Result<Response> {
+        let start = Instant::now();
+        let out = match req {
+            Request::WriteTable {
+                dataset,
+                batch,
+                layout,
+                spec,
+            } => {
+                // Admission control on the ingest path.
+                let _credit = self.write_gate.acquire(1);
+                self.metrics.incr("router.writes", 1);
+                self.metrics.incr("router.write_rows", batch.nrows() as u64);
+                let rep = self
+                    .driver
+                    .write_table(&dataset, &batch, layout, &spec, None)?;
+                self.metrics
+                    .incr("router.write_bytes", rep.bytes_written);
+                self.metrics
+                    .observe("router.write_latency", start.elapsed().as_secs_f64());
+                Response::Write(rep)
+            }
+            Request::Query { query, force_mode } => {
+                self.metrics.incr("router.queries", 1);
+                let r = self.driver.execute(&query, force_mode)?;
+                self.metrics.incr("router.query_bytes_moved", r.stats.bytes_moved);
+                if r.stats.pushdown {
+                    self.metrics.incr("router.pushdown_queries", 1);
+                }
+                self.metrics
+                    .observe("router.query_latency", start.elapsed().as_secs_f64());
+                self.metrics
+                    .observe("router.query_sim_seconds", r.stats.sim_seconds);
+                Response::Query(r)
+            }
+            Request::BuildIndex { dataset, column } => {
+                self.metrics.incr("router.index_builds", 1);
+                let n = self.driver.build_index(&dataset, &column)?;
+                Response::Index(n)
+            }
+            Request::Transform { dataset, target } => {
+                self.metrics.incr("router.transforms", 1);
+                let rep = self.driver.transform_layout(&dataset, target)?;
+                Response::Transform(rep)
+            }
+        };
+        Ok(out)
+    }
+
+    /// Available write credits (observability).
+    pub fn write_credits_available(&self) -> usize {
+        self.write_gate.available()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, DriverConfig};
+    use crate::dataset::table::gen;
+    use crate::skyhook::{register_skyhook_class, AggFunc, Query};
+    use crate::store::{ClassRegistry, Cluster};
+
+    fn router() -> Router {
+        let mut reg = ClassRegistry::with_builtins();
+        register_skyhook_class(&mut reg, None);
+        let cluster = Cluster::new(
+            &ClusterConfig {
+                osds: 4,
+                replicas: 1,
+                ..Default::default()
+            },
+            reg,
+        );
+        let driver = Arc::new(Driver::new(cluster, DriverConfig::default()));
+        Router::new(driver, 4)
+    }
+
+    #[test]
+    fn write_then_query_via_router() {
+        let r = router();
+        let batch = gen::sensor_table(1500, 2);
+        let resp = r
+            .handle(Request::WriteTable {
+                dataset: "s".into(),
+                batch,
+                layout: Layout::Col,
+                spec: PartitionSpec::with_target(8 * 1024),
+            })
+            .unwrap();
+        let Response::Write(rep) = resp else { panic!() };
+        assert!(rep.objects > 1);
+
+        let resp = r
+            .handle(Request::Query {
+                query: Query::scan("s").aggregate(AggFunc::Count, "val"),
+                force_mode: None,
+            })
+            .unwrap();
+        let Response::Query(q) = resp else { panic!() };
+        assert_eq!(q.aggregates[0], 1500.0);
+
+        assert_eq!(r.metrics.counter("router.writes"), 1);
+        assert_eq!(r.metrics.counter("router.queries"), 1);
+        assert_eq!(r.metrics.counter("router.pushdown_queries"), 1);
+        assert!(r.metrics.counter("router.write_bytes") > 0);
+        assert!(r.metrics.histogram("router.query_latency").is_some());
+    }
+
+    #[test]
+    fn index_and_transform_via_router() {
+        let r = router();
+        r.handle(Request::WriteTable {
+            dataset: "s".into(),
+            batch: gen::sensor_table(500, 3),
+            layout: Layout::Row,
+            spec: PartitionSpec::with_target(8 * 1024),
+        })
+        .unwrap();
+        let Response::Index(n) = r
+            .handle(Request::BuildIndex {
+                dataset: "s".into(),
+                column: "sensor".into(),
+            })
+            .unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(n, 500);
+        let Response::Transform(rep) = r
+            .handle(Request::Transform {
+                dataset: "s".into(),
+                target: Layout::Col,
+            })
+            .unwrap()
+        else {
+            panic!()
+        };
+        assert!(rep.objects > 0);
+    }
+
+    #[test]
+    fn errors_propagate() {
+        let r = router();
+        assert!(r
+            .handle(Request::Query {
+                query: Query::scan("ghost"),
+                force_mode: None,
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn credits_are_returned_after_writes() {
+        let r = router();
+        let before = r.write_credits_available();
+        r.handle(Request::WriteTable {
+            dataset: "a".into(),
+            batch: gen::sensor_table(100, 4),
+            layout: Layout::Col,
+            spec: PartitionSpec::default(),
+        })
+        .unwrap();
+        assert_eq!(r.write_credits_available(), before);
+    }
+}

@@ -1,0 +1,560 @@
+//! N-dimensional array datasets: hyperslab selections and the chunk-grid
+//! algebra that maps selections onto storage objects.
+//!
+//! This is the HDF5 side of the paper: a dataset has a [`Dataspace`] and a
+//! chunk shape; a read/write request is a [`Hyperslab`]; the mapping layer
+//! decomposes the hyperslab into per-chunk sub-slabs (the "sub-requests"
+//! the global VOL plugin scatters to objects, §4.1).
+
+use super::schema::Dataspace;
+use crate::error::{Error, Result};
+
+/// A rectangular selection: `start[d] .. start[d]+count[d]` per dimension
+/// (HDF5 hyperslab with stride=1, block=1).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Hyperslab {
+    pub start: Vec<u64>,
+    pub count: Vec<u64>,
+}
+
+impl Hyperslab {
+    pub fn new(start: &[u64], count: &[u64]) -> Result<Self> {
+        if start.len() != count.len() {
+            return Err(Error::Invalid(format!(
+                "start rank {} != count rank {}",
+                start.len(),
+                count.len()
+            )));
+        }
+        if count.iter().any(|&c| c == 0) {
+            return Err(Error::Invalid("zero-extent hyperslab".into()));
+        }
+        Ok(Self {
+            start: start.to_vec(),
+            count: count.to_vec(),
+        })
+    }
+
+    /// Full-extent selection of a dataspace.
+    pub fn whole(space: &Dataspace) -> Self {
+        Self {
+            start: vec![0; space.ndim()],
+            count: space.dims.clone(),
+        }
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.start.len()
+    }
+
+    /// Number of selected elements.
+    pub fn numel(&self) -> u64 {
+        self.count.iter().product()
+    }
+
+    /// Exclusive end coordinate per dimension.
+    pub fn end(&self) -> Vec<u64> {
+        self.start
+            .iter()
+            .zip(&self.count)
+            .map(|(s, c)| s + c)
+            .collect()
+    }
+
+    /// Does the selection fit inside the dataspace?
+    pub fn fits(&self, space: &Dataspace) -> bool {
+        self.ndim() == space.ndim()
+            && self
+                .end()
+                .iter()
+                .zip(&space.dims)
+                .all(|(e, d)| e <= d)
+    }
+
+    /// Intersection with another slab (None if disjoint).
+    pub fn intersect(&self, other: &Hyperslab) -> Option<Hyperslab> {
+        if self.ndim() != other.ndim() {
+            return None;
+        }
+        let mut start = Vec::with_capacity(self.ndim());
+        let mut count = Vec::with_capacity(self.ndim());
+        for d in 0..self.ndim() {
+            let lo = self.start[d].max(other.start[d]);
+            let hi = (self.start[d] + self.count[d]).min(other.start[d] + other.count[d]);
+            if lo >= hi {
+                return None;
+            }
+            start.push(lo);
+            count.push(hi - lo);
+        }
+        Some(Hyperslab { start, count })
+    }
+
+    /// Iterate the selection's coordinates in row-major order.
+    pub fn coords(&self) -> CoordIter {
+        CoordIter {
+            slab: self.clone(),
+            next: Some(self.start.clone()),
+        }
+    }
+
+    /// Row-major iteration of contiguous runs: yields `(coord, run_len)`
+    /// where a run spans the innermost dimension. This is what turns a
+    /// hyperslab copy into O(rows) memcpys rather than O(elements) loads.
+    pub fn rows(&self) -> RowIter {
+        let mut outer = self.clone();
+        let last = outer.ndim() - 1;
+        let run = outer.count[last];
+        outer.count[last] = 1;
+        RowIter {
+            inner: outer.coords(),
+            run,
+        }
+    }
+}
+
+/// Row-major coordinate iterator.
+pub struct CoordIter {
+    slab: Hyperslab,
+    next: Option<Vec<u64>>,
+}
+
+impl Iterator for CoordIter {
+    type Item = Vec<u64>;
+
+    fn next(&mut self) -> Option<Vec<u64>> {
+        let cur = self.next.take()?;
+        // Compute successor.
+        let mut succ = cur.clone();
+        for d in (0..self.slab.ndim()).rev() {
+            succ[d] += 1;
+            if succ[d] < self.slab.start[d] + self.slab.count[d] {
+                self.next = Some(succ);
+                return Some(cur);
+            }
+            succ[d] = self.slab.start[d];
+        }
+        // Wrapped every dimension: done.
+        self.next = None;
+        Some(cur)
+    }
+}
+
+/// Iterator of `(start_coord, run_len)` contiguous rows.
+pub struct RowIter {
+    inner: CoordIter,
+    run: u64,
+}
+
+impl Iterator for RowIter {
+    type Item = (Vec<u64>, u64);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        self.inner.next().map(|c| (c, self.run))
+    }
+}
+
+/// Regular chunking of a dataspace (HDF5 chunked layout).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChunkGrid {
+    pub space: Dataspace,
+    pub chunk: Vec<u64>,
+}
+
+impl ChunkGrid {
+    pub fn new(space: Dataspace, chunk: &[u64]) -> Result<Self> {
+        if chunk.len() != space.ndim() {
+            return Err(Error::Invalid(format!(
+                "chunk rank {} != dataspace rank {}",
+                chunk.len(),
+                space.ndim()
+            )));
+        }
+        if chunk.iter().any(|&c| c == 0) {
+            return Err(Error::Invalid("zero chunk extent".into()));
+        }
+        Ok(Self {
+            space,
+            chunk: chunk.to_vec(),
+        })
+    }
+
+    /// Chunks per dimension (ceil division).
+    pub fn grid_dims(&self) -> Vec<u64> {
+        self.space
+            .dims
+            .iter()
+            .zip(&self.chunk)
+            .map(|(d, c)| d.div_ceil(*c))
+            .collect()
+    }
+
+    /// Total number of chunks.
+    pub fn nchunks(&self) -> u64 {
+        self.grid_dims().iter().product()
+    }
+
+    /// Grid coordinate of a chunk from its linear index.
+    pub fn chunk_coord(&self, idx: u64) -> Result<Vec<u64>> {
+        let grid = self.grid_dims();
+        if idx >= self.nchunks() {
+            return Err(Error::Invalid(format!("chunk idx {idx} out of range")));
+        }
+        let mut rem = idx;
+        let mut coord = vec![0u64; grid.len()];
+        for d in (0..grid.len()).rev() {
+            coord[d] = rem % grid[d];
+            rem /= grid[d];
+        }
+        Ok(coord)
+    }
+
+    /// Linear index of a chunk grid coordinate.
+    pub fn chunk_index(&self, coord: &[u64]) -> Result<u64> {
+        let grid = self.grid_dims();
+        if coord.len() != grid.len() {
+            return Err(Error::Invalid("bad chunk coord rank".into()));
+        }
+        let mut idx = 0u64;
+        for (d, (&c, &g)) in coord.iter().zip(&grid).enumerate() {
+            if c >= g {
+                return Err(Error::Invalid(format!(
+                    "chunk coord {c} >= grid {g} at axis {d}"
+                )));
+            }
+            idx = idx * g + c;
+        }
+        Ok(idx)
+    }
+
+    /// The region of the dataspace covered by a chunk (edge chunks are
+    /// clipped to the dataspace).
+    pub fn chunk_slab(&self, idx: u64) -> Result<Hyperslab> {
+        let coord = self.chunk_coord(idx)?;
+        let start: Vec<u64> = coord
+            .iter()
+            .zip(&self.chunk)
+            .map(|(c, k)| c * k)
+            .collect();
+        let count: Vec<u64> = start
+            .iter()
+            .zip(&self.chunk)
+            .zip(&self.space.dims)
+            .map(|((s, k), d)| (*k).min(d - s))
+            .collect();
+        Hyperslab::new(&start, &count)
+    }
+
+    /// Full (unclipped) chunk extent in elements — the storage allocation
+    /// per chunk object (edge chunks are padded, like HDF5).
+    pub fn chunk_numel(&self) -> u64 {
+        self.chunk.iter().product()
+    }
+
+    /// Decompose a hyperslab into `(chunk_index, slab ∩ chunk)` pieces —
+    /// the sub-requests the forwarding plugin scatters (§4.1).
+    pub fn decompose(&self, slab: &Hyperslab) -> Result<Vec<(u64, Hyperslab)>> {
+        if !slab.fits(&self.space) {
+            return Err(Error::Invalid(format!(
+                "hyperslab {slab:?} exceeds dataspace {:?}",
+                self.space.dims
+            )));
+        }
+        // Range of chunk coords touched per dimension.
+        let lo: Vec<u64> = slab
+            .start
+            .iter()
+            .zip(&self.chunk)
+            .map(|(s, k)| s / k)
+            .collect();
+        let hi: Vec<u64> = slab
+            .end()
+            .iter()
+            .zip(&self.chunk)
+            .map(|(e, k)| (e - 1) / k)
+            .collect();
+        let count: Vec<u64> = lo.iter().zip(&hi).map(|(l, h)| h - l + 1).collect();
+        let touched = Hyperslab::new(&lo, &count)?;
+        let mut out = Vec::new();
+        for coord in touched.coords() {
+            let idx = self.chunk_index(&coord)?;
+            let chunk_slab = self.chunk_slab(idx)?;
+            if let Some(piece) = slab.intersect(&chunk_slab) {
+                out.push((idx, piece));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Copy elements of a hyperslab between a source buffer shaped as
+/// `src_space` and a destination shaped as `dst_space`, where the slab is
+/// given in both spaces' coordinates. Used by the VOL layers to
+/// scatter/gather f32 data between request buffers and chunk objects.
+pub fn copy_slab_f32(
+    src: &[f32],
+    src_space: &Dataspace,
+    src_slab: &Hyperslab,
+    dst: &mut [f32],
+    dst_space: &Dataspace,
+    dst_slab: &Hyperslab,
+) -> Result<()> {
+    if src_slab.numel() != dst_slab.numel() {
+        return Err(Error::Invalid(format!(
+            "slab element mismatch: {} vs {}",
+            src_slab.numel(),
+            dst_slab.numel()
+        )));
+    }
+    if src_slab.count != dst_slab.count {
+        return Err(Error::Invalid(
+            "slab shapes must match for copy".into(),
+        ));
+    }
+    if !src_slab.fits(src_space) || !dst_slab.fits(dst_space) {
+        return Err(Error::Invalid("slab exceeds space in copy".into()));
+    }
+    if src.len() as u64 != src_space.numel() || dst.len() as u64 != dst_space.numel() {
+        return Err(Error::Invalid("buffer size != dataspace".into()));
+    }
+    let src_strides = src_space.strides();
+    let dst_strides = dst_space.strides();
+    let last = src_slab.ndim() - 1;
+    for ((s_coord, run), (d_coord, _)) in src_slab.rows().zip(dst_slab.rows()) {
+        let s_off = s_coord
+            .iter()
+            .zip(&src_strides)
+            .map(|(c, st)| c * st)
+            .sum::<u64>() as usize;
+        let d_off = d_coord
+            .iter()
+            .zip(&dst_strides)
+            .map(|(c, st)| c * st)
+            .sum::<u64>() as usize;
+        let run = run as usize;
+        debug_assert!(src_strides[last] == 1 && dst_strides[last] == 1);
+        dst[d_off..d_off + run].copy_from_slice(&src[s_off..s_off + run]);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space(dims: &[u64]) -> Dataspace {
+        Dataspace::new(dims).unwrap()
+    }
+
+    #[test]
+    fn hyperslab_basics() {
+        let h = Hyperslab::new(&[1, 2], &[3, 4]).unwrap();
+        assert_eq!(h.numel(), 12);
+        assert_eq!(h.end(), vec![4, 6]);
+        assert!(h.fits(&space(&[4, 6])));
+        assert!(!h.fits(&space(&[4, 5])));
+        assert!(!h.fits(&space(&[4])));
+    }
+
+    #[test]
+    fn hyperslab_rejects_invalid() {
+        assert!(Hyperslab::new(&[0], &[1, 2]).is_err());
+        assert!(Hyperslab::new(&[0, 0], &[1, 0]).is_err());
+    }
+
+    #[test]
+    fn whole_selection() {
+        let s = space(&[3, 5]);
+        let h = Hyperslab::whole(&s);
+        assert_eq!(h.numel(), 15);
+        assert!(h.fits(&s));
+    }
+
+    #[test]
+    fn intersection() {
+        let a = Hyperslab::new(&[0, 0], &[4, 4]).unwrap();
+        let b = Hyperslab::new(&[2, 2], &[4, 4]).unwrap();
+        let i = a.intersect(&b).unwrap();
+        assert_eq!(i, Hyperslab::new(&[2, 2], &[2, 2]).unwrap());
+        let c = Hyperslab::new(&[4, 0], &[1, 4]).unwrap();
+        assert!(a.intersect(&c).is_none());
+        assert_eq!(a.intersect(&a).unwrap(), a);
+    }
+
+    #[test]
+    fn coords_row_major() {
+        let h = Hyperslab::new(&[1, 1], &[2, 2]).unwrap();
+        let cs: Vec<Vec<u64>> = h.coords().collect();
+        assert_eq!(
+            cs,
+            vec![vec![1, 1], vec![1, 2], vec![2, 1], vec![2, 2]]
+        );
+    }
+
+    #[test]
+    fn coords_1d_and_count() {
+        let h = Hyperslab::new(&[5], &[3]).unwrap();
+        let cs: Vec<Vec<u64>> = h.coords().collect();
+        assert_eq!(cs, vec![vec![5], vec![6], vec![7]]);
+        let big = Hyperslab::new(&[0, 0, 0], &[3, 4, 5]).unwrap();
+        assert_eq!(big.coords().count(), 60);
+    }
+
+    #[test]
+    fn rows_iterate_contiguous_runs() {
+        let h = Hyperslab::new(&[1, 2], &[2, 5]).unwrap();
+        let rows: Vec<(Vec<u64>, u64)> = h.rows().collect();
+        assert_eq!(rows, vec![(vec![1, 2], 5), (vec![2, 2], 5)]);
+    }
+
+    #[test]
+    fn grid_dims_and_counts() {
+        let g = ChunkGrid::new(space(&[10, 10]), &[4, 4]).unwrap();
+        assert_eq!(g.grid_dims(), vec![3, 3]);
+        assert_eq!(g.nchunks(), 9);
+        assert_eq!(g.chunk_numel(), 16);
+    }
+
+    #[test]
+    fn chunk_coord_index_roundtrip() {
+        let g = ChunkGrid::new(space(&[10, 10, 10]), &[4, 5, 3]).unwrap();
+        for idx in 0..g.nchunks() {
+            let coord = g.chunk_coord(idx).unwrap();
+            assert_eq!(g.chunk_index(&coord).unwrap(), idx);
+        }
+        assert!(g.chunk_coord(g.nchunks()).is_err());
+        assert!(g.chunk_index(&[99, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn edge_chunks_are_clipped() {
+        let g = ChunkGrid::new(space(&[10, 10]), &[4, 4]).unwrap();
+        // Last chunk in each dim covers only 2 elements.
+        let last = g.nchunks() - 1;
+        let slab = g.chunk_slab(last).unwrap();
+        assert_eq!(slab.start, vec![8, 8]);
+        assert_eq!(slab.count, vec![2, 2]);
+    }
+
+    #[test]
+    fn decompose_whole_space_covers_everything() {
+        let g = ChunkGrid::new(space(&[10, 10]), &[4, 4]).unwrap();
+        let pieces = g.decompose(&Hyperslab::whole(&g.space)).unwrap();
+        assert_eq!(pieces.len(), 9);
+        let total: u64 = pieces.iter().map(|(_, s)| s.numel()).sum();
+        assert_eq!(total, 100);
+        // Every piece is inside its chunk.
+        for (idx, piece) in &pieces {
+            let cs = g.chunk_slab(*idx).unwrap();
+            assert_eq!(cs.intersect(piece).unwrap(), piece.clone());
+        }
+    }
+
+    #[test]
+    fn decompose_small_slab_hits_right_chunks() {
+        let g = ChunkGrid::new(space(&[10, 10]), &[4, 4]).unwrap();
+        // Selection inside one chunk.
+        let s = Hyperslab::new(&[1, 1], &[2, 2]).unwrap();
+        let pieces = g.decompose(&s).unwrap();
+        assert_eq!(pieces.len(), 1);
+        assert_eq!(pieces[0].0, 0);
+        assert_eq!(pieces[0].1, s);
+        // Selection crossing a chunk boundary in one dim.
+        let s = Hyperslab::new(&[3, 0], &[2, 2]).unwrap();
+        let pieces = g.decompose(&s).unwrap();
+        assert_eq!(pieces.len(), 2);
+        let idxs: Vec<u64> = pieces.iter().map(|(i, _)| *i).collect();
+        assert_eq!(idxs, vec![0, 3]);
+    }
+
+    #[test]
+    fn decompose_rejects_oversized_slab() {
+        let g = ChunkGrid::new(space(&[10]), &[4]).unwrap();
+        let s = Hyperslab::new(&[8], &[5]).unwrap();
+        assert!(g.decompose(&s).is_err());
+    }
+
+    #[test]
+    fn decompose_element_conservation_random() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(77);
+        for _ in 0..50 {
+            let dims = [rng.range_u64(5, 20), rng.range_u64(5, 20)];
+            let chunk = [rng.range_u64(1, 7), rng.range_u64(1, 7)];
+            let g = ChunkGrid::new(space(&dims), &chunk).unwrap();
+            let start = [rng.range_u64(0, dims[0] - 1), rng.range_u64(0, dims[1] - 1)];
+            let count = [
+                rng.range_u64(1, dims[0] - start[0]),
+                rng.range_u64(1, dims[1] - start[1]),
+            ];
+            let slab = Hyperslab::new(&start, &count).unwrap();
+            let pieces = g.decompose(&slab).unwrap();
+            let total: u64 = pieces.iter().map(|(_, s)| s.numel()).sum();
+            assert_eq!(total, slab.numel(), "dims={dims:?} chunk={chunk:?}");
+            // Pieces must be pairwise disjoint.
+            for i in 0..pieces.len() {
+                for j in i + 1..pieces.len() {
+                    assert!(pieces[i].1.intersect(&pieces[j].1).is_none());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn copy_slab_roundtrip() {
+        // 4x4 source, copy the middle 2x2 into a 2x2 buffer and back.
+        let src_space = space(&[4, 4]);
+        let src: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let mid = Hyperslab::new(&[1, 1], &[2, 2]).unwrap();
+        let small_space = space(&[2, 2]);
+        let whole_small = Hyperslab::whole(&small_space);
+        let mut out = vec![0f32; 4];
+        copy_slab_f32(&src, &src_space, &mid, &mut out, &small_space, &whole_small).unwrap();
+        assert_eq!(out, vec![5.0, 6.0, 9.0, 10.0]);
+
+        let mut back = vec![0f32; 16];
+        copy_slab_f32(&out, &small_space, &whole_small, &mut back, &src_space, &mid).unwrap();
+        assert_eq!(back[5], 5.0);
+        assert_eq!(back[10], 10.0);
+        assert_eq!(back[0], 0.0);
+    }
+
+    #[test]
+    fn copy_slab_validates() {
+        let s4 = space(&[4]);
+        let s2 = space(&[2]);
+        let a = vec![0f32; 4];
+        let mut b = vec![0f32; 2];
+        // shape mismatch
+        assert!(copy_slab_f32(
+            &a,
+            &s4,
+            &Hyperslab::new(&[0], &[3]).unwrap(),
+            &mut b,
+            &s2,
+            &Hyperslab::new(&[0], &[2]).unwrap()
+        )
+        .is_err());
+        // slab exceeds space
+        assert!(copy_slab_f32(
+            &a,
+            &s4,
+            &Hyperslab::new(&[3], &[2]).unwrap(),
+            &mut b,
+            &s2,
+            &Hyperslab::new(&[0], &[2]).unwrap()
+        )
+        .is_err());
+        // buffer size mismatch
+        let mut tiny = vec![0f32; 1];
+        assert!(copy_slab_f32(
+            &a,
+            &s4,
+            &Hyperslab::new(&[0], &[2]).unwrap(),
+            &mut tiny,
+            &s2,
+            &Hyperslab::new(&[0], &[2]).unwrap()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,636 @@
+//! Physical layouts: self-describing binary formats for table batches
+//! (row-oriented and column-oriented) and array chunks — the Flatbuffers/
+//! Arrow stand-in, including the "format wrapper and extra metadata" the
+//! Skyhook worker adds on the write path (§4.2) and the row↔column
+//! transformation that physical design management needs (§5).
+//!
+//! Table format (v2):
+//!
+//! ```text
+//! SKYB | version | layout | schema | nrows |
+//!   ncols_dir | [col_len u64, col_crc u32]* |   <- Col only: directory
+//!   payload_crc |                              <- Row only
+//!   payload
+//! ```
+//!
+//! The columnar directory gives each column's byte extent **and its own
+//! checksum**, so a storage server can read just the columns a query
+//! touches with ranged device reads and still verify integrity — the
+//! physical asymmetry (row objects must be read whole) that the E4
+//! experiment measures.
+
+use super::schema::TableSchema;
+#[cfg(test)]
+use super::schema::DType;
+use super::table::{Batch, Column};
+use crate::error::{Error, Result};
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+const TABLE_MAGIC: &[u8; 4] = b"SKYB";
+const ARRAY_MAGIC: &[u8; 4] = b"SKYA";
+const VERSION: u8 = 2;
+
+/// Physical layout of a serialized table object.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// Row-oriented: values interleaved row by row.
+    Row,
+    /// Column-oriented: contiguous per-column blocks with a header
+    /// directory of (length, crc) extents.
+    Col,
+}
+
+impl Layout {
+    fn code(self) -> u8 {
+        match self {
+            Layout::Row => 0,
+            Layout::Col => 1,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<Layout> {
+        match c {
+            0 => Ok(Layout::Row),
+            1 => Ok(Layout::Col),
+            other => Err(Error::Corrupt(format!("bad layout code {other}"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Layout::Row => "row",
+            Layout::Col => "col",
+        }
+    }
+}
+
+/// Parsed header of a table object.
+#[derive(Clone, Debug)]
+pub struct TableHeader {
+    pub layout: Layout,
+    pub schema: TableSchema,
+    pub nrows: u64,
+    /// Per-column (byte offset within payload, byte length, crc) — Col
+    /// layout only.
+    pub directory: Vec<(u64, u64, u32)>,
+    /// Whole-payload crc — Row layout only.
+    pub payload_crc: u32,
+    /// Byte offset where the payload starts.
+    pub payload_start: usize,
+}
+
+/// Serialize a batch in the given layout.
+pub fn encode_batch(batch: &Batch, layout: Layout) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(batch.byte_size() + 128);
+    w.raw(TABLE_MAGIC);
+    w.u8(VERSION);
+    w.u8(layout.code());
+    w.bytes(&batch.schema.encode());
+    w.u64(batch.nrows() as u64);
+    match layout {
+        Layout::Row => {
+            let payload = encode_rows(batch);
+            w.u32(crc32fast::hash(&payload));
+            w.raw(&payload);
+        }
+        Layout::Col => {
+            let cols: Vec<Vec<u8>> = batch.columns.iter().map(encode_one_col).collect();
+            w.u32(cols.len() as u32);
+            for c in &cols {
+                w.u64(c.len() as u64);
+                w.u32(crc32fast::hash(c));
+            }
+            for c in &cols {
+                w.raw(c);
+            }
+        }
+    }
+    w.finish()
+}
+
+/// Parse the header (no payload decoding, no checksum verification).
+pub fn parse_header(buf: &[u8]) -> Result<TableHeader> {
+    let mut r = ByteReader::new(buf);
+    if r.raw(4)? != TABLE_MAGIC {
+        return Err(Error::Corrupt("bad table magic".into()));
+    }
+    let version = r.u8()?;
+    if version != VERSION {
+        return Err(Error::Corrupt(format!("unsupported version {version}")));
+    }
+    let layout = Layout::from_code(r.u8()?)?;
+    let schema = TableSchema::decode(r.bytes()?)?;
+    let nrows = r.u64()?;
+    let mut directory = Vec::new();
+    let mut payload_crc = 0;
+    match layout {
+        Layout::Row => {
+            payload_crc = r.u32()?;
+        }
+        Layout::Col => {
+            let n = r.u32()? as usize;
+            if n != schema.ncols() {
+                return Err(Error::Corrupt(format!(
+                    "directory has {n} columns, schema {}",
+                    schema.ncols()
+                )));
+            }
+            let mut off = 0u64;
+            for _ in 0..n {
+                let len = r.u64()?;
+                let crc = r.u32()?;
+                directory.push((off, len, crc));
+                off += len;
+            }
+        }
+    }
+    Ok(TableHeader {
+        layout,
+        schema,
+        nrows,
+        directory,
+        payload_crc,
+        payload_start: r.pos(),
+    })
+}
+
+/// Peek at (layout, schema, nrows) without decoding the payload.
+pub fn peek_header(buf: &[u8]) -> Result<(Layout, TableSchema, u64)> {
+    let h = parse_header(buf)?;
+    Ok((h.layout, h.schema, h.nrows))
+}
+
+/// Deserialize a batch (verifies checksums).
+pub fn decode_batch(buf: &[u8]) -> Result<(Batch, Layout)> {
+    let h = parse_header(buf)?;
+    let payload = &buf[h.payload_start..];
+    let batch = match h.layout {
+        Layout::Row => {
+            if crc32fast::hash(payload) != h.payload_crc {
+                return Err(Error::Corrupt("table payload checksum mismatch".into()));
+            }
+            decode_rows(&h.schema, h.nrows, payload)?
+        }
+        Layout::Col => {
+            let mut batch = Batch::empty(&h.schema);
+            for (ci, col) in batch.columns.iter_mut().enumerate() {
+                let (off, len, crc) = h.directory[ci];
+                let bytes = payload
+                    .get(off as usize..(off + len) as usize)
+                    .ok_or_else(|| Error::Corrupt("directory extent out of range".into()))?;
+                if crc32fast::hash(bytes) != crc {
+                    return Err(Error::Corrupt(format!("column {ci} checksum mismatch")));
+                }
+                decode_one_col(col, h.nrows, bytes)?;
+            }
+            if h.directory.last().map_or(0, |(o, l, _)| o + l) as usize != payload.len() {
+                return Err(Error::Corrupt("trailing bytes in col payload".into()));
+            }
+            batch
+        }
+    };
+    Ok((batch, h.layout))
+}
+
+/// Columnar projection read from a full buffer: decode only the named
+/// columns. For `Col` layout other columns' bytes are never touched; for
+/// `Row` layout the whole payload must be decoded (the paper's
+/// row-vs-column point). Returns the projected batch and the payload
+/// bytes actually touched.
+pub fn decode_projection(buf: &[u8], names: &[&str]) -> Result<(Batch, usize)> {
+    let h = parse_header(buf)?;
+    let payload = &buf[h.payload_start..];
+    match h.layout {
+        Layout::Col => {
+            let keep: Vec<usize> = names
+                .iter()
+                .map(|n| h.schema.col_index(n))
+                .collect::<Result<_>>()?;
+            let mut batch = Batch::empty(&h.schema);
+            let mut touched = 0usize;
+            for (ci, col) in batch.columns.iter_mut().enumerate() {
+                if !keep.contains(&ci) {
+                    continue;
+                }
+                let (off, len, crc) = h.directory[ci];
+                let bytes = payload
+                    .get(off as usize..(off + len) as usize)
+                    .ok_or_else(|| Error::Corrupt("directory extent out of range".into()))?;
+                if crc32fast::hash(bytes) != crc {
+                    return Err(Error::Corrupt(format!("column {ci} checksum mismatch")));
+                }
+                decode_one_col(col, h.nrows, bytes)?;
+                touched += len as usize;
+            }
+            // Unread columns stay empty; project them away before the
+            // batch row-length invariant matters.
+            let mut cols = Vec::with_capacity(names.len());
+            let schema = h.schema.project(names)?;
+            for n in names {
+                cols.push(batch.columns[h.schema.col_index(n)?].clone());
+            }
+            Ok((Batch::new(schema, cols)?, touched))
+        }
+        Layout::Row => {
+            if crc32fast::hash(payload) != h.payload_crc {
+                return Err(Error::Corrupt("table payload checksum mismatch".into()));
+            }
+            let batch = decode_rows(&h.schema, h.nrows, payload)?;
+            Ok((batch.project(names)?, payload.len()))
+        }
+    }
+}
+
+/// Re-encode an object in the other layout (physical design
+/// transformation, §5 bullet 2). Returns the new bytes.
+pub fn transform(buf: &[u8], target: Layout) -> Result<Vec<u8>> {
+    let (batch, current) = decode_batch(buf)?;
+    if current == target {
+        return Ok(buf.to_vec());
+    }
+    Ok(encode_batch(&batch, target))
+}
+
+fn encode_rows(batch: &Batch) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(batch.byte_size());
+    for i in 0..batch.nrows() {
+        for col in &batch.columns {
+            match col {
+                Column::F32(v) => {
+                    w.f32(v[i]);
+                }
+                Column::F64(v) => {
+                    w.f64(v[i]);
+                }
+                Column::I64(v) => {
+                    w.i64(v[i]);
+                }
+                Column::Str(v) => {
+                    w.str(&v[i]);
+                }
+            }
+        }
+    }
+    w.finish()
+}
+
+fn decode_rows(schema: &TableSchema, nrows: u64, payload: &[u8]) -> Result<Batch> {
+    let mut r = ByteReader::new(payload);
+    let mut batch = Batch::empty(schema);
+    for _ in 0..nrows {
+        for col in batch.columns.iter_mut() {
+            match col {
+                Column::F32(v) => v.push(r.f32()?),
+                Column::F64(v) => v.push(r.f64()?),
+                Column::I64(v) => v.push(r.i64()?),
+                Column::Str(v) => v.push(r.str()?.to_string()),
+            }
+        }
+    }
+    if r.remaining() != 0 {
+        return Err(Error::Corrupt(format!(
+            "{} trailing bytes in row payload",
+            r.remaining()
+        )));
+    }
+    Ok(batch)
+}
+
+fn encode_one_col(col: &Column) -> Vec<u8> {
+    // Fixed-width columns take a preallocated bulk path (one dispatch per
+    // column, vectorizable inner loop — see EXPERIMENTS.md §Perf).
+    match col {
+        Column::F32(v) => {
+            let mut out = vec![0u8; v.len() * 4];
+            for (dst, x) in out.chunks_exact_mut(4).zip(v) {
+                dst.copy_from_slice(&x.to_le_bytes());
+            }
+            out
+        }
+        Column::F64(v) => {
+            let mut out = vec![0u8; v.len() * 8];
+            for (dst, x) in out.chunks_exact_mut(8).zip(v) {
+                dst.copy_from_slice(&x.to_le_bytes());
+            }
+            out
+        }
+        Column::I64(v) => {
+            let mut out = vec![0u8; v.len() * 8];
+            for (dst, x) in out.chunks_exact_mut(8).zip(v) {
+                dst.copy_from_slice(&x.to_le_bytes());
+            }
+            out
+        }
+        Column::Str(v) => {
+            let mut cw = ByteWriter::with_capacity(col.byte_size());
+            for s in v {
+                cw.str(s);
+            }
+            cw.finish()
+        }
+    }
+}
+
+/// Decode one column's bytes into an (empty) typed column.
+pub fn decode_one_col(col: &mut Column, nrows: u64, bytes: &[u8]) -> Result<()> {
+    let nrows = nrows as usize;
+    let check = |width: usize| {
+        if bytes.len() != nrows * width {
+            Err(Error::Corrupt(format!(
+                "column byte length {} != {nrows} rows x {width}",
+                bytes.len()
+            )))
+        } else {
+            Ok(())
+        }
+    };
+    match col {
+        Column::F32(v) => {
+            check(4)?;
+            v.reserve(nrows);
+            v.extend(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap())),
+            );
+        }
+        Column::F64(v) => {
+            check(8)?;
+            v.reserve(nrows);
+            v.extend(
+                bytes
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap())),
+            );
+        }
+        Column::I64(v) => {
+            check(8)?;
+            v.reserve(nrows);
+            v.extend(
+                bytes
+                    .chunks_exact(8)
+                    .map(|c| i64::from_le_bytes(c.try_into().unwrap())),
+            );
+        }
+        Column::Str(v) => {
+            let mut cr = ByteReader::new(bytes);
+            v.reserve(nrows);
+            for _ in 0..nrows {
+                v.push(cr.str()?.to_string());
+            }
+            if cr.remaining() != 0 {
+                return Err(Error::Corrupt("trailing bytes in column".into()));
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---- array chunks ----------------------------------------------------------
+
+/// Serialize one f32 array chunk: `SKYA | version | ndim | dims | crc |
+/// data`. Chunks are padded to full chunk shape by the caller (HDF5-style
+/// edge padding), so `dims` here is the *stored* shape.
+pub fn encode_array_chunk(data: &[f32], dims: &[u64]) -> Result<Vec<u8>> {
+    let numel: u64 = dims.iter().product();
+    if numel as usize != data.len() {
+        return Err(Error::Invalid(format!(
+            "chunk data {} != dims product {numel}",
+            data.len()
+        )));
+    }
+    let mut w = ByteWriter::with_capacity(data.len() * 4 + 32);
+    w.raw(ARRAY_MAGIC);
+    w.u8(VERSION);
+    w.u8(dims.len() as u8);
+    for &d in dims {
+        w.u64(d);
+    }
+    let payload = crate::util::bytes::f32s_to_bytes(data);
+    w.u32(crc32fast::hash(&payload));
+    w.raw(&payload);
+    Ok(w.finish())
+}
+
+/// Deserialize an array chunk; returns (data, dims).
+pub fn decode_array_chunk(buf: &[u8]) -> Result<(Vec<f32>, Vec<u64>)> {
+    let mut r = ByteReader::new(buf);
+    if r.raw(4)? != ARRAY_MAGIC {
+        return Err(Error::Corrupt("bad array magic".into()));
+    }
+    if r.u8()? != VERSION {
+        return Err(Error::Corrupt("unsupported array version".into()));
+    }
+    let ndim = r.u8()? as usize;
+    if ndim == 0 || ndim > 32 {
+        return Err(Error::Corrupt(format!("bad ndim {ndim}")));
+    }
+    let mut dims = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        dims.push(r.u64()?);
+    }
+    let crc = r.u32()?;
+    let payload = r.raw(r.remaining())?;
+    if crc32fast::hash(payload) != crc {
+        return Err(Error::Corrupt("array payload checksum mismatch".into()));
+    }
+    let data = crate::util::bytes::bytes_to_f32s(payload)?;
+    let numel: u64 = dims.iter().product();
+    if data.len() as u64 != numel {
+        return Err(Error::Corrupt(format!(
+            "array data {} != dims product {numel}",
+            data.len()
+        )));
+    }
+    Ok((data, dims))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::table::gen;
+
+    fn sample() -> Batch {
+        Batch::new(
+            TableSchema::new(&[
+                ("id", DType::I64),
+                ("v", DType::F32),
+                ("w", DType::F64),
+                ("tag", DType::Str),
+            ]),
+            vec![
+                Column::I64(vec![10, 20, 30]),
+                Column::F32(vec![1.5, -2.5, 3.25]),
+                Column::F64(vec![0.1, 0.2, 0.3]),
+                Column::Str(vec!["x".into(), "".into(), "zzz".into()]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn row_roundtrip() {
+        let b = sample();
+        let enc = encode_batch(&b, Layout::Row);
+        let (dec, layout) = decode_batch(&enc).unwrap();
+        assert_eq!(layout, Layout::Row);
+        assert_eq!(dec, b);
+    }
+
+    #[test]
+    fn col_roundtrip() {
+        let b = sample();
+        let enc = encode_batch(&b, Layout::Col);
+        let (dec, layout) = decode_batch(&enc).unwrap();
+        assert_eq!(layout, Layout::Col);
+        assert_eq!(dec, b);
+    }
+
+    #[test]
+    fn empty_batch_roundtrip() {
+        let b = Batch::empty(&sample().schema);
+        for layout in [Layout::Row, Layout::Col] {
+            let (dec, _) = decode_batch(&encode_batch(&b, layout)).unwrap();
+            assert_eq!(dec.nrows(), 0);
+            assert_eq!(dec.schema, b.schema);
+        }
+    }
+
+    #[test]
+    fn peek_header_cheap() {
+        let b = sample();
+        let enc = encode_batch(&b, Layout::Col);
+        let (layout, schema, nrows) = peek_header(&enc).unwrap();
+        assert_eq!(layout, Layout::Col);
+        assert_eq!(schema, b.schema);
+        assert_eq!(nrows, 3);
+    }
+
+    #[test]
+    fn col_directory_extents_are_exact() {
+        let b = sample();
+        let enc = encode_batch(&b, Layout::Col);
+        let h = parse_header(&enc).unwrap();
+        assert_eq!(h.directory.len(), 4);
+        let total: u64 = h.directory.iter().map(|(_, l, _)| l).sum();
+        assert_eq!(h.payload_start + total as usize, enc.len());
+        // Extents are contiguous.
+        let mut off = 0;
+        for (o, l, _) in &h.directory {
+            assert_eq!(*o, off);
+            off += l;
+        }
+    }
+
+    #[test]
+    fn checksum_detects_corruption_row() {
+        let b = sample();
+        let mut enc = encode_batch(&b, Layout::Row);
+        let n = enc.len();
+        enc[n - 1] ^= 0xff;
+        assert!(matches!(decode_batch(&enc), Err(Error::Corrupt(_))));
+    }
+
+    #[test]
+    fn checksum_detects_corruption_per_column() {
+        let b = sample();
+        let mut enc = encode_batch(&b, Layout::Col);
+        let h = parse_header(&enc).unwrap();
+        // Corrupt the *last* column's bytes.
+        let (off, _, _) = h.directory[3];
+        let idx = h.payload_start + off as usize;
+        enc[idx] ^= 0xff;
+        assert!(decode_batch(&enc).is_err());
+        // A projection that avoids the corrupt column still succeeds.
+        let (p, _) = decode_projection(&enc, &["id", "v"]).unwrap();
+        assert_eq!(p.nrows(), 3);
+        // But touching it fails.
+        assert!(decode_projection(&enc, &["tag"]).is_err());
+    }
+
+    #[test]
+    fn bad_magic_and_version() {
+        let b = sample();
+        let mut enc = encode_batch(&b, Layout::Row);
+        enc[0] = b'X';
+        assert!(decode_batch(&enc).is_err());
+        let mut enc = encode_batch(&b, Layout::Row);
+        enc[4] = 99; // version
+        assert!(decode_batch(&enc).is_err());
+    }
+
+    #[test]
+    fn projection_from_col_touches_less() {
+        let b = gen::wide_table(2000, 16, 5);
+        let col_enc = encode_batch(&b, Layout::Col);
+        let row_enc = encode_batch(&b, Layout::Row);
+        let (pc, col_touched) = decode_projection(&col_enc, &["c3"]).unwrap();
+        let (pr, row_touched) = decode_projection(&row_enc, &["c3"]).unwrap();
+        assert_eq!(pc, pr);
+        assert_eq!(pc.ncols(), 1);
+        assert_eq!(pc.nrows(), 2000);
+        // Columnar projection touches ~1/16 of the payload.
+        assert!(
+            (col_touched as f64) < (row_touched as f64) * 0.25,
+            "col={col_touched} row={row_touched}"
+        );
+    }
+
+    #[test]
+    fn projection_missing_column() {
+        let enc = encode_batch(&sample(), Layout::Col);
+        assert!(decode_projection(&enc, &["nope"]).is_err());
+    }
+
+    #[test]
+    fn transform_row_to_col_and_back() {
+        let b = sample();
+        let row = encode_batch(&b, Layout::Row);
+        let col = transform(&row, Layout::Col).unwrap();
+        let (layout, _, _) = peek_header(&col).unwrap();
+        assert_eq!(layout, Layout::Col);
+        let back = transform(&col, Layout::Row).unwrap();
+        let (dec, _) = decode_batch(&back).unwrap();
+        assert_eq!(dec, b);
+        // No-op transform returns identical bytes.
+        assert_eq!(transform(&row, Layout::Row).unwrap(), row);
+    }
+
+    #[test]
+    fn row_and_col_encode_same_logical_data() {
+        let b = gen::sensor_table(500, 11);
+        let (a, _) = decode_batch(&encode_batch(&b, Layout::Row)).unwrap();
+        let (c, _) = decode_batch(&encode_batch(&b, Layout::Col)).unwrap();
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn truncated_buffer_is_corrupt_or_short() {
+        let enc = encode_batch(&sample(), Layout::Col);
+        for cut in [3, 10, enc.len() - 1] {
+            assert!(decode_batch(&enc[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn array_chunk_roundtrip() {
+        let data: Vec<f32> = (0..24).map(|i| i as f32 * 0.5).collect();
+        let enc = encode_array_chunk(&data, &[2, 3, 4]).unwrap();
+        let (dec, dims) = decode_array_chunk(&enc).unwrap();
+        assert_eq!(dec, data);
+        assert_eq!(dims, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn array_chunk_validates() {
+        assert!(encode_array_chunk(&[1.0], &[2]).is_err());
+        let enc = encode_array_chunk(&[1.0, 2.0], &[2]).unwrap();
+        let mut bad = enc.clone();
+        let n = bad.len();
+        bad[n - 1] ^= 1;
+        assert!(decode_array_chunk(&bad).is_err());
+        bad = enc.clone();
+        bad[0] = b'Q';
+        assert!(decode_array_chunk(&bad).is_err());
+    }
+}

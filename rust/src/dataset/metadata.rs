@@ -1,0 +1,291 @@
+//! The dataset metadata service: the "minimum amount of metadata about
+//! the partition information" (§5 bullet 1.4) that lets any client map a
+//! dataset name to its object set without a directory lookup per object.
+//!
+//! Metadata is itself stored as an object (`{dataset}/_meta`) so it
+//! inherits the store's replication and failover.
+
+use super::naming;
+use super::schema::{Dataspace, TableSchema};
+use crate::dataset::layout::Layout;
+use crate::error::{Error, Result};
+use crate::store::Cluster;
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+const META_MAGIC: &[u8; 4] = b"SKYM";
+
+/// Per-row-group metadata (enough to plan queries without touching data).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RowGroupMeta {
+    pub rows: u64,
+    pub bytes: u64,
+}
+
+/// Metadata of one dataset.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DatasetMeta {
+    Table {
+        schema: TableSchema,
+        layout: Layout,
+        row_groups: Vec<RowGroupMeta>,
+        /// Locality group per row group (parallel to `row_groups`), empty
+        /// string = none.
+        localities: Vec<String>,
+    },
+    Array {
+        space: Dataspace,
+        chunk: Vec<u64>,
+    },
+}
+
+impl DatasetMeta {
+    /// Object names of all data objects of dataset `name`, in index order.
+    pub fn object_names(&self, name: &str) -> Vec<String> {
+        match self {
+            DatasetMeta::Table {
+                row_groups,
+                localities,
+                ..
+            } => (0..row_groups.len() as u64)
+                .map(|i| {
+                    let base = naming::table_object(name, i);
+                    let loc = &localities[i as usize];
+                    if loc.is_empty() {
+                        base
+                    } else {
+                        naming::with_locality(loc, &base)
+                    }
+                })
+                .collect(),
+            DatasetMeta::Array { space, chunk } => {
+                let grid = super::array::ChunkGrid::new(space.clone(), chunk)
+                    .expect("validated at construction");
+                (0..grid.nchunks())
+                    .map(|i| naming::array_object(name, i))
+                    .collect()
+            }
+        }
+    }
+
+    /// Total logical rows (tables) or elements (arrays).
+    pub fn total_items(&self) -> u64 {
+        match self {
+            DatasetMeta::Table { row_groups, .. } => {
+                row_groups.iter().map(|g| g.rows).sum()
+            }
+            DatasetMeta::Array { space, .. } => space.numel(),
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.raw(META_MAGIC);
+        match self {
+            DatasetMeta::Table {
+                schema,
+                layout,
+                row_groups,
+                localities,
+            } => {
+                w.u8(0);
+                w.bytes(&schema.encode());
+                w.u8(match layout {
+                    Layout::Row => 0,
+                    Layout::Col => 1,
+                });
+                w.u32(row_groups.len() as u32);
+                for g in row_groups {
+                    w.u64(g.rows);
+                    w.u64(g.bytes);
+                }
+                for l in localities {
+                    w.str(l);
+                }
+            }
+            DatasetMeta::Array { space, chunk } => {
+                w.u8(1);
+                w.bytes(&space.encode());
+                w.u32(chunk.len() as u32);
+                for &c in chunk {
+                    w.u64(c);
+                }
+            }
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<DatasetMeta> {
+        let mut r = ByteReader::new(buf);
+        if r.raw(4)? != META_MAGIC {
+            return Err(Error::Corrupt("bad meta magic".into()));
+        }
+        match r.u8()? {
+            0 => {
+                let schema = TableSchema::decode(r.bytes()?)?;
+                let layout = match r.u8()? {
+                    0 => Layout::Row,
+                    1 => Layout::Col,
+                    o => return Err(Error::Corrupt(format!("bad layout {o}"))),
+                };
+                let n = r.u32()? as usize;
+                if n > 10_000_000 {
+                    return Err(Error::Corrupt("absurd row group count".into()));
+                }
+                let mut row_groups = Vec::with_capacity(n);
+                for _ in 0..n {
+                    row_groups.push(RowGroupMeta {
+                        rows: r.u64()?,
+                        bytes: r.u64()?,
+                    });
+                }
+                let mut localities = Vec::with_capacity(n);
+                for _ in 0..n {
+                    localities.push(r.str()?.to_string());
+                }
+                Ok(DatasetMeta::Table {
+                    schema,
+                    layout,
+                    row_groups,
+                    localities,
+                })
+            }
+            1 => {
+                let space = Dataspace::decode(r.bytes()?)?;
+                let n = r.u32()? as usize;
+                if n != space.ndim() {
+                    return Err(Error::Corrupt("chunk rank != space rank".into()));
+                }
+                let mut chunk = Vec::with_capacity(n);
+                for _ in 0..n {
+                    chunk.push(r.u64()?);
+                }
+                Ok(DatasetMeta::Array { space, chunk })
+            }
+            o => Err(Error::Corrupt(format!("bad dataset kind {o}"))),
+        }
+    }
+}
+
+/// Store dataset metadata in the cluster. Fails if it already exists
+/// unless `overwrite`.
+pub fn save_meta(
+    cluster: &Cluster,
+    at: f64,
+    dataset: &str,
+    meta: &DatasetMeta,
+    overwrite: bool,
+) -> Result<f64> {
+    let obj = naming::meta_object(dataset);
+    if !overwrite && cluster.object_exists(&obj) {
+        return Err(Error::AlreadyExists(format!("dataset {dataset}")));
+    }
+    Ok(cluster.write_object(at, &obj, &meta.encode())?.finish)
+}
+
+/// Load dataset metadata from the cluster.
+pub fn load_meta(cluster: &Cluster, at: f64, dataset: &str) -> Result<(DatasetMeta, f64)> {
+    let obj = naming::meta_object(dataset);
+    let t = cluster
+        .read_object(at, &obj)
+        .map_err(|_| Error::NotFound(format!("dataset {dataset}")))?;
+    Ok((DatasetMeta::decode(&t.value)?, t.finish))
+}
+
+/// List datasets present in the cluster (by scanning for `_meta` objects).
+pub fn list_datasets(cluster: &Cluster) -> Vec<String> {
+    cluster
+        .list_objects()
+        .into_iter()
+        .filter_map(|n| n.strip_suffix("/_meta").map(str::to_string))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::dataset::schema::DType;
+
+    fn table_meta() -> DatasetMeta {
+        DatasetMeta::Table {
+            schema: TableSchema::new(&[("a", DType::F32), ("b", DType::I64)]),
+            layout: Layout::Col,
+            row_groups: vec![
+                RowGroupMeta { rows: 100, bytes: 1200 },
+                RowGroupMeta { rows: 80, bytes: 960 },
+            ],
+            localities: vec![String::new(), "grp1".into()],
+        }
+    }
+
+    #[test]
+    fn table_meta_roundtrip() {
+        let m = table_meta();
+        assert_eq!(DatasetMeta::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn array_meta_roundtrip() {
+        let m = DatasetMeta::Array {
+            space: Dataspace::new(&[100, 200]).unwrap(),
+            chunk: vec![10, 50],
+        };
+        assert_eq!(DatasetMeta::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(DatasetMeta::decode(b"????").is_err());
+        assert!(DatasetMeta::decode(b"SKYM\x07").is_err());
+        let m = table_meta().encode();
+        assert!(DatasetMeta::decode(&m[..m.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn object_names_table_with_locality() {
+        let m = table_meta();
+        let names = m.object_names("ds");
+        assert_eq!(names, vec!["ds/t/00000000", "grp1#ds/t/00000001"]);
+        assert_eq!(m.total_items(), 180);
+    }
+
+    #[test]
+    fn object_names_array() {
+        let m = DatasetMeta::Array {
+            space: Dataspace::new(&[10, 10]).unwrap(),
+            chunk: vec![5, 5],
+        };
+        let names = m.object_names("arr");
+        assert_eq!(names.len(), 4);
+        assert_eq!(names[0], "arr/a/00000000");
+        assert_eq!(m.total_items(), 100);
+    }
+
+    #[test]
+    fn save_load_meta_in_cluster() {
+        let c = Cluster::with_defaults(&ClusterConfig::default());
+        let m = table_meta();
+        save_meta(&c, 0.0, "mydata", &m, false).unwrap();
+        let (loaded, _) = load_meta(&c, 0.0, "mydata").unwrap();
+        assert_eq!(loaded, m);
+        // Duplicate create fails; overwrite succeeds.
+        assert!(matches!(
+            save_meta(&c, 0.0, "mydata", &m, false),
+            Err(Error::AlreadyExists(_))
+        ));
+        save_meta(&c, 0.0, "mydata", &m, true).unwrap();
+        // Missing dataset.
+        assert!(load_meta(&c, 0.0, "ghost").is_err());
+    }
+
+    #[test]
+    fn list_datasets_finds_meta_objects() {
+        let c = Cluster::with_defaults(&ClusterConfig::default());
+        save_meta(&c, 0.0, "ds1", &table_meta(), false).unwrap();
+        save_meta(&c, 0.0, "ds2", &table_meta(), false).unwrap();
+        c.write_object(0.0, "unrelated", b"x").unwrap();
+        let mut ds = list_datasets(&c);
+        ds.sort();
+        assert_eq!(ds, vec!["ds1", "ds2"]);
+    }
+}

@@ -1,0 +1,25 @@
+//! Dataset models and the mapping onto storage objects.
+//!
+//! - [`schema`] — dtypes, table schemas, array dataspaces
+//! - [`array`] — hyperslab selections + chunk-grid decomposition
+//! - [`table`] — typed columns and row batches (+ synthetic generators)
+//! - [`layout`] — row/columnar binary formats, row↔col transform,
+//!   array-chunk format
+//! - [`partition`] — object-size-targeted partitioning and unit packing
+//! - [`naming`] — dataset → object naming scheme (with locality groups)
+//! - [`metadata`] — the minimal partition-metadata service
+
+pub mod array;
+pub mod layout;
+pub mod metadata;
+pub mod naming;
+pub mod partition;
+pub mod schema;
+pub mod table;
+
+pub use array::{copy_slab_f32, ChunkGrid, Hyperslab};
+pub use layout::{decode_batch, encode_batch, Layout};
+pub use metadata::{DatasetMeta, RowGroupMeta};
+pub use partition::{pack_units, LogicalUnit, PackedObject, PartitionSpec};
+pub use schema::{ColumnSchema, Dataspace, DType, TableSchema};
+pub use table::{Batch, Column};

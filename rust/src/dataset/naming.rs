@@ -1,0 +1,105 @@
+//! Dataset → object naming scheme.
+//!
+//! Names are stable and enumerable so any client can compute the object
+//! set of a dataset from its metadata alone (no per-object directory):
+//!
+//! - table row group:  `{locality}#{dataset}/t/{index:08}`
+//! - array chunk:      `{locality}#{dataset}/a/{index:08}`
+//! - dataset metadata: `{dataset}/_meta`
+//!
+//! The optional `locality#` prefix is the placement key (Ceph's object
+//! locator): objects sharing it land in the same placement group, which
+//! is how the partitioner co-locates related logical units (§3.1, §5).
+
+/// Maximum index supported by the fixed-width naming (10^8 objects/dataset).
+pub const MAX_INDEX: u64 = 99_999_999;
+
+/// Name of a table row-group object.
+pub fn table_object(dataset: &str, index: u64) -> String {
+    debug_assert!(index <= MAX_INDEX);
+    format!("{dataset}/t/{index:08}")
+}
+
+/// Name of an array chunk object.
+pub fn array_object(dataset: &str, index: u64) -> String {
+    debug_assert!(index <= MAX_INDEX);
+    format!("{dataset}/a/{index:08}")
+}
+
+/// Name of the dataset metadata object.
+pub fn meta_object(dataset: &str) -> String {
+    format!("{dataset}/_meta")
+}
+
+/// Attach a locality group (placement key) to an object name.
+pub fn with_locality(group: &str, name: &str) -> String {
+    debug_assert!(!group.contains('#'));
+    format!("{group}#{name}")
+}
+
+/// Split `locality#rest` into `(Some(locality), rest)` or `(None, name)`.
+pub fn split_locality(name: &str) -> (Option<&str>, &str) {
+    match name.split_once('#') {
+        Some((g, rest)) => (Some(g), rest),
+        None => (None, name),
+    }
+}
+
+/// Parse a table/array object name back into (dataset, kind, index),
+/// ignoring any locality prefix. Returns None for non-dataset objects.
+pub fn parse_object(name: &str) -> Option<(&str, char, u64)> {
+    let (_, name) = split_locality(name);
+    let (rest, idx_s) = name.rsplit_once('/')?;
+    let (dataset, kind_s) = rest.rsplit_once('/')?;
+    let kind = match kind_s {
+        "t" => 't',
+        "a" => 'a',
+        _ => return None,
+    };
+    let index: u64 = idx_s.parse().ok()?;
+    Some((dataset, kind, index))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_stable_and_sortable() {
+        assert_eq!(table_object("exp/run1", 7), "exp/run1/t/00000007");
+        assert_eq!(array_object("temps", 123), "temps/a/00000123");
+        assert_eq!(meta_object("temps"), "temps/_meta");
+        // Zero-padded names sort in index order.
+        let mut names: Vec<String> = (0..20).map(|i| table_object("d", i)).collect();
+        let sorted = {
+            let mut s = names.clone();
+            s.sort();
+            s
+        };
+        names.sort_by_key(|n| parse_object(n).unwrap().2);
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn locality_roundtrip() {
+        let n = with_locality("sensor42", &table_object("d", 3));
+        assert_eq!(n, "sensor42#d/t/00000003");
+        let (g, rest) = split_locality(&n);
+        assert_eq!(g, Some("sensor42"));
+        assert_eq!(rest, "d/t/00000003");
+        assert_eq!(split_locality("plain"), (None, "plain"));
+    }
+
+    #[test]
+    fn parse_object_variants() {
+        assert_eq!(parse_object("d/t/00000005"), Some(("d", 't', 5)));
+        assert_eq!(parse_object("a/b/c/a/00000001"), Some(("a/b/c", 'a', 1)));
+        assert_eq!(
+            parse_object("grp#ds/t/00000002"),
+            Some(("ds", 't', 2))
+        );
+        assert_eq!(parse_object("ds/_meta"), None);
+        assert_eq!(parse_object("random"), None);
+        assert_eq!(parse_object("ds/t/notanum"), None);
+    }
+}

@@ -1,0 +1,349 @@
+//! Partitioning datasets into objects of proper sizes (§5 bullet 1):
+//! split large logical units, group small ones toward the target object
+//! size, and co-locate related units via locality groups.
+
+use super::table::Batch;
+use crate::error::{Error, Result};
+
+/// How a table batch is cut into row-group objects.
+#[derive(Clone, Debug)]
+pub struct PartitionSpec {
+    /// Target serialized object size in bytes.
+    pub target_bytes: u64,
+    /// Hard floor: never emit a group with fewer rows (except the tail).
+    pub min_rows: usize,
+}
+
+impl Default for PartitionSpec {
+    fn default() -> Self {
+        Self {
+            target_bytes: 4 * 1024 * 1024,
+            min_rows: 1,
+        }
+    }
+}
+
+impl PartitionSpec {
+    pub fn with_target(target_bytes: u64) -> Self {
+        Self {
+            target_bytes,
+            ..Default::default()
+        }
+    }
+
+    /// Rows per object for a batch (estimate from average row width).
+    pub fn rows_per_object(&self, batch: &Batch) -> usize {
+        if batch.nrows() == 0 {
+            return self.min_rows.max(1);
+        }
+        let row_bytes = (batch.byte_size() as f64 / batch.nrows() as f64).max(1.0);
+        ((self.target_bytes as f64 / row_bytes).floor() as usize).max(self.min_rows.max(1))
+    }
+
+    /// Cut a batch into row groups of ~target size.
+    pub fn partition(&self, batch: &Batch) -> Result<Vec<Batch>> {
+        if batch.nrows() == 0 {
+            return Ok(vec![]);
+        }
+        let per = self.rows_per_object(batch);
+        let mut out = Vec::with_capacity(batch.nrows().div_ceil(per));
+        let mut lo = 0;
+        while lo < batch.nrows() {
+            let hi = (lo + per).min(batch.nrows());
+            out.push(batch.slice(lo, hi)?);
+            lo = hi;
+        }
+        Ok(out)
+    }
+}
+
+/// A logical unit to be packed into objects (e.g. one HDF5 dataset in a
+/// group, one sensor's series, one event cluster).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LogicalUnit {
+    pub id: String,
+    pub bytes: u64,
+    /// Units sharing a locality key should land together (§3.1).
+    pub locality: Option<String>,
+}
+
+/// One planned object: which units (or unit fragments) it holds.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedObject {
+    /// (unit id, byte range within the unit).
+    pub pieces: Vec<(String, std::ops::Range<u64>)>,
+    pub bytes: u64,
+    pub locality: Option<String>,
+}
+
+/// Pack logical units into objects near `target` bytes:
+/// - units larger than `target` are split into ceil(bytes/target) pieces,
+/// - smaller units are greedily grouped (first-fit by locality bucket),
+/// - units with the same locality key are never mixed with other
+///   localities (so the locality → PG mapping stays meaningful).
+pub fn pack_units(units: &[LogicalUnit], target: u64) -> Result<Vec<PackedObject>> {
+    if target == 0 {
+        return Err(Error::Invalid("target object size must be > 0".into()));
+    }
+    // Bucket by locality (None bucket keyed by empty string marker).
+    let mut buckets: std::collections::BTreeMap<Option<String>, Vec<&LogicalUnit>> =
+        Default::default();
+    for u in units {
+        buckets.entry(u.locality.clone()).or_default().push(u);
+    }
+    let mut out = Vec::new();
+    for (locality, bucket) in buckets {
+        // Open objects for this bucket (first-fit decreasing-ish: keep
+        // input order for determinism, first fit).
+        let mut open: Vec<PackedObject> = Vec::new();
+        for u in bucket {
+            if u.bytes >= target {
+                // Split a large unit into full-target pieces.
+                let mut off = 0;
+                while off < u.bytes {
+                    let len = target.min(u.bytes - off);
+                    out.push(PackedObject {
+                        pieces: vec![(u.id.clone(), off..off + len)],
+                        bytes: len,
+                        locality: locality.clone(),
+                    });
+                    off += len;
+                }
+                continue;
+            }
+            match open
+                .iter_mut()
+                .find(|o| o.bytes + u.bytes <= target)
+            {
+                Some(o) => {
+                    o.pieces.push((u.id.clone(), 0..u.bytes));
+                    o.bytes += u.bytes;
+                }
+                None => open.push(PackedObject {
+                    pieces: vec![(u.id.clone(), 0..u.bytes)],
+                    bytes: u.bytes,
+                    locality: locality.clone(),
+                }),
+            }
+        }
+        out.extend(open);
+    }
+    Ok(out)
+}
+
+/// Quality metrics of a packing (drives the E3 object-size experiment).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PackingStats {
+    pub objects: usize,
+    /// Mean object fill fraction vs target (1.0 = perfectly full).
+    pub mean_fill: f64,
+    /// Largest object / target (>1 only if target < unit and unsplittable).
+    pub max_overshoot: f64,
+    /// Units that were split across objects.
+    pub split_units: usize,
+}
+
+/// Compute packing stats vs a target size.
+pub fn packing_stats(objects: &[PackedObject], target: u64) -> PackingStats {
+    if objects.is_empty() {
+        return PackingStats {
+            objects: 0,
+            mean_fill: 0.0,
+            max_overshoot: 0.0,
+            split_units: 0,
+        };
+    }
+    let mean_fill = objects
+        .iter()
+        .map(|o| o.bytes as f64 / target as f64)
+        .sum::<f64>()
+        / objects.len() as f64;
+    let max_overshoot = objects
+        .iter()
+        .map(|o| o.bytes as f64 / target as f64)
+        .fold(0.0, f64::max);
+    // A unit is split if it appears in >1 object.
+    let mut seen: std::collections::HashMap<&str, usize> = Default::default();
+    for o in objects {
+        for (id, _) in &o.pieces {
+            *seen.entry(id.as_str()).or_default() += 1;
+        }
+    }
+    let split_units = seen.values().filter(|&&n| n > 1).count();
+    PackingStats {
+        objects: objects.len(),
+        mean_fill,
+        max_overshoot,
+        split_units,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::table::gen;
+
+    #[test]
+    fn partition_respects_target() {
+        let b = gen::sensor_table(10_000, 1);
+        let spec = PartitionSpec::with_target(32 * 1024);
+        let groups = spec.partition(&b).unwrap();
+        assert!(groups.len() > 1);
+        let total: usize = groups.iter().map(Batch::nrows).sum();
+        assert_eq!(total, 10_000);
+        // All but the tail are near target.
+        for g in &groups[..groups.len() - 1] {
+            let sz = g.byte_size() as f64;
+            assert!(
+                (sz / 32_768.0 - 1.0).abs() < 0.2,
+                "group size {sz} vs target 32768"
+            );
+        }
+    }
+
+    #[test]
+    fn partition_empty_and_tiny() {
+        let spec = PartitionSpec::with_target(1024);
+        let empty = Batch::empty(&gen::sensor_table(1, 0).schema);
+        assert!(spec.partition(&empty).unwrap().is_empty());
+        let tiny = gen::sensor_table(3, 0);
+        let groups = spec.partition(&tiny).unwrap();
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].nrows(), 3);
+    }
+
+    #[test]
+    fn partition_huge_target_single_group() {
+        let b = gen::sensor_table(1000, 2);
+        let spec = PartitionSpec::with_target(1 << 30);
+        let groups = spec.partition(&b).unwrap();
+        assert_eq!(groups.len(), 1);
+    }
+
+    #[test]
+    fn partition_min_rows_floor() {
+        let b = gen::sensor_table(100, 3);
+        let spec = PartitionSpec {
+            target_bytes: 1, // absurdly small
+            min_rows: 10,
+        };
+        let groups = spec.partition(&b).unwrap();
+        assert_eq!(groups.len(), 10);
+        assert!(groups.iter().all(|g| g.nrows() == 10));
+    }
+
+    fn unit(id: &str, bytes: u64) -> LogicalUnit {
+        LogicalUnit {
+            id: id.into(),
+            bytes,
+            locality: None,
+        }
+    }
+
+    fn unit_loc(id: &str, bytes: u64, loc: &str) -> LogicalUnit {
+        LogicalUnit {
+            id: id.into(),
+            bytes,
+            locality: Some(loc.into()),
+        }
+    }
+
+    #[test]
+    fn pack_groups_small_units() {
+        let units = vec![unit("a", 30), unit("b", 40), unit("c", 20), unit("d", 50)];
+        let objs = pack_units(&units, 100).unwrap();
+        // 140 bytes total → 2 objects.
+        assert_eq!(objs.len(), 2);
+        let total: u64 = objs.iter().map(|o| o.bytes).sum();
+        assert_eq!(total, 140);
+        assert!(objs.iter().all(|o| o.bytes <= 100));
+    }
+
+    #[test]
+    fn pack_splits_large_units() {
+        let units = vec![unit("big", 250)];
+        let objs = pack_units(&units, 100).unwrap();
+        assert_eq!(objs.len(), 3);
+        assert_eq!(objs[0].pieces[0].1, 0..100);
+        assert_eq!(objs[1].pieces[0].1, 100..200);
+        assert_eq!(objs[2].pieces[0].1, 200..250);
+        let st = packing_stats(&objs, 100);
+        assert_eq!(st.split_units, 1);
+    }
+
+    #[test]
+    fn pack_exact_fit_is_one_piece() {
+        let objs = pack_units(&[unit("x", 100)], 100).unwrap();
+        assert_eq!(objs.len(), 1);
+        assert_eq!(objs[0].bytes, 100);
+    }
+
+    #[test]
+    fn pack_preserves_locality_separation() {
+        let units = vec![
+            unit_loc("a1", 30, "A"),
+            unit_loc("b1", 30, "B"),
+            unit_loc("a2", 30, "A"),
+            unit_loc("b2", 30, "B"),
+        ];
+        let objs = pack_units(&units, 100).unwrap();
+        for o in &objs {
+            let locs: std::collections::HashSet<_> =
+                o.pieces.iter().map(|(id, _)| &id[..1]).collect();
+            assert_eq!(locs.len(), 1, "mixed localities in {o:?}");
+        }
+        // A-units packed together, B-units packed together → 2 objects.
+        assert_eq!(objs.len(), 2);
+        assert!(objs.iter().all(|o| o.locality.is_some()));
+    }
+
+    #[test]
+    fn pack_rejects_zero_target() {
+        assert!(pack_units(&[unit("a", 1)], 0).is_err());
+    }
+
+    #[test]
+    fn pack_empty_input() {
+        let objs = pack_units(&[], 100).unwrap();
+        assert!(objs.is_empty());
+        let st = packing_stats(&objs, 100);
+        assert_eq!(st.objects, 0);
+    }
+
+    #[test]
+    fn packing_stats_fill() {
+        let units = vec![unit("a", 50), unit("b", 50), unit("c", 50)];
+        let objs = pack_units(&units, 100).unwrap();
+        let st = packing_stats(&objs, 100);
+        assert_eq!(st.objects, 2);
+        assert!((st.mean_fill - 0.75).abs() < 1e-9);
+        assert!((st.max_overshoot - 1.0).abs() < 1e-9);
+        assert_eq!(st.split_units, 0);
+    }
+
+    #[test]
+    fn pack_conserves_bytes_property() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(5);
+        for _ in 0..30 {
+            let n = rng.range(1, 40);
+            let units: Vec<LogicalUnit> = (0..n)
+                .map(|i| unit(&format!("u{i}"), rng.range_u64(1, 5000)))
+                .collect();
+            let target = rng.range_u64(100, 2000);
+            let objs = pack_units(&units, target).unwrap();
+            let packed: u64 = objs.iter().map(|o| o.bytes).sum();
+            let input: u64 = units.iter().map(|u| u.bytes).sum();
+            assert_eq!(packed, input);
+            // Every piece stays within its unit's bounds and objects
+            // never exceed the target.
+            for o in &objs {
+                assert!(o.bytes <= target, "object over target");
+                for (id, range) in &o.pieces {
+                    let u = units.iter().find(|u| &u.id == id).unwrap();
+                    assert!(range.end <= u.bytes);
+                }
+            }
+        }
+    }
+}

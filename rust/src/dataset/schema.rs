@@ -1,0 +1,318 @@
+//! Dataset schemas: element types, table column schemas, and array
+//! dataspaces — the logical structure the paper wants the storage system
+//! to understand (§2 goal 1).
+
+use crate::error::{Error, Result};
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// Element type of a column or array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F64,
+    I64,
+    /// Variable-length UTF-8 (tables only).
+    Str,
+}
+
+impl DType {
+    /// Fixed byte width; `None` for variable-length types.
+    pub fn width(self) -> Option<usize> {
+        match self {
+            DType::F32 => Some(4),
+            DType::F64 => Some(8),
+            DType::I64 => Some(8),
+            DType::Str => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+            DType::I64 => "i64",
+            DType::Str => "str",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "f64" => Ok(DType::F64),
+            "i64" => Ok(DType::I64),
+            "str" => Ok(DType::Str),
+            other => Err(Error::Invalid(format!("unknown dtype {other:?}"))),
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::F64 => 1,
+            DType::I64 => 2,
+            DType::Str => 3,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<Self> {
+        match c {
+            0 => Ok(DType::F32),
+            1 => Ok(DType::F64),
+            2 => Ok(DType::I64),
+            3 => Ok(DType::Str),
+            other => Err(Error::Corrupt(format!("bad dtype code {other}"))),
+        }
+    }
+}
+
+/// One column of a table schema.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ColumnSchema {
+    pub name: String,
+    pub dtype: DType,
+}
+
+/// Schema of a table dataset.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct TableSchema {
+    pub columns: Vec<ColumnSchema>,
+}
+
+impl TableSchema {
+    pub fn new(cols: &[(&str, DType)]) -> Self {
+        Self {
+            columns: cols
+                .iter()
+                .map(|(n, d)| ColumnSchema {
+                    name: n.to_string(),
+                    dtype: *d,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.columns.len()
+    }
+
+    /// Index of a column by name.
+    pub fn col_index(&self, name: &str) -> Result<usize> {
+        self.columns
+            .iter()
+            .position(|c| c.name == name)
+            .ok_or_else(|| Error::Invalid(format!("no column {name:?}")))
+    }
+
+    pub fn col(&self, i: usize) -> &ColumnSchema {
+        &self.columns[i]
+    }
+
+    /// Bytes per row for fixed-width columns (Str counted as 16 est.).
+    pub fn est_row_bytes(&self) -> usize {
+        self.columns
+            .iter()
+            .map(|c| c.dtype.width().unwrap_or(16))
+            .sum()
+    }
+
+    /// Projection: a new schema with the named columns (in given order).
+    pub fn project(&self, names: &[&str]) -> Result<TableSchema> {
+        let mut columns = Vec::with_capacity(names.len());
+        for n in names {
+            columns.push(self.columns[self.col_index(n)?].clone());
+        }
+        Ok(TableSchema { columns })
+    }
+
+    /// Serialize (used in object xattrs and the metadata service).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u32(self.columns.len() as u32);
+        for c in &self.columns {
+            w.str(&c.name);
+            w.u8(c.dtype.code());
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<TableSchema> {
+        let mut r = ByteReader::new(buf);
+        let n = r.u32()? as usize;
+        if n > 100_000 {
+            return Err(Error::Corrupt(format!("absurd column count {n}")));
+        }
+        let mut columns = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = r.str()?.to_string();
+            let dtype = DType::from_code(r.u8()?)?;
+            columns.push(ColumnSchema { name, dtype });
+        }
+        Ok(TableSchema { columns })
+    }
+}
+
+/// Shape of an n-dimensional array dataset (HDF5 dataspace).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Dataspace {
+    pub dims: Vec<u64>,
+}
+
+impl Dataspace {
+    pub fn new(dims: &[u64]) -> Result<Self> {
+        if dims.is_empty() {
+            return Err(Error::Invalid("dataspace needs >=1 dim".into()));
+        }
+        if dims.iter().any(|&d| d == 0) {
+            return Err(Error::Invalid(format!("zero-length dim in {dims:?}")));
+        }
+        Ok(Self {
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> u64 {
+        self.dims.iter().product()
+    }
+
+    /// Row-major strides (in elements).
+    pub fn strides(&self) -> Vec<u64> {
+        let mut s = vec![1u64; self.dims.len()];
+        for i in (0..self.dims.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.dims[i + 1];
+        }
+        s
+    }
+
+    /// Linear (row-major) offset of a coordinate.
+    pub fn linear(&self, coord: &[u64]) -> Result<u64> {
+        if coord.len() != self.dims.len() {
+            return Err(Error::Invalid(format!(
+                "coord rank {} != dataspace rank {}",
+                coord.len(),
+                self.dims.len()
+            )));
+        }
+        let strides = self.strides();
+        let mut off = 0;
+        for (i, (&c, &d)) in coord.iter().zip(&self.dims).enumerate() {
+            if c >= d {
+                return Err(Error::Invalid(format!(
+                    "coord {c} >= dim {d} at axis {i}"
+                )));
+            }
+            off += c * strides[i];
+        }
+        Ok(off)
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u32(self.dims.len() as u32);
+        for &d in &self.dims {
+            w.u64(d);
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Dataspace> {
+        let mut r = ByteReader::new(buf);
+        let n = r.u32()? as usize;
+        if n == 0 || n > 32 {
+            return Err(Error::Corrupt(format!("bad rank {n}")));
+        }
+        let mut dims = Vec::with_capacity(n);
+        for _ in 0..n {
+            dims.push(r.u64()?);
+        }
+        Dataspace::new(&dims)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_widths_and_names() {
+        assert_eq!(DType::F32.width(), Some(4));
+        assert_eq!(DType::F64.width(), Some(8));
+        assert_eq!(DType::I64.width(), Some(8));
+        assert_eq!(DType::Str.width(), None);
+        for d in [DType::F32, DType::F64, DType::I64, DType::Str] {
+            assert_eq!(DType::from_name(d.name()).unwrap(), d);
+        }
+        assert!(DType::from_name("u8").is_err());
+    }
+
+    #[test]
+    fn schema_lookup_and_projection() {
+        let s = TableSchema::new(&[("ts", DType::I64), ("val", DType::F32), ("tag", DType::Str)]);
+        assert_eq!(s.ncols(), 3);
+        assert_eq!(s.col_index("val").unwrap(), 1);
+        assert!(s.col_index("nope").is_err());
+        let p = s.project(&["tag", "ts"]).unwrap();
+        assert_eq!(p.columns[0].name, "tag");
+        assert_eq!(p.columns[1].dtype, DType::I64);
+        assert!(s.project(&["missing"]).is_err());
+    }
+
+    #[test]
+    fn schema_encode_decode_roundtrip() {
+        let s = TableSchema::new(&[("a", DType::F32), ("b", DType::Str)]);
+        let rt = TableSchema::decode(&s.encode()).unwrap();
+        assert_eq!(rt, s);
+        let empty = TableSchema::default();
+        assert_eq!(TableSchema::decode(&empty.encode()).unwrap(), empty);
+    }
+
+    #[test]
+    fn schema_decode_rejects_garbage() {
+        assert!(TableSchema::decode(&[1, 2]).is_err());
+        assert!(TableSchema::decode(&u32::MAX.to_le_bytes()).is_err());
+    }
+
+    #[test]
+    fn est_row_bytes() {
+        let s = TableSchema::new(&[("a", DType::F32), ("b", DType::I64), ("c", DType::Str)]);
+        assert_eq!(s.est_row_bytes(), 4 + 8 + 16);
+    }
+
+    #[test]
+    fn dataspace_basics() {
+        let ds = Dataspace::new(&[4, 5, 6]).unwrap();
+        assert_eq!(ds.ndim(), 3);
+        assert_eq!(ds.numel(), 120);
+        assert_eq!(ds.strides(), vec![30, 6, 1]);
+        assert_eq!(ds.linear(&[0, 0, 0]).unwrap(), 0);
+        assert_eq!(ds.linear(&[1, 2, 3]).unwrap(), 30 + 12 + 3);
+        assert_eq!(ds.linear(&[3, 4, 5]).unwrap(), 119);
+    }
+
+    #[test]
+    fn dataspace_rejects_bad_inputs() {
+        assert!(Dataspace::new(&[]).is_err());
+        assert!(Dataspace::new(&[3, 0]).is_err());
+        let ds = Dataspace::new(&[4, 4]).unwrap();
+        assert!(ds.linear(&[4, 0]).is_err());
+        assert!(ds.linear(&[0]).is_err());
+    }
+
+    #[test]
+    fn dataspace_encode_decode() {
+        let ds = Dataspace::new(&[7, 9]).unwrap();
+        assert_eq!(Dataspace::decode(&ds.encode()).unwrap(), ds);
+        assert!(Dataspace::decode(&[0, 0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn dataspace_1d() {
+        let ds = Dataspace::new(&[10]).unwrap();
+        assert_eq!(ds.strides(), vec![1]);
+        assert_eq!(ds.linear(&[9]).unwrap(), 9);
+    }
+}

@@ -1,0 +1,449 @@
+//! Table datasets (the SkyhookDM side of the paper): typed columns, row
+//! groups, and the in-memory batch the query layer and layouts operate on.
+
+use super::schema::{DType, TableSchema};
+use crate::error::{Error, Result};
+
+/// A typed column of values.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Column {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I64(Vec<i64>),
+    Str(Vec<String>),
+}
+
+impl Column {
+    pub fn dtype(&self) -> DType {
+        match self {
+            Column::F32(_) => DType::F32,
+            Column::F64(_) => DType::F64,
+            Column::I64(_) => DType::I64,
+            Column::Str(_) => DType::Str,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Column::F32(v) => v.len(),
+            Column::F64(v) => v.len(),
+            Column::I64(v) => v.len(),
+            Column::Str(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Empty column of a dtype.
+    pub fn empty(dtype: DType) -> Column {
+        match dtype {
+            DType::F32 => Column::F32(Vec::new()),
+            DType::F64 => Column::F64(Vec::new()),
+            DType::I64 => Column::I64(Vec::new()),
+            DType::Str => Column::Str(Vec::new()),
+        }
+    }
+
+    /// Value at `i` widened to f64 (numeric columns only).
+    pub fn get_f64(&self, i: usize) -> Result<f64> {
+        match self {
+            Column::F32(v) => Ok(v[i] as f64),
+            Column::F64(v) => Ok(v[i]),
+            Column::I64(v) => Ok(v[i] as f64),
+            Column::Str(_) => Err(Error::Invalid("string column is not numeric".into())),
+        }
+    }
+
+    /// String representation at `i` (any column).
+    pub fn get_display(&self, i: usize) -> String {
+        match self {
+            Column::F32(v) => format!("{}", v[i]),
+            Column::F64(v) => format!("{}", v[i]),
+            Column::I64(v) => format!("{}", v[i]),
+            Column::Str(v) => v[i].clone(),
+        }
+    }
+
+    /// Append the `i`-th value of `other` (same dtype) to self.
+    pub fn push_from(&mut self, other: &Column, i: usize) -> Result<()> {
+        match (self, other) {
+            (Column::F32(a), Column::F32(b)) => a.push(b[i]),
+            (Column::F64(a), Column::F64(b)) => a.push(b[i]),
+            (Column::I64(a), Column::I64(b)) => a.push(b[i]),
+            (Column::Str(a), Column::Str(b)) => a.push(b[i].clone()),
+            _ => return Err(Error::Invalid("column dtype mismatch".into())),
+        }
+        Ok(())
+    }
+
+    /// Concatenate another column of the same dtype.
+    pub fn extend_from(&mut self, other: &Column) -> Result<()> {
+        match (self, other) {
+            (Column::F32(a), Column::F32(b)) => a.extend_from_slice(b),
+            (Column::F64(a), Column::F64(b)) => a.extend_from_slice(b),
+            (Column::I64(a), Column::I64(b)) => a.extend_from_slice(b),
+            (Column::Str(a), Column::Str(b)) => a.extend_from_slice(b),
+            _ => return Err(Error::Invalid("column dtype mismatch".into())),
+        }
+        Ok(())
+    }
+
+    /// Serialized byte size (fixed-width, or sum of string lengths + u32
+    /// prefixes).
+    pub fn byte_size(&self) -> usize {
+        match self {
+            Column::F32(v) => v.len() * 4,
+            Column::F64(v) => v.len() * 8,
+            Column::I64(v) => v.len() * 8,
+            Column::Str(v) => v.iter().map(|s| 4 + s.len()).sum(),
+        }
+    }
+}
+
+/// An in-memory batch of rows: a schema plus equal-length columns.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    pub schema: TableSchema,
+    pub columns: Vec<Column>,
+}
+
+impl Batch {
+    /// Empty batch with the schema's column types.
+    pub fn empty(schema: &TableSchema) -> Batch {
+        Batch {
+            schema: schema.clone(),
+            columns: schema
+                .columns
+                .iter()
+                .map(|c| Column::empty(c.dtype))
+                .collect(),
+        }
+    }
+
+    /// Build from columns; validates lengths and dtypes.
+    pub fn new(schema: TableSchema, columns: Vec<Column>) -> Result<Batch> {
+        if columns.len() != schema.ncols() {
+            return Err(Error::Invalid(format!(
+                "{} columns for schema of {}",
+                columns.len(),
+                schema.ncols()
+            )));
+        }
+        let nrows = columns.first().map_or(0, Column::len);
+        for (i, col) in columns.iter().enumerate() {
+            if col.len() != nrows {
+                return Err(Error::Invalid(format!(
+                    "column {i} has {} rows, expected {nrows}",
+                    col.len()
+                )));
+            }
+            if col.dtype() != schema.col(i).dtype {
+                return Err(Error::Invalid(format!(
+                    "column {i} dtype {:?} != schema {:?}",
+                    col.dtype(),
+                    schema.col(i).dtype
+                )));
+            }
+        }
+        Ok(Batch { schema, columns })
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.columns.first().map_or(0, Column::len)
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.columns.len()
+    }
+
+    /// Column by name.
+    pub fn col(&self, name: &str) -> Result<&Column> {
+        Ok(&self.columns[self.schema.col_index(name)?])
+    }
+
+    /// Approximate serialized size.
+    pub fn byte_size(&self) -> usize {
+        self.columns.iter().map(Column::byte_size).sum()
+    }
+
+    /// Projection onto named columns.
+    pub fn project(&self, names: &[&str]) -> Result<Batch> {
+        let schema = self.schema.project(names)?;
+        let mut columns = Vec::with_capacity(names.len());
+        for n in names {
+            columns.push(self.columns[self.schema.col_index(n)?].clone());
+        }
+        Ok(Batch { schema, columns })
+    }
+
+    /// Keep only the rows where `mask[i]` is true.
+    ///
+    /// Columnar: one type dispatch per column, then a tight selection
+    /// loop — the pushdown scan hot path (see EXPERIMENTS.md §Perf).
+    pub fn filter(&self, mask: &[bool]) -> Result<Batch> {
+        if mask.len() != self.nrows() {
+            return Err(Error::Invalid(format!(
+                "mask len {} != rows {}",
+                mask.len(),
+                self.nrows()
+            )));
+        }
+        let keep = mask.iter().filter(|&&m| m).count();
+        // Branchless selection: unconditional write + masked advance, so
+        // 50%-selectivity masks don't pay a branch miss per row.
+        fn select<T: Copy + Default>(v: &[T], mask: &[bool], keep: usize) -> Vec<T> {
+            let mut out = vec![T::default(); keep + 1];
+            let mut j = 0;
+            for (x, &m) in v.iter().zip(mask) {
+                out[j] = *x;
+                j += m as usize;
+            }
+            out.truncate(keep);
+            out
+        }
+        let columns = self
+            .columns
+            .iter()
+            .map(|col| match col {
+                Column::F32(v) => Column::F32(select(v, mask, keep)),
+                Column::F64(v) => Column::F64(select(v, mask, keep)),
+                Column::I64(v) => Column::I64(select(v, mask, keep)),
+                Column::Str(v) => {
+                    let mut out = Vec::with_capacity(keep);
+                    for (x, &m) in v.iter().zip(mask) {
+                        if m {
+                            out.push(x.clone());
+                        }
+                    }
+                    Column::Str(out)
+                }
+            })
+            .collect();
+        Batch::new(self.schema.clone(), columns)
+    }
+
+    /// Vertical concatenation (schemas must match).
+    pub fn concat(&mut self, other: &Batch) -> Result<()> {
+        if self.schema != other.schema {
+            return Err(Error::Invalid("schema mismatch in concat".into()));
+        }
+        for (dst, src) in self.columns.iter_mut().zip(&other.columns) {
+            dst.extend_from(src)?;
+        }
+        Ok(())
+    }
+
+    /// Take row range `[lo, hi)` as a new batch.
+    pub fn slice(&self, lo: usize, hi: usize) -> Result<Batch> {
+        if lo > hi || hi > self.nrows() {
+            return Err(Error::Invalid(format!(
+                "bad slice {lo}..{hi} of {}",
+                self.nrows()
+            )));
+        }
+        let mut out = Batch::empty(&self.schema);
+        for (dst, src) in out.columns.iter_mut().zip(&self.columns) {
+            match (dst, src) {
+                (Column::F32(a), Column::F32(b)) => a.extend_from_slice(&b[lo..hi]),
+                (Column::F64(a), Column::F64(b)) => a.extend_from_slice(&b[lo..hi]),
+                (Column::I64(a), Column::I64(b)) => a.extend_from_slice(&b[lo..hi]),
+                (Column::Str(a), Column::Str(b)) => a.extend_from_slice(&b[lo..hi]),
+                _ => unreachable!("empty() preserves dtypes"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Synthetic-table generator used by examples/benches (the paper's
+/// evaluation datasets are not public; see DESIGN.md §Substitutions).
+pub mod gen {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    /// A sensor-reading style table: `ts: i64, sensor: i64, val: f32,
+    /// flag: i64` with `val ~ N(50, 15)` and `sensor ~ zipf`.
+    pub fn sensor_table(rows: usize, seed: u64) -> Batch {
+        let mut rng = Xoshiro256::new(seed);
+        let schema = TableSchema::new(&[
+            ("ts", DType::I64),
+            ("sensor", DType::I64),
+            ("val", DType::F32),
+            ("flag", DType::I64),
+        ]);
+        let mut ts = Vec::with_capacity(rows);
+        let mut sensor = Vec::with_capacity(rows);
+        let mut val = Vec::with_capacity(rows);
+        let mut flag = Vec::with_capacity(rows);
+        for i in 0..rows {
+            ts.push(i as i64);
+            sensor.push(rng.zipf(100, 0.9) as i64);
+            val.push((50.0 + 15.0 * rng.normal()) as f32);
+            flag.push(if rng.chance(0.05) { 1 } else { 0 });
+        }
+        Batch::new(
+            schema,
+            vec![
+                Column::I64(ts),
+                Column::I64(sensor),
+                Column::F32(val),
+                Column::I64(flag),
+            ],
+        )
+        .unwrap()
+    }
+
+    /// Wide numeric table with `ncols` f32 feature columns (for the
+    /// projection/physical-design experiments).
+    pub fn wide_table(rows: usize, ncols: usize, seed: u64) -> Batch {
+        let mut rng = Xoshiro256::new(seed);
+        let col_defs: Vec<(String, DType)> = (0..ncols)
+            .map(|i| (format!("c{i}"), DType::F32))
+            .collect();
+        let refs: Vec<(&str, DType)> =
+            col_defs.iter().map(|(n, d)| (n.as_str(), *d)).collect();
+        let schema = TableSchema::new(&refs);
+        let columns: Vec<Column> = (0..ncols)
+            .map(|_| Column::F32((0..rows).map(|_| rng.f32() * 100.0).collect()))
+            .collect();
+        Batch::new(schema, columns).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Batch {
+        Batch::new(
+            TableSchema::new(&[("id", DType::I64), ("v", DType::F32), ("tag", DType::Str)]),
+            vec![
+                Column::I64(vec![1, 2, 3]),
+                Column::F32(vec![1.5, 2.5, 3.5]),
+                Column::Str(vec!["a".into(), "b".into(), "c".into()]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn batch_construction_validates() {
+        let schema = TableSchema::new(&[("a", DType::I64)]);
+        assert!(Batch::new(schema.clone(), vec![]).is_err());
+        assert!(Batch::new(schema.clone(), vec![Column::F32(vec![1.0])]).is_err());
+        let b = Batch::new(schema.clone(), vec![Column::I64(vec![1, 2])]).unwrap();
+        assert_eq!(b.nrows(), 2);
+        // Length mismatch between columns.
+        let schema2 = TableSchema::new(&[("a", DType::I64), ("b", DType::I64)]);
+        assert!(Batch::new(
+            schema2,
+            vec![Column::I64(vec![1]), Column::I64(vec![1, 2])]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn col_access() {
+        let b = small();
+        assert_eq!(b.col("id").unwrap().len(), 3);
+        assert!(b.col("zzz").is_err());
+        assert_eq!(b.col("v").unwrap().get_f64(1).unwrap(), 2.5);
+        assert!(b.col("tag").unwrap().get_f64(0).is_err());
+        assert_eq!(b.col("tag").unwrap().get_display(2), "c");
+    }
+
+    #[test]
+    fn projection() {
+        let b = small();
+        let p = b.project(&["v", "id"]).unwrap();
+        assert_eq!(p.ncols(), 2);
+        assert_eq!(p.schema.col(0).name, "v");
+        assert_eq!(p.nrows(), 3);
+        assert!(b.project(&["nope"]).is_err());
+    }
+
+    #[test]
+    fn filter_by_mask() {
+        let b = small();
+        let f = b.filter(&[true, false, true]).unwrap();
+        assert_eq!(f.nrows(), 2);
+        assert_eq!(f.col("id").unwrap(), &Column::I64(vec![1, 3]));
+        assert_eq!(
+            f.col("tag").unwrap(),
+            &Column::Str(vec!["a".into(), "c".into()])
+        );
+        assert!(b.filter(&[true]).is_err());
+    }
+
+    #[test]
+    fn filter_all_false_gives_empty() {
+        let b = small();
+        let f = b.filter(&[false, false, false]).unwrap();
+        assert_eq!(f.nrows(), 0);
+        assert_eq!(f.ncols(), 3);
+    }
+
+    #[test]
+    fn concat_batches() {
+        let mut a = small();
+        let b = small();
+        a.concat(&b).unwrap();
+        assert_eq!(a.nrows(), 6);
+        let other = Batch::empty(&TableSchema::new(&[("x", DType::F32)]));
+        assert!(a.concat(&other).is_err());
+    }
+
+    #[test]
+    fn slice_ranges() {
+        let b = small();
+        let s = b.slice(1, 3).unwrap();
+        assert_eq!(s.nrows(), 2);
+        assert_eq!(s.col("id").unwrap(), &Column::I64(vec![2, 3]));
+        assert_eq!(b.slice(0, 0).unwrap().nrows(), 0);
+        assert!(b.slice(2, 1).is_err());
+        assert!(b.slice(0, 4).is_err());
+    }
+
+    #[test]
+    fn byte_size_estimates() {
+        let b = small();
+        // 3*8 (i64) + 3*4 (f32) + 3*(4+1) (str) = 24+12+15
+        assert_eq!(b.byte_size(), 51);
+    }
+
+    #[test]
+    fn empty_dtypes_match_schema() {
+        let schema = TableSchema::new(&[("a", DType::Str), ("b", DType::F64)]);
+        let e = Batch::empty(&schema);
+        assert_eq!(e.nrows(), 0);
+        assert_eq!(e.columns[0].dtype(), DType::Str);
+        assert_eq!(e.columns[1].dtype(), DType::F64);
+    }
+
+    #[test]
+    fn generator_shapes() {
+        let b = gen::sensor_table(500, 1);
+        assert_eq!(b.nrows(), 500);
+        assert_eq!(b.ncols(), 4);
+        // Deterministic per seed.
+        assert_eq!(gen::sensor_table(100, 9), gen::sensor_table(100, 9));
+        assert_ne!(gen::sensor_table(100, 9), gen::sensor_table(100, 10));
+
+        let w = gen::wide_table(50, 8, 2);
+        assert_eq!(w.ncols(), 8);
+        assert_eq!(w.nrows(), 50);
+    }
+
+    #[test]
+    fn generator_value_distribution() {
+        let b = gen::sensor_table(5000, 3);
+        let vals = match b.col("val").unwrap() {
+            Column::F32(v) => v,
+            _ => unreachable!(),
+        };
+        let mean = vals.iter().map(|&x| x as f64).sum::<f64>() / vals.len() as f64;
+        assert!((mean - 50.0).abs() < 2.0, "mean={mean}");
+    }
+}

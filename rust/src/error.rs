@@ -1,0 +1,84 @@
+//! Unified error type for the library.
+
+use thiserror::Error;
+
+/// All fallible library operations return [`Result`].
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Object / dataset / key not found.
+    #[error("not found: {0}")]
+    NotFound(String),
+
+    /// Object or dataset already exists.
+    #[error("already exists: {0}")]
+    AlreadyExists(String),
+
+    /// Serialized data failed validation (checksum, magic, bounds).
+    #[error("corrupt data: {0}")]
+    Corrupt(String),
+
+    /// Invalid argument or request shape.
+    #[error("invalid argument: {0}")]
+    Invalid(String),
+
+    /// Configuration parse/validation error.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// The target OSD(s) are down and the operation cannot complete.
+    #[error("unavailable: {0}")]
+    Unavailable(String),
+
+    /// Object-class extension error (pushdown handler failed).
+    #[error("objclass error: {0}")]
+    ObjClass(String),
+
+    /// Query planning / execution error.
+    #[error("query error: {0}")]
+    Query(String),
+
+    /// PJRT runtime error (artifact load, compile, execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Underlying I/O error.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// True if the error is transient and a retry against a replica might
+    /// succeed (used by the degraded-read path).
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, Error::Unavailable(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::NotFound("obj.3".into());
+        assert_eq!(e.to_string(), "not found: obj.3");
+        let e = Error::Corrupt("bad magic".into());
+        assert!(e.to_string().contains("bad magic"));
+    }
+
+    #[test]
+    fn retryable_classification() {
+        assert!(Error::Unavailable("osd.1 down".into()).is_retryable());
+        assert!(!Error::NotFound("x".into()).is_retryable());
+        assert!(!Error::Corrupt("x".into()).is_retryable());
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "boom");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,144 @@
+//! Stack assembly: build the full system (object classes → cluster →
+//! PJRT engine → driver → router) from a [`Config`]. This is what the
+//! CLI, examples and benches use so every entry point wires the layers
+//! identically.
+
+use crate::config::Config;
+use crate::coordinator::Router;
+use crate::error::Result;
+use crate::runtime::PjrtEngine;
+use crate::skyhook::{register_skyhook_class, ChunkCompute, Driver};
+use crate::store::{ClassRegistry, Cluster};
+use crate::vol::register_hdf5_class;
+use std::sync::Arc;
+
+/// A fully wired stack.
+pub struct Stack {
+    pub cluster: Arc<Cluster>,
+    pub driver: Arc<Driver>,
+    pub router: Router,
+    /// Present when artifacts were found and `driver.use_pjrt` was set.
+    pub engine: Option<Arc<PjrtEngine>>,
+}
+
+impl Stack {
+    /// Build from config. If `cfg.driver.use_pjrt`, the AOT artifacts are
+    /// loaded and the Skyhook-Extension's aggregate hot path runs on the
+    /// PJRT kernels; otherwise the native Rust path is used.
+    pub fn build(cfg: &Config) -> Result<Stack> {
+        let engine = if cfg.driver.use_pjrt {
+            Some(PjrtEngine::load(&cfg.artifacts_dir)?)
+        } else {
+            None
+        };
+        let mut registry = ClassRegistry::with_builtins();
+        register_hdf5_class(&mut registry);
+        register_skyhook_class(
+            &mut registry,
+            engine
+                .clone()
+                .map(|e| e as Arc<dyn ChunkCompute>),
+        );
+        let cluster = Cluster::new(&cfg.cluster, registry);
+        let driver = Arc::new(Driver::new(Arc::clone(&cluster), cfg.driver.clone()));
+        let router = Router::new(Arc::clone(&driver), cfg.driver.write_credits);
+        Ok(Stack {
+            cluster,
+            driver,
+            router,
+            engine,
+        })
+    }
+
+    /// Build with defaults (no PJRT) — the common test/bench entry.
+    pub fn build_default() -> Stack {
+        Self::build(&Config::default()).expect("default stack")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, DriverConfig};
+    use crate::dataset::partition::PartitionSpec;
+    use crate::dataset::table::gen;
+    use crate::dataset::Layout;
+    use crate::skyhook::{AggFunc, Query};
+
+    #[test]
+    fn default_stack_works_end_to_end() {
+        let s = Stack::build_default();
+        assert!(s.engine.is_none());
+        s.driver
+            .write_table(
+                "d",
+                &gen::sensor_table(500, 1),
+                Layout::Col,
+                &PartitionSpec::with_target(8192),
+                None,
+            )
+            .unwrap();
+        let r = s
+            .driver
+            .execute(&Query::scan("d").aggregate(AggFunc::Count, "val"), None)
+            .unwrap();
+        assert_eq!(r.aggregates[0], 500.0);
+    }
+
+    #[test]
+    fn pjrt_stack_matches_native_stack() {
+        let arts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !arts.join("filter_agg.hlo.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let cfg = Config {
+            cluster: ClusterConfig {
+                osds: 3,
+                replicas: 1,
+                ..Default::default()
+            },
+            driver: DriverConfig {
+                use_pjrt: true,
+                ..Default::default()
+            },
+            artifacts_dir: arts.to_str().unwrap().to_string(),
+        };
+        let pjrt = Stack::build(&cfg).unwrap();
+        assert!(pjrt.engine.is_some());
+        let native = Stack::build_default();
+
+        let batch = gen::sensor_table(3000, 9);
+        for s in [&pjrt, &native] {
+            s.driver
+                .write_table(
+                    "ds",
+                    &batch,
+                    Layout::Col,
+                    &PartitionSpec::with_target(16 * 1024),
+                    None,
+                )
+                .unwrap();
+        }
+        let q = Query::scan("ds")
+            .filter(crate::skyhook::Predicate::cmp(
+                "val",
+                crate::skyhook::CmpOp::Gt,
+                50.0,
+            ))
+            .aggregate(AggFunc::Mean, "val")
+            .aggregate(AggFunc::Count, "val")
+            .aggregate(AggFunc::Min, "val")
+            .aggregate(AggFunc::Max, "val");
+        let rp = pjrt.driver.execute(&q, None).unwrap();
+        let rn = native.driver.execute(&q, None).unwrap();
+        for (a, b) in rp.aggregates.iter().zip(&rn.aggregates) {
+            assert!(
+                (a - b).abs() < 1e-3 * (1.0 + a.abs()),
+                "pjrt {a} vs native {b}"
+            );
+        }
+        // The kernel actually ran.
+        assert!(pjrt.engine.as_ref().unwrap().kernel_launches() > 0);
+    }
+}

@@ -1,0 +1,42 @@
+//! # skyhook-map — Mapping Datasets to Object Storage Systems
+//!
+//! A full implementation of the dataset-mapping architecture from
+//! *"Mapping Datasets to Object Storage System"* (Chu et al., 2020):
+//! scientific datasets (HDF5-style arrays, Skyhook-style tables) are
+//! partitioned into objects in a programmable object store, access-library
+//! operations are offloaded to storage servers via object-class
+//! extensions, and client access libraries evolve independently behind a
+//! VOL-style plugin boundary.
+//!
+//! Layer map (see DESIGN.md):
+//! - [`store`] — the Ceph/RADOS-like programmable object store substrate
+//!   (OSDs, kv + chunk stores, CRUSH-like placement, object classes).
+//! - [`dataset`] — dataset models and the mapping onto objects
+//!   (schemas, n-dim arrays + hyperslabs, tables, partitioning, layouts).
+//! - [`vol`] — the HDF5-VOL-like access library with swappable backends
+//!   (native single-file baseline vs forwarding/global plugin).
+//! - [`skyhook`] — the SkyhookDM-like driver/worker query layer with
+//!   pushdown planning.
+//! - [`coordinator`] — routing, dynamic batching, backpressure and
+//!   rebalancing for the request path.
+//! - [`runtime`] — the PJRT runtime that loads AOT-compiled JAX/Pallas
+//!   kernels (HLO text) and executes them inside object-class handlers.
+//! - [`simnet`] — the virtual-time cost model standing in for a real
+//!   multi-node testbed.
+//! - [`util`] — in-repo substrates for the offline environment (RNG,
+//!   thread pool, stats, property-test + bench harnesses).
+
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod store;
+pub mod error;
+pub mod runtime;
+pub mod simnet;
+pub mod skyhook;
+pub mod util;
+pub mod vol;
+
+pub mod launch;
+
+pub use error::{Error, Result};

@@ -1,0 +1,428 @@
+//! `skyhook-map` CLI: the leader entry point.
+//!
+//! Subcommands (hand-rolled arg parsing; clap is unavailable offline):
+//!
+//! ```text
+//! skyhook-map demo                          # quick end-to-end tour
+//! skyhook-map put    --dataset D --rows N [--layout row|col] [--object-size 4MiB]
+//! skyhook-map query  --dataset D [--filter EXPR] [--agg F:COL]... [--group COL]
+//!                    [--select C1,C2] [--client-side]
+//! skyhook-map index  --dataset D --column C
+//! skyhook-map transform --dataset D --layout row|col
+//! skyhook-map inspect                        # datasets + distribution
+//! skyhook-map serve  --requests N            # synthetic load + metrics
+//! ```
+//!
+//! Global flags: `--config FILE`, `--osds N`, `--use-pjrt`.
+
+use skyhook_map::config::Config;
+use skyhook_map::coordinator::{Request, Response};
+use skyhook_map::dataset::metadata;
+use skyhook_map::dataset::partition::PartitionSpec;
+use skyhook_map::dataset::table::gen;
+use skyhook_map::dataset::Layout;
+use skyhook_map::launch::Stack;
+use skyhook_map::skyhook::parse::{parse_aggregate, parse_predicate};
+use skyhook_map::skyhook::{ExecMode, Query};
+use skyhook_map::util::bytes::{fmt_size, parse_size};
+use skyhook_map::Result;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: `--key value` and bare `--switch`.
+struct Flags {
+    positional: Vec<String>,
+    pairs: Vec<(String, Option<String>)>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Flags {
+        let mut positional = Vec::new();
+        let mut pairs = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                let value = args
+                    .get(i + 1)
+                    .filter(|v| !v.starts_with("--"))
+                    .cloned();
+                if value.is_some() {
+                    i += 1;
+                }
+                pairs.push((key.to_string(), value));
+            } else {
+                positional.push(args[i].clone());
+            }
+            i += 1;
+        }
+        Flags { positional, pairs }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.pairs
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn get_all(&self, key: &str) -> Vec<&str> {
+        self.pairs
+            .iter()
+            .filter(|(k, _)| k == key)
+            .filter_map(|(_, v)| v.as_deref())
+            .collect()
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.pairs.iter().any(|(k, _)| k == key)
+    }
+}
+
+fn build_config(f: &Flags) -> Result<Config> {
+    let mut cfg = match f.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config {
+            artifacts_dir: "artifacts".into(),
+            ..Default::default()
+        },
+    };
+    if let Some(n) = f.get("osds") {
+        cfg.cluster.osds = n
+            .parse()
+            .map_err(|_| skyhook_map::Error::Config(format!("bad --osds {n}")))?;
+        cfg.cluster.replicas = cfg.cluster.replicas.min(cfg.cluster.osds);
+    }
+    if f.has("use-pjrt") {
+        cfg.driver.use_pjrt = true;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args);
+    let cmd = flags.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "demo" => cmd_demo(&flags),
+        "put" => cmd_put(&flags),
+        "query" => cmd_query(&flags),
+        "index" => cmd_index(&flags),
+        "transform" => cmd_transform(&flags),
+        "inspect" => cmd_inspect(&flags),
+        "serve" => cmd_serve(&flags),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+const HELP: &str = "\
+skyhook-map — mapping datasets to object storage (paper reproduction)
+
+USAGE:
+  skyhook-map <demo|put|query|index|transform|inspect|serve> [flags]
+
+FLAGS:
+  --config FILE     TOML config (see examples in README)
+  --osds N          override cluster size
+  --use-pjrt        run pushdown aggregation on the AOT JAX/Pallas kernels
+  --dataset D       dataset name
+  --rows N          synthetic rows for `put`
+  --layout row|col  object layout
+  --object-size SZ  partition target (e.g. 4MiB)
+  --filter EXPR     predicate, e.g. 'val > 50 && flag == 1'
+  --agg F:COL       aggregate (repeatable): count/sum/min/max/mean/var/median
+  --group COL       group-by column (with exactly one --agg)
+  --select C1,C2    projection for row queries
+  --client-side     force client-side execution (no pushdown)
+  --requests N      synthetic requests for `serve`
+";
+
+fn require_dataset(f: &Flags) -> Result<String> {
+    f.get("dataset")
+        .map(str::to_string)
+        .ok_or_else(|| skyhook_map::Error::Invalid("--dataset required".into()))
+}
+
+fn parse_layout(s: &str) -> Result<Layout> {
+    match s {
+        "row" => Ok(Layout::Row),
+        "col" => Ok(Layout::Col),
+        other => Err(skyhook_map::Error::Invalid(format!(
+            "layout must be row|col, got {other}"
+        ))),
+    }
+}
+
+/// Create a synthetic dataset if it doesn't exist (the store is
+/// in-memory, so each CLI invocation starts empty).
+fn hydrate(stack: &Stack, cfg: &Config, dataset: &str, layout: Layout) -> Result<()> {
+    if metadata::load_meta(&stack.cluster, 0.0, dataset).is_err() {
+        let batch = gen::sensor_table(20_000, cfg.cluster.seed);
+        stack.driver.write_table(
+            dataset,
+            &batch,
+            layout,
+            &PartitionSpec::with_target(64 * 1024),
+            None,
+        )?;
+        println!("(hydrated synthetic dataset {dataset:?}: 20000 rows)");
+    }
+    Ok(())
+}
+
+fn cmd_demo(f: &Flags) -> Result<()> {
+    let cfg = build_config(f)?;
+    let stack = Stack::build(&cfg)?;
+    println!(
+        "cluster: {} OSDs, {} replicas, pjrt={}",
+        cfg.cluster.osds,
+        cfg.cluster.replicas,
+        stack.engine.is_some()
+    );
+    let batch = gen::sensor_table(20_000, cfg.cluster.seed);
+    let rep = stack.driver.write_table(
+        "demo",
+        &batch,
+        Layout::Col,
+        &PartitionSpec::with_target(64 * 1024),
+        None,
+    )?;
+    println!(
+        "put: {} rows -> {} objects ({}), sim {:.3}s",
+        batch.nrows(),
+        rep.objects,
+        fmt_size(rep.bytes_written),
+        rep.sim_seconds
+    );
+    let q = Query::scan("demo")
+        .filter(parse_predicate("val > 60")?)
+        .aggregate(skyhook_map::skyhook::AggFunc::Count, "val")
+        .aggregate(skyhook_map::skyhook::AggFunc::Mean, "val");
+    for (mode, label) in [
+        (Some(ExecMode::Pushdown), "pushdown"),
+        (Some(ExecMode::ClientSide), "client-side"),
+    ] {
+        let r = stack.driver.execute(&q, mode)?;
+        println!(
+            "{label:>12}: count={} mean={:.3} bytes_moved={} sim={:.4}s",
+            r.aggregates[0],
+            r.aggregates[1],
+            fmt_size(r.stats.bytes_moved),
+            r.stats.sim_seconds
+        );
+    }
+    println!("demo OK");
+    Ok(())
+}
+
+fn cmd_put(f: &Flags) -> Result<()> {
+    let cfg = build_config(f)?;
+    let stack = Stack::build(&cfg)?;
+    let dataset = require_dataset(f)?;
+    let rows: usize = f
+        .get("rows")
+        .unwrap_or("10000")
+        .parse()
+        .map_err(|_| skyhook_map::Error::Invalid("bad --rows".into()))?;
+    let layout = parse_layout(f.get("layout").unwrap_or("col"))?;
+    let target = parse_size(f.get("object-size").unwrap_or("256KiB"))?;
+    let batch = gen::sensor_table(rows, cfg.cluster.seed);
+    let rep = stack.driver.write_table(
+        &dataset,
+        &batch,
+        layout,
+        &PartitionSpec::with_target(target),
+        None,
+    )?;
+    println!(
+        "wrote {} rows to {:?}: {} objects, {} total, sim {:.3}s wall {:.3}s",
+        rows,
+        dataset,
+        rep.objects,
+        fmt_size(rep.bytes_written),
+        rep.sim_seconds,
+        rep.wall_seconds
+    );
+    Ok(())
+}
+
+fn cmd_query(f: &Flags) -> Result<()> {
+    let cfg = build_config(f)?;
+    let stack = Stack::build(&cfg)?;
+    let dataset = require_dataset(f)?;
+    hydrate(&stack, &cfg, &dataset, Layout::Col)?;
+    let mut q = Query::scan(&dataset);
+    if let Some(expr) = f.get("filter") {
+        q = q.filter(parse_predicate(expr)?);
+    }
+    for spec in f.get_all("agg") {
+        let a = parse_aggregate(spec)?;
+        q = q.aggregate(a.func, &a.col);
+    }
+    if let Some(g) = f.get("group") {
+        q = q.group(g);
+    }
+    if let Some(sel) = f.get("select") {
+        let cols: Vec<&str> = sel.split(',').map(str::trim).collect();
+        q = q.select(&cols);
+    }
+    let mode = f.has("client-side").then_some(ExecMode::ClientSide);
+    let r = stack.driver.execute(&q, mode)?;
+    if let Some(groups) = &r.groups {
+        println!("group        value");
+        for (k, v) in groups.iter().take(20) {
+            println!("{k:<12} {v:.4}");
+        }
+        if groups.len() > 20 {
+            println!("... ({} groups)", groups.len());
+        }
+    } else if !r.aggregates.is_empty() {
+        for (a, v) in q.aggregates.iter().zip(&r.aggregates) {
+            println!("{}({}) = {v:.6}", a.func.name(), a.col);
+        }
+    } else if let Some(rows) = &r.rows {
+        println!("{} rows, {} cols", rows.nrows(), rows.ncols());
+        let show = rows.nrows().min(10);
+        let names: Vec<&str> = rows.schema.columns.iter().map(|c| c.name.as_str()).collect();
+        println!("{}", names.join("\t"));
+        for i in 0..show {
+            let vals: Vec<String> = rows.columns.iter().map(|c| c.get_display(i)).collect();
+            println!("{}", vals.join("\t"));
+        }
+        if rows.nrows() > show {
+            println!("... ({} rows)", rows.nrows());
+        }
+    }
+    println!(
+        "-- {} objects, {} moved, sim {:.4}s, wall {:.4}s, pushdown={}",
+        r.stats.objects,
+        fmt_size(r.stats.bytes_moved),
+        r.stats.sim_seconds,
+        r.stats.wall_seconds,
+        r.stats.pushdown
+    );
+    Ok(())
+}
+
+fn cmd_index(f: &Flags) -> Result<()> {
+    let cfg = build_config(f)?;
+    let stack = Stack::build(&cfg)?;
+    let dataset = require_dataset(f)?;
+    let column = f
+        .get("column")
+        .ok_or_else(|| skyhook_map::Error::Invalid("--column required".into()))?;
+    hydrate(&stack, &cfg, &dataset, Layout::Col)?;
+    let n = stack.driver.build_index(&dataset, column)?;
+    println!("indexed {n} rows on {column:?}");
+    Ok(())
+}
+
+fn cmd_transform(f: &Flags) -> Result<()> {
+    let cfg = build_config(f)?;
+    let stack = Stack::build(&cfg)?;
+    let dataset = require_dataset(f)?;
+    let layout = parse_layout(
+        f.get("layout")
+            .ok_or_else(|| skyhook_map::Error::Invalid("--layout required".into()))?,
+    )?;
+    hydrate(&stack, &cfg, &dataset, Layout::Row)?;
+    let rep = stack.driver.transform_layout(&dataset, layout)?;
+    println!(
+        "transformed {} objects to {} layout, sim {:.3}s",
+        rep.objects,
+        layout.name(),
+        rep.sim_seconds
+    );
+    Ok(())
+}
+
+fn cmd_inspect(f: &Flags) -> Result<()> {
+    let cfg = build_config(f)?;
+    let stack = Stack::build(&cfg)?;
+    // Hydrate something to look at.
+    let batch = gen::sensor_table(5_000, cfg.cluster.seed);
+    stack.driver.write_table(
+        "inspect-demo",
+        &batch,
+        Layout::Col,
+        &PartitionSpec::with_target(32 * 1024),
+        None,
+    )?;
+    println!("datasets:");
+    for ds in metadata::list_datasets(&stack.cluster) {
+        let (meta, _) = metadata::load_meta(&stack.cluster, 0.0, &ds)?;
+        println!(
+            "  {ds}: {} objects, {} items",
+            meta.object_names(&ds).len(),
+            meta.total_items()
+        );
+    }
+    println!("object distribution:");
+    for (osd, n) in stack.cluster.object_distribution() {
+        println!("  osd.{osd}: {n} objects");
+    }
+    println!(
+        "total stored: {}",
+        fmt_size(stack.cluster.total_bytes_stored())
+    );
+    Ok(())
+}
+
+fn cmd_serve(f: &Flags) -> Result<()> {
+    let cfg = build_config(f)?;
+    let stack = Stack::build(&cfg)?;
+    let requests: usize = f
+        .get("requests")
+        .unwrap_or("200")
+        .parse()
+        .map_err(|_| skyhook_map::Error::Invalid("bad --requests".into()))?;
+    // Seed data.
+    stack.router.handle(Request::WriteTable {
+        dataset: "served".into(),
+        batch: gen::sensor_table(50_000, cfg.cluster.seed),
+        layout: Layout::Col,
+        spec: PartitionSpec::with_target(128 * 1024),
+    })?;
+    let mut rng = skyhook_map::util::rng::Xoshiro256::new(cfg.cluster.seed);
+    let start = std::time::Instant::now();
+    for i in 0..requests {
+        let threshold = 30.0 + rng.f64() * 50.0;
+        let q = Query::scan("served")
+            .filter(skyhook_map::skyhook::Predicate::cmp(
+                "val",
+                skyhook_map::skyhook::CmpOp::Gt,
+                threshold,
+            ))
+            .aggregate(skyhook_map::skyhook::AggFunc::Mean, "val");
+        match stack.router.handle(Request::Query {
+            query: q,
+            force_mode: None,
+        })? {
+            Response::Query(_) => {}
+            _ => unreachable!(),
+        }
+        if (i + 1) % 100 == 0 {
+            println!("served {} requests", i + 1);
+        }
+    }
+    let dt = start.elapsed().as_secs_f64();
+    println!(
+        "served {requests} requests in {dt:.2}s ({:.1} req/s)",
+        requests as f64 / dt
+    );
+    println!("{}", stack.router.metrics.report());
+    Ok(())
+}

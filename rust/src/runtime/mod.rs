@@ -1,0 +1,7 @@
+//! The AOT compute runtime: PJRT client wrapper that loads the
+//! JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and executes them from
+//! the request path — Python is build-time only.
+
+pub mod pjrt;
+
+pub use pjrt::{empty_moments, merge_moments, EngineStats, Moments, PjrtEngine, COLS, ROWS};

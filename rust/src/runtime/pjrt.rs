@@ -1,0 +1,662 @@
+//! The PJRT compute runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (HLO text, see `python/compile/aot.py`) and executes them for the
+//! Skyhook-Extension's pushdown hot path. Python is never involved: the
+//! artifacts are self-contained HLO modules compiled by the PJRT CPU
+//! client at startup.
+//!
+//! Threading: the `xla` crate's `PjRtClient` holds an `Rc` internally, so
+//! it is confined to one **owner thread**; callers talk to it through a
+//! channel. This also gives a natural dynamic-batching point — the owner
+//! thread drains the queue and `masked_moments_multi` packs up to
+//! [`COLS`] columns into one (ROWS, COLS) kernel launch (see
+//! `coordinator::batcher` for the policy layer).
+
+use crate::error::{Error, Result};
+use crate::skyhook::ChunkCompute;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Fixed kernel chunk length (must match python/compile/kernels).
+pub const ROWS: usize = 16384;
+/// Fixed matrix width (must match python/compile/kernels/stats.py).
+pub const COLS: usize = 8;
+
+/// Moments vector layout: [count, sum, sumsq, min, max].
+pub type Moments = [f64; 5];
+
+/// Merge two moment partials.
+pub fn merge_moments(a: Moments, b: Moments) -> Moments {
+    [
+        a[0] + b[0],
+        a[1] + b[1],
+        a[2] + b[2],
+        if b[0] > 0.0 { a[3].min(b[3]) } else { a[3] },
+        if b[0] > 0.0 { a[4].max(b[4]) } else { a[4] },
+    ]
+}
+
+/// Identity element for [`merge_moments`].
+pub fn empty_moments() -> Moments {
+    [0.0, 0.0, 0.0, f64::INFINITY, f64::NEG_INFINITY]
+}
+
+enum Req {
+    Moments {
+        values: Vec<f32>,
+        mask: Vec<bool>,
+        resp: mpsc::Sender<Result<Moments>>,
+    },
+    MomentsMulti {
+        cols: Vec<Vec<f32>>,
+        mask: Vec<bool>,
+        resp: mpsc::Sender<Result<Vec<Moments>>>,
+    },
+    Pipeline {
+        matrix: Vec<f32>, // (ROWS, COLS) row-major
+        col: usize,
+        threshold: f32,
+        valid: Vec<bool>,
+        resp: mpsc::Sender<Result<Vec<Moments>>>,
+    },
+    Transform {
+        data: Vec<f32>,
+        to_col: bool,
+        resp: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Shutdown,
+}
+
+/// Runtime counters.
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    pub kernel_launches: AtomicU64,
+    pub elements_processed: AtomicU64,
+}
+
+/// Handle to the engine's owner thread. Cheap to clone via `Arc`.
+pub struct PjrtEngine {
+    tx: Mutex<mpsc::Sender<Req>>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    stats: Arc<EngineStats>,
+}
+
+impl PjrtEngine {
+    /// Start the engine: spawn the owner thread, create the PJRT CPU
+    /// client, and eagerly compile every artifact in `dir`. Fails if the
+    /// client cannot start or any artifact is missing/invalid.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Arc<Self>> {
+        let dir = dir.as_ref().to_path_buf();
+        let stats = Arc::new(EngineStats::default());
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let stats2 = Arc::clone(&stats);
+        let handle = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || owner_thread(dir, rx, ready_tx, stats2))
+            .map_err(|e| Error::Runtime(format!("spawn engine: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("engine thread died during init".into()))??;
+        Ok(Arc::new(Self {
+            tx: Mutex::new(tx),
+            handle: Mutex::new(Some(handle)),
+            stats,
+        }))
+    }
+
+    fn send(&self, req: Req) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(req)
+            .map_err(|_| Error::Runtime("engine thread gone".into()))
+    }
+
+    /// Masked moments of an arbitrary-length column (padded/looped over
+    /// fixed-size kernel chunks; partials merged here).
+    pub fn moments(&self, values: &[f32], mask: &[bool]) -> Result<Moments> {
+        if values.len() != mask.len() {
+            return Err(Error::Invalid("values/mask length mismatch".into()));
+        }
+        let (tx, rx) = mpsc::channel();
+        self.send(Req::Moments {
+            values: values.to_vec(),
+            mask: mask.to_vec(),
+            resp: tx,
+        })?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("engine dropped request".into()))?
+    }
+
+    /// Masked moments of several equal-length columns sharing one mask —
+    /// batched into (ROWS, COLS) matrix kernel launches.
+    pub fn moments_multi(&self, cols: &[&[f32]], mask: &[bool]) -> Result<Vec<Moments>> {
+        if cols.is_empty() {
+            return Ok(Vec::new());
+        }
+        for c in cols {
+            if c.len() != mask.len() {
+                return Err(Error::Invalid("column/mask length mismatch".into()));
+            }
+        }
+        let (tx, rx) = mpsc::channel();
+        self.send(Req::MomentsMulti {
+            cols: cols.iter().map(|c| c.to_vec()).collect(),
+            mask: mask.to_vec(),
+            resp: tx,
+        })?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("engine dropped request".into()))?
+    }
+
+    /// The fused predicate+aggregate pipeline over one (ROWS, COLS) chunk.
+    pub fn chunk_pipeline(
+        &self,
+        matrix: &[f32],
+        col: usize,
+        threshold: f32,
+        valid: &[bool],
+    ) -> Result<Vec<Moments>> {
+        if matrix.len() != ROWS * COLS || valid.len() != ROWS || col >= COLS {
+            return Err(Error::Invalid("bad pipeline shapes".into()));
+        }
+        let (tx, rx) = mpsc::channel();
+        self.send(Req::Pipeline {
+            matrix: matrix.to_vec(),
+            col,
+            threshold,
+            valid: valid.to_vec(),
+            resp: tx,
+        })?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("engine dropped request".into()))?
+    }
+
+    /// Layout transform of one (ROWS, COLS) chunk (row→col or back).
+    pub fn transform(&self, data: &[f32], to_col: bool) -> Result<Vec<f32>> {
+        if data.len() != ROWS * COLS {
+            return Err(Error::Invalid("bad transform shape".into()));
+        }
+        let (tx, rx) = mpsc::channel();
+        self.send(Req::Transform {
+            data: data.to_vec(),
+            to_col,
+            resp: tx,
+        })?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("engine dropped request".into()))?
+    }
+
+    /// Total kernel launches so far.
+    pub fn kernel_launches(&self) -> u64 {
+        self.stats.kernel_launches.load(Ordering::Relaxed)
+    }
+
+    /// Total elements processed.
+    pub fn elements_processed(&self) -> u64 {
+        self.stats.elements_processed.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for PjrtEngine {
+    fn drop(&mut self) {
+        let _ = self.send(Req::Shutdown);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl ChunkCompute for PjrtEngine {
+    fn masked_moments(&self, values: &[f32], mask: &[bool]) -> Result<[f64; 5]> {
+        self.moments(values, mask)
+    }
+}
+
+// ---- owner thread ----------------------------------------------------------
+
+struct Exes {
+    // Held so executables outlive the client that compiled them.
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    exes: HashMap<&'static str, xla::PjRtLoadedExecutable>,
+}
+
+fn xerr(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+fn compile(client: &xla::PjRtClient, dir: &Path, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+    let path: PathBuf = dir.join(format!("{name}.hlo.txt"));
+    let path_s = path
+        .to_str()
+        .ok_or_else(|| Error::Runtime("bad artifact path".into()))?;
+    if !path.exists() {
+        return Err(Error::Runtime(format!(
+            "missing artifact {path_s} — run `make artifacts`"
+        )));
+    }
+    let proto = xla::HloModuleProto::from_text_file(path_s).map_err(xerr)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(xerr)
+}
+
+fn owner_thread(
+    dir: PathBuf,
+    rx: mpsc::Receiver<Req>,
+    ready: mpsc::Sender<Result<()>>,
+    stats: Arc<EngineStats>,
+) {
+    let init = (|| -> Result<Exes> {
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        let mut exes = HashMap::new();
+        for name in [
+            "filter_agg",
+            "stats",
+            "chunk_pipeline",
+            "transform_r2c",
+            "transform_c2r",
+        ] {
+            exes.insert(name, compile(&client, &dir, name)?);
+        }
+        Ok(Exes { client, exes })
+    })();
+    let exes = match init {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Shutdown => break,
+            Req::Moments { values, mask, resp } => {
+                let _ = resp.send(run_moments(&exes, &stats, &values, &mask));
+            }
+            Req::MomentsMulti { cols, mask, resp } => {
+                let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+                let _ = resp.send(run_moments_multi(&exes, &stats, &refs, &mask));
+            }
+            Req::Pipeline {
+                matrix,
+                col,
+                threshold,
+                valid,
+                resp,
+            } => {
+                let _ = resp.send(run_pipeline(&exes, &stats, &matrix, col, threshold, &valid));
+            }
+            Req::Transform { data, to_col, resp } => {
+                let _ = resp.send(run_transform(&exes, &stats, &data, to_col));
+            }
+        }
+    }
+}
+
+fn literal_1d(xs: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(xs)
+}
+
+fn literal_2d(xs: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(xs)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(xerr)
+}
+
+fn exec_to_f32s(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<f32>> {
+    let result = exe.execute::<xla::Literal>(args).map_err(xerr)?;
+    let lit = result[0][0].to_literal_sync().map_err(xerr)?;
+    // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+    let out = lit.to_tuple1().map_err(xerr)?;
+    out.to_vec::<f32>().map_err(xerr)
+}
+
+fn mask_to_f32(mask: &[bool], out: &mut [f32]) {
+    for (o, &m) in out.iter_mut().zip(mask) {
+        *o = if m { 1.0 } else { 0.0 };
+    }
+}
+
+fn moments_from_row(row: &[f32]) -> Moments {
+    [
+        row[0] as f64,
+        row[1] as f64,
+        row[2] as f64,
+        row[3] as f64,
+        row[4] as f64,
+    ]
+}
+
+fn run_moments(
+    exes: &Exes,
+    stats: &EngineStats,
+    values: &[f32],
+    mask: &[bool],
+) -> Result<Moments> {
+    let exe = &exes.exes["filter_agg"];
+    let mut acc = empty_moments();
+    let mut vbuf = vec![0f32; ROWS];
+    let mut mbuf = vec![0f32; ROWS];
+    let mut off = 0;
+    // Always run at least one chunk so empty input returns zeros.
+    loop {
+        let n = (values.len() - off).min(ROWS);
+        vbuf[..n].copy_from_slice(&values[off..off + n]);
+        vbuf[n..].fill(0.0);
+        mask_to_f32(&mask[off..off + n], &mut mbuf[..n]);
+        mbuf[n..].fill(0.0);
+        let out = exec_to_f32s(exe, &[literal_1d(&vbuf), literal_1d(&mbuf)])?;
+        stats.kernel_launches.fetch_add(1, Ordering::Relaxed);
+        stats
+            .elements_processed
+            .fetch_add(ROWS as u64, Ordering::Relaxed);
+        let part = moments_from_row(&out);
+        acc = merge_moments(acc, part);
+        off += n;
+        if off >= values.len() {
+            break;
+        }
+    }
+    Ok(acc)
+}
+
+fn run_moments_multi(
+    exes: &Exes,
+    stats: &EngineStats,
+    cols: &[&[f32]],
+    mask: &[bool],
+) -> Result<Vec<Moments>> {
+    let exe = &exes.exes["stats"];
+    let n_cols = cols.len();
+    let mut acc = vec![empty_moments(); n_cols];
+    let len = mask.len();
+    let mut matrix = vec![0f32; ROWS * COLS];
+    let mut mbuf = vec![0f32; ROWS];
+    let mut off = 0;
+    loop {
+        let n = (len - off).min(ROWS);
+        // Pack column groups of COLS at a time.
+        for group_start in (0..n_cols).step_by(COLS) {
+            let group = &cols[group_start..(group_start + COLS).min(n_cols)];
+            matrix.fill(0.0);
+            for (ci, col) in group.iter().enumerate() {
+                for r in 0..n {
+                    matrix[r * COLS + ci] = col[off + r];
+                }
+            }
+            mask_to_f32(&mask[off..off + n], &mut mbuf[..n]);
+            mbuf[n..].fill(0.0);
+            let out = exec_to_f32s(
+                exe,
+                &[literal_2d(&matrix, ROWS, COLS)?, literal_1d(&mbuf)],
+            )?;
+            stats.kernel_launches.fetch_add(1, Ordering::Relaxed);
+            stats
+                .elements_processed
+                .fetch_add((ROWS * COLS) as u64, Ordering::Relaxed);
+            for (ci, _) in group.iter().enumerate() {
+                let row = &out[ci * 8..ci * 8 + 8];
+                acc[group_start + ci] = merge_moments(acc[group_start + ci], moments_from_row(row));
+            }
+        }
+        off += n;
+        if off >= len {
+            break;
+        }
+    }
+    Ok(acc)
+}
+
+fn run_pipeline(
+    exes: &Exes,
+    stats: &EngineStats,
+    matrix: &[f32],
+    col: usize,
+    threshold: f32,
+    valid: &[bool],
+) -> Result<Vec<Moments>> {
+    let exe = &exes.exes["chunk_pipeline"];
+    let mut sel = vec![0f32; COLS];
+    sel[col] = 1.0;
+    let mut vbuf = vec![0f32; ROWS];
+    mask_to_f32(valid, &mut vbuf);
+    let out = exec_to_f32s(
+        exe,
+        &[
+            literal_2d(matrix, ROWS, COLS)?,
+            literal_1d(&sel),
+            literal_1d(&[threshold]),
+            literal_1d(&vbuf),
+        ],
+    )?;
+    stats.kernel_launches.fetch_add(1, Ordering::Relaxed);
+    stats
+        .elements_processed
+        .fetch_add((ROWS * COLS) as u64, Ordering::Relaxed);
+    Ok((0..COLS)
+        .map(|c| moments_from_row(&out[c * 8..c * 8 + 8]))
+        .collect())
+}
+
+fn run_transform(
+    exes: &Exes,
+    stats: &EngineStats,
+    data: &[f32],
+    to_col: bool,
+) -> Result<Vec<f32>> {
+    let name = if to_col { "transform_r2c" } else { "transform_c2r" };
+    let exe = &exes.exes[name];
+    let lit = if to_col {
+        literal_2d(data, ROWS, COLS)?
+    } else {
+        literal_2d(data, COLS, ROWS)?
+    };
+    let out = exec_to_f32s(exe, &[lit])?;
+    stats.kernel_launches.fetch_add(1, Ordering::Relaxed);
+    stats
+        .elements_processed
+        .fetch_add((ROWS * COLS) as u64, Ordering::Relaxed);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use once_cell::sync::Lazy;
+
+    /// One engine for the whole test binary (artifact compile ~seconds).
+    static ENGINE: Lazy<Option<Arc<PjrtEngine>>> =
+        Lazy::new(|| PjrtEngine::load(artifacts_dir()).ok());
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn engine() -> Option<Arc<PjrtEngine>> {
+        ENGINE.clone()
+    }
+
+    macro_rules! require_engine {
+        () => {
+            match engine() {
+                Some(e) => e,
+                None => {
+                    eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                    return;
+                }
+            }
+        };
+    }
+
+    #[test]
+    fn moments_match_direct() {
+        let e = require_engine!();
+        let values: Vec<f32> = (0..1000).map(|i| (i as f32) * 0.5 - 100.0).collect();
+        let mask: Vec<bool> = (0..1000).map(|i| i % 3 == 0).collect();
+        let m = e.moments(&values, &mask).unwrap();
+        let mut want = empty_moments();
+        for (i, &v) in values.iter().enumerate() {
+            if mask[i] {
+                want = merge_moments(want, [1.0, v as f64, (v * v) as f64, v as f64, v as f64]);
+            }
+        }
+        assert_eq!(m[0], want[0]);
+        assert!((m[1] - want[1]).abs() < 1e-2, "{} vs {}", m[1], want[1]);
+        assert!((m[2] - want[2]).abs() / want[2].abs() < 1e-4);
+        assert_eq!(m[3], want[3]);
+        assert_eq!(m[4], want[4]);
+    }
+
+    #[test]
+    fn moments_longer_than_one_chunk() {
+        let e = require_engine!();
+        let n = ROWS * 2 + 77;
+        let values: Vec<f32> = (0..n).map(|i| ((i * 31) % 1000) as f32).collect();
+        let mask = vec![true; n];
+        let m = e.moments(&values, &mask).unwrap();
+        assert_eq!(m[0] as usize, n);
+        let want_sum: f64 = values.iter().map(|&v| v as f64).sum();
+        assert!((m[1] - want_sum).abs() / want_sum < 1e-5);
+        assert_eq!(m[3], 0.0);
+        assert_eq!(m[4], 999.0);
+    }
+
+    #[test]
+    fn moments_empty_and_all_false() {
+        let e = require_engine!();
+        let m = e.moments(&[], &[]).unwrap();
+        assert_eq!(m[0], 0.0);
+        let m = e.moments(&[1.0, 2.0], &[false, false]).unwrap();
+        assert_eq!(m[0], 0.0);
+        assert_eq!(m[1], 0.0);
+    }
+
+    #[test]
+    fn moments_multi_matches_single() {
+        let e = require_engine!();
+        let a: Vec<f32> = (0..500).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..500).map(|i| (i as f32) * -2.0).collect();
+        let mask: Vec<bool> = (0..500).map(|i| i % 2 == 0).collect();
+        let multi = e.moments_multi(&[&a, &b], &mask).unwrap();
+        let sa = e.moments(&a, &mask).unwrap();
+        let sb = e.moments(&b, &mask).unwrap();
+        assert_eq!(multi.len(), 2);
+        for k in 0..5 {
+            assert!((multi[0][k] - sa[k]).abs() < 1e-3, "col a comp {k}");
+            assert!((multi[1][k] - sb[k]).abs() < 1e-3, "col b comp {k}");
+        }
+    }
+
+    #[test]
+    fn moments_multi_more_than_cols_columns() {
+        let e = require_engine!();
+        let cols: Vec<Vec<f32>> = (0..COLS + 3)
+            .map(|c| (0..100).map(|i| (i + c) as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let mask = vec![true; 100];
+        let out = e.moments_multi(&refs, &mask).unwrap();
+        assert_eq!(out.len(), COLS + 3);
+        for (c, m) in out.iter().enumerate() {
+            assert_eq!(m[0], 100.0);
+            assert_eq!(m[3], c as f64); // min = c
+            assert_eq!(m[4], (99 + c) as f64);
+        }
+    }
+
+    #[test]
+    fn pipeline_matches_manual() {
+        let e = require_engine!();
+        let mut matrix = vec![0f32; ROWS * COLS];
+        for r in 0..ROWS {
+            for c in 0..COLS {
+                matrix[r * COLS + c] = ((r * 7 + c * 13) % 100) as f32;
+            }
+        }
+        let valid = vec![true; ROWS];
+        let col = 2;
+        let threshold = 50.0;
+        let out = e.chunk_pipeline(&matrix, col, threshold, &valid).unwrap();
+        // Manual.
+        let mut want = vec![empty_moments(); COLS];
+        for r in 0..ROWS {
+            if matrix[r * COLS + col] > threshold {
+                for c in 0..COLS {
+                    let v = matrix[r * COLS + c] as f64;
+                    want[c] = merge_moments(want[c], [1.0, v, v * v, v, v]);
+                }
+            }
+        }
+        for c in 0..COLS {
+            assert_eq!(out[c][0], want[c][0], "count col {c}");
+            assert!((out[c][1] - want[c][1]).abs() / want[c][1].max(1.0) < 1e-4);
+            assert_eq!(out[c][3], want[c][3]);
+            assert_eq!(out[c][4], want[c][4]);
+        }
+    }
+
+    #[test]
+    fn transform_roundtrip() {
+        let e = require_engine!();
+        let data: Vec<f32> = (0..ROWS * COLS).map(|i| i as f32).collect();
+        let t = e.transform(&data, true).unwrap();
+        // t is (COLS, ROWS): element (c, r) = data[r * COLS + c].
+        assert_eq!(t.len(), ROWS * COLS);
+        assert_eq!(t[0], data[0]);
+        assert_eq!(t[1], data[COLS]); // (0,1) <- row 1, col 0
+        let back = e.transform(&t, false).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn engine_is_usable_from_many_threads() {
+        let e = require_engine!();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let e = Arc::clone(&e);
+            handles.push(std::thread::spawn(move || {
+                let values: Vec<f32> = (0..200).map(|i| (i + t) as f32).collect();
+                let mask = vec![true; 200];
+                let m = e.moments(&values, &mask).unwrap();
+                assert_eq!(m[0], 200.0);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn stats_counters_advance() {
+        let e = require_engine!();
+        let before = e.kernel_launches();
+        e.moments(&[1.0; 10], &[true; 10]).unwrap();
+        assert!(e.kernel_launches() > before);
+        assert!(e.elements_processed() > 0);
+    }
+
+    #[test]
+    fn shape_validation() {
+        let e = require_engine!();
+        assert!(e.moments(&[1.0], &[true, false]).is_err());
+        assert!(e.chunk_pipeline(&[0.0; 8], 0, 0.0, &[true; ROWS]).is_err());
+        assert!(e
+            .chunk_pipeline(&vec![0.0; ROWS * COLS], COLS, 0.0, &vec![true; ROWS])
+            .is_err());
+        assert!(e.transform(&[0.0; 3], true).is_err());
+    }
+
+    #[test]
+    fn missing_artifacts_fail_cleanly() {
+        let err = PjrtEngine::load("/nonexistent/dir");
+        assert!(err.is_err());
+    }
+}

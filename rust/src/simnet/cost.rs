@@ -1,0 +1,227 @@
+//! Cost parameters for the simulated testbed.
+//!
+//! Calibration: Table 1 of the paper fits `t(n) = a + b/n` with
+//! `a ≈ 13.45 s` (client-side forwarding/serialization, serial) and
+//! `b ≈ 47.67 s` (per-node store path) for the 3 GB workload — i.e. a
+//! client forwarding throughput of ~228 MB/s and a per-node effective
+//! write path of ~64 MB/s (network + device). The native (no-plugin)
+//! baseline wrote 3 GB in 26.28 s ≈ 117 MB/s to a local HDF5 file.
+//! `CostParams::paper_testbed()` encodes those rates so the E1 bench
+//! reproduces the table's *shape* at any scaled dataset size.
+
+/// Cost-model parameters (all rates in bytes/second, times in seconds).
+#[derive(Clone, Debug)]
+pub struct CostParams {
+    /// One-way network latency per message (request or response).
+    pub net_latency_s: f64,
+    /// Network bandwidth per flow.
+    pub net_bw: f64,
+    /// Device sequential write bandwidth (per OSD).
+    pub dev_write_bw: f64,
+    /// Device sequential read bandwidth (per OSD).
+    pub dev_read_bw: f64,
+    /// Fixed software overhead per storage op (dispatch, kv update).
+    pub op_overhead_s: f64,
+    /// Client-side cost per byte for forwarding-plugin serialization and
+    /// request mirroring (the paper's "forwarding plugin" overhead).
+    pub client_fwd_bw: f64,
+    /// Client-side cost per byte for the native access-library write path
+    /// (buffering + local file system).
+    pub native_bw: f64,
+    /// Per-row CPU cost of evaluating a predicate/aggregate in the
+    /// objclass handler (storage-side CPU); used when the PJRT runtime is
+    /// bypassed and for modelling server CPU load.
+    pub cpu_row_cost_s: f64,
+}
+
+impl CostParams {
+    /// Calibrated to reproduce the shape of the paper's Table 1 (§4.1).
+    ///
+    /// Fit of the table to `t(n) = a + b/n`: a ≈ 13.45 s of serial
+    /// client-side forwarding/mirroring and b ≈ 47.67 s of per-node store
+    /// path for 3 GiB, plus the 26.28 s native baseline:
+    ///   client_fwd_bw = 3 GiB / 13.45 s ≈ 239 MB/s
+    ///   dev_write_bw  = 3 GiB / 47.67 s ≈  68 MB/s (remote HDF5 write)
+    ///   native_bw     = 3 GiB / 26.28 s ≈ 123 MB/s
+    pub fn paper_testbed() -> Self {
+        Self {
+            net_latency_s: 200e-6, // LAN round-trip/2
+            net_bw: 1.0e9,         // ~10 GbE effective
+            dev_write_bw: 67.7e6,
+            dev_read_bw: 110e6,
+            op_overhead_s: 300e-6,
+            client_fwd_bw: 239.5e6,
+            native_bw: 122.6e6,
+            cpu_row_cost_s: 8e-9,
+        }
+    }
+
+    /// A modern all-flash profile (used by ablations to show how the
+    /// trade-offs shift when media gets faster — the paper's §1 argument).
+    pub fn flash() -> Self {
+        Self {
+            net_latency_s: 50e-6,
+            net_bw: 5.0e9,
+            dev_write_bw: 1.5e9,
+            dev_read_bw: 3.0e9,
+            op_overhead_s: 30e-6,
+            client_fwd_bw: 2.0e9,
+            native_bw: 1.2e9,
+            cpu_row_cost_s: 8e-9,
+        }
+    }
+
+    /// A spinning-media profile (large sequential >> small random — the
+    /// legacy assumption baked into access libraries, §Abstract).
+    pub fn hdd() -> Self {
+        Self {
+            net_latency_s: 200e-6,
+            net_bw: 1.0e9,
+            dev_write_bw: 120e6,
+            dev_read_bw: 140e6,
+            op_overhead_s: 8e-3, // seek-dominated per-op cost
+            client_fwd_bw: 400e6,
+            native_bw: 130e6,
+            cpu_row_cost_s: 8e-9,
+        }
+    }
+
+    /// Virtual time to push `bytes` through the network (one message).
+    pub fn net_time(&self, bytes: u64) -> f64 {
+        self.net_latency_s + bytes as f64 / self.net_bw
+    }
+
+    /// Virtual time for an OSD to persist `bytes` (one op).
+    pub fn dev_write_time(&self, bytes: u64) -> f64 {
+        self.op_overhead_s + bytes as f64 / self.dev_write_bw
+    }
+
+    /// Virtual time for an OSD to read `bytes` (one op).
+    pub fn dev_read_time(&self, bytes: u64) -> f64 {
+        self.op_overhead_s + bytes as f64 / self.dev_read_bw
+    }
+
+    /// Client-side forwarding-plugin serialization time for `bytes`.
+    pub fn client_fwd_time(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.client_fwd_bw
+    }
+
+    /// Native access-library write time for `bytes` (the no-plugin
+    /// baseline of Table 1).
+    pub fn native_write_time(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.native_bw
+    }
+
+    /// Storage-side CPU time to scan `rows` rows.
+    pub fn cpu_scan_time(&self, rows: u64) -> f64 {
+        rows as f64 * self.cpu_row_cost_s
+    }
+}
+
+impl Default for CostParams {
+    fn default() -> Self {
+        Self::paper_testbed()
+    }
+}
+
+/// Scale factor between the paper's workload and ours. The paper writes
+/// 3 GiB; we default to 1/32 of that so benches finish quickly, and report
+/// both raw simulated seconds and "paper-scaled" seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct SimScale {
+    /// Our dataset bytes = paper bytes / `factor`.
+    pub factor: f64,
+}
+
+impl SimScale {
+    pub fn new(factor: f64) -> Self {
+        assert!(factor > 0.0);
+        Self { factor }
+    }
+
+    /// Paper's 3 GiB scaled down.
+    pub fn dataset_bytes(&self, paper_bytes: u64) -> u64 {
+        (paper_bytes as f64 / self.factor).round() as u64
+    }
+
+    /// Scale a simulated duration back up to paper scale (linear in bytes,
+    /// which holds for bandwidth-dominated runs).
+    pub fn to_paper_seconds(&self, sim_seconds: f64) -> f64 {
+        sim_seconds * self.factor
+    }
+}
+
+impl Default for SimScale {
+    fn default() -> Self {
+        Self { factor: 32.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GIB: u64 = 1 << 30;
+
+    #[test]
+    fn paper_native_matches_table1_baseline() {
+        let p = CostParams::paper_testbed();
+        let t = p.native_write_time(3 * GIB);
+        // 26.28 s ± 10%
+        assert!((t - 26.28).abs() / 26.28 < 0.10, "native={t}");
+    }
+
+    #[test]
+    fn paper_forwarding_shape_matches_table1() {
+        // t(n) = client_fwd(D) + max over n nodes of dev_write(D/n).
+        let p = CostParams::paper_testbed();
+        let d = 3 * GIB;
+        let t = |n: u64| p.client_fwd_time(d) + p.dev_write_time(d / n) + p.net_time(d / n);
+        let t1 = t(1);
+        let t2 = t(2);
+        let t3 = t(3);
+        // Paper: 61.12 / 36.07 / 29.34, native 26.28.
+        assert!((t1 - 61.12).abs() / 61.12 < 0.15, "t1={t1}");
+        assert!((t2 - 36.07).abs() / 36.07 < 0.15, "t2={t2}");
+        assert!((t3 - 29.34).abs() / 29.34 < 0.15, "t3={t3}");
+        // Crossover at 3 nodes (t3 close to but above... the paper treats
+        // 29.34 as "offsetting" 26.28) — require ordering to hold.
+        assert!(t1 > t2 && t2 > t3);
+        let native = p.native_write_time(d);
+        assert!(t3 < 1.2 * native, "3 nodes should roughly offset the overhead");
+        assert!(t1 > 2.0 * native, "1 node forwarding should be >2x native");
+    }
+
+    #[test]
+    fn net_time_has_latency_floor() {
+        let p = CostParams::paper_testbed();
+        assert!(p.net_time(0) >= p.net_latency_s);
+        assert!(p.net_time(1_000_000) > p.net_time(1_000));
+    }
+
+    #[test]
+    fn hdd_per_op_cost_dominates_small_io() {
+        let p = CostParams::hdd();
+        // 4 KiB random reads on HDD: overhead >> transfer.
+        let t = p.dev_read_time(4096);
+        assert!(t > 0.9 * p.op_overhead_s);
+        let transfer = 4096.0 / p.dev_read_bw;
+        assert!(p.op_overhead_s > 100.0 * transfer);
+    }
+
+    #[test]
+    fn flash_small_io_is_cheap() {
+        let hdd = CostParams::hdd();
+        let flash = CostParams::flash();
+        assert!(flash.dev_read_time(4096) < hdd.dev_read_time(4096) / 50.0);
+    }
+
+    #[test]
+    fn scale_roundtrip() {
+        let s = SimScale::new(32.0);
+        let d = s.dataset_bytes(3 * GIB);
+        assert_eq!(d, 3 * GIB / 32);
+        let paper_t = s.to_paper_seconds(1.0);
+        assert!((paper_t - 32.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,694 @@
+//! Skyhook-Driver (§4.2, Figure 4): accepts queries, generates object
+//! names and sub-queries, schedules them over the worker pool, and
+//! aggregates the partial results — the Dask-scheduler stand-in.
+
+use super::plan::{plan, ExecMode, QueryPlan};
+use super::query::{AggState, Query};
+use super::worker::{self, SubOutput, SubResult};
+use crate::config::DriverConfig;
+use crate::dataset::metadata::{self, DatasetMeta, RowGroupMeta};
+use crate::dataset::naming;
+use crate::dataset::partition::PartitionSpec;
+use crate::dataset::table::Batch;
+use crate::dataset::Layout;
+use crate::error::{Error, Result};
+use crate::simnet::Timeline;
+use crate::store::Cluster;
+use crate::util::pool::ThreadPool;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Execution statistics of one query (feeds the E2/E5/E6 benches and the
+/// CLI's reporting).
+#[derive(Clone, Debug, Default)]
+pub struct QueryStats {
+    /// Bytes that crossed the client↔storage network.
+    pub bytes_moved: u64,
+    /// Virtual makespan (seconds) from dispatch to last sub-result.
+    pub sim_seconds: f64,
+    /// Wall-clock seconds spent executing.
+    pub wall_seconds: f64,
+    /// Number of objects touched.
+    pub objects: usize,
+    /// Execution mode used.
+    pub pushdown: bool,
+}
+
+/// Result of a query.
+#[derive(Debug)]
+pub struct QueryResult {
+    /// Returned rows (row queries).
+    pub rows: Option<Batch>,
+    /// Finalized aggregate values, parallel to `query.aggregates`.
+    pub aggregates: Vec<f64>,
+    /// Group-by results: (key, finalized value) sorted by key.
+    pub groups: Option<Vec<(i64, f64)>>,
+    pub stats: QueryStats,
+}
+
+/// Result of a table write.
+#[derive(Clone, Debug)]
+pub struct WriteReport {
+    pub objects: usize,
+    pub bytes_written: u64,
+    pub sim_seconds: f64,
+    pub wall_seconds: f64,
+}
+
+/// The driver: owns the worker pool and per-worker virtual CPU timelines.
+pub struct Driver {
+    cluster: Arc<Cluster>,
+    pool: ThreadPool,
+    worker_cpus: Vec<Arc<Timeline>>,
+    cfg: DriverConfig,
+}
+
+impl Driver {
+    pub fn new(cluster: Arc<Cluster>, cfg: DriverConfig) -> Self {
+        let workers = cfg.workers.max(1);
+        Self {
+            cluster,
+            pool: ThreadPool::new(workers),
+            worker_cpus: (0..workers).map(|_| Arc::new(Timeline::new())).collect(),
+            cfg,
+        }
+    }
+
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+
+    pub fn workers(&self) -> usize {
+        self.worker_cpus.len()
+    }
+
+    /// Reset virtual time (between bench cases).
+    pub fn reset_time(&self) {
+        for t in &self.worker_cpus {
+            t.reset();
+        }
+        self.cluster.reset_time();
+    }
+
+    // ---- write path -------------------------------------------------------
+
+    /// Partition a table into row-group objects and store it. `locality`
+    /// optionally assigns each row group a placement group key (§3.1).
+    pub fn write_table(
+        &self,
+        dataset: &str,
+        batch: &Batch,
+        layout: Layout,
+        spec: &PartitionSpec,
+        locality: Option<&dyn Fn(usize, &Batch) -> String>,
+    ) -> Result<WriteReport> {
+        if metadata::load_meta(&self.cluster, 0.0, dataset).is_ok() {
+            return Err(Error::AlreadyExists(format!("dataset {dataset}")));
+        }
+        let wall = Instant::now();
+        let groups = spec.partition(batch)?;
+        let localities: Vec<String> = groups
+            .iter()
+            .enumerate()
+            .map(|(i, g)| locality.map(|f| f(i, g)).unwrap_or_default())
+            .collect();
+
+        // Fan the group writes out over the worker pool.
+        let cluster = Arc::clone(&self.cluster);
+        let items: Vec<(usize, Batch, String)> = groups
+            .into_iter()
+            .enumerate()
+            .map(|(i, g)| {
+                let base = naming::table_object(dataset, i as u64);
+                let name = if localities[i].is_empty() {
+                    base
+                } else {
+                    naming::with_locality(&localities[i], &base)
+                };
+                (i, g, name)
+            })
+            .collect();
+        let worker_cpus = self.worker_cpus.clone();
+        let nw = worker_cpus.len();
+        let results: Vec<Result<(u64, u64, f64)>> = self.pool.map(items.clone(), move |(i, g, name)| {
+            let cpu = &worker_cpus[i % nw];
+            let (bytes, finish) =
+                worker::write_row_group(&cluster, &name, &g, layout, 0.0, cpu)?;
+            Ok((g.nrows() as u64, bytes, finish))
+        });
+
+        let mut row_groups = Vec::with_capacity(items.len());
+        let mut bytes_written = 0u64;
+        let mut sim_finish: f64 = 0.0;
+        for r in results {
+            let (rows, bytes, finish) = r?;
+            row_groups.push(RowGroupMeta { rows, bytes });
+            bytes_written += bytes;
+            sim_finish = sim_finish.max(finish);
+        }
+
+        let meta = DatasetMeta::Table {
+            schema: batch.schema.clone(),
+            layout,
+            row_groups,
+            localities,
+        };
+        let t = metadata::save_meta(&self.cluster, sim_finish, dataset, &meta, false)?;
+        Ok(WriteReport {
+            objects: items.len(),
+            bytes_written,
+            sim_seconds: t,
+            wall_seconds: wall.elapsed().as_secs_f64(),
+        })
+    }
+
+    // ---- read path ----------------------------------------------------------
+
+    /// Plan and execute a query. `force_mode` lets benches compare
+    /// pushdown vs client-side on identical queries.
+    pub fn execute(&self, query: &Query, force_mode: Option<ExecMode>) -> Result<QueryResult> {
+        let (meta, _) = metadata::load_meta(&self.cluster, 0.0, &query.dataset)?;
+        let plan = plan(query, &meta, force_mode)?;
+        self.execute_plan(&plan)
+    }
+
+    /// Execute a prepared plan.
+    pub fn execute_plan(&self, plan: &QueryPlan) -> Result<QueryResult> {
+        let wall = Instant::now();
+        let at = self.cluster.clock.now();
+        let query = plan.query.clone();
+        let cluster = Arc::clone(&self.cluster);
+        let worker_cpus = self.worker_cpus.clone();
+        let nw = worker_cpus.len();
+        let subs: Vec<(usize, super::plan::SubQuery)> = plan
+            .subqueries
+            .iter()
+            .cloned()
+            .enumerate()
+            .collect();
+        let objects = subs.len();
+        let q = query.clone();
+        let results: Vec<Result<SubResult>> = self.pool.map(subs, move |(i, sub)| {
+            worker::execute_subquery(&cluster, &q, &sub, at, &worker_cpus[i % nw])
+        });
+
+        // Gather.
+        let mut bytes_moved = 0u64;
+        let mut sim_finish = at;
+        let mut rows: Option<Batch> = None;
+        let mut agg_states: Vec<AggState> = Vec::new();
+        let mut groups: std::collections::BTreeMap<i64, AggState> = Default::default();
+        for r in results {
+            let r = r?;
+            bytes_moved += r.bytes_moved;
+            sim_finish = sim_finish.max(r.finish);
+            match r.output {
+                SubOutput::Rows(b) => match &mut rows {
+                    Some(acc) => acc.concat(&b)?,
+                    None => rows = Some(b),
+                },
+                SubOutput::Aggs(states) => {
+                    if agg_states.is_empty() {
+                        agg_states = states;
+                    } else {
+                        if states.len() != agg_states.len() {
+                            return Err(Error::Query("partial arity mismatch".into()));
+                        }
+                        for (acc, s) in agg_states.iter_mut().zip(&states) {
+                            acc.merge(s);
+                        }
+                    }
+                }
+                SubOutput::Groups(gs) => {
+                    for (k, s) in gs {
+                        groups
+                            .entry(k)
+                            .and_modify(|acc| acc.merge(&s))
+                            .or_insert(s);
+                    }
+                }
+            }
+        }
+
+        // Finalize. A dataset with zero objects still answers aggregate
+        // queries (empty states).
+        if query.is_aggregate() && agg_states.is_empty() {
+            agg_states = vec![AggState::new(false); query.aggregates.len()];
+        }
+        let aggregates: Vec<f64> = if query.group_by.is_none() {
+            query
+                .aggregates
+                .iter()
+                .zip(&agg_states)
+                .map(|(a, s)| s.finalize(a.func))
+                .collect::<Result<_>>()?
+        } else {
+            Vec::new()
+        };
+        let group_out = if query.group_by.is_some() {
+            let func = query.aggregates[0].func;
+            Some(
+                groups
+                    .into_iter()
+                    .map(|(k, s)| s.finalize(func).map(|v| (k, v)))
+                    .collect::<Result<Vec<_>>>()?,
+            )
+        } else {
+            None
+        };
+
+        let pushdown = plan
+            .subqueries
+            .first()
+            .map(|s| s.mode == ExecMode::Pushdown)
+            .unwrap_or(true);
+        Ok(QueryResult {
+            rows,
+            aggregates,
+            groups: group_out,
+            stats: QueryStats {
+                bytes_moved,
+                sim_seconds: sim_finish - at,
+                wall_seconds: wall.elapsed().as_secs_f64(),
+                objects,
+                pushdown,
+            },
+        })
+    }
+
+    /// Approximate quantile via the §3.2 de-composable approximation:
+    /// each object returns a constant-size mergeable sketch, the driver
+    /// merges and interpolates. Returns (value, worst-case abs error,
+    /// stats). Compare with the exact (holistic) `AggFunc::Median` path,
+    /// which ships every filtered value.
+    pub fn approx_quantile(
+        &self,
+        dataset: &str,
+        column: &str,
+        q: f64,
+        predicate: &super::query::Predicate,
+    ) -> Result<(f64, f64, QueryStats)> {
+        use super::sketch::QuantileSketch;
+        let wall = Instant::now();
+        let at = self.cluster.clock.now();
+        let (meta, _) = metadata::load_meta(&self.cluster, at, dataset)?;
+        let names = meta.object_names(dataset);
+        let objects = names.len();
+        let cluster = Arc::clone(&self.cluster);
+        let input = {
+            let mut w = crate::util::bytes::ByteWriter::new();
+            predicate.encode_into(&mut w);
+            w.str(column);
+            w.finish()
+        };
+        let results: Vec<Result<(QuantileSketch, u64, f64)>> =
+            self.pool.map(names, move |obj| {
+                let t = cluster.call(at, &obj, "skyhook", "quantile_sketch", &input)?;
+                let mut r = crate::util::bytes::ByteReader::new(&t.value);
+                let sketch = QuantileSketch::decode_from(&mut r)?;
+                Ok((sketch, t.value.len() as u64, t.finish))
+            });
+        let mut merged = QuantileSketch::empty();
+        let mut bytes_moved = 0;
+        let mut sim_finish = at;
+        for r in results {
+            let (s, bytes, finish) = r?;
+            merged.merge(&s);
+            bytes_moved += bytes;
+            sim_finish = sim_finish.max(finish);
+        }
+        let value = merged.quantile(q)?;
+        Ok((
+            value,
+            2.0 * merged.error_bound(),
+            QueryStats {
+                bytes_moved,
+                sim_seconds: sim_finish - at,
+                wall_seconds: wall.elapsed().as_secs_f64(),
+                objects,
+                pushdown: true,
+            },
+        ))
+    }
+
+    /// Build the omap index on an i64 column of every object of a dataset.
+    pub fn build_index(&self, dataset: &str, column: &str) -> Result<u64> {
+        let (meta, _) = metadata::load_meta(&self.cluster, 0.0, dataset)?;
+        let names = meta.object_names(dataset);
+        let cluster = Arc::clone(&self.cluster);
+        let col = column.to_string();
+        let results: Vec<Result<u64>> = self.pool.map(names, move |obj| {
+            let mut w = crate::util::bytes::ByteWriter::new();
+            w.str(&col);
+            let t = cluster.call(0.0, &obj, "skyhook", "build_index", &w.finish())?;
+            Ok(u64::from_le_bytes(t.value.try_into().map_err(|_| {
+                Error::Corrupt("bad index count".into())
+            })?))
+        });
+        let mut total = 0;
+        for r in results {
+            total += r?;
+        }
+        Ok(total)
+    }
+
+    /// Transform every object of a dataset to the target layout and update
+    /// the dataset metadata (physical design management, §5).
+    pub fn transform_layout(&self, dataset: &str, target: Layout) -> Result<WriteReport> {
+        let wall = Instant::now();
+        let (meta, _) = metadata::load_meta(&self.cluster, 0.0, dataset)?;
+        let DatasetMeta::Table {
+            schema,
+            layout,
+            row_groups,
+            localities,
+        } = meta
+        else {
+            return Err(Error::Query("transform needs a table dataset".into()));
+        };
+        if layout == target {
+            return Ok(WriteReport {
+                objects: 0,
+                bytes_written: 0,
+                sim_seconds: 0.0,
+                wall_seconds: wall.elapsed().as_secs_f64(),
+            });
+        }
+        let names = DatasetMeta::Table {
+            schema: schema.clone(),
+            layout,
+            row_groups: row_groups.clone(),
+            localities: localities.clone(),
+        }
+        .object_names(dataset);
+        let cluster = Arc::clone(&self.cluster);
+        let results: Vec<Result<f64>> = self.pool.map(names, move |obj| {
+            let t = cluster.call(
+                0.0,
+                &obj,
+                "skyhook",
+                "transform",
+                &[match target {
+                    Layout::Row => 0u8,
+                    Layout::Col => 1u8,
+                }],
+            )?;
+            Ok(t.finish)
+        });
+        let mut sim = 0.0f64;
+        let mut n = 0;
+        for r in results {
+            sim = sim.max(r?);
+            n += 1;
+        }
+        let meta = DatasetMeta::Table {
+            schema,
+            layout: target,
+            row_groups,
+            localities,
+        };
+        metadata::save_meta(&self.cluster, sim, dataset, &meta, true)?;
+        Ok(WriteReport {
+            objects: n,
+            bytes_written: 0,
+            sim_seconds: sim,
+            wall_seconds: wall.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Batch size configured for dispatch rounds.
+    pub fn batch_size(&self) -> usize {
+        self.cfg.batch_size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::dataset::table::gen;
+    use crate::skyhook::extension::register_skyhook_class;
+    use crate::skyhook::query::{AggFunc, CmpOp, Predicate};
+    use crate::store::ClassRegistry;
+
+    fn driver(osds: usize, workers: usize) -> Driver {
+        let mut reg = ClassRegistry::with_builtins();
+        register_skyhook_class(&mut reg, None);
+        let cluster = Cluster::new(
+            &ClusterConfig {
+                osds,
+                replicas: 1,
+                ..Default::default()
+            },
+            reg,
+        );
+        Driver::new(
+            cluster,
+            DriverConfig {
+                workers,
+                ..Default::default()
+            },
+        )
+    }
+
+    fn seed(d: &Driver, rows: usize) -> Batch {
+        let b = gen::sensor_table(rows, 99);
+        d.write_table(
+            "sensors",
+            &b,
+            Layout::Col,
+            &PartitionSpec::with_target(8 * 1024),
+            None,
+        )
+        .unwrap();
+        b
+    }
+
+    #[test]
+    fn write_then_scan_roundtrip() {
+        let d = driver(4, 4);
+        let b = seed(&d, 2000);
+        let r = d.execute(&Query::scan("sensors"), None).unwrap();
+        let rows = r.rows.unwrap();
+        assert_eq!(rows.nrows(), 2000);
+        assert_eq!(rows.schema, b.schema);
+        assert!(r.stats.objects > 1, "should span multiple objects");
+        assert!(r.stats.pushdown);
+        assert!(r.stats.sim_seconds > 0.0);
+    }
+
+    #[test]
+    fn write_rejects_duplicate_dataset() {
+        let d = driver(2, 2);
+        seed(&d, 100);
+        let b = gen::sensor_table(50, 1);
+        assert!(matches!(
+            d.write_table("sensors", &b, Layout::Col, &PartitionSpec::default(), None),
+            Err(Error::AlreadyExists(_))
+        ));
+    }
+
+    #[test]
+    fn filtered_scan_matches_direct() {
+        let d = driver(4, 4);
+        let b = seed(&d, 3000);
+        let pred = Predicate::cmp("val", CmpOp::Gt, 60.0);
+        let r = d
+            .execute(&Query::scan("sensors").filter(pred.clone()).select(&["ts"]), None)
+            .unwrap();
+        let got = r.rows.unwrap();
+        let mask = pred.eval(&b).unwrap();
+        assert_eq!(got.nrows(), mask.iter().filter(|&&m| m).count());
+        assert_eq!(got.ncols(), 1);
+    }
+
+    #[test]
+    fn aggregate_matches_direct_and_modes_agree() {
+        let d = driver(4, 4);
+        let b = seed(&d, 2500);
+        let q = Query::scan("sensors")
+            .filter(Predicate::cmp("flag", CmpOp::Eq, 0.0))
+            .aggregate(AggFunc::Mean, "val")
+            .aggregate(AggFunc::Count, "val")
+            .aggregate(AggFunc::Var, "val");
+        let rp = d.execute(&q, Some(ExecMode::Pushdown)).unwrap();
+        let rc = d.execute(&q, Some(ExecMode::ClientSide)).unwrap();
+        for (a, b) in rp.aggregates.iter().zip(&rc.aggregates) {
+            assert!((a - b).abs() < 1e-6 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+        // Direct.
+        let mask = q.predicate.eval(&b).unwrap();
+        let mut st = AggState::new(false);
+        st.update_column(b.col("val").unwrap(), &mask).unwrap();
+        assert!((rp.aggregates[0] - st.finalize(AggFunc::Mean).unwrap()).abs() < 1e-6);
+        assert_eq!(rp.aggregates[1], st.count as f64);
+        // Pushdown moves much less data for aggregates.
+        assert!(rp.stats.bytes_moved * 5 < rc.stats.bytes_moved);
+    }
+
+    #[test]
+    fn median_is_correct_despite_holistic() {
+        let d = driver(4, 4);
+        let b = seed(&d, 1001);
+        let q = Query::scan("sensors").aggregate(AggFunc::Median, "val");
+        let r = d.execute(&q, None).unwrap();
+        // Direct median.
+        let mut vals: Vec<f64> = match b.col("val").unwrap() {
+            crate::dataset::table::Column::F32(v) => {
+                v.iter().map(|&x| x as f64).collect()
+            }
+            _ => unreachable!(),
+        };
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let want = vals[vals.len() / 2];
+        assert!((r.aggregates[0] - want).abs() < 1e-9);
+        // Holistic: bytes scale with rows.
+        assert!(r.stats.bytes_moved > 1001 * 8);
+    }
+
+    #[test]
+    fn group_by_matches_direct() {
+        let d = driver(4, 4);
+        let b = seed(&d, 2000);
+        let q = Query::scan("sensors")
+            .group("sensor")
+            .aggregate(AggFunc::Count, "val");
+        let r = d.execute(&q, None).unwrap();
+        let groups = r.groups.unwrap();
+        let total: f64 = groups.iter().map(|(_, v)| v).sum();
+        assert_eq!(total, 2000.0);
+        // Direct group count for one key.
+        let keys = match b.col("sensor").unwrap() {
+            crate::dataset::table::Column::I64(v) => v.clone(),
+            _ => unreachable!(),
+        };
+        let k0 = groups[0].0;
+        let want = keys.iter().filter(|&&k| k == k0).count() as f64;
+        assert_eq!(groups[0].1, want);
+    }
+
+    #[test]
+    fn missing_dataset_errors() {
+        let d = driver(2, 2);
+        assert!(d.execute(&Query::scan("ghost"), None).is_err());
+    }
+
+    #[test]
+    fn approx_quantile_matches_exact_within_bound() {
+        let d = driver(4, 4);
+        seed(&d, 20_000);
+        let pred = Predicate::cmp("flag", CmpOp::Eq, 0.0);
+        let exact = d
+            .execute(
+                &Query::scan("sensors")
+                    .filter(pred.clone())
+                    .aggregate(AggFunc::Median, "val"),
+                None,
+            )
+            .unwrap();
+        let (approx, bound, stats) = d.approx_quantile("sensors", "val", 0.5, &pred).unwrap();
+        assert!(
+            (approx - exact.aggregates[0]).abs() <= 2.0 * bound,
+            "approx {approx} exact {} bound {bound}",
+            exact.aggregates[0]
+        );
+        // The approximation is decomposable: per-object partials are
+        // constant-size (bounded by the bin count), unlike the exact
+        // path whose bytes grow with matching rows.
+        assert!(
+            stats.bytes_moved < exact.stats.bytes_moved,
+            "sketch {} vs exact {}",
+            stats.bytes_moved,
+            exact.stats.bytes_moved
+        );
+        let per_object = stats.bytes_moved as usize / stats.objects.max(1);
+        assert!(
+            per_object <= crate::skyhook::sketch::BINS * 10 + 64,
+            "sketch partial not constant-size: {per_object} B/object"
+        );
+        // Errors propagate.
+        assert!(d
+            .approx_quantile("sensors", "nope", 0.5, &Predicate::True)
+            .is_err());
+        assert!(d
+            .approx_quantile("ghost", "val", 0.5, &Predicate::True)
+            .is_err());
+    }
+
+    #[test]
+    fn build_index_counts_rows() {
+        let d = driver(3, 2);
+        seed(&d, 1200);
+        let total = d.build_index("sensors", "sensor").unwrap();
+        assert_eq!(total, 1200);
+        assert!(d.build_index("sensors", "val").is_err(), "f32 not indexable");
+    }
+
+    #[test]
+    fn transform_layout_roundtrip() {
+        let d = driver(3, 2);
+        let b = seed(&d, 800);
+        let rep = d.transform_layout("sensors", Layout::Row).unwrap();
+        assert!(rep.objects > 0);
+        // Query still works and agrees after transform.
+        let r = d.execute(&Query::scan("sensors"), None).unwrap();
+        assert_eq!(r.rows.unwrap().nrows(), b.nrows());
+        // No-op transform.
+        let rep2 = d.transform_layout("sensors", Layout::Row).unwrap();
+        assert_eq!(rep2.objects, 0);
+    }
+
+    #[test]
+    fn locality_assignment_places_groups_together() {
+        let d = driver(4, 2);
+        let b = gen::sensor_table(2000, 5);
+        d.write_table(
+            "loc",
+            &b,
+            Layout::Col,
+            &PartitionSpec::with_target(4 * 1024),
+            Some(&|i, _| format!("bucket{}", i % 2)),
+        )
+        .unwrap();
+        let (meta, _) = metadata::load_meta(d.cluster(), 0.0, "loc").unwrap();
+        let names = meta.object_names("loc");
+        // All bucket0 objects share a placement, likewise bucket1.
+        let p0: Vec<_> = names
+            .iter()
+            .filter(|n| n.starts_with("bucket0#"))
+            .map(|n| d.cluster().placement(n))
+            .collect();
+        assert!(p0.len() > 1);
+        assert!(p0.windows(2).all(|w| w[0] == w[1]), "bucket0 not co-located");
+        // Query still reads everything.
+        let r = d.execute(&Query::scan("loc"), None).unwrap();
+        assert_eq!(r.rows.unwrap().nrows(), 2000);
+    }
+
+    #[test]
+    fn more_osds_reduce_sim_makespan() {
+        let rows = 20_000;
+        let mut sims = Vec::new();
+        for osds in [1, 4] {
+            let d = driver(osds, 4);
+            let b = gen::sensor_table(rows, 7);
+            d.write_table(
+                "ds",
+                &b,
+                Layout::Col,
+                &PartitionSpec::with_target(16 * 1024),
+                None,
+            )
+            .unwrap();
+            d.reset_time();
+            let r = d
+                .execute(&Query::scan("ds").aggregate(AggFunc::Sum, "val"), None)
+                .unwrap();
+            sims.push(r.stats.sim_seconds);
+        }
+        assert!(
+            sims[1] < sims[0] * 0.6,
+            "4 OSDs should beat 1: {sims:?}"
+        );
+    }
+}

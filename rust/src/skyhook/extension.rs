@@ -1,0 +1,623 @@
+//! The Skyhook-Extension: object-class handlers that process table
+//! objects *inside* the storage servers (§4.2) — remote select / project /
+//! filter / aggregate, group-by partials, and an omap-backed secondary
+//! index (the RocksDB-based "remote indexing system").
+//!
+//! When a PJRT engine is supplied (the AOT-compiled JAX/Pallas chunk
+//! kernel, see `runtime::`), the masked f32 aggregation inside
+//! `skyhook.agg` executes on it — the paper's storage-side compute
+//! offload running the very kernel the L1/L2 layers compiled.
+
+use super::query::{AggState, Aggregate, Predicate};
+use crate::dataset::layout::{decode_batch, encode_batch, Layout};
+use crate::dataset::table::Column;
+use crate::error::{Error, Result};
+use crate::store::objclass::{ClassRegistry, ClsBackend};
+use crate::util::bytes::{ByteReader, ByteWriter};
+use std::sync::Arc;
+
+/// Per-row CPU cost of predicate evaluation in the extension (seconds).
+const ROW_PRED_COST: f64 = 10e-9;
+/// Per-value CPU cost of aggregation in the extension (seconds).
+const VAL_AGG_COST: f64 = 4e-9;
+
+/// Storage-side compute engine for the masked filter+aggregate hot spot.
+/// Implemented by `runtime::PjrtEngine` (the AOT JAX/Pallas kernel); the
+/// extension falls back to the native Rust loop when absent.
+pub trait ChunkCompute: Send + Sync {
+    /// Masked moments of `values`: returns `[count, sum, sumsq, min, max]`
+    /// over elements where `mask` is true.
+    fn masked_moments(&self, values: &[f32], mask: &[bool]) -> Result<[f64; 5]>;
+}
+
+/// Encode the input of `skyhook.scan`: predicate + projection.
+pub fn encode_scan_arg(pred: &Predicate, projection: Option<&[String]>) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    pred.encode_into(&mut w);
+    match projection {
+        Some(cols) => {
+            w.u8(1);
+            w.u32(cols.len() as u32);
+            for c in cols {
+                w.str(c);
+            }
+        }
+        None => {
+            w.u8(0);
+        }
+    }
+    w.finish()
+}
+
+fn decode_scan_arg(input: &[u8]) -> Result<(Predicate, Option<Vec<String>>)> {
+    let mut r = ByteReader::new(input);
+    let pred = Predicate::decode_from(&mut r)?;
+    let projection = match r.u8()? {
+        0 => None,
+        1 => {
+            let n = r.u32()? as usize;
+            let mut cols = Vec::with_capacity(n);
+            for _ in 0..n {
+                cols.push(r.str()?.to_string());
+            }
+            Some(cols)
+        }
+        o => return Err(Error::Corrupt(format!("bad projection tag {o}"))),
+    };
+    Ok((pred, projection))
+}
+
+/// Encode the input of `skyhook.agg`: predicate + aggregate list +
+/// whether raw values must be returned (holistic finalization).
+pub fn encode_agg_arg(pred: &Predicate, aggs: &[Aggregate], keep_values: bool) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    pred.encode_into(&mut w);
+    w.u8(keep_values as u8);
+    w.u32(aggs.len() as u32);
+    for a in aggs {
+        w.str(&a.col);
+        w.u8(a.func.code());
+    }
+    w.finish()
+}
+
+fn decode_agg_arg(input: &[u8]) -> Result<(Predicate, bool, Vec<String>)> {
+    let mut r = ByteReader::new(input);
+    let pred = Predicate::decode_from(&mut r)?;
+    let keep_values = r.u8()? != 0;
+    let n = r.u32()? as usize;
+    let mut cols = Vec::with_capacity(n);
+    for _ in 0..n {
+        cols.push(r.str()?.to_string());
+        let _func = r.u8()?; // per-agg func is only needed at finalize time
+    }
+    Ok((pred, keep_values, cols))
+}
+
+/// Encode the input of `skyhook.group_agg`.
+pub fn encode_group_arg(pred: &Predicate, group_col: &str, agg_col: &str) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    pred.encode_into(&mut w);
+    w.str(group_col);
+    w.str(agg_col);
+    w.finish()
+}
+
+/// Decode the output of `skyhook.agg`: one state per requested aggregate.
+pub fn decode_agg_out(out: &[u8]) -> Result<Vec<AggState>> {
+    let mut r = ByteReader::new(out);
+    let n = r.u32()? as usize;
+    let mut states = Vec::with_capacity(n);
+    for _ in 0..n {
+        states.push(AggState::decode_from(&mut r)?);
+    }
+    Ok(states)
+}
+
+/// Decode the output of `skyhook.group_agg`: (group key, state) pairs.
+pub fn decode_group_out(out: &[u8]) -> Result<Vec<(i64, AggState)>> {
+    let mut r = ByteReader::new(out);
+    let n = r.u32()? as usize;
+    let mut groups = Vec::with_capacity(n);
+    for _ in 0..n {
+        let key = r.i64()?;
+        groups.push((key, AggState::decode_from(&mut r)?));
+    }
+    Ok(groups)
+}
+
+/// Order-preserving big-endian encoding of i64 (for omap index keys).
+pub fn index_key_i64(x: i64) -> [u8; 8] {
+    ((x as u64) ^ (1u64 << 63)).to_be_bytes()
+}
+
+/// Largest header prefix we read before falling back to a full read.
+const HEADER_PREFIX: usize = 64 * 1024;
+
+/// Read only the columns a handler needs.
+///
+/// For columnar objects this issues *ranged device reads* via the header
+/// directory — the physical advantage of the Col layout (§5 physical
+/// design): untouched columns never leave the device, and bytes-read
+/// metering (hence simulated device time) reflects that. Row objects are
+/// read whole. `needed = None` reads everything.
+///
+/// Returns a batch containing exactly the needed columns (schema order).
+fn read_needed(
+    b: &mut dyn ClsBackend,
+    needed: Option<&[String]>,
+) -> Result<crate::dataset::table::Batch> {
+    use crate::dataset::layout::{decode_one_col, parse_header};
+    use crate::dataset::table::Batch;
+
+    let Some(needed) = needed else {
+        let raw = b.read()?;
+        return Ok(decode_batch(&raw)?.0);
+    };
+    let size = b.size()?;
+    let prefix = b.read_range(0, size.min(HEADER_PREFIX))?;
+    let header = match parse_header(&prefix) {
+        Ok(h) if h.layout == Layout::Col => h,
+        // Row layout, oversized header, or parse trouble: full read.
+        _ => {
+            let raw = b.read()?;
+            let (batch, _) = decode_batch(&raw)?;
+            let refs: Vec<&str> = needed.iter().map(String::as_str).collect();
+            return batch.project(&refs);
+        }
+    };
+    // Validate names early.
+    for n in needed {
+        header.schema.col_index(n)?;
+    }
+    let mut schema_cols = Vec::new();
+    let mut columns = Vec::new();
+    for (ci, col_schema) in header.schema.columns.iter().enumerate() {
+        if !needed.contains(&col_schema.name) {
+            continue;
+        }
+        let (off, len, crc) = header.directory[ci];
+        let start = header.payload_start + off as usize;
+        let bytes = if start + len as usize <= prefix.len() {
+            prefix[start..start + len as usize].to_vec()
+        } else {
+            b.read_range(start, len as usize)?
+        };
+        if crc32fast::hash(&bytes) != crc {
+            return Err(Error::Corrupt(format!(
+                "column {:?} checksum mismatch",
+                col_schema.name
+            )));
+        }
+        let mut col = crate::dataset::table::Column::empty(col_schema.dtype);
+        decode_one_col(&mut col, header.nrows, &bytes)?;
+        schema_cols.push((col_schema.name.as_str(), col_schema.dtype));
+        columns.push(col);
+    }
+    Batch::new(
+        crate::dataset::TableSchema::new(&schema_cols),
+        columns,
+    )
+}
+
+/// Union of column names used by a predicate and an extra set.
+fn needed_union(pred: &Predicate, extra: &[String]) -> Vec<String> {
+    let mut v = pred.columns();
+    v.extend(extra.iter().cloned());
+    v.sort();
+    v.dedup();
+    v
+}
+
+/// Register the `skyhook` class with an optional PJRT compute engine.
+pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn ChunkCompute>>) {
+    // skyhook.scan — filter+project on the server, return a Col batch.
+    r.register("skyhook", "scan", |b, input| {
+        let (pred, projection) = decode_scan_arg(input)?;
+        // Read only predicate + projection columns (ranged reads on Col).
+        let batch = match &projection {
+            Some(cols) => read_needed(b, Some(&needed_union(&pred, cols)))?,
+            None => read_needed(b, None)?,
+        };
+        b.charge_cpu(batch.nrows() as f64 * ROW_PRED_COST);
+        let mask = pred.eval(&batch)?;
+        let filtered = batch.filter(&mask)?;
+        let result = match projection {
+            Some(cols) => {
+                let refs: Vec<&str> = cols.iter().map(String::as_str).collect();
+                filtered.project(&refs)?
+            }
+            None => filtered,
+        };
+        Ok(encode_batch(&result, Layout::Col))
+    });
+
+    // skyhook.agg — filter+aggregate on the server, return partials.
+    let eng = engine.clone();
+    r.register("skyhook", "agg", move |b, input| {
+        let (pred, keep_values, cols) = decode_agg_arg(input)?;
+        let batch = read_needed(b, Some(&needed_union(&pred, &cols)))?;
+        b.charge_cpu(batch.nrows() as f64 * ROW_PRED_COST);
+        let mask = pred.eval(&batch)?;
+        let mut w = ByteWriter::new();
+        w.u32(cols.len() as u32);
+        for col_name in &cols {
+            let col = batch.col(col_name)?;
+            let mut st = AggState::new(keep_values);
+            // Hot path: masked moments of an f32 column → PJRT kernel.
+            match (col, &eng, keep_values) {
+                (Column::F32(v), Some(engine), false) => {
+                    let m = engine.masked_moments(v, &mask)?;
+                    st.count = m[0] as u64;
+                    st.sum = m[1];
+                    st.sumsq = m[2];
+                    if st.count > 0 {
+                        st.min = m[3];
+                        st.max = m[4];
+                    }
+                }
+                _ => {
+                    b.charge_cpu(batch.nrows() as f64 * VAL_AGG_COST);
+                    st.update_column(col, &mask)?;
+                }
+            }
+            st.encode_into(&mut w);
+        }
+        Ok(w.finish())
+    });
+
+    // skyhook.group_agg — grouped partials keyed by an i64 column.
+    r.register("skyhook", "group_agg", |b, input| {
+        let mut r = ByteReader::new(input);
+        let pred = Predicate::decode_from(&mut r)?;
+        let group_col = r.str()?.to_string();
+        let agg_col = r.str()?.to_string();
+        let batch = read_needed(
+            b,
+            Some(&needed_union(&pred, &[group_col.clone(), agg_col.clone()])),
+        )?;
+        b.charge_cpu(batch.nrows() as f64 * (ROW_PRED_COST + VAL_AGG_COST));
+        let mask = pred.eval(&batch)?;
+        let keys = match batch.col(&group_col)? {
+            Column::I64(v) => v,
+            _ => return Err(Error::Query("group_by needs an i64 column".into())),
+        };
+        let vals = batch.col(&agg_col)?;
+        let mut groups: std::collections::BTreeMap<i64, AggState> = Default::default();
+        for (i, &keep) in mask.iter().enumerate() {
+            if keep {
+                groups
+                    .entry(keys[i])
+                    .or_insert_with(|| AggState::new(false))
+                    .update(vals.get_f64(i)?);
+            }
+        }
+        let mut w = ByteWriter::new();
+        w.u32(groups.len() as u32);
+        for (k, st) in groups {
+            w.i64(k);
+            st.encode_into(&mut w);
+        }
+        Ok(w.finish())
+    });
+
+    // skyhook.build_index — omap index over an i64 column: key =
+    // `i/<col>/<be-value>/<row>` → row id. The paper's RocksDB indexing.
+    r.register("skyhook", "build_index", |b, input| {
+        let mut r = ByteReader::new(input);
+        let col_name = r.str()?.to_string();
+        let raw = b.read()?;
+        let (batch, _) = decode_batch(&raw)?;
+        let keys = match batch.col(&col_name)? {
+            Column::I64(v) => v,
+            _ => return Err(Error::Query("index needs an i64 column".into())),
+        };
+        b.charge_cpu(keys.len() as f64 * 50e-9); // kv insert cost
+        for (row, &k) in keys.iter().enumerate() {
+            let mut key = Vec::with_capacity(col_name.len() + 16);
+            key.extend_from_slice(b"i/");
+            key.extend_from_slice(col_name.as_bytes());
+            key.push(b'/');
+            key.extend_from_slice(&index_key_i64(k));
+            key.extend_from_slice(&(row as u32).to_be_bytes());
+            b.omap_set(&key, &(row as u32).to_le_bytes());
+        }
+        b.setxattr(&format!("index.{col_name}"), b"1");
+        Ok((keys.len() as u64).to_le_bytes().to_vec())
+    });
+
+    // skyhook.index_lookup — equality lookup: rows where col == value.
+    r.register("skyhook", "index_lookup", |b, input| {
+        let mut r = ByteReader::new(input);
+        let col_name = r.str()?.to_string();
+        let value = r.i64()?;
+        if b.getxattr(&format!("index.{col_name}")).is_none() {
+            return Err(Error::Query(format!("no index on {col_name:?}")));
+        }
+        let mut prefix = Vec::with_capacity(col_name.len() + 12);
+        prefix.extend_from_slice(b"i/");
+        prefix.extend_from_slice(col_name.as_bytes());
+        prefix.push(b'/');
+        prefix.extend_from_slice(&index_key_i64(value));
+        let hits = b.omap_scan_prefix(&prefix);
+        let mut w = ByteWriter::new();
+        w.u32(hits.len() as u32);
+        for (_, v) in hits {
+            w.u32(u32::from_le_bytes(v.as_slice().try_into().map_err(|_| {
+                Error::Corrupt("bad index entry".into())
+            })?));
+        }
+        Ok(w.finish())
+    });
+
+    // skyhook.quantile_sketch — the §3.2 de-composable approximation:
+    // build a constant-size mergeable quantile sketch over the filtered
+    // column, instead of shipping raw values for holistic functions.
+    // Input: predicate + column name. Output: encoded QuantileSketch.
+    r.register("skyhook", "quantile_sketch", |b, input| {
+        let mut r = ByteReader::new(input);
+        let pred = Predicate::decode_from(&mut r)?;
+        let col_name = r.str()?.to_string();
+        let batch = read_needed(b, Some(&needed_union(&pred, &[col_name.clone()])))?;
+        b.charge_cpu(batch.nrows() as f64 * (ROW_PRED_COST + VAL_AGG_COST));
+        let mask = pred.eval(&batch)?;
+        let col = batch.col(&col_name)?;
+        let mut values = Vec::with_capacity(mask.iter().filter(|&&m| m).count());
+        for (i, &m) in mask.iter().enumerate() {
+            if m {
+                values.push(col.get_f64(i)?);
+            }
+        }
+        let sketch = super::sketch::QuantileSketch::build(&values);
+        let mut w = ByteWriter::new();
+        sketch.encode_into(&mut w);
+        Ok(w.finish())
+    });
+
+    // skyhook.transform — rewrite the object in the other layout
+    // (physical design management, §5 bullet 2).
+    r.register("skyhook", "transform", |b, input| {
+        let target = match input.first() {
+            Some(0) => Layout::Row,
+            Some(1) => Layout::Col,
+            _ => return Err(Error::Invalid("transform wants layout byte".into())),
+        };
+        let raw = b.read()?;
+        let (batch, current) = decode_batch(&raw)?;
+        if current == target {
+            return Ok(vec![current as u8]);
+        }
+        b.charge_cpu(batch.nrows() as f64 * batch.ncols() as f64 * 3e-9);
+        b.write(&encode_batch(&batch, target))?;
+        Ok(vec![target as u8])
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::table::gen;
+    use crate::skyhook::query::{AggFunc, CmpOp};
+    use crate::store::objclass::MemBackend;
+
+    fn registry() -> ClassRegistry {
+        let mut r = ClassRegistry::with_builtins();
+        register_skyhook_class(&mut r, None);
+        r
+    }
+
+    fn table_object() -> Vec<u8> {
+        encode_batch(&gen::sensor_table(200, 7), Layout::Col)
+    }
+
+    #[test]
+    fn scan_filters_and_projects() {
+        let r = registry();
+        let mut b = MemBackend::new(&table_object());
+        let pred = Predicate::cmp("flag", CmpOp::Eq, 1.0);
+        let out = r.get("skyhook", "scan").unwrap()(
+            &mut b,
+            &encode_scan_arg(&pred, Some(&["val".to_string(), "ts".to_string()])),
+        )
+        .unwrap();
+        let (batch, layout) = decode_batch(&out).unwrap();
+        assert_eq!(layout, Layout::Col);
+        assert_eq!(batch.ncols(), 2);
+        assert!(batch.nrows() > 0 && batch.nrows() < 200);
+        assert!(b.cpu > 0.0);
+
+        // Verify against direct evaluation.
+        let (orig, _) = decode_batch(&table_object()).unwrap();
+        let mask = pred.eval(&orig).unwrap();
+        let want = mask.iter().filter(|&&m| m).count();
+        assert_eq!(batch.nrows(), want);
+    }
+
+    #[test]
+    fn scan_without_projection_keeps_all_columns() {
+        let r = registry();
+        let mut b = MemBackend::new(&table_object());
+        let out =
+            r.get("skyhook", "scan").unwrap()(&mut b, &encode_scan_arg(&Predicate::True, None))
+                .unwrap();
+        let (batch, _) = decode_batch(&out).unwrap();
+        assert_eq!(batch.ncols(), 4);
+        assert_eq!(batch.nrows(), 200);
+    }
+
+    #[test]
+    fn agg_partials_match_direct() {
+        let r = registry();
+        let mut b = MemBackend::new(&table_object());
+        let pred = Predicate::cmp("val", CmpOp::Gt, 50.0);
+        let aggs = vec![
+            Aggregate::new(AggFunc::Count, "val"),
+            Aggregate::new(AggFunc::Sum, "val"),
+        ];
+        let out = r.get("skyhook", "agg").unwrap()(
+            &mut b,
+            &encode_agg_arg(&pred, &aggs, false),
+        )
+        .unwrap();
+        let states = decode_agg_out(&out).unwrap();
+        assert_eq!(states.len(), 2);
+
+        let (orig, _) = decode_batch(&table_object()).unwrap();
+        let mask = pred.eval(&orig).unwrap();
+        let mut direct = AggState::new(false);
+        direct
+            .update_column(orig.col("val").unwrap(), &mask)
+            .unwrap();
+        assert_eq!(states[0].count, direct.count);
+        assert!((states[1].sum - direct.sum).abs() < 1e-6);
+        // Partials are constant-size (no raw values).
+        assert!(states[0].values.is_none());
+        assert!(out.len() < 200);
+    }
+
+    #[test]
+    fn agg_with_values_for_median() {
+        let r = registry();
+        let mut b = MemBackend::new(&table_object());
+        let aggs = vec![Aggregate::new(AggFunc::Median, "val")];
+        let out = r.get("skyhook", "agg").unwrap()(
+            &mut b,
+            &encode_agg_arg(&Predicate::True, &aggs, true),
+        )
+        .unwrap();
+        let states = decode_agg_out(&out).unwrap();
+        assert_eq!(states[0].values.as_ref().unwrap().len(), 200);
+        states[0].finalize(AggFunc::Median).unwrap();
+    }
+
+    #[test]
+    fn group_agg_partitions_by_key() {
+        let r = registry();
+        let mut b = MemBackend::new(&table_object());
+        let out = r.get("skyhook", "group_agg").unwrap()(
+            &mut b,
+            &encode_group_arg(&Predicate::True, "sensor", "val"),
+        )
+        .unwrap();
+        let groups = decode_group_out(&out).unwrap();
+        assert!(!groups.is_empty());
+        let total: u64 = groups.iter().map(|(_, s)| s.count).sum();
+        assert_eq!(total, 200);
+        // Keys sorted and unique.
+        for w in groups.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+    }
+
+    #[test]
+    fn group_agg_rejects_non_i64_key() {
+        let r = registry();
+        let mut b = MemBackend::new(&table_object());
+        assert!(r.get("skyhook", "group_agg").unwrap()(
+            &mut b,
+            &encode_group_arg(&Predicate::True, "val", "val"),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn index_build_and_lookup() {
+        let r = registry();
+        let mut b = MemBackend::new(&table_object());
+        let mut w = ByteWriter::new();
+        w.str("sensor");
+        let out = r.get("skyhook", "build_index").unwrap()(&mut b, &w.finish()).unwrap();
+        assert_eq!(u64::from_le_bytes(out.try_into().unwrap()), 200);
+
+        // Look up rows where sensor == most common value.
+        let (orig, _) = decode_batch(&table_object()).unwrap();
+        let sensors = match orig.col("sensor").unwrap() {
+            Column::I64(v) => v.clone(),
+            _ => unreachable!(),
+        };
+        let target = sensors[0];
+        let want: Vec<u32> = sensors
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s == target)
+            .map(|(i, _)| i as u32)
+            .collect();
+
+        let mut w = ByteWriter::new();
+        w.str("sensor");
+        w.i64(target);
+        let out = r.get("skyhook", "index_lookup").unwrap()(&mut b, &w.finish()).unwrap();
+        let mut rr = ByteReader::new(&out);
+        let n = rr.u32().unwrap() as usize;
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            rows.push(rr.u32().unwrap());
+        }
+        rows.sort_unstable();
+        assert_eq!(rows, want);
+    }
+
+    #[test]
+    fn index_lookup_without_index_fails() {
+        let r = registry();
+        let mut b = MemBackend::new(&table_object());
+        let mut w = ByteWriter::new();
+        w.str("sensor");
+        w.i64(1);
+        assert!(r.get("skyhook", "index_lookup").unwrap()(&mut b, &w.finish()).is_err());
+    }
+
+    #[test]
+    fn index_key_order_preserving() {
+        let mut keys: Vec<i64> = vec![-5, 3, 0, i64::MIN, i64::MAX, -1, 7];
+        keys.sort_unstable();
+        let encoded: Vec<[u8; 8]> = keys.iter().map(|&k| index_key_i64(k)).collect();
+        let mut sorted = encoded.clone();
+        sorted.sort();
+        assert_eq!(encoded, sorted);
+    }
+
+    #[test]
+    fn transform_rewrites_layout() {
+        let r = registry();
+        let mut b = MemBackend::new(&table_object());
+        let out = r.get("skyhook", "transform").unwrap()(&mut b, &[0u8]).unwrap();
+        assert_eq!(out, vec![0u8]);
+        let (_, layout) = decode_batch(&b.data).unwrap();
+        assert_eq!(layout, Layout::Row);
+        // Idempotent no-op when already in target layout.
+        let before = b.data.clone();
+        r.get("skyhook", "transform").unwrap()(&mut b, &[0u8]).unwrap();
+        assert_eq!(b.data, before);
+    }
+
+    #[test]
+    fn pjrt_hook_is_used_when_present() {
+        struct FakeEngine(std::sync::atomic::AtomicU64);
+        impl ChunkCompute for FakeEngine {
+            fn masked_moments(&self, values: &[f32], mask: &[bool]) -> Result<[f64; 5]> {
+                self.0.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                let mut st = AggState::new(false);
+                for (i, &m) in mask.iter().enumerate() {
+                    if m {
+                        st.update(values[i] as f64);
+                    }
+                }
+                Ok([st.count as f64, st.sum, st.sumsq, st.min, st.max])
+            }
+        }
+        let engine = Arc::new(FakeEngine(Default::default()));
+        let mut r = ClassRegistry::with_builtins();
+        register_skyhook_class(&mut r, Some(engine.clone() as Arc<dyn ChunkCompute>));
+        let mut b = MemBackend::new(&table_object());
+        let aggs = vec![Aggregate::new(AggFunc::Mean, "val")];
+        let out = r.get("skyhook", "agg").unwrap()(
+            &mut b,
+            &encode_agg_arg(&Predicate::True, &aggs, false),
+        )
+        .unwrap();
+        let states = decode_agg_out(&out).unwrap();
+        assert_eq!(states[0].count, 200);
+        assert_eq!(engine.0.load(std::sync::atomic::Ordering::SeqCst), 1);
+    }
+}

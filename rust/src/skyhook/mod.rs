@@ -1,0 +1,23 @@
+//! The SkyhookDM-like query layer (§4.2): driver/worker scheduling over
+//! the object store, with storage-side extensions for pushdown.
+//!
+//! - [`query`] — predicates, projections, aggregates + partial algebra
+//! - [`plan`] — decomposability analysis and pushdown planning
+//! - [`extension`] — the Skyhook-Extension object class (server-side)
+//! - [`worker`] — per-sub-query execution (pushdown or client-side)
+//! - [`driver`] — scheduling, result aggregation, write path, physical
+//!   design transforms
+
+pub mod driver;
+pub mod extension;
+pub mod parse;
+pub mod plan;
+pub mod query;
+pub mod sketch;
+pub mod worker;
+
+pub use driver::{Driver, QueryResult, QueryStats, WriteReport};
+pub use extension::{register_skyhook_class, ChunkCompute};
+pub use plan::{plan, ExecMode, QueryPlan, SubQuery};
+pub use query::{AggFunc, AggState, Aggregate, CmpOp, Predicate, Query};
+pub use sketch::QuantileSketch;

@@ -1,0 +1,264 @@
+//! A small text syntax for queries (the CLI front-end):
+//!
+//! - predicates: `val > 50`, `flag == 1 && val <= 3.5`, `!(a < 2) || b != 0`
+//! - aggregates: `mean:val`, `count:*` (any column), `median:val`
+//!
+//! Grammar (precedence low→high): `||`, `&&`, `!`, comparison, parens.
+
+use super::query::{AggFunc, Aggregate, CmpOp, Predicate};
+use crate::error::{Error, Result};
+
+/// Parse a predicate expression.
+pub fn parse_predicate(s: &str) -> Result<Predicate> {
+    let mut p = Parser::new(s);
+    let pred = p.or_expr()?;
+    p.skip_ws();
+    if !p.done() {
+        return Err(Error::Query(format!(
+            "trailing input at {}: {:?}",
+            p.pos,
+            &p.src[p.pos..]
+        )));
+    }
+    Ok(pred)
+}
+
+/// Parse an aggregate spec `func:column` (e.g. `mean:val`).
+pub fn parse_aggregate(s: &str) -> Result<Aggregate> {
+    let (f, c) = s
+        .split_once(':')
+        .ok_or_else(|| Error::Query(format!("aggregate must be func:col, got {s:?}")))?;
+    let func = match f.trim() {
+        "count" => AggFunc::Count,
+        "sum" => AggFunc::Sum,
+        "min" => AggFunc::Min,
+        "max" => AggFunc::Max,
+        "mean" | "avg" => AggFunc::Mean,
+        "var" => AggFunc::Var,
+        "median" => AggFunc::Median,
+        other => return Err(Error::Query(format!("unknown aggregate {other:?}"))),
+    };
+    let col = c.trim();
+    if col.is_empty() {
+        return Err(Error::Query("empty aggregate column".into()));
+    }
+    Ok(Aggregate::new(func, col))
+}
+
+struct Parser<'a> {
+    src: &'a str,
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(src: &'a str) -> Self {
+        Self { src, pos: 0 }
+    }
+
+    fn done(&self) -> bool {
+        self.pos >= self.src.len()
+    }
+
+    fn rest(&self) -> &'a str {
+        &self.src[self.pos..]
+    }
+
+    fn skip_ws(&mut self) {
+        while self.rest().starts_with(|c: char| c.is_whitespace()) {
+            self.pos += 1;
+        }
+    }
+
+    fn eat(&mut self, tok: &str) -> bool {
+        self.skip_ws();
+        if self.rest().starts_with(tok) {
+            self.pos += tok.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn or_expr(&mut self) -> Result<Predicate> {
+        let mut left = self.and_expr()?;
+        while self.eat("||") {
+            let right = self.and_expr()?;
+            left = left.or(right);
+        }
+        Ok(left)
+    }
+
+    fn and_expr(&mut self) -> Result<Predicate> {
+        let mut left = self.unary()?;
+        while self.eat("&&") {
+            let right = self.unary()?;
+            left = left.and(right);
+        }
+        Ok(left)
+    }
+
+    fn unary(&mut self) -> Result<Predicate> {
+        if self.eat("!") {
+            return Ok(self.unary()?.not());
+        }
+        if self.eat("(") {
+            let inner = self.or_expr()?;
+            if !self.eat(")") {
+                return Err(Error::Query(format!("expected ) at {}", self.pos)));
+            }
+            return Ok(inner);
+        }
+        self.comparison()
+    }
+
+    fn comparison(&mut self) -> Result<Predicate> {
+        self.skip_ws();
+        if self.eat("true") {
+            return Ok(Predicate::True);
+        }
+        let col = self.identifier()?;
+        self.skip_ws();
+        let op = if self.eat("<=") {
+            CmpOp::Le
+        } else if self.eat(">=") {
+            CmpOp::Ge
+        } else if self.eat("==") {
+            CmpOp::Eq
+        } else if self.eat("!=") {
+            CmpOp::Ne
+        } else if self.eat("<") {
+            CmpOp::Lt
+        } else if self.eat(">") {
+            CmpOp::Gt
+        } else {
+            return Err(Error::Query(format!(
+                "expected comparison operator at {}: {:?}",
+                self.pos,
+                self.rest()
+            )));
+        };
+        let value = self.number()?;
+        Ok(Predicate::cmp(&col, op, value))
+    }
+
+    fn identifier(&mut self) -> Result<String> {
+        self.skip_ws();
+        let start = self.pos;
+        while self
+            .rest()
+            .starts_with(|c: char| c.is_ascii_alphanumeric() || c == '_')
+        {
+            self.pos += 1;
+        }
+        if self.pos == start {
+            return Err(Error::Query(format!(
+                "expected identifier at {}: {:?}",
+                start,
+                self.rest()
+            )));
+        }
+        Ok(self.src[start..self.pos].to_string())
+    }
+
+    fn number(&mut self) -> Result<f64> {
+        self.skip_ws();
+        let start = self.pos;
+        if self.rest().starts_with('-') {
+            self.pos += 1;
+        }
+        while self
+            .rest()
+            .starts_with(|c: char| c.is_ascii_digit() || c == '.' || c == 'e' || c == 'E' || c == '+' || c == '-')
+        {
+            // Stop '-'/'+' unless right after e/E.
+            let c = self.rest().chars().next().unwrap();
+            if (c == '-' || c == '+') && self.pos > start {
+                let prev = self.src.as_bytes()[self.pos - 1];
+                if prev != b'e' && prev != b'E' {
+                    break;
+                }
+            }
+            self.pos += 1;
+        }
+        self.src[start..self.pos]
+            .parse()
+            .map_err(|_| Error::Query(format!("bad number at {start}: {:?}", &self.src[start..self.pos])))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::table::gen;
+
+    #[test]
+    fn simple_comparisons() {
+        let p = parse_predicate("val > 50").unwrap();
+        assert_eq!(p, Predicate::cmp("val", CmpOp::Gt, 50.0));
+        let p = parse_predicate("x<=-2.5").unwrap();
+        assert_eq!(p, Predicate::cmp("x", CmpOp::Le, -2.5));
+        let p = parse_predicate("a == 1e3").unwrap();
+        assert_eq!(p, Predicate::cmp("a", CmpOp::Eq, 1000.0));
+        assert_eq!(parse_predicate("true").unwrap(), Predicate::True);
+    }
+
+    #[test]
+    fn boolean_structure_and_precedence() {
+        let p = parse_predicate("a > 1 && b < 2 || c == 3").unwrap();
+        // && binds tighter: (a&&b) || c
+        assert_eq!(
+            p,
+            Predicate::cmp("a", CmpOp::Gt, 1.0)
+                .and(Predicate::cmp("b", CmpOp::Lt, 2.0))
+                .or(Predicate::cmp("c", CmpOp::Eq, 3.0))
+        );
+        let p = parse_predicate("a > 1 && (b < 2 || c == 3)").unwrap();
+        assert_eq!(
+            p,
+            Predicate::cmp("a", CmpOp::Gt, 1.0).and(
+                Predicate::cmp("b", CmpOp::Lt, 2.0).or(Predicate::cmp("c", CmpOp::Eq, 3.0))
+            )
+        );
+    }
+
+    #[test]
+    fn negation() {
+        let p = parse_predicate("!(flag == 1)").unwrap();
+        assert_eq!(p, Predicate::cmp("flag", CmpOp::Eq, 1.0).not());
+        let p = parse_predicate("!a != 0").unwrap();
+        assert_eq!(p, Predicate::cmp("a", CmpOp::Ne, 0.0).not());
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(parse_predicate("").is_err());
+        assert!(parse_predicate("a >").is_err());
+        assert!(parse_predicate("a ~ 3").is_err());
+        assert!(parse_predicate("(a > 1").is_err());
+        assert!(parse_predicate("a > 1 extra").is_err());
+        assert!(parse_predicate("> 5").is_err());
+    }
+
+    #[test]
+    fn parsed_predicate_evaluates() {
+        let b = gen::sensor_table(100, 1);
+        let p = parse_predicate("flag == 1 || val > 80").unwrap();
+        let mask = p.eval(&b).unwrap();
+        let direct = Predicate::cmp("flag", CmpOp::Eq, 1.0)
+            .or(Predicate::cmp("val", CmpOp::Gt, 80.0))
+            .eval(&b)
+            .unwrap();
+        assert_eq!(mask, direct);
+    }
+
+    #[test]
+    fn aggregates() {
+        let a = parse_aggregate("mean:val").unwrap();
+        assert_eq!(a, Aggregate::new(AggFunc::Mean, "val"));
+        let a = parse_aggregate("median: val ").unwrap();
+        assert_eq!(a, Aggregate::new(AggFunc::Median, "val"));
+        assert!(parse_aggregate("mean").is_err());
+        assert!(parse_aggregate("pctl:val").is_err());
+        assert!(parse_aggregate("sum:").is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! Query planning: decomposability analysis and pushdown decisions
+//! (§3.2 "Composability of Access Operations").
+//!
+//! A query is decomposed into one sub-query per row-group object. The
+//! planner decides *where* each sub-operation runs:
+//!
+//! - **Pushdown**: filter/project/aggregate execute in the Skyhook-
+//!   Extension on the OSD; only results cross the network. Algebraic
+//!   aggregates return constant-size partials; holistic ones (median)
+//!   must ship the filtered raw values back.
+//! - **ClientSide**: the worker reads the whole object and computes
+//!   locally — the baseline the paper improves on.
+
+use super::query::Query;
+use crate::dataset::metadata::DatasetMeta;
+use crate::error::{Error, Result};
+
+/// Where a sub-query executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Object-class extension on the storage server.
+    Pushdown,
+    /// Worker reads the object and computes client-side.
+    ClientSide,
+}
+
+/// One per-object sub-query.
+#[derive(Clone, Debug)]
+pub struct SubQuery {
+    pub object: String,
+    pub mode: ExecMode,
+    /// For aggregate pushdown: must the extension return raw values
+    /// (holistic finalization at the driver)?
+    pub keep_values: bool,
+}
+
+/// A planned query.
+#[derive(Clone, Debug)]
+pub struct QueryPlan {
+    pub query: Query,
+    pub subqueries: Vec<SubQuery>,
+    /// True if every aggregate decomposes into constant-size partials.
+    pub decomposable: bool,
+}
+
+impl QueryPlan {
+    /// Human-readable planning summary (for the CLI's EXPLAIN).
+    pub fn explain(&self) -> String {
+        let mode = self
+            .subqueries
+            .first()
+            .map(|s| format!("{:?}", s.mode))
+            .unwrap_or_else(|| "-".into());
+        format!(
+            "{} over {} objects, mode={}, decomposable={}, keep_values={}",
+            if self.query.is_aggregate() {
+                "aggregate"
+            } else {
+                "row-scan"
+            },
+            self.subqueries.len(),
+            mode,
+            self.decomposable,
+            self.subqueries.first().map(|s| s.keep_values).unwrap_or(false),
+        )
+    }
+}
+
+/// Build a plan for `query` against a dataset's metadata.
+///
+/// `force_mode` overrides the planner's choice (used by the benches to
+/// compare pushdown against client-side execution on identical queries).
+pub fn plan(query: &Query, meta: &DatasetMeta, force_mode: Option<ExecMode>) -> Result<QueryPlan> {
+    let (names, schema) = match meta {
+        DatasetMeta::Table { schema, .. } => {
+            (meta.object_names(&query.dataset), schema.clone())
+        }
+        DatasetMeta::Array { .. } => {
+            return Err(Error::Query(format!(
+                "{} is an array dataset; table query expected",
+                query.dataset
+            )))
+        }
+    };
+    // Validate referenced columns exist up front (fail fast at the driver
+    // rather than on every OSD).
+    let all: Vec<String> = schema.columns.iter().map(|c| c.name.clone()).collect();
+    for col in query.needed_columns(&all) {
+        schema.col_index(&col)?;
+    }
+    if query.group_by.is_some() && query.aggregates.len() != 1 {
+        return Err(Error::Query(
+            "group_by requires exactly one aggregate".into(),
+        ));
+    }
+
+    let decomposable = query.is_decomposable();
+    // Default policy: always push down — filter/project reduction happens
+    // at the data. Holistic aggregates still push the *filter* down and
+    // ship values back (keep_values).
+    let mode = force_mode.unwrap_or(ExecMode::Pushdown);
+    let keep_values = query.is_aggregate() && !decomposable;
+    let subqueries = names
+        .into_iter()
+        .map(|object| SubQuery {
+            object,
+            mode,
+            keep_values,
+        })
+        .collect();
+    Ok(QueryPlan {
+        query: query.clone(),
+        subqueries,
+        decomposable,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::layout::Layout;
+    use crate::dataset::metadata::RowGroupMeta;
+    use crate::dataset::{DType, TableSchema};
+    use crate::skyhook::query::{AggFunc, CmpOp, Predicate};
+
+    fn meta(groups: usize) -> DatasetMeta {
+        DatasetMeta::Table {
+            schema: TableSchema::new(&[("ts", DType::I64), ("val", DType::F32)]),
+            layout: Layout::Col,
+            row_groups: (0..groups)
+                .map(|_| RowGroupMeta { rows: 10, bytes: 100 })
+                .collect(),
+            localities: vec![String::new(); groups],
+        }
+    }
+
+    #[test]
+    fn plan_one_subquery_per_object() {
+        let q = Query::scan("ds").filter(Predicate::cmp("val", CmpOp::Gt, 0.0));
+        let p = plan(&q, &meta(5), None).unwrap();
+        assert_eq!(p.subqueries.len(), 5);
+        assert!(p.subqueries.iter().all(|s| s.mode == ExecMode::Pushdown));
+        assert!(p.decomposable);
+        assert!(!p.subqueries[0].keep_values);
+        assert_eq!(p.subqueries[0].object, "ds/t/00000000");
+    }
+
+    #[test]
+    fn holistic_aggregate_keeps_values() {
+        let q = Query::scan("ds").aggregate(AggFunc::Median, "val");
+        let p = plan(&q, &meta(3), None).unwrap();
+        assert!(!p.decomposable);
+        assert!(p.subqueries.iter().all(|s| s.keep_values));
+        // Algebraic does not.
+        let q = Query::scan("ds").aggregate(AggFunc::Mean, "val");
+        let p = plan(&q, &meta(3), None).unwrap();
+        assert!(p.decomposable);
+        assert!(!p.subqueries[0].keep_values);
+    }
+
+    #[test]
+    fn force_mode_overrides() {
+        let q = Query::scan("ds");
+        let p = plan(&q, &meta(2), Some(ExecMode::ClientSide)).unwrap();
+        assert!(p.subqueries.iter().all(|s| s.mode == ExecMode::ClientSide));
+    }
+
+    #[test]
+    fn plan_validates_columns() {
+        let q = Query::scan("ds").filter(Predicate::cmp("nope", CmpOp::Gt, 0.0));
+        assert!(plan(&q, &meta(2), None).is_err());
+        let q = Query::scan("ds").select(&["missing"]);
+        assert!(plan(&q, &meta(2), None).is_err());
+        let q = Query::scan("ds").aggregate(AggFunc::Sum, "ghost");
+        assert!(plan(&q, &meta(2), None).is_err());
+    }
+
+    #[test]
+    fn plan_rejects_array_dataset() {
+        let m = DatasetMeta::Array {
+            space: crate::dataset::Dataspace::new(&[4]).unwrap(),
+            chunk: vec![2],
+        };
+        assert!(plan(&Query::scan("ds"), &m, None).is_err());
+    }
+
+    #[test]
+    fn group_by_needs_one_aggregate() {
+        let q = Query::scan("ds").group("ts");
+        assert!(plan(&q, &meta(1), None).is_err());
+        let q = Query::scan("ds")
+            .group("ts")
+            .aggregate(AggFunc::Mean, "val")
+            .aggregate(AggFunc::Sum, "val");
+        assert!(plan(&q, &meta(1), None).is_err());
+        let q = Query::scan("ds").group("ts").aggregate(AggFunc::Mean, "val");
+        assert!(plan(&q, &meta(1), None).is_ok());
+    }
+
+    #[test]
+    fn explain_mentions_shape() {
+        let q = Query::scan("ds").aggregate(AggFunc::Median, "val");
+        let p = plan(&q, &meta(4), None).unwrap();
+        let e = p.explain();
+        assert!(e.contains("aggregate"));
+        assert!(e.contains("4 objects"));
+        assert!(e.contains("decomposable=false"));
+    }
+}

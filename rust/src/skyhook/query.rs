@@ -1,0 +1,769 @@
+//! Query model: predicates, projections and aggregates over table
+//! datasets — the `select / project / filter / aggregate` surface the
+//! paper offloads to the storage system (§2 goal 2), plus the partial-
+//! aggregate algebra that decides composability (§3.2).
+
+use crate::dataset::table::{Batch, Column};
+use crate::error::{Error, Result};
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// Comparison operator for predicates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+impl CmpOp {
+    pub fn eval(self, a: f64, b: f64) -> bool {
+        match self {
+            CmpOp::Lt => a < b,
+            CmpOp::Le => a <= b,
+            CmpOp::Gt => a > b,
+            CmpOp::Ge => a >= b,
+            CmpOp::Eq => a == b,
+            CmpOp::Ne => a != b,
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            CmpOp::Lt => 0,
+            CmpOp::Le => 1,
+            CmpOp::Gt => 2,
+            CmpOp::Ge => 3,
+            CmpOp::Eq => 4,
+            CmpOp::Ne => 5,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => CmpOp::Lt,
+            1 => CmpOp::Le,
+            2 => CmpOp::Gt,
+            3 => CmpOp::Ge,
+            4 => CmpOp::Eq,
+            5 => CmpOp::Ne,
+            o => return Err(Error::Corrupt(format!("bad cmp op {o}"))),
+        })
+    }
+}
+
+/// Row predicate over numeric columns.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Predicate {
+    /// Matches every row.
+    True,
+    /// `col <op> value` (numeric columns; i64 compared as f64).
+    Cmp {
+        col: String,
+        op: CmpOp,
+        value: f64,
+    },
+    And(Box<Predicate>, Box<Predicate>),
+    Or(Box<Predicate>, Box<Predicate>),
+    Not(Box<Predicate>),
+}
+
+impl Predicate {
+    /// Convenience constructor.
+    pub fn cmp(col: &str, op: CmpOp, value: f64) -> Predicate {
+        Predicate::Cmp {
+            col: col.to_string(),
+            op,
+            value,
+        }
+    }
+
+    pub fn and(self, other: Predicate) -> Predicate {
+        Predicate::And(Box::new(self), Box::new(other))
+    }
+
+    pub fn or(self, other: Predicate) -> Predicate {
+        Predicate::Or(Box::new(self), Box::new(other))
+    }
+
+    pub fn not(self) -> Predicate {
+        Predicate::Not(Box::new(self))
+    }
+
+    /// Column names referenced by this predicate.
+    pub fn columns(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        self.collect_columns(&mut out);
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    fn collect_columns(&self, out: &mut Vec<String>) {
+        match self {
+            Predicate::True => {}
+            Predicate::Cmp { col, .. } => out.push(col.clone()),
+            Predicate::And(a, b) | Predicate::Or(a, b) => {
+                a.collect_columns(out);
+                b.collect_columns(out);
+            }
+            Predicate::Not(p) => p.collect_columns(out),
+        }
+    }
+
+    /// Evaluate to a row mask over a batch.
+    pub fn eval(&self, batch: &Batch) -> Result<Vec<bool>> {
+        let n = batch.nrows();
+        match self {
+            Predicate::True => Ok(vec![true; n]),
+            Predicate::Cmp { col, op, value } => {
+                let c = batch.col(col)?;
+                let mut mask = Vec::with_capacity(n);
+                match c {
+                    Column::F32(v) => {
+                        for &x in v {
+                            mask.push(op.eval(x as f64, *value));
+                        }
+                    }
+                    Column::F64(v) => {
+                        for &x in v {
+                            mask.push(op.eval(x, *value));
+                        }
+                    }
+                    Column::I64(v) => {
+                        for &x in v {
+                            mask.push(op.eval(x as f64, *value));
+                        }
+                    }
+                    Column::Str(_) => {
+                        return Err(Error::Query(format!(
+                            "predicate on string column {col:?}"
+                        )))
+                    }
+                }
+                Ok(mask)
+            }
+            Predicate::And(a, b) => {
+                let ma = a.eval(batch)?;
+                let mb = b.eval(batch)?;
+                Ok(ma.into_iter().zip(mb).map(|(x, y)| x && y).collect())
+            }
+            Predicate::Or(a, b) => {
+                let ma = a.eval(batch)?;
+                let mb = b.eval(batch)?;
+                Ok(ma.into_iter().zip(mb).map(|(x, y)| x || y).collect())
+            }
+            Predicate::Not(p) => Ok(p.eval(batch)?.into_iter().map(|x| !x).collect()),
+        }
+    }
+
+    /// Wire encoding (for objclass input).
+    pub fn encode_into(&self, w: &mut ByteWriter) {
+        match self {
+            Predicate::True => {
+                w.u8(0);
+            }
+            Predicate::Cmp { col, op, value } => {
+                w.u8(1);
+                w.str(col);
+                w.u8(op.code());
+                w.f64(*value);
+            }
+            Predicate::And(a, b) => {
+                w.u8(2);
+                a.encode_into(w);
+                b.encode_into(w);
+            }
+            Predicate::Or(a, b) => {
+                w.u8(3);
+                a.encode_into(w);
+                b.encode_into(w);
+            }
+            Predicate::Not(p) => {
+                w.u8(4);
+                p.encode_into(w);
+            }
+        }
+    }
+
+    pub fn decode_from(r: &mut ByteReader) -> Result<Predicate> {
+        Ok(match r.u8()? {
+            0 => Predicate::True,
+            1 => Predicate::Cmp {
+                col: r.str()?.to_string(),
+                op: CmpOp::from_code(r.u8()?)?,
+                value: r.f64()?,
+            },
+            2 => Predicate::And(
+                Box::new(Self::decode_from(r)?),
+                Box::new(Self::decode_from(r)?),
+            ),
+            3 => Predicate::Or(
+                Box::new(Self::decode_from(r)?),
+                Box::new(Self::decode_from(r)?),
+            ),
+            4 => Predicate::Not(Box::new(Self::decode_from(r)?)),
+            o => return Err(Error::Corrupt(format!("bad predicate tag {o}"))),
+        })
+    }
+}
+
+/// Aggregate functions. All but `Median` are *algebraic*: they have a
+/// constant-size partial state that merges associatively, so they
+/// decompose over objects (§3.2). `Median` is *holistic*: its exact
+/// computation needs the values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggFunc {
+    Count,
+    Sum,
+    Min,
+    Max,
+    Mean,
+    Var,
+    Median,
+}
+
+impl AggFunc {
+    /// Algebraic aggregates decompose into constant-size partials.
+    pub fn is_algebraic(self) -> bool {
+        !matches!(self, AggFunc::Median)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AggFunc::Count => "count",
+            AggFunc::Sum => "sum",
+            AggFunc::Min => "min",
+            AggFunc::Max => "max",
+            AggFunc::Mean => "mean",
+            AggFunc::Var => "var",
+            AggFunc::Median => "median",
+        }
+    }
+
+    pub(crate) fn code(self) -> u8 {
+        match self {
+            AggFunc::Count => 0,
+            AggFunc::Sum => 1,
+            AggFunc::Min => 2,
+            AggFunc::Max => 3,
+            AggFunc::Mean => 4,
+            AggFunc::Var => 5,
+            AggFunc::Median => 6,
+        }
+    }
+
+    #[allow(dead_code)]
+    pub(crate) fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => AggFunc::Count,
+            1 => AggFunc::Sum,
+            2 => AggFunc::Min,
+            3 => AggFunc::Max,
+            4 => AggFunc::Mean,
+            5 => AggFunc::Var,
+            6 => AggFunc::Median,
+            o => return Err(Error::Corrupt(format!("bad agg code {o}"))),
+        })
+    }
+}
+
+/// One aggregate column request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Aggregate {
+    pub func: AggFunc,
+    pub col: String,
+}
+
+impl Aggregate {
+    pub fn new(func: AggFunc, col: &str) -> Self {
+        Self {
+            func,
+            col: col.to_string(),
+        }
+    }
+}
+
+/// Mergeable partial aggregate state. Constant-size for algebraic
+/// functions; carries raw values only when a holistic function needs them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AggState {
+    pub count: u64,
+    pub sum: f64,
+    pub sumsq: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Raw values, kept only for holistic aggregates.
+    pub values: Option<Vec<f64>>,
+}
+
+impl AggState {
+    pub fn new(keep_values: bool) -> Self {
+        Self {
+            count: 0,
+            sum: 0.0,
+            sumsq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            values: keep_values.then(Vec::new),
+        }
+    }
+
+    /// Fold a column (under a mask) into the state. One type dispatch per
+    /// column, tight masked loop (native fallback of the pushdown
+    /// aggregate hot path — the PJRT kernel replaces it when loaded).
+    pub fn update_column(&mut self, col: &Column, mask: &[bool]) -> Result<()> {
+        if mask.len() != col.len() {
+            return Err(Error::Query(format!(
+                "mask len {} != column len {}",
+                mask.len(),
+                col.len()
+            )));
+        }
+        match col {
+            Column::F32(v) => {
+                for (x, &m) in v.iter().zip(mask) {
+                    if m {
+                        self.update(*x as f64);
+                    }
+                }
+            }
+            Column::F64(v) => {
+                for (x, &m) in v.iter().zip(mask) {
+                    if m {
+                        self.update(*x);
+                    }
+                }
+            }
+            Column::I64(v) => {
+                for (x, &m) in v.iter().zip(mask) {
+                    if m {
+                        self.update(*x as f64);
+                    }
+                }
+            }
+            Column::Str(_) => {
+                return Err(Error::Query("cannot aggregate a string column".into()))
+            }
+        }
+        Ok(())
+    }
+
+    #[inline]
+    pub fn update(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.sumsq += x * x;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+        if let Some(v) = &mut self.values {
+            v.push(x);
+        }
+    }
+
+    pub fn merge(&mut self, other: &AggState) {
+        self.count += other.count;
+        self.sum += other.sum;
+        self.sumsq += other.sumsq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        match (&mut self.values, &other.values) {
+            (Some(a), Some(b)) => a.extend_from_slice(b),
+            (Some(_), None) | (None, Some(_)) => {
+                // Mixed states: drop values (caller decides holistic needs).
+                self.values = None;
+            }
+            (None, None) => {}
+        }
+    }
+
+    /// Final value for a function.
+    pub fn finalize(&self, func: AggFunc) -> Result<f64> {
+        if self.count == 0 {
+            return match func {
+                AggFunc::Count => Ok(0.0),
+                AggFunc::Sum => Ok(0.0),
+                _ => Err(Error::Query(format!("{} of empty set", func.name()))),
+            };
+        }
+        Ok(match func {
+            AggFunc::Count => self.count as f64,
+            AggFunc::Sum => self.sum,
+            AggFunc::Min => self.min,
+            AggFunc::Max => self.max,
+            AggFunc::Mean => self.sum / self.count as f64,
+            AggFunc::Var => {
+                let n = self.count as f64;
+                (self.sumsq - self.sum * self.sum / n) / n
+            }
+            AggFunc::Median => {
+                let mut v = self
+                    .values
+                    .clone()
+                    .ok_or_else(|| Error::Query("median needs raw values".into()))?;
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let n = v.len();
+                if n % 2 == 1 {
+                    v[n / 2]
+                } else {
+                    (v[n / 2 - 1] + v[n / 2]) / 2.0
+                }
+            }
+        })
+    }
+
+    /// Serialized size estimate (what crosses the network as a partial).
+    pub fn wire_bytes(&self) -> usize {
+        8 * 5 + 1 + self.values.as_ref().map_or(0, |v| 4 + v.len() * 8)
+    }
+
+    pub fn encode_into(&self, w: &mut ByteWriter) {
+        w.u64(self.count);
+        w.f64(self.sum);
+        w.f64(self.sumsq);
+        w.f64(self.min);
+        w.f64(self.max);
+        match &self.values {
+            Some(v) => {
+                w.u8(1);
+                w.u32(v.len() as u32);
+                for &x in v {
+                    w.f64(x);
+                }
+            }
+            None => {
+                w.u8(0);
+            }
+        }
+    }
+
+    pub fn decode_from(r: &mut ByteReader) -> Result<AggState> {
+        let count = r.u64()?;
+        let sum = r.f64()?;
+        let sumsq = r.f64()?;
+        let min = r.f64()?;
+        let max = r.f64()?;
+        let values = match r.u8()? {
+            0 => None,
+            1 => {
+                let n = r.u32()? as usize;
+                let mut v = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    v.push(r.f64()?);
+                }
+                Some(v)
+            }
+            o => return Err(Error::Corrupt(format!("bad values tag {o}"))),
+        };
+        Ok(AggState {
+            count,
+            sum,
+            sumsq,
+            min,
+            max,
+            values,
+        })
+    }
+}
+
+/// A full query against a table dataset.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Query {
+    pub dataset: String,
+    /// Row filter.
+    pub predicate: Predicate,
+    /// Columns to return (row queries). `None` = all columns.
+    pub projection: Option<Vec<String>>,
+    /// Aggregates (if non-empty, the query returns aggregate values, not
+    /// rows).
+    pub aggregates: Vec<Aggregate>,
+    /// Optional group-by column (i64) for aggregate queries.
+    pub group_by: Option<String>,
+}
+
+impl Query {
+    /// A full-scan row query.
+    pub fn scan(dataset: &str) -> Query {
+        Query {
+            dataset: dataset.to_string(),
+            predicate: Predicate::True,
+            projection: None,
+            aggregates: Vec::new(),
+            group_by: None,
+        }
+    }
+
+    pub fn filter(mut self, p: Predicate) -> Query {
+        self.predicate = p;
+        self
+    }
+
+    pub fn select(mut self, cols: &[&str]) -> Query {
+        self.projection = Some(cols.iter().map(|s| s.to_string()).collect());
+        self
+    }
+
+    pub fn aggregate(mut self, func: AggFunc, col: &str) -> Query {
+        self.aggregates.push(Aggregate::new(func, col));
+        self
+    }
+
+    pub fn group(mut self, col: &str) -> Query {
+        self.group_by = Some(col.to_string());
+        self
+    }
+
+    pub fn is_aggregate(&self) -> bool {
+        !self.aggregates.is_empty()
+    }
+
+    /// All aggregates algebraic → fully decomposable (§3.2).
+    pub fn is_decomposable(&self) -> bool {
+        self.aggregates.iter().all(|a| a.func.is_algebraic())
+    }
+
+    /// Columns this query needs to touch (predicate ∪ projection ∪ aggs ∪
+    /// group key).
+    pub fn needed_columns(&self, all: &[String]) -> Vec<String> {
+        let mut out = self.predicate.columns();
+        match (&self.projection, self.is_aggregate()) {
+            (_, true) => {
+                out.extend(self.aggregates.iter().map(|a| a.col.clone()));
+                if let Some(g) = &self.group_by {
+                    out.push(g.clone());
+                }
+            }
+            (Some(p), false) => out.extend(p.iter().cloned()),
+            (None, false) => out.extend(all.iter().cloned()),
+        }
+        out.sort();
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::table::gen;
+    use crate::dataset::{DType, TableSchema};
+
+    fn batch() -> Batch {
+        Batch::new(
+            TableSchema::new(&[("id", DType::I64), ("v", DType::F32)]),
+            vec![
+                Column::I64(vec![1, 2, 3, 4, 5]),
+                Column::F32(vec![10.0, 20.0, 30.0, 40.0, 50.0]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn cmp_ops() {
+        assert!(CmpOp::Lt.eval(1.0, 2.0));
+        assert!(CmpOp::Le.eval(2.0, 2.0));
+        assert!(CmpOp::Gt.eval(3.0, 2.0));
+        assert!(CmpOp::Ge.eval(2.0, 2.0));
+        assert!(CmpOp::Eq.eval(2.0, 2.0));
+        assert!(CmpOp::Ne.eval(1.0, 2.0));
+    }
+
+    #[test]
+    fn predicate_eval() {
+        let b = batch();
+        let p = Predicate::cmp("v", CmpOp::Gt, 25.0);
+        assert_eq!(p.eval(&b).unwrap(), vec![false, false, true, true, true]);
+        let p = Predicate::cmp("v", CmpOp::Gt, 15.0).and(Predicate::cmp("id", CmpOp::Lt, 4.0));
+        assert_eq!(p.eval(&b).unwrap(), vec![false, true, true, false, false]);
+        let p = Predicate::cmp("id", CmpOp::Eq, 1.0).or(Predicate::cmp("id", CmpOp::Eq, 5.0));
+        assert_eq!(p.eval(&b).unwrap(), vec![true, false, false, false, true]);
+        let p = Predicate::cmp("v", CmpOp::Gt, 25.0).not();
+        assert_eq!(p.eval(&b).unwrap(), vec![true, true, false, false, false]);
+        assert_eq!(Predicate::True.eval(&b).unwrap(), vec![true; 5]);
+    }
+
+    #[test]
+    fn predicate_errors() {
+        let b = Batch::new(
+            TableSchema::new(&[("s", DType::Str)]),
+            vec![Column::Str(vec!["x".into()])],
+        )
+        .unwrap();
+        assert!(Predicate::cmp("s", CmpOp::Eq, 1.0).eval(&b).is_err());
+        assert!(Predicate::cmp("zzz", CmpOp::Eq, 1.0).eval(&batch()).is_err());
+    }
+
+    #[test]
+    fn predicate_columns() {
+        let p = Predicate::cmp("a", CmpOp::Gt, 0.0)
+            .and(Predicate::cmp("b", CmpOp::Lt, 1.0).or(Predicate::cmp("a", CmpOp::Eq, 2.0)));
+        assert_eq!(p.columns(), vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn predicate_wire_roundtrip() {
+        let p = Predicate::cmp("col x", CmpOp::Ge, -2.5)
+            .and(Predicate::True.or(Predicate::cmp("y", CmpOp::Ne, 7.0).not()));
+        let mut w = ByteWriter::new();
+        p.encode_into(&mut w);
+        let buf = w.finish();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(Predicate::decode_from(&mut r).unwrap(), p);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn agg_state_basics() {
+        let mut s = AggState::new(false);
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.update(x);
+        }
+        assert_eq!(s.finalize(AggFunc::Count).unwrap(), 4.0);
+        assert_eq!(s.finalize(AggFunc::Sum).unwrap(), 10.0);
+        assert_eq!(s.finalize(AggFunc::Min).unwrap(), 1.0);
+        assert_eq!(s.finalize(AggFunc::Max).unwrap(), 4.0);
+        assert_eq!(s.finalize(AggFunc::Mean).unwrap(), 2.5);
+        assert!((s.finalize(AggFunc::Var).unwrap() - 1.25).abs() < 1e-12);
+        assert!(s.finalize(AggFunc::Median).is_err(), "no values kept");
+    }
+
+    #[test]
+    fn agg_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| ((i * 37) % 19) as f64 - 9.0).collect();
+        let mut whole = AggState::new(true);
+        let mut a = AggState::new(true);
+        let mut b = AggState::new(true);
+        for (i, &x) in xs.iter().enumerate() {
+            whole.update(x);
+            if i % 2 == 0 {
+                a.update(x)
+            } else {
+                b.update(x)
+            }
+        }
+        a.merge(&b);
+        for f in [
+            AggFunc::Count,
+            AggFunc::Sum,
+            AggFunc::Min,
+            AggFunc::Max,
+            AggFunc::Mean,
+            AggFunc::Var,
+            AggFunc::Median,
+        ] {
+            let x = a.finalize(f).unwrap();
+            let y = whole.finalize(f).unwrap();
+            assert!((x - y).abs() < 1e-9, "{}: {x} vs {y}", f.name());
+        }
+    }
+
+    #[test]
+    fn agg_empty_set() {
+        let s = AggState::new(false);
+        assert_eq!(s.finalize(AggFunc::Count).unwrap(), 0.0);
+        assert_eq!(s.finalize(AggFunc::Sum).unwrap(), 0.0);
+        assert!(s.finalize(AggFunc::Min).is_err());
+        assert!(s.finalize(AggFunc::Mean).is_err());
+    }
+
+    #[test]
+    fn agg_median_even_odd() {
+        let mut s = AggState::new(true);
+        for x in [5.0, 1.0, 3.0] {
+            s.update(x);
+        }
+        assert_eq!(s.finalize(AggFunc::Median).unwrap(), 3.0);
+        s.update(7.0);
+        assert_eq!(s.finalize(AggFunc::Median).unwrap(), 4.0);
+    }
+
+    #[test]
+    fn agg_state_wire_roundtrip() {
+        let mut s = AggState::new(true);
+        for x in [1.5, -2.0, 8.25] {
+            s.update(x);
+        }
+        let mut w = ByteWriter::new();
+        s.encode_into(&mut w);
+        let buf = w.finish();
+        let mut r = ByteReader::new(&buf);
+        let d = AggState::decode_from(&mut r).unwrap();
+        assert_eq!(d, s);
+        assert!(s.wire_bytes() >= buf.len());
+
+        // Without values the wire size is constant.
+        let mut s2 = AggState::new(false);
+        for i in 0..10_000 {
+            s2.update(i as f64);
+        }
+        assert!(s2.wire_bytes() < 64);
+    }
+
+    #[test]
+    fn agg_merge_mixed_values_drops() {
+        let mut a = AggState::new(true);
+        a.update(1.0);
+        let mut b = AggState::new(false);
+        b.update(2.0);
+        a.merge(&b);
+        assert!(a.values.is_none());
+        assert_eq!(a.count, 2);
+    }
+
+    #[test]
+    fn update_column_with_mask() {
+        let b = batch();
+        let mut s = AggState::new(false);
+        s.update_column(b.col("v").unwrap(), &[true, false, true, false, true])
+            .unwrap();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.sum, 90.0);
+    }
+
+    #[test]
+    fn query_builder_and_properties() {
+        let q = Query::scan("ds")
+            .filter(Predicate::cmp("v", CmpOp::Gt, 0.0))
+            .aggregate(AggFunc::Mean, "v")
+            .aggregate(AggFunc::Count, "v");
+        assert!(q.is_aggregate());
+        assert!(q.is_decomposable());
+        let q2 = Query::scan("ds").aggregate(AggFunc::Median, "v");
+        assert!(!q2.is_decomposable());
+        let q3 = Query::scan("ds").select(&["a", "b"]);
+        assert!(!q3.is_aggregate());
+    }
+
+    #[test]
+    fn needed_columns() {
+        let all = vec!["a".to_string(), "b".to_string(), "c".to_string()];
+        let q = Query::scan("ds")
+            .filter(Predicate::cmp("a", CmpOp::Gt, 0.0))
+            .select(&["b"]);
+        assert_eq!(q.needed_columns(&all), vec!["a", "b"]);
+        let q = Query::scan("ds")
+            .filter(Predicate::cmp("a", CmpOp::Gt, 0.0))
+            .aggregate(AggFunc::Sum, "c")
+            .group("b");
+        assert_eq!(q.needed_columns(&all), vec!["a", "b", "c"]);
+        let q = Query::scan("ds");
+        assert_eq!(q.needed_columns(&all), all);
+    }
+
+    #[test]
+    fn agg_on_generated_table() {
+        let b = gen::sensor_table(1000, 4);
+        let mask = Predicate::cmp("flag", CmpOp::Eq, 1.0).eval(&b).unwrap();
+        let mut s = AggState::new(false);
+        s.update_column(b.col("val").unwrap(), &mask).unwrap();
+        let frac = s.count as f64 / 1000.0;
+        assert!(frac > 0.01 && frac < 0.15, "flag fraction {frac}");
+    }
+}

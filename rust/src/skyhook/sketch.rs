@@ -1,0 +1,352 @@
+//! De-composable approximations for holistic functions (§3.2): "the
+//! challenge is to reduce the amount of data transferred by ... using
+//! de-composable approximations that deliver acceptable results."
+//!
+//! [`QuantileSketch`] is a fixed-size, mergeable equi-width histogram
+//! with exact min/max tracking: each storage server builds one over its
+//! filtered values (constant wire size, like an algebraic partial), the
+//! driver merges them and interpolates quantiles. Error is bounded by
+//! one bin width of the merged range — acceptable for the paper's
+//! "median without shipping the values" use case, and measured against
+//! the exact path in `benches/e5_composability.rs`.
+
+use crate::error::{Error, Result};
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// Number of histogram bins (wire size ≈ BINS*8 + 32 bytes).
+pub const BINS: usize = 256;
+
+/// Mergeable approximate-quantile sketch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantileSketch {
+    count: u64,
+    min: f64,
+    max: f64,
+    /// Bin range (fixed at first merge/build; values outside clamp).
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+}
+
+impl QuantileSketch {
+    /// Build from a value slice in two passes (range, then fill).
+    pub fn build(values: &[f64]) -> QuantileSketch {
+        let mut s = QuantileSketch::empty();
+        if values.is_empty() {
+            return s;
+        }
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &x in values {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        s.reset_range(lo, hi);
+        for &x in values {
+            s.insert(x);
+        }
+        s
+    }
+
+    /// An empty sketch (identity for merge).
+    pub fn empty() -> QuantileSketch {
+        QuantileSketch {
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            lo: 0.0,
+            hi: 0.0,
+            bins: vec![0; BINS],
+        }
+    }
+
+    fn reset_range(&mut self, lo: f64, hi: f64) {
+        self.lo = lo;
+        self.hi = if hi > lo { hi } else { lo + 1.0 };
+    }
+
+    fn bin_of(&self, x: f64) -> usize {
+        let t = (x - self.lo) / (self.hi - self.lo);
+        ((t * BINS as f64) as usize).min(BINS - 1)
+    }
+
+    fn bin_low(&self, i: usize) -> f64 {
+        self.lo + (self.hi - self.lo) * i as f64 / BINS as f64
+    }
+
+    fn insert(&mut self, x: f64) {
+        self.count += 1;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        let b = self.bin_of(x.clamp(self.lo, self.hi));
+        self.bins[b] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Merge another sketch. If ranges differ, counts are re-binned into
+    /// the union range by linear projection (each source bin's mass goes
+    /// to the bin holding its midpoint — error ≤ one merged bin width).
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        let lo = self.lo.min(other.lo);
+        let hi = self.hi.max(other.hi);
+        if lo != self.lo || hi != self.hi {
+            *self = self.rebinned(lo, hi);
+        }
+        let projected = if other.lo != lo || other.hi != hi {
+            other.rebinned(lo, hi)
+        } else {
+            other.clone()
+        };
+        for (a, b) in self.bins.iter_mut().zip(&projected.bins) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    fn rebinned(&self, lo: f64, hi: f64) -> QuantileSketch {
+        let mut out = QuantileSketch::empty();
+        out.reset_range(lo, hi);
+        out.count = self.count;
+        out.min = self.min;
+        out.max = self.max;
+        for (i, &c) in self.bins.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let mid = (self.bin_low(i) + self.bin_low(i + 1)) / 2.0;
+            let b = out.bin_of(mid.clamp(lo, hi));
+            out.bins[b] += c;
+        }
+        out
+    }
+
+    /// Approximate quantile `q ∈ [0,1]` by interpolation within the bin.
+    pub fn quantile(&self, q: f64) -> Result<f64> {
+        if self.count == 0 {
+            return Err(Error::Query("quantile of empty sketch".into()));
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = (q * self.count as f64).max(1.0);
+        let mut seen = 0f64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c as f64 >= target {
+                let into = (target - seen) / c as f64;
+                let lo = self.bin_low(i);
+                let hi = self.bin_low(i + 1);
+                return Ok((lo + (hi - lo) * into).clamp(self.min, self.max));
+            }
+            seen += c as f64;
+        }
+        Ok(self.max)
+    }
+
+    /// Worst-case absolute error of [`Self::quantile`]: one bin width.
+    pub fn error_bound(&self) -> f64 {
+        (self.hi - self.lo) / BINS as f64
+    }
+
+    /// Wire encoding (sparse: only non-empty bins).
+    pub fn encode_into(&self, w: &mut ByteWriter) {
+        w.u64(self.count);
+        w.f64(self.min);
+        w.f64(self.max);
+        w.f64(self.lo);
+        w.f64(self.hi);
+        let nonzero = self.bins.iter().filter(|&&c| c != 0).count() as u32;
+        w.u32(nonzero);
+        for (i, &c) in self.bins.iter().enumerate() {
+            if c != 0 {
+                w.u16(i as u16);
+                w.u64(c);
+            }
+        }
+    }
+
+    pub fn decode_from(r: &mut ByteReader) -> Result<QuantileSketch> {
+        let count = r.u64()?;
+        let min = r.f64()?;
+        let max = r.f64()?;
+        let lo = r.f64()?;
+        let hi = r.f64()?;
+        let nonzero = r.u32()? as usize;
+        if nonzero > BINS {
+            return Err(Error::Corrupt(format!("sketch has {nonzero} bins")));
+        }
+        let mut bins = vec![0u64; BINS];
+        let mut total = 0u64;
+        for _ in 0..nonzero {
+            let i = r.u16()? as usize;
+            if i >= BINS {
+                return Err(Error::Corrupt(format!("bin index {i}")));
+            }
+            let c = r.u64()?;
+            bins[i] = c;
+            total += c;
+        }
+        if total != count {
+            return Err(Error::Corrupt(format!(
+                "sketch bins sum {total} != count {count}"
+            )));
+        }
+        Ok(QuantileSketch {
+            count,
+            min,
+            max,
+            lo,
+            hi,
+            bins,
+        })
+    }
+
+    /// Serialized size estimate.
+    pub fn wire_bytes(&self) -> usize {
+        44 + self.bins.iter().filter(|&&c| c != 0).count() * 10
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+        let pos = (q * sorted.len() as f64).max(1.0).ceil() as usize - 1;
+        sorted[pos.min(sorted.len() - 1)]
+    }
+
+    #[test]
+    fn single_sketch_median_close() {
+        let mut rng = Xoshiro256::new(1);
+        let values: Vec<f64> = (0..50_000).map(|_| 50.0 + 15.0 * rng.normal()).collect();
+        let s = QuantileSketch::build(&values);
+        let mut sorted = values.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let approx = s.quantile(0.5).unwrap();
+        let exact = exact_quantile(&sorted, 0.5);
+        assert!(
+            (approx - exact).abs() <= 2.0 * s.error_bound(),
+            "approx {approx} exact {exact} bound {}",
+            s.error_bound()
+        );
+        assert_eq!(s.count(), 50_000);
+        assert_eq!(s.min(), sorted[0]);
+    }
+
+    #[test]
+    fn merged_sketches_match_whole() {
+        let mut rng = Xoshiro256::new(2);
+        let values: Vec<f64> = (0..30_000).map(|_| rng.f64() * 100.0 - 20.0).collect();
+        // Partition into 7 uneven parts and merge.
+        let mut merged = QuantileSketch::empty();
+        for part in values.chunks(4_321) {
+            merged.merge(&QuantileSketch::build(part));
+        }
+        let mut sorted = values.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.1, 0.25, 0.5, 0.75, 0.9, 0.99] {
+            let approx = merged.quantile(q).unwrap();
+            let exact = exact_quantile(&sorted, q);
+            // Re-binning doubles the bound in the worst case.
+            assert!(
+                (approx - exact).abs() <= 4.0 * merged.error_bound(),
+                "q={q}: approx {approx} exact {exact}"
+            );
+        }
+        assert_eq!(merged.count(), 30_000);
+    }
+
+    #[test]
+    fn merge_with_disjoint_ranges() {
+        let a = QuantileSketch::build(&[1.0, 2.0, 3.0]);
+        let b = QuantileSketch::build(&[1000.0, 1001.0]);
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(m.count(), 5);
+        assert_eq!(m.min(), 1.0);
+        assert_eq!(m.max(), 1001.0);
+        let med = m.quantile(0.5).unwrap();
+        assert!(med < 100.0, "median should stay in the low cluster: {med}");
+    }
+
+    #[test]
+    fn empty_and_identity() {
+        let e = QuantileSketch::empty();
+        assert!(e.quantile(0.5).is_err());
+        let s = QuantileSketch::build(&[5.0]);
+        let mut m = e.clone();
+        m.merge(&s);
+        assert_eq!(m.quantile(0.5).unwrap(), 5.0);
+        let mut m2 = s.clone();
+        m2.merge(&QuantileSketch::empty());
+        assert_eq!(m2, s);
+    }
+
+    #[test]
+    fn constant_values() {
+        let s = QuantileSketch::build(&vec![7.0; 100]);
+        assert_eq!(s.quantile(0.01).unwrap(), 7.0);
+        assert_eq!(s.quantile(0.99).unwrap(), 7.0);
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let mut rng = Xoshiro256::new(3);
+        let values: Vec<f64> = (0..5_000).map(|_| rng.normal() * 10.0).collect();
+        let s = QuantileSketch::build(&values);
+        let mut w = ByteWriter::new();
+        s.encode_into(&mut w);
+        let buf = w.finish();
+        assert!(buf.len() <= s.wire_bytes());
+        let mut r = ByteReader::new(&buf);
+        let d = QuantileSketch::decode_from(&mut r).unwrap();
+        assert_eq!(d, s);
+        // Constant-size regardless of input length.
+        assert!(buf.len() < BINS * 10 + 64);
+    }
+
+    #[test]
+    fn decode_rejects_corrupt() {
+        let s = QuantileSketch::build(&[1.0, 2.0]);
+        let mut w = ByteWriter::new();
+        s.encode_into(&mut w);
+        let mut buf = w.finish();
+        // Break the count.
+        buf[0] ^= 0xff;
+        let mut r = ByteReader::new(&buf);
+        assert!(QuantileSketch::decode_from(&mut r).is_err());
+    }
+
+    #[test]
+    fn quantiles_are_monotone() {
+        let mut rng = Xoshiro256::new(4);
+        let values: Vec<f64> = (0..10_000).map(|_| rng.exponential(0.1)).collect();
+        let s = QuantileSketch::build(&values);
+        let mut prev = f64::NEG_INFINITY;
+        for i in 0..=20 {
+            let q = i as f64 / 20.0;
+            let v = s.quantile(q).unwrap();
+            assert!(v >= prev, "quantile not monotone at {q}");
+            prev = v;
+        }
+    }
+}

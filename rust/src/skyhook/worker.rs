@@ -1,0 +1,350 @@
+//! Skyhook-Worker (§4.2): executes one sub-query — either by invoking the
+//! Skyhook-Extension on the object's OSD (pushdown) or by fetching the
+//! object and computing client-side — and, on the write path, partitions
+//! data, adds the format wrapper, and writes objects.
+
+use super::extension::{
+    decode_agg_out, decode_group_out, encode_agg_arg, encode_group_arg, encode_scan_arg,
+};
+use super::plan::{ExecMode, SubQuery};
+use super::query::{AggState, Query};
+use crate::dataset::layout::{decode_batch, encode_batch, Layout};
+use crate::dataset::table::Batch;
+use crate::error::Result;
+use crate::simnet::Timeline;
+use crate::store::Cluster;
+use std::sync::Arc;
+
+/// Client-side CPU rate for decoding + predicate evaluation (bytes/s and
+/// rows/s respectively) — charged to the worker's timeline so client-side
+/// execution pays the CPU the paper wants to offload.
+const CLIENT_DECODE_BW: f64 = 2.0e9;
+const CLIENT_ROW_COST: f64 = 12e-9;
+
+/// What one sub-query produced.
+#[derive(Debug)]
+pub enum SubOutput {
+    Rows(Batch),
+    Aggs(Vec<AggState>),
+    Groups(Vec<(i64, AggState)>),
+}
+
+/// Result of one sub-query execution.
+#[derive(Debug)]
+pub struct SubResult {
+    pub output: SubOutput,
+    /// Bytes that crossed the client↔storage network for this sub-query.
+    pub bytes_moved: u64,
+    /// Virtual completion time.
+    pub finish: f64,
+}
+
+/// Execute one sub-query against the cluster, charging worker-side work
+/// to `worker_cpu`.
+pub fn execute_subquery(
+    cluster: &Arc<Cluster>,
+    query: &Query,
+    sub: &SubQuery,
+    at: f64,
+    worker_cpu: &Timeline,
+) -> Result<SubResult> {
+    match sub.mode {
+        ExecMode::Pushdown => execute_pushdown(cluster, query, sub, at, worker_cpu),
+        ExecMode::ClientSide => execute_client_side(cluster, query, sub, at, worker_cpu),
+    }
+}
+
+fn execute_pushdown(
+    cluster: &Arc<Cluster>,
+    query: &Query,
+    sub: &SubQuery,
+    at: f64,
+    worker_cpu: &Timeline,
+) -> Result<SubResult> {
+    if let Some(group_col) = &query.group_by {
+        let input = encode_group_arg(&query.predicate, group_col, &query.aggregates[0].col);
+        let t = cluster.call(at, &sub.object, "skyhook", "group_agg", &input)?;
+        let bytes = (input.len() + t.value.len()) as u64;
+        let groups = decode_group_out(&t.value)?;
+        let finish = worker_cpu.submit(t.finish, t.value.len() as f64 / CLIENT_DECODE_BW);
+        return Ok(SubResult {
+            output: SubOutput::Groups(groups),
+            bytes_moved: bytes,
+            finish,
+        });
+    }
+    if query.is_aggregate() {
+        let input = encode_agg_arg(&query.predicate, &query.aggregates, sub.keep_values);
+        let t = cluster.call(at, &sub.object, "skyhook", "agg", &input)?;
+        let bytes = (input.len() + t.value.len()) as u64;
+        let states = decode_agg_out(&t.value)?;
+        let finish = worker_cpu.submit(t.finish, t.value.len() as f64 / CLIENT_DECODE_BW);
+        return Ok(SubResult {
+            output: SubOutput::Aggs(states),
+            bytes_moved: bytes,
+            finish,
+        });
+    }
+    let projection = query.projection.clone();
+    let input = encode_scan_arg(&query.predicate, projection.as_deref());
+    let t = cluster.call(at, &sub.object, "skyhook", "scan", &input)?;
+    let bytes = (input.len() + t.value.len()) as u64;
+    let (batch, _) = decode_batch(&t.value)?;
+    let finish = worker_cpu.submit(t.finish, t.value.len() as f64 / CLIENT_DECODE_BW);
+    Ok(SubResult {
+        output: SubOutput::Rows(batch),
+        bytes_moved: bytes,
+        finish,
+    })
+}
+
+fn execute_client_side(
+    cluster: &Arc<Cluster>,
+    query: &Query,
+    sub: &SubQuery,
+    at: f64,
+    worker_cpu: &Timeline,
+) -> Result<SubResult> {
+    // Fetch the whole object — every byte crosses the network.
+    let t = cluster.read_object(at, &sub.object)?;
+    let bytes = t.value.len() as u64;
+    let (batch, _) = decode_batch(&t.value)?;
+    // Client pays decode + scan CPU.
+    let cpu = t.value.len() as f64 / CLIENT_DECODE_BW + batch.nrows() as f64 * CLIENT_ROW_COST;
+    let finish = worker_cpu.submit(t.finish, cpu);
+    let mask = query.predicate.eval(&batch)?;
+
+    if let Some(group_col) = &query.group_by {
+        let keys = match batch.col(group_col)? {
+            crate::dataset::table::Column::I64(v) => v.clone(),
+            _ => return Err(crate::error::Error::Query("group_by needs i64".into())),
+        };
+        let vals = batch.col(&query.aggregates[0].col)?;
+        let mut groups: std::collections::BTreeMap<i64, AggState> = Default::default();
+        for (i, &keep) in mask.iter().enumerate() {
+            if keep {
+                groups
+                    .entry(keys[i])
+                    .or_insert_with(|| AggState::new(false))
+                    .update(vals.get_f64(i)?);
+            }
+        }
+        return Ok(SubResult {
+            output: SubOutput::Groups(groups.into_iter().collect()),
+            bytes_moved: bytes,
+            finish,
+        });
+    }
+    if query.is_aggregate() {
+        let mut states = Vec::with_capacity(query.aggregates.len());
+        for agg in &query.aggregates {
+            let mut st = AggState::new(!agg.func.is_algebraic());
+            st.update_column(batch.col(&agg.col)?, &mask)?;
+            states.push(st);
+        }
+        return Ok(SubResult {
+            output: SubOutput::Aggs(states),
+            bytes_moved: bytes,
+            finish,
+        });
+    }
+    let filtered = batch.filter(&mask)?;
+    let rows = match &query.projection {
+        Some(cols) => {
+            let refs: Vec<&str> = cols.iter().map(String::as_str).collect();
+            filtered.project(&refs)?
+        }
+        None => filtered,
+    };
+    Ok(SubResult {
+        output: SubOutput::Rows(rows),
+        bytes_moved: bytes,
+        finish,
+    })
+}
+
+/// Write-path worker: wrap a row group in the object format and store it.
+/// Returns (object bytes written, virtual finish).
+pub fn write_row_group(
+    cluster: &Arc<Cluster>,
+    object: &str,
+    group: &Batch,
+    layout: Layout,
+    at: f64,
+    worker_cpu: &Timeline,
+) -> Result<(u64, f64)> {
+    let bytes = encode_batch(group, layout);
+    // Serialization cost on the worker.
+    let depart = worker_cpu.submit(at, bytes.len() as f64 / CLIENT_DECODE_BW);
+    let t = cluster.write_object(depart, object, &bytes)?;
+    Ok((bytes.len() as u64, t.finish))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::dataset::table::gen;
+    use crate::skyhook::extension::register_skyhook_class;
+    use crate::skyhook::query::{AggFunc, CmpOp, Predicate};
+    use crate::store::ClassRegistry;
+
+    fn cluster() -> Arc<Cluster> {
+        let mut reg = ClassRegistry::with_builtins();
+        register_skyhook_class(&mut reg, None);
+        Cluster::new(
+            &ClusterConfig {
+                osds: 4,
+                replicas: 1,
+                ..Default::default()
+            },
+            reg,
+        )
+    }
+
+    fn seed_object(c: &Arc<Cluster>, name: &str, rows: usize) -> Batch {
+        let b = gen::sensor_table(rows, 42);
+        c.write_object(0.0, name, &encode_batch(&b, Layout::Col))
+            .unwrap();
+        b
+    }
+
+    #[test]
+    fn pushdown_and_client_agree_on_rows() {
+        let c = cluster();
+        let b = seed_object(&c, "t0", 300);
+        let q = Query::scan("ds")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 55.0))
+            .select(&["ts", "val"]);
+        let cpu = Timeline::new();
+        let sub_p = SubQuery {
+            object: "t0".into(),
+            mode: ExecMode::Pushdown,
+            keep_values: false,
+        };
+        let sub_c = SubQuery {
+            mode: ExecMode::ClientSide,
+            ..sub_p.clone()
+        };
+        let rp = execute_subquery(&c, &q, &sub_p, 0.0, &cpu).unwrap();
+        let rc = execute_subquery(&c, &q, &sub_c, 0.0, &cpu).unwrap();
+        let (SubOutput::Rows(bp), SubOutput::Rows(bc)) = (rp.output, rc.output) else {
+            panic!("expected rows")
+        };
+        assert_eq!(bp, bc);
+        // Verify against direct computation.
+        let mask = q.predicate.eval(&b).unwrap();
+        assert_eq!(bp.nrows(), mask.iter().filter(|&&m| m).count());
+        // Selective pushdown moves fewer bytes.
+        assert!(
+            rp.bytes_moved < rc.bytes_moved,
+            "pushdown {} vs client {}",
+            rp.bytes_moved,
+            rc.bytes_moved
+        );
+    }
+
+    #[test]
+    fn pushdown_and_client_agree_on_aggregates() {
+        let c = cluster();
+        let b = seed_object(&c, "t1", 500);
+        let q = Query::scan("ds")
+            .filter(Predicate::cmp("sensor", CmpOp::Lt, 10.0))
+            .aggregate(AggFunc::Sum, "val")
+            .aggregate(AggFunc::Count, "val");
+        let cpu = Timeline::new();
+        let mk = |mode| SubQuery {
+            object: "t1".into(),
+            mode,
+            keep_values: false,
+        };
+        let rp = execute_subquery(&c, &q, &mk(ExecMode::Pushdown), 0.0, &cpu).unwrap();
+        let rc = execute_subquery(&c, &q, &mk(ExecMode::ClientSide), 0.0, &cpu).unwrap();
+        let (SubOutput::Aggs(sp), SubOutput::Aggs(sc)) = (rp.output, rc.output) else {
+            panic!("expected aggs")
+        };
+        assert_eq!(sp[0].count, sc[0].count);
+        assert!((sp[0].sum - sc[0].sum).abs() < 1e-3);
+        // Direct check.
+        let mask = q.predicate.eval(&b).unwrap();
+        let mut direct = AggState::new(false);
+        direct.update_column(b.col("val").unwrap(), &mask).unwrap();
+        assert_eq!(sp[0].count, direct.count);
+        // Aggregate pushdown moves far fewer bytes than the object.
+        assert!(rp.bytes_moved * 10 < rc.bytes_moved);
+    }
+
+    #[test]
+    fn group_agg_modes_agree() {
+        let c = cluster();
+        seed_object(&c, "t2", 400);
+        let q = Query::scan("ds")
+            .group("sensor")
+            .aggregate(AggFunc::Mean, "val");
+        let cpu = Timeline::new();
+        let mk = |mode| SubQuery {
+            object: "t2".into(),
+            mode,
+            keep_values: false,
+        };
+        let rp = execute_subquery(&c, &q, &mk(ExecMode::Pushdown), 0.0, &cpu).unwrap();
+        let rc = execute_subquery(&c, &q, &mk(ExecMode::ClientSide), 0.0, &cpu).unwrap();
+        let (SubOutput::Groups(gp), SubOutput::Groups(gc)) = (rp.output, rc.output) else {
+            panic!("expected groups")
+        };
+        assert_eq!(gp.len(), gc.len());
+        for ((ka, sa), (kb, sb)) in gp.iter().zip(&gc) {
+            assert_eq!(ka, kb);
+            assert_eq!(sa.count, sb.count);
+            assert!((sa.sum - sb.sum).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn holistic_pushdown_ships_values() {
+        let c = cluster();
+        seed_object(&c, "t3", 200);
+        let q = Query::scan("ds").aggregate(AggFunc::Median, "val");
+        let cpu = Timeline::new();
+        let sub = SubQuery {
+            object: "t3".into(),
+            mode: ExecMode::Pushdown,
+            keep_values: true,
+        };
+        let r = execute_subquery(&c, &q, &sub, 0.0, &cpu).unwrap();
+        let SubOutput::Aggs(states) = r.output else {
+            panic!()
+        };
+        assert_eq!(states[0].values.as_ref().unwrap().len(), 200);
+        // Values dominate the wire bytes.
+        assert!(r.bytes_moved > 200 * 8);
+    }
+
+    #[test]
+    fn write_row_group_roundtrip() {
+        let c = cluster();
+        let b = gen::sensor_table(100, 3);
+        let cpu = Timeline::new();
+        let (bytes, finish) =
+            write_row_group(&c, "w0", &b, Layout::Row, 0.0, &cpu).unwrap();
+        assert!(bytes > 0);
+        assert!(finish > 0.0);
+        let raw = c.read_object(0.0, "w0").unwrap().value;
+        let (dec, layout) = decode_batch(&raw).unwrap();
+        assert_eq!(layout, Layout::Row);
+        assert_eq!(dec, b);
+    }
+
+    #[test]
+    fn missing_object_errors() {
+        let c = cluster();
+        let q = Query::scan("ds");
+        let cpu = Timeline::new();
+        let sub = SubQuery {
+            object: "ghost".into(),
+            mode: ExecMode::Pushdown,
+            keep_values: false,
+        };
+        assert!(execute_subquery(&c, &q, &sub, 0.0, &cpu).is_err());
+    }
+}

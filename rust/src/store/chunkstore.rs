@@ -1,0 +1,351 @@
+//! Server-local chunk store — the BlueStore stand-in.
+//!
+//! Object *data* on each simulated OSD lives here (attributes and indexes
+//! live in the [`super::kvstore`]). The store manages a flat byte arena
+//! carved into extents by a first-fit allocator, with per-chunk CRC32
+//! checksums verified on every read — the paper's §3.3 point that a
+//! storage server may pair "a local key/value store combined with chunk
+//! stores that require different optimizations than a local file system".
+
+use crate::error::{Error, Result};
+
+/// Handle to a stored chunk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ChunkId(pub u64);
+
+#[derive(Clone, Debug)]
+struct Extent {
+    offset: usize,
+    len: usize,
+}
+
+#[derive(Clone, Debug)]
+struct ChunkMeta {
+    extent: Extent,
+    crc: u32,
+}
+
+/// Extent-allocating chunk store with checksummed reads.
+#[derive(Debug)]
+pub struct ChunkStore {
+    arena: Vec<u8>,
+    free: Vec<Extent>, // sorted by offset, coalesced
+    chunks: std::collections::HashMap<u64, ChunkMeta>,
+    next_id: u64,
+    bytes_stored: u64,
+    /// Lifetime counters.
+    writes: u64,
+    reads: u64,
+}
+
+impl ChunkStore {
+    pub fn new() -> Self {
+        Self {
+            arena: Vec::new(),
+            free: Vec::new(),
+            chunks: std::collections::HashMap::new(),
+            next_id: 1,
+            bytes_stored: 0,
+            writes: 0,
+            reads: 0,
+        }
+    }
+
+    /// Store a chunk, returning its id.
+    pub fn put(&mut self, data: &[u8]) -> ChunkId {
+        let extent = self.allocate(data.len());
+        self.arena[extent.offset..extent.offset + extent.len].copy_from_slice(data);
+        let crc = crc32fast::hash(data);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.chunks.insert(id, ChunkMeta { extent, crc });
+        self.bytes_stored += data.len() as u64;
+        self.writes += 1;
+        ChunkId(id)
+    }
+
+    /// Read a whole chunk, verifying its checksum.
+    pub fn get(&mut self, id: ChunkId) -> Result<Vec<u8>> {
+        self.reads += 1;
+        let meta = self
+            .chunks
+            .get(&id.0)
+            .ok_or_else(|| Error::NotFound(format!("chunk {}", id.0)))?;
+        let data = &self.arena[meta.extent.offset..meta.extent.offset + meta.extent.len];
+        if crc32fast::hash(data) != meta.crc {
+            return Err(Error::Corrupt(format!("chunk {} checksum mismatch", id.0)));
+        }
+        Ok(data.to_vec())
+    }
+
+    /// Read a byte range of a chunk (whole-chunk checksum still verified —
+    /// matches BlueStore's per-blob checksum granularity).
+    pub fn get_range(&mut self, id: ChunkId, offset: usize, len: usize) -> Result<Vec<u8>> {
+        let data = self.get(id)?;
+        if offset + len > data.len() {
+            return Err(Error::Invalid(format!(
+                "range {}+{} exceeds chunk len {}",
+                offset,
+                len,
+                data.len()
+            )));
+        }
+        Ok(data[offset..offset + len].to_vec())
+    }
+
+    /// Length of a chunk without reading it.
+    pub fn len_of(&self, id: ChunkId) -> Result<usize> {
+        self.chunks
+            .get(&id.0)
+            .map(|m| m.extent.len)
+            .ok_or_else(|| Error::NotFound(format!("chunk {}", id.0)))
+    }
+
+    /// Delete a chunk, returning its extent to the free list.
+    pub fn delete(&mut self, id: ChunkId) -> Result<()> {
+        let meta = self
+            .chunks
+            .remove(&id.0)
+            .ok_or_else(|| Error::NotFound(format!("chunk {}", id.0)))?;
+        self.bytes_stored -= meta.extent.len as u64;
+        self.release(meta.extent);
+        Ok(())
+    }
+
+    /// Overwrite a chunk in place if the size matches, else reallocate.
+    pub fn update(&mut self, id: ChunkId, data: &[u8]) -> Result<()> {
+        let meta = self
+            .chunks
+            .get_mut(&id.0)
+            .ok_or_else(|| Error::NotFound(format!("chunk {}", id.0)))?;
+        self.writes += 1;
+        if meta.extent.len == data.len() {
+            self.arena[meta.extent.offset..meta.extent.offset + data.len()]
+                .copy_from_slice(data);
+            meta.crc = crc32fast::hash(data);
+            return Ok(());
+        }
+        let old = meta.extent.clone();
+        self.bytes_stored = self.bytes_stored - old.len as u64 + data.len() as u64;
+        let extent = self.allocate(data.len());
+        self.arena[extent.offset..extent.offset + extent.len].copy_from_slice(data);
+        let crc = crc32fast::hash(data);
+        let meta = self.chunks.get_mut(&id.0).unwrap();
+        meta.extent = extent;
+        meta.crc = crc;
+        self.release(old);
+        Ok(())
+    }
+
+    /// Deliberately flip a byte inside a stored chunk (failure injection
+    /// for the corruption-detection tests).
+    pub fn corrupt(&mut self, id: ChunkId) -> Result<()> {
+        let meta = self
+            .chunks
+            .get(&id.0)
+            .ok_or_else(|| Error::NotFound(format!("chunk {}", id.0)))?;
+        if meta.extent.len == 0 {
+            return Err(Error::Invalid("cannot corrupt empty chunk".into()));
+        }
+        self.arena[meta.extent.offset] ^= 0xff;
+        Ok(())
+    }
+
+    /// Total live bytes.
+    pub fn bytes_stored(&self) -> u64 {
+        self.bytes_stored
+    }
+
+    /// Number of live chunks.
+    pub fn chunk_count(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Arena size (allocated capacity, live + free).
+    pub fn arena_size(&self) -> usize {
+        self.arena.len()
+    }
+
+    /// (writes, reads) op counters.
+    pub fn op_counts(&self) -> (u64, u64) {
+        (self.writes, self.reads)
+    }
+
+    /// Fragmentation ratio: free bytes inside the arena / arena size.
+    pub fn fragmentation(&self) -> f64 {
+        if self.arena.is_empty() {
+            return 0.0;
+        }
+        let free: usize = self.free.iter().map(|e| e.len).sum();
+        free as f64 / self.arena.len() as f64
+    }
+
+    /// First-fit allocation; grows the arena if nothing fits.
+    fn allocate(&mut self, len: usize) -> Extent {
+        if let Some(i) = self.free.iter().position(|e| e.len >= len) {
+            let e = self.free[i].clone();
+            if e.len == len {
+                self.free.remove(i);
+                return e;
+            }
+            self.free[i] = Extent {
+                offset: e.offset + len,
+                len: e.len - len,
+            };
+            return Extent {
+                offset: e.offset,
+                len,
+            };
+        }
+        let offset = self.arena.len();
+        self.arena.resize(offset + len, 0);
+        Extent { offset, len }
+    }
+
+    /// Return an extent to the free list, coalescing neighbours.
+    fn release(&mut self, extent: Extent) {
+        if extent.len == 0 {
+            return;
+        }
+        let pos = self
+            .free
+            .partition_point(|e| e.offset < extent.offset);
+        self.free.insert(pos, extent);
+        // Coalesce around `pos`.
+        if pos + 1 < self.free.len()
+            && self.free[pos].offset + self.free[pos].len == self.free[pos + 1].offset
+        {
+            self.free[pos].len += self.free[pos + 1].len;
+            self.free.remove(pos + 1);
+        }
+        if pos > 0 && self.free[pos - 1].offset + self.free[pos - 1].len == self.free[pos].offset
+        {
+            self.free[pos - 1].len += self.free[pos].len;
+            self.free.remove(pos);
+        }
+    }
+}
+
+impl Default for ChunkStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut cs = ChunkStore::new();
+        let id = cs.put(b"hello world");
+        assert_eq!(cs.get(id).unwrap(), b"hello world");
+        assert_eq!(cs.len_of(id).unwrap(), 11);
+        assert_eq!(cs.chunk_count(), 1);
+        assert_eq!(cs.bytes_stored(), 11);
+    }
+
+    #[test]
+    fn get_range() {
+        let mut cs = ChunkStore::new();
+        let id = cs.put(b"0123456789");
+        assert_eq!(cs.get_range(id, 2, 4).unwrap(), b"2345");
+        assert!(cs.get_range(id, 8, 4).is_err());
+    }
+
+    #[test]
+    fn missing_chunk_is_not_found() {
+        let mut cs = ChunkStore::new();
+        assert!(matches!(cs.get(ChunkId(99)), Err(Error::NotFound(_))));
+        assert!(cs.delete(ChunkId(99)).is_err());
+    }
+
+    #[test]
+    fn checksum_detects_corruption() {
+        let mut cs = ChunkStore::new();
+        let id = cs.put(b"precious data");
+        cs.corrupt(id).unwrap();
+        assert!(matches!(cs.get(id), Err(Error::Corrupt(_))));
+    }
+
+    #[test]
+    fn delete_frees_space_for_reuse() {
+        let mut cs = ChunkStore::new();
+        let a = cs.put(&vec![1u8; 100]);
+        let arena_after_a = cs.arena_size();
+        cs.delete(a).unwrap();
+        let b = cs.put(&vec![2u8; 100]);
+        // Same extent reused — arena did not grow.
+        assert_eq!(cs.arena_size(), arena_after_a);
+        assert_eq!(cs.get(b).unwrap(), vec![2u8; 100]);
+        assert_eq!(cs.bytes_stored(), 100);
+    }
+
+    #[test]
+    fn first_fit_splits_extents() {
+        let mut cs = ChunkStore::new();
+        let a = cs.put(&vec![1u8; 100]);
+        let _b = cs.put(&vec![2u8; 50]);
+        cs.delete(a).unwrap();
+        // 40 bytes fits in the 100-byte hole, leaving 60 free.
+        let c = cs.put(&vec![3u8; 40]);
+        assert_eq!(cs.get(c).unwrap(), vec![3u8; 40]);
+        assert!(cs.fragmentation() > 0.0);
+        // Another 60 fills the rest exactly.
+        let d = cs.put(&vec![4u8; 60]);
+        assert_eq!(cs.get(d).unwrap(), vec![4u8; 60]);
+    }
+
+    #[test]
+    fn release_coalesces_neighbours() {
+        let mut cs = ChunkStore::new();
+        let a = cs.put(&vec![1u8; 50]);
+        let b = cs.put(&vec![2u8; 50]);
+        let c = cs.put(&vec![3u8; 50]);
+        cs.delete(a).unwrap();
+        cs.delete(c).unwrap();
+        cs.delete(b).unwrap(); // middle: both sides coalesce into one extent
+        let d = cs.put(&vec![4u8; 150]);
+        assert_eq!(cs.get(d).unwrap(), vec![4u8; 150]);
+        assert_eq!(cs.arena_size(), 150);
+    }
+
+    #[test]
+    fn update_same_size_in_place() {
+        let mut cs = ChunkStore::new();
+        let id = cs.put(b"aaaa");
+        let arena = cs.arena_size();
+        cs.update(id, b"bbbb").unwrap();
+        assert_eq!(cs.get(id).unwrap(), b"bbbb");
+        assert_eq!(cs.arena_size(), arena);
+    }
+
+    #[test]
+    fn update_resize_reallocates() {
+        let mut cs = ChunkStore::new();
+        let id = cs.put(b"aaaa");
+        cs.update(id, b"bbbbbbbb").unwrap();
+        assert_eq!(cs.get(id).unwrap(), b"bbbbbbbb");
+        assert_eq!(cs.bytes_stored(), 8);
+    }
+
+    #[test]
+    fn empty_chunk_roundtrip() {
+        let mut cs = ChunkStore::new();
+        let id = cs.put(b"");
+        assert_eq!(cs.get(id).unwrap(), b"");
+        assert_eq!(cs.len_of(id).unwrap(), 0);
+        cs.delete(id).unwrap();
+    }
+
+    #[test]
+    fn op_counters() {
+        let mut cs = ChunkStore::new();
+        let id = cs.put(b"x");
+        let _ = cs.get(id);
+        let _ = cs.get(id);
+        let (w, r) = cs.op_counts();
+        assert_eq!((w, r), (1, 2));
+    }
+}

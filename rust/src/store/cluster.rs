@@ -1,0 +1,678 @@
+//! The distributed object store: an OSD map + N OSDs behind CRUSH-like
+//! placement, replicated writes, degraded reads, object-class dispatch,
+//! and rebalancing — the simulated RADOS the rest of the system maps
+//! datasets onto.
+//!
+//! Virtual-time semantics: every public op takes a virtual start time
+//! `at` and returns a [`Timed`] result. Client→OSD hops charge network
+//! cost; OSD work queues on that OSD's device timeline. Replicated writes
+//! complete when the slowest replica finishes (Ceph's commit ack).
+
+use super::objclass::ClassRegistry;
+use super::osd::{ObjStat, Osd, Timed};
+use super::placement::{OsdId, OsdMap};
+use crate::config::ClusterConfig;
+use crate::error::{Error, Result};
+use crate::simnet::{CostParams, SimClock};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Cluster-wide counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClusterCounters {
+    /// Reads served by a non-primary replica because the primary was down.
+    pub degraded_reads: u64,
+    /// Reads that had to search outside the current placement set
+    /// (placement changed and rebalance has not run yet).
+    pub misdirected_reads: u64,
+    /// Objects moved by rebalance runs.
+    pub objects_moved: u64,
+    /// Bytes moved by rebalance runs.
+    pub bytes_rebalanced: u64,
+}
+
+/// The simulated distributed object store.
+pub struct Cluster {
+    map: RwLock<OsdMap>,
+    osds: RwLock<Vec<Arc<Osd>>>,
+    registry: Arc<ClassRegistry>,
+    cost: CostParams,
+    replicas: usize,
+    pub clock: SimClock,
+    degraded_reads: AtomicU64,
+    misdirected_reads: AtomicU64,
+    objects_moved: AtomicU64,
+    bytes_rebalanced: AtomicU64,
+}
+
+impl Cluster {
+    /// Build a cluster from config with the given objclass registry.
+    pub fn new(cfg: &ClusterConfig, registry: ClassRegistry) -> Arc<Self> {
+        let registry = Arc::new(registry);
+        let cost = cfg.profile.params();
+        let osds = (0..cfg.osds)
+            .map(|i| Arc::new(Osd::new(i as OsdId, cost.clone(), Arc::clone(&registry))))
+            .collect();
+        Arc::new(Self {
+            map: RwLock::new(OsdMap::new(cfg.osds, cfg.pg_count)),
+            osds: RwLock::new(osds),
+            registry,
+            cost,
+            replicas: cfg.replicas,
+            clock: SimClock::new(),
+            degraded_reads: AtomicU64::new(0),
+            misdirected_reads: AtomicU64::new(0),
+            objects_moved: AtomicU64::new(0),
+            bytes_rebalanced: AtomicU64::new(0),
+        })
+    }
+
+    /// Convenience: cluster with builtin object classes only.
+    pub fn with_defaults(cfg: &ClusterConfig) -> Arc<Self> {
+        Self::new(cfg, ClassRegistry::with_builtins())
+    }
+
+    pub fn cost(&self) -> &CostParams {
+        &self.cost
+    }
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+    pub fn registry(&self) -> &Arc<ClassRegistry> {
+        &self.registry
+    }
+
+    /// Current osdmap epoch.
+    pub fn epoch(&self) -> u64 {
+        self.map.read().unwrap().epoch()
+    }
+
+    /// Number of OSD slots.
+    pub fn size(&self) -> usize {
+        self.osds.read().unwrap().len()
+    }
+
+    fn osd(&self, id: OsdId) -> Arc<Osd> {
+        Arc::clone(&self.osds.read().unwrap()[id as usize])
+    }
+
+    /// Ordered placement (primary first) for an object under the current map.
+    pub fn placement(&self, name: &str) -> Vec<OsdId> {
+        self.map.read().unwrap().place(name, self.replicas)
+    }
+
+    /// Counters snapshot.
+    pub fn counters(&self) -> ClusterCounters {
+        ClusterCounters {
+            degraded_reads: self.degraded_reads.load(Ordering::Relaxed),
+            misdirected_reads: self.misdirected_reads.load(Ordering::Relaxed),
+            objects_moved: self.objects_moved.load(Ordering::Relaxed),
+            bytes_rebalanced: self.bytes_rebalanced.load(Ordering::Relaxed),
+        }
+    }
+
+    // ---- object ops -------------------------------------------------------
+
+    /// Replicated write: data flows client→each replica OSD in parallel;
+    /// completion is the slowest replica (commit ack).
+    pub fn write_object(&self, at: f64, name: &str, data: &[u8]) -> Result<Timed<()>> {
+        let placement = self.placement(name);
+        if placement.is_empty() {
+            return Err(Error::Unavailable("no in OSDs".into()));
+        }
+        let mut finish = at;
+        let mut wrote = 0;
+        for id in &placement {
+            let osd = self.osd(*id);
+            let arrive = at + self.cost.net_time(data.len() as u64);
+            match osd.write_full(arrive, name, data) {
+                Ok(t) => {
+                    finish = finish.max(t.finish + self.cost.net_latency_s);
+                    wrote += 1;
+                }
+                Err(Error::Unavailable(_)) => continue, // degraded write
+                Err(e) => return Err(e),
+            }
+        }
+        if wrote == 0 {
+            return Err(Error::Unavailable(format!(
+                "all replicas down for {name}"
+            )));
+        }
+        self.clock.advance_to(finish);
+        Ok(Timed::new((), finish))
+    }
+
+    /// Read, preferring the primary, failing over to replicas, and as a
+    /// last resort searching all OSDs (placement drift before rebalance).
+    pub fn read_object(&self, at: f64, name: &str) -> Result<Timed<Vec<u8>>> {
+        let placement = self.placement(name);
+        let mut at = at;
+        for (i, id) in placement.iter().enumerate() {
+            let osd = self.osd(*id);
+            let arrive = at + self.cost.net_time(64); // request message
+            match osd.read(arrive, name) {
+                Ok(t) => {
+                    if i > 0 {
+                        self.degraded_reads.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let finish = t.finish + self.cost.net_time(t.value.len() as u64);
+                    self.clock.advance_to(finish);
+                    return Ok(Timed::new(t.value, finish));
+                }
+                Err(Error::Unavailable(_)) | Err(Error::NotFound(_)) => {
+                    // Each failed attempt costs a round trip.
+                    at = arrive + self.cost.net_latency_s;
+                    continue;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        // Placement-drift fallback: search every up OSD.
+        for osd in self.osds.read().unwrap().iter() {
+            if osd.is_down() || !osd.exists(name) {
+                continue;
+            }
+            let arrive = at + self.cost.net_time(64);
+            if let Ok(t) = osd.read(arrive, name) {
+                self.misdirected_reads.fetch_add(1, Ordering::Relaxed);
+                let finish = t.finish + self.cost.net_time(t.value.len() as u64);
+                self.clock.advance_to(finish);
+                return Ok(Timed::new(t.value, finish));
+            }
+        }
+        Err(Error::NotFound(name.to_string()))
+    }
+
+    /// Stat via primary (with failover).
+    pub fn stat_object(&self, at: f64, name: &str) -> Result<Timed<ObjStat>> {
+        for id in self.placement(name) {
+            let osd = self.osd(id);
+            let arrive = at + self.cost.net_time(64);
+            match osd.stat(arrive, name) {
+                Ok(t) => {
+                    let finish = t.finish + self.cost.net_latency_s;
+                    self.clock.advance_to(finish);
+                    return Ok(Timed::new(t.value, finish));
+                }
+                Err(Error::Unavailable(_)) | Err(Error::NotFound(_)) => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Err(Error::NotFound(name.to_string()))
+    }
+
+    /// Delete from all replicas (ignores individual NotFound).
+    pub fn delete_object(&self, at: f64, name: &str) -> Result<Timed<()>> {
+        let mut finish = at;
+        let mut any = false;
+        for osd in self.osds.read().unwrap().iter() {
+            if osd.is_down() || !osd.exists(name) {
+                continue;
+            }
+            let arrive = at + self.cost.net_time(64);
+            if let Ok(t) = osd.delete(arrive, name) {
+                finish = finish.max(t.finish + self.cost.net_latency_s);
+                any = true;
+            }
+        }
+        if !any {
+            return Err(Error::NotFound(name.to_string()));
+        }
+        self.clock.advance_to(finish);
+        Ok(Timed::new((), finish))
+    }
+
+    /// Object-class call on the object's primary (failover to replicas) —
+    /// the pushdown path. Only the (small) input and output cross the
+    /// network; the object's data is read on the server.
+    pub fn call(
+        &self,
+        at: f64,
+        name: &str,
+        class: &str,
+        method: &str,
+        input: &[u8],
+    ) -> Result<Timed<Vec<u8>>> {
+        let placement = self.placement(name);
+        let mut at = at;
+        let mut last: Option<Error> = None;
+        for id in placement {
+            let osd = self.osd(id);
+            let arrive = at + self.cost.net_time(input.len() as u64 + 64);
+            match osd.call(arrive, name, class, method, input) {
+                Ok(t) => {
+                    let finish = t.finish + self.cost.net_time(t.value.len() as u64);
+                    self.clock.advance_to(finish);
+                    return Ok(Timed::new(t.value, finish));
+                }
+                Err(e @ Error::Unavailable(_)) | Err(e @ Error::NotFound(_)) => {
+                    at = arrive + self.cost.net_latency_s;
+                    last = Some(e);
+                    continue;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        // Placement-drift fallback (map changed, rebalance pending): find
+        // an up OSD that still holds the object and execute there.
+        for osd in self.osds.read().unwrap().iter() {
+            if osd.is_down() || !osd.exists(name) {
+                continue;
+            }
+            let arrive = at + self.cost.net_time(input.len() as u64 + 64);
+            match osd.call(arrive, name, class, method, input) {
+                Ok(t) => {
+                    self.misdirected_reads.fetch_add(1, Ordering::Relaxed);
+                    let finish = t.finish + self.cost.net_time(t.value.len() as u64);
+                    self.clock.advance_to(finish);
+                    return Ok(Timed::new(t.value, finish));
+                }
+                Err(Error::Unavailable(_)) | Err(Error::NotFound(_)) => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| Error::NotFound(name.to_string())))
+    }
+
+    /// Set/get xattr through the primary.
+    pub fn setxattr(&self, at: f64, name: &str, key: &str, value: &[u8]) -> Result<Timed<()>> {
+        let mut finish = at;
+        let mut any = false;
+        for id in self.placement(name) {
+            let osd = self.osd(id);
+            let arrive = at + self.cost.net_time(value.len() as u64 + 64);
+            match osd.setxattr(arrive, name, key, value) {
+                Ok(t) => {
+                    finish = finish.max(t.finish + self.cost.net_latency_s);
+                    any = true;
+                }
+                Err(Error::Unavailable(_)) | Err(Error::NotFound(_)) => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        if !any {
+            return Err(Error::NotFound(name.to_string()));
+        }
+        self.clock.advance_to(finish);
+        Ok(Timed::new((), finish))
+    }
+
+    pub fn getxattr(&self, at: f64, name: &str, key: &str) -> Result<Timed<Option<Vec<u8>>>> {
+        for id in self.placement(name) {
+            let osd = self.osd(id);
+            let arrive = at + self.cost.net_time(64);
+            match osd.getxattr(arrive, name, key) {
+                Ok(t) => {
+                    let finish = t.finish + self.cost.net_latency_s;
+                    self.clock.advance_to(finish);
+                    return Ok(Timed::new(t.value, finish));
+                }
+                Err(Error::Unavailable(_)) | Err(Error::NotFound(_)) => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Err(Error::NotFound(name.to_string()))
+    }
+
+    /// All object names in the cluster (union over OSDs), sorted, deduped.
+    pub fn list_objects(&self) -> Vec<String> {
+        let mut names: Vec<String> = Vec::new();
+        for osd in self.osds.read().unwrap().iter() {
+            if let Ok(t) = osd.list(0.0) {
+                names.extend(t.value);
+            }
+        }
+        names.sort();
+        names.dedup();
+        names
+    }
+
+    /// True if any up OSD holds the object.
+    pub fn object_exists(&self, name: &str) -> bool {
+        self.osds
+            .read()
+            .unwrap()
+            .iter()
+            .any(|o| !o.is_down() && o.exists(name))
+    }
+
+    // ---- topology management ---------------------------------------------
+
+    /// Add a fresh OSD; returns its id. Run [`Cluster::rebalance`] after.
+    pub fn add_osd(&self, weight: f64) -> OsdId {
+        let mut map = self.map.write().unwrap();
+        let id = map.add_osd(weight);
+        self.osds.write().unwrap().push(Arc::new(Osd::new(
+            id,
+            self.cost.clone(),
+            Arc::clone(&self.registry),
+        )));
+        id
+    }
+
+    /// Mark an OSD out (weight 0) so placement avoids it.
+    pub fn mark_out(&self, id: OsdId) {
+        self.map.write().unwrap().set_weight(id, 0.0);
+    }
+
+    /// Failure injection: crash / revive an OSD (does not change weight).
+    pub fn set_down(&self, id: OsdId, down: bool) {
+        self.osd(id).set_down(down);
+        self.map.write().unwrap().set_up(id, !down);
+    }
+
+    /// Move every object whose stored location no longer matches current
+    /// placement. Returns (objects moved, bytes moved). Deterministic and
+    /// idempotent: a second call right after is a no-op.
+    pub fn rebalance(&self) -> Result<(u64, u64)> {
+        let mut moved = 0u64;
+        let mut bytes = 0u64;
+        // Snapshot: object -> set of OSDs currently holding it.
+        let osds = self.osds.read().unwrap().clone();
+        let mut holders: std::collections::BTreeMap<String, Vec<OsdId>> = Default::default();
+        for osd in osds.iter() {
+            if osd.is_down() {
+                continue;
+            }
+            for name in osd.list(0.0)?.value {
+                holders.entry(name).or_default().push(osd.id());
+            }
+        }
+        for (name, holding) in holders {
+            let want = self.placement(&name);
+            let missing: Vec<OsdId> = want
+                .iter()
+                .copied()
+                .filter(|id| !holding.contains(id))
+                .collect();
+            let extra: Vec<OsdId> = holding
+                .iter()
+                .copied()
+                .filter(|id| !want.contains(id))
+                .collect();
+            if missing.is_empty() && extra.is_empty() {
+                continue;
+            }
+            // Read from any current holder, write to missing targets.
+            let src = self.osd(holding[0]);
+            let data = src.read(0.0, &name)?.value;
+            for dst in &missing {
+                self.osd(*dst).write_full(0.0, &name, &data)?;
+                moved += 1;
+                bytes += data.len() as u64;
+            }
+            for id in &extra {
+                let _ = self.osd(*id).delete(0.0, &name);
+            }
+        }
+        self.objects_moved.fetch_add(moved, Ordering::Relaxed);
+        self.bytes_rebalanced.fetch_add(bytes, Ordering::Relaxed);
+        Ok((moved, bytes))
+    }
+
+    /// Reset all OSD timelines + the clock (between bench cases).
+    pub fn reset_time(&self) {
+        for osd in self.osds.read().unwrap().iter() {
+            osd.reset_timeline();
+        }
+        self.clock.reset();
+    }
+
+    /// Per-OSD object counts (load-balance inspection).
+    pub fn object_distribution(&self) -> Vec<(OsdId, usize)> {
+        self.osds
+            .read()
+            .unwrap()
+            .iter()
+            .map(|o| (o.id(), o.object_count()))
+            .collect()
+    }
+
+    /// Total bytes stored across OSDs (includes replication).
+    pub fn total_bytes_stored(&self) -> u64 {
+        self.osds
+            .read()
+            .unwrap()
+            .iter()
+            .map(|o| o.bytes_stored())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster(osds: usize, replicas: usize) -> Arc<Cluster> {
+        let cfg = ClusterConfig {
+            osds,
+            replicas,
+            ..Default::default()
+        };
+        Cluster::with_defaults(&cfg)
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let c = cluster(4, 2);
+        c.write_object(0.0, "obj.1", b"payload").unwrap();
+        assert_eq!(c.read_object(0.0, "obj.1").unwrap().value, b"payload");
+    }
+
+    #[test]
+    fn replication_stores_r_copies() {
+        let c = cluster(4, 3);
+        c.write_object(0.0, "obj.1", &vec![9u8; 1000]).unwrap();
+        let held: usize = c
+            .object_distribution()
+            .iter()
+            .map(|(_, n)| n)
+            .sum();
+        assert_eq!(held, 3);
+        assert_eq!(c.total_bytes_stored(), 3000);
+    }
+
+    #[test]
+    fn read_fails_over_when_primary_down() {
+        let c = cluster(4, 2);
+        c.write_object(0.0, "obj.x", b"survives").unwrap();
+        let primary = c.placement("obj.x")[0];
+        c.set_down(primary, true);
+        let r = c.read_object(0.0, "obj.x").unwrap();
+        assert_eq!(r.value, b"survives");
+        assert_eq!(c.counters().degraded_reads, 1);
+    }
+
+    #[test]
+    fn read_fails_when_all_replicas_down() {
+        let c = cluster(3, 2);
+        c.write_object(0.0, "obj.x", b"gone").unwrap();
+        for id in c.placement("obj.x") {
+            c.set_down(id, true);
+        }
+        assert!(c.read_object(0.0, "obj.x").is_err());
+    }
+
+    #[test]
+    fn missing_object_not_found() {
+        let c = cluster(3, 2);
+        assert!(matches!(
+            c.read_object(0.0, "ghost"),
+            Err(Error::NotFound(_))
+        ));
+        assert!(c.stat_object(0.0, "ghost").is_err());
+        assert!(c.delete_object(0.0, "ghost").is_err());
+    }
+
+    #[test]
+    fn delete_removes_all_replicas() {
+        let c = cluster(4, 3);
+        c.write_object(0.0, "obj.d", b"bye").unwrap();
+        c.delete_object(0.0, "obj.d").unwrap();
+        assert!(!c.object_exists("obj.d"));
+        assert_eq!(c.total_bytes_stored(), 0);
+    }
+
+    #[test]
+    fn objclass_call_runs_on_server() {
+        let c = cluster(4, 2);
+        c.write_object(0.0, "obj.c", b"0123456789").unwrap();
+        let out = c.call(0.0, "obj.c", "bytes", "stat", &[]).unwrap();
+        assert_eq!(u64::from_le_bytes(out.value.try_into().unwrap()), 10);
+    }
+
+    #[test]
+    fn objclass_call_fails_over() {
+        let c = cluster(4, 2);
+        c.write_object(0.0, "obj.c", b"0123456789").unwrap();
+        let primary = c.placement("obj.c")[0];
+        c.set_down(primary, true);
+        let out = c.call(0.0, "obj.c", "bytes", "crc32", &[]).unwrap();
+        assert_eq!(
+            u32::from_le_bytes(out.value.try_into().unwrap()),
+            crc32fast::hash(b"0123456789")
+        );
+    }
+
+    #[test]
+    fn xattr_roundtrip_cluster() {
+        let c = cluster(3, 2);
+        c.write_object(0.0, "o", b"d").unwrap();
+        c.setxattr(0.0, "o", "fmt", b"col").unwrap();
+        assert_eq!(c.getxattr(0.0, "o", "fmt").unwrap().value.unwrap(), b"col");
+    }
+
+    #[test]
+    fn parallel_writes_to_different_osds_overlap() {
+        // Spread objects over 4 OSDs, replicas=1: virtual makespan for 4
+        // writes should be ~1 write, not 4 (parallel device queues).
+        let c = cluster(4, 1);
+        let data = vec![0u8; 4_000_000];
+        let single = c
+            .write_object(0.0, "warm", &data)
+            .unwrap()
+            .finish;
+        c.reset_time();
+        // Find 4 objects with distinct primaries.
+        let mut names = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        let mut i = 0;
+        while names.len() < 4 {
+            let n = format!("par.{i}");
+            let p = c.placement(&n)[0];
+            if seen.insert(p) {
+                names.push(n);
+            }
+            i += 1;
+        }
+        let mut makespan: f64 = 0.0;
+        for n in &names {
+            makespan = makespan.max(c.write_object(0.0, n, &data).unwrap().finish);
+        }
+        assert!(
+            makespan < single * 2.0,
+            "4 parallel writes took {makespan} vs single {single}"
+        );
+    }
+
+    #[test]
+    fn writes_to_same_osd_serialize() {
+        let c = cluster(4, 1);
+        let data = vec![0u8; 4_000_000];
+        // Two objects with the same primary.
+        let mut names: Vec<String> = Vec::new();
+        let mut target = None;
+        let mut i = 0;
+        while names.len() < 2 {
+            let n = format!("ser.{i}");
+            let p = c.placement(&n)[0];
+            match target {
+                None => {
+                    target = Some(p);
+                    names.push(n);
+                }
+                Some(t) if p == t => names.push(n),
+                _ => {}
+            }
+            i += 1;
+        }
+        let t1 = c.write_object(0.0, &names[0], &data).unwrap().finish;
+        let t2 = c.write_object(0.0, &names[1], &data).unwrap().finish;
+        assert!(t2 > t1 * 1.7, "same-OSD writes must queue: {t1} {t2}");
+    }
+
+    #[test]
+    fn add_osd_and_rebalance_moves_data() {
+        let c = cluster(3, 2);
+        for i in 0..60 {
+            c.write_object(0.0, &format!("obj.{i}"), &vec![1u8; 100])
+                .unwrap();
+        }
+        let id = c.add_osd(1.0);
+        let (moved, bytes) = c.rebalance().unwrap();
+        assert!(moved > 0, "adding an OSD must move some objects");
+        assert_eq!(bytes, moved * 100);
+        // New OSD received data.
+        let dist = c.object_distribution();
+        assert!(dist[id as usize].1 > 0);
+        // All objects still readable at their placed locations.
+        for i in 0..60 {
+            assert_eq!(
+                c.read_object(0.0, &format!("obj.{i}")).unwrap().value,
+                vec![1u8; 100]
+            );
+        }
+        assert_eq!(c.counters().misdirected_reads, 0, "rebalance must fix placement");
+        // Idempotent.
+        let (again, _) = c.rebalance().unwrap();
+        assert_eq!(again, 0);
+    }
+
+    #[test]
+    fn mark_out_drains_an_osd() {
+        let c = cluster(4, 2);
+        for i in 0..40 {
+            c.write_object(0.0, &format!("o.{i}"), &vec![2u8; 50]).unwrap();
+        }
+        c.mark_out(1);
+        c.rebalance().unwrap();
+        let dist = c.object_distribution();
+        assert_eq!(dist[1].1, 0, "out OSD should be drained: {dist:?}");
+        for i in 0..40 {
+            assert!(c.read_object(0.0, &format!("o.{i}")).is_ok());
+        }
+    }
+
+    #[test]
+    fn drifted_read_before_rebalance_still_works() {
+        let c = cluster(3, 1);
+        // Write 30 objects, then add an OSD but do NOT rebalance.
+        for i in 0..30 {
+            c.write_object(0.0, &format!("d.{i}"), b"x").unwrap();
+        }
+        c.add_osd(1.0);
+        let mut misdirected = 0;
+        for i in 0..30 {
+            assert!(c.read_object(0.0, &format!("d.{i}")).is_ok());
+        }
+        misdirected += c.counters().misdirected_reads;
+        // Some placements changed, so some reads had to search.
+        assert!(misdirected > 0, "expected drift before rebalance");
+    }
+
+    #[test]
+    fn list_objects_deduplicates_replicas() {
+        let c = cluster(4, 3);
+        c.write_object(0.0, "only.one", b"x").unwrap();
+        assert_eq!(c.list_objects(), vec!["only.one".to_string()]);
+    }
+
+    #[test]
+    fn clock_tracks_makespan() {
+        let c = cluster(2, 1);
+        assert_eq!(c.clock.now(), 0.0);
+        let t = c.write_object(0.0, "o", &vec![0u8; 1_000_000]).unwrap();
+        assert!((c.clock.now() - t.finish).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,420 @@
+//! Server-local key/value store — the RocksDB stand-in.
+//!
+//! Each simulated OSD embeds one of these for object attributes and for
+//! Skyhook-style secondary indexes (§4.2: "The RocksDB system on each Ceph
+//! storage server is used to build the remote indexing system").
+//!
+//! Structure mirrors a miniature LSM tree so its cost behaviour is
+//! RocksDB-shaped: writes land in a memtable; when the memtable exceeds a
+//! threshold it is frozen into an immutable sorted run; reads consult the
+//! memtable then runs newest-first; `compact()` merges all runs; deletes
+//! are tombstones until compaction. All data is in memory — durability is
+//! out of scope for the simulation, but write amplification and ordered
+//! scans (what the paper's indexing relies on) are faithfully modelled.
+
+use std::collections::BTreeMap;
+use std::ops::Bound;
+
+type Key = Vec<u8>;
+/// `None` is a tombstone.
+type Slot = Option<Vec<u8>>;
+
+/// Miniature LSM key/value store.
+#[derive(Debug)]
+pub struct KvStore {
+    memtable: BTreeMap<Key, Slot>,
+    /// Immutable sorted runs, oldest first.
+    runs: Vec<Vec<(Key, Slot)>>,
+    memtable_bytes: usize,
+    /// Freeze threshold for the memtable.
+    memtable_limit: usize,
+    /// Lifetime counters (for write-amplification accounting).
+    bytes_written: u64,
+    bytes_flushed: u64,
+    bytes_compacted: u64,
+}
+
+/// Stats snapshot for metrics/benches.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct KvStats {
+    pub live_keys: usize,
+    pub runs: usize,
+    pub bytes_written: u64,
+    pub bytes_flushed: u64,
+    pub bytes_compacted: u64,
+}
+
+impl Default for KvStore {
+    /// Same as [`KvStore::new`] — a derived Default would zero the
+    /// memtable limit and degrade every put into a freeze+compact.
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl KvStore {
+    pub fn new() -> Self {
+        Self::with_memtable_limit(1 << 20)
+    }
+
+    /// Configure the memtable freeze threshold (bytes).
+    pub fn with_memtable_limit(limit: usize) -> Self {
+        Self {
+            memtable: BTreeMap::new(),
+            runs: Vec::new(),
+            memtable_bytes: 0,
+            memtable_limit: limit.max(64),
+            bytes_written: 0,
+            bytes_flushed: 0,
+            bytes_compacted: 0,
+        }
+    }
+
+    /// Insert or overwrite.
+    pub fn put(&mut self, key: &[u8], value: &[u8]) {
+        self.bytes_written += (key.len() + value.len()) as u64;
+        self.memtable_bytes += key.len() + value.len();
+        self.memtable.insert(key.to_vec(), Some(value.to_vec()));
+        self.maybe_freeze();
+    }
+
+    /// Batched insert (one logical write op; used by the objclass index
+    /// builder to amortize per-op cost).
+    pub fn put_batch<'a, I: IntoIterator<Item = (&'a [u8], &'a [u8])>>(&mut self, items: I) {
+        for (k, v) in items {
+            self.bytes_written += (k.len() + v.len()) as u64;
+            self.memtable_bytes += k.len() + v.len();
+            self.memtable.insert(k.to_vec(), Some(v.to_vec()));
+        }
+        self.maybe_freeze();
+    }
+
+    /// Delete (tombstone).
+    pub fn delete(&mut self, key: &[u8]) {
+        self.bytes_written += key.len() as u64;
+        self.memtable_bytes += key.len();
+        self.memtable.insert(key.to_vec(), None);
+        self.maybe_freeze();
+    }
+
+    /// Point lookup.
+    pub fn get(&self, key: &[u8]) -> Option<Vec<u8>> {
+        if let Some(slot) = self.memtable.get(key) {
+            return slot.clone();
+        }
+        for run in self.runs.iter().rev() {
+            if let Ok(i) = run.binary_search_by(|(k, _)| k.as_slice().cmp(key)) {
+                return run[i].1.clone();
+            }
+        }
+        None
+    }
+
+    /// True if the key currently has a live value.
+    pub fn contains(&self, key: &[u8]) -> bool {
+        self.get(key).is_some()
+    }
+
+    /// Ordered scan of all live pairs with the given prefix.
+    pub fn scan_prefix(&self, prefix: &[u8]) -> Vec<(Vec<u8>, Vec<u8>)> {
+        let mut hi = prefix.to_vec();
+        // Successor prefix: increment last non-0xff byte.
+        let upper = loop {
+            match hi.pop() {
+                None => break None, // prefix was all 0xff — unbounded above
+                Some(b) if b < 0xff => {
+                    hi.push(b + 1);
+                    break Some(hi);
+                }
+                Some(_) => continue,
+            }
+        };
+        match upper {
+            Some(u) => self.scan_range(prefix, Bound::Excluded(u.as_slice())),
+            None => self.scan_range(prefix, Bound::Unbounded),
+        }
+    }
+
+    /// Ordered scan of live pairs in `[lo, hi_bound)`.
+    pub fn scan_range(&self, lo: &[u8], hi: Bound<&[u8]>) -> Vec<(Vec<u8>, Vec<u8>)> {
+        // Merge memtable + runs with newest-wins semantics via BTreeMap.
+        let mut merged: BTreeMap<Key, Slot> = BTreeMap::new();
+        let in_range = |k: &[u8]| {
+            k >= lo
+                && match hi {
+                    Bound::Excluded(h) => k < h,
+                    Bound::Included(h) => k <= h,
+                    Bound::Unbounded => true,
+                }
+        };
+        for run in &self.runs {
+            // Oldest-first insertion; later inserts overwrite.
+            let start = run.partition_point(|(k, _)| k.as_slice() < lo);
+            for (k, v) in &run[start..] {
+                if !in_range(k) {
+                    break;
+                }
+                merged.insert(k.clone(), v.clone());
+            }
+        }
+        for (k, v) in self.memtable.range::<[u8], _>((Bound::Included(lo), Bound::Unbounded)) {
+            if !in_range(k) {
+                break;
+            }
+            merged.insert(k.clone(), v.clone());
+        }
+        merged
+            .into_iter()
+            .filter_map(|(k, v)| v.map(|v| (k, v)))
+            .collect()
+    }
+
+    /// All live keys (ordered).
+    pub fn keys(&self) -> Vec<Vec<u8>> {
+        self.scan_range(&[], Bound::Unbounded)
+            .into_iter()
+            .map(|(k, _)| k)
+            .collect()
+    }
+
+    fn maybe_freeze(&mut self) {
+        if self.memtable_bytes < self.memtable_limit {
+            return;
+        }
+        let run: Vec<(Key, Slot)> = std::mem::take(&mut self.memtable).into_iter().collect();
+        self.bytes_flushed += run
+            .iter()
+            .map(|(k, v)| k.len() + v.as_ref().map_or(0, |v| v.len()))
+            .sum::<usize>() as u64;
+        self.runs.push(run);
+        self.memtable_bytes = 0;
+        // Keep run count bounded like a tiered LSM.
+        if self.runs.len() > 8 {
+            self.compact();
+        }
+    }
+
+    /// Merge all runs + memtable into one run, dropping tombstones.
+    pub fn compact(&mut self) {
+        let mut merged: BTreeMap<Key, Slot> = BTreeMap::new();
+        for run in std::mem::take(&mut self.runs) {
+            for (k, v) in run {
+                merged.insert(k, v);
+            }
+        }
+        for (k, v) in std::mem::take(&mut self.memtable) {
+            merged.insert(k, v);
+        }
+        self.memtable_bytes = 0;
+        let run: Vec<(Key, Slot)> = merged
+            .into_iter()
+            .filter(|(_, v)| v.is_some())
+            .collect();
+        self.bytes_compacted += run
+            .iter()
+            .map(|(k, v)| k.len() + v.as_ref().map_or(0, |v| v.len()))
+            .sum::<usize>() as u64;
+        if !run.is_empty() {
+            self.runs.push(run);
+        }
+    }
+
+    /// Stats snapshot.
+    pub fn stats(&self) -> KvStats {
+        let live = self.keys().len();
+        KvStats {
+            live_keys: live,
+            runs: self.runs.len(),
+            bytes_written: self.bytes_written,
+            bytes_flushed: self.bytes_flushed,
+            bytes_compacted: self.bytes_compacted,
+        }
+    }
+
+    /// Number of live keys.
+    pub fn len(&self) -> usize {
+        self.keys().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut kv = KvStore::new();
+        kv.put(b"a", b"1");
+        kv.put(b"b", b"2");
+        assert_eq!(kv.get(b"a").unwrap(), b"1");
+        assert_eq!(kv.get(b"b").unwrap(), b"2");
+        assert!(kv.get(b"c").is_none());
+    }
+
+    #[test]
+    fn overwrite_takes_latest() {
+        let mut kv = KvStore::new();
+        kv.put(b"k", b"v1");
+        kv.put(b"k", b"v2");
+        assert_eq!(kv.get(b"k").unwrap(), b"v2");
+    }
+
+    #[test]
+    fn delete_hides_value() {
+        let mut kv = KvStore::new();
+        kv.put(b"k", b"v");
+        kv.delete(b"k");
+        assert!(kv.get(b"k").is_none());
+        assert!(!kv.contains(b"k"));
+    }
+
+    #[test]
+    fn freeze_and_read_from_runs() {
+        let mut kv = KvStore::with_memtable_limit(64);
+        for i in 0..100u32 {
+            kv.put(format!("key{i:04}").as_bytes(), &i.to_le_bytes());
+        }
+        assert!(kv.stats().runs > 0, "memtable should have frozen");
+        for i in 0..100u32 {
+            assert_eq!(
+                kv.get(format!("key{i:04}").as_bytes()).unwrap(),
+                i.to_le_bytes()
+            );
+        }
+    }
+
+    #[test]
+    fn newest_run_wins() {
+        let mut kv = KvStore::with_memtable_limit(64);
+        for round in 0..5u32 {
+            for i in 0..20u32 {
+                kv.put(format!("k{i:02}").as_bytes(), &round.to_le_bytes());
+            }
+        }
+        for i in 0..20u32 {
+            assert_eq!(kv.get(format!("k{i:02}").as_bytes()).unwrap(), 4u32.to_le_bytes());
+        }
+    }
+
+    #[test]
+    fn delete_across_freeze() {
+        let mut kv = KvStore::with_memtable_limit(64);
+        for i in 0..50u32 {
+            kv.put(format!("k{i:02}").as_bytes(), b"x");
+        }
+        kv.delete(b"k10");
+        // force more freezes
+        for i in 50..100u32 {
+            kv.put(format!("k{i:02}").as_bytes(), b"x");
+        }
+        assert!(kv.get(b"k10").is_none());
+    }
+
+    #[test]
+    fn scan_prefix_ordered_and_filtered() {
+        let mut kv = KvStore::with_memtable_limit(64);
+        kv.put(b"idx/a/1", b"1");
+        kv.put(b"idx/b/1", b"2");
+        kv.put(b"idx/a/2", b"3");
+        kv.put(b"other", b"4");
+        kv.put(b"idx/a/0", b"5");
+        let hits = kv.scan_prefix(b"idx/a/");
+        let keys: Vec<&[u8]> = hits.iter().map(|(k, _)| k.as_slice()).collect();
+        assert_eq!(keys, vec![b"idx/a/0" as &[u8], b"idx/a/1", b"idx/a/2"]);
+    }
+
+    #[test]
+    fn scan_prefix_all_ff() {
+        let mut kv = KvStore::new();
+        kv.put(&[0xff, 0xff, 0x01], b"a");
+        kv.put(&[0xff, 0xfe], b"b");
+        let hits = kv.scan_prefix(&[0xff, 0xff]);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].1, b"a");
+    }
+
+    #[test]
+    fn scan_range_bounds() {
+        let mut kv = KvStore::new();
+        for k in ["a", "b", "c", "d"] {
+            kv.put(k.as_bytes(), b"v");
+        }
+        let hits = kv.scan_range(b"b", Bound::Excluded(b"d" as &[u8]));
+        let keys: Vec<&[u8]> = hits.iter().map(|(k, _)| k.as_slice()).collect();
+        assert_eq!(keys, vec![b"b" as &[u8], b"c"]);
+        let hits = kv.scan_range(b"b", Bound::Included(b"d" as &[u8]));
+        assert_eq!(hits.len(), 3);
+    }
+
+    #[test]
+    fn scan_sees_through_runs_with_tombstones() {
+        let mut kv = KvStore::with_memtable_limit(64);
+        for i in 0..30u32 {
+            kv.put(format!("p/{i:02}").as_bytes(), b"v");
+        }
+        kv.delete(b"p/05");
+        kv.delete(b"p/25");
+        let hits = kv.scan_prefix(b"p/");
+        assert_eq!(hits.len(), 28);
+        assert!(!hits.iter().any(|(k, _)| k == b"p/05" || k == b"p/25"));
+    }
+
+    #[test]
+    fn compact_drops_tombstones_and_preserves_data() {
+        let mut kv = KvStore::with_memtable_limit(64);
+        for i in 0..50u32 {
+            kv.put(format!("k{i:02}").as_bytes(), &i.to_le_bytes());
+        }
+        kv.delete(b"k00");
+        kv.compact();
+        let s = kv.stats();
+        assert_eq!(s.runs, 1);
+        assert_eq!(s.live_keys, 49);
+        assert!(kv.get(b"k00").is_none());
+        assert_eq!(kv.get(b"k49").unwrap(), 49u32.to_le_bytes());
+    }
+
+    #[test]
+    fn auto_compaction_bounds_runs() {
+        let mut kv = KvStore::with_memtable_limit(64);
+        for i in 0..2000u32 {
+            kv.put(format!("key{i:06}").as_bytes(), &i.to_le_bytes());
+        }
+        assert!(kv.stats().runs <= 9, "runs={}", kv.stats().runs);
+        assert_eq!(kv.len(), 2000);
+    }
+
+    #[test]
+    fn batch_put() {
+        let mut kv = KvStore::new();
+        let items: Vec<(Vec<u8>, Vec<u8>)> = (0..10u32)
+            .map(|i| (format!("b{i}").into_bytes(), i.to_le_bytes().to_vec()))
+            .collect();
+        kv.put_batch(items.iter().map(|(k, v)| (k.as_slice(), v.as_slice())));
+        assert_eq!(kv.len(), 10);
+    }
+
+    #[test]
+    fn write_amplification_accounting() {
+        let mut kv = KvStore::with_memtable_limit(64);
+        for i in 0..100u32 {
+            kv.put(format!("key{i:04}").as_bytes(), b"0123456789");
+        }
+        let s = kv.stats();
+        assert!(s.bytes_written > 0);
+        assert!(s.bytes_flushed > 0);
+        assert!(s.bytes_flushed <= s.bytes_written + 64);
+    }
+
+    #[test]
+    fn empty_store() {
+        let kv = KvStore::new();
+        assert!(kv.is_empty());
+        assert!(kv.scan_prefix(b"x").is_empty());
+        assert_eq!(kv.stats().live_keys, 0);
+    }
+}

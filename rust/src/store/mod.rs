@@ -1,0 +1,24 @@
+//! The programmable object store substrate (the Ceph/RADOS stand-in).
+//!
+//! - [`kvstore`] — server-local ordered kv store (RocksDB stand-in)
+//! - [`chunkstore`] — server-local extent/chunk store (BlueStore stand-in)
+//! - [`objclass`] — object-class extension registry (Skyhook-Extensions)
+//! - [`osd`] — one storage server combining the three, with virtual-time
+//!   device queueing
+//! - [`placement`] — CRUSH-like deterministic placement (PGs + straw2)
+//! - [`cluster`] — the distributed store: replication, failover,
+//!   rebalancing, pushdown dispatch
+
+pub mod chunkstore;
+pub mod cluster;
+pub mod kvstore;
+pub mod objclass;
+pub mod osd;
+pub mod placement;
+
+pub use chunkstore::{ChunkId, ChunkStore};
+pub use cluster::{Cluster, ClusterCounters};
+pub use kvstore::{KvStats, KvStore};
+pub use objclass::{ClassRegistry, ClsBackend, Handler};
+pub use osd::{ObjStat, Osd, OsdCounters, Timed};
+pub use placement::{hash_name, OsdId, OsdMap, PgId};

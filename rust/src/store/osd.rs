@@ -1,0 +1,588 @@
+//! A simulated storage server (OSD): object map + kv store (xattrs, omap,
+//! indexes) + chunk store (data) + object-class execution, with a device
+//! [`Timeline`] so concurrent requests queue realistically and every
+//! operation is charged virtual device/CPU time.
+
+use super::chunkstore::{ChunkId, ChunkStore};
+use super::kvstore::KvStore;
+use super::objclass::{ClassRegistry, ClsBackend};
+use super::placement::OsdId;
+use crate::error::{Error, Result};
+use crate::simnet::{CostParams, Timeline};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A value paired with the virtual time at which it became available.
+#[derive(Clone, Debug)]
+pub struct Timed<T> {
+    pub value: T,
+    pub finish: f64,
+}
+
+impl<T> Timed<T> {
+    pub fn new(value: T, finish: f64) -> Self {
+        Self { value, finish }
+    }
+    pub fn map<U>(self, f: impl FnOnce(T) -> U) -> Timed<U> {
+        Timed {
+            value: f(self.value),
+            finish: self.finish,
+        }
+    }
+}
+
+/// Object metadata + stats snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObjStat {
+    pub name: String,
+    pub size: u64,
+}
+
+#[derive(Default)]
+struct OsdInner {
+    objects: HashMap<String, ChunkId>,
+    kv: KvStore,
+    chunks: ChunkStore,
+}
+
+/// Lifetime counters per OSD.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OsdCounters {
+    pub ops: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub cls_calls: u64,
+    pub cls_cpu_seconds: f64,
+}
+
+/// One simulated storage server.
+pub struct Osd {
+    id: OsdId,
+    inner: Mutex<OsdInner>,
+    timeline: Timeline,
+    cost: CostParams,
+    registry: Arc<ClassRegistry>,
+    down: AtomicBool,
+    counters: Mutex<OsdCounters>,
+}
+
+impl Osd {
+    pub fn new(id: OsdId, cost: CostParams, registry: Arc<ClassRegistry>) -> Self {
+        Self {
+            id,
+            inner: Mutex::new(OsdInner::default()),
+            timeline: Timeline::new(),
+            cost,
+            registry,
+            down: AtomicBool::new(false),
+            counters: Mutex::new(OsdCounters::default()),
+        }
+    }
+
+    pub fn id(&self) -> OsdId {
+        self.id
+    }
+
+    /// Failure injection: a down OSD rejects all ops with `Unavailable`.
+    pub fn set_down(&self, down: bool) {
+        self.down.store(down, Ordering::SeqCst);
+    }
+
+    pub fn is_down(&self) -> bool {
+        self.down.load(Ordering::SeqCst)
+    }
+
+    fn check_up(&self) -> Result<()> {
+        if self.is_down() {
+            Err(Error::Unavailable(format!("osd.{} is down", self.id)))
+        } else {
+            Ok(())
+        }
+    }
+
+    fn charge(&self, at: f64, service: f64) -> f64 {
+        self.timeline.submit(at, service)
+    }
+
+    fn count(&self, bytes_read: u64, bytes_written: u64) {
+        let mut c = self.counters.lock().unwrap();
+        c.ops += 1;
+        c.bytes_read += bytes_read;
+        c.bytes_written += bytes_written;
+    }
+
+    /// Counters snapshot.
+    pub fn counters(&self) -> OsdCounters {
+        *self.counters.lock().unwrap()
+    }
+
+    /// Virtual time at which this OSD's device queue drains.
+    pub fn busy_until(&self) -> f64 {
+        self.timeline.busy_until()
+    }
+
+    /// Reset virtual-time state (between bench cases).
+    pub fn reset_timeline(&self) {
+        self.timeline.reset();
+    }
+
+    // ---- plain object ops ----------------------------------------------
+
+    /// Create or replace an object's data.
+    pub fn write_full(&self, at: f64, name: &str, data: &[u8]) -> Result<Timed<()>> {
+        self.check_up()?;
+        let mut inner = self.inner.lock().unwrap();
+        match inner.objects.get(name).copied() {
+            Some(chunk) => inner.chunks.update(chunk, data)?,
+            None => {
+                let chunk = inner.chunks.put(data);
+                inner.objects.insert(name.to_string(), chunk);
+            }
+        }
+        drop(inner);
+        self.count(0, data.len() as u64);
+        let finish = self.charge(at, self.cost.dev_write_time(data.len() as u64));
+        Ok(Timed::new((), finish))
+    }
+
+    /// Read an object's full data.
+    pub fn read(&self, at: f64, name: &str) -> Result<Timed<Vec<u8>>> {
+        self.check_up()?;
+        let mut inner = self.inner.lock().unwrap();
+        let chunk = *inner
+            .objects
+            .get(name)
+            .ok_or_else(|| Error::NotFound(format!("osd.{}: {name}", self.id)))?;
+        let data = inner.chunks.get(chunk)?;
+        drop(inner);
+        self.count(data.len() as u64, 0);
+        let finish = self.charge(at, self.cost.dev_read_time(data.len() as u64));
+        Ok(Timed::new(data, finish))
+    }
+
+    /// Read a byte range.
+    pub fn read_range(&self, at: f64, name: &str, offset: usize, len: usize) -> Result<Timed<Vec<u8>>> {
+        self.check_up()?;
+        let mut inner = self.inner.lock().unwrap();
+        let chunk = *inner
+            .objects
+            .get(name)
+            .ok_or_else(|| Error::NotFound(format!("osd.{}: {name}", self.id)))?;
+        let data = inner.chunks.get_range(chunk, offset, len)?;
+        drop(inner);
+        self.count(len as u64, 0);
+        let finish = self.charge(at, self.cost.dev_read_time(len as u64));
+        Ok(Timed::new(data, finish))
+    }
+
+    /// Delete an object (data + xattrs + omap).
+    pub fn delete(&self, at: f64, name: &str) -> Result<Timed<()>> {
+        self.check_up()?;
+        let mut inner = self.inner.lock().unwrap();
+        let chunk = inner
+            .objects
+            .remove(name)
+            .ok_or_else(|| Error::NotFound(format!("osd.{}: {name}", self.id)))?;
+        inner.chunks.delete(chunk)?;
+        let xprefix = xattr_key(name, "");
+        let mprefix = omap_key(name, b"");
+        let dead: Vec<Vec<u8>> = inner
+            .kv
+            .scan_prefix(&xprefix)
+            .into_iter()
+            .chain(inner.kv.scan_prefix(&mprefix))
+            .map(|(k, _)| k)
+            .collect();
+        for k in dead {
+            inner.kv.delete(&k);
+        }
+        drop(inner);
+        self.count(0, 0);
+        let finish = self.charge(at, self.cost.op_overhead_s);
+        Ok(Timed::new((), finish))
+    }
+
+    /// Object existence + size.
+    pub fn stat(&self, at: f64, name: &str) -> Result<Timed<ObjStat>> {
+        self.check_up()?;
+        let inner = self.inner.lock().unwrap();
+        let chunk = *inner
+            .objects
+            .get(name)
+            .ok_or_else(|| Error::NotFound(format!("osd.{}: {name}", self.id)))?;
+        let size = inner.chunks.len_of(chunk)? as u64;
+        drop(inner);
+        let finish = self.charge(at, self.cost.op_overhead_s);
+        Ok(Timed::new(
+            ObjStat {
+                name: name.to_string(),
+                size,
+            },
+            finish,
+        ))
+    }
+
+    pub fn exists(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().objects.contains_key(name)
+    }
+
+    /// All object names on this OSD (sorted).
+    pub fn list(&self, at: f64) -> Result<Timed<Vec<String>>> {
+        self.check_up()?;
+        let inner = self.inner.lock().unwrap();
+        let mut names: Vec<String> = inner.objects.keys().cloned().collect();
+        drop(inner);
+        names.sort();
+        let finish = self.charge(at, self.cost.op_overhead_s);
+        Ok(Timed::new(names, finish))
+    }
+
+    /// Set an extended attribute.
+    pub fn setxattr(&self, at: f64, name: &str, key: &str, value: &[u8]) -> Result<Timed<()>> {
+        self.check_up()?;
+        if !self.exists(name) {
+            return Err(Error::NotFound(format!("osd.{}: {name}", self.id)));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.kv.put(&xattr_key(name, key), value);
+        drop(inner);
+        self.count(0, value.len() as u64);
+        let finish = self.charge(at, self.cost.op_overhead_s);
+        Ok(Timed::new((), finish))
+    }
+
+    /// Get an extended attribute.
+    pub fn getxattr(&self, at: f64, name: &str, key: &str) -> Result<Timed<Option<Vec<u8>>>> {
+        self.check_up()?;
+        let inner = self.inner.lock().unwrap();
+        let v = inner.kv.get(&xattr_key(name, key));
+        drop(inner);
+        let finish = self.charge(at, self.cost.op_overhead_s);
+        Ok(Timed::new(v, finish))
+    }
+
+    // ---- object-class execution ------------------------------------------
+
+    /// Execute `(class, method)` against an object *on this OSD*. The
+    /// handler's data/omap accesses and charged CPU are all serviced by
+    /// this OSD's device timeline — this is the paper's computation
+    /// offload path.
+    pub fn call(
+        &self,
+        at: f64,
+        name: &str,
+        class: &str,
+        method: &str,
+        input: &[u8],
+    ) -> Result<Timed<Vec<u8>>> {
+        self.check_up()?;
+        let handler = self.registry.get(class, method)?;
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.objects.contains_key(name) {
+            return Err(Error::NotFound(format!("osd.{}: {name}", self.id)));
+        }
+        let mut backend = OsdBackend {
+            inner: &mut inner,
+            name: name.to_string(),
+            bytes_read: 0,
+            bytes_written: 0,
+            cpu: 0.0,
+        };
+        let out = handler(&mut backend, input)?;
+        let (br, bw, cpu) = (backend.bytes_read, backend.bytes_written, backend.cpu);
+        drop(inner);
+        {
+            let mut c = self.counters.lock().unwrap();
+            c.ops += 1;
+            c.cls_calls += 1;
+            c.bytes_read += br;
+            c.bytes_written += bw;
+            c.cls_cpu_seconds += cpu;
+        }
+        let service = self.cost.op_overhead_s
+            + br as f64 / self.cost.dev_read_bw
+            + bw as f64 / self.cost.dev_write_bw
+            + cpu;
+        let finish = self.charge(at, service);
+        Ok(Timed::new(out, finish))
+    }
+
+    /// Total bytes stored in this OSD's chunk store.
+    pub fn bytes_stored(&self) -> u64 {
+        self.inner.lock().unwrap().chunks.bytes_stored()
+    }
+
+    /// Number of objects.
+    pub fn object_count(&self) -> usize {
+        self.inner.lock().unwrap().objects.len()
+    }
+}
+
+fn xattr_key(obj: &str, key: &str) -> Vec<u8> {
+    let mut k = Vec::with_capacity(obj.len() + key.len() + 4);
+    k.extend_from_slice(b"x/");
+    k.extend_from_slice(obj.as_bytes());
+    k.push(0);
+    k.extend_from_slice(key.as_bytes());
+    k
+}
+
+fn omap_key(obj: &str, key: &[u8]) -> Vec<u8> {
+    let mut k = Vec::with_capacity(obj.len() + key.len() + 4);
+    k.extend_from_slice(b"m/");
+    k.extend_from_slice(obj.as_bytes());
+    k.push(0);
+    k.extend_from_slice(key);
+    k
+}
+
+/// [`ClsBackend`] view over one object of one OSD, with byte metering.
+struct OsdBackend<'a> {
+    inner: &'a mut OsdInner,
+    name: String,
+    bytes_read: u64,
+    bytes_written: u64,
+    cpu: f64,
+}
+
+impl ClsBackend for OsdBackend<'_> {
+    fn read(&mut self) -> Result<Vec<u8>> {
+        let chunk = *self
+            .inner
+            .objects
+            .get(&self.name)
+            .ok_or_else(|| Error::NotFound(self.name.clone()))?;
+        let data = self.inner.chunks.get(chunk)?;
+        self.bytes_read += data.len() as u64;
+        Ok(data)
+    }
+
+    fn read_range(&mut self, offset: usize, len: usize) -> Result<Vec<u8>> {
+        let chunk = *self
+            .inner
+            .objects
+            .get(&self.name)
+            .ok_or_else(|| Error::NotFound(self.name.clone()))?;
+        let data = self.inner.chunks.get_range(chunk, offset, len)?;
+        self.bytes_read += len as u64;
+        Ok(data)
+    }
+
+    fn write(&mut self, data: &[u8]) -> Result<()> {
+        let chunk = *self
+            .inner
+            .objects
+            .get(&self.name)
+            .ok_or_else(|| Error::NotFound(self.name.clone()))?;
+        self.inner.chunks.update(chunk, data)?;
+        self.bytes_written += data.len() as u64;
+        Ok(())
+    }
+
+    fn size(&mut self) -> Result<usize> {
+        let chunk = *self
+            .inner
+            .objects
+            .get(&self.name)
+            .ok_or_else(|| Error::NotFound(self.name.clone()))?;
+        self.inner.chunks.len_of(chunk)
+    }
+
+    fn getxattr(&mut self, key: &str) -> Option<Vec<u8>> {
+        self.inner
+            .kv
+            .get(&xattr_key(&self.name, key))
+            .filter(|v| !v.is_empty())
+    }
+
+    fn setxattr(&mut self, key: &str, value: &[u8]) {
+        self.bytes_written += value.len() as u64;
+        self.inner.kv.put(&xattr_key(&self.name, key), value);
+    }
+
+    fn omap_get(&mut self, key: &[u8]) -> Option<Vec<u8>> {
+        let v = self.inner.kv.get(&omap_key(&self.name, key));
+        if let Some(ref v) = v {
+            self.bytes_read += v.len() as u64;
+        }
+        v
+    }
+
+    fn omap_set(&mut self, key: &[u8], value: &[u8]) {
+        self.bytes_written += (key.len() + value.len()) as u64;
+        self.inner.kv.put(&omap_key(&self.name, key), value);
+    }
+
+    fn omap_scan_prefix(&mut self, prefix: &[u8]) -> Vec<(Vec<u8>, Vec<u8>)> {
+        let full_prefix = omap_key(&self.name, prefix);
+        let strip = omap_key(&self.name, b"").len();
+        let hits = self.inner.kv.scan_prefix(&full_prefix);
+        self.bytes_read += hits
+            .iter()
+            .map(|(k, v)| (k.len() + v.len()) as u64)
+            .sum::<u64>();
+        hits.into_iter()
+            .map(|(k, v)| (k[strip..].to_vec(), v))
+            .collect()
+    }
+
+    fn charge_cpu(&mut self, seconds: f64) {
+        self.cpu += seconds;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn osd() -> Osd {
+        Osd::new(
+            0,
+            CostParams::paper_testbed(),
+            Arc::new(ClassRegistry::with_builtins()),
+        )
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let o = osd();
+        o.write_full(0.0, "obj.a", b"hello").unwrap();
+        let r = o.read(0.0, "obj.a").unwrap();
+        assert_eq!(r.value, b"hello");
+        assert!(r.finish > 0.0);
+    }
+
+    #[test]
+    fn overwrite_replaces() {
+        let o = osd();
+        o.write_full(0.0, "o", b"v1").unwrap();
+        o.write_full(0.0, "o", b"v2-longer").unwrap();
+        assert_eq!(o.read(0.0, "o").unwrap().value, b"v2-longer");
+        assert_eq!(o.object_count(), 1);
+    }
+
+    #[test]
+    fn read_missing_is_not_found() {
+        let o = osd();
+        assert!(matches!(o.read(0.0, "nope"), Err(Error::NotFound(_))));
+    }
+
+    #[test]
+    fn read_range_works() {
+        let o = osd();
+        o.write_full(0.0, "o", b"0123456789").unwrap();
+        assert_eq!(o.read_range(0.0, "o", 3, 4).unwrap().value, b"3456");
+    }
+
+    #[test]
+    fn delete_removes_everything() {
+        let o = osd();
+        o.write_full(0.0, "o", b"data").unwrap();
+        o.setxattr(0.0, "o", "k", b"v").unwrap();
+        o.delete(0.0, "o").unwrap();
+        assert!(!o.exists("o"));
+        assert!(o.read(0.0, "o").is_err());
+        // Re-create: xattrs must not resurrect.
+        o.write_full(0.0, "o", b"data2").unwrap();
+        assert!(o.getxattr(0.0, "o", "k").unwrap().value.is_none());
+    }
+
+    #[test]
+    fn stat_and_list() {
+        let o = osd();
+        o.write_full(0.0, "b", b"22").unwrap();
+        o.write_full(0.0, "a", b"1").unwrap();
+        let st = o.stat(0.0, "b").unwrap().value;
+        assert_eq!(st.size, 2);
+        assert_eq!(o.list(0.0).unwrap().value, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn xattr_roundtrip() {
+        let o = osd();
+        o.write_full(0.0, "o", b"d").unwrap();
+        o.setxattr(0.0, "o", "schema", b"f32[4]").unwrap();
+        assert_eq!(
+            o.getxattr(0.0, "o", "schema").unwrap().value.unwrap(),
+            b"f32[4]"
+        );
+        assert!(o.getxattr(0.0, "o", "missing").unwrap().value.is_none());
+        assert!(o.setxattr(0.0, "missing", "k", b"v").is_err());
+    }
+
+    #[test]
+    fn down_osd_rejects_ops() {
+        let o = osd();
+        o.write_full(0.0, "o", b"d").unwrap();
+        o.set_down(true);
+        assert!(matches!(o.read(0.0, "o"), Err(Error::Unavailable(_))));
+        assert!(o.write_full(0.0, "p", b"x").is_err());
+        assert!(o.call(0.0, "o", "bytes", "stat", &[]).is_err());
+        o.set_down(false);
+        assert_eq!(o.read(0.0, "o").unwrap().value, b"d");
+    }
+
+    #[test]
+    fn ops_queue_on_device_timeline() {
+        let o = osd();
+        let d = vec![0u8; 1_000_000];
+        let t1 = o.write_full(0.0, "a", &d).unwrap().finish;
+        let t2 = o.write_full(0.0, "b", &d).unwrap().finish;
+        // Second write queues behind the first on the same device.
+        assert!(t2 > t1 * 1.8, "t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn cls_call_executes_and_charges() {
+        let o = osd();
+        o.write_full(0.0, "o", b"0123456789").unwrap();
+        let r = o.call(0.0, "o", "bytes", "stat", &[]).unwrap();
+        assert_eq!(u64::from_le_bytes(r.value.try_into().unwrap()), 10);
+        let c = o.counters();
+        assert_eq!(c.cls_calls, 1);
+    }
+
+    #[test]
+    fn cls_call_missing_object() {
+        let o = osd();
+        assert!(matches!(
+            o.call(0.0, "nope", "bytes", "stat", &[]),
+            Err(Error::NotFound(_))
+        ));
+    }
+
+    #[test]
+    fn cls_call_unknown_class() {
+        let o = osd();
+        o.write_full(0.0, "o", b"d").unwrap();
+        assert!(matches!(
+            o.call(0.0, "o", "zzz", "m", &[]),
+            Err(Error::ObjClass(_))
+        ));
+    }
+
+    #[test]
+    fn cls_compress_on_osd() {
+        let o = osd();
+        let data = vec![7u8; 100_000];
+        o.write_full(0.0, "o", &data).unwrap();
+        let before = o.bytes_stored();
+        o.call(0.0, "o", "bytes", "compress", &[]).unwrap();
+        assert!(o.bytes_stored() < before / 10);
+        o.call(0.0, "o", "bytes", "decompress", &[]).unwrap();
+        assert_eq!(o.read(0.0, "o").unwrap().value, data);
+        assert!(o.counters().cls_cpu_seconds > 0.0);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let o = osd();
+        o.write_full(0.0, "o", b"12345").unwrap();
+        o.read(0.0, "o").unwrap();
+        let c = o.counters();
+        assert_eq!(c.bytes_written, 5);
+        assert_eq!(c.bytes_read, 5);
+        assert!(c.ops >= 2);
+    }
+}

@@ -1,0 +1,323 @@
+//! CRUSH-like object placement.
+//!
+//! Objects hash to placement groups (PGs); each PG maps to an ordered set
+//! of distinct OSDs via straw2 draws (highest weighted pseudo-random draw
+//! wins), so placement is:
+//!
+//! - **deterministic** — any client computes the same mapping from the map
+//!   alone (no directory lookup per object, the core RADOS property),
+//! - **weighted** — OSDs receive load proportional to weight,
+//! - **stable** — changing one OSD's weight or membership only moves the
+//!   PGs that must move (straw2's independence property), which is what
+//!   bounds rebalancing traffic in `coordinator::rebalance`.
+
+use crate::util::rng::{mix2, mix64};
+
+/// Identifier of an OSD in the cluster map.
+pub type OsdId = u32;
+
+/// Placement group id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PgId(pub u32);
+
+/// Cluster map: which OSDs exist, their weights, and who is up.
+/// Epoch increments on every mutation so cached mappings can be
+/// invalidated (Ceph's osdmap epoch).
+#[derive(Clone, Debug)]
+pub struct OsdMap {
+    epoch: u64,
+    /// weight per OSD id; 0.0 = removed ("out").
+    weights: Vec<f64>,
+    /// up/down state per OSD id (down OSDs still own PGs; reads fail over).
+    up: Vec<bool>,
+    pg_count: u32,
+}
+
+impl OsdMap {
+    /// A fresh map with `n` OSDs of equal weight.
+    pub fn new(n: usize, pg_count: u32) -> Self {
+        assert!(n > 0 && pg_count > 0);
+        Self {
+            epoch: 1,
+            weights: vec![1.0; n],
+            up: vec![true; n],
+            pg_count,
+        }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+    pub fn pg_count(&self) -> u32 {
+        self.pg_count
+    }
+
+    /// Total OSD slots (including out/down ones).
+    pub fn size(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// OSDs with weight > 0.
+    pub fn in_osds(&self) -> Vec<OsdId> {
+        (0..self.weights.len() as u32)
+            .filter(|&i| self.weights[i as usize] > 0.0)
+            .collect()
+    }
+
+    pub fn weight(&self, osd: OsdId) -> f64 {
+        self.weights.get(osd as usize).copied().unwrap_or(0.0)
+    }
+
+    pub fn is_up(&self, osd: OsdId) -> bool {
+        self.up.get(osd as usize).copied().unwrap_or(false)
+    }
+
+    /// Add a new OSD with the given weight; returns its id.
+    pub fn add_osd(&mut self, weight: f64) -> OsdId {
+        self.weights.push(weight.max(0.0));
+        self.up.push(true);
+        self.epoch += 1;
+        (self.weights.len() - 1) as OsdId
+    }
+
+    /// Set an OSD's weight (0 = out). No-op if id is unknown.
+    pub fn set_weight(&mut self, osd: OsdId, weight: f64) {
+        if let Some(w) = self.weights.get_mut(osd as usize) {
+            *w = weight.max(0.0);
+            self.epoch += 1;
+        }
+    }
+
+    /// Mark up/down (liveness, orthogonal to weight).
+    pub fn set_up(&mut self, osd: OsdId, up: bool) {
+        if let Some(u) = self.up.get_mut(osd as usize) {
+            *u = up;
+            self.epoch += 1;
+        }
+    }
+
+    /// Map an object name to its PG. If the name carries a locality
+    /// prefix (`group#rest`, Ceph's object locator), only the prefix is
+    /// hashed so all objects of the group share a PG — the co-location
+    /// hook used by the partitioner (§3.1).
+    pub fn pg_of(&self, object: &str) -> PgId {
+        let key = match object.split_once('#') {
+            Some((group, _)) => group,
+            None => object,
+        };
+        let h = hash_name(key);
+        PgId((h % self.pg_count as u64) as u32)
+    }
+
+    /// The ordered replica set (primary first) for a PG: straw2 over all
+    /// in-OSDs. Returns up to `replicas` distinct OSDs (fewer only if the
+    /// cluster is smaller than the replica count).
+    pub fn pg_to_osds(&self, pg: PgId, replicas: usize) -> Vec<OsdId> {
+        let candidates = self.in_osds();
+        let r = replicas.min(candidates.len());
+        let mut draws: Vec<(f64, OsdId)> = candidates
+            .iter()
+            .map(|&osd| (straw2_draw(pg, osd, self.weights[osd as usize]), osd))
+            .collect();
+        // Highest draw first; ties broken by id for determinism.
+        draws.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        draws.into_iter().take(r).map(|(_, osd)| osd).collect()
+    }
+
+    /// Placement of an object: ordered OSD set, primary first.
+    pub fn place(&self, object: &str, replicas: usize) -> Vec<OsdId> {
+        self.pg_to_osds(self.pg_of(object), replicas)
+    }
+
+    /// Primary OSD for an object.
+    pub fn primary(&self, object: &str, replicas: usize) -> Option<OsdId> {
+        self.place(object, replicas).first().copied()
+    }
+}
+
+/// Stable 64-bit hash of an object name.
+pub fn hash_name(name: &str) -> u64 {
+    // FNV-1a then mixed — cheap, stable, good dispersion for short names.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    mix64(h)
+}
+
+/// straw2 draw: `ln(u) / w` with `u` uniform in (0,1] derived from
+/// `hash(pg, osd)`. Larger is better. Weight-0 OSDs never win.
+fn straw2_draw(pg: PgId, osd: OsdId, weight: f64) -> f64 {
+    if weight <= 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    let h = mix2(pg.0 as u64, osd as u64 ^ 0x5bd1e995);
+    // Map to (0, 1]: use 53 high bits, avoid exactly 0.
+    let u = ((h >> 11) as f64 + 1.0) / (1u64 << 53) as f64;
+    u.ln() / weight
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn placement_is_deterministic() {
+        let m = OsdMap::new(8, 128);
+        for name in ["obj.0", "obj.1", "ds/a/chunk.00012"] {
+            assert_eq!(m.place(name, 3), m.place(name, 3));
+        }
+    }
+
+    #[test]
+    fn replicas_are_distinct_and_bounded() {
+        let m = OsdMap::new(5, 64);
+        for i in 0..200 {
+            let osds = m.place(&format!("o{i}"), 3);
+            assert_eq!(osds.len(), 3);
+            let mut dedup = osds.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), 3, "replicas must be distinct: {osds:?}");
+        }
+    }
+
+    #[test]
+    fn replica_count_capped_by_cluster_size() {
+        let m = OsdMap::new(2, 16);
+        let osds = m.place("x", 3);
+        assert_eq!(osds.len(), 2);
+    }
+
+    #[test]
+    fn load_is_roughly_balanced() {
+        let m = OsdMap::new(8, 256);
+        let mut counts: HashMap<OsdId, usize> = HashMap::new();
+        let n = 4000;
+        for i in 0..n {
+            let primary = m.primary(&format!("obj.{i}"), 2).unwrap();
+            *counts.entry(primary).or_default() += 1;
+        }
+        let expect = n / 8;
+        for (&osd, &c) in &counts {
+            assert!(
+                (c as f64 - expect as f64).abs() / (expect as f64) < 0.35,
+                "osd {osd} has {c} (expect ~{expect})"
+            );
+        }
+    }
+
+    #[test]
+    fn weights_bias_placement() {
+        let mut m = OsdMap::new(4, 256);
+        m.set_weight(0, 3.0); // 3x the weight
+        let mut counts = vec![0usize; 4];
+        for i in 0..6000 {
+            counts[m.primary(&format!("o{i}"), 1).unwrap() as usize] += 1;
+        }
+        // osd 0 should get roughly 3/6 of primaries, others 1/6 each.
+        assert!(
+            counts[0] as f64 > 2.0 * counts[1] as f64,
+            "weighted counts: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn zero_weight_excluded() {
+        let mut m = OsdMap::new(4, 64);
+        m.set_weight(2, 0.0);
+        for i in 0..500 {
+            let osds = m.place(&format!("o{i}"), 3);
+            assert!(!osds.contains(&2), "out OSD placed: {osds:?}");
+        }
+        assert_eq!(m.in_osds(), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn stability_adding_an_osd_moves_few_pgs() {
+        let before = OsdMap::new(8, 512);
+        let mut after = before.clone();
+        after.add_osd(1.0);
+        let mut moved = 0;
+        for pg in 0..512 {
+            let a = before.pg_to_osds(PgId(pg), 1);
+            let b = after.pg_to_osds(PgId(pg), 1);
+            if a != b {
+                moved += 1;
+            }
+        }
+        // Ideal movement for 8→9 equal OSDs is 1/9 ≈ 11% of PGs.
+        let frac = moved as f64 / 512.0;
+        assert!(frac < 0.25, "moved {frac:.2} of PGs (want ~0.11)");
+        assert!(frac > 0.02, "suspiciously little movement: {frac:.3}");
+    }
+
+    #[test]
+    fn stability_removing_an_osd_only_moves_its_pgs() {
+        let before = OsdMap::new(8, 512);
+        let mut after = before.clone();
+        after.set_weight(3, 0.0);
+        for pg in 0..512 {
+            let a = before.pg_to_osds(PgId(pg), 1);
+            let b = after.pg_to_osds(PgId(pg), 1);
+            if a[0] != 3 {
+                assert_eq!(a, b, "pg {pg} moved although its OSD survived");
+            } else {
+                assert_ne!(b[0], 3);
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_increments_on_changes() {
+        let mut m = OsdMap::new(3, 16);
+        let e0 = m.epoch();
+        m.set_weight(0, 2.0);
+        assert!(m.epoch() > e0);
+        let e1 = m.epoch();
+        m.set_up(1, false);
+        assert!(m.epoch() > e1);
+        let e2 = m.epoch();
+        m.add_osd(1.0);
+        assert!(m.epoch() > e2);
+    }
+
+    #[test]
+    fn up_down_is_tracked() {
+        let mut m = OsdMap::new(3, 16);
+        assert!(m.is_up(1));
+        m.set_up(1, false);
+        assert!(!m.is_up(1));
+        // down ≠ out: still owns placements
+        let owns: bool = (0..200).any(|i| m.place(&format!("o{i}"), 2).contains(&1));
+        assert!(owns);
+    }
+
+    #[test]
+    fn pg_mapping_is_uniform() {
+        let m = OsdMap::new(4, 64);
+        let mut counts = vec![0usize; 64];
+        for i in 0..6400 {
+            counts[m.pg_of(&format!("object-{i}")).0 as usize] += 1;
+        }
+        let (min, max) = (
+            counts.iter().min().unwrap(),
+            counts.iter().max().unwrap(),
+        );
+        assert!(*min > 50 && *max < 170, "pg skew: min={min} max={max}");
+    }
+
+    #[test]
+    fn hash_name_stable_and_dispersed() {
+        assert_eq!(hash_name("abc"), hash_name("abc"));
+        assert_ne!(hash_name("abc"), hash_name("abd"));
+        // Sequential names should not collide in the low bits.
+        let mut pgs = std::collections::HashSet::new();
+        for i in 0..100 {
+            pgs.insert(hash_name(&format!("o{i}")) % 128);
+        }
+        assert!(pgs.len() > 40);
+    }
+}

@@ -1,0 +1,272 @@
+//! Mini benchmark harness (criterion is unavailable offline).
+//!
+//! Every file in `benches/` is a `harness = false` binary built on this
+//! module: warmup, fixed sample count, mean/p50/p95, optional throughput,
+//! and aligned table printing so each bench can emit the paper-style rows
+//! the experiment reproduces.
+
+use super::stats::percentile;
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+    pub bytes_per_iter: Option<u64>,
+    pub items_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    fn sorted(&self) -> Vec<f64> {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s
+    }
+
+    pub fn p50(&self) -> f64 {
+        percentile(&self.sorted(), 0.50)
+    }
+    pub fn p95(&self) -> f64 {
+        percentile(&self.sorted(), 0.95)
+    }
+    pub fn min(&self) -> f64 {
+        self.sorted().first().copied().unwrap_or(0.0)
+    }
+
+    /// MB/s if bytes_per_iter is set.
+    pub fn throughput_mbps(&self) -> Option<f64> {
+        self.bytes_per_iter
+            .map(|b| b as f64 / (1024.0 * 1024.0) / self.mean())
+    }
+
+    /// items/s if items_per_iter is set.
+    pub fn items_per_sec(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n as f64 / self.mean())
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    warmup_iters: usize,
+    sample_iters: usize,
+    min_samples: usize,
+    max_seconds: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            sample_iters: 10,
+            min_samples: 3,
+            max_seconds: 20.0,
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup_iters = n;
+        self
+    }
+    pub fn samples(mut self, n: usize) -> Self {
+        self.sample_iters = n;
+        self
+    }
+    pub fn max_seconds(mut self, s: f64) -> Self {
+        self.max_seconds = s;
+        self
+    }
+
+    /// Time `f` (called once per sample).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let started = Instant::now();
+        let mut samples = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+            if started.elapsed().as_secs_f64() > self.max_seconds
+                && samples.len() >= self.min_samples
+            {
+                break;
+            }
+        }
+        BenchResult {
+            name: name.to_string(),
+            samples,
+            bytes_per_iter: None,
+            items_per_iter: None,
+        }
+    }
+
+    /// Time `f` and annotate with bytes processed per iteration.
+    pub fn run_bytes<F: FnMut()>(&self, name: &str, bytes: u64, f: F) -> BenchResult {
+        let mut r = self.run(name, f);
+        r.bytes_per_iter = Some(bytes);
+        r
+    }
+
+    /// Time `f` and annotate with logical items per iteration.
+    pub fn run_items<F: FnMut()>(&self, name: &str, items: u64, f: F) -> BenchResult {
+        let mut r = self.run(name, f);
+        r.items_per_iter = Some(items);
+        r
+    }
+}
+
+fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Print a criterion-style report for a set of results.
+pub fn report(title: &str, results: &[BenchResult]) {
+    println!();
+    println!("=== {title} ===");
+    let name_w = results
+        .iter()
+        .map(|r| r.name.len())
+        .max()
+        .unwrap_or(4)
+        .max(4);
+    println!(
+        "{:<name_w$}  {:>12}  {:>12}  {:>12}  {:>14}",
+        "case", "mean", "p50", "p95", "throughput"
+    );
+    for r in results {
+        let thr = if let Some(m) = r.throughput_mbps() {
+            format!("{m:.1} MB/s")
+        } else if let Some(i) = r.items_per_sec() {
+            format!("{i:.0} items/s")
+        } else {
+            "-".to_string()
+        };
+        println!(
+            "{:<name_w$}  {:>12}  {:>12}  {:>12}  {:>14}",
+            r.name,
+            fmt_secs(r.mean()),
+            fmt_secs(r.p50()),
+            fmt_secs(r.p95()),
+            thr
+        );
+    }
+}
+
+/// Print an arbitrary labelled table (for paper-style rows that are not
+/// simple timings, e.g. bytes moved or speedup factors).
+pub fn table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!();
+    println!("=== {title} ===");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let header_line: Vec<String> = headers
+        .iter()
+        .enumerate()
+        .map(|(i, h)| format!("{:<w$}", h, w = widths[i]))
+        .collect();
+    println!("{}", header_line.join("  "));
+    println!(
+        "{}",
+        widths
+            .iter()
+            .map(|w| "-".repeat(*w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    );
+    for row in rows {
+        let line: Vec<String> = row
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(c.len())))
+            .collect();
+        println!("{}", line.join("  "));
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// wrapper kept here so benches have one import site).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let b = Bench::new().warmup(1).samples(5);
+        let r = b.run("noop", || {
+            black_box(1 + 1);
+        });
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.mean() >= 0.0);
+        assert!(r.p50() <= r.p95() || (r.p50() - r.p95()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_throughput() {
+        let b = Bench::new().warmup(0).samples(3);
+        let r = b.run_bytes("copy", 1024 * 1024, || {
+            let v = vec![0u8; 1024 * 1024];
+            black_box(v);
+        });
+        let t = r.throughput_mbps().unwrap();
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn bench_items() {
+        let b = Bench::new().warmup(0).samples(3);
+        let r = b.run_items("iter", 1000, || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.items_per_sec().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn bench_time_budget_stops_early() {
+        let b = Bench::new().warmup(0).samples(1000).max_seconds(0.05);
+        let r = b.run("sleepy", || std::thread::sleep(std::time::Duration::from_millis(10)));
+        assert!(r.samples.len() < 1000);
+        assert!(r.samples.len() >= 3);
+    }
+
+    #[test]
+    fn fmt_secs_scales() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" µs"));
+        assert!(fmt_secs(2e-9).ends_with(" ns"));
+    }
+}

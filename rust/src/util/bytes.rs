@@ -1,0 +1,291 @@
+//! Byte-size formatting/parsing and little-endian codec helpers.
+//!
+//! The dataset layout and kv-store modules serialize fixed-width integers
+//! by hand (no serde offline); these helpers centralize that and the
+//! human-facing size strings used by the CLI and bench output.
+
+use crate::error::{Error, Result};
+
+/// Parse "4k", "16MiB", "1.5G", "512" (bytes) into a byte count.
+pub fn parse_size(s: &str) -> Result<u64> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err(Error::Config("empty size".into()));
+    }
+    let lower = s.to_ascii_lowercase();
+    let (num_part, mult) = if let Some(p) = lower.strip_suffix("kib").or(lower.strip_suffix("kb")).or(lower.strip_suffix("k")) {
+        (p, 1024u64)
+    } else if let Some(p) = lower.strip_suffix("mib").or(lower.strip_suffix("mb")).or(lower.strip_suffix("m")) {
+        (p, 1024 * 1024)
+    } else if let Some(p) = lower.strip_suffix("gib").or(lower.strip_suffix("gb")).or(lower.strip_suffix("g")) {
+        (p, 1024 * 1024 * 1024)
+    } else if let Some(p) = lower.strip_suffix("b") {
+        (p, 1)
+    } else {
+        (lower.as_str(), 1)
+    };
+    let num_part = num_part.trim();
+    let value: f64 = num_part
+        .parse()
+        .map_err(|_| Error::Config(format!("bad size: {s:?}")))?;
+    if value < 0.0 {
+        return Err(Error::Config(format!("negative size: {s:?}")));
+    }
+    Ok((value * mult as f64).round() as u64)
+}
+
+/// Format a byte count as a human string ("1.50 MiB").
+pub fn fmt_size(n: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let n = n as f64;
+    if n >= KIB * KIB * KIB {
+        format!("{:.2} GiB", n / (KIB * KIB * KIB))
+    } else if n >= KIB * KIB {
+        format!("{:.2} MiB", n / (KIB * KIB))
+    } else if n >= KIB {
+        format!("{:.2} KiB", n / KIB)
+    } else {
+        format!("{n:.0} B")
+    }
+}
+
+/// Incremental little-endian writer over a Vec<u8>.
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            buf: Vec::with_capacity(n),
+        }
+    }
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+    pub fn u16(&mut self, v: u16) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn i64(&mut self, v: i64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn f32(&mut self, v: f32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    /// Length-prefixed (u32) byte string.
+    pub fn bytes(&mut self, v: &[u8]) -> &mut Self {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+        self
+    }
+    /// Length-prefixed (u32) UTF-8 string.
+    pub fn str(&mut self, v: &str) -> &mut Self {
+        self.bytes(v.as_bytes())
+    }
+    /// Raw bytes, no prefix.
+    pub fn raw(&mut self, v: &[u8]) -> &mut Self {
+        self.buf.extend_from_slice(v);
+        self
+    }
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+impl Default for ByteWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Incremental little-endian reader over a byte slice.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::Corrupt(format!(
+                "short read: need {n} at {}, have {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+    pub fn str(&mut self) -> Result<&'a str> {
+        let b = self.bytes()?;
+        std::str::from_utf8(b).map_err(|_| Error::Corrupt("invalid utf8".into()))
+    }
+    pub fn raw(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+}
+
+/// Reinterpret a `&[f32]` as little-endian bytes (copy).
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Parse little-endian bytes into f32s. Errors on misaligned length.
+pub fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        return Err(Error::Corrupt(format!("f32 byte length {} % 4 != 0", b.len())));
+    }
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sizes() {
+        assert_eq!(parse_size("512").unwrap(), 512);
+        assert_eq!(parse_size("512b").unwrap(), 512);
+        assert_eq!(parse_size("4k").unwrap(), 4096);
+        assert_eq!(parse_size("4KiB").unwrap(), 4096);
+        assert_eq!(parse_size("4KB").unwrap(), 4096);
+        assert_eq!(parse_size("2m").unwrap(), 2 * 1024 * 1024);
+        assert_eq!(parse_size("1.5M").unwrap(), 3 * 512 * 1024);
+        assert_eq!(parse_size("1g").unwrap(), 1 << 30);
+        assert_eq!(parse_size(" 8k ").unwrap(), 8192);
+    }
+
+    #[test]
+    fn parse_size_errors() {
+        assert!(parse_size("").is_err());
+        assert!(parse_size("abc").is_err());
+        assert!(parse_size("-4k").is_err());
+    }
+
+    #[test]
+    fn fmt_sizes() {
+        assert_eq!(fmt_size(100), "100 B");
+        assert_eq!(fmt_size(2048), "2.00 KiB");
+        assert_eq!(fmt_size(3 * 1024 * 1024 / 2), "1.50 MiB");
+        assert!(fmt_size(5 * 1024 * 1024 * 1024).contains("GiB"));
+    }
+
+    #[test]
+    fn roundtrip_scalars() {
+        let mut w = ByteWriter::new();
+        w.u8(7).u16(300).u32(70_000).u64(1 << 40).i64(-5).f32(1.5).f64(-2.25);
+        let buf = w.finish();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 300);
+        assert_eq!(r.u32().unwrap(), 70_000);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.i64().unwrap(), -5);
+        assert_eq!(r.f32().unwrap(), 1.5);
+        assert_eq!(r.f64().unwrap(), -2.25);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn roundtrip_strings() {
+        let mut w = ByteWriter::new();
+        w.str("hello").bytes(&[1, 2, 3]).str("");
+        let buf = w.finish();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.str().unwrap(), "hello");
+        assert_eq!(r.bytes().unwrap(), &[1, 2, 3]);
+        assert_eq!(r.str().unwrap(), "");
+    }
+
+    #[test]
+    fn short_read_is_error() {
+        let buf = [1u8, 2];
+        let mut r = ByteReader::new(&buf);
+        assert!(r.u64().is_err());
+    }
+
+    #[test]
+    fn invalid_utf8_is_error() {
+        let mut w = ByteWriter::new();
+        w.bytes(&[0xff, 0xfe]);
+        let buf = w.finish();
+        let mut r = ByteReader::new(&buf);
+        assert!(r.str().is_err());
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let xs = vec![1.0f32, -2.5, 0.0, f32::MAX];
+        let b = f32s_to_bytes(&xs);
+        assert_eq!(bytes_to_f32s(&b).unwrap(), xs);
+        assert!(bytes_to_f32s(&b[..5]).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Foundation utilities built in-repo because the offline crate set lacks
+//! the usual ecosystem crates (rand, rayon/tokio, criterion, proptest).
+
+pub mod bench;
+pub mod bytes;
+pub mod pool;
+pub mod quick;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,264 @@
+//! A small fixed-size thread pool with scoped joins.
+//!
+//! The offline crate set has no tokio/rayon, so the Skyhook driver/worker
+//! layer and the simulated OSD service threads run on this pool. It is a
+//! plain work-queue pool: submit boxed jobs, optionally wait on a
+//! [`WaitGroup`], and shut down on drop.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    tx: Mutex<mpsc::Sender<Msg>>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` worker threads (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("skyhook-pool-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn pool worker"),
+            );
+        }
+        Self {
+            tx: Mutex::new(tx),
+            workers,
+            size,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a job.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Msg::Run(Box::new(f)))
+            .expect("pool closed");
+    }
+
+    /// Submit a job tracked by a wait group.
+    pub fn spawn_tracked<F: FnOnce() + Send + 'static>(&self, wg: &WaitGroup, f: F) {
+        let guard = wg.add();
+        self.spawn(move || {
+            f();
+            drop(guard);
+        });
+    }
+
+    /// Run `f` over every item of `items` on the pool, collecting results
+    /// in input order. Blocks until all complete.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let results: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let wg = WaitGroup::new();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            self.spawn_tracked(&wg, move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+        wg.wait();
+        Arc::try_unwrap(results)
+            .unwrap_or_else(|_| panic!("map results still shared"))
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.expect("worker did not report"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let tx = self.tx.lock().unwrap();
+            for _ in 0..self.workers.len() {
+                let _ = tx.send(Msg::Shutdown);
+            }
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Counter + condvar rendezvous: `add()` before submitting work, drop the
+/// guard when the work finishes, `wait()` until the count returns to zero.
+#[derive(Clone)]
+pub struct WaitGroup {
+    inner: Arc<WgInner>,
+}
+
+struct WgInner {
+    count: AtomicUsize,
+    mu: Mutex<()>,
+    cv: Condvar,
+}
+
+/// RAII token returned by [`WaitGroup::add`].
+pub struct WgGuard {
+    inner: Arc<WgInner>,
+}
+
+impl WaitGroup {
+    pub fn new() -> Self {
+        Self {
+            inner: Arc::new(WgInner {
+                count: AtomicUsize::new(0),
+                mu: Mutex::new(()),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    pub fn add(&self) -> WgGuard {
+        self.inner.count.fetch_add(1, Ordering::SeqCst);
+        WgGuard {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.inner.count.load(Ordering::SeqCst)
+    }
+
+    pub fn wait(&self) {
+        let mut g = self.inner.mu.lock().unwrap();
+        while self.inner.count.load(Ordering::SeqCst) != 0 {
+            g = self.inner.cv.wait(g).unwrap();
+        }
+    }
+}
+
+impl Default for WaitGroup {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for WgGuard {
+    fn drop(&mut self) {
+        if self.inner.count.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _g = self.inner.mu.lock().unwrap();
+            self.inner.cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let wg = WaitGroup::new();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.spawn_tracked(&wg, move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        wg.wait();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<u64>>(), |x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn pool_map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<u32> = pool.map(Vec::<u32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_min_size_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        let out = pool.map(vec![1, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn waitgroup_zero_waits_immediately() {
+        let wg = WaitGroup::new();
+        wg.wait(); // must not hang
+        assert_eq!(wg.pending(), 0);
+    }
+
+    #[test]
+    fn waitgroup_tracks_pending() {
+        let wg = WaitGroup::new();
+        let g1 = wg.add();
+        let g2 = wg.add();
+        assert_eq!(wg.pending(), 2);
+        drop(g1);
+        assert_eq!(wg.pending(), 1);
+        drop(g2);
+        wg.wait();
+    }
+
+    #[test]
+    fn pool_drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicU64::new(0));
+        let wg = WaitGroup::new();
+        for _ in 0..10 {
+            let c = Arc::clone(&c);
+            pool.spawn_tracked(&wg, move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        wg.wait();
+        drop(pool);
+        assert_eq!(c.load(Ordering::SeqCst), 10);
+    }
+}

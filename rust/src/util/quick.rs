@@ -1,0 +1,284 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` generates random inputs with `gen`,
+//! checks `prop`, and on failure greedily shrinks via the input's
+//! [`Shrink`] implementation before panicking with the minimal
+//! counterexample. Used across the store/dataset/coordinator tests for
+//! invariants (placement stability, hyperslab algebra, batching bounds).
+
+use super::rng::Xoshiro256;
+use std::fmt::Debug;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone {
+    /// Candidate strictly-"smaller" values, most aggressive first.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        (*self as u64).shrink().into_iter().map(|x| x as usize).collect()
+    }
+}
+
+impl Shrink for i64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0 {
+            out.push(0);
+            out.push(self / 2);
+            if *self > 0 {
+                out.push(self - 1);
+            } else {
+                out.push(self + 1);
+            }
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+            out.push(self.trunc());
+        }
+        out.retain(|x| x != self);
+        out
+    }
+}
+
+impl Shrink for bool {
+    fn shrink(&self) -> Vec<Self> {
+        if *self {
+            vec![false]
+        } else {
+            vec![]
+        }
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // Remove halves, then single elements, then shrink one element.
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        if self.len() <= 8 {
+            for i in 0..self.len() {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+            for i in 0..self.len() {
+                for s in self[i].shrink() {
+                    let mut v = self.clone();
+                    v[i] = s;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone())),
+        );
+        out.extend(
+            self.2
+                .shrink()
+                .into_iter()
+                .map(|c| (self.0.clone(), self.1.clone(), c)),
+        );
+        out
+    }
+}
+
+const MAX_SHRINK_STEPS: usize = 500;
+
+/// Run `prop` against `cases` random inputs from `gen`; shrink and panic on
+/// the first failure.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink + Debug,
+    G: FnMut(&mut Xoshiro256) -> T,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = Xoshiro256::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // Shrink: repeatedly take the first failing candidate.
+        let mut minimal = input;
+        let mut steps = 0;
+        'outer: while steps < MAX_SHRINK_STEPS {
+            for cand in minimal.shrink() {
+                steps += 1;
+                if !prop(&cand) {
+                    minimal = cand;
+                    continue 'outer;
+                }
+                if steps >= MAX_SHRINK_STEPS {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed (seed={seed}, case={case}):\n  minimal counterexample: {minimal:?}"
+        );
+    }
+}
+
+/// Like [`forall`] but the property returns `Result<(), String>` so tests
+/// can attach a reason.
+pub fn forall_explain<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink + Debug,
+    G: FnMut(&mut Xoshiro256) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let last_reason = std::cell::RefCell::new(String::new());
+    let wrapped = |t: &T| match prop(t) {
+        Ok(()) => true,
+        Err(e) => {
+            *last_reason.borrow_mut() = e;
+            false
+        }
+    };
+    let mut rng = Xoshiro256::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if wrapped(&input) {
+            continue;
+        }
+        let mut minimal = input;
+        let mut steps = 0;
+        'outer: while steps < MAX_SHRINK_STEPS {
+            for cand in minimal.shrink() {
+                steps += 1;
+                if !wrapped(&cand) {
+                    minimal = cand;
+                    continue 'outer;
+                }
+                if steps >= MAX_SHRINK_STEPS {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed (seed={seed}, case={case}): {}\n  minimal counterexample: {minimal:?}",
+            last_reason.borrow()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall(1, 200, |r| r.range_u64(0, 1000), |&x| x <= 1000);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(2, 200, |r| r.range_u64(0, 1000), |&x| x < 500);
+    }
+
+    #[test]
+    fn shrink_finds_small_counterexample() {
+        // Property "x < 500" fails for x>=500; shrinker should reach 500.
+        let result = std::panic::catch_unwind(|| {
+            forall(3, 500, |r| r.range_u64(0, 100_000), |&x| x < 500);
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("500"), "expected minimal 500 in: {msg}");
+    }
+
+    #[test]
+    fn vec_shrink_reduces_length() {
+        let v = vec![1u64, 2, 3, 4];
+        let cands = v.shrink();
+        assert!(cands.iter().any(|c| c.len() < v.len()));
+    }
+
+    #[test]
+    fn tuple_shrink_covers_both_sides() {
+        let t = (4u64, 6u64);
+        let cands = t.shrink();
+        assert!(cands.iter().any(|c| c.0 < 4));
+        assert!(cands.iter().any(|c| c.1 < 6));
+    }
+
+    #[test]
+    fn forall_explain_reports_reason() {
+        let result = std::panic::catch_unwind(|| {
+            forall_explain(
+                4,
+                100,
+                |r| r.range_u64(0, 100),
+                |&x| {
+                    if x < 90 {
+                        Ok(())
+                    } else {
+                        Err(format!("too big: {x}"))
+                    }
+                },
+            );
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("too big"), "{msg}");
+    }
+}

@@ -1,0 +1,380 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline crate set has no `rand`, so we carry our own small PRNG
+//! family: [`SplitMix64`] for seeding/hashing and [`Xoshiro256`]
+//! (xoshiro256++) as the workhorse generator. Both are well-studied,
+//! public-domain algorithms; determinism matters more than
+//! cryptographic strength here (placement hashing, synthetic workload
+//! generation, property-test case generation all want reproducibility).
+
+/// SplitMix64: tiny, fast, and the canonical way to seed xoshiro state.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Stateless one-shot mix of a 64-bit value; used for stable placement
+/// hashing (CRUSH-style straw draws) where we need `hash(a, b)` without
+/// carrying generator state.
+#[inline]
+pub fn mix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Combine two 64-bit values into one well-mixed hash.
+#[inline]
+pub fn mix2(a: u64, b: u64) -> u64 {
+    mix64(a ^ mix64(b))
+}
+
+/// xoshiro256++ — the general-purpose generator.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`. Uses Lemire's multiply-shift rejection method.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        // Widening multiply; rejection keeps the distribution exact.
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= (u64::MAX - n + 1) % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    #[inline]
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        if lo == hi {
+            return lo;
+        }
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform in `[lo, hi]` inclusive for usize.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Bernoulli draw.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = self.f64();
+            if u > 0.0 {
+                let v = self.f64();
+                return (-2.0 * u.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * v).cos();
+            }
+        }
+    }
+
+    /// Exponential with rate `lambda` (mean `1/lambda`).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        loop {
+            let u = self.f64();
+            if u > 0.0 {
+                return -u.ln() / lambda;
+            }
+        }
+    }
+
+    /// Zipf-like draw over `[0, n)` with exponent `theta` using inverse
+    /// transform on the truncated harmonic CDF. Used by the workload
+    /// generators to model skewed object popularity.
+    pub fn zipf(&mut self, n: usize, theta: f64) -> usize {
+        debug_assert!(n > 0);
+        if theta <= 0.0 {
+            return self.range(0, n - 1);
+        }
+        // Sample by rejection against the integral envelope; O(1) per draw.
+        let n_f = n as f64;
+        if (theta - 1.0).abs() < 1e-9 {
+            let h = n_f.ln();
+            loop {
+                let u = self.f64() * h;
+                let x = u.exp();
+                if x < n_f + 1.0 {
+                    return (x as usize).min(n - 1);
+                }
+            }
+        }
+        let a = 1.0 - theta;
+        let h = ((n_f + 1.0).powf(a) - 1.0) / a;
+        loop {
+            let u = self.f64() * h;
+            let x = (u * a + 1.0).powf(1.0 / a);
+            if x < n_f + 1.0 {
+                return ((x - 1.0) as usize).min(n - 1);
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        if xs.len() < 2 {
+            return;
+        }
+        for i in (1..xs.len()).rev() {
+            let j = self.range(0, i);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (k <= n).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        // Floyd's algorithm: O(k) expected.
+        let mut chosen = std::collections::BTreeSet::new();
+        for j in (n - k)..n {
+            let t = self.range(0, j);
+            if !chosen.insert(t) {
+                chosen.insert(j);
+            }
+        }
+        chosen.into_iter().collect()
+    }
+
+    /// Fill a byte slice with random data.
+    pub fn fill_bytes(&mut self, out: &mut [u8]) {
+        let mut chunks = out.chunks_exact_mut(8);
+        for c in &mut chunks {
+            c.copy_from_slice(&self.next_u64().to_le_bytes());
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            let b = self.next_u64().to_le_bytes();
+            rem.copy_from_slice(&b[..rem.len()]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(7);
+        let mut b = SplitMix64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn splitmix_differs_by_seed() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn xoshiro_below_bounds() {
+        let mut r = Xoshiro256::new(42);
+        for n in [1u64, 2, 3, 7, 100, 1 << 33] {
+            for _ in 0..200 {
+                assert!(r.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn xoshiro_range_inclusive() {
+        let mut r = Xoshiro256::new(1);
+        let mut saw_lo = false;
+        let mut saw_hi = false;
+        for _ in 0..2000 {
+            let v = r.range(3, 5);
+            assert!((3..=5).contains(&v));
+            saw_lo |= v == 3;
+            saw_hi |= v == 5;
+        }
+        assert!(saw_lo && saw_hi, "range should hit both endpoints");
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Xoshiro256::new(9);
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        let mut r = Xoshiro256::new(11);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256::new(3);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Xoshiro256::new(5);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn zipf_in_bounds_and_skewed() {
+        let mut r = Xoshiro256::new(8);
+        let n = 1000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..50_000 {
+            let v = r.zipf(n, 0.99);
+            assert!(v < n);
+            counts[v] += 1;
+        }
+        // Head should be much hotter than the tail.
+        let head: usize = counts[..10].iter().sum();
+        let tail: usize = counts[n - 10..].iter().sum();
+        assert!(head > tail * 5, "head={head} tail={tail}");
+    }
+
+    #[test]
+    fn zipf_theta_zero_is_uniformish() {
+        let mut r = Xoshiro256::new(8);
+        let n = 10;
+        let mut counts = vec![0usize; n];
+        for _ in 0..10_000 {
+            counts[r.zipf(n, 0.0)] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 500, "uniform draw too skewed: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::new(2);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_bounded() {
+        let mut r = Xoshiro256::new(4);
+        for _ in 0..100 {
+            let v = r.sample_indices(50, 10);
+            assert_eq!(v.len(), 10);
+            for w in v.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(*v.last().unwrap() < 50);
+        }
+    }
+
+    #[test]
+    fn sample_indices_full() {
+        let mut r = Xoshiro256::new(4);
+        let v = r.sample_indices(5, 5);
+        assert_eq!(v, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn fill_bytes_varies() {
+        let mut r = Xoshiro256::new(6);
+        let mut a = [0u8; 33];
+        let mut b = [0u8; 33];
+        r.fill_bytes(&mut a);
+        r.fill_bytes(&mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn mix64_stable() {
+        // Placement depends on these being stable across runs/builds.
+        assert_eq!(mix64(0), mix64(0));
+        assert_ne!(mix64(1), mix64(2));
+        assert_ne!(mix2(1, 2), mix2(2, 1));
+    }
+}

@@ -1,0 +1,347 @@
+//! Summary statistics and histograms for metrics and the bench harness.
+
+/// Online summary of a stream of f64 samples (Welford for mean/variance,
+/// plus min/max/sum). Cheap enough for per-request accounting.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    sum: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sum: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let d = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += d * n2 / n;
+        self.m2 += other.m2 + d * d * n1 * n2 / n;
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Log-bucketed latency histogram (HdrHistogram-lite). Buckets grow
+/// geometrically from `min_value`; quantile queries interpolate within a
+/// bucket. Good to ~±5% which is plenty for bench reporting.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    min_value: f64,
+    growth: f64,
+    summary: Summary,
+}
+
+impl Histogram {
+    /// `min_value`: smallest resolvable sample; `growth`: per-bucket factor.
+    pub fn new(min_value: f64, growth: f64, buckets: usize) -> Self {
+        assert!(min_value > 0.0 && growth > 1.0 && buckets > 1);
+        Self {
+            buckets: vec![0; buckets],
+            min_value,
+            growth,
+            summary: Summary::new(),
+        }
+    }
+
+    /// Defaults sized for latencies in seconds: 1 µs .. ~80 s.
+    pub fn for_latency() -> Self {
+        Self::new(1e-6, 1.12, 160)
+    }
+
+    fn index_of(&self, x: f64) -> usize {
+        if x <= self.min_value {
+            return 0;
+        }
+        let idx = (x / self.min_value).ln() / self.growth.ln();
+        (idx as usize).min(self.buckets.len() - 1)
+    }
+
+    fn bucket_low(&self, i: usize) -> f64 {
+        self.min_value * self.growth.powi(i as i32)
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let i = self.index_of(x.max(0.0));
+        self.buckets[i] += 1;
+        self.summary.record(x);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.buckets.len(), other.buckets.len());
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += *b;
+        }
+        self.summary.merge(&other.summary);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.summary.count()
+    }
+    pub fn mean(&self) -> f64 {
+        self.summary.mean()
+    }
+    pub fn min(&self) -> f64 {
+        self.summary.min()
+    }
+    pub fn max(&self) -> f64 {
+        self.summary.max()
+    }
+
+    /// Quantile in `[0,1]`; linear interpolation inside the bucket.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.summary.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = (q * n as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                let into = (target - seen) as f64 / c as f64;
+                let lo = self.bucket_low(i);
+                let hi = self.bucket_low(i + 1);
+                return (lo + (hi - lo) * into).clamp(self.summary.min(), self.summary.max());
+            }
+            seen += c;
+        }
+        self.summary.max()
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::for_latency()
+    }
+}
+
+/// Exact percentile over a finite sample set (for bench reporting where we
+/// keep all samples anyway). `q` in `[0,1]`; nearest-rank with interpolation.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.record(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!((s.variance() - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::new();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.variance(), 0.0);
+    }
+
+    #[test]
+    fn summary_merge_matches_sequential() {
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        let mut all = Summary::new();
+        for i in 0..100 {
+            let x = (i as f64).sin() * 10.0;
+            if i % 2 == 0 {
+                a.record(x)
+            } else {
+                b.record(x)
+            }
+            all.record(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-9);
+        assert_eq!(a.min(), all.min());
+        assert_eq!(a.max(), all.max());
+    }
+
+    #[test]
+    fn summary_merge_with_empty() {
+        let mut a = Summary::new();
+        a.record(5.0);
+        let b = Summary::new();
+        a.merge(&b);
+        assert_eq!(a.count(), 1);
+        let mut c = Summary::new();
+        c.merge(&a);
+        assert_eq!(c.count(), 1);
+        assert_eq!(c.mean(), 5.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_close() {
+        let mut h = Histogram::for_latency();
+        // 1..=1000 ms uniform
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3);
+        }
+        let p50 = h.p50();
+        assert!((p50 - 0.5).abs() / 0.5 < 0.15, "p50={p50}");
+        let p95 = h.p95();
+        assert!((p95 - 0.95).abs() / 0.95 < 0.15, "p95={p95}");
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn histogram_single_value() {
+        let mut h = Histogram::for_latency();
+        h.record(0.010);
+        assert_eq!(h.count(), 1);
+        let p50 = h.p50();
+        assert!((p50 - 0.010).abs() < 0.002, "p50={p50}");
+        assert_eq!(h.min(), 0.010);
+        assert_eq!(h.max(), 0.010);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::for_latency();
+        let mut b = Histogram::for_latency();
+        for i in 1..=100 {
+            a.record(i as f64 * 1e-3);
+            b.record(i as f64 * 2e-3);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert!(a.max() >= 0.2 * 0.99);
+    }
+
+    #[test]
+    fn histogram_empty_quantile() {
+        let h = Histogram::for_latency();
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn histogram_out_of_range_clamps() {
+        let mut h = Histogram::new(1e-3, 2.0, 8);
+        h.record(1e9); // beyond last bucket
+        h.record(1e-9); // below first bucket
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn percentile_exact() {
+        let v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 5.0);
+        assert_eq!(percentile(&v, 0.5), 3.0);
+        assert!((percentile(&v, 0.25) - 2.0).abs() < 1e-12);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+}

@@ -1,0 +1,250 @@
+//! The application-facing access-library API (Figure 1a's top half).
+//!
+//! Mirrors the miniature of HDF5 that the paper's discussion needs: files
+//! contain named n-dimensional f32 datasets with chunked layout; reads and
+//! writes are hyperslab selections; datasets carry string attributes.
+//! Applications program against [`VolFile`]; the storage-facing half is a
+//! [`VolBackend`] chosen at open time — swapping the backend never changes
+//! application code, which is the paper's independent-evolution goal
+//! (§2 goal 3).
+
+use crate::dataset::{Dataspace, Hyperslab};
+use crate::error::{Error, Result};
+
+/// Virtual time + value pair re-exported for backends.
+pub use crate::store::Timed;
+
+/// The storage-facing interface (the VOL boundary, Figure 1b). All
+/// methods carry virtual time so experiments can measure makespan.
+pub trait VolBackend: Send {
+    /// Human-readable backend name (for reports).
+    fn name(&self) -> &'static str;
+
+    /// Create a chunked f32 dataset.
+    fn create(
+        &mut self,
+        at: f64,
+        dataset: &str,
+        space: &Dataspace,
+        chunk: &[u64],
+    ) -> Result<Timed<()>>;
+
+    /// Write a hyperslab (data is row-major, `slab.numel()` long).
+    fn write_slab(
+        &mut self,
+        at: f64,
+        dataset: &str,
+        slab: &Hyperslab,
+        data: &[f32],
+    ) -> Result<Timed<()>>;
+
+    /// Read a hyperslab.
+    fn read_slab(&mut self, at: f64, dataset: &str, slab: &Hyperslab)
+        -> Result<Timed<Vec<f32>>>;
+
+    /// Dataset's dataspace + chunk shape.
+    fn shape(&mut self, at: f64, dataset: &str) -> Result<Timed<(Dataspace, Vec<u64>)>>;
+
+    /// Set / get a string attribute on a dataset.
+    fn set_attr(&mut self, at: f64, dataset: &str, key: &str, value: &str) -> Result<Timed<()>>;
+    fn get_attr(&mut self, at: f64, dataset: &str, key: &str) -> Result<Timed<Option<String>>>;
+
+    /// Datasets in this file.
+    fn list(&mut self, at: f64) -> Result<Timed<Vec<String>>>;
+}
+
+/// An open "file" — the application-facing handle.
+pub struct VolFile {
+    backend: Box<dyn VolBackend>,
+    /// Virtual clock of this client session.
+    now: f64,
+}
+
+impl VolFile {
+    /// Open with an explicit backend (the VOL plugin selection).
+    pub fn open(backend: Box<dyn VolBackend>) -> Self {
+        Self { backend, now: 0.0 }
+    }
+
+    /// Backend name.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// The session's current virtual time (advances with every call).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Reset the session clock (between bench cases).
+    pub fn reset_clock(&mut self) {
+        self.now = 0.0;
+    }
+
+    /// Create a chunked f32 dataset.
+    pub fn create_dataset(
+        &mut self,
+        name: &str,
+        space: &Dataspace,
+        chunk: &[u64],
+    ) -> Result<()> {
+        if chunk.len() != space.ndim() {
+            return Err(Error::Invalid("chunk rank != space rank".into()));
+        }
+        let t = self.backend.create(self.now, name, space, chunk)?;
+        self.now = t.finish;
+        Ok(())
+    }
+
+    /// Write a hyperslab of data.
+    pub fn write(&mut self, dataset: &str, slab: &Hyperslab, data: &[f32]) -> Result<()> {
+        if data.len() as u64 != slab.numel() {
+            return Err(Error::Invalid(format!(
+                "data len {} != slab numel {}",
+                data.len(),
+                slab.numel()
+            )));
+        }
+        let t = self.backend.write_slab(self.now, dataset, slab, data)?;
+        self.now = t.finish;
+        Ok(())
+    }
+
+    /// Write the full dataset.
+    pub fn write_all(&mut self, dataset: &str, data: &[f32]) -> Result<()> {
+        let (space, _) = self.shape(dataset)?;
+        self.write(dataset, &Hyperslab::whole(&space), data)
+    }
+
+    /// Read a hyperslab.
+    pub fn read(&mut self, dataset: &str, slab: &Hyperslab) -> Result<Vec<f32>> {
+        let t = self.backend.read_slab(self.now, dataset, slab)?;
+        self.now = t.finish;
+        Ok(t.value)
+    }
+
+    /// Read the full dataset.
+    pub fn read_all(&mut self, dataset: &str) -> Result<Vec<f32>> {
+        let (space, _) = self.shape(dataset)?;
+        self.read(dataset, &Hyperslab::whole(&space))
+    }
+
+    /// Dataspace + chunk shape of a dataset.
+    pub fn shape(&mut self, dataset: &str) -> Result<(Dataspace, Vec<u64>)> {
+        let t = self.backend.shape(self.now, dataset)?;
+        self.now = t.finish;
+        Ok(t.value)
+    }
+
+    /// Attributes.
+    pub fn set_attr(&mut self, dataset: &str, key: &str, value: &str) -> Result<()> {
+        let t = self.backend.set_attr(self.now, dataset, key, value)?;
+        self.now = t.finish;
+        Ok(())
+    }
+
+    pub fn get_attr(&mut self, dataset: &str, key: &str) -> Result<Option<String>> {
+        let t = self.backend.get_attr(self.now, dataset, key)?;
+        self.now = t.finish;
+        Ok(t.value)
+    }
+
+    /// List datasets.
+    pub fn list_datasets(&mut self) -> Result<Vec<String>> {
+        let t = self.backend.list(self.now)?;
+        self.now = t.finish;
+        Ok(t.value)
+    }
+}
+
+/// Shared conformance suite: every backend must pass these behaviours.
+/// Called by each backend's tests (and the integration tests) — the
+/// executable statement of "the application sees the same data model"
+/// (§4.1).
+#[cfg(test)]
+pub fn conformance(make: impl Fn() -> VolFile) {
+    use crate::dataset::Dataspace;
+
+    // create / shape / list
+    let mut f = make();
+    let space = Dataspace::new(&[8, 10]).unwrap();
+    f.create_dataset("d", &space, &[4, 5]).unwrap();
+    let (sp, ch) = f.shape("d").unwrap();
+    assert_eq!(sp, space);
+    assert_eq!(ch, vec![4, 5]);
+    assert_eq!(f.list_datasets().unwrap(), vec!["d".to_string()]);
+
+    // duplicate create fails
+    assert!(f.create_dataset("d", &space, &[4, 5]).is_err());
+    // missing dataset fails
+    assert!(f.read_all("nope").is_err());
+
+    // full write + read
+    let data: Vec<f32> = (0..80).map(|i| i as f32).collect();
+    f.write_all("d", &data).unwrap();
+    assert_eq!(f.read_all("d").unwrap(), data);
+
+    // partial hyperslab read (crosses chunk boundaries)
+    let slab = Hyperslab::new(&[1, 3], &[3, 4]).unwrap();
+    let got = f.read("d", &slab).unwrap();
+    let mut want = Vec::new();
+    for r in 1..4 {
+        for c in 3..7 {
+            want.push((r * 10 + c) as f32);
+        }
+    }
+    assert_eq!(got, want);
+
+    // partial hyperslab write (read-modify-write across chunks)
+    let wslab = Hyperslab::new(&[2, 2], &[2, 3]).unwrap();
+    f.write("d", &wslab, &[100.0, 101.0, 102.0, 110.0, 111.0, 112.0])
+        .unwrap();
+    let all = f.read_all("d").unwrap();
+    assert_eq!(all[2 * 10 + 2], 100.0);
+    assert_eq!(all[3 * 10 + 4], 112.0);
+    assert_eq!(all[2 * 10 + 5], 25.0, "untouched element changed");
+
+    // wrong data length rejected
+    assert!(f.write("d", &wslab, &[1.0]).is_err());
+    // out-of-bounds slab rejected
+    let oob = Hyperslab::new(&[7, 9], &[2, 2]).unwrap();
+    assert!(f.read("d", &oob).is_err());
+
+    // attributes
+    f.set_attr("d", "units", "kelvin").unwrap();
+    assert_eq!(f.get_attr("d", "units").unwrap().unwrap(), "kelvin");
+    assert!(f.get_attr("d", "none").unwrap().is_none());
+    assert!(f.set_attr("ghost", "k", "v").is_err());
+
+    // virtual time advances
+    assert!(f.now() > 0.0);
+
+    // 1-d dataset
+    let mut f = make();
+    let space1 = Dataspace::new(&[100]).unwrap();
+    f.create_dataset("one", &space1, &[32]).unwrap();
+    let data: Vec<f32> = (0..100).map(|i| (i as f32).sin()).collect();
+    f.write_all("one", &data).unwrap();
+    let tail = f.read("one", &Hyperslab::new(&[90], &[10]).unwrap()).unwrap();
+    assert_eq!(tail, &data[90..]);
+
+    // 3-d dataset with uneven chunks
+    let mut f = make();
+    let space3 = Dataspace::new(&[3, 5, 7]).unwrap();
+    f.create_dataset("three", &space3, &[2, 3, 4]).unwrap();
+    let data: Vec<f32> = (0..105).map(|i| i as f32 * 0.25).collect();
+    f.write_all("three", &data).unwrap();
+    assert_eq!(f.read_all("three").unwrap(), data);
+    let slab = Hyperslab::new(&[1, 2, 3], &[2, 2, 2]).unwrap();
+    let got = f.read("three", &slab).unwrap();
+    let strides = space3.strides();
+    let mut want = Vec::new();
+    for a in 1..3u64 {
+        for b in 2..4u64 {
+            for c in 3..5u64 {
+                want.push((a * strides[0] + b * strides[1] + c) as f32 * 0.25);
+            }
+        }
+    }
+    assert_eq!(got, want);
+}

@@ -1,0 +1,231 @@
+//! The object-storage-layer VOL plugin (Figure 2, bottom): object-class
+//! handlers that give each storage object an HDF5-flavoured interface —
+//! "each of which offer the HDF5 API via an unmodified HDF access library
+//! and map it to ... the local object storage layer" (§1).
+//!
+//! Handlers (`hdf5` class), all executing on the OSD holding the chunk:
+//! - `hdf5.read_slab`  — return only the selected elements of the chunk
+//!   (server-side selection: the network carries `slab.numel()*4` bytes,
+//!   not the whole chunk),
+//! - `hdf5.write_slab` — server-side read-modify-write of a sub-slab,
+//! - `hdf5.stat`       — the chunk's stored dims.
+
+use crate::dataset::array::copy_slab_f32;
+use crate::dataset::layout::{decode_array_chunk, encode_array_chunk};
+use crate::dataset::{Dataspace, Hyperslab};
+use crate::error::{Error, Result};
+use crate::store::objclass::ClassRegistry;
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// Encode a slab selection (+ optional payload) as handler input.
+pub fn encode_slab_arg(slab: &Hyperslab, payload: Option<&[f32]>) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.u8(slab.ndim() as u8);
+    for &s in &slab.start {
+        w.u64(s);
+    }
+    for &c in &slab.count {
+        w.u64(c);
+    }
+    if let Some(p) = payload {
+        w.raw(&crate::util::bytes::f32s_to_bytes(p));
+    }
+    w.finish()
+}
+
+fn decode_slab_arg(input: &[u8], want_payload: bool) -> Result<(Hyperslab, Vec<f32>)> {
+    let mut r = ByteReader::new(input);
+    let ndim = r.u8()? as usize;
+    if ndim == 0 || ndim > 32 {
+        return Err(Error::Invalid(format!("bad slab ndim {ndim}")));
+    }
+    let mut start = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        start.push(r.u64()?);
+    }
+    let mut count = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        count.push(r.u64()?);
+    }
+    let slab = Hyperslab::new(&start, &count)?;
+    let payload = if want_payload {
+        let bytes = r.raw(r.remaining())?;
+        let data = crate::util::bytes::bytes_to_f32s(bytes)?;
+        if data.len() as u64 != slab.numel() {
+            return Err(Error::Invalid(format!(
+                "payload {} elements != slab numel {}",
+                data.len(),
+                slab.numel()
+            )));
+        }
+        data
+    } else {
+        if r.remaining() != 0 {
+            return Err(Error::Invalid("unexpected payload".into()));
+        }
+        Vec::new()
+    };
+    Ok((slab, payload))
+}
+
+/// Register the `hdf5` object class. Call once when building the cluster's
+/// [`ClassRegistry`] (every storage server gets the same plugins, §4.2).
+pub fn register_hdf5_class(r: &mut ClassRegistry) {
+    r.register("hdf5", "stat", |b, _| {
+        let data = b.read()?;
+        let (_, dims) = decode_array_chunk(&data)?;
+        let mut w = ByteWriter::new();
+        w.u8(dims.len() as u8);
+        for &d in &dims {
+            w.u64(d);
+        }
+        Ok(w.finish())
+    });
+
+    r.register("hdf5", "read_slab", |b, input| {
+        let (slab, _) = decode_slab_arg(input, false)?;
+        let raw = b.read()?;
+        let (data, dims) = decode_array_chunk(&raw)?;
+        let space = Dataspace::new(&dims)?;
+        if !slab.fits(&space) {
+            return Err(Error::Invalid("slab exceeds chunk".into()));
+        }
+        // CPU cost of the server-side selection copy.
+        b.charge_cpu(slab.numel() as f64 * 1e-9);
+        let out_space = Dataspace::new(&slab.count)?;
+        let mut out = vec![0.0f32; slab.numel() as usize];
+        copy_slab_f32(
+            &data,
+            &space,
+            &slab,
+            &mut out,
+            &out_space,
+            &Hyperslab::whole(&out_space),
+        )?;
+        Ok(crate::util::bytes::f32s_to_bytes(&out))
+    });
+
+    r.register("hdf5", "write_slab", |b, input| {
+        let (slab, payload) = decode_slab_arg(input, true)?;
+        let raw = b.read()?;
+        let (mut data, dims) = decode_array_chunk(&raw)?;
+        let space = Dataspace::new(&dims)?;
+        if !slab.fits(&space) {
+            return Err(Error::Invalid("slab exceeds chunk".into()));
+        }
+        b.charge_cpu(slab.numel() as f64 * 1e-9);
+        let src_space = Dataspace::new(&slab.count)?;
+        copy_slab_f32(
+            &payload,
+            &src_space,
+            &Hyperslab::whole(&src_space),
+            &mut data,
+            &space,
+            &slab,
+        )?;
+        b.write(&encode_array_chunk(&data, &dims)?)?;
+        Ok(Vec::new())
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::objclass::MemBackend;
+
+    fn registry() -> ClassRegistry {
+        let mut r = ClassRegistry::with_builtins();
+        register_hdf5_class(&mut r);
+        r
+    }
+
+    fn chunk_2x4() -> Vec<u8> {
+        let data: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        encode_array_chunk(&data, &[2, 4]).unwrap()
+    }
+
+    #[test]
+    fn stat_returns_dims() {
+        let r = registry();
+        let mut b = MemBackend::new(&chunk_2x4());
+        let out = r.get("hdf5", "stat").unwrap()(&mut b, &[]).unwrap();
+        assert_eq!(out[0], 2); // ndim
+        assert_eq!(u64::from_le_bytes(out[1..9].try_into().unwrap()), 2);
+        assert_eq!(u64::from_le_bytes(out[9..17].try_into().unwrap()), 4);
+    }
+
+    #[test]
+    fn read_slab_returns_selection_only() {
+        let r = registry();
+        let mut b = MemBackend::new(&chunk_2x4());
+        let slab = Hyperslab::new(&[0, 1], &[2, 2]).unwrap();
+        let out = r.get("hdf5", "read_slab").unwrap()(&mut b, &encode_slab_arg(&slab, None))
+            .unwrap();
+        let vals = crate::util::bytes::bytes_to_f32s(&out).unwrap();
+        assert_eq!(vals, vec![1.0, 2.0, 5.0, 6.0]);
+        assert_eq!(out.len(), 16, "only the selection crosses the wire");
+        assert!(b.cpu > 0.0);
+    }
+
+    #[test]
+    fn read_slab_out_of_bounds() {
+        let r = registry();
+        let mut b = MemBackend::new(&chunk_2x4());
+        let slab = Hyperslab::new(&[1, 3], &[2, 2]).unwrap();
+        assert!(r.get("hdf5", "read_slab").unwrap()(&mut b, &encode_slab_arg(&slab, None))
+            .is_err());
+    }
+
+    #[test]
+    fn write_slab_rmw_on_server() {
+        let r = registry();
+        let mut b = MemBackend::new(&chunk_2x4());
+        let slab = Hyperslab::new(&[1, 0], &[1, 2]).unwrap();
+        r.get("hdf5", "write_slab").unwrap()(
+            &mut b,
+            &encode_slab_arg(&slab, Some(&[40.0, 50.0])),
+        )
+        .unwrap();
+        let (data, dims) = decode_array_chunk(&b.data).unwrap();
+        assert_eq!(dims, vec![2, 4]);
+        assert_eq!(data, vec![0.0, 1.0, 2.0, 3.0, 40.0, 50.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn write_slab_payload_mismatch() {
+        let r = registry();
+        let mut b = MemBackend::new(&chunk_2x4());
+        let slab = Hyperslab::new(&[0, 0], &[1, 2]).unwrap();
+        // 3 values for a 2-element slab.
+        assert!(r.get("hdf5", "write_slab").unwrap()(
+            &mut b,
+            &encode_slab_arg(&slab, Some(&[1.0, 2.0, 3.0])),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn slab_arg_roundtrip_and_validation() {
+        let slab = Hyperslab::new(&[3, 4], &[1, 2]).unwrap();
+        let enc = encode_slab_arg(&slab, None);
+        let (dec, p) = decode_slab_arg(&enc, false).unwrap();
+        assert_eq!(dec, slab);
+        assert!(p.is_empty());
+        // Truncated input.
+        assert!(decode_slab_arg(&enc[..5], false).is_err());
+        // Trailing garbage without payload flag.
+        let mut bad = enc.clone();
+        bad.push(0);
+        assert!(decode_slab_arg(&bad, false).is_err());
+    }
+
+    #[test]
+    fn handlers_reject_non_chunk_objects() {
+        let r = registry();
+        let mut b = MemBackend::new(b"not an array chunk");
+        assert!(r.get("hdf5", "stat").unwrap()(&mut b, &[]).is_err());
+        let slab = Hyperslab::new(&[0], &[1]).unwrap();
+        assert!(r.get("hdf5", "read_slab").unwrap()(&mut b, &encode_slab_arg(&slab, None))
+            .is_err());
+    }
+}

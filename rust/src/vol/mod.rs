@@ -1,0 +1,17 @@
+//! The HDF5-VOL-like access library (§4.1): one application-facing API,
+//! swappable storage-facing backends.
+//!
+//! - [`api`] — `VolFile` + the `VolBackend` trait (the VOL boundary)
+//! - [`native`] — single-file, single-node baseline backend (Figure 1a)
+//! - [`global_plugin`] — forwarding plugin: decompose → scatter → gather
+//! - [`local_plugin`] — per-object server-side plugin (`hdf5` objclass)
+
+pub mod api;
+pub mod global_plugin;
+pub mod local_plugin;
+pub mod native;
+
+pub use api::{VolBackend, VolFile};
+pub use global_plugin::{vol_registry, ForwardingBackend};
+pub use local_plugin::register_hdf5_class;
+pub use native::NativeBackend;

@@ -1,0 +1,222 @@
+//! The native single-file backend — the paper's baseline (Figure 1a).
+//!
+//! Models an unmodified access library writing one HDF5 file through the
+//! local filesystem: datasets live contiguously in one in-memory "file",
+//! all I/O is serviced by a single client-local device timeline at
+//! `native_bw` (Table 1's 26.28 s for 3 GiB), and nothing scales out —
+//! exactly the single-workstation limitation §1 and §6 call out.
+
+use super::api::{Timed, VolBackend};
+use crate::dataset::array::copy_slab_f32;
+use crate::dataset::{Dataspace, Hyperslab};
+use crate::error::{Error, Result};
+use crate::simnet::{CostParams, Timeline};
+use std::collections::BTreeMap;
+
+struct NativeDataset {
+    space: Dataspace,
+    chunk: Vec<u64>,
+    data: Vec<f32>,
+    attrs: BTreeMap<String, String>,
+}
+
+/// Single-node, single-file backend.
+pub struct NativeBackend {
+    datasets: BTreeMap<String, NativeDataset>,
+    device: Timeline,
+    cost: CostParams,
+}
+
+impl NativeBackend {
+    pub fn new(cost: CostParams) -> Self {
+        Self {
+            datasets: BTreeMap::new(),
+            device: Timeline::new(),
+            cost,
+        }
+    }
+
+    fn dataset(&self, name: &str) -> Result<&NativeDataset> {
+        self.datasets
+            .get(name)
+            .ok_or_else(|| Error::NotFound(format!("dataset {name}")))
+    }
+
+    fn dataset_mut(&mut self, name: &str) -> Result<&mut NativeDataset> {
+        self.datasets
+            .get_mut(name)
+            .ok_or_else(|| Error::NotFound(format!("dataset {name}")))
+    }
+
+    fn charge(&self, at: f64, bytes: u64) -> f64 {
+        self.device
+            .submit(at, self.cost.native_write_time(bytes))
+    }
+}
+
+impl VolBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn create(
+        &mut self,
+        at: f64,
+        dataset: &str,
+        space: &Dataspace,
+        chunk: &[u64],
+    ) -> Result<Timed<()>> {
+        if self.datasets.contains_key(dataset) {
+            return Err(Error::AlreadyExists(format!("dataset {dataset}")));
+        }
+        self.datasets.insert(
+            dataset.to_string(),
+            NativeDataset {
+                space: space.clone(),
+                chunk: chunk.to_vec(),
+                data: vec![0.0; space.numel() as usize],
+                attrs: BTreeMap::new(),
+            },
+        );
+        let finish = self.device.submit(at, self.cost.op_overhead_s);
+        Ok(Timed::new((), finish))
+    }
+
+    fn write_slab(
+        &mut self,
+        at: f64,
+        dataset: &str,
+        slab: &Hyperslab,
+        data: &[f32],
+    ) -> Result<Timed<()>> {
+        let cost_bytes = slab.numel() * 4;
+        let ds = self.dataset_mut(dataset)?;
+        if !slab.fits(&ds.space) {
+            return Err(Error::Invalid("slab exceeds dataspace".into()));
+        }
+        let src_space = Dataspace::new(&slab.count)?;
+        let space = ds.space.clone();
+        copy_slab_f32(
+            data,
+            &src_space,
+            &Hyperslab::whole(&src_space),
+            &mut ds.data,
+            &space,
+            slab,
+        )?;
+        let finish = self.charge(at, cost_bytes);
+        Ok(Timed::new((), finish))
+    }
+
+    fn read_slab(
+        &mut self,
+        at: f64,
+        dataset: &str,
+        slab: &Hyperslab,
+    ) -> Result<Timed<Vec<f32>>> {
+        let ds = self.dataset(dataset)?;
+        if !slab.fits(&ds.space) {
+            return Err(Error::Invalid("slab exceeds dataspace".into()));
+        }
+        let dst_space = Dataspace::new(&slab.count)?;
+        let mut out = vec![0.0f32; slab.numel() as usize];
+        copy_slab_f32(
+            &ds.data,
+            &ds.space,
+            slab,
+            &mut out,
+            &dst_space,
+            &Hyperslab::whole(&dst_space),
+        )?;
+        // Reads go through the same local device at read bandwidth.
+        let finish = self
+            .device
+            .submit(at, self.cost.dev_read_time(slab.numel() * 4));
+        Ok(Timed::new(out, finish))
+    }
+
+    fn shape(&mut self, at: f64, dataset: &str) -> Result<Timed<(Dataspace, Vec<u64>)>> {
+        let ds = self.dataset(dataset)?;
+        let v = (ds.space.clone(), ds.chunk.clone());
+        let finish = self.device.submit(at, self.cost.op_overhead_s);
+        Ok(Timed::new(v, finish))
+    }
+
+    fn set_attr(&mut self, at: f64, dataset: &str, key: &str, value: &str) -> Result<Timed<()>> {
+        let ds = self.dataset_mut(dataset)?;
+        ds.attrs.insert(key.to_string(), value.to_string());
+        let finish = self.device.submit(at, self.cost.op_overhead_s);
+        Ok(Timed::new((), finish))
+    }
+
+    fn get_attr(
+        &mut self,
+        at: f64,
+        dataset: &str,
+        key: &str,
+    ) -> Result<Timed<Option<String>>> {
+        let ds = self.dataset(dataset)?;
+        let v = ds.attrs.get(key).cloned();
+        let finish = self.device.submit(at, self.cost.op_overhead_s);
+        Ok(Timed::new(v, finish))
+    }
+
+    fn list(&mut self, at: f64) -> Result<Timed<Vec<String>>> {
+        let v: Vec<String> = self.datasets.keys().cloned().collect();
+        let finish = self.device.submit(at, self.cost.op_overhead_s);
+        Ok(Timed::new(v, finish))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vol::api::VolFile;
+
+    fn file() -> VolFile {
+        VolFile::open(Box::new(NativeBackend::new(CostParams::paper_testbed())))
+    }
+
+    #[test]
+    fn conformance() {
+        crate::vol::api::conformance(file);
+    }
+
+    #[test]
+    fn writes_serialize_on_one_device() {
+        // The native library cannot scale out: two dataset writes queue.
+        let mut b = NativeBackend::new(CostParams::paper_testbed());
+        let space = Dataspace::new(&[1 << 18]).unwrap();
+        b.create(0.0, "a", &space, &[1 << 14]).unwrap();
+        b.create(0.0, "b", &space, &[1 << 14]).unwrap();
+        let data = vec![1.0f32; 1 << 18];
+        let whole = Hyperslab::whole(&space);
+        let t1 = b.write_slab(0.0, "a", &whole, &data).unwrap().finish;
+        let t2 = b.write_slab(0.0, "b", &whole, &data).unwrap().finish;
+        assert!(t2 > 1.9 * t1, "t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn native_rate_matches_calibration() {
+        let mut b = NativeBackend::new(CostParams::paper_testbed());
+        let n = 1u64 << 20; // elements
+        let space = Dataspace::new(&[n]).unwrap();
+        b.create(0.0, "d", &space, &[1 << 16]).unwrap();
+        let data = vec![0.5f32; n as usize];
+        let t = b
+            .write_slab(0.0, "d", &Hyperslab::whole(&space), &data)
+            .unwrap()
+            .finish;
+        let expect = (n * 4) as f64 / CostParams::paper_testbed().native_bw;
+        assert!((t - expect).abs() / expect < 0.05, "t={t} expect={expect}");
+    }
+
+    #[test]
+    fn backend_name() {
+        let mut f = file();
+        assert_eq!(f.backend_name(), "native");
+        let space = Dataspace::new(&[4]).unwrap();
+        f.create_dataset("d", &space, &[2]).unwrap();
+        assert_eq!(f.list_datasets().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,377 @@
+//! Property-based tests over cross-module invariants, using the in-repo
+//! shrinking harness (`util::quick`).
+
+use skyhook_map::dataset::layout::{decode_batch, decode_projection, encode_batch, Layout};
+use skyhook_map::dataset::partition::{pack_units, packing_stats, LogicalUnit};
+use skyhook_map::dataset::table::{Batch, Column};
+use skyhook_map::dataset::{ChunkGrid, Dataspace, DType, Hyperslab, TableSchema};
+use skyhook_map::skyhook::{AggFunc, AggState, CmpOp, Predicate};
+use skyhook_map::store::{hash_name, OsdMap};
+use skyhook_map::util::quick::{forall, forall_explain};
+use skyhook_map::util::rng::Xoshiro256;
+
+#[test]
+fn placement_deterministic_and_distinct() {
+    forall_explain(
+        1,
+        300,
+        |r| {
+            (
+                r.range_u64(1, 32),      // osds
+                r.range_u64(1, 4),       // replicas
+                r.range_u64(0, 100_000), // object id
+            )
+        },
+        |&(osds, replicas, obj)| {
+            let m = OsdMap::new(osds as usize, 64);
+            let name = format!("obj.{obj}");
+            let a = m.place(&name, replicas as usize);
+            let b = m.place(&name, replicas as usize);
+            if a != b {
+                return Err("nondeterministic placement".into());
+            }
+            let want = (replicas as usize).min(osds as usize);
+            if a.len() != want {
+                return Err(format!("replica count {} != {want}", a.len()));
+            }
+            let mut d = a.clone();
+            d.sort_unstable();
+            d.dedup();
+            if d.len() != a.len() {
+                return Err("duplicate replicas".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn placement_stability_under_weight_changes() {
+    // Changing one OSD's weight must never move a PG between two OSDs
+    // that both kept their weights (straw2 independence).
+    forall(
+        2,
+        100,
+        |r| (r.range_u64(3, 12), r.range_u64(0, 2)),
+        |&(osds, victim)| {
+            let before = OsdMap::new(osds as usize, 128);
+            let mut after = before.clone();
+            after.set_weight(victim as u32, 0.25);
+            (0..128u32).all(|pg| {
+                let a = before.pg_to_osds(skyhook_map::store::PgId(pg), 1)[0];
+                let b = after.pg_to_osds(skyhook_map::store::PgId(pg), 1)[0];
+                a == b || a == victim as u32 || b == victim as u32
+            })
+        },
+    );
+}
+
+#[test]
+fn hash_name_locality_prefix_only() {
+    forall(
+        3,
+        200,
+        |r| (r.range_u64(0, 1000), r.range_u64(0, 1000)),
+        |&(group, obj)| {
+            let m = OsdMap::new(8, 256);
+            let a = m.pg_of(&format!("g{group}#ds/t/{obj:08}"));
+            let b = m.pg_of(&format!("g{group}#other/a/{:08}", obj / 2));
+            a == b // same locality ⇒ same PG regardless of suffix
+        },
+    );
+}
+
+#[test]
+fn hash_disperses() {
+    forall(
+        4,
+        200,
+        |r| r.range_u64(0, 1_000_000),
+        |&x| hash_name(&format!("a{x}")) != hash_name(&format!("b{x}")),
+    );
+}
+
+#[test]
+fn hyperslab_decompose_partitions_exactly() {
+    forall_explain(
+        5,
+        200,
+        |r| {
+            (
+                (r.range_u64(4, 24), r.range_u64(4, 24)),
+                (r.range_u64(1, 9), r.range_u64(1, 9)),
+                r.next_u64(),
+            )
+        },
+        |&((d0, d1), (c0, c1), seed)| {
+            let space = Dataspace::new(&[d0, d1]).map_err(|e| e.to_string())?;
+            let grid = ChunkGrid::new(space, &[c0, c1]).map_err(|e| e.to_string())?;
+            let mut r = Xoshiro256::new(seed);
+            let start = [r.range_u64(0, d0 - 1), r.range_u64(0, d1 - 1)];
+            let count = [
+                r.range_u64(1, d0 - start[0]),
+                r.range_u64(1, d1 - start[1]),
+            ];
+            let slab = Hyperslab::new(&start, &count).map_err(|e| e.to_string())?;
+            let pieces = grid.decompose(&slab).map_err(|e| e.to_string())?;
+            let total: u64 = pieces.iter().map(|(_, s)| s.numel()).sum();
+            if total != slab.numel() {
+                return Err(format!("covered {total} of {}", slab.numel()));
+            }
+            for (i, (idx_a, a)) in pieces.iter().enumerate() {
+                let cs = grid.chunk_slab(*idx_a).map_err(|e| e.to_string())?;
+                if cs.intersect(a) != Some(a.clone()) {
+                    return Err(format!("piece {i} leaks outside its chunk"));
+                }
+                for (idx_b, b) in &pieces[i + 1..] {
+                    if idx_a == idx_b {
+                        return Err("duplicate chunk index".into());
+                    }
+                    if a.intersect(b).is_some() {
+                        return Err("overlapping pieces".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn layout_roundtrip_random_batches() {
+    forall_explain(
+        6,
+        60,
+        |r| (r.range_u64(0, 500), r.next_u64()),
+        |&(rows, seed)| {
+            let mut rng = Xoshiro256::new(seed);
+            let schema = TableSchema::new(&[
+                ("a", DType::I64),
+                ("b", DType::F32),
+                ("c", DType::Str),
+                ("d", DType::F64),
+            ]);
+            let batch = Batch::new(
+                schema,
+                vec![
+                    Column::I64((0..rows).map(|_| rng.next_u64() as i64).collect()),
+                    Column::F32((0..rows).map(|_| rng.f32() * 1e4 - 5e3).collect()),
+                    Column::Str(
+                        (0..rows)
+                            .map(|_| "x".repeat(rng.range(0, 12)))
+                            .collect(),
+                    ),
+                    Column::F64((0..rows).map(|_| rng.f64()).collect()),
+                ],
+            )
+            .map_err(|e| e.to_string())?;
+            for layout in [Layout::Row, Layout::Col] {
+                let enc = encode_batch(&batch, layout);
+                let (dec, l) = decode_batch(&enc).map_err(|e| e.to_string())?;
+                if l != layout || dec != batch {
+                    return Err(format!("{layout:?} roundtrip mismatch"));
+                }
+                // Projection equivalence.
+                let (proj, _) =
+                    decode_projection(&enc, &["b", "a"]).map_err(|e| e.to_string())?;
+                let direct = batch.project(&["b", "a"]).map_err(|e| e.to_string())?;
+                if proj != direct {
+                    return Err(format!("{layout:?} projection mismatch"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn agg_state_merge_is_associative_and_order_free() {
+    forall_explain(
+        7,
+        100,
+        |r| {
+            let n = r.range(0, 60);
+            (0..n).map(|_| r.f64() * 200.0 - 100.0).collect::<Vec<f64>>()
+        },
+        |xs| {
+            // Split three ways, merge in two different shapes.
+            let mut parts = [AggState::new(true), AggState::new(true), AggState::new(true)];
+            for (i, &x) in xs.iter().enumerate() {
+                parts[i % 3].update(x);
+            }
+            let mut left = parts[0].clone();
+            left.merge(&parts[1]);
+            left.merge(&parts[2]);
+            let mut right = parts[2].clone();
+            right.merge(&parts[1]);
+            right.merge(&parts[0]);
+            for f in [
+                AggFunc::Count,
+                AggFunc::Sum,
+                AggFunc::Mean,
+                AggFunc::Var,
+                AggFunc::Min,
+                AggFunc::Max,
+                AggFunc::Median,
+            ] {
+                if xs.is_empty() && f != AggFunc::Count && f != AggFunc::Sum {
+                    continue;
+                }
+                let a = left.finalize(f).map_err(|e| e.to_string())?;
+                let b = right.finalize(f).map_err(|e| e.to_string())?;
+                if (a - b).abs() > 1e-9 * (1.0 + a.abs()) {
+                    return Err(format!("{}: {a} vs {b}", f.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn predicate_de_morgan() {
+    forall(
+        8,
+        100,
+        |r| (r.f64() * 100.0, r.f64() * 100.0, r.next_u64()),
+        |&(t1, t2, seed)| {
+            let batch = skyhook_map::dataset::table::gen::sensor_table(200, seed);
+            let p = Predicate::cmp("val", CmpOp::Gt, t1);
+            let q = Predicate::cmp("val", CmpOp::Le, t2);
+            // !(p && q) == !p || !q
+            let lhs = p.clone().and(q.clone()).not().eval(&batch).unwrap();
+            let rhs = p.clone().not().or(q.clone().not()).eval(&batch).unwrap();
+            // p && !p == false
+            let contradiction = p.clone().and(p.clone().not()).eval(&batch).unwrap();
+            lhs == rhs && contradiction.iter().all(|&x| !x)
+        },
+    );
+}
+
+#[test]
+fn pack_units_conserves_and_respects_target() {
+    forall_explain(
+        9,
+        100,
+        |r| {
+            let n = r.range(0, 30);
+            let units: Vec<u64> = (0..n).map(|_| r.range_u64(1, 10_000)).collect();
+            (units, r.range_u64(64, 4096))
+        },
+        |(sizes, target)| {
+            let units: Vec<LogicalUnit> = sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &bytes)| LogicalUnit {
+                    id: format!("u{i}"),
+                    bytes,
+                    locality: None,
+                })
+                .collect();
+            let objs = pack_units(&units, *target).map_err(|e| e.to_string())?;
+            let packed: u64 = objs.iter().map(|o| o.bytes).sum();
+            let input: u64 = sizes.iter().sum();
+            if packed != input {
+                return Err(format!("bytes not conserved: {packed} vs {input}"));
+            }
+            if let Some(o) = objs.iter().find(|o| o.bytes > *target) {
+                return Err(format!("object over target: {} > {target}", o.bytes));
+            }
+            let st = packing_stats(&objs, *target);
+            if st.objects != objs.len() {
+                return Err("stats object count wrong".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn predicate_wire_roundtrip_random() {
+    fn random_pred(r: &mut Xoshiro256, depth: usize) -> Predicate {
+        if depth == 0 || r.chance(0.4) {
+            let ops = [CmpOp::Lt, CmpOp::Le, CmpOp::Gt, CmpOp::Ge, CmpOp::Eq, CmpOp::Ne];
+            return Predicate::cmp(
+                ["val", "ts", "sensor"][r.range(0, 2)],
+                ops[r.range(0, 5)],
+                r.f64() * 100.0,
+            );
+        }
+        match r.range(0, 2) {
+            0 => random_pred(r, depth - 1).and(random_pred(r, depth - 1)),
+            1 => random_pred(r, depth - 1).or(random_pred(r, depth - 1)),
+            _ => random_pred(r, depth - 1).not(),
+        }
+    }
+    forall(
+        10,
+        200,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut r = Xoshiro256::new(seed);
+            let p = random_pred(&mut r, 4);
+            let mut w = skyhook_map::util::bytes::ByteWriter::new();
+            p.encode_into(&mut w);
+            let buf = w.finish();
+            let mut rd = skyhook_map::util::bytes::ByteReader::new(&buf);
+            Predicate::decode_from(&mut rd).map(|d| d == p).unwrap_or(false)
+        },
+    );
+}
+
+#[test]
+fn vol_forwarding_matches_reference_buffer() {
+    // Model-based test: the forwarding VOL backend must behave exactly
+    // like a flat in-memory array under random writes and reads.
+    use skyhook_map::config::ClusterConfig;
+    use skyhook_map::dataset::array::copy_slab_f32;
+    use skyhook_map::store::Cluster;
+    use skyhook_map::vol::{vol_registry, ForwardingBackend, VolFile};
+    forall_explain(
+        11,
+        20,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Xoshiro256::new(seed);
+            let dims = [rng.range_u64(6, 30), rng.range_u64(6, 30)];
+            let chunk = [rng.range_u64(2, 8), rng.range_u64(2, 8)];
+            let space = Dataspace::new(&dims).unwrap();
+            let cluster = Cluster::new(
+                &ClusterConfig {
+                    osds: 3,
+                    replicas: 1,
+                    ..Default::default()
+                },
+                vol_registry(),
+            );
+            let mut f = VolFile::open(Box::new(ForwardingBackend::new(cluster)));
+            f.create_dataset("d", &space, &chunk).map_err(|e| e.to_string())?;
+            let mut model = vec![0.0f32; space.numel() as usize];
+            for _ in 0..6 {
+                let start = [rng.range_u64(0, dims[0] - 1), rng.range_u64(0, dims[1] - 1)];
+                let count = [
+                    rng.range_u64(1, dims[0] - start[0]),
+                    rng.range_u64(1, dims[1] - start[1]),
+                ];
+                let slab = Hyperslab::new(&start, &count).unwrap();
+                let data: Vec<f32> = (0..slab.numel()).map(|_| rng.f32()).collect();
+                f.write("d", &slab, &data).map_err(|e| e.to_string())?;
+                let src = Dataspace::new(&slab.count).unwrap();
+                copy_slab_f32(
+                    &data,
+                    &src,
+                    &Hyperslab::whole(&src),
+                    &mut model,
+                    &space,
+                    &slab,
+                )
+                .unwrap();
+            }
+            let got = f.read_all("d").map_err(|e| e.to_string())?;
+            if got != model {
+                return Err("forwarding VOL diverged from flat-buffer model".into());
+            }
+            Ok(())
+        },
+    );
+}
