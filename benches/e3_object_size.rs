@@ -56,18 +56,17 @@ fn main() {
             )
             .unwrap();
 
-        // Narrow query (selective filter — benefits from small objects
-        // only through parallelism, hurt by per-object op overhead).
+        // Narrow query (selective filter on the sorted ts column): small
+        // objects pay per-object op overhead but let zone-map pruning
+        // drop nearly everything — the pruned/unpruned gap is the win.
+        let narrow_q = Query::scan("t")
+            .filter(Predicate::cmp("ts", CmpOp::Lt, 1000.0))
+            .select(&["val"]);
         stack.driver.reset_time();
-        let narrow = stack
-            .driver
-            .execute(
-                &Query::scan("t")
-                    .filter(Predicate::cmp("ts", CmpOp::Lt, 1000.0))
-                    .select(&["val"]),
-                None,
-            )
-            .unwrap();
+        let narrow = stack.driver.execute(&narrow_q, None).unwrap();
+        stack.driver.reset_time();
+        let narrow_unpruned = stack.driver.execute_opts(&narrow_q, None, false).unwrap();
+        assert_eq!(narrow.rows, narrow_unpruned.rows, "pruning changed results");
 
         // Load balance: stddev/mean of per-OSD object counts.
         let dist = stack.cluster.object_distribution();
@@ -83,6 +82,8 @@ fn main() {
             format!("{:.3}", rep.sim_seconds),
             format!("{:.4}", scan.stats.sim_seconds),
             format!("{:.4}", narrow.stats.sim_seconds),
+            format!("{:.4}", narrow_unpruned.stats.sim_seconds),
+            narrow.stats.objects_pruned.to_string(),
             format!("{:.2}", imbalance),
         ]);
     }
@@ -94,6 +95,8 @@ fn main() {
             "write sim s",
             "scan sim s",
             "narrow sim s",
+            "narrow unpruned s",
+            "pruned objs",
             "imbalance",
         ],
         &out,

@@ -170,9 +170,9 @@ impl Ingestor {
             let rows = group.nrows() as u64;
             match crate::skyhook::worker::write_row_group(&cluster, &name, &group, layout, 0.0, &cpu)
             {
-                Ok((bytes, finish)) => {
+                Ok((bytes, finish, stats)) => {
                     let mut s = shared.lock().unwrap();
-                    s.row_groups.push((index, RowGroupMeta { rows, bytes }));
+                    s.row_groups.push((index, RowGroupMeta { rows, bytes, stats }));
                     s.bytes_written += bytes;
                     s.sim_finish = s.sim_finish.max(finish);
                 }
@@ -219,20 +219,19 @@ impl Ingestor {
                 )));
             }
         }
-        let localities = vec![
-            self.cfg.locality.clone().unwrap_or_default();
-            s.row_groups.len()
-        ];
+        let objects = s.row_groups.len();
+        let localities = vec![self.cfg.locality.clone().unwrap_or_default(); objects];
+        let row_groups = std::mem::take(&mut s.row_groups);
         let meta = DatasetMeta::Table {
             schema: self.schema.clone(),
             layout: self.cfg.layout,
-            row_groups: s.row_groups.iter().map(|(_, g)| g.clone()).collect(),
+            row_groups: row_groups.into_iter().map(|(_, g)| g).collect(),
             localities,
         };
         let sim = metadata::save_meta(&self.cluster, s.sim_finish, &self.dataset, &meta, false)?;
         Ok(IngestReport {
             rows: self.rows,
-            objects: s.row_groups.len(),
+            objects,
             bytes_written: s.bytes_written,
             sim_seconds: sim,
             stalls: self.stalls,

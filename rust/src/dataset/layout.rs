@@ -17,7 +17,9 @@
 //! checksum**, so a storage server can read just the columns a query
 //! touches with ranged device reads and still verify integrity — the
 //! physical asymmetry (row objects must be read whole) that the E4
-//! experiment measures.
+//! experiment measures. [`read_projected`] is that partial-read scan
+//! path, shared by the server-side extension and the client-side worker
+//! through the [`RangeSource`] abstraction.
 
 use super::schema::TableSchema;
 #[cfg(test)]
@@ -25,6 +27,7 @@ use super::schema::DType;
 use super::table::{Batch, Column};
 use crate::error::{Error, Result};
 use crate::util::bytes::{ByteReader, ByteWriter};
+use std::borrow::Cow;
 
 const TABLE_MAGIC: &[u8; 4] = b"SKYB";
 const ARRAY_MAGIC: &[u8; 4] = b"SKYA";
@@ -140,7 +143,9 @@ pub fn parse_header(buf: &[u8]) -> Result<TableHeader> {
                 let len = r.u64()?;
                 let crc = r.u32()?;
                 directory.push((off, len, crc));
-                off += len;
+                off = off
+                    .checked_add(len)
+                    .ok_or_else(|| Error::Corrupt("directory extent overflow".into()))?;
             }
         }
     }
@@ -242,13 +247,104 @@ pub fn decode_projection(buf: &[u8], names: &[&str]) -> Result<(Batch, usize)> {
 }
 
 /// Re-encode an object in the other layout (physical design
-/// transformation, §5 bullet 2). Returns the new bytes.
-pub fn transform(buf: &[u8], target: Layout) -> Result<Vec<u8>> {
-    let (batch, current) = decode_batch(buf)?;
+/// transformation, §5 bullet 2). A no-op transform borrows the input
+/// (no decode, no full-buffer copy); only a real layout change decodes
+/// and re-encodes.
+pub fn transform(buf: &[u8], target: Layout) -> Result<Cow<'_, [u8]>> {
+    let (current, _, _) = peek_header(buf)?;
     if current == target {
-        return Ok(buf.to_vec());
+        return Ok(Cow::Borrowed(buf));
     }
-    Ok(encode_batch(&batch, target))
+    let (batch, _) = decode_batch(buf)?;
+    Ok(Cow::Owned(encode_batch(&batch, target)))
+}
+
+// ---- projected partial reads ----------------------------------------------
+
+/// Ranged access to one serialized table object. Implemented over a
+/// `ClsBackend` on the storage server (`skyhook::extension`) and over
+/// cluster ranged reads on the client (`skyhook::worker`), so both sides
+/// share the same projected partial-read path below.
+pub trait RangeSource {
+    /// Total object size in bytes.
+    fn size(&mut self) -> Result<usize>;
+    /// Read `[offset, offset + len)` of the object data.
+    fn read_range(&mut self, offset: usize, len: usize) -> Result<Vec<u8>>;
+    /// Read the whole object (fallback for Row-layout objects).
+    fn read_all(&mut self) -> Result<Vec<u8>>;
+}
+
+/// Largest header prefix fetched before falling back to a full read.
+pub const HEADER_PREFIX: usize = 64 * 1024;
+
+/// Read only the columns named in `needed` from a table object.
+///
+/// For columnar objects this issues *ranged reads* via the header
+/// directory — untouched columns never leave the device (and, on the
+/// client path, never cross the network). Row objects, oversized
+/// headers, and unparseable prefixes fall back to a full read plus
+/// projection (the row-vs-column physical asymmetry the E4 experiment
+/// measures). `needed = None` reads everything.
+///
+/// Returns a batch containing exactly the needed columns, in schema
+/// order. Per-column checksums of fetched columns are verified.
+pub fn read_projected(src: &mut dyn RangeSource, needed: Option<&[String]>) -> Result<Batch> {
+    let Some(needed) = needed else {
+        let raw = src.read_all()?;
+        return Ok(decode_batch(&raw)?.0);
+    };
+    let size = src.size()?;
+    let prefix = src.read_range(0, size.min(HEADER_PREFIX))?;
+    let header = match parse_header(&prefix) {
+        Ok(h) if h.layout == Layout::Col => h,
+        // Row layout, oversized header, or parse trouble: whole object.
+        // The prefix already holds the first bytes — fetch only the
+        // remainder, never the same bytes twice.
+        _ => {
+            let mut raw = prefix;
+            if raw.len() < size {
+                raw.extend(src.read_range(raw.len(), size - raw.len())?);
+            }
+            let (batch, _) = decode_batch(&raw)?;
+            let refs: Vec<&str> = needed.iter().map(String::as_str).collect();
+            return batch.project(&refs);
+        }
+    };
+    // Validate names early.
+    for n in needed {
+        header.schema.col_index(n)?;
+    }
+    let mut schema_cols = Vec::new();
+    let mut columns = Vec::new();
+    for (ci, col_schema) in header.schema.columns.iter().enumerate() {
+        if !needed.contains(&col_schema.name) {
+            continue;
+        }
+        let (off, len, crc) = header.directory[ci];
+        let start = header
+            .payload_start
+            .checked_add(off as usize)
+            .ok_or_else(|| Error::Corrupt("directory extent overflow".into()))?;
+        let end = start
+            .checked_add(len as usize)
+            .ok_or_else(|| Error::Corrupt("directory extent overflow".into()))?;
+        let bytes: Cow<'_, [u8]> = if end <= prefix.len() {
+            Cow::Borrowed(&prefix[start..end])
+        } else {
+            Cow::Owned(src.read_range(start, len as usize)?)
+        };
+        if crc32fast::hash(&bytes) != crc {
+            return Err(Error::Corrupt(format!(
+                "column {:?} checksum mismatch",
+                col_schema.name
+            )));
+        }
+        let mut col = Column::empty(col_schema.dtype);
+        decode_one_col(&mut col, header.nrows, &bytes)?;
+        schema_cols.push((col_schema.name.as_str(), col_schema.dtype));
+        columns.push(col);
+    }
+    Batch::new(TableSchema::new(&schema_cols), columns)
 }
 
 fn encode_rows(batch: &Batch) -> Vec<u8> {
@@ -580,6 +676,85 @@ mod tests {
     fn projection_missing_column() {
         let enc = encode_batch(&sample(), Layout::Col);
         assert!(decode_projection(&enc, &["nope"]).is_err());
+    }
+
+    /// In-memory [`RangeSource`] that meters what it serves.
+    struct BufSource {
+        buf: Vec<u8>,
+        fetched: usize,
+    }
+
+    impl RangeSource for BufSource {
+        fn size(&mut self) -> Result<usize> {
+            Ok(self.buf.len())
+        }
+        fn read_range(&mut self, offset: usize, len: usize) -> Result<Vec<u8>> {
+            let end = offset
+                .checked_add(len)
+                .filter(|&e| e <= self.buf.len())
+                .ok_or_else(|| Error::Invalid("range out of bounds".into()))?;
+            self.fetched += len;
+            Ok(self.buf[offset..end].to_vec())
+        }
+        fn read_all(&mut self) -> Result<Vec<u8>> {
+            self.fetched += self.buf.len();
+            Ok(self.buf.clone())
+        }
+    }
+
+    #[test]
+    fn read_projected_fetches_only_needed_columns() {
+        let b = gen::wide_table(4000, 16, 5);
+        let needed = vec!["c3".to_string(), "c11".to_string()];
+        let mut col_src = BufSource {
+            buf: encode_batch(&b, Layout::Col),
+            fetched: 0,
+        };
+        let got = read_projected(&mut col_src, Some(&needed)).unwrap();
+        assert_eq!(got.ncols(), 2);
+        assert_eq!(got.nrows(), 4000);
+        assert_eq!(got, b.project(&["c3", "c11"]).unwrap());
+        // Only the header prefix + 2 of 16 columns were fetched.
+        assert!(
+            col_src.fetched < col_src.buf.len() / 4,
+            "fetched {} of {}",
+            col_src.fetched,
+            col_src.buf.len()
+        );
+        // Row layout must fall back to a full read, same logical result.
+        let mut row_src = BufSource {
+            buf: encode_batch(&b, Layout::Row),
+            fetched: 0,
+        };
+        let got_row = read_projected(&mut row_src, Some(&needed)).unwrap();
+        assert_eq!(got_row, got);
+        assert!(row_src.fetched >= row_src.buf.len());
+        // needed = None reads everything.
+        let mut full_src = BufSource {
+            buf: encode_batch(&b, Layout::Col),
+            fetched: 0,
+        };
+        assert_eq!(read_projected(&mut full_src, None).unwrap(), b);
+        // Missing columns error.
+        assert!(read_projected(
+            &mut col_src,
+            Some(&["ghost".to_string()])
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn read_projected_small_object_served_from_prefix() {
+        // Object smaller than the header prefix: column bytes come out
+        // of the prefix read, no extra ranged reads.
+        let b = sample();
+        let mut src = BufSource {
+            buf: encode_batch(&b, Layout::Col),
+            fetched: 0,
+        };
+        let got = read_projected(&mut src, Some(&["v".to_string()])).unwrap();
+        assert_eq!(got, b.project(&["v"]).unwrap());
+        assert_eq!(src.fetched, src.buf.len().min(HEADER_PREFIX));
     }
 
     #[test]

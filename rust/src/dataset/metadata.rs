@@ -4,21 +4,190 @@
 //!
 //! Metadata is itself stored as an object (`{dataset}/_meta`) so it
 //! inherits the store's replication and failover.
+//!
+//! ## Zone-map statistics
+//!
+//! Each row-group object carries per-column min/max *zone maps*, stamped
+//! twice on the write path: into [`RowGroupMeta::stats`] here (so the
+//! planner can drop sub-queries before any I/O is issued) and into the
+//! object's `skyhook.zonemap` xattr (so the storage-side extension can
+//! re-check and short-circuit without touching object data). A zone map
+//! is advisory: an absent or invalid entry only disables pruning, never
+//! changes results. Columns containing NaN (or non-numeric columns) are
+//! recorded as invalid so NaN-matching predicates (`Ne`) stay correct.
 
 use super::naming;
 use super::schema::{Dataspace, TableSchema};
+use super::table::{Batch, Column};
 use crate::dataset::layout::Layout;
 use crate::error::{Error, Result};
 use crate::store::Cluster;
 use crate::util::bytes::{ByteReader, ByteWriter};
 
 const META_MAGIC: &[u8; 4] = b"SKYM";
+const ZONE_MAGIC: &[u8; 4] = b"SKYZ";
+
+/// Object xattr key under which the write path stamps each row-group
+/// object's serialized [`ZoneMap`].
+pub const ZONE_MAP_XATTR: &str = "skyhook.zonemap";
+
+/// Min/max zone map of one column of one row group.
+///
+/// Invalid stats (NaN bounds: string columns, NaN-containing columns,
+/// empty groups) disable pruning for that column — `range()` returns
+/// `None` and the planner must assume any value may occur.
+#[derive(Clone, Copy, Debug)]
+pub struct ColumnStats {
+    pub min: f64,
+    pub max: f64,
+}
+
+impl PartialEq for ColumnStats {
+    fn eq(&self, other: &Self) -> bool {
+        // Bitwise so invalid (NaN) stats compare equal and wire
+        // roundtrips stay reflexive.
+        self.min.to_bits() == other.min.to_bits() && self.max.to_bits() == other.max.to_bits()
+    }
+}
+
+impl ColumnStats {
+    /// Stats that prune nothing (unknown / not computable).
+    pub fn absent() -> ColumnStats {
+        ColumnStats {
+            min: f64::NAN,
+            max: f64::NAN,
+        }
+    }
+
+    /// True when the bounds describe at least one value.
+    pub fn is_valid(&self) -> bool {
+        self.min <= self.max
+    }
+
+    /// `(min, max)` when valid, `None` otherwise.
+    pub fn range(&self) -> Option<(f64, f64)> {
+        if self.is_valid() {
+            Some((self.min, self.max))
+        } else {
+            None
+        }
+    }
+
+    /// Wire encoding (shared by [`ZoneMap`] and the dataset metadata).
+    pub fn encode_into(&self, w: &mut ByteWriter) {
+        w.f64(self.min);
+        w.f64(self.max);
+    }
+
+    pub fn decode_from(r: &mut ByteReader) -> Result<ColumnStats> {
+        Ok(ColumnStats {
+            min: r.f64()?,
+            max: r.f64()?,
+        })
+    }
+
+    /// Compute stats over one column. Any NaN poisons the whole column
+    /// (a `Ne` predicate matches NaN rows, so min/max over the non-NaN
+    /// values would prune incorrectly).
+    pub fn from_column(col: &Column) -> ColumnStats {
+        fn scan(it: impl Iterator<Item = f64>) -> ColumnStats {
+            let (mut min, mut max) = (f64::INFINITY, f64::NEG_INFINITY);
+            for x in it {
+                if x.is_nan() {
+                    return ColumnStats::absent();
+                }
+                if x < min {
+                    min = x;
+                }
+                if x > max {
+                    max = x;
+                }
+            }
+            ColumnStats { min, max }
+        }
+        match col {
+            Column::F32(v) => scan(v.iter().map(|&x| x as f64)),
+            Column::F64(v) => scan(v.iter().copied()),
+            Column::I64(v) => scan(v.iter().map(|&x| x as f64)),
+            Column::Str(_) => ColumnStats::absent(),
+        }
+    }
+}
+
+/// Self-contained zone map of one row-group object: schema + row count +
+/// per-column stats. Stored in the object's `skyhook.zonemap` xattr so a
+/// storage server can answer "can anything here match?" without reading
+/// the object data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ZoneMap {
+    pub schema: TableSchema,
+    pub rows: u64,
+    /// Parallel to `schema.columns`.
+    pub stats: Vec<ColumnStats>,
+}
+
+impl ZoneMap {
+    pub fn from_batch(batch: &Batch) -> ZoneMap {
+        ZoneMap {
+            schema: batch.schema.clone(),
+            rows: batch.nrows() as u64,
+            stats: batch.columns.iter().map(ColumnStats::from_column).collect(),
+        }
+    }
+
+    /// Valid `(min, max)` bounds of a column, if known.
+    pub fn range(&self, col: &str) -> Option<(f64, f64)> {
+        let i = self.schema.col_index(col).ok()?;
+        self.stats.get(i).and_then(ColumnStats::range)
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::with_capacity(self.stats.len() * 16 + 64);
+        w.raw(ZONE_MAGIC);
+        w.bytes(&self.schema.encode());
+        w.u64(self.rows);
+        w.u32(self.stats.len() as u32);
+        for s in &self.stats {
+            s.encode_into(&mut w);
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ZoneMap> {
+        let mut r = ByteReader::new(buf);
+        if r.raw(4)? != ZONE_MAGIC {
+            return Err(Error::Corrupt("bad zone map magic".into()));
+        }
+        let schema = TableSchema::decode(r.bytes()?)?;
+        let rows = r.u64()?;
+        let n = r.u32()? as usize;
+        if n != schema.ncols() {
+            return Err(Error::Corrupt(format!(
+                "zone map has {n} columns, schema {}",
+                schema.ncols()
+            )));
+        }
+        let mut stats = Vec::with_capacity(n);
+        for _ in 0..n {
+            stats.push(ColumnStats::decode_from(&mut r)?);
+        }
+        Ok(ZoneMap {
+            schema,
+            rows,
+            stats,
+        })
+    }
+}
 
 /// Per-row-group metadata (enough to plan queries without touching data).
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RowGroupMeta {
     pub rows: u64,
     pub bytes: u64,
+    /// Per-column zone maps, parallel to the dataset schema. Empty when
+    /// unknown (legacy metadata) — the planner then never prunes on
+    /// column values, only on `rows == 0`.
+    pub stats: Vec<ColumnStats>,
 }
 
 /// Metadata of one dataset.
@@ -87,7 +256,9 @@ impl DatasetMeta {
                 row_groups,
                 localities,
             } => {
-                w.u8(0);
+                // Kind 2: table metadata with per-group zone maps (kind 0
+                // is the legacy stats-less encoding, still decodable).
+                w.u8(2);
                 w.bytes(&schema.encode());
                 w.u8(match layout {
                     Layout::Row => 0,
@@ -97,6 +268,10 @@ impl DatasetMeta {
                 for g in row_groups {
                     w.u64(g.rows);
                     w.u64(g.bytes);
+                    w.u32(g.stats.len() as u32);
+                    for s in &g.stats {
+                        s.encode_into(&mut w);
+                    }
                 }
                 for l in localities {
                     w.str(l);
@@ -120,7 +295,7 @@ impl DatasetMeta {
             return Err(Error::Corrupt("bad meta magic".into()));
         }
         match r.u8()? {
-            0 => {
+            kind if kind == 0 || kind == 2 => {
                 let schema = TableSchema::decode(r.bytes()?)?;
                 let layout = match r.u8()? {
                     0 => Layout::Row,
@@ -133,10 +308,22 @@ impl DatasetMeta {
                 }
                 let mut row_groups = Vec::with_capacity(n);
                 for _ in 0..n {
-                    row_groups.push(RowGroupMeta {
-                        rows: r.u64()?,
-                        bytes: r.u64()?,
-                    });
+                    let rows = r.u64()?;
+                    let bytes = r.u64()?;
+                    let stats = if kind == 2 {
+                        let k = r.u32()? as usize;
+                        if k > 100_000 {
+                            return Err(Error::Corrupt("absurd stats count".into()));
+                        }
+                        let mut stats = Vec::with_capacity(k);
+                        for _ in 0..k {
+                            stats.push(ColumnStats::decode_from(&mut r)?);
+                        }
+                        stats
+                    } else {
+                        Vec::new()
+                    };
+                    row_groups.push(RowGroupMeta { rows, bytes, stats });
                 }
                 let mut localities = Vec::with_capacity(n);
                 for _ in 0..n {
@@ -211,8 +398,19 @@ mod tests {
             schema: TableSchema::new(&[("a", DType::F32), ("b", DType::I64)]),
             layout: Layout::Col,
             row_groups: vec![
-                RowGroupMeta { rows: 100, bytes: 1200 },
-                RowGroupMeta { rows: 80, bytes: 960 },
+                RowGroupMeta {
+                    rows: 100,
+                    bytes: 1200,
+                    stats: vec![
+                        ColumnStats { min: -1.5, max: 3.0 },
+                        ColumnStats { min: 0.0, max: 99.0 },
+                    ],
+                },
+                RowGroupMeta {
+                    rows: 80,
+                    bytes: 960,
+                    stats: vec![ColumnStats::absent(), ColumnStats { min: 7.0, max: 7.0 }],
+                },
             ],
             localities: vec![String::new(), "grp1".into()],
         }
@@ -222,6 +420,64 @@ mod tests {
     fn table_meta_roundtrip() {
         let m = table_meta();
         assert_eq!(DatasetMeta::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn column_stats_from_columns() {
+        let s = ColumnStats::from_column(&Column::F32(vec![3.0, -1.0, 2.5]));
+        assert_eq!(s.range(), Some((-1.0, 2.5)));
+        let s = ColumnStats::from_column(&Column::I64(vec![5, 5]));
+        assert_eq!(s.range(), Some((5.0, 5.0)));
+        // NaN poisons the column.
+        let s = ColumnStats::from_column(&Column::F64(vec![1.0, f64::NAN]));
+        assert!(!s.is_valid());
+        // Strings and empty columns have no stats.
+        assert!(!ColumnStats::from_column(&Column::Str(vec!["x".into()])).is_valid());
+        assert!(!ColumnStats::from_column(&Column::F32(vec![])).is_valid());
+    }
+
+    #[test]
+    fn zone_map_roundtrip_and_range() {
+        let b = Batch::new(
+            TableSchema::new(&[("id", DType::I64), ("v", DType::F32), ("tag", DType::Str)]),
+            vec![
+                Column::I64(vec![4, 2, 9]),
+                Column::F32(vec![1.0, -3.5, 0.0]),
+                Column::Str(vec!["a".into(), "b".into(), "c".into()]),
+            ],
+        )
+        .unwrap();
+        let zm = ZoneMap::from_batch(&b);
+        assert_eq!(zm.rows, 3);
+        assert_eq!(zm.range("id"), Some((2.0, 9.0)));
+        assert_eq!(zm.range("v"), Some((-3.5, 1.0)));
+        assert_eq!(zm.range("tag"), None);
+        assert_eq!(zm.range("ghost"), None);
+        assert_eq!(ZoneMap::decode(&zm.encode()).unwrap(), zm);
+        assert!(ZoneMap::decode(b"????").is_err());
+        let enc = zm.encode();
+        assert!(ZoneMap::decode(&enc[..enc.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn legacy_table_meta_without_stats_decodes() {
+        // Hand-build a kind-0 (pre-zone-map) encoding.
+        let schema = TableSchema::new(&[("a", DType::F32)]);
+        let mut w = ByteWriter::new();
+        w.raw(META_MAGIC);
+        w.u8(0);
+        w.bytes(&schema.encode());
+        w.u8(1); // Col
+        w.u32(1);
+        w.u64(10);
+        w.u64(500);
+        w.str("");
+        let m = DatasetMeta::decode(&w.finish()).unwrap();
+        let DatasetMeta::Table { row_groups, .. } = m else {
+            panic!("expected table");
+        };
+        assert_eq!(row_groups.len(), 1);
+        assert!(row_groups[0].stats.is_empty());
     }
 
     #[test]

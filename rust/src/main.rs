@@ -307,8 +307,10 @@ fn cmd_query(f: &Flags) -> Result<()> {
         }
     }
     println!(
-        "-- {} objects, {} moved, sim {:.4}s, wall {:.4}s, pushdown={}",
+        "-- {} objects ({} pruned, {} skipped), {} moved, sim {:.4}s, wall {:.4}s, pushdown={}",
         r.stats.objects,
+        r.stats.objects_pruned,
+        fmt_size(r.stats.bytes_skipped),
         fmt_size(r.stats.bytes_moved),
         r.stats.sim_seconds,
         r.stats.wall_seconds,

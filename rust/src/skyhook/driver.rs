@@ -2,11 +2,11 @@
 //! names and sub-queries, schedules them over the worker pool, and
 //! aggregates the partial results — the Dask-scheduler stand-in.
 
-use super::plan::{plan, ExecMode, QueryPlan};
+use super::plan::{plan_opts, ExecMode, QueryPlan};
 use super::query::{AggState, Query};
 use super::worker::{self, SubOutput, SubResult};
 use crate::config::DriverConfig;
-use crate::dataset::metadata::{self, DatasetMeta, RowGroupMeta};
+use crate::dataset::metadata::{self, ColumnStats, DatasetMeta, RowGroupMeta};
 use crate::dataset::naming;
 use crate::dataset::partition::PartitionSpec;
 use crate::dataset::table::Batch;
@@ -30,6 +30,12 @@ pub struct QueryStats {
     pub wall_seconds: f64,
     /// Number of objects touched.
     pub objects: usize,
+    /// Objects the planner dropped via zone-map pruning — no request was
+    /// issued for them at all.
+    pub objects_pruned: usize,
+    /// Serialized bytes of the pruned objects: I/O and decode work that
+    /// provably could not contribute to the result and was skipped.
+    pub bytes_skipped: u64,
     /// Execution mode used.
     pub pushdown: bool,
 }
@@ -113,7 +119,8 @@ impl Driver {
             .map(|(i, g)| locality.map(|f| f(i, g)).unwrap_or_default())
             .collect();
 
-        // Fan the group writes out over the worker pool.
+        // Fan the group writes out over the worker pool. Items move into
+        // the pool (no batch clones); only the count is kept back.
         let cluster = Arc::clone(&self.cluster);
         let items: Vec<(usize, Batch, String)> = groups
             .into_iter()
@@ -128,21 +135,23 @@ impl Driver {
                 (i, g, name)
             })
             .collect();
+        let objects = items.len();
         let worker_cpus = self.worker_cpus.clone();
         let nw = worker_cpus.len();
-        let results: Vec<Result<(u64, u64, f64)>> = self.pool.map(items.clone(), move |(i, g, name)| {
-            let cpu = &worker_cpus[i % nw];
-            let (bytes, finish) =
-                worker::write_row_group(&cluster, &name, &g, layout, 0.0, cpu)?;
-            Ok((g.nrows() as u64, bytes, finish))
-        });
+        let results: Vec<Result<(u64, u64, f64, Vec<ColumnStats>)>> =
+            self.pool.map(items, move |(i, g, name)| {
+                let cpu = &worker_cpus[i % nw];
+                let (bytes, finish, stats) =
+                    worker::write_row_group(&cluster, &name, &g, layout, 0.0, cpu)?;
+                Ok((g.nrows() as u64, bytes, finish, stats))
+            });
 
-        let mut row_groups = Vec::with_capacity(items.len());
+        let mut row_groups = Vec::with_capacity(objects);
         let mut bytes_written = 0u64;
         let mut sim_finish: f64 = 0.0;
         for r in results {
-            let (rows, bytes, finish) = r?;
-            row_groups.push(RowGroupMeta { rows, bytes });
+            let (rows, bytes, finish, stats) = r?;
+            row_groups.push(RowGroupMeta { rows, bytes, stats });
             bytes_written += bytes;
             sim_finish = sim_finish.max(finish);
         }
@@ -155,7 +164,7 @@ impl Driver {
         };
         let t = metadata::save_meta(&self.cluster, sim_finish, dataset, &meta, false)?;
         Ok(WriteReport {
-            objects: items.len(),
+            objects,
             bytes_written,
             sim_seconds: t,
             wall_seconds: wall.elapsed().as_secs_f64(),
@@ -164,11 +173,22 @@ impl Driver {
 
     // ---- read path ----------------------------------------------------------
 
-    /// Plan and execute a query. `force_mode` lets benches compare
-    /// pushdown vs client-side on identical queries.
+    /// Plan and execute a query (zone-map pruning enabled). `force_mode`
+    /// lets benches compare pushdown vs client-side on identical queries.
     pub fn execute(&self, query: &Query, force_mode: Option<ExecMode>) -> Result<QueryResult> {
+        self.execute_opts(query, force_mode, true)
+    }
+
+    /// [`Driver::execute`] with zone-map pruning optionally disabled —
+    /// the unpruned baseline the pruning benches compare against.
+    pub fn execute_opts(
+        &self,
+        query: &Query,
+        force_mode: Option<ExecMode>,
+        prune: bool,
+    ) -> Result<QueryResult> {
         let (meta, _) = metadata::load_meta(&self.cluster, 0.0, &query.dataset)?;
-        let plan = plan(query, &meta, force_mode)?;
+        let plan = plan_opts(query, &meta, force_mode, prune)?;
         self.execute_plan(&plan)
     }
 
@@ -176,7 +196,7 @@ impl Driver {
     pub fn execute_plan(&self, plan: &QueryPlan) -> Result<QueryResult> {
         let wall = Instant::now();
         let at = self.cluster.clock.now();
-        let query = plan.query.clone();
+        let query = &plan.query;
         let cluster = Arc::clone(&self.cluster);
         let worker_cpus = self.worker_cpus.clone();
         let nw = worker_cpus.len();
@@ -187,7 +207,8 @@ impl Driver {
             .enumerate()
             .collect();
         let objects = subs.len();
-        let q = query.clone();
+        // One deep clone shared by every pool worker.
+        let q = Arc::new(query.clone());
         let results: Vec<Result<SubResult>> = self.pool.map(subs, move |(i, sub)| {
             worker::execute_subquery(&cluster, &q, &sub, at, &worker_cpus[i % nw])
         });
@@ -257,11 +278,29 @@ impl Driver {
             None
         };
 
-        let pushdown = plan
-            .subqueries
-            .first()
-            .map(|s| s.mode == ExecMode::Pushdown)
-            .unwrap_or(true);
+        // Row queries always return a batch — when every sub-query was
+        // pruned (or the dataset has zero objects), synthesize an empty
+        // batch with the projected schema so pruned and unpruned
+        // executions are indistinguishable to callers.
+        let rows = if query.is_aggregate() {
+            None
+        } else {
+            Some(match rows {
+                Some(b) => b,
+                None => {
+                    let schema = match &query.projection {
+                        Some(cols) => {
+                            let refs: Vec<&str> = cols.iter().map(String::as_str).collect();
+                            plan.schema.project(&refs)?
+                        }
+                        None => plan.schema.clone(),
+                    };
+                    Batch::empty(&schema)
+                }
+            })
+        };
+
+        let pushdown = plan.mode == ExecMode::Pushdown;
         Ok(QueryResult {
             rows,
             aggregates,
@@ -271,6 +310,8 @@ impl Driver {
                 sim_seconds: sim_finish - at,
                 wall_seconds: wall.elapsed().as_secs_f64(),
                 objects,
+                objects_pruned: plan.objects_pruned,
+                bytes_skipped: plan.bytes_skipped,
                 pushdown,
             },
         })
@@ -299,6 +340,7 @@ impl Driver {
             let mut w = crate::util::bytes::ByteWriter::new();
             predicate.encode_into(&mut w);
             w.str(column);
+            w.u8(1); // zone-map short-circuit allowed
             w.finish()
         };
         let results: Vec<Result<(QuantileSketch, u64, f64)>> =
@@ -327,6 +369,7 @@ impl Driver {
                 wall_seconds: wall.elapsed().as_secs_f64(),
                 objects,
                 pushdown: true,
+                ..Default::default()
             },
         ))
     }
@@ -357,6 +400,12 @@ impl Driver {
     pub fn transform_layout(&self, dataset: &str, target: Layout) -> Result<WriteReport> {
         let wall = Instant::now();
         let (meta, _) = metadata::load_meta(&self.cluster, 0.0, dataset)?;
+        if !matches!(meta, DatasetMeta::Table { .. }) {
+            return Err(Error::Query("transform needs a table dataset".into()));
+        }
+        // Names are derived before destructuring so the meta fields can
+        // move into the updated metadata below without cloning.
+        let names = meta.object_names(dataset);
         let DatasetMeta::Table {
             schema,
             layout,
@@ -364,7 +413,7 @@ impl Driver {
             localities,
         } = meta
         else {
-            return Err(Error::Query("transform needs a table dataset".into()));
+            unreachable!("table kind checked above");
         };
         if layout == target {
             return Ok(WriteReport {
@@ -374,13 +423,6 @@ impl Driver {
                 wall_seconds: wall.elapsed().as_secs_f64(),
             });
         }
-        let names = DatasetMeta::Table {
-            schema: schema.clone(),
-            layout,
-            row_groups: row_groups.clone(),
-            localities: localities.clone(),
-        }
-        .object_names(dataset);
         let cluster = Arc::clone(&self.cluster);
         let results: Vec<Result<f64>> = self.pool.map(names, move |obj| {
             let t = cluster.call(
@@ -524,6 +566,75 @@ mod tests {
         assert_eq!(rp.aggregates[1], st.count as f64);
         // Pushdown moves much less data for aggregates.
         assert!(rp.stats.bytes_moved * 5 < rc.stats.bytes_moved);
+    }
+
+    #[test]
+    fn pruned_and_unpruned_execution_agree() {
+        let d = driver(4, 4);
+        let b = seed(&d, 3000);
+        // ts is sorted 0..3000, so a narrow range query prunes most
+        // row-group objects at the planner.
+        let pred = Predicate::cmp("ts", CmpOp::Lt, 100.0);
+        let rq = Query::scan("sensors").filter(pred.clone()).select(&["ts", "val"]);
+        let rp = d.execute(&rq, None).unwrap();
+        let ru = d.execute_opts(&rq, None, false).unwrap();
+        assert!(rp.stats.objects_pruned > 0, "nothing pruned");
+        assert!(rp.stats.bytes_skipped > 0);
+        assert_eq!(ru.stats.objects_pruned, 0);
+        assert!(rp.stats.objects < ru.stats.objects);
+        // Bit-identical rows.
+        assert_eq!(rp.rows.unwrap(), ru.rows.unwrap());
+        // Aggregates agree exactly too (pruned partials are a prefix of
+        // the unpruned merge; empty states are merge identities).
+        let aq = Query::scan("sensors")
+            .filter(pred.clone())
+            .aggregate(AggFunc::Count, "val")
+            .aggregate(AggFunc::Sum, "val");
+        let ap = d.execute(&aq, None).unwrap();
+        let au = d.execute_opts(&aq, None, false).unwrap();
+        assert_eq!(ap.aggregates, au.aggregates);
+        assert_eq!(ap.aggregates[0], 100.0);
+        assert!(ap.stats.bytes_moved < au.stats.bytes_moved);
+        // Direct check against the source batch.
+        let mask = pred.eval(&b).unwrap();
+        let mut st = AggState::new(false);
+        st.update_column(b.col("val").unwrap(), &mask).unwrap();
+        assert!((ap.aggregates[1] - st.sum).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fully_pruned_query_returns_empty_not_missing() {
+        let d = driver(3, 2);
+        seed(&d, 500);
+        // ts never reaches 10^9: every object prunes.
+        let q = Query::scan("sensors")
+            .filter(Predicate::cmp("ts", CmpOp::Ge, 1e9))
+            .select(&["val"]);
+        let r = d.execute(&q, None).unwrap();
+        let rows = r.rows.unwrap();
+        assert_eq!(rows.nrows(), 0);
+        assert_eq!(rows.ncols(), 1);
+        assert_eq!(rows.schema.columns[0].name, "val");
+        assert_eq!(r.stats.objects, 0);
+        assert!(r.stats.objects_pruned > 0);
+        assert_eq!(r.stats.bytes_moved, 0);
+        // Unpruned execution of the same dead query returns the same
+        // (empty) result the long way around.
+        let u = d.execute_opts(&q, None, false).unwrap();
+        assert_eq!(u.rows.unwrap(), rows);
+        // Aggregates over a fully pruned dataset behave like an empty set.
+        let q = Query::scan("sensors")
+            .filter(Predicate::cmp("ts", CmpOp::Ge, 1e9))
+            .aggregate(AggFunc::Count, "val");
+        let r = d.execute(&q, None).unwrap();
+        assert_eq!(r.aggregates[0], 0.0);
+        // Group-by: empty group list, same as unpruned.
+        let q = Query::scan("sensors")
+            .filter(Predicate::cmp("ts", CmpOp::Ge, 1e9))
+            .group("sensor")
+            .aggregate(AggFunc::Count, "val");
+        let r = d.execute(&q, None).unwrap();
+        assert_eq!(r.groups.unwrap(), vec![]);
     }
 
     #[test]

@@ -3,14 +3,22 @@
 //! filter / aggregate, group-by partials, and an omap-backed secondary
 //! index (the RocksDB-based "remote indexing system").
 //!
+//! Every scan-shaped handler first consults the object's `skyhook.zonemap`
+//! xattr: if the stamped per-column min/max statistics prove the predicate
+//! matches zero rows, the handler answers with an empty result without
+//! touching object data at all — the server-side half of the zone-map
+//! pruning fast path (the planner-side half lives in `skyhook::plan`).
+//!
 //! When a PJRT engine is supplied (the AOT-compiled JAX/Pallas chunk
 //! kernel, see `runtime::`), the masked f32 aggregation inside
 //! `skyhook.agg` executes on it — the paper's storage-side compute
 //! offload running the very kernel the L1/L2 layers compiled.
 
 use super::query::{AggState, Aggregate, Predicate};
-use crate::dataset::layout::{decode_batch, encode_batch, Layout};
-use crate::dataset::table::Column;
+use crate::dataset::layout::{self, decode_batch, encode_batch, Layout, RangeSource};
+use crate::dataset::metadata::{ZoneMap, ZONE_MAP_XATTR};
+use crate::dataset::table::{Batch, Column};
+use crate::dataset::{DType, TableSchema};
 use crate::error::{Error, Result};
 use crate::store::objclass::{ClassRegistry, ClsBackend};
 use crate::util::bytes::{ByteReader, ByteWriter};
@@ -30,8 +38,10 @@ pub trait ChunkCompute: Send + Sync {
     fn masked_moments(&self, values: &[f32], mask: &[bool]) -> Result<[f64; 5]>;
 }
 
-/// Encode the input of `skyhook.scan`: predicate + projection.
-pub fn encode_scan_arg(pred: &Predicate, projection: Option<&[String]>) -> Vec<u8> {
+/// Encode the input of `skyhook.scan`: predicate + projection +
+/// whether the handler may consult the object's zone map (`zone_maps =
+/// false` forces a real read — the unpruned bench baseline).
+pub fn encode_scan_arg(pred: &Predicate, projection: Option<&[String]>, zone_maps: bool) -> Vec<u8> {
     let mut w = ByteWriter::new();
     pred.encode_into(&mut w);
     match projection {
@@ -46,10 +56,11 @@ pub fn encode_scan_arg(pred: &Predicate, projection: Option<&[String]>) -> Vec<u
             w.u8(0);
         }
     }
+    w.u8(zone_maps as u8);
     w.finish()
 }
 
-fn decode_scan_arg(input: &[u8]) -> Result<(Predicate, Option<Vec<String>>)> {
+fn decode_scan_arg(input: &[u8]) -> Result<(Predicate, Option<Vec<String>>, bool)> {
     let mut r = ByteReader::new(input);
     let pred = Predicate::decode_from(&mut r)?;
     let projection = match r.u8()? {
@@ -64,12 +75,19 @@ fn decode_scan_arg(input: &[u8]) -> Result<(Predicate, Option<Vec<String>>)> {
         }
         o => return Err(Error::Corrupt(format!("bad projection tag {o}"))),
     };
-    Ok((pred, projection))
+    let zone_maps = r.u8()? != 0;
+    Ok((pred, projection, zone_maps))
 }
 
 /// Encode the input of `skyhook.agg`: predicate + aggregate list +
-/// whether raw values must be returned (holistic finalization).
-pub fn encode_agg_arg(pred: &Predicate, aggs: &[Aggregate], keep_values: bool) -> Vec<u8> {
+/// whether raw values must be returned (holistic finalization) + whether
+/// the zone-map short-circuit is allowed.
+pub fn encode_agg_arg(
+    pred: &Predicate,
+    aggs: &[Aggregate],
+    keep_values: bool,
+    zone_maps: bool,
+) -> Vec<u8> {
     let mut w = ByteWriter::new();
     pred.encode_into(&mut w);
     w.u8(keep_values as u8);
@@ -78,10 +96,11 @@ pub fn encode_agg_arg(pred: &Predicate, aggs: &[Aggregate], keep_values: bool) -
         w.str(&a.col);
         w.u8(a.func.code());
     }
+    w.u8(zone_maps as u8);
     w.finish()
 }
 
-fn decode_agg_arg(input: &[u8]) -> Result<(Predicate, bool, Vec<String>)> {
+fn decode_agg_arg(input: &[u8]) -> Result<(Predicate, bool, Vec<String>, bool)> {
     let mut r = ByteReader::new(input);
     let pred = Predicate::decode_from(&mut r)?;
     let keep_values = r.u8()? != 0;
@@ -91,15 +110,22 @@ fn decode_agg_arg(input: &[u8]) -> Result<(Predicate, bool, Vec<String>)> {
         cols.push(r.str()?.to_string());
         let _func = r.u8()?; // per-agg func is only needed at finalize time
     }
-    Ok((pred, keep_values, cols))
+    let zone_maps = r.u8()? != 0;
+    Ok((pred, keep_values, cols, zone_maps))
 }
 
 /// Encode the input of `skyhook.group_agg`.
-pub fn encode_group_arg(pred: &Predicate, group_col: &str, agg_col: &str) -> Vec<u8> {
+pub fn encode_group_arg(
+    pred: &Predicate,
+    group_col: &str,
+    agg_col: &str,
+    zone_maps: bool,
+) -> Vec<u8> {
     let mut w = ByteWriter::new();
     pred.encode_into(&mut w);
     w.str(group_col);
     w.str(agg_col);
+    w.u8(zone_maps as u8);
     w.finish()
 }
 
@@ -131,96 +157,87 @@ pub fn index_key_i64(x: i64) -> [u8; 8] {
     ((x as u64) ^ (1u64 << 63)).to_be_bytes()
 }
 
-/// Largest header prefix we read before falling back to a full read.
-const HEADER_PREFIX: usize = 64 * 1024;
+/// [`RangeSource`] over a `ClsBackend`: ranged reads are metered by the
+/// OSD, so untouched columns cost no simulated device time.
+struct BackendRange<'a>(&'a mut dyn ClsBackend);
 
-/// Read only the columns a handler needs.
-///
-/// For columnar objects this issues *ranged device reads* via the header
-/// directory — the physical advantage of the Col layout (§5 physical
-/// design): untouched columns never leave the device, and bytes-read
-/// metering (hence simulated device time) reflects that. Row objects are
-/// read whole. `needed = None` reads everything.
-///
-/// Returns a batch containing exactly the needed columns (schema order).
-fn read_needed(
-    b: &mut dyn ClsBackend,
-    needed: Option<&[String]>,
-) -> Result<crate::dataset::table::Batch> {
-    use crate::dataset::layout::{decode_one_col, parse_header};
-    use crate::dataset::table::Batch;
+impl RangeSource for BackendRange<'_> {
+    fn size(&mut self) -> Result<usize> {
+        self.0.size()
+    }
+    fn read_range(&mut self, offset: usize, len: usize) -> Result<Vec<u8>> {
+        self.0.read_range(offset, len)
+    }
+    fn read_all(&mut self) -> Result<Vec<u8>> {
+        self.0.read()
+    }
+}
 
-    let Some(needed) = needed else {
-        let raw = b.read()?;
-        return Ok(decode_batch(&raw)?.0);
-    };
-    let size = b.size()?;
-    let prefix = b.read_range(0, size.min(HEADER_PREFIX))?;
-    let header = match parse_header(&prefix) {
-        Ok(h) if h.layout == Layout::Col => h,
-        // Row layout, oversized header, or parse trouble: full read.
-        _ => {
-            let raw = b.read()?;
-            let (batch, _) = decode_batch(&raw)?;
-            let refs: Vec<&str> = needed.iter().map(String::as_str).collect();
-            return batch.project(&refs);
-        }
-    };
-    // Validate names early.
-    for n in needed {
-        header.schema.col_index(n)?;
-    }
-    let mut schema_cols = Vec::new();
-    let mut columns = Vec::new();
-    for (ci, col_schema) in header.schema.columns.iter().enumerate() {
-        if !needed.contains(&col_schema.name) {
-            continue;
-        }
-        let (off, len, crc) = header.directory[ci];
-        let start = header.payload_start + off as usize;
-        let bytes = if start + len as usize <= prefix.len() {
-            prefix[start..start + len as usize].to_vec()
-        } else {
-            b.read_range(start, len as usize)?
-        };
-        if crc32fast::hash(&bytes) != crc {
-            return Err(Error::Corrupt(format!(
-                "column {:?} checksum mismatch",
-                col_schema.name
-            )));
-        }
-        let mut col = crate::dataset::table::Column::empty(col_schema.dtype);
-        decode_one_col(&mut col, header.nrows, &bytes)?;
-        schema_cols.push((col_schema.name.as_str(), col_schema.dtype));
-        columns.push(col);
-    }
-    Batch::new(
-        crate::dataset::TableSchema::new(&schema_cols),
-        columns,
-    )
+/// Read only the columns a handler needs (ranged device reads on Col
+/// objects; see [`layout::read_projected`]). `needed = None` reads
+/// everything.
+fn read_needed(b: &mut dyn ClsBackend, needed: Option<&[String]>) -> Result<Batch> {
+    layout::read_projected(&mut BackendRange(b), needed)
 }
 
 /// Union of column names used by a predicate and an extra set.
 fn needed_union(pred: &Predicate, extra: &[String]) -> Vec<String> {
-    let mut v = pred.columns();
+    let mut v: Vec<String> = pred.columns().into_iter().map(str::to_string).collect();
     v.extend(extra.iter().cloned());
     v.sort();
     v.dedup();
     v
 }
 
+/// Server-side zone-map check: if the object's stamped statistics prove
+/// `pred` matches zero rows, return the object's schema so the handler
+/// can answer without reading any object data. Absent, corrupt, or
+/// inconclusive zone maps return `None` (handler proceeds normally), so
+/// the check can only skip work, never change results.
+fn zone_map_prune(b: &mut dyn ClsBackend, pred: &Predicate) -> Option<TableSchema> {
+    let raw = b.getxattr(ZONE_MAP_XATTR)?;
+    let zm = ZoneMap::decode(&raw).ok()?;
+    // Error parity: a predicate that would fail evaluation (missing or
+    // string-typed column) must fail identically, so never short-circuit
+    // it — the normal path reports the error.
+    for c in pred.columns() {
+        let i = zm.schema.col_index(c).ok()?;
+        if zm.schema.col(i).dtype == DType::Str {
+            return None;
+        }
+    }
+    if zm.rows == 0 || pred.prune(&|c: &str| zm.range(c)) {
+        Some(zm.schema)
+    } else {
+        None
+    }
+}
+
 /// Register the `skyhook` class with an optional PJRT compute engine.
 pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn ChunkCompute>>) {
     // skyhook.scan — filter+project on the server, return a Col batch.
     r.register("skyhook", "scan", |b, input| {
-        let (pred, projection) = decode_scan_arg(input)?;
+        let (pred, projection, zone_maps) = decode_scan_arg(input)?;
+        // Zone-map short-circuit: provably no matching rows → answer an
+        // empty batch without touching object data.
+        if let Some(schema) = zone_maps.then(|| zone_map_prune(b, &pred)).flatten() {
+            let schema = match &projection {
+                Some(cols) => {
+                    let refs: Vec<&str> = cols.iter().map(String::as_str).collect();
+                    schema.project(&refs)?
+                }
+                None => schema,
+            };
+            return Ok(encode_batch(&Batch::empty(&schema), Layout::Col));
+        }
         // Read only predicate + projection columns (ranged reads on Col).
         let batch = match &projection {
             Some(cols) => read_needed(b, Some(&needed_union(&pred, cols)))?,
             None => read_needed(b, None)?,
         };
         b.charge_cpu(batch.nrows() as f64 * ROW_PRED_COST);
-        let mask = pred.eval(&batch)?;
+        let mut mask = Vec::new();
+        pred.eval_into(&batch, &mut mask)?;
         let filtered = batch.filter(&mask)?;
         let result = match projection {
             Some(cols) => {
@@ -233,12 +250,29 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
     });
 
     // skyhook.agg — filter+aggregate on the server, return partials.
-    let eng = engine.clone();
+    // (`engine` moves in: the aggregate hot spot is its only consumer.)
+    let eng = engine;
     r.register("skyhook", "agg", move |b, input| {
-        let (pred, keep_values, cols) = decode_agg_arg(input)?;
+        let (pred, keep_values, cols, zone_maps) = decode_agg_arg(input)?;
+        if let Some(schema) = zone_maps.then(|| zone_map_prune(b, &pred)).flatten() {
+            for c in &cols {
+                // Same failures the normal path would report.
+                let i = schema.col_index(c)?;
+                if schema.col(i).dtype == DType::Str {
+                    return Err(Error::Query("cannot aggregate a string column".into()));
+                }
+            }
+            let mut w = ByteWriter::new();
+            w.u32(cols.len() as u32);
+            for _ in &cols {
+                AggState::new(keep_values).encode_into(&mut w);
+            }
+            return Ok(w.finish());
+        }
         let batch = read_needed(b, Some(&needed_union(&pred, &cols)))?;
         b.charge_cpu(batch.nrows() as f64 * ROW_PRED_COST);
-        let mask = pred.eval(&batch)?;
+        let mut mask = Vec::new();
+        pred.eval_into(&batch, &mut mask)?;
         let mut w = ByteWriter::new();
         w.u32(cols.len() as u32);
         for col_name in &cols {
@@ -272,12 +306,25 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
         let pred = Predicate::decode_from(&mut r)?;
         let group_col = r.str()?.to_string();
         let agg_col = r.str()?.to_string();
+        let zone_maps = r.u8()? != 0;
+        if let Some(schema) = zone_maps.then(|| zone_map_prune(b, &pred)).flatten() {
+            // Same failures the normal path would report.
+            let gi = schema.col_index(&group_col)?;
+            if schema.col(gi).dtype != DType::I64 {
+                return Err(Error::Query("group_by needs an i64 column".into()));
+            }
+            schema.col_index(&agg_col)?;
+            let mut w = ByteWriter::new();
+            w.u32(0);
+            return Ok(w.finish());
+        }
         let batch = read_needed(
             b,
             Some(&needed_union(&pred, &[group_col.clone(), agg_col.clone()])),
         )?;
         b.charge_cpu(batch.nrows() as f64 * (ROW_PRED_COST + VAL_AGG_COST));
-        let mask = pred.eval(&batch)?;
+        let mut mask = Vec::new();
+        pred.eval_into(&batch, &mut mask)?;
         let keys = match batch.col(&group_col)? {
             Column::I64(v) => v,
             _ => return Err(Error::Query("group_by needs an i64 column".into())),
@@ -353,14 +400,23 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
     // skyhook.quantile_sketch — the §3.2 de-composable approximation:
     // build a constant-size mergeable quantile sketch over the filtered
     // column, instead of shipping raw values for holistic functions.
-    // Input: predicate + column name. Output: encoded QuantileSketch.
+    // Input: predicate + column name + zone-map flag. Output: encoded
+    // QuantileSketch.
     r.register("skyhook", "quantile_sketch", |b, input| {
         let mut r = ByteReader::new(input);
         let pred = Predicate::decode_from(&mut r)?;
         let col_name = r.str()?.to_string();
+        let zone_maps = r.u8()? != 0;
+        if let Some(schema) = zone_maps.then(|| zone_map_prune(b, &pred)).flatten() {
+            schema.col_index(&col_name)?;
+            let mut w = ByteWriter::new();
+            super::sketch::QuantileSketch::empty().encode_into(&mut w);
+            return Ok(w.finish());
+        }
         let batch = read_needed(b, Some(&needed_union(&pred, &[col_name.clone()])))?;
         b.charge_cpu(batch.nrows() as f64 * (ROW_PRED_COST + VAL_AGG_COST));
-        let mask = pred.eval(&batch)?;
+        let mut mask = Vec::new();
+        pred.eval_into(&batch, &mut mask)?;
         let col = batch.col(&col_name)?;
         let mut values = Vec::with_capacity(mask.iter().filter(|&&m| m).count());
         for (i, &m) in mask.iter().enumerate() {
@@ -417,7 +473,7 @@ mod tests {
         let pred = Predicate::cmp("flag", CmpOp::Eq, 1.0);
         let out = r.get("skyhook", "scan").unwrap()(
             &mut b,
-            &encode_scan_arg(&pred, Some(&["val".to_string(), "ts".to_string()])),
+            &encode_scan_arg(&pred, Some(&["val".to_string(), "ts".to_string()]), true),
         )
         .unwrap();
         let (batch, layout) = decode_batch(&out).unwrap();
@@ -438,7 +494,7 @@ mod tests {
         let r = registry();
         let mut b = MemBackend::new(&table_object());
         let out =
-            r.get("skyhook", "scan").unwrap()(&mut b, &encode_scan_arg(&Predicate::True, None))
+            r.get("skyhook", "scan").unwrap()(&mut b, &encode_scan_arg(&Predicate::True, None, true))
                 .unwrap();
         let (batch, _) = decode_batch(&out).unwrap();
         assert_eq!(batch.ncols(), 4);
@@ -456,7 +512,7 @@ mod tests {
         ];
         let out = r.get("skyhook", "agg").unwrap()(
             &mut b,
-            &encode_agg_arg(&pred, &aggs, false),
+            &encode_agg_arg(&pred, &aggs, false, true),
         )
         .unwrap();
         let states = decode_agg_out(&out).unwrap();
@@ -482,7 +538,7 @@ mod tests {
         let aggs = vec![Aggregate::new(AggFunc::Median, "val")];
         let out = r.get("skyhook", "agg").unwrap()(
             &mut b,
-            &encode_agg_arg(&Predicate::True, &aggs, true),
+            &encode_agg_arg(&Predicate::True, &aggs, true, true),
         )
         .unwrap();
         let states = decode_agg_out(&out).unwrap();
@@ -496,7 +552,7 @@ mod tests {
         let mut b = MemBackend::new(&table_object());
         let out = r.get("skyhook", "group_agg").unwrap()(
             &mut b,
-            &encode_group_arg(&Predicate::True, "sensor", "val"),
+            &encode_group_arg(&Predicate::True, "sensor", "val", true),
         )
         .unwrap();
         let groups = decode_group_out(&out).unwrap();
@@ -515,7 +571,98 @@ mod tests {
         let mut b = MemBackend::new(&table_object());
         assert!(r.get("skyhook", "group_agg").unwrap()(
             &mut b,
-            &encode_group_arg(&Predicate::True, "val", "val"),
+            &encode_group_arg(&Predicate::True, "val", "val", true),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn zone_map_short_circuits_without_reading_data() {
+        let r = registry();
+        let batch = gen::sensor_table(200, 7);
+        let mut b = MemBackend::new(&encode_batch(&batch, Layout::Col));
+        b.setxattr(ZONE_MAP_XATTR, &ZoneMap::from_batch(&batch).encode());
+        // Destroy the object data: a short-circuited handler never
+        // notices, while any handler that reads must fail.
+        b.data = vec![0xff; 16];
+        // val ~ N(50, 15) never reaches 10_000 → provably zero matches.
+        let pred = Predicate::cmp("val", CmpOp::Gt, 10_000.0);
+        let out = r.get("skyhook", "scan").unwrap()(
+            &mut b,
+            &encode_scan_arg(&pred, Some(&["ts".to_string()]), true),
+        )
+        .unwrap();
+        let (empty, layout) = decode_batch(&out).unwrap();
+        assert_eq!(layout, Layout::Col);
+        assert_eq!(empty.nrows(), 0);
+        assert_eq!(empty.ncols(), 1);
+        assert_eq!(empty.schema.columns[0].name, "ts");
+
+        let aggs = vec![Aggregate::new(AggFunc::Sum, "val")];
+        let out = r.get("skyhook", "agg").unwrap()(
+            &mut b,
+            &encode_agg_arg(&pred, &aggs, false, true),
+        )
+        .unwrap();
+        let states = decode_agg_out(&out).unwrap();
+        assert_eq!(states.len(), 1);
+        assert_eq!(states[0].count, 0);
+
+        let out = r.get("skyhook", "group_agg").unwrap()(
+            &mut b,
+            &encode_group_arg(&pred, "sensor", "val", true),
+        )
+        .unwrap();
+        assert!(decode_group_out(&out).unwrap().is_empty());
+
+        // A satisfiable predicate must NOT short-circuit: with the data
+        // destroyed the handler now fails, proving it went to the object.
+        let alive = Predicate::cmp("val", CmpOp::Gt, 0.0);
+        assert!(
+            r.get("skyhook", "scan").unwrap()(&mut b, &encode_scan_arg(&alive, None, true)).is_err()
+        );
+        // With zone maps disabled in the request (the unpruned baseline),
+        // even a provably dead predicate must go to the data.
+        assert!(
+            r.get("skyhook", "scan").unwrap()(&mut b, &encode_scan_arg(&pred, None, false)).is_err()
+        );
+        assert!(r.get("skyhook", "agg").unwrap()(
+            &mut b,
+            &encode_agg_arg(&pred, &aggs, false, false),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn zone_map_pruned_agg_matches_unpruned() {
+        let r = registry();
+        let batch = gen::sensor_table(300, 9);
+        let enc = encode_batch(&batch, Layout::Col);
+        let pred = Predicate::cmp("val", CmpOp::Lt, -10_000.0);
+        let aggs = vec![Aggregate::new(AggFunc::Count, "val")];
+        // Without a zone map: normal path, zero matches.
+        let mut plain = MemBackend::new(&enc);
+        let a = decode_agg_out(&r.get("skyhook", "agg").unwrap()(
+            &mut plain,
+            &encode_agg_arg(&pred, &aggs, false, true),
+        )
+        .unwrap())
+        .unwrap();
+        // With a zone map: short-circuit, identical partials.
+        let mut stamped = MemBackend::new(&enc);
+        stamped.setxattr(ZONE_MAP_XATTR, &ZoneMap::from_batch(&batch).encode());
+        let b2 = decode_agg_out(&r.get("skyhook", "agg").unwrap()(
+            &mut stamped,
+            &encode_agg_arg(&pred, &aggs, false, true),
+        )
+        .unwrap())
+        .unwrap();
+        assert_eq!(a, b2);
+        // A ghost aggregate column errors even on the pruned path.
+        let ghost = vec![Aggregate::new(AggFunc::Sum, "nope")];
+        assert!(r.get("skyhook", "agg").unwrap()(
+            &mut stamped,
+            &encode_agg_arg(&pred, &ghost, false, true),
         )
         .is_err());
     }
@@ -613,7 +760,7 @@ mod tests {
         let aggs = vec![Aggregate::new(AggFunc::Mean, "val")];
         let out = r.get("skyhook", "agg").unwrap()(
             &mut b,
-            &encode_agg_arg(&Predicate::True, &aggs, false),
+            &encode_agg_arg(&Predicate::True, &aggs, false, true),
         )
         .unwrap();
         let states = decode_agg_out(&out).unwrap();

@@ -18,6 +18,6 @@ pub mod worker;
 
 pub use driver::{Driver, QueryResult, QueryStats, WriteReport};
 pub use extension::{register_skyhook_class, ChunkCompute};
-pub use plan::{plan, ExecMode, QueryPlan, SubQuery};
+pub use plan::{plan, plan_opts, ExecMode, QueryPlan, SubQuery};
 pub use query::{AggFunc, AggState, Aggregate, CmpOp, Predicate, Query};
 pub use sketch::QuantileSketch;

@@ -1,18 +1,25 @@
-//! Query planning: decomposability analysis and pushdown decisions
-//! (§3.2 "Composability of Access Operations").
+//! Query planning: decomposability analysis, pushdown decisions
+//! (§3.2 "Composability of Access Operations"), and zone-map pruning.
 //!
-//! A query is decomposed into one sub-query per row-group object. The
-//! planner decides *where* each sub-operation runs:
+//! A query is decomposed into one sub-query per row-group object. Before
+//! anything is dispatched, the planner consults the per-group zone maps
+//! recorded in [`RowGroupMeta::stats`]: a sub-query whose predicate
+//! provably matches zero rows of its group ([`Predicate::prune`]) is
+//! dropped *before any I/O is issued* — the request never reaches a
+//! storage server. For the sub-queries that survive, the planner decides
+//! *where* each sub-operation runs:
 //!
 //! - **Pushdown**: filter/project/aggregate execute in the Skyhook-
 //!   Extension on the OSD; only results cross the network. Algebraic
 //!   aggregates return constant-size partials; holistic ones (median)
 //!   must ship the filtered raw values back.
-//! - **ClientSide**: the worker reads the whole object and computes
-//!   locally — the baseline the paper improves on.
+//! - **ClientSide**: the worker reads the object (projected columns
+//!   only, on columnar layouts) and computes locally — the baseline the
+//!   paper improves on.
 
-use super::query::Query;
-use crate::dataset::metadata::DatasetMeta;
+use super::query::{Predicate, Query};
+use crate::dataset::metadata::{DatasetMeta, RowGroupMeta};
+use crate::dataset::{DType, Layout, TableSchema};
 use crate::error::{Error, Result};
 
 /// Where a sub-query executes.
@@ -29,36 +36,52 @@ pub enum ExecMode {
 pub struct SubQuery {
     pub object: String,
     pub mode: ExecMode,
+    /// Physical layout of the object (from dataset metadata) — lets the
+    /// client-side path skip the ranged-read probing for Row objects,
+    /// which must be read whole anyway.
+    pub layout: Layout,
     /// For aggregate pushdown: must the extension return raw values
     /// (holistic finalization at the driver)?
     pub keep_values: bool,
+    /// May the storage-side handler consult the object's zone-map xattr?
+    /// False when the plan was built with pruning disabled, so the
+    /// unpruned baseline does real reads end to end.
+    pub zone_maps: bool,
 }
 
 /// A planned query.
 #[derive(Clone, Debug)]
 pub struct QueryPlan {
     pub query: Query,
+    /// Dataset schema (used to synthesize empty results when every
+    /// sub-query is pruned).
+    pub schema: TableSchema,
+    /// Execution mode of every sub-query (kept here too so it stays
+    /// known when pruning drops all of them).
+    pub mode: ExecMode,
     pub subqueries: Vec<SubQuery>,
     /// True if every aggregate decomposes into constant-size partials.
     pub decomposable: bool,
+    /// Sub-queries dropped by zone-map pruning before any I/O.
+    pub objects_pruned: usize,
+    /// Serialized bytes of the pruned objects — I/O and decode work the
+    /// query provably did not need.
+    pub bytes_skipped: u64,
 }
 
 impl QueryPlan {
     /// Human-readable planning summary (for the CLI's EXPLAIN).
     pub fn explain(&self) -> String {
-        let mode = self
-            .subqueries
-            .first()
-            .map(|s| format!("{:?}", s.mode))
-            .unwrap_or_else(|| "-".into());
+        let mode = format!("{:?}", self.mode);
         format!(
-            "{} over {} objects, mode={}, decomposable={}, keep_values={}",
+            "{} over {} objects ({} pruned), mode={}, decomposable={}, keep_values={}",
             if self.query.is_aggregate() {
                 "aggregate"
             } else {
                 "row-scan"
             },
             self.subqueries.len(),
+            self.objects_pruned,
             mode,
             self.decomposable,
             self.subqueries.first().map(|s| s.keep_values).unwrap_or(false),
@@ -66,24 +89,40 @@ impl QueryPlan {
     }
 }
 
-/// Build a plan for `query` against a dataset's metadata.
+/// Build a plan for `query` against a dataset's metadata, with zone-map
+/// pruning enabled.
 ///
 /// `force_mode` overrides the planner's choice (used by the benches to
 /// compare pushdown against client-side execution on identical queries).
 pub fn plan(query: &Query, meta: &DatasetMeta, force_mode: Option<ExecMode>) -> Result<QueryPlan> {
-    let (names, schema) = match meta {
-        DatasetMeta::Table { schema, .. } => {
-            (meta.object_names(&query.dataset), schema.clone())
-        }
-        DatasetMeta::Array { .. } => {
-            return Err(Error::Query(format!(
-                "{} is an array dataset; table query expected",
-                query.dataset
-            )))
-        }
+    plan_opts(query, meta, force_mode, true)
+}
+
+/// [`plan`] with zone-map pruning optionally disabled (`prune = false`),
+/// so benches can measure the pruned fast path against an identical
+/// unpruned execution.
+pub fn plan_opts(
+    query: &Query,
+    meta: &DatasetMeta,
+    force_mode: Option<ExecMode>,
+    prune: bool,
+) -> Result<QueryPlan> {
+    let DatasetMeta::Table {
+        schema,
+        layout,
+        row_groups,
+        ..
+    } = meta
+    else {
+        return Err(Error::Query(format!(
+            "{} is an array dataset; table query expected",
+            query.dataset
+        )));
     };
+    let names = meta.object_names(&query.dataset);
     // Validate referenced columns exist up front (fail fast at the driver
-    // rather than on every OSD).
+    // rather than on every OSD). Pruning never skips this, so invalid
+    // queries fail identically with and without pruning.
     let all: Vec<String> = schema.columns.iter().map(|c| c.name.clone()).collect();
     for col in query.needed_columns(&all) {
         schema.col_index(&col)?;
@@ -94,24 +133,74 @@ pub fn plan(query: &Query, meta: &DatasetMeta, force_mode: Option<ExecMode>) -> 
         ));
     }
 
+    // Error parity: a query that would fail during evaluation (string-
+    // typed predicate or aggregate column, non-i64 group key) must fail
+    // identically with pruning on, so pruning is disabled for it — the
+    // sub-queries run and report the error the usual way.
+    let dtype_of = |name: &str| schema.col_index(name).ok().map(|i| schema.col(i).dtype);
+    let evaluable = !query
+        .predicate
+        .columns()
+        .into_iter()
+        .any(|c| dtype_of(c) == Some(DType::Str))
+        && !query.aggregates.iter().any(|a| dtype_of(&a.col) == Some(DType::Str))
+        && query
+            .group_by
+            .as_deref()
+            .map_or(true, |g| dtype_of(g) == Some(DType::I64));
+    let prune = prune && evaluable;
+
     let decomposable = query.is_decomposable();
     // Default policy: always push down — filter/project reduction happens
     // at the data. Holistic aggregates still push the *filter* down and
     // ship values back (keep_values).
     let mode = force_mode.unwrap_or(ExecMode::Pushdown);
     let keep_values = query.is_aggregate() && !decomposable;
-    let subqueries = names
-        .into_iter()
-        .map(|object| SubQuery {
+    let mut subqueries = Vec::with_capacity(names.len());
+    let mut objects_pruned = 0usize;
+    let mut bytes_skipped = 0u64;
+    for (i, object) in names.into_iter().enumerate() {
+        let rg = &row_groups[i];
+        if prune && group_prunes(&query.predicate, schema, rg) {
+            objects_pruned += 1;
+            bytes_skipped += rg.bytes;
+            continue;
+        }
+        subqueries.push(SubQuery {
             object,
             mode,
+            layout: *layout,
             keep_values,
-        })
-        .collect();
+            zone_maps: prune,
+        });
+    }
     Ok(QueryPlan {
         query: query.clone(),
+        schema: schema.clone(),
+        mode,
         subqueries,
         decomposable,
+        objects_pruned,
+        bytes_skipped,
+    })
+}
+
+/// Zone-map test for one row group: does the predicate provably match
+/// zero of its rows? Empty groups always prune; groups without recorded
+/// stats prune only via `rows == 0`.
+fn group_prunes(pred: &Predicate, schema: &TableSchema, rg: &RowGroupMeta) -> bool {
+    if rg.rows == 0 {
+        return true;
+    }
+    if rg.stats.is_empty() {
+        return false;
+    }
+    pred.prune(&|col: &str| {
+        schema
+            .col_index(col)
+            .ok()
+            .and_then(|ci| rg.stats.get(ci))
+            .and_then(|s| s.range())
     })
 }
 
@@ -119,16 +208,41 @@ pub fn plan(query: &Query, meta: &DatasetMeta, force_mode: Option<ExecMode>) -> 
 mod tests {
     use super::*;
     use crate::dataset::layout::Layout;
-    use crate::dataset::metadata::RowGroupMeta;
-    use crate::dataset::{DType, TableSchema};
-    use crate::skyhook::query::{AggFunc, CmpOp, Predicate};
+    use crate::dataset::metadata::ColumnStats;
+    use crate::skyhook::query::{AggFunc, CmpOp};
 
     fn meta(groups: usize) -> DatasetMeta {
         DatasetMeta::Table {
             schema: TableSchema::new(&[("ts", DType::I64), ("val", DType::F32)]),
             layout: Layout::Col,
             row_groups: (0..groups)
-                .map(|_| RowGroupMeta { rows: 10, bytes: 100 })
+                .map(|_| RowGroupMeta {
+                    rows: 10,
+                    bytes: 100,
+                    stats: vec![],
+                })
+                .collect(),
+            localities: vec![String::new(); groups],
+        }
+    }
+
+    /// Meta with zone maps: group i has ts in [10i, 10i+9], val constant.
+    fn meta_with_stats(groups: usize) -> DatasetMeta {
+        DatasetMeta::Table {
+            schema: TableSchema::new(&[("ts", DType::I64), ("val", DType::F32)]),
+            layout: Layout::Col,
+            row_groups: (0..groups)
+                .map(|i| RowGroupMeta {
+                    rows: 10,
+                    bytes: 100,
+                    stats: vec![
+                        ColumnStats {
+                            min: (i * 10) as f64,
+                            max: (i * 10 + 9) as f64,
+                        },
+                        ColumnStats { min: 5.0, max: 5.0 },
+                    ],
+                })
                 .collect(),
             localities: vec![String::new(); groups],
         }
@@ -173,6 +287,73 @@ mod tests {
         assert!(plan(&q, &meta(2), None).is_err());
         let q = Query::scan("ds").aggregate(AggFunc::Sum, "ghost");
         assert!(plan(&q, &meta(2), None).is_err());
+    }
+
+    #[test]
+    fn plan_prunes_with_zone_maps() {
+        // ts < 25 can only match groups 0–2 of [0,9], [10,19], [20,29]...
+        let q = Query::scan("ds").filter(Predicate::cmp("ts", CmpOp::Lt, 25.0));
+        let p = plan(&q, &meta_with_stats(10), None).unwrap();
+        assert_eq!(p.subqueries.len(), 3);
+        assert_eq!(p.objects_pruned, 7);
+        assert_eq!(p.bytes_skipped, 700);
+        assert_eq!(p.subqueries[0].object, "ds/t/00000000");
+        assert_eq!(p.subqueries[2].object, "ds/t/00000002");
+        // Pruning disabled: every group dispatched.
+        let p = plan_opts(&q, &meta_with_stats(10), None, false).unwrap();
+        assert_eq!(p.subqueries.len(), 10);
+        assert_eq!(p.objects_pruned, 0);
+        assert_eq!(p.bytes_skipped, 0);
+        // Constant-column equality prunes everything.
+        let q = Query::scan("ds")
+            .filter(Predicate::cmp("val", CmpOp::Ne, 5.0))
+            .aggregate(AggFunc::Count, "val");
+        let p = plan(&q, &meta_with_stats(4), None).unwrap();
+        assert!(p.subqueries.is_empty());
+        assert_eq!(p.objects_pruned, 4);
+        assert_eq!(p.mode, ExecMode::Pushdown);
+        // The mode survives even when every sub-query is pruned.
+        let p = plan_opts(&q, &meta_with_stats(4), Some(ExecMode::ClientSide), true).unwrap();
+        assert!(p.subqueries.is_empty());
+        assert_eq!(p.mode, ExecMode::ClientSide);
+        // Without stats, value predicates never prune.
+        let q = Query::scan("ds").filter(Predicate::cmp("ts", CmpOp::Lt, -1.0));
+        let p = plan(&q, &meta(5), None).unwrap();
+        assert_eq!(p.subqueries.len(), 5);
+        assert_eq!(p.objects_pruned, 0);
+    }
+
+    #[test]
+    fn plan_prunes_empty_groups_even_without_stats() {
+        let m = DatasetMeta::Table {
+            schema: TableSchema::new(&[("ts", DType::I64), ("val", DType::F32)]),
+            layout: Layout::Col,
+            row_groups: vec![
+                RowGroupMeta {
+                    rows: 10,
+                    bytes: 100,
+                    stats: vec![],
+                },
+                RowGroupMeta {
+                    rows: 0,
+                    bytes: 40,
+                    stats: vec![],
+                },
+            ],
+            localities: vec![String::new(); 2],
+        };
+        let p = plan(&Query::scan("ds"), &m, None).unwrap();
+        assert_eq!(p.subqueries.len(), 1);
+        assert_eq!(p.objects_pruned, 1);
+        assert_eq!(p.bytes_skipped, 40);
+    }
+
+    #[test]
+    fn pruned_plan_still_validates_columns() {
+        // Validation failures are identical with and without pruning.
+        let q = Query::scan("ds").filter(Predicate::cmp("ghost", CmpOp::Lt, 0.0));
+        assert!(plan(&q, &meta_with_stats(3), None).is_err());
+        assert!(plan_opts(&q, &meta_with_stats(3), None, false).is_err());
     }
 
     #[test]

@@ -92,19 +92,20 @@ impl Predicate {
         Predicate::Not(Box::new(self))
     }
 
-    /// Column names referenced by this predicate.
-    pub fn columns(&self) -> Vec<String> {
+    /// Column names referenced by this predicate (borrowed, sorted,
+    /// deduped).
+    pub fn columns(&self) -> Vec<&str> {
         let mut out = Vec::new();
         self.collect_columns(&mut out);
-        out.sort();
+        out.sort_unstable();
         out.dedup();
         out
     }
 
-    fn collect_columns(&self, out: &mut Vec<String>) {
+    fn collect_columns<'a>(&'a self, out: &mut Vec<&'a str>) {
         match self {
             Predicate::True => {}
-            Predicate::Cmp { col, .. } => out.push(col.clone()),
+            Predicate::Cmp { col, .. } => out.push(col.as_str()),
             Predicate::And(a, b) | Predicate::Or(a, b) => {
                 a.collect_columns(out);
                 b.collect_columns(out);
@@ -115,47 +116,150 @@ impl Predicate {
 
     /// Evaluate to a row mask over a batch.
     pub fn eval(&self, batch: &Batch) -> Result<Vec<bool>> {
-        let n = batch.nrows();
+        let mut mask = Vec::new();
+        self.eval_into(batch, &mut mask)?;
+        Ok(mask)
+    }
+
+    /// Evaluate into a caller-owned, reusable mask buffer.
+    ///
+    /// The scan hot loop calls this once per object; `mask` is cleared
+    /// and resized, so a reused buffer costs zero allocations after the
+    /// first object. Conjunctive/disjunctive chains combine in place
+    /// (`mask &= leaf` / `mask |= leaf`); a scratch buffer is allocated
+    /// only where the tree alternates between And- and Or-shaped
+    /// subtrees.
+    pub fn eval_into(&self, batch: &Batch, mask: &mut Vec<bool>) -> Result<()> {
+        mask.clear();
+        mask.resize(batch.nrows(), true);
+        self.apply(batch, mask, false, Comb::And)
+    }
+
+    /// Fold `(negate ? !self : self)` into `mask` under `comb`.
+    fn apply(&self, batch: &Batch, mask: &mut [bool], negate: bool, comb: Comb) -> Result<()> {
         match self {
-            Predicate::True => Ok(vec![true; n]),
-            Predicate::Cmp { col, op, value } => {
-                let c = batch.col(col)?;
-                let mut mask = Vec::with_capacity(n);
-                match c {
-                    Column::F32(v) => {
-                        for &x in v {
-                            mask.push(op.eval(x as f64, *value));
-                        }
-                    }
-                    Column::F64(v) => {
-                        for &x in v {
-                            mask.push(op.eval(x, *value));
-                        }
-                    }
-                    Column::I64(v) => {
-                        for &x in v {
-                            mask.push(op.eval(x as f64, *value));
-                        }
-                    }
-                    Column::Str(_) => {
-                        return Err(Error::Query(format!(
-                            "predicate on string column {col:?}"
-                        )))
-                    }
+            Predicate::True => {
+                match (comb, negate) {
+                    (Comb::And, true) => mask.fill(false),
+                    (Comb::Or, false) => mask.fill(true),
+                    _ => {}
                 }
-                Ok(mask)
+                Ok(())
             }
-            Predicate::And(a, b) => {
-                let ma = a.eval(batch)?;
-                let mb = b.eval(batch)?;
-                Ok(ma.into_iter().zip(mb).map(|(x, y)| x && y).collect())
+            Predicate::Cmp { col, op, value } => {
+                cmp_apply(batch.col(col)?, col, *op, *value, mask, negate, comb)
             }
-            Predicate::Or(a, b) => {
-                let ma = a.eval(batch)?;
-                let mb = b.eval(batch)?;
-                Ok(ma.into_iter().zip(mb).map(|(x, y)| x || y).collect())
-            }
-            Predicate::Not(p) => Ok(p.eval(batch)?.into_iter().map(|x| !x).collect()),
+            Predicate::And(a, b) => match (comb, negate) {
+                (Comb::And, false) => {
+                    a.apply(batch, mask, false, Comb::And)?;
+                    b.apply(batch, mask, false, Comb::And)
+                }
+                // De Morgan: !(a && b) == !a || !b.
+                (Comb::Or, true) => {
+                    a.apply(batch, mask, true, Comb::Or)?;
+                    b.apply(batch, mask, true, Comb::Or)
+                }
+                (Comb::Or, false) => {
+                    let mut scratch = vec![true; mask.len()];
+                    a.apply(batch, &mut scratch, false, Comb::And)?;
+                    b.apply(batch, &mut scratch, false, Comb::And)?;
+                    for (m, s) in mask.iter_mut().zip(&scratch) {
+                        *m |= *s;
+                    }
+                    Ok(())
+                }
+                (Comb::And, true) => {
+                    let mut scratch = vec![false; mask.len()];
+                    a.apply(batch, &mut scratch, true, Comb::Or)?;
+                    b.apply(batch, &mut scratch, true, Comb::Or)?;
+                    for (m, s) in mask.iter_mut().zip(&scratch) {
+                        *m &= *s;
+                    }
+                    Ok(())
+                }
+            },
+            Predicate::Or(a, b) => match (comb, negate) {
+                (Comb::Or, false) => {
+                    a.apply(batch, mask, false, Comb::Or)?;
+                    b.apply(batch, mask, false, Comb::Or)
+                }
+                // De Morgan: !(a || b) == !a && !b.
+                (Comb::And, true) => {
+                    a.apply(batch, mask, true, Comb::And)?;
+                    b.apply(batch, mask, true, Comb::And)
+                }
+                (Comb::And, false) => {
+                    let mut scratch = vec![false; mask.len()];
+                    a.apply(batch, &mut scratch, false, Comb::Or)?;
+                    b.apply(batch, &mut scratch, false, Comb::Or)?;
+                    for (m, s) in mask.iter_mut().zip(&scratch) {
+                        *m &= *s;
+                    }
+                    Ok(())
+                }
+                (Comb::Or, true) => {
+                    let mut scratch = vec![true; mask.len()];
+                    a.apply(batch, &mut scratch, true, Comb::And)?;
+                    b.apply(batch, &mut scratch, true, Comb::And)?;
+                    for (m, s) in mask.iter_mut().zip(&scratch) {
+                        *m |= *s;
+                    }
+                    Ok(())
+                }
+            },
+            Predicate::Not(p) => p.apply(batch, mask, !negate, comb),
+        }
+    }
+
+    /// Zone-map pruning test: `true` iff the predicate provably matches
+    /// zero rows of an object whose per-column value ranges are given by
+    /// `range` (`None` = unknown, assume anything). Conservative: a
+    /// `false` return says nothing; a `true` return is a proof, so the
+    /// planner may skip the object before any I/O without changing
+    /// results.
+    pub fn prune(&self, range: &dyn Fn(&str) -> Option<(f64, f64)>) -> bool {
+        !self.maybe_some(range)
+    }
+
+    /// Over-approximation: may at least one row match?
+    fn maybe_some(&self, range: &dyn Fn(&str) -> Option<(f64, f64)>) -> bool {
+        match self {
+            Predicate::True => true,
+            Predicate::Cmp { col, op, value } => match range(col) {
+                None => true,
+                Some((lo, hi)) => match op {
+                    CmpOp::Lt => lo < *value,
+                    CmpOp::Le => lo <= *value,
+                    CmpOp::Gt => hi > *value,
+                    CmpOp::Ge => hi >= *value,
+                    CmpOp::Eq => lo <= *value && *value <= hi,
+                    CmpOp::Ne => !(lo == *value && hi == *value),
+                },
+            },
+            Predicate::And(a, b) => a.maybe_some(range) && b.maybe_some(range),
+            Predicate::Or(a, b) => a.maybe_some(range) || b.maybe_some(range),
+            Predicate::Not(p) => !p.all_match(range),
+        }
+    }
+
+    /// Under-approximation: do provably *all* rows match?
+    fn all_match(&self, range: &dyn Fn(&str) -> Option<(f64, f64)>) -> bool {
+        match self {
+            Predicate::True => true,
+            Predicate::Cmp { col, op, value } => match range(col) {
+                None => false,
+                Some((lo, hi)) => match op {
+                    CmpOp::Lt => hi < *value,
+                    CmpOp::Le => hi <= *value,
+                    CmpOp::Gt => lo > *value,
+                    CmpOp::Ge => lo >= *value,
+                    CmpOp::Eq => lo == *value && hi == *value,
+                    CmpOp::Ne => *value < lo || hi < *value,
+                },
+            },
+            Predicate::And(a, b) => a.all_match(range) && b.all_match(range),
+            Predicate::Or(a, b) => a.all_match(range) || b.all_match(range),
+            Predicate::Not(p) => !p.maybe_some(range),
         }
     }
 
@@ -208,6 +312,62 @@ impl Predicate {
             o => return Err(Error::Corrupt(format!("bad predicate tag {o}"))),
         })
     }
+}
+
+/// How a sub-predicate folds into the in-place evaluation mask.
+#[derive(Clone, Copy)]
+enum Comb {
+    /// `mask[i] &= value`
+    And,
+    /// `mask[i] |= value`
+    Or,
+}
+
+/// Fold one comparison leaf into the mask: one type dispatch per column,
+/// then a tight branch-free combine loop (no per-node `Vec<bool>`
+/// allocation — the scan hot path).
+fn cmp_apply(
+    col: &Column,
+    name: &str,
+    op: CmpOp,
+    value: f64,
+    mask: &mut [bool],
+    negate: bool,
+    comb: Comb,
+) -> Result<()> {
+    fn lanes<T: Copy>(
+        v: &[T],
+        cast: impl Fn(T) -> f64,
+        op: CmpOp,
+        value: f64,
+        mask: &mut [bool],
+        negate: bool,
+        comb: Comb,
+    ) {
+        match comb {
+            Comb::And => {
+                for (m, &x) in mask.iter_mut().zip(v) {
+                    *m &= op.eval(cast(x), value) ^ negate;
+                }
+            }
+            Comb::Or => {
+                for (m, &x) in mask.iter_mut().zip(v) {
+                    *m |= op.eval(cast(x), value) ^ negate;
+                }
+            }
+        }
+    }
+    match col {
+        Column::F32(v) => lanes(v, |x| x as f64, op, value, mask, negate, comb),
+        Column::F64(v) => lanes(v, |x| x, op, value, mask, negate, comb),
+        Column::I64(v) => lanes(v, |x| x as f64, op, value, mask, negate, comb),
+        Column::Str(_) => {
+            return Err(Error::Query(format!(
+                "predicate on string column {name:?}"
+            )))
+        }
+    }
+    Ok(())
 }
 
 /// Aggregate functions. All but `Median` are *algebraic*: they have a
@@ -531,7 +691,12 @@ impl Query {
     /// Columns this query needs to touch (predicate ∪ projection ∪ aggs ∪
     /// group key).
     pub fn needed_columns(&self, all: &[String]) -> Vec<String> {
-        let mut out = self.predicate.columns();
+        let mut out: Vec<String> = self
+            .predicate
+            .columns()
+            .into_iter()
+            .map(str::to_string)
+            .collect();
         match (&self.projection, self.is_aggregate()) {
             (_, true) => {
                 out.extend(self.aggregates.iter().map(|a| a.col.clone()));
@@ -604,7 +769,117 @@ mod tests {
     fn predicate_columns() {
         let p = Predicate::cmp("a", CmpOp::Gt, 0.0)
             .and(Predicate::cmp("b", CmpOp::Lt, 1.0).or(Predicate::cmp("a", CmpOp::Eq, 2.0)));
-        assert_eq!(p.columns(), vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(p.columns(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn eval_into_reuses_buffer() {
+        let b = batch();
+        let mut mask = Vec::new();
+        let p = Predicate::cmp("v", CmpOp::Gt, 25.0);
+        p.eval_into(&b, &mut mask).unwrap();
+        assert_eq!(mask, vec![false, false, true, true, true]);
+        // Reuse with a different predicate: buffer is reset, not merged.
+        let p = Predicate::cmp("v", CmpOp::Lt, 25.0).or(Predicate::cmp("id", CmpOp::Eq, 4.0));
+        p.eval_into(&b, &mut mask).unwrap();
+        assert_eq!(mask, vec![true, true, false, true, false]);
+        assert!(Predicate::cmp("zzz", CmpOp::Eq, 1.0)
+            .eval_into(&b, &mut mask)
+            .is_err());
+    }
+
+    #[test]
+    fn eval_handles_mixed_and_or_not_shapes() {
+        let b = batch();
+        // Or-of-Ands and And-of-Ors exercise the scratch-buffer paths.
+        let p = Predicate::cmp("v", CmpOp::Gt, 15.0)
+            .and(Predicate::cmp("v", CmpOp::Lt, 45.0))
+            .or(Predicate::cmp("id", CmpOp::Eq, 5.0));
+        assert_eq!(p.eval(&b).unwrap(), vec![false, true, true, true, true]);
+        let p = Predicate::cmp("v", CmpOp::Lt, 15.0)
+            .or(Predicate::cmp("v", CmpOp::Gt, 45.0))
+            .and(Predicate::cmp("id", CmpOp::Ne, 5.0));
+        assert_eq!(p.eval(&b).unwrap(), vec![true, false, false, false, false]);
+        // Negations of both shapes (the De Morgan rewrites).
+        let p = Predicate::cmp("v", CmpOp::Gt, 15.0)
+            .and(Predicate::cmp("id", CmpOp::Lt, 4.0))
+            .not();
+        assert_eq!(p.eval(&b).unwrap(), vec![true, false, false, true, true]);
+        let p = Predicate::cmp("v", CmpOp::Lt, 15.0)
+            .or(Predicate::cmp("id", CmpOp::Gt, 4.0))
+            .not();
+        assert_eq!(p.eval(&b).unwrap(), vec![false, true, true, true, false]);
+        // True under negation.
+        assert_eq!(
+            Predicate::True.not().eval(&b).unwrap(),
+            vec![false; 5]
+        );
+    }
+
+    #[test]
+    fn prune_on_ranges() {
+        // Object with v in [10, 50], id in [1, 5].
+        let range = |col: &str| match col {
+            "v" => Some((10.0, 50.0)),
+            "id" => Some((1.0, 5.0)),
+            _ => None,
+        };
+        // Provably empty.
+        assert!(Predicate::cmp("v", CmpOp::Gt, 50.0).prune(&range));
+        assert!(Predicate::cmp("v", CmpOp::Lt, 10.0).prune(&range));
+        assert!(Predicate::cmp("v", CmpOp::Ge, 50.5).prune(&range));
+        assert!(Predicate::cmp("v", CmpOp::Eq, 60.0).prune(&range));
+        // Possibly matching.
+        assert!(!Predicate::cmp("v", CmpOp::Ge, 50.0).prune(&range));
+        assert!(!Predicate::cmp("v", CmpOp::Le, 10.0).prune(&range));
+        assert!(!Predicate::cmp("v", CmpOp::Eq, 30.0).prune(&range));
+        assert!(!Predicate::cmp("v", CmpOp::Ne, 30.0).prune(&range));
+        // Ne prunes only a constant column.
+        let constant = |_: &str| Some((7.0, 7.0));
+        assert!(Predicate::cmp("x", CmpOp::Ne, 7.0).prune(&constant));
+        assert!(!Predicate::cmp("x", CmpOp::Ne, 8.0).prune(&constant));
+        // Unknown columns never prune.
+        assert!(!Predicate::cmp("ghost", CmpOp::Gt, 1e12).prune(&range));
+        // Conjunction prunes if either side does; disjunction needs both.
+        let dead = Predicate::cmp("v", CmpOp::Gt, 99.0);
+        let alive = Predicate::cmp("id", CmpOp::Ge, 3.0);
+        assert!(dead.clone().and(alive.clone()).prune(&range));
+        assert!(!dead.clone().or(alive.clone()).prune(&range));
+        assert!(dead.clone().or(dead.clone()).prune(&range));
+        // Not: prune iff the inner provably matches every row.
+        assert!(Predicate::cmp("v", CmpOp::Le, 50.0).not().prune(&range));
+        assert!(!Predicate::cmp("v", CmpOp::Le, 30.0).not().prune(&range));
+        assert!(!Predicate::True.prune(&range));
+        assert!(Predicate::True.not().prune(&range));
+    }
+
+    #[test]
+    fn prune_never_lies_on_real_batch() {
+        // Every predicate that prunes must evaluate to an all-false mask
+        // on the batch its ranges were computed from.
+        let b = batch();
+        let range = |col: &str| match col {
+            "id" => Some((1.0, 5.0)),
+            "v" => Some((10.0, 50.0)),
+            _ => None,
+        };
+        let preds = [
+            Predicate::cmp("v", CmpOp::Gt, 50.0),
+            Predicate::cmp("v", CmpOp::Gt, 20.0),
+            Predicate::cmp("id", CmpOp::Eq, 3.0).and(Predicate::cmp("v", CmpOp::Lt, 5.0)),
+            Predicate::cmp("id", CmpOp::Ge, 1.0).not(),
+            Predicate::cmp("v", CmpOp::Le, 50.0)
+                .and(Predicate::cmp("id", CmpOp::Ge, 1.0))
+                .not(),
+        ];
+        for p in preds {
+            if p.prune(&range) {
+                assert!(
+                    p.eval(&b).unwrap().iter().all(|&m| !m),
+                    "{p:?} pruned but matches rows"
+                );
+            }
+        }
     }
 
     #[test]

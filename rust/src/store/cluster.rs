@@ -143,15 +143,20 @@ impl Cluster {
         Ok(Timed::new((), finish))
     }
 
-    /// Read, preferring the primary, failing over to replicas, and as a
-    /// last resort searching all OSDs (placement drift before rebalance).
-    pub fn read_object(&self, at: f64, name: &str) -> Result<Timed<Vec<u8>>> {
+    /// Shared read loop: prefer the primary, fail over to replicas, and
+    /// as a last resort search all up OSDs (placement drift before
+    /// rebalance). `read` performs the per-OSD operation at its arrival
+    /// time; Unavailable/NotFound fail over, other errors propagate.
+    fn read_with<F>(&self, at: f64, name: &str, read: F) -> Result<Timed<Vec<u8>>>
+    where
+        F: Fn(&Osd, f64) -> Result<Timed<Vec<u8>>>,
+    {
         let placement = self.placement(name);
         let mut at = at;
         for (i, id) in placement.iter().enumerate() {
             let osd = self.osd(*id);
             let arrive = at + self.cost.net_time(64); // request message
-            match osd.read(arrive, name) {
+            match read(&osd, arrive) {
                 Ok(t) => {
                     if i > 0 {
                         self.degraded_reads.fetch_add(1, Ordering::Relaxed);
@@ -169,25 +174,73 @@ impl Cluster {
             }
         }
         // Placement-drift fallback: search every up OSD.
-        for osd in self.osds.read().unwrap().iter() {
+        let osds = self.osds.read().unwrap().clone();
+        for osd in osds.iter() {
             if osd.is_down() || !osd.exists(name) {
                 continue;
             }
             let arrive = at + self.cost.net_time(64);
-            if let Ok(t) = osd.read(arrive, name) {
-                self.misdirected_reads.fetch_add(1, Ordering::Relaxed);
-                let finish = t.finish + self.cost.net_time(t.value.len() as u64);
-                self.clock.advance_to(finish);
-                return Ok(Timed::new(t.value, finish));
+            match read(osd, arrive) {
+                Ok(t) => {
+                    self.misdirected_reads.fetch_add(1, Ordering::Relaxed);
+                    let finish = t.finish + self.cost.net_time(t.value.len() as u64);
+                    self.clock.advance_to(finish);
+                    return Ok(Timed::new(t.value, finish));
+                }
+                Err(Error::Unavailable(_)) | Err(Error::NotFound(_)) => continue,
+                Err(e) => return Err(e),
             }
         }
         Err(Error::NotFound(name.to_string()))
     }
 
-    /// Stat via primary (with failover).
+    /// Read a whole object (primary → replica failover → drift search).
+    pub fn read_object(&self, at: f64, name: &str) -> Result<Timed<Vec<u8>>> {
+        self.read_with(at, name, |osd, arrive| osd.read(arrive, name))
+    }
+
+    /// Ranged read with the same failover behavior — the client-side
+    /// projected partial-read path: only the requested extent crosses
+    /// the network, and only its bytes queue on the device timeline.
+    pub fn read_object_range(
+        &self,
+        at: f64,
+        name: &str,
+        offset: usize,
+        len: usize,
+    ) -> Result<Timed<Vec<u8>>> {
+        self.read_with(at, name, |osd, arrive| {
+            osd.read_range(arrive, name, offset, len)
+        })
+    }
+
+    /// Stat via primary (with failover and, like reads, a placement-drift
+    /// fallback — the projected-read path stats before ranged reads, so
+    /// it must find drifted objects too).
     pub fn stat_object(&self, at: f64, name: &str) -> Result<Timed<ObjStat>> {
         for id in self.placement(name) {
             let osd = self.osd(id);
+            let arrive = at + self.cost.net_time(64);
+            match osd.stat(arrive, name) {
+                Ok(t) => {
+                    let finish = t.finish + self.cost.net_latency_s;
+                    self.clock.advance_to(finish);
+                    return Ok(Timed::new(t.value, finish));
+                }
+                Err(Error::Unavailable(_)) | Err(Error::NotFound(_)) => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        // Placement-drift fallback: search every up OSD (same failover
+        // semantics as `read_with`). Stats are metadata probes, not data
+        // reads, so they do not count toward `misdirected_reads` — a
+        // drifted projected read would otherwise bump the counter once
+        // per stat *and* once per ranged read.
+        let osds = self.osds.read().unwrap().clone();
+        for osd in osds.iter() {
+            if osd.is_down() || !osd.exists(name) {
+                continue;
+            }
             let arrive = at + self.cost.net_time(64);
             match osd.stat(arrive, name) {
                 Ok(t) => {
@@ -471,6 +524,36 @@ mod tests {
             .sum();
         assert_eq!(held, 3);
         assert_eq!(c.total_bytes_stored(), 3000);
+    }
+
+    #[test]
+    fn ranged_read_roundtrip_and_failover() {
+        let c = cluster(4, 2);
+        c.write_object(0.0, "obj.r", b"0123456789").unwrap();
+        assert_eq!(c.read_object_range(0.0, "obj.r", 3, 4).unwrap().value, b"3456");
+        let primary = c.placement("obj.r")[0];
+        c.set_down(primary, true);
+        assert_eq!(c.read_object_range(0.0, "obj.r", 0, 2).unwrap().value, b"01");
+        assert_eq!(c.counters().degraded_reads, 1);
+        assert!(c.read_object_range(0.0, "ghost", 0, 1).is_err());
+    }
+
+    #[test]
+    fn drifted_stat_and_ranged_read_still_work() {
+        // The client partial-read path stats then range-reads; both must
+        // find objects whose placement drifted (map changed, rebalance
+        // pending), like read_object does.
+        let c = cluster(3, 1);
+        for i in 0..30 {
+            c.write_object(0.0, &format!("dr.{i}"), b"0123456789").unwrap();
+        }
+        c.add_osd(1.0); // placement changes for some objects; no rebalance
+        for i in 0..30 {
+            let name = format!("dr.{i}");
+            assert_eq!(c.stat_object(0.0, &name).unwrap().value.size, 10);
+            assert_eq!(c.read_object_range(0.0, &name, 2, 3).unwrap().value, b"234");
+        }
+        assert!(c.counters().misdirected_reads > 0, "expected drift");
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! shrinking harness (`util::quick`).
 
 use skyhook_map::dataset::layout::{decode_batch, decode_projection, encode_batch, Layout};
+use skyhook_map::dataset::metadata::ZoneMap;
 use skyhook_map::dataset::partition::{pack_units, packing_stats, LogicalUnit};
 use skyhook_map::dataset::table::{Batch, Column};
 use skyhook_map::dataset::{ChunkGrid, Dataspace, DType, Hyperslab, TableSchema};
@@ -9,6 +10,68 @@ use skyhook_map::skyhook::{AggFunc, AggState, CmpOp, Predicate};
 use skyhook_map::store::{hash_name, OsdMap};
 use skyhook_map::util::quick::{forall, forall_explain};
 use skyhook_map::util::rng::Xoshiro256;
+
+/// A small numeric table: ts sorted, sensor low-cardinality, val f32
+/// uniform in [-50, 150) with optional NaN rows — the layouts/predicates
+/// the zone-map pruning properties exercise.
+fn random_numeric_batch(rng: &mut Xoshiro256, rows: usize, with_nan: bool) -> Batch {
+    let schema = TableSchema::new(&[
+        ("ts", DType::I64),
+        ("sensor", DType::I64),
+        ("val", DType::F32),
+    ]);
+    let mut ts = Vec::with_capacity(rows);
+    let mut sensor = Vec::with_capacity(rows);
+    let mut val = Vec::with_capacity(rows);
+    for i in 0..rows {
+        ts.push(i as i64);
+        sensor.push(rng.range_u64(0, 7) as i64);
+        val.push(if with_nan && rng.chance(0.03) {
+            f32::NAN
+        } else {
+            rng.f32() * 200.0 - 50.0
+        });
+    }
+    Batch::new(
+        schema,
+        vec![Column::I64(ts), Column::I64(sensor), Column::F32(val)],
+    )
+    .unwrap()
+}
+
+/// Random predicate tree over ts/val/sensor.
+fn random_numeric_pred(r: &mut Xoshiro256, depth: usize) -> Predicate {
+    if depth == 0 || r.chance(0.4) {
+        let ops = [CmpOp::Lt, CmpOp::Le, CmpOp::Gt, CmpOp::Ge, CmpOp::Eq, CmpOp::Ne];
+        return Predicate::cmp(
+            ["val", "ts", "sensor"][r.range(0, 2)],
+            ops[r.range(0, 5)],
+            r.f64() * 300.0 - 75.0,
+        );
+    }
+    match r.range(0, 2) {
+        0 => random_numeric_pred(r, depth - 1).and(random_numeric_pred(r, depth - 1)),
+        1 => random_numeric_pred(r, depth - 1).or(random_numeric_pred(r, depth - 1)),
+        _ => random_numeric_pred(r, depth - 1).not(),
+    }
+}
+
+/// Batch equality that treats NaN as equal to itself (bitwise on floats),
+/// so pruned/unpruned comparisons work on NaN-bearing data.
+fn batches_bit_equal(a: &Batch, b: &Batch) -> bool {
+    if a.schema != b.schema || a.nrows() != b.nrows() {
+        return false;
+    }
+    a.columns.iter().zip(&b.columns).all(|(x, y)| match (x, y) {
+        (Column::F32(u), Column::F32(v)) => {
+            u.iter().zip(v).all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        (Column::F64(u), Column::F64(v)) => {
+            u.iter().zip(v).all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        _ => x == y,
+    })
+}
 
 #[test]
 fn placement_deterministic_and_distinct() {
@@ -315,6 +378,176 @@ fn predicate_wire_roundtrip_random() {
             let buf = w.finish();
             let mut rd = skyhook_map::util::bytes::ByteReader::new(&buf);
             Predicate::decode_from(&mut rd).map(|d| d == p).unwrap_or(false)
+        },
+    );
+}
+
+#[test]
+fn eval_matches_reference_evaluator() {
+    // The in-place combining evaluator must agree with a naive
+    // tree-recursive reference on arbitrary predicate shapes.
+    fn reference(p: &Predicate, b: &Batch) -> Vec<bool> {
+        match p {
+            Predicate::True => vec![true; b.nrows()],
+            Predicate::Cmp { col, op, value } => {
+                let c = b.col(col).unwrap();
+                (0..b.nrows())
+                    .map(|i| op.eval(c.get_f64(i).unwrap(), *value))
+                    .collect()
+            }
+            Predicate::And(x, y) => reference(x, b)
+                .into_iter()
+                .zip(reference(y, b))
+                .map(|(a, c)| a && c)
+                .collect(),
+            Predicate::Or(x, y) => reference(x, b)
+                .into_iter()
+                .zip(reference(y, b))
+                .map(|(a, c)| a || c)
+                .collect(),
+            Predicate::Not(x) => reference(x, b).into_iter().map(|a| !a).collect(),
+        }
+    }
+    forall_explain(
+        12,
+        150,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Xoshiro256::new(seed);
+            let rows = rng.range(0, 120);
+            let batch = random_numeric_batch(&mut rng, rows, true);
+            let p = random_numeric_pred(&mut rng, 4);
+            let got = p.eval(&batch).map_err(|e| e.to_string())?;
+            let want = reference(&p, &batch);
+            if got != want {
+                return Err(format!("eval mismatch for {p:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn zone_map_prune_never_drops_matching_rows() {
+    // Pruning soundness: whenever `prune` claims an object is dead under
+    // its zone map, evaluating the predicate over the object's actual
+    // rows must produce an all-false mask — including NaN-bearing
+    // columns and empty batches.
+    forall_explain(
+        13,
+        200,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Xoshiro256::new(seed);
+            let rows = rng.range(0, 150);
+            let batch = random_numeric_batch(&mut rng, rows, true);
+            let p = random_numeric_pred(&mut rng, 3);
+            let zm = ZoneMap::from_batch(&batch);
+            if p.prune(&|c: &str| zm.range(c)) {
+                let mask = p.eval(&batch).map_err(|e| e.to_string())?;
+                let hits = mask.iter().filter(|&&m| m).count();
+                if hits > 0 {
+                    return Err(format!("pruned object has {hits} matching rows: {p:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pruned_and_unpruned_queries_agree_end_to_end() {
+    // Planner pruning + server-side zone-map short-circuits must be
+    // invisible in results: identical rows, aggregates, and groups for
+    // random predicates, both physical layouts, NaN values, and empty
+    // datasets.
+    use skyhook_map::config::{ClusterConfig, DriverConfig};
+    use skyhook_map::dataset::partition::PartitionSpec;
+    use skyhook_map::skyhook::{register_skyhook_class, Driver, ExecMode, Query};
+    use skyhook_map::store::{ClassRegistry, Cluster};
+
+    forall_explain(
+        14,
+        12,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Xoshiro256::new(seed);
+            let mut reg = ClassRegistry::with_builtins();
+            register_skyhook_class(&mut reg, None);
+            let cluster = Cluster::new(
+                &ClusterConfig {
+                    osds: 3,
+                    replicas: 1,
+                    ..Default::default()
+                },
+                reg,
+            );
+            let driver = Driver::new(
+                cluster,
+                DriverConfig {
+                    workers: 2,
+                    ..Default::default()
+                },
+            );
+            let rows = rng.range(0, 400);
+            let batch = random_numeric_batch(&mut rng, rows, true);
+            let layout = if rng.chance(0.5) { Layout::Col } else { Layout::Row };
+            driver
+                .write_table("p", &batch, layout, &PartitionSpec::with_target(2048), None)
+                .map_err(|e| e.to_string())?;
+            let pred = random_numeric_pred(&mut rng, 3);
+            let feq = |a: f64, b: f64| a == b || (a.is_nan() && b.is_nan());
+
+            // Row queries, both execution modes.
+            let rq = Query::scan("p")
+                .filter(pred.clone())
+                .select(&["ts", "val"]);
+            for mode in [ExecMode::Pushdown, ExecMode::ClientSide] {
+                let pruned = driver
+                    .execute_opts(&rq, Some(mode), true)
+                    .map_err(|e| e.to_string())?;
+                let unpruned = driver
+                    .execute_opts(&rq, Some(mode), false)
+                    .map_err(|e| e.to_string())?;
+                if !batches_bit_equal(&pruned.rows.unwrap(), &unpruned.rows.unwrap()) {
+                    return Err(format!("{mode:?} rows diverge under pruning: {pred:?}"));
+                }
+            }
+
+            // Algebraic aggregates.
+            let aq = Query::scan("p")
+                .filter(pred.clone())
+                .aggregate(AggFunc::Count, "val")
+                .aggregate(AggFunc::Sum, "val");
+            let pa = driver.execute(&aq, None).map_err(|e| e.to_string())?;
+            let ua = driver
+                .execute_opts(&aq, None, false)
+                .map_err(|e| e.to_string())?;
+            for (x, y) in pa.aggregates.iter().zip(&ua.aggregates) {
+                if !feq(*x, *y) {
+                    return Err(format!("aggregates diverge: {x} vs {y} for {pred:?}"));
+                }
+            }
+
+            // Grouped counts.
+            let gq = Query::scan("p")
+                .filter(pred.clone())
+                .group("sensor")
+                .aggregate(AggFunc::Count, "val");
+            let pg = driver
+                .execute(&gq, None)
+                .map_err(|e| e.to_string())?
+                .groups
+                .unwrap();
+            let ug = driver
+                .execute_opts(&gq, None, false)
+                .map_err(|e| e.to_string())?
+                .groups
+                .unwrap();
+            if pg != ug {
+                return Err(format!("groups diverge under pruning: {pred:?}"));
+            }
+            Ok(())
         },
     );
 }

@@ -1,0 +1,69 @@
+#!/usr/bin/env bash
+# Run the pushdown (E2) and object-size (E3) benches and emit a
+# BENCH_pushdown.json perf snapshot, so successive PRs have a trajectory
+# to compare against.
+#
+# Usage: scripts/bench.sh [output.json]
+#
+# The snapshot records wall time per bench plus the raw table output
+# (which includes bytes_moved / objects_pruned / sim_seconds columns).
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+out_json=${1:-BENCH_pushdown.json}
+workdir=$(mktemp -d)
+trap 'rm -rf "$workdir"' EXIT
+
+run_bench() {
+    local name=$1
+    local log="$workdir/$name.log"
+    local t0 t1
+    t0=$(date +%s.%N)
+    if ! cargo bench --bench "$name" >"$log" 2>&1; then
+        echo "FAIL" >"$workdir/$name.status"
+        echo "bench $name failed; last lines:" >&2
+        tail -n 20 "$log" >&2
+        return 1
+    fi
+    t1=$(date +%s.%N)
+    echo "OK" >"$workdir/$name.status"
+    echo "$t0 $t1" >"$workdir/$name.time"
+}
+
+status=0
+run_bench e2_pushdown || status=1
+run_bench e3_object_size || status=1
+
+python3 - "$workdir" "$out_json" <<'PY'
+import json
+import os
+import sys
+import time
+
+workdir, out_json = sys.argv[1], sys.argv[2]
+snapshot = {
+    "schema": 1,
+    "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    "git_rev": os.popen("git rev-parse --short HEAD 2>/dev/null").read().strip(),
+    "benches": {},
+}
+for name in ("e2_pushdown", "e3_object_size"):
+    entry = {}
+    status_path = os.path.join(workdir, f"{name}.status")
+    entry["status"] = (
+        open(status_path).read().strip() if os.path.exists(status_path) else "MISSING"
+    )
+    time_path = os.path.join(workdir, f"{name}.time")
+    if os.path.exists(time_path):
+        t0, t1 = map(float, open(time_path).read().split())
+        entry["wall_seconds"] = round(t1 - t0, 3)
+    log_path = os.path.join(workdir, f"{name}.log")
+    if os.path.exists(log_path):
+        entry["output"] = open(log_path).read()
+    snapshot["benches"][name] = entry
+with open(out_json, "w") as f:
+    json.dump(snapshot, f, indent=2)
+print(f"wrote {out_json}")
+PY
+
+exit $status
