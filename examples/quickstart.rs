@@ -90,9 +90,9 @@ workers = 4
     let groups = top.groups.unwrap();
     println!("\n== rows per sensor (top 5 of {}) ==", groups.len());
     let mut sorted = groups.clone();
-    sorted.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    sorted.sort_by(|a, b| b.1[0].partial_cmp(&a.1[0]).unwrap());
     for (k, v) in sorted.iter().take(5) {
-        println!("sensor {k:>3}: {v:>6} rows");
+        println!("sensor {:>3}: {:>6} rows", k[0], v[0]);
     }
 
     // 5. The HDF5-VOL view: an array dataset through the forwarding plugin.

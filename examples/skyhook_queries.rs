@@ -2,9 +2,11 @@
 //!
 //! Ingests a skewed sensor table, then walks through the query surface:
 //! selective filters, projections, decomposable vs holistic aggregates,
-//! group-by, the omap secondary index, and what failure of a storage
-//! server does to availability. Every query is run both pushed-down and
-//! client-side to show the bytes-moved asymmetry the paper argues for.
+//! multi-key/multi-aggregate group-by, chained operator pipelines with
+//! per-operator offload (`QueryPlan::explain`), distributed top-k, the
+//! omap secondary index, and what failure of a storage server does to
+//! availability. Every query is run both pushed-down and client-side to
+//! show the bytes-moved asymmetry the paper argues for.
 //!
 //! ```text
 //! cargo run --release --example skyhook_queries
@@ -123,6 +125,56 @@ workers = 6
         groups.len(),
         fmt_size(r.stats.bytes_moved),
         fmt_size((rows * 8) as u64)
+    );
+
+    // Multi-key, multi-aggregate group-by: one grouped-partials pipeline
+    // per object, merged element-wise at the driver.
+    let r = stack.driver.execute(
+        &Query::scan("telemetry")
+            .group("sensor")
+            .group("flag")
+            .aggregate(AggFunc::Count, "val")
+            .aggregate(AggFunc::Mean, "val")
+            .aggregate(AggFunc::Max, "val"),
+        None,
+    )?;
+    let multi = r.groups.unwrap();
+    println!(
+        "group-by (sensor, flag) x [count, mean, max]: {} groups, moved {}",
+        multi.len(),
+        fmt_size(r.stats.bytes_moved)
+    );
+
+    // A chained logical plan with per-operator offload. `explain` shows
+    // the staged pipeline: which operators the planner pushed to the
+    // storage servers ([server]) and which merge-side operators stay at
+    // the driver ([client]).
+    //
+    // Typical output:
+    //
+    //   row-scan over 7 objects (0 pruned), mode=Pushdown, ...
+    //     [server] scan telemetry
+    //     [server] filter (val > 70 && flag == 0)
+    //     [server] project [ts, val]
+    //     [server] partial top-10 by [val desc]
+    //     [client] merge rows
+    //     [client] sort [val desc]
+    //     [client] limit 10
+    //     [client] project [ts]
+    let chained = Query::scan("telemetry")
+        .filter(parse_predicate("val > 70 && flag == 0")?)
+        .select(&["ts"])
+        .top_k("val", true, 10);
+    print!("\n{}", stack.driver.explain(&chained, None)?);
+    let push = stack.driver.execute(&chained, Some(ExecMode::Pushdown))?;
+    let client = stack.driver.execute(&chained, Some(ExecMode::ClientSide))?;
+    assert_eq!(push.rows.as_ref().unwrap(), client.rows.as_ref().unwrap());
+    println!(
+        "distributed top-10 by val: {} rows, pushdown moved {} vs client {} ({:.0}x less)",
+        push.rows.as_ref().unwrap().nrows(),
+        fmt_size(push.stats.bytes_moved),
+        fmt_size(client.stats.bytes_moved),
+        client.stats.bytes_moved as f64 / push.stats.bytes_moved.max(1) as f64
     );
 
     // Secondary index: build once, then look up rows server-side.

@@ -108,7 +108,7 @@ fn main() -> skyhook_map::Result<()> {
         println!(
             "{site}: {} sensors, global mean of group means {:.2}, moved {}",
             groups.len(),
-            groups.iter().map(|(_, v)| v).sum::<f64>() / groups.len() as f64,
+            groups.iter().map(|(_, v)| v[0]).sum::<f64>() / groups.len() as f64,
             fmt_size(r.stats.bytes_moved)
         );
     }

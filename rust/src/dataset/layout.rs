@@ -277,24 +277,32 @@ pub trait RangeSource {
 /// Largest header prefix fetched before falling back to a full read.
 pub const HEADER_PREFIX: usize = 64 * 1024;
 
-/// Read only the columns named in `needed` from a table object.
-///
-/// For columnar objects this issues *ranged reads* via the header
-/// directory — untouched columns never leave the device (and, on the
-/// client path, never cross the network). Row objects, oversized
-/// headers, and unparseable prefixes fall back to a full read plus
-/// projection (the row-vs-column physical asymmetry the E4 experiment
-/// measures). `needed = None` reads everything.
-///
-/// Returns a batch containing exactly the needed columns, in schema
-/// order. Per-column checksums of fetched columns are verified.
-pub fn read_projected(src: &mut dyn RangeSource, needed: Option<&[String]>) -> Result<Batch> {
+/// I/O accounting of one projected read (feeds `QueryStats`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProjReadStats {
+    /// Ranged reads issued against the source, including the header
+    /// prefix (a full-object read counts as one).
+    pub ranged_reads: u32,
+    /// Ranged reads *saved* by merging adjacent needed-column extents
+    /// into a single read: `extents_beyond_prefix - reads_issued`.
+    pub reads_coalesced: u32,
+}
+
+/// [`read_projected`] that also reports how many ranged reads were
+/// issued and how many were saved by extent coalescing.
+pub fn read_projected_stats(
+    src: &mut dyn RangeSource,
+    needed: Option<&[String]>,
+) -> Result<(Batch, ProjReadStats)> {
+    let mut stats = ProjReadStats::default();
     let Some(needed) = needed else {
         let raw = src.read_all()?;
-        return Ok(decode_batch(&raw)?.0);
+        stats.ranged_reads = 1;
+        return Ok((decode_batch(&raw)?.0, stats));
     };
     let size = src.size()?;
     let prefix = src.read_range(0, size.min(HEADER_PREFIX))?;
+    stats.ranged_reads = 1;
     let header = match parse_header(&prefix) {
         Ok(h) if h.layout == Layout::Col => h,
         // Row layout, oversized header, or parse trouble: whole object.
@@ -304,23 +312,27 @@ pub fn read_projected(src: &mut dyn RangeSource, needed: Option<&[String]>) -> R
             let mut raw = prefix;
             if raw.len() < size {
                 raw.extend(src.read_range(raw.len(), size - raw.len())?);
+                stats.ranged_reads += 1;
             }
             let (batch, _) = decode_batch(&raw)?;
             let refs: Vec<&str> = needed.iter().map(String::as_str).collect();
-            return batch.project(&refs);
+            return Ok((batch.project(&refs)?, stats));
         }
     };
     // Validate names early.
     for n in needed {
         header.schema.col_index(n)?;
     }
-    let mut schema_cols = Vec::new();
-    let mut columns = Vec::new();
+    // Plan the reads: extents fully inside the prefix are free; the rest
+    // coalesce into one ranged read per contiguous run (adjacent needed
+    // columns share a run because the columnar payload is contiguous in
+    // directory order).
+    let mut extents = Vec::new(); // (ci, start, end), schema order
     for (ci, col_schema) in header.schema.columns.iter().enumerate() {
         if !needed.contains(&col_schema.name) {
             continue;
         }
-        let (off, len, crc) = header.directory[ci];
+        let (off, len, _) = header.directory[ci];
         let start = header
             .payload_start
             .checked_add(off as usize)
@@ -328,11 +340,45 @@ pub fn read_projected(src: &mut dyn RangeSource, needed: Option<&[String]>) -> R
         let end = start
             .checked_add(len as usize)
             .ok_or_else(|| Error::Corrupt("directory extent overflow".into()))?;
+        extents.push((ci, start, end));
+    }
+    // Contiguous runs of extents beyond the prefix.
+    let mut runs: Vec<(usize, usize)> = Vec::new(); // (start, end)
+    for &(_, start, end) in &extents {
+        if end <= prefix.len() {
+            continue;
+        }
+        match runs.last_mut() {
+            Some((_, rend)) if *rend == start => {
+                *rend = end;
+                stats.reads_coalesced += 1;
+            }
+            _ => runs.push((start, end)),
+        }
+    }
+    let mut buffers = Vec::with_capacity(runs.len());
+    for &(start, end) in &runs {
+        buffers.push(src.read_range(start, end - start)?);
+        stats.ranged_reads += 1;
+    }
+    let mut schema_cols = Vec::new();
+    let mut columns = Vec::new();
+    for (ci, start, end) in extents {
+        let col_schema = &header.schema.columns[ci];
         let bytes: Cow<'_, [u8]> = if end <= prefix.len() {
             Cow::Borrowed(&prefix[start..end])
         } else {
-            Cow::Owned(src.read_range(start, len as usize)?)
+            let ri = runs
+                .iter()
+                .position(|&(rs, re)| rs <= start && end <= re)
+                .expect("extent beyond prefix belongs to a run");
+            let (rs, _) = runs[ri];
+            let bytes = buffers[ri]
+                .get(start - rs..end - rs)
+                .ok_or_else(|| Error::Corrupt("short ranged read".into()))?;
+            Cow::Borrowed(bytes)
         };
+        let (_, _, crc) = header.directory[ci];
         if crc32fast::hash(&bytes) != crc {
             return Err(Error::Corrupt(format!(
                 "column {:?} checksum mismatch",
@@ -344,7 +390,23 @@ pub fn read_projected(src: &mut dyn RangeSource, needed: Option<&[String]>) -> R
         schema_cols.push((col_schema.name.as_str(), col_schema.dtype));
         columns.push(col);
     }
-    Batch::new(TableSchema::new(&schema_cols), columns)
+    Ok((Batch::new(TableSchema::new(&schema_cols), columns)?, stats))
+}
+
+/// Read only the columns named in `needed` from a table object.
+///
+/// For columnar objects this issues *ranged reads* via the header
+/// directory — untouched columns never leave the device (and, on the
+/// client path, never cross the network), and adjacent needed columns
+/// coalesce into a single ranged read. Row objects, oversized headers,
+/// and unparseable prefixes fall back to a full read plus projection
+/// (the row-vs-column physical asymmetry the E4 experiment measures).
+/// `needed = None` reads everything.
+///
+/// Returns a batch containing exactly the needed columns, in schema
+/// order. Per-column checksums of fetched columns are verified.
+pub fn read_projected(src: &mut dyn RangeSource, needed: Option<&[String]>) -> Result<Batch> {
+    read_projected_stats(src, needed).map(|(b, _)| b)
 }
 
 fn encode_rows(batch: &Batch) -> Vec<u8> {
@@ -682,6 +744,17 @@ mod tests {
     struct BufSource {
         buf: Vec<u8>,
         fetched: usize,
+        calls: usize,
+    }
+
+    impl BufSource {
+        fn new(buf: Vec<u8>) -> BufSource {
+            BufSource {
+                buf,
+                fetched: 0,
+                calls: 0,
+            }
+        }
     }
 
     impl RangeSource for BufSource {
@@ -694,10 +767,12 @@ mod tests {
                 .filter(|&e| e <= self.buf.len())
                 .ok_or_else(|| Error::Invalid("range out of bounds".into()))?;
             self.fetched += len;
+            self.calls += 1;
             Ok(self.buf[offset..end].to_vec())
         }
         fn read_all(&mut self) -> Result<Vec<u8>> {
             self.fetched += self.buf.len();
+            self.calls += 1;
             Ok(self.buf.clone())
         }
     }
@@ -706,10 +781,7 @@ mod tests {
     fn read_projected_fetches_only_needed_columns() {
         let b = gen::wide_table(4000, 16, 5);
         let needed = vec!["c3".to_string(), "c11".to_string()];
-        let mut col_src = BufSource {
-            buf: encode_batch(&b, Layout::Col),
-            fetched: 0,
-        };
+        let mut col_src = BufSource::new(encode_batch(&b, Layout::Col));
         let got = read_projected(&mut col_src, Some(&needed)).unwrap();
         assert_eq!(got.ncols(), 2);
         assert_eq!(got.nrows(), 4000);
@@ -722,18 +794,12 @@ mod tests {
             col_src.buf.len()
         );
         // Row layout must fall back to a full read, same logical result.
-        let mut row_src = BufSource {
-            buf: encode_batch(&b, Layout::Row),
-            fetched: 0,
-        };
+        let mut row_src = BufSource::new(encode_batch(&b, Layout::Row));
         let got_row = read_projected(&mut row_src, Some(&needed)).unwrap();
         assert_eq!(got_row, got);
         assert!(row_src.fetched >= row_src.buf.len());
         // needed = None reads everything.
-        let mut full_src = BufSource {
-            buf: encode_batch(&b, Layout::Col),
-            fetched: 0,
-        };
+        let mut full_src = BufSource::new(encode_batch(&b, Layout::Col));
         assert_eq!(read_projected(&mut full_src, None).unwrap(), b);
         // Missing columns error.
         assert!(read_projected(
@@ -744,17 +810,52 @@ mod tests {
     }
 
     #[test]
+    fn read_projected_coalesces_adjacent_extents() {
+        // 16 f32 columns of 4000 rows: each extent is 16 KB, the prefix
+        // covers the header + first ~4 columns.
+        let b = gen::wide_table(4000, 16, 5);
+        let enc = encode_batch(&b, Layout::Col);
+
+        // Three adjacent tail columns → one coalesced ranged read.
+        let needed: Vec<String> = ["c12", "c13", "c14"].iter().map(|s| s.to_string()).collect();
+        let mut src = BufSource::new(enc.clone());
+        let (got, stats) = read_projected_stats(&mut src, Some(&needed)).unwrap();
+        assert_eq!(got, b.project(&["c12", "c13", "c14"]).unwrap());
+        // Prefix + one merged run (instead of three per-column reads).
+        assert_eq!(stats.ranged_reads, 2);
+        assert_eq!(stats.reads_coalesced, 2);
+        assert_eq!(src.calls, 2);
+
+        // Non-adjacent columns cannot merge.
+        let needed: Vec<String> = ["c8", "c14"].iter().map(|s| s.to_string()).collect();
+        let mut src = BufSource::new(enc.clone());
+        let (_, stats) = read_projected_stats(&mut src, Some(&needed)).unwrap();
+        assert_eq!(stats.ranged_reads, 3);
+        assert_eq!(stats.reads_coalesced, 0);
+
+        // A gap between runs keeps them separate but merges within runs.
+        let needed: Vec<String> = ["c8", "c9", "c13", "c14"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let mut src = BufSource::new(enc);
+        let (got, stats) = read_projected_stats(&mut src, Some(&needed)).unwrap();
+        assert_eq!(got, b.project(&["c8", "c9", "c13", "c14"]).unwrap());
+        assert_eq!(stats.ranged_reads, 3);
+        assert_eq!(stats.reads_coalesced, 2);
+    }
+
+    #[test]
     fn read_projected_small_object_served_from_prefix() {
         // Object smaller than the header prefix: column bytes come out
         // of the prefix read, no extra ranged reads.
         let b = sample();
-        let mut src = BufSource {
-            buf: encode_batch(&b, Layout::Col),
-            fetched: 0,
-        };
-        let got = read_projected(&mut src, Some(&["v".to_string()])).unwrap();
+        let mut src = BufSource::new(encode_batch(&b, Layout::Col));
+        let (got, stats) = read_projected_stats(&mut src, Some(&["v".to_string()])).unwrap();
         assert_eq!(got, b.project(&["v"]).unwrap());
         assert_eq!(src.fetched, src.buf.len().min(HEADER_PREFIX));
+        assert_eq!(stats.ranged_reads, 1);
+        assert_eq!(stats.reads_coalesced, 0);
     }
 
     #[test]

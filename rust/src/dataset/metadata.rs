@@ -13,8 +13,11 @@
 //! object's `skyhook.zonemap` xattr (so the storage-side extension can
 //! re-check and short-circuit without touching object data). A zone map
 //! is advisory: an absent or invalid entry only disables pruning, never
-//! changes results. Columns containing NaN (or non-numeric columns) are
-//! recorded as invalid so NaN-matching predicates (`Ne`) stay correct.
+//! changes results. Stats carry a per-column NaN *count* next to the
+//! min/max of the non-NaN values, so range predicates can still prune
+//! NaN-bearing columns and `Ne` predicates (which match NaN rows) can
+//! prune row groups proven NaN-free. Non-numeric columns record absent
+//! stats and never prune.
 
 use super::naming;
 use super::schema::{Dataspace, TableSchema};
@@ -26,27 +29,62 @@ use crate::util::bytes::{ByteReader, ByteWriter};
 
 const META_MAGIC: &[u8; 4] = b"SKYM";
 const ZONE_MAGIC: &[u8; 4] = b"SKYZ";
+/// Zone map wire version: 2 added per-column NaN counts.
+const ZONE_VERSION: u8 = 2;
 
 /// Object xattr key under which the write path stamps each row-group
 /// object's serialized [`ZoneMap`].
 pub const ZONE_MAP_XATTR: &str = "skyhook.zonemap";
 
-/// Min/max zone map of one column of one row group.
+/// What a zone map knows about one column's values: the closed range of
+/// its non-NaN values (`lo > hi` means the column holds no non-NaN
+/// values) plus how many NaN rows it contains. This is the information
+/// [`crate::skyhook::Predicate::prune`] reasons over — NaN rows match
+/// `Ne` predicates and nothing else, so carrying the count (rather than
+/// poisoning the whole column) lets range predicates prune NaN-bearing
+/// groups and lets `Ne` prune groups proven NaN-free.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ValueRange {
+    pub lo: f64,
+    pub hi: f64,
+    pub nans: u64,
+}
+
+impl ValueRange {
+    /// A range known to contain no NaN rows.
+    pub fn exact(lo: f64, hi: f64) -> ValueRange {
+        ValueRange { lo, hi, nans: 0 }
+    }
+
+    /// True when at least one non-NaN value exists.
+    pub fn has_values(&self) -> bool {
+        self.lo <= self.hi
+    }
+}
+
+/// Zone map of one column of one row group: min/max over the non-NaN
+/// values plus the NaN row count.
 ///
-/// Invalid stats (NaN bounds: string columns, NaN-containing columns,
-/// empty groups) disable pruning for that column — `range()` returns
-/// `None` and the planner must assume any value may occur.
+/// Absent stats (NaN bounds with a zero NaN count: string columns,
+/// legacy metadata) disable pruning for that column — `value_range()`
+/// returns `None` and the planner must assume any value may occur. An
+/// all-NaN column is *known* (`lo > hi`, `nan_count > 0`), not absent:
+/// range predicates prune it outright.
 #[derive(Clone, Copy, Debug)]
 pub struct ColumnStats {
     pub min: f64,
     pub max: f64,
+    /// NaN rows in the column (0 for i64 columns).
+    pub nan_count: u64,
 }
 
 impl PartialEq for ColumnStats {
     fn eq(&self, other: &Self) -> bool {
         // Bitwise so invalid (NaN) stats compare equal and wire
         // roundtrips stay reflexive.
-        self.min.to_bits() == other.min.to_bits() && self.max.to_bits() == other.max.to_bits()
+        self.min.to_bits() == other.min.to_bits()
+            && self.max.to_bits() == other.max.to_bits()
+            && self.nan_count == other.nan_count
     }
 }
 
@@ -56,18 +94,39 @@ impl ColumnStats {
         ColumnStats {
             min: f64::NAN,
             max: f64::NAN,
+            nan_count: 0,
         }
     }
 
-    /// True when the bounds describe at least one value.
+    /// True when the bounds describe at least one non-NaN value.
     pub fn is_valid(&self) -> bool {
         self.min <= self.max
     }
 
-    /// `(min, max)` when valid, `None` otherwise.
+    /// True when the stats carry *any* knowledge (a non-NaN value range
+    /// and/or a positive NaN count); absent stats know nothing.
+    pub fn is_known(&self) -> bool {
+        self.is_valid() || self.nan_count > 0
+    }
+
+    /// `(min, max)` of the non-NaN values when any exist, `None`
+    /// otherwise.
     pub fn range(&self) -> Option<(f64, f64)> {
         if self.is_valid() {
             Some((self.min, self.max))
+        } else {
+            None
+        }
+    }
+
+    /// Full pruning knowledge, `None` when the stats are absent.
+    pub fn value_range(&self) -> Option<ValueRange> {
+        if self.is_known() {
+            Some(ValueRange {
+                lo: self.min,
+                hi: self.max,
+                nans: self.nan_count,
+            })
         } else {
             None
         }
@@ -77,33 +136,56 @@ impl ColumnStats {
     pub fn encode_into(&self, w: &mut ByteWriter) {
         w.f64(self.min);
         w.f64(self.max);
+        w.u64(self.nan_count);
     }
 
     pub fn decode_from(r: &mut ByteReader) -> Result<ColumnStats> {
         Ok(ColumnStats {
             min: r.f64()?,
             max: r.f64()?,
+            nan_count: r.u64()?,
         })
     }
 
-    /// Compute stats over one column. Any NaN poisons the whole column
-    /// (a `Ne` predicate matches NaN rows, so min/max over the non-NaN
-    /// values would prune incorrectly).
+    /// Legacy (pre-NaN-count) wire decoding: min/max only. Old writers
+    /// poisoned any NaN-bearing column to absent stats, so a valid
+    /// legacy range implies a NaN count of zero.
+    fn decode_legacy_from(r: &mut ByteReader) -> Result<ColumnStats> {
+        Ok(ColumnStats {
+            min: r.f64()?,
+            max: r.f64()?,
+            nan_count: 0,
+        })
+    }
+
+    /// Compute stats over one column: min/max of the non-NaN values plus
+    /// the NaN count. An all-NaN column yields an empty range with a
+    /// positive count; string columns yield absent stats.
     pub fn from_column(col: &Column) -> ColumnStats {
         fn scan(it: impl Iterator<Item = f64>) -> ColumnStats {
             let (mut min, mut max) = (f64::INFINITY, f64::NEG_INFINITY);
+            let mut nans = 0u64;
             for x in it {
                 if x.is_nan() {
-                    return ColumnStats::absent();
-                }
-                if x < min {
-                    min = x;
-                }
-                if x > max {
-                    max = x;
+                    nans += 1;
+                } else {
+                    if x < min {
+                        min = x;
+                    }
+                    if x > max {
+                        max = x;
+                    }
                 }
             }
-            ColumnStats { min, max }
+            if min > max && nans == 0 {
+                // Empty column: nothing known.
+                return ColumnStats::absent();
+            }
+            ColumnStats {
+                min,
+                max,
+                nan_count: nans,
+            }
         }
         match col {
             Column::F32(v) => scan(v.iter().map(|&x| x as f64)),
@@ -135,15 +217,23 @@ impl ZoneMap {
         }
     }
 
-    /// Valid `(min, max)` bounds of a column, if known.
+    /// Valid `(min, max)` bounds of a column's non-NaN values, if known.
     pub fn range(&self, col: &str) -> Option<(f64, f64)> {
         let i = self.schema.col_index(col).ok()?;
         self.stats.get(i).and_then(ColumnStats::range)
     }
 
+    /// Full pruning knowledge of a column (non-NaN range + NaN count),
+    /// `None` when absent.
+    pub fn value_range(&self, col: &str) -> Option<ValueRange> {
+        let i = self.schema.col_index(col).ok()?;
+        self.stats.get(i).and_then(ColumnStats::value_range)
+    }
+
     pub fn encode(&self) -> Vec<u8> {
-        let mut w = ByteWriter::with_capacity(self.stats.len() * 16 + 64);
+        let mut w = ByteWriter::with_capacity(self.stats.len() * 24 + 64);
         w.raw(ZONE_MAGIC);
+        w.u8(ZONE_VERSION);
         w.bytes(&self.schema.encode());
         w.u64(self.rows);
         w.u32(self.stats.len() as u32);
@@ -157,6 +247,13 @@ impl ZoneMap {
         let mut r = ByteReader::new(buf);
         if r.raw(4)? != ZONE_MAGIC {
             return Err(Error::Corrupt("bad zone map magic".into()));
+        }
+        // No legacy (version-less) decode path: the store is in-memory,
+        // so no xattr outlives the process that wrote it, and a decode
+        // failure only disables the advisory short-circuit anyway.
+        let version = r.u8()?;
+        if version != ZONE_VERSION {
+            return Err(Error::Corrupt(format!("bad zone map version {version}")));
         }
         let schema = TableSchema::decode(r.bytes()?)?;
         let rows = r.u64()?;
@@ -256,9 +353,10 @@ impl DatasetMeta {
                 row_groups,
                 localities,
             } => {
-                // Kind 2: table metadata with per-group zone maps (kind 0
-                // is the legacy stats-less encoding, still decodable).
-                w.u8(2);
+                // Kind 3: table metadata with per-group zone maps carrying
+                // NaN counts (kind 2 is the min/max-only encoding, kind 0
+                // the legacy stats-less one; both still decodable).
+                w.u8(3);
                 w.bytes(&schema.encode());
                 w.u8(match layout {
                     Layout::Row => 0,
@@ -295,7 +393,7 @@ impl DatasetMeta {
             return Err(Error::Corrupt("bad meta magic".into()));
         }
         match r.u8()? {
-            kind if kind == 0 || kind == 2 => {
+            kind if kind == 0 || kind == 2 || kind == 3 => {
                 let schema = TableSchema::decode(r.bytes()?)?;
                 let layout = match r.u8()? {
                     0 => Layout::Row,
@@ -310,14 +408,18 @@ impl DatasetMeta {
                 for _ in 0..n {
                     let rows = r.u64()?;
                     let bytes = r.u64()?;
-                    let stats = if kind == 2 {
+                    let stats = if kind >= 2 {
                         let k = r.u32()? as usize;
                         if k > 100_000 {
                             return Err(Error::Corrupt("absurd stats count".into()));
                         }
                         let mut stats = Vec::with_capacity(k);
                         for _ in 0..k {
-                            stats.push(ColumnStats::decode_from(&mut r)?);
+                            stats.push(if kind == 3 {
+                                ColumnStats::decode_from(&mut r)?
+                            } else {
+                                ColumnStats::decode_legacy_from(&mut r)?
+                            });
                         }
                         stats
                     } else {
@@ -402,14 +504,29 @@ mod tests {
                     rows: 100,
                     bytes: 1200,
                     stats: vec![
-                        ColumnStats { min: -1.5, max: 3.0 },
-                        ColumnStats { min: 0.0, max: 99.0 },
+                        ColumnStats {
+                            min: -1.5,
+                            max: 3.0,
+                            nan_count: 4,
+                        },
+                        ColumnStats {
+                            min: 0.0,
+                            max: 99.0,
+                            nan_count: 0,
+                        },
                     ],
                 },
                 RowGroupMeta {
                     rows: 80,
                     bytes: 960,
-                    stats: vec![ColumnStats::absent(), ColumnStats { min: 7.0, max: 7.0 }],
+                    stats: vec![
+                        ColumnStats::absent(),
+                        ColumnStats {
+                            min: 7.0,
+                            max: 7.0,
+                            nan_count: 0,
+                        },
+                    ],
                 },
             ],
             localities: vec![String::new(), "grp1".into()],
@@ -426,14 +543,37 @@ mod tests {
     fn column_stats_from_columns() {
         let s = ColumnStats::from_column(&Column::F32(vec![3.0, -1.0, 2.5]));
         assert_eq!(s.range(), Some((-1.0, 2.5)));
+        assert_eq!(s.nan_count, 0);
+        assert_eq!(s.value_range(), Some(ValueRange::exact(-1.0, 2.5)));
         let s = ColumnStats::from_column(&Column::I64(vec![5, 5]));
         assert_eq!(s.range(), Some((5.0, 5.0)));
-        // NaN poisons the column.
-        let s = ColumnStats::from_column(&Column::F64(vec![1.0, f64::NAN]));
+        // NaNs are counted; min/max still cover the non-NaN values.
+        let s = ColumnStats::from_column(&Column::F64(vec![1.0, f64::NAN, 3.0]));
+        assert_eq!(s.range(), Some((1.0, 3.0)));
+        assert_eq!(s.nan_count, 1);
+        assert_eq!(
+            s.value_range(),
+            Some(ValueRange {
+                lo: 1.0,
+                hi: 3.0,
+                nans: 1
+            })
+        );
+        // An all-NaN column is known (prunable by range predicates), but
+        // has no value range.
+        let s = ColumnStats::from_column(&Column::F32(vec![f32::NAN, f32::NAN]));
         assert!(!s.is_valid());
-        // Strings and empty columns have no stats.
-        assert!(!ColumnStats::from_column(&Column::Str(vec!["x".into()])).is_valid());
-        assert!(!ColumnStats::from_column(&Column::F32(vec![])).is_valid());
+        assert!(s.is_known());
+        assert_eq!(s.nan_count, 2);
+        assert_eq!(s.range(), None);
+        assert!(!s.value_range().unwrap().has_values());
+        // Strings and empty columns have no stats at all.
+        let s = ColumnStats::from_column(&Column::Str(vec!["x".into()]));
+        assert!(!s.is_known());
+        assert_eq!(s.value_range(), None);
+        let s = ColumnStats::from_column(&Column::F32(vec![]));
+        assert!(!s.is_known());
+        assert_eq!(s.value_range(), None);
     }
 
     #[test]
@@ -453,6 +593,8 @@ mod tests {
         assert_eq!(zm.range("v"), Some((-3.5, 1.0)));
         assert_eq!(zm.range("tag"), None);
         assert_eq!(zm.range("ghost"), None);
+        assert_eq!(zm.value_range("id"), Some(ValueRange::exact(2.0, 9.0)));
+        assert_eq!(zm.value_range("tag"), None);
         assert_eq!(ZoneMap::decode(&zm.encode()).unwrap(), zm);
         assert!(ZoneMap::decode(b"????").is_err());
         let enc = zm.encode();
@@ -478,6 +620,34 @@ mod tests {
         };
         assert_eq!(row_groups.len(), 1);
         assert!(row_groups[0].stats.is_empty());
+    }
+
+    #[test]
+    fn legacy_kind2_meta_decodes_with_zero_nan_counts() {
+        // Hand-build a kind-2 (min/max-only) encoding: its writers
+        // poisoned NaN-bearing columns to absent stats, so a valid range
+        // decodes to an exact (NaN-free) one.
+        let schema = TableSchema::new(&[("a", DType::F32)]);
+        let mut w = ByteWriter::new();
+        w.raw(META_MAGIC);
+        w.u8(2);
+        w.bytes(&schema.encode());
+        w.u8(1); // Col
+        w.u32(1);
+        w.u64(10);
+        w.u64(500);
+        w.u32(1);
+        w.f64(-2.0);
+        w.f64(9.0);
+        w.str("");
+        let m = DatasetMeta::decode(&w.finish()).unwrap();
+        let DatasetMeta::Table { row_groups, .. } = m else {
+            panic!("expected table");
+        };
+        assert_eq!(
+            row_groups[0].stats[0].value_range(),
+            Some(ValueRange::exact(-2.0, 9.0))
+        );
     }
 
     #[test]

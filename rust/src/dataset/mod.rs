@@ -19,7 +19,7 @@ pub mod table;
 
 pub use array::{copy_slab_f32, ChunkGrid, Hyperslab};
 pub use layout::{decode_batch, encode_batch, Layout};
-pub use metadata::{ColumnStats, DatasetMeta, RowGroupMeta, ZoneMap, ZONE_MAP_XATTR};
+pub use metadata::{ColumnStats, DatasetMeta, RowGroupMeta, ValueRange, ZoneMap, ZONE_MAP_XATTR};
 pub use partition::{pack_units, LogicalUnit, PackedObject, PartitionSpec};
 pub use schema::{ColumnSchema, Dataspace, DType, TableSchema};
 pub use table::{Batch, Column};

@@ -235,6 +235,25 @@ impl Batch {
         Ok(())
     }
 
+    /// Gather rows by index (e.g. a sort permutation) into a new batch.
+    pub fn take(&self, idx: &[usize]) -> Result<Batch> {
+        let n = self.nrows();
+        if let Some(&bad) = idx.iter().find(|&&i| i >= n) {
+            return Err(Error::Invalid(format!("take index {bad} out of {n} rows")));
+        }
+        let columns = self
+            .columns
+            .iter()
+            .map(|col| match col {
+                Column::F32(v) => Column::F32(idx.iter().map(|&i| v[i]).collect()),
+                Column::F64(v) => Column::F64(idx.iter().map(|&i| v[i]).collect()),
+                Column::I64(v) => Column::I64(idx.iter().map(|&i| v[i]).collect()),
+                Column::Str(v) => Column::Str(idx.iter().map(|&i| v[i].clone()).collect()),
+            })
+            .collect();
+        Batch::new(self.schema.clone(), columns)
+    }
+
     /// Take row range `[lo, hi)` as a new batch.
     pub fn slice(&self, lo: usize, hi: usize) -> Result<Batch> {
         if lo > hi || hi > self.nrows() {
@@ -393,6 +412,19 @@ mod tests {
         assert_eq!(a.nrows(), 6);
         let other = Batch::empty(&TableSchema::new(&[("x", DType::F32)]));
         assert!(a.concat(&other).is_err());
+    }
+
+    #[test]
+    fn take_gathers_rows() {
+        let b = small();
+        let t = b.take(&[2, 0, 2]).unwrap();
+        assert_eq!(t.col("id").unwrap(), &Column::I64(vec![3, 1, 3]));
+        assert_eq!(
+            t.col("tag").unwrap(),
+            &Column::Str(vec!["c".into(), "a".into(), "c".into()])
+        );
+        assert_eq!(b.take(&[]).unwrap().nrows(), 0);
+        assert!(b.take(&[3]).is_err());
     }
 
     #[test]

@@ -5,8 +5,9 @@
 //! ```text
 //! skyhook-map demo                          # quick end-to-end tour
 //! skyhook-map put    --dataset D --rows N [--layout row|col] [--object-size 4MiB]
-//! skyhook-map query  --dataset D [--filter EXPR] [--agg F:COL]... [--group COL]
-//!                    [--select C1,C2] [--client-side]
+//! skyhook-map query  --dataset D [--filter EXPR] [--agg F:COL]... [--group C1,C2]
+//!                    [--select C1,C2] [--sort SPEC] [--limit N]
+//!                    [--pipe PIPELINE] [--explain] [--client-side]
 //! skyhook-map index  --dataset D --column C
 //! skyhook-map transform --dataset D --layout row|col
 //! skyhook-map inspect                        # datasets + distribution
@@ -22,7 +23,7 @@ use skyhook_map::dataset::partition::PartitionSpec;
 use skyhook_map::dataset::table::gen;
 use skyhook_map::dataset::Layout;
 use skyhook_map::launch::Stack;
-use skyhook_map::skyhook::parse::{parse_aggregate, parse_predicate};
+use skyhook_map::skyhook::parse::{parse_aggregate, parse_pipeline, parse_predicate, parse_sort};
 use skyhook_map::skyhook::{ExecMode, Query};
 use skyhook_map::util::bytes::{fmt_size, parse_size};
 use skyhook_map::Result;
@@ -144,8 +145,15 @@ FLAGS:
   --object-size SZ  partition target (e.g. 4MiB)
   --filter EXPR     predicate, e.g. 'val > 50 && flag == 1'
   --agg F:COL       aggregate (repeatable): count/sum/min/max/mean/var/median
-  --group COL       group-by column (with exactly one --agg)
+  --group C1,C2     group-by key columns (with one or more --agg)
   --select C1,C2    projection for row queries
+  --sort SPEC       order-by, e.g. 'val desc, ts' (row queries)
+  --limit N         keep the first N rows (after sort; pushes down as
+                    per-object top-k / head)
+  --pipe PIPELINE   chained-pipeline syntax, replaces the flags above:
+                    'filter val > 50 | select ts,val | sort val desc | limit 10'
+                    'filter flag == 0 | agg sum:val,count:val | by sensor,flag'
+  --explain         print the staged plan (per-operator offload) first
   --client-side     force client-side execution (no pushdown)
   --requests N      synthetic requests for `serve`
 ";
@@ -224,6 +232,20 @@ fn cmd_demo(f: &Flags) -> Result<()> {
             r.stats.sim_seconds
         );
     }
+    // A chained pipeline with per-operator offload: the filter and the
+    // per-object top-k partial run server-side, merge+sort+truncate at
+    // the driver.
+    let tq = Query::scan("demo")
+        .filter(parse_predicate("val > 60")?)
+        .select(&["ts"])
+        .top_k("val", true, 10);
+    print!("{}", stack.driver.explain(&tq, None)?);
+    let r = stack.driver.execute(&tq, None)?;
+    println!(
+        "top-10 by val: {} rows returned, {} moved",
+        r.rows.as_ref().map(|b| b.nrows()).unwrap_or(0),
+        fmt_size(r.stats.bytes_moved)
+    );
     println!("demo OK");
     Ok(())
 }
@@ -264,27 +286,50 @@ fn cmd_query(f: &Flags) -> Result<()> {
     let stack = Stack::build(&cfg)?;
     let dataset = require_dataset(f)?;
     hydrate(&stack, &cfg, &dataset, Layout::Col)?;
-    let mut q = Query::scan(&dataset);
-    if let Some(expr) = f.get("filter") {
-        q = q.filter(parse_predicate(expr)?);
-    }
-    for spec in f.get_all("agg") {
-        let a = parse_aggregate(spec)?;
-        q = q.aggregate(a.func, &a.col);
-    }
-    if let Some(g) = f.get("group") {
-        q = q.group(g);
-    }
-    if let Some(sel) = f.get("select") {
-        let cols: Vec<&str> = sel.split(',').map(str::trim).collect();
-        q = q.select(&cols);
-    }
+    let q = if let Some(pipe) = f.get("pipe") {
+        parse_pipeline(&dataset, pipe)?
+    } else {
+        let mut q = Query::scan(&dataset);
+        if let Some(expr) = f.get("filter") {
+            q = q.filter(parse_predicate(expr)?);
+        }
+        for spec in f.get_all("agg") {
+            let a = parse_aggregate(spec)?;
+            q = q.aggregate(a.func, &a.col);
+        }
+        if let Some(g) = f.get("group") {
+            for col in g.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+                q = q.group(col);
+            }
+        }
+        if let Some(sel) = f.get("select") {
+            let cols: Vec<&str> = sel.split(',').map(str::trim).collect();
+            q = q.select(&cols);
+        }
+        if let Some(spec) = f.get("sort") {
+            q = q.sort_by(&parse_sort(spec)?);
+        }
+        if let Some(n) = f.get("limit") {
+            q = q.limit(
+                n.parse()
+                    .map_err(|_| skyhook_map::Error::Invalid("bad --limit".into()))?,
+            );
+        }
+        q
+    };
     let mode = f.has("client-side").then_some(ExecMode::ClientSide);
+    if f.has("explain") {
+        print!("{}", stack.driver.explain(&q, mode)?);
+    }
     let r = stack.driver.execute(&q, mode)?;
     if let Some(groups) = &r.groups {
-        println!("group        value");
-        for (k, v) in groups.iter().take(20) {
-            println!("{k:<12} {v:.4}");
+        let keys = q.group_by.join(",");
+        let aggs: Vec<String> = q.aggregates.iter().map(|a| a.to_string()).collect();
+        println!("{keys:<20} {}", aggs.join("  "));
+        for (k, vals) in groups.iter().take(20) {
+            let key: Vec<String> = k.iter().map(|x| x.to_string()).collect();
+            let v: Vec<String> = vals.iter().map(|x| format!("{x:.4}")).collect();
+            println!("{:<20} {}", key.join(","), v.join("  "));
         }
         if groups.len() > 20 {
             println!("... ({} groups)", groups.len());
@@ -307,11 +352,12 @@ fn cmd_query(f: &Flags) -> Result<()> {
         }
     }
     println!(
-        "-- {} objects ({} pruned, {} skipped), {} moved, sim {:.4}s, wall {:.4}s, pushdown={}",
+        "-- {} objects ({} pruned, {} skipped), {} moved, {} reads coalesced, sim {:.4}s, wall {:.4}s, pushdown={}",
         r.stats.objects,
         r.stats.objects_pruned,
         fmt_size(r.stats.bytes_skipped),
         fmt_size(r.stats.bytes_moved),
+        r.stats.reads_coalesced,
         r.stats.sim_seconds,
         r.stats.wall_seconds,
         r.stats.pushdown

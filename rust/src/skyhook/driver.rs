@@ -2,15 +2,16 @@
 //! names and sub-queries, schedules them over the worker pool, and
 //! aggregates the partial results — the Dask-scheduler stand-in.
 
-use super::plan::{plan_opts, ExecMode, QueryPlan};
-use super::query::{AggState, Query};
+use super::logical::sort_rows;
+use super::plan::{group_prunes, plan_opts, ExecMode, QueryPlan};
+use super::query::{AggState, Predicate, Query};
 use super::worker::{self, SubOutput, SubResult};
 use crate::config::DriverConfig;
 use crate::dataset::metadata::{self, ColumnStats, DatasetMeta, RowGroupMeta};
 use crate::dataset::naming;
 use crate::dataset::partition::PartitionSpec;
 use crate::dataset::table::Batch;
-use crate::dataset::Layout;
+use crate::dataset::{DType, Layout};
 use crate::error::{Error, Result};
 use crate::simnet::Timeline;
 use crate::store::Cluster;
@@ -36,6 +37,10 @@ pub struct QueryStats {
     /// Serialized bytes of the pruned objects: I/O and decode work that
     /// provably could not contribute to the result and was skipped.
     pub bytes_skipped: u64,
+    /// Ranged reads saved by coalescing adjacent column extents into one
+    /// read (client-side partial-read scans only; pushdown coalesces on
+    /// the storage device instead).
+    pub reads_coalesced: u64,
     /// Execution mode used.
     pub pushdown: bool,
 }
@@ -43,12 +48,15 @@ pub struct QueryStats {
 /// Result of a query.
 #[derive(Debug)]
 pub struct QueryResult {
-    /// Returned rows (row queries).
+    /// Returned rows (row queries), already merged, sorted, limited and
+    /// projected per the plan's merge-side stages.
     pub rows: Option<Batch>,
-    /// Finalized aggregate values, parallel to `query.aggregates`.
+    /// Finalized aggregate values, parallel to `query.aggregates`
+    /// (scalar aggregation only).
     pub aggregates: Vec<f64>,
-    /// Group-by results: (key, finalized value) sorted by key.
-    pub groups: Option<Vec<(i64, f64)>>,
+    /// Group-by results, sorted by key: multi-column key → one finalized
+    /// value per aggregate (parallel to `query.aggregates`).
+    pub groups: Option<Vec<(Vec<i64>, Vec<f64>)>>,
     pub stats: QueryStats,
 }
 
@@ -213,15 +221,18 @@ impl Driver {
             worker::execute_subquery(&cluster, &q, &sub, at, &worker_cpus[i % nw])
         });
 
-        // Gather.
+        // Gather: merge partials in sub-query (object) order, so every
+        // execution mode folds the same arithmetic sequence.
         let mut bytes_moved = 0u64;
+        let mut reads_coalesced = 0u64;
         let mut sim_finish = at;
         let mut rows: Option<Batch> = None;
         let mut agg_states: Vec<AggState> = Vec::new();
-        let mut groups: std::collections::BTreeMap<i64, AggState> = Default::default();
+        let mut groups: std::collections::BTreeMap<Vec<i64>, Vec<AggState>> = Default::default();
         for r in results {
             let r = r?;
             bytes_moved += r.bytes_moved;
+            reads_coalesced += r.reads_coalesced;
             sim_finish = sim_finish.max(r.finish);
             match r.output {
                 SubOutput::Rows(b) => match &mut rows {
@@ -241,11 +252,20 @@ impl Driver {
                     }
                 }
                 SubOutput::Groups(gs) => {
-                    for (k, s) in gs {
-                        groups
-                            .entry(k)
-                            .and_modify(|acc| acc.merge(&s))
-                            .or_insert(s);
+                    for (k, states) in gs {
+                        match groups.get_mut(&k) {
+                            Some(acc) => {
+                                if acc.len() != states.len() {
+                                    return Err(Error::Query("group partial arity mismatch".into()));
+                                }
+                                for (a, s) in acc.iter_mut().zip(&states) {
+                                    a.merge(s);
+                                }
+                            }
+                            None => {
+                                groups.insert(k, states);
+                            }
+                        }
                     }
                 }
             }
@@ -253,10 +273,14 @@ impl Driver {
 
         // Finalize. A dataset with zero objects still answers aggregate
         // queries (empty states).
-        if query.is_aggregate() && agg_states.is_empty() {
-            agg_states = vec![AggState::new(false); query.aggregates.len()];
+        if query.is_aggregate() && agg_states.is_empty() && query.group_by.is_empty() {
+            agg_states = query
+                .aggregates
+                .iter()
+                .map(|a| AggState::new(!a.func.is_algebraic()))
+                .collect();
         }
-        let aggregates: Vec<f64> = if query.group_by.is_none() {
+        let aggregates: Vec<f64> = if query.group_by.is_empty() && query.is_aggregate() {
             query
                 .aggregates
                 .iter()
@@ -266,29 +290,41 @@ impl Driver {
         } else {
             Vec::new()
         };
-        let group_out = if query.group_by.is_some() {
-            let func = query.aggregates[0].func;
-            Some(
-                groups
-                    .into_iter()
-                    .map(|(k, s)| s.finalize(func).map(|v| (k, v)))
-                    .collect::<Result<Vec<_>>>()?,
-            )
+        let group_out = if !query.group_by.is_empty() {
+            let mut out = Vec::with_capacity(groups.len());
+            for (k, states) in groups {
+                if states.len() != query.aggregates.len() {
+                    return Err(Error::Query("group partial arity mismatch".into()));
+                }
+                let vals = query
+                    .aggregates
+                    .iter()
+                    .zip(&states)
+                    .map(|(a, s)| s.finalize(a.func))
+                    .collect::<Result<Vec<f64>>>()?;
+                out.push((k, vals));
+            }
+            // Merge-side limit over the key-ordered group rows.
+            if let Some(n) = query.limit {
+                out.truncate(n);
+            }
+            Some(out)
         } else {
             None
         };
 
         // Row queries always return a batch — when every sub-query was
         // pruned (or the dataset has zero objects), synthesize an empty
-        // batch with the projected schema so pruned and unpruned
-        // executions are indistinguishable to callers.
+        // batch with the carried schema so pruned and unpruned executions
+        // are indistinguishable to callers. Then run the merge-side
+        // stages: final sort, limit/truncate, final projection.
         let rows = if query.is_aggregate() {
             None
         } else {
-            Some(match rows {
+            let mut batch = match rows {
                 Some(b) => b,
                 None => {
-                    let schema = match &query.projection {
+                    let schema = match query.carry_columns() {
                         Some(cols) => {
                             let refs: Vec<&str> = cols.iter().map(String::as_str).collect();
                             plan.schema.project(&refs)?
@@ -297,7 +333,25 @@ impl Driver {
                     };
                     Batch::empty(&schema)
                 }
-            })
+            };
+            if !query.sort_keys.is_empty() {
+                batch = sort_rows(&batch, &query.sort_keys)?;
+            }
+            if let Some(n) = query.limit {
+                if batch.nrows() > n {
+                    batch = batch.slice(0, n)?;
+                }
+            }
+            // Final projection only when the partials carried extra sort
+            // keys — otherwise they already hold exactly the projected
+            // columns and re-projecting would just deep-clone the result.
+            if let Some(p) = &query.projection {
+                if query.sort_keys.iter().any(|k| !p.contains(&k.col)) {
+                    let refs: Vec<&str> = p.iter().map(String::as_str).collect();
+                    batch = batch.project(&refs)?;
+                }
+            }
+            Some(batch)
         };
 
         let pushdown = plan.mode == ExecMode::Pushdown;
@@ -312,39 +366,100 @@ impl Driver {
                 objects,
                 objects_pruned: plan.objects_pruned,
                 bytes_skipped: plan.bytes_skipped,
+                reads_coalesced,
                 pushdown,
             },
         })
+    }
+
+    /// Plan a query against the live dataset metadata and render the
+    /// staged pipeline (per-operator offload sides) without executing it
+    /// — the CLI's EXPLAIN.
+    pub fn explain(&self, query: &Query, force_mode: Option<ExecMode>) -> Result<String> {
+        let (meta, _) = metadata::load_meta(&self.cluster, 0.0, &query.dataset)?;
+        Ok(plan_opts(query, &meta, force_mode, true)?.explain())
     }
 
     /// Approximate quantile via the §3.2 de-composable approximation:
     /// each object returns a constant-size mergeable sketch, the driver
     /// merges and interpolates. Returns (value, worst-case abs error,
     /// stats). Compare with the exact (holistic) `AggFunc::Median` path,
-    /// which ships every filtered value.
+    /// which ships every filtered value. Zone-map pruning is applied on
+    /// the sketch path exactly like scan/agg/group: provably-dead row
+    /// groups are dropped before any request is issued.
     pub fn approx_quantile(
         &self,
         dataset: &str,
         column: &str,
         q: f64,
-        predicate: &super::query::Predicate,
+        predicate: &Predicate,
+    ) -> Result<(f64, f64, QueryStats)> {
+        self.approx_quantile_opts(dataset, column, q, predicate, true)
+    }
+
+    /// [`Driver::approx_quantile`] with zone-map pruning optionally
+    /// disabled — the unpruned baseline for the sketch path (mirrors
+    /// [`Driver::execute_opts`]).
+    pub fn approx_quantile_opts(
+        &self,
+        dataset: &str,
+        column: &str,
+        q: f64,
+        predicate: &Predicate,
+        prune: bool,
     ) -> Result<(f64, f64, QueryStats)> {
         use super::sketch::QuantileSketch;
         let wall = Instant::now();
         let at = self.cluster.clock.now();
         let (meta, _) = metadata::load_meta(&self.cluster, at, dataset)?;
+        let DatasetMeta::Table {
+            schema, row_groups, ..
+        } = &meta
+        else {
+            return Err(Error::Query(format!(
+                "{dataset} is an array dataset; table query expected"
+            )));
+        };
+        // Fail fast on unknown columns, identically with and without
+        // pruning (a fully pruned fan-out must not hide the error).
+        schema.col_index(column)?;
+        for c in predicate.columns() {
+            schema.col_index(c)?;
+        }
+        // Error parity: a string-typed predicate column fails during
+        // evaluation, so pruning is disabled for it — the handlers run
+        // and report the error the usual way.
+        let dtype_of = |name: &str| schema.col_index(name).ok().map(|i| schema.col(i).dtype);
+        let evaluable = !predicate
+            .columns()
+            .into_iter()
+            .any(|c| dtype_of(c) == Some(DType::Str));
+        let prune = prune && evaluable;
         let names = meta.object_names(dataset);
-        let objects = names.len();
+        let mut objects_pruned = 0usize;
+        let mut bytes_skipped = 0u64;
+        let mut survivors = Vec::with_capacity(names.len());
+        for (i, obj) in names.into_iter().enumerate() {
+            let rg = &row_groups[i];
+            if prune && group_prunes(predicate, schema, rg) {
+                objects_pruned += 1;
+                bytes_skipped += rg.bytes;
+                continue;
+            }
+            survivors.push(obj);
+        }
+        let objects = survivors.len();
         let cluster = Arc::clone(&self.cluster);
         let input = {
             let mut w = crate::util::bytes::ByteWriter::new();
             predicate.encode_into(&mut w);
             w.str(column);
-            w.u8(1); // zone-map short-circuit allowed
+            // Server-side zone-map short-circuit follows the same switch.
+            w.u8(prune as u8);
             w.finish()
         };
         let results: Vec<Result<(QuantileSketch, u64, f64)>> =
-            self.pool.map(names, move |obj| {
+            self.pool.map(survivors, move |obj| {
                 let t = cluster.call(at, &obj, "skyhook", "quantile_sketch", &input)?;
                 let mut r = crate::util::bytes::ByteReader::new(&t.value);
                 let sketch = QuantileSketch::decode_from(&mut r)?;
@@ -368,6 +483,8 @@ impl Driver {
                 sim_seconds: sim_finish - at,
                 wall_seconds: wall.elapsed().as_secs_f64(),
                 objects,
+                objects_pruned,
+                bytes_skipped,
                 pushdown: true,
                 ..Default::default()
             },
@@ -666,16 +783,175 @@ mod tests {
             .aggregate(AggFunc::Count, "val");
         let r = d.execute(&q, None).unwrap();
         let groups = r.groups.unwrap();
-        let total: f64 = groups.iter().map(|(_, v)| v).sum();
+        let total: f64 = groups.iter().map(|(_, v)| v[0]).sum();
         assert_eq!(total, 2000.0);
         // Direct group count for one key.
         let keys = match b.col("sensor").unwrap() {
             crate::dataset::table::Column::I64(v) => v.clone(),
             _ => unreachable!(),
         };
-        let k0 = groups[0].0;
+        let k0 = groups[0].0[0];
         let want = keys.iter().filter(|&&k| k == k0).count() as f64;
-        assert_eq!(groups[0].1, want);
+        assert_eq!(groups[0].1[0], want);
+    }
+
+    #[test]
+    fn multi_key_multi_agg_group_by_all_modes() {
+        let d = driver(4, 4);
+        // Larger row groups so grouped partials amortize: the per-object
+        // partial is O(groups), the client baseline O(rows).
+        let b = gen::sensor_table(3000, 99);
+        d.write_table(
+            "sensors",
+            &b,
+            Layout::Col,
+            &PartitionSpec::with_target(64 * 1024),
+            None,
+        )
+        .unwrap();
+        let q = Query::scan("sensors")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 40.0))
+            .group("sensor")
+            .group("flag")
+            .aggregate(AggFunc::Count, "val")
+            .aggregate(AggFunc::Sum, "val")
+            .aggregate(AggFunc::Max, "val");
+        let rp = d.execute(&q, Some(ExecMode::Pushdown)).unwrap();
+        let rc = d.execute(&q, Some(ExecMode::ClientSide)).unwrap();
+        let rd = d.execute(&q, None).unwrap();
+        let (gp, gc, gd) = (
+            rp.groups.unwrap(),
+            rc.groups.unwrap(),
+            rd.groups.unwrap(),
+        );
+        assert_eq!(gp, gc);
+        assert_eq!(gp, gd);
+        assert!(!gp.is_empty());
+        assert!(gp.iter().all(|(k, v)| k.len() == 2 && v.len() == 3));
+        // Keys sorted lexicographically and unique.
+        for w in gp.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+        // Direct totals.
+        let mask = q.predicate.eval(&b).unwrap();
+        let want = mask.iter().filter(|&&m| m).count() as f64;
+        let total: f64 = gp.iter().map(|(_, v)| v[0]).sum();
+        assert_eq!(total, want);
+        // Grouped pushdown still moves only partials.
+        assert!(rp.stats.bytes_moved < rc.stats.bytes_moved);
+    }
+
+    #[test]
+    fn sort_limit_topk_all_modes_agree() {
+        let d = driver(4, 4);
+        let b = seed(&d, 3000);
+        // Sorted row query (no limit): total order over the merge.
+        let sq = Query::scan("sensors")
+            .filter(Predicate::cmp("flag", CmpOp::Eq, 1.0))
+            .select(&["ts", "val"])
+            .sort_desc("val");
+        let rp = d.execute(&sq, Some(ExecMode::Pushdown)).unwrap().rows.unwrap();
+        let rc = d.execute(&sq, Some(ExecMode::ClientSide)).unwrap().rows.unwrap();
+        assert_eq!(rp, rc);
+        let crate::dataset::table::Column::F32(v) = rp.col("val").unwrap() else {
+            unreachable!()
+        };
+        assert!(v.windows(2).all(|w| w[0] >= w[1]));
+
+        // Top-k with the sort key outside the projection: final schema
+        // drops it after the merge-side sort.
+        let tq = Query::scan("sensors").select(&["ts"]).top_k("val", true, 25);
+        let tp = d.execute(&tq, Some(ExecMode::Pushdown)).unwrap();
+        let tc = d.execute(&tq, Some(ExecMode::ClientSide)).unwrap();
+        let td = d.execute(&tq, None).unwrap();
+        let (bp, bc, bd) = (
+            tp.rows.unwrap(),
+            tc.rows.unwrap(),
+            td.rows.unwrap(),
+        );
+        assert_eq!(bp, bc);
+        assert_eq!(bp, bd);
+        assert_eq!(bp.nrows(), 25);
+        assert_eq!(bp.ncols(), 1);
+        assert_eq!(bp.schema.columns[0].name, "ts");
+        // Direct check: ts rows of the 25 largest vals.
+        let crate::dataset::table::Column::F32(all) = b.col("val").unwrap() else {
+            unreachable!()
+        };
+        let mut idx: Vec<usize> = (0..all.len()).collect();
+        idx.sort_by(|&x, &y| all[y].partial_cmp(&all[x]).unwrap());
+        let want: std::collections::BTreeSet<i64> = idx[..25].iter().map(|&i| i as i64).collect();
+        let crate::dataset::table::Column::I64(got_ts) = bp.col("ts").unwrap() else {
+            unreachable!()
+        };
+        let got: std::collections::BTreeSet<i64> = got_ts.iter().copied().collect();
+        assert_eq!(got, want);
+        // Per-object truncation makes top-k pushdown move far fewer
+        // bytes than the client-side execution of the same plan.
+        assert!(
+            tp.stats.bytes_moved * 5 < tc.stats.bytes_moved,
+            "topk pushdown {} vs client {}",
+            tp.stats.bytes_moved,
+            tc.stats.bytes_moved
+        );
+
+        // Plain limit (no sort): deterministic prefix in object order —
+        // first n rows of the dataset, every mode.
+        let lq = Query::scan("sensors").select(&["ts"]).limit(40);
+        let lp = d.execute(&lq, Some(ExecMode::Pushdown)).unwrap().rows.unwrap();
+        let lc = d.execute(&lq, Some(ExecMode::ClientSide)).unwrap().rows.unwrap();
+        assert_eq!(lp, lc);
+        assert_eq!(lp.nrows(), 40);
+        let crate::dataset::table::Column::I64(ts) = lp.col("ts").unwrap() else {
+            unreachable!()
+        };
+        assert!(ts.iter().enumerate().all(|(i, &t)| t == i as i64));
+    }
+
+    #[test]
+    fn client_side_scans_report_coalesced_reads() {
+        let d = driver(4, 4);
+        // Objects must outgrow the 64 KiB header prefix for ranged reads
+        // (and hence coalescing) to happen at all.
+        let b = gen::sensor_table(50_000, 7);
+        d.write_table(
+            "sensors",
+            &b,
+            Layout::Col,
+            &PartitionSpec::with_target(512 * 1024),
+            None,
+        )
+        .unwrap();
+        // ts+sensor are adjacent columns in the schema: their extents
+        // coalesce into one ranged read per (large enough) object.
+        let q = Query::scan("sensors")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 50.0))
+            .select(&["ts", "sensor"]);
+        let rc = d.execute(&q, Some(ExecMode::ClientSide)).unwrap();
+        assert!(
+            rc.stats.reads_coalesced > 0,
+            "no coalescing observed: {:?}",
+            rc.stats
+        );
+        // Pushdown coalesces on the device; the client stat stays zero.
+        let rp = d.execute(&q, Some(ExecMode::Pushdown)).unwrap();
+        assert_eq!(rp.stats.reads_coalesced, 0);
+        assert_eq!(rp.rows.unwrap(), rc.rows.unwrap());
+    }
+
+    #[test]
+    fn explain_renders_staged_pipeline() {
+        let d = driver(3, 2);
+        seed(&d, 1000);
+        let q = Query::scan("sensors")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 50.0))
+            .select(&["ts"])
+            .top_k("val", true, 5);
+        let e = d.explain(&q, None).unwrap();
+        assert!(e.contains("[server] filter"));
+        assert!(e.contains("partial top-5"));
+        assert!(e.contains("[client] sort"));
+        assert!(d.explain(&Query::scan("ghost"), None).is_err());
     }
 
     #[test]
@@ -724,6 +1000,37 @@ mod tests {
         assert!(d
             .approx_quantile("ghost", "val", 0.5, &Predicate::True)
             .is_err());
+    }
+
+    #[test]
+    fn approx_quantile_prunes_like_scan_paths() {
+        let d = driver(4, 4);
+        seed(&d, 20_000);
+        // ts is sorted 0..20000: a narrow range prunes most row groups
+        // before any sketch request is issued.
+        let pred = Predicate::cmp("ts", CmpOp::Lt, 500.0);
+        let (vp, bp, sp) = d.approx_quantile("sensors", "val", 0.5, &pred).unwrap();
+        let (vu, bu, su) = d
+            .approx_quantile_opts("sensors", "val", 0.5, &pred, false)
+            .unwrap();
+        assert!(sp.objects_pruned > 0, "nothing pruned");
+        assert!(sp.bytes_skipped > 0);
+        assert_eq!(su.objects_pruned, 0);
+        assert!(sp.objects < su.objects);
+        assert!(sp.bytes_moved < su.bytes_moved);
+        // Pruned partials are empty sketches (merge identities): the
+        // answer and its error bound are bit-identical.
+        assert_eq!(vp, vu);
+        assert_eq!(bp, bu);
+        // A provably dead predicate yields an empty merged sketch — the
+        // same error with and without pruning.
+        let dead = Predicate::cmp("ts", CmpOp::Ge, 1e12);
+        assert!(d.approx_quantile("sensors", "val", 0.5, &dead).is_err());
+        assert!(d
+            .approx_quantile_opts("sensors", "val", 0.5, &dead, false)
+            .is_err());
+        // Unknown columns fail fast even when every group would prune.
+        assert!(d.approx_quantile("sensors", "nope", 0.5, &dead).is_err());
     }
 
     #[test]

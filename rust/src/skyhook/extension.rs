@@ -3,6 +3,13 @@
 //! filter / aggregate, group-by partials, and an omap-backed secondary
 //! index (the RocksDB-based "remote indexing system").
 //!
+//! `skyhook.exec` is the chained-pipeline entry point: it decodes one
+//! [`PipelineSpec`] (filter → carry-projection → multi-aggregate /
+//! multi-key grouped partials, or per-object top-k/head) and executes
+//! the whole operator chain in a single pass over the object — one call,
+//! one read set, one result. The single-operator handlers (`scan`,
+//! `agg`, `group_agg`) remain for compatibility and direct use.
+//!
 //! Every scan-shaped handler first consults the object's `skyhook.zonemap`
 //! xattr: if the stamped per-column min/max statistics prove the predicate
 //! matches zero rows, the handler answers with an empty result without
@@ -14,6 +21,7 @@
 //! `skyhook.agg` executes on it — the paper's storage-side compute
 //! offload running the very kernel the L1/L2 layers compiled.
 
+use super::logical::{grouped_partials, sort_rows, top_k_rows, PipelineSpec};
 use super::query::{AggState, Aggregate, Predicate};
 use crate::dataset::layout::{self, decode_batch, encode_batch, Layout, RangeSource};
 use crate::dataset::metadata::{ZoneMap, ZONE_MAP_XATTR};
@@ -28,6 +36,8 @@ use std::sync::Arc;
 const ROW_PRED_COST: f64 = 10e-9;
 /// Per-value CPU cost of aggregation in the extension (seconds).
 const VAL_AGG_COST: f64 = 4e-9;
+/// Per-row CPU cost of the per-object partial sort (seconds).
+const SORT_ROW_COST: f64 = 8e-9;
 
 /// Storage-side compute engine for the masked filter+aggregate hot spot.
 /// Implemented by `runtime::PjrtEngine` (the AOT JAX/Pallas kernel); the
@@ -152,6 +162,55 @@ pub fn decode_group_out(out: &[u8]) -> Result<Vec<(i64, AggState)>> {
     Ok(groups)
 }
 
+/// What one `skyhook.exec` invocation produced, after decoding.
+#[derive(Debug)]
+pub enum ExecOut {
+    /// Row partial (filtered, carry-projected, optionally per-object
+    /// sorted/truncated), as a Col batch.
+    Rows(Batch),
+    /// Scalar aggregate partials, one per requested aggregate.
+    Aggs(Vec<AggState>),
+    /// Grouped partials: multi-column i64 key → one state per aggregate.
+    Groups(Vec<(Vec<i64>, Vec<AggState>)>),
+}
+
+/// Decode a `skyhook.exec` result. `nkeys`/`naggs` come from the
+/// [`PipelineSpec`] the caller sent.
+pub fn decode_exec_out(out: &[u8], nkeys: usize, naggs: usize) -> Result<ExecOut> {
+    let Some((&tag, rest)) = out.split_first() else {
+        return Err(Error::Corrupt("empty exec output".into()));
+    };
+    match tag {
+        0 => Ok(ExecOut::Rows(decode_batch(rest)?.0)),
+        1 => {
+            let mut r = ByteReader::new(rest);
+            let mut states = Vec::with_capacity(naggs);
+            for _ in 0..naggs {
+                states.push(AggState::decode_from(&mut r)?);
+            }
+            Ok(ExecOut::Aggs(states))
+        }
+        2 => {
+            let mut r = ByteReader::new(rest);
+            let n = r.u32()? as usize;
+            let mut groups = Vec::with_capacity(n);
+            for _ in 0..n {
+                let mut key = Vec::with_capacity(nkeys);
+                for _ in 0..nkeys {
+                    key.push(r.i64()?);
+                }
+                let mut states = Vec::with_capacity(naggs);
+                for _ in 0..naggs {
+                    states.push(AggState::decode_from(&mut r)?);
+                }
+                groups.push((key, states));
+            }
+            Ok(ExecOut::Groups(groups))
+        }
+        o => Err(Error::Corrupt(format!("bad exec output tag {o}"))),
+    }
+}
+
 /// Order-preserving big-endian encoding of i64 (for omap index keys).
 pub fn index_key_i64(x: i64) -> [u8; 8] {
     ((x as u64) ^ (1u64 << 63)).to_be_bytes()
@@ -206,11 +265,61 @@ fn zone_map_prune(b: &mut dyn ClsBackend, pred: &Predicate) -> Option<TableSchem
             return None;
         }
     }
-    if zm.rows == 0 || pred.prune(&|c: &str| zm.range(c)) {
+    if zm.rows == 0 || pred.prune(&|c: &str| zm.value_range(c)) {
         Some(zm.schema)
     } else {
         None
     }
+}
+
+/// The `skyhook.exec` short-circuit: synthesize the empty result of a
+/// provably-dead pipeline without reading object data, reporting the
+/// same validation errors the live path would (missing columns, string
+/// aggregates, non-i64 group keys).
+fn exec_empty_result(schema: &TableSchema, spec: &PipelineSpec) -> Result<Vec<u8>> {
+    let mut w = ByteWriter::new();
+    if !spec.aggs.is_empty() {
+        for k in &spec.keys {
+            let ki = schema.col_index(k)?;
+            if schema.col(ki).dtype != DType::I64 {
+                return Err(Error::Query("group_by needs an i64 column".into()));
+            }
+        }
+        for a in &spec.aggs {
+            let i = schema.col_index(&a.col)?;
+            // The live scalar path rejects string aggregates even over an
+            // empty mask (`update_column`); the grouped path touches the
+            // value column only per matching row, so zero matches pass.
+            if spec.keys.is_empty() && schema.col(i).dtype == DType::Str {
+                return Err(Error::Query("cannot aggregate a string column".into()));
+            }
+        }
+        if spec.keys.is_empty() {
+            w.u8(1);
+            for a in &spec.aggs {
+                AggState::new(!a.func.is_algebraic()).encode_into(&mut w);
+            }
+        } else {
+            w.u8(2);
+            w.u32(0);
+        }
+        return Ok(w.finish());
+    }
+    let schema = match &spec.projection {
+        Some(cols) => {
+            let refs: Vec<&str> = cols.iter().map(String::as_str).collect();
+            schema.project(&refs)?
+        }
+        None => schema.clone(),
+    };
+    // The live path sorts the (projected) batch, so a sort key missing
+    // from the carried schema errors there — match it.
+    for k in &spec.sort {
+        schema.col_index(&k.col)?;
+    }
+    w.u8(0);
+    w.raw(&encode_batch(&Batch::empty(&schema), Layout::Col));
+    Ok(w.finish())
 }
 
 /// Register the `skyhook` class with an optional PJRT compute engine.
@@ -247,6 +356,105 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
             None => filtered,
         };
         Ok(encode_batch(&result, Layout::Col))
+    });
+
+    // skyhook.exec — the chained operator pipeline, one pass: decode a
+    // PipelineSpec, consult the zone map, read the union of needed
+    // columns once, then filter → project → partial-aggregate (scalar or
+    // multi-key grouped) or per-object top-k/head. The offload boundary
+    // the planner chose per operator arrives as a single call.
+    let exec_engine = engine.clone();
+    r.register("skyhook", "exec", move |b, input| {
+        let spec = PipelineSpec::decode(input)?;
+        if let Some(schema) = spec
+            .zone_maps
+            .then(|| zone_map_prune(b, &spec.predicate))
+            .flatten()
+        {
+            return exec_empty_result(&schema, &spec);
+        }
+        // One read covering every column the chain touches.
+        let needed: Option<Vec<String>> = if spec.aggs.is_empty() && spec.projection.is_none() {
+            None
+        } else {
+            let mut extra: Vec<String> = Vec::new();
+            if let Some(p) = &spec.projection {
+                extra.extend(p.iter().cloned());
+            }
+            extra.extend(spec.aggs.iter().map(|a| a.col.clone()));
+            extra.extend(spec.keys.iter().cloned());
+            Some(needed_union(&spec.predicate, &extra))
+        };
+        let batch = read_needed(b, needed.as_deref())?;
+        b.charge_cpu(batch.nrows() as f64 * ROW_PRED_COST);
+        let mut mask = Vec::new();
+        spec.predicate.eval_into(&batch, &mut mask)?;
+        let mut w = ByteWriter::new();
+
+        if !spec.aggs.is_empty() && spec.keys.is_empty() {
+            // Scalar multi-aggregate partials.
+            w.u8(1);
+            for a in &spec.aggs {
+                let col = batch.col(&a.col)?;
+                let keep = !a.func.is_algebraic();
+                let mut st = AggState::new(keep);
+                match (col, &exec_engine, keep) {
+                    (Column::F32(v), Some(engine), false) => {
+                        let m = engine.masked_moments(v, &mask)?;
+                        st.count = m[0] as u64;
+                        st.sum = m[1];
+                        st.sumsq = m[2];
+                        if st.count > 0 {
+                            st.min = m[3];
+                            st.max = m[4];
+                        }
+                    }
+                    _ => {
+                        b.charge_cpu(batch.nrows() as f64 * VAL_AGG_COST);
+                        st.update_column(col, &mask)?;
+                    }
+                }
+                st.encode_into(&mut w);
+            }
+            return Ok(w.finish());
+        }
+        if !spec.aggs.is_empty() {
+            // Grouped partials over a multi-column i64 key (shared with
+            // the client-side worker so both modes fold identically).
+            b.charge_cpu(batch.nrows() as f64 * VAL_AGG_COST * spec.aggs.len() as f64);
+            let groups = grouped_partials(&batch, &mask, &spec.keys, &spec.aggs)?;
+            w.u8(2);
+            w.u32(groups.len() as u32);
+            for (key, states) in groups {
+                for k in key {
+                    w.i64(k);
+                }
+                for st in states {
+                    st.encode_into(&mut w);
+                }
+            }
+            return Ok(w.finish());
+        }
+        // Row pipeline: filter → carry-project → per-object top-k/head.
+        let filtered = batch.filter(&mask)?;
+        let mut result = match &spec.projection {
+            Some(cols) => {
+                let refs: Vec<&str> = cols.iter().map(String::as_str).collect();
+                filtered.project(&refs)?
+            }
+            None => filtered,
+        };
+        if !spec.sort.is_empty() {
+            b.charge_cpu(result.nrows() as f64 * SORT_ROW_COST * spec.sort.len() as f64);
+        }
+        result = match spec.limit {
+            Some(n) => top_k_rows(&result, &spec.sort, n as usize)?,
+            None if !spec.sort.is_empty() => sort_rows(&result, &spec.sort)?,
+            None => result,
+        };
+        w.u8(0);
+        w.raw(&encode_batch(&result, Layout::Col));
+        Ok(w.finish())
     });
 
     // skyhook.agg — filter+aggregate on the server, return partials.
@@ -738,6 +946,206 @@ mod tests {
         assert_eq!(b.data, before);
     }
 
+    fn exec_spec() -> PipelineSpec {
+        PipelineSpec {
+            predicate: Predicate::True,
+            projection: None,
+            aggs: vec![],
+            keys: vec![],
+            sort: vec![],
+            limit: None,
+            zone_maps: true,
+        }
+    }
+
+    #[test]
+    fn exec_runs_chained_row_pipeline_in_one_pass() {
+        use crate::skyhook::query::SortKey;
+        let r = registry();
+        let mut b = MemBackend::new(&table_object());
+        let spec = PipelineSpec {
+            predicate: Predicate::cmp("val", CmpOp::Gt, 40.0),
+            projection: Some(vec!["ts".to_string(), "val".to_string()]),
+            sort: vec![SortKey::desc("val")],
+            limit: Some(5),
+            ..exec_spec()
+        };
+        let out = r.get("skyhook", "exec").unwrap()(&mut b, &spec.encode()).unwrap();
+        let ExecOut::Rows(rows) = decode_exec_out(&out, 0, 0).unwrap() else {
+            panic!("expected rows");
+        };
+        assert_eq!(rows.ncols(), 2);
+        assert_eq!(rows.nrows(), 5);
+        // The per-object partial is the top 5 by val, descending.
+        let Column::F32(v) = rows.col("val").unwrap() else {
+            unreachable!()
+        };
+        assert!(v.windows(2).all(|w| w[0] >= w[1]));
+        let (orig, _) = decode_batch(&table_object()).unwrap();
+        let Column::F32(all) = orig.col("val").unwrap() else {
+            unreachable!()
+        };
+        let mut best: Vec<f32> = all.iter().copied().filter(|&x| x > 40.0).collect();
+        best.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert_eq!(v[0], best[0]);
+        assert_eq!(*v.last().unwrap(), best[4]);
+        // Head without sort keys: first n matching rows in row order.
+        let spec = PipelineSpec {
+            predicate: Predicate::True,
+            limit: Some(7),
+            ..exec_spec()
+        };
+        let out = r.get("skyhook", "exec").unwrap()(&mut b, &spec.encode()).unwrap();
+        let ExecOut::Rows(rows) = decode_exec_out(&out, 0, 0).unwrap() else {
+            panic!("expected rows");
+        };
+        assert_eq!(rows.nrows(), 7);
+        assert_eq!(rows, orig.slice(0, 7).unwrap());
+    }
+
+    #[test]
+    fn exec_multi_aggregate_partials_match_single_op_handlers() {
+        let r = registry();
+        let mut b = MemBackend::new(&table_object());
+        let pred = Predicate::cmp("val", CmpOp::Gt, 50.0);
+        let spec = PipelineSpec {
+            predicate: pred.clone(),
+            aggs: vec![
+                Aggregate::new(AggFunc::Count, "val"),
+                Aggregate::new(AggFunc::Sum, "val"),
+                Aggregate::new(AggFunc::Median, "ts"),
+            ],
+            ..exec_spec()
+        };
+        let out = r.get("skyhook", "exec").unwrap()(&mut b, &spec.encode()).unwrap();
+        let ExecOut::Aggs(states) = decode_exec_out(&out, 0, 3).unwrap() else {
+            panic!("expected aggs");
+        };
+        assert_eq!(states.len(), 3);
+        // Algebraic partials stay constant-size; the holistic median
+        // ships its values.
+        assert!(states[0].values.is_none());
+        assert!(states[2].values.is_some());
+        let (orig, _) = decode_batch(&table_object()).unwrap();
+        let mask = pred.eval(&orig).unwrap();
+        let mut direct = AggState::new(false);
+        direct.update_column(orig.col("val").unwrap(), &mask).unwrap();
+        assert_eq!(states[0].count, direct.count);
+        assert!((states[1].sum - direct.sum).abs() < 1e-6);
+        assert_eq!(
+            states[2].values.as_ref().unwrap().len(),
+            direct.count as usize
+        );
+    }
+
+    #[test]
+    fn exec_multi_key_group_partials() {
+        let r = registry();
+        let mut b = MemBackend::new(&table_object());
+        let spec = PipelineSpec {
+            predicate: Predicate::True,
+            aggs: vec![
+                Aggregate::new(AggFunc::Count, "val"),
+                Aggregate::new(AggFunc::Sum, "val"),
+            ],
+            keys: vec!["sensor".to_string(), "flag".to_string()],
+            ..exec_spec()
+        };
+        let out = r.get("skyhook", "exec").unwrap()(&mut b, &spec.encode()).unwrap();
+        let ExecOut::Groups(groups) = decode_exec_out(&out, 2, 2).unwrap() else {
+            panic!("expected groups");
+        };
+        assert!(!groups.is_empty());
+        let total: u64 = groups.iter().map(|(_, s)| s[0].count).sum();
+        assert_eq!(total, 200);
+        // Keys are 2-wide, sorted, unique; both aggregates agree on count.
+        for w in groups.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+        for (key, states) in &groups {
+            assert_eq!(key.len(), 2);
+            assert_eq!(states[0].count, states[1].count);
+        }
+        // Non-i64 key errors.
+        let bad = PipelineSpec {
+            keys: vec!["val".to_string()],
+            aggs: vec![Aggregate::new(AggFunc::Count, "val")],
+            ..exec_spec()
+        };
+        assert!(r.get("skyhook", "exec").unwrap()(&mut b, &bad.encode()).is_err());
+    }
+
+    #[test]
+    fn exec_zone_map_short_circuits_like_single_ops() {
+        use crate::skyhook::query::SortKey;
+        let r = registry();
+        let batch = gen::sensor_table(200, 7);
+        let mut b = MemBackend::new(&encode_batch(&batch, Layout::Col));
+        b.setxattr(ZONE_MAP_XATTR, &ZoneMap::from_batch(&batch).encode());
+        b.data = vec![0xff; 16]; // destroy data: only short-circuits survive
+        let dead = Predicate::cmp("val", CmpOp::Gt, 10_000.0);
+        // Dead row pipeline: empty batch with the carried schema.
+        let spec = PipelineSpec {
+            predicate: dead.clone(),
+            projection: Some(vec!["ts".to_string(), "val".to_string()]),
+            sort: vec![SortKey::desc("val")],
+            limit: Some(3),
+            ..exec_spec()
+        };
+        let out = r.get("skyhook", "exec").unwrap()(&mut b, &spec.encode()).unwrap();
+        let ExecOut::Rows(rows) = decode_exec_out(&out, 0, 0).unwrap() else {
+            panic!("expected rows");
+        };
+        assert_eq!(rows.nrows(), 0);
+        assert_eq!(rows.ncols(), 2);
+        // Dead aggregates: empty states / zero groups, same arity.
+        let spec = PipelineSpec {
+            predicate: dead.clone(),
+            aggs: vec![
+                Aggregate::new(AggFunc::Sum, "val"),
+                Aggregate::new(AggFunc::Median, "val"),
+            ],
+            ..exec_spec()
+        };
+        let out = r.get("skyhook", "exec").unwrap()(&mut b, &spec.encode()).unwrap();
+        let ExecOut::Aggs(states) = decode_exec_out(&out, 0, 2).unwrap() else {
+            panic!("expected aggs");
+        };
+        assert_eq!(states[0].count, 0);
+        assert!(states[1].values.is_some(), "holistic keeps (empty) values");
+        let spec = PipelineSpec {
+            predicate: dead.clone(),
+            aggs: vec![Aggregate::new(AggFunc::Count, "val")],
+            keys: vec!["sensor".to_string(), "flag".to_string()],
+            ..exec_spec()
+        };
+        let out = r.get("skyhook", "exec").unwrap()(&mut b, &spec.encode()).unwrap();
+        let ExecOut::Groups(groups) = decode_exec_out(&out, 2, 1).unwrap() else {
+            panic!("expected groups");
+        };
+        assert!(groups.is_empty());
+        // Error parity on the pruned path: ghost columns still fail.
+        let bad = PipelineSpec {
+            predicate: dead.clone(),
+            aggs: vec![Aggregate::new(AggFunc::Sum, "nope")],
+            ..exec_spec()
+        };
+        assert!(r.get("skyhook", "exec").unwrap()(&mut b, &bad.encode()).is_err());
+        // A live predicate must go to the (destroyed) data and fail.
+        let live = PipelineSpec {
+            predicate: Predicate::cmp("val", CmpOp::Gt, 0.0),
+            ..exec_spec()
+        };
+        assert!(r.get("skyhook", "exec").unwrap()(&mut b, &live.encode()).is_err());
+        // Zone maps disabled in the spec: even a dead predicate reads.
+        let unpruned = PipelineSpec {
+            predicate: dead,
+            zone_maps: false,
+            ..exec_spec()
+        };
+        assert!(r.get("skyhook", "exec").unwrap()(&mut b, &unpruned.encode()).is_err());
+    }
+
     #[test]
     fn pjrt_hook_is_used_when_present() {
         struct FakeEngine(std::sync::atomic::AtomicU64);
@@ -766,5 +1174,21 @@ mod tests {
         let states = decode_agg_out(&out).unwrap();
         assert_eq!(states[0].count, 200);
         assert_eq!(engine.0.load(std::sync::atomic::Ordering::SeqCst), 1);
+        // The chained-pipeline handler shares the same kernel hot path.
+        let spec = PipelineSpec {
+            predicate: Predicate::True,
+            projection: None,
+            aggs: vec![Aggregate::new(AggFunc::Mean, "val")],
+            keys: vec![],
+            sort: vec![],
+            limit: None,
+            zone_maps: true,
+        };
+        let out = r.get("skyhook", "exec").unwrap()(&mut b, &spec.encode()).unwrap();
+        let ExecOut::Aggs(states) = decode_exec_out(&out, 0, 1).unwrap() else {
+            panic!("expected aggs");
+        };
+        assert_eq!(states[0].count, 200);
+        assert_eq!(engine.0.load(std::sync::atomic::Ordering::SeqCst), 2);
     }
 }

@@ -1,0 +1,822 @@
+//! The logical-plan IR: dataset access operations as a composable
+//! operator tree (§3.2 "Composability of Access Operations").
+//!
+//! A [`LogicalPlan`] is a chain of operators over a `Scan` leaf —
+//! `Filter`, `Project`, `Aggregate` (any number of aggregate expressions
+//! over any number of i64 group keys), `Sort`, `Limit`, and the fused
+//! `TopK`. The fluent [`Query`] builder constructs the same shape
+//! directly; [`LogicalPlan::to_query`] validates an arbitrary tree into
+//! that flat form (rejecting shapes the engine cannot run, e.g. a filter
+//! over aggregate output), and [`Query::logical`] lifts a query back
+//! into the tree.
+//!
+//! The planner (`skyhook::plan`) compiles the IR into a staged
+//! `QueryPlan`: the operators up to and including the per-object
+//! partials ([`PipelineSpec`]) are encoded once onto the wire and
+//! executed server-side in a single pass by the `skyhook.exec` object
+//! class; the merge-side operators (partial merge, final sort, limit,
+//! finalization) run at the driver. The offload boundary is chosen per
+//! operator, not per query.
+
+use super::query::{AggFunc, AggState, Aggregate, Predicate, Query, SortKey};
+use crate::dataset::table::{Batch, Column};
+use crate::error::{Error, Result};
+use crate::util::bytes::{ByteReader, ByteWriter};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A logical operator tree over one dataset.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LogicalPlan {
+    /// Leaf: read a table dataset.
+    Scan { dataset: String },
+    /// Keep rows matching a predicate.
+    Filter {
+        input: Box<LogicalPlan>,
+        predicate: Predicate,
+    },
+    /// Keep only the named columns.
+    Project {
+        input: Box<LogicalPlan>,
+        columns: Vec<String>,
+    },
+    /// Aggregate expressions over optional group keys (empty = scalar).
+    Aggregate {
+        input: Box<LogicalPlan>,
+        aggs: Vec<Aggregate>,
+        keys: Vec<String>,
+    },
+    /// Total order over the rows.
+    Sort {
+        input: Box<LogicalPlan>,
+        keys: Vec<SortKey>,
+    },
+    /// Keep the first `n` rows (or group rows, over aggregate output).
+    Limit { input: Box<LogicalPlan>, n: usize },
+    /// Fused Sort+Limit: the best `n` rows under `keys` — the operator
+    /// the planner offloads as per-object partial top-k.
+    TopK {
+        input: Box<LogicalPlan>,
+        keys: Vec<SortKey>,
+        n: usize,
+    },
+}
+
+impl LogicalPlan {
+    /// Leaf constructor.
+    pub fn scan(dataset: &str) -> LogicalPlan {
+        LogicalPlan::Scan {
+            dataset: dataset.to_string(),
+        }
+    }
+
+    pub fn filter(self, predicate: Predicate) -> LogicalPlan {
+        LogicalPlan::Filter {
+            input: Box::new(self),
+            predicate,
+        }
+    }
+
+    pub fn project(self, columns: &[&str]) -> LogicalPlan {
+        LogicalPlan::Project {
+            input: Box::new(self),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    pub fn aggregate(self, aggs: Vec<Aggregate>, keys: &[&str]) -> LogicalPlan {
+        LogicalPlan::Aggregate {
+            input: Box::new(self),
+            aggs,
+            keys: keys.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    pub fn sort(self, keys: Vec<SortKey>) -> LogicalPlan {
+        LogicalPlan::Sort {
+            input: Box::new(self),
+            keys,
+        }
+    }
+
+    pub fn limit(self, n: usize) -> LogicalPlan {
+        LogicalPlan::Limit {
+            input: Box::new(self),
+            n,
+        }
+    }
+
+    pub fn top_k(self, keys: Vec<SortKey>, n: usize) -> LogicalPlan {
+        LogicalPlan::TopK {
+            input: Box::new(self),
+            keys,
+            n,
+        }
+    }
+
+    /// The operator below this one (`None` for the scan leaf).
+    fn input(&self) -> Option<&LogicalPlan> {
+        match self {
+            LogicalPlan::Scan { .. } => None,
+            LogicalPlan::Filter { input, .. }
+            | LogicalPlan::Project { input, .. }
+            | LogicalPlan::Aggregate { input, .. }
+            | LogicalPlan::Sort { input, .. }
+            | LogicalPlan::Limit { input, .. }
+            | LogicalPlan::TopK { input, .. } => Some(input),
+        }
+    }
+
+    /// One-line description of this node (no inputs).
+    fn describe(&self) -> String {
+        match self {
+            LogicalPlan::Scan { dataset } => format!("Scan {dataset}"),
+            LogicalPlan::Filter { predicate, .. } => format!("Filter {predicate}"),
+            LogicalPlan::Project { columns, .. } => {
+                format!("Project [{}]", columns.join(", "))
+            }
+            LogicalPlan::Aggregate { aggs, keys, .. } => {
+                let a: Vec<String> = aggs.iter().map(|x| x.to_string()).collect();
+                if keys.is_empty() {
+                    format!("Aggregate [{}]", a.join(", "))
+                } else {
+                    format!("Aggregate [{}] by [{}]", a.join(", "), keys.join(", "))
+                }
+            }
+            LogicalPlan::Sort { keys, .. } => {
+                let k: Vec<String> = keys.iter().map(|x| x.to_string()).collect();
+                format!("Sort [{}]", k.join(", "))
+            }
+            LogicalPlan::Limit { n, .. } => format!("Limit {n}"),
+            LogicalPlan::TopK { keys, n, .. } => {
+                let k: Vec<String> = keys.iter().map(|x| x.to_string()).collect();
+                format!("TopK {n} by [{}]", k.join(", "))
+            }
+        }
+    }
+
+    /// Render the operator tree top-down with indentation — the logical
+    /// half of `QueryPlan::explain`.
+    pub fn explain_tree(&self) -> String {
+        let mut nodes = Vec::new();
+        let mut cur = Some(self);
+        while let Some(op) = cur {
+            nodes.push(op.describe());
+            cur = op.input();
+        }
+        let mut out = String::new();
+        for (depth, line) in nodes.iter().enumerate() {
+            for _ in 0..depth {
+                out.push_str("  ");
+            }
+            let _ = writeln!(out, "{line}");
+        }
+        out
+    }
+
+    /// Validate and flatten the tree into a [`Query`].
+    ///
+    /// Accepted shape (bottom-up): one `Scan`, any number of `Filter`s
+    /// (AND-merged) below the first non-filter operator, at most one
+    /// `Project`, at most one `Aggregate`, then `Sort`/`Limit` (or the
+    /// fused `TopK`) on top. Anything else — a filter or projection over
+    /// aggregate output, a sort above a limit, duplicated operators — is
+    /// rejected with a query error rather than silently reordered.
+    pub fn to_query(&self) -> Result<Query> {
+        // Walk down to the leaf collecting the chain, then fold bottom-up.
+        let mut chain = Vec::new();
+        let mut cur = self;
+        loop {
+            chain.push(cur);
+            match cur.input() {
+                Some(next) => cur = next,
+                None => break,
+            }
+        }
+        let Some(LogicalPlan::Scan { dataset }) = chain.pop() else {
+            return Err(Error::Query("plan must bottom out in a Scan".into()));
+        };
+        let mut q = Query::scan(dataset);
+        let mut has_filter = false;
+        let mut has_agg = false;
+        let mut has_sort = false;
+        let mut has_limit = false;
+        for op in chain.into_iter().rev() {
+            match op {
+                LogicalPlan::Scan { .. } => {
+                    return Err(Error::Query("Scan above the leaf".into()));
+                }
+                LogicalPlan::Filter { predicate, .. } => {
+                    if has_agg {
+                        return Err(Error::Query(
+                            "Filter over aggregate output is not supported".into(),
+                        ));
+                    }
+                    if has_sort || has_limit {
+                        return Err(Error::Query(
+                            "Filter must precede Sort/Limit".into(),
+                        ));
+                    }
+                    q.predicate = if has_filter {
+                        std::mem::replace(&mut q.predicate, Predicate::True)
+                            .and(predicate.clone())
+                    } else {
+                        predicate.clone()
+                    };
+                    has_filter = true;
+                }
+                LogicalPlan::Project { columns, .. } => {
+                    if has_agg {
+                        return Err(Error::Query(
+                            "Project over aggregate output is not supported".into(),
+                        ));
+                    }
+                    if q.projection.is_some() {
+                        return Err(Error::Query("multiple Project operators".into()));
+                    }
+                    if has_sort || has_limit {
+                        return Err(Error::Query(
+                            "Project must precede Sort/Limit".into(),
+                        ));
+                    }
+                    q.projection = Some(columns.clone());
+                }
+                LogicalPlan::Aggregate { aggs, keys, .. } => {
+                    if has_agg {
+                        return Err(Error::Query("multiple Aggregate operators".into()));
+                    }
+                    if has_sort || has_limit {
+                        return Err(Error::Query(
+                            "Aggregate must precede Sort/Limit".into(),
+                        ));
+                    }
+                    if q.projection.is_some() {
+                        return Err(Error::Query(
+                            "Project below Aggregate is redundant; aggregate columns name their inputs"
+                                .into(),
+                        ));
+                    }
+                    if aggs.is_empty() {
+                        return Err(Error::Query("Aggregate with no expressions".into()));
+                    }
+                    q.aggregates = aggs.clone();
+                    q.group_by = keys.clone();
+                    has_agg = true;
+                }
+                LogicalPlan::Sort { keys, .. } => {
+                    if has_agg {
+                        // Group output is already key-ordered; arbitrary
+                        // sorts over aggregate rows are not supported.
+                        return Err(Error::Query(
+                            "Sort over aggregate output is not supported".into(),
+                        ));
+                    }
+                    if has_sort {
+                        return Err(Error::Query("multiple Sort operators".into()));
+                    }
+                    if has_limit {
+                        // limit-then-sort has different semantics than the
+                        // sort-then-limit the engine runs.
+                        return Err(Error::Query("Sort above Limit is not supported".into()));
+                    }
+                    if keys.is_empty() {
+                        return Err(Error::Query("Sort with no keys".into()));
+                    }
+                    q.sort_keys = keys.clone();
+                    has_sort = true;
+                }
+                LogicalPlan::Limit { n, .. } => {
+                    if has_limit {
+                        return Err(Error::Query("multiple Limit operators".into()));
+                    }
+                    q.limit = Some(*n);
+                    has_limit = true;
+                }
+                LogicalPlan::TopK { keys, n, .. } => {
+                    if has_agg {
+                        return Err(Error::Query(
+                            "TopK over aggregate output is not supported".into(),
+                        ));
+                    }
+                    if has_sort || has_limit {
+                        return Err(Error::Query(
+                            "TopK combined with Sort/Limit is not supported".into(),
+                        ));
+                    }
+                    if keys.is_empty() {
+                        return Err(Error::Query("TopK with no keys".into()));
+                    }
+                    q.sort_keys = keys.clone();
+                    q.limit = Some(*n);
+                    has_sort = true;
+                    has_limit = true;
+                }
+            }
+        }
+        Ok(q)
+    }
+}
+
+impl Query {
+    /// Lift the flat query into the operator-tree IR (inverse of
+    /// [`LogicalPlan::to_query`] on accepted shapes).
+    pub fn logical(&self) -> LogicalPlan {
+        let mut plan = LogicalPlan::scan(&self.dataset);
+        if self.predicate != Predicate::True {
+            plan = plan.filter(self.predicate.clone());
+        }
+        if self.is_aggregate() {
+            let keys: Vec<&str> = self.group_by.iter().map(String::as_str).collect();
+            plan = plan.aggregate(self.aggregates.clone(), &keys);
+        } else if let Some(p) = &self.projection {
+            let cols: Vec<&str> = p.iter().map(String::as_str).collect();
+            plan = plan.project(&cols);
+        }
+        match (&self.sort_keys[..], self.limit) {
+            ([], None) => {}
+            ([], Some(n)) => plan = plan.limit(n),
+            (keys, None) => plan = plan.sort(keys.to_vec()),
+            (keys, Some(n)) => plan = plan.top_k(keys.to_vec(), n),
+        }
+        plan
+    }
+}
+
+// ---- the wire form of the server-side stage --------------------------------
+
+/// The chained operator pipeline one storage server executes in a single
+/// pass over one object (`skyhook.exec`): filter → project/carry →
+/// partial aggregate (scalar or grouped) or partial top-k/head. Encoded
+/// once per sub-query; every field after the predicate describes work
+/// the server does *so the client does not have to move the bytes*.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PipelineSpec {
+    pub predicate: Predicate,
+    /// Columns row-query partials must carry (projection ∪ sort keys);
+    /// `None` = all columns.
+    pub projection: Option<Vec<String>>,
+    /// Aggregate expressions (empty = row query). Holistic functions
+    /// make the server ship raw values back for exact finalization.
+    pub aggs: Vec<Aggregate>,
+    /// Group-by key columns (i64); meaningful only with `aggs`.
+    pub keys: Vec<String>,
+    /// Per-object pre-sort for partial top-k (row queries with a limit).
+    pub sort: Vec<SortKey>,
+    /// Per-object row cap (head(n) without `sort`, top-k with it).
+    pub limit: Option<u64>,
+    /// May the handler consult the object's zone-map xattr?
+    pub zone_maps: bool,
+}
+
+impl PipelineSpec {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        self.predicate.encode_into(&mut w);
+        match &self.projection {
+            Some(cols) => {
+                w.u8(1);
+                w.u32(cols.len() as u32);
+                for c in cols {
+                    w.str(c);
+                }
+            }
+            None => {
+                w.u8(0);
+            }
+        }
+        w.u32(self.aggs.len() as u32);
+        for a in &self.aggs {
+            w.str(&a.col);
+            w.u8(a.func.code());
+        }
+        w.u32(self.keys.len() as u32);
+        for k in &self.keys {
+            w.str(k);
+        }
+        w.u32(self.sort.len() as u32);
+        for s in &self.sort {
+            s.encode_into(&mut w);
+        }
+        match self.limit {
+            Some(n) => {
+                w.u8(1);
+                w.u64(n);
+            }
+            None => {
+                w.u8(0);
+            }
+        }
+        w.u8(self.zone_maps as u8);
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<PipelineSpec> {
+        let mut r = ByteReader::new(buf);
+        let predicate = Predicate::decode_from(&mut r)?;
+        let projection = match r.u8()? {
+            0 => None,
+            1 => {
+                let n = r.u32()? as usize;
+                let mut cols = Vec::with_capacity(n);
+                for _ in 0..n {
+                    cols.push(r.str()?.to_string());
+                }
+                Some(cols)
+            }
+            o => return Err(Error::Corrupt(format!("bad projection tag {o}"))),
+        };
+        let n = r.u32()? as usize;
+        let mut aggs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let col = r.str()?.to_string();
+            let func = AggFunc::from_code(r.u8()?)?;
+            aggs.push(Aggregate { func, col });
+        }
+        let n = r.u32()? as usize;
+        let mut keys = Vec::with_capacity(n);
+        for _ in 0..n {
+            keys.push(r.str()?.to_string());
+        }
+        let n = r.u32()? as usize;
+        let mut sort = Vec::with_capacity(n);
+        for _ in 0..n {
+            sort.push(SortKey::decode_from(&mut r)?);
+        }
+        let limit = match r.u8()? {
+            0 => None,
+            1 => Some(r.u64()?),
+            o => return Err(Error::Corrupt(format!("bad limit tag {o}"))),
+        };
+        let zone_maps = r.u8()? != 0;
+        Ok(PipelineSpec {
+            predicate,
+            projection,
+            aggs,
+            keys,
+            sort,
+            limit,
+            zone_maps,
+        })
+    }
+
+    /// Does any aggregate need raw values shipped back (holistic
+    /// finalization at the driver)?
+    pub fn any_holistic(&self) -> bool {
+        self.aggs.iter().any(|a| !a.func.is_algebraic())
+    }
+}
+
+// ---- shared row ordering ---------------------------------------------------
+
+/// One extracted sort-key column: floats compared with `total_cmp` (NaN
+/// sorts after +inf, deterministically in every execution mode), i64
+/// natively (no f64 widening — values beyond 2^53 must keep their
+/// order), strings lexicographically.
+enum KeyVals<'a> {
+    Num(Vec<f64>),
+    Int(&'a [i64]),
+    Str(&'a [String]),
+}
+
+/// Stable sort of a batch's rows by `keys`. Shared by the storage-side
+/// partial top-k (`skyhook.exec`) and the driver's merge-side sort, so
+/// pushed-down and client-side executions order rows identically.
+pub fn sort_rows(batch: &Batch, keys: &[SortKey]) -> Result<Batch> {
+    // Resolve keys first: a missing sort column errors regardless of row
+    // count, so error behavior never depends on how many rows matched.
+    let mut cols = Vec::with_capacity(keys.len());
+    for k in keys {
+        let kv = match batch.col(&k.col)? {
+            Column::Str(v) => KeyVals::Str(v),
+            Column::F32(v) => KeyVals::Num(v.iter().map(|&x| x as f64).collect()),
+            Column::F64(v) => KeyVals::Num(v.clone()),
+            Column::I64(v) => KeyVals::Int(v),
+        };
+        cols.push((kv, k.desc));
+    }
+    if cols.is_empty() || batch.nrows() <= 1 {
+        return Ok(batch.clone());
+    }
+    let mut idx: Vec<usize> = (0..batch.nrows()).collect();
+    idx.sort_by(|&a, &b| {
+        for (kv, desc) in &cols {
+            let o = match kv {
+                KeyVals::Num(v) => v[a].total_cmp(&v[b]),
+                KeyVals::Int(v) => v[a].cmp(&v[b]),
+                KeyVals::Str(v) => v[a].cmp(&v[b]),
+            };
+            let o = if *desc { o.reverse() } else { o };
+            if o != std::cmp::Ordering::Equal {
+                return o;
+            }
+        }
+        std::cmp::Ordering::Equal
+    });
+    batch.take(&idx)
+}
+
+/// Sort by `keys` and keep the first `n` rows — the per-object partial
+/// of the TopK operator (with empty `keys`: plain head(n)).
+pub fn top_k_rows(batch: &Batch, keys: &[SortKey], n: usize) -> Result<Batch> {
+    let sorted = sort_rows(batch, keys)?;
+    if sorted.nrows() > n {
+        sorted.slice(0, n)
+    } else {
+        Ok(sorted)
+    }
+}
+
+/// Grouped multi-aggregate partials over a masked batch: multi-column
+/// i64 key → one [`AggState`] per aggregate, sorted by key. Shared by
+/// the storage-side `skyhook.exec` handler and the client-side worker,
+/// so both execution modes fold the exact same arithmetic sequence and
+/// produce bit-identical partials. The per-row key is probed through a
+/// reused scratch buffer; an owned key is allocated only on the first
+/// row of a new group.
+pub fn grouped_partials(
+    batch: &Batch,
+    mask: &[bool],
+    keys: &[String],
+    aggs: &[Aggregate],
+) -> Result<Vec<(Vec<i64>, Vec<AggState>)>> {
+    let mut keycols: Vec<&[i64]> = Vec::with_capacity(keys.len());
+    for k in keys {
+        match batch.col(k)? {
+            Column::I64(v) => keycols.push(v),
+            _ => return Err(Error::Query("group_by needs an i64 column".into())),
+        }
+    }
+    let valcols: Vec<&Column> = aggs
+        .iter()
+        .map(|a| batch.col(&a.col))
+        .collect::<Result<_>>()?;
+    let mut groups: BTreeMap<Vec<i64>, Vec<AggState>> = BTreeMap::new();
+    let mut scratch: Vec<i64> = Vec::with_capacity(keys.len());
+    for (i, &keep) in mask.iter().enumerate() {
+        if !keep {
+            continue;
+        }
+        scratch.clear();
+        scratch.extend(keycols.iter().map(|k| k[i]));
+        if !groups.contains_key(scratch.as_slice()) {
+            groups.insert(
+                scratch.clone(),
+                aggs.iter()
+                    .map(|a| AggState::new(!a.func.is_algebraic()))
+                    .collect(),
+            );
+        }
+        let states = groups
+            .get_mut(scratch.as_slice())
+            .expect("group inserted above");
+        for (st, col) in states.iter_mut().zip(&valcols) {
+            st.update(col.get_f64(i)?);
+        }
+    }
+    Ok(groups.into_iter().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::table::gen;
+    use crate::dataset::{DType, TableSchema};
+    use crate::skyhook::query::CmpOp;
+
+    #[test]
+    fn builder_chain_flattens_to_query() {
+        let lp = LogicalPlan::scan("t")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 10.0))
+            .filter(Predicate::cmp("ts", CmpOp::Lt, 100.0))
+            .project(&["ts", "val"])
+            .sort(vec![SortKey::desc("val")])
+            .limit(5);
+        let q = lp.to_query().unwrap();
+        assert_eq!(q.dataset, "t");
+        // Two filters AND-merge in order.
+        assert_eq!(
+            q.predicate,
+            Predicate::cmp("val", CmpOp::Gt, 10.0).and(Predicate::cmp("ts", CmpOp::Lt, 100.0))
+        );
+        assert_eq!(
+            q.projection,
+            Some(vec!["ts".to_string(), "val".to_string()])
+        );
+        assert_eq!(q.sort_keys, vec![SortKey::desc("val")]);
+        assert_eq!(q.limit, Some(5));
+        // And the round trip through Query::logical is the identity on
+        // the flat form (filters already merged → single Filter node).
+        assert_eq!(q.logical().to_query().unwrap(), q);
+    }
+
+    #[test]
+    fn aggregate_chain_and_top_k() {
+        let lp = LogicalPlan::scan("t")
+            .filter(Predicate::cmp("flag", CmpOp::Eq, 0.0))
+            .aggregate(
+                vec![
+                    Aggregate::new(AggFunc::Sum, "val"),
+                    Aggregate::new(AggFunc::Count, "val"),
+                ],
+                &["sensor", "flag"],
+            );
+        let q = lp.to_query().unwrap();
+        assert_eq!(q.aggregates.len(), 2);
+        assert_eq!(q.group_by, vec!["sensor", "flag"]);
+        assert_eq!(q.logical().to_query().unwrap(), q);
+
+        let topk = LogicalPlan::scan("t").top_k(vec![SortKey::desc("val")], 3);
+        let q = topk.to_query().unwrap();
+        assert_eq!(q.sort_keys, vec![SortKey::desc("val")]);
+        assert_eq!(q.limit, Some(3));
+        assert_eq!(q.logical().to_query().unwrap(), q);
+    }
+
+    #[test]
+    fn illegal_shapes_are_rejected() {
+        let agg = LogicalPlan::scan("t").aggregate(vec![Aggregate::new(AggFunc::Sum, "v")], &[]);
+        assert!(agg
+            .clone()
+            .filter(Predicate::cmp("v", CmpOp::Gt, 0.0))
+            .to_query()
+            .is_err());
+        assert!(agg.clone().project(&["v"]).to_query().is_err());
+        assert!(agg
+            .clone()
+            .aggregate(vec![Aggregate::new(AggFunc::Sum, "v")], &[])
+            .to_query()
+            .is_err());
+        assert!(agg.clone().sort(vec![SortKey::asc("v")]).to_query().is_err());
+        // Limit over aggregate output is shape-valid in the IR (it
+        // truncates group rows; the planner rejects it for scalar
+        // aggregates, where there is nothing to truncate).
+        assert!(agg.limit(3).to_query().is_ok());
+        let grouped = LogicalPlan::scan("t")
+            .aggregate(vec![Aggregate::new(AggFunc::Sum, "v")], &["k"])
+            .limit(3)
+            .to_query()
+            .unwrap();
+        assert_eq!(grouped.limit, Some(3));
+        // Sort above limit flips semantics → rejected.
+        assert!(LogicalPlan::scan("t")
+            .limit(3)
+            .sort(vec![SortKey::asc("v")])
+            .to_query()
+            .is_err());
+        // Empty sorts/aggregates and duplicate projections.
+        assert!(LogicalPlan::scan("t").sort(vec![]).to_query().is_err());
+        assert!(LogicalPlan::scan("t")
+            .aggregate(vec![], &[])
+            .to_query()
+            .is_err());
+        assert!(LogicalPlan::scan("t")
+            .project(&["a"])
+            .project(&["a"])
+            .to_query()
+            .is_err());
+    }
+
+    #[test]
+    fn explain_tree_lists_operators_top_down() {
+        let lp = LogicalPlan::scan("t")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 10.0))
+            .project(&["ts", "val"])
+            .top_k(vec![SortKey::desc("val")], 8);
+        let text = lp.explain_tree();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("TopK 8"));
+        assert!(lines[1].trim_start().starts_with("Project"));
+        assert!(lines[2].trim_start().starts_with("Filter"));
+        assert!(lines[3].trim_start().starts_with("Scan t"));
+    }
+
+    #[test]
+    fn pipeline_spec_wire_roundtrip() {
+        let spec = PipelineSpec {
+            predicate: Predicate::cmp("val", CmpOp::Gt, 1.5)
+                .and(Predicate::cmp("ts", CmpOp::Ne, 0.0)),
+            projection: Some(vec!["ts".to_string(), "val".to_string()]),
+            aggs: vec![
+                Aggregate::new(AggFunc::Mean, "val"),
+                Aggregate::new(AggFunc::Median, "val"),
+            ],
+            keys: vec!["sensor".to_string(), "flag".to_string()],
+            sort: vec![SortKey::desc("val"), SortKey::asc("ts")],
+            limit: Some(17),
+            zone_maps: true,
+        };
+        let dec = PipelineSpec::decode(&spec.encode()).unwrap();
+        assert_eq!(dec, spec);
+        assert!(dec.any_holistic());
+        let plain = PipelineSpec {
+            predicate: Predicate::True,
+            projection: None,
+            aggs: vec![],
+            keys: vec![],
+            sort: vec![],
+            limit: None,
+            zone_maps: false,
+        };
+        assert_eq!(PipelineSpec::decode(&plain.encode()).unwrap(), plain);
+        assert!(!plain.any_holistic());
+        assert!(PipelineSpec::decode(b"\xff\xff").is_err());
+    }
+
+    #[test]
+    fn sort_rows_orders_and_is_stable() {
+        let b = Batch::new(
+            TableSchema::new(&[("k", DType::I64), ("v", DType::F32), ("s", DType::Str)]),
+            vec![
+                Column::I64(vec![2, 1, 2, 1]),
+                Column::F32(vec![10.0, 20.0, 30.0, 20.0]),
+                Column::Str(vec!["b".into(), "a".into(), "c".into(), "d".into()]),
+            ],
+        )
+        .unwrap();
+        let s = sort_rows(&b, &[SortKey::asc("k")]).unwrap();
+        assert_eq!(s.col("k").unwrap(), &Column::I64(vec![1, 1, 2, 2]));
+        // Stability: equal keys keep original order.
+        assert_eq!(
+            s.col("s").unwrap(),
+            &Column::Str(vec!["a".into(), "d".into(), "b".into(), "c".into()])
+        );
+        // Secondary key + descending.
+        let s = sort_rows(&b, &[SortKey::asc("k"), SortKey::desc("v")]).unwrap();
+        assert_eq!(s.col("v").unwrap(), &Column::F32(vec![20.0, 20.0, 30.0, 10.0]));
+        // String sort.
+        let s = sort_rows(&b, &[SortKey::desc("s")]).unwrap();
+        assert_eq!(
+            s.col("s").unwrap(),
+            &Column::Str(vec!["d".into(), "c".into(), "b".into(), "a".into()])
+        );
+        // Missing column errors — even on empty or single-row batches.
+        assert!(sort_rows(&b, &[SortKey::asc("ghost")]).is_err());
+        let empty = Batch::empty(&b.schema);
+        assert!(sort_rows(&empty, &[SortKey::asc("ghost")]).is_err());
+        assert!(top_k_rows(&empty, &[SortKey::asc("k")], 3).unwrap().nrows() == 0);
+    }
+
+    #[test]
+    fn sort_rows_i64_keys_beyond_f64_precision() {
+        // Adjacent nanosecond-scale timestamps collapse to the same f64;
+        // i64 keys must compare natively.
+        let base = 1_700_000_000_000_000_000i64; // > 2^53
+        let b = Batch::new(
+            TableSchema::new(&[("ts", DType::I64)]),
+            vec![Column::I64(vec![base + 2, base + 1, base + 3, base])],
+        )
+        .unwrap();
+        let s = sort_rows(&b, &[SortKey::asc("ts")]).unwrap();
+        assert_eq!(
+            s.col("ts").unwrap(),
+            &Column::I64(vec![base, base + 1, base + 2, base + 3])
+        );
+        let t = top_k_rows(&b, &[SortKey::desc("ts")], 2).unwrap();
+        assert_eq!(
+            t.col("ts").unwrap(),
+            &Column::I64(vec![base + 3, base + 2])
+        );
+    }
+
+    #[test]
+    fn sort_rows_total_order_on_nan() {
+        let b = Batch::new(
+            TableSchema::new(&[("v", DType::F32)]),
+            vec![Column::F32(vec![f32::NAN, 1.0, -2.0, f32::NAN, 0.5])],
+        )
+        .unwrap();
+        let s = sort_rows(&b, &[SortKey::asc("v")]).unwrap();
+        let Column::F32(v) = s.col("v").unwrap() else {
+            unreachable!()
+        };
+        assert_eq!(&v[..3], &[-2.0, 0.5, 1.0]);
+        assert!(v[3].is_nan() && v[4].is_nan());
+        // Deterministic: sorting twice gives bit-identical output.
+        let s2 = sort_rows(&b, &[SortKey::asc("v")]).unwrap();
+        let Column::F32(v2) = s2.col("v").unwrap() else {
+            unreachable!()
+        };
+        assert_eq!(
+            v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            v2.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn top_k_rows_truncates_after_sort() {
+        let b = gen::sensor_table(100, 5);
+        let t = top_k_rows(&b, &[SortKey::desc("val")], 10).unwrap();
+        assert_eq!(t.nrows(), 10);
+        let Column::F32(v) = t.col("val").unwrap() else {
+            unreachable!()
+        };
+        assert!(v.windows(2).all(|w| w[0] >= w[1]));
+        // n larger than the batch: everything, still sorted.
+        let t = top_k_rows(&b, &[SortKey::asc("ts")], 500).unwrap();
+        assert_eq!(t.nrows(), 100);
+        // Head without keys preserves row order.
+        let h = top_k_rows(&b, &[], 7).unwrap();
+        assert_eq!(h, b.slice(0, 7).unwrap());
+    }
+}

@@ -1,15 +1,21 @@
 //! The SkyhookDM-like query layer (§4.2): driver/worker scheduling over
 //! the object store, with storage-side extensions for pushdown.
 //!
-//! - [`query`] — predicates, projections, aggregates + partial algebra
-//! - [`plan`] — decomposability analysis and pushdown planning
-//! - [`extension`] — the Skyhook-Extension object class (server-side)
+//! - [`query`] — predicates, sort keys, aggregates + partial algebra,
+//!   and the fluent flat [`Query`] builder
+//! - [`logical`] — the [`LogicalPlan`] operator-tree IR and the
+//!   [`PipelineSpec`] wire form of the server-side stage block
+//! - [`plan`] — decomposability analysis and per-operator pushdown
+//!   planning into a staged [`QueryPlan`]
+//! - [`extension`] — the Skyhook-Extension object class (server-side),
+//!   including the single-pass `skyhook.exec` pipeline handler
 //! - [`worker`] — per-sub-query execution (pushdown or client-side)
-//! - [`driver`] — scheduling, result aggregation, write path, physical
-//!   design transforms
+//! - [`driver`] — scheduling, partial merging, merge-side sort/limit,
+//!   write path, physical design transforms
 
 pub mod driver;
 pub mod extension;
+pub mod logical;
 pub mod parse;
 pub mod plan;
 pub mod query;
@@ -18,6 +24,7 @@ pub mod worker;
 
 pub use driver::{Driver, QueryResult, QueryStats, WriteReport};
 pub use extension::{register_skyhook_class, ChunkCompute};
-pub use plan::{plan, plan_opts, ExecMode, QueryPlan, SubQuery};
-pub use query::{AggFunc, AggState, Aggregate, CmpOp, Predicate, Query};
+pub use logical::{sort_rows, top_k_rows, LogicalPlan, PipelineSpec};
+pub use plan::{plan, plan_logical, plan_opts, ExecMode, PlanStage, QueryPlan, SubQuery};
+pub use query::{AggFunc, AggState, Aggregate, CmpOp, Predicate, Query, SortKey};
 pub use sketch::QuantileSketch;

@@ -2,10 +2,20 @@
 //!
 //! - predicates: `val > 50`, `flag == 1 && val <= 3.5`, `!(a < 2) || b != 0`
 //! - aggregates: `mean:val`, `count:*` (any column), `median:val`
+//! - sort specs: `val desc`, `sensor, ts desc`
+//! - pipelines: stages separated by `|`, assembled into a
+//!   [`LogicalPlan`] and validated by [`LogicalPlan::to_query`]:
+//!
+//!   ```text
+//!   filter val > 50 | select ts,val | sort val desc | limit 10
+//!   filter flag == 0 | agg sum:val,count:val | by sensor,flag
+//!   topk 10 val desc
+//!   ```
 //!
 //! Grammar (precedence low→high): `||`, `&&`, `!`, comparison, parens.
 
-use super::query::{AggFunc, Aggregate, CmpOp, Predicate};
+use super::logical::LogicalPlan;
+use super::query::{AggFunc, Aggregate, CmpOp, Predicate, Query, SortKey};
 use crate::error::{Error, Result};
 
 /// Parse a predicate expression.
@@ -43,6 +53,141 @@ pub fn parse_aggregate(s: &str) -> Result<Aggregate> {
         return Err(Error::Query("empty aggregate column".into()));
     }
     Ok(Aggregate::new(func, col))
+}
+
+/// Parse a sort spec: comma-separated `col [asc|desc]` keys.
+pub fn parse_sort(s: &str) -> Result<Vec<SortKey>> {
+    let mut keys = Vec::new();
+    for part in s.split(',') {
+        let mut it = part.split_whitespace();
+        let Some(col) = it.next() else {
+            return Err(Error::Query(format!("empty sort key in {s:?}")));
+        };
+        let key = match it.next() {
+            None | Some("asc") => SortKey::asc(col),
+            Some("desc") => SortKey::desc(col),
+            Some(o) => {
+                return Err(Error::Query(format!(
+                    "sort direction must be asc|desc, got {o:?}"
+                )))
+            }
+        };
+        if let Some(extra) = it.next() {
+            return Err(Error::Query(format!("trailing sort token {extra:?}")));
+        }
+        keys.push(key);
+    }
+    Ok(keys)
+}
+
+/// Parse a `|`-separated pipeline into a query over `dataset`.
+///
+/// Stages: `filter EXPR`, `select C1,C2`, `agg F:COL[,F:COL...]`,
+/// `by C1,C2` (immediately after `agg`), `sort SPEC`, `limit N`,
+/// `topk N SPEC`. The text assembles a [`LogicalPlan`] operator chain in
+/// written order, so illegal compositions (filter after agg, sort above
+/// limit, …) fail with the IR's validation errors.
+pub fn parse_pipeline(dataset: &str, s: &str) -> Result<Query> {
+    enum Stage {
+        Filter(Predicate),
+        Select(Vec<String>),
+        Agg(Vec<Aggregate>),
+        By(Vec<String>),
+        Sort(Vec<SortKey>),
+        Limit(usize),
+        TopK(usize, Vec<SortKey>),
+    }
+    let mut stages = Vec::new();
+    for chunk in s.split('|') {
+        let chunk = chunk.trim();
+        let (op, rest) = match chunk.split_once(char::is_whitespace) {
+            Some((op, rest)) => (op, rest.trim()),
+            None => (chunk, ""),
+        };
+        let split_names = |rest: &str| -> Vec<String> {
+            rest.split(',')
+                .map(|c| c.trim().to_string())
+                .filter(|c| !c.is_empty())
+                .collect()
+        };
+        stages.push(match op {
+            "filter" => Stage::Filter(parse_predicate(rest)?),
+            "select" => {
+                let cols = split_names(rest);
+                if cols.is_empty() {
+                    return Err(Error::Query("select needs columns".into()));
+                }
+                Stage::Select(cols)
+            }
+            "agg" => {
+                let aggs = rest
+                    .split(',')
+                    .map(parse_aggregate)
+                    .collect::<Result<Vec<_>>>()?;
+                Stage::Agg(aggs)
+            }
+            "by" => {
+                let keys = split_names(rest);
+                if keys.is_empty() {
+                    return Err(Error::Query("by needs key columns".into()));
+                }
+                Stage::By(keys)
+            }
+            "sort" => Stage::Sort(parse_sort(rest)?),
+            "limit" => Stage::Limit(
+                rest.parse()
+                    .map_err(|_| Error::Query(format!("bad limit {rest:?}")))?,
+            ),
+            "topk" => {
+                let (n, spec) = match rest.split_once(char::is_whitespace) {
+                    Some((n, spec)) => (n, spec.trim()),
+                    None => (rest, ""),
+                };
+                let n = n
+                    .parse()
+                    .map_err(|_| Error::Query(format!("bad topk count {n:?}")))?;
+                if spec.is_empty() {
+                    return Err(Error::Query("topk needs a sort spec".into()));
+                }
+                Stage::TopK(n, parse_sort(spec)?)
+            }
+            other => {
+                return Err(Error::Query(format!(
+                    "unknown pipeline stage {other:?} (filter|select|agg|by|sort|limit|topk)"
+                )))
+            }
+        });
+    }
+    let mut plan = LogicalPlan::scan(dataset);
+    let mut i = 0;
+    while i < stages.len() {
+        match &stages[i] {
+            Stage::Filter(p) => plan = plan.filter(p.clone()),
+            Stage::Select(cols) => {
+                let refs: Vec<&str> = cols.iter().map(String::as_str).collect();
+                plan = plan.project(&refs);
+            }
+            Stage::Agg(aggs) => {
+                let keys: Vec<String> = match stages.get(i + 1) {
+                    Some(Stage::By(k)) => {
+                        i += 1;
+                        k.clone()
+                    }
+                    _ => Vec::new(),
+                };
+                let refs: Vec<&str> = keys.iter().map(String::as_str).collect();
+                plan = plan.aggregate(aggs.clone(), &refs);
+            }
+            Stage::By(_) => {
+                return Err(Error::Query("`by` must directly follow `agg`".into()));
+            }
+            Stage::Sort(keys) => plan = plan.sort(keys.clone()),
+            Stage::Limit(n) => plan = plan.limit(*n),
+            Stage::TopK(n, keys) => plan = plan.top_k(keys.clone(), *n),
+        }
+        i += 1;
+    }
+    plan.to_query()
 }
 
 struct Parser<'a> {
@@ -249,6 +394,52 @@ mod tests {
             .eval(&b)
             .unwrap();
         assert_eq!(mask, direct);
+    }
+
+    #[test]
+    fn sort_specs() {
+        assert_eq!(parse_sort("val").unwrap(), vec![SortKey::asc("val")]);
+        assert_eq!(
+            parse_sort("val desc, ts").unwrap(),
+            vec![SortKey::desc("val"), SortKey::asc("ts")]
+        );
+        assert_eq!(
+            parse_sort("a asc,b desc").unwrap(),
+            vec![SortKey::asc("a"), SortKey::desc("b")]
+        );
+        assert!(parse_sort("").is_err());
+        assert!(parse_sort("val up").is_err());
+        assert!(parse_sort("val desc extra").is_err());
+    }
+
+    #[test]
+    fn pipelines() {
+        let q = parse_pipeline(
+            "t",
+            "filter val > 50 | select ts,val | sort val desc | limit 10",
+        )
+        .unwrap();
+        assert_eq!(
+            q,
+            Query::scan("t")
+                .filter(Predicate::cmp("val", CmpOp::Gt, 50.0))
+                .select(&["ts", "val"])
+                .sort_desc("val")
+                .limit(10)
+        );
+        let q = parse_pipeline("t", "filter flag == 0 | agg sum:val,count:val | by sensor,flag")
+            .unwrap();
+        assert_eq!(q.aggregates.len(), 2);
+        assert_eq!(q.group_by, vec!["sensor", "flag"]);
+        let q = parse_pipeline("t", "topk 5 val desc").unwrap();
+        assert_eq!(q, Query::scan("t").top_k("val", true, 5));
+        // Illegal compositions surface the IR validation errors.
+        assert!(parse_pipeline("t", "agg sum:val | filter val > 1").is_err());
+        assert!(parse_pipeline("t", "limit 3 | sort val").is_err());
+        assert!(parse_pipeline("t", "by sensor").is_err());
+        assert!(parse_pipeline("t", "frobnicate 3").is_err());
+        assert!(parse_pipeline("t", "topk 5").is_err());
+        assert!(parse_pipeline("t", "limit many").is_err());
     }
 
     #[test]

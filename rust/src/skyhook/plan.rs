@@ -1,34 +1,55 @@
-//! Query planning: decomposability analysis, pushdown decisions
-//! (§3.2 "Composability of Access Operations"), and zone-map pruning.
+//! Query planning: decomposability analysis, per-operator pushdown
+//! decisions (§3.2 "Composability of Access Operations"), and zone-map
+//! pruning.
 //!
-//! A query is decomposed into one sub-query per row-group object. Before
-//! anything is dispatched, the planner consults the per-group zone maps
-//! recorded in [`RowGroupMeta::stats`]: a sub-query whose predicate
-//! provably matches zero rows of its group ([`Predicate::prune`]) is
-//! dropped *before any I/O is issued* — the request never reaches a
-//! storage server. For the sub-queries that survive, the planner decides
-//! *where* each sub-operation runs:
+//! A [`LogicalPlan`] (or its flat [`Query`] form) compiles into a staged
+//! [`QueryPlan`]. Before anything is dispatched, the planner consults
+//! the per-group zone maps recorded in [`RowGroupMeta::stats`]: a
+//! sub-query whose predicate provably matches zero rows of its group
+//! ([`Predicate::prune`]) is dropped *before any I/O is issued* — the
+//! request never reaches a storage server. For the sub-queries that
+//! survive, the planner chooses *where each operator runs* and records
+//! the choice per stage:
 //!
-//! - **Pushdown**: filter/project/aggregate execute in the Skyhook-
-//!   Extension on the OSD; only results cross the network. Algebraic
-//!   aggregates return constant-size partials; holistic ones (median)
-//!   must ship the filtered raw values back.
-//! - **ClientSide**: the worker reads the object (projected columns
-//!   only, on columnar layouts) and computes locally — the baseline the
-//!   paper improves on.
+//! - **Pushdown** stages (filter, carry-projection, partial aggregate /
+//!   grouped partials, per-object top-k or head) execute in the Skyhook-
+//!   Extension on the OSD as one chained pipeline ([`PipelineSpec`],
+//!   encoded once, executed in a single pass by `skyhook.exec`); only
+//!   partials cross the network. Algebraic aggregates return
+//!   constant-size partials; holistic ones (median) ship the filtered
+//!   raw values back.
+//! - **ClientSide** stages (partial merge, the final sort, the final
+//!   limit/truncate, finalization, final projection) run at the driver
+//!   over the merged partials — they need cross-object context and
+//!   cannot decompose.
+//!
+//! `force_mode = ClientSide` moves every movable stage to the client
+//! (the baseline the paper improves on); the merge-side stages are
+//! client-side by nature in either mode.
 
+use super::logical::{LogicalPlan, PipelineSpec};
 use super::query::{Predicate, Query};
 use crate::dataset::metadata::{DatasetMeta, RowGroupMeta};
 use crate::dataset::{DType, Layout, TableSchema};
 use crate::error::{Error, Result};
+use std::fmt::Write as _;
 
-/// Where a sub-query executes.
+/// Where a stage (or a whole sub-query) executes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExecMode {
     /// Object-class extension on the storage server.
     Pushdown,
     /// Worker reads the object and computes client-side.
     ClientSide,
+}
+
+/// One operator stage of a compiled plan, tagged with where it runs —
+/// the per-operator offload boundary made visible (and testable).
+#[derive(Clone, Debug)]
+pub struct PlanStage {
+    /// Human-readable operator description.
+    pub op: String,
+    pub mode: ExecMode,
 }
 
 /// One per-object sub-query.
@@ -59,6 +80,12 @@ pub struct QueryPlan {
     /// Execution mode of every sub-query (kept here too so it stays
     /// known when pruning drops all of them).
     pub mode: ExecMode,
+    /// The operator pipeline each surviving sub-query runs, in stage
+    /// order with its chosen offload side.
+    pub stages: Vec<PlanStage>,
+    /// The server-side stage block, encoded once per sub-query and
+    /// executed in a single pass by `skyhook.exec`.
+    pub pipeline: PipelineSpec,
     pub subqueries: Vec<SubQuery>,
     /// True if every aggregate decomposes into constant-size partials.
     pub decomposable: bool,
@@ -70,11 +97,12 @@ pub struct QueryPlan {
 }
 
 impl QueryPlan {
-    /// Human-readable planning summary (for the CLI's EXPLAIN).
+    /// Human-readable planning summary (the CLI's EXPLAIN): a headline
+    /// plus one line per stage with its offload side.
     pub fn explain(&self) -> String {
         let mode = format!("{:?}", self.mode);
-        format!(
-            "{} over {} objects ({} pruned), mode={}, decomposable={}, keep_values={}",
+        let mut out = format!(
+            "{} over {} objects ({} pruned), mode={}, decomposable={}, keep_values={}\n",
             if self.query.is_aggregate() {
                 "aggregate"
             } else {
@@ -85,7 +113,15 @@ impl QueryPlan {
             mode,
             self.decomposable,
             self.subqueries.first().map(|s| s.keep_values).unwrap_or(false),
-        )
+        );
+        for s in &self.stages {
+            let side = match s.mode {
+                ExecMode::Pushdown => "server",
+                ExecMode::ClientSide => "client",
+            };
+            let _ = writeln!(out, "  [{side}] {}", s.op);
+        }
+        out
     }
 }
 
@@ -96,6 +132,15 @@ impl QueryPlan {
 /// compare pushdown against client-side execution on identical queries).
 pub fn plan(query: &Query, meta: &DatasetMeta, force_mode: Option<ExecMode>) -> Result<QueryPlan> {
     plan_opts(query, meta, force_mode, true)
+}
+
+/// Compile a [`LogicalPlan`] operator tree (validating its shape first).
+pub fn plan_logical(
+    lp: &LogicalPlan,
+    meta: &DatasetMeta,
+    force_mode: Option<ExecMode>,
+) -> Result<QueryPlan> {
+    plan_opts(&lp.to_query()?, meta, force_mode, true)
 }
 
 /// [`plan`] with zone-map pruning optionally disabled (`prune = false`),
@@ -127,9 +172,27 @@ pub fn plan_opts(
     for col in query.needed_columns(&all) {
         schema.col_index(&col)?;
     }
-    if query.group_by.is_some() && query.aggregates.len() != 1 {
+    // Sort keys hide inside "all columns" for unprojected row queries —
+    // validate them explicitly so a ghost key fails at the driver.
+    for k in &query.sort_keys {
+        schema.col_index(&k.col)?;
+    }
+    if !query.group_by.is_empty() && query.aggregates.is_empty() {
         return Err(Error::Query(
-            "group_by requires exactly one aggregate".into(),
+            "group_by requires at least one aggregate".into(),
+        ));
+    }
+    if query.is_aggregate() && !query.sort_keys.is_empty() {
+        return Err(Error::Query(
+            "sort over aggregate output is not supported".into(),
+        ));
+    }
+    // Limit truncates the key-ordered group rows; over a scalar
+    // aggregate it has nothing to act on, so reject it instead of
+    // silently ignoring it.
+    if query.is_aggregate() && query.group_by.is_empty() && query.limit.is_some() {
+        return Err(Error::Query(
+            "limit over a scalar aggregate is meaningless".into(),
         ));
     }
 
@@ -146,8 +209,8 @@ pub fn plan_opts(
         && !query.aggregates.iter().any(|a| dtype_of(&a.col) == Some(DType::Str))
         && query
             .group_by
-            .as_deref()
-            .map_or(true, |g| dtype_of(g) == Some(DType::I64));
+            .iter()
+            .all(|g| dtype_of(g) == Some(DType::I64));
     let prune = prune && evaluable;
 
     let decomposable = query.is_decomposable();
@@ -156,6 +219,10 @@ pub fn plan_opts(
     // ship values back (keep_values).
     let mode = force_mode.unwrap_or(ExecMode::Pushdown);
     let keep_values = query.is_aggregate() && !decomposable;
+    let pipeline = server_pipeline(query, prune);
+    let push_topk = pipeline.limit.is_some();
+    let stages = build_stages(query, mode, push_topk);
+
     let mut subqueries = Vec::with_capacity(names.len());
     let mut objects_pruned = 0usize;
     let mut bytes_skipped = 0u64;
@@ -178,6 +245,8 @@ pub fn plan_opts(
         query: query.clone(),
         schema: schema.clone(),
         mode,
+        stages,
+        pipeline,
         subqueries,
         decomposable,
         objects_pruned,
@@ -185,10 +254,121 @@ pub fn plan_opts(
     })
 }
 
+/// The server-side stage block of a query: which operators each storage
+/// server runs over its object, in one pass. Shared by the planner (for
+/// the compiled plan) and the worker (when encoding a sub-query), so
+/// both always agree on the offload boundary:
+///
+/// - filter + carry-projection always push down;
+/// - aggregate/group partials push down (holistic functions ship values);
+/// - per-object sort/head partials exist only when a limit bounds the
+///   result — a bare sort reduces nothing at the object, so it stays a
+///   merge-side operator.
+pub fn server_pipeline(query: &Query, zone_maps: bool) -> PipelineSpec {
+    let push_topk = !query.is_aggregate() && query.limit.is_some();
+    PipelineSpec {
+        predicate: query.predicate.clone(),
+        projection: if query.is_aggregate() {
+            None
+        } else {
+            query.carry_columns()
+        },
+        aggs: query.aggregates.clone(),
+        keys: query.group_by.clone(),
+        sort: if push_topk {
+            query.sort_keys.clone()
+        } else {
+            Vec::new()
+        },
+        limit: if push_topk {
+            query.limit.map(|n| n as u64)
+        } else {
+            None
+        },
+        zone_maps,
+    }
+}
+
+/// Describe the operator pipeline with each stage's execution side.
+fn build_stages(query: &Query, mode: ExecMode, push_topk: bool) -> Vec<PlanStage> {
+    let mut stages = Vec::new();
+    let srv = |op: String| PlanStage { op, mode };
+    stages.push(srv(format!("scan {}", query.dataset)));
+    if query.predicate != Predicate::True {
+        stages.push(srv(format!("filter {}", query.predicate)));
+    }
+    if query.is_aggregate() {
+        let aggs: Vec<String> = query.aggregates.iter().map(|a| a.to_string()).collect();
+        if query.group_by.is_empty() {
+            stages.push(srv(format!("partial-aggregate [{}]", aggs.join(", "))));
+        } else {
+            stages.push(srv(format!(
+                "partial-aggregate [{}] by [{}]",
+                aggs.join(", "),
+                query.group_by.join(", ")
+            )));
+        }
+        stages.push(PlanStage {
+            op: "merge partials".into(),
+            mode: ExecMode::ClientSide,
+        });
+        stages.push(PlanStage {
+            op: format!("finalize [{}]", aggs.join(", ")),
+            mode: ExecMode::ClientSide,
+        });
+        if let Some(n) = query.limit {
+            stages.push(PlanStage {
+                op: format!("limit {n} groups"),
+                mode: ExecMode::ClientSide,
+            });
+        }
+        return stages;
+    }
+    if let Some(carry) = query.carry_columns() {
+        stages.push(srv(format!("project [{}]", carry.join(", "))));
+    }
+    match (query.sort_keys.is_empty(), query.limit, push_topk) {
+        (false, Some(n), true) => {
+            let keys: Vec<String> = query.sort_keys.iter().map(|k| k.to_string()).collect();
+            stages.push(srv(format!("partial top-{n} by [{}]", keys.join(", "))));
+        }
+        (true, Some(n), true) => {
+            stages.push(srv(format!("partial head({n})")));
+        }
+        _ => {}
+    }
+    stages.push(PlanStage {
+        op: "merge rows".into(),
+        mode: ExecMode::ClientSide,
+    });
+    if !query.sort_keys.is_empty() {
+        let keys: Vec<String> = query.sort_keys.iter().map(|k| k.to_string()).collect();
+        stages.push(PlanStage {
+            op: format!("sort [{}]", keys.join(", ")),
+            mode: ExecMode::ClientSide,
+        });
+    }
+    if let Some(n) = query.limit {
+        stages.push(PlanStage {
+            op: format!("limit {n}"),
+            mode: ExecMode::ClientSide,
+        });
+    }
+    if let Some(p) = &query.projection {
+        if query.sort_keys.iter().any(|k| !p.contains(&k.col)) {
+            stages.push(PlanStage {
+                op: format!("project [{}]", p.join(", ")),
+                mode: ExecMode::ClientSide,
+            });
+        }
+    }
+    stages
+}
+
 /// Zone-map test for one row group: does the predicate provably match
 /// zero of its rows? Empty groups always prune; groups without recorded
 /// stats prune only via `rows == 0`.
-fn group_prunes(pred: &Predicate, schema: &TableSchema, rg: &RowGroupMeta) -> bool {
+pub(crate) fn group_prunes(pred: &Predicate, schema: &TableSchema, rg: &RowGroupMeta) -> bool {
     if rg.rows == 0 {
         return true;
     }
@@ -200,7 +380,7 @@ fn group_prunes(pred: &Predicate, schema: &TableSchema, rg: &RowGroupMeta) -> bo
             .col_index(col)
             .ok()
             .and_then(|ci| rg.stats.get(ci))
-            .and_then(|s| s.range())
+            .and_then(|s| s.value_range())
     })
 }
 
@@ -209,7 +389,7 @@ mod tests {
     use super::*;
     use crate::dataset::layout::Layout;
     use crate::dataset::metadata::ColumnStats;
-    use crate::skyhook::query::{AggFunc, CmpOp};
+    use crate::skyhook::query::{AggFunc, CmpOp, SortKey};
 
     fn meta(groups: usize) -> DatasetMeta {
         DatasetMeta::Table {
@@ -239,8 +419,13 @@ mod tests {
                         ColumnStats {
                             min: (i * 10) as f64,
                             max: (i * 10 + 9) as f64,
+                            nan_count: 0,
                         },
-                        ColumnStats { min: 5.0, max: 5.0 },
+                        ColumnStats {
+                            min: 5.0,
+                            max: 5.0,
+                            nan_count: 0,
+                        },
                     ],
                 })
                 .collect(),
@@ -257,6 +442,10 @@ mod tests {
         assert!(p.decomposable);
         assert!(!p.subqueries[0].keep_values);
         assert_eq!(p.subqueries[0].object, "ds/t/00000000");
+        // The pipeline carries the filter; no aggregate/sort stages.
+        assert_eq!(p.pipeline.predicate, q.predicate);
+        assert!(p.pipeline.aggs.is_empty());
+        assert!(p.pipeline.sort.is_empty() && p.pipeline.limit.is_none());
     }
 
     #[test]
@@ -265,6 +454,7 @@ mod tests {
         let p = plan(&q, &meta(3), None).unwrap();
         assert!(!p.decomposable);
         assert!(p.subqueries.iter().all(|s| s.keep_values));
+        assert!(p.pipeline.any_holistic());
         // Algebraic does not.
         let q = Query::scan("ds").aggregate(AggFunc::Mean, "val");
         let p = plan(&q, &meta(3), None).unwrap();
@@ -277,6 +467,55 @@ mod tests {
         let q = Query::scan("ds");
         let p = plan(&q, &meta(2), Some(ExecMode::ClientSide)).unwrap();
         assert!(p.subqueries.iter().all(|s| s.mode == ExecMode::ClientSide));
+        // Every movable stage follows; merge-side stages are client-side
+        // in any mode.
+        assert!(p.stages.iter().all(|s| s.mode == ExecMode::ClientSide));
+    }
+
+    #[test]
+    fn stages_record_per_operator_offload() {
+        let q = Query::scan("ds")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 1.0))
+            .select(&["ts"])
+            .top_k("val", true, 5);
+        let p = plan(&q, &meta(4), None).unwrap();
+        let server: Vec<&str> = p
+            .stages
+            .iter()
+            .filter(|s| s.mode == ExecMode::Pushdown)
+            .map(|s| s.op.as_str())
+            .collect();
+        let client: Vec<&str> = p
+            .stages
+            .iter()
+            .filter(|s| s.mode == ExecMode::ClientSide)
+            .map(|s| s.op.as_str())
+            .collect();
+        // Filter + carry-projection + partial top-k run at the data…
+        assert!(server.iter().any(|s| s.starts_with("filter")));
+        assert!(server.iter().any(|s| s.starts_with("project")));
+        assert!(server.iter().any(|s| s.starts_with("partial top-5")));
+        // …merge, final sort, truncate and the final projection at the
+        // client (val is a sort key outside the projection).
+        assert!(client.iter().any(|s| s.starts_with("merge rows")));
+        assert!(client.iter().any(|s| s.starts_with("sort")));
+        assert!(client.iter().any(|s| s.starts_with("limit 5")));
+        assert!(client.iter().any(|s| s.starts_with("project [ts]")));
+        // The wire pipeline matches: carry projection + per-object top-k.
+        assert_eq!(
+            p.pipeline.projection,
+            Some(vec!["ts".to_string(), "val".to_string()])
+        );
+        assert_eq!(p.pipeline.sort, vec![SortKey::desc("val")]);
+        assert_eq!(p.pipeline.limit, Some(5));
+        // A bare sort (no limit) stays merge-side: nothing to truncate.
+        let q = Query::scan("ds").sort("ts");
+        let p = plan(&q, &meta(2), None).unwrap();
+        assert!(p.pipeline.sort.is_empty());
+        assert!(p
+            .stages
+            .iter()
+            .any(|s| s.op.starts_with("sort") && s.mode == ExecMode::ClientSide));
     }
 
     #[test]
@@ -287,6 +526,19 @@ mod tests {
         assert!(plan(&q, &meta(2), None).is_err());
         let q = Query::scan("ds").aggregate(AggFunc::Sum, "ghost");
         assert!(plan(&q, &meta(2), None).is_err());
+        let q = Query::scan("ds").sort("ghost");
+        assert!(plan(&q, &meta(2), None).is_err());
+        let q = Query::scan("ds").aggregate(AggFunc::Sum, "val").sort("ts");
+        assert!(plan(&q, &meta(2), None).is_err());
+        // Limit over a scalar aggregate is rejected; over a grouped one
+        // it truncates the group rows and plans fine.
+        let q = Query::scan("ds").aggregate(AggFunc::Sum, "val").limit(3);
+        assert!(plan(&q, &meta(2), None).is_err());
+        let q = Query::scan("ds")
+            .group("ts")
+            .aggregate(AggFunc::Sum, "val")
+            .limit(3);
+        assert!(plan(&q, &meta(2), None).is_ok());
     }
 
     #[test]
@@ -321,6 +573,38 @@ mod tests {
         let p = plan(&q, &meta(5), None).unwrap();
         assert_eq!(p.subqueries.len(), 5);
         assert_eq!(p.objects_pruned, 0);
+    }
+
+    #[test]
+    fn nan_counts_only_block_ne_pruning() {
+        // One group: val in [5, 5] with 2 NaN rows.
+        let m = DatasetMeta::Table {
+            schema: TableSchema::new(&[("ts", DType::I64), ("val", DType::F32)]),
+            layout: Layout::Col,
+            row_groups: vec![RowGroupMeta {
+                rows: 10,
+                bytes: 100,
+                stats: vec![
+                    ColumnStats {
+                        min: 0.0,
+                        max: 9.0,
+                        nan_count: 0,
+                    },
+                    ColumnStats {
+                        min: 5.0,
+                        max: 5.0,
+                        nan_count: 2,
+                    },
+                ],
+            }],
+            localities: vec![String::new()],
+        };
+        // Range predicates prune despite the NaNs…
+        let q = Query::scan("ds").filter(Predicate::cmp("val", CmpOp::Gt, 5.0));
+        assert_eq!(plan(&q, &m, None).unwrap().objects_pruned, 1);
+        // …but Ne cannot (the NaN rows match it).
+        let q = Query::scan("ds").filter(Predicate::cmp("val", CmpOp::Ne, 5.0));
+        assert_eq!(plan(&q, &m, None).unwrap().objects_pruned, 0);
     }
 
     #[test]
@@ -366,16 +650,40 @@ mod tests {
     }
 
     #[test]
-    fn group_by_needs_one_aggregate() {
+    fn group_by_accepts_multiple_aggregates_and_keys() {
         let q = Query::scan("ds").group("ts");
-        assert!(plan(&q, &meta(1), None).is_err());
+        assert!(plan(&q, &meta(1), None).is_err(), "group without aggregate");
         let q = Query::scan("ds")
             .group("ts")
             .aggregate(AggFunc::Mean, "val")
             .aggregate(AggFunc::Sum, "val");
-        assert!(plan(&q, &meta(1), None).is_err());
-        let q = Query::scan("ds").group("ts").aggregate(AggFunc::Mean, "val");
-        assert!(plan(&q, &meta(1), None).is_ok());
+        let p = plan(&q, &meta(1), None).unwrap();
+        assert_eq!(p.pipeline.aggs.len(), 2);
+        assert_eq!(p.pipeline.keys, vec!["ts"]);
+        let q = Query::scan("ds")
+            .group("ts")
+            .group("val") // f32 key: planner still plans; prune disabled
+            .aggregate(AggFunc::Mean, "val");
+        let p = plan(&q, &meta_with_stats(1), None).unwrap();
+        // Error parity: the non-i64 key disables pruning so the handlers
+        // report the group-key type error themselves.
+        assert!(p.subqueries.iter().all(|s| !s.zone_maps));
+    }
+
+    #[test]
+    fn plan_logical_compiles_the_ir() {
+        let lp = LogicalPlan::scan("ds")
+            .filter(Predicate::cmp("ts", CmpOp::Lt, 25.0))
+            .project(&["val"])
+            .top_k(vec![SortKey::asc("val")], 4);
+        let p = plan_logical(&lp, &meta_with_stats(10), None).unwrap();
+        assert_eq!(p.objects_pruned, 7);
+        assert_eq!(p.pipeline.limit, Some(4));
+        // Malformed trees are rejected at compile time.
+        let bad = LogicalPlan::scan("ds")
+            .aggregate(vec![crate::skyhook::query::Aggregate::new(AggFunc::Sum, "val")], &[])
+            .filter(Predicate::True);
+        assert!(plan_logical(&bad, &meta(1), None).is_err());
     }
 
     #[test]
@@ -386,5 +694,17 @@ mod tests {
         assert!(e.contains("aggregate"));
         assert!(e.contains("4 objects"));
         assert!(e.contains("decomposable=false"));
+        assert!(e.contains("[server] partial-aggregate [median(val)]"));
+        assert!(e.contains("[client] merge partials"));
+        // Chained row pipeline: every operator lists its side.
+        let q = Query::scan("ds")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 2.0))
+            .select(&["ts"])
+            .top_k("val", true, 3);
+        let e = plan(&q, &meta(4), None).unwrap().explain();
+        assert!(e.contains("[server] filter val > 2"));
+        assert!(e.contains("[server] partial top-3 by [val desc]"));
+        assert!(e.contains("[client] sort [val desc]"));
+        assert!(e.contains("[client] limit 3"));
     }
 }

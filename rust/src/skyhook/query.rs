@@ -3,9 +3,11 @@
 //! paper offloads to the storage system (§2 goal 2), plus the partial-
 //! aggregate algebra that decides composability (§3.2).
 
+use crate::dataset::metadata::ValueRange;
 use crate::dataset::table::{Batch, Column};
 use crate::error::{Error, Result};
 use crate::util::bytes::{ByteReader, ByteWriter};
+use std::fmt;
 
 /// Comparison operator for predicates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -27,6 +29,17 @@ impl CmpOp {
             CmpOp::Ge => a >= b,
             CmpOp::Eq => a == b,
             CmpOp::Ne => a != b,
+        }
+    }
+
+    pub fn symbol(self) -> &'static str {
+        match self {
+            CmpOp::Lt => "<",
+            CmpOp::Le => "<=",
+            CmpOp::Gt => ">",
+            CmpOp::Ge => ">=",
+            CmpOp::Eq => "==",
+            CmpOp::Ne => "!=",
         }
     }
 
@@ -212,29 +225,40 @@ impl Predicate {
     }
 
     /// Zone-map pruning test: `true` iff the predicate provably matches
-    /// zero rows of an object whose per-column value ranges are given by
-    /// `range` (`None` = unknown, assume anything). Conservative: a
-    /// `false` return says nothing; a `true` return is a proof, so the
-    /// planner may skip the object before any I/O without changing
-    /// results.
-    pub fn prune(&self, range: &dyn Fn(&str) -> Option<(f64, f64)>) -> bool {
+    /// zero rows of an object whose per-column statistics are given by
+    /// `range` (`None` = unknown, assume anything — including NaNs).
+    /// Conservative: a `false` return says nothing; a `true` return is a
+    /// proof, so the planner may skip the object before any I/O without
+    /// changing results.
+    ///
+    /// NaN rows satisfy `Ne` comparisons and nothing else, so a
+    /// [`ValueRange`] with `nans > 0` keeps `Ne` alive while the non-NaN
+    /// min/max still prune range predicates — and a range proven NaN-free
+    /// (`nans == 0`) lets `Ne` prune constant columns.
+    pub fn prune(&self, range: &dyn Fn(&str) -> Option<ValueRange>) -> bool {
         !self.maybe_some(range)
     }
 
     /// Over-approximation: may at least one row match?
-    fn maybe_some(&self, range: &dyn Fn(&str) -> Option<(f64, f64)>) -> bool {
+    fn maybe_some(&self, range: &dyn Fn(&str) -> Option<ValueRange>) -> bool {
         match self {
             Predicate::True => true,
             Predicate::Cmp { col, op, value } => match range(col) {
                 None => true,
-                Some((lo, hi)) => match op {
-                    CmpOp::Lt => lo < *value,
-                    CmpOp::Le => lo <= *value,
-                    CmpOp::Gt => hi > *value,
-                    CmpOp::Ge => hi >= *value,
-                    CmpOp::Eq => lo <= *value && *value <= hi,
-                    CmpOp::Ne => !(lo == *value && hi == *value),
-                },
+                Some(r) => {
+                    let (lo, hi) = (r.lo, r.hi);
+                    let non_nan = r.has_values()
+                        && match op {
+                            CmpOp::Lt => lo < *value,
+                            CmpOp::Le => lo <= *value,
+                            CmpOp::Gt => hi > *value,
+                            CmpOp::Ge => hi >= *value,
+                            CmpOp::Eq => lo <= *value && *value <= hi,
+                            CmpOp::Ne => !(lo == *value && hi == *value),
+                        };
+                    // A NaN row matches only `Ne` (NaN != x for every x).
+                    non_nan || (r.nans > 0 && *op == CmpOp::Ne)
+                }
             },
             Predicate::And(a, b) => a.maybe_some(range) && b.maybe_some(range),
             Predicate::Or(a, b) => a.maybe_some(range) || b.maybe_some(range),
@@ -243,19 +267,26 @@ impl Predicate {
     }
 
     /// Under-approximation: do provably *all* rows match?
-    fn all_match(&self, range: &dyn Fn(&str) -> Option<(f64, f64)>) -> bool {
+    fn all_match(&self, range: &dyn Fn(&str) -> Option<ValueRange>) -> bool {
         match self {
             Predicate::True => true,
             Predicate::Cmp { col, op, value } => match range(col) {
                 None => false,
-                Some((lo, hi)) => match op {
-                    CmpOp::Lt => hi < *value,
-                    CmpOp::Le => hi <= *value,
-                    CmpOp::Gt => lo > *value,
-                    CmpOp::Ge => lo >= *value,
-                    CmpOp::Eq => lo == *value && hi == *value,
-                    CmpOp::Ne => *value < lo || hi < *value,
-                },
+                Some(r) => {
+                    let (lo, hi) = (r.lo, r.hi);
+                    // All non-NaN rows match (vacuously, if there are none)…
+                    let non_nan = !r.has_values()
+                        || match op {
+                            CmpOp::Lt => hi < *value,
+                            CmpOp::Le => hi <= *value,
+                            CmpOp::Gt => lo > *value,
+                            CmpOp::Ge => lo >= *value,
+                            CmpOp::Eq => lo == *value && hi == *value,
+                            CmpOp::Ne => *value < lo || hi < *value,
+                        };
+                    // …and so do all NaN rows (only `Ne` matches NaN).
+                    non_nan && (r.nans == 0 || *op == CmpOp::Ne)
+                }
             },
             Predicate::And(a, b) => a.all_match(range) && b.all_match(range),
             Predicate::Or(a, b) => a.all_match(range) || b.all_match(range),
@@ -311,6 +342,22 @@ impl Predicate {
             4 => Predicate::Not(Box::new(Self::decode_from(r)?)),
             o => return Err(Error::Corrupt(format!("bad predicate tag {o}"))),
         })
+    }
+}
+
+impl fmt::Display for Predicate {
+    /// Parseable text form (the `parse::parse_predicate` syntax) — used
+    /// by `QueryPlan::explain` and the CLI.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Predicate::True => write!(f, "true"),
+            Predicate::Cmp { col, op, value } => {
+                write!(f, "{col} {} {value}", op.symbol())
+            }
+            Predicate::And(a, b) => write!(f, "({a} && {b})"),
+            Predicate::Or(a, b) => write!(f, "({a} || {b})"),
+            Predicate::Not(p) => write!(f, "!({p})"),
+        }
     }
 }
 
@@ -415,7 +462,6 @@ impl AggFunc {
         }
     }
 
-    #[allow(dead_code)]
     pub(crate) fn from_code(c: u8) -> Result<Self> {
         Ok(match c {
             0 => AggFunc::Count,
@@ -443,6 +489,57 @@ impl Aggregate {
             func,
             col: col.to_string(),
         }
+    }
+}
+
+impl fmt::Display for Aggregate {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}({})", self.func.name(), self.col)
+    }
+}
+
+/// One sort key of an order-by: column name + direction. Ordering is
+/// total — f32/f64 compare via `f64::total_cmp` (NaN sorts after +inf,
+/// deterministically), i64 compares natively (no f64 widening, so
+/// values beyond 2^53 keep their order), strings lexicographically —
+/// and every execution mode produces the same row order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SortKey {
+    pub col: String,
+    pub desc: bool,
+}
+
+impl SortKey {
+    pub fn asc(col: &str) -> SortKey {
+        SortKey {
+            col: col.to_string(),
+            desc: false,
+        }
+    }
+
+    pub fn desc(col: &str) -> SortKey {
+        SortKey {
+            col: col.to_string(),
+            desc: true,
+        }
+    }
+
+    pub fn encode_into(&self, w: &mut ByteWriter) {
+        w.str(&self.col);
+        w.u8(self.desc as u8);
+    }
+
+    pub fn decode_from(r: &mut ByteReader) -> Result<SortKey> {
+        Ok(SortKey {
+            col: r.str()?.to_string(),
+            desc: r.u8()? != 0,
+        })
+    }
+}
+
+impl fmt::Display for SortKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{}", self.col, if self.desc { " desc" } else { "" })
     }
 }
 
@@ -567,7 +664,9 @@ impl AggState {
                     .values
                     .clone()
                     .ok_or_else(|| Error::Query("median needs raw values".into()))?;
-                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                // Total order: NaN values sort last instead of panicking,
+                // so every execution mode finalizes identically.
+                v.sort_by(|a, b| a.total_cmp(b));
                 let n = v.len();
                 if n % 2 == 1 {
                     v[n / 2]
@@ -632,7 +731,11 @@ impl AggState {
     }
 }
 
-/// A full query against a table dataset.
+/// A full query against a table dataset: the flat, validated form of a
+/// [`super::logical::LogicalPlan`] operator chain. The fluent builder
+/// below (`Query::scan(..).filter(..).select(..).sort(..).limit(..)`)
+/// constructs it directly; [`Query::logical`] lifts it back into the
+/// operator-tree IR the planner compiles.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Query {
     pub dataset: String,
@@ -643,8 +746,16 @@ pub struct Query {
     /// Aggregates (if non-empty, the query returns aggregate values, not
     /// rows).
     pub aggregates: Vec<Aggregate>,
-    /// Optional group-by column (i64) for aggregate queries.
-    pub group_by: Option<String>,
+    /// Group-by key columns (i64) for aggregate queries; empty = scalar
+    /// aggregation.
+    pub group_by: Vec<String>,
+    /// Order-by keys (row queries). Applied over the merged result; with
+    /// `limit`, each storage server pre-sorts and truncates its partial
+    /// (distributed top-k).
+    pub sort_keys: Vec<SortKey>,
+    /// Row-count cap, applied after sorting. On row queries without sort
+    /// keys it is pushed down as a per-object head(n).
+    pub limit: Option<usize>,
 }
 
 impl Query {
@@ -655,7 +766,9 @@ impl Query {
             predicate: Predicate::True,
             projection: None,
             aggregates: Vec::new(),
-            group_by: None,
+            group_by: Vec::new(),
+            sort_keys: Vec::new(),
+            limit: None,
         }
     }
 
@@ -674,9 +787,46 @@ impl Query {
         self
     }
 
+    /// Add a group-by key column (repeatable for multi-column keys).
     pub fn group(mut self, col: &str) -> Query {
-        self.group_by = Some(col.to_string());
+        self.group_by.push(col.to_string());
         self
+    }
+
+    /// Ascending sort on `col` (appended: earlier keys order first).
+    pub fn sort(mut self, col: &str) -> Query {
+        self.sort_keys.push(SortKey::asc(col));
+        self
+    }
+
+    /// Descending sort on `col`.
+    pub fn sort_desc(mut self, col: &str) -> Query {
+        self.sort_keys.push(SortKey::desc(col));
+        self
+    }
+
+    /// Replace the full sort-key list.
+    pub fn sort_by(mut self, keys: &[SortKey]) -> Query {
+        self.sort_keys = keys.to_vec();
+        self
+    }
+
+    /// Keep only the first `n` rows (after sorting, if any).
+    pub fn limit(mut self, n: usize) -> Query {
+        self.limit = Some(n);
+        self
+    }
+
+    /// Top-k shorthand: sort by `col` (descending if `desc`) and keep
+    /// the best `n` rows — the fused Sort+Limit operator, offloaded as
+    /// per-object partial top-k.
+    pub fn top_k(self, col: &str, desc: bool, n: usize) -> Query {
+        let key = if desc {
+            SortKey::desc(col)
+        } else {
+            SortKey::asc(col)
+        };
+        self.sort_by(&[key]).limit(n)
     }
 
     pub fn is_aggregate(&self) -> bool {
@@ -688,8 +838,22 @@ impl Query {
         self.aggregates.iter().all(|a| a.func.is_algebraic())
     }
 
+    /// Columns a row query's per-object partials must carry: the
+    /// projection plus any sort keys outside it (the final projection at
+    /// the driver drops them after the merge-side sort). `None` = all.
+    pub fn carry_columns(&self) -> Option<Vec<String>> {
+        let proj = self.projection.as_ref()?;
+        let mut out = proj.clone();
+        for k in &self.sort_keys {
+            if !out.contains(&k.col) {
+                out.push(k.col.clone());
+            }
+        }
+        Some(out)
+    }
+
     /// Columns this query needs to touch (predicate ∪ projection ∪ aggs ∪
-    /// group key).
+    /// group keys ∪ sort keys).
     pub fn needed_columns(&self, all: &[String]) -> Vec<String> {
         let mut out: Vec<String> = self
             .predicate
@@ -700,11 +864,12 @@ impl Query {
         match (&self.projection, self.is_aggregate()) {
             (_, true) => {
                 out.extend(self.aggregates.iter().map(|a| a.col.clone()));
-                if let Some(g) = &self.group_by {
-                    out.push(g.clone());
-                }
+                out.extend(self.group_by.iter().cloned());
             }
-            (Some(p), false) => out.extend(p.iter().cloned()),
+            (Some(p), false) => {
+                out.extend(p.iter().cloned());
+                out.extend(self.sort_keys.iter().map(|k| k.col.clone()));
+            }
             (None, false) => out.extend(all.iter().cloned()),
         }
         out.sort();
@@ -818,10 +983,10 @@ mod tests {
 
     #[test]
     fn prune_on_ranges() {
-        // Object with v in [10, 50], id in [1, 5].
+        // Object with v in [10, 50], id in [1, 5], both NaN-free.
         let range = |col: &str| match col {
-            "v" => Some((10.0, 50.0)),
-            "id" => Some((1.0, 5.0)),
+            "v" => Some(ValueRange::exact(10.0, 50.0)),
+            "id" => Some(ValueRange::exact(1.0, 5.0)),
             _ => None,
         };
         // Provably empty.
@@ -834,8 +999,8 @@ mod tests {
         assert!(!Predicate::cmp("v", CmpOp::Le, 10.0).prune(&range));
         assert!(!Predicate::cmp("v", CmpOp::Eq, 30.0).prune(&range));
         assert!(!Predicate::cmp("v", CmpOp::Ne, 30.0).prune(&range));
-        // Ne prunes only a constant column.
-        let constant = |_: &str| Some((7.0, 7.0));
+        // Ne prunes only a NaN-free constant column.
+        let constant = |_: &str| Some(ValueRange::exact(7.0, 7.0));
         assert!(Predicate::cmp("x", CmpOp::Ne, 7.0).prune(&constant));
         assert!(!Predicate::cmp("x", CmpOp::Ne, 8.0).prune(&constant));
         // Unknown columns never prune.
@@ -854,13 +1019,64 @@ mod tests {
     }
 
     #[test]
+    fn prune_with_nan_counts() {
+        // v in [10, 50] plus 3 NaN rows.
+        let nanny = |_: &str| {
+            Some(ValueRange {
+                lo: 10.0,
+                hi: 50.0,
+                nans: 3,
+            })
+        };
+        // Range predicates still prune on the non-NaN bounds (NaN rows
+        // never satisfy them).
+        assert!(Predicate::cmp("v", CmpOp::Gt, 50.0).prune(&nanny));
+        assert!(Predicate::cmp("v", CmpOp::Lt, 10.0).prune(&nanny));
+        assert!(Predicate::cmp("v", CmpOp::Eq, 99.0).prune(&nanny));
+        assert!(!Predicate::cmp("v", CmpOp::Ge, 50.0).prune(&nanny));
+        // Ne on a NaN-bearing constant column cannot prune (NaN != 7).
+        let nan_const = |_: &str| {
+            Some(ValueRange {
+                lo: 7.0,
+                hi: 7.0,
+                nans: 1,
+            })
+        };
+        assert!(!Predicate::cmp("v", CmpOp::Ne, 7.0).prune(&nan_const));
+        // The same column proven NaN-free prunes.
+        assert!(Predicate::cmp("v", CmpOp::Ne, 7.0).prune(&|_| Some(ValueRange::exact(7.0, 7.0))));
+        // An all-NaN column: every op but Ne prunes.
+        let all_nan = |_: &str| {
+            Some(ValueRange {
+                lo: f64::INFINITY,
+                hi: f64::NEG_INFINITY,
+                nans: 5,
+            })
+        };
+        assert!(Predicate::cmp("v", CmpOp::Lt, 1e12).prune(&all_nan));
+        assert!(Predicate::cmp("v", CmpOp::Eq, 0.0).prune(&all_nan));
+        assert!(!Predicate::cmp("v", CmpOp::Ne, 0.0).prune(&all_nan));
+        // Not over a NaN-bearing column: !(v <= 50) is true on NaN rows,
+        // so it must NOT prune even though the non-NaN range is covered.
+        assert!(Predicate::cmp("v", CmpOp::Le, 50.0).not().prune(&|_| {
+            Some(ValueRange::exact(10.0, 50.0))
+        }));
+        assert!(!Predicate::cmp("v", CmpOp::Le, 50.0).not().prune(&nanny));
+        // !(v != x) ≡ v == x: prunes on a NaN-free constant != x…
+        let p = Predicate::cmp("v", CmpOp::Ne, 7.0).not();
+        assert!(p.prune(&|_| Some(ValueRange::exact(9.0, 9.0))));
+        // …and on an all-NaN column (NaN != 7 holds on every row).
+        assert!(p.prune(&all_nan));
+    }
+
+    #[test]
     fn prune_never_lies_on_real_batch() {
         // Every predicate that prunes must evaluate to an all-false mask
         // on the batch its ranges were computed from.
         let b = batch();
         let range = |col: &str| match col {
-            "id" => Some((1.0, 5.0)),
-            "v" => Some((10.0, 50.0)),
+            "id" => Some(ValueRange::exact(1.0, 5.0)),
+            "v" => Some(ValueRange::exact(10.0, 50.0)),
             _ => None,
         };
         let preds = [
@@ -1014,6 +1230,22 @@ mod tests {
         assert!(!q2.is_decomposable());
         let q3 = Query::scan("ds").select(&["a", "b"]);
         assert!(!q3.is_aggregate());
+        // Multi-key group-by accumulates keys.
+        let q4 = Query::scan("ds")
+            .group("a")
+            .group("b")
+            .aggregate(AggFunc::Sum, "v");
+        assert_eq!(q4.group_by, vec!["a", "b"]);
+        // Sort/limit/top-k builders.
+        let q5 = Query::scan("ds").sort("a").sort_desc("b").limit(7);
+        assert_eq!(
+            q5.sort_keys,
+            vec![SortKey::asc("a"), SortKey::desc("b")]
+        );
+        assert_eq!(q5.limit, Some(7));
+        let q6 = Query::scan("ds").top_k("v", true, 10);
+        assert_eq!(q6.sort_keys, vec![SortKey::desc("v")]);
+        assert_eq!(q6.limit, Some(10));
     }
 
     #[test]
@@ -1030,6 +1262,27 @@ mod tests {
         assert_eq!(q.needed_columns(&all), vec!["a", "b", "c"]);
         let q = Query::scan("ds");
         assert_eq!(q.needed_columns(&all), all);
+        // Sort keys outside the projection are carried.
+        let q = Query::scan("ds").select(&["b"]).sort_desc("c");
+        assert_eq!(q.needed_columns(&all), vec!["b", "c"]);
+        assert_eq!(
+            q.carry_columns(),
+            Some(vec!["b".to_string(), "c".to_string()])
+        );
+        // Without a projection everything is carried implicitly.
+        assert_eq!(Query::scan("ds").sort("a").carry_columns(), None);
+    }
+
+    #[test]
+    fn predicate_display_roundtrips_through_parser() {
+        let p = Predicate::cmp("val", CmpOp::Ge, -2.5)
+            .and(Predicate::True.or(Predicate::cmp("ts", CmpOp::Ne, 7.0).not()));
+        let text = p.to_string();
+        assert_eq!(crate::skyhook::parse::parse_predicate(&text).unwrap(), p);
+        assert_eq!(
+            Predicate::cmp("v", CmpOp::Lt, 3.0).to_string(),
+            "v < 3"
+        );
     }
 
     #[test]

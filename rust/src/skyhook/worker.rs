@@ -4,19 +4,23 @@
 //! data, adds the format wrapper, computes per-column zone maps, and
 //! writes objects (data + `skyhook.zonemap` xattr).
 //!
-//! Client-side execution fetches only the columns the query touches when
-//! the object is columnar (projected partial reads via
-//! [`layout::read_projected`] over ranged cluster reads) — the whole
-//! object crosses the network only for row-layout objects or full scans.
+//! Pushdown encodes the planner's server-side stage block (one
+//! [`super::logical::PipelineSpec`]) and executes the whole chained
+//! pipeline in a single
+//! `skyhook.exec` call per object. Client-side execution fetches only
+//! the columns the query touches when the object is columnar (projected
+//! partial reads via [`layout::read_projected_stats`] over ranged,
+//! extent-coalescing cluster reads) and runs the same operator chain
+//! locally — the whole object crosses the network only for row-layout
+//! objects or full scans.
 
-use super::extension::{
-    decode_agg_out, decode_group_out, encode_agg_arg, encode_group_arg, encode_scan_arg,
-};
-use super::plan::{ExecMode, SubQuery};
+use super::extension::{decode_exec_out, ExecOut};
+use super::logical::grouped_partials;
+use super::plan::{server_pipeline, ExecMode, SubQuery};
 use super::query::{AggState, Query};
 use crate::dataset::layout::{self, decode_batch, encode_batch, Layout};
 use crate::dataset::metadata::{ColumnStats, ZoneMap, ZONE_MAP_XATTR};
-use crate::dataset::table::Batch;
+use crate::dataset::table::{Batch, Column};
 use crate::error::Result;
 use crate::simnet::Timeline;
 use crate::store::Cluster;
@@ -33,7 +37,8 @@ const CLIENT_ROW_COST: f64 = 12e-9;
 pub enum SubOutput {
     Rows(Batch),
     Aggs(Vec<AggState>),
-    Groups(Vec<(i64, AggState)>),
+    /// Grouped partials: multi-column i64 key → one state per aggregate.
+    Groups(Vec<(Vec<i64>, Vec<AggState>)>),
 }
 
 /// Result of one sub-query execution.
@@ -42,6 +47,9 @@ pub struct SubResult {
     pub output: SubOutput,
     /// Bytes that crossed the client↔storage network for this sub-query.
     pub bytes_moved: u64,
+    /// Ranged reads saved by column-extent coalescing (client-side
+    /// partial reads only; pushdown coalesces on the device instead).
+    pub reads_coalesced: u64,
     /// Virtual completion time.
     pub finish: f64,
 }
@@ -68,44 +76,23 @@ fn execute_pushdown(
     at: f64,
     worker_cpu: &Timeline,
 ) -> Result<SubResult> {
-    if let Some(group_col) = &query.group_by {
-        let input = encode_group_arg(
-            &query.predicate,
-            group_col,
-            &query.aggregates[0].col,
-            sub.zone_maps,
-        );
-        let t = cluster.call(at, &sub.object, "skyhook", "group_agg", &input)?;
-        let bytes = (input.len() + t.value.len()) as u64;
-        let groups = decode_group_out(&t.value)?;
-        let finish = worker_cpu.submit(t.finish, t.value.len() as f64 / CLIENT_DECODE_BW);
-        return Ok(SubResult {
-            output: SubOutput::Groups(groups),
-            bytes_moved: bytes,
-            finish,
-        });
-    }
-    if query.is_aggregate() {
-        let input =
-            encode_agg_arg(&query.predicate, &query.aggregates, sub.keep_values, sub.zone_maps);
-        let t = cluster.call(at, &sub.object, "skyhook", "agg", &input)?;
-        let bytes = (input.len() + t.value.len()) as u64;
-        let states = decode_agg_out(&t.value)?;
-        let finish = worker_cpu.submit(t.finish, t.value.len() as f64 / CLIENT_DECODE_BW);
-        return Ok(SubResult {
-            output: SubOutput::Aggs(states),
-            bytes_moved: bytes,
-            finish,
-        });
-    }
-    let input = encode_scan_arg(&query.predicate, query.projection.as_deref(), sub.zone_maps);
-    let t = cluster.call(at, &sub.object, "skyhook", "scan", &input)?;
+    // The planner's server-side stage block, encoded once and executed
+    // in a single pass on the OSD.
+    let spec = server_pipeline(query, sub.zone_maps);
+    let input = spec.encode();
+    let t = cluster.call(at, &sub.object, "skyhook", "exec", &input)?;
     let bytes = (input.len() + t.value.len()) as u64;
-    let (batch, _) = decode_batch(&t.value)?;
+    let out = decode_exec_out(&t.value, spec.keys.len(), spec.aggs.len())?;
     let finish = worker_cpu.submit(t.finish, t.value.len() as f64 / CLIENT_DECODE_BW);
+    let output = match out {
+        ExecOut::Rows(b) => SubOutput::Rows(b),
+        ExecOut::Aggs(states) => SubOutput::Aggs(states),
+        ExecOut::Groups(gs) => SubOutput::Groups(gs),
+    };
     Ok(SubResult {
-        output: SubOutput::Rows(batch),
+        output,
         bytes_moved: bytes,
+        reads_coalesced: 0,
         finish,
     })
 }
@@ -160,11 +147,11 @@ fn execute_client_side(
     at: f64,
     worker_cpu: &Timeline,
 ) -> Result<SubResult> {
-    // Fetch only the columns the query touches (ranged reads on Col
-    // objects) — the filter/aggregate CPU still runs on the client,
-    // which is what makes this the baseline. Row objects must be read
-    // whole anyway, so skip the stat/prefix probing and issue the one
-    // full read directly (the pre-zone-map cost profile).
+    // Fetch only the columns the query touches (coalesced ranged reads
+    // on Col objects) — the filter/aggregate CPU still runs on the
+    // client, which is what makes this the baseline. Row objects must be
+    // read whole anyway, so skip the stat/prefix probing and issue the
+    // one full read directly (the pre-zone-map cost profile).
     let needed = client_needed_columns(query);
     let mut src = ClusterRange {
         cluster: cluster.as_ref(),
@@ -172,8 +159,11 @@ fn execute_client_side(
         at,
         fetched: 0,
     };
+    let mut coalesced = 0u64;
     let batch = if sub.layout == Layout::Col {
-        layout::read_projected(&mut src, needed.as_deref())?
+        let (batch, rstats) = layout::read_projected_stats(&mut src, needed.as_deref())?;
+        coalesced = rstats.reads_coalesced as u64;
+        batch
     } else {
         let full = layout::read_projected(&mut src, None)?;
         match &needed {
@@ -191,24 +181,14 @@ fn execute_client_side(
     let mut mask = Vec::new();
     query.predicate.eval_into(&batch, &mut mask)?;
 
-    if let Some(group_col) = &query.group_by {
-        let keys = match batch.col(group_col)? {
-            crate::dataset::table::Column::I64(v) => v,
-            _ => return Err(crate::error::Error::Query("group_by needs i64".into())),
-        };
-        let vals = batch.col(&query.aggregates[0].col)?;
-        let mut groups: std::collections::BTreeMap<i64, AggState> = Default::default();
-        for (i, &keep) in mask.iter().enumerate() {
-            if keep {
-                groups
-                    .entry(keys[i])
-                    .or_insert_with(|| AggState::new(false))
-                    .update(vals.get_f64(i)?);
-            }
-        }
+    if !query.group_by.is_empty() {
+        // Same shared kernel the storage-side handler runs, so pushdown
+        // and client-side partials are bit-identical.
+        let groups = grouped_partials(&batch, &mask, &query.group_by, &query.aggregates)?;
         return Ok(SubResult {
-            output: SubOutput::Groups(groups.into_iter().collect()),
+            output: SubOutput::Groups(groups),
             bytes_moved: bytes,
+            reads_coalesced: coalesced,
             finish,
         });
     }
@@ -222,11 +202,14 @@ fn execute_client_side(
         return Ok(SubResult {
             output: SubOutput::Aggs(states),
             bytes_moved: bytes,
+            reads_coalesced: coalesced,
             finish,
         });
     }
+    // Row partial: filter + carry-projection; the merge-side sort/limit/
+    // final projection run once at the driver over the concatenation.
     let filtered = batch.filter(&mask)?;
-    let rows = match &query.projection {
+    let rows = match query.carry_columns() {
         Some(cols) => {
             let refs: Vec<&str> = cols.iter().map(String::as_str).collect();
             filtered.project(&refs)?
@@ -236,6 +219,7 @@ fn execute_client_side(
     Ok(SubResult {
         output: SubOutput::Rows(rows),
         bytes_moved: bytes,
+        reads_coalesced: coalesced,
         finish,
     })
 }
@@ -383,9 +367,89 @@ mod tests {
         assert_eq!(gp.len(), gc.len());
         for ((ka, sa), (kb, sb)) in gp.iter().zip(&gc) {
             assert_eq!(ka, kb);
-            assert_eq!(sa.count, sb.count);
-            assert!((sa.sum - sb.sum).abs() < 1e-6);
+            assert_eq!(sa[0].count, sb[0].count);
+            assert!((sa[0].sum - sb[0].sum).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn multi_key_multi_agg_groups_agree() {
+        let c = cluster();
+        let b = seed_object(&c, "t2b", 600);
+        let q = Query::scan("ds")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 30.0))
+            .group("sensor")
+            .group("flag")
+            .aggregate(AggFunc::Count, "val")
+            .aggregate(AggFunc::Sum, "val");
+        let cpu = Timeline::new();
+        let mk = |mode| SubQuery {
+            object: "t2b".into(),
+            mode,
+            layout: Layout::Col,
+            keep_values: false,
+            zone_maps: true,
+        };
+        let rp = execute_subquery(&c, &q, &mk(ExecMode::Pushdown), 0.0, &cpu).unwrap();
+        let rc = execute_subquery(&c, &q, &mk(ExecMode::ClientSide), 0.0, &cpu).unwrap();
+        let (SubOutput::Groups(gp), SubOutput::Groups(gc)) = (rp.output, rc.output) else {
+            panic!("expected groups")
+        };
+        assert_eq!(gp, gc);
+        // 2-wide keys, counts match direct evaluation in total.
+        let mask = q.predicate.eval(&b).unwrap();
+        let want = mask.iter().filter(|&&m| m).count() as u64;
+        let total: u64 = gp.iter().map(|(_, s)| s[0].count).sum();
+        assert_eq!(total, want);
+        assert!(gp.iter().all(|(k, s)| k.len() == 2 && s.len() == 2));
+    }
+
+    #[test]
+    fn topk_pushdown_truncates_per_object() {
+        let c = cluster();
+        let b = seed_object(&c, "t5", 2000);
+        let q = Query::scan("ds")
+            .select(&["ts"])
+            .top_k("val", true, 10);
+        let cpu = Timeline::new();
+        let sub = SubQuery {
+            object: "t5".into(),
+            mode: ExecMode::Pushdown,
+            layout: Layout::Col,
+            keep_values: false,
+            zone_maps: true,
+        };
+        let r = execute_subquery(&c, &q, &sub, 0.0, &cpu).unwrap();
+        let SubOutput::Rows(rows) = r.output else {
+            panic!("expected rows");
+        };
+        // The partial carries the sort key alongside the projection and
+        // holds only k rows.
+        assert_eq!(rows.nrows(), 10);
+        assert_eq!(rows.ncols(), 2);
+        let Column::F32(v) = rows.col("val").unwrap() else {
+            unreachable!()
+        };
+        let Column::F32(all) = b.col("val").unwrap() else {
+            unreachable!()
+        };
+        let mut best: Vec<f32> = all.clone();
+        best.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert_eq!(v[0], best[0]);
+        // Client-side returns every filtered row (merge-side truncate),
+        // but both modes carry identical columns.
+        let sub_c = SubQuery {
+            mode: ExecMode::ClientSide,
+            ..sub
+        };
+        let rc = execute_subquery(&c, &q, &sub_c, 0.0, &cpu).unwrap();
+        let SubOutput::Rows(rows_c) = rc.output else {
+            panic!("expected rows");
+        };
+        assert_eq!(rows_c.nrows(), 2000);
+        assert_eq!(rows_c.schema, rows.schema);
+        // Bytes asymmetry: the top-k partial is far smaller.
+        assert!(r.bytes_moved * 10 < rc.bytes_moved);
     }
 
     #[test]
@@ -422,6 +486,7 @@ mod tests {
         assert_eq!(stats.len(), b.ncols());
         // ts is 0..100, so its zone map is exact.
         assert_eq!(stats[0].range(), Some((0.0, 99.0)));
+        assert_eq!(stats[0].nan_count, 0);
         let raw = c.read_object(0.0, "w0").unwrap().value;
         let (dec, layout) = decode_batch(&raw).unwrap();
         assert_eq!(layout, Layout::Row);
@@ -463,6 +528,15 @@ mod tests {
             "narrow {} vs full {}",
             narrow.bytes_moved,
             full.bytes_moved
+        );
+        // Adjacent needed columns (ts, sensor, val are contiguous in the
+        // schema) coalesce into fewer ranged reads.
+        let adjacent = mk(Query::scan("ds")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 50.0))
+            .select(&["ts", "sensor"]));
+        assert!(
+            adjacent.reads_coalesced > 0,
+            "adjacent column extents should coalesce"
         );
         // And both agree with direct evaluation row-count-wise.
         let (SubOutput::Rows(f), SubOutput::Rows(n)) = (full.output, narrow.output) else {

@@ -192,6 +192,6 @@ fn down_osd_rejects_pushdown_but_failover_handles_it() {
         .group("sensor")
         .aggregate(AggFunc::Count, "val");
     let r = s.driver.execute(&q, None).unwrap();
-    let total: f64 = r.groups.unwrap().iter().map(|(_, v)| v).sum();
+    let total: f64 = r.groups.unwrap().iter().map(|(_, v)| v[0]).sum();
     assert_eq!(total, 10_000.0);
 }

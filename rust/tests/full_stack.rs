@@ -142,10 +142,10 @@ fn group_by_equivalence_and_totals() {
     assert_eq!(a.len(), b.len());
     for ((ka, va), (kb, vb)) in a.iter().zip(&b) {
         assert_eq!(ka, kb);
-        assert!((va - vb).abs() < 1e-3);
+        assert!((va[0] - vb[0]).abs() < 1e-3);
     }
     // Total of group sums == ungrouped sum.
-    let total: f64 = a.iter().map(|(_, v)| v).sum();
+    let total: f64 = a.iter().map(|(_, v)| v[0]).sum();
     let whole = s
         .driver
         .execute(&Query::scan("d").aggregate(AggFunc::Sum, "val"), None)

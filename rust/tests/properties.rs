@@ -6,7 +6,9 @@ use skyhook_map::dataset::metadata::ZoneMap;
 use skyhook_map::dataset::partition::{pack_units, packing_stats, LogicalUnit};
 use skyhook_map::dataset::table::{Batch, Column};
 use skyhook_map::dataset::{ChunkGrid, Dataspace, DType, Hyperslab, TableSchema};
-use skyhook_map::skyhook::{AggFunc, AggState, CmpOp, Predicate};
+use skyhook_map::skyhook::{
+    AggFunc, AggState, Aggregate, CmpOp, LogicalPlan, Predicate, SortKey,
+};
 use skyhook_map::store::{hash_name, OsdMap};
 use skyhook_map::util::quick::{forall, forall_explain};
 use skyhook_map::util::rng::Xoshiro256;
@@ -443,7 +445,7 @@ fn zone_map_prune_never_drops_matching_rows() {
             let batch = random_numeric_batch(&mut rng, rows, true);
             let p = random_numeric_pred(&mut rng, 3);
             let zm = ZoneMap::from_batch(&batch);
-            if p.prune(&|c: &str| zm.range(c)) {
+            if p.prune(&|c: &str| zm.value_range(c)) {
                 let mask = p.eval(&batch).map_err(|e| e.to_string())?;
                 let hits = mask.iter().filter(|&&m| m).count();
                 if hits > 0 {
@@ -546,6 +548,177 @@ fn pruned_and_unpruned_queries_agree_end_to_end() {
                 .unwrap();
             if pg != ug {
                 return Err(format!("groups diverge under pruning: {pred:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn logical_plan_modes_agree_end_to_end() {
+    // Any LogicalPlan the IR accepts must return identical rows,
+    // aggregates and groups under forced client-side, forced server-side
+    // (pushdown), and planner-chosen per-stage modes — across random
+    // predicates, projections, sorts, limits, multi-aggregate /
+    // multi-key group-bys, both layouts, and NaN-bearing data.
+    use skyhook_map::config::{ClusterConfig, DriverConfig};
+    use skyhook_map::dataset::partition::PartitionSpec;
+    use skyhook_map::skyhook::{register_skyhook_class, Driver, ExecMode, Query};
+    use skyhook_map::store::{ClassRegistry, Cluster};
+
+    fn random_plan(r: &mut Xoshiro256) -> Query {
+        let mut lp = LogicalPlan::scan("p").filter(random_numeric_pred(r, 3));
+        match r.range(0, 3) {
+            0 | 1 => {
+                // Row pipeline: optional projection, then sort / limit /
+                // fused top-k (sort key may fall outside the projection).
+                if r.chance(0.5) {
+                    let cols: &[&str] = if r.chance(0.5) { &["ts", "val"] } else { &["ts"] };
+                    lp = lp.project(cols);
+                }
+                let key = |r: &mut Xoshiro256| SortKey {
+                    col: ["val", "ts", "sensor"][r.range(0, 2)].to_string(),
+                    desc: r.chance(0.5),
+                };
+                match r.range(0, 3) {
+                    0 => {}
+                    1 => {
+                        let k = key(r);
+                        lp = lp.sort(vec![k, SortKey::asc("ts")]);
+                    }
+                    2 => lp = lp.limit(r.range(0, 40)),
+                    _ => {
+                        let k = key(r);
+                        lp = lp.top_k(vec![k, SortKey::asc("ts")], r.range(0, 40));
+                    }
+                }
+            }
+            2 => {
+                // Scalar multi-aggregate (median exercises the holistic
+                // value-shipping path).
+                let funcs = [
+                    AggFunc::Count,
+                    AggFunc::Sum,
+                    AggFunc::Min,
+                    AggFunc::Max,
+                    AggFunc::Mean,
+                    AggFunc::Var,
+                    AggFunc::Median,
+                ];
+                let n = r.range(1, 3);
+                let aggs = (0..n)
+                    .map(|_| Aggregate::new(funcs[r.range(0, 6)], "val"))
+                    .collect();
+                lp = lp.aggregate(aggs, &[]);
+            }
+            _ => {
+                // Grouped multi-aggregate over one or two i64 keys.
+                let aggs = vec![
+                    Aggregate::new(AggFunc::Count, "val"),
+                    Aggregate::new(AggFunc::Sum, "val"),
+                ];
+                let keys: &[&str] = if r.chance(0.5) {
+                    &["sensor"]
+                } else {
+                    &["sensor", "ts"]
+                };
+                lp = lp.aggregate(aggs, keys);
+            }
+        }
+        lp.to_query().expect("generator builds accepted shapes")
+    }
+
+    forall_explain(
+        15,
+        12,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Xoshiro256::new(seed);
+            let mut reg = ClassRegistry::with_builtins();
+            register_skyhook_class(&mut reg, None);
+            let cluster = Cluster::new(
+                &ClusterConfig {
+                    osds: 3,
+                    replicas: 1,
+                    ..Default::default()
+                },
+                reg,
+            );
+            let driver = Driver::new(
+                cluster,
+                DriverConfig {
+                    workers: 2,
+                    ..Default::default()
+                },
+            );
+            let rows = rng.range(0, 400);
+            let batch = random_numeric_batch(&mut rng, rows, true);
+            let layout = if rng.chance(0.5) { Layout::Col } else { Layout::Row };
+            driver
+                .write_table("p", &batch, layout, &PartitionSpec::with_target(2048), None)
+                .map_err(|e| e.to_string())?;
+            let feq = |a: f64, b: f64| a == b || (a.is_nan() && b.is_nan());
+
+            for _ in 0..4 {
+                let q = random_plan(&mut rng);
+                let run = |mode: Option<ExecMode>| driver.execute(&q, mode);
+                let (server, client, chosen) = match (
+                    run(Some(ExecMode::Pushdown)),
+                    run(Some(ExecMode::ClientSide)),
+                    run(None),
+                ) {
+                    // Consistent failure is agreement too (e.g. `min` of
+                    // an empty match set errors in every mode).
+                    (Err(_), Err(_), Err(_)) => continue,
+                    (Ok(a), Ok(b), Ok(c)) => (a, b, c),
+                    _ => return Err(format!("error-ness diverges across modes for {q:?}")),
+                };
+                // Rows: bit-identical in every mode.
+                match (&server.rows, &client.rows, &chosen.rows) {
+                    (None, None, None) => {}
+                    (Some(a), Some(b), Some(c)) => {
+                        if !batches_bit_equal(a, b) || !batches_bit_equal(a, c) {
+                            return Err(format!("rows diverge across modes for {q:?}"));
+                        }
+                    }
+                    _ => return Err(format!("row presence diverges for {q:?}")),
+                }
+                // Aggregates: identical arity and values.
+                if server.aggregates.len() != client.aggregates.len()
+                    || server.aggregates.len() != chosen.aggregates.len()
+                {
+                    return Err(format!("aggregate arity diverges for {q:?}"));
+                }
+                for ((x, y), z) in server
+                    .aggregates
+                    .iter()
+                    .zip(&client.aggregates)
+                    .zip(&chosen.aggregates)
+                {
+                    if !feq(*x, *y) || !feq(*x, *z) {
+                        return Err(format!("aggregates diverge: {x} {y} {z} for {q:?}"));
+                    }
+                }
+                // Groups: identical keys and per-aggregate values.
+                match (&server.groups, &client.groups, &chosen.groups) {
+                    (None, None, None) => {}
+                    (Some(a), Some(b), Some(c)) => {
+                        if a.len() != b.len() || a.len() != c.len() {
+                            return Err(format!("group count diverges for {q:?}"));
+                        }
+                        for ((ga, gb), gc) in a.iter().zip(b).zip(c) {
+                            if ga.0 != gb.0 || ga.0 != gc.0 {
+                                return Err(format!("group keys diverge for {q:?}"));
+                            }
+                            for ((x, y), z) in ga.1.iter().zip(&gb.1).zip(&gc.1) {
+                                if !feq(*x, *y) || !feq(*x, *z) {
+                                    return Err(format!("group values diverge for {q:?}"));
+                                }
+                            }
+                        }
+                    }
+                    _ => return Err(format!("group presence diverges for {q:?}")),
+                }
             }
             Ok(())
         },

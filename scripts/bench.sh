@@ -1,16 +1,21 @@
 #!/usr/bin/env bash
-# Run the pushdown (E2) and object-size (E3) benches and emit a
-# BENCH_pushdown.json perf snapshot, so successive PRs have a trajectory
-# to compare against.
+# Run the pushdown (E2), object-size (E3) and composability (E5) benches
+# and emit perf snapshots, so successive PRs have a trajectory to
+# compare against:
 #
-# Usage: scripts/bench.sh [output.json]
+#   BENCH_pushdown.json — E2 + E3 (zone-map pruning, partial reads)
+#   BENCH_compose.json  — E5 (chained-pipeline offload vs client-side:
+#                         wall time + the bytes-moved tables)
 #
-# The snapshot records wall time per bench plus the raw table output
+# Usage: scripts/bench.sh [pushdown_output.json [compose_output.json]]
+#
+# Each snapshot records wall time per bench plus the raw table output
 # (which includes bytes_moved / objects_pruned / sim_seconds columns).
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 out_json=${1:-BENCH_pushdown.json}
+compose_json=${2:-BENCH_compose.json}
 workdir=$(mktemp -d)
 trap 'rm -rf "$workdir"' EXIT
 
@@ -33,21 +38,26 @@ run_bench() {
 status=0
 run_bench e2_pushdown || status=1
 run_bench e3_object_size || status=1
+run_bench e5_composability || status=1
 
-python3 - "$workdir" "$out_json" <<'PY'
+snapshot() {
+    local out=$1
+    shift
+    python3 - "$workdir" "$out" "$@" <<'PY'
 import json
 import os
 import sys
 import time
 
 workdir, out_json = sys.argv[1], sys.argv[2]
+names = sys.argv[3:]
 snapshot = {
     "schema": 1,
     "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
     "git_rev": os.popen("git rev-parse --short HEAD 2>/dev/null").read().strip(),
     "benches": {},
 }
-for name in ("e2_pushdown", "e3_object_size"):
+for name in names:
     entry = {}
     status_path = os.path.join(workdir, f"{name}.status")
     entry["status"] = (
@@ -65,5 +75,9 @@ with open(out_json, "w") as f:
     json.dump(snapshot, f, indent=2)
 print(f"wrote {out_json}")
 PY
+}
+
+snapshot "$out_json" e2_pushdown e3_object_size
+snapshot "$compose_json" e5_composability
 
 exit $status
