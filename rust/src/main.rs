@@ -7,7 +7,7 @@
 //! skyhook-map put    --dataset D --rows N [--layout row|col] [--object-size 4MiB]
 //! skyhook-map query  --dataset D [--filter EXPR] [--agg F:COL]... [--group C1,C2]
 //!                    [--select C1,C2] [--sort SPEC] [--limit N]
-//!                    [--pipe PIPELINE] [--explain] [--client-side]
+//!                    [--pipe PIPELINE] [--explain] [--force-mode push|client]
 //! skyhook-map index  --dataset D --column C
 //! skyhook-map transform --dataset D --layout row|col
 //! skyhook-map inspect                        # datasets + distribution
@@ -153,8 +153,12 @@ FLAGS:
   --pipe PIPELINE   chained-pipeline syntax, replaces the flags above:
                     'filter val > 50 | select ts,val | sort val desc | limit 10'
                     'filter flag == 0 | agg sum:val,count:val | by sensor,flag'
-  --explain         print the staged plan (per-operator offload) first
-  --client-side     force client-side execution (no pushdown)
+                    'agg count:val | by sensor | having count(val) > 100'
+  --explain         print the staged plan first: per-operator offload side
+                    plus the cost model's per-stage estimates
+  --force-mode M    pin every sub-query to one side: push|client
+                    (default: the planner picks the cheaper side per object)
+  --client-side     shorthand for --force-mode client
   --requests N      synthetic requests for `serve`
 ";
 
@@ -317,7 +321,16 @@ fn cmd_query(f: &Flags) -> Result<()> {
         }
         q
     };
-    let mode = f.has("client-side").then_some(ExecMode::ClientSide);
+    let mode = match f.get("force-mode") {
+        Some("push") | Some("pushdown") | Some("server") => Some(ExecMode::Pushdown),
+        Some("client") | Some("client-side") => Some(ExecMode::ClientSide),
+        Some(other) => {
+            return Err(skyhook_map::Error::Invalid(format!(
+                "--force-mode must be push|client, got {other:?}"
+            )))
+        }
+        None => f.has("client-side").then_some(ExecMode::ClientSide),
+    };
     if f.has("explain") {
         print!("{}", stack.driver.explain(&q, mode)?);
     }
@@ -352,15 +365,17 @@ fn cmd_query(f: &Flags) -> Result<()> {
         }
     }
     println!(
-        "-- {} objects ({} pruned, {} skipped), {} moved, {} reads coalesced, sim {:.4}s, wall {:.4}s, pushdown={}",
+        "-- {} objects ({} pruned, {} skipped), {} moved (est {}), {} reads coalesced, sim {:.4}s, wall {:.4}s, modes {}p/{}c",
         r.stats.objects,
         r.stats.objects_pruned,
         fmt_size(r.stats.bytes_skipped),
         fmt_size(r.stats.bytes_moved),
+        fmt_size(r.stats.bytes_estimated),
         r.stats.reads_coalesced,
         r.stats.sim_seconds,
         r.stats.wall_seconds,
-        r.stats.pushdown
+        r.stats.objects_pushdown,
+        r.stats.objects_client
     );
     Ok(())
 }

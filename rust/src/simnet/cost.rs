@@ -28,10 +28,21 @@ pub struct CostParams {
     /// Client-side cost per byte for the native access-library write path
     /// (buffering + local file system).
     pub native_bw: f64,
-    /// Per-row CPU cost of evaluating a predicate/aggregate in the
-    /// objclass handler (storage-side CPU); used when the PJRT runtime is
-    /// bypassed and for modelling server CPU load.
+    /// Per-row CPU cost of evaluating a predicate in the objclass
+    /// handler (storage-side CPU) — kept equal to the extension's
+    /// `ROW_PRED_COST` so the planner's estimates price what the
+    /// simulated handlers actually charge.
     pub cpu_row_cost_s: f64,
+    /// Per-byte CPU cost of encoding an objclass handler's result on the
+    /// storage server (the pushdown path re-serializes row partials; the
+    /// plain read path streams stored bytes and pays nothing here).
+    pub cpu_byte_cost_s: f64,
+    /// Client-side decode bandwidth (bytes/s) for fetched objects and
+    /// returned partials (mirrors the worker's decode cost).
+    pub client_decode_bw: f64,
+    /// Client-side per-row CPU for predicate/aggregate evaluation when a
+    /// sub-query runs client-side (mirrors the worker's row cost).
+    pub client_row_cost_s: f64,
 }
 
 impl CostParams {
@@ -52,7 +63,10 @@ impl CostParams {
             op_overhead_s: 300e-6,
             client_fwd_bw: 239.5e6,
             native_bw: 122.6e6,
-            cpu_row_cost_s: 8e-9,
+            cpu_row_cost_s: 10e-9,
+            cpu_byte_cost_s: 1e-9,
+            client_decode_bw: 2.0e9,
+            client_row_cost_s: 12e-9,
         }
     }
 
@@ -67,7 +81,10 @@ impl CostParams {
             op_overhead_s: 30e-6,
             client_fwd_bw: 2.0e9,
             native_bw: 1.2e9,
-            cpu_row_cost_s: 8e-9,
+            cpu_row_cost_s: 10e-9,
+            cpu_byte_cost_s: 1e-9,
+            client_decode_bw: 2.0e9,
+            client_row_cost_s: 12e-9,
         }
     }
 
@@ -82,7 +99,10 @@ impl CostParams {
             op_overhead_s: 8e-3, // seek-dominated per-op cost
             client_fwd_bw: 400e6,
             native_bw: 130e6,
-            cpu_row_cost_s: 8e-9,
+            cpu_row_cost_s: 10e-9,
+            cpu_byte_cost_s: 1e-9,
+            client_decode_bw: 2.0e9,
+            client_row_cost_s: 12e-9,
         }
     }
 
@@ -115,6 +135,128 @@ impl CostParams {
     /// Storage-side CPU time to scan `rows` rows.
     pub fn cpu_scan_time(&self, rows: u64) -> f64 {
         rows as f64 * self.cpu_row_cost_s
+    }
+
+    // ---- the planner's query-cost estimator --------------------------------
+
+    /// Estimated I/O cost of one sub-query on both sides of the offload
+    /// boundary: request dispatch, device read set, and (client side) the
+    /// fetch crossing the network plus its decode.
+    pub fn io_cost(&self, p: &AccessProfile) -> QueryCost {
+        let pushdown_s = self.net_time(p.request_bytes + 64)
+            + self.op_overhead_s
+            + p.scan_bytes as f64 / self.dev_read_bw;
+        let client_s = p.fetch_round_trips as f64
+            * (self.net_time(64) + self.op_overhead_s + self.net_latency_s)
+            + p.fetch_bytes as f64 / self.dev_read_bw
+            + p.fetch_bytes as f64 / self.net_bw
+            + p.fetch_bytes as f64 / self.client_decode_bw;
+        QueryCost {
+            pushdown_s,
+            client_s,
+            pushdown_bytes: p.request_bytes + 64,
+            client_bytes: p.fetch_bytes + 64 * p.fetch_round_trips as u64,
+        }
+    }
+
+    /// Estimated per-row compute cost (predicate + partial evaluation):
+    /// storage-side CPU when pushed down, worker CPU when client-side.
+    pub fn compute_cost(&self, p: &AccessProfile) -> QueryCost {
+        QueryCost {
+            pushdown_s: self.cpu_scan_time(p.rows),
+            client_s: p.rows as f64 * self.client_row_cost_s,
+            pushdown_bytes: 0,
+            client_bytes: 0,
+        }
+    }
+
+    /// Estimated cost of producing and shipping the pushed-down partial:
+    /// server-side result encoding, the response crossing the network,
+    /// and its decode at the driver. Client-side execution has no partial
+    /// to ship (its bytes are all in [`CostParams::io_cost`]).
+    pub fn reduce_cost(&self, p: &AccessProfile) -> QueryCost {
+        QueryCost {
+            pushdown_s: p.result_bytes as f64 * self.cpu_byte_cost_s
+                + self.net_time(p.result_bytes)
+                + p.result_bytes as f64 / self.client_decode_bw,
+            client_s: 0.0,
+            pushdown_bytes: p.result_bytes,
+            client_bytes: 0,
+        }
+    }
+
+    /// Full two-sided estimate for one sub-query: the sum of I/O, compute
+    /// and reduction components. The planner compares `pushdown_s`
+    /// against `client_s` and assigns the cheaper [`ExecMode`] per
+    /// object (`skyhook::plan::plan_costed`).
+    ///
+    /// [`ExecMode`]: crate::skyhook::ExecMode
+    pub fn estimate(&self, p: &AccessProfile) -> QueryCost {
+        let mut total = self.io_cost(p);
+        total.accumulate(&self.compute_cost(p));
+        total.accumulate(&self.reduce_cost(p));
+        total
+    }
+}
+
+/// What the planner knows about one sub-query before any I/O — the
+/// inputs of the [`CostParams`] query-cost estimator. Derived per object
+/// from the dataset metadata: row/byte counts from [`RowGroupMeta`],
+/// matching-row estimates from the zone-map `ValueRange`s
+/// (`skyhook::logical::estimate_selectivity`), byte counts from the
+/// schema's column widths and the projected-read layout.
+///
+/// [`RowGroupMeta`]: crate::dataset::metadata::RowGroupMeta
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AccessProfile {
+    /// Rows the (server- or client-side) scan must evaluate.
+    pub rows: u64,
+    /// Bytes the server-side pass reads from the device (projected
+    /// columns + header prefix; the whole object when nothing projects).
+    pub scan_bytes: u64,
+    /// Bytes a client-side execution fetches over the network.
+    pub fetch_bytes: u64,
+    /// Round trips the client-side fetch needs (stat + ranged reads for
+    /// columnar projected reads; one full read otherwise).
+    pub fetch_round_trips: u32,
+    /// Encoded pipeline-spec bytes shipped with a pushdown request.
+    pub request_bytes: u64,
+    /// Estimated bytes of the pushed-down partial crossing the network
+    /// back (constant for algebraic aggregates, `O(groups)` for grouped
+    /// partials, `O(k)` for top-k, `O(selectivity × rows)` for row scans
+    /// and holistic value shipping).
+    pub result_bytes: u64,
+}
+
+/// A two-sided cost estimate: what a sub-query (or a whole plan) costs
+/// if pushed down vs executed client-side, in estimated seconds and
+/// estimated bytes crossing the network. Produced by
+/// [`CostParams::estimate`]; rendered by `QueryPlan::explain`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QueryCost {
+    /// Estimated seconds if the movable stages run on the storage server.
+    pub pushdown_s: f64,
+    /// Estimated seconds if they run at the client.
+    pub client_s: f64,
+    /// Estimated network bytes for the pushdown side.
+    pub pushdown_bytes: u64,
+    /// Estimated network bytes for the client side.
+    pub client_bytes: u64,
+}
+
+impl QueryCost {
+    /// Does the estimate favor pushdown? Ties go to pushdown (moving the
+    /// computation to the data is the paper's default).
+    pub fn pushdown_wins(&self) -> bool {
+        self.pushdown_s <= self.client_s
+    }
+
+    /// Fold another estimate into this one (component/plan totals).
+    pub fn accumulate(&mut self, other: &QueryCost) {
+        self.pushdown_s += other.pushdown_s;
+        self.client_s += other.client_s;
+        self.pushdown_bytes += other.pushdown_bytes;
+        self.client_bytes += other.client_bytes;
     }
 }
 
@@ -214,6 +356,85 @@ mod tests {
         let hdd = CostParams::hdd();
         let flash = CostParams::flash();
         assert!(flash.dev_read_time(4096) < hdd.dev_read_time(4096) / 50.0);
+    }
+
+    /// Profile of an unprojected row scan: the client fetches the whole
+    /// object in one read; pushdown ships a `sel`-sized re-encoded batch.
+    fn full_scan_profile(bytes: u64, rows: u64, sel: f64) -> AccessProfile {
+        AccessProfile {
+            rows,
+            scan_bytes: bytes,
+            fetch_bytes: bytes,
+            fetch_round_trips: 1,
+            request_bytes: 32,
+            result_bytes: 64 + (sel * bytes as f64) as u64,
+        }
+    }
+
+    #[test]
+    fn estimator_picks_client_for_unselective_scans() {
+        // Selectivity ~1 with no projection: pushdown re-encodes and
+        // ships the whole object anyway, so its extra server CPU makes
+        // client-side the cheaper plan — at any object size.
+        let p = CostParams::paper_testbed();
+        for bytes in [4_096u64, 1 << 20] {
+            let rows = bytes / 28;
+            let est = p.estimate(&full_scan_profile(bytes, rows, 1.0));
+            assert!(
+                !est.pushdown_wins(),
+                "{bytes}B full scan: push {} vs client {}",
+                est.pushdown_s,
+                est.client_s
+            );
+        }
+    }
+
+    #[test]
+    fn estimator_picks_pushdown_for_selective_scans() {
+        // Selectivity ~0: the partial is tiny, so avoiding the fetch wins.
+        let p = CostParams::paper_testbed();
+        for bytes in [4_096u64, 1 << 20] {
+            let rows = bytes / 28;
+            let est = p.estimate(&full_scan_profile(bytes, rows, 0.01));
+            assert!(
+                est.pushdown_wins(),
+                "{bytes}B selective scan: push {} vs client {}",
+                est.pushdown_s,
+                est.client_s
+            );
+        }
+    }
+
+    #[test]
+    fn estimator_picks_pushdown_for_aggregates() {
+        // Constant-size partials vs a multi-round-trip projected fetch.
+        let p = CostParams::paper_testbed();
+        let est = p.estimate(&AccessProfile {
+            rows: 37_000,
+            scan_bytes: 150_000,
+            fetch_bytes: 150_000,
+            fetch_round_trips: 3,
+            request_bytes: 48,
+            result_bytes: 112,
+        });
+        assert!(est.pushdown_wins());
+        assert!(est.pushdown_bytes * 10 < est.client_bytes);
+    }
+
+    #[test]
+    fn estimate_is_component_sum_and_accumulates() {
+        let p = CostParams::paper_testbed();
+        let prof = full_scan_profile(65_536, 2_300, 0.5);
+        let est = p.estimate(&prof);
+        let sum = p.io_cost(&prof).pushdown_s
+            + p.compute_cost(&prof).pushdown_s
+            + p.reduce_cost(&prof).pushdown_s;
+        assert!((est.pushdown_s - sum).abs() < 1e-12);
+        let mut acc = QueryCost::default();
+        acc.accumulate(&est);
+        acc.accumulate(&est);
+        assert!((acc.client_s - 2.0 * est.client_s).abs() < 1e-12);
+        assert_eq!(acc.pushdown_bytes, 2 * est.pushdown_bytes);
     }
 
     #[test]

@@ -2,8 +2,8 @@
 //! names and sub-queries, schedules them over the worker pool, and
 //! aggregates the partial results — the Dask-scheduler stand-in.
 
-use super::logical::sort_rows;
-use super::plan::{group_prunes, plan_opts, ExecMode, QueryPlan};
+use super::logical::{merge_sorted, sort_rows};
+use super::plan::{group_prunes, plan_costed, ExecMode, QueryPlan};
 use super::query::{AggState, Predicate, Query};
 use super::worker::{self, SubOutput, SubResult};
 use crate::config::DriverConfig;
@@ -41,8 +41,15 @@ pub struct QueryStats {
     /// read (client-side partial-read scans only; pushdown coalesces on
     /// the storage device instead).
     pub reads_coalesced: u64,
-    /// Execution mode used.
+    /// Overall execution mode the planner chose (or was forced to).
     pub pushdown: bool,
+    /// Sub-queries the cost model assigned to the storage servers.
+    pub objects_pushdown: usize,
+    /// Sub-queries the cost model assigned to client-side execution.
+    pub objects_client: usize,
+    /// The planner's bytes-moved estimate for the chosen assignment —
+    /// compare against `bytes_moved` to judge the cost model.
+    pub bytes_estimated: u64,
 }
 
 /// Result of a query.
@@ -188,7 +195,9 @@ impl Driver {
     }
 
     /// [`Driver::execute`] with zone-map pruning optionally disabled —
-    /// the unpruned baseline the pruning benches compare against.
+    /// the unpruned baseline the pruning benches compare against. Plans
+    /// against the cluster's calibrated cost profile, so the per-object
+    /// offload choice reflects the hardware this driver runs on.
     pub fn execute_opts(
         &self,
         query: &Query,
@@ -196,7 +205,7 @@ impl Driver {
         prune: bool,
     ) -> Result<QueryResult> {
         let (meta, _) = metadata::load_meta(&self.cluster, 0.0, &query.dataset)?;
-        let plan = plan_opts(query, &meta, force_mode, prune)?;
+        let plan = plan_costed(query, &meta, force_mode, prune, self.cluster.cost())?;
         self.execute_plan(&plan)
     }
 
@@ -222,11 +231,13 @@ impl Driver {
         });
 
         // Gather: merge partials in sub-query (object) order, so every
-        // execution mode folds the same arithmetic sequence.
+        // execution mode folds the same arithmetic sequence. Row partials
+        // are kept separate (with their pre-sortedness) so a sorted query
+        // can k-way merge them instead of re-sorting the concatenation.
         let mut bytes_moved = 0u64;
         let mut reads_coalesced = 0u64;
         let mut sim_finish = at;
-        let mut rows: Option<Batch> = None;
+        let mut row_parts: Vec<(Batch, bool)> = Vec::new();
         let mut agg_states: Vec<AggState> = Vec::new();
         let mut groups: std::collections::BTreeMap<Vec<i64>, Vec<AggState>> = Default::default();
         for r in results {
@@ -235,10 +246,7 @@ impl Driver {
             reads_coalesced += r.reads_coalesced;
             sim_finish = sim_finish.max(r.finish);
             match r.output {
-                SubOutput::Rows(b) => match &mut rows {
-                    Some(acc) => acc.concat(&b)?,
-                    None => rows = Some(b),
-                },
+                SubOutput::Rows(b) => row_parts.push((b, r.presorted)),
                 SubOutput::Aggs(states) => {
                     if agg_states.is_empty() {
                         agg_states = states;
@@ -304,7 +312,30 @@ impl Driver {
                     .collect::<Result<Vec<f64>>>()?;
                 out.push((k, vals));
             }
-            // Merge-side limit over the key-ordered group rows.
+            // HAVING: filter the finalized group rows (merge-side by
+            // nature — it needs cross-object totals). Group keys resolve
+            // by name, aggregates by display form ("sum(val)") — the
+            // same rule the planner validated; display names render once
+            // up front, not per group.
+            if query.having != Predicate::True {
+                let agg_names: Vec<String> =
+                    query.aggregates.iter().map(|a| a.to_string()).collect();
+                let mut kept = Vec::with_capacity(out.len());
+                for (k, vals) in out {
+                    let keep = query.having.eval_row(&|name: &str| {
+                        if let Some(i) = query.group_by.iter().position(|g| g == name) {
+                            return Some(k[i] as f64);
+                        }
+                        agg_names.iter().position(|a| a == name).map(|i| vals[i])
+                    })?;
+                    if keep {
+                        kept.push((k, vals));
+                    }
+                }
+                out = kept;
+            }
+            // Merge-side limit over the key-ordered (HAVING-surviving)
+            // group rows.
             if let Some(n) = query.limit {
                 out.truncate(n);
             }
@@ -317,24 +348,61 @@ impl Driver {
         // pruned (or the dataset has zero objects), synthesize an empty
         // batch with the carried schema so pruned and unpruned executions
         // are indistinguishable to callers. Then run the merge-side
-        // stages: final sort, limit/truncate, final projection.
+        // stages: k-way merge of pre-sorted partials (or plain concat),
+        // limit/truncate, final projection.
         let rows = if query.is_aggregate() {
             None
         } else {
-            let mut batch = match rows {
-                Some(b) => b,
-                None => {
-                    let schema = match query.carry_columns() {
-                        Some(cols) => {
-                            let refs: Vec<&str> = cols.iter().map(String::as_str).collect();
-                            plan.schema.project(&refs)?
-                        }
-                        None => plan.schema.clone(),
-                    };
-                    Batch::empty(&schema)
+            let mut batch = if row_parts.is_empty() {
+                let schema = match query.carry_columns() {
+                    Some(cols) => {
+                        let refs: Vec<&str> = cols.iter().map(String::as_str).collect();
+                        plan.schema.project(&refs)?
+                    }
+                    None => plan.schema.clone(),
+                };
+                Batch::empty(&schema)
+            } else if query.sort_keys.is_empty() {
+                // Unsorted: concatenate in object order.
+                let mut it = row_parts.into_iter();
+                let (mut acc, _) = it.next().expect("non-empty");
+                for (b, _) in it {
+                    acc.concat(&b)?;
                 }
+                acc
+            } else if let Some(n) = query.limit {
+                // Top-k: k-way partial-order merge. Pushed-down partials
+                // arrive pre-sorted and truncated to k; client-side
+                // partials are sorted and truncated here first, then the
+                // runs merge in O(k × parts) without re-sorting the
+                // concatenation.
+                let mut parts = Vec::with_capacity(row_parts.len());
+                for (b, presorted) in row_parts {
+                    let mut b = if presorted {
+                        b
+                    } else {
+                        sort_rows(&b, &query.sort_keys)?
+                    };
+                    if b.nrows() > n {
+                        b = b.slice(0, n)?;
+                    }
+                    parts.push(b);
+                }
+                merge_sorted(&parts, &query.sort_keys, Some(n))?
+            } else {
+                // Bare sort (no limit): nothing was truncated per object,
+                // so a merge saves no work — concatenate and stable-sort
+                // (identical ordering to the k-way merge).
+                let mut it = row_parts.into_iter();
+                let (mut acc, _) = it.next().expect("non-empty");
+                for (b, _) in it {
+                    acc.concat(&b)?;
+                }
+                sort_rows(&acc, &query.sort_keys)?
             };
-            if !query.sort_keys.is_empty() {
+            // The empty-synthesis path still validates sort keys against
+            // the carried schema, like the sorted path would.
+            if batch.nrows() == 0 && !query.sort_keys.is_empty() {
                 batch = sort_rows(&batch, &query.sort_keys)?;
             }
             if let Some(n) = query.limit {
@@ -368,16 +436,19 @@ impl Driver {
                 bytes_skipped: plan.bytes_skipped,
                 reads_coalesced,
                 pushdown,
+                objects_pushdown: plan.assignment.0,
+                objects_client: plan.assignment.1,
+                bytes_estimated: plan.est_bytes,
             },
         })
     }
 
     /// Plan a query against the live dataset metadata and render the
-    /// staged pipeline (per-operator offload sides) without executing it
-    /// — the CLI's EXPLAIN.
+    /// staged pipeline (per-operator offload sides with their estimated
+    /// costs) without executing it — the CLI's EXPLAIN.
     pub fn explain(&self, query: &Query, force_mode: Option<ExecMode>) -> Result<String> {
         let (meta, _) = metadata::load_meta(&self.cluster, 0.0, &query.dataset)?;
-        Ok(plan_opts(query, &meta, force_mode, true)?.explain())
+        Ok(plan_costed(query, &meta, force_mode, true, self.cluster.cost())?.explain())
     }
 
     /// Approximate quantile via the §3.2 de-composable approximation:
@@ -632,7 +703,12 @@ mod tests {
         assert_eq!(rows.nrows(), 2000);
         assert_eq!(rows.schema, b.schema);
         assert!(r.stats.objects > 1, "should span multiple objects");
-        assert!(r.stats.pushdown);
+        // A full scan reduces nothing at the objects, so the cost model
+        // assigns every sub-query to the plain (client-side) read path.
+        assert!(!r.stats.pushdown);
+        assert_eq!(r.stats.objects_client, r.stats.objects);
+        assert_eq!(r.stats.objects_pushdown, 0);
+        assert!(r.stats.bytes_estimated > 0);
         assert!(r.stats.sim_seconds > 0.0);
     }
 
@@ -906,6 +982,112 @@ mod tests {
             unreachable!()
         };
         assert!(ts.iter().enumerate().all(|(i, &t)| t == i as i64));
+    }
+
+    #[test]
+    fn having_filters_groups_in_every_mode() {
+        let d = driver(4, 4);
+        seed(&d, 3000);
+        let base = Query::scan("sensors")
+            .group("sensor")
+            .aggregate(AggFunc::Count, "val")
+            .aggregate(AggFunc::Mean, "val");
+        let all = d.execute(&base, None).unwrap().groups.unwrap();
+        let hq = base
+            .clone()
+            .having(Predicate::cmp("count(val)", CmpOp::Gt, 40.0));
+        let hp = d.execute(&hq, Some(ExecMode::Pushdown)).unwrap().groups.unwrap();
+        let hc = d.execute(&hq, Some(ExecMode::ClientSide)).unwrap().groups.unwrap();
+        let hd = d.execute(&hq, None).unwrap().groups.unwrap();
+        assert_eq!(hp, hc);
+        assert_eq!(hp, hd);
+        // HAVING equals a manual filter of the finalized groups.
+        let want: Vec<_> = all.iter().filter(|(_, v)| v[0] > 40.0).cloned().collect();
+        assert_eq!(hp, want);
+        assert!(!hp.is_empty() && hp.len() < all.len(), "uninteresting cut");
+        // Group keys are valid HAVING columns; limit truncates after.
+        let kq = base
+            .clone()
+            .having(Predicate::cmp("sensor", CmpOp::Le, 3.0))
+            .limit(2);
+        let kg = d.execute(&kq, None).unwrap().groups.unwrap();
+        assert!(kg.len() <= 2);
+        assert!(kg.iter().all(|(k, _)| k[0] <= 3));
+        // Unknown HAVING columns and ungrouped HAVING fail at the plan.
+        let bad = base.clone().having(Predicate::cmp("val", CmpOp::Gt, 0.0));
+        assert!(d.execute(&bad, None).is_err());
+        let scalar = Query::scan("sensors")
+            .aggregate(AggFunc::Count, "val")
+            .having(Predicate::cmp("count(val)", CmpOp::Gt, 0.0));
+        assert!(d.execute(&scalar, None).is_err());
+    }
+
+    #[test]
+    fn planner_chosen_mixed_modes_match_forced() {
+        let d = driver(4, 4);
+        let b = seed(&d, 3000);
+        // ts < 600 straddles the zone maps: early objects match fully
+        // (client-leaning full fetch), later ones partially or not at
+        // all — whatever mix the cost model picks, results must equal
+        // the forced single-mode runs.
+        let q = Query::scan("sensors").filter(Predicate::cmp("ts", CmpOp::Lt, 600.0));
+        let rp = d.execute(&q, Some(ExecMode::Pushdown)).unwrap();
+        let rc = d.execute(&q, Some(ExecMode::ClientSide)).unwrap();
+        let rd = d.execute(&q, None).unwrap();
+        let (bp, bc, bd) = (rp.rows.unwrap(), rc.rows.unwrap(), rd.rows.unwrap());
+        assert_eq!(bp, bc);
+        assert_eq!(bp, bd);
+        assert_eq!(bp.nrows(), 600);
+        // The chosen plan reports its assignment and its bytes estimate.
+        assert_eq!(
+            rd.stats.objects_pushdown + rd.stats.objects_client,
+            rd.stats.objects
+        );
+        assert!(rd.stats.bytes_estimated > 0);
+        // The estimate tracks the actual bytes within an order of
+        // magnitude (it models payloads, not exact wire framing).
+        let est = rd.stats.bytes_estimated as f64;
+        let act = rd.stats.bytes_moved as f64;
+        assert!(est / act < 10.0 && act / est < 10.0, "est {est} vs actual {act}");
+        // Forced plans pin the assignment counters to one side.
+        assert_eq!(rp.stats.objects_client, 0);
+        assert_eq!(rc.stats.objects_pushdown, 0);
+        // Direct row-content check against the source batch.
+        let crate::dataset::table::Column::I64(ts) = bd.col("ts").unwrap() else {
+            unreachable!()
+        };
+        assert!(ts.iter().all(|&t| t < 600));
+        assert_eq!(b.schema, bd.schema);
+    }
+
+    #[test]
+    fn kway_merge_matches_single_sort_semantics() {
+        let d = driver(4, 4);
+        seed(&d, 2500);
+        // Duplicate-heavy sort key (flag ∈ {0,1}) exercises merge ties:
+        // stability requires (object, row) order among equal keys, which
+        // must match what a stable sort of the concatenation produced.
+        let q = Query::scan("sensors")
+            .select(&["ts", "flag"])
+            .sort("flag")
+            .sort_desc("ts");
+        let rp = d.execute(&q, Some(ExecMode::Pushdown)).unwrap().rows.unwrap();
+        let rc = d.execute(&q, Some(ExecMode::ClientSide)).unwrap().rows.unwrap();
+        assert_eq!(rp, rc);
+        assert_eq!(rp.nrows(), 2500);
+        let crate::dataset::table::Column::I64(flags) = rp.col("flag").unwrap() else {
+            unreachable!()
+        };
+        assert!(flags.windows(2).all(|w| w[0] <= w[1]));
+        // Top-k across modes: pre-sorted pushdown partials and
+        // driver-sorted client partials merge to the same answer.
+        let tq = Query::scan("sensors").select(&["ts"]).top_k("flag", false, 100);
+        let tp = d.execute(&tq, Some(ExecMode::Pushdown)).unwrap().rows.unwrap();
+        let tc = d.execute(&tq, Some(ExecMode::ClientSide)).unwrap().rows.unwrap();
+        let td = d.execute(&tq, None).unwrap().rows.unwrap();
+        assert_eq!(tp, tc);
+        assert_eq!(tp, td);
+        assert_eq!(tp.nrows(), 100);
     }
 
     #[test]

@@ -38,6 +38,11 @@ const ROW_PRED_COST: f64 = 10e-9;
 const VAL_AGG_COST: f64 = 4e-9;
 /// Per-row CPU cost of the per-object partial sort (seconds).
 const SORT_ROW_COST: f64 = 8e-9;
+/// Per-byte CPU cost of re-serializing a row-partial result (seconds) —
+/// the plain read path streams stored bytes and pays nothing here, which
+/// is exactly why the cost model can prefer client-side execution for
+/// unselective scans (`CostParams::cpu_byte_cost_s` mirrors this).
+const RESULT_ENC_COST: f64 = 1e-9;
 
 /// Storage-side compute engine for the masked filter+aggregate hot spot.
 /// Implemented by `runtime::PjrtEngine` (the AOT JAX/Pallas kernel); the
@@ -355,7 +360,9 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
             }
             None => filtered,
         };
-        Ok(encode_batch(&result, Layout::Col))
+        let payload = encode_batch(&result, Layout::Col);
+        b.charge_cpu(payload.len() as f64 * RESULT_ENC_COST);
+        Ok(payload)
     });
 
     // skyhook.exec — the chained operator pipeline, one pass: decode a
@@ -452,8 +459,10 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
             None if !spec.sort.is_empty() => sort_rows(&result, &spec.sort)?,
             None => result,
         };
+        let payload = encode_batch(&result, Layout::Col);
+        b.charge_cpu(payload.len() as f64 * RESULT_ENC_COST);
         w.u8(0);
-        w.raw(&encode_batch(&result, Layout::Col));
+        w.raw(&payload);
         Ok(w.finish())
     });
 

@@ -3,12 +3,13 @@
 //!
 //! A [`LogicalPlan`] is a chain of operators over a `Scan` leaf —
 //! `Filter`, `Project`, `Aggregate` (any number of aggregate expressions
-//! over any number of i64 group keys), `Sort`, `Limit`, and the fused
-//! `TopK`. The fluent [`Query`] builder constructs the same shape
-//! directly; [`LogicalPlan::to_query`] validates an arbitrary tree into
-//! that flat form (rejecting shapes the engine cannot run, e.g. a filter
-//! over aggregate output), and [`Query::logical`] lifts a query back
-//! into the tree.
+//! over any number of i64 group keys; a `Filter` *above* an `Aggregate`
+//! is the HAVING operator over its finalized group rows), `Sort`,
+//! `Limit`, and the fused `TopK`. The fluent [`Query`] builder
+//! constructs the same shape directly; [`LogicalPlan::to_query`]
+//! validates an arbitrary tree into that flat form (rejecting shapes
+//! the engine cannot run, e.g. a projection over aggregate output), and
+//! [`Query::logical`] lifts a query back into the tree.
 //!
 //! The planner (`skyhook::plan`) compiles the IR into a staged
 //! `QueryPlan`: the operators up to and including the per-object
@@ -18,7 +19,8 @@
 //! finalization) run at the driver. The offload boundary is chosen per
 //! operator, not per query.
 
-use super::query::{AggFunc, AggState, Aggregate, Predicate, Query, SortKey};
+use super::query::{AggFunc, AggState, Aggregate, CmpOp, Predicate, Query, SortKey};
+use crate::dataset::metadata::ValueRange;
 use crate::dataset::table::{Batch, Column};
 use crate::error::{Error, Result};
 use crate::util::bytes::{ByteReader, ByteWriter};
@@ -70,6 +72,9 @@ impl LogicalPlan {
         }
     }
 
+    /// Wrap this plan in a row filter. Below an `Aggregate` it is the
+    /// WHERE clause; *above* one it is the HAVING operator (a filter over
+    /// the finalized group rows, validated by [`LogicalPlan::to_query`]).
     pub fn filter(self, predicate: Predicate) -> LogicalPlan {
         LogicalPlan::Filter {
             input: Box::new(self),
@@ -77,6 +82,7 @@ impl LogicalPlan {
         }
     }
 
+    /// Keep only the named columns (row pipelines only).
     pub fn project(self, columns: &[&str]) -> LogicalPlan {
         LogicalPlan::Project {
             input: Box::new(self),
@@ -84,6 +90,7 @@ impl LogicalPlan {
         }
     }
 
+    /// Aggregate expressions over `keys` (empty keys = scalar output).
     pub fn aggregate(self, aggs: Vec<Aggregate>, keys: &[&str]) -> LogicalPlan {
         LogicalPlan::Aggregate {
             input: Box::new(self),
@@ -92,6 +99,7 @@ impl LogicalPlan {
         }
     }
 
+    /// Total order over the rows (merge-side; reduces nothing per object).
     pub fn sort(self, keys: Vec<SortKey>) -> LogicalPlan {
         LogicalPlan::Sort {
             input: Box::new(self),
@@ -99,6 +107,7 @@ impl LogicalPlan {
         }
     }
 
+    /// Keep the first `n` rows (or group rows, over aggregate output).
     pub fn limit(self, n: usize) -> LogicalPlan {
         LogicalPlan::Limit {
             input: Box::new(self),
@@ -106,6 +115,8 @@ impl LogicalPlan {
         }
     }
 
+    /// Fused Sort+Limit: the best `n` rows under `keys`, offloadable as
+    /// per-object partial top-k.
     pub fn top_k(self, keys: Vec<SortKey>, n: usize) -> LogicalPlan {
         LogicalPlan::TopK {
             input: Box::new(self),
@@ -178,10 +189,14 @@ impl LogicalPlan {
     ///
     /// Accepted shape (bottom-up): one `Scan`, any number of `Filter`s
     /// (AND-merged) below the first non-filter operator, at most one
-    /// `Project`, at most one `Aggregate`, then `Sort`/`Limit` (or the
-    /// fused `TopK`) on top. Anything else — a filter or projection over
-    /// aggregate output, a sort above a limit, duplicated operators — is
-    /// rejected with a query error rather than silently reordered.
+    /// `Project`, at most one `Aggregate` — optionally topped by
+    /// `Filter`s over its *grouped* output, which flatten into the
+    /// HAVING clause (`Query::having`; their columns must name group
+    /// keys or aggregates by display form) — then `Sort`/`Limit` (or
+    /// the fused `TopK`) on top. Anything else — a projection over
+    /// aggregate output, a filter over a scalar aggregate, a sort above
+    /// a limit, duplicated operators — is rejected with a query error
+    /// rather than silently reordered.
     pub fn to_query(&self) -> Result<Query> {
         // Walk down to the leaf collecting the chain, then fold bottom-up.
         let mut chain = Vec::new();
@@ -207,15 +222,25 @@ impl LogicalPlan {
                     return Err(Error::Query("Scan above the leaf".into()));
                 }
                 LogicalPlan::Filter { predicate, .. } => {
-                    if has_agg {
-                        return Err(Error::Query(
-                            "Filter over aggregate output is not supported".into(),
-                        ));
-                    }
                     if has_sort || has_limit {
                         return Err(Error::Query(
                             "Filter must precede Sort/Limit".into(),
                         ));
+                    }
+                    if has_agg {
+                        // Filter above Aggregate is the HAVING operator:
+                        // it runs at the driver over the finalized group
+                        // rows. Its columns must name group keys or
+                        // aggregate expressions ("sum(val)") — anything
+                        // else cannot exist above the aggregate.
+                        q.having = if q.having == Predicate::True {
+                            predicate.clone()
+                        } else {
+                            std::mem::replace(&mut q.having, Predicate::True)
+                                .and(predicate.clone())
+                        };
+                        q.validate_having()?;
+                        continue;
                     }
                     q.predicate = if has_filter {
                         std::mem::replace(&mut q.predicate, Predicate::True)
@@ -328,6 +353,10 @@ impl Query {
         if self.is_aggregate() {
             let keys: Vec<&str> = self.group_by.iter().map(String::as_str).collect();
             plan = plan.aggregate(self.aggregates.clone(), &keys);
+            if self.having != Predicate::True {
+                // Filter above Aggregate is the HAVING operator.
+                plan = plan.filter(self.having.clone());
+            }
         } else if let Some(p) = &self.projection {
             let cols: Vec<&str> = p.iter().map(String::as_str).collect();
             plan = plan.project(&cols);
@@ -351,6 +380,7 @@ impl Query {
 /// the server does *so the client does not have to move the bytes*.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PipelineSpec {
+    /// Row filter evaluated first, against the decoded column set.
     pub predicate: Predicate,
     /// Columns row-query partials must carry (projection ∪ sort keys);
     /// `None` = all columns.
@@ -369,6 +399,7 @@ pub struct PipelineSpec {
 }
 
 impl PipelineSpec {
+    /// Wire encoding (the `skyhook.exec` call input).
     pub fn encode(&self) -> Vec<u8> {
         let mut w = ByteWriter::new();
         self.predicate.encode_into(&mut w);
@@ -410,6 +441,7 @@ impl PipelineSpec {
         w.finish()
     }
 
+    /// Wire decoding (inverse of [`PipelineSpec::encode`]).
     pub fn decode(buf: &[u8]) -> Result<PipelineSpec> {
         let mut r = ByteReader::new(buf);
         let predicate = Predicate::decode_from(&mut r)?;
@@ -466,6 +498,103 @@ impl PipelineSpec {
     }
 }
 
+// ---- cardinality / selectivity estimation ----------------------------------
+
+/// Estimate the fraction of `rows` rows a predicate matches, from the
+/// per-column zone-map [`ValueRange`]s of one row group (`None` =
+/// unknown column → assume everything matches).
+///
+/// Assumptions: values are uniform over `[lo, hi]`, conjuncts are
+/// independent (`sel(a && b) = sel(a)·sel(b)`), equality on a non-point
+/// range matches a handful of rows. NaN rows satisfy only `Ne`, exactly
+/// like evaluation and pruning. The estimate feeds the planner's
+/// per-stage offload choice ([`crate::simnet::AccessProfile`]); it
+/// biases byte counts, never results.
+pub fn estimate_selectivity(
+    pred: &Predicate,
+    rows: u64,
+    range: &dyn Fn(&str) -> Option<ValueRange>,
+) -> f64 {
+    let s = match pred {
+        Predicate::True => 1.0,
+        Predicate::Cmp { col, op, value } => match range(col) {
+            None => 1.0,
+            Some(r) => {
+                let nan_frac = if rows > 0 {
+                    (r.nans as f64 / rows as f64).min(1.0)
+                } else {
+                    0.0
+                };
+                let non_nan = if !r.has_values() {
+                    0.0
+                } else if r.hi > r.lo {
+                    let frac = ((*value - r.lo) / (r.hi - r.lo)).clamp(0.0, 1.0);
+                    let point = (1.0 / rows.max(1) as f64).max(0.01);
+                    match op {
+                        CmpOp::Lt | CmpOp::Le => frac,
+                        CmpOp::Gt | CmpOp::Ge => 1.0 - frac,
+                        CmpOp::Eq => {
+                            if *value >= r.lo && *value <= r.hi {
+                                point
+                            } else {
+                                0.0
+                            }
+                        }
+                        CmpOp::Ne => {
+                            if *value >= r.lo && *value <= r.hi {
+                                1.0 - point
+                            } else {
+                                1.0
+                            }
+                        }
+                    }
+                } else {
+                    // Point range: the comparison is decided outright.
+                    if op.eval(r.lo, *value) {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                };
+                non_nan * (1.0 - nan_frac)
+                    + if *op == CmpOp::Ne { nan_frac } else { 0.0 }
+            }
+        },
+        Predicate::And(a, b) => {
+            estimate_selectivity(a, rows, range) * estimate_selectivity(b, rows, range)
+        }
+        Predicate::Or(a, b) => {
+            let x = estimate_selectivity(a, rows, range);
+            let y = estimate_selectivity(b, rows, range);
+            x + y - x * y
+        }
+        Predicate::Not(p) => 1.0 - estimate_selectivity(p, rows, range),
+    };
+    s.clamp(0.0, 1.0)
+}
+
+/// Estimate the distinct group count a grouped aggregate produces over
+/// `matching_rows` rows: the product of per-key distinct estimates
+/// (integral span of the zone-map range when known, `√rows` otherwise),
+/// capped at the matching row count. Sizes the grouped-partial bytes in
+/// the planner's cost model.
+pub fn estimate_groups(
+    keys: &[String],
+    matching_rows: u64,
+    range: &dyn Fn(&str) -> Option<ValueRange>,
+) -> u64 {
+    let cap = matching_rows.max(1) as f64;
+    let mut product = 1.0f64;
+    for k in keys {
+        let distinct = match range(k) {
+            Some(r) if r.has_values() => (r.hi - r.lo + 1.0).max(1.0),
+            _ => cap.sqrt().max(1.0),
+        };
+        product = (product * distinct).min(cap);
+    }
+    product.min(cap) as u64
+}
+
 // ---- shared row ordering ---------------------------------------------------
 
 /// One extracted sort-key column: floats compared with `total_cmp` (NaN
@@ -478,12 +607,11 @@ enum KeyVals<'a> {
     Str(&'a [String]),
 }
 
-/// Stable sort of a batch's rows by `keys`. Shared by the storage-side
-/// partial top-k (`skyhook.exec`) and the driver's merge-side sort, so
-/// pushed-down and client-side executions order rows identically.
-pub fn sort_rows(batch: &Batch, keys: &[SortKey]) -> Result<Batch> {
-    // Resolve keys first: a missing sort column errors regardless of row
-    // count, so error behavior never depends on how many rows matched.
+/// Extract the sort-key columns of one batch — the single definition of
+/// how key values are read (F32 widened to f64, i64 native, strings
+/// borrowed), shared by [`sort_rows`] and [`merge_sorted`] so their
+/// comparators can never drift apart.
+fn key_vals<'a>(batch: &'a Batch, keys: &[SortKey]) -> Result<Vec<(KeyVals<'a>, bool)>> {
     let mut cols = Vec::with_capacity(keys.len());
     for k in keys {
         let kv = match batch.col(&k.col)? {
@@ -494,6 +622,16 @@ pub fn sort_rows(batch: &Batch, keys: &[SortKey]) -> Result<Batch> {
         };
         cols.push((kv, k.desc));
     }
+    Ok(cols)
+}
+
+/// Stable sort of a batch's rows by `keys`. Shared by the storage-side
+/// partial top-k (`skyhook.exec`) and the driver's merge-side sort, so
+/// pushed-down and client-side executions order rows identically.
+pub fn sort_rows(batch: &Batch, keys: &[SortKey]) -> Result<Batch> {
+    // Resolve keys first: a missing sort column errors regardless of row
+    // count, so error behavior never depends on how many rows matched.
+    let cols = key_vals(batch, keys)?;
     if cols.is_empty() || batch.nrows() <= 1 {
         return Ok(batch.clone());
     }
@@ -524,6 +662,86 @@ pub fn top_k_rows(batch: &Batch, keys: &[SortKey], n: usize) -> Result<Batch> {
     } else {
         Ok(sorted)
     }
+}
+
+/// K-way partial-order merge of per-object row partials, each already
+/// sorted by `keys`, truncated to `limit` rows when given — the
+/// merge-side half of distributed top-k and of the final sort. Replaces
+/// concatenate-then-resort: pre-sorted partials are consumed in order,
+/// so a top-k merge touches at most `limit × parts` rows instead of
+/// sorting everything again.
+///
+/// Ordering is identical to a *stable* sort of the concatenation: keys
+/// compare exactly like [`sort_rows`] (floats via `total_cmp`, i64
+/// natively, strings lexicographically), and ties keep (part order, row
+/// order). All parts must share one schema.
+pub fn merge_sorted(parts: &[Batch], keys: &[SortKey], limit: Option<usize>) -> Result<Batch> {
+    let Some(first) = parts.first() else {
+        return Err(Error::Query("merge_sorted needs at least one batch".into()));
+    };
+    // Resolve key columns per part up front (errors never depend on row
+    // counts), and reject schema drift outright.
+    let mut part_keys: Vec<Vec<(KeyVals, bool)>> = Vec::with_capacity(parts.len());
+    for part in parts {
+        if part.schema != first.schema {
+            return Err(Error::Query("merge_sorted parts disagree on schema".into()));
+        }
+        part_keys.push(key_vals(part, keys)?);
+    }
+    let total: usize = parts.iter().map(|b| b.nrows()).sum();
+    let want = limit.map_or(total, |n| n.min(total));
+    // Compare the head rows of two parts under the sort keys.
+    let row_cmp = |a: (usize, usize), b: (usize, usize)| -> std::cmp::Ordering {
+        for ((ka, desc), (kb, _)) in part_keys[a.0].iter().zip(&part_keys[b.0]) {
+            let o = match (ka, kb) {
+                (KeyVals::Num(x), KeyVals::Num(y)) => x[a.1].total_cmp(&y[b.1]),
+                (KeyVals::Int(x), KeyVals::Int(y)) => x[a.1].cmp(&y[b.1]),
+                (KeyVals::Str(x), KeyVals::Str(y)) => x[a.1].cmp(&y[b.1]),
+                // Same schema ⇒ same column type per key.
+                _ => unreachable!("schema equality checked above"),
+            };
+            let o = if *desc { o.reverse() } else { o };
+            if o != std::cmp::Ordering::Equal {
+                return o;
+            }
+        }
+        std::cmp::Ordering::Equal
+    };
+    let mut out: Vec<Column> = first
+        .schema
+        .columns
+        .iter()
+        .map(|c| Column::empty(c.dtype))
+        .collect();
+    let mut cursors = vec![0usize; parts.len()];
+    for _ in 0..want {
+        // Linear scan over the (few, ≤ #objects) cursors; strict `Less`
+        // keeps the earliest part on ties — the stable order.
+        let mut best: Option<usize> = None;
+        for (pi, part) in parts.iter().enumerate() {
+            if cursors[pi] >= part.nrows() {
+                continue;
+            }
+            best = match best {
+                None => Some(pi),
+                Some(bi) => {
+                    if row_cmp((pi, cursors[pi]), (bi, cursors[bi]))
+                        == std::cmp::Ordering::Less
+                    {
+                        Some(pi)
+                    } else {
+                        Some(bi)
+                    }
+                }
+            };
+        }
+        let bi = best.expect("want is bounded by the total row count");
+        for (oc, c) in out.iter_mut().zip(&parts[bi].columns) {
+            oc.push_from(c, cursors[bi])?;
+        }
+        cursors[bi] += 1;
+    }
+    Batch::new(first.schema.clone(), out)
 }
 
 /// Grouped multi-aggregate partials over a masked batch: multi-column
@@ -674,6 +892,217 @@ mod tests {
             .project(&["a"])
             .to_query()
             .is_err());
+    }
+
+    #[test]
+    fn having_is_filter_above_aggregate() {
+        // Filter above a *grouped* Aggregate flattens into Query::having.
+        let lp = LogicalPlan::scan("t")
+            .filter(Predicate::cmp("flag", CmpOp::Eq, 0.0))
+            .aggregate(
+                vec![
+                    Aggregate::new(AggFunc::Count, "val"),
+                    Aggregate::new(AggFunc::Sum, "val"),
+                ],
+                &["sensor"],
+            )
+            .filter(Predicate::cmp("count(val)", CmpOp::Gt, 10.0));
+        let q = lp.to_query().unwrap();
+        assert_eq!(q.predicate, Predicate::cmp("flag", CmpOp::Eq, 0.0));
+        assert_eq!(q.having, Predicate::cmp("count(val)", CmpOp::Gt, 10.0));
+        // Round trip through the IR is the identity.
+        assert_eq!(q.logical().to_query().unwrap(), q);
+        // Two HAVING filters AND-merge; group keys are valid columns.
+        let q = LogicalPlan::scan("t")
+            .aggregate(vec![Aggregate::new(AggFunc::Sum, "val")], &["sensor"])
+            .filter(Predicate::cmp("sum(val)", CmpOp::Gt, 1.0))
+            .filter(Predicate::cmp("sensor", CmpOp::Le, 5.0))
+            .to_query()
+            .unwrap();
+        assert_eq!(
+            q.having,
+            Predicate::cmp("sum(val)", CmpOp::Gt, 1.0)
+                .and(Predicate::cmp("sensor", CmpOp::Le, 5.0))
+        );
+        // HAVING + limit plans (limit truncates after the HAVING filter).
+        assert!(LogicalPlan::scan("t")
+            .aggregate(vec![Aggregate::new(AggFunc::Sum, "val")], &["sensor"])
+            .filter(Predicate::cmp("sum(val)", CmpOp::Gt, 1.0))
+            .limit(3)
+            .to_query()
+            .is_ok());
+        // Rejected shapes: scalar aggregate, unknown column, after limit.
+        assert!(LogicalPlan::scan("t")
+            .aggregate(vec![Aggregate::new(AggFunc::Sum, "val")], &[])
+            .filter(Predicate::cmp("sum(val)", CmpOp::Gt, 1.0))
+            .to_query()
+            .is_err());
+        assert!(LogicalPlan::scan("t")
+            .aggregate(vec![Aggregate::new(AggFunc::Sum, "val")], &["sensor"])
+            .filter(Predicate::cmp("val", CmpOp::Gt, 1.0))
+            .to_query()
+            .is_err());
+        assert!(LogicalPlan::scan("t")
+            .aggregate(vec![Aggregate::new(AggFunc::Sum, "val")], &["sensor"])
+            .limit(3)
+            .filter(Predicate::cmp("sum(val)", CmpOp::Gt, 1.0))
+            .to_query()
+            .is_err());
+    }
+
+    #[test]
+    fn selectivity_estimates_track_uniform_ranges() {
+        let range = |col: &str| match col {
+            "val" => Some(ValueRange::exact(0.0, 100.0)),
+            "k" => Some(ValueRange::exact(7.0, 7.0)),
+            _ => None,
+        };
+        let sel = |p: &Predicate| estimate_selectivity(p, 1000, &range);
+        let feq = |a: f64, b: f64| (a - b).abs() < 1e-9;
+        assert!(feq(sel(&Predicate::True), 1.0));
+        assert!(feq(sel(&Predicate::cmp("val", CmpOp::Lt, 25.0)), 0.25));
+        assert!(feq(sel(&Predicate::cmp("val", CmpOp::Ge, 90.0)), 0.10));
+        // Out-of-range comparisons clamp to 0 / 1.
+        assert!(feq(sel(&Predicate::cmp("val", CmpOp::Gt, 200.0)), 0.0));
+        assert!(feq(sel(&Predicate::cmp("val", CmpOp::Lt, 200.0)), 1.0));
+        // Equality on a wide range matches a sliver; Ne the complement.
+        assert!(sel(&Predicate::cmp("val", CmpOp::Eq, 50.0)) < 0.05);
+        assert!(sel(&Predicate::cmp("val", CmpOp::Ne, 50.0)) > 0.95);
+        // Point ranges are decided outright.
+        assert!(feq(sel(&Predicate::cmp("k", CmpOp::Eq, 7.0)), 1.0));
+        assert!(feq(sel(&Predicate::cmp("k", CmpOp::Gt, 7.0)), 0.0));
+        // Unknown columns assume everything matches.
+        assert!(feq(sel(&Predicate::cmp("ghost", CmpOp::Lt, -1e12)), 1.0));
+        // Conjunction multiplies, disjunction unions, Not complements.
+        let a = Predicate::cmp("val", CmpOp::Lt, 50.0);
+        let b = Predicate::cmp("val", CmpOp::Ge, 90.0);
+        assert!(feq(sel(&a.clone().and(b.clone())), 0.05));
+        assert!(feq(sel(&a.clone().or(b.clone())), 0.5 + 0.1 - 0.05));
+        assert!(feq(sel(&a.clone().not()), 0.5));
+        // NaN rows only keep Ne alive.
+        let nanny = |_: &str| {
+            Some(ValueRange {
+                lo: 0.0,
+                hi: 100.0,
+                nans: 500,
+            })
+        };
+        let s = estimate_selectivity(&Predicate::cmp("v", CmpOp::Lt, 50.0), 1000, &nanny);
+        assert!(feq(s, 0.25), "non-NaN half scaled: {s}");
+        let s = estimate_selectivity(&Predicate::cmp("v", CmpOp::Ne, 200.0), 1000, &nanny);
+        assert!(feq(s, 1.0), "Ne matches NaN rows too: {s}");
+    }
+
+    #[test]
+    fn group_count_estimates_cap_at_rows() {
+        let range = |col: &str| match col {
+            "sensor" => Some(ValueRange::exact(0.0, 99.0)),
+            "flag" => Some(ValueRange::exact(0.0, 1.0)),
+            _ => None,
+        };
+        let keys = |ks: &[&str]| ks.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        assert_eq!(estimate_groups(&keys(&["flag"]), 10_000, &range), 2);
+        assert_eq!(estimate_groups(&keys(&["sensor"]), 10_000, &range), 100);
+        assert_eq!(estimate_groups(&keys(&["sensor", "flag"]), 10_000, &range), 200);
+        // Capped by matching rows.
+        assert_eq!(estimate_groups(&keys(&["sensor", "flag"]), 50, &range), 50);
+        // Unknown key → √rows heuristic.
+        assert_eq!(estimate_groups(&keys(&["ghost"]), 10_000, &range), 100);
+        // No keys → one (scalar) group.
+        assert_eq!(estimate_groups(&[], 10_000, &range), 1);
+    }
+
+    /// Batch equality treating NaN as equal to itself (bitwise floats),
+    /// so merge-vs-sort comparisons work on NaN-bearing sort keys.
+    fn bit_equal(a: &Batch, b: &Batch) -> bool {
+        a.schema == b.schema
+            && a.nrows() == b.nrows()
+            && a.columns.iter().zip(&b.columns).all(|(x, y)| match (x, y) {
+                (Column::F32(u), Column::F32(v)) => {
+                    u.iter().zip(v).all(|(p, q)| p.to_bits() == q.to_bits())
+                }
+                (Column::F64(u), Column::F64(v)) => {
+                    u.iter().zip(v).all(|(p, q)| p.to_bits() == q.to_bits())
+                }
+                _ => x == y,
+            })
+    }
+
+    #[test]
+    fn merge_sorted_equals_stable_sort_of_concat() {
+        let mut rng = crate::util::rng::Xoshiro256::new(99);
+        for _ in 0..20 {
+            // Random parts with shared schema, each pre-sorted.
+            let keys = vec![SortKey::desc("val"), SortKey::asc("ts")];
+            let nparts = rng.range(1, 5);
+            let mut parts = Vec::new();
+            let mut all: Option<Batch> = None;
+            for _ in 0..nparts {
+                let rows = rng.range(0, 40);
+                let b = Batch::new(
+                    TableSchema::new(&[("ts", DType::I64), ("val", DType::F32)]),
+                    vec![
+                        Column::I64((0..rows).map(|_| rng.range(0, 50) as i64).collect()),
+                        Column::F32(
+                            (0..rows)
+                                .map(|_| {
+                                    if rng.chance(0.05) {
+                                        f32::NAN
+                                    } else {
+                                        (rng.range(0, 8)) as f32
+                                    }
+                                })
+                                .collect(),
+                        ),
+                    ],
+                )
+                .unwrap();
+                match &mut all {
+                    Some(acc) => acc.concat(&b).unwrap(),
+                    None => all = Some(b.clone()),
+                }
+                parts.push(sort_rows(&b, &keys).unwrap());
+            }
+            let reference = sort_rows(&all.unwrap(), &keys).unwrap();
+            // Full merge equals the stable sort of the concatenation,
+            // including duplicate-key runs and NaN placement.
+            let merged = merge_sorted(&parts, &keys, None).unwrap();
+            assert!(bit_equal(&merged, &reference));
+            // Truncated merge equals its prefix (per-part pre-truncation
+            // to k is what the driver does for top-k).
+            let k = rng.range(0, 15);
+            let truncated: Vec<Batch> = parts
+                .iter()
+                .map(|p| top_k_rows(p, &keys, k).unwrap())
+                .collect();
+            let merged_k = merge_sorted(&truncated, &keys, Some(k)).unwrap();
+            let want = if reference.nrows() > k {
+                reference.slice(0, k).unwrap()
+            } else {
+                reference.clone()
+            };
+            assert!(bit_equal(&merged_k, &want));
+        }
+    }
+
+    #[test]
+    fn merge_sorted_rejects_bad_inputs() {
+        let a = Batch::new(
+            TableSchema::new(&[("x", DType::I64)]),
+            vec![Column::I64(vec![1, 2])],
+        )
+        .unwrap();
+        let b = Batch::new(
+            TableSchema::new(&[("y", DType::I64)]),
+            vec![Column::I64(vec![3])],
+        )
+        .unwrap();
+        assert!(merge_sorted(&[], &[SortKey::asc("x")], None).is_err());
+        assert!(merge_sorted(&[a.clone(), b], &[SortKey::asc("x")], None).is_err());
+        assert!(merge_sorted(&[a.clone()], &[SortKey::asc("ghost")], None).is_err());
+        // Single part: identity (plus truncation).
+        let m = merge_sorted(&[a.clone()], &[SortKey::asc("x")], Some(1)).unwrap();
+        assert_eq!(m, a.slice(0, 1).unwrap());
     }
 
     #[test]

@@ -24,7 +24,12 @@ pub mod worker;
 
 pub use driver::{Driver, QueryResult, QueryStats, WriteReport};
 pub use extension::{register_skyhook_class, ChunkCompute};
-pub use logical::{sort_rows, top_k_rows, LogicalPlan, PipelineSpec};
-pub use plan::{plan, plan_logical, plan_opts, ExecMode, PlanStage, QueryPlan, SubQuery};
+pub use logical::{
+    estimate_groups, estimate_selectivity, merge_sorted, sort_rows, top_k_rows, LogicalPlan,
+    PipelineSpec,
+};
+pub use plan::{
+    plan, plan_costed, plan_logical, plan_opts, ExecMode, PlanStage, QueryPlan, SubQuery,
+};
 pub use query::{AggFunc, AggState, Aggregate, CmpOp, Predicate, Query, SortKey};
 pub use sketch::QuantileSketch;

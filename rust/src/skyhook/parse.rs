@@ -83,16 +83,54 @@ pub fn parse_sort(s: &str) -> Result<Vec<SortKey>> {
 /// Parse a `|`-separated pipeline into a query over `dataset`.
 ///
 /// Stages: `filter EXPR`, `select C1,C2`, `agg F:COL[,F:COL...]`,
-/// `by C1,C2` (immediately after `agg`), `sort SPEC`, `limit N`,
-/// `topk N SPEC`. The text assembles a [`LogicalPlan`] operator chain in
-/// written order, so illegal compositions (filter after agg, sort above
-/// limit, …) fail with the IR's validation errors.
+/// `by C1,C2` (immediately after `agg`), `having EXPR` (after a grouped
+/// `agg`; columns name group keys or aggregates like `sum(val)`),
+/// `sort SPEC`, `limit N`, `topk N SPEC`. The text assembles a
+/// [`LogicalPlan`] operator chain in written order, so illegal
+/// compositions (ungrouped having, sort above limit, …) fail with the
+/// IR's validation errors.
+///
+/// # Examples
+///
+/// ```
+/// use skyhook_map::skyhook::parse::parse_pipeline;
+/// use skyhook_map::skyhook::{CmpOp, Predicate, Query};
+///
+/// let q = parse_pipeline(
+///     "sensors",
+///     "filter val > 50 | select ts,val | sort val desc | limit 10",
+/// )
+/// .unwrap();
+/// assert_eq!(
+///     q,
+///     Query::scan("sensors")
+///         .filter(Predicate::cmp("val", CmpOp::Gt, 50.0))
+///         .select(&["ts", "val"])
+///         .sort_desc("val")
+///         .limit(10)
+/// );
+/// ```
+///
+/// A grouped aggregate with a HAVING stage over the finalized groups:
+///
+/// ```
+/// use skyhook_map::skyhook::parse::parse_pipeline;
+///
+/// let q = parse_pipeline(
+///     "sensors",
+///     "filter flag == 0 | agg count:val,mean:val | by sensor | having count(val) >= 100",
+/// )
+/// .unwrap();
+/// assert_eq!(q.group_by, vec!["sensor"]);
+/// assert_eq!(q.having.to_string(), "count(val) >= 100");
+/// ```
 pub fn parse_pipeline(dataset: &str, s: &str) -> Result<Query> {
     enum Stage {
         Filter(Predicate),
         Select(Vec<String>),
         Agg(Vec<Aggregate>),
         By(Vec<String>),
+        Having(Predicate),
         Sort(Vec<SortKey>),
         Limit(usize),
         TopK(usize, Vec<SortKey>),
@@ -133,6 +171,7 @@ pub fn parse_pipeline(dataset: &str, s: &str) -> Result<Query> {
                 }
                 Stage::By(keys)
             }
+            "having" => Stage::Having(parse_predicate(rest)?),
             "sort" => Stage::Sort(parse_sort(rest)?),
             "limit" => Stage::Limit(
                 rest.parse()
@@ -153,13 +192,15 @@ pub fn parse_pipeline(dataset: &str, s: &str) -> Result<Query> {
             }
             other => {
                 return Err(Error::Query(format!(
-                    "unknown pipeline stage {other:?} (filter|select|agg|by|sort|limit|topk)"
+                    "unknown pipeline stage {other:?} \
+                     (filter|select|agg|by|having|sort|limit|topk)"
                 )))
             }
         });
     }
     let mut plan = LogicalPlan::scan(dataset);
     let mut i = 0;
+    let mut aggregated = false;
     while i < stages.len() {
         match &stages[i] {
             Stage::Filter(p) => plan = plan.filter(p.clone()),
@@ -177,9 +218,17 @@ pub fn parse_pipeline(dataset: &str, s: &str) -> Result<Query> {
                 };
                 let refs: Vec<&str> = keys.iter().map(String::as_str).collect();
                 plan = plan.aggregate(aggs.clone(), &refs);
+                aggregated = true;
             }
             Stage::By(_) => {
                 return Err(Error::Query("`by` must directly follow `agg`".into()));
+            }
+            Stage::Having(p) => {
+                if !aggregated {
+                    return Err(Error::Query("`having` must follow `agg`".into()));
+                }
+                // Filter above Aggregate is the IR's HAVING operator.
+                plan = plan.filter(p.clone());
             }
             Stage::Sort(keys) => plan = plan.sort(keys.clone()),
             Stage::Limit(n) => plan = plan.limit(*n),
@@ -261,7 +310,23 @@ impl<'a> Parser<'a> {
         if self.eat("true") {
             return Ok(Predicate::True);
         }
-        let col = self.identifier()?;
+        let mut col = self.identifier()?;
+        // HAVING predicates address aggregate values by display form
+        // (`count(val)`), so an identifier may carry one call-shaped
+        // suffix; it stays a plain (virtual) column name.
+        if self.rest().starts_with('(') {
+            self.pos += 1;
+            let inner = self.identifier()?;
+            self.skip_ws();
+            if !self.rest().starts_with(')') {
+                return Err(Error::Query(format!(
+                    "expected ) after {col}({inner} at {}",
+                    self.pos
+                )));
+            }
+            self.pos += 1;
+            col = format!("{col}({inner})");
+        }
         self.skip_ws();
         let op = if self.eat("<=") {
             CmpOp::Le
@@ -440,6 +505,43 @@ mod tests {
         assert!(parse_pipeline("t", "frobnicate 3").is_err());
         assert!(parse_pipeline("t", "topk 5").is_err());
         assert!(parse_pipeline("t", "limit many").is_err());
+    }
+
+    #[test]
+    fn having_pipelines() {
+        // `having` filters finalized groups; aggregate values are
+        // addressed by display form, group keys by name.
+        let q = parse_pipeline(
+            "t",
+            "filter flag == 0 | agg count:val,sum:val | by sensor \
+             | having count(val) > 10 && sensor <= 50 | limit 5",
+        )
+        .unwrap();
+        assert_eq!(q.group_by, vec!["sensor"]);
+        assert_eq!(
+            q.having,
+            Predicate::cmp("count(val)", CmpOp::Gt, 10.0)
+                .and(Predicate::cmp("sensor", CmpOp::Le, 50.0))
+        );
+        assert_eq!(q.limit, Some(5));
+        assert_eq!(q.aggregates[0], Aggregate::new(AggFunc::Count, "val"));
+        // `filter` after agg is the same operator (Filter above
+        // Aggregate), validated the same way.
+        let q2 = parse_pipeline(
+            "t",
+            "agg count:val | by sensor | filter count(val) > 10",
+        )
+        .unwrap();
+        assert_eq!(q2.having, Predicate::cmp("count(val)", CmpOp::Gt, 10.0));
+        // Rejected: having before agg, over scalar agg, unknown column.
+        assert!(parse_pipeline("t", "having count(val) > 1 | agg count:val").is_err());
+        assert!(parse_pipeline("t", "agg count:val | having count(val) > 1").is_err());
+        assert!(parse_pipeline("t", "agg count:val | by sensor | having val > 1").is_err());
+        // Call-shaped identifiers parse and display round-trips.
+        let p = parse_predicate("mean(val) >= 2.5").unwrap();
+        assert_eq!(p, Predicate::cmp("mean(val)", CmpOp::Ge, 2.5));
+        assert_eq!(parse_predicate(&p.to_string()).unwrap(), p);
+        assert!(parse_predicate("mean(val > 1").is_err());
     }
 
     #[test]

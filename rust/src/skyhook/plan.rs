@@ -23,15 +23,33 @@
 //!   over the merged partials — they need cross-object context and
 //!   cannot decompose.
 //!
+//! ## Cost-based offload
+//!
+//! Where a movable stage runs is no longer a static always-push policy:
+//! for every surviving sub-query the planner builds an
+//! [`AccessProfile`] — rows and bytes from [`RowGroupMeta`], matching
+//! rows from the zone-map selectivity estimate
+//! ([`super::logical::estimate_selectivity`]), partial sizes from the
+//! operator shapes — and prices both sides with the calibrated simnet
+//! cost model ([`CostParams::estimate`]). The cheaper [`ExecMode`] is
+//! assigned *per object*, so one plan can push down the large, selective
+//! sub-queries while reading small or unselective objects client-side.
+//! `force_mode` still pins every assignment (the property tests compare
+//! forced-client, forced-server and planner-chosen executions), and
+//! [`QueryPlan::explain`] renders the estimated cost of each stage next
+//! to its chosen side.
+//!
 //! `force_mode = ClientSide` moves every movable stage to the client
 //! (the baseline the paper improves on); the merge-side stages are
 //! client-side by nature in either mode.
 
-use super::logical::{LogicalPlan, PipelineSpec};
+use super::logical::{estimate_groups, estimate_selectivity, LogicalPlan, PipelineSpec};
 use super::query::{Predicate, Query};
-use crate::dataset::metadata::{DatasetMeta, RowGroupMeta};
+use crate::dataset::layout::HEADER_PREFIX;
+use crate::dataset::metadata::{DatasetMeta, RowGroupMeta, ValueRange};
 use crate::dataset::{DType, Layout, TableSchema};
 use crate::error::{Error, Result};
+use crate::simnet::{AccessProfile, CostParams, QueryCost};
 use std::fmt::Write as _;
 
 /// Where a stage (or a whole sub-query) executes.
@@ -49,13 +67,22 @@ pub enum ExecMode {
 pub struct PlanStage {
     /// Human-readable operator description.
     pub op: String,
+    /// The side this stage runs on (for movable stages: the planner's
+    /// majority choice across sub-queries, or the forced mode).
     pub mode: ExecMode,
+    /// Estimated cost of this stage on each side, summed over the
+    /// surviving sub-queries (`None` for merge-side stages, which have
+    /// no offload alternative). Rendered by [`QueryPlan::explain`].
+    pub cost: Option<QueryCost>,
 }
 
 /// One per-object sub-query.
 #[derive(Clone, Debug)]
 pub struct SubQuery {
+    /// Object name this sub-query reads.
     pub object: String,
+    /// The side this sub-query executes on — chosen per object by the
+    /// cost model, or pinned by `force_mode`.
     pub mode: ExecMode,
     /// Physical layout of the object (from dataset metadata) — lets the
     /// client-side path skip the ranged-read probing for Row objects,
@@ -73,12 +100,16 @@ pub struct SubQuery {
 /// A planned query.
 #[derive(Clone, Debug)]
 pub struct QueryPlan {
+    /// The validated flat query this plan executes.
     pub query: Query,
     /// Dataset schema (used to synthesize empty results when every
     /// sub-query is pruned).
     pub schema: TableSchema,
-    /// Execution mode of every sub-query (kept here too so it stays
-    /// known when pruning drops all of them).
+    /// The plan's overall execution mode: the forced mode when given,
+    /// otherwise the side the cost model chose for the majority of the
+    /// surviving sub-queries (individual sub-queries may differ — see
+    /// [`SubQuery::mode`]). Kept here so it stays known when pruning
+    /// drops every sub-query.
     pub mode: ExecMode,
     /// The operator pipeline each surviving sub-query runs, in stage
     /// order with its chosen offload side.
@@ -86,6 +117,8 @@ pub struct QueryPlan {
     /// The server-side stage block, encoded once per sub-query and
     /// executed in a single pass by `skyhook.exec`.
     pub pipeline: PipelineSpec,
+    /// One sub-query per surviving (unpruned) object, each with its own
+    /// cost-chosen execution mode.
     pub subqueries: Vec<SubQuery>,
     /// True if every aggregate decomposes into constant-size partials.
     pub decomposable: bool,
@@ -94,11 +127,21 @@ pub struct QueryPlan {
     /// Serialized bytes of the pruned objects — I/O and decode work the
     /// query provably did not need.
     pub bytes_skipped: u64,
+    /// Surviving sub-queries assigned to each side by the cost model
+    /// (`(pushdown, client)`; forced plans put everything on one side).
+    pub assignment: (usize, usize),
+    /// Two-sided cost estimate summed over the surviving sub-queries —
+    /// what the whole query would cost pushed down vs client-side.
+    pub cost: QueryCost,
+    /// Estimated network bytes of the *chosen* per-object assignment
+    /// (compare against `QueryStats::bytes_moved` after execution).
+    pub est_bytes: u64,
 }
 
 impl QueryPlan {
-    /// Human-readable planning summary (the CLI's EXPLAIN): a headline
-    /// plus one line per stage with its offload side.
+    /// Human-readable planning summary (the CLI's EXPLAIN): a headline,
+    /// the cost model's verdict, and one line per stage with its offload
+    /// side and estimated per-side cost.
     pub fn explain(&self) -> String {
         let mode = format!("{:?}", self.mode);
         let mut out = format!(
@@ -114,14 +157,47 @@ impl QueryPlan {
             self.decomposable,
             self.subqueries.first().map(|s| s.keep_values).unwrap_or(false),
         );
+        let (np, nc) = self.assignment;
+        let _ = writeln!(
+            out,
+            "  cost: {np} pushdown / {nc} client-side sub-queries; est total \
+             server={} client={}; est {} moved as chosen",
+            fmt_secs(self.cost.pushdown_s),
+            fmt_secs(self.cost.client_s),
+            crate::util::bytes::fmt_size(self.est_bytes),
+        );
         for s in &self.stages {
             let side = match s.mode {
                 ExecMode::Pushdown => "server",
                 ExecMode::ClientSide => "client",
             };
-            let _ = writeln!(out, "  [{side}] {}", s.op);
+            match &s.cost {
+                Some(c) => {
+                    let _ = writeln!(
+                        out,
+                        "  [{side}] {} {{est server {} / client {}}}",
+                        s.op,
+                        fmt_secs(c.pushdown_s),
+                        fmt_secs(c.client_s)
+                    );
+                }
+                None => {
+                    let _ = writeln!(out, "  [{side}] {}", s.op);
+                }
+            }
         }
         out
+    }
+}
+
+/// Render an estimated duration compactly (µs/ms/s by magnitude).
+fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
     }
 }
 
@@ -145,12 +221,29 @@ pub fn plan_logical(
 
 /// [`plan`] with zone-map pruning optionally disabled (`prune = false`),
 /// so benches can measure the pruned fast path against an identical
-/// unpruned execution.
+/// unpruned execution. Costs are estimated with the default (paper
+/// testbed) parameters; the driver plans with its cluster's real
+/// profile via [`plan_costed`].
 pub fn plan_opts(
     query: &Query,
     meta: &DatasetMeta,
     force_mode: Option<ExecMode>,
     prune: bool,
+) -> Result<QueryPlan> {
+    plan_costed(query, meta, force_mode, prune, &CostParams::default())
+}
+
+/// [`plan_opts`] against an explicit cost profile — the full planner
+/// entry point. For every surviving sub-query the estimator prices
+/// pushdown vs client-side execution ([`CostParams::estimate`]) and
+/// assigns the cheaper [`ExecMode`] per object, unless `force_mode`
+/// pins the assignment.
+pub fn plan_costed(
+    query: &Query,
+    meta: &DatasetMeta,
+    force_mode: Option<ExecMode>,
+    prune: bool,
+    cost: &CostParams,
 ) -> Result<QueryPlan> {
     let DatasetMeta::Table {
         schema,
@@ -195,6 +288,12 @@ pub fn plan_opts(
             "limit over a scalar aggregate is meaningless".into(),
         ));
     }
+    // HAVING filters finalized group rows; its columns are *virtual* —
+    // group keys by name, aggregates by display form ("sum(val)") — so
+    // they validate against the query shape, not the schema (queries
+    // built via the IR were already checked; direct builder use is
+    // caught here).
+    query.validate_having()?;
 
     // Error parity: a query that would fail during evaluation (string-
     // typed predicate or aggregate column, non-i64 group key) must fail
@@ -214,24 +313,58 @@ pub fn plan_opts(
     let prune = prune && evaluable;
 
     let decomposable = query.is_decomposable();
-    // Default policy: always push down — filter/project reduction happens
-    // at the data. Holistic aggregates still push the *filter* down and
-    // ship values back (keep_values).
-    let mode = force_mode.unwrap_or(ExecMode::Pushdown);
     let keep_values = query.is_aggregate() && !decomposable;
     let pipeline = server_pipeline(query, prune);
     let push_topk = pipeline.limit.is_some();
-    let stages = build_stages(query, mode, push_topk);
+    let shape = QueryShape::of(query, schema, &pipeline);
 
+    // Cost-based offload choice, per object: estimate both sides of the
+    // boundary from the zone-map statistics and pick the cheaper one
+    // (force_mode pins every assignment instead).
     let mut subqueries = Vec::with_capacity(names.len());
     let mut objects_pruned = 0usize;
     let mut bytes_skipped = 0u64;
+    let mut totals = QueryCost::default();
+    let mut io_total = QueryCost::default();
+    let mut cpu_total = QueryCost::default();
+    let mut reduce_total = QueryCost::default();
+    let mut est_bytes = 0u64;
+    let mut n_push = 0usize;
+    let mut n_client = 0usize;
     for (i, object) in names.into_iter().enumerate() {
         let rg = &row_groups[i];
         if prune && group_prunes(&query.predicate, schema, rg) {
             objects_pruned += 1;
             bytes_skipped += rg.bytes;
             continue;
+        }
+        let profile = shape.profile(query, schema, *layout, rg);
+        // Each component once; their sum is the sub-query estimate
+        // (exactly what `CostParams::estimate` computes).
+        let io = cost.io_cost(&profile);
+        let cpu = cost.compute_cost(&profile);
+        let reduce = cost.reduce_cost(&profile);
+        let mut est = io;
+        est.accumulate(&cpu);
+        est.accumulate(&reduce);
+        io_total.accumulate(&io);
+        cpu_total.accumulate(&cpu);
+        reduce_total.accumulate(&reduce);
+        totals.accumulate(&est);
+        let mode = force_mode.unwrap_or(if est.pushdown_wins() {
+            ExecMode::Pushdown
+        } else {
+            ExecMode::ClientSide
+        });
+        match mode {
+            ExecMode::Pushdown => {
+                n_push += 1;
+                est_bytes += est.pushdown_bytes;
+            }
+            ExecMode::ClientSide => {
+                n_client += 1;
+                est_bytes += est.client_bytes;
+            }
         }
         subqueries.push(SubQuery {
             object,
@@ -241,6 +374,15 @@ pub fn plan_opts(
             zone_maps: prune,
         });
     }
+    // Overall mode: forced, else the majority assignment (ties — and a
+    // fully pruned plan — default to pushdown, the paper's policy).
+    let mode = force_mode.unwrap_or(if n_push >= n_client {
+        ExecMode::Pushdown
+    } else {
+        ExecMode::ClientSide
+    });
+    let mut stages = build_stages(query, mode, push_topk);
+    annotate_stage_costs(&mut stages, &io_total, &cpu_total, &reduce_total);
     Ok(QueryPlan {
         query: query.clone(),
         schema: schema.clone(),
@@ -251,7 +393,194 @@ pub fn plan_opts(
         decomposable,
         objects_pruned,
         bytes_skipped,
+        assignment: (n_push, n_client),
+        cost: totals,
+        est_bytes,
     })
+}
+
+/// Per-query constants of the cost profile (independent of the row
+/// group): column-width fractions, carried row width, encoded spec size.
+struct QueryShape {
+    /// Fraction of a row's bytes the scan must touch (1.0 = everything).
+    needed_frac: f64,
+    /// Does the client fetch the whole object in one read (a row query
+    /// without projection — or a Row-layout object, handled per group)?
+    full_fetch: bool,
+    /// Fraction of a stored row's bytes a row-query partial carries
+    /// (0 for aggregates, 1 when everything is carried).
+    carry_frac: f64,
+    /// Encoded pipeline-spec bytes shipped with each pushdown request.
+    request_bytes: u64,
+    /// Per-object row cap of the pushed-down partial (top-k / head).
+    partial_limit: Option<u64>,
+}
+
+impl QueryShape {
+    fn of(query: &Query, schema: &TableSchema, pipeline: &PipelineSpec) -> QueryShape {
+        let width = |name: &str| -> f64 {
+            schema
+                .col_index(name)
+                .ok()
+                .map(|i| dtype_width(schema.col(i).dtype))
+                .unwrap_or(8.0)
+        };
+        let total_width: f64 = schema
+            .columns
+            .iter()
+            .map(|c| dtype_width(c.dtype))
+            .sum::<f64>()
+            .max(1.0);
+        let full_fetch = !query.is_aggregate() && query.projection.is_none();
+        let needed_frac = if full_fetch {
+            1.0
+        } else {
+            let all: Vec<String> = schema.columns.iter().map(|c| c.name.clone()).collect();
+            let needed: f64 = query.needed_columns(&all).iter().map(|n| width(n)).sum();
+            (needed / total_width).clamp(0.0, 1.0)
+        };
+        let carry_frac = if query.is_aggregate() {
+            0.0
+        } else {
+            match query.carry_columns() {
+                Some(cols) => {
+                    (cols.iter().map(|c| width(c)).sum::<f64>() / total_width).clamp(0.0, 1.0)
+                }
+                None => 1.0,
+            }
+        };
+        QueryShape {
+            needed_frac,
+            full_fetch,
+            carry_frac,
+            request_bytes: pipeline.encode().len() as u64,
+            partial_limit: pipeline.limit,
+        }
+    }
+
+    /// The estimator inputs for one row group: selectivity from its zone
+    /// map, byte counts from the projected-read layout.
+    fn profile(
+        &self,
+        query: &Query,
+        schema: &TableSchema,
+        layout: Layout,
+        rg: &RowGroupMeta,
+    ) -> AccessProfile {
+        let range = |col: &str| -> Option<ValueRange> {
+            schema
+                .col_index(col)
+                .ok()
+                .and_then(|ci| rg.stats.get(ci))
+                .and_then(|s| s.value_range())
+        };
+        let sel = estimate_selectivity(&query.predicate, rg.rows, &range);
+        let est_out = sel * rg.rows as f64;
+        let bytes = rg.bytes;
+        // Server-side read set: the projected-read path fetches the
+        // header prefix plus the needed-column extents beyond it. Row
+        // objects decode whole on either side.
+        let covered = bytes.min(HEADER_PREFIX as u64);
+        let projected = covered + (self.needed_frac * (bytes - covered) as f64) as u64;
+        let scan_bytes = if self.full_fetch || layout == Layout::Row {
+            bytes
+        } else {
+            projected
+        };
+        // Client-side fetch: one full read for unprojected queries and
+        // Row objects; stat + prefix + coalesced extent reads otherwise.
+        let (fetch_bytes, fetch_round_trips) = if self.full_fetch || layout == Layout::Row {
+            (bytes, 1)
+        } else {
+            (projected, 2 + u32::from(bytes > covered))
+        };
+        // The pushed-down partial crossing back.
+        let result_bytes = if query.is_aggregate() {
+            if query.group_by.is_empty() {
+                let mut b = 64.0;
+                for a in &query.aggregates {
+                    b += 49.0;
+                    if !a.func.is_algebraic() {
+                        b += est_out * 8.0;
+                    }
+                }
+                b
+            } else {
+                let groups = estimate_groups(&query.group_by, est_out as u64, &range) as f64;
+                let mut b = 64.0 + groups * 8.0 * query.group_by.len() as f64;
+                for a in &query.aggregates {
+                    b += groups * 49.0;
+                    // Holistic aggregates ship every matching value —
+                    // across all groups that is the whole filtered
+                    // column, regardless of the group count.
+                    if !a.func.is_algebraic() {
+                        b += est_out * 8.0;
+                    }
+                }
+                b
+            }
+        } else {
+            let out_rows = match self.partial_limit {
+                Some(n) => est_out.min(n as f64),
+                None => est_out,
+            };
+            // Size partial rows from the *stored* per-row footprint
+            // (includes encoding overhead), scaled to the carried set.
+            let stored_row = bytes as f64 / rg.rows.max(1) as f64;
+            64.0 + out_rows * self.carry_frac * stored_row
+        };
+        AccessProfile {
+            rows: rg.rows,
+            scan_bytes,
+            fetch_bytes,
+            fetch_round_trips,
+            request_bytes: self.request_bytes,
+            result_bytes: result_bytes as u64,
+        }
+    }
+}
+
+/// Modelled serialized width of one value of a column (strings get a
+/// fixed guess; the estimate biases bytes, never results).
+fn dtype_width(dt: DType) -> f64 {
+    match dt {
+        DType::F32 => 4.0,
+        DType::F64 | DType::I64 => 8.0,
+        DType::Str => 16.0,
+    }
+}
+
+/// Attach the summed component estimates to the stages they describe:
+/// the scan stage carries I/O (plus per-row compute when no filter stage
+/// exists), the filter stage per-row compute, the partial stage the
+/// reduction (result encode + response shipping).
+fn annotate_stage_costs(
+    stages: &mut [PlanStage],
+    io: &QueryCost,
+    cpu: &QueryCost,
+    reduce: &QueryCost,
+) {
+    let has_filter = stages.iter().any(|s| s.op.starts_with("filter "));
+    // Plain filtered scans have no partial stage; their result-encode +
+    // shipping cost (the reason sel≈1 scans go client-side) must still
+    // show up somewhere, so it folds into the scan stage.
+    let has_partial = stages.iter().any(|s| s.op.starts_with("partial"));
+    for s in stages.iter_mut() {
+        if s.op.starts_with("scan ") {
+            let mut c = *io;
+            if !has_filter {
+                c.accumulate(cpu);
+            }
+            if !has_partial {
+                c.accumulate(reduce);
+            }
+            s.cost = Some(c);
+        } else if s.op.starts_with("filter ") {
+            s.cost = Some(*cpu);
+        } else if s.op.starts_with("partial") {
+            s.cost = Some(*reduce);
+        }
+    }
 }
 
 /// The server-side stage block of a query: which operators each storage
@@ -289,10 +618,20 @@ pub fn server_pipeline(query: &Query, zone_maps: bool) -> PipelineSpec {
     }
 }
 
-/// Describe the operator pipeline with each stage's execution side.
+/// Describe the operator pipeline with each stage's execution side
+/// (costs are annotated afterwards by `annotate_stage_costs`).
 fn build_stages(query: &Query, mode: ExecMode, push_topk: bool) -> Vec<PlanStage> {
     let mut stages = Vec::new();
-    let srv = |op: String| PlanStage { op, mode };
+    let srv = |op: String| PlanStage {
+        op,
+        mode,
+        cost: None,
+    };
+    let cli = |op: String| PlanStage {
+        op,
+        mode: ExecMode::ClientSide,
+        cost: None,
+    };
     stages.push(srv(format!("scan {}", query.dataset)));
     if query.predicate != Predicate::True {
         stages.push(srv(format!("filter {}", query.predicate)));
@@ -308,19 +647,13 @@ fn build_stages(query: &Query, mode: ExecMode, push_topk: bool) -> Vec<PlanStage
                 query.group_by.join(", ")
             )));
         }
-        stages.push(PlanStage {
-            op: "merge partials".into(),
-            mode: ExecMode::ClientSide,
-        });
-        stages.push(PlanStage {
-            op: format!("finalize [{}]", aggs.join(", ")),
-            mode: ExecMode::ClientSide,
-        });
+        stages.push(cli("merge partials".into()));
+        stages.push(cli(format!("finalize [{}]", aggs.join(", "))));
+        if query.having != Predicate::True {
+            stages.push(cli(format!("having {}", query.having)));
+        }
         if let Some(n) = query.limit {
-            stages.push(PlanStage {
-                op: format!("limit {n} groups"),
-                mode: ExecMode::ClientSide,
-            });
+            stages.push(cli(format!("limit {n} groups")));
         }
         return stages;
     }
@@ -337,29 +670,20 @@ fn build_stages(query: &Query, mode: ExecMode, push_topk: bool) -> Vec<PlanStage
         }
         _ => {}
     }
-    stages.push(PlanStage {
-        op: "merge rows".into(),
-        mode: ExecMode::ClientSide,
-    });
+    stages.push(cli("merge rows".into()));
     if !query.sort_keys.is_empty() {
+        // Implemented as a k-way merge of pre-sorted per-object partials
+        // (no concatenate-then-resort); the stage states the ordering
+        // guarantee.
         let keys: Vec<String> = query.sort_keys.iter().map(|k| k.to_string()).collect();
-        stages.push(PlanStage {
-            op: format!("sort [{}]", keys.join(", ")),
-            mode: ExecMode::ClientSide,
-        });
+        stages.push(cli(format!("sort [{}]", keys.join(", "))));
     }
     if let Some(n) = query.limit {
-        stages.push(PlanStage {
-            op: format!("limit {n}"),
-            mode: ExecMode::ClientSide,
-        });
+        stages.push(cli(format!("limit {n}")));
     }
     if let Some(p) = &query.projection {
         if query.sort_keys.iter().any(|k| !p.contains(&k.col)) {
-            stages.push(PlanStage {
-                op: format!("project [{}]", p.join(", ")),
-                mode: ExecMode::ClientSide,
-            });
+            stages.push(cli(format!("project [{}]", p.join(", "))));
         }
     }
     stages
@@ -438,14 +762,108 @@ mod tests {
         let q = Query::scan("ds").filter(Predicate::cmp("val", CmpOp::Gt, 0.0));
         let p = plan(&q, &meta(5), None).unwrap();
         assert_eq!(p.subqueries.len(), 5);
-        assert!(p.subqueries.iter().all(|s| s.mode == ExecMode::Pushdown));
         assert!(p.decomposable);
         assert!(!p.subqueries[0].keep_values);
         assert_eq!(p.subqueries[0].object, "ds/t/00000000");
+        // Every sub-query got a cost-based assignment and the plan
+        // accounts for all of them.
+        assert_eq!(p.assignment.0 + p.assignment.1, 5);
+        assert!(p.cost.pushdown_s > 0.0 && p.cost.client_s > 0.0);
+        assert!(p.est_bytes > 0);
         // The pipeline carries the filter; no aggregate/sort stages.
         assert_eq!(p.pipeline.predicate, q.predicate);
         assert!(p.pipeline.aggs.is_empty());
         assert!(p.pipeline.sort.is_empty() && p.pipeline.limit.is_none());
+    }
+
+    /// Meta for the cost-model regime tests: `groups` objects of `bytes`
+    /// bytes / `rows` rows each, val spanning [0, 100] (NaN-free).
+    fn meta_sized(groups: usize, rows: u64, bytes: u64) -> DatasetMeta {
+        DatasetMeta::Table {
+            schema: TableSchema::new(&[("ts", DType::I64), ("val", DType::F32)]),
+            layout: Layout::Col,
+            row_groups: (0..groups)
+                .map(|_| RowGroupMeta {
+                    rows,
+                    bytes,
+                    stats: vec![
+                        ColumnStats {
+                            min: 0.0,
+                            max: rows as f64,
+                            nan_count: 0,
+                        },
+                        ColumnStats {
+                            min: 0.0,
+                            max: 100.0,
+                            nan_count: 0,
+                        },
+                    ],
+                })
+                .collect(),
+            localities: vec![String::new(); groups],
+        }
+    }
+
+    #[test]
+    fn cost_model_picks_pushdown_for_selective_queries() {
+        // Selectivity ~0 (zone maps bound val to [0, 100], the filter
+        // keeps ~0.5%): the partial is tiny, pushdown avoids the fetch.
+        let m = meta_sized(4, 40_000, 1 << 20);
+        let q = Query::scan("ds").filter(Predicate::cmp("val", CmpOp::Gt, 99.5));
+        let p = plan(&q, &m, None).unwrap();
+        assert!(
+            p.subqueries.iter().all(|s| s.mode == ExecMode::Pushdown),
+            "assignment: {:?}",
+            p.assignment
+        );
+        assert_eq!(p.mode, ExecMode::Pushdown);
+        assert!(p.cost.pushdown_s < p.cost.client_s);
+        // Aggregates push down too: constant-size partials.
+        let q = Query::scan("ds")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 20.0))
+            .aggregate(AggFunc::Mean, "val");
+        let p = plan(&q, &m, None).unwrap();
+        assert!(p.subqueries.iter().all(|s| s.mode == ExecMode::Pushdown));
+    }
+
+    #[test]
+    fn cost_model_picks_client_side_for_unselective_scans() {
+        // Selectivity ~1 on small objects, nothing projected: pushdown
+        // would re-encode and ship every row anyway, so the plain read
+        // path wins — the HEP tiny-object regime.
+        let m = meta_sized(6, 150, 4096);
+        let q = Query::scan("ds").filter(Predicate::cmp("val", CmpOp::Gt, -5.0));
+        let p = plan(&q, &m, None).unwrap();
+        assert!(
+            p.subqueries.iter().all(|s| s.mode == ExecMode::ClientSide),
+            "assignment: {:?}",
+            p.assignment
+        );
+        assert_eq!(p.mode, ExecMode::ClientSide);
+        assert!(p.cost.client_s < p.cost.pushdown_s);
+        // force_mode still pins everything to one side.
+        let p = plan(&q, &m, Some(ExecMode::Pushdown)).unwrap();
+        assert!(p.subqueries.iter().all(|s| s.mode == ExecMode::Pushdown));
+        assert_eq!(p.mode, ExecMode::Pushdown);
+    }
+
+    #[test]
+    fn cost_model_splits_assignment_by_per_object_selectivity() {
+        // ts zone maps differ per object: the predicate matches all of
+        // the first objects and none of the last — the planner prunes
+        // the dead ones and may split the survivors by their own costs.
+        let m = meta_with_stats(10);
+        let q = Query::scan("ds").filter(Predicate::cmp("ts", CmpOp::Lt, 25.0));
+        let p = plan(&q, &m, None).unwrap();
+        assert_eq!(p.subqueries.len(), 3);
+        assert_eq!(p.assignment.0 + p.assignment.1, 3);
+        // Whatever the split, stage costs are annotated on the movable
+        // stages and explain renders them.
+        let scan = p.stages.iter().find(|s| s.op.starts_with("scan ")).unwrap();
+        assert!(scan.cost.is_some());
+        let e = p.explain();
+        assert!(e.contains("est server"), "no cost annotation in {e}");
+        assert!(e.contains("cost: "), "no cost headline in {e}");
     }
 
     #[test]

@@ -294,6 +294,27 @@ impl Predicate {
         }
     }
 
+    /// Evaluate the predicate over one *virtual row* whose column values
+    /// come from `get` (`None` = unknown column → error). This is how the
+    /// driver applies a HAVING predicate to finalized group rows: group
+    /// keys resolve by name, aggregate values by their display form
+    /// (`"sum(val)"`). NaN semantics match the batch evaluator (`Ne`
+    /// matches NaN, nothing else does).
+    pub fn eval_row(&self, get: &dyn Fn(&str) -> Option<f64>) -> Result<bool> {
+        Ok(match self {
+            Predicate::True => true,
+            Predicate::Cmp { col, op, value } => {
+                let x = get(col).ok_or_else(|| {
+                    Error::Query(format!("unknown column {col:?} in HAVING predicate"))
+                })?;
+                op.eval(x, *value)
+            }
+            Predicate::And(a, b) => a.eval_row(get)? && b.eval_row(get)?,
+            Predicate::Or(a, b) => a.eval_row(get)? || b.eval_row(get)?,
+            Predicate::Not(p) => !p.eval_row(get)?,
+        })
+    }
+
     /// Wire encoding (for objclass input).
     pub fn encode_into(&self, w: &mut ByteWriter) {
         match self {
@@ -736,8 +757,45 @@ impl AggState {
 /// below (`Query::scan(..).filter(..).select(..).sort(..).limit(..)`)
 /// constructs it directly; [`Query::logical`] lifts it back into the
 /// operator-tree IR the planner compiles.
+///
+/// # Examples
+///
+/// A filtered, projected top-k — the planner pushes the filter, the
+/// carry-projection and a per-object partial top-k to the storage
+/// servers and runs the k-way merge at the driver:
+///
+/// ```
+/// use skyhook_map::skyhook::{CmpOp, Predicate, Query, SortKey};
+///
+/// let q = Query::scan("sensors")
+///     .filter(Predicate::cmp("val", CmpOp::Gt, 50.0))
+///     .select(&["ts"])
+///     .top_k("val", true, 10);
+/// assert!(!q.is_aggregate());
+/// assert_eq!(q.sort_keys, vec![SortKey::desc("val")]);
+/// assert_eq!(q.limit, Some(10));
+/// // The partials carry the sort key alongside the projection.
+/// assert_eq!(q.carry_columns(), Some(vec!["ts".into(), "val".into()]));
+/// ```
+///
+/// A grouped multi-aggregate with a HAVING filter over the finalized
+/// group rows (aggregate values are addressed by their display form):
+///
+/// ```
+/// use skyhook_map::skyhook::{AggFunc, CmpOp, Predicate, Query};
+///
+/// let q = Query::scan("sensors")
+///     .group("sensor")
+///     .aggregate(AggFunc::Count, "val")
+///     .aggregate(AggFunc::Mean, "val")
+///     .having(Predicate::cmp("count(val)", CmpOp::Ge, 100.0));
+/// assert!(q.is_aggregate() && q.is_decomposable());
+/// assert_eq!(q.group_by, vec!["sensor"]);
+/// assert_ne!(q.having, Predicate::True);
+/// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct Query {
+    /// Dataset name the scan reads.
     pub dataset: String,
     /// Row filter.
     pub predicate: Predicate,
@@ -749,6 +807,11 @@ pub struct Query {
     /// Group-by key columns (i64) for aggregate queries; empty = scalar
     /// aggregation.
     pub group_by: Vec<String>,
+    /// HAVING filter over the finalized group rows (`Predicate::True` =
+    /// keep all groups). Columns resolve against the group keys by name
+    /// and the aggregates by display form (`"sum(val)"`). Always a
+    /// merge-side (client) stage: it needs cross-object totals.
+    pub having: Predicate,
     /// Order-by keys (row queries). Applied over the merged result; with
     /// `limit`, each storage server pre-sorts and truncates its partial
     /// (distributed top-k).
@@ -767,6 +830,7 @@ impl Query {
             projection: None,
             aggregates: Vec::new(),
             group_by: Vec::new(),
+            having: Predicate::True,
             sort_keys: Vec::new(),
             limit: None,
         }
@@ -790,6 +854,15 @@ impl Query {
     /// Add a group-by key column (repeatable for multi-column keys).
     pub fn group(mut self, col: &str) -> Query {
         self.group_by.push(col.to_string());
+        self
+    }
+
+    /// Filter the finalized group rows (the HAVING clause; the planner
+    /// rejects it without a grouped aggregate). Predicate columns name
+    /// group keys or aggregates by display form, e.g.
+    /// `Predicate::cmp("count(val)", CmpOp::Gt, 10.0)`.
+    pub fn having(mut self, p: Predicate) -> Query {
+        self.having = p;
         self
     }
 
@@ -831,6 +904,33 @@ impl Query {
 
     pub fn is_aggregate(&self) -> bool {
         !self.aggregates.is_empty()
+    }
+
+    /// Validate the HAVING clause against this query's *shape* (its
+    /// columns are virtual, so the schema is not consulted): it needs a
+    /// grouped aggregate, and every predicate column must name a group
+    /// key or an aggregate by display form (`"sum(val)"`). The single
+    /// source of the rule — shared by [`super::logical::LogicalPlan::to_query`]
+    /// and the planner, and mirrored by the driver's merge-side
+    /// evaluation.
+    pub fn validate_having(&self) -> Result<()> {
+        if self.having == Predicate::True {
+            return Ok(());
+        }
+        if !self.is_aggregate() || self.group_by.is_empty() {
+            return Err(Error::Query("HAVING requires a grouped aggregate".into()));
+        }
+        for c in self.having.columns() {
+            let known = self.group_by.iter().any(|k| k == c)
+                || self.aggregates.iter().any(|a| a.to_string() == c);
+            if !known {
+                return Err(Error::Query(format!(
+                    "HAVING column {c:?} is neither a group key nor an aggregate \
+                     of this query"
+                )));
+            }
+        }
+        Ok(())
     }
 
     /// All aggregates algebraic → fully decomposable (§3.2).
@@ -1271,6 +1371,32 @@ mod tests {
         );
         // Without a projection everything is carried implicitly.
         assert_eq!(Query::scan("ds").sort("a").carry_columns(), None);
+    }
+
+    #[test]
+    fn eval_row_resolves_virtual_columns() {
+        // The HAVING evaluator: a lookup over one finalized group row.
+        let get = |name: &str| match name {
+            "sensor" => Some(3.0),
+            "count(val)" => Some(12.0),
+            "mean(val)" => Some(f64::NAN),
+            _ => None,
+        };
+        let p = Predicate::cmp("count(val)", CmpOp::Gt, 10.0);
+        assert!(p.eval_row(&get).unwrap());
+        let p = Predicate::cmp("count(val)", CmpOp::Gt, 10.0)
+            .and(Predicate::cmp("sensor", CmpOp::Le, 2.0));
+        assert!(!p.eval_row(&get).unwrap());
+        // NaN aggregate values match only Ne (same as the batch path).
+        assert!(!Predicate::cmp("mean(val)", CmpOp::Gt, 0.0).eval_row(&get).unwrap());
+        assert!(Predicate::cmp("mean(val)", CmpOp::Ne, 0.0).eval_row(&get).unwrap());
+        // Not / Or shapes and unknown columns.
+        assert!(Predicate::cmp("sensor", CmpOp::Eq, 9.0)
+            .or(Predicate::cmp("sensor", CmpOp::Eq, 3.0))
+            .eval_row(&get)
+            .unwrap());
+        assert!(Predicate::True.not().eval_row(&get).map(|b| !b).unwrap());
+        assert!(Predicate::cmp("ghost", CmpOp::Eq, 0.0).eval_row(&get).is_err());
     }
 
     #[test]

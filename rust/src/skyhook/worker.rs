@@ -50,6 +50,10 @@ pub struct SubResult {
     /// Ranged reads saved by column-extent coalescing (client-side
     /// partial reads only; pushdown coalesces on the device instead).
     pub reads_coalesced: u64,
+    /// Row partials only: the storage server already sorted this partial
+    /// by the query's sort keys (pushed-down top-k), so the driver can
+    /// k-way merge it without re-sorting.
+    pub presorted: bool,
     /// Virtual completion time.
     pub finish: f64,
 }
@@ -93,6 +97,8 @@ fn execute_pushdown(
         output,
         bytes_moved: bytes,
         reads_coalesced: 0,
+        // A pushed-down partial top-k arrives sorted by the spec's keys.
+        presorted: !spec.sort.is_empty(),
         finish,
     })
 }
@@ -189,6 +195,7 @@ fn execute_client_side(
             output: SubOutput::Groups(groups),
             bytes_moved: bytes,
             reads_coalesced: coalesced,
+            presorted: false,
             finish,
         });
     }
@@ -203,6 +210,7 @@ fn execute_client_side(
             output: SubOutput::Aggs(states),
             bytes_moved: bytes,
             reads_coalesced: coalesced,
+            presorted: false,
             finish,
         });
     }
@@ -220,6 +228,7 @@ fn execute_client_side(
         output: SubOutput::Rows(rows),
         bytes_moved: bytes,
         reads_coalesced: coalesced,
+        presorted: false,
         finish,
     })
 }

@@ -558,9 +558,10 @@ fn pruned_and_unpruned_queries_agree_end_to_end() {
 fn logical_plan_modes_agree_end_to_end() {
     // Any LogicalPlan the IR accepts must return identical rows,
     // aggregates and groups under forced client-side, forced server-side
-    // (pushdown), and planner-chosen per-stage modes — across random
-    // predicates, projections, sorts, limits, multi-aggregate /
-    // multi-key group-bys, both layouts, and NaN-bearing data.
+    // (pushdown), and the planner's cost-chosen per-object mixed modes —
+    // across random predicates, projections, sorts, limits,
+    // multi-aggregate / multi-key group-bys with HAVING filters, both
+    // layouts, and NaN-bearing data.
     use skyhook_map::config::{ClusterConfig, DriverConfig};
     use skyhook_map::dataset::partition::PartitionSpec;
     use skyhook_map::skyhook::{register_skyhook_class, Driver, ExecMode, Query};
@@ -612,7 +613,9 @@ fn logical_plan_modes_agree_end_to_end() {
                 lp = lp.aggregate(aggs, &[]);
             }
             _ => {
-                // Grouped multi-aggregate over one or two i64 keys.
+                // Grouped multi-aggregate over one or two i64 keys,
+                // optionally topped with a HAVING filter (a Filter above
+                // the Aggregate) over group keys / aggregate values.
                 let aggs = vec![
                     Aggregate::new(AggFunc::Count, "val"),
                     Aggregate::new(AggFunc::Sum, "val"),
@@ -623,6 +626,19 @@ fn logical_plan_modes_agree_end_to_end() {
                     &["sensor", "ts"]
                 };
                 lp = lp.aggregate(aggs, keys);
+                if r.chance(0.5) {
+                    let hcol = if r.chance(0.5) { "count(val)" } else { "sensor" };
+                    let hpred = Predicate::cmp(
+                        hcol,
+                        [CmpOp::Gt, CmpOp::Le, CmpOp::Ne][r.range(0, 2)],
+                        r.f64() * 12.0 - 2.0,
+                    );
+                    lp = lp.filter(if r.chance(0.3) {
+                        hpred.clone().or(Predicate::cmp("sum(val)", CmpOp::Ge, 0.0))
+                    } else {
+                        hpred
+                    });
+                }
             }
         }
         lp.to_query().expect("generator builds accepted shapes")

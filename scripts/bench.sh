@@ -1,13 +1,15 @@
 #!/usr/bin/env bash
-# Run the pushdown (E2), object-size (E3) and composability (E5) benches
-# and emit perf snapshots, so successive PRs have a trajectory to
-# compare against:
+# Run the pushdown (E2), object-size (E3), composability (E5) and
+# cost-model (E6-cost) benches and emit perf snapshots, so successive
+# PRs have a trajectory to compare against:
 #
-#   BENCH_pushdown.json — E2 + E3 (zone-map pruning, partial reads)
-#   BENCH_compose.json  — E5 (chained-pipeline offload vs client-side:
-#                         wall time + the bytes-moved tables)
+#   BENCH_pushdown.json  — E2 + E3 (zone-map pruning, partial reads)
+#   BENCH_compose.json   — E5 (chained-pipeline offload vs client-side:
+#                          wall time + the bytes-moved tables)
+#   BENCH_costmodel.json — E6-cost (selectivity × object-size sweep of
+#                          the planner's cost-based offload choice)
 #
-# Usage: scripts/bench.sh [pushdown_output.json [compose_output.json]]
+# Usage: scripts/bench.sh [pushdown.json [compose.json [costmodel.json]]]
 #
 # Each snapshot records wall time per bench plus the raw table output
 # (which includes bytes_moved / objects_pruned / sim_seconds columns).
@@ -16,6 +18,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 out_json=${1:-BENCH_pushdown.json}
 compose_json=${2:-BENCH_compose.json}
+costmodel_json=${3:-BENCH_costmodel.json}
 workdir=$(mktemp -d)
 trap 'rm -rf "$workdir"' EXIT
 
@@ -39,6 +42,7 @@ status=0
 run_bench e2_pushdown || status=1
 run_bench e3_object_size || status=1
 run_bench e5_composability || status=1
+run_bench e6_cost_model || status=1
 
 snapshot() {
     local out=$1
@@ -79,5 +83,6 @@ PY
 
 snapshot "$out_json" e2_pushdown e3_object_size
 snapshot "$compose_json" e5_composability
+snapshot "$costmodel_json" e6_cost_model
 
 exit $status
