@@ -106,7 +106,9 @@ fn main() {
                     push.stats.sim_seconds
                 );
             }
-            if thr >= 95.0 {
+            if thr >= 95.0 && target >= 512 * 1024 {
+                // The classic selective regime: few large objects per
+                // OSD, tiny partials — pushdown wins outright.
                 assert!(
                     np > nc,
                     "{size_label}/{sel_label}: expected pushdown majority, got {np}p/{nc}c"
@@ -120,6 +122,23 @@ fn main() {
                 assert!(
                     chosen.stats.bytes_moved < client.stats.bytes_moved,
                     "selective pushdown must move fewer bytes"
+                );
+            }
+            if thr >= 95.0 && target <= 64 * 1024 {
+                // The contended regime (objects ≫ OSDs): the serialized
+                // extension CPU shifts (some of) the boundary
+                // client-ward even for a selective filter — the HEP
+                // tiny-object observation. Whatever the split, the
+                // chosen plan must track the better forced baseline.
+                assert!(
+                    nc > 0,
+                    "{size_label}/{sel_label}: saturation should shed work client-ward, got {np}p/{nc}c"
+                );
+                let best = push.stats.sim_seconds.min(client.stats.sim_seconds);
+                assert!(
+                    chosen.stats.sim_seconds <= best * 1.10,
+                    "{size_label}/{sel_label}: chosen {} vs best forced {best}",
+                    chosen.stats.sim_seconds,
                 );
             }
             // Where the uniform-range assumption is well-founded (the
@@ -138,6 +157,79 @@ fn main() {
             }
         }
     }
+    // ---- E6-sat: the OSD-contention shift, isolated ---------------------
+    // Same dataset and query, priced through plan_costed for a 16-OSD
+    // cluster (uncontended) and a 1-OSD cluster (saturated). Deterministic
+    // — no simulation noise — so the boundary shift asserts hard: the
+    // selective scan pushes down when servers are free and goes
+    // client-side when every object queues on one server's CPU.
+    {
+        use skyhook_map::dataset::metadata;
+        use skyhook_map::simnet::CostParams;
+        use skyhook_map::skyhook::plan_costed;
+        let cfg = Config::from_text(
+            "[cluster]\nosds = 6\nreplicas = 1\n[driver]\nworkers = 6\n",
+        )
+        .unwrap();
+        let stack = Stack::build(&cfg).unwrap();
+        stack
+            .driver
+            .write_table(
+                "t",
+                &batch,
+                Layout::Col,
+                &PartitionSpec::with_target(512 * 1024),
+                None,
+            )
+            .unwrap();
+        let q = Query::scan("t").filter(Predicate::cmp("val", CmpOp::Gt, 95.0));
+        let (meta, _) = metadata::load_meta(stack.driver.cluster(), 0.0, "t").unwrap();
+        let mut sat_rows = Vec::new();
+        let mut assignments = Vec::new();
+        for osds in [16usize, 4, 1] {
+            let cost = CostParams {
+                osds,
+                ..stack.driver.cluster().cost().clone()
+            };
+            let p = plan_costed(&q, &meta, None, true, &cost).unwrap();
+            assignments.push(p.assignment);
+            sat_rows.push(vec![
+                osds.to_string(),
+                p.subqueries.len().to_string(),
+                format!("{:.1}", p.subqueries.len() as f64 / osds as f64),
+                format!("{}p/{}c", p.assignment.0, p.assignment.1),
+                format!("{:.4}", p.cost.pushdown_s),
+                format!("{:.4}", p.cost.client_s),
+            ]);
+        }
+        table(
+            "E6-sat: objects-per-OSD saturation shifts the offload boundary",
+            &[
+                "osds",
+                "objects",
+                "objs/osd",
+                "assignment",
+                "est push s",
+                "est client s",
+            ],
+            &sat_rows,
+        );
+        // Uncontended → pushdown majority; fully saturated → client
+        // majority; client-side count never decreases as contention grows.
+        assert!(
+            assignments[0].0 > assignments[0].1,
+            "16 OSDs should push down: {assignments:?}"
+        );
+        assert!(
+            assignments[2].1 > assignments[2].0,
+            "1 OSD should shed client-ward: {assignments:?}"
+        );
+        assert!(
+            assignments[0].1 <= assignments[1].1 && assignments[1].1 <= assignments[2].1,
+            "client share must grow with contention: {assignments:?}"
+        );
+    }
+
     table(
         "E6-cost: cost-based offload choice across selectivity × object size",
         &[

@@ -55,6 +55,9 @@ pub struct ClusterConfig {
     pub pg_count: u32,
     /// Deterministic seed for placement and workload generation.
     pub seed: u64,
+    /// Header-prefix bytes a projected partial read fetches before
+    /// issuing per-column ranged reads (tunable; swept in the E3 bench).
+    pub header_prefix: u64,
 }
 
 impl Default for ClusterConfig {
@@ -66,6 +69,7 @@ impl Default for ClusterConfig {
             profile: CostProfile::PaperTestbed,
             pg_count: 128,
             seed: 42,
+            header_prefix: crate::dataset::layout::HEADER_PREFIX as u64,
         }
     }
 }
@@ -139,7 +143,7 @@ impl Config {
             for key in sec.keys() {
                 match key.as_str() {
                     "osds" | "replicas" | "target_object_size" | "profile" | "pg_count"
-                    | "seed" => {}
+                    | "seed" | "header_prefix" => {}
                     other => {
                         return Err(Error::Config(format!("unknown key cluster.{other}")))
                     }
@@ -176,6 +180,13 @@ impl Config {
         }
         if let Some(n) = doc.get_int("cluster.seed") {
             cfg.cluster.seed = n as u64;
+        }
+        if let Some(s) = doc.get_str("cluster.header_prefix") {
+            cfg.cluster.header_prefix = parse_size(s)?;
+        } else if let Some(n) = doc.get_int("cluster.header_prefix") {
+            cfg.cluster.header_prefix = n
+                .try_into()
+                .map_err(|_| Error::Config("negative header_prefix".into()))?;
         }
 
         if let Some(sec) = doc.section("driver") {
@@ -231,6 +242,9 @@ impl Config {
         if self.cluster.target_object_size == 0 {
             return Err(Error::Config("target_object_size must be > 0".into()));
         }
+        if self.cluster.header_prefix == 0 {
+            return Err(Error::Config("header_prefix must be > 0".into()));
+        }
         Ok(())
     }
 }
@@ -281,6 +295,20 @@ use_pjrt = true
     fn object_size_as_int() {
         let cfg = Config::from_text("[cluster]\ntarget_object_size = 1048576").unwrap();
         assert_eq!(cfg.cluster.target_object_size, 1 << 20);
+    }
+
+    #[test]
+    fn header_prefix_knob_parses_and_validates() {
+        let cfg = Config::from_text("[cluster]\nheader_prefix = \"16KiB\"").unwrap();
+        assert_eq!(cfg.cluster.header_prefix, 16 * 1024);
+        let cfg = Config::from_text("[cluster]\nheader_prefix = 4096").unwrap();
+        assert_eq!(cfg.cluster.header_prefix, 4096);
+        // Default is the layout module's 64 KiB constant.
+        assert_eq!(
+            Config::default().cluster.header_prefix,
+            crate::dataset::layout::HEADER_PREFIX as u64
+        );
+        assert!(Config::from_text("[cluster]\nheader_prefix = 0").is_err());
     }
 
     #[test]

@@ -274,7 +274,11 @@ pub trait RangeSource {
     fn read_all(&mut self) -> Result<Vec<u8>>;
 }
 
-/// Largest header prefix fetched before falling back to a full read.
+/// Default header-prefix size: the largest prefix fetched before
+/// per-column ranged reads (or a full-read fallback). A *default* only —
+/// the live value is the `cluster.header_prefix` config knob, threaded
+/// to both sides of the storage boundary via `CostParams::header_prefix`
+/// (swept against object size in the E3 bench).
 pub const HEADER_PREFIX: usize = 64 * 1024;
 
 /// I/O accounting of one projected read (feeds `QueryStats`).
@@ -290,9 +294,12 @@ pub struct ProjReadStats {
 
 /// [`read_projected`] that also reports how many ranged reads were
 /// issued and how many were saved by extent coalescing.
+/// `header_prefix` bounds the up-front prefix read ([`HEADER_PREFIX`]
+/// is the default; callers thread the cluster's configured knob).
 pub fn read_projected_stats(
     src: &mut dyn RangeSource,
     needed: Option<&[String]>,
+    header_prefix: usize,
 ) -> Result<(Batch, ProjReadStats)> {
     let mut stats = ProjReadStats::default();
     let Some(needed) = needed else {
@@ -301,7 +308,7 @@ pub fn read_projected_stats(
         return Ok((decode_batch(&raw)?.0, stats));
     };
     let size = src.size()?;
-    let prefix = src.read_range(0, size.min(HEADER_PREFIX))?;
+    let prefix = src.read_range(0, size.min(header_prefix.max(1)))?;
     stats.ranged_reads = 1;
     let header = match parse_header(&prefix) {
         Ok(h) if h.layout == Layout::Col => h,
@@ -342,8 +349,11 @@ pub fn read_projected_stats(
             .ok_or_else(|| Error::Corrupt("directory extent overflow".into()))?;
         extents.push((ci, start, end));
     }
-    // Contiguous runs of extents beyond the prefix.
-    let mut runs: Vec<(usize, usize)> = Vec::new(); // (start, end)
+    // Contiguous runs of extents beyond the prefix. A run's fetch start
+    // is clipped to the prefix end: bytes the prefix already fetched are
+    // never read twice, even for an extent straddling the boundary (its
+    // column is stitched from prefix + run below).
+    let mut runs: Vec<(usize, usize)> = Vec::new(); // (fetch start, end)
     for &(_, start, end) in &extents {
         if end <= prefix.len() {
             continue;
@@ -353,7 +363,7 @@ pub fn read_projected_stats(
                 *rend = end;
                 stats.reads_coalesced += 1;
             }
-            _ => runs.push((start, end)),
+            _ => runs.push((start.max(prefix.len()), end)),
         }
     }
     let mut buffers = Vec::with_capacity(runs.len());
@@ -370,13 +380,27 @@ pub fn read_projected_stats(
         } else {
             let ri = runs
                 .iter()
-                .position(|&(rs, re)| rs <= start && end <= re)
+                .position(|&(rs, re)| rs <= start.max(prefix.len()) && end <= re)
                 .expect("extent beyond prefix belongs to a run");
             let (rs, _) = runs[ri];
-            let bytes = buffers[ri]
-                .get(start - rs..end - rs)
-                .ok_or_else(|| Error::Corrupt("short ranged read".into()))?;
-            Cow::Borrowed(bytes)
+            if start >= rs {
+                Cow::Borrowed(
+                    buffers[ri]
+                        .get(start - rs..end - rs)
+                        .ok_or_else(|| Error::Corrupt("short ranged read".into()))?,
+                )
+            } else {
+                // Straddles the prefix boundary (rs == prefix.len()):
+                // stitch the column from the prefix's tail + the run.
+                let head = &prefix[start..rs];
+                let tail = buffers[ri]
+                    .get(..end - rs)
+                    .ok_or_else(|| Error::Corrupt("short ranged read".into()))?;
+                let mut owned = Vec::with_capacity(end - start);
+                owned.extend_from_slice(head);
+                owned.extend_from_slice(tail);
+                Cow::Owned(owned)
+            }
         };
         let (_, _, crc) = header.directory[ci];
         if crc32fast::hash(&bytes) != crc {
@@ -405,8 +429,12 @@ pub fn read_projected_stats(
 ///
 /// Returns a batch containing exactly the needed columns, in schema
 /// order. Per-column checksums of fetched columns are verified.
-pub fn read_projected(src: &mut dyn RangeSource, needed: Option<&[String]>) -> Result<Batch> {
-    read_projected_stats(src, needed).map(|(b, _)| b)
+pub fn read_projected(
+    src: &mut dyn RangeSource,
+    needed: Option<&[String]>,
+    header_prefix: usize,
+) -> Result<Batch> {
+    read_projected_stats(src, needed, header_prefix).map(|(b, _)| b)
 }
 
 fn encode_rows(batch: &Batch) -> Vec<u8> {
@@ -782,7 +810,7 @@ mod tests {
         let b = gen::wide_table(4000, 16, 5);
         let needed = vec!["c3".to_string(), "c11".to_string()];
         let mut col_src = BufSource::new(encode_batch(&b, Layout::Col));
-        let got = read_projected(&mut col_src, Some(&needed)).unwrap();
+        let got = read_projected(&mut col_src, Some(&needed), HEADER_PREFIX).unwrap();
         assert_eq!(got.ncols(), 2);
         assert_eq!(got.nrows(), 4000);
         assert_eq!(got, b.project(&["c3", "c11"]).unwrap());
@@ -795,16 +823,17 @@ mod tests {
         );
         // Row layout must fall back to a full read, same logical result.
         let mut row_src = BufSource::new(encode_batch(&b, Layout::Row));
-        let got_row = read_projected(&mut row_src, Some(&needed)).unwrap();
+        let got_row = read_projected(&mut row_src, Some(&needed), HEADER_PREFIX).unwrap();
         assert_eq!(got_row, got);
         assert!(row_src.fetched >= row_src.buf.len());
         // needed = None reads everything.
         let mut full_src = BufSource::new(encode_batch(&b, Layout::Col));
-        assert_eq!(read_projected(&mut full_src, None).unwrap(), b);
+        assert_eq!(read_projected(&mut full_src, None, HEADER_PREFIX).unwrap(), b);
         // Missing columns error.
         assert!(read_projected(
             &mut col_src,
-            Some(&["ghost".to_string()])
+            Some(&["ghost".to_string()]),
+            HEADER_PREFIX
         )
         .is_err());
     }
@@ -819,7 +848,7 @@ mod tests {
         // Three adjacent tail columns → one coalesced ranged read.
         let needed: Vec<String> = ["c12", "c13", "c14"].iter().map(|s| s.to_string()).collect();
         let mut src = BufSource::new(enc.clone());
-        let (got, stats) = read_projected_stats(&mut src, Some(&needed)).unwrap();
+        let (got, stats) = read_projected_stats(&mut src, Some(&needed), HEADER_PREFIX).unwrap();
         assert_eq!(got, b.project(&["c12", "c13", "c14"]).unwrap());
         // Prefix + one merged run (instead of three per-column reads).
         assert_eq!(stats.ranged_reads, 2);
@@ -829,7 +858,7 @@ mod tests {
         // Non-adjacent columns cannot merge.
         let needed: Vec<String> = ["c8", "c14"].iter().map(|s| s.to_string()).collect();
         let mut src = BufSource::new(enc.clone());
-        let (_, stats) = read_projected_stats(&mut src, Some(&needed)).unwrap();
+        let (_, stats) = read_projected_stats(&mut src, Some(&needed), HEADER_PREFIX).unwrap();
         assert_eq!(stats.ranged_reads, 3);
         assert_eq!(stats.reads_coalesced, 0);
 
@@ -839,10 +868,41 @@ mod tests {
             .map(|s| s.to_string())
             .collect();
         let mut src = BufSource::new(enc);
-        let (got, stats) = read_projected_stats(&mut src, Some(&needed)).unwrap();
+        let (got, stats) = read_projected_stats(&mut src, Some(&needed), HEADER_PREFIX).unwrap();
         assert_eq!(got, b.project(&["c8", "c9", "c13", "c14"]).unwrap());
         assert_eq!(stats.ranged_reads, 3);
         assert_eq!(stats.reads_coalesced, 2);
+    }
+
+    #[test]
+    fn header_prefix_knob_trades_over_fetch_for_round_trips() {
+        // Same projected read under different prefix sizes: a small
+        // prefix fetches fewer bytes (less blind over-fetch) at the cost
+        // of more ranged reads; a prefix covering the whole object
+        // degenerates to one full read. Results are identical throughout.
+        let b = gen::wide_table(4000, 16, 5);
+        let enc = encode_batch(&b, Layout::Col);
+        let object = enc.len();
+        let needed = vec!["c14".to_string()];
+        let mut fetched = Vec::new();
+        let mut reads = Vec::new();
+        let mut out = Vec::new();
+        for prefix in [4 * 1024, HEADER_PREFIX, 2 * object] {
+            let mut src = BufSource::new(enc.clone());
+            let (got, stats) = read_projected_stats(&mut src, Some(&needed), prefix).unwrap();
+            fetched.push(src.fetched);
+            reads.push(stats.ranged_reads);
+            out.push(got);
+        }
+        assert_eq!(out[0], out[1]);
+        assert_eq!(out[1], out[2]);
+        assert_eq!(out[0], b.project(&["c14"]).unwrap());
+        // Over-fetch grows with the prefix for a narrow projection…
+        assert!(fetched[0] < fetched[1], "{fetched:?}");
+        assert!(fetched[1] < fetched[2], "{fetched:?}");
+        // …while the object-covering prefix needs no extra reads.
+        assert!(reads[0] >= reads[2], "{reads:?}");
+        assert_eq!(reads[2], 1);
     }
 
     #[test]
@@ -851,7 +911,8 @@ mod tests {
         // of the prefix read, no extra ranged reads.
         let b = sample();
         let mut src = BufSource::new(encode_batch(&b, Layout::Col));
-        let (got, stats) = read_projected_stats(&mut src, Some(&["v".to_string()])).unwrap();
+        let (got, stats) =
+            read_projected_stats(&mut src, Some(&["v".to_string()]), HEADER_PREFIX).unwrap();
         assert_eq!(got, b.project(&["v"]).unwrap());
         assert_eq!(src.fetched, src.buf.len().min(HEADER_PREFIX));
         assert_eq!(stats.ranged_reads, 1);

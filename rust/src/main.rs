@@ -364,8 +364,13 @@ fn cmd_query(f: &Flags) -> Result<()> {
             println!("... ({} rows)", rows.nrows());
         }
     }
+    let ratio = r
+        .stats
+        .est_ratio
+        .map(|x| format!(", act/est {x:.2}"))
+        .unwrap_or_default();
     println!(
-        "-- {} objects ({} pruned, {} skipped), {} moved (est {}), {} reads coalesced, sim {:.4}s, wall {:.4}s, modes {}p/{}c",
+        "-- {} objects ({} pruned, {} skipped), {} moved (est {}{ratio}), {} reads coalesced, sim {:.4}s, wall {:.4}s, modes {}p/{}c",
         r.stats.objects,
         r.stats.objects_pruned,
         fmt_size(r.stats.bytes_skipped),

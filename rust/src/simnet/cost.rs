@@ -9,6 +9,80 @@
 //! `CostParams::paper_testbed()` encodes those rates so the E1 bench
 //! reproduces the table's *shape* at any scaled dataset size.
 
+/// Execution-side CPU rates, single-sourced.
+///
+/// This is the **one** place the system defines what a row of predicate
+/// evaluation, a value of aggregation, a row of partial sorting, a byte
+/// of result re-encoding, or a byte of client decode costs. The
+/// simulated charges (the `skyhook` extension handlers via
+/// `ClsBackend::exec_profile`, the client worker via
+/// `Cluster::cost().exec`) and the planner's estimates
+/// ([`CostParams::estimate`]) all read the same struct, so a custom
+/// profile moves the simulation *and* the estimates in lockstep — cost
+/// drift between them is structurally impossible on the native paths.
+/// (The one modeled-but-not-charged case: a PJRT compute engine takes
+/// over the scalar f32 aggregate hot spot as *offloaded* compute, so
+/// the estimator's `val_agg` pricing is an upper bound there.)
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExecProfile {
+    /// Per-row CPU cost of predicate evaluation in the storage-side
+    /// extension (seconds).
+    pub row_pred_cost_s: f64,
+    /// Per-value CPU cost of aggregation in the storage-side extension
+    /// (seconds).
+    pub val_agg_cost_s: f64,
+    /// Per-row, per-key CPU cost of the per-object partial sort in the
+    /// storage-side extension (seconds).
+    pub sort_row_cost_s: f64,
+    /// Per-byte CPU cost of re-serializing a row-partial result on the
+    /// storage server (seconds) — the plain read path streams stored
+    /// bytes and pays nothing here, which is exactly why the cost model
+    /// can prefer client-side execution for unselective scans.
+    pub result_enc_cost_s: f64,
+    /// Client-side decode bandwidth (bytes/s) for fetched objects and
+    /// returned partials.
+    pub client_decode_bw: f64,
+    /// Client-side per-row CPU for predicate/aggregate evaluation when a
+    /// sub-query runs client-side (seconds).
+    pub client_row_cost_s: f64,
+}
+
+// The default execution rates — each constant is defined here, once,
+// and nowhere else (`worker.rs` / `extension.rs` read them through the
+// profile).
+const ROW_PRED_COST: f64 = 10e-9;
+const VAL_AGG_COST: f64 = 4e-9;
+const SORT_ROW_COST: f64 = 8e-9;
+const RESULT_ENC_COST: f64 = 1e-9;
+const CLIENT_DECODE_BW: f64 = 2.0e9;
+const CLIENT_ROW_COST: f64 = 12e-9;
+
+impl Default for ExecProfile {
+    fn default() -> Self {
+        Self {
+            row_pred_cost_s: ROW_PRED_COST,
+            val_agg_cost_s: VAL_AGG_COST,
+            sort_row_cost_s: SORT_ROW_COST,
+            result_enc_cost_s: RESULT_ENC_COST,
+            client_decode_bw: CLIENT_DECODE_BW,
+            client_row_cost_s: CLIENT_ROW_COST,
+        }
+    }
+}
+
+impl ExecProfile {
+    /// Client-side decode time for `bytes` fetched over the network.
+    pub fn decode_time(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.client_decode_bw
+    }
+
+    /// Client-side CPU for one sub-query: decode what was fetched plus
+    /// per-row evaluation (the worker's coarse client cost model).
+    pub fn client_cpu(&self, bytes: u64, rows: u64) -> f64 {
+        self.decode_time(bytes) + rows as f64 * self.client_row_cost_s
+    }
+}
+
 /// Cost-model parameters (all rates in bytes/second, times in seconds).
 #[derive(Clone, Debug)]
 pub struct CostParams {
@@ -28,21 +102,19 @@ pub struct CostParams {
     /// Client-side cost per byte for the native access-library write path
     /// (buffering + local file system).
     pub native_bw: f64,
-    /// Per-row CPU cost of evaluating a predicate in the objclass
-    /// handler (storage-side CPU) — kept equal to the extension's
-    /// `ROW_PRED_COST` so the planner's estimates price what the
-    /// simulated handlers actually charge.
-    pub cpu_row_cost_s: f64,
-    /// Per-byte CPU cost of encoding an objclass handler's result on the
-    /// storage server (the pushdown path re-serializes row partials; the
-    /// plain read path streams stored bytes and pays nothing here).
-    pub cpu_byte_cost_s: f64,
-    /// Client-side decode bandwidth (bytes/s) for fetched objects and
-    /// returned partials (mirrors the worker's decode cost).
-    pub client_decode_bw: f64,
-    /// Client-side per-row CPU for predicate/aggregate evaluation when a
-    /// sub-query runs client-side (mirrors the worker's row cost).
-    pub client_row_cost_s: f64,
+    /// Execution-side CPU rates — the single source shared by the
+    /// simulated handlers/workers and the planner's estimator.
+    pub exec: ExecProfile,
+    /// Storage servers behind this profile. `0` = unknown: the estimator
+    /// skips OSD-contention modeling. `Cluster::new` stamps the real
+    /// cluster size so driver-planned queries price per-OSD saturation.
+    pub osds: usize,
+    /// Header-prefix bytes a projected partial read fetches before
+    /// issuing per-column ranged reads (`cluster.header_prefix` config
+    /// knob; default [`HEADER_PREFIX`]).
+    ///
+    /// [`HEADER_PREFIX`]: crate::dataset::layout::HEADER_PREFIX
+    pub header_prefix: usize,
 }
 
 impl CostParams {
@@ -63,10 +135,9 @@ impl CostParams {
             op_overhead_s: 300e-6,
             client_fwd_bw: 239.5e6,
             native_bw: 122.6e6,
-            cpu_row_cost_s: 10e-9,
-            cpu_byte_cost_s: 1e-9,
-            client_decode_bw: 2.0e9,
-            client_row_cost_s: 12e-9,
+            exec: ExecProfile::default(),
+            osds: 0,
+            header_prefix: crate::dataset::layout::HEADER_PREFIX,
         }
     }
 
@@ -81,10 +152,9 @@ impl CostParams {
             op_overhead_s: 30e-6,
             client_fwd_bw: 2.0e9,
             native_bw: 1.2e9,
-            cpu_row_cost_s: 10e-9,
-            cpu_byte_cost_s: 1e-9,
-            client_decode_bw: 2.0e9,
-            client_row_cost_s: 12e-9,
+            exec: ExecProfile::default(),
+            osds: 0,
+            header_prefix: crate::dataset::layout::HEADER_PREFIX,
         }
     }
 
@@ -99,10 +169,9 @@ impl CostParams {
             op_overhead_s: 8e-3, // seek-dominated per-op cost
             client_fwd_bw: 400e6,
             native_bw: 130e6,
-            cpu_row_cost_s: 10e-9,
-            cpu_byte_cost_s: 1e-9,
-            client_decode_bw: 2.0e9,
-            client_row_cost_s: 12e-9,
+            exec: ExecProfile::default(),
+            osds: 0,
+            header_prefix: crate::dataset::layout::HEADER_PREFIX,
         }
     }
 
@@ -134,10 +203,31 @@ impl CostParams {
 
     /// Storage-side CPU time to scan `rows` rows.
     pub fn cpu_scan_time(&self, rows: u64) -> f64 {
-        rows as f64 * self.cpu_row_cost_s
+        rows as f64 * self.exec.row_pred_cost_s
     }
 
     // ---- the planner's query-cost estimator --------------------------------
+
+    /// OSD-contention multiplier for storage-server CPU (ROADMAP planner
+    /// follow-up d, the HEP tiny-object regime, arXiv:2107.07304): when a
+    /// query fans `objects_per_osd` sub-queries onto each storage server,
+    /// the extension CPU they consume serializes on that server's device
+    /// timeline, so its effective contribution to the makespan grows with
+    /// the queue depth. The plain read path streams stored bytes without
+    /// extension CPU, so saturation shifts the offload boundary
+    /// client-ward. `objects_per_osd <= 1` (or unknown, `0`) is
+    /// uncontended.
+    ///
+    /// Modeling note: the factor approximates the queueing delay one
+    /// sub-query experiences behind its peers, which is what the
+    /// per-object pushdown-vs-client *comparison* needs. Summed plan
+    /// totals (`QueryPlan::cost`, `explain`) are therefore comparative
+    /// per-object latencies, not a makespan prediction — like the rest
+    /// of the estimator, which also sums per-object round trips on the
+    /// client side without modeling worker parallelism.
+    pub fn osd_saturation(&self, p: &AccessProfile) -> f64 {
+        p.objects_per_osd.max(1.0)
+    }
 
     /// Estimated I/O cost of one sub-query on both sides of the offload
     /// boundary: request dispatch, device read set, and (client side) the
@@ -150,7 +240,7 @@ impl CostParams {
             * (self.net_time(64) + self.op_overhead_s + self.net_latency_s)
             + p.fetch_bytes as f64 / self.dev_read_bw
             + p.fetch_bytes as f64 / self.net_bw
-            + p.fetch_bytes as f64 / self.client_decode_bw;
+            + self.exec.decode_time(p.fetch_bytes);
         QueryCost {
             pushdown_s,
             client_s,
@@ -159,26 +249,36 @@ impl CostParams {
         }
     }
 
-    /// Estimated per-row compute cost (predicate + partial evaluation):
-    /// storage-side CPU when pushed down, worker CPU when client-side.
+    /// Estimated compute cost (predicate + partial evaluation). The
+    /// *movable* kernel work — aggregation per value, partial sort per
+    /// carried row — is priced on both sides (the kernel runs wherever
+    /// the sub-query lands), scaled by the [`CostParams::osd_saturation`]
+    /// queue factor only on the storage side; each side adds its own
+    /// per-row scan rate. Mirrors exactly what the shared execution
+    /// kernel charges (`skyhook::exec_kernel::KernelWork`).
     pub fn compute_cost(&self, p: &AccessProfile) -> QueryCost {
+        let movable = p.agg_values as f64 * self.exec.val_agg_cost_s
+            + p.sort_rows as f64 * self.exec.sort_row_cost_s;
         QueryCost {
-            pushdown_s: self.cpu_scan_time(p.rows),
-            client_s: p.rows as f64 * self.client_row_cost_s,
+            pushdown_s: self.osd_saturation(p)
+                * (p.rows as f64 * self.exec.row_pred_cost_s + movable),
+            client_s: p.rows as f64 * self.exec.client_row_cost_s + movable,
             pushdown_bytes: 0,
             client_bytes: 0,
         }
     }
 
     /// Estimated cost of producing and shipping the pushed-down partial:
-    /// server-side result encoding, the response crossing the network,
-    /// and its decode at the driver. Client-side execution has no partial
-    /// to ship (its bytes are all in [`CostParams::io_cost`]).
+    /// server-side result encoding (contention-scaled like the rest of
+    /// the extension CPU), the response crossing the network, and its
+    /// decode at the driver. Client-side execution has no partial to
+    /// ship (its bytes are all in [`CostParams::io_cost`]).
     pub fn reduce_cost(&self, p: &AccessProfile) -> QueryCost {
         QueryCost {
-            pushdown_s: p.result_bytes as f64 * self.cpu_byte_cost_s
+            pushdown_s: self.osd_saturation(p)
+                * (p.result_bytes as f64 * self.exec.result_enc_cost_s)
                 + self.net_time(p.result_bytes)
-                + p.result_bytes as f64 / self.client_decode_bw,
+                + self.exec.decode_time(p.result_bytes),
             client_s: 0.0,
             pushdown_bytes: p.result_bytes,
             client_bytes: 0,
@@ -226,6 +326,17 @@ pub struct AccessProfile {
     /// partials, `O(k)` for top-k, `O(selectivity × rows)` for row scans
     /// and holistic value shipping).
     pub result_bytes: u64,
+    /// Aggregate value updates the storage-side pass performs (rows ×
+    /// aggregate count; `0` for row queries), priced at
+    /// `ExecProfile::val_agg_cost_s`.
+    pub agg_values: u64,
+    /// Row × sort-key operations of the per-object partial sort (top-k
+    /// pushdown only; `0` otherwise), priced at
+    /// `ExecProfile::sort_row_cost_s`.
+    pub sort_rows: u64,
+    /// Surviving sub-queries of this plan per storage server — the input
+    /// of [`CostParams::osd_saturation`]. `0` = unknown (uncontended).
+    pub objects_per_osd: f64,
 }
 
 /// A two-sided cost estimate: what a sub-query (or a whole plan) costs
@@ -368,6 +479,7 @@ mod tests {
             fetch_round_trips: 1,
             request_bytes: 32,
             result_bytes: 64 + (sel * bytes as f64) as u64,
+            ..Default::default()
         }
     }
 
@@ -416,9 +528,82 @@ mod tests {
             fetch_round_trips: 3,
             request_bytes: 48,
             result_bytes: 112,
+            agg_values: 37_000,
+            ..Default::default()
         });
         assert!(est.pushdown_wins());
         assert!(est.pushdown_bytes * 10 < est.client_bytes);
+    }
+
+    #[test]
+    fn exec_profile_is_the_single_source_of_cpu_rates() {
+        // Every profile derives its execution rates from the one default
+        // ExecProfile; doubling a rate through the profile moves the
+        // matching estimator component and nothing else.
+        let base = CostParams::paper_testbed();
+        assert_eq!(base.exec, ExecProfile::default());
+        assert_eq!(CostParams::flash().exec, base.exec);
+        assert_eq!(CostParams::hdd().exec, base.exec);
+
+        let prof = AccessProfile {
+            rows: 10_000,
+            scan_bytes: 280_000,
+            fetch_bytes: 280_000,
+            fetch_round_trips: 1,
+            request_bytes: 48,
+            result_bytes: 100_000,
+            agg_values: 10_000,
+            sort_rows: 10_000,
+            ..Default::default()
+        };
+        let e0 = base.estimate(&prof);
+        // Server-only rates (per-row scan, result encode) move only the
+        // pushdown side.
+        let mut doubled = base.clone();
+        doubled.exec.row_pred_cost_s *= 2.0;
+        doubled.exec.result_enc_cost_s *= 2.0;
+        let e1 = doubled.estimate(&prof);
+        assert!(e1.pushdown_s > e0.pushdown_s, "server rates must move pushdown");
+        assert!((e1.client_s - e0.client_s).abs() < 1e-15, "server rates must not move client");
+        // Movable kernel rates (aggregation, partial sort) price the
+        // same work wherever it runs: both sides move.
+        let mut movable = base.clone();
+        movable.exec.val_agg_cost_s *= 2.0;
+        movable.exec.sort_row_cost_s *= 2.0;
+        let em = movable.estimate(&prof);
+        assert!(em.pushdown_s > e0.pushdown_s);
+        assert!(em.client_s > e0.client_s);
+        let mut client2 = base.clone();
+        client2.exec.client_row_cost_s *= 2.0;
+        let e2 = client2.estimate(&prof);
+        assert!(e2.client_s > e0.client_s);
+        assert!((e2.pushdown_s - e0.pushdown_s).abs() < 1e-15);
+        // Faster client decode cheapens the client fetch (and, via the
+        // driver's partial decode, slightly cheapens pushdown too).
+        let mut decode2 = base.clone();
+        decode2.exec.client_decode_bw *= 2.0;
+        let e3 = decode2.estimate(&prof);
+        assert!(e3.client_s < e0.client_s);
+        assert!(e3.pushdown_s <= e0.pushdown_s);
+    }
+
+    #[test]
+    fn osd_saturation_shifts_boundary_client_ward() {
+        // A profile near the crossover: uncontended it favors pushdown;
+        // with many objects queued per OSD the serialized extension CPU
+        // makes the plain read path win — only pushdown_s grows.
+        let p = CostParams::paper_testbed();
+        let mut prof = full_scan_profile(512 * 1024, 18_000, 0.001);
+        let unsat = p.estimate(&prof);
+        assert!(unsat.pushdown_wins(), "selective scan should push down");
+        prof.objects_per_osd = 64.0;
+        let sat = p.estimate(&prof);
+        assert!((sat.client_s - unsat.client_s).abs() < 1e-15);
+        assert!(sat.pushdown_s > unsat.pushdown_s);
+        assert!(!sat.pushdown_wins(), "saturated servers should shed work");
+        // Bytes estimates are contention-independent.
+        assert_eq!(sat.pushdown_bytes, unsat.pushdown_bytes);
+        assert_eq!(sat.client_bytes, unsat.client_bytes);
     }
 
     #[test]

@@ -22,5 +22,5 @@
 pub mod cost;
 pub mod timeline;
 
-pub use cost::{AccessProfile, CostParams, QueryCost, SimScale};
+pub use cost::{AccessProfile, CostParams, ExecProfile, QueryCost, SimScale};
 pub use timeline::{SimClock, Timeline};

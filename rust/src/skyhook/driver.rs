@@ -3,7 +3,7 @@
 //! aggregates the partial results — the Dask-scheduler stand-in.
 
 use super::logical::{merge_sorted, sort_rows};
-use super::plan::{group_prunes, plan_costed, ExecMode, QueryPlan};
+use super::plan::{group_prunes, plan_calibrated, CalibrationMap, ExecMode, QueryPlan};
 use super::query::{AggState, Predicate, Query};
 use super::worker::{self, SubOutput, SubResult};
 use crate::config::DriverConfig;
@@ -50,6 +50,13 @@ pub struct QueryStats {
     /// The planner's bytes-moved estimate for the chosen assignment —
     /// compare against `bytes_moved` to judge the cost model.
     pub bytes_estimated: u64,
+    /// Observed `bytes_moved / bytes_estimated` of this execution
+    /// (`None` when nothing was estimated or nothing moved). The driver
+    /// feeds it into its per-column [`CalibrationMap`] so subsequent
+    /// plans estimate closer to reality.
+    ///
+    /// [`CalibrationMap`]: super::plan::CalibrationMap
+    pub est_ratio: Option<f64>,
 }
 
 /// Result of a query.
@@ -76,12 +83,15 @@ pub struct WriteReport {
     pub wall_seconds: f64,
 }
 
-/// The driver: owns the worker pool and per-worker virtual CPU timelines.
+/// The driver: owns the worker pool, per-worker virtual CPU timelines,
+/// and the per-column selectivity calibration learned from executed
+/// queries (planner follow-up c).
 pub struct Driver {
     cluster: Arc<Cluster>,
     pool: ThreadPool,
     worker_cpus: Vec<Arc<Timeline>>,
     cfg: DriverConfig,
+    calibration: std::sync::RwLock<CalibrationMap>,
 }
 
 impl Driver {
@@ -92,11 +102,18 @@ impl Driver {
             pool: ThreadPool::new(workers),
             worker_cpus: (0..workers).map(|_| Arc::new(Timeline::new())).collect(),
             cfg,
+            calibration: std::sync::RwLock::new(CalibrationMap::default()),
         }
     }
 
     pub fn cluster(&self) -> &Arc<Cluster> {
         &self.cluster
+    }
+
+    /// Snapshot of the per-column est-vs-actual calibration the planner
+    /// consults (empty until queries with byte estimates execute).
+    pub fn calibration(&self) -> CalibrationMap {
+        self.calibration.read().unwrap().clone()
     }
 
     pub fn workers(&self) -> usize {
@@ -205,7 +222,10 @@ impl Driver {
         prune: bool,
     ) -> Result<QueryResult> {
         let (meta, _) = metadata::load_meta(&self.cluster, 0.0, &query.dataset)?;
-        let plan = plan_costed(query, &meta, force_mode, prune, self.cluster.cost())?;
+        let plan = {
+            let cal = self.calibration.read().unwrap();
+            plan_calibrated(query, &meta, force_mode, prune, self.cluster.cost(), &cal)?
+        };
         self.execute_plan(&plan)
     }
 
@@ -224,10 +244,12 @@ impl Driver {
             .enumerate()
             .collect();
         let objects = subs.len();
-        // One deep clone shared by every pool worker.
-        let q = Arc::new(query.clone());
+        // The plan's server-side stage block, cloned once and shared by
+        // every pool worker — both execution modes evaluate this exact
+        // spec (pushdown on the OSD, client-side through the kernel).
+        let spec = Arc::new(plan.pipeline.clone());
         let results: Vec<Result<SubResult>> = self.pool.map(subs, move |(i, sub)| {
-            worker::execute_subquery(&cluster, &q, &sub, at, &worker_cpus[i % nw])
+            worker::execute_subquery(&cluster, &spec, &sub, at, &worker_cpus[i % nw])
         });
 
         // Gather: merge partials in sub-query (object) order, so every
@@ -423,6 +445,32 @@ impl Driver {
         };
 
         let pushdown = plan.mode == ExecMode::Pushdown;
+        // Calibration feedback (planner follow-up c): record how far the
+        // byte estimate was from reality, attributed to the predicate's
+        // columns, so the next plan's selectivity estimate is corrected.
+        let est_ratio = (plan.est_bytes > 0 && bytes_moved > 0)
+            .then(|| bytes_moved as f64 / plan.est_bytes as f64);
+        if let Some(ratio) = est_ratio {
+            // Only executions whose byte estimate actually *depended* on
+            // the selectivity estimate teach the map: pushed-down row
+            // partials (uncapped — a top-k/head partial pins both the
+            // estimate and the actual at ~k rows, so its ratio says
+            // nothing), grouped partials and holistic value shipping
+            // scale with matching rows; constant-size algebraic partials
+            // and pure client-side fetches do not — their ratio≈1 would
+            // erase learned corrections through the EWMA.
+            let sel_sensitive = (!query.is_aggregate() && query.limit.is_none())
+                || !query.group_by.is_empty()
+                || query.aggregates.iter().any(|a| !a.func.is_algebraic());
+            let cols = query.predicate.columns();
+            // …and only fully pushed-down plans: a mixed assignment's
+            // ratio is dominated by deterministic client fetch bytes,
+            // which say nothing about selectivity either.
+            if sel_sensitive && plan.assignment.0 > 0 && plan.assignment.1 == 0 && !cols.is_empty()
+            {
+                self.calibration.write().unwrap().observe(&cols, ratio);
+            }
+        }
         Ok(QueryResult {
             rows,
             aggregates,
@@ -439,6 +487,7 @@ impl Driver {
                 objects_pushdown: plan.assignment.0,
                 objects_client: plan.assignment.1,
                 bytes_estimated: plan.est_bytes,
+                est_ratio,
             },
         })
     }
@@ -448,7 +497,8 @@ impl Driver {
     /// costs) without executing it — the CLI's EXPLAIN.
     pub fn explain(&self, query: &Query, force_mode: Option<ExecMode>) -> Result<String> {
         let (meta, _) = metadata::load_meta(&self.cluster, 0.0, &query.dataset)?;
-        Ok(plan_costed(query, &meta, force_mode, true, self.cluster.cost())?.explain())
+        let cal = self.calibration.read().unwrap();
+        Ok(plan_calibrated(query, &meta, force_mode, true, self.cluster.cost(), &cal)?.explain())
     }
 
     /// Approximate quantile via the §3.2 de-composable approximation:
@@ -1058,6 +1108,42 @@ mod tests {
         };
         assert!(ts.iter().all(|&t| t < 600));
         assert_eq!(b.schema, bd.schema);
+    }
+
+    #[test]
+    fn calibration_feedback_improves_byte_estimates() {
+        // val is normal while the zone-map model assumes uniform, so the
+        // first estimate for a tail filter is far off; the observed
+        // est-vs-actual ratio feeds the calibration map and the second,
+        // identical query plans measurably closer to reality.
+        let d = driver(4, 4);
+        seed(&d, 3000);
+        let q = Query::scan("sensors")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 85.0))
+            .select(&["ts"]);
+        let r1 = d.execute(&q, Some(ExecMode::Pushdown)).unwrap();
+        let ratio = r1.stats.est_ratio.expect("estimated query records its ratio");
+        assert!(ratio > 0.0);
+        let cal = d.calibration();
+        assert!(!cal.is_empty());
+        assert!(cal.column_factor("val").is_some());
+        let r2 = d.execute(&q, Some(ExecMode::Pushdown)).unwrap();
+        // Same execution, same actual bytes — only the estimate moves.
+        assert_eq!(r1.stats.bytes_moved, r2.stats.bytes_moved);
+        let a = r1.stats.bytes_moved as f64;
+        let (e1, e2) = (
+            r1.stats.bytes_estimated as f64,
+            r2.stats.bytes_estimated as f64,
+        );
+        assert_ne!(e1 as u64, e2 as u64, "calibration must move the estimate");
+        assert!(
+            (e2 - a).abs() <= (e1 - a).abs(),
+            "estimate must move toward reality: e1={e1} e2={e2} actual={a}"
+        );
+        // Queries on other columns are untouched by this observation.
+        let other = Query::scan("sensors").filter(Predicate::cmp("ts", CmpOp::Lt, 100.0));
+        let o = d.execute(&other, Some(ExecMode::Pushdown)).unwrap();
+        assert!(o.stats.bytes_estimated > 0);
     }
 
     #[test]

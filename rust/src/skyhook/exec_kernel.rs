@@ -1,0 +1,308 @@
+//! The unified execution kernel: **one** vectorized pipeline evaluator
+//! shared by the storage-side extension (`skyhook.exec`) and the
+//! client-side worker.
+//!
+//! [`run_pipeline`] evaluates a [`PipelineSpec`] over one decoded
+//! [`Batch`] — filter → carry-projection → scalar or multi-key grouped
+//! multi-aggregate partials → per-object top-k/head — and is the *only*
+//! implementation of that operator chain in the system. Where it runs is
+//! a parameter, not a re-implementation: the extension calls it on the
+//! OSD (with the optional PJRT engine for the masked-aggregate hot
+//! spot), the worker calls it on the client over fetched columns, and
+//! both therefore produce bit-identical partials by construction.
+//!
+//! The kernel does not charge CPU itself — it *counts* the work it did
+//! ([`KernelWork`]) and each side prices those counters with the
+//! cluster-owned [`ExecProfile`]: the server via
+//! [`KernelWork::server_seconds`] plus a per-byte result-encode charge,
+//! the client via [`ExecProfile::client_cpu`] (its coarse
+//! decode-plus-per-row model) plus [`KernelWork::movable_seconds`] for
+//! the aggregation/sort work it performed instead of the server. The
+//! same `ExecProfile` feeds the planner's estimator
+//! (`simnet::CostParams`), so a custom profile moves the simulated
+//! charges and the estimates in lockstep.
+//!
+//! One deliberate asymmetry survives: when a PJRT [`ChunkCompute`]
+//! engine is present (storage servers only), scalar algebraic f32
+//! aggregates take its compiled masked-moments hot path — a different
+//! float reduction order than the native loop, so engine-enabled
+//! pushdown agrees with client-side execution to numeric tolerance,
+//! not bit-for-bit (`full_stack::pjrt` compares with 1e-3), and the
+//! engine path is charged as offloaded compute (no `agg_values`
+//! counted). Every engine-less path — which is what the mode-equality
+//! property tests pin — is bit-identical across sides.
+
+use super::logical::{grouped_partials, sort_rows, top_k_rows, PipelineSpec};
+use super::query::AggState;
+use crate::dataset::table::{Batch, Column};
+use crate::error::Result;
+use crate::simnet::ExecProfile;
+
+/// Storage-side compute engine for the masked filter+aggregate hot spot.
+/// Implemented by `runtime::PjrtEngine` (the AOT JAX/Pallas kernel); the
+/// kernel falls back to the native Rust loop when absent. Client-side
+/// executions pass `None` — the engine lives on the storage servers.
+pub trait ChunkCompute: Send + Sync {
+    /// Masked moments of `values`: returns `[count, sum, sumsq, min, max]`
+    /// over elements where `mask` is true.
+    fn masked_moments(&self, values: &[f32], mask: &[bool]) -> Result<[f64; 5]>;
+}
+
+/// What one pipeline evaluation produced. Also the decoded form of a
+/// `skyhook.exec` wire result (`extension::decode_exec_out`).
+#[derive(Debug)]
+pub enum ExecOut {
+    /// Row partial (filtered, carry-projected, optionally per-object
+    /// sorted/truncated), as a Col batch.
+    Rows(Batch),
+    /// Scalar aggregate partials, one per requested aggregate.
+    Aggs(Vec<AggState>),
+    /// Grouped partials: multi-column i64 key → one state per aggregate.
+    Groups(Vec<(Vec<i64>, Vec<AggState>)>),
+}
+
+/// Work counters of one kernel run — what the evaluation *did*, in
+/// units the [`ExecProfile`] rates price. Keeping the counting inside
+/// the kernel and the pricing outside is what lets one evaluator serve
+/// both sides of the storage boundary.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelWork {
+    /// Rows the predicate was evaluated over.
+    pub rows_scanned: u64,
+    /// Aggregate value updates the native (non-engine) path performed.
+    pub agg_values: u64,
+    /// Row × sort-key operations of the per-object partial sort.
+    pub sort_rows: u64,
+}
+
+impl KernelWork {
+    /// The *movable* share of this work — aggregation and the
+    /// per-object partial sort — priced at the same rates wherever the
+    /// kernel ran. The predicate scan is excluded: each side prices its
+    /// own per-row scan (`row_pred_cost_s` server-side via
+    /// [`KernelWork::server_seconds`], `client_row_cost_s` inside
+    /// [`ExecProfile::client_cpu`]).
+    pub fn movable_seconds(&self, p: &ExecProfile) -> f64 {
+        self.agg_values as f64 * p.val_agg_cost_s + self.sort_rows as f64 * p.sort_row_cost_s
+    }
+
+    /// Storage-server CPU seconds for this work under `p` — exactly the
+    /// rates `CostParams::compute_cost` prices, so the simulated charge
+    /// and the planner's estimate cannot drift.
+    pub fn server_seconds(&self, p: &ExecProfile) -> f64 {
+        self.rows_scanned as f64 * p.row_pred_cost_s + self.movable_seconds(p)
+    }
+}
+
+/// Columns a pipeline evaluation must be given (`None` = all): the
+/// predicate's inputs plus the carry-projection, aggregate and group-key
+/// columns. The single definition of the read set — the extension plans
+/// its ranged device reads and the worker its projected partial reads
+/// from the same answer.
+pub fn needed_columns(spec: &PipelineSpec) -> Option<Vec<String>> {
+    if spec.aggs.is_empty() && spec.projection.is_none() {
+        // An unprojected row pipeline returns every column, so the whole
+        // object must be decoded anyway.
+        return None;
+    }
+    let mut v: Vec<String> = spec
+        .predicate
+        .columns()
+        .into_iter()
+        .map(str::to_string)
+        .collect();
+    if let Some(p) = &spec.projection {
+        v.extend(p.iter().cloned());
+    }
+    v.extend(spec.aggs.iter().map(|a| a.col.clone()));
+    v.extend(spec.keys.iter().cloned());
+    v.sort();
+    v.dedup();
+    Some(v)
+}
+
+/// Evaluate the whole chained pipeline over one batch, in one pass.
+///
+/// The batch must contain (at least) [`needed_columns`]; extra columns
+/// are ignored by aggregates and dropped by the carry-projection, so
+/// passing a full decode is correct, just more bytes. Errors are
+/// identical wherever the kernel runs: ghost columns, string aggregates
+/// and non-i64 group keys fail the same way server- and client-side.
+pub fn run_pipeline(
+    batch: &Batch,
+    spec: &PipelineSpec,
+    engine: Option<&dyn ChunkCompute>,
+) -> Result<(ExecOut, KernelWork)> {
+    let mut work = KernelWork {
+        rows_scanned: batch.nrows() as u64,
+        ..Default::default()
+    };
+    let mut mask = Vec::new();
+    spec.predicate.eval_into(batch, &mut mask)?;
+
+    if !spec.aggs.is_empty() && spec.keys.is_empty() {
+        // Scalar multi-aggregate partials. Algebraic f32 aggregates take
+        // the compute-engine hot path when one is present (the paper's
+        // storage-side offload running the compiled kernel); everything
+        // else runs the native loop and is metered per value.
+        let mut states = Vec::with_capacity(spec.aggs.len());
+        for a in &spec.aggs {
+            let col = batch.col(&a.col)?;
+            let keep = !a.func.is_algebraic();
+            let mut st = AggState::new(keep);
+            match (col, engine, keep) {
+                (Column::F32(v), Some(engine), false) => {
+                    let m = engine.masked_moments(v, &mask)?;
+                    st.count = m[0] as u64;
+                    st.sum = m[1];
+                    st.sumsq = m[2];
+                    if st.count > 0 {
+                        st.min = m[3];
+                        st.max = m[4];
+                    }
+                }
+                _ => {
+                    work.agg_values += batch.nrows() as u64;
+                    st.update_column(col, &mask)?;
+                }
+            }
+            states.push(st);
+        }
+        return Ok((ExecOut::Aggs(states), work));
+    }
+    if !spec.aggs.is_empty() {
+        // Grouped partials over a multi-column i64 key.
+        work.agg_values += batch.nrows() as u64 * spec.aggs.len() as u64;
+        let groups = grouped_partials(batch, &mask, &spec.keys, &spec.aggs)?;
+        return Ok((ExecOut::Groups(groups), work));
+    }
+    // Row pipeline: filter → carry-project → per-object top-k/head.
+    let filtered = batch.filter(&mask)?;
+    let mut result = match &spec.projection {
+        Some(cols) => {
+            let refs: Vec<&str> = cols.iter().map(String::as_str).collect();
+            filtered.project(&refs)?
+        }
+        None => filtered,
+    };
+    if !spec.sort.is_empty() {
+        work.sort_rows += result.nrows() as u64 * spec.sort.len() as u64;
+    }
+    result = match spec.limit {
+        Some(n) => top_k_rows(&result, &spec.sort, n as usize)?,
+        None if !spec.sort.is_empty() => sort_rows(&result, &spec.sort)?,
+        None => result,
+    };
+    Ok((ExecOut::Rows(result), work))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::table::gen;
+    use crate::skyhook::query::{AggFunc, Aggregate, CmpOp, Predicate, SortKey};
+
+    fn spec() -> PipelineSpec {
+        PipelineSpec {
+            predicate: Predicate::True,
+            projection: None,
+            aggs: vec![],
+            keys: vec![],
+            sort: vec![],
+            limit: None,
+            zone_maps: true,
+        }
+    }
+
+    #[test]
+    fn needed_columns_cover_every_operator_input() {
+        let s = PipelineSpec {
+            predicate: Predicate::cmp("flag", CmpOp::Eq, 1.0),
+            projection: Some(vec!["ts".into(), "val".into()]),
+            ..spec()
+        };
+        assert_eq!(
+            needed_columns(&s),
+            Some(vec!["flag".to_string(), "ts".to_string(), "val".to_string()])
+        );
+        let s = PipelineSpec {
+            aggs: vec![Aggregate::new(AggFunc::Sum, "val")],
+            keys: vec!["sensor".into()],
+            ..spec()
+        };
+        assert_eq!(
+            needed_columns(&s),
+            Some(vec!["sensor".to_string(), "val".to_string()])
+        );
+        // Unprojected row pipeline: everything.
+        assert_eq!(needed_columns(&spec()), None);
+    }
+
+    #[test]
+    fn kernel_counts_the_work_it_does() {
+        let b = gen::sensor_table(300, 3);
+        // Row pipeline with sort+limit: rows scanned + sorted counted.
+        let s = PipelineSpec {
+            predicate: Predicate::cmp("val", CmpOp::Gt, 50.0),
+            projection: Some(vec!["ts".into()]),
+            sort: vec![SortKey::desc("val")],
+            limit: Some(5),
+            ..spec()
+        };
+        // The carry set must include the sort key for the kernel to sort.
+        let s = PipelineSpec {
+            projection: Some(vec!["ts".into(), "val".into()]),
+            ..s
+        };
+        let (out, work) = run_pipeline(&b, &s, None).unwrap();
+        let ExecOut::Rows(rows) = out else {
+            panic!("expected rows")
+        };
+        assert_eq!(rows.nrows(), 5);
+        assert_eq!(work.rows_scanned, 300);
+        assert_eq!(work.agg_values, 0);
+        let matched = Predicate::cmp("val", CmpOp::Gt, 50.0)
+            .eval(&b)
+            .unwrap()
+            .iter()
+            .filter(|&&m| m)
+            .count() as u64;
+        assert_eq!(work.sort_rows, matched);
+        // Scalar aggregates: per-value work, per aggregate.
+        let s = PipelineSpec {
+            aggs: vec![
+                Aggregate::new(AggFunc::Sum, "val"),
+                Aggregate::new(AggFunc::Count, "val"),
+            ],
+            ..spec()
+        };
+        let (_, work) = run_pipeline(&b, &s, None).unwrap();
+        assert_eq!(work.agg_values, 600);
+        // server_seconds prices exactly these counters.
+        let p = ExecProfile::default();
+        let want = 300.0 * p.row_pred_cost_s + 600.0 * p.val_agg_cost_s;
+        assert!((work.server_seconds(&p) - want).abs() < 1e-18);
+    }
+
+    #[test]
+    fn kernel_errors_match_everywhere() {
+        let b = gen::sensor_table(50, 1);
+        let ghost_agg = PipelineSpec {
+            aggs: vec![Aggregate::new(AggFunc::Sum, "nope")],
+            ..spec()
+        };
+        assert!(run_pipeline(&b, &ghost_agg, None).is_err());
+        let bad_key = PipelineSpec {
+            aggs: vec![Aggregate::new(AggFunc::Count, "val")],
+            keys: vec!["val".into()],
+            ..spec()
+        };
+        assert!(run_pipeline(&b, &bad_key, None).is_err());
+        let ghost_sort = PipelineSpec {
+            sort: vec![SortKey::asc("nope")],
+            limit: Some(3),
+            ..spec()
+        };
+        assert!(run_pipeline(&b, &ghost_sort, None).is_err());
+    }
+}

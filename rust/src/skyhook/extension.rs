@@ -7,8 +7,16 @@
 //! [`PipelineSpec`] (filter → carry-projection → multi-aggregate /
 //! multi-key grouped partials, or per-object top-k/head) and executes
 //! the whole operator chain in a single pass over the object — one call,
-//! one read set, one result. The single-operator handlers (`scan`,
-//! `agg`, `group_agg`) remain for compatibility and direct use.
+//! one read set, one result. The evaluation itself lives in the shared
+//! [`super::exec_kernel`]: the very same `run_pipeline` the client-side
+//! worker runs, so both sides of the storage boundary produce
+//! bit-identical partials by construction, and every CPU second charged
+//! here is priced by the cluster-owned [`ExecProfile`]
+//! (`ClsBackend::exec_profile`) rather than local constants. The
+//! single-operator handlers (`scan`, `agg`, `group_agg`) remain for
+//! compatibility and direct use.
+//!
+//! [`ExecProfile`]: crate::simnet::ExecProfile
 //!
 //! Every scan-shaped handler first consults the object's `skyhook.zonemap`
 //! xattr: if the stamped per-column min/max statistics prove the predicate
@@ -21,7 +29,8 @@
 //! `skyhook.agg` executes on it — the paper's storage-side compute
 //! offload running the very kernel the L1/L2 layers compiled.
 
-use super::logical::{grouped_partials, sort_rows, top_k_rows, PipelineSpec};
+use super::exec_kernel::{self, run_pipeline};
+use super::logical::PipelineSpec;
 use super::query::{AggState, Aggregate, Predicate};
 use crate::dataset::layout::{self, decode_batch, encode_batch, Layout, RangeSource};
 use crate::dataset::metadata::{ZoneMap, ZONE_MAP_XATTR};
@@ -32,26 +41,9 @@ use crate::store::objclass::{ClassRegistry, ClsBackend};
 use crate::util::bytes::{ByteReader, ByteWriter};
 use std::sync::Arc;
 
-/// Per-row CPU cost of predicate evaluation in the extension (seconds).
-const ROW_PRED_COST: f64 = 10e-9;
-/// Per-value CPU cost of aggregation in the extension (seconds).
-const VAL_AGG_COST: f64 = 4e-9;
-/// Per-row CPU cost of the per-object partial sort (seconds).
-const SORT_ROW_COST: f64 = 8e-9;
-/// Per-byte CPU cost of re-serializing a row-partial result (seconds) —
-/// the plain read path streams stored bytes and pays nothing here, which
-/// is exactly why the cost model can prefer client-side execution for
-/// unselective scans (`CostParams::cpu_byte_cost_s` mirrors this).
-const RESULT_ENC_COST: f64 = 1e-9;
-
-/// Storage-side compute engine for the masked filter+aggregate hot spot.
-/// Implemented by `runtime::PjrtEngine` (the AOT JAX/Pallas kernel); the
-/// extension falls back to the native Rust loop when absent.
-pub trait ChunkCompute: Send + Sync {
-    /// Masked moments of `values`: returns `[count, sum, sumsq, min, max]`
-    /// over elements where `mask` is true.
-    fn masked_moments(&self, values: &[f32], mask: &[bool]) -> Result<[f64; 5]>;
-}
+// The compute-engine trait and pipeline output now live in the shared
+// execution kernel; re-exported here so existing paths keep working.
+pub use super::exec_kernel::{ChunkCompute, ExecOut};
 
 /// Encode the input of `skyhook.scan`: predicate + projection +
 /// whether the handler may consult the object's zone map (`zone_maps =
@@ -167,18 +159,6 @@ pub fn decode_group_out(out: &[u8]) -> Result<Vec<(i64, AggState)>> {
     Ok(groups)
 }
 
-/// What one `skyhook.exec` invocation produced, after decoding.
-#[derive(Debug)]
-pub enum ExecOut {
-    /// Row partial (filtered, carry-projected, optionally per-object
-    /// sorted/truncated), as a Col batch.
-    Rows(Batch),
-    /// Scalar aggregate partials, one per requested aggregate.
-    Aggs(Vec<AggState>),
-    /// Grouped partials: multi-column i64 key → one state per aggregate.
-    Groups(Vec<(Vec<i64>, Vec<AggState>)>),
-}
-
 /// Decode a `skyhook.exec` result. `nkeys`/`naggs` come from the
 /// [`PipelineSpec`] the caller sent.
 pub fn decode_exec_out(out: &[u8], nkeys: usize, naggs: usize) -> Result<ExecOut> {
@@ -239,9 +219,10 @@ impl RangeSource for BackendRange<'_> {
 
 /// Read only the columns a handler needs (ranged device reads on Col
 /// objects; see [`layout::read_projected`]). `needed = None` reads
-/// everything.
+/// everything. The prefix size is the cluster's configured knob.
 fn read_needed(b: &mut dyn ClsBackend, needed: Option<&[String]>) -> Result<Batch> {
-    layout::read_projected(&mut BackendRange(b), needed)
+    let prefix = b.header_prefix();
+    layout::read_projected(&mut BackendRange(b), needed, prefix)
 }
 
 /// Union of column names used by a predicate and an extra set.
@@ -349,7 +330,8 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
             Some(cols) => read_needed(b, Some(&needed_union(&pred, cols)))?,
             None => read_needed(b, None)?,
         };
-        b.charge_cpu(batch.nrows() as f64 * ROW_PRED_COST);
+        let prof = b.exec_profile();
+        b.charge_cpu(batch.nrows() as f64 * prof.row_pred_cost_s);
         let mut mask = Vec::new();
         pred.eval_into(&batch, &mut mask)?;
         let filtered = batch.filter(&mask)?;
@@ -361,15 +343,17 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
             None => filtered,
         };
         let payload = encode_batch(&result, Layout::Col);
-        b.charge_cpu(payload.len() as f64 * RESULT_ENC_COST);
+        b.charge_cpu(payload.len() as f64 * prof.result_enc_cost_s);
         Ok(payload)
     });
 
     // skyhook.exec — the chained operator pipeline, one pass: decode a
     // PipelineSpec, consult the zone map, read the union of needed
-    // columns once, then filter → project → partial-aggregate (scalar or
-    // multi-key grouped) or per-object top-k/head. The offload boundary
-    // the planner chose per operator arrives as a single call.
+    // columns once, then hand the whole chain to the shared execution
+    // kernel (`exec_kernel::run_pipeline`) — the same evaluator the
+    // client-side worker runs, so pushdown and client partials are
+    // bit-identical by construction. The kernel counts its work; the
+    // handler prices it with the cluster's ExecProfile.
     let exec_engine = engine.clone();
     r.register("skyhook", "exec", move |b, input| {
         let spec = PipelineSpec::decode(input)?;
@@ -380,89 +364,43 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
         {
             return exec_empty_result(&schema, &spec);
         }
-        // One read covering every column the chain touches.
-        let needed: Option<Vec<String>> = if spec.aggs.is_empty() && spec.projection.is_none() {
-            None
-        } else {
-            let mut extra: Vec<String> = Vec::new();
-            if let Some(p) = &spec.projection {
-                extra.extend(p.iter().cloned());
-            }
-            extra.extend(spec.aggs.iter().map(|a| a.col.clone()));
-            extra.extend(spec.keys.iter().cloned());
-            Some(needed_union(&spec.predicate, &extra))
-        };
+        // One read covering every column the chain touches (the kernel's
+        // own definition of its read set).
+        let needed = exec_kernel::needed_columns(&spec);
         let batch = read_needed(b, needed.as_deref())?;
-        b.charge_cpu(batch.nrows() as f64 * ROW_PRED_COST);
-        let mut mask = Vec::new();
-        spec.predicate.eval_into(&batch, &mut mask)?;
+        let (out, work) = run_pipeline(&batch, &spec, exec_engine.as_deref())?;
+        let prof = b.exec_profile();
+        b.charge_cpu(work.server_seconds(&prof));
         let mut w = ByteWriter::new();
-
-        if !spec.aggs.is_empty() && spec.keys.is_empty() {
-            // Scalar multi-aggregate partials.
-            w.u8(1);
-            for a in &spec.aggs {
-                let col = batch.col(&a.col)?;
-                let keep = !a.func.is_algebraic();
-                let mut st = AggState::new(keep);
-                match (col, &exec_engine, keep) {
-                    (Column::F32(v), Some(engine), false) => {
-                        let m = engine.masked_moments(v, &mask)?;
-                        st.count = m[0] as u64;
-                        st.sum = m[1];
-                        st.sumsq = m[2];
-                        if st.count > 0 {
-                            st.min = m[3];
-                            st.max = m[4];
-                        }
-                    }
-                    _ => {
-                        b.charge_cpu(batch.nrows() as f64 * VAL_AGG_COST);
-                        st.update_column(col, &mask)?;
-                    }
-                }
-                st.encode_into(&mut w);
-            }
-            return Ok(w.finish());
-        }
-        if !spec.aggs.is_empty() {
-            // Grouped partials over a multi-column i64 key (shared with
-            // the client-side worker so both modes fold identically).
-            b.charge_cpu(batch.nrows() as f64 * VAL_AGG_COST * spec.aggs.len() as f64);
-            let groups = grouped_partials(&batch, &mask, &spec.keys, &spec.aggs)?;
-            w.u8(2);
-            w.u32(groups.len() as u32);
-            for (key, states) in groups {
-                for k in key {
-                    w.i64(k);
-                }
+        match out {
+            ExecOut::Aggs(states) => {
+                w.u8(1);
                 for st in states {
                     st.encode_into(&mut w);
                 }
             }
-            return Ok(w.finish());
-        }
-        // Row pipeline: filter → carry-project → per-object top-k/head.
-        let filtered = batch.filter(&mask)?;
-        let mut result = match &spec.projection {
-            Some(cols) => {
-                let refs: Vec<&str> = cols.iter().map(String::as_str).collect();
-                filtered.project(&refs)?
+            ExecOut::Groups(groups) => {
+                w.u8(2);
+                w.u32(groups.len() as u32);
+                for (key, states) in groups {
+                    for k in key {
+                        w.i64(k);
+                    }
+                    for st in states {
+                        st.encode_into(&mut w);
+                    }
+                }
             }
-            None => filtered,
-        };
-        if !spec.sort.is_empty() {
-            b.charge_cpu(result.nrows() as f64 * SORT_ROW_COST * spec.sort.len() as f64);
+            ExecOut::Rows(result) => {
+                // Re-serializing the row partial is server CPU the plain
+                // read path never pays — the cost asymmetry that lets
+                // the planner prefer client-side for unselective scans.
+                let payload = encode_batch(&result, Layout::Col);
+                b.charge_cpu(payload.len() as f64 * prof.result_enc_cost_s);
+                w.u8(0);
+                w.raw(&payload);
+            }
         }
-        result = match spec.limit {
-            Some(n) => top_k_rows(&result, &spec.sort, n as usize)?,
-            None if !spec.sort.is_empty() => sort_rows(&result, &spec.sort)?,
-            None => result,
-        };
-        let payload = encode_batch(&result, Layout::Col);
-        b.charge_cpu(payload.len() as f64 * RESULT_ENC_COST);
-        w.u8(0);
-        w.raw(&payload);
         Ok(w.finish())
     });
 
@@ -487,7 +425,8 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
             return Ok(w.finish());
         }
         let batch = read_needed(b, Some(&needed_union(&pred, &cols)))?;
-        b.charge_cpu(batch.nrows() as f64 * ROW_PRED_COST);
+        let prof = b.exec_profile();
+        b.charge_cpu(batch.nrows() as f64 * prof.row_pred_cost_s);
         let mut mask = Vec::new();
         pred.eval_into(&batch, &mut mask)?;
         let mut w = ByteWriter::new();
@@ -508,7 +447,7 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
                     }
                 }
                 _ => {
-                    b.charge_cpu(batch.nrows() as f64 * VAL_AGG_COST);
+                    b.charge_cpu(batch.nrows() as f64 * prof.val_agg_cost_s);
                     st.update_column(col, &mask)?;
                 }
             }
@@ -539,7 +478,8 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
             b,
             Some(&needed_union(&pred, &[group_col.clone(), agg_col.clone()])),
         )?;
-        b.charge_cpu(batch.nrows() as f64 * (ROW_PRED_COST + VAL_AGG_COST));
+        let prof = b.exec_profile();
+        b.charge_cpu(batch.nrows() as f64 * (prof.row_pred_cost_s + prof.val_agg_cost_s));
         let mut mask = Vec::new();
         pred.eval_into(&batch, &mut mask)?;
         let keys = match batch.col(&group_col)? {
@@ -631,7 +571,8 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
             return Ok(w.finish());
         }
         let batch = read_needed(b, Some(&needed_union(&pred, &[col_name.clone()])))?;
-        b.charge_cpu(batch.nrows() as f64 * (ROW_PRED_COST + VAL_AGG_COST));
+        let prof = b.exec_profile();
+        b.charge_cpu(batch.nrows() as f64 * (prof.row_pred_cost_s + prof.val_agg_cost_s));
         let mut mask = Vec::new();
         pred.eval_into(&batch, &mut mask)?;
         let col = batch.col(&col_name)?;
@@ -1153,6 +1094,43 @@ mod tests {
             ..exec_spec()
         };
         assert!(r.get("skyhook", "exec").unwrap()(&mut b, &unpruned.encode()).is_err());
+    }
+
+    #[test]
+    fn handler_charges_flow_from_the_backend_profile() {
+        use crate::simnet::ExecProfile;
+        use crate::skyhook::query::SortKey;
+        // The same call against a backend with doubled execution rates
+        // charges exactly twice the CPU — no local constants survive.
+        let r = registry();
+        let spec = PipelineSpec {
+            predicate: Predicate::cmp("val", CmpOp::Gt, 40.0),
+            projection: Some(vec!["ts".to_string(), "val".to_string()]),
+            sort: vec![SortKey::desc("val")],
+            limit: Some(5),
+            ..exec_spec()
+        };
+        let run = |exec: ExecProfile| {
+            let mut b = MemBackend::new(&table_object());
+            b.exec = exec;
+            r.get("skyhook", "exec").unwrap()(&mut b, &spec.encode()).unwrap();
+            b.cpu
+        };
+        let base = run(ExecProfile::default());
+        assert!(base > 0.0);
+        let d = ExecProfile::default();
+        let doubled = ExecProfile {
+            row_pred_cost_s: 2.0 * d.row_pred_cost_s,
+            val_agg_cost_s: 2.0 * d.val_agg_cost_s,
+            sort_row_cost_s: 2.0 * d.sort_row_cost_s,
+            result_enc_cost_s: 2.0 * d.result_enc_cost_s,
+            ..d
+        };
+        let twice = run(doubled);
+        assert!(
+            (twice - 2.0 * base).abs() < 1e-12 * (1.0 + base),
+            "doubled profile must double the charge: {base} vs {twice}"
+        );
     }
 
     #[test]

@@ -7,13 +7,18 @@
 //!   [`PipelineSpec`] wire form of the server-side stage block
 //! - [`plan`] — decomposability analysis and per-operator pushdown
 //!   planning into a staged [`QueryPlan`]
+//! - [`exec_kernel`] — the **unified execution kernel**: the one
+//!   pipeline evaluator both the server extension and the client worker
+//!   run, with its work counters priced by the cluster's single-sourced
+//!   `ExecProfile`
 //! - [`extension`] — the Skyhook-Extension object class (server-side),
 //!   including the single-pass `skyhook.exec` pipeline handler
 //! - [`worker`] — per-sub-query execution (pushdown or client-side)
 //! - [`driver`] — scheduling, partial merging, merge-side sort/limit,
-//!   write path, physical design transforms
+//!   write path, physical design transforms, selectivity calibration
 
 pub mod driver;
+pub mod exec_kernel;
 pub mod extension;
 pub mod logical;
 pub mod parse;
@@ -23,13 +28,15 @@ pub mod sketch;
 pub mod worker;
 
 pub use driver::{Driver, QueryResult, QueryStats, WriteReport};
-pub use extension::{register_skyhook_class, ChunkCompute};
+pub use exec_kernel::{run_pipeline, ChunkCompute, ExecOut, KernelWork};
+pub use extension::register_skyhook_class;
 pub use logical::{
     estimate_groups, estimate_selectivity, merge_sorted, sort_rows, top_k_rows, LogicalPlan,
     PipelineSpec,
 };
 pub use plan::{
-    plan, plan_costed, plan_logical, plan_opts, ExecMode, PlanStage, QueryPlan, SubQuery,
+    plan, plan_calibrated, plan_costed, plan_logical, plan_opts, CalibrationMap, ExecMode,
+    PlanStage, QueryPlan, SubQuery,
 };
 pub use query::{AggFunc, AggState, Aggregate, CmpOp, Predicate, Query, SortKey};
 pub use sketch::QuantileSketch;

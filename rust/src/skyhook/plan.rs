@@ -45,12 +45,81 @@
 
 use super::logical::{estimate_groups, estimate_selectivity, LogicalPlan, PipelineSpec};
 use super::query::{Predicate, Query};
-use crate::dataset::layout::HEADER_PREFIX;
 use crate::dataset::metadata::{DatasetMeta, RowGroupMeta, ValueRange};
 use crate::dataset::{DType, Layout, TableSchema};
 use crate::error::{Error, Result};
 use crate::simnet::{AccessProfile, CostParams, QueryCost};
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
+
+/// Per-column selectivity calibration learned from executed queries
+/// (ROADMAP planner follow-up c): the driver records each query's
+/// observed `bytes_moved / bytes_estimated` ratio against the predicate
+/// columns it filtered on, and the planner multiplies its zone-map
+/// selectivity estimate by the learned factor on subsequent plans. An
+/// EWMA per column keeps the map tiny and adaptive; factors are clamped
+/// so one pathological observation cannot capsize planning. Only byte
+/// *estimates* move — results never depend on calibration.
+#[derive(Clone, Debug, Default)]
+pub struct CalibrationMap {
+    factors: BTreeMap<String, f64>,
+}
+
+impl CalibrationMap {
+    /// EWMA weight of a new observation.
+    const ALPHA: f64 = 0.5;
+    /// Clamp for a single observed ratio and for the stored factor.
+    const CLAMP: (f64, f64) = (0.1, 10.0);
+
+    /// Fold one observed actual/estimated byte ratio into every column
+    /// the query's predicate touched.
+    ///
+    /// The ratio is measured against the *calibrated* estimate (the
+    /// plan already applied the current factor), so the update
+    /// compounds it onto the stored factor — `f ← f·((1−α) + α·r)` —
+    /// whose fixed point is `r = 1`, i.e. estimates matching reality.
+    /// (A plain EWMA toward `r` would stall at the square root of the
+    /// needed correction.)
+    pub fn observe(&mut self, columns: &[&str], ratio: f64) {
+        if !ratio.is_finite() || ratio <= 0.0 {
+            return;
+        }
+        let r = ratio.clamp(Self::CLAMP.0, Self::CLAMP.1);
+        for c in columns {
+            let f = self.factors.entry((*c).to_string()).or_insert(1.0);
+            *f = (*f * ((1.0 - Self::ALPHA) + Self::ALPHA * r))
+                .clamp(Self::CLAMP.0, Self::CLAMP.1);
+        }
+    }
+
+    /// Combined correction factor for a predicate over `columns`: the
+    /// geometric mean of the known per-column factors (`1.0` when none
+    /// have been observed yet).
+    pub fn factor(&self, columns: &[&str]) -> f64 {
+        let known: Vec<f64> = columns
+            .iter()
+            .filter_map(|c| self.factors.get(*c).copied())
+            .collect();
+        if known.is_empty() {
+            return 1.0;
+        }
+        let log_mean = known.iter().map(|f| f.ln()).sum::<f64>() / known.len() as f64;
+        log_mean.exp()
+    }
+
+    /// Learned factor for one column, if any query has observed it.
+    pub fn column_factor(&self, column: &str) -> Option<f64> {
+        self.factors.get(column).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.factors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.factors.is_empty()
+    }
+}
 
 /// Where a stage (or a whole sub-query) executes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -233,17 +302,31 @@ pub fn plan_opts(
     plan_costed(query, meta, force_mode, prune, &CostParams::default())
 }
 
-/// [`plan_opts`] against an explicit cost profile — the full planner
-/// entry point. For every surviving sub-query the estimator prices
-/// pushdown vs client-side execution ([`CostParams::estimate`]) and
-/// assigns the cheaper [`ExecMode`] per object, unless `force_mode`
-/// pins the assignment.
+/// [`plan_opts`] against an explicit cost profile. For every surviving
+/// sub-query the estimator prices pushdown vs client-side execution
+/// ([`CostParams::estimate`]) and assigns the cheaper [`ExecMode`] per
+/// object, unless `force_mode` pins the assignment.
 pub fn plan_costed(
     query: &Query,
     meta: &DatasetMeta,
     force_mode: Option<ExecMode>,
     prune: bool,
     cost: &CostParams,
+) -> Result<QueryPlan> {
+    plan_calibrated(query, meta, force_mode, prune, cost, &CalibrationMap::default())
+}
+
+/// [`plan_costed`] with a learned [`CalibrationMap`] — the full planner
+/// entry point. The driver plans through here with its accumulated
+/// per-column est-vs-actual corrections; one-shot callers pass an empty
+/// map via [`plan_costed`].
+pub fn plan_calibrated(
+    query: &Query,
+    meta: &DatasetMeta,
+    force_mode: Option<ExecMode>,
+    prune: bool,
+    cost: &CostParams,
+    calibration: &CalibrationMap,
 ) -> Result<QueryPlan> {
     let DatasetMeta::Table {
         schema,
@@ -316,21 +399,13 @@ pub fn plan_costed(
     let keep_values = query.is_aggregate() && !decomposable;
     let pipeline = server_pipeline(query, prune);
     let push_topk = pipeline.limit.is_some();
-    let shape = QueryShape::of(query, schema, &pipeline);
+    let shape = QueryShape::of(query, schema, &pipeline, cost.header_prefix, calibration);
 
-    // Cost-based offload choice, per object: estimate both sides of the
-    // boundary from the zone-map statistics and pick the cheaper one
-    // (force_mode pins every assignment instead).
-    let mut subqueries = Vec::with_capacity(names.len());
+    // Zone-map pruning pass first, so the contention model knows how
+    // many sub-queries actually fan onto each storage server.
+    let mut survivors: Vec<(String, usize)> = Vec::with_capacity(names.len());
     let mut objects_pruned = 0usize;
     let mut bytes_skipped = 0u64;
-    let mut totals = QueryCost::default();
-    let mut io_total = QueryCost::default();
-    let mut cpu_total = QueryCost::default();
-    let mut reduce_total = QueryCost::default();
-    let mut est_bytes = 0u64;
-    let mut n_push = 0usize;
-    let mut n_client = 0usize;
     for (i, object) in names.into_iter().enumerate() {
         let rg = &row_groups[i];
         if prune && group_prunes(&query.predicate, schema, rg) {
@@ -338,7 +413,31 @@ pub fn plan_costed(
             bytes_skipped += rg.bytes;
             continue;
         }
-        let profile = shape.profile(query, schema, *layout, rg);
+        survivors.push((object, i));
+    }
+    // ROADMAP planner follow-up (d): objects ≫ OSDs serializes the
+    // extension CPU per server, shifting the boundary client-ward.
+    let objects_per_osd = if cost.osds > 0 {
+        survivors.len() as f64 / cost.osds as f64
+    } else {
+        0.0
+    };
+
+    // Cost-based offload choice, per object: estimate both sides of the
+    // boundary from the zone-map statistics and pick the cheaper one
+    // (force_mode pins every assignment instead).
+    let mut subqueries = Vec::with_capacity(survivors.len());
+    let mut totals = QueryCost::default();
+    let mut io_total = QueryCost::default();
+    let mut cpu_total = QueryCost::default();
+    let mut reduce_total = QueryCost::default();
+    let mut est_bytes = 0u64;
+    let mut n_push = 0usize;
+    let mut n_client = 0usize;
+    for (object, i) in survivors {
+        let rg = &row_groups[i];
+        let mut profile = shape.profile(query, schema, *layout, rg);
+        profile.objects_per_osd = objects_per_osd;
         // Each component once; their sum is the sub-query estimate
         // (exactly what `CostParams::estimate` computes).
         let io = cost.io_cost(&profile);
@@ -414,10 +513,26 @@ struct QueryShape {
     request_bytes: u64,
     /// Per-object row cap of the pushed-down partial (top-k / head).
     partial_limit: Option<u64>,
+    /// Aggregate expressions the kernel updates per row (0 = row query).
+    naggs: u64,
+    /// Sort keys of the per-object partial sort (top-k pushdown only).
+    nsort: u64,
+    /// Header-prefix bytes of the projected-read path (the
+    /// `cluster.header_prefix` knob, via `CostParams`).
+    header_prefix: u64,
+    /// Learned per-column selectivity correction for this query's
+    /// predicate ([`CalibrationMap::factor`]); 1.0 = uncalibrated.
+    sel_factor: f64,
 }
 
 impl QueryShape {
-    fn of(query: &Query, schema: &TableSchema, pipeline: &PipelineSpec) -> QueryShape {
+    fn of(
+        query: &Query,
+        schema: &TableSchema,
+        pipeline: &PipelineSpec,
+        header_prefix: usize,
+        calibration: &CalibrationMap,
+    ) -> QueryShape {
         let width = |name: &str| -> f64 {
             schema
                 .col_index(name)
@@ -455,6 +570,10 @@ impl QueryShape {
             carry_frac,
             request_bytes: pipeline.encode().len() as u64,
             partial_limit: pipeline.limit,
+            naggs: pipeline.aggs.len() as u64,
+            nsort: pipeline.sort.len() as u64,
+            header_prefix: header_prefix as u64,
+            sel_factor: calibration.factor(&query.predicate.columns()),
         }
     }
 
@@ -474,13 +593,16 @@ impl QueryShape {
                 .and_then(|ci| rg.stats.get(ci))
                 .and_then(|s| s.value_range())
         };
-        let sel = estimate_selectivity(&query.predicate, rg.rows, &range);
+        // Zone-map selectivity, corrected by the calibration learned
+        // from previous queries' est-vs-actual byte ratios.
+        let sel = (estimate_selectivity(&query.predicate, rg.rows, &range) * self.sel_factor)
+            .clamp(0.0, 1.0);
         let est_out = sel * rg.rows as f64;
         let bytes = rg.bytes;
         // Server-side read set: the projected-read path fetches the
         // header prefix plus the needed-column extents beyond it. Row
         // objects decode whole on either side.
-        let covered = bytes.min(HEADER_PREFIX as u64);
+        let covered = bytes.min(self.header_prefix);
         let projected = covered + (self.needed_frac * (bytes - covered) as f64) as u64;
         let scan_bytes = if self.full_fetch || layout == Layout::Row {
             bytes
@@ -529,6 +651,15 @@ impl QueryShape {
             let stored_row = bytes as f64 / rg.rows.max(1) as f64;
             64.0 + out_rows * self.carry_frac * stored_row
         };
+        // Server-side kernel work beyond the predicate scan, priced by
+        // the same ExecProfile the handlers charge: aggregate updates
+        // per row, and the per-object partial sort over the carried
+        // (pre-truncation) row set.
+        let sort_rows = if self.nsort > 0 {
+            (est_out as u64).saturating_mul(self.nsort)
+        } else {
+            0
+        };
         AccessProfile {
             rows: rg.rows,
             scan_bytes,
@@ -536,6 +667,9 @@ impl QueryShape {
             fetch_round_trips,
             request_bytes: self.request_bytes,
             result_bytes: result_bytes as u64,
+            agg_values: rg.rows.saturating_mul(self.naggs),
+            sort_rows,
+            objects_per_osd: 0.0,
         }
     }
 }
@@ -864,6 +998,76 @@ mod tests {
         let e = p.explain();
         assert!(e.contains("est server"), "no cost annotation in {e}");
         assert!(e.contains("cost: "), "no cost headline in {e}");
+    }
+
+    #[test]
+    fn calibration_map_learns_and_corrects_estimates() {
+        let mut cal = CalibrationMap::default();
+        assert!(cal.is_empty());
+        assert_eq!(cal.factor(&["val"]), 1.0);
+        // Garbage observations are ignored; real ones clamp.
+        cal.observe(&["val"], f64::NAN);
+        cal.observe(&["val"], -3.0);
+        assert!(cal.is_empty());
+        cal.observe(&["val"], 0.2);
+        let f = cal.column_factor("val").unwrap();
+        assert!((0.1..1.0).contains(&f), "factor {f}");
+        assert_eq!(cal.len(), 1);
+        // A <1 factor (we over-estimated) shrinks subsequent byte
+        // estimates for predicates on that column — and only those.
+        let m = meta_sized(4, 40_000, 1 << 20);
+        let q = Query::scan("ds").filter(Predicate::cmp("val", CmpOp::Gt, 50.0));
+        let cost = CostParams::default();
+        let base = plan_costed(&q, &m, None, true, &cost).unwrap();
+        let cald = plan_calibrated(&q, &m, None, true, &cost, &cal).unwrap();
+        assert!(
+            cald.cost.pushdown_bytes < base.cost.pushdown_bytes,
+            "calibrated {} vs base {}",
+            cald.cost.pushdown_bytes,
+            base.cost.pushdown_bytes
+        );
+        let other = Query::scan("ds").filter(Predicate::cmp("ts", CmpOp::Gt, 10.0));
+        let b2 = plan_costed(&other, &m, None, true, &cost).unwrap();
+        let c2 = plan_calibrated(&other, &m, None, true, &cost, &cal).unwrap();
+        assert_eq!(b2.cost.pushdown_bytes, c2.cost.pushdown_bytes);
+        // Extreme ratios clamp instead of capsizing the planner.
+        cal.observe(&["val"], 1e9);
+        assert!(cal.column_factor("val").unwrap() <= 10.0);
+    }
+
+    #[test]
+    fn osd_contention_shifts_assignment_client_ward() {
+        // Selective scan over large objects: uncontended the tiny
+        // partial wins (pushdown); priced for a single saturated OSD,
+        // the serialized extension CPU makes the plain read path win.
+        // Only the pushdown side moves.
+        let m = meta_sized(12, 18_000, 512 * 1024);
+        let q = Query::scan("ds").filter(Predicate::cmp("val", CmpOp::Gt, 99.5));
+        let unsat = CostParams {
+            osds: 16,
+            ..CostParams::default()
+        };
+        let p = plan_costed(&q, &m, None, true, &unsat).unwrap();
+        assert!(
+            p.assignment.0 > p.assignment.1,
+            "uncontended should push down: {:?}",
+            p.assignment
+        );
+        let sat = CostParams {
+            osds: 1,
+            ..unsat.clone()
+        };
+        let ps = plan_costed(&q, &m, None, true, &sat).unwrap();
+        assert!(
+            ps.assignment.1 > ps.assignment.0,
+            "saturated should go client-side: {:?}",
+            ps.assignment
+        );
+        assert!(ps.cost.pushdown_s > p.cost.pushdown_s);
+        assert!((ps.cost.client_s - p.cost.client_s).abs() < 1e-12);
+        // osds = 0 (unknown) stays uncontended, like plan()'s default.
+        let p0 = plan_costed(&q, &m, None, true, &CostParams::default()).unwrap();
+        assert!(p0.assignment.0 > p0.assignment.1);
     }
 
     #[test]

@@ -10,27 +10,30 @@
 //! `skyhook.exec` call per object. Client-side execution fetches only
 //! the columns the query touches when the object is columnar (projected
 //! partial reads via [`layout::read_projected_stats`] over ranged,
-//! extent-coalescing cluster reads) and runs the same operator chain
-//! locally — the whole object crosses the network only for row-layout
-//! objects or full scans.
+//! extent-coalescing cluster reads) and then runs the *identical*
+//! pipeline through the shared [`super::exec_kernel`] — the same
+//! `run_pipeline` the storage-side extension executes, including the
+//! per-object sort/top-k stages of chained plans. There is no separate
+//! client evaluator to drift.
+//!
+//! All client-side CPU is priced by the cluster-owned
+//! [`crate::simnet::ExecProfile`] (decode bandwidth + per-row cost,
+//! plus the kernel's movable aggregation/sort work) — charged to the
+//! worker's timeline so client-side execution pays the CPU the paper
+//! wants to offload.
 
-use super::extension::{decode_exec_out, ExecOut};
-use super::logical::grouped_partials;
-use super::plan::{server_pipeline, ExecMode, SubQuery};
-use super::query::{AggState, Query};
-use crate::dataset::layout::{self, decode_batch, encode_batch, Layout};
+use super::exec_kernel::{run_pipeline, ExecOut};
+use super::extension::decode_exec_out;
+use super::logical::PipelineSpec;
+use super::plan::{ExecMode, SubQuery};
+use super::query::AggState;
+use crate::dataset::layout::{self, encode_batch, Layout};
 use crate::dataset::metadata::{ColumnStats, ZoneMap, ZONE_MAP_XATTR};
-use crate::dataset::table::{Batch, Column};
+use crate::dataset::table::Batch;
 use crate::error::Result;
 use crate::simnet::Timeline;
 use crate::store::Cluster;
 use std::sync::Arc;
-
-/// Client-side CPU rate for decoding + predicate evaluation (bytes/s and
-/// rows/s respectively) — charged to the worker's timeline so client-side
-/// execution pays the CPU the paper wants to offload.
-const CLIENT_DECODE_BW: f64 = 2.0e9;
-const CLIENT_ROW_COST: f64 = 12e-9;
 
 /// What one sub-query produced.
 #[derive(Debug)]
@@ -59,35 +62,40 @@ pub struct SubResult {
 }
 
 /// Execute one sub-query against the cluster, charging worker-side work
-/// to `worker_cpu`.
+/// to `worker_cpu`. `spec` is the plan's server-side stage block
+/// (`QueryPlan::pipeline` / `plan::server_pipeline`), built once per
+/// plan and shared across every sub-query — the same chain runs on
+/// whichever side `sub.mode` chose.
 pub fn execute_subquery(
     cluster: &Arc<Cluster>,
-    query: &Query,
+    spec: &PipelineSpec,
     sub: &SubQuery,
     at: f64,
     worker_cpu: &Timeline,
 ) -> Result<SubResult> {
     match sub.mode {
-        ExecMode::Pushdown => execute_pushdown(cluster, query, sub, at, worker_cpu),
-        ExecMode::ClientSide => execute_client_side(cluster, query, sub, at, worker_cpu),
+        ExecMode::Pushdown => execute_pushdown(cluster, spec, sub, at, worker_cpu),
+        ExecMode::ClientSide => execute_client_side(cluster, spec, sub, at, worker_cpu),
     }
 }
 
 fn execute_pushdown(
     cluster: &Arc<Cluster>,
-    query: &Query,
+    spec: &PipelineSpec,
     sub: &SubQuery,
     at: f64,
     worker_cpu: &Timeline,
 ) -> Result<SubResult> {
-    // The planner's server-side stage block, encoded once and executed
-    // in a single pass on the OSD.
-    let spec = server_pipeline(query, sub.zone_maps);
+    // The planner's server-side stage block, encoded and executed in a
+    // single pass on the OSD.
     let input = spec.encode();
     let t = cluster.call(at, &sub.object, "skyhook", "exec", &input)?;
     let bytes = (input.len() + t.value.len()) as u64;
     let out = decode_exec_out(&t.value, spec.keys.len(), spec.aggs.len())?;
-    let finish = worker_cpu.submit(t.finish, t.value.len() as f64 / CLIENT_DECODE_BW);
+    let finish = worker_cpu.submit(
+        t.finish,
+        cluster.cost().exec.decode_time(t.value.len() as u64),
+    );
     let output = match out {
         ExecOut::Rows(b) => SubOutput::Rows(b),
         ExecOut::Aggs(states) => SubOutput::Aggs(states),
@@ -135,30 +143,20 @@ impl layout::RangeSource for ClusterRange<'_> {
     }
 }
 
-/// Columns a client-side execution must fetch; `None` = all (a row query
-/// without projection needs every column, so one full read wins).
-fn client_needed_columns(query: &Query) -> Option<Vec<String>> {
-    if !query.is_aggregate() && query.projection.is_none() {
-        return None;
-    }
-    // Neither remaining shape expands to "all columns", so the full-list
-    // argument is never consulted.
-    Some(query.needed_columns(&[]))
-}
-
 fn execute_client_side(
     cluster: &Arc<Cluster>,
-    query: &Query,
+    spec: &PipelineSpec,
     sub: &SubQuery,
     at: f64,
     worker_cpu: &Timeline,
 ) -> Result<SubResult> {
-    // Fetch only the columns the query touches (coalesced ranged reads
-    // on Col objects) — the filter/aggregate CPU still runs on the
-    // client, which is what makes this the baseline. Row objects must be
-    // read whole anyway, so skip the stat/prefix probing and issue the
-    // one full read directly (the pre-zone-map cost profile).
-    let needed = client_needed_columns(query);
+    // The client runs the *same* server-side stage block, through the
+    // same kernel: encode nothing, but evaluate the identical
+    // PipelineSpec locally. Fetch only the columns that pipeline touches
+    // (coalesced ranged reads on Col objects); Row objects must be read
+    // whole anyway, so skip the stat/prefix probing and issue the one
+    // full read directly (the pre-zone-map cost profile).
+    let needed = super::exec_kernel::needed_columns(spec);
     let mut src = ClusterRange {
         cluster: cluster.as_ref(),
         object: &sub.object,
@@ -167,11 +165,16 @@ fn execute_client_side(
     };
     let mut coalesced = 0u64;
     let batch = if sub.layout == Layout::Col {
-        let (batch, rstats) = layout::read_projected_stats(&mut src, needed.as_deref())?;
+        let (batch, rstats) =
+            layout::read_projected_stats(&mut src, needed.as_deref(), cluster.header_prefix())?;
         coalesced = rstats.reads_coalesced as u64;
         batch
     } else {
-        let full = layout::read_projected(&mut src, None)?;
+        // Row objects decode whole; trim to the pipeline's column set
+        // up front so the kernel's filter doesn't copy unneeded columns
+        // per matching row (the same batch shape the server-side
+        // read_needed produces).
+        let full = layout::read_projected(&mut src, None, cluster.header_prefix())?;
         match &needed {
             Some(cols) => {
                 let refs: Vec<&str> = cols.iter().map(String::as_str).collect();
@@ -181,54 +184,30 @@ fn execute_client_side(
         }
     };
     let bytes = src.fetched;
-    // Client pays decode + scan CPU for what it fetched.
-    let cpu = bytes as f64 / CLIENT_DECODE_BW + batch.nrows() as f64 * CLIENT_ROW_COST;
+    // One shared evaluator for both sides of the boundary: chained
+    // plans (sort/limit/top-k, grouped multi-aggregates) execute here
+    // exactly as they do in the storage servers, so partials are
+    // bit-identical and — like pushdown — already sorted/truncated.
+    let (out, work) = run_pipeline(&batch, spec, None)?;
+    // Client pays decode + per-row scan CPU for what it fetched, plus
+    // the movable kernel work (aggregation, per-object sort) it just
+    // performed instead of the storage server — all priced by the
+    // cluster's single-sourced execution profile.
+    let prof = &cluster.cost().exec;
+    let cpu = prof.client_cpu(bytes, batch.nrows() as u64) + work.movable_seconds(prof);
     let finish = worker_cpu.submit(src.at, cpu);
-    let mut mask = Vec::new();
-    query.predicate.eval_into(&batch, &mut mask)?;
-
-    if !query.group_by.is_empty() {
-        // Same shared kernel the storage-side handler runs, so pushdown
-        // and client-side partials are bit-identical.
-        let groups = grouped_partials(&batch, &mask, &query.group_by, &query.aggregates)?;
-        return Ok(SubResult {
-            output: SubOutput::Groups(groups),
-            bytes_moved: bytes,
-            reads_coalesced: coalesced,
-            presorted: false,
-            finish,
-        });
-    }
-    if query.is_aggregate() {
-        let mut states = Vec::with_capacity(query.aggregates.len());
-        for agg in &query.aggregates {
-            let mut st = AggState::new(!agg.func.is_algebraic());
-            st.update_column(batch.col(&agg.col)?, &mask)?;
-            states.push(st);
-        }
-        return Ok(SubResult {
-            output: SubOutput::Aggs(states),
-            bytes_moved: bytes,
-            reads_coalesced: coalesced,
-            presorted: false,
-            finish,
-        });
-    }
-    // Row partial: filter + carry-projection; the merge-side sort/limit/
-    // final projection run once at the driver over the concatenation.
-    let filtered = batch.filter(&mask)?;
-    let rows = match query.carry_columns() {
-        Some(cols) => {
-            let refs: Vec<&str> = cols.iter().map(String::as_str).collect();
-            filtered.project(&refs)?
-        }
-        None => filtered,
+    let output = match out {
+        ExecOut::Rows(b) => SubOutput::Rows(b),
+        ExecOut::Aggs(states) => SubOutput::Aggs(states),
+        ExecOut::Groups(gs) => SubOutput::Groups(gs),
     };
     Ok(SubResult {
-        output: SubOutput::Rows(rows),
+        output,
         bytes_moved: bytes,
         reads_coalesced: coalesced,
-        presorted: false,
+        // The kernel pre-sorts the partial whenever the spec carries
+        // sort keys, on either side of the boundary.
+        presorted: !spec.sort.is_empty(),
         finish,
     })
 }
@@ -247,7 +226,7 @@ pub fn write_row_group(
     let bytes = encode_batch(group, layout);
     let zone = ZoneMap::from_batch(group);
     // Serialization + stats cost on the worker.
-    let depart = worker_cpu.submit(at, bytes.len() as f64 / CLIENT_DECODE_BW);
+    let depart = worker_cpu.submit(at, cluster.cost().exec.decode_time(bytes.len() as u64));
     let t = cluster.write_object(depart, object, &bytes)?;
     // Stamp the zone map so storage-side handlers can short-circuit
     // without reading object data.
@@ -259,10 +238,18 @@ pub fn write_row_group(
 mod tests {
     use super::*;
     use crate::config::ClusterConfig;
-    use crate::dataset::table::gen;
+    use crate::dataset::layout::decode_batch;
+    use crate::dataset::table::{gen, Column};
     use crate::skyhook::extension::register_skyhook_class;
-    use crate::skyhook::query::{AggFunc, CmpOp, Predicate};
+    use crate::skyhook::plan::server_pipeline;
+    use crate::skyhook::query::{AggFunc, CmpOp, Predicate, Query};
     use crate::store::ClassRegistry;
+
+    /// Build the plan's stage block for `q` and run one sub-query with
+    /// it — what `Driver::execute_plan` does once per plan.
+    fn exec(c: &Arc<Cluster>, q: &Query, sub: &SubQuery, cpu: &Timeline) -> Result<SubResult> {
+        execute_subquery(c, &server_pipeline(q, sub.zone_maps), sub, 0.0, cpu)
+    }
 
     fn cluster() -> Arc<Cluster> {
         let mut reg = ClassRegistry::with_builtins();
@@ -303,8 +290,8 @@ mod tests {
             mode: ExecMode::ClientSide,
             ..sub_p.clone()
         };
-        let rp = execute_subquery(&c, &q, &sub_p, 0.0, &cpu).unwrap();
-        let rc = execute_subquery(&c, &q, &sub_c, 0.0, &cpu).unwrap();
+        let rp = exec(&c, &q, &sub_p, &cpu).unwrap();
+        let rc = exec(&c, &q, &sub_c, &cpu).unwrap();
         let (SubOutput::Rows(bp), SubOutput::Rows(bc)) = (rp.output, rc.output) else {
             panic!("expected rows")
         };
@@ -337,8 +324,8 @@ mod tests {
             keep_values: false,
             zone_maps: true,
         };
-        let rp = execute_subquery(&c, &q, &mk(ExecMode::Pushdown), 0.0, &cpu).unwrap();
-        let rc = execute_subquery(&c, &q, &mk(ExecMode::ClientSide), 0.0, &cpu).unwrap();
+        let rp = exec(&c, &q, &mk(ExecMode::Pushdown), &cpu).unwrap();
+        let rc = exec(&c, &q, &mk(ExecMode::ClientSide), &cpu).unwrap();
         let (SubOutput::Aggs(sp), SubOutput::Aggs(sc)) = (rp.output, rc.output) else {
             panic!("expected aggs")
         };
@@ -368,8 +355,8 @@ mod tests {
             keep_values: false,
             zone_maps: true,
         };
-        let rp = execute_subquery(&c, &q, &mk(ExecMode::Pushdown), 0.0, &cpu).unwrap();
-        let rc = execute_subquery(&c, &q, &mk(ExecMode::ClientSide), 0.0, &cpu).unwrap();
+        let rp = exec(&c, &q, &mk(ExecMode::Pushdown), &cpu).unwrap();
+        let rc = exec(&c, &q, &mk(ExecMode::ClientSide), &cpu).unwrap();
         let (SubOutput::Groups(gp), SubOutput::Groups(gc)) = (rp.output, rc.output) else {
             panic!("expected groups")
         };
@@ -399,8 +386,8 @@ mod tests {
             keep_values: false,
             zone_maps: true,
         };
-        let rp = execute_subquery(&c, &q, &mk(ExecMode::Pushdown), 0.0, &cpu).unwrap();
-        let rc = execute_subquery(&c, &q, &mk(ExecMode::ClientSide), 0.0, &cpu).unwrap();
+        let rp = exec(&c, &q, &mk(ExecMode::Pushdown), &cpu).unwrap();
+        let rc = exec(&c, &q, &mk(ExecMode::ClientSide), &cpu).unwrap();
         let (SubOutput::Groups(gp), SubOutput::Groups(gc)) = (rp.output, rc.output) else {
             panic!("expected groups")
         };
@@ -428,7 +415,7 @@ mod tests {
             keep_values: false,
             zone_maps: true,
         };
-        let r = execute_subquery(&c, &q, &sub, 0.0, &cpu).unwrap();
+        let r = exec(&c, &q, &sub, &cpu).unwrap();
         let SubOutput::Rows(rows) = r.output else {
             panic!("expected rows");
         };
@@ -445,19 +432,20 @@ mod tests {
         let mut best: Vec<f32> = all.clone();
         best.sort_by(|a, b| b.partial_cmp(a).unwrap());
         assert_eq!(v[0], best[0]);
-        // Client-side returns every filtered row (merge-side truncate),
-        // but both modes carry identical columns.
+        // Client-side runs the identical pipeline through the shared
+        // kernel: same truncated, pre-sorted partial, bit for bit.
         let sub_c = SubQuery {
             mode: ExecMode::ClientSide,
             ..sub
         };
-        let rc = execute_subquery(&c, &q, &sub_c, 0.0, &cpu).unwrap();
+        let rc = exec(&c, &q, &sub_c, &cpu).unwrap();
+        assert!(r.presorted && rc.presorted);
         let SubOutput::Rows(rows_c) = rc.output else {
             panic!("expected rows");
         };
-        assert_eq!(rows_c.nrows(), 2000);
-        assert_eq!(rows_c.schema, rows.schema);
-        // Bytes asymmetry: the top-k partial is far smaller.
+        assert_eq!(rows_c, rows);
+        // Bytes asymmetry survives: the client still fetched the
+        // columns, only pushdown ships just the k-row partial.
         assert!(r.bytes_moved * 10 < rc.bytes_moved);
     }
 
@@ -474,7 +462,7 @@ mod tests {
             keep_values: true,
             zone_maps: true,
         };
-        let r = execute_subquery(&c, &q, &sub, 0.0, &cpu).unwrap();
+        let r = exec(&c, &q, &sub, &cpu).unwrap();
         let SubOutput::Aggs(states) = r.output else {
             panic!()
         };
@@ -523,7 +511,7 @@ mod tests {
                 keep_values: false,
                 zone_maps: true,
             };
-            execute_subquery(&c, &q, &sub, 0.0, &cpu).unwrap()
+            exec(&c, &q, &sub, &cpu).unwrap()
         };
         // Full scan moves the whole object.
         let full = mk(Query::scan("ds"));
@@ -568,6 +556,6 @@ mod tests {
             keep_values: false,
             zone_maps: true,
         };
-        assert!(execute_subquery(&c, &q, &sub, 0.0, &cpu).is_err());
+        assert!(exec(&c, &q, &sub, &cpu).is_err());
     }
 }

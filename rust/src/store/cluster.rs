@@ -47,9 +47,30 @@ pub struct Cluster {
 
 impl Cluster {
     /// Build a cluster from config with the given objclass registry.
+    /// The cost profile comes from `cfg.profile`; use
+    /// [`Cluster::with_cost`] to supply a custom one (e.g. a perturbed
+    /// [`crate::simnet::ExecProfile`]).
     pub fn new(cfg: &ClusterConfig, registry: ClassRegistry) -> Arc<Self> {
+        Self::with_cost(cfg, registry, cfg.profile.params())
+    }
+
+    /// Build a cluster around an explicit [`CostParams`]. The cluster
+    /// owns the params — including the execution-side [`ExecProfile`]
+    /// every OSD hands its objclass handlers and the driver's workers
+    /// read — so one profile moves the simulated charges *and* (via
+    /// `Driver` planning with [`Cluster::cost`]) the planner's
+    /// estimates. Cluster-shape fields (`osds`, `header_prefix`) are
+    /// stamped from `cfg` so the estimator prices the real fan-out.
+    ///
+    /// [`ExecProfile`]: crate::simnet::ExecProfile
+    pub fn with_cost(
+        cfg: &ClusterConfig,
+        registry: ClassRegistry,
+        mut cost: CostParams,
+    ) -> Arc<Self> {
         let registry = Arc::new(registry);
-        let cost = cfg.profile.params();
+        cost.osds = cfg.osds;
+        cost.header_prefix = cfg.header_prefix as usize;
         let osds = (0..cfg.osds)
             .map(|i| Arc::new(Osd::new(i as OsdId, cost.clone(), Arc::clone(&registry))))
             .collect();
@@ -74,6 +95,15 @@ impl Cluster {
 
     pub fn cost(&self) -> &CostParams {
         &self.cost
+    }
+    /// The execution-side CPU rates this cluster charges (and the
+    /// planner prices) — the single-sourced profile.
+    pub fn exec_profile(&self) -> &crate::simnet::ExecProfile {
+        &self.cost.exec
+    }
+    /// Header-prefix bytes projected partial reads fetch up front.
+    pub fn header_prefix(&self) -> usize {
+        self.cost.header_prefix
     }
     pub fn replicas(&self) -> usize {
         self.replicas

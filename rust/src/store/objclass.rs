@@ -14,6 +14,7 @@
 //! the higher layers that know the serialized layouts.
 
 use crate::error::{Error, Result};
+use crate::simnet::ExecProfile;
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -39,6 +40,18 @@ pub trait ClsBackend {
     /// Charge additional storage-side CPU seconds to this call (beyond
     /// the automatic per-byte device costs).
     fn charge_cpu(&mut self, seconds: f64);
+    /// The execution-side CPU rates this server charges — the OSD hands
+    /// handlers its cluster's single-sourced [`ExecProfile`], so every
+    /// `charge_cpu` amount flows from one profile (and moves with it).
+    fn exec_profile(&self) -> ExecProfile {
+        ExecProfile::default()
+    }
+    /// Header-prefix bytes the projected partial-read path fetches
+    /// before issuing per-column ranged reads (the `cluster.header_prefix`
+    /// config knob; see `dataset::layout`).
+    fn header_prefix(&self) -> usize {
+        crate::dataset::layout::HEADER_PREFIX
+    }
 }
 
 /// A `(class, method)` handler: gets the backend and the marshalled input,
@@ -171,6 +184,7 @@ pub struct MemBackend {
     pub xattrs: HashMap<String, Vec<u8>>,
     pub omap: std::collections::BTreeMap<Vec<u8>, Vec<u8>>,
     pub cpu: f64,
+    pub exec: ExecProfile,
 }
 
 #[cfg(test)]
@@ -181,6 +195,7 @@ impl MemBackend {
             xattrs: HashMap::new(),
             omap: Default::default(),
             cpu: 0.0,
+            exec: ExecProfile::default(),
         }
     }
 }
@@ -224,6 +239,9 @@ impl ClsBackend for MemBackend {
     }
     fn charge_cpu(&mut self, seconds: f64) {
         self.cpu += seconds;
+    }
+    fn exec_profile(&self) -> ExecProfile {
+        self.exec
     }
 }
 

@@ -288,6 +288,8 @@ impl Osd {
             bytes_read: 0,
             bytes_written: 0,
             cpu: 0.0,
+            exec: self.cost.exec,
+            header_prefix: self.cost.header_prefix,
         };
         let out = handler(&mut backend, input)?;
         let (br, bw, cpu) = (backend.bytes_read, backend.bytes_written, backend.cpu);
@@ -344,6 +346,10 @@ struct OsdBackend<'a> {
     bytes_read: u64,
     bytes_written: u64,
     cpu: f64,
+    /// The cluster's single-sourced execution profile, handed to
+    /// handlers so all their CPU charging flows from one place.
+    exec: crate::simnet::ExecProfile,
+    header_prefix: usize,
 }
 
 impl ClsBackend for OsdBackend<'_> {
@@ -429,6 +435,12 @@ impl ClsBackend for OsdBackend<'_> {
 
     fn charge_cpu(&mut self, seconds: f64) {
         self.cpu += seconds;
+    }
+    fn exec_profile(&self) -> crate::simnet::ExecProfile {
+        self.exec
+    }
+    fn header_prefix(&self) -> usize {
+        self.header_prefix
     }
 }
 

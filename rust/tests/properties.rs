@@ -742,6 +742,246 @@ fn logical_plan_modes_agree_end_to_end() {
 }
 
 #[test]
+fn exec_profile_perturbation_moves_sim_and_estimates_together() {
+    // Drift-proofing for the single-sourced ExecProfile: doubling any
+    // field moves the *simulated* latency and the *planner's* estimate
+    // in the same direction, because both read the same struct. Before
+    // the unified kernel, the simulation used hard-coded constants and
+    // only the estimates would have moved.
+    use skyhook_map::config::{ClusterConfig, DriverConfig};
+    use skyhook_map::dataset::metadata;
+    use skyhook_map::dataset::partition::PartitionSpec;
+    use skyhook_map::simnet::{CostParams, ExecProfile};
+    use skyhook_map::skyhook::{plan_costed, register_skyhook_class, Driver, ExecMode, Query};
+    use skyhook_map::store::{ClassRegistry, Cluster};
+
+    fn driver_with(exec: ExecProfile) -> Driver {
+        let mut reg = ClassRegistry::with_builtins();
+        register_skyhook_class(&mut reg, None);
+        let cfg = ClusterConfig {
+            osds: 3,
+            replicas: 1,
+            ..Default::default()
+        };
+        let cost = CostParams {
+            exec,
+            ..CostParams::paper_testbed()
+        };
+        let cluster = Cluster::with_cost(&cfg, reg, cost);
+        Driver::new(
+            cluster,
+            DriverConfig {
+                workers: 2,
+                ..Default::default()
+            },
+        )
+    }
+
+    /// (field name, mutator, query, forced side)
+    type Case = (
+        &'static str,
+        fn(&mut ExecProfile),
+        Query,
+        ExecMode,
+        /* doubling should increase cost? (false: bandwidth, decreases) */
+        bool,
+    );
+    let cases: Vec<Case> = vec![
+        (
+            "row_pred_cost_s",
+            |p| p.row_pred_cost_s *= 2.0,
+            Query::scan("p").filter(Predicate::cmp("val", CmpOp::Gt, 0.0)),
+            ExecMode::Pushdown,
+            true,
+        ),
+        (
+            "val_agg_cost_s",
+            |p| p.val_agg_cost_s *= 2.0,
+            Query::scan("p")
+                .filter(Predicate::cmp("val", CmpOp::Gt, 50.0))
+                .aggregate(AggFunc::Sum, "val"),
+            ExecMode::Pushdown,
+            true,
+        ),
+        (
+            "sort_row_cost_s",
+            |p| p.sort_row_cost_s *= 2.0,
+            Query::scan("p").select(&["ts"]).top_k("val", true, 5),
+            ExecMode::Pushdown,
+            true,
+        ),
+        (
+            "result_enc_cost_s",
+            |p| p.result_enc_cost_s *= 2.0,
+            Query::scan("p").filter(Predicate::cmp("val", CmpOp::Gt, -1e9)),
+            ExecMode::Pushdown,
+            true,
+        ),
+        (
+            "client_row_cost_s",
+            |p| p.client_row_cost_s *= 2.0,
+            Query::scan("p"),
+            ExecMode::ClientSide,
+            true,
+        ),
+        (
+            "client_decode_bw",
+            |p| p.client_decode_bw *= 2.0,
+            Query::scan("p"),
+            ExecMode::ClientSide,
+            false,
+        ),
+    ];
+
+    let batch = skyhook_map::dataset::table::gen::sensor_table(4000, 11);
+    for (field, mutate, q, mode, increases) in cases {
+        let mut measured = Vec::new();
+        for step in 0..2 {
+            let mut exec = ExecProfile::default();
+            if step == 1 {
+                mutate(&mut exec);
+            }
+            let d = driver_with(exec);
+            d.write_table(
+                "p",
+                &batch,
+                Layout::Col,
+                &PartitionSpec::with_target(16 * 1024),
+                None,
+            )
+            .unwrap();
+            d.reset_time();
+            let r = d.execute(&q, Some(mode)).unwrap();
+            let (meta, _) = metadata::load_meta(d.cluster(), 0.0, "p").unwrap();
+            let plan = plan_costed(&q, &meta, Some(mode), true, d.cluster().cost()).unwrap();
+            let est = match mode {
+                ExecMode::Pushdown => plan.cost.pushdown_s,
+                ExecMode::ClientSide => plan.cost.client_s,
+            };
+            measured.push((r.stats.sim_seconds, est));
+        }
+        let ((sim0, est0), (sim1, est1)) = (measured[0], measured[1]);
+        if increases {
+            assert!(
+                sim1 > sim0 && est1 > est0,
+                "{field}: doubling must raise sim ({sim0}→{sim1}) and estimate ({est0}→{est1})"
+            );
+        } else {
+            assert!(
+                sim1 < sim0 && est1 < est0,
+                "{field}: doubling bandwidth must lower sim ({sim0}→{sim1}) and estimate ({est0}→{est1})"
+            );
+        }
+    }
+}
+
+#[test]
+fn forced_client_chained_plans_equal_forced_server() {
+    // The satellite guarantee of the unified kernel: chained pipelines
+    // (per-object top-k, head, sort+limit, grouped HAVING) execute
+    // *identically* on the client as under pushdown, because both sides
+    // run skyhook::exec_kernel::run_pipeline — including NaN sort keys
+    // and multi-key ordering.
+    use skyhook_map::config::{ClusterConfig, DriverConfig};
+    use skyhook_map::dataset::partition::PartitionSpec;
+    use skyhook_map::skyhook::{register_skyhook_class, Driver, ExecMode, Query};
+    use skyhook_map::store::{ClassRegistry, Cluster};
+
+    forall_explain(
+        16,
+        10,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Xoshiro256::new(seed);
+            let mut reg = ClassRegistry::with_builtins();
+            register_skyhook_class(&mut reg, None);
+            let cluster = Cluster::new(
+                &ClusterConfig {
+                    osds: 3,
+                    replicas: 1,
+                    ..Default::default()
+                },
+                reg,
+            );
+            let driver = Driver::new(
+                cluster,
+                DriverConfig {
+                    workers: 2,
+                    ..Default::default()
+                },
+            );
+            let rows = rng.range(1, 500);
+            let batch = random_numeric_batch(&mut rng, rows, true);
+            let layout = if rng.chance(0.5) { Layout::Col } else { Layout::Row };
+            driver
+                .write_table("p", &batch, layout, &PartitionSpec::with_target(2048), None)
+                .map_err(|e| e.to_string())?;
+            let k = rng.range(0, 30);
+            let chained = vec![
+                // Fused top-k with a NaN-bearing primary key.
+                Query::scan("p")
+                    .filter(random_numeric_pred(&mut rng, 2))
+                    .select(&["ts"])
+                    .top_k("val", true, k),
+                // Multi-key sort + limit, key outside the projection.
+                Query::scan("p")
+                    .filter(random_numeric_pred(&mut rng, 2))
+                    .select(&["ts", "sensor"])
+                    .sort_desc("val")
+                    .sort("ts")
+                    .limit(k),
+                // Bare head(n): first-n semantics in object order.
+                Query::scan("p").limit(k),
+                // Grouped aggregate with HAVING + limit.
+                Query::scan("p")
+                    .filter(random_numeric_pred(&mut rng, 2))
+                    .group("sensor")
+                    .aggregate(AggFunc::Count, "val")
+                    .aggregate(AggFunc::Sum, "val")
+                    .having(Predicate::cmp("count(val)", CmpOp::Gt, 3.0))
+                    .limit(4),
+            ];
+            for q in chained {
+                let s = driver
+                    .execute(&q, Some(ExecMode::Pushdown))
+                    .map_err(|e| e.to_string())?;
+                let c = driver
+                    .execute(&q, Some(ExecMode::ClientSide))
+                    .map_err(|e| e.to_string())?;
+                match (&s.rows, &c.rows) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        if !batches_bit_equal(a, b) {
+                            return Err(format!("rows diverge across the kernel for {q:?}"));
+                        }
+                    }
+                    _ => return Err(format!("row presence diverges for {q:?}")),
+                }
+                // Group values can legitimately be NaN (NaN inputs), so
+                // compare keys exactly and values NaN-aware.
+                let feq = |a: f64, b: f64| a == b || (a.is_nan() && b.is_nan());
+                match (&s.groups, &c.groups) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        if a.len() != b.len()
+                            || !a.iter().zip(b).all(|(x, y)| {
+                                x.0 == y.0
+                                    && x.1.len() == y.1.len()
+                                    && x.1.iter().zip(&y.1).all(|(p, q)| feq(*p, *q))
+                            })
+                        {
+                            return Err(format!("groups diverge across the kernel for {q:?}"));
+                        }
+                    }
+                    _ => return Err(format!("group presence diverges for {q:?}")),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn vol_forwarding_matches_reference_buffer() {
     // Model-based test: the forwarding VOL backend must behave exactly
     // like a flat in-memory array under random writes and reads.
