@@ -13,8 +13,9 @@ use skyhook_map::dataset::partition::PartitionSpec;
 use skyhook_map::dataset::table::gen;
 use skyhook_map::dataset::Layout;
 use skyhook_map::launch::Stack;
-use skyhook_map::skyhook::{AggFunc, Query};
+use skyhook_map::skyhook::{AggFunc, CmpOp, ExecMode, Predicate, Query};
 use skyhook_map::util::bench::{black_box, report, table, Bench};
+use skyhook_map::util::bytes::fmt_size;
 
 fn main() {
     let rows = 150_000;
@@ -88,6 +89,105 @@ fn main() {
          break-even after {:.1} queries",
         tcost / (before - after).max(1e-9)
     );
+
+    // ---- E4e: sort-aware clustered ingest sweep -------------------------
+    // The same table written unclustered vs clustered by `val`, measured
+    // on the two workloads write-time clustering targets: ascending
+    // top-k over the clustered column (bounded prefix reads) and a range
+    // filter over it (sharpened zone maps + filter early-stop). The
+    // assertions pin the physical-design claim: clustering must
+    // *strictly* reduce bytes moved and per-object sort/scan work.
+    struct ClusterCell {
+        client_bytes: u64,
+        push_sim: f64,
+        prefix_reads: u64,
+        pruned: usize,
+        short_circuited: u64,
+        explain: String,
+    }
+    let cbatch = gen::sensor_table(120_000, 33);
+    let mut cells = Vec::new();
+    let mut crows = Vec::new();
+    for clustered in [false, true] {
+        let cfg = Config::from_text("[cluster]\nosds = 4\nreplicas = 1\n").unwrap();
+        let stack = Stack::build(&cfg).unwrap();
+        let mut spec = PartitionSpec::with_target(256 * 1024);
+        if clustered {
+            spec = spec.cluster_by("val");
+        }
+        stack
+            .driver
+            .write_table("cb", &cbatch, Layout::Col, &spec, None)
+            .unwrap();
+        let topk = Query::scan("cb").select(&["ts"]).sort("val").limit(32);
+        stack.driver.reset_time();
+        let cli = stack
+            .driver
+            .execute(&topk, Some(ExecMode::ClientSide))
+            .unwrap();
+        stack.driver.reset_time();
+        let push = stack.driver.execute(&topk, Some(ExecMode::Pushdown)).unwrap();
+        let range = Query::scan("cb")
+            .filter(Predicate::cmp("val", CmpOp::Lt, 35.0))
+            .aggregate(AggFunc::Count, "val");
+        stack.driver.reset_time();
+        let pr = stack.driver.execute(&range, None).unwrap();
+        let cell = ClusterCell {
+            client_bytes: cli.stats.bytes_moved,
+            push_sim: push.stats.sim_seconds,
+            prefix_reads: push.stats.prefix_reads,
+            pruned: pr.stats.objects_pruned,
+            short_circuited: pr.stats.rows_short_circuited,
+            explain: stack.driver.explain(&topk, None).unwrap(),
+        };
+        crows.push(vec![
+            if clustered { "cluster_by=val" } else { "unclustered" }.to_string(),
+            fmt_size(cell.client_bytes),
+            format!("{:.4}", cell.push_sim),
+            cell.prefix_reads.to_string(),
+            format!("{}/{}", cell.pruned, pr.stats.objects + pr.stats.objects_pruned),
+            cell.short_circuited.to_string(),
+        ]);
+        cells.push(cell);
+    }
+    table(
+        "E4e: clustered vs unclustered ingest — top-32 by val + range filter",
+        &[
+            "layout",
+            "top-k client bytes",
+            "top-k push sim",
+            "prefix reads",
+            "range pruned",
+            "rows short-circ",
+        ],
+        &crows,
+    );
+    let (un, cl) = (&cells[0], &cells[1]);
+    assert!(
+        cl.client_bytes < un.client_bytes,
+        "clustered top-k must strictly reduce bytes moved: {} vs {}",
+        cl.client_bytes,
+        un.client_bytes
+    );
+    assert!(
+        cl.push_sim < un.push_sim,
+        "clustered top-k must strictly reduce per-object sort/scan work: {} vs {}",
+        cl.push_sim,
+        un.push_sim
+    );
+    assert!(cl.prefix_reads > 0 && un.prefix_reads == 0);
+    assert!(
+        cl.explain.contains("(prefix read)") && cl.explain.contains("clustered by \"val\""),
+        "explain must show the prefix-read stage:\n{}",
+        cl.explain
+    );
+    assert!(
+        cl.pruned > un.pruned,
+        "clustered range filter must prune more: {} vs {}",
+        cl.pruned,
+        un.pruned
+    );
+    assert!(cl.short_circuited > 0);
 
     // ---- codec microbenches (wall clock) --------------------------------
     let small = gen::wide_table(20_000, ncols, 2);

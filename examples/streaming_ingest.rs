@@ -39,6 +39,7 @@ fn main() -> skyhook_map::Result<()> {
             layout: Layout::Col,
             max_inflight: 4,
             locality: Some("siteA".into()),
+            cluster_by: None,
         },
     )?;
     let mut ing_b = Ingestor::open(
@@ -51,6 +52,7 @@ fn main() -> skyhook_map::Result<()> {
             layout: Layout::Col,
             max_inflight: 4,
             locality: Some("siteB".into()),
+            cluster_by: None,
         },
     )?;
 

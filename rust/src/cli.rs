@@ -1,0 +1,595 @@
+//! `skyhook-map` CLI implementation, as a library: the binary
+//! (`main.rs`) is a thin wrapper around [`run`], so integration tests
+//! can drive the exact command-line surface — flag parsing, hydration,
+//! EXPLAIN rendering, the stats footer — and assert on its output.
+//!
+//! Subcommands (hand-rolled arg parsing; clap is unavailable offline):
+//!
+//! ```text
+//! skyhook-map demo                          # quick end-to-end tour
+//! skyhook-map put    --dataset D --rows N [--layout row|col] [--object-size 4MiB]
+//!                    [--cluster-by COL]
+//! skyhook-map query  --dataset D [--filter EXPR] [--agg F:COL]... [--group C1,C2]
+//!                    [--select C1,C2] [--sort SPEC] [--limit N]
+//!                    [--pipe PIPELINE] [--explain] [--force-mode push|client]
+//!                    [--cluster-by COL]
+//! skyhook-map index  --dataset D --column C
+//! skyhook-map transform --dataset D --layout row|col
+//! skyhook-map inspect                        # datasets + distribution
+//! skyhook-map serve  --requests N            # synthetic load + metrics
+//! ```
+//!
+//! Global flags: `--config FILE`, `--osds N`, `--use-pjrt`.
+
+use crate::config::Config;
+use crate::coordinator::{Request, Response};
+use crate::dataset::metadata;
+use crate::dataset::partition::PartitionSpec;
+use crate::dataset::table::gen;
+use crate::dataset::Layout;
+use crate::launch::Stack;
+use crate::skyhook::parse::{parse_aggregate, parse_pipeline, parse_predicate, parse_sort};
+use crate::skyhook::{ExecMode, Query};
+use crate::util::bytes::{fmt_size, parse_size};
+use crate::{Error, Result};
+use std::fmt::Write as _;
+
+/// Tiny flag parser: `--key value` and bare `--switch`.
+struct Flags {
+    positional: Vec<String>,
+    pairs: Vec<(String, Option<String>)>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Flags {
+        let mut positional = Vec::new();
+        let mut pairs = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                let value = args.get(i + 1).filter(|v| !v.starts_with("--")).cloned();
+                if value.is_some() {
+                    i += 1;
+                }
+                pairs.push((key.to_string(), value));
+            } else {
+                positional.push(args[i].clone());
+            }
+            i += 1;
+        }
+        Flags { positional, pairs }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.pairs
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn get_all(&self, key: &str) -> Vec<&str> {
+        self.pairs
+            .iter()
+            .filter(|(k, _)| k == key)
+            .filter_map(|(_, v)| v.as_deref())
+            .collect()
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.pairs.iter().any(|(k, _)| k == key)
+    }
+}
+
+fn build_config(f: &Flags) -> Result<Config> {
+    let mut cfg = match f.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config {
+            artifacts_dir: "artifacts".into(),
+            ..Default::default()
+        },
+    };
+    if let Some(n) = f.get("osds") {
+        cfg.cluster.osds = n
+            .parse()
+            .map_err(|_| Error::Config(format!("bad --osds {n}")))?;
+        cfg.cluster.replicas = cfg.cluster.replicas.min(cfg.cluster.osds);
+    }
+    if f.has("use-pjrt") {
+        cfg.driver.use_pjrt = true;
+    }
+    // --cluster-by overrides the config file's [dataset] cluster_by.
+    if let Some(col) = f.get("cluster-by") {
+        cfg.dataset.cluster_by = Some(col.to_string());
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Run one CLI invocation, returning the text a terminal would show.
+pub fn run(args: &[String]) -> Result<String> {
+    let flags = Flags::parse(args);
+    let cmd = flags.positional.first().map(String::as_str).unwrap_or("help");
+    let mut out = String::new();
+    match cmd {
+        "demo" => cmd_demo(&flags, &mut out)?,
+        "put" => cmd_put(&flags, &mut out)?,
+        "query" => cmd_query(&flags, &mut out)?,
+        "index" => cmd_index(&flags, &mut out)?,
+        "transform" => cmd_transform(&flags, &mut out)?,
+        "inspect" => cmd_inspect(&flags, &mut out)?,
+        "serve" => cmd_serve(&flags, &mut out)?,
+        "help" | "--help" | "-h" => out.push_str(HELP),
+        other => {
+            return Err(Error::Invalid(format!("unknown command {other:?}")));
+        }
+    }
+    Ok(out)
+}
+
+/// Binary entry point: prints the output (or the error) exactly like
+/// the pre-library CLI did and returns the process exit code — usage
+/// errors (unknown subcommand) print the help to stderr and exit 2,
+/// runtime failures exit 1.
+pub fn main_entry(args: &[String]) -> i32 {
+    match run(args) {
+        Ok(out) => {
+            print!("{out}");
+            0
+        }
+        Err(Error::Invalid(msg)) if msg.starts_with("unknown command") => {
+            eprintln!("{msg}\n{HELP}");
+            2
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+pub const HELP: &str = "\
+skyhook-map — mapping datasets to object storage (paper reproduction)
+
+USAGE:
+  skyhook-map <demo|put|query|index|transform|inspect|serve> [flags]
+
+FLAGS:
+  --config FILE     TOML config (see examples in README)
+  --osds N          override cluster size
+  --use-pjrt        run pushdown aggregation on the AOT JAX/Pallas kernels
+  --dataset D       dataset name
+  --rows N          synthetic rows for `put`
+  --layout row|col  object layout
+  --object-size SZ  partition target (e.g. 4MiB)
+  --cluster-by COL  sort-aware clustered ingest: sort rows by COL at write
+                    time (disjoint zone maps on COL; per-object top-k over
+                    it becomes a bounded prefix read)
+  --filter EXPR     predicate, e.g. 'val > 50 && flag == 1'
+  --agg F:COL       aggregate (repeatable): count/sum/min/max/mean/var/median
+  --group C1,C2     group-by key columns (with one or more --agg)
+  --select C1,C2    projection for row queries
+  --sort SPEC       order-by, e.g. 'val desc, ts' (row queries)
+  --limit N         keep the first N rows (after sort; pushes down as
+                    per-object top-k / head)
+  --pipe PIPELINE   chained-pipeline syntax, replaces the flags above:
+                    'filter val > 50 | select ts,val | sort val desc | limit 10'
+                    'filter flag == 0 | agg sum:val,count:val | by sensor,flag'
+                    'agg count:val | by sensor | having count(val) > 100'
+  --explain         print the staged plan first: per-operator offload side,
+                    the cost model's per-stage estimates, and — on clustered
+                    datasets — which stages exploit the sorted layout
+  --force-mode M    pin every sub-query to one side: push|client
+                    (default: the planner picks the cheaper side per object)
+  --client-side     shorthand for --force-mode client
+  --requests N      synthetic requests for `serve`
+";
+
+fn require_dataset(f: &Flags) -> Result<String> {
+    f.get("dataset")
+        .map(str::to_string)
+        .ok_or_else(|| Error::Invalid("--dataset required".into()))
+}
+
+fn parse_layout(s: &str) -> Result<Layout> {
+    match s {
+        "row" => Ok(Layout::Row),
+        "col" => Ok(Layout::Col),
+        other => Err(Error::Invalid(format!("layout must be row|col, got {other}"))),
+    }
+}
+
+/// The partition spec a command's flags/config describe.
+fn partition_spec(cfg: &Config, target: u64) -> PartitionSpec {
+    PartitionSpec {
+        target_bytes: target,
+        cluster_by: cfg.dataset.cluster_by.clone(),
+        ..Default::default()
+    }
+}
+
+/// Create a synthetic dataset if it doesn't exist (the store is
+/// in-memory, so each CLI invocation starts empty). Honors the
+/// `--cluster-by` / `[dataset] cluster_by` knob, so a single `query`
+/// invocation exercises the full clustered path: ingest → plan → read.
+fn hydrate(stack: &Stack, cfg: &Config, dataset: &str, layout: Layout, out: &mut String) -> Result<()> {
+    if metadata::load_meta(&stack.cluster, 0.0, dataset).is_err() {
+        let batch = gen::sensor_table(20_000, cfg.cluster.seed);
+        stack
+            .driver
+            .write_table(dataset, &batch, layout, &partition_spec(cfg, 64 * 1024), None)?;
+        let how = match &cfg.dataset.cluster_by {
+            Some(col) => format!(", clustered by {col:?}"),
+            None => String::new(),
+        };
+        let _ = writeln!(out, "(hydrated synthetic dataset {dataset:?}: 20000 rows{how})");
+    }
+    Ok(())
+}
+
+fn cmd_demo(f: &Flags, out: &mut String) -> Result<()> {
+    let cfg = build_config(f)?;
+    let stack = Stack::build(&cfg)?;
+    let _ = writeln!(
+        out,
+        "cluster: {} OSDs, {} replicas, pjrt={}",
+        cfg.cluster.osds,
+        cfg.cluster.replicas,
+        stack.engine.is_some()
+    );
+    let batch = gen::sensor_table(20_000, cfg.cluster.seed);
+    let rep = stack.driver.write_table(
+        "demo",
+        &batch,
+        Layout::Col,
+        &partition_spec(&cfg, 64 * 1024),
+        None,
+    )?;
+    let _ = writeln!(
+        out,
+        "put: {} rows -> {} objects ({}), sim {:.3}s",
+        batch.nrows(),
+        rep.objects,
+        fmt_size(rep.bytes_written),
+        rep.sim_seconds
+    );
+    let q = Query::scan("demo")
+        .filter(parse_predicate("val > 60")?)
+        .aggregate(crate::skyhook::AggFunc::Count, "val")
+        .aggregate(crate::skyhook::AggFunc::Mean, "val");
+    for (mode, label) in [
+        (Some(ExecMode::Pushdown), "pushdown"),
+        (Some(ExecMode::ClientSide), "client-side"),
+    ] {
+        let r = stack.driver.execute(&q, mode)?;
+        let _ = writeln!(
+            out,
+            "{label:>12}: count={} mean={:.3} bytes_moved={} sim={:.4}s",
+            r.aggregates[0],
+            r.aggregates[1],
+            fmt_size(r.stats.bytes_moved),
+            r.stats.sim_seconds
+        );
+    }
+    // A chained pipeline with per-operator offload: the filter and the
+    // per-object top-k partial run server-side, merge+sort+truncate at
+    // the driver.
+    let tq = Query::scan("demo")
+        .filter(parse_predicate("val > 60")?)
+        .select(&["ts"])
+        .top_k("val", true, 10);
+    out.push_str(&stack.driver.explain(&tq, None)?);
+    let r = stack.driver.execute(&tq, None)?;
+    let _ = writeln!(
+        out,
+        "top-10 by val: {} rows returned, {} moved",
+        r.rows.as_ref().map(|b| b.nrows()).unwrap_or(0),
+        fmt_size(r.stats.bytes_moved)
+    );
+    let _ = writeln!(out, "demo OK");
+    Ok(())
+}
+
+fn cmd_put(f: &Flags, out: &mut String) -> Result<()> {
+    let cfg = build_config(f)?;
+    let stack = Stack::build(&cfg)?;
+    let dataset = require_dataset(f)?;
+    let rows: usize = f
+        .get("rows")
+        .unwrap_or("10000")
+        .parse()
+        .map_err(|_| Error::Invalid("bad --rows".into()))?;
+    let layout = parse_layout(f.get("layout").unwrap_or("col"))?;
+    let target = parse_size(f.get("object-size").unwrap_or("256KiB"))?;
+    let batch = gen::sensor_table(rows, cfg.cluster.seed);
+    let rep = stack
+        .driver
+        .write_table(&dataset, &batch, layout, &partition_spec(&cfg, target), None)?;
+    let how = match &cfg.dataset.cluster_by {
+        Some(col) => format!(" clustered by {col:?},"),
+        None => String::new(),
+    };
+    let _ = writeln!(
+        out,
+        "wrote {} rows to {:?}:{} {} objects, {} total, sim {:.3}s wall {:.3}s",
+        rows,
+        dataset,
+        how,
+        rep.objects,
+        fmt_size(rep.bytes_written),
+        rep.sim_seconds,
+        rep.wall_seconds
+    );
+    Ok(())
+}
+
+fn cmd_query(f: &Flags, out: &mut String) -> Result<()> {
+    let cfg = build_config(f)?;
+    let stack = Stack::build(&cfg)?;
+    let dataset = require_dataset(f)?;
+    hydrate(&stack, &cfg, &dataset, Layout::Col, out)?;
+    let q = if let Some(pipe) = f.get("pipe") {
+        parse_pipeline(&dataset, pipe)?
+    } else {
+        let mut q = Query::scan(&dataset);
+        if let Some(expr) = f.get("filter") {
+            q = q.filter(parse_predicate(expr)?);
+        }
+        for spec in f.get_all("agg") {
+            let a = parse_aggregate(spec)?;
+            q = q.aggregate(a.func, &a.col);
+        }
+        if let Some(g) = f.get("group") {
+            for col in g.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+                q = q.group(col);
+            }
+        }
+        if let Some(sel) = f.get("select") {
+            let cols: Vec<&str> = sel.split(',').map(str::trim).collect();
+            q = q.select(&cols);
+        }
+        if let Some(spec) = f.get("sort") {
+            q = q.sort_by(&parse_sort(spec)?);
+        }
+        if let Some(n) = f.get("limit") {
+            q = q.limit(n.parse().map_err(|_| Error::Invalid("bad --limit".into()))?);
+        }
+        q
+    };
+    let mode = match f.get("force-mode") {
+        Some("push") | Some("pushdown") | Some("server") => Some(ExecMode::Pushdown),
+        Some("client") | Some("client-side") => Some(ExecMode::ClientSide),
+        Some(other) => {
+            return Err(Error::Invalid(format!(
+                "--force-mode must be push|client, got {other:?}"
+            )))
+        }
+        None => f.has("client-side").then_some(ExecMode::ClientSide),
+    };
+    if f.has("explain") {
+        out.push_str(&stack.driver.explain(&q, mode)?);
+    }
+    let r = stack.driver.execute(&q, mode)?;
+    if let Some(groups) = &r.groups {
+        let keys = q.group_by.join(",");
+        let aggs: Vec<String> = q.aggregates.iter().map(|a| a.to_string()).collect();
+        let _ = writeln!(out, "{keys:<20} {}", aggs.join("  "));
+        for (k, vals) in groups.iter().take(20) {
+            let key: Vec<String> = k.iter().map(|x| x.to_string()).collect();
+            let v: Vec<String> = vals.iter().map(|x| format!("{x:.4}")).collect();
+            let _ = writeln!(out, "{:<20} {}", key.join(","), v.join("  "));
+        }
+        if groups.len() > 20 {
+            let _ = writeln!(out, "... ({} groups)", groups.len());
+        }
+    } else if !r.aggregates.is_empty() {
+        for (a, v) in q.aggregates.iter().zip(&r.aggregates) {
+            let _ = writeln!(out, "{}({}) = {v:.6}", a.func.name(), a.col);
+        }
+    } else if let Some(rows) = &r.rows {
+        let _ = writeln!(out, "{} rows, {} cols", rows.nrows(), rows.ncols());
+        let show = rows.nrows().min(10);
+        let names: Vec<&str> = rows.schema.columns.iter().map(|c| c.name.as_str()).collect();
+        let _ = writeln!(out, "{}", names.join("\t"));
+        for i in 0..show {
+            let vals: Vec<String> = rows.columns.iter().map(|c| c.get_display(i)).collect();
+            let _ = writeln!(out, "{}", vals.join("\t"));
+        }
+        if rows.nrows() > show {
+            let _ = writeln!(out, "... ({} rows)", rows.nrows());
+        }
+    }
+    let ratio = r
+        .stats
+        .est_ratio
+        .map(|x| format!(", act/est {x:.2}"))
+        .unwrap_or_default();
+    let _ = writeln!(
+        out,
+        "-- {} objects ({} pruned, {} skipped), {} moved (est {}{ratio}), \
+         {} reads coalesced, {} prefix reads, {} rows short-circuited, \
+         sim {:.4}s, wall {:.4}s, modes {}p/{}c",
+        r.stats.objects,
+        r.stats.objects_pruned,
+        fmt_size(r.stats.bytes_skipped),
+        fmt_size(r.stats.bytes_moved),
+        fmt_size(r.stats.bytes_estimated),
+        r.stats.reads_coalesced,
+        r.stats.prefix_reads,
+        r.stats.rows_short_circuited,
+        r.stats.sim_seconds,
+        r.stats.wall_seconds,
+        r.stats.objects_pushdown,
+        r.stats.objects_client
+    );
+    Ok(())
+}
+
+fn cmd_index(f: &Flags, out: &mut String) -> Result<()> {
+    let cfg = build_config(f)?;
+    let stack = Stack::build(&cfg)?;
+    let dataset = require_dataset(f)?;
+    let column = f
+        .get("column")
+        .ok_or_else(|| Error::Invalid("--column required".into()))?;
+    hydrate(&stack, &cfg, &dataset, Layout::Col, out)?;
+    let n = stack.driver.build_index(&dataset, column)?;
+    let _ = writeln!(out, "indexed {n} rows on {column:?}");
+    Ok(())
+}
+
+fn cmd_transform(f: &Flags, out: &mut String) -> Result<()> {
+    let cfg = build_config(f)?;
+    let stack = Stack::build(&cfg)?;
+    let dataset = require_dataset(f)?;
+    let layout = parse_layout(
+        f.get("layout")
+            .ok_or_else(|| Error::Invalid("--layout required".into()))?,
+    )?;
+    hydrate(&stack, &cfg, &dataset, Layout::Row, out)?;
+    let rep = stack.driver.transform_layout(&dataset, layout)?;
+    let _ = writeln!(
+        out,
+        "transformed {} objects to {} layout, sim {:.3}s",
+        rep.objects,
+        layout.name(),
+        rep.sim_seconds
+    );
+    Ok(())
+}
+
+fn cmd_inspect(f: &Flags, out: &mut String) -> Result<()> {
+    let cfg = build_config(f)?;
+    let stack = Stack::build(&cfg)?;
+    // Hydrate something to look at.
+    let batch = gen::sensor_table(5_000, cfg.cluster.seed);
+    stack.driver.write_table(
+        "inspect-demo",
+        &batch,
+        Layout::Col,
+        &partition_spec(&cfg, 32 * 1024),
+        None,
+    )?;
+    let _ = writeln!(out, "datasets:");
+    for ds in metadata::list_datasets(&stack.cluster) {
+        let (meta, _) = metadata::load_meta(&stack.cluster, 0.0, &ds)?;
+        let clustered = match meta.cluster_column() {
+            Some(c) => format!(", clustered by {c:?}"),
+            None => String::new(),
+        };
+        let _ = writeln!(
+            out,
+            "  {ds}: {} objects, {} items{clustered}",
+            meta.object_names(&ds).len(),
+            meta.total_items()
+        );
+    }
+    let _ = writeln!(out, "object distribution:");
+    for (osd, n) in stack.cluster.object_distribution() {
+        let _ = writeln!(out, "  osd.{osd}: {n} objects");
+    }
+    let _ = writeln!(
+        out,
+        "total stored: {}",
+        fmt_size(stack.cluster.total_bytes_stored())
+    );
+    Ok(())
+}
+
+fn cmd_serve(f: &Flags, out: &mut String) -> Result<()> {
+    let cfg = build_config(f)?;
+    let stack = Stack::build(&cfg)?;
+    let requests: usize = f
+        .get("requests")
+        .unwrap_or("200")
+        .parse()
+        .map_err(|_| Error::Invalid("bad --requests".into()))?;
+    // Seed data.
+    stack.router.handle(Request::WriteTable {
+        dataset: "served".into(),
+        batch: gen::sensor_table(50_000, cfg.cluster.seed),
+        layout: Layout::Col,
+        spec: partition_spec(&cfg, 128 * 1024),
+    })?;
+    let mut rng = crate::util::rng::Xoshiro256::new(cfg.cluster.seed);
+    let start = std::time::Instant::now();
+    for i in 0..requests {
+        let threshold = 30.0 + rng.f64() * 50.0;
+        let q = Query::scan("served")
+            .filter(crate::skyhook::Predicate::cmp(
+                "val",
+                crate::skyhook::CmpOp::Gt,
+                threshold,
+            ))
+            .aggregate(crate::skyhook::AggFunc::Mean, "val");
+        match stack.router.handle(Request::Query {
+            query: q,
+            force_mode: None,
+        })? {
+            Response::Query(_) => {}
+            _ => unreachable!(),
+        }
+        if (i + 1) % 100 == 0 {
+            let _ = writeln!(out, "served {} requests", i + 1);
+        }
+    }
+    let dt = start.elapsed().as_secs_f64();
+    let _ = writeln!(
+        out,
+        "served {requests} requests in {dt:.2}s ({:.1} req/s)",
+        requests as f64 / dt
+    );
+    let _ = writeln!(out, "{}", stack.router.metrics.report());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(a: &[&str]) -> Vec<String> {
+        a.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn help_and_unknown_commands() {
+        let out = run(&args(&["help"])).unwrap();
+        assert!(out.contains("--cluster-by"));
+        assert!(run(&args(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn put_reports_clustering() {
+        let out = run(&args(&[
+            "put",
+            "--dataset",
+            "d",
+            "--rows",
+            "2000",
+            "--cluster-by",
+            "val",
+        ]))
+        .unwrap();
+        assert!(out.contains("clustered by \"val\""), "{out}");
+        // Ghost columns fail before any write.
+        assert!(run(&args(&["put", "--dataset", "d", "--cluster-by", "nope"])).is_err());
+    }
+
+    #[test]
+    fn query_footer_carries_sortedness_counters() {
+        let out = run(&args(&[
+            "query",
+            "--dataset",
+            "d",
+            "--select",
+            "ts",
+            "--sort",
+            "val",
+            "--limit",
+            "5",
+        ]))
+        .unwrap();
+        assert!(out.contains("prefix reads"), "{out}");
+        assert!(out.contains("rows short-circuited"), "{out}");
+    }
+}

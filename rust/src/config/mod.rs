@@ -99,11 +99,25 @@ impl Default for DriverConfig {
     }
 }
 
+/// Dataset-mapping defaults applied by the CLI and the launchers when a
+/// write does not specify its own [`PartitionSpec`] knobs.
+///
+/// [`PartitionSpec`]: crate::dataset::partition::PartitionSpec
+#[derive(Clone, Debug, Default)]
+pub struct DatasetConfig {
+    /// Sort-aware clustered ingest: sort rows by this column at write
+    /// time so each object covers a narrow value range of it (sharper
+    /// zone maps) and is internally sorted (prefix-read top-k, per-object
+    /// sort skipping). `None` = unclustered, the legacy layout.
+    pub cluster_by: Option<String>,
+}
+
 /// Top-level configuration.
 #[derive(Clone, Debug, Default)]
 pub struct Config {
     pub cluster: ClusterConfig,
     pub driver: DriverConfig,
+    pub dataset: DatasetConfig,
     /// Directory holding AOT artifacts (HLO text files).
     pub artifacts_dir: String,
 }
@@ -120,7 +134,7 @@ impl Config {
 
         for sec in doc.section_names() {
             match sec {
-                "" | "cluster" | "driver" => {}
+                "" | "cluster" | "driver" | "dataset" => {}
                 other => return Err(Error::Config(format!("unknown section [{other}]"))),
             }
         }
@@ -221,6 +235,21 @@ impl Config {
             cfg.driver.use_pjrt = b;
         }
 
+        if let Some(sec) = doc.section("dataset") {
+            for key in sec.keys() {
+                match key.as_str() {
+                    "cluster_by" => {}
+                    other => return Err(Error::Config(format!("unknown key dataset.{other}"))),
+                }
+            }
+        }
+        if let Some(s) = doc.get_str("dataset.cluster_by") {
+            if s.is_empty() {
+                return Err(Error::Config("dataset.cluster_by must name a column".into()));
+            }
+            cfg.dataset.cluster_by = Some(s.to_string());
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -317,6 +346,15 @@ use_pjrt = true
         assert!(Config::from_text("[cluster]\nodss = 2").is_err());
         assert!(Config::from_text("typo_at_root = 1").is_err());
         assert!(Config::from_text("[driver]\nworker = 1").is_err());
+        assert!(Config::from_text("[dataset]\ncluster = \"x\"").is_err());
+    }
+
+    #[test]
+    fn dataset_cluster_by_knob() {
+        let cfg = Config::from_text("[dataset]\ncluster_by = \"val\"").unwrap();
+        assert_eq!(cfg.dataset.cluster_by.as_deref(), Some("val"));
+        assert_eq!(Config::default().dataset.cluster_by, None);
+        assert!(Config::from_text("[dataset]\ncluster_by = \"\"").is_err());
     }
 
     #[test]

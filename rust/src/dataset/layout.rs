@@ -21,9 +21,7 @@
 //! path, shared by the server-side extension and the client-side worker
 //! through the [`RangeSource`] abstraction.
 
-use super::schema::TableSchema;
-#[cfg(test)]
-use super::schema::DType;
+use super::schema::{DType, TableSchema};
 use super::table::{Batch, Column};
 use crate::error::{Error, Result};
 use crate::util::bytes::{ByteReader, ByteWriter};
@@ -301,12 +299,45 @@ pub fn read_projected_stats(
     needed: Option<&[String]>,
     header_prefix: usize,
 ) -> Result<(Batch, ProjReadStats)> {
+    read_projected_impl(src, needed, header_prefix, None).map(|(b, s, _)| (b, s))
+}
+
+/// Bounded **prefix read**: fetch only the first `max_rows` rows of the
+/// needed columns — the physical payoff of sort-aware clustering, where
+/// a per-object top-k over the clustered column degenerates into the
+/// object's first k rows. Sound only when the caller has proven the
+/// first `max_rows` rows suffice (head(n), or ascending top-k over a
+/// column whose sortedness marker is stamped — see
+/// `skyhook::exec_kernel::prefix_limit`).
+///
+/// Works on columnar objects whose needed columns are all fixed-width
+/// (a row prefix is then a byte prefix of each extent); row-layout
+/// objects, string columns and unparseable headers fall back to the full
+/// projected read. Returns `(batch, stats, bounded)` where `bounded`
+/// says whether the prefix path actually applied. Truncated column
+/// extents cannot be checksum-verified (the stored CRC covers the whole
+/// column) — the integrity trade of any ranged read.
+pub fn read_projected_rows(
+    src: &mut dyn RangeSource,
+    needed: Option<&[String]>,
+    header_prefix: usize,
+    max_rows: u64,
+) -> Result<(Batch, ProjReadStats, bool)> {
+    read_projected_impl(src, needed, header_prefix, Some(max_rows))
+}
+
+fn read_projected_impl(
+    src: &mut dyn RangeSource,
+    needed: Option<&[String]>,
+    header_prefix: usize,
+    row_cap: Option<u64>,
+) -> Result<(Batch, ProjReadStats, bool)> {
     let mut stats = ProjReadStats::default();
-    let Some(needed) = needed else {
+    if needed.is_none() && row_cap.is_none() {
         let raw = src.read_all()?;
         stats.ranged_reads = 1;
-        return Ok((decode_batch(&raw)?.0, stats));
-    };
+        return Ok((decode_batch(&raw)?.0, stats, false));
+    }
     let size = src.size()?;
     let prefix = src.read_range(0, size.min(header_prefix.max(1)))?;
     stats.ranged_reads = 1;
@@ -322,40 +353,74 @@ pub fn read_projected_stats(
                 stats.ranged_reads += 1;
             }
             let (batch, _) = decode_batch(&raw)?;
-            let refs: Vec<&str> = needed.iter().map(String::as_str).collect();
-            return Ok((batch.project(&refs)?, stats));
+            let batch = match needed {
+                Some(needed) => {
+                    let refs: Vec<&str> = needed.iter().map(String::as_str).collect();
+                    batch.project(&refs)?
+                }
+                None => batch,
+            };
+            return Ok((batch, stats, false));
         }
     };
-    // Validate names early.
-    for n in needed {
+    // Resolve the needed set (`None` with a row cap = every column) and
+    // validate names early.
+    let needed: Vec<&str> = match needed {
+        Some(n) => n.iter().map(String::as_str).collect(),
+        None => header.schema.columns.iter().map(|c| c.name.as_str()).collect(),
+    };
+    for n in &needed {
         header.schema.col_index(n)?;
     }
+    // A row prefix is a byte prefix only for fixed-width columns; any
+    // needed string column disables the bound (full extents instead).
+    let fixed_width = |dt: DType| -> Option<u64> {
+        match dt {
+            DType::F32 => Some(4),
+            DType::F64 | DType::I64 => Some(8),
+            DType::Str => None,
+        }
+    };
+    let cap = row_cap.filter(|_| {
+        header
+            .schema
+            .columns
+            .iter()
+            .all(|c| !needed.contains(&c.name.as_str()) || fixed_width(c.dtype).is_some())
+    });
+    let out_rows = cap.map_or(header.nrows, |k| header.nrows.min(k));
+    let bounded = cap.is_some();
     // Plan the reads: extents fully inside the prefix are free; the rest
     // coalesce into one ranged read per contiguous run (adjacent needed
     // columns share a run because the columnar payload is contiguous in
-    // directory order).
-    let mut extents = Vec::new(); // (ci, start, end), schema order
+    // directory order). Under a row cap each extent is truncated to the
+    // prefix of bytes holding its first `out_rows` values.
+    let mut extents = Vec::new(); // (ci, start, end, full), schema order
     for (ci, col_schema) in header.schema.columns.iter().enumerate() {
-        if !needed.contains(&col_schema.name) {
+        if !needed.contains(&col_schema.name.as_str()) {
             continue;
         }
         let (off, len, _) = header.directory[ci];
+        let len_eff = match (cap, fixed_width(col_schema.dtype)) {
+            (Some(_), Some(w)) => len.min(out_rows * w),
+            _ => len,
+        };
         let start = header
             .payload_start
             .checked_add(off as usize)
             .ok_or_else(|| Error::Corrupt("directory extent overflow".into()))?;
         let end = start
-            .checked_add(len as usize)
+            .checked_add(len_eff as usize)
             .ok_or_else(|| Error::Corrupt("directory extent overflow".into()))?;
-        extents.push((ci, start, end));
+        extents.push((ci, start, end, len_eff == len));
     }
     // Contiguous runs of extents beyond the prefix. A run's fetch start
     // is clipped to the prefix end: bytes the prefix already fetched are
     // never read twice, even for an extent straddling the boundary (its
     // column is stitched from prefix + run below).
     let mut runs: Vec<(usize, usize)> = Vec::new(); // (fetch start, end)
-    for &(_, start, end) in &extents {
-        if end <= prefix.len() {
+    for &(_, start, end, _) in &extents {
+        if end <= prefix.len() || end <= start {
             continue;
         }
         match runs.last_mut() {
@@ -373,9 +438,11 @@ pub fn read_projected_stats(
     }
     let mut schema_cols = Vec::new();
     let mut columns = Vec::new();
-    for (ci, start, end) in extents {
+    for (ci, start, end, full) in extents {
         let col_schema = &header.schema.columns[ci];
-        let bytes: Cow<'_, [u8]> = if end <= prefix.len() {
+        let bytes: Cow<'_, [u8]> = if end <= start {
+            Cow::Borrowed(&[][..]) // zero-row prefix: nothing to fetch
+        } else if end <= prefix.len() {
             Cow::Borrowed(&prefix[start..end])
         } else {
             let ri = runs
@@ -402,19 +469,27 @@ pub fn read_projected_stats(
                 Cow::Owned(owned)
             }
         };
-        let (_, _, crc) = header.directory[ci];
-        if crc32fast::hash(&bytes) != crc {
-            return Err(Error::Corrupt(format!(
-                "column {:?} checksum mismatch",
-                col_schema.name
-            )));
+        if full {
+            // A truncated extent cannot be verified — its CRC covers the
+            // whole column.
+            let (_, _, crc) = header.directory[ci];
+            if crc32fast::hash(&bytes) != crc {
+                return Err(Error::Corrupt(format!(
+                    "column {:?} checksum mismatch",
+                    col_schema.name
+                )));
+            }
         }
         let mut col = Column::empty(col_schema.dtype);
-        decode_one_col(&mut col, header.nrows, &bytes)?;
+        decode_one_col(&mut col, out_rows, &bytes)?;
         schema_cols.push((col_schema.name.as_str(), col_schema.dtype));
         columns.push(col);
     }
-    Ok((Batch::new(TableSchema::new(&schema_cols), columns)?, stats))
+    Ok((
+        Batch::new(TableSchema::new(&schema_cols), columns)?,
+        stats,
+        bounded,
+    ))
 }
 
 /// Read only the columns named in `needed` from a table object.
@@ -872,6 +947,72 @@ mod tests {
         assert_eq!(got, b.project(&["c8", "c9", "c13", "c14"]).unwrap());
         assert_eq!(stats.ranged_reads, 3);
         assert_eq!(stats.reads_coalesced, 2);
+    }
+
+    #[test]
+    fn read_projected_rows_fetches_only_a_row_prefix() {
+        let b = gen::wide_table(4000, 16, 5);
+        let enc = encode_batch(&b, Layout::Col);
+
+        // 100-row prefix of two tail columns: identical to slicing the
+        // full projection, at a fraction of the bytes.
+        let needed: Vec<String> = ["c12", "c13"].iter().map(|s| s.to_string()).collect();
+        let mut src = BufSource::new(enc.clone());
+        let (got, stats, bounded) =
+            read_projected_rows(&mut src, Some(&needed), HEADER_PREFIX, 100).unwrap();
+        assert!(bounded);
+        assert_eq!(got.nrows(), 100);
+        assert_eq!(
+            got,
+            b.project(&["c12", "c13"]).unwrap().slice(0, 100).unwrap()
+        );
+        let mut full_src = BufSource::new(enc.clone());
+        let (_, _) = read_projected_stats(&mut full_src, Some(&needed), HEADER_PREFIX).unwrap();
+        assert!(
+            src.fetched < full_src.fetched / 4,
+            "prefix fetched {} vs full {}",
+            src.fetched,
+            full_src.fetched
+        );
+        assert!(stats.ranged_reads >= 1);
+
+        // Cap >= rows degenerates to the full (checksum-verified) read.
+        let mut src = BufSource::new(enc.clone());
+        let (got, _, bounded) =
+            read_projected_rows(&mut src, Some(&needed), HEADER_PREFIX, 1 << 30).unwrap();
+        assert!(bounded);
+        assert_eq!(got, b.project(&["c12", "c13"]).unwrap());
+
+        // Zero-row cap: empty batch, just the header prefix fetched.
+        let mut src = BufSource::new(enc.clone());
+        let (got, stats, _) =
+            read_projected_rows(&mut src, Some(&needed), HEADER_PREFIX, 0).unwrap();
+        assert_eq!(got.nrows(), 0);
+        assert_eq!(stats.ranged_reads, 1);
+
+        // `needed = None` with a cap bounds every column.
+        let mut src = BufSource::new(enc);
+        let (got, _, bounded) = read_projected_rows(&mut src, None, HEADER_PREFIX, 7).unwrap();
+        assert!(bounded);
+        assert_eq!(got, b.slice(0, 7).unwrap());
+
+        // String columns cannot byte-bound a row prefix: fall back to the
+        // full projected read (correct, just unbounded).
+        let s = sample();
+        let mut src = BufSource::new(encode_batch(&s, Layout::Col));
+        let needed: Vec<String> = vec!["id".into(), "tag".into()];
+        let (got, _, bounded) =
+            read_projected_rows(&mut src, Some(&needed), HEADER_PREFIX, 1).unwrap();
+        assert!(!bounded);
+        assert_eq!(got, s.project(&["id", "tag"]).unwrap());
+
+        // Row layout: full-read fallback, unbounded.
+        let mut src = BufSource::new(encode_batch(&b, Layout::Row));
+        let needed: Vec<String> = vec!["c3".into()];
+        let (got, _, bounded) =
+            read_projected_rows(&mut src, Some(&needed), HEADER_PREFIX, 5).unwrap();
+        assert!(!bounded);
+        assert_eq!(got.nrows(), 4000);
     }
 
     #[test]

@@ -18,6 +18,21 @@
 //! NaN-bearing columns and `Ne` predicates (which match NaN rows) can
 //! prune row groups proven NaN-free. Non-numeric columns record absent
 //! stats and never prune.
+//!
+//! ## Sortedness markers (zone map v3)
+//!
+//! Since the sort-aware clustered ingest landed, each column's stats also
+//! carry a **sortedness marker**: `sorted == true` means the column's
+//! values are non-decreasing in row order *and* NaN-free — exactly the
+//! precondition under which a stable sort by that column is the identity,
+//! so the read side may skip per-object sorts, binary-search run
+//! boundaries for range predicates, and serve top-k partials as bounded
+//! prefix reads. The marker is stamped only by the write path from the
+//! exact rows being written (never inferred later), so a marked object
+//! can never carry a stale "sorted" stamp over unsorted bytes —
+//! [`verify_sortedness`] is the debug re-scan that proves it. Zone-map
+//! wire version 3 adds the marker; version-2 maps (and kind-3 dataset
+//! metadata) still decode, with every marker conservatively `false`.
 
 use super::naming;
 use super::schema::{Dataspace, TableSchema};
@@ -29,8 +44,12 @@ use crate::util::bytes::{ByteReader, ByteWriter};
 
 const META_MAGIC: &[u8; 4] = b"SKYM";
 const ZONE_MAGIC: &[u8; 4] = b"SKYZ";
-/// Zone map wire version: 2 added per-column NaN counts.
-const ZONE_VERSION: u8 = 2;
+/// Zone map wire version: 2 added per-column NaN counts, 3 added the
+/// per-column sortedness marker. Version-2 maps still decode (markers
+/// default to `false`, disabling only the sortedness fast paths).
+const ZONE_VERSION: u8 = 3;
+/// Oldest zone-map version this decoder still understands.
+const ZONE_VERSION_MIN: u8 = 2;
 
 /// Object xattr key under which the write path stamps each row-group
 /// object's serialized [`ZoneMap`].
@@ -76,6 +95,13 @@ pub struct ColumnStats {
     pub max: f64,
     /// NaN rows in the column (0 for i64 columns).
     pub nan_count: u64,
+    /// Sortedness marker (zone map v3): the column's values are
+    /// non-decreasing in row order **and** NaN-free, so a stable sort by
+    /// this column is the identity. Stamped only by the write path from
+    /// the rows actually written; `false` disables only the sortedness
+    /// fast paths (prefix reads, sort skipping, filter early-stop),
+    /// never correctness.
+    pub sorted: bool,
 }
 
 impl PartialEq for ColumnStats {
@@ -85,6 +111,7 @@ impl PartialEq for ColumnStats {
         self.min.to_bits() == other.min.to_bits()
             && self.max.to_bits() == other.max.to_bits()
             && self.nan_count == other.nan_count
+            && self.sorted == other.sorted
     }
 }
 
@@ -95,6 +122,18 @@ impl ColumnStats {
             min: f64::NAN,
             max: f64::NAN,
             nan_count: 0,
+            sorted: false,
+        }
+    }
+
+    /// Stats over a known NaN-free value range, unsorted (the common
+    /// hand-built test fixture).
+    pub fn exact(min: f64, max: f64) -> ColumnStats {
+        ColumnStats {
+            min,
+            max,
+            nan_count: 0,
+            sorted: false,
         }
     }
 
@@ -132,11 +171,13 @@ impl ColumnStats {
         }
     }
 
-    /// Wire encoding (shared by [`ZoneMap`] and the dataset metadata).
+    /// Wire encoding (shared by [`ZoneMap`] v3 and kind-4 dataset
+    /// metadata): min/max, NaN count, sortedness marker.
     pub fn encode_into(&self, w: &mut ByteWriter) {
         w.f64(self.min);
         w.f64(self.max);
         w.u64(self.nan_count);
+        w.u8(self.sorted as u8);
     }
 
     pub fn decode_from(r: &mut ByteReader) -> Result<ColumnStats> {
@@ -144,6 +185,19 @@ impl ColumnStats {
             min: r.f64()?,
             max: r.f64()?,
             nan_count: r.u64()?,
+            sorted: r.u8()? != 0,
+        })
+    }
+
+    /// Pre-sortedness (zone map v2 / meta kind 3) wire decoding: min/max
+    /// and the NaN count only. Markers default to `false`, so old
+    /// objects plan, prune and execute exactly as they always did.
+    fn decode_v2_from(r: &mut ByteReader) -> Result<ColumnStats> {
+        Ok(ColumnStats {
+            min: r.f64()?,
+            max: r.f64()?,
+            nan_count: r.u64()?,
+            sorted: false,
         })
     }
 
@@ -155,14 +209,36 @@ impl ColumnStats {
             min: r.f64()?,
             max: r.f64()?,
             nan_count: 0,
+            sorted: false,
         })
     }
 
     /// Compute stats over one column: min/max of the non-NaN values plus
-    /// the NaN count. An all-NaN column yields an empty range with a
-    /// positive count; string columns yield absent stats.
+    /// the NaN count, and the sortedness marker — values non-decreasing
+    /// **in the column's native comparator** (i64 compared natively, not
+    /// f64-widened, so timestamps beyond 2^53 cannot hide an inversion
+    /// inside one f64 ulp; floats via `total_cmp`) and NaN-free, which
+    /// is exactly the order `logical::sort_rows` uses. An all-NaN column
+    /// yields an empty range with a positive count; string columns yield
+    /// absent stats (no marker: kernels only binary-search numeric runs).
     pub fn from_column(col: &Column) -> ColumnStats {
-        fn scan(it: impl Iterator<Item = f64>) -> ColumnStats {
+        // Sortedness under the *same* comparator the query layer sorts
+        // with (`logical::key_vals`): native order per type.
+        let sorted = match col {
+            Column::I64(v) => v.windows(2).all(|w| w[0] <= w[1]),
+            Column::F32(v) => {
+                v.iter().all(|x| !x.is_nan())
+                    && v.windows(2)
+                        .all(|w| w[0].total_cmp(&w[1]) != std::cmp::Ordering::Greater)
+            }
+            Column::F64(v) => {
+                v.iter().all(|x| !x.is_nan())
+                    && v.windows(2)
+                        .all(|w| w[0].total_cmp(&w[1]) != std::cmp::Ordering::Greater)
+            }
+            Column::Str(_) => false,
+        };
+        fn scan(it: impl Iterator<Item = f64>, sorted: bool) -> ColumnStats {
             let (mut min, mut max) = (f64::INFINITY, f64::NEG_INFINITY);
             let mut nans = 0u64;
             for x in it {
@@ -178,19 +254,22 @@ impl ColumnStats {
                 }
             }
             if min > max && nans == 0 {
-                // Empty column: nothing known.
+                // Empty column: nothing known (an empty column is
+                // vacuously sorted, but absent stats keep legacy
+                // equality and there is nothing to exploit anyway).
                 return ColumnStats::absent();
             }
             ColumnStats {
                 min,
                 max,
                 nan_count: nans,
+                sorted: sorted && nans == 0,
             }
         }
         match col {
-            Column::F32(v) => scan(v.iter().map(|&x| x as f64)),
-            Column::F64(v) => scan(v.iter().copied()),
-            Column::I64(v) => scan(v.iter().map(|&x| x as f64)),
+            Column::F32(v) => scan(v.iter().map(|&x| x as f64), sorted),
+            Column::F64(v) => scan(v.iter().copied(), sorted),
+            Column::I64(v) => scan(v.iter().map(|&x| x as f64), sorted),
             Column::Str(_) => ColumnStats::absent(),
         }
     }
@@ -230,8 +309,30 @@ impl ZoneMap {
         self.stats.get(i).and_then(ColumnStats::value_range)
     }
 
+    /// Is `col` marked sorted (non-decreasing, NaN-free) in this map?
+    pub fn is_sorted(&self, col: &str) -> bool {
+        self.schema
+            .col_index(col)
+            .ok()
+            .and_then(|i| self.stats.get(i))
+            .map(|s| s.sorted)
+            .unwrap_or(false)
+    }
+
+    /// Names of every column carrying the sortedness marker, in schema
+    /// order — what the storage-side handlers feed the execution kernel.
+    pub fn sorted_columns(&self) -> Vec<String> {
+        self.schema
+            .columns
+            .iter()
+            .zip(&self.stats)
+            .filter(|(_, s)| s.sorted)
+            .map(|(c, _)| c.name.clone())
+            .collect()
+    }
+
     pub fn encode(&self) -> Vec<u8> {
-        let mut w = ByteWriter::with_capacity(self.stats.len() * 24 + 64);
+        let mut w = ByteWriter::with_capacity(self.stats.len() * 25 + 64);
         w.raw(ZONE_MAGIC);
         w.u8(ZONE_VERSION);
         w.bytes(&self.schema.encode());
@@ -248,11 +349,11 @@ impl ZoneMap {
         if r.raw(4)? != ZONE_MAGIC {
             return Err(Error::Corrupt("bad zone map magic".into()));
         }
-        // No legacy (version-less) decode path: the store is in-memory,
-        // so no xattr outlives the process that wrote it, and a decode
-        // failure only disables the advisory short-circuit anyway.
+        // Versions 2 (pre-sortedness) and 3 both decode; anything else is
+        // an error the callers treat as "no zone map" — an unknown
+        // version only disables the advisory fast paths, never results.
         let version = r.u8()?;
-        if version != ZONE_VERSION {
+        if !(ZONE_VERSION_MIN..=ZONE_VERSION).contains(&version) {
             return Err(Error::Corrupt(format!("bad zone map version {version}")));
         }
         let schema = TableSchema::decode(r.bytes()?)?;
@@ -266,7 +367,11 @@ impl ZoneMap {
         }
         let mut stats = Vec::with_capacity(n);
         for _ in 0..n {
-            stats.push(ColumnStats::decode_from(&mut r)?);
+            stats.push(if version >= 3 {
+                ColumnStats::decode_from(&mut r)?
+            } else {
+                ColumnStats::decode_v2_from(&mut r)?
+            });
         }
         Ok(ZoneMap {
             schema,
@@ -297,6 +402,13 @@ pub enum DatasetMeta {
         /// Locality group per row group (parallel to `row_groups`), empty
         /// string = none.
         localities: Vec<String>,
+        /// Column this dataset was clustered by at write time (rows
+        /// sorted by it before row-group encoding), empty = unclustered.
+        /// Advisory, like the per-column sortedness markers it implies:
+        /// the planner prints it and sharpens estimates with it, but the
+        /// markers in `RowGroupMeta::stats` are what the read side
+        /// actually trusts per object.
+        cluster_by: String,
     },
     Array {
         space: Dataspace,
@@ -333,6 +445,16 @@ impl DatasetMeta {
         }
     }
 
+    /// The column this dataset was clustered by at write time, if any.
+    pub fn cluster_column(&self) -> Option<&str> {
+        match self {
+            DatasetMeta::Table { cluster_by, .. } if !cluster_by.is_empty() => {
+                Some(cluster_by.as_str())
+            }
+            _ => None,
+        }
+    }
+
     /// Total logical rows (tables) or elements (arrays).
     pub fn total_items(&self) -> u64 {
         match self {
@@ -352,11 +474,14 @@ impl DatasetMeta {
                 layout,
                 row_groups,
                 localities,
+                cluster_by,
             } => {
-                // Kind 3: table metadata with per-group zone maps carrying
-                // NaN counts (kind 2 is the min/max-only encoding, kind 0
-                // the legacy stats-less one; both still decodable).
-                w.u8(3);
+                // Kind 4: table metadata with per-group zone maps carrying
+                // NaN counts and sortedness markers, plus the dataset's
+                // clustered column (kind 3 lacks markers/clustering, kind
+                // 2 is the min/max-only encoding, kind 0 the legacy
+                // stats-less one; all still decodable).
+                w.u8(4);
                 w.bytes(&schema.encode());
                 w.u8(match layout {
                     Layout::Row => 0,
@@ -374,6 +499,7 @@ impl DatasetMeta {
                 for l in localities {
                     w.str(l);
                 }
+                w.str(cluster_by);
             }
             DatasetMeta::Array { space, chunk } => {
                 w.u8(1);
@@ -393,7 +519,7 @@ impl DatasetMeta {
             return Err(Error::Corrupt("bad meta magic".into()));
         }
         match r.u8()? {
-            kind if kind == 0 || kind == 2 || kind == 3 => {
+            kind if kind == 0 || kind == 2 || kind == 3 || kind == 4 => {
                 let schema = TableSchema::decode(r.bytes()?)?;
                 let layout = match r.u8()? {
                     0 => Layout::Row,
@@ -415,10 +541,10 @@ impl DatasetMeta {
                         }
                         let mut stats = Vec::with_capacity(k);
                         for _ in 0..k {
-                            stats.push(if kind == 3 {
-                                ColumnStats::decode_from(&mut r)?
-                            } else {
-                                ColumnStats::decode_legacy_from(&mut r)?
+                            stats.push(match kind {
+                                4 => ColumnStats::decode_from(&mut r)?,
+                                3 => ColumnStats::decode_v2_from(&mut r)?,
+                                _ => ColumnStats::decode_legacy_from(&mut r)?,
                             });
                         }
                         stats
@@ -431,11 +557,17 @@ impl DatasetMeta {
                 for _ in 0..n {
                     localities.push(r.str()?.to_string());
                 }
+                let cluster_by = if kind >= 4 {
+                    r.str()?.to_string()
+                } else {
+                    String::new()
+                };
                 Ok(DatasetMeta::Table {
                     schema,
                     layout,
                     row_groups,
                     localities,
+                    cluster_by,
                 })
             }
             1 => {
@@ -480,6 +612,67 @@ pub fn load_meta(cluster: &Cluster, at: f64, dataset: &str) -> Result<(DatasetMe
     Ok((DatasetMeta::decode(&t.value)?, t.finish))
 }
 
+/// Debug re-scan: prove every surviving object of `dataset` carries a
+/// **self-consistent** sortedness marker (and zone map generally) — the
+/// stamped stats must equal stats recomputed from the object's decoded
+/// rows, and the dataset metadata must agree with the xattr. Returns one
+/// human-readable finding per inconsistency (empty = consistent).
+///
+/// This is the invariant the failure-injection tests lean on: a crash or
+/// OSD death mid-clustered-ingest may lose objects, but it must never
+/// leave a stale `sorted` stamp over bytes that are not actually sorted,
+/// because the marker and the data are produced from the same in-memory
+/// batch and written together.
+pub fn verify_sortedness(cluster: &Cluster, dataset: &str) -> Result<Vec<String>> {
+    use super::layout;
+    let (meta, _) = load_meta(cluster, 0.0, dataset)?;
+    let DatasetMeta::Table { row_groups, .. } = &meta else {
+        return Ok(Vec::new()); // arrays carry no zone maps
+    };
+    let mut findings = Vec::new();
+    for (i, name) in meta.object_names(dataset).into_iter().enumerate() {
+        let raw = match cluster.read_object(0.0, &name) {
+            Ok(t) => t.value,
+            Err(e) => {
+                findings.push(format!("{name}: unreadable ({e})"));
+                continue;
+            }
+        };
+        let batch = match layout::decode_batch(&raw) {
+            Ok((b, _)) => b,
+            Err(e) => {
+                findings.push(format!("{name}: undecodable ({e})"));
+                continue;
+            }
+        };
+        let truth = ZoneMap::from_batch(&batch);
+        match cluster
+            .getxattr(0.0, &name, ZONE_MAP_XATTR)
+            .ok()
+            .and_then(|t| t.value)
+        {
+            Some(x) => match ZoneMap::decode(&x) {
+                Ok(zm) if zm.stats == truth.stats && zm.rows == truth.rows => {}
+                Ok(zm) => findings.push(format!(
+                    "{name}: stamped zone map disagrees with data \
+                     (stamped {:?}, recomputed {:?})",
+                    zm.stats, truth.stats
+                )),
+                Err(e) => findings.push(format!("{name}: corrupt zone map xattr ({e})")),
+            },
+            None => findings.push(format!("{name}: missing zone map xattr")),
+        }
+        if let Some(rg) = row_groups.get(i) {
+            if !rg.stats.is_empty() && rg.stats != truth.stats {
+                findings.push(format!(
+                    "{name}: dataset metadata stats disagree with data"
+                ));
+            }
+        }
+    }
+    Ok(findings)
+}
+
 /// List datasets present in the cluster (by scanning for `_meta` objects).
 pub fn list_datasets(cluster: &Cluster) -> Vec<String> {
     cluster
@@ -508,28 +701,24 @@ mod tests {
                             min: -1.5,
                             max: 3.0,
                             nan_count: 4,
+                            sorted: false,
                         },
                         ColumnStats {
                             min: 0.0,
                             max: 99.0,
                             nan_count: 0,
+                            sorted: true,
                         },
                     ],
                 },
                 RowGroupMeta {
                     rows: 80,
                     bytes: 960,
-                    stats: vec![
-                        ColumnStats::absent(),
-                        ColumnStats {
-                            min: 7.0,
-                            max: 7.0,
-                            nan_count: 0,
-                        },
-                    ],
+                    stats: vec![ColumnStats::absent(), ColumnStats::exact(7.0, 7.0)],
                 },
             ],
             localities: vec![String::new(), "grp1".into()],
+            cluster_by: "b".into(),
         }
     }
 
@@ -544,13 +733,18 @@ mod tests {
         let s = ColumnStats::from_column(&Column::F32(vec![3.0, -1.0, 2.5]));
         assert_eq!(s.range(), Some((-1.0, 2.5)));
         assert_eq!(s.nan_count, 0);
+        assert!(!s.sorted, "3, -1 is not non-decreasing");
         assert_eq!(s.value_range(), Some(ValueRange::exact(-1.0, 2.5)));
         let s = ColumnStats::from_column(&Column::I64(vec![5, 5]));
         assert_eq!(s.range(), Some((5.0, 5.0)));
-        // NaNs are counted; min/max still cover the non-NaN values.
+        assert!(s.sorted, "constant columns are sorted");
+        // NaNs are counted; min/max still cover the non-NaN values, and a
+        // NaN anywhere clears the sortedness marker (the marker promises
+        // a NaN-free non-decreasing column).
         let s = ColumnStats::from_column(&Column::F64(vec![1.0, f64::NAN, 3.0]));
         assert_eq!(s.range(), Some((1.0, 3.0)));
         assert_eq!(s.nan_count, 1);
+        assert!(!s.sorted);
         assert_eq!(
             s.value_range(),
             Some(ValueRange {
@@ -648,6 +842,189 @@ mod tests {
             row_groups[0].stats[0].value_range(),
             Some(ValueRange::exact(-2.0, 9.0))
         );
+    }
+
+    #[test]
+    fn sortedness_marker_tracks_row_order() {
+        // Sorted, NaN-free numeric columns of every type get the marker.
+        assert!(ColumnStats::from_column(&Column::I64(vec![1, 2, 2, 9])).sorted);
+        assert!(ColumnStats::from_column(&Column::F32(vec![-1.0, 0.0, 0.0, 7.5])).sorted);
+        assert!(ColumnStats::from_column(&Column::F64(vec![0.25, 0.5])).sorted);
+        // One inversion clears it.
+        assert!(!ColumnStats::from_column(&Column::I64(vec![1, 3, 2])).sorted);
+        // Strings record absent stats — no marker even when ordered.
+        assert!(!ColumnStats::from_column(&Column::Str(vec!["a".into(), "b".into()])).sorted);
+        // Single-value columns are trivially sorted; empty ones absent.
+        assert!(ColumnStats::from_column(&Column::F32(vec![4.0])).sorted);
+        assert!(!ColumnStats::from_column(&Column::F32(vec![])).sorted);
+        // i64 sortedness is judged in native i64 order: an inversion
+        // smaller than one f64 ulp (values beyond 2^53 widen to the same
+        // f64) must still clear the marker, because the query layer's
+        // sorts compare i64 natively.
+        let base = (1i64 << 53) + 1; // rounds to 2^53: collides as f64
+        assert_eq!(base as f64, (base - 1) as f64);
+        assert!(!ColumnStats::from_column(&Column::I64(vec![base, base - 1])).sorted);
+        assert!(ColumnStats::from_column(&Column::I64(vec![base - 1, base])).sorted);
+    }
+
+    #[test]
+    fn zone_map_v2_fixture_decodes_with_markers_false() {
+        // Hand-build a version-2 (pre-sortedness) zone map: it must keep
+        // decoding, with every marker conservatively false, so objects
+        // written before the clustered-ingest change plan/prune/execute
+        // exactly as before.
+        let schema = TableSchema::new(&[("a", DType::F32), ("b", DType::I64)]);
+        let mut w = ByteWriter::new();
+        w.raw(ZONE_MAGIC);
+        w.u8(2);
+        w.bytes(&schema.encode());
+        w.u64(42);
+        w.u32(2);
+        // v2 stats: min, max, nan_count — no sorted byte.
+        w.f64(-1.0);
+        w.f64(5.0);
+        w.u64(3);
+        w.f64(0.0);
+        w.f64(9.0);
+        w.u64(0);
+        let zm = ZoneMap::decode(&w.finish()).unwrap();
+        assert_eq!(zm.rows, 42);
+        assert_eq!(
+            zm.value_range("a"),
+            Some(ValueRange {
+                lo: -1.0,
+                hi: 5.0,
+                nans: 3
+            })
+        );
+        assert!(!zm.is_sorted("a") && !zm.is_sorted("b"));
+        assert!(zm.sorted_columns().is_empty());
+    }
+
+    #[test]
+    fn zone_map_v3_roundtrip_carries_markers() {
+        let b = Batch::new(
+            TableSchema::new(&[("ts", DType::I64), ("v", DType::F32)]),
+            vec![
+                Column::I64(vec![1, 2, 3]),
+                Column::F32(vec![5.0, 1.0, 9.0]),
+            ],
+        )
+        .unwrap();
+        let zm = ZoneMap::from_batch(&b);
+        assert!(zm.is_sorted("ts"));
+        assert!(!zm.is_sorted("v"));
+        assert_eq!(zm.sorted_columns(), vec!["ts".to_string()]);
+        let dec = ZoneMap::decode(&zm.encode()).unwrap();
+        assert_eq!(dec, zm);
+        assert!(dec.is_sorted("ts"));
+    }
+
+    #[test]
+    fn zone_map_unknown_version_is_rejected_not_misread() {
+        // A future version must fail decoding (the callers then treat the
+        // object as having no zone map — advisory fast paths off, results
+        // unchanged), never silently parse under wrong framing.
+        let zm = ZoneMap::from_batch(&Batch::new(
+            TableSchema::new(&[("a", DType::I64)]),
+            vec![Column::I64(vec![1, 2])],
+        )
+        .unwrap());
+        let mut enc = zm.encode();
+        enc[4] = 9; // version byte
+        assert!(ZoneMap::decode(&enc).is_err());
+        enc[4] = 1; // ancient / below minimum
+        assert!(ZoneMap::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn kind3_meta_fixture_decodes_without_markers_or_clustering() {
+        // Hand-build a kind-3 (pre-sortedness) table metadata fixture: it
+        // decodes with markers false and no clustered column.
+        let schema = TableSchema::new(&[("a", DType::F32)]);
+        let mut w = ByteWriter::new();
+        w.raw(META_MAGIC);
+        w.u8(3);
+        w.bytes(&schema.encode());
+        w.u8(1); // Col
+        w.u32(1);
+        w.u64(10);
+        w.u64(500);
+        w.u32(1);
+        w.f64(-2.0);
+        w.f64(9.0);
+        w.u64(1);
+        w.str("");
+        let m = DatasetMeta::decode(&w.finish()).unwrap();
+        assert_eq!(m.cluster_column(), None);
+        let DatasetMeta::Table { row_groups, .. } = m else {
+            panic!("expected table");
+        };
+        assert_eq!(
+            row_groups[0].stats[0],
+            ColumnStats {
+                min: -2.0,
+                max: 9.0,
+                nan_count: 1,
+                sorted: false
+            }
+        );
+    }
+
+    #[test]
+    fn kind4_roundtrip_preserves_markers_and_cluster_column() {
+        let m = table_meta();
+        assert_eq!(m.cluster_column(), Some("b"));
+        let dec = DatasetMeta::decode(&m.encode()).unwrap();
+        assert_eq!(dec, m);
+        assert_eq!(dec.cluster_column(), Some("b"));
+        let DatasetMeta::Table { row_groups, .. } = dec else {
+            panic!("expected table");
+        };
+        assert!(row_groups[0].stats[1].sorted);
+        assert!(!row_groups[0].stats[0].sorted);
+    }
+
+    #[test]
+    fn verify_sortedness_flags_stale_markers() {
+        use crate::dataset::layout::{encode_batch, Layout};
+        let c = Cluster::with_defaults(&ClusterConfig::default());
+        // Write one object + truthful zone map + metadata.
+        let sorted_batch = Batch::new(
+            TableSchema::new(&[("k", DType::I64)]),
+            vec![Column::I64(vec![1, 2, 3])],
+        )
+        .unwrap();
+        let name = naming::table_object("d", 0);
+        c.write_object(0.0, &name, &encode_batch(&sorted_batch, Layout::Col))
+            .unwrap();
+        let zm = ZoneMap::from_batch(&sorted_batch);
+        c.setxattr(0.0, &name, ZONE_MAP_XATTR, &zm.encode()).unwrap();
+        let meta = DatasetMeta::Table {
+            schema: sorted_batch.schema.clone(),
+            layout: Layout::Col,
+            row_groups: vec![RowGroupMeta {
+                rows: 3,
+                bytes: 100,
+                stats: zm.stats.clone(),
+            }],
+            localities: vec![String::new()],
+            cluster_by: "k".into(),
+        };
+        save_meta(&c, 0.0, "d", &meta, false).unwrap();
+        assert_eq!(verify_sortedness(&c, "d").unwrap(), Vec::<String>::new());
+        // Now plant a stale "sorted" stamp over unsorted bytes: the
+        // re-scan must flag it.
+        let unsorted = Batch::new(
+            sorted_batch.schema.clone(),
+            vec![Column::I64(vec![3, 1, 2])],
+        )
+        .unwrap();
+        c.write_object(0.0, &name, &encode_batch(&unsorted, Layout::Col))
+            .unwrap();
+        let findings = verify_sortedness(&c, "d").unwrap();
+        assert!(!findings.is_empty(), "stale marker must be flagged");
+        assert!(findings.iter().any(|f| f.contains("disagrees")));
     }
 
     #[test]

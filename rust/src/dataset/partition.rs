@@ -12,6 +12,13 @@ pub struct PartitionSpec {
     pub target_bytes: u64,
     /// Hard floor: never emit a group with fewer rows (except the tail).
     pub min_rows: usize,
+    /// Sort-aware clustering: sort the whole batch by this column
+    /// (stable, ascending) *before* cutting row groups, so each object
+    /// covers a narrow, disjoint value range of the column. Zone maps on
+    /// it sharpen from "every object spans everything" to true range
+    /// partitioning, and every object's rows come out sorted — the
+    /// write-time physical design the sortedness markers advertise.
+    pub cluster_by: Option<String>,
 }
 
 impl Default for PartitionSpec {
@@ -19,6 +26,7 @@ impl Default for PartitionSpec {
         Self {
             target_bytes: 4 * 1024 * 1024,
             min_rows: 1,
+            cluster_by: None,
         }
     }
 }
@@ -31,6 +39,12 @@ impl PartitionSpec {
         }
     }
 
+    /// Builder: cluster the dataset by `col` at write time.
+    pub fn cluster_by(mut self, col: &str) -> Self {
+        self.cluster_by = Some(col.to_string());
+        self
+    }
+
     /// Rows per object for a batch (estimate from average row width).
     pub fn rows_per_object(&self, batch: &Batch) -> usize {
         if batch.nrows() == 0 {
@@ -40,11 +54,28 @@ impl PartitionSpec {
         ((self.target_bytes as f64 / row_bytes).floor() as usize).max(self.min_rows.max(1))
     }
 
-    /// Cut a batch into row groups of ~target size.
+    /// Cut a batch into row groups of ~target size. With `cluster_by`
+    /// set, the batch is first stable-sorted by that column so the
+    /// groups range-partition its values (the column must exist; row
+    /// count and sizes are unaffected, so clustered and unclustered
+    /// ingests of one batch always produce the same group shapes).
     pub fn partition(&self, batch: &Batch) -> Result<Vec<Batch>> {
+        if let Some(col) = &self.cluster_by {
+            // Validate even for empty batches so a ghost column fails the
+            // same way regardless of data volume.
+            batch.col(col)?;
+        }
         if batch.nrows() == 0 {
             return Ok(vec![]);
         }
+        let clustered;
+        let batch = match &self.cluster_by {
+            Some(col) => {
+                clustered = batch.sort_by_column(col)?;
+                &clustered
+            }
+            None => batch,
+        };
         let per = self.rows_per_object(batch);
         let mut out = Vec::with_capacity(batch.nrows().div_ceil(per));
         let mut lo = 0;
@@ -226,10 +257,43 @@ mod tests {
         let spec = PartitionSpec {
             target_bytes: 1, // absurdly small
             min_rows: 10,
+            cluster_by: None,
         };
         let groups = spec.partition(&b).unwrap();
         assert_eq!(groups.len(), 10);
         assert!(groups.iter().all(|g| g.nrows() == 10));
+    }
+
+    #[test]
+    fn clustered_partition_range_partitions_the_column() {
+        use crate::dataset::table::Column;
+        let b = gen::sensor_table(5_000, 13);
+        let plain = PartitionSpec::with_target(16 * 1024);
+        let clustered = plain.clone().cluster_by("val");
+        let pg = plain.partition(&b).unwrap();
+        let cg = clustered.partition(&b).unwrap();
+        // Same group shapes either way (clustering only reorders rows).
+        assert_eq!(pg.len(), cg.len());
+        assert!(pg.iter().zip(&cg).all(|(a, c)| a.nrows() == c.nrows()));
+        // Each clustered group is internally sorted by the column…
+        let mut prev_max = f32::NEG_INFINITY;
+        for g in &cg {
+            let Column::F32(v) = g.col("val").unwrap() else {
+                unreachable!()
+            };
+            assert!(v.windows(2).all(|w| w[0] <= w[1]), "group not sorted");
+            // …and groups cover disjoint, increasing value ranges.
+            assert!(*v.first().unwrap() >= prev_max);
+            prev_max = *v.last().unwrap();
+        }
+        // Row multiset preserved: total count and value sum match.
+        let total: usize = cg.iter().map(Batch::nrows).sum();
+        assert_eq!(total, 5_000);
+        // Ghost cluster columns fail, even on empty batches.
+        assert!(clustered.partition(&Batch::empty(&b.schema)).is_ok());
+        let ghost = PartitionSpec::with_target(1024).cluster_by("nope");
+        assert!(ghost.partition(&b).is_err());
+        assert!(ghost.partition(&Batch::empty(&b.schema)).is_err());
     }
 
     fn unit(id: &str, bytes: u64) -> LogicalUnit {

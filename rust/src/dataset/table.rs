@@ -254,6 +254,24 @@ impl Batch {
         Batch::new(self.schema.clone(), columns)
     }
 
+    /// Stable sort of the rows by one column, ascending — the write-time
+    /// clustering primitive. The comparator matches the query layer's
+    /// sort order exactly (floats f64-widened and compared with
+    /// `total_cmp`, i64 native, strings lexicographic), so a batch this
+    /// produced satisfies the zone-map sortedness marker's contract: a
+    /// later stable sort by the same column is the identity.
+    pub fn sort_by_column(&self, col: &str) -> Result<Batch> {
+        let c = self.col(col)?;
+        let mut idx: Vec<usize> = (0..self.nrows()).collect();
+        match c {
+            Column::F32(v) => idx.sort_by(|&a, &b| (v[a] as f64).total_cmp(&(v[b] as f64))),
+            Column::F64(v) => idx.sort_by(|&a, &b| v[a].total_cmp(&v[b])),
+            Column::I64(v) => idx.sort_by(|&a, &b| v[a].cmp(&v[b])),
+            Column::Str(v) => idx.sort_by(|&a, &b| v[a].cmp(&v[b])),
+        }
+        self.take(&idx)
+    }
+
     /// Take row range `[lo, hi)` as a new batch.
     pub fn slice(&self, lo: usize, hi: usize) -> Result<Batch> {
         if lo > hi || hi > self.nrows() {
@@ -381,6 +399,41 @@ mod tests {
         assert_eq!(p.schema.col(0).name, "v");
         assert_eq!(p.nrows(), 3);
         assert!(b.project(&["nope"]).is_err());
+    }
+
+    #[test]
+    fn sort_by_column_is_stable_and_total() {
+        let b = Batch::new(
+            TableSchema::new(&[("k", DType::F32), ("tag", DType::Str)]),
+            vec![
+                Column::F32(vec![2.0, 1.0, 2.0, f32::NAN, 0.5]),
+                Column::Str(vec!["a".into(), "b".into(), "c".into(), "d".into(), "e".into()]),
+            ],
+        )
+        .unwrap();
+        let s = b.sort_by_column("k").unwrap();
+        // Ascending, NaN last (total_cmp), equal keys keep input order.
+        let Column::F32(k) = s.col("k").unwrap() else {
+            unreachable!()
+        };
+        assert_eq!(&k[..3], &[0.5, 1.0, 2.0]);
+        assert!(k[4].is_nan());
+        assert_eq!(
+            s.col("tag").unwrap(),
+            &Column::Str(vec!["e".into(), "b".into(), "a".into(), "c".into(), "d".into()])
+        );
+        // i64 keys sort too, and re-sorting a sorted batch is the
+        // identity (the marker contract the clustered write path relies
+        // on); ghost columns error.
+        let ints = Batch::new(
+            TableSchema::new(&[("i", DType::I64)]),
+            vec![Column::I64(vec![3, 1, 2])],
+        )
+        .unwrap();
+        let sorted = ints.sort_by_column("i").unwrap();
+        assert_eq!(sorted.col("i").unwrap(), &Column::I64(vec![1, 2, 3]));
+        assert_eq!(sorted.sort_by_column("i").unwrap(), sorted);
+        assert!(b.sort_by_column("ghost").is_err());
     }
 
     #[test]

@@ -37,6 +37,7 @@ pub mod skyhook;
 pub mod util;
 pub mod vol;
 
+pub mod cli;
 pub mod launch;
 
 pub use error::{Error, Result};

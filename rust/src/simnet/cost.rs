@@ -339,6 +339,33 @@ pub struct AccessProfile {
     pub objects_per_osd: f64,
 }
 
+impl AccessProfile {
+    /// Price this sub-query as a **bounded prefix read** of the object's
+    /// first `k` rows — the sort-aware clustered layout's fast path
+    /// (head(n), or ascending top-k over a column whose sortedness
+    /// marker is stamped; see `skyhook::exec_kernel::prefix_limit`).
+    ///
+    /// `covered_bytes` is the header-prefix portion both sides fetch
+    /// regardless (`CostParams::header_prefix` clamped to the object
+    /// size). Everything beyond it scales with the fraction of rows
+    /// actually read: device scan bytes, client fetch bytes, and the
+    /// kernel's per-row work (`rows`). The per-object partial sort
+    /// vanishes outright — a stable sort of an already-sorted prefix is
+    /// the identity — which is exactly how the execution side charges
+    /// it, so estimates and simulated costs move together.
+    pub fn apply_sorted_prefix(&mut self, k: u64, covered_bytes: u64) {
+        let rows_frac = (k as f64 / self.rows.max(1) as f64).min(1.0);
+        let truncate = |bytes: u64| -> u64 {
+            let covered = bytes.min(covered_bytes);
+            covered + (bytes.saturating_sub(covered) as f64 * rows_frac) as u64
+        };
+        self.scan_bytes = truncate(self.scan_bytes);
+        self.fetch_bytes = truncate(self.fetch_bytes);
+        self.rows = self.rows.min(k);
+        self.sort_rows = 0;
+    }
+}
+
 /// A two-sided cost estimate: what a sub-query (or a whole plan) costs
 /// if pushed down vs executed client-side, in estimated seconds and
 /// estimated bytes crossing the network. Produced by
@@ -604,6 +631,47 @@ mod tests {
         // Bytes estimates are contention-independent.
         assert_eq!(sat.pushdown_bytes, unsat.pushdown_bytes);
         assert_eq!(sat.client_bytes, unsat.client_bytes);
+    }
+
+    #[test]
+    fn sorted_prefix_truncates_scan_and_kills_sort_work() {
+        // A 1 MiB / 40k-row object, 64 KiB header prefix, top-32 over the
+        // clustered column: the prefix bound must shrink both read sets
+        // toward the covered prefix, cap the scanned rows at k, and zero
+        // the per-object sort — flipping the estimate decisively toward
+        // pushdown-cheap prefix serving.
+        let p = CostParams::paper_testbed();
+        let mut prof = AccessProfile {
+            rows: 40_000,
+            scan_bytes: 1 << 20,
+            fetch_bytes: 1 << 20,
+            fetch_round_trips: 3,
+            request_bytes: 48,
+            result_bytes: 2_000,
+            sort_rows: 40_000,
+            ..Default::default()
+        };
+        let base = p.estimate(&prof);
+        prof.apply_sorted_prefix(32, 64 * 1024);
+        let bounded = p.estimate(&prof);
+        assert_eq!(prof.rows, 32);
+        assert_eq!(prof.sort_rows, 0);
+        assert!(prof.scan_bytes < (1 << 20) / 8, "scan {}", prof.scan_bytes);
+        assert!(prof.scan_bytes >= 64 * 1024);
+        assert!(bounded.pushdown_s < base.pushdown_s);
+        assert!(bounded.client_s < base.client_s);
+        // k >= rows degenerates to the unbounded profile (minus sort).
+        let mut big = AccessProfile {
+            rows: 10,
+            scan_bytes: 1000,
+            fetch_bytes: 1000,
+            sort_rows: 10,
+            ..Default::default()
+        };
+        big.apply_sorted_prefix(1 << 20, 64 * 1024);
+        assert_eq!(big.rows, 10);
+        assert_eq!(big.scan_bytes, 1000);
+        assert_eq!(big.sort_rows, 0);
     }
 
     #[test]

@@ -41,6 +41,15 @@ pub struct QueryStats {
     /// read (client-side partial-read scans only; pushdown coalesces on
     /// the storage device instead).
     pub reads_coalesced: u64,
+    /// Sub-queries served as **bounded prefix reads** — head / ascending
+    /// top-k over a column whose sortedness marker is stamped, where the
+    /// partial is just the object's first k rows (the clustered layout's
+    /// payoff, counted on whichever side executed).
+    pub prefix_reads: u64,
+    /// Rows the kernel's filter never charged for because a sortedness
+    /// marker let it binary-search the matching run's boundaries on a
+    /// range predicate.
+    pub rows_short_circuited: u64,
     /// Overall execution mode the planner chose (or was forced to).
     pub pushdown: bool,
     /// Sub-queries the cost model assigned to the storage servers.
@@ -143,6 +152,10 @@ impl Driver {
         if metadata::load_meta(&self.cluster, 0.0, dataset).is_ok() {
             return Err(Error::AlreadyExists(format!("dataset {dataset}")));
         }
+        if let Some(col) = &spec.cluster_by {
+            // Fail fast on a ghost cluster column, before any object I/O.
+            batch.schema.col_index(col)?;
+        }
         let wall = Instant::now();
         let groups = spec.partition(batch)?;
         let localities: Vec<String> = groups
@@ -193,6 +206,7 @@ impl Driver {
             layout,
             row_groups,
             localities,
+            cluster_by: spec.cluster_by.clone().unwrap_or_default(),
         };
         let t = metadata::save_meta(&self.cluster, sim_finish, dataset, &meta, false)?;
         Ok(WriteReport {
@@ -258,6 +272,8 @@ impl Driver {
         // can k-way merge them instead of re-sorting the concatenation.
         let mut bytes_moved = 0u64;
         let mut reads_coalesced = 0u64;
+        let mut prefix_reads = 0u64;
+        let mut rows_short_circuited = 0u64;
         let mut sim_finish = at;
         let mut row_parts: Vec<(Batch, bool)> = Vec::new();
         let mut agg_states: Vec<AggState> = Vec::new();
@@ -266,6 +282,8 @@ impl Driver {
             let r = r?;
             bytes_moved += r.bytes_moved;
             reads_coalesced += r.reads_coalesced;
+            prefix_reads += r.prefix_reads;
+            rows_short_circuited += r.rows_short_circuited;
             sim_finish = sim_finish.max(r.finish);
             match r.output {
                 SubOutput::Rows(b) => row_parts.push((b, r.presorted)),
@@ -483,6 +501,8 @@ impl Driver {
                 objects_pruned: plan.objects_pruned,
                 bytes_skipped: plan.bytes_skipped,
                 reads_coalesced,
+                prefix_reads,
+                rows_short_circuited,
                 pushdown,
                 objects_pushdown: plan.assignment.0,
                 objects_client: plan.assignment.1,
@@ -649,6 +669,7 @@ impl Driver {
             layout,
             row_groups,
             localities,
+            cluster_by,
         } = meta
         else {
             unreachable!("table kind checked above");
@@ -686,6 +707,7 @@ impl Driver {
             layout: target,
             row_groups,
             localities,
+            cluster_by,
         };
         metadata::save_meta(&self.cluster, sim, dataset, &meta, true)?;
         Ok(WriteReport {

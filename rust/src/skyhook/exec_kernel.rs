@@ -33,7 +33,7 @@
 //! property tests pin — is bit-identical across sides.
 
 use super::logical::{grouped_partials, sort_rows, top_k_rows, PipelineSpec};
-use super::query::AggState;
+use super::query::{AggState, CmpOp, Predicate};
 use crate::dataset::table::{Batch, Column};
 use crate::error::Result;
 use crate::simnet::ExecProfile;
@@ -73,6 +73,11 @@ pub struct KernelWork {
     pub agg_values: u64,
     /// Row × sort-key operations of the per-object partial sort.
     pub sort_rows: u64,
+    /// Rows the filter never had to consider because a sortedness marker
+    /// let the kernel binary-search the matching run's boundaries on a
+    /// range predicate (the rows outside the run are provably
+    /// non-matching, so skipping them cannot change the mask).
+    pub rows_short_circuited: u64,
 }
 
 impl KernelWork {
@@ -121,6 +126,146 @@ pub fn needed_columns(spec: &PipelineSpec) -> Option<Vec<String>> {
     Some(v)
 }
 
+/// How many rows of the *object prefix* provably suffice for this
+/// pipeline — the condition under which the read side may issue a
+/// **bounded prefix read** instead of fetching whole column extents:
+///
+/// - a row pipeline with a limit and an always-true predicate, and
+/// - either no sort at all (plain head(n): the first n rows in row
+///   order) or a single *ascending* key over a column whose sortedness
+///   marker is stamped (a stable ascending sort of a non-decreasing,
+///   NaN-free column is the identity, so the best k rows are exactly
+///   the first k).
+///
+/// Descending top-k is excluded on purpose: the largest values sit at
+/// the object's tail, and the stable tie order at the boundary run
+/// cannot be known without reading it — the kernel still skips the sort
+/// for descending keys (run-boundary walk below), it just cannot bound
+/// the fetch. `zone_maps = false` (the unpruned baseline) disables the
+/// bound entirely so baseline measurements stay honest.
+///
+/// Shared by the storage-side extension (device reads), the client-side
+/// worker (network fetches), and the planner's cost estimator, so all
+/// three always agree on when a partial degenerates into a prefix read.
+pub fn prefix_limit(spec: &PipelineSpec, sorted: &dyn Fn(&str) -> bool) -> Option<u64> {
+    if !spec.zone_maps || !spec.aggs.is_empty() || spec.predicate != Predicate::True {
+        return None;
+    }
+    let k = spec.limit?;
+    match spec.sort.as_slice() {
+        [] => Some(k),
+        [key] if !key.desc && sorted(&key.col) => Some(k),
+        _ => None,
+    }
+}
+
+/// Does the kernel skip the per-object partial sort for this spec over a
+/// batch whose `col` is marked sorted? Single-key sorts only: ascending
+/// is the identity, descending is the run-boundary walk — both are
+/// bit-identical to the stable sort they replace.
+fn sort_skippable(spec: &PipelineSpec, sorted: &dyn Fn(&str) -> bool) -> bool {
+    matches!(spec.sort.as_slice(), [key] if sorted(&key.col))
+}
+
+/// First index in `[0, n)` where `f` turns false (`f` must be monotone
+/// true-then-false — guaranteed here by the sortedness marker).
+fn partition_point(n: usize, f: impl Fn(usize) -> bool) -> usize {
+    let (mut lo, mut hi) = (0usize, n);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if f(mid) {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Matching-run window of one comparison over a non-decreasing, NaN-free
+/// value sequence, read through an index accessor (no column copy — the
+/// point of a binary search). Values compare in f64, exactly like
+/// [`Predicate`] evaluation, and i64 widening is monotone, so a
+/// natively-sorted i64 column stays non-decreasing under `get`.
+fn cmp_window(n: usize, get: &dyn Fn(usize) -> f64, op: CmpOp, v: f64) -> (usize, usize) {
+    match op {
+        CmpOp::Lt => (0, partition_point(n, |i| get(i) < v)),
+        CmpOp::Le => (0, partition_point(n, |i| get(i) <= v)),
+        CmpOp::Gt => (partition_point(n, |i| get(i) <= v), n),
+        CmpOp::Ge => (partition_point(n, |i| get(i) < v), n),
+        CmpOp::Eq => (
+            partition_point(n, |i| get(i) < v),
+            partition_point(n, |i| get(i) <= v),
+        ),
+        // Ne's complement is the Eq run — not contiguous.
+        CmpOp::Ne => (0, n),
+    }
+}
+
+/// The contiguous row window outside of which the predicate provably
+/// matches nothing, found by binary-searching run boundaries of sorted
+/// columns (the marker promises non-decreasing, NaN-free values). Only
+/// comparisons on the predicate's AND-spine can bound the window — a
+/// conjunct false outside its run makes the whole conjunction false
+/// there. `Or`/`Not`/unknown shapes contribute the full range.
+fn sorted_window(
+    pred: &Predicate,
+    batch: &Batch,
+    sorted: &dyn Fn(&str) -> bool,
+) -> (usize, usize) {
+    let n = batch.nrows();
+    match pred {
+        Predicate::And(a, b) => {
+            let (alo, ahi) = sorted_window(a, batch, sorted);
+            let (blo, bhi) = sorted_window(b, batch, sorted);
+            (alo.max(blo), ahi.min(bhi).max(alo.max(blo)))
+        }
+        Predicate::Cmp { col, op, value } => {
+            if !sorted(col) {
+                return (0, n);
+            }
+            match batch.col(col) {
+                Ok(Column::F32(s)) => cmp_window(n, &|i| s[i] as f64, *op, *value),
+                Ok(Column::F64(s)) => cmp_window(n, &|i| s[i], *op, *value),
+                Ok(Column::I64(s)) => cmp_window(n, &|i| s[i] as f64, *op, *value),
+                _ => (0, n),
+            }
+        }
+        _ => (0, n),
+    }
+}
+
+/// Stable-descending order of a batch already sorted ascending by `col`:
+/// equal-key *runs* reverse as blocks while rows inside a run keep their
+/// original order — exactly what a stable descending sort produces, in
+/// one O(n) walk over the run boundaries instead of an O(n log n) sort.
+/// Run equality uses the column's **native** comparator (i64 equality,
+/// float bit equality — what `total_cmp` ties mean), so i64 keys beyond
+/// 2^53 that collide in f64 still form distinct runs, matching
+/// [`sort_rows`] exactly.
+fn descending_run_walk(batch: &Batch, col: &str) -> Result<Batch> {
+    let c = batch.col(col)?;
+    let n = batch.nrows();
+    let eq: Box<dyn Fn(usize, usize) -> bool + '_> = match c {
+        Column::I64(v) => Box::new(move |a, b| v[a] == v[b]),
+        Column::F32(v) => Box::new(move |a, b| v[a].to_bits() == v[b].to_bits()),
+        Column::F64(v) => Box::new(move |a, b| v[a].to_bits() == v[b].to_bits()),
+        // String keys never carry the marker; callers guard on it.
+        Column::Str(_) => return sort_rows(batch, &[super::query::SortKey::desc(col)]),
+    };
+    let mut idx = Vec::with_capacity(n);
+    let mut hi = n;
+    while hi > 0 {
+        let mut lo = hi - 1;
+        while lo > 0 && eq(lo - 1, hi - 1) {
+            lo -= 1;
+        }
+        idx.extend(lo..hi);
+        hi = lo;
+    }
+    batch.take(&idx)
+}
+
 /// Evaluate the whole chained pipeline over one batch, in one pass.
 ///
 /// The batch must contain (at least) [`needed_columns`]; extra columns
@@ -128,13 +273,30 @@ pub fn needed_columns(spec: &PipelineSpec) -> Option<Vec<String>> {
 /// passing a full decode is correct, just more bytes. Errors are
 /// identical wherever the kernel runs: ghost columns, string aggregates
 /// and non-i64 group keys fail the same way server- and client-side.
+///
+/// `sorted_cols` names the batch's columns carrying a sortedness marker
+/// (non-decreasing, NaN-free — from the object's zone-map xattr on the
+/// storage server, from the planner's row-group stats on the client).
+/// The kernel exploits them two ways, both bit-transparent to results:
+/// range predicates over a sorted column stop charging for rows outside
+/// the binary-searched matching run ([`KernelWork::rows_short_circuited`];
+/// the mask itself is untouched — those rows are provably non-matching,
+/// so even a lying marker could only mis-account, never corrupt), and
+/// single-key sorts over a sorted column skip the per-object sort
+/// (`sort_rows` stays 0): ascending is the identity, descending the
+/// run-boundary walk. Pass `&[]` to disable (the unpruned baseline).
 pub fn run_pipeline(
     batch: &Batch,
     spec: &PipelineSpec,
     engine: Option<&dyn ChunkCompute>,
+    sorted_cols: &[String],
 ) -> Result<(ExecOut, KernelWork)> {
+    let sorted = |c: &str| sorted_cols.iter().any(|s| s == c);
+    let (wlo, whi) = sorted_window(&spec.predicate, batch, &sorted);
+    let span = (whi - wlo) as u64;
     let mut work = KernelWork {
-        rows_scanned: batch.nrows() as u64,
+        rows_scanned: span,
+        rows_short_circuited: batch.nrows() as u64 - span,
         ..Default::default()
     };
     let mut mask = Vec::new();
@@ -162,7 +324,7 @@ pub fn run_pipeline(
                     }
                 }
                 _ => {
-                    work.agg_values += batch.nrows() as u64;
+                    work.agg_values += span;
                     st.update_column(col, &mask)?;
                 }
             }
@@ -172,7 +334,7 @@ pub fn run_pipeline(
     }
     if !spec.aggs.is_empty() {
         // Grouped partials over a multi-column i64 key.
-        work.agg_values += batch.nrows() as u64 * spec.aggs.len() as u64;
+        work.agg_values += span * spec.aggs.len() as u64;
         let groups = grouped_partials(batch, &mask, &spec.keys, &spec.aggs)?;
         return Ok((ExecOut::Groups(groups), work));
     }
@@ -185,6 +347,23 @@ pub fn run_pipeline(
         }
         None => filtered,
     };
+    if !spec.sort.is_empty() && sort_skippable(spec, &sorted) {
+        // The carried rows are already ordered by the (single) sort key:
+        // ascending needs nothing, descending just walks the equal-key
+        // run boundaries. Resolve the key first so a missing column
+        // errors exactly like the sorting path would.
+        let key = &spec.sort[0];
+        result.col(&key.col)?;
+        if key.desc {
+            result = descending_run_walk(&result, &key.col)?;
+        }
+        if let Some(n) = spec.limit {
+            if result.nrows() > n as usize {
+                result = result.slice(0, n as usize)?;
+            }
+        }
+        return Ok((ExecOut::Rows(result), work));
+    }
     if !spec.sort.is_empty() {
         work.sort_rows += result.nrows() as u64 * spec.sort.len() as u64;
     }
@@ -254,12 +433,13 @@ mod tests {
             projection: Some(vec!["ts".into(), "val".into()]),
             ..s
         };
-        let (out, work) = run_pipeline(&b, &s, None).unwrap();
+        let (out, work) = run_pipeline(&b, &s, None, &[]).unwrap();
         let ExecOut::Rows(rows) = out else {
             panic!("expected rows")
         };
         assert_eq!(rows.nrows(), 5);
         assert_eq!(work.rows_scanned, 300);
+        assert_eq!(work.rows_short_circuited, 0);
         assert_eq!(work.agg_values, 0);
         let matched = Predicate::cmp("val", CmpOp::Gt, 50.0)
             .eval(&b)
@@ -276,7 +456,7 @@ mod tests {
             ],
             ..spec()
         };
-        let (_, work) = run_pipeline(&b, &s, None).unwrap();
+        let (_, work) = run_pipeline(&b, &s, None, &[]).unwrap();
         assert_eq!(work.agg_values, 600);
         // server_seconds prices exactly these counters.
         let p = ExecProfile::default();
@@ -291,18 +471,222 @@ mod tests {
             aggs: vec![Aggregate::new(AggFunc::Sum, "nope")],
             ..spec()
         };
-        assert!(run_pipeline(&b, &ghost_agg, None).is_err());
+        assert!(run_pipeline(&b, &ghost_agg, None, &[]).is_err());
         let bad_key = PipelineSpec {
             aggs: vec![Aggregate::new(AggFunc::Count, "val")],
             keys: vec!["val".into()],
             ..spec()
         };
-        assert!(run_pipeline(&b, &bad_key, None).is_err());
+        assert!(run_pipeline(&b, &bad_key, None, &[]).is_err());
         let ghost_sort = PipelineSpec {
             sort: vec![SortKey::asc("nope")],
             limit: Some(3),
             ..spec()
         };
-        assert!(run_pipeline(&b, &ghost_sort, None).is_err());
+        assert!(run_pipeline(&b, &ghost_sort, None, &[]).is_err());
+        // The sort-skip path resolves its key too: a (nonsensical) marker
+        // on a ghost column must not suppress the error.
+        assert!(run_pipeline(&b, &ghost_sort, None, &["nope".to_string()]).is_err());
+    }
+
+    /// A batch sorted by `k` (ints with duplicate runs) plus an unsorted
+    /// payload column — the shape clustered ingest produces.
+    fn sorted_batch(rows: usize) -> Batch {
+        use crate::dataset::{DType, TableSchema};
+        let k: Vec<i64> = (0..rows as i64).map(|i| i / 3).collect();
+        let v: Vec<f32> = (0..rows).map(|i| ((i * 37) % 101) as f32).collect();
+        Batch::new(
+            TableSchema::new(&[("k", DType::I64), ("v", DType::F32)]),
+            vec![crate::dataset::table::Column::I64(k), Column::F32(v)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn sorted_marker_short_circuits_range_filters() {
+        let b = sorted_batch(300);
+        let s = PipelineSpec {
+            predicate: Predicate::cmp("k", CmpOp::Lt, 10.0)
+                .and(Predicate::cmp("v", CmpOp::Gt, 1.0)),
+            ..spec()
+        };
+        // Without the marker: full scan.
+        let (out_full, w_full) = run_pipeline(&b, &s, None, &[]).unwrap();
+        assert_eq!(w_full.rows_scanned, 300);
+        assert_eq!(w_full.rows_short_circuited, 0);
+        // With it: only k's matching run (k < 10 ⇔ first 30 rows) is
+        // charged; the mask — and therefore the rows — are identical.
+        let (out_sorted, w) = run_pipeline(&b, &s, None, &["k".to_string()]).unwrap();
+        assert_eq!(w.rows_scanned, 30);
+        assert_eq!(w.rows_short_circuited, 270);
+        let (ExecOut::Rows(a), ExecOut::Rows(c)) = (out_full, out_sorted) else {
+            panic!("expected rows");
+        };
+        assert_eq!(a, c);
+        // Both bound directions intersect; Eq binary-searches its run.
+        let s2 = PipelineSpec {
+            predicate: Predicate::cmp("k", CmpOp::Ge, 20.0)
+                .and(Predicate::cmp("k", CmpOp::Le, 29.0)),
+            ..spec()
+        };
+        let (_, w2) = run_pipeline(&b, &s2, None, &["k".to_string()]).unwrap();
+        assert_eq!(w2.rows_scanned, 30); // k in [20, 29] ⇔ rows 60..90
+        let s3 = PipelineSpec {
+            predicate: Predicate::cmp("k", CmpOp::Eq, 50.0),
+            ..spec()
+        };
+        let (_, w3) = run_pipeline(&b, &s3, None, &["k".to_string()]).unwrap();
+        assert_eq!(w3.rows_scanned, 3);
+        // Ne and Or shapes cannot bound: full window.
+        let s4 = PipelineSpec {
+            predicate: Predicate::cmp("k", CmpOp::Ne, 5.0)
+                .or(Predicate::cmp("k", CmpOp::Lt, 2.0)),
+            ..spec()
+        };
+        let (_, w4) = run_pipeline(&b, &s4, None, &["k".to_string()]).unwrap();
+        assert_eq!(w4.rows_scanned, 300);
+        // Aggregates charge per-value work only inside the window.
+        let s5 = PipelineSpec {
+            predicate: Predicate::cmp("k", CmpOp::Lt, 10.0),
+            aggs: vec![Aggregate::new(AggFunc::Sum, "v")],
+            ..spec()
+        };
+        let (out5, w5) = run_pipeline(&b, &s5, None, &["k".to_string()]).unwrap();
+        assert_eq!(w5.agg_values, 30);
+        let (out5u, _) = run_pipeline(&b, &s5, None, &[]).unwrap();
+        let (ExecOut::Aggs(sa), ExecOut::Aggs(sb)) = (out5, out5u) else {
+            panic!("expected aggs");
+        };
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn sorted_marker_skips_the_partial_sort_bit_identically() {
+        let b = sorted_batch(200);
+        // Ascending top-k over the sorted key: identity prefix, no sort
+        // work, exact same rows as the sorting path.
+        let asc = PipelineSpec {
+            sort: vec![SortKey::asc("k")],
+            limit: Some(10),
+            ..spec()
+        };
+        let (out, w) = run_pipeline(&b, &asc, None, &["k".to_string()]).unwrap();
+        let (out_ref, w_ref) = run_pipeline(&b, &asc, None, &[]).unwrap();
+        assert_eq!(w.sort_rows, 0);
+        assert!(w_ref.sort_rows > 0);
+        let (ExecOut::Rows(a), ExecOut::Rows(r)) = (out, out_ref) else {
+            panic!("expected rows");
+        };
+        assert_eq!(a, r);
+        // Descending: the run-boundary walk must equal the stable sort,
+        // including tie order inside equal-key runs (v disambiguates).
+        let desc = PipelineSpec {
+            sort: vec![SortKey::desc("k")],
+            limit: Some(17),
+            ..spec()
+        };
+        let (out, w) = run_pipeline(&b, &desc, None, &["k".to_string()]).unwrap();
+        let (out_ref, _) = run_pipeline(&b, &desc, None, &[]).unwrap();
+        assert_eq!(w.sort_rows, 0);
+        let (ExecOut::Rows(a), ExecOut::Rows(r)) = (out, out_ref) else {
+            panic!("expected rows");
+        };
+        assert_eq!(a, r);
+        // A filter above still composes (the filtered batch stays
+        // sorted); multi-key sorts never skip.
+        let filtered_desc = PipelineSpec {
+            predicate: Predicate::cmp("v", CmpOp::Gt, 30.0),
+            projection: Some(vec!["k".into(), "v".into()]),
+            sort: vec![SortKey::desc("k")],
+            limit: Some(9),
+            ..spec()
+        };
+        let (out, _) = run_pipeline(&b, &filtered_desc, None, &["k".to_string()]).unwrap();
+        let (out_ref, _) = run_pipeline(&b, &filtered_desc, None, &[]).unwrap();
+        let (ExecOut::Rows(a), ExecOut::Rows(r)) = (out, out_ref) else {
+            panic!("expected rows");
+        };
+        assert_eq!(a, r);
+        let multi = PipelineSpec {
+            sort: vec![SortKey::asc("k"), SortKey::desc("v")],
+            limit: Some(5),
+            ..spec()
+        };
+        let (_, w) = run_pipeline(&b, &multi, None, &["k".to_string()]).unwrap();
+        assert!(w.sort_rows > 0, "multi-key sorts must not skip");
+        // i64 keys beyond 2^53: adjacent values collide in f64, but the
+        // run walk compares natively, so the descending skip still
+        // matches the stable sort exactly.
+        use crate::dataset::{DType, TableSchema};
+        let base = 1i64 << 53;
+        let big = Batch::new(
+            TableSchema::new(&[("k", DType::I64)]),
+            vec![Column::I64(vec![base, base + 1, base + 2])],
+        )
+        .unwrap();
+        let desc_big = PipelineSpec {
+            sort: vec![SortKey::desc("k")],
+            limit: Some(3),
+            ..spec()
+        };
+        let (out, _) = run_pipeline(&big, &desc_big, None, &["k".to_string()]).unwrap();
+        let (out_ref, _) = run_pipeline(&big, &desc_big, None, &[]).unwrap();
+        let (ExecOut::Rows(a), ExecOut::Rows(r)) = (out, out_ref) else {
+            panic!("expected rows");
+        };
+        assert_eq!(a, r);
+        assert_eq!(
+            a.col("k").unwrap(),
+            &Column::I64(vec![base + 2, base + 1, base])
+        );
+    }
+
+    #[test]
+    fn prefix_limit_gates_exactly() {
+        let sorted = |c: &str| c == "k";
+        let base = PipelineSpec {
+            limit: Some(8),
+            ..spec()
+        };
+        // Plain head(n): prefix regardless of markers.
+        assert_eq!(prefix_limit(&base, &sorted), Some(8));
+        // Ascending single-key top-k over the marked column: prefix.
+        let asc = PipelineSpec {
+            sort: vec![SortKey::asc("k")],
+            ..base.clone()
+        };
+        assert_eq!(prefix_limit(&asc, &sorted), Some(8));
+        // Descending, unmarked key, multi-key, predicates, aggregates,
+        // or the unpruned baseline: no bound.
+        let desc = PipelineSpec {
+            sort: vec![SortKey::desc("k")],
+            ..base.clone()
+        };
+        assert_eq!(prefix_limit(&desc, &sorted), None);
+        let unmarked = PipelineSpec {
+            sort: vec![SortKey::asc("v")],
+            ..base.clone()
+        };
+        assert_eq!(prefix_limit(&unmarked, &sorted), None);
+        let filtered = PipelineSpec {
+            predicate: Predicate::cmp("v", CmpOp::Gt, 0.0),
+            ..base.clone()
+        };
+        assert_eq!(prefix_limit(&filtered, &sorted), None);
+        let agg = PipelineSpec {
+            aggs: vec![Aggregate::new(AggFunc::Count, "v")],
+            ..base.clone()
+        };
+        assert_eq!(prefix_limit(&agg, &sorted), None);
+        let baseline = PipelineSpec {
+            zone_maps: false,
+            ..base.clone()
+        };
+        assert_eq!(prefix_limit(&baseline, &sorted), None);
+        let no_limit = PipelineSpec {
+            limit: None,
+            ..base
+        };
+        assert_eq!(prefix_limit(&no_limit, &sorted), None);
     }
 }

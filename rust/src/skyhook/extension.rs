@@ -159,9 +159,61 @@ pub fn decode_group_out(out: &[u8]) -> Result<Vec<(i64, AggState)>> {
     Ok(groups)
 }
 
-/// Decode a `skyhook.exec` result. `nkeys`/`naggs` come from the
-/// [`PipelineSpec`] the caller sent.
+/// Execution counters a `skyhook.exec` response carries back alongside
+/// its payload — the storage server's own account of the sortedness
+/// fast paths it took, so `QueryStats` can report prefix reads and
+/// short-circuited rows for pushdown exactly like for client-side
+/// execution (where the worker counts them itself).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecCounters {
+    /// Rows the kernel never charged for thanks to binary-searched run
+    /// boundaries on a sorted column.
+    pub rows_short_circuited: u64,
+    /// Did the handler serve the partial from a bounded prefix read?
+    pub prefix_read: bool,
+}
+
+/// Frame tag of a counter-carrying `skyhook.exec` response (payload tags
+/// are 0/1/2; unframed responses decode with zero counters).
+const EXEC_FRAME_TAG: u8 = 4;
+
+fn frame_exec_out(counters: ExecCounters, inner: Vec<u8>) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(inner.len() + 10);
+    w.u8(EXEC_FRAME_TAG);
+    w.u64(counters.rows_short_circuited);
+    w.u8(counters.prefix_read as u8);
+    w.raw(&inner);
+    w.finish()
+}
+
+/// Decode a `skyhook.exec` result (payload only; counters discarded).
+/// `nkeys`/`naggs` come from the [`PipelineSpec`] the caller sent.
 pub fn decode_exec_out(out: &[u8], nkeys: usize, naggs: usize) -> Result<ExecOut> {
+    decode_exec_out_full(out, nkeys, naggs).map(|(o, _)| o)
+}
+
+/// Decode a `skyhook.exec` result with its execution counters.
+pub fn decode_exec_out_full(
+    out: &[u8],
+    nkeys: usize,
+    naggs: usize,
+) -> Result<(ExecOut, ExecCounters)> {
+    if out.first() == Some(&EXEC_FRAME_TAG) {
+        let mut r = ByteReader::new(&out[1..]);
+        let counters = ExecCounters {
+            rows_short_circuited: r.u64()?,
+            prefix_read: r.u8()? != 0,
+        };
+        let inner = r.raw(r.remaining())?.to_vec();
+        return Ok((decode_exec_payload(&inner, nkeys, naggs)?, counters));
+    }
+    Ok((
+        decode_exec_payload(out, nkeys, naggs)?,
+        ExecCounters::default(),
+    ))
+}
+
+fn decode_exec_payload(out: &[u8], nkeys: usize, naggs: usize) -> Result<ExecOut> {
     let Some((&tag, rest)) = out.split_first() else {
         return Err(Error::Corrupt("empty exec output".into()));
     };
@@ -234,14 +286,20 @@ fn needed_union(pred: &Predicate, extra: &[String]) -> Vec<String> {
     v
 }
 
-/// Server-side zone-map check: if the object's stamped statistics prove
-/// `pred` matches zero rows, return the object's schema so the handler
-/// can answer without reading any object data. Absent, corrupt, or
-/// inconclusive zone maps return `None` (handler proceeds normally), so
-/// the check can only skip work, never change results.
-fn zone_map_prune(b: &mut dyn ClsBackend, pred: &Predicate) -> Option<TableSchema> {
-    let raw = b.getxattr(ZONE_MAP_XATTR)?;
-    let zm = ZoneMap::decode(&raw).ok()?;
+/// Decode the object's stamped zone map, if present and parseable. An
+/// unknown wire version decodes to `None` like a missing xattr — the
+/// advisory fast paths (pruning, sortedness) switch off, results never
+/// change.
+fn zone_map_of(b: &mut dyn ClsBackend) -> Option<ZoneMap> {
+    ZoneMap::decode(&b.getxattr(ZONE_MAP_XATTR)?).ok()
+}
+
+/// Zone-map pruning verdict: if the stamped statistics prove `pred`
+/// matches zero rows, return the object's schema so the handler can
+/// answer without reading any object data. Inconclusive maps return
+/// `None` (handler proceeds normally), so the check can only skip work,
+/// never change results.
+fn prune_verdict(zm: &ZoneMap, pred: &Predicate) -> Option<TableSchema> {
     // Error parity: a predicate that would fail evaluation (missing or
     // string-typed column) must fail identically, so never short-circuit
     // it — the normal path reports the error.
@@ -252,10 +310,17 @@ fn zone_map_prune(b: &mut dyn ClsBackend, pred: &Predicate) -> Option<TableSchem
         }
     }
     if zm.rows == 0 || pred.prune(&|c: &str| zm.value_range(c)) {
-        Some(zm.schema)
+        Some(zm.schema.clone())
     } else {
         None
     }
+}
+
+/// [`prune_verdict`] straight off the backend (the single-operator
+/// handlers' path; `skyhook.exec` decodes the map once and reuses it for
+/// sortedness too).
+fn zone_map_prune(b: &mut dyn ClsBackend, pred: &Predicate) -> Option<TableSchema> {
+    prune_verdict(&zone_map_of(b)?, pred)
 }
 
 /// The `skyhook.exec` short-circuit: synthesize the empty result of a
@@ -357,20 +422,41 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
     let exec_engine = engine.clone();
     r.register("skyhook", "exec", move |b, input| {
         let spec = PipelineSpec::decode(input)?;
-        if let Some(schema) = spec
-            .zone_maps
-            .then(|| zone_map_prune(b, &spec.predicate))
-            .flatten()
-        {
+        // Decode the stamped zone map once: it answers both "can anything
+        // here match?" (pruning) and "which columns are sorted?" (the
+        // prefix-read / sort-skip / early-stop fast paths). The unpruned
+        // baseline (`zone_maps = false`) ignores it entirely.
+        let zm = if spec.zone_maps { zone_map_of(b) } else { None };
+        if let Some(schema) = zm.as_ref().and_then(|zm| prune_verdict(zm, &spec.predicate)) {
             return exec_empty_result(&schema, &spec);
         }
+        let sorted_cols = zm.as_ref().map(ZoneMap::sorted_columns).unwrap_or_default();
         // One read covering every column the chain touches (the kernel's
-        // own definition of its read set).
+        // own definition of its read set) — bounded to the object's first
+        // k rows when the pipeline provably needs no more (head, or
+        // ascending top-k over a column the marker vouches for).
         let needed = exec_kernel::needed_columns(&spec);
-        let batch = read_needed(b, needed.as_deref())?;
-        let (out, work) = run_pipeline(&batch, &spec, exec_engine.as_deref())?;
+        let sorted = |c: &str| sorted_cols.iter().any(|s| s == c);
+        let (batch, prefix_read) = match exec_kernel::prefix_limit(&spec, &sorted) {
+            Some(k) => {
+                let prefix = b.header_prefix();
+                let (batch, _, bounded) = layout::read_projected_rows(
+                    &mut BackendRange(b),
+                    needed.as_deref(),
+                    prefix,
+                    k,
+                )?;
+                (batch, bounded)
+            }
+            None => (read_needed(b, needed.as_deref())?, false),
+        };
+        let (out, work) = run_pipeline(&batch, &spec, exec_engine.as_deref(), &sorted_cols)?;
         let prof = b.exec_profile();
         b.charge_cpu(work.server_seconds(&prof));
+        let counters = ExecCounters {
+            rows_short_circuited: work.rows_short_circuited,
+            prefix_read,
+        };
         let mut w = ByteWriter::new();
         match out {
             ExecOut::Aggs(states) => {
@@ -401,7 +487,7 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
                 w.raw(&payload);
             }
         }
-        Ok(w.finish())
+        Ok(frame_exec_out(counters, w.finish()))
     });
 
     // skyhook.agg — filter+aggregate on the server, return partials.
@@ -1094,6 +1180,64 @@ mod tests {
             ..exec_spec()
         };
         assert!(r.get("skyhook", "exec").unwrap()(&mut b, &unpruned.encode()).is_err());
+    }
+
+    #[test]
+    fn exec_serves_sorted_topk_as_bounded_prefix_read() {
+        use crate::skyhook::query::SortKey;
+        let r = registry();
+        // A clustered-style object: rows sorted by val.
+        let batch = gen::sensor_table(2000, 7).sort_by_column("val").unwrap();
+        let enc = encode_batch(&batch, Layout::Col);
+        let spec = PipelineSpec {
+            predicate: Predicate::True,
+            projection: Some(vec!["ts".to_string(), "val".to_string()]),
+            aggs: vec![],
+            keys: vec![],
+            sort: vec![SortKey::asc("val")],
+            limit: Some(5),
+            zone_maps: true,
+        };
+        // Without the stamped marker: full read, no prefix flag.
+        let mut plain = MemBackend::new(&enc);
+        let out = r.get("skyhook", "exec").unwrap()(&mut plain, &spec.encode()).unwrap();
+        let (ExecOut::Rows(want), c0) = decode_exec_out_full(&out, 0, 0).unwrap() else {
+            panic!("expected rows");
+        };
+        assert!(!c0.prefix_read);
+        // With it: the handler reads only a 5-row prefix of the needed
+        // columns, reports it, and returns the identical partial.
+        let mut stamped = MemBackend::new(&enc);
+        stamped.setxattr(ZONE_MAP_XATTR, &ZoneMap::from_batch(&batch).encode());
+        let out = r.get("skyhook", "exec").unwrap()(&mut stamped, &spec.encode()).unwrap();
+        let (ExecOut::Rows(got), c1) = decode_exec_out_full(&out, 0, 0).unwrap() else {
+            panic!("expected rows");
+        };
+        assert!(c1.prefix_read);
+        assert_eq!(got, want);
+        assert_eq!(got.nrows(), 5);
+        // A range filter over the sorted column reports short-circuited
+        // rows (and still matches the unmarked execution exactly).
+        let fspec = PipelineSpec {
+            predicate: Predicate::cmp("val", CmpOp::Lt, 30.0),
+            limit: None,
+            sort: vec![],
+            ..spec
+        };
+        let mut stamped = MemBackend::new(&enc);
+        stamped.setxattr(ZONE_MAP_XATTR, &ZoneMap::from_batch(&batch).encode());
+        let out = r.get("skyhook", "exec").unwrap()(&mut stamped, &fspec.encode()).unwrap();
+        let (ExecOut::Rows(got), cf) = decode_exec_out_full(&out, 0, 0).unwrap() else {
+            panic!("expected rows");
+        };
+        assert!(cf.rows_short_circuited > 0, "sorted range filter must early-stop");
+        let mut plain = MemBackend::new(&enc);
+        let out = r.get("skyhook", "exec").unwrap()(&mut plain, &fspec.encode()).unwrap();
+        let (ExecOut::Rows(want), cp) = decode_exec_out_full(&out, 0, 0).unwrap() else {
+            panic!("expected rows");
+        };
+        assert_eq!(cp.rows_short_circuited, 0);
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -164,6 +164,12 @@ pub struct SubQuery {
     /// False when the plan was built with pruning disabled, so the
     /// unpruned baseline does real reads end to end.
     pub zone_maps: bool,
+    /// Columns whose sortedness marker is stamped in this object's
+    /// row-group stats (empty when pruning is disabled). The client-side
+    /// worker feeds them to the shared kernel so it exploits the sorted
+    /// layout exactly like the storage-side handler (which reads the
+    /// same markers from the object's zone-map xattr).
+    pub sorted_cols: Vec<String>,
 }
 
 /// A planned query.
@@ -205,6 +211,16 @@ pub struct QueryPlan {
     /// Estimated network bytes of the *chosen* per-object assignment
     /// (compare against `QueryStats::bytes_moved` after execution).
     pub est_bytes: u64,
+    /// The column this dataset was clustered by at write time (from the
+    /// dataset metadata), if any — rendered by [`QueryPlan::explain`].
+    pub clustered: Option<String>,
+    /// Surviving sub-queries whose partial degenerates into a bounded
+    /// prefix read (head / ascending top-k over a sorted column).
+    pub prefix_subqueries: usize,
+    /// Sorted column the filter can early-stop on (binary-searched run
+    /// boundaries on its AND-spine range conjunct), when one applies to
+    /// at least one surviving sub-query.
+    pub earlystop: Option<String>,
 }
 
 impl QueryPlan {
@@ -235,6 +251,25 @@ impl QueryPlan {
             fmt_secs(self.cost.client_s),
             crate::util::bytes::fmt_size(self.est_bytes),
         );
+        if let Some(col) = &self.clustered {
+            let mut exploits = Vec::new();
+            if self.prefix_subqueries > 0 {
+                exploits.push(format!(
+                    "prefix-read partials on {}/{} sub-queries",
+                    self.prefix_subqueries,
+                    self.subqueries.len()
+                ));
+            }
+            if let Some(c) = &self.earlystop {
+                exploits.push(format!("filter early-stop on {c:?}"));
+            }
+            let _ = writeln!(
+                out,
+                "  clustered by {col:?}{}{}",
+                if exploits.is_empty() { "" } else { ": " },
+                exploits.join(", "),
+            );
+        }
         for s in &self.stages {
             let side = match s.mode {
                 ExecMode::Pushdown => "server",
@@ -332,6 +367,7 @@ pub fn plan_calibrated(
         schema,
         layout,
         row_groups,
+        cluster_by,
         ..
     } = meta
     else {
@@ -426,6 +462,15 @@ pub fn plan_calibrated(
     // Cost-based offload choice, per object: estimate both sides of the
     // boundary from the zone-map statistics and pick the cheaper one
     // (force_mode pins every assignment instead).
+    // Sortedness exploitation (the read-side payoff of clustered
+    // ingest): a bounded prefix fetch needs every column the query
+    // touches to be fixed-width on a columnar object, matching exactly
+    // when `layout::read_projected_rows` can bound the read.
+    let prefix_fetchable = *layout == Layout::Col
+        && query
+            .needed_columns(&all)
+            .iter()
+            .all(|c| dtype_of(c) != Some(DType::Str));
     let mut subqueries = Vec::with_capacity(survivors.len());
     let mut totals = QueryCost::default();
     let mut io_total = QueryCost::default();
@@ -434,10 +479,56 @@ pub fn plan_calibrated(
     let mut est_bytes = 0u64;
     let mut n_push = 0usize;
     let mut n_client = 0usize;
+    let mut prefix_subqueries = 0usize;
+    let mut earlystop: Option<String> = None;
     for (object, i) in survivors {
         let rg = &row_groups[i];
+        // Columns whose sortedness marker this row group stamps — what
+        // the kernel may exploit on either side (empty in the unpruned
+        // baseline so its measurements stay honest).
+        let sorted_cols: Vec<String> = if prune {
+            schema
+                .columns
+                .iter()
+                .zip(&rg.stats)
+                .filter(|(_, s)| s.sorted)
+                .map(|(c, _)| c.name.clone())
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let sorted = |c: &str| sorted_cols.iter().any(|s| s == c);
         let mut profile = shape.profile(query, schema, *layout, rg);
         profile.objects_per_osd = objects_per_osd;
+        // Price the sorted fast paths the execution side will take:
+        // bounded prefix reads for head / ascending top-k, a skipped
+        // per-object sort for single-key sorts over the sorted column,
+        // and binary-searched filter windows on range conjuncts.
+        if let Some(k) = super::exec_kernel::prefix_limit(&pipeline, &sorted) {
+            if prefix_fetchable {
+                profile.apply_sorted_prefix(k, rg.bytes.min(shape.header_prefix));
+                prefix_subqueries += 1;
+            }
+        }
+        if matches!(pipeline.sort.as_slice(), [key] if sorted(&key.col)) {
+            profile.sort_rows = 0;
+        }
+        let range = |col: &str| -> Option<ValueRange> {
+            schema
+                .col_index(col)
+                .ok()
+                .and_then(|ci| rg.stats.get(ci))
+                .and_then(|s| s.value_range())
+        };
+        let (wf, wcol) = window_frac(&query.predicate, &sorted, &range);
+        if wf < 1.0 {
+            let naggs = profile.agg_values / profile.rows.max(1);
+            profile.rows = (profile.rows as f64 * wf).ceil() as u64;
+            profile.agg_values = profile.rows * naggs;
+            if earlystop.is_none() {
+                earlystop = wcol;
+            }
+        }
         // Each component once; their sum is the sub-query estimate
         // (exactly what `CostParams::estimate` computes).
         let io = cost.io_cost(&profile);
@@ -471,6 +562,7 @@ pub fn plan_calibrated(
             layout: *layout,
             keep_values,
             zone_maps: prune,
+            sorted_cols,
         });
     }
     // Overall mode: forced, else the majority assignment (ties — and a
@@ -482,6 +574,20 @@ pub fn plan_calibrated(
     });
     let mut stages = build_stages(query, mode, push_topk);
     annotate_stage_costs(&mut stages, &io_total, &cpu_total, &reduce_total);
+    // Mark the stages the sorted layout rewrites, so EXPLAIN shows where
+    // the physical design pays off.
+    for s in stages.iter_mut() {
+        if prefix_subqueries > 0
+            && (s.op.starts_with("partial top-") || s.op.starts_with("partial head"))
+        {
+            s.op.push_str(" (prefix read)");
+        }
+        if s.op.starts_with("filter ") {
+            if let Some(c) = &earlystop {
+                let _ = write!(s.op, " (early-stop on {c})");
+            }
+        }
+    }
     Ok(QueryPlan {
         query: query.clone(),
         schema: schema.clone(),
@@ -495,6 +601,9 @@ pub fn plan_calibrated(
         assignment: (n_push, n_client),
         cost: totals,
         est_bytes,
+        clustered: (!cluster_by.is_empty()).then(|| cluster_by.clone()),
+        prefix_subqueries,
+        earlystop,
     })
 }
 
@@ -671,6 +780,50 @@ impl QueryShape {
             sort_rows,
             objects_per_osd: 0.0,
         }
+    }
+}
+
+/// Estimated fraction of a row group's rows inside the filter window the
+/// kernel binary-searches when a sortedness marker backs an AND-spine
+/// range conjunct (`exec_kernel::sorted_window`'s cost-model mirror):
+/// the uniform-range share of the sorted column's matching run. Returns
+/// the fraction and the first bounding column (for EXPLAIN). `Or`/`Not`
+/// shapes and unsorted columns contribute the full window; intersecting
+/// conjuncts take the tighter bound (an over-estimate of the true
+/// intersection — safe for pricing).
+fn window_frac(
+    pred: &Predicate,
+    sorted: &dyn Fn(&str) -> bool,
+    range: &dyn Fn(&str) -> Option<ValueRange>,
+) -> (f64, Option<String>) {
+    use super::query::CmpOp;
+    match pred {
+        Predicate::And(a, b) => {
+            let (fa, ca) = window_frac(a, sorted, range);
+            let (fb, cb) = window_frac(b, sorted, range);
+            if fa <= fb {
+                (fa, ca.or(cb))
+            } else {
+                (fb, cb.or(ca))
+            }
+        }
+        Predicate::Cmp { col, op, value } if sorted(col) => {
+            let Some(r) = range(col) else {
+                return (1.0, None);
+            };
+            if !r.has_values() || r.hi <= r.lo {
+                return (1.0, None);
+            }
+            let frac = ((*value - r.lo) / (r.hi - r.lo)).clamp(0.0, 1.0);
+            let f = match op {
+                CmpOp::Lt | CmpOp::Le => frac,
+                CmpOp::Gt | CmpOp::Ge => 1.0 - frac,
+                CmpOp::Eq => 0.01,
+                CmpOp::Ne => 1.0,
+            };
+            (f, (f < 1.0).then(|| col.clone()))
+        }
+        _ => (1.0, None),
     }
 }
 
@@ -861,6 +1014,7 @@ mod tests {
                 })
                 .collect(),
             localities: vec![String::new(); groups],
+            cluster_by: String::new(),
         }
     }
 
@@ -878,16 +1032,19 @@ mod tests {
                             min: (i * 10) as f64,
                             max: (i * 10 + 9) as f64,
                             nan_count: 0,
+                            sorted: true,
                         },
                         ColumnStats {
                             min: 5.0,
                             max: 5.0,
                             nan_count: 0,
+                            sorted: true,
                         },
                     ],
                 })
                 .collect(),
             localities: vec![String::new(); groups],
+            cluster_by: String::new(),
         }
     }
 
@@ -925,16 +1082,19 @@ mod tests {
                             min: 0.0,
                             max: rows as f64,
                             nan_count: 0,
+                            sorted: false,
                         },
                         ColumnStats {
                             min: 0.0,
                             max: 100.0,
                             nan_count: 0,
+                            sorted: false,
                         },
                     ],
                 })
                 .collect(),
             localities: vec![String::new(); groups],
+            cluster_by: String::new(),
         }
     }
 
@@ -1068,6 +1228,93 @@ mod tests {
         // osds = 0 (unknown) stays uncontended, like plan()'s default.
         let p0 = plan_costed(&q, &m, None, true, &CostParams::default()).unwrap();
         assert!(p0.assignment.0 > p0.assignment.1);
+    }
+
+    /// Clustered-style meta: per-group disjoint val ranges, val marked
+    /// sorted in every group, dataset stamped `cluster_by = "val"`.
+    fn meta_clustered(groups: usize, rows: u64, bytes: u64) -> DatasetMeta {
+        DatasetMeta::Table {
+            schema: TableSchema::new(&[("ts", DType::I64), ("val", DType::F32)]),
+            layout: Layout::Col,
+            row_groups: (0..groups as u64)
+                .map(|i| RowGroupMeta {
+                    rows,
+                    bytes,
+                    stats: vec![
+                        ColumnStats::absent(),
+                        ColumnStats {
+                            min: (i * 100) as f64,
+                            max: (i * 100 + 99) as f64,
+                            nan_count: 0,
+                            sorted: true,
+                        },
+                    ],
+                })
+                .collect(),
+            localities: vec![String::new(); groups],
+            cluster_by: "val".into(),
+        }
+    }
+
+    #[test]
+    fn sorted_layout_prices_prefix_reads_and_explains_them() {
+        let m = meta_clustered(6, 40_000, 1 << 20);
+        // Ascending top-k over the clustered column: every sub-query is
+        // priced as a bounded prefix read, its sorted_cols carry the
+        // marker, and EXPLAIN names both the column and the stage.
+        let q = Query::scan("ds").select(&["ts"]).top_k("val", false, 16);
+        let p = plan(&q, &m, None).unwrap();
+        assert_eq!(p.clustered.as_deref(), Some("val"));
+        assert_eq!(p.prefix_subqueries, 6);
+        assert!(p
+            .subqueries
+            .iter()
+            .all(|s| s.sorted_cols == vec!["val".to_string()]));
+        let e = p.explain();
+        assert!(e.contains("clustered by \"val\""), "{e}");
+        assert!(e.contains("(prefix read)"), "{e}");
+        // The bounded estimate is far below the same plan with markers
+        // stripped (same meta, sorted = false).
+        let mut unmarked = meta_clustered(6, 40_000, 1 << 20);
+        let DatasetMeta::Table { row_groups, cluster_by, .. } = &mut unmarked else {
+            unreachable!()
+        };
+        cluster_by.clear();
+        for rg in row_groups.iter_mut() {
+            for s in rg.stats.iter_mut() {
+                s.sorted = false;
+            }
+        }
+        let pu = plan(&q, &unmarked, None).unwrap();
+        assert_eq!(pu.prefix_subqueries, 0);
+        assert!(pu.clustered.is_none());
+        assert!(
+            p.cost.pushdown_s < pu.cost.pushdown_s && p.cost.client_s < pu.cost.client_s,
+            "prefix pricing must undercut the unmarked plan"
+        );
+        assert!(!pu.explain().contains("clustered by"), "{}", pu.explain());
+        // Descending top-k: no prefix bound, but the per-object sort is
+        // priced away (sort-skip), so pushdown still gets cheaper than
+        // the unmarked plan.
+        let qd = Query::scan("ds").select(&["ts"]).top_k("val", true, 16);
+        let pd = plan(&qd, &m, None).unwrap();
+        let pdu = plan(&qd, &unmarked, None).unwrap();
+        assert_eq!(pd.prefix_subqueries, 0);
+        assert!(pd.cost.pushdown_s < pdu.cost.pushdown_s);
+        // Range predicates over the sorted column mark the early-stop
+        // and shrink the priced row window.
+        let qr = Query::scan("ds").filter(Predicate::cmp("val", CmpOp::Lt, 150.0));
+        let pr = plan(&qr, &m, None).unwrap();
+        assert_eq!(pr.earlystop.as_deref(), Some("val"));
+        assert!(pr.explain().contains("early-stop on val"), "{}", pr.explain());
+        // The unpruned baseline exploits nothing.
+        let pb = plan_opts(&q, &m, None, false).unwrap();
+        assert_eq!(pb.prefix_subqueries, 0);
+        assert!(pb.subqueries.iter().all(|s| s.sorted_cols.is_empty()));
+        // A bare sort (merge-side) over the sorted column keeps its
+        // merge-side stage; sort keys still validate.
+        let qs = Query::scan("ds").sort_by(&[SortKey::asc("val")]);
+        assert!(plan(&qs, &m, None).is_ok());
     }
 
     #[test]
@@ -1211,15 +1458,18 @@ mod tests {
                         min: 0.0,
                         max: 9.0,
                         nan_count: 0,
+                        sorted: true,
                     },
                     ColumnStats {
                         min: 5.0,
                         max: 5.0,
                         nan_count: 2,
+                        sorted: false,
                     },
                 ],
             }],
             localities: vec![String::new()],
+            cluster_by: String::new(),
         };
         // Range predicates prune despite the NaNs…
         let q = Query::scan("ds").filter(Predicate::cmp("val", CmpOp::Gt, 5.0));
@@ -1247,6 +1497,7 @@ mod tests {
                 },
             ],
             localities: vec![String::new(); 2],
+            cluster_by: String::new(),
         };
         let p = plan(&Query::scan("ds"), &m, None).unwrap();
         assert_eq!(p.subqueries.len(), 1);

@@ -22,8 +22,8 @@
 //! worker's timeline so client-side execution pays the CPU the paper
 //! wants to offload.
 
-use super::exec_kernel::{run_pipeline, ExecOut};
-use super::extension::decode_exec_out;
+use super::exec_kernel::{self, run_pipeline, ExecOut};
+use super::extension::decode_exec_out_full;
 use super::logical::PipelineSpec;
 use super::plan::{ExecMode, SubQuery};
 use super::query::AggState;
@@ -57,6 +57,14 @@ pub struct SubResult {
     /// by the query's sort keys (pushed-down top-k), so the driver can
     /// k-way merge it without re-sorting.
     pub presorted: bool,
+    /// Did this sub-query degenerate into a bounded prefix read (the
+    /// sort-aware clustered layout's payoff: head/ascending-top-k served
+    /// from the object's first k rows)?
+    pub prefix_reads: u64,
+    /// Rows the kernel's sorted-run binary search spared the filter
+    /// (counted wherever the kernel ran; pushdown ships it back in the
+    /// response frame).
+    pub rows_short_circuited: u64,
     /// Virtual completion time.
     pub finish: f64,
 }
@@ -91,7 +99,7 @@ fn execute_pushdown(
     let input = spec.encode();
     let t = cluster.call(at, &sub.object, "skyhook", "exec", &input)?;
     let bytes = (input.len() + t.value.len()) as u64;
-    let out = decode_exec_out(&t.value, spec.keys.len(), spec.aggs.len())?;
+    let (out, counters) = decode_exec_out_full(&t.value, spec.keys.len(), spec.aggs.len())?;
     let finish = worker_cpu.submit(
         t.finish,
         cluster.cost().exec.decode_time(t.value.len() as u64),
@@ -107,6 +115,8 @@ fn execute_pushdown(
         reads_coalesced: 0,
         // A pushed-down partial top-k arrives sorted by the spec's keys.
         presorted: !spec.sort.is_empty(),
+        prefix_reads: counters.prefix_read as u64,
+        rows_short_circuited: counters.rows_short_circuited,
         finish,
     })
 }
@@ -164,11 +174,37 @@ fn execute_client_side(
         fetched: 0,
     };
     let mut coalesced = 0u64;
+    let mut prefix_reads = 0u64;
+    // Bounded prefix fetch: when the planner's sortedness markers prove
+    // the pipeline needs only the object's first k rows (head, or
+    // ascending top-k over the clustered column), fetch exactly that row
+    // prefix of the needed columns instead of whole extents — the
+    // clustered layout's bytes-moved payoff on the client path.
+    let sorted = |c: &str| sub.sorted_cols.iter().any(|s| s == c);
+    let plim = exec_kernel::prefix_limit(spec, &sorted);
     let batch = if sub.layout == Layout::Col {
-        let (batch, rstats) =
-            layout::read_projected_stats(&mut src, needed.as_deref(), cluster.header_prefix())?;
-        coalesced = rstats.reads_coalesced as u64;
-        batch
+        match plim {
+            Some(k) => {
+                let (batch, rstats, bounded) = layout::read_projected_rows(
+                    &mut src,
+                    needed.as_deref(),
+                    cluster.header_prefix(),
+                    k,
+                )?;
+                coalesced = rstats.reads_coalesced as u64;
+                prefix_reads = bounded as u64;
+                batch
+            }
+            None => {
+                let (batch, rstats) = layout::read_projected_stats(
+                    &mut src,
+                    needed.as_deref(),
+                    cluster.header_prefix(),
+                )?;
+                coalesced = rstats.reads_coalesced as u64;
+                batch
+            }
+        }
     } else {
         // Row objects decode whole; trim to the pipeline's column set
         // up front so the kernel's filter doesn't copy unneeded columns
@@ -188,7 +224,7 @@ fn execute_client_side(
     // plans (sort/limit/top-k, grouped multi-aggregates) execute here
     // exactly as they do in the storage servers, so partials are
     // bit-identical and — like pushdown — already sorted/truncated.
-    let (out, work) = run_pipeline(&batch, spec, None)?;
+    let (out, work) = run_pipeline(&batch, spec, None, &sub.sorted_cols)?;
     // Client pays decode + per-row scan CPU for what it fetched, plus
     // the movable kernel work (aggregation, per-object sort) it just
     // performed instead of the storage server — all priced by the
@@ -208,6 +244,8 @@ fn execute_client_side(
         // The kernel pre-sorts the partial whenever the spec carries
         // sort keys, on either side of the boundary.
         presorted: !spec.sort.is_empty(),
+        prefix_reads,
+        rows_short_circuited: work.rows_short_circuited,
         finish,
     })
 }
@@ -285,6 +323,7 @@ mod tests {
             layout: Layout::Col,
             keep_values: false,
             zone_maps: true,
+            sorted_cols: vec![],
         };
         let sub_c = SubQuery {
             mode: ExecMode::ClientSide,
@@ -323,6 +362,7 @@ mod tests {
             layout: Layout::Col,
             keep_values: false,
             zone_maps: true,
+            sorted_cols: vec![],
         };
         let rp = exec(&c, &q, &mk(ExecMode::Pushdown), &cpu).unwrap();
         let rc = exec(&c, &q, &mk(ExecMode::ClientSide), &cpu).unwrap();
@@ -354,6 +394,7 @@ mod tests {
             layout: Layout::Col,
             keep_values: false,
             zone_maps: true,
+            sorted_cols: vec![],
         };
         let rp = exec(&c, &q, &mk(ExecMode::Pushdown), &cpu).unwrap();
         let rc = exec(&c, &q, &mk(ExecMode::ClientSide), &cpu).unwrap();
@@ -385,6 +426,7 @@ mod tests {
             layout: Layout::Col,
             keep_values: false,
             zone_maps: true,
+            sorted_cols: vec![],
         };
         let rp = exec(&c, &q, &mk(ExecMode::Pushdown), &cpu).unwrap();
         let rc = exec(&c, &q, &mk(ExecMode::ClientSide), &cpu).unwrap();
@@ -414,6 +456,7 @@ mod tests {
             layout: Layout::Col,
             keep_values: false,
             zone_maps: true,
+            sorted_cols: vec![],
         };
         let r = exec(&c, &q, &sub, &cpu).unwrap();
         let SubOutput::Rows(rows) = r.output else {
@@ -461,6 +504,7 @@ mod tests {
             layout: Layout::Col,
             keep_values: true,
             zone_maps: true,
+            sorted_cols: vec![],
         };
         let r = exec(&c, &q, &sub, &cpu).unwrap();
         let SubOutput::Aggs(states) = r.output else {
@@ -510,6 +554,7 @@ mod tests {
                 layout: Layout::Col,
                 keep_values: false,
                 zone_maps: true,
+                sorted_cols: vec![],
             };
             exec(&c, &q, &sub, &cpu).unwrap()
         };
@@ -545,6 +590,44 @@ mod tests {
     }
 
     #[test]
+    fn client_side_prefix_fetch_bounds_the_read() {
+        // A clustered-style object (rows sorted by val) large enough to
+        // outgrow the header prefix: with the planner-stamped marker the
+        // ascending top-k fetches only a k-row prefix of the needed
+        // columns; without it the same sub-query fetches whole extents.
+        // Results are bit-identical either way.
+        let c = cluster();
+        let b = gen::sensor_table(10_000, 42).sort_by_column("val").unwrap();
+        c.write_object(0.0, "ts0", &encode_batch(&b, Layout::Col))
+            .unwrap();
+        let q = Query::scan("ds").select(&["ts"]).top_k("val", false, 8);
+        let cpu = Timeline::new();
+        let mk = |sorted_cols: Vec<String>| SubQuery {
+            object: "ts0".into(),
+            mode: ExecMode::ClientSide,
+            layout: Layout::Col,
+            keep_values: false,
+            zone_maps: true,
+            sorted_cols,
+        };
+        let bounded = exec(&c, &q, &mk(vec!["val".into()]), &cpu).unwrap();
+        let full = exec(&c, &q, &mk(vec![]), &cpu).unwrap();
+        assert_eq!(bounded.prefix_reads, 1);
+        assert_eq!(full.prefix_reads, 0);
+        assert!(
+            bounded.bytes_moved < full.bytes_moved,
+            "prefix {} vs full {}",
+            bounded.bytes_moved,
+            full.bytes_moved
+        );
+        let (SubOutput::Rows(a), SubOutput::Rows(c2)) = (bounded.output, full.output) else {
+            panic!("expected rows");
+        };
+        assert_eq!(a, c2);
+        assert_eq!(a.nrows(), 8);
+    }
+
+    #[test]
     fn missing_object_errors() {
         let c = cluster();
         let q = Query::scan("ds");
@@ -555,6 +638,7 @@ mod tests {
             layout: Layout::Col,
             keep_values: false,
             zone_maps: true,
+            sorted_cols: vec![],
         };
         assert!(exec(&c, &q, &sub, &cpu).is_err());
     }

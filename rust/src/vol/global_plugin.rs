@@ -442,6 +442,7 @@ mod tests {
             layout: crate::dataset::Layout::Row,
             row_groups: vec![],
             localities: vec![],
+            cluster_by: String::new(),
         };
         metadata::save_meta(&c, 0.0, "tab", &meta, false).unwrap();
         let mut f = VolFile::open(Box::new(ForwardingBackend::new(c)));

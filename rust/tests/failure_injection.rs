@@ -143,6 +143,88 @@ fn degraded_reads_are_counted() {
 }
 
 #[test]
+fn osd_death_mid_clustered_ingest_keeps_sortedness_markers_consistent() {
+    // Kill an OSD halfway through a clustered streaming ingest. With
+    // replication the stream must complete, and — the clustered-layout
+    // invariant — every surviving object must carry a *self-consistent*
+    // sortedness marker: the stamp and the bytes are produced from the
+    // same in-memory sorted batch, so a crash can lose objects but never
+    // leave a stale "sorted" stamp over unsorted data. The debug
+    // re-scan (`metadata::verify_sortedness`) proves it, and the
+    // clustered dataset still answers queries identically to a direct
+    // computation.
+    use skyhook_map::coordinator::{IngestConfig, Ingestor};
+    use skyhook_map::dataset::metadata;
+    use skyhook_map::dataset::table::Column;
+    use skyhook_map::util::pool::ThreadPool;
+    use std::sync::Arc;
+
+    let s = stack(5, 2);
+    let full = gen::sensor_table(20_000, 71);
+    let pool = Arc::new(ThreadPool::new(4));
+    let mut ing = Ingestor::open(
+        s.cluster.clone(),
+        pool,
+        "cstream",
+        &full.schema,
+        IngestConfig {
+            target_object_bytes: 24 * 1024,
+            cluster_by: Some("val".into()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut lo = 0;
+    let mut killed = false;
+    while lo < full.nrows() {
+        let hi = (lo + 1500).min(full.nrows());
+        ing.push(&full.slice(lo, hi).unwrap()).unwrap();
+        if !killed && lo >= full.nrows() / 2 {
+            s.cluster.set_down(2, true); // die mid-ingest
+            killed = true;
+        }
+        lo = hi;
+    }
+    let rep = ing.finish().unwrap();
+    assert!(rep.objects > 4);
+    assert_eq!(rep.rows, 20_000);
+    // Recovery invariant: no surviving object carries a marker its bytes
+    // do not satisfy, and metadata agrees with every xattr.
+    assert_eq!(
+        metadata::verify_sortedness(&s.cluster, "cstream").unwrap(),
+        Vec::<String>::new()
+    );
+    let (meta, _) = metadata::load_meta(&s.cluster, 0.0, "cstream").unwrap();
+    assert_eq!(meta.cluster_column(), Some("val"));
+    // The clustered dataset still answers exactly: count and an
+    // ascending top-1 over the clustered column (the global min).
+    let r = s
+        .driver
+        .execute(&Query::scan("cstream").aggregate(AggFunc::Count, "val"), None)
+        .unwrap();
+    assert_eq!(r.aggregates[0], 20_000.0);
+    let t = s
+        .driver
+        .execute(&Query::scan("cstream").select(&["val"]).sort("val").limit(1), None)
+        .unwrap();
+    let Column::F32(got) = t.rows.unwrap().col("val").unwrap().clone() else {
+        unreachable!()
+    };
+    let Column::F32(all) = full.col("val").unwrap() else {
+        unreachable!()
+    };
+    let want = all.iter().copied().fold(f32::INFINITY, f32::min);
+    assert_eq!(got[0], want);
+    // Heal and re-verify: rebalance must not disturb the markers either.
+    s.cluster.set_down(2, false);
+    s.cluster.rebalance().unwrap();
+    assert_eq!(
+        metadata::verify_sortedness(&s.cluster, "cstream").unwrap(),
+        Vec::<String>::new()
+    );
+}
+
+#[test]
 fn corruption_is_detected_not_silent() {
     // Write an object, corrupt the stored batch payload, and verify the
     // checksum turns it into an error instead of wrong data.

@@ -268,6 +268,87 @@ fn router_full_surface() {
 }
 
 #[test]
+fn cli_cluster_by_ingest_explain_query_end_to_end() {
+    // Drive `--cluster-by` through the CLI surface itself (the binary is
+    // a thin wrapper over `cli::run`): one `query` invocation hydrates
+    // (ingest), EXPLAINs, and executes an ascending top-k over the
+    // clustered column. The explain must name the clustered column and
+    // its prefix-read stage; the stats footer's counters must move in
+    // the expected direction versus the unclustered invocation.
+    use skyhook_map::cli;
+    fn args(a: &[&str]) -> Vec<String> {
+        a.iter().map(|s| s.to_string()).collect()
+    }
+    /// Pull `N <label>` out of the `-- …` stats footer.
+    fn counter(out: &str, label: &str) -> u64 {
+        let footer = out.lines().find(|l| l.starts_with("-- ")).expect("stats footer");
+        let idx = footer.find(label).unwrap_or_else(|| panic!("no {label:?} in {footer}"));
+        footer[..idx]
+            .rsplit(|c: char| c == ',' || c == '(')
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap_or_else(|_| panic!("unparseable {label:?} in {footer}"))
+    }
+
+    let base = [
+        "query", "--dataset", "cb", "--select", "ts", "--sort", "val", "--limit", "10",
+        "--explain", "--osds", "4",
+    ];
+    let mut clustered_args = args(&base);
+    clustered_args.extend(args(&["--cluster-by", "val"]));
+    let clustered = cli::run(&clustered_args).unwrap();
+    let unclustered = cli::run(&args(&base)).unwrap();
+
+    // EXPLAIN names the clustered column and the prefix-read stage.
+    assert!(clustered.contains("clustered by \"val\""), "{clustered}");
+    assert!(clustered.contains("(prefix read)"), "{clustered}");
+    assert!(!unclustered.contains("clustered by"), "{unclustered}");
+    // Counters move the right way: the clustered run serves its top-k
+    // from bounded prefix reads, the unclustered one cannot.
+    let pc = counter(&clustered, "prefix reads");
+    let pu = counter(&unclustered, "prefix reads");
+    assert!(pc > 0, "clustered prefix reads in {clustered}");
+    assert!(pc > pu, "prefix reads: clustered {pc} vs unclustered {pu}");
+    // Both answer the same top-10 row set (the table is deterministic;
+    // compared order-insensitively since equal sort keys may tie-break
+    // by physical order, which is exactly what clustering changes).
+    let rows = |out: &str| -> Vec<&str> {
+        let mut v: Vec<&str> = out
+            .lines()
+            .skip_while(|l| !l.starts_with("ts"))
+            .skip(1)
+            .take(10)
+            .collect();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(rows(&clustered), rows(&unclustered));
+
+    // A range filter over the clustered column: zone maps sharpen, so
+    // the clustered run prunes objects (bytes skipped) and early-stops
+    // rows; unclustered prunes nothing on the same filter.
+    let fbase = [
+        "query", "--dataset", "cb", "--filter", "val < 35", "--agg", "count:val", "--osds", "4",
+    ];
+    let mut fclustered_args = args(&fbase);
+    fclustered_args.extend(args(&["--cluster-by", "val"]));
+    let fclustered = cli::run(&fclustered_args).unwrap();
+    let funclustered = cli::run(&args(&fbase)).unwrap();
+    assert_eq!(
+        fclustered.lines().find(|l| l.starts_with("count(val)")),
+        funclustered.lines().find(|l| l.starts_with("count(val)")),
+        "clustered and unclustered counts must agree"
+    );
+    let pruned_c = counter(&fclustered, "pruned");
+    let pruned_u = counter(&funclustered, "pruned");
+    assert!(pruned_c > pruned_u, "pruned: clustered {pruned_c} vs {pruned_u}");
+    let sc = counter(&fclustered, "rows short-circuited");
+    assert!(sc > 0, "clustered range filter must short-circuit rows: {fclustered}");
+}
+
+#[test]
 fn pjrt_kernels_on_the_request_path() {
     if !std::path::Path::new("artifacts/filter_agg.hlo.txt").exists() {
         eprintln!("skipping: run `make artifacts` first");

@@ -981,6 +981,378 @@ fn forced_client_chained_plans_equal_forced_server() {
     );
 }
 
+/// Property seed honoring `SKYHOOK_PROP_SEED`: unset → the fixed default
+/// (deterministic CI pass); `random` → entropy-derived, printed so a CI
+/// failure names the seed to reproduce with; a number → that seed.
+fn prop_seed(default: u64) -> u64 {
+    match std::env::var("SKYHOOK_PROP_SEED") {
+        Ok(s) if s == "random" => {
+            let seed = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_nanos() as u64)
+                .unwrap_or(default);
+            println!("SKYHOOK_PROP_SEED={seed} (re-run with this value to reproduce)");
+            seed
+        }
+        Ok(s) => s.parse().unwrap_or(default),
+        Err(_) => default,
+    }
+}
+
+/// Like [`random_numeric_batch`] but with *shuffled* (still unique) ts,
+/// so no column is naturally sorted — write-time clustering is then the
+/// only source of sortedness markers, which is exactly what the
+/// clustered-vs-unclustered properties need to isolate.
+fn shuffled_numeric_batch(rng: &mut Xoshiro256, rows: usize, with_nan: bool) -> Batch {
+    let mut b = random_numeric_batch(rng, rows, with_nan);
+    let Column::I64(ts) = &mut b.columns[0] else {
+        unreachable!()
+    };
+    for i in (1..ts.len()).rev() {
+        ts.swap(i, rng.range(0, i));
+    }
+    b
+}
+
+#[test]
+fn clustered_and_unclustered_ingests_agree_on_random_plans() {
+    // The headline equivalence property of sort-aware clustered ingest:
+    // the same random table ingested twice — clustered by a random
+    // column vs unclustered — must answer every accepted plan
+    // identically under all three forced modes. Row results compare
+    // bit-exactly where the plan fixes a total order (sorts always carry
+    // the unique ts tiebreaker) and as canonicalized row sets otherwise
+    // (physical row order is exactly what clustering changes);
+    // aggregates compare to fp tolerance (partials fold the same value
+    // multiset in a different order). Pruning on range predicates over
+    // the clustered column must never get *worse* by clustering.
+    use skyhook_map::config::{ClusterConfig, DriverConfig};
+    use skyhook_map::dataset::partition::PartitionSpec;
+    use skyhook_map::skyhook::{register_skyhook_class, sort_rows, Driver, ExecMode, Query};
+    use skyhook_map::store::{ClassRegistry, Cluster};
+
+    fn driver() -> Driver {
+        let mut reg = ClassRegistry::with_builtins();
+        register_skyhook_class(&mut reg, None);
+        let cluster = Cluster::new(
+            &ClusterConfig {
+                osds: 3,
+                replicas: 1,
+                ..Default::default()
+            },
+            reg,
+        );
+        Driver::new(
+            cluster,
+            DriverConfig {
+                workers: 2,
+                ..Default::default()
+            },
+        )
+    }
+
+    /// A random plan whose results are comparable across physical row
+    /// orders: projections keep ts, sorted shapes end in the unique ts
+    /// key (total order), unsorted row results are canonicalized by the
+    /// caller, aggregates/groups are order-free by construction.
+    fn random_comparable_plan(r: &mut Xoshiro256, dataset: &str) -> Query {
+        let q = Query::scan(dataset).filter(random_numeric_pred(r, 3));
+        match r.range(0, 3) {
+            0 | 1 => {
+                let mut q = if r.chance(0.5) {
+                    q.select(&["ts", "val"])
+                } else {
+                    q.select(&["ts"])
+                };
+                let key = ["val", "ts", "sensor"][r.range(0, 2)];
+                match r.range(0, 2) {
+                    0 => {} // unsorted: canonicalized before comparison
+                    1 => {
+                        q = if r.chance(0.5) { q.sort(key) } else { q.sort_desc(key) };
+                        q = q.sort("ts");
+                    }
+                    _ => {
+                        q = if r.chance(0.5) { q.sort(key) } else { q.sort_desc(key) };
+                        q = q.sort("ts").limit(r.range(0, 30));
+                    }
+                }
+                q
+            }
+            2 => {
+                let funcs = [
+                    AggFunc::Count,
+                    AggFunc::Sum,
+                    AggFunc::Min,
+                    AggFunc::Max,
+                    AggFunc::Mean,
+                    AggFunc::Var,
+                    AggFunc::Median,
+                ];
+                let mut q = q;
+                for _ in 0..r.range(1, 2) {
+                    q = q.aggregate(funcs[r.range(0, 6)], "val");
+                }
+                q
+            }
+            _ => {
+                let mut q = q
+                    .group("sensor")
+                    .aggregate(AggFunc::Count, "val")
+                    .aggregate(AggFunc::Sum, "val");
+                if r.chance(0.5) {
+                    q = q.having(Predicate::cmp(
+                        "count(val)",
+                        CmpOp::Gt,
+                        r.f64() * 10.0,
+                    ));
+                }
+                q
+            }
+        }
+    }
+
+    /// Canonical row order for comparing row sets across physical
+    /// layouts: the unique ts column is a total key.
+    fn canon(b: &Batch) -> Batch {
+        sort_rows(b, &[SortKey::asc("ts")]).expect("projections keep ts")
+    }
+
+    let feq = |a: f64, b: f64| {
+        a == b || (a.is_nan() && b.is_nan()) || (a - b).abs() <= 1e-9 * (1.0 + a.abs())
+    };
+
+    forall_explain(
+        prop_seed(17),
+        10,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Xoshiro256::new(seed);
+            let rows = rng.range(0, 300);
+            let batch = shuffled_numeric_batch(&mut rng, rows, true);
+            let ccol = ["ts", "sensor", "val"][rng.range(0, 2)];
+            let d = driver();
+            d.write_table("u", &batch, Layout::Col, &PartitionSpec::with_target(2048), None)
+                .map_err(|e| e.to_string())?;
+            d.write_table(
+                "c",
+                &batch,
+                Layout::Col,
+                &PartitionSpec::with_target(2048).cluster_by(ccol),
+                None,
+            )
+            .map_err(|e| e.to_string())?;
+
+            for _ in 0..4 {
+                let qu = random_comparable_plan(&mut rng.clone(), "u");
+                let qc = random_comparable_plan(&mut rng, "c");
+                let ordered = !qu.sort_keys.is_empty();
+                for mode in [None, Some(ExecMode::Pushdown), Some(ExecMode::ClientSide)] {
+                    let (ru, rc) = match (d.execute(&qu, mode), d.execute(&qc, mode)) {
+                        // Consistent failure is agreement (same matching
+                        // multiset ⇒ same empty-set errors).
+                        (Err(_), Err(_)) => continue,
+                        (Ok(a), Ok(b)) => (a, b),
+                        _ => {
+                            return Err(format!(
+                                "error-ness diverges clustered-vs-not for {qu:?} ({mode:?})"
+                            ))
+                        }
+                    };
+                    match (&ru.rows, &rc.rows) {
+                        (None, None) => {}
+                        (Some(a), Some(b)) => {
+                            let (a, b) = if ordered {
+                                (a.clone(), b.clone())
+                            } else {
+                                (canon(a), canon(b))
+                            };
+                            if !batches_bit_equal(&a, &b) {
+                                return Err(format!(
+                                    "rows diverge clustered-vs-not for {qu:?} ({mode:?})"
+                                ));
+                            }
+                        }
+                        _ => return Err(format!("row presence diverges for {qu:?}")),
+                    }
+                    if ru.aggregates.len() != rc.aggregates.len()
+                        || !ru
+                            .aggregates
+                            .iter()
+                            .zip(&rc.aggregates)
+                            .all(|(x, y)| feq(*x, *y))
+                    {
+                        return Err(format!(
+                            "aggregates diverge clustered-vs-not for {qu:?} ({mode:?}): \
+                             {:?} vs {:?}",
+                            ru.aggregates, rc.aggregates
+                        ));
+                    }
+                    match (&ru.groups, &rc.groups) {
+                        (None, None) => {}
+                        (Some(a), Some(b)) => {
+                            if a.len() != b.len()
+                                || !a.iter().zip(b).all(|(x, y)| {
+                                    x.0 == y.0
+                                        && x.1.len() == y.1.len()
+                                        && x.1.iter().zip(&y.1).all(|(p, q)| feq(*p, *q))
+                                })
+                            {
+                                return Err(format!(
+                                    "groups diverge clustered-vs-not for {qu:?} ({mode:?})"
+                                ));
+                            }
+                        }
+                        _ => return Err(format!("group presence diverges for {qu:?}")),
+                    }
+                }
+            }
+
+            // Range predicates over the clustered column: clustering must
+            // never prune fewer objects (range partitioning can only
+            // sharpen the zone maps), and results stay identical.
+            let lo = match ccol {
+                "ts" => 0.0,
+                "sensor" => 0.0,
+                _ => -50.0,
+            };
+            let hi = match ccol {
+                "ts" => rows as f64,
+                "sensor" => 7.0,
+                _ => 150.0,
+            };
+            let t = lo + (hi - lo) * (0.25 + 0.5 * rng.f64());
+            let op = if rng.chance(0.5) { CmpOp::Lt } else { CmpOp::Ge };
+            let pred = Predicate::cmp(ccol, op, t);
+            let qa = Query::scan("u")
+                .filter(pred.clone())
+                .aggregate(AggFunc::Count, "val");
+            let qb = Query::scan("c").filter(pred).aggregate(AggFunc::Count, "val");
+            let ru = d.execute(&qa, None).map_err(|e| e.to_string())?;
+            let rc = d.execute(&qb, None).map_err(|e| e.to_string())?;
+            if ru.aggregates[0] != rc.aggregates[0] {
+                return Err(format!(
+                    "range count diverges: {} vs {}",
+                    ru.aggregates[0], rc.aggregates[0]
+                ));
+            }
+            if rc.stats.objects_pruned < ru.stats.objects_pruned {
+                return Err(format!(
+                    "clustering made pruning worse on {ccol}: {} < {}",
+                    rc.stats.objects_pruned, ru.stats.objects_pruned
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn clustered_layout_prefix_reads_and_pruning_beat_unclustered() {
+    // Deterministic companion to the equivalence property: on a NaN-free
+    // shuffled table clustered by val, ascending top-k over val must be
+    // served by bounded prefix reads (and not on the unclustered twin),
+    // range filters over val must short-circuit rows and prune strictly
+    // more objects, and every answer must match the unclustered one.
+    use skyhook_map::config::{ClusterConfig, DriverConfig};
+    use skyhook_map::dataset::partition::PartitionSpec;
+    use skyhook_map::skyhook::{register_skyhook_class, Driver, ExecMode, Query};
+    use skyhook_map::store::{ClassRegistry, Cluster};
+
+    let mut reg = ClassRegistry::with_builtins();
+    register_skyhook_class(&mut reg, None);
+    let cluster = Cluster::new(
+        &ClusterConfig {
+            osds: 3,
+            replicas: 1,
+            ..Default::default()
+        },
+        reg,
+    );
+    let d = Driver::new(
+        cluster,
+        DriverConfig {
+            workers: 2,
+            ..Default::default()
+        },
+    );
+    // Objects must outgrow the 64 KiB header prefix, or every read is
+    // served whole from the prefix and a bounded fetch cannot save
+    // bytes: ~40k rows × 20 B at 128 KiB per object ≈ 6 objects.
+    let mut rng = Xoshiro256::new(23);
+    let batch = shuffled_numeric_batch(&mut rng, 40_000, false);
+    d.write_table(
+        "u",
+        &batch,
+        Layout::Col,
+        &PartitionSpec::with_target(128 * 1024),
+        None,
+    )
+    .unwrap();
+    d.write_table(
+        "c",
+        &batch,
+        Layout::Col,
+        &PartitionSpec::with_target(128 * 1024).cluster_by("val"),
+        None,
+    )
+    .unwrap();
+
+    // Ascending top-k over the clustered column, no predicate: every
+    // clustered sub-query degenerates into a bounded prefix read.
+    let topk = |ds: &str| Query::scan(ds).select(&["ts"]).sort("val").limit(10);
+    let rc = d.execute(&topk("c"), None).unwrap();
+    let ru = d.execute(&topk("u"), None).unwrap();
+    assert!(rc.stats.prefix_reads > 0, "clustered top-k must prefix-read");
+    assert_eq!(
+        rc.stats.prefix_reads as usize, rc.stats.objects,
+        "every surviving clustered sub-query should be a prefix read"
+    );
+    assert!(
+        ru.stats.prefix_reads <= rc.stats.prefix_reads,
+        "unclustered must not out-prefix clustered"
+    );
+    assert!(batches_bit_equal(&rc.rows.unwrap(), &ru.rows.unwrap()));
+    // Forced client-side, the bounded fetch moves strictly fewer bytes.
+    let cc = d.execute(&topk("c"), Some(ExecMode::ClientSide)).unwrap();
+    let cu = d.execute(&topk("u"), Some(ExecMode::ClientSide)).unwrap();
+    assert!(
+        cc.stats.bytes_moved < cu.stats.bytes_moved,
+        "clustered {} vs unclustered {}",
+        cc.stats.bytes_moved,
+        cu.stats.bytes_moved
+    );
+
+    // Range filter over the clustered column: strictly more pruning,
+    // short-circuited rows on the boundary object, identical counts.
+    let range = |ds: &str| {
+        Query::scan(ds)
+            .filter(Predicate::cmp("val", CmpOp::Lt, 40.0))
+            .aggregate(AggFunc::Count, "val")
+    };
+    let rc = d.execute(&range("c"), None).unwrap();
+    let ru = d.execute(&range("u"), None).unwrap();
+    assert_eq!(rc.aggregates[0], ru.aggregates[0]);
+    assert!(
+        rc.stats.objects_pruned > ru.stats.objects_pruned,
+        "clustered pruning {} must beat unclustered {}",
+        rc.stats.objects_pruned,
+        ru.stats.objects_pruned
+    );
+    assert!(
+        rc.stats.rows_short_circuited > 0,
+        "boundary object must early-stop: {:?}",
+        rc.stats
+    );
+    assert_eq!(ru.stats.rows_short_circuited, 0, "no markers, no early-stop");
+
+    // EXPLAIN names the clustered column and the prefix-read stage.
+    let e = d.explain(&topk("c"), None).unwrap();
+    assert!(e.contains("clustered by \"val\""), "{e}");
+    assert!(e.contains("prefix read"), "{e}");
+    let e = d.explain(&topk("u"), None).unwrap();
+    assert!(!e.contains("clustered by"), "{e}");
+}
+
 #[test]
 fn vol_forwarding_matches_reference_buffer() {
     // Model-based test: the forwarding VOL backend must behave exactly

@@ -3,13 +3,15 @@
 # cost-model (E6-cost) benches and emit perf snapshots, so successive
 # PRs have a trajectory to compare against:
 #
-#   BENCH_pushdown.json  — E2 + E3 (zone-map pruning, partial reads)
-#   BENCH_compose.json   — E5 (chained-pipeline offload vs client-side:
-#                          wall time + the bytes-moved tables)
-#   BENCH_costmodel.json — E6-cost (selectivity × object-size sweep of
-#                          the planner's cost-based offload choice)
+#   BENCH_pushdown.json   — E2 + E3 (zone-map pruning, partial reads)
+#   BENCH_compose.json    — E5 (chained-pipeline offload vs client-side:
+#                           wall time + the bytes-moved tables)
+#   BENCH_costmodel.json  — E6-cost (selectivity × object-size sweep of
+#                           the planner's cost-based offload choice)
+#   BENCH_physdesign.json — E4 (row-vs-col layout + the clustered-ingest
+#                           sweep: prefix reads, pruning, bytes moved)
 #
-# Usage: scripts/bench.sh [pushdown.json [compose.json [costmodel.json]]]
+# Usage: scripts/bench.sh [pushdown.json [compose.json [costmodel.json [physdesign.json]]]]
 #
 # Each snapshot records wall time per bench plus the raw table output
 # (which includes bytes_moved / objects_pruned / sim_seconds columns).
@@ -19,6 +21,7 @@ cd "$(dirname "$0")/.."
 out_json=${1:-BENCH_pushdown.json}
 compose_json=${2:-BENCH_compose.json}
 costmodel_json=${3:-BENCH_costmodel.json}
+physdesign_json=${4:-BENCH_physdesign.json}
 workdir=$(mktemp -d)
 trap 'rm -rf "$workdir"' EXIT
 
@@ -43,6 +46,7 @@ run_bench e2_pushdown || status=1
 run_bench e3_object_size || status=1
 run_bench e5_composability || status=1
 run_bench e6_cost_model || status=1
+run_bench e4_physical_design || status=1
 
 snapshot() {
     local out=$1
@@ -84,5 +88,6 @@ PY
 snapshot "$out_json" e2_pushdown e3_object_size
 snapshot "$compose_json" e5_composability
 snapshot "$costmodel_json" e6_cost_model
+snapshot "$physdesign_json" e4_physical_design
 
 exit $status
