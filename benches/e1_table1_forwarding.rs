@@ -109,5 +109,61 @@ fn main() {
     };
     println!("  serial client term a = {fit_a:.2}s (paper fit: 13.45s)");
     assert!(monotone && (1.8..=2.9).contains(&overhead) && offset3);
+
+    // ---- E1b: compiled-kernel estimator ablation ------------------------
+    // Table 1's lesson is that server-side work only pays once it is
+    // cheap enough; the compiled execution tier is the same argument one
+    // level up. Price an eligible filter+aggregate plan with the tier
+    // off vs on: the estimated pushdown seconds must drop strictly
+    // (min-of-tiers takes the chunked rates) while the client estimate
+    // is untouched — the estimator-level half of the E2d ablation.
+    {
+        use skyhook_map::config::Config;
+        use skyhook_map::dataset::metadata;
+        use skyhook_map::dataset::partition::PartitionSpec;
+        use skyhook_map::dataset::table::gen;
+        use skyhook_map::dataset::Layout;
+        use skyhook_map::launch::Stack;
+        use skyhook_map::skyhook::{plan_costed, AggFunc, CmpOp, Predicate, Query};
+
+        let cfg = Config::from_text("[cluster]\nosds = 6\nreplicas = 1\n").unwrap();
+        let stack = Stack::build(&cfg).unwrap();
+        stack
+            .driver
+            .write_table(
+                "t",
+                &gen::sensor_table(200_000, 17),
+                Layout::Col,
+                &PartitionSpec::with_target(512 * 1024),
+                None,
+            )
+            .unwrap();
+        let q = Query::scan("t")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 50.0))
+            .aggregate(AggFunc::Mean, "val");
+        let (meta, _) = metadata::load_meta(stack.driver.cluster(), 0.0, "t").unwrap();
+        let mut est = Vec::new();
+        for compiled in [false, true] {
+            let mut cost = stack.driver.cluster().cost().clone();
+            cost.exec.compiled_tier = compiled;
+            let p = plan_costed(&q, &meta, None, true, &cost).unwrap();
+            est.push((p.cost.pushdown_s, p.cost.client_s));
+            println!(
+                "  est {} tier: pushdown {:.4}s  client {:.4}s",
+                if compiled { "compiled" } else { "scalar  " },
+                p.cost.pushdown_s,
+                p.cost.client_s
+            );
+        }
+        assert!(
+            est[1].0 < est[0].0,
+            "compiled tier must price pushdown strictly cheaper: {est:?}"
+        );
+        assert!(
+            (est[1].1 - est[0].1).abs() < 1e-12,
+            "the tier must not move the client estimate: {est:?}"
+        );
+    }
+
     println!("\ne1_table1_forwarding OK");
 }

@@ -220,5 +220,101 @@ fn main() {
         &prune_rows,
     );
 
+    // ---- E2d: compiled-kernel vs scalar pushdown (tier ablation) --------
+    // Two identical clusters, one with the compiled execution tier
+    // enabled in its cost profile (what `Stack::build` does when the
+    // PJRT engine loads). Eligible filter+aggregate plans must get
+    // strictly cheaper simulated pushdown on the compiled tier — the
+    // chunked pass replaces the scalar per-row/per-value rates — while
+    // answers stay bit-identical.
+    {
+        use skyhook_map::config::{ClusterConfig, DriverConfig};
+        use skyhook_map::skyhook::{register_skyhook_class, scalar_forced, Driver};
+        use skyhook_map::store::{ClassRegistry, Cluster};
+
+        let tier_driver = |compiled: bool| {
+            let mut reg = ClassRegistry::with_builtins();
+            register_skyhook_class(&mut reg, None);
+            let ccfg = ClusterConfig {
+                osds: 6,
+                replicas: 1,
+                ..Default::default()
+            };
+            let mut cost = ccfg.profile.params();
+            if compiled {
+                cost.exec = cost.exec.with_compiled_tier();
+            }
+            let d = Driver::new(
+                Cluster::with_cost(&ccfg, reg, cost),
+                DriverConfig {
+                    workers: 6,
+                    ..Default::default()
+                },
+            );
+            d.write_table(
+                "t",
+                &batch,
+                Layout::Col,
+                &PartitionSpec::with_target(256 * 1024),
+                None,
+            )
+            .unwrap();
+            d
+        };
+        let scalar = tier_driver(false);
+        let compiled = tier_driver(true);
+        let mut tier_rows = Vec::new();
+        for (label, thr) in cases {
+            let q = Query::scan("t")
+                .filter(Predicate::cmp("val", CmpOp::Gt, thr))
+                .aggregate(AggFunc::Mean, "val")
+                .aggregate(AggFunc::Count, "val");
+            scalar.reset_time();
+            let rs = scalar.execute(&q, Some(ExecMode::Pushdown)).unwrap();
+            compiled.reset_time();
+            let rc = compiled.execute(&q, Some(ExecMode::Pushdown)).unwrap();
+            // The tier is invisible in the answer, to the bit.
+            for (a, b) in rc.aggregates.iter().zip(&rs.aggregates) {
+                assert_eq!(a.to_bits(), b.to_bits(), "tier changed the answer: {a} vs {b}");
+            }
+            if !scalar_forced() {
+                assert!(
+                    rc.stats.compiled_chunks > 0,
+                    "{label}: compiled tier never engaged"
+                );
+                assert!(
+                    rc.stats.sim_seconds < rs.stats.sim_seconds,
+                    "{label}: compiled pushdown must be strictly cheaper \
+                     ({} vs scalar {})",
+                    rc.stats.sim_seconds,
+                    rs.stats.sim_seconds
+                );
+            }
+            tier_rows.push(vec![
+                label.to_string(),
+                format!("{:.4}", rs.stats.sim_seconds),
+                format!("{:.4}", rc.stats.sim_seconds),
+                format!("{:.1}x", rs.stats.sim_seconds / rc.stats.sim_seconds),
+                rc.stats.compiled_chunks.to_string(),
+                rc.stats.compiled_rows.to_string(),
+            ]);
+        }
+        table(
+            "E2d: mean/count(val) where val>thr, forced pushdown — scalar vs compiled tier",
+            &[
+                "selectivity",
+                "scalar sim s",
+                "compiled sim s",
+                "speedup",
+                "chunks",
+                "rows compiled",
+            ],
+            &tier_rows,
+        );
+        if scalar_forced() {
+            println!("(SKYHOOK_FORCE_SCALAR set: tier asserts skipped, both columns scalar)");
+        }
+    }
+
     println!("\ne2_pushdown OK");
 }

@@ -228,6 +228,47 @@ fn main() {
             assignments[0].1 <= assignments[1].1 && assignments[1].1 <= assignments[2].1,
             "client share must grow with contention: {assignments:?}"
         );
+
+        // ---- E6-kernel: the compiled tier moves the offload boundary ----
+        // The saturated (1-OSD) aggregate cell: with the scalar kernel,
+        // the serialized extension CPU makes the plain read path win and
+        // every object goes client-side; enable the compiled tier and
+        // the same cell flips back to pushdown because the chunked pass
+        // is cheap enough to pay even at full contention. Deterministic
+        // (plan_costed, no simulation noise), so the flip asserts hard.
+        let qk = Query::scan("t")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 20.0))
+            .aggregate(skyhook_map::skyhook::AggFunc::Mean, "val");
+        let mut kernel_rows = Vec::new();
+        let mut flip = Vec::new();
+        for compiled in [false, true] {
+            let mut cost = CostParams {
+                osds: 1,
+                ..stack.driver.cluster().cost().clone()
+            };
+            cost.exec.compiled_tier = compiled;
+            let p = plan_costed(&qk, &meta, None, true, &cost).unwrap();
+            flip.push(p.assignment);
+            kernel_rows.push(vec![
+                (if compiled { "compiled" } else { "scalar" }).to_string(),
+                format!("{}p/{}c", p.assignment.0, p.assignment.1),
+                format!("{:.4}", p.cost.pushdown_s),
+                format!("{:.4}", p.cost.client_s),
+            ]);
+        }
+        table(
+            "E6-kernel: mean(val) where val>20 at 1 OSD — tier flips the assignment",
+            &["kernel tier", "assignment", "est push s", "est client s"],
+            &kernel_rows,
+        );
+        assert!(
+            flip[0].1 > flip[0].0,
+            "scalar tier at 1 OSD should assign client-side: {flip:?}"
+        );
+        assert!(
+            flip[1].0 > flip[1].1,
+            "compiled tier should flip the cell to pushdown: {flip:?}"
+        );
     }
 
     table(

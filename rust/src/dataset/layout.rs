@@ -279,6 +279,22 @@ pub trait RangeSource {
 /// (swept against object size in the E3 bench).
 pub const HEADER_PREFIX: usize = 64 * 1024;
 
+/// Schema-derived header-prefix auto-tune: the prefix read only has to
+/// cover the table header — magic/version, the encoded schema, the
+/// per-column extent directory — so its useful size scales with the
+/// column count, not with the one-size [`HEADER_PREFIX`] guess. Budget
+/// 64 bytes per column (schema entry plus the 12-byte directory entry,
+/// with slack for long names), round up to a 4 KiB device block, and
+/// never exceed the default (which stays the better choice for wide
+/// schemas, where the extra covered extents avoid ranged reads). The
+/// planner applies this when the `cluster.header_prefix` knob is at its
+/// default; an explicitly configured knob overrides it.
+pub fn auto_header_prefix(ncols: usize) -> usize {
+    const PER_COL: usize = 64;
+    let header = 64 + ncols.saturating_mul(PER_COL);
+    header.next_multiple_of(4096).min(HEADER_PREFIX)
+}
+
 /// I/O accounting of one projected read (feeds `QueryStats`).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ProjReadStats {
@@ -1013,6 +1029,25 @@ mod tests {
             read_projected_rows(&mut src, Some(&needed), HEADER_PREFIX, 5).unwrap();
         assert!(!bounded);
         assert_eq!(got.nrows(), 4000);
+    }
+
+    #[test]
+    fn auto_header_prefix_scales_with_schema_width() {
+        // Narrow schemas get one device block; the prefix grows with the
+        // column count and caps at the one-size default.
+        assert_eq!(auto_header_prefix(2), 4096);
+        assert!(auto_header_prefix(500) > auto_header_prefix(2));
+        assert_eq!(auto_header_prefix(10_000), HEADER_PREFIX);
+        // The derived prefix always covers the real header, so the
+        // single prefix read still parses the extent directory.
+        let b = sample();
+        let enc = encode_batch(&b, Layout::Col);
+        let h = parse_header(&enc).unwrap();
+        assert!(h.payload_start <= auto_header_prefix(b.ncols()));
+        let wide = gen::wide_table(8, 64, 3);
+        let enc = encode_batch(&wide, Layout::Col);
+        let h = parse_header(&enc).unwrap();
+        assert!(h.payload_start <= auto_header_prefix(wide.ncols()));
     }
 
     #[test]

@@ -6,7 +6,7 @@
 use crate::config::Config;
 use crate::coordinator::Router;
 use crate::error::Result;
-use crate::runtime::PjrtEngine;
+use crate::runtime::{BatchedCompute, PjrtEngine};
 use crate::skyhook::{register_skyhook_class, ChunkCompute, Driver};
 use crate::store::{ClassRegistry, Cluster};
 use crate::vol::register_hdf5_class;
@@ -24,7 +24,11 @@ pub struct Stack {
 impl Stack {
     /// Build from config. If `cfg.driver.use_pjrt`, the AOT artifacts are
     /// loaded and the Skyhook-Extension's aggregate hot path runs on the
-    /// PJRT kernels; otherwise the native Rust path is used.
+    /// PJRT kernels — wrapped in a [`BatchedCompute`] so concurrent OSD
+    /// handlers share dispatches — and the cluster's cost profile turns
+    /// the compiled execution tier on, so the planner prices pushdown
+    /// with the tier the servers will actually pick. Otherwise the
+    /// native Rust path is used and the tier stays dormant.
     pub fn build(cfg: &Config) -> Result<Stack> {
         let engine = if cfg.driver.use_pjrt {
             Some(PjrtEngine::load(&cfg.artifacts_dir)?)
@@ -37,9 +41,15 @@ impl Stack {
             &mut registry,
             engine
                 .clone()
-                .map(|e| e as Arc<dyn ChunkCompute>),
+                .map(|e| Arc::new(BatchedCompute::new(e)) as Arc<dyn ChunkCompute>),
         );
-        let cluster = Cluster::new(&cfg.cluster, registry);
+        let cluster = if engine.is_some() {
+            let mut cost = cfg.cluster.profile.params();
+            cost.exec = cost.exec.with_compiled_tier();
+            Cluster::with_cost(&cfg.cluster, registry, cost)
+        } else {
+            Cluster::new(&cfg.cluster, registry)
+        };
         let driver = Arc::new(Driver::new(Arc::clone(&cluster), cfg.driver.clone()));
         let router = Router::new(Arc::clone(&driver), cfg.driver.write_credits);
         Ok(Stack {

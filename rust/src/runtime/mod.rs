@@ -4,4 +4,6 @@
 
 pub mod pjrt;
 
-pub use pjrt::{empty_moments, merge_moments, EngineStats, Moments, PjrtEngine, COLS, ROWS};
+pub use pjrt::{
+    empty_moments, merge_moments, BatchedCompute, EngineStats, Moments, PjrtEngine, COLS, ROWS,
+};

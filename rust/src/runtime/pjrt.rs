@@ -11,6 +11,7 @@
 //! [`COLS`] columns into one (ROWS, COLS) kernel launch (see
 //! `coordinator::batcher` for the policy layer).
 
+use crate::coordinator::batcher::{BatchPolicy, BatchStats, Batcher};
 use crate::error::{Error, Result};
 use crate::skyhook::ChunkCompute;
 use std::collections::HashMap;
@@ -213,6 +214,61 @@ impl Drop for PjrtEngine {
 impl ChunkCompute for PjrtEngine {
     fn masked_moments(&self, values: &[f32], mask: &[bool]) -> Result<[f64; 5]> {
         self.moments(values, mask)
+    }
+
+    fn masked_moments_multi(&self, cols: &[&[f32]], mask: &[bool]) -> Result<Vec<[f64; 5]>> {
+        self.moments_multi(cols, mask)
+    }
+}
+
+/// [`ChunkCompute`] adapter that funnels moment requests through the
+/// dynamic [`Batcher`] in front of the engine's owner thread, so
+/// concurrent sub-queries amortize dispatch over one queue drain.
+///
+/// Each submitted item is a whole multi-column request; within an item
+/// `moments_multi` already packs up to [`COLS`] columns per kernel
+/// launch. Items are *not* fused across sub-queries — the `stats`
+/// executable shares one mask across its matrix, and different
+/// sub-queries carry different masks — so the batcher amortizes queue
+/// dispatch and channel round-trips, not launches.
+pub struct BatchedCompute {
+    batcher: Arc<Batcher<MomentsReq, Result<Vec<Moments>>>>,
+}
+
+type MomentsReq = (Vec<Vec<f32>>, Vec<bool>);
+
+impl BatchedCompute {
+    pub fn new(engine: Arc<PjrtEngine>) -> Self {
+        let batcher = Batcher::new(BatchPolicy::default(), move |reqs: Vec<MomentsReq>| {
+            reqs.into_iter()
+                .map(|(cols, mask)| {
+                    let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+                    engine.moments_multi(&refs, &mask)
+                })
+                .collect()
+        });
+        Self { batcher }
+    }
+
+    /// Batching counters (batches flushed, items submitted, full batches).
+    pub fn batch_stats(&self) -> BatchStats {
+        self.batcher.stats()
+    }
+}
+
+impl ChunkCompute for BatchedCompute {
+    fn masked_moments(&self, values: &[f32], mask: &[bool]) -> Result<[f64; 5]> {
+        let out = self
+            .batcher
+            .submit((vec![values.to_vec()], mask.to_vec()))?;
+        out.into_iter()
+            .next()
+            .ok_or_else(|| Error::Runtime("empty moments response".into()))
+    }
+
+    fn masked_moments_multi(&self, cols: &[&[f32]], mask: &[bool]) -> Result<Vec<[f64; 5]>> {
+        self.batcher
+            .submit((cols.iter().map(|c| c.to_vec()).collect(), mask.to_vec()))
     }
 }
 
@@ -652,6 +708,25 @@ mod tests {
             .chunk_pipeline(&vec![0.0; ROWS * COLS], COLS, 0.0, &vec![true; ROWS])
             .is_err());
         assert!(e.transform(&[0.0; 3], true).is_err());
+    }
+
+    #[test]
+    fn batched_compute_matches_direct_engine() {
+        let e = require_engine!();
+        let batched = BatchedCompute::new(Arc::clone(&e));
+        let a: Vec<f32> = (0..700).map(|i| (i as f32) * 0.25).collect();
+        let b: Vec<f32> = (0..700).map(|i| 350.0 - i as f32).collect();
+        let mask: Vec<bool> = (0..700).map(|i| i % 5 != 0).collect();
+        let direct = e.moments_multi(&[&a, &b], &mask).unwrap();
+        let via_multi = batched.masked_moments_multi(&[&a, &b], &mask).unwrap();
+        assert_eq!(via_multi, direct);
+        let via_single = batched.masked_moments(&a, &mask).unwrap();
+        assert_eq!(via_single, direct[0]);
+        let s = batched.batch_stats();
+        assert_eq!(s.items, 2);
+        assert!(s.batches >= 1);
+        // Errors propagate through the batcher unchanged.
+        assert!(batched.masked_moments(&a, &mask[..10]).is_err());
     }
 
     #[test]

@@ -20,9 +20,13 @@
 /// ([`CostParams::estimate`]) all read the same struct, so a custom
 /// profile moves the simulation *and* the estimates in lockstep — cost
 /// drift between them is structurally impossible on the native paths.
-/// (The one modeled-but-not-charged case: a PJRT compute engine takes
-/// over the scalar f32 aggregate hot spot as *offloaded* compute, so
-/// the estimator's `val_agg` pricing is an upper bound there.)
+/// The compiled execution tier is priced the same way: the kernel counts
+/// its chunks/rows/values and both the charges and the estimates apply
+/// the `compiled_*` rates below, with the same min-of-tiers selection
+/// rule on both sides. (The one modeled-but-not-charged case: on the
+/// *scalar* tier, a PJRT compute engine takes over the f32 aggregate hot
+/// spot as *offloaded* compute, so the estimator's `val_agg` pricing is
+/// an upper bound there.)
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ExecProfile {
     /// Per-row CPU cost of predicate evaluation in the storage-side
@@ -45,6 +49,32 @@ pub struct ExecProfile {
     /// Client-side per-row CPU for predicate/aggregate evaluation when a
     /// sub-query runs client-side (seconds).
     pub client_row_cost_s: f64,
+    /// Is the storage-side **compiled execution tier** enabled? When set,
+    /// the extension runs eligible pipelines (conjunctive numeric
+    /// range/eq predicates feeding algebraic scalar aggregates — see
+    /// `skyhook::exec_kernel::compiled_eligible`) batch-at-a-time over
+    /// fixed [`CHUNK_ROWS`]-row chunks and charges the compiled rates
+    /// below, and the estimator prices pushdown with whichever tier the
+    /// server would pick. Off by default: every profile without the tier
+    /// prices and charges exactly as before. `Stack::build` turns it on
+    /// when the PJRT engine loads; benches/tests toggle it directly.
+    ///
+    /// [`CHUNK_ROWS`]: crate::skyhook::exec_kernel::CHUNK_ROWS
+    pub compiled_tier: bool,
+    /// Per-row predicate cost of the compiled tier (seconds) — the
+    /// vectorized chunk kernel evaluates the mask branch-free, so this is
+    /// well below [`ExecProfile::row_pred_cost_s`].
+    pub compiled_row_pred_cost_s: f64,
+    /// Per-value aggregate-update cost of the compiled tier (seconds).
+    pub compiled_val_agg_cost_s: f64,
+    /// Fixed per-chunk launch overhead of the compiled tier (seconds):
+    /// kernel dispatch + buffer staging per [`CHUNK_ROWS`]-row chunk.
+    /// This is what makes the compiled tier a *loss* on tiny inputs and
+    /// why the estimator takes the min of the two tiers instead of
+    /// assuming compiled always wins.
+    ///
+    /// [`CHUNK_ROWS`]: crate::skyhook::exec_kernel::CHUNK_ROWS
+    pub compiled_chunk_launch_s: f64,
 }
 
 // The default execution rates — each constant is defined here, once,
@@ -56,6 +86,11 @@ const SORT_ROW_COST: f64 = 8e-9;
 const RESULT_ENC_COST: f64 = 1e-9;
 const CLIENT_DECODE_BW: f64 = 2.0e9;
 const CLIENT_ROW_COST: f64 = 12e-9;
+// Compiled-tier rates: ~5x cheaper per row and ~4x per value than the
+// scalar loop, paid for by a fixed launch overhead per 16k-row chunk.
+const COMPILED_ROW_PRED_COST: f64 = 2e-9;
+const COMPILED_VAL_AGG_COST: f64 = 1e-9;
+const COMPILED_CHUNK_LAUNCH: f64 = 20e-6;
 
 impl Default for ExecProfile {
     fn default() -> Self {
@@ -66,11 +101,50 @@ impl Default for ExecProfile {
             result_enc_cost_s: RESULT_ENC_COST,
             client_decode_bw: CLIENT_DECODE_BW,
             client_row_cost_s: CLIENT_ROW_COST,
+            compiled_tier: false,
+            compiled_row_pred_cost_s: COMPILED_ROW_PRED_COST,
+            compiled_val_agg_cost_s: COMPILED_VAL_AGG_COST,
+            compiled_chunk_launch_s: COMPILED_CHUNK_LAUNCH,
         }
     }
 }
 
 impl ExecProfile {
+    /// This profile with the compiled execution tier enabled (builder
+    /// form for benches and ablation tests).
+    pub fn with_compiled_tier(mut self) -> Self {
+        self.compiled_tier = true;
+        self
+    }
+
+    /// Chunks the compiled tier launches to cover `rows` rows — the same
+    /// `ceil(rows / CHUNK_ROWS)` the kernel counts, so the estimator's
+    /// launch-overhead term and the simulated charge cannot drift.
+    pub fn compiled_chunks(rows: u64) -> u64 {
+        rows.div_ceil(crate::skyhook::exec_kernel::CHUNK_ROWS as u64)
+    }
+
+    /// Storage-side CPU seconds for an eligible pipeline on the
+    /// **compiled** tier: cheap per-row mask + per-value update rates
+    /// plus the per-chunk launch overhead.
+    pub fn compiled_seconds(&self, rows: u64, agg_values: u64) -> f64 {
+        rows as f64 * self.compiled_row_pred_cost_s
+            + agg_values as f64 * self.compiled_val_agg_cost_s
+            + Self::compiled_chunks(rows) as f64 * self.compiled_chunk_launch_s
+    }
+
+    /// Would a storage server pick the compiled tier for an eligible
+    /// pipeline of `rows` rows and `agg_values` value updates? The one
+    /// tier-selection comparison, shared by the executor
+    /// (`run_pipeline`'s `Auto` tier) and the estimator's min-of-tiers
+    /// pricing, so the tier the planner prices is the tier the server
+    /// runs.
+    pub fn compiled_wins(&self, rows: u64, agg_values: u64) -> bool {
+        self.compiled_tier
+            && self.compiled_seconds(rows, agg_values)
+                <= rows as f64 * self.row_pred_cost_s + agg_values as f64 * self.val_agg_cost_s
+    }
+
     /// Client-side decode time for `bytes` fetched over the network.
     pub fn decode_time(&self, bytes: u64) -> f64 {
         bytes as f64 / self.client_decode_bw
@@ -256,12 +330,30 @@ impl CostParams {
     /// queue factor only on the storage side; each side adds its own
     /// per-row scan rate. Mirrors exactly what the shared execution
     /// kernel charges (`skyhook::exec_kernel::KernelWork`).
+    ///
+    /// When the sub-query's pipeline is
+    /// [compiled-eligible](AccessProfile::compiled_eligible) and the
+    /// profile enables the compiled tier, the storage side is priced
+    /// with **whichever tier the server would actually pick** — the min
+    /// of the scalar rates and [`ExecProfile::compiled_seconds`], which
+    /// is exactly the tier-selection rule `run_pipeline` applies — so
+    /// enabling the tier shifts the offload boundary server-ward without
+    /// breaking the charges-vs-estimates lockstep. The client side never
+    /// runs the compiled tier (the engine lives on the storage servers),
+    /// so its pricing is tier-independent.
     pub fn compute_cost(&self, p: &AccessProfile) -> QueryCost {
         let movable = p.agg_values as f64 * self.exec.val_agg_cost_s
             + p.sort_rows as f64 * self.exec.sort_row_cost_s;
+        let scalar_server = p.rows as f64 * self.exec.row_pred_cost_s + movable;
+        let server = if p.compiled_eligible && self.exec.compiled_tier {
+            // Eligible pipelines carry no sort work, so the whole server
+            // pass moves to compiled rates when that tier is cheaper.
+            scalar_server.min(self.exec.compiled_seconds(p.rows, p.agg_values))
+        } else {
+            scalar_server
+        };
         QueryCost {
-            pushdown_s: self.osd_saturation(p)
-                * (p.rows as f64 * self.exec.row_pred_cost_s + movable),
+            pushdown_s: self.osd_saturation(p) * server,
             client_s: p.rows as f64 * self.exec.client_row_cost_s + movable,
             pushdown_bytes: 0,
             client_bytes: 0,
@@ -337,6 +429,11 @@ pub struct AccessProfile {
     /// Surviving sub-queries of this plan per storage server — the input
     /// of [`CostParams::osd_saturation`]. `0` = unknown (uncontended).
     pub objects_per_osd: f64,
+    /// Is this sub-query's pipeline shape eligible for the compiled
+    /// execution tier (`skyhook::exec_kernel::compiled_eligible` against
+    /// the dataset schema)? The planner stamps it; profiles built by
+    /// hand default to `false` and price pure-scalar as before.
+    pub compiled_eligible: bool,
 }
 
 impl AccessProfile {
@@ -612,6 +709,85 @@ mod tests {
         let e3 = decode2.estimate(&prof);
         assert!(e3.client_s < e0.client_s);
         assert!(e3.pushdown_s <= e0.pushdown_s);
+        // Compiled rates are dormant until both the profile enables the
+        // tier and the sub-query shape is eligible: doubling them alone
+        // moves nothing.
+        let mut compiled2 = base.clone();
+        compiled2.exec.compiled_row_pred_cost_s *= 2.0;
+        compiled2.exec.compiled_val_agg_cost_s *= 2.0;
+        compiled2.exec.compiled_chunk_launch_s *= 2.0;
+        let e4 = compiled2.estimate(&prof);
+        assert!((e4.pushdown_s - e0.pushdown_s).abs() < 1e-15);
+        assert!((e4.client_s - e0.client_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn compiled_tier_prices_the_tier_the_server_picks() {
+        // An eligible aggregate profile sitting *between* the tiers:
+        // under scalar rates the client wins; with the compiled tier
+        // enabled the server pass gets cheap enough that pushdown wins —
+        // the ISSUE's boundary shift, visible to the estimator alone.
+        let scalar = CostParams::paper_testbed();
+        let mut compiled = scalar.clone();
+        compiled.exec.compiled_tier = true;
+        let prof = AccessProfile {
+            rows: 200_000,
+            scan_bytes: 800_000,
+            fetch_bytes: 800_000,
+            fetch_round_trips: 2,
+            request_bytes: 48,
+            result_bytes: 113,
+            agg_values: 200_000,
+            objects_per_osd: 3.0,
+            compiled_eligible: true,
+            ..Default::default()
+        };
+        let es = scalar.estimate(&prof);
+        let ec = compiled.estimate(&prof);
+        assert!(!es.pushdown_wins(), "scalar tier should lose to client");
+        assert!(ec.pushdown_wins(), "compiled tier should flip to pushdown");
+        // The toggle only re-prices the storage side.
+        assert!((ec.client_s - es.client_s).abs() < 1e-15);
+        assert!(ec.pushdown_s < es.pushdown_s);
+        // Tier selection is a min: on a tiny input the per-chunk launch
+        // overhead makes compiled the *worse* tier, and the estimate
+        // falls back to scalar pricing exactly.
+        let tiny = AccessProfile {
+            rows: 40,
+            agg_values: 40,
+            compiled_eligible: true,
+            ..prof
+        };
+        let ts = scalar.estimate(&tiny);
+        let tc = compiled.estimate(&tiny);
+        assert!(
+            compiled.exec.compiled_seconds(40, 40)
+                > 40.0 * (ROW_PRED_COST + VAL_AGG_COST),
+            "launch overhead must dominate a 40-row chunk"
+        );
+        assert!((tc.pushdown_s - ts.pushdown_s).abs() < 1e-15);
+        // Ineligible shapes never see compiled pricing.
+        let ineligible = AccessProfile {
+            compiled_eligible: false,
+            ..prof
+        };
+        let is_ = scalar.estimate(&ineligible);
+        let ic = compiled.estimate(&ineligible);
+        assert!((ic.pushdown_s - is_.pushdown_s).abs() < 1e-15);
+        // Doubling compiled rates now moves only the pushdown side.
+        let mut pricier = compiled.clone();
+        pricier.exec.compiled_val_agg_cost_s *= 2.0;
+        pricier.exec.compiled_chunk_launch_s *= 2.0;
+        let ep = pricier.estimate(&prof);
+        assert!(ep.pushdown_s > ec.pushdown_s);
+        assert!((ep.client_s - ec.client_s).abs() < 1e-15);
+        // The chunk count matches the kernel's chunking exactly.
+        assert_eq!(ExecProfile::compiled_chunks(0), 0);
+        assert_eq!(ExecProfile::compiled_chunks(1), 1);
+        assert_eq!(
+            ExecProfile::compiled_chunks(crate::skyhook::exec_kernel::CHUNK_ROWS as u64 + 1),
+            2
+        );
     }
 
     #[test]

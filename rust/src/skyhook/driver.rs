@@ -50,6 +50,14 @@ pub struct QueryStats {
     /// marker let it binary-search the matching run's boundaries on a
     /// range predicate.
     pub rows_short_circuited: u64,
+    /// Fixed-size chunks the storage servers' **compiled execution
+    /// tier** launched across all pushed-down sub-queries. Zero when the
+    /// cluster's cost profile has the tier disabled, when the plan shape
+    /// is ineligible, or when everything ran client-side (the client
+    /// always runs the scalar kernel).
+    pub compiled_chunks: u64,
+    /// Rows covered by those compiled-tier chunks.
+    pub compiled_rows: u64,
     /// Overall execution mode the planner chose (or was forced to).
     pub pushdown: bool,
     /// Sub-queries the cost model assigned to the storage servers.
@@ -274,6 +282,8 @@ impl Driver {
         let mut reads_coalesced = 0u64;
         let mut prefix_reads = 0u64;
         let mut rows_short_circuited = 0u64;
+        let mut compiled_chunks = 0u64;
+        let mut compiled_rows = 0u64;
         let mut sim_finish = at;
         let mut row_parts: Vec<(Batch, bool)> = Vec::new();
         let mut agg_states: Vec<AggState> = Vec::new();
@@ -284,6 +294,8 @@ impl Driver {
             reads_coalesced += r.reads_coalesced;
             prefix_reads += r.prefix_reads;
             rows_short_circuited += r.rows_short_circuited;
+            compiled_chunks += r.compiled_chunks;
+            compiled_rows += r.compiled_rows;
             sim_finish = sim_finish.max(r.finish);
             match r.output {
                 SubOutput::Rows(b) => row_parts.push((b, r.presorted)),
@@ -503,6 +515,8 @@ impl Driver {
                 reads_coalesced,
                 prefix_reads,
                 rows_short_circuited,
+                compiled_chunks,
+                compiled_rows,
                 pushdown,
                 objects_pushdown: plan.assignment.0,
                 objects_client: plan.assignment.1,
@@ -753,6 +767,29 @@ mod tests {
         )
     }
 
+    /// Like [`driver`], but the cluster's cost profile enables the
+    /// compiled execution tier (the launch.rs wiring when a PJRT engine
+    /// is loaded). No engine here: the tier's native chunked pass runs.
+    fn driver_compiled(osds: usize, workers: usize) -> Driver {
+        let mut reg = ClassRegistry::with_builtins();
+        register_skyhook_class(&mut reg, None);
+        let cfg = ClusterConfig {
+            osds,
+            replicas: 1,
+            ..Default::default()
+        };
+        let mut cost = cfg.profile.params();
+        cost.exec = cost.exec.with_compiled_tier();
+        let cluster = Cluster::with_cost(&cfg, reg, cost);
+        Driver::new(
+            cluster,
+            DriverConfig {
+                workers,
+                ..Default::default()
+            },
+        )
+    }
+
     fn seed(d: &Driver, rows: usize) -> Batch {
         let b = gen::sensor_table(rows, 99);
         d.write_table(
@@ -831,6 +868,50 @@ mod tests {
         assert_eq!(rp.aggregates[1], st.count as f64);
         // Pushdown moves much less data for aggregates.
         assert!(rp.stats.bytes_moved * 5 < rc.stats.bytes_moved);
+    }
+
+    #[test]
+    fn compiled_tier_counters_flow_to_query_stats() {
+        // Objects big enough (~9k rows) that the chunk-launch overhead
+        // amortizes and the backend's Auto tier picks compiled.
+        let seed_big = |d: &Driver| {
+            d.write_table(
+                "sensors",
+                &gen::sensor_table(40_000, 99),
+                Layout::Col,
+                &PartitionSpec::with_target(256 * 1024),
+                None,
+            )
+            .unwrap();
+        };
+        let dc = driver_compiled(4, 4);
+        seed_big(&dc);
+        let ds = driver(4, 4);
+        seed_big(&ds);
+        let q = Query::scan("sensors")
+            .filter(Predicate::cmp("flag", CmpOp::Eq, 0.0))
+            .aggregate(AggFunc::Mean, "val");
+        let rc = dc.execute(&q, Some(ExecMode::Pushdown)).unwrap();
+        let rs = ds.execute(&q, Some(ExecMode::Pushdown)).unwrap();
+        // Same answer to the bit — the tier shows only in the counters.
+        assert_eq!(rc.aggregates.len(), 1);
+        for (a, b) in rc.aggregates.iter().zip(&rs.aggregates) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+        // A scalar-profile cluster never reports compiled work, and the
+        // client side always runs the scalar kernel.
+        assert_eq!((rs.stats.compiled_chunks, rs.stats.compiled_rows), (0, 0));
+        let rcs = dc.execute(&q, Some(ExecMode::ClientSide)).unwrap();
+        assert_eq!((rcs.stats.compiled_chunks, rcs.stats.compiled_rows), (0, 0));
+        if crate::skyhook::scalar_forced() {
+            eprintln!("skipping compiled-counter asserts: SKYHOOK_FORCE_SCALAR set");
+            return;
+        }
+        // Every pushed-down object ran the tier; the unsorted predicate
+        // column means no window shrink, so the chunked pass covered
+        // every row of every object.
+        assert!(rc.stats.compiled_chunks > 0, "compiled tier never ran");
+        assert_eq!(rc.stats.compiled_rows, 40_000);
     }
 
     #[test]

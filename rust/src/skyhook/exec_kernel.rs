@@ -22,21 +22,41 @@
 //! (`simnet::CostParams`), so a custom profile moves the simulated
 //! charges and the estimates in lockstep.
 //!
+//! The kernel has **two execution tiers**. The scalar tier is the
+//! row-at-a-time loop below. The *compiled* tier
+//! ([`run_pipeline_tiered`] with [`ExecTier::Compiled`]/`Auto`) executes
+//! eligible pipelines — conjunctive numeric range/eq predicates feeding
+//! algebraic scalar aggregates, see [`compiled_eligible`] — batch-at-a-
+//! time over fixed [`CHUNK_ROWS`]-row chunks, with a transparent scalar
+//! fallback for every other shape and a `SKYHOOK_FORCE_SCALAR` override
+//! for A/B runs. Both tiers visit elements in the same row order with
+//! the same order-stable mask, so their results are bit-identical; the
+//! tier only moves the [`KernelWork`] counters (chunks launched,
+//! rows/values at compiled rates) that each side of the storage
+//! boundary reports and prices.
+//!
 //! One deliberate asymmetry survives: when a PJRT [`ChunkCompute`]
 //! engine is present (storage servers only), scalar algebraic f32
 //! aggregates take its compiled masked-moments hot path — a different
 //! float reduction order than the native loop, so engine-enabled
 //! pushdown agrees with client-side execution to numeric tolerance,
-//! not bit-for-bit (`full_stack::pjrt` compares with 1e-3), and the
-//! engine path is charged as offloaded compute (no `agg_values`
-//! counted). Every engine-less path — which is what the mode-equality
-//! property tests pin — is bit-identical across sides.
+//! not bit-for-bit (`full_stack::pjrt` compares with 1e-3); on the
+//! scalar tier that path is charged as offloaded compute (no
+//! `agg_values` counted), on the compiled tier it is charged at the
+//! compiled rates like the rest of the tier. Every engine-less path —
+//! which is what the mode-equality property tests pin — is
+//! bit-identical across sides.
 
 use super::logical::{grouped_partials, sort_rows, top_k_rows, PipelineSpec};
 use super::query::{AggState, CmpOp, Predicate};
 use crate::dataset::table::{Batch, Column};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::simnet::ExecProfile;
+
+/// Fixed row-chunk length of the compiled execution tier — one value,
+/// shared with the AOT kernel's row dimension (`runtime::ROWS`) and the
+/// estimator's launch-overhead term (`ExecProfile::compiled_chunks`).
+pub const CHUNK_ROWS: usize = crate::runtime::ROWS;
 
 /// Storage-side compute engine for the masked filter+aggregate hot spot.
 /// Implemented by `runtime::PjrtEngine` (the AOT JAX/Pallas kernel); the
@@ -46,6 +66,71 @@ pub trait ChunkCompute: Send + Sync {
     /// Masked moments of `values`: returns `[count, sum, sumsq, min, max]`
     /// over elements where `mask` is true.
     fn masked_moments(&self, values: &[f32], mask: &[bool]) -> Result<[f64; 5]>;
+
+    /// Masked moments of several equal-length columns sharing one mask —
+    /// the compiled tier's batched entry point. The default runs one
+    /// [`ChunkCompute::masked_moments`] call per column; `PjrtEngine`
+    /// overrides it with packed multi-column kernel launches (and the
+    /// batched adapter routes them through the dynamic batcher so
+    /// concurrent sub-queries amortize launches).
+    fn masked_moments_multi(&self, cols: &[&[f32]], mask: &[bool]) -> Result<Vec<[f64; 5]>> {
+        cols.iter().map(|c| self.masked_moments(c, mask)).collect()
+    }
+}
+
+/// Which execution tier [`run_pipeline_tiered`] uses for eligible
+/// scalar-aggregate pipelines. Ineligible shapes always run scalar —
+/// forcing a tier can change counters and launch patterns, never
+/// results.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ExecTier {
+    /// Always the scalar loop (the A/B baseline).
+    Scalar,
+    /// The compiled tier whenever the shape is eligible. Ignores the
+    /// `SKYHOOK_FORCE_SCALAR` override so explicit A/B tests stay
+    /// deterministic under either environment.
+    Compiled,
+    /// Profile-chosen (what the storage extension passes): the compiled
+    /// tier iff the profile enables it, the shape is eligible,
+    /// [`ExecProfile::compiled_wins`] says it is the cheaper tier for
+    /// this row count, and [`scalar_forced`] is unset.
+    Auto(ExecProfile),
+}
+
+/// Is the `SKYHOOK_FORCE_SCALAR` A/B override set (non-empty, not `0`)?
+/// Consulted only by [`ExecTier::Auto`]: CI runs the whole suite a
+/// second time under it so every pipeline exercises the scalar tier.
+pub fn scalar_forced() -> bool {
+    std::env::var("SKYHOOK_FORCE_SCALAR").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+fn and_spine_of_numeric_cmps(pred: &Predicate, numeric: &dyn Fn(&str) -> bool) -> bool {
+    match pred {
+        Predicate::True => true,
+        Predicate::Cmp { col, .. } => numeric(col),
+        Predicate::And(a, b) => {
+            and_spine_of_numeric_cmps(a, numeric) && and_spine_of_numeric_cmps(b, numeric)
+        }
+        _ => false,
+    }
+}
+
+/// Can the compiled tier execute this pipeline? Cleanly detectable on
+/// the spec alone given column numericness (`numeric`: batch column
+/// types on the execution side, schema dtypes in the planner): a
+/// conjunctive spine of range/eq comparisons over numeric columns (or
+/// `True`) feeding one or more *algebraic* scalar aggregates over
+/// numeric columns — no grouping, no sort, no holistic value shipping.
+/// Everything else takes the scalar loop.
+pub fn compiled_eligible(spec: &PipelineSpec, numeric: &dyn Fn(&str) -> bool) -> bool {
+    !spec.aggs.is_empty()
+        && spec.keys.is_empty()
+        && spec.sort.is_empty()
+        && spec
+            .aggs
+            .iter()
+            .all(|a| a.func.is_algebraic() && numeric(&a.col))
+        && and_spine_of_numeric_cmps(&spec.predicate, numeric)
 }
 
 /// What one pipeline evaluation produced. Also the decoded form of a
@@ -78,6 +163,19 @@ pub struct KernelWork {
     /// range predicate (the rows outside the run are provably
     /// non-matching, so skipping them cannot change the mask).
     pub rows_short_circuited: u64,
+    /// Fixed-size row chunks ([`CHUNK_ROWS`]) the compiled tier
+    /// launched. `0` whenever the scalar tier ran — the per-tier
+    /// counters are how both sides of the storage boundary report which
+    /// tier executed.
+    pub compiled_chunks: u64,
+    /// Rows the compiled tier's chunked mask/aggregate pass covered
+    /// (the scalar share of [`KernelWork::rows_scanned`] is
+    /// `rows_scanned - compiled_rows`).
+    pub compiled_rows: u64,
+    /// Aggregate value updates the compiled tier performed, priced at
+    /// `ExecProfile::compiled_val_agg_cost_s` instead of the scalar
+    /// `val_agg_cost_s`.
+    pub compiled_values: u64,
 }
 
 impl KernelWork {
@@ -93,9 +191,18 @@ impl KernelWork {
 
     /// Storage-server CPU seconds for this work under `p` — exactly the
     /// rates `CostParams::compute_cost` prices, so the simulated charge
-    /// and the planner's estimate cannot drift.
+    /// and the planner's estimate cannot drift. Compiled-tier work
+    /// (chunk launches, compiled rows/values) is charged at the
+    /// compiled rates; everything the scalar loop did keeps the scalar
+    /// rates. The compiled share is not part of
+    /// [`KernelWork::movable_seconds`]: the client cannot run the
+    /// compiled tier, so its work is never movable.
     pub fn server_seconds(&self, p: &ExecProfile) -> f64 {
-        self.rows_scanned as f64 * p.row_pred_cost_s + self.movable_seconds(p)
+        (self.rows_scanned - self.compiled_rows) as f64 * p.row_pred_cost_s
+            + self.compiled_rows as f64 * p.compiled_row_pred_cost_s
+            + self.compiled_values as f64 * p.compiled_val_agg_cost_s
+            + self.compiled_chunks as f64 * p.compiled_chunk_launch_s
+            + self.movable_seconds(p)
     }
 }
 
@@ -208,7 +315,7 @@ fn cmp_window(n: usize, get: &dyn Fn(usize) -> f64, op: CmpOp, v: f64) -> (usize
 /// comparisons on the predicate's AND-spine can bound the window — a
 /// conjunct false outside its run makes the whole conjunction false
 /// there. `Or`/`Not`/unknown shapes contribute the full range.
-fn sorted_window(
+pub(crate) fn sorted_window(
     pred: &Predicate,
     batch: &Batch,
     sorted: &dyn Fn(&str) -> bool,
@@ -266,6 +373,119 @@ fn descending_run_walk(batch: &Batch, col: &str) -> Result<Batch> {
     batch.take(&idx)
 }
 
+/// The compiled tier's scalar-aggregate pass: batch-at-a-time over
+/// fixed [`CHUNK_ROWS`]-row chunks of the sorted-window span, one
+/// running state per aggregate accumulated *across* chunk boundaries in
+/// row order — the exact element-visitation sequence of the scalar
+/// loop, so the result is bit-identical to it. With a [`ChunkCompute`]
+/// engine present, every f32 aggregate column ships in one
+/// `masked_moments_multi` call (the engine packs columns per launch and
+/// the batched adapter amortizes concurrent sub-queries); that path
+/// inherits the scalar engine hot path's numeric-tolerance caveat, and
+/// like the rest of the tier is charged at the compiled rates.
+fn compiled_scalar_aggs(
+    batch: &Batch,
+    spec: &PipelineSpec,
+    engine: Option<&dyn ChunkCompute>,
+    mask: &[bool],
+    window: (usize, usize),
+    work: &mut KernelWork,
+) -> Result<Vec<AggState>> {
+    let (wlo, whi) = window;
+    let span = (whi - wlo) as u64;
+    work.compiled_rows = span;
+    work.compiled_chunks = span.div_ceil(CHUNK_ROWS as u64);
+    work.compiled_values = span * spec.aggs.len() as u64;
+    let mut engine_moments: Vec<Option<[f64; 5]>> = vec![None; spec.aggs.len()];
+    if let Some(engine) = engine {
+        let f32_cols: Vec<(usize, &[f32])> = spec
+            .aggs
+            .iter()
+            .enumerate()
+            .filter_map(|(i, a)| match batch.col(&a.col) {
+                Ok(Column::F32(v)) => Some((i, v.as_slice())),
+                // Ghost columns error below, exactly like the scalar path.
+                _ => None,
+            })
+            .collect();
+        if !f32_cols.is_empty() {
+            let cols: Vec<&[f32]> = f32_cols.iter().map(|&(_, v)| v).collect();
+            let moments = engine.masked_moments_multi(&cols, mask)?;
+            for (&(i, _), m) in f32_cols.iter().zip(moments) {
+                engine_moments[i] = Some(m);
+            }
+        }
+    }
+    let mut states = Vec::with_capacity(spec.aggs.len());
+    for (a, m) in spec.aggs.iter().zip(engine_moments) {
+        let col = batch.col(&a.col)?;
+        let mut st = AggState::new(false);
+        match m {
+            Some(m) => {
+                st.count = m[0] as u64;
+                st.sum = m[1];
+                st.sumsq = m[2];
+                if st.count > 0 {
+                    st.min = m[3];
+                    st.max = m[4];
+                }
+            }
+            None => update_chunked(&mut st, col, mask, wlo, whi)?,
+        }
+        states.push(st);
+    }
+    Ok(states)
+}
+
+/// Fold `col[lo..hi]` (under `mask`) into `st`, [`CHUNK_ROWS`] rows at a
+/// time. Bounding the walk to the sorted window is mask-transparent
+/// (rows outside it are provably unmasked), and the per-chunk inner
+/// loops run over contiguous slices — the shape the compiler
+/// auto-vectorizes — while updating the same running state the scalar
+/// `AggState::update_column` would.
+fn update_chunked(
+    st: &mut AggState,
+    col: &Column,
+    mask: &[bool],
+    lo: usize,
+    hi: usize,
+) -> Result<()> {
+    let mut at = lo;
+    while at < hi {
+        let end = (at + CHUNK_ROWS).min(hi);
+        match col {
+            Column::F32(v) => {
+                for (x, &m) in v[at..end].iter().zip(&mask[at..end]) {
+                    if m {
+                        st.update(*x as f64);
+                    }
+                }
+            }
+            Column::F64(v) => {
+                for (x, &m) in v[at..end].iter().zip(&mask[at..end]) {
+                    if m {
+                        st.update(*x);
+                    }
+                }
+            }
+            Column::I64(v) => {
+                for (x, &m) in v[at..end].iter().zip(&mask[at..end]) {
+                    if m {
+                        st.update(*x as f64);
+                    }
+                }
+            }
+            // Unreachable behind `compiled_eligible`, but keep the
+            // scalar path's exact error for defense in depth.
+            Column::Str(_) => {
+                return Err(Error::Query("cannot aggregate a string column".into()))
+            }
+        }
+        at = end;
+    }
+    Ok(())
+}
+
 /// Evaluate the whole chained pipeline over one batch, in one pass.
 ///
 /// The batch must contain (at least) [`needed_columns`]; extra columns
@@ -291,6 +511,25 @@ pub fn run_pipeline(
     engine: Option<&dyn ChunkCompute>,
     sorted_cols: &[String],
 ) -> Result<(ExecOut, KernelWork)> {
+    run_pipeline_tiered(batch, spec, engine, sorted_cols, ExecTier::Scalar)
+}
+
+/// [`run_pipeline`] with an explicit execution-tier choice. The scalar
+/// wrapper above is what the client-side worker uses (the compiled tier
+/// is a storage-server capability); the extension passes
+/// [`ExecTier::Auto`] with the backend's profile, and A/B tests force
+/// either tier. Whatever the tier, results are **bit-identical**: the
+/// compiled pass visits elements in the same row order as the scalar
+/// loop and accumulates one running state across chunk boundaries, so
+/// chunking moves the launch/work counters, never the float reduction
+/// order.
+pub fn run_pipeline_tiered(
+    batch: &Batch,
+    spec: &PipelineSpec,
+    engine: Option<&dyn ChunkCompute>,
+    sorted_cols: &[String],
+    tier: ExecTier,
+) -> Result<(ExecOut, KernelWork)> {
     let sorted = |c: &str| sorted_cols.iter().any(|s| s == c);
     let (wlo, whi) = sorted_window(&spec.predicate, batch, &sorted);
     let span = (whi - wlo) as u64;
@@ -301,6 +540,22 @@ pub fn run_pipeline(
     };
     let mut mask = Vec::new();
     spec.predicate.eval_into(batch, &mut mask)?;
+
+    let numeric =
+        |c: &str| matches!(batch.col(c), Ok(Column::F32(_) | Column::F64(_) | Column::I64(_)));
+    let use_compiled = match tier {
+        ExecTier::Scalar => false,
+        ExecTier::Compiled => compiled_eligible(spec, &numeric),
+        ExecTier::Auto(p) => {
+            compiled_eligible(spec, &numeric)
+                && !scalar_forced()
+                && p.compiled_wins(span, span * spec.aggs.len() as u64)
+        }
+    };
+    if use_compiled {
+        let states = compiled_scalar_aggs(batch, spec, engine, &mask, (wlo, whi), &mut work)?;
+        return Ok((ExecOut::Aggs(states), work));
+    }
 
     if !spec.aggs.is_empty() && spec.keys.is_empty() {
         // Scalar multi-aggregate partials. Algebraic f32 aggregates take
@@ -688,5 +943,132 @@ mod tests {
             ..base
         };
         assert_eq!(prefix_limit(&no_limit, &sorted), None);
+    }
+
+    #[test]
+    fn compiled_tier_is_bit_identical_and_counts_chunks() {
+        // 40k rows = 3 chunks of CHUNK_ROWS; conjunctive numeric filter
+        // feeding three algebraic aggregates over f32 and i64 columns.
+        let b = gen::sensor_table(40_000, 3);
+        let s = PipelineSpec {
+            predicate: Predicate::cmp("val", CmpOp::Gt, 40.0)
+                .and(Predicate::cmp("ts", CmpOp::Lt, 38_000.0)),
+            aggs: vec![
+                Aggregate::new(AggFunc::Sum, "val"),
+                Aggregate::new(AggFunc::Var, "val"),
+                Aggregate::new(AggFunc::Max, "ts"),
+            ],
+            ..spec()
+        };
+        let (out_c, w_c) = run_pipeline_tiered(&b, &s, None, &[], ExecTier::Compiled).unwrap();
+        let (out_s, w_s) = run_pipeline(&b, &s, None, &[]).unwrap();
+        let (ExecOut::Aggs(compiled), ExecOut::Aggs(scalar)) = (out_c, out_s) else {
+            panic!("expected aggs");
+        };
+        assert_eq!(compiled, scalar, "tiers must agree bit-for-bit");
+        assert_eq!(w_c.rows_scanned, 40_000);
+        assert_eq!(w_c.compiled_rows, 40_000);
+        assert_eq!(w_c.compiled_chunks, 3);
+        assert_eq!(w_c.compiled_values, 120_000);
+        assert_eq!(w_c.agg_values, 0);
+        assert_eq!(
+            (w_s.compiled_chunks, w_s.compiled_rows, w_s.compiled_values),
+            (0, 0, 0)
+        );
+        assert_eq!(w_s.agg_values, 120_000);
+        // server_seconds prices each tier's counters at its own rates.
+        let p = ExecProfile::default();
+        let want = 40_000.0 * p.compiled_row_pred_cost_s
+            + 120_000.0 * p.compiled_val_agg_cost_s
+            + 3.0 * p.compiled_chunk_launch_s;
+        assert!((w_c.server_seconds(&p) - want).abs() < 1e-15);
+        assert!(
+            w_c.server_seconds(&p) < w_s.server_seconds(&p),
+            "compiled must charge less at this size"
+        );
+        // Sortedness markers compose: the chunked pass walks only the
+        // binary-searched window, still bit-identically.
+        let b = sorted_batch(300);
+        let s = PipelineSpec {
+            predicate: Predicate::cmp("k", CmpOp::Lt, 10.0),
+            aggs: vec![Aggregate::new(AggFunc::Sum, "v")],
+            ..spec()
+        };
+        let marked = ["k".to_string()];
+        let (out_c, w_c) =
+            run_pipeline_tiered(&b, &s, None, &marked, ExecTier::Compiled).unwrap();
+        let (out_s, _) = run_pipeline(&b, &s, None, &marked).unwrap();
+        assert_eq!(w_c.rows_scanned, 30);
+        assert_eq!(w_c.compiled_rows, 30);
+        assert_eq!(w_c.compiled_chunks, 1);
+        assert_eq!(w_c.compiled_values, 30);
+        let (ExecOut::Aggs(a), ExecOut::Aggs(r)) = (out_c, out_s) else {
+            panic!("expected aggs");
+        };
+        assert_eq!(a, r);
+    }
+
+    #[test]
+    fn compiled_tier_falls_back_and_auto_picks_by_cost() {
+        let b = gen::sensor_table(1000, 1);
+        // Ineligible shapes run scalar even when compiled is forced:
+        // holistic aggregates, grouping, sorts, non-conjunctive
+        // predicates, row pipelines.
+        let agg = |f| vec![Aggregate::new(f, "val")];
+        let ineligible = [
+            PipelineSpec {
+                aggs: agg(AggFunc::Median),
+                ..spec()
+            },
+            PipelineSpec {
+                aggs: agg(AggFunc::Sum),
+                keys: vec!["sensor".into()],
+                ..spec()
+            },
+            PipelineSpec {
+                aggs: agg(AggFunc::Sum),
+                sort: vec![SortKey::asc("ts")],
+                ..spec()
+            },
+            PipelineSpec {
+                predicate: Predicate::cmp("val", CmpOp::Lt, 10.0)
+                    .or(Predicate::cmp("val", CmpOp::Gt, 90.0)),
+                aggs: agg(AggFunc::Sum),
+                ..spec()
+            },
+            spec(), // row pipeline
+        ];
+        for s in &ineligible {
+            let (_, w) = run_pipeline_tiered(&b, s, None, &[], ExecTier::Compiled).unwrap();
+            assert_eq!(w.compiled_chunks, 0, "must fall back to scalar: {s:?}");
+            assert_eq!(w.compiled_rows, 0);
+        }
+        // Forcing a tier on an eligible shape is an A/B no-op on results
+        // even with the profile's tier disabled.
+        let eligible = PipelineSpec {
+            aggs: agg(AggFunc::Mean),
+            ..spec()
+        };
+        let (_, w) =
+            run_pipeline_tiered(&b, &eligible, None, &[], ExecTier::Auto(ExecProfile::default()))
+                .unwrap();
+        assert_eq!(w.compiled_chunks, 0, "Auto with the tier disabled is scalar");
+        if scalar_forced() {
+            eprintln!("skipping Auto-tier selection asserts: SKYHOOK_FORCE_SCALAR set");
+            return;
+        }
+        let on = ExecProfile::default().with_compiled_tier();
+        let big = gen::sensor_table(20_000, 1);
+        let (_, w) = run_pipeline_tiered(&big, &eligible, None, &[], ExecTier::Auto(on)).unwrap();
+        assert_eq!(w.compiled_chunks, 2);
+        assert_eq!(w.compiled_rows, 20_000);
+        assert_eq!(w.agg_values, 0);
+        let tiny = gen::sensor_table(64, 1);
+        let (_, w) = run_pipeline_tiered(&tiny, &eligible, None, &[], ExecTier::Auto(on)).unwrap();
+        assert_eq!(
+            w.compiled_chunks, 0,
+            "per-chunk launch overhead must keep tiny inputs scalar"
+        );
+        assert_eq!(w.agg_values, 64);
     }
 }

@@ -8,13 +8,17 @@
 //! multi-key grouped partials, or per-object top-k/head) and executes
 //! the whole operator chain in a single pass over the object — one call,
 //! one read set, one result. The evaluation itself lives in the shared
-//! [`super::exec_kernel`]: the very same `run_pipeline` the client-side
-//! worker runs, so both sides of the storage boundary produce
-//! bit-identical partials by construction, and every CPU second charged
-//! here is priced by the cluster-owned [`ExecProfile`]
-//! (`ClsBackend::exec_profile`) rather than local constants. The
-//! single-operator handlers (`scan`, `agg`, `group_agg`) remain for
-//! compatibility and direct use.
+//! [`super::exec_kernel`]: the very same evaluator the client-side
+//! worker runs (here with `ExecTier::Auto`, so the backend's profile
+//! picks the compiled tier for eligible shapes it prices cheaper), so
+//! both sides of the storage boundary produce bit-identical partials by
+//! construction, and every CPU second charged here is priced by the
+//! cluster-owned [`ExecProfile`] (`ClsBackend::exec_profile`) rather
+//! than local constants. The single-operator handlers (`scan`, `agg`,
+//! `group_agg`) remain for compatibility and direct use; `scan` and
+//! `agg` share the zone map's sortedness markers through a windowed
+//! read (binary-searched range conjuncts, prefix-bounded value-column
+//! fetches).
 //!
 //! [`ExecProfile`]: crate::simnet::ExecProfile
 //!
@@ -29,7 +33,7 @@
 //! `skyhook.agg` executes on it — the paper's storage-side compute
 //! offload running the very kernel the L1/L2 layers compiled.
 
-use super::exec_kernel::{self, run_pipeline};
+use super::exec_kernel::{self, run_pipeline_tiered, ExecTier};
 use super::logical::PipelineSpec;
 use super::query::{AggState, Aggregate, Predicate};
 use crate::dataset::layout::{self, decode_batch, encode_batch, Layout, RangeSource};
@@ -171,6 +175,11 @@ pub struct ExecCounters {
     pub rows_short_circuited: u64,
     /// Did the handler serve the partial from a bounded prefix read?
     pub prefix_read: bool,
+    /// Fixed-size chunks the compiled execution tier launched (0 = the
+    /// scalar tier ran) — the server's report of which tier executed.
+    pub compiled_chunks: u64,
+    /// Rows the compiled tier's chunked pass covered.
+    pub compiled_rows: u64,
 }
 
 /// Frame tag of a counter-carrying `skyhook.exec` response (payload tags
@@ -178,10 +187,12 @@ pub struct ExecCounters {
 const EXEC_FRAME_TAG: u8 = 4;
 
 fn frame_exec_out(counters: ExecCounters, inner: Vec<u8>) -> Vec<u8> {
-    let mut w = ByteWriter::with_capacity(inner.len() + 10);
+    let mut w = ByteWriter::with_capacity(inner.len() + 26);
     w.u8(EXEC_FRAME_TAG);
     w.u64(counters.rows_short_circuited);
     w.u8(counters.prefix_read as u8);
+    w.u64(counters.compiled_chunks);
+    w.u64(counters.compiled_rows);
     w.raw(&inner);
     w.finish()
 }
@@ -203,6 +214,8 @@ pub fn decode_exec_out_full(
         let counters = ExecCounters {
             rows_short_circuited: r.u64()?,
             prefix_read: r.u8()? != 0,
+            compiled_chunks: r.u64()?,
+            compiled_rows: r.u64()?,
         };
         let inner = r.raw(r.remaining())?.to_vec();
         return Ok((decode_exec_payload(&inner, nkeys, naggs)?, counters));
@@ -284,6 +297,96 @@ fn needed_union(pred: &Predicate, extra: &[String]) -> Vec<String> {
     v.sort();
     v.dedup();
     v
+}
+
+/// The single-operator handlers' sort-aware read: when the object's zone
+/// map marks a column of the predicate sorted, probe that column alone
+/// first, binary-search the matching window
+/// (`exec_kernel::sorted_window`), and bound the remaining columns' read
+/// to the window-covering row prefix — the clustered-layout payoff
+/// `skyhook.exec` gets from `prefix_limit`, brought to handlers that
+/// cannot express a row limit. Without an applicable marker this is one
+/// plain projected read.
+///
+/// Returns the (possibly prefix-truncated) batch, the matching window
+/// within it, and whether the read was actually bounded. Rows past the
+/// window are provably non-matching under the marker's non-decreasing
+/// promise — the same trust `prefix_limit` already places in it — so
+/// truncation never changes results.
+fn read_windowed(
+    b: &mut dyn ClsBackend,
+    pred: &Predicate,
+    needed: Option<&[String]>,
+    sorted_cols: &[String],
+) -> Result<(Batch, (usize, usize), bool)> {
+    let sorted = |c: &str| sorted_cols.iter().any(|s| s == c);
+    let pcols = pred.columns();
+    let probe_cols: Vec<String> = match needed {
+        Some(needed) => needed
+            .iter()
+            .filter(|c| sorted(c) && pcols.contains(&c.as_str()))
+            .cloned()
+            .collect(),
+        // An unprojected read cannot name "the other columns" before
+        // seeing the header, so it cannot split into probe + rest.
+        None => Vec::new(),
+    };
+    if probe_cols.is_empty() {
+        let batch = read_needed(b, needed)?;
+        let w = exec_kernel::sorted_window(pred, &batch, &sorted);
+        return Ok((batch, w, false));
+    }
+    let prefix = b.header_prefix();
+    let probe = layout::read_projected(&mut BackendRange(b), Some(&probe_cols), prefix)?;
+    let n = probe.nrows();
+    let (wlo, whi) = exec_kernel::sorted_window(pred, &probe, &sorted);
+    let rest_cols: Vec<String> = needed
+        .unwrap_or(&[])
+        .iter()
+        .filter(|c| !probe_cols.contains(c))
+        .cloned()
+        .collect();
+    if rest_cols.is_empty() {
+        return Ok((probe, (wlo, whi), false));
+    }
+    let (rest, bounded) = if whi < n {
+        let (rest, _, bounded) = layout::read_projected_rows(
+            &mut BackendRange(b),
+            Some(&rest_cols),
+            prefix,
+            whi as u64,
+        )?;
+        (rest, bounded)
+    } else {
+        (
+            layout::read_projected(&mut BackendRange(b), Some(&rest_cols), prefix)?,
+            false,
+        )
+    };
+    // Stitch probe + rest at the shorter row count (the bounded read's
+    // prefix; equal when unbounded). The dropped probe tail is outside
+    // the window.
+    let cut = n.min(rest.nrows());
+    let probe = if probe.nrows() > cut {
+        probe.slice(0, cut)?
+    } else {
+        probe
+    };
+    let rest = if rest.nrows() > cut {
+        rest.slice(0, cut)?
+    } else {
+        rest
+    };
+    let mut schema_cols: Vec<(&str, DType)> = Vec::new();
+    let mut columns = Vec::new();
+    for batch in [&probe, &rest] {
+        for (cs, col) in batch.schema.columns.iter().zip(&batch.columns) {
+            schema_cols.push((cs.name.as_str(), cs.dtype));
+            columns.push(col.clone());
+        }
+    }
+    let batch = Batch::new(TableSchema::new(&schema_cols), columns)?;
+    Ok((batch, (wlo.min(cut), whi.min(cut)), bounded))
 }
 
 /// Decode the object's stamped zone map, if present and parseable. An
@@ -378,9 +481,12 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
     // skyhook.scan — filter+project on the server, return a Col batch.
     r.register("skyhook", "scan", |b, input| {
         let (pred, projection, zone_maps) = decode_scan_arg(input)?;
+        // Decode the stamped zone map once: pruning and sortedness both
+        // read it.
+        let zm = if zone_maps { zone_map_of(b) } else { None };
         // Zone-map short-circuit: provably no matching rows → answer an
         // empty batch without touching object data.
-        if let Some(schema) = zone_maps.then(|| zone_map_prune(b, &pred)).flatten() {
+        if let Some(schema) = zm.as_ref().and_then(|zm| prune_verdict(zm, &pred)) {
             let schema = match &projection {
                 Some(cols) => {
                     let refs: Vec<&str> = cols.iter().map(String::as_str).collect();
@@ -390,13 +496,15 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
             };
             return Ok(encode_batch(&Batch::empty(&schema), Layout::Col));
         }
-        // Read only predicate + projection columns (ranged reads on Col).
-        let batch = match &projection {
-            Some(cols) => read_needed(b, Some(&needed_union(&pred, cols)))?,
-            None => read_needed(b, None)?,
-        };
+        // Read only predicate + projection columns (ranged reads on Col),
+        // bounded to the sorted-column window's row prefix when a
+        // sortedness marker applies; the filter is charged only for the
+        // binary-searched window.
+        let sorted_cols = zm.as_ref().map(ZoneMap::sorted_columns).unwrap_or_default();
+        let needed = projection.as_ref().map(|cols| needed_union(&pred, cols));
+        let (batch, (wlo, whi), _) = read_windowed(b, &pred, needed.as_deref(), &sorted_cols)?;
         let prof = b.exec_profile();
-        b.charge_cpu(batch.nrows() as f64 * prof.row_pred_cost_s);
+        b.charge_cpu((whi - wlo) as f64 * prof.row_pred_cost_s);
         let mut mask = Vec::new();
         pred.eval_into(&batch, &mut mask)?;
         let filtered = batch.filter(&mask)?;
@@ -450,12 +558,24 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
             }
             None => (read_needed(b, needed.as_deref())?, false),
         };
-        let (out, work) = run_pipeline(&batch, &spec, exec_engine.as_deref(), &sorted_cols)?;
+        // The backend's profile picks the execution tier (compiled when
+        // it is enabled, the shape is eligible, and the tier wins on
+        // cost); the kernel's per-tier counters are then priced at the
+        // same rates the planner's estimator uses.
         let prof = b.exec_profile();
+        let (out, work) = run_pipeline_tiered(
+            &batch,
+            &spec,
+            exec_engine.as_deref(),
+            &sorted_cols,
+            ExecTier::Auto(prof),
+        )?;
         b.charge_cpu(work.server_seconds(&prof));
         let counters = ExecCounters {
             rows_short_circuited: work.rows_short_circuited,
             prefix_read,
+            compiled_chunks: work.compiled_chunks,
+            compiled_rows: work.compiled_rows,
         };
         let mut w = ByteWriter::new();
         match out {
@@ -495,7 +615,8 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
     let eng = engine;
     r.register("skyhook", "agg", move |b, input| {
         let (pred, keep_values, cols, zone_maps) = decode_agg_arg(input)?;
-        if let Some(schema) = zone_maps.then(|| zone_map_prune(b, &pred)).flatten() {
+        let zm = if zone_maps { zone_map_of(b) } else { None };
+        if let Some(schema) = zm.as_ref().and_then(|zm| prune_verdict(zm, &pred)) {
             for c in &cols {
                 // Same failures the normal path would report.
                 let i = schema.col_index(c)?;
@@ -510,9 +631,15 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
             }
             return Ok(w.finish());
         }
-        let batch = read_needed(b, Some(&needed_union(&pred, &cols)))?;
+        // Sort-aware read + charging, exactly like `skyhook.scan`: the
+        // value columns fetch only the window-covering prefix and the
+        // filter/aggregate loops are charged for the window span.
+        let sorted_cols = zm.as_ref().map(ZoneMap::sorted_columns).unwrap_or_default();
+        let needed = needed_union(&pred, &cols);
+        let (batch, (wlo, whi), _) = read_windowed(b, &pred, Some(&needed), &sorted_cols)?;
+        let span = (whi - wlo) as f64;
         let prof = b.exec_profile();
-        b.charge_cpu(batch.nrows() as f64 * prof.row_pred_cost_s);
+        b.charge_cpu(span * prof.row_pred_cost_s);
         let mut mask = Vec::new();
         pred.eval_into(&batch, &mut mask)?;
         let mut w = ByteWriter::new();
@@ -533,7 +660,7 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
                     }
                 }
                 _ => {
-                    b.charge_cpu(batch.nrows() as f64 * prof.val_agg_cost_s);
+                    b.charge_cpu(span * prof.val_agg_cost_s);
                     st.update_column(col, &mask)?;
                 }
             }
@@ -1238,6 +1365,106 @@ mod tests {
         };
         assert_eq!(cp.rows_short_circuited, 0);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn legacy_handlers_exploit_sortedness_markers() {
+        // A clustered-style object: rows sorted by val, marker stamped.
+        let batch = gen::sensor_table(2000, 7).sort_by_column("val").unwrap();
+        let enc = encode_batch(&batch, Layout::Col);
+        let zm = ZoneMap::from_batch(&batch);
+        let sorted_cols = zm.sorted_columns();
+        assert!(sorted_cols.contains(&"val".to_string()));
+        // The windowed read bounds the non-predicate columns to the
+        // binary-searched window's row prefix.
+        let pred = Predicate::cmp("val", CmpOp::Lt, 30.0);
+        let needed = vec!["ts".to_string(), "val".to_string()];
+        let mut b = MemBackend::new(&enc);
+        let (win, (wlo, whi), bounded) =
+            read_windowed(&mut b, &pred, Some(&needed), &sorted_cols).unwrap();
+        assert!(bounded, "value columns must be prefix-bounded");
+        assert_eq!(wlo, 0);
+        assert!(whi < 2000, "val < 30 is a selective prefix");
+        assert_eq!(win.nrows(), whi);
+        assert_eq!(win.ncols(), 2);
+        // skyhook.scan: identical result with and without the marker,
+        // strictly cheaper charged CPU with it.
+        let r = registry();
+        let arg = encode_scan_arg(&pred, Some(&["ts".to_string()]), true);
+        let mut plain = MemBackend::new(&enc);
+        let want = r.get("skyhook", "scan").unwrap()(&mut plain, &arg).unwrap();
+        let mut stamped = MemBackend::new(&enc);
+        stamped.setxattr(ZONE_MAP_XATTR, &zm.encode());
+        let got = r.get("skyhook", "scan").unwrap()(&mut stamped, &arg).unwrap();
+        assert_eq!(got, want, "sortedness must never change scan results");
+        assert!(
+            stamped.cpu < plain.cpu,
+            "windowed scan must charge less: {} vs {}",
+            stamped.cpu,
+            plain.cpu
+        );
+        // skyhook.agg too — bit-identical partials, cheaper charge.
+        let aggs = vec![Aggregate::new(AggFunc::Sum, "ts")];
+        let arg = encode_agg_arg(&pred, &aggs, false, true);
+        let mut plain = MemBackend::new(&enc);
+        let want = r.get("skyhook", "agg").unwrap()(&mut plain, &arg).unwrap();
+        let mut stamped = MemBackend::new(&enc);
+        stamped.setxattr(ZONE_MAP_XATTR, &zm.encode());
+        let got = r.get("skyhook", "agg").unwrap()(&mut stamped, &arg).unwrap();
+        assert_eq!(got, want, "sortedness must never change agg partials");
+        assert!(stamped.cpu < plain.cpu);
+        // Ghost columns keep failing on the windowed path.
+        let ghost = encode_scan_arg(&pred, Some(&["nope".to_string()]), true);
+        let mut stamped = MemBackend::new(&enc);
+        stamped.setxattr(ZONE_MAP_XATTR, &zm.encode());
+        assert!(r.get("skyhook", "scan").unwrap()(&mut stamped, &ghost).is_err());
+    }
+
+    #[test]
+    fn exec_reports_compiled_tier_counters() {
+        use crate::simnet::ExecProfile;
+        let r = registry();
+        let big = gen::sensor_table(20_000, 5);
+        let enc = encode_batch(&big, Layout::Col);
+        let eligible = PipelineSpec {
+            predicate: Predicate::cmp("val", CmpOp::Gt, 40.0),
+            aggs: vec![Aggregate::new(AggFunc::Mean, "val")],
+            ..exec_spec()
+        };
+        // Profile with the tier disabled (the default): scalar runs and
+        // the response reports zero compiled work.
+        let mut b = MemBackend::new(&enc);
+        let out = r.get("skyhook", "exec").unwrap()(&mut b, &eligible.encode()).unwrap();
+        let (_, c) = decode_exec_out_full(&out, 0, 1).unwrap();
+        assert_eq!((c.compiled_chunks, c.compiled_rows), (0, 0));
+        if exec_kernel::scalar_forced() {
+            eprintln!("skipping compiled-tier counter asserts: SKYHOOK_FORCE_SCALAR set");
+            return;
+        }
+        // Tier enabled on the backend's profile: the handler reports the
+        // chunks it launched, and the partial matches the scalar run
+        // bit-for-bit.
+        let scalar = decode_exec_out(&out, 0, 1).unwrap();
+        let mut b = MemBackend::new(&enc);
+        b.exec = ExecProfile::default().with_compiled_tier();
+        let out = r.get("skyhook", "exec").unwrap()(&mut b, &eligible.encode()).unwrap();
+        let (compiled, c) = decode_exec_out_full(&out, 0, 1).unwrap();
+        assert_eq!(c.compiled_chunks, 2);
+        assert_eq!(c.compiled_rows, 20_000);
+        let (ExecOut::Aggs(a), ExecOut::Aggs(s)) = (compiled, scalar) else {
+            panic!("expected aggs");
+        };
+        assert_eq!(a, s, "tiers must agree bit-for-bit across the wire");
+        // A holistic pipeline stays scalar even with the tier enabled.
+        let holistic = PipelineSpec {
+            aggs: vec![Aggregate::new(AggFunc::Median, "val")],
+            ..exec_spec()
+        };
+        let mut b = MemBackend::new(&enc);
+        b.exec = ExecProfile::default().with_compiled_tier();
+        let out = r.get("skyhook", "exec").unwrap()(&mut b, &holistic.encode()).unwrap();
+        let (_, c) = decode_exec_out_full(&out, 0, 1).unwrap();
+        assert_eq!((c.compiled_chunks, c.compiled_rows), (0, 0));
     }
 
     #[test]

@@ -28,7 +28,10 @@ pub mod sketch;
 pub mod worker;
 
 pub use driver::{Driver, QueryResult, QueryStats, WriteReport};
-pub use exec_kernel::{prefix_limit, run_pipeline, ChunkCompute, ExecOut, KernelWork};
+pub use exec_kernel::{
+    compiled_eligible, prefix_limit, run_pipeline, run_pipeline_tiered, scalar_forced,
+    ChunkCompute, ExecOut, ExecTier, KernelWork, CHUNK_ROWS,
+};
 pub use extension::register_skyhook_class;
 pub use logical::{
     estimate_groups, estimate_selectivity, merge_sorted, sort_rows, top_k_rows, LogicalPlan,

@@ -170,6 +170,12 @@ pub struct SubQuery {
     /// layout exactly like the storage-side handler (which reads the
     /// same markers from the object's zone-map xattr).
     pub sorted_cols: Vec<String>,
+    /// Header-prefix bytes the client-side projected read fetches up
+    /// front: the plan-time effective value (schema-derived when the
+    /// `cluster.header_prefix` knob is at its default), so the worker's
+    /// reads match what the estimator priced. Storage-side handlers keep
+    /// their backend's configured knob.
+    pub header_prefix: usize,
 }
 
 /// A planned query.
@@ -435,7 +441,17 @@ pub fn plan_calibrated(
     let keep_values = query.is_aggregate() && !decomposable;
     let pipeline = server_pipeline(query, prune);
     let push_topk = pipeline.limit.is_some();
-    let shape = QueryShape::of(query, schema, &pipeline, cost.header_prefix, calibration);
+    // Schema-aware header-prefix auto-tune: when the cluster knob is at
+    // its default, size the projected-read prefix to this dataset's
+    // schema (header + per-column directory, block-rounded) instead of
+    // the one-size 64 KiB guess, so narrow schemas stop over-fetching
+    // their prefix read. An explicitly configured knob still overrides.
+    let header_prefix = if cost.header_prefix == crate::dataset::layout::HEADER_PREFIX {
+        crate::dataset::layout::auto_header_prefix(schema.columns.len())
+    } else {
+        cost.header_prefix
+    };
+    let shape = QueryShape::of(query, schema, &pipeline, header_prefix, calibration);
 
     // Zone-map pruning pass first, so the contention model knows how
     // many sub-queries actually fan onto each storage server.
@@ -563,6 +579,7 @@ pub fn plan_calibrated(
             keep_values,
             zone_maps: prune,
             sorted_cols,
+            header_prefix,
         });
     }
     // Overall mode: forced, else the majority assignment (ties — and a
@@ -632,6 +649,12 @@ struct QueryShape {
     /// Learned per-column selectivity correction for this query's
     /// predicate ([`CalibrationMap::factor`]); 1.0 = uncalibrated.
     sel_factor: f64,
+    /// Is the pushed-down pipeline shape eligible for the compiled
+    /// execution tier (`exec_kernel::compiled_eligible` against the
+    /// schema's column types)? Stamped into every sub-query's
+    /// [`AccessProfile`] so the estimator prices pushdown with the tier
+    /// the server would actually pick.
+    compiled_eligible: bool,
 }
 
 impl QueryShape {
@@ -683,6 +706,16 @@ impl QueryShape {
             nsort: pipeline.sort.len() as u64,
             header_prefix: header_prefix as u64,
             sel_factor: calibration.factor(&query.predicate.columns()),
+            compiled_eligible: {
+                let numeric = |c: &str| {
+                    schema
+                        .col_index(c)
+                        .ok()
+                        .map(|i| schema.col(i).dtype)
+                        .is_some_and(|d| d != DType::Str)
+                };
+                super::exec_kernel::compiled_eligible(pipeline, &numeric)
+            },
         }
     }
 
@@ -779,6 +812,7 @@ impl QueryShape {
             agg_values: rg.rows.saturating_mul(self.naggs),
             sort_rows,
             objects_per_osd: 0.0,
+            compiled_eligible: self.compiled_eligible,
         }
     }
 }
@@ -1228,6 +1262,66 @@ mod tests {
         // osds = 0 (unknown) stays uncontended, like plan()'s default.
         let p0 = plan_costed(&q, &m, None, true, &CostParams::default()).unwrap();
         assert!(p0.assignment.0 > p0.assignment.1);
+    }
+
+    #[test]
+    fn compiled_tier_flips_offload_assignment() {
+        // An eligible filter+agg plan near the boundary on a saturated
+        // OSD: under scalar rates the plain read path wins; enabling the
+        // compiled tier re-prices the server pass with the cheap chunked
+        // rates and flips every sub-query to pushdown — the estimator-
+        // side half of the tier's charges-vs-estimates lockstep.
+        let m = meta_sized(3, 200_000, 800_000);
+        let q = Query::scan("ds")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 20.0))
+            .aggregate(AggFunc::Mean, "val");
+        let scalar = CostParams {
+            osds: 1,
+            ..CostParams::default()
+        };
+        let ps = plan_costed(&q, &m, None, true, &scalar).unwrap();
+        assert_eq!(ps.mode, ExecMode::ClientSide, "scalar: {:?}", ps.assignment);
+        let mut compiled = scalar.clone();
+        compiled.exec.compiled_tier = true;
+        let pc = plan_costed(&q, &m, None, true, &compiled).unwrap();
+        assert_eq!(pc.mode, ExecMode::Pushdown, "compiled: {:?}", pc.assignment);
+        assert!(pc.cost.pushdown_s < ps.cost.pushdown_s);
+        assert!((pc.cost.client_s - ps.cost.client_s).abs() < 1e-12);
+        // Row scans carry no aggregate, so they are ineligible and the
+        // toggle is inert on them.
+        let scan = Query::scan("ds").filter(Predicate::cmp("val", CmpOp::Gt, 20.0));
+        let a = plan_costed(&scan, &m, None, true, &scalar).unwrap();
+        let b = plan_costed(&scan, &m, None, true, &compiled).unwrap();
+        assert!((a.cost.pushdown_s - b.cost.pushdown_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn header_prefix_auto_tunes_from_schema_width() {
+        use crate::dataset::layout::{auto_header_prefix, HEADER_PREFIX};
+        // A plan at the default knob prices (and stamps) the schema-
+        // derived prefix; an explicit non-default knob still overrides.
+        let m = meta_sized(2, 40_000, 1 << 20);
+        let q = Query::scan("ds")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 50.0))
+            .aggregate(AggFunc::Sum, "val");
+        let auto = plan(&q, &m, None).unwrap();
+        assert!(auto
+            .subqueries
+            .iter()
+            .all(|s| s.header_prefix == auto_header_prefix(2)));
+        let knob = CostParams {
+            header_prefix: HEADER_PREFIX + 4096,
+            ..CostParams::default()
+        };
+        let pinned = plan_costed(&q, &m, None, true, &knob).unwrap();
+        assert!(pinned
+            .subqueries
+            .iter()
+            .all(|s| s.header_prefix == HEADER_PREFIX + 4096));
+        // The narrow schema's smaller prefix shrinks the priced
+        // projected fetch on both sides.
+        assert!(auto.cost.client_s < pinned.cost.client_s);
+        assert!(auto.cost.pushdown_s < pinned.cost.pushdown_s);
     }
 
     /// Clustered-style meta: per-group disjoint val ranges, val marked

@@ -65,6 +65,13 @@ pub struct SubResult {
     /// (counted wherever the kernel ran; pushdown ships it back in the
     /// response frame).
     pub rows_short_circuited: u64,
+    /// Chunks the storage server's compiled execution tier launched for
+    /// this sub-query (from the response frame). Always 0 client-side:
+    /// the compiled tier is a storage-server capability, the client runs
+    /// the scalar kernel.
+    pub compiled_chunks: u64,
+    /// Rows the storage server's compiled tier covered.
+    pub compiled_rows: u64,
     /// Virtual completion time.
     pub finish: f64,
 }
@@ -117,6 +124,8 @@ fn execute_pushdown(
         presorted: !spec.sort.is_empty(),
         prefix_reads: counters.prefix_read as u64,
         rows_short_circuited: counters.rows_short_circuited,
+        compiled_chunks: counters.compiled_chunks,
+        compiled_rows: counters.compiled_rows,
         finish,
     })
 }
@@ -188,7 +197,7 @@ fn execute_client_side(
                 let (batch, rstats, bounded) = layout::read_projected_rows(
                     &mut src,
                     needed.as_deref(),
-                    cluster.header_prefix(),
+                    sub.header_prefix,
                     k,
                 )?;
                 coalesced = rstats.reads_coalesced as u64;
@@ -199,7 +208,7 @@ fn execute_client_side(
                 let (batch, rstats) = layout::read_projected_stats(
                     &mut src,
                     needed.as_deref(),
-                    cluster.header_prefix(),
+                    sub.header_prefix,
                 )?;
                 coalesced = rstats.reads_coalesced as u64;
                 batch
@@ -210,7 +219,7 @@ fn execute_client_side(
         // up front so the kernel's filter doesn't copy unneeded columns
         // per matching row (the same batch shape the server-side
         // read_needed produces).
-        let full = layout::read_projected(&mut src, None, cluster.header_prefix())?;
+        let full = layout::read_projected(&mut src, None, sub.header_prefix)?;
         match &needed {
             Some(cols) => {
                 let refs: Vec<&str> = cols.iter().map(String::as_str).collect();
@@ -246,6 +255,8 @@ fn execute_client_side(
         presorted: !spec.sort.is_empty(),
         prefix_reads,
         rows_short_circuited: work.rows_short_circuited,
+        compiled_chunks: 0,
+        compiled_rows: 0,
         finish,
     })
 }
@@ -324,6 +335,7 @@ mod tests {
             keep_values: false,
             zone_maps: true,
             sorted_cols: vec![],
+            header_prefix: layout::HEADER_PREFIX,
         };
         let sub_c = SubQuery {
             mode: ExecMode::ClientSide,
@@ -363,6 +375,7 @@ mod tests {
             keep_values: false,
             zone_maps: true,
             sorted_cols: vec![],
+            header_prefix: layout::HEADER_PREFIX,
         };
         let rp = exec(&c, &q, &mk(ExecMode::Pushdown), &cpu).unwrap();
         let rc = exec(&c, &q, &mk(ExecMode::ClientSide), &cpu).unwrap();
@@ -395,6 +408,7 @@ mod tests {
             keep_values: false,
             zone_maps: true,
             sorted_cols: vec![],
+            header_prefix: layout::HEADER_PREFIX,
         };
         let rp = exec(&c, &q, &mk(ExecMode::Pushdown), &cpu).unwrap();
         let rc = exec(&c, &q, &mk(ExecMode::ClientSide), &cpu).unwrap();
@@ -427,6 +441,7 @@ mod tests {
             keep_values: false,
             zone_maps: true,
             sorted_cols: vec![],
+            header_prefix: layout::HEADER_PREFIX,
         };
         let rp = exec(&c, &q, &mk(ExecMode::Pushdown), &cpu).unwrap();
         let rc = exec(&c, &q, &mk(ExecMode::ClientSide), &cpu).unwrap();
@@ -457,6 +472,7 @@ mod tests {
             keep_values: false,
             zone_maps: true,
             sorted_cols: vec![],
+            header_prefix: layout::HEADER_PREFIX,
         };
         let r = exec(&c, &q, &sub, &cpu).unwrap();
         let SubOutput::Rows(rows) = r.output else {
@@ -505,6 +521,7 @@ mod tests {
             keep_values: true,
             zone_maps: true,
             sorted_cols: vec![],
+            header_prefix: layout::HEADER_PREFIX,
         };
         let r = exec(&c, &q, &sub, &cpu).unwrap();
         let SubOutput::Aggs(states) = r.output else {
@@ -555,6 +572,7 @@ mod tests {
                 keep_values: false,
                 zone_maps: true,
                 sorted_cols: vec![],
+                header_prefix: layout::HEADER_PREFIX,
             };
             exec(&c, &q, &sub, &cpu).unwrap()
         };
@@ -609,6 +627,7 @@ mod tests {
             keep_values: false,
             zone_maps: true,
             sorted_cols,
+            header_prefix: layout::HEADER_PREFIX,
         };
         let bounded = exec(&c, &q, &mk(vec!["val".into()]), &cpu).unwrap();
         let full = exec(&c, &q, &mk(vec![]), &cpu).unwrap();
@@ -639,6 +658,7 @@ mod tests {
             keep_values: false,
             zone_maps: true,
             sorted_cols: vec![],
+            header_prefix: layout::HEADER_PREFIX,
         };
         assert!(exec(&c, &q, &sub, &cpu).is_err());
     }

@@ -1353,6 +1353,366 @@ fn clustered_layout_prefix_reads_and_pruning_beat_unclustered() {
     assert!(!e.contains("clustered by"), "{e}");
 }
 
+/// Conjunctive AND-chain of numeric comparisons — the predicate spine
+/// the compiled tier's eligibility test accepts.
+fn conjunctive_numeric_pred(r: &mut Xoshiro256, n: usize) -> Predicate {
+    let cmp = |r: &mut Xoshiro256| {
+        let ops = [CmpOp::Lt, CmpOp::Le, CmpOp::Gt, CmpOp::Ge, CmpOp::Eq];
+        Predicate::cmp(
+            ["val", "ts", "sensor"][r.range(0, 2)],
+            ops[r.range(0, 4)],
+            r.f64() * 300.0 - 75.0,
+        )
+    };
+    let mut p = cmp(r);
+    for _ in 1..n {
+        p = p.and(cmp(r));
+    }
+    p
+}
+
+#[test]
+fn kernel_tiers_are_bit_identical_on_random_specs() {
+    // The tentpole guarantee of the compiled execution tier: for random
+    // numeric batches and random scalar-aggregate specs — eligible
+    // conjunctive shapes and ineligible ones (OR/NOT spines, holistic
+    // aggregates) alike — the forced-compiled, forced-scalar and
+    // profile-chosen tiers produce *bit-identical* partial states. The
+    // compiled pass visits rows in scalar order and carries one running
+    // state across chunk boundaries, so chunking may only move the
+    // launch counters, never the float reduction order.
+    use skyhook_map::simnet::ExecProfile;
+    use skyhook_map::skyhook::{
+        run_pipeline, run_pipeline_tiered, ExecOut, ExecTier, PipelineSpec,
+    };
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn states_bit_equal(a: &[AggState], b: &[AggState]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| {
+                x.count == y.count
+                    && x.sum.to_bits() == y.sum.to_bits()
+                    && x.sumsq.to_bits() == y.sumsq.to_bits()
+                    && x.min.to_bits() == y.min.to_bits()
+                    && x.max.to_bits() == y.max.to_bits()
+                    && match (&x.values, &y.values) {
+                        (None, None) => true,
+                        (Some(u), Some(v)) => {
+                            u.len() == v.len()
+                                && u.iter().zip(v).all(|(p, q)| p.to_bits() == q.to_bits())
+                        }
+                        _ => false,
+                    }
+            })
+    }
+
+    // Proof the generator actually exercises the compiled path (not just
+    // trivially-agreeing scalar fallbacks).
+    let compiled_chunks_seen = AtomicU64::new(0);
+    forall_explain(
+        prop_seed(18),
+        40,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Xoshiro256::new(seed);
+            // Cross the 16 Ki chunk boundary on a fair share of cases.
+            let rows = rng.range(0, 40_000);
+            let batch = random_numeric_batch(&mut rng, rows, rng.chance(0.5));
+            let funcs = [
+                AggFunc::Count,
+                AggFunc::Sum,
+                AggFunc::Min,
+                AggFunc::Max,
+                AggFunc::Mean,
+                AggFunc::Var,
+            ];
+            let mut aggs: Vec<Aggregate> = (0..rng.range(1, 3))
+                .map(|_| {
+                    Aggregate::new(
+                        funcs[rng.range(0, 5)],
+                        ["val", "ts", "sensor"][rng.range(0, 2)],
+                    )
+                })
+                .collect();
+            if rng.chance(0.15) {
+                // Holistic value shipping: always ineligible, must fall
+                // back scalar transparently.
+                aggs.push(Aggregate::new(AggFunc::Median, "val"));
+            }
+            let spec = PipelineSpec {
+                predicate: if rng.chance(0.6) {
+                    conjunctive_numeric_pred(&mut rng, rng.range(1, 3))
+                } else {
+                    random_numeric_pred(&mut rng, 3)
+                },
+                projection: None,
+                aggs,
+                keys: vec![],
+                sort: vec![],
+                limit: None,
+                zone_maps: true,
+            };
+            let sorted: Vec<String> = if rng.chance(0.5) {
+                vec!["ts".into()] // ts is ascending by construction
+            } else {
+                vec![]
+            };
+            let run = |tier: ExecTier| run_pipeline_tiered(&batch, &spec, None, &sorted, tier);
+            let (base, bw) = run_pipeline(&batch, &spec, None, &sorted).map_err(|e| e.to_string())?;
+            let (sc, sw) = run(ExecTier::Scalar).map_err(|e| e.to_string())?;
+            let (co, cw) = run(ExecTier::Compiled).map_err(|e| e.to_string())?;
+            let auto = ExecProfile::default().with_compiled_tier();
+            let (au, _) = run(ExecTier::Auto(auto)).map_err(|e| e.to_string())?;
+            if sw.compiled_chunks != 0 || bw.compiled_chunks != 0 {
+                return Err("scalar tier reported compiled work".into());
+            }
+            compiled_chunks_seen.fetch_add(cw.compiled_chunks, Ordering::Relaxed);
+            let (ExecOut::Aggs(base), ExecOut::Aggs(sc), ExecOut::Aggs(co), ExecOut::Aggs(au)) =
+                (base, sc, co, au)
+            else {
+                return Err("scalar-aggregate spec returned non-agg output".into());
+            };
+            if !states_bit_equal(&base, &sc) {
+                return Err("run_pipeline vs ExecTier::Scalar diverge".into());
+            }
+            if !states_bit_equal(&sc, &co) {
+                return Err(format!("compiled tier diverges from scalar: {spec:?}"));
+            }
+            if !states_bit_equal(&sc, &au) {
+                return Err(format!("auto tier diverges from scalar: {spec:?}"));
+            }
+            Ok(())
+        },
+    );
+    assert!(
+        compiled_chunks_seen.load(Ordering::Relaxed) > 0,
+        "generator never exercised the compiled path"
+    );
+}
+
+#[test]
+fn compiled_and_scalar_clusters_agree_on_random_plans() {
+    // End-to-end tier transparency: a cluster whose cost profile enables
+    // the compiled tier must answer every random plan identically to a
+    // scalar-profile cluster, under all three forced execution modes —
+    // the tier may only change the counters and the simulated charges.
+    use skyhook_map::config::{ClusterConfig, DriverConfig};
+    use skyhook_map::dataset::partition::PartitionSpec;
+    use skyhook_map::skyhook::{register_skyhook_class, Driver, ExecMode, Query};
+    use skyhook_map::store::{ClassRegistry, Cluster};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn cluster_driver(compiled: bool) -> Driver {
+        let mut reg = ClassRegistry::with_builtins();
+        register_skyhook_class(&mut reg, None);
+        let cfg = ClusterConfig {
+            osds: 3,
+            replicas: 1,
+            ..Default::default()
+        };
+        let mut cost = cfg.profile.params();
+        if compiled {
+            cost.exec = cost.exec.with_compiled_tier();
+        }
+        Driver::new(
+            Cluster::with_cost(&cfg, reg, cost),
+            DriverConfig {
+                workers: 2,
+                ..Default::default()
+            },
+        )
+    }
+
+    fn random_plan(r: &mut Xoshiro256) -> Query {
+        let pred = if r.chance(0.6) {
+            conjunctive_numeric_pred(r, r.range(1, 2))
+        } else {
+            random_numeric_pred(r, 2)
+        };
+        let q = Query::scan("p").filter(pred);
+        match r.range(0, 4) {
+            0 | 1 => {
+                let funcs = [AggFunc::Sum, AggFunc::Mean, AggFunc::Min, AggFunc::Count];
+                let mut q = q;
+                for _ in 0..r.range(1, 2) {
+                    q = q.aggregate(funcs[r.range(0, 3)], "val");
+                }
+                q
+            }
+            2 => q.aggregate(AggFunc::Median, "val"), // holistic: ineligible
+            _ => q.select(&["ts", "val"]),            // row query: ineligible
+        }
+    }
+
+    let feq = |a: f64, b: f64| a == b || (a.is_nan() && b.is_nan());
+    let compiled_engaged = AtomicU64::new(0);
+    forall_explain(
+        prop_seed(19),
+        8,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Xoshiro256::new(seed);
+            // Objects large enough (~3k rows) that the chunk-launch
+            // overhead amortizes and the Auto tier actually engages.
+            let rows = rng.range(2_000, 24_000);
+            let batch = random_numeric_batch(&mut rng, rows, true);
+            let dc = cluster_driver(true);
+            let ds = cluster_driver(false);
+            for d in [&dc, &ds] {
+                d.write_table(
+                    "p",
+                    &batch,
+                    Layout::Col,
+                    &PartitionSpec::with_target(64 * 1024),
+                    None,
+                )
+                .map_err(|e| e.to_string())?;
+            }
+            for _ in 0..3 {
+                let q = random_plan(&mut rng);
+                for mode in [Some(ExecMode::Pushdown), Some(ExecMode::ClientSide), None] {
+                    let (rc, rs) = match (dc.execute(&q, mode), ds.execute(&q, mode)) {
+                        (Err(_), Err(_)) => continue, // consistent failure
+                        (Ok(a), Ok(b)) => (a, b),
+                        _ => {
+                            return Err(format!(
+                                "error-ness diverges across tiers for {q:?} ({mode:?})"
+                            ))
+                        }
+                    };
+                    compiled_engaged.fetch_add(rc.stats.compiled_chunks, Ordering::Relaxed);
+                    if rs.stats.compiled_chunks != 0 {
+                        return Err("scalar-profile cluster reported compiled work".into());
+                    }
+                    match (&rc.rows, &rs.rows) {
+                        (None, None) => {}
+                        (Some(a), Some(b)) => {
+                            if !batches_bit_equal(a, b) {
+                                return Err(format!(
+                                    "rows diverge across tiers for {q:?} ({mode:?})"
+                                ));
+                            }
+                        }
+                        _ => return Err(format!("row presence diverges for {q:?}")),
+                    }
+                    if rc.aggregates.len() != rs.aggregates.len()
+                        || !rc
+                            .aggregates
+                            .iter()
+                            .zip(&rs.aggregates)
+                            .all(|(x, y)| feq(*x, *y))
+                    {
+                        return Err(format!(
+                            "aggregates diverge across tiers for {q:?} ({mode:?}): \
+                             {:?} vs {:?}",
+                            rc.aggregates, rs.aggregates
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+    if skyhook_map::skyhook::scalar_forced() {
+        eprintln!("skipping compiled-engagement assert: SKYHOOK_FORCE_SCALAR set");
+    } else {
+        assert!(
+            compiled_engaged.load(Ordering::Relaxed) > 0,
+            "compiled tier never engaged end-to-end"
+        );
+    }
+}
+
+#[test]
+fn compiled_rates_move_sim_and_estimates_together() {
+    // Lockstep drift-proofing for the compiled-tier rates, mirroring
+    // `exec_profile_perturbation_moves_sim_and_estimates_together`:
+    // doubling any compiled rate must raise the *simulated* pushdown
+    // latency and the *planner's* pushdown estimate together, because
+    // the OSD charges and the estimator both read the same
+    // `ExecProfile` and pick the same tier via `compiled_wins`.
+    use skyhook_map::config::{ClusterConfig, DriverConfig};
+    use skyhook_map::dataset::metadata;
+    use skyhook_map::dataset::partition::PartitionSpec;
+    use skyhook_map::simnet::{CostParams, ExecProfile};
+    use skyhook_map::skyhook::{plan_costed, register_skyhook_class, Driver, ExecMode, Query};
+    use skyhook_map::store::{ClassRegistry, Cluster};
+
+    if skyhook_map::skyhook::scalar_forced() {
+        eprintln!("skipping: SKYHOOK_FORCE_SCALAR forces the scalar tier");
+        return;
+    }
+
+    fn driver_with(exec: ExecProfile) -> Driver {
+        let mut reg = ClassRegistry::with_builtins();
+        register_skyhook_class(&mut reg, None);
+        let cfg = ClusterConfig {
+            osds: 3,
+            replicas: 1,
+            ..Default::default()
+        };
+        let cost = CostParams {
+            exec,
+            ..CostParams::paper_testbed()
+        };
+        Driver::new(
+            Cluster::with_cost(&cfg, reg, cost),
+            DriverConfig {
+                workers: 2,
+                ..Default::default()
+            },
+        )
+    }
+
+    let cases: Vec<(&'static str, fn(&mut ExecProfile))> = vec![
+        ("compiled_row_pred_cost_s", |p| p.compiled_row_pred_cost_s *= 2.0),
+        ("compiled_val_agg_cost_s", |p| p.compiled_val_agg_cost_s *= 2.0),
+        ("compiled_chunk_launch_s", |p| p.compiled_chunk_launch_s *= 2.0),
+    ];
+    // One ~12k-row object: big enough that the compiled tier wins before
+    // *and* after doubling any single rate (scalar costs ~168 µs/object,
+    // compiled stays under ~80 µs), so both sides keep picking it and
+    // the deltas are attributable to the doubled rate.
+    let batch = skyhook_map::dataset::table::gen::sensor_table(12_000, 11);
+    let q = Query::scan("p")
+        .filter(Predicate::cmp("val", CmpOp::Gt, 0.0))
+        .aggregate(AggFunc::Sum, "val");
+    for (field, mutate) in cases {
+        let mut measured = Vec::new();
+        for step in 0..2 {
+            let mut exec = ExecProfile::default().with_compiled_tier();
+            if step == 1 {
+                mutate(&mut exec);
+            }
+            let d = driver_with(exec);
+            d.write_table(
+                "p",
+                &batch,
+                Layout::Col,
+                &PartitionSpec::with_target(512 * 1024),
+                None,
+            )
+            .unwrap();
+            d.reset_time();
+            let r = d.execute(&q, Some(ExecMode::Pushdown)).unwrap();
+            assert!(
+                r.stats.compiled_chunks > 0,
+                "{field}: compiled tier must engage for the case to mean anything"
+            );
+            let (meta, _) = metadata::load_meta(d.cluster(), 0.0, "p").unwrap();
+            let plan =
+                plan_costed(&q, &meta, Some(ExecMode::Pushdown), true, d.cluster().cost())
+                    .unwrap();
+            measured.push((r.stats.sim_seconds, plan.cost.pushdown_s));
+        }
+        let ((sim0, est0), (sim1, est1)) = (measured[0], measured[1]);
+        assert!(
+            sim1 > sim0 && est1 > est0,
+            "{field}: doubling must raise sim ({sim0}→{sim1}) and estimate ({est0}→{est1})"
+        );
+    }
+}
+
 #[test]
 fn vol_forwarding_matches_reference_buffer() {
     // Model-based test: the forwarding VOL backend must behave exactly

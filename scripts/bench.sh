@@ -10,8 +10,11 @@
 #                           the planner's cost-based offload choice)
 #   BENCH_physdesign.json — E4 (row-vs-col layout + the clustered-ingest
 #                           sweep: prefix reads, pruning, bytes moved)
+#   BENCH_kernel.json     — E1 (estimator-side compiled-tier ablation,
+#                           E1b) + E2 (execution-side ablation, E2d):
+#                           the compiled-vs-scalar kernel trajectory
 #
-# Usage: scripts/bench.sh [pushdown.json [compose.json [costmodel.json [physdesign.json]]]]
+# Usage: scripts/bench.sh [pushdown.json [compose.json [costmodel.json [physdesign.json [kernel.json]]]]]
 #
 # Each snapshot records wall time per bench plus the raw table output
 # (which includes bytes_moved / objects_pruned / sim_seconds columns).
@@ -22,6 +25,7 @@ out_json=${1:-BENCH_pushdown.json}
 compose_json=${2:-BENCH_compose.json}
 costmodel_json=${3:-BENCH_costmodel.json}
 physdesign_json=${4:-BENCH_physdesign.json}
+kernel_json=${5:-BENCH_kernel.json}
 workdir=$(mktemp -d)
 trap 'rm -rf "$workdir"' EXIT
 
@@ -47,6 +51,7 @@ run_bench e3_object_size || status=1
 run_bench e5_composability || status=1
 run_bench e6_cost_model || status=1
 run_bench e4_physical_design || status=1
+run_bench e1_table1_forwarding || status=1
 
 snapshot() {
     local out=$1
@@ -89,5 +94,6 @@ snapshot "$out_json" e2_pushdown e3_object_size
 snapshot "$compose_json" e5_composability
 snapshot "$costmodel_json" e6_cost_model
 snapshot "$physdesign_json" e4_physical_design
+snapshot "$kernel_json" e1_table1_forwarding e2_pushdown
 
 exit $status
