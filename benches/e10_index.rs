@@ -1,0 +1,167 @@
+//! E10-index — the secondary-index access path, validated end to end.
+//!
+//! Sweeps predicate selectivity over a uniformly-valued column indexed
+//! at ingest and records, per cell: the planner's free index-vs-scan
+//! choice, probe/posting counters, and the simulated latency of the
+//! chosen plan against both forced access paths.
+//!
+//! The crossover the cost model must get right (paper §4.2; Skyhook
+//! arXiv:2204.06074):
+//!
+//! - **needle** predicates → IndexScan (a handful of postings beat
+//!   re-evaluating the filter over every row, even after paying LSM
+//!   read amplification on the probe);
+//! - **broad** predicates → scan (walking most of the postings list
+//!   costs more than the sequential row pass it was meant to avoid).
+//!
+//! The regime assertions are hard at the extremes: the bench fails if
+//! the planner probes in the broad regime, scans in the needle regime,
+//! or the chosen plan is slower than the best forced baseline (beyond
+//! noise). The middle cells are reported, not pinned — they are the
+//! crossover itself.
+//!
+//! Run: `cargo bench --bench e10_index` (snapshotted into
+//! `BENCH_index.json` by `scripts/bench.sh`).
+
+use skyhook_map::config::Config;
+use skyhook_map::dataset::partition::PartitionSpec;
+use skyhook_map::dataset::table::Batch;
+use skyhook_map::dataset::{Column, DType, Layout, TableSchema};
+use skyhook_map::launch::Stack;
+use skyhook_map::skyhook::{AccessForce, AggFunc, CmpOp, ExecMode, Predicate, Query};
+use skyhook_map::util::bench::table;
+use skyhook_map::util::bytes::fmt_size;
+
+fn main() {
+    // Uniform val in [0, 100): selectivities are arithmetic, so the
+    // estimator's uniform-window model is exact and the regime cells
+    // are decisive rather than distribution-tail lottery tickets.
+    let rows = 200_000usize;
+    let ts: Vec<i64> = (0..rows as i64).collect();
+    let val: Vec<f32> = (0..rows).map(|i| (i % 10_000) as f32 / 100.0).collect();
+    let batch = Batch::new(
+        TableSchema::new(&[("ts", DType::I64), ("val", DType::F32)]),
+        vec![Column::I64(ts), Column::F32(val)],
+    )
+    .unwrap();
+
+    // (threshold on val, exact selectivity label, rows matched per 10k).
+    let cells: &[(f64, &str, usize)] = &[
+        (99.95, "0.0004", 4),
+        (99.5, "0.0049", 49),
+        (95.0, "0.0499", 499),
+        (50.0, "0.4999", 4999),
+        (0.0, "0.9999", 9999),
+    ];
+
+    let toml = "[cluster]\nosds = 6\nreplicas = 1\n[driver]\nworkers = 6\n";
+    let stack = Stack::build(&Config::from_text(toml).unwrap()).unwrap();
+    stack
+        .driver
+        .write_table(
+            "t",
+            &batch,
+            Layout::Col,
+            &PartitionSpec::with_target(512 * 1024).index("val"),
+            None,
+        )
+        .unwrap();
+
+    let mut out = Vec::new();
+    for &(thr, sel_label, per_cycle) in cells {
+        let q = Query::scan("t")
+            .filter(Predicate::cmp("val", CmpOp::Gt, thr))
+            .aggregate(AggFunc::Count, "val");
+        let push = Some(ExecMode::Pushdown);
+
+        stack.driver.reset_time();
+        let chosen = stack.driver.execute_with_access(&q, push, None).unwrap();
+        stack.driver.reset_time();
+        let ix = stack
+            .driver
+            .execute_with_access(&q, push, Some(AccessForce::Index))
+            .unwrap();
+        stack.driver.reset_time();
+        let scan = stack
+            .driver
+            .execute_with_access(&q, push, Some(AccessForce::Scan))
+            .unwrap();
+
+        // All three paths agree bit-for-bit on the exact count.
+        let expect = (per_cycle * (rows / 10_000)) as f64;
+        assert_eq!(chosen.aggregates[0], expect, "sel {sel_label}");
+        assert_eq!(chosen.aggregates[0].to_bits(), ix.aggregates[0].to_bits());
+        assert_eq!(chosen.aggregates[0].to_bits(), scan.aggregates[0].to_bits());
+        assert!(ix.stats.index_probes > 0, "forced index must probe");
+        assert_eq!(scan.stats.index_probes, 0, "forced scan must not probe");
+
+        out.push(vec![
+            sel_label.to_string(),
+            chosen.stats.objects.to_string(),
+            chosen.stats.index_probes.to_string(),
+            chosen.stats.index_postings.to_string(),
+            fmt_size(chosen.stats.bytes_moved),
+            format!("{:.4}", chosen.stats.sim_seconds),
+            format!("{:.4}", ix.stats.sim_seconds),
+            format!("{:.4}", scan.stats.sim_seconds),
+        ]);
+
+        let best = ix.stats.sim_seconds.min(scan.stats.sim_seconds);
+        if thr >= 99.5 {
+            // Needle regime: the planner must probe, and the probe must
+            // actually be the faster path it was priced as.
+            assert!(
+                chosen.stats.index_probes > 0,
+                "sel {sel_label}: needle regime must pick IndexScan"
+            );
+            assert!(
+                ix.stats.sim_seconds < scan.stats.sim_seconds,
+                "sel {sel_label}: forced index {} should beat forced scan {}",
+                ix.stats.sim_seconds,
+                scan.stats.sim_seconds
+            );
+        }
+        if thr <= 50.0 {
+            // Broad regime: postings dominate; the planner must scan.
+            assert_eq!(
+                chosen.stats.index_probes,
+                0,
+                "sel {sel_label}: broad regime must pick the scan"
+            );
+            assert!(
+                scan.stats.sim_seconds < ix.stats.sim_seconds,
+                "sel {sel_label}: forced scan {} should beat forced index {}",
+                scan.stats.sim_seconds,
+                ix.stats.sim_seconds
+            );
+        }
+        // Wherever the planner landed, the chosen plan tracks the best
+        // forced baseline — the est-vs-actual bar for the probe pricing.
+        assert!(
+            chosen.stats.sim_seconds <= best * 1.10,
+            "sel {sel_label}: chosen {} vs best forced {best}",
+            chosen.stats.sim_seconds,
+        );
+    }
+
+    table(
+        "E10-index: index-vs-scan selectivity crossover (count(val) where val > t)",
+        &[
+            "sel",
+            "objects",
+            "probes",
+            "postings",
+            "moved",
+            "chosen sim s",
+            "index sim s",
+            "scan sim s",
+        ],
+        &out,
+    );
+    println!(
+        "\nexpected shape: needle rows probe (postings ~ matched rows, tiny bytes\n\
+         moved), broad rows scan (probes = 0); the `chosen` column tracks\n\
+         min(index, scan) in every row, crossing over in the middle cells."
+    );
+    println!("\ne10_index OK");
+}

@@ -8,7 +8,7 @@
 //! ```text
 //! skyhook-map demo                          # quick end-to-end tour
 //! skyhook-map put    --dataset D --rows N [--layout row|col] [--object-size 4MiB]
-//!                    [--cluster-by COL]
+//!                    [--cluster-by COL] [--index COLS]
 //! skyhook-map query  --dataset D [--filter EXPR] [--agg F:COL]... [--group C1,C2]
 //!                    [--select C1,C2] [--sort SPEC] [--limit N]
 //!                    [--pipe PIPELINE] [--explain] [--force-mode push|client]
@@ -102,6 +102,12 @@ fn build_config(f: &Flags) -> Result<Config> {
     if let Some(col) = f.get("cluster-by") {
         cfg.dataset.cluster_by = Some(col.to_string());
     }
+    // --index (repeatable and/or comma-separated) overrides the config
+    // file's [dataset] index.
+    let ix = f.get_all("index");
+    if !ix.is_empty() {
+        cfg.dataset.index = Config::parse_index_cols(&ix.join(","))?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -165,6 +171,10 @@ FLAGS:
   --cluster-by COL  sort-aware clustered ingest: sort rows by COL at write
                     time (disjoint zone maps on COL; per-object top-k over
                     it becomes a bounded prefix read)
+  --index COLS      keep a server-local secondary index on these columns
+                    (repeatable or comma-separated, i64/f32 only): postings
+                    are built per object at ingest and the planner serves
+                    selective predicates via IndexScan probes
   --filter EXPR     predicate, e.g. 'val > 50 && flag == 1'
   --agg F:COL       aggregate (repeatable): count/sum/min/max/mean/var/median
   --group C1,C2     group-by key columns (with one or more --agg)
@@ -204,6 +214,7 @@ fn partition_spec(cfg: &Config, target: u64) -> PartitionSpec {
     PartitionSpec {
         target_bytes: target,
         cluster_by: cfg.dataset.cluster_by.clone(),
+        index_cols: cfg.dataset.index.clone(),
         ..Default::default()
     }
 }
@@ -305,10 +316,13 @@ fn cmd_put(f: &Flags, out: &mut String) -> Result<()> {
     let rep = stack
         .driver
         .write_table(&dataset, &batch, layout, &partition_spec(&cfg, target), None)?;
-    let how = match &cfg.dataset.cluster_by {
+    let mut how = match &cfg.dataset.cluster_by {
         Some(col) => format!(" clustered by {col:?},"),
         None => String::new(),
     };
+    if !cfg.dataset.index.is_empty() {
+        let _ = write!(how, " indexed on {},", cfg.dataset.index.join(","));
+    }
     let _ = writeln!(
         out,
         "wrote {} rows to {:?}:{} {} objects, {} total, sim {:.3}s wall {:.3}s",
@@ -408,7 +422,7 @@ fn cmd_query(f: &Flags, out: &mut String) -> Result<()> {
         out,
         "-- {} objects ({} pruned, {} skipped), {} moved (est {}{ratio}), \
          {} reads coalesced, {} prefix reads, {} rows short-circuited, \
-         sim {:.4}s, wall {:.4}s, modes {}p/{}c",
+         {} index probes ({} postings), sim {:.4}s, wall {:.4}s, modes {}p/{}c",
         r.stats.objects,
         r.stats.objects_pruned,
         fmt_size(r.stats.bytes_skipped),
@@ -417,6 +431,8 @@ fn cmd_query(f: &Flags, out: &mut String) -> Result<()> {
         r.stats.reads_coalesced,
         r.stats.prefix_reads,
         r.stats.rows_short_circuited,
+        r.stats.index_probes,
+        r.stats.index_postings,
         r.stats.sim_seconds,
         r.stats.wall_seconds,
         r.stats.objects_pushdown,
@@ -573,6 +589,56 @@ mod tests {
         assert!(out.contains("clustered by \"val\""), "{out}");
         // Ghost columns fail before any write.
         assert!(run(&args(&["put", "--dataset", "d", "--cluster-by", "nope"])).is_err());
+    }
+
+    #[test]
+    fn put_with_index_builds_and_reports() {
+        let out = run(&args(&[
+            "put",
+            "--dataset",
+            "d",
+            "--rows",
+            "2000",
+            "--index",
+            "val,sensor",
+        ]))
+        .unwrap();
+        assert!(out.contains("indexed on val,sensor"), "{out}");
+        // Repeatable form parses the same list.
+        let out = run(&args(&[
+            "put",
+            "--dataset",
+            "d",
+            "--rows",
+            "500",
+            "--index",
+            "val",
+            "--index",
+            "sensor",
+        ]))
+        .unwrap();
+        assert!(out.contains("indexed on val,sensor"), "{out}");
+        // Ghost / non-indexable columns fail before any write.
+        assert!(run(&args(&["put", "--dataset", "d", "--index", "nope"])).is_err());
+        assert!(run(&args(&["put", "--dataset", "d", "--index", "val,val"])).is_err());
+    }
+
+    #[test]
+    fn query_footer_carries_index_counters() {
+        let out = run(&args(&[
+            "query",
+            "--dataset",
+            "d",
+            "--index",
+            "val",
+            "--filter",
+            "val > 99",
+            "--agg",
+            "count:val",
+            "--explain",
+        ]))
+        .unwrap();
+        assert!(out.contains("index probes"), "{out}");
     }
 
     #[test]

@@ -110,6 +110,28 @@ pub struct DatasetConfig {
     /// zone maps) and is internally sorted (prefix-read top-k, per-object
     /// sort skipping). `None` = unclustered, the legacy layout.
     pub cluster_by: Option<String>,
+    /// Columns to keep a server-local `ix1` secondary index on: postings
+    /// are built per object as ingest seals it, and the planner offers
+    /// the IndexScan access path for predicates these columns bound.
+    /// Comma-separated in the config file (`index = "val,sensor"`).
+    pub index: Vec<String>,
+}
+
+fn parse_index_cols(s: &str) -> Result<Vec<String>> {
+    let mut cols = Vec::new();
+    for part in s.split(',') {
+        let name = part.trim();
+        if name.is_empty() {
+            return Err(Error::Config(format!(
+                "dataset.index holds an empty column name in {s:?}"
+            )));
+        }
+        if cols.iter().any(|c| c == name) {
+            return Err(Error::Config(format!("dataset.index lists {name:?} twice")));
+        }
+        cols.push(name.to_string());
+    }
+    Ok(cols)
 }
 
 /// Top-level configuration.
@@ -238,7 +260,7 @@ impl Config {
         if let Some(sec) = doc.section("dataset") {
             for key in sec.keys() {
                 match key.as_str() {
-                    "cluster_by" => {}
+                    "cluster_by" | "index" => {}
                     other => return Err(Error::Config(format!("unknown key dataset.{other}"))),
                 }
             }
@@ -249,6 +271,9 @@ impl Config {
             }
             cfg.dataset.cluster_by = Some(s.to_string());
         }
+        if let Some(s) = doc.get_str("dataset.index") {
+            cfg.dataset.index = parse_index_cols(s)?;
+        }
 
         cfg.validate()?;
         Ok(cfg)
@@ -258,6 +283,14 @@ impl Config {
     pub fn from_file(path: &str) -> Result<Config> {
         let text = std::fs::read_to_string(path)?;
         Self::from_text(&text)
+    }
+
+    /// Parse a comma-separated index-column list (`"val,sensor"`), as
+    /// accepted by both `[dataset] index` and the CLI `--index` flag.
+    /// Rejects empty names and duplicates; column existence and dtype
+    /// are checked against the schema at write time.
+    pub fn parse_index_cols(s: &str) -> Result<Vec<String>> {
+        parse_index_cols(s)
     }
 
     /// Invariant checks shared by the builders.
@@ -355,6 +388,15 @@ use_pjrt = true
         assert_eq!(cfg.dataset.cluster_by.as_deref(), Some("val"));
         assert_eq!(Config::default().dataset.cluster_by, None);
         assert!(Config::from_text("[dataset]\ncluster_by = \"\"").is_err());
+    }
+
+    #[test]
+    fn dataset_index_knob() {
+        let cfg = Config::from_text("[dataset]\nindex = \"val, sensor\"").unwrap();
+        assert_eq!(cfg.dataset.index, vec!["val".to_string(), "sensor".into()]);
+        assert!(Config::default().dataset.index.is_empty());
+        assert!(Config::from_text("[dataset]\nindex = \"val,,ts\"").is_err());
+        assert!(Config::from_text("[dataset]\nindex = \"val,val\"").is_err());
     }
 
     #[test]

@@ -38,6 +38,11 @@ pub struct IngestConfig {
     /// zone maps sharpen only as far as the arrival order allows, but
     /// prefix-read top-k and sort-skipping work on every object.
     pub cluster_by: Option<String>,
+    /// Columns to keep under a server-local secondary index: every
+    /// sealed object gets its `ix1/` omap postings built right after the
+    /// write, and the finalized metadata lists the columns so the
+    /// planner can offer the IndexScan access path. i64/f32 only.
+    pub index_cols: Vec<String>,
 }
 
 impl Default for IngestConfig {
@@ -48,6 +53,7 @@ impl Default for IngestConfig {
             max_inflight: 8,
             locality: None,
             cluster_by: None,
+            index_cols: Vec::new(),
         }
     }
 }
@@ -104,6 +110,9 @@ impl Ingestor {
             // Fail at open, not on the first sealed group.
             schema.col_index(col)?;
         }
+        // Same early-failure contract for indexed columns: a ghost or
+        // string column is rejected before any data moves.
+        metadata::validate_index_cols(schema, &cfg.index_cols)?;
         Ok(Ingestor {
             cluster,
             pool,
@@ -184,12 +193,26 @@ impl Ingestor {
         let cluster = Arc::clone(&self.cluster);
         let shared = Arc::clone(&self.shared);
         let layout = self.cfg.layout;
+        let index_cols = self.cfg.index_cols.clone();
         let cpu = Arc::clone(&self.worker_cpu);
         self.pool.spawn_tracked(&self.wg, move || {
             let _credit = credit; // released when the write completes
             let rows = group.nrows() as u64;
-            match crate::skyhook::worker::write_row_group(&cluster, &name, &group, layout, 0.0, &cpu)
-            {
+            let write_and_index = || -> Result<(u64, f64, Vec<metadata::ColumnStats>)> {
+                let (bytes, mut finish, stats) = crate::skyhook::worker::write_row_group(
+                    &cluster, &name, &group, layout, 0.0, &cpu,
+                )?;
+                // Index maintenance rides the write: postings exist
+                // before the metadata that advertises them commits.
+                for col in &index_cols {
+                    let mut w = crate::util::bytes::ByteWriter::new();
+                    w.str(col);
+                    let t = cluster.call(finish, &name, "skyhook", "build_index", &w.finish())?;
+                    finish = finish.max(t.finish);
+                }
+                Ok((bytes, finish, stats))
+            };
+            match write_and_index() {
                 Ok((bytes, finish, stats)) => {
                     let mut s = shared.lock().unwrap();
                     s.row_groups.push((index, RowGroupMeta { rows, bytes, stats }));
@@ -248,6 +271,7 @@ impl Ingestor {
             row_groups: row_groups.into_iter().map(|(_, g)| g).collect(),
             localities,
             cluster_by: self.cfg.cluster_by.clone().unwrap_or_default(),
+            index_cols: self.cfg.index_cols.clone(),
         };
         let sim = metadata::save_meta(&self.cluster, s.sim_finish, &self.dataset, &meta, false)?;
         Ok(IngestReport {

@@ -37,6 +37,16 @@ impl Metrics {
             .or_insert(0) += by;
     }
 
+    /// Set a gauge-style counter to an absolute value (last write wins)
+    /// — for state snapshots like LSM run counts, where accumulation
+    /// would be meaningless.
+    pub fn set(&self, name: &str, value: u64) {
+        self.counters
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), value);
+    }
+
     /// Record a latency/duration observation (seconds).
     pub fn observe(&self, name: &str, seconds: f64) {
         self.histograms
@@ -112,6 +122,14 @@ mod tests {
         m.incr("reqs", 2);
         assert_eq!(m.counter("reqs"), 3);
         assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let m = Metrics::new();
+        m.set("kv.runs", 7);
+        m.set("kv.runs", 3);
+        assert_eq!(m.counter("kv.runs"), 3);
     }
 
     #[test]

@@ -92,6 +92,15 @@ impl Router {
                     self.metrics.incr("router.pushdown_queries", 1);
                 }
                 self.metrics
+                    .incr("router.index_probes", r.stats.index_probes);
+                self.metrics
+                    .incr("router.index_postings", r.stats.index_postings);
+                if r.stats.index_probes > 0 {
+                    // Probes pay per LSM run; keep the gauges current so
+                    // the report explains the probe-vs-scan choice.
+                    self.observe_kv_stats();
+                }
+                self.metrics
                     .observe("router.query_latency", start.elapsed().as_secs_f64());
                 self.metrics
                     .observe("router.query_sim_seconds", r.stats.sim_seconds);
@@ -100,6 +109,8 @@ impl Router {
             Request::BuildIndex { dataset, column } => {
                 self.metrics.incr("router.index_builds", 1);
                 let n = self.driver.build_index(&dataset, &column)?;
+                self.metrics.incr("router.index_rows", n);
+                self.observe_kv_stats();
                 Response::Index(n)
             }
             Request::Transform { dataset, target } => {
@@ -114,6 +125,20 @@ impl Router {
     /// Available write credits (observability).
     pub fn write_credits_available(&self) -> usize {
         self.write_gate.available()
+    }
+
+    /// Snapshot the OSDs' LSM state into gauge metrics, so index builds
+    /// and probes leave more signal than the bare `router.index_builds`
+    /// count: total sorted runs and buffered memtable entries across the
+    /// cluster, plus the worst-case read amplification a probe pays.
+    fn observe_kv_stats(&self) {
+        let stats = self.driver.cluster().kv_stats();
+        let runs: usize = stats.iter().map(|s| s.runs).sum();
+        let mem: usize = stats.iter().map(|s| s.memtable_entries).sum();
+        let amp = stats.iter().map(|s| s.read_amp()).max().unwrap_or(1);
+        self.metrics.set("kv.sstable_runs", runs as u64);
+        self.metrics.set("kv.memtable_entries", mem as u64);
+        self.metrics.set("kv.read_amp_max", amp as u64);
     }
 }
 
@@ -191,6 +216,15 @@ mod tests {
             panic!()
         };
         assert_eq!(n, 500);
+        // The build left LSM signal behind, not just a request count:
+        // postings sit in memtables/runs and the probe-cost gauge is live.
+        assert_eq!(r.metrics.counter("router.index_builds"), 1);
+        assert_eq!(r.metrics.counter("router.index_rows"), 500);
+        assert!(r.metrics.counter("kv.read_amp_max") >= 1);
+        assert!(
+            r.metrics.counter("kv.memtable_entries") + r.metrics.counter("kv.sstable_runs") > 0,
+            "postings should be buffered or flushed somewhere"
+        );
         let Response::Transform(rep) = r
             .handle(Request::Transform {
                 dataset: "s".into(),

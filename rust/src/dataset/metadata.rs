@@ -409,6 +409,13 @@ pub enum DatasetMeta {
         /// markers in `RowGroupMeta::stats` are what the read side
         /// actually trusts per object.
         cluster_by: String,
+        /// Columns carrying a server-local secondary index (`ix1/` omap
+        /// postings) on every data object. Stamped at ingest
+        /// (`PartitionSpec::index_cols`) or by `Driver::build_index`;
+        /// layout transforms rebuild the postings, so a listed column's
+        /// index is never stale. The planner only considers the
+        /// IndexScan access path for columns listed here.
+        index_cols: Vec<String>,
     },
     Array {
         space: Dataspace,
@@ -475,13 +482,15 @@ impl DatasetMeta {
                 row_groups,
                 localities,
                 cluster_by,
+                index_cols,
             } => {
-                // Kind 4: table metadata with per-group zone maps carrying
-                // NaN counts and sortedness markers, plus the dataset's
-                // clustered column (kind 3 lacks markers/clustering, kind
-                // 2 is the min/max-only encoding, kind 0 the legacy
-                // stats-less one; all still decodable).
-                w.u8(4);
+                // Kind 5: kind 4 (per-group zone maps with NaN counts and
+                // sortedness markers + the clustered column) plus the
+                // dataset's indexed-column list (kind 3 lacks
+                // markers/clustering, kind 2 is the min/max-only
+                // encoding, kind 0 the legacy stats-less one; all still
+                // decodable).
+                w.u8(5);
                 w.bytes(&schema.encode());
                 w.u8(match layout {
                     Layout::Row => 0,
@@ -500,6 +509,10 @@ impl DatasetMeta {
                     w.str(l);
                 }
                 w.str(cluster_by);
+                w.u32(index_cols.len() as u32);
+                for c in index_cols {
+                    w.str(c);
+                }
             }
             DatasetMeta::Array { space, chunk } => {
                 w.u8(1);
@@ -519,7 +532,7 @@ impl DatasetMeta {
             return Err(Error::Corrupt("bad meta magic".into()));
         }
         match r.u8()? {
-            kind if kind == 0 || kind == 2 || kind == 3 || kind == 4 => {
+            kind if kind == 0 || kind == 2 || kind == 3 || kind == 4 || kind == 5 => {
                 let schema = TableSchema::decode(r.bytes()?)?;
                 let layout = match r.u8()? {
                     0 => Layout::Row,
@@ -542,7 +555,7 @@ impl DatasetMeta {
                         let mut stats = Vec::with_capacity(k);
                         for _ in 0..k {
                             stats.push(match kind {
-                                4 => ColumnStats::decode_from(&mut r)?,
+                                4 | 5 => ColumnStats::decode_from(&mut r)?,
                                 3 => ColumnStats::decode_v2_from(&mut r)?,
                                 _ => ColumnStats::decode_legacy_from(&mut r)?,
                             });
@@ -562,12 +575,26 @@ impl DatasetMeta {
                 } else {
                     String::new()
                 };
+                let index_cols = if kind >= 5 {
+                    let k = r.u32()? as usize;
+                    if k > 100_000 {
+                        return Err(Error::Corrupt("absurd index column count".into()));
+                    }
+                    let mut cols = Vec::with_capacity(k);
+                    for _ in 0..k {
+                        cols.push(r.str()?.to_string());
+                    }
+                    cols
+                } else {
+                    Vec::new()
+                };
                 Ok(DatasetMeta::Table {
                     schema,
                     layout,
                     row_groups,
                     localities,
                     cluster_by,
+                    index_cols,
                 })
             }
             1 => {
@@ -585,6 +612,24 @@ impl DatasetMeta {
             o => Err(Error::Corrupt(format!("bad dataset kind {o}"))),
         }
     }
+}
+
+/// Validate that every column in `cols` exists in `schema` with a dtype
+/// the `ix1/` secondary-index key encoding covers (i64 and f32, the
+/// order-preserving encodings). Shared by every path that stamps
+/// `index_cols` — ingest config, partitioned bulk write, and
+/// `Driver::build_index` — so an unindexable column fails before any
+/// data moves.
+pub fn validate_index_cols(schema: &TableSchema, cols: &[String]) -> Result<()> {
+    for c in cols {
+        let dtype = schema.col(schema.col_index(c)?).dtype;
+        if !matches!(dtype, crate::dataset::DType::I64 | crate::dataset::DType::F32) {
+            return Err(Error::Invalid(format!(
+                "cannot index {c:?}: only i64 and f32 columns are indexable"
+            )));
+        }
+    }
+    Ok(())
 }
 
 /// Store dataset metadata in the cluster. Fails if it already exists
@@ -719,6 +764,7 @@ mod tests {
             ],
             localities: vec![String::new(), "grp1".into()],
             cluster_by: "b".into(),
+            index_cols: vec!["b".into()],
         }
     }
 
@@ -972,17 +1018,69 @@ mod tests {
     }
 
     #[test]
-    fn kind4_roundtrip_preserves_markers_and_cluster_column() {
+    fn kind5_roundtrip_preserves_markers_cluster_and_index_cols() {
         let m = table_meta();
         assert_eq!(m.cluster_column(), Some("b"));
         let dec = DatasetMeta::decode(&m.encode()).unwrap();
         assert_eq!(dec, m);
         assert_eq!(dec.cluster_column(), Some("b"));
-        let DatasetMeta::Table { row_groups, .. } = dec else {
+        let DatasetMeta::Table {
+            row_groups,
+            index_cols,
+            ..
+        } = dec
+        else {
             panic!("expected table");
         };
         assert!(row_groups[0].stats[1].sorted);
         assert!(!row_groups[0].stats[0].sorted);
+        assert_eq!(index_cols, vec!["b".to_string()]);
+    }
+
+    #[test]
+    fn kind4_meta_fixture_decodes_with_empty_index_cols() {
+        // Hand-build a kind-4 (pre-index) fixture: it decodes with no
+        // indexed columns, so older datasets never plan an IndexScan.
+        let schema = TableSchema::new(&[("a", DType::F32)]);
+        let mut w = ByteWriter::new();
+        w.raw(META_MAGIC);
+        w.u8(4);
+        w.bytes(&schema.encode());
+        w.u8(1); // Col
+        w.u32(1);
+        w.u64(10);
+        w.u64(500);
+        w.u32(1);
+        w.f64(-2.0);
+        w.f64(9.0);
+        w.u64(0);
+        w.u8(1); // sorted marker
+        w.str("");
+        w.str("a"); // cluster_by
+        let m = DatasetMeta::decode(&w.finish()).unwrap();
+        assert_eq!(m.cluster_column(), Some("a"));
+        let DatasetMeta::Table { index_cols, .. } = m else {
+            panic!("expected table");
+        };
+        assert!(index_cols.is_empty());
+    }
+
+    #[test]
+    fn index_col_validation_rejects_ghosts_and_strings() {
+        let schema = TableSchema::new(&[
+            ("i", DType::I64),
+            ("f", DType::F32),
+            ("d", DType::F64),
+            ("s", DType::Str),
+        ]);
+        assert!(validate_index_cols(&schema, &["i".into(), "f".into()]).is_ok());
+        assert!(validate_index_cols(&schema, &[]).is_ok());
+        assert!(validate_index_cols(&schema, &["ghost".into()]).is_err());
+        assert!(validate_index_cols(&schema, &["s".into()]).is_err());
+        assert!(
+            validate_index_cols(&schema, &["d".into()]).is_err(),
+            "f64 has no order-preserving ix1 encoding yet"
+        );
     }
 
     #[test]
@@ -1010,6 +1108,7 @@ mod tests {
             }],
             localities: vec![String::new()],
             cluster_by: "k".into(),
+            index_cols: vec![],
         };
         save_meta(&c, 0.0, "d", &meta, false).unwrap();
         assert_eq!(verify_sortedness(&c, "d").unwrap(), Vec::<String>::new());

@@ -19,6 +19,12 @@ pub struct PartitionSpec {
     /// partitioning, and every object's rows come out sorted — the
     /// write-time physical design the sortedness markers advertise.
     pub cluster_by: Option<String>,
+    /// Columns to keep secondary (`ix1/` omap) indexes on: each written
+    /// object gets a value→row-id index built right after its write, and
+    /// the dataset metadata records the columns so the planner can offer
+    /// the IndexScan access path and transforms know what to rebuild.
+    /// Only i64 and f32 columns are indexable.
+    pub index_cols: Vec<String>,
 }
 
 impl Default for PartitionSpec {
@@ -27,6 +33,7 @@ impl Default for PartitionSpec {
             target_bytes: 4 * 1024 * 1024,
             min_rows: 1,
             cluster_by: None,
+            index_cols: Vec::new(),
         }
     }
 }
@@ -42,6 +49,12 @@ impl PartitionSpec {
     /// Builder: cluster the dataset by `col` at write time.
     pub fn cluster_by(mut self, col: &str) -> Self {
         self.cluster_by = Some(col.to_string());
+        self
+    }
+
+    /// Builder: maintain a secondary index on `col` (repeatable).
+    pub fn index(mut self, col: &str) -> Self {
+        self.index_cols.push(col.to_string());
         self
     }
 
@@ -258,6 +271,7 @@ mod tests {
             target_bytes: 1, // absurdly small
             min_rows: 10,
             cluster_by: None,
+            index_cols: vec![],
         };
         let groups = spec.partition(&b).unwrap();
         assert_eq!(groups.len(), 10);

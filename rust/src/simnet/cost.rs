@@ -75,6 +75,18 @@ pub struct ExecProfile {
     ///
     /// [`CHUNK_ROWS`]: crate::skyhook::exec_kernel::CHUNK_ROWS
     pub compiled_chunk_launch_s: f64,
+    /// Per-probe cost of one secondary-index omap range scan on the
+    /// storage server (seconds), **before** LSM read amplification: the
+    /// extension charges `index_probe_cost_s × read_amp` where
+    /// `read_amp` is the live `KvStore` sorted-run count
+    /// (`KvStats::read_amp`), and the estimator applies the same
+    /// multiplier via [`AccessProfile::index_read_amp`].
+    pub index_probe_cost_s: f64,
+    /// Per-posting cost of materializing one (key, row-id) entry out of
+    /// the probed omap range (seconds). This is what makes an index
+    /// probe *lose* at low selectivity: a near-full postings list costs
+    /// more than the branch-free scan it was supposed to replace.
+    pub index_posting_cost_s: f64,
 }
 
 // The default execution rates — each constant is defined here, once,
@@ -91,6 +103,13 @@ const CLIENT_ROW_COST: f64 = 12e-9;
 const COMPILED_ROW_PRED_COST: f64 = 2e-9;
 const COMPILED_VAL_AGG_COST: f64 = 1e-9;
 const COMPILED_CHUNK_LAUNCH: f64 = 20e-6;
+// Index-probe rates: one omap range scan costs about as much as a
+// compiled-chunk launch (point lookups into the LSM), and each posting
+// materialized costs ~10 scalar predicate rows — so the probe path wins
+// only when the predicate is selective enough to skip far more rows
+// than it returns postings.
+const INDEX_PROBE_COST: f64 = 20e-6;
+const INDEX_POSTING_COST: f64 = 100e-9;
 
 impl Default for ExecProfile {
     fn default() -> Self {
@@ -105,6 +124,8 @@ impl Default for ExecProfile {
             compiled_row_pred_cost_s: COMPILED_ROW_PRED_COST,
             compiled_val_agg_cost_s: COMPILED_VAL_AGG_COST,
             compiled_chunk_launch_s: COMPILED_CHUNK_LAUNCH,
+            index_probe_cost_s: INDEX_PROBE_COST,
+            index_posting_cost_s: INDEX_POSTING_COST,
         }
     }
 }
@@ -189,6 +210,13 @@ pub struct CostParams {
     ///
     /// [`HEADER_PREFIX`]: crate::dataset::layout::HEADER_PREFIX
     pub header_prefix: usize,
+    /// Cluster-wide LSM read-amplification factor for secondary-index
+    /// probes (`KvStats::read_amp`, ≥ 1). `1.0` = a fully-compacted
+    /// store. The driver stamps the live cluster's worst-case value
+    /// before planning, and the planner copies it into each index-path
+    /// [`AccessProfile::index_read_amp`], so a store drowning in
+    /// unmerged sorted runs prices index probes accordingly higher.
+    pub index_read_amp: f64,
 }
 
 impl CostParams {
@@ -212,6 +240,7 @@ impl CostParams {
             exec: ExecProfile::default(),
             osds: 0,
             header_prefix: crate::dataset::layout::HEADER_PREFIX,
+            index_read_amp: 1.0,
         }
     }
 
@@ -229,6 +258,7 @@ impl CostParams {
             exec: ExecProfile::default(),
             osds: 0,
             header_prefix: crate::dataset::layout::HEADER_PREFIX,
+            index_read_amp: 1.0,
         }
     }
 
@@ -246,6 +276,7 @@ impl CostParams {
             exec: ExecProfile::default(),
             osds: 0,
             header_prefix: crate::dataset::layout::HEADER_PREFIX,
+            index_read_amp: 1.0,
         }
     }
 
@@ -352,8 +383,14 @@ impl CostParams {
         } else {
             scalar_server
         };
+        // The IndexScan access path pays its omap probe (amplified by
+        // the store's sorted-run count) and per-posting materialization
+        // on the storage side only — the client never probes; it has no
+        // omap. Mirrors the `skyhook.exec` handler's charge exactly.
+        let probe = p.index_probes * self.exec.index_probe_cost_s * p.index_read_amp.max(1.0)
+            + p.index_postings * self.exec.index_posting_cost_s;
         QueryCost {
-            pushdown_s: self.osd_saturation(p) * server,
+            pushdown_s: self.osd_saturation(p) * (server + probe),
             client_s: p.rows as f64 * self.exec.client_row_cost_s + movable,
             pushdown_bytes: 0,
             client_bytes: 0,
@@ -434,6 +471,21 @@ pub struct AccessProfile {
     /// the dataset schema)? The planner stamps it; profiles built by
     /// hand default to `false` and price pure-scalar as before.
     pub compiled_eligible: bool,
+    /// Secondary-index omap range scans the pushdown side performs
+    /// (`0.0` = scan access path, `1.0` = one probe per object — the
+    /// IndexScan path). Priced at `ExecProfile::index_probe_cost_s` ×
+    /// [`AccessProfile::index_read_amp`]; zero keeps every existing
+    /// profile's estimate bit-identical.
+    pub index_probes: f64,
+    /// Estimated postings the probe returns (≈ matching rows of the
+    /// probe-able conjuncts), priced at
+    /// `ExecProfile::index_posting_cost_s`.
+    pub index_postings: f64,
+    /// LSM read-amplification multiplier applied to the probe cost
+    /// (`CostParams::index_read_amp`, stamped from the live cluster's
+    /// `KvStats`). Values below 1 are clamped to 1, so the
+    /// `Default`-zero stays inert.
+    pub index_read_amp: f64,
 }
 
 impl AccessProfile {
@@ -719,6 +771,83 @@ mod tests {
         let e4 = compiled2.estimate(&prof);
         assert!((e4.pushdown_s - e0.pushdown_s).abs() < 1e-15);
         assert!((e4.client_s - e0.client_s).abs() < 1e-15);
+        // Index-probe rates are equally dormant until the planner stamps
+        // a probe into the profile — then they move only the pushdown
+        // side, scaled by read amplification.
+        let mut ix2 = base.clone();
+        ix2.exec.index_probe_cost_s *= 2.0;
+        ix2.exec.index_posting_cost_s *= 2.0;
+        let e5 = ix2.estimate(&prof);
+        assert!((e5.pushdown_s - e0.pushdown_s).abs() < 1e-15);
+        assert!((e5.client_s - e0.client_s).abs() < 1e-15);
+        let probed = AccessProfile {
+            index_probes: 1.0,
+            index_postings: 500.0,
+            index_read_amp: 1.0,
+            ..prof
+        };
+        let p0 = base.estimate(&probed);
+        let p2 = ix2.estimate(&probed);
+        assert!(p0.pushdown_s > e0.pushdown_s, "a probe costs server time");
+        assert!((p0.client_s - e0.client_s).abs() < 1e-15, "the client never probes");
+        assert!(p2.pushdown_s > p0.pushdown_s);
+        assert!((p2.client_s - p0.client_s).abs() < 1e-15);
+        // Read amplification multiplies the probe term only; sub-1
+        // (including the Default zero) clamps to the compacted-store 1x.
+        let amped = AccessProfile {
+            index_read_amp: 4.0,
+            ..probed
+        };
+        let pa = base.estimate(&amped);
+        let expect = 3.0 * base.exec.index_probe_cost_s;
+        assert!((pa.pushdown_s - p0.pushdown_s - expect).abs() < 1e-12);
+        let zero_amp = AccessProfile {
+            index_read_amp: 0.0,
+            ..probed
+        };
+        let pz = base.estimate(&zero_amp);
+        assert!((pz.pushdown_s - p0.pushdown_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn index_probe_crossover_tracks_selectivity() {
+        // The planner's three-way choice in miniature: an IndexScan
+        // estimate (rows shrunk to the postings it feeds the kernel)
+        // beats the full-scan pushdown estimate in the needle regime and
+        // loses it back as the postings list approaches the full object.
+        let p = CostParams::paper_testbed();
+        let rows = 40_000u64;
+        let scan = AccessProfile {
+            rows,
+            scan_bytes: 1 << 20,
+            fetch_bytes: 1 << 20,
+            fetch_round_trips: 1,
+            request_bytes: 48,
+            result_bytes: 112,
+            agg_values: rows,
+            ..Default::default()
+        };
+        let ix = |k: u64| AccessProfile {
+            rows: k,
+            agg_values: k,
+            index_probes: 1.0,
+            index_postings: k as f64,
+            index_read_amp: 1.0,
+            ..scan
+        };
+        let full = p.estimate(&scan).pushdown_s;
+        assert!(p.estimate(&ix(40)).pushdown_s < full, "needle probe must win");
+        assert!(
+            p.estimate(&ix(rows)).pushdown_s > full,
+            "a probe returning every row must lose"
+        );
+        // The crossover is monotone in the postings count.
+        let mut last = 0.0;
+        for k in [40u64, 400, 4_000, 40_000] {
+            let c = p.estimate(&ix(k)).pushdown_s;
+            assert!(c > last);
+            last = c;
+        }
     }
 
     #[test]

@@ -3,7 +3,10 @@
 //! aggregates the partial results — the Dask-scheduler stand-in.
 
 use super::logical::{merge_sorted, sort_rows};
-use super::plan::{group_prunes, plan_calibrated, CalibrationMap, ExecMode, QueryPlan};
+use super::plan::{
+    access_path_forced, group_prunes, plan_with_access, AccessForce, CalibrationMap, ExecMode,
+    QueryPlan,
+};
 use super::query::{AggState, Predicate, Query};
 use super::worker::{self, SubOutput, SubResult};
 use crate::config::DriverConfig;
@@ -13,7 +16,7 @@ use crate::dataset::partition::PartitionSpec;
 use crate::dataset::table::Batch;
 use crate::dataset::{DType, Layout};
 use crate::error::{Error, Result};
-use crate::simnet::Timeline;
+use crate::simnet::{CostParams, Timeline};
 use crate::store::Cluster;
 use crate::util::pool::ThreadPool;
 use std::sync::Arc;
@@ -58,6 +61,14 @@ pub struct QueryStats {
     pub compiled_chunks: u64,
     /// Rows covered by those compiled-tier chunks.
     pub compiled_rows: u64,
+    /// Secondary-index probes the storage servers issued: sub-queries the
+    /// planner routed through the IndexScan access path, each answered by
+    /// one `scan_range` over the object's `ix1` postings. Always zero for
+    /// client-side sub-queries (the index lives on the OSD).
+    pub index_probes: u64,
+    /// Postings those probes returned — the pre-mask population the
+    /// kernel then re-filtered with the full predicate.
+    pub index_postings: u64,
     /// Overall execution mode the planner chose (or was forced to).
     pub pushdown: bool,
     /// Sub-queries the cost model assigned to the storage servers.
@@ -164,6 +175,9 @@ impl Driver {
             // Fail fast on a ghost cluster column, before any object I/O.
             batch.schema.col_index(col)?;
         }
+        // Same for declared index columns (and their dtypes): reject
+        // before any object exists rather than after a partial write.
+        metadata::validate_index_cols(&batch.schema, &spec.index_cols)?;
         let wall = Instant::now();
         let groups = spec.partition(batch)?;
         let localities: Vec<String> = groups
@@ -191,11 +205,21 @@ impl Driver {
         let objects = items.len();
         let worker_cpus = self.worker_cpus.clone();
         let nw = worker_cpus.len();
+        let index_cols = spec.index_cols.clone();
         let results: Vec<Result<(u64, u64, f64, Vec<ColumnStats>)>> =
             self.pool.map(items, move |(i, g, name)| {
                 let cpu = &worker_cpus[i % nw];
-                let (bytes, finish, stats) =
+                let (bytes, mut finish, stats) =
                     worker::write_row_group(&cluster, &name, &g, layout, 0.0, cpu)?;
+                // Index maintenance rides the same fan-out: each declared
+                // column's postings are built right after the object seals,
+                // so a freshly written dataset is immediately probe-able.
+                for col in &index_cols {
+                    let mut w = crate::util::bytes::ByteWriter::new();
+                    w.str(col);
+                    let t = cluster.call(finish, &name, "skyhook", "build_index", &w.finish())?;
+                    finish = finish.max(t.finish);
+                }
                 Ok((g.nrows() as u64, bytes, finish, stats))
             });
 
@@ -215,6 +239,7 @@ impl Driver {
             row_groups,
             localities,
             cluster_by: spec.cluster_by.clone().unwrap_or_default(),
+            index_cols: spec.index_cols.clone(),
         };
         let t = metadata::save_meta(&self.cluster, sim_finish, dataset, &meta, false)?;
         Ok(WriteReport {
@@ -243,12 +268,56 @@ impl Driver {
         force_mode: Option<ExecMode>,
         prune: bool,
     ) -> Result<QueryResult> {
+        self.execute_pinned(query, force_mode, prune, access_path_forced())
+    }
+
+    /// [`Driver::execute`] with the index-vs-scan access path pinned
+    /// programmatically: `Some(_)` forces the path for every sub-query
+    /// whose predicate the index can serve, `None` is the planner's free
+    /// cost-model choice *ignoring* `SKYHOOK_FORCE_ACCESS_PATH` — which
+    /// lets a single test compare forced-index, forced-scan, and free
+    /// executions without racing other tests on the environment.
+    pub fn execute_with_access(
+        &self,
+        query: &Query,
+        force_mode: Option<ExecMode>,
+        access: Option<AccessForce>,
+    ) -> Result<QueryResult> {
+        self.execute_pinned(query, force_mode, true, access)
+    }
+
+    fn execute_pinned(
+        &self,
+        query: &Query,
+        force_mode: Option<ExecMode>,
+        prune: bool,
+        access: Option<AccessForce>,
+    ) -> Result<QueryResult> {
         let (meta, _) = metadata::load_meta(&self.cluster, 0.0, &query.dataset)?;
+        let cost = self.plan_cost(&meta);
         let plan = {
             let cal = self.calibration.read().unwrap();
-            plan_calibrated(query, &meta, force_mode, prune, self.cluster.cost(), &cal)?
+            plan_with_access(query, &meta, force_mode, prune, &cost, &cal, access)?
         };
         self.execute_plan(&plan)
+    }
+
+    /// Cost profile for planning against `meta`: the cluster's calibrated
+    /// params, with the live worst-case LSM read amplification stamped in
+    /// when the dataset declares indexed columns. A probe pays one point
+    /// lookup per memtable + sorted run, so the index-vs-scan choice must
+    /// track the `KvStore`s' compaction state, not a static constant.
+    fn plan_cost(&self, meta: &DatasetMeta) -> CostParams {
+        let mut cost = self.cluster.cost().clone();
+        if matches!(meta, DatasetMeta::Table { index_cols, .. } if !index_cols.is_empty()) {
+            cost.index_read_amp = self
+                .cluster
+                .kv_stats()
+                .iter()
+                .map(|s| s.read_amp() as f64)
+                .fold(1.0, f64::max);
+        }
+        cost
     }
 
     /// Execute a prepared plan.
@@ -284,6 +353,8 @@ impl Driver {
         let mut rows_short_circuited = 0u64;
         let mut compiled_chunks = 0u64;
         let mut compiled_rows = 0u64;
+        let mut index_probes = 0u64;
+        let mut index_postings = 0u64;
         let mut sim_finish = at;
         let mut row_parts: Vec<(Batch, bool)> = Vec::new();
         let mut agg_states: Vec<AggState> = Vec::new();
@@ -296,6 +367,8 @@ impl Driver {
             rows_short_circuited += r.rows_short_circuited;
             compiled_chunks += r.compiled_chunks;
             compiled_rows += r.compiled_rows;
+            index_probes += r.index_probes;
+            index_postings += r.index_postings;
             sim_finish = sim_finish.max(r.finish);
             match r.output {
                 SubOutput::Rows(b) => row_parts.push((b, r.presorted)),
@@ -517,6 +590,8 @@ impl Driver {
                 rows_short_circuited,
                 compiled_chunks,
                 compiled_rows,
+                index_probes,
+                index_postings,
                 pushdown,
                 objects_pushdown: plan.assignment.0,
                 objects_client: plan.assignment.1,
@@ -531,8 +606,18 @@ impl Driver {
     /// costs) without executing it — the CLI's EXPLAIN.
     pub fn explain(&self, query: &Query, force_mode: Option<ExecMode>) -> Result<String> {
         let (meta, _) = metadata::load_meta(&self.cluster, 0.0, &query.dataset)?;
+        let cost = self.plan_cost(&meta);
         let cal = self.calibration.read().unwrap();
-        Ok(plan_calibrated(query, &meta, force_mode, true, self.cluster.cost(), &cal)?.explain())
+        let plan = plan_with_access(
+            query,
+            &meta,
+            force_mode,
+            true,
+            &cost,
+            &cal,
+            access_path_forced(),
+        )?;
+        Ok(plan.explain())
     }
 
     /// Approximate quantile via the §3.2 de-composable approximation:
@@ -646,23 +731,49 @@ impl Driver {
         ))
     }
 
-    /// Build the omap index on an i64 column of every object of a dataset.
+    /// Build the `ix1` postings index on an i64 or f32 column of every
+    /// object of a dataset, and record the column in the dataset metadata
+    /// so the planner offers the IndexScan access path and later layout
+    /// transforms rebuild it. Returns the total rows indexed.
     pub fn build_index(&self, dataset: &str, column: &str) -> Result<u64> {
-        let (meta, _) = metadata::load_meta(&self.cluster, 0.0, dataset)?;
+        let (mut meta, _) = metadata::load_meta(&self.cluster, 0.0, dataset)?;
+        let DatasetMeta::Table { schema, .. } = &meta else {
+            return Err(Error::Query(format!(
+                "{dataset} is an array dataset; build_index expects a table"
+            )));
+        };
+        // Fail fast on ghost / non-indexable columns, before any fan-out.
+        metadata::validate_index_cols(schema, &[column.to_string()])?;
         let names = meta.object_names(dataset);
         let cluster = Arc::clone(&self.cluster);
         let col = column.to_string();
-        let results: Vec<Result<u64>> = self.pool.map(names, move |obj| {
+        let results: Vec<Result<(u64, f64)>> = self.pool.map(names, move |obj| {
             let mut w = crate::util::bytes::ByteWriter::new();
             w.str(&col);
             let t = cluster.call(0.0, &obj, "skyhook", "build_index", &w.finish())?;
-            Ok(u64::from_le_bytes(t.value.try_into().map_err(|_| {
-                Error::Corrupt("bad index count".into())
-            })?))
+            let n = u64::from_le_bytes(
+                t.value
+                    .try_into()
+                    .map_err(|_| Error::Corrupt("bad index count".into()))?,
+            );
+            Ok((n, t.finish))
         });
         let mut total = 0;
+        let mut sim = 0.0f64;
         for r in results {
-            total += r?;
+            let (n, finish) = r?;
+            total += n;
+            sim = sim.max(finish);
+        }
+        let stamped = match &mut meta {
+            DatasetMeta::Table { index_cols, .. } if !index_cols.iter().any(|c| c == column) => {
+                index_cols.push(column.to_string());
+                true
+            }
+            _ => false,
+        };
+        if stamped {
+            metadata::save_meta(&self.cluster, sim, dataset, &meta, true)?;
         }
         Ok(total)
     }
@@ -684,6 +795,7 @@ impl Driver {
             row_groups,
             localities,
             cluster_by,
+            index_cols,
         } = meta
         else {
             unreachable!("table kind checked above");
@@ -697,6 +809,7 @@ impl Driver {
             });
         }
         let cluster = Arc::clone(&self.cluster);
+        let rebuild_cols = index_cols.clone();
         let results: Vec<Result<f64>> = self.pool.map(names, move |obj| {
             let t = cluster.call(
                 0.0,
@@ -708,7 +821,19 @@ impl Driver {
                     Layout::Col => 1u8,
                 }],
             )?;
-            Ok(t.finish)
+            // Re-stamp this object's postings against the rewritten
+            // encoding before it serves probes again. A layout transform
+            // happens to preserve row ids, but the maintenance rule is
+            // "any rewrite rebuilds declared indexes" — the driver does
+            // not get to reason about which rewrites are posting-safe.
+            let mut finish = t.finish;
+            for col in &rebuild_cols {
+                let mut w = crate::util::bytes::ByteWriter::new();
+                w.str(col);
+                let tb = cluster.call(finish, &obj, "skyhook", "build_index", &w.finish())?;
+                finish = finish.max(tb.finish);
+            }
+            Ok(finish)
         });
         let mut sim = 0.0f64;
         let mut n = 0;
@@ -722,6 +847,7 @@ impl Driver {
             row_groups,
             localities,
             cluster_by,
+            index_cols,
         };
         metadata::save_meta(&self.cluster, sim, dataset, &meta, true)?;
         Ok(WriteReport {
@@ -1410,7 +1536,25 @@ mod tests {
         seed(&d, 1200);
         let total = d.build_index("sensors", "sensor").unwrap();
         assert_eq!(total, 1200);
-        assert!(d.build_index("sensors", "val").is_err(), "f32 not indexable");
+        // f32 columns index too, via the order-preserving total-order
+        // encoding (satellite: the old driver rejected them).
+        assert_eq!(d.build_index("sensors", "val").unwrap(), 1200);
+        // Both columns are now recorded in the dataset metadata, so the
+        // planner can offer the IndexScan path and transforms rebuild.
+        let (meta, _) = metadata::load_meta(d.cluster(), 0.0, "sensors").unwrap();
+        let DatasetMeta::Table { index_cols, .. } = &meta else {
+            unreachable!()
+        };
+        assert_eq!(index_cols, &["sensor".to_string(), "val".to_string()]);
+        // Re-building an already-declared column is idempotent on meta.
+        assert_eq!(d.build_index("sensors", "sensor").unwrap(), 1200);
+        let (meta2, _) = metadata::load_meta(d.cluster(), 0.0, "sensors").unwrap();
+        let DatasetMeta::Table { index_cols, .. } = &meta2 else {
+            unreachable!()
+        };
+        assert_eq!(index_cols.len(), 2);
+        // Ghost columns fail fast at the driver, before any fan-out.
+        assert!(d.build_index("sensors", "nope").is_err());
     }
 
     #[test]
@@ -1425,6 +1569,83 @@ mod tests {
         // No-op transform.
         let rep2 = d.transform_layout("sensors", Layout::Row).unwrap();
         assert_eq!(rep2.objects, 0);
+    }
+
+    /// The index subsystem's driver-level contract: the same query
+    /// answered through the forced IndexScan path, the forced scan path,
+    /// and the planner's free choice is bit-identical (the probe window
+    /// over-approximates, the kernel re-filters), probe counters flow
+    /// back through `QueryStats`, and a layout transform rebuilds the
+    /// postings rather than stranding them.
+    #[test]
+    fn index_and_scan_paths_agree_bit_identically() {
+        let d = driver(4, 4);
+        let b = gen::sensor_table(20_000, 99);
+        d.write_table(
+            "sensors",
+            &b,
+            Layout::Col,
+            &PartitionSpec::with_target(64 * 1024).index("val"),
+            None,
+        )
+        .unwrap();
+        let q = Query::scan("sensors")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 95.0))
+            .aggregate(AggFunc::Count, "val")
+            .aggregate(AggFunc::Sum, "val");
+        let push = Some(ExecMode::Pushdown);
+        let ri = d
+            .execute_with_access(&q, push, Some(AccessForce::Index))
+            .unwrap();
+        let rs = d
+            .execute_with_access(&q, push, Some(AccessForce::Scan))
+            .unwrap();
+        let rf = d.execute_with_access(&q, push, None).unwrap();
+        for (a, s) in ri.aggregates.iter().zip(&rs.aggregates) {
+            assert_eq!(a.to_bits(), s.to_bits());
+        }
+        for (a, f) in ri.aggregates.iter().zip(&rf.aggregates) {
+            assert_eq!(a.to_bits(), f.to_bits());
+        }
+        // Ground truth straight off the source batch.
+        let mut mask = Vec::new();
+        q.predicate.eval_into(&b, &mut mask).unwrap();
+        let expect = mask.iter().filter(|&&m| m).count();
+        assert!(expect > 0, "needle should match a few rows");
+        assert_eq!(ri.aggregates[0], expect as f64);
+        // Counters: the forced-index run probed, and its postings are a
+        // superset of the matches (pruned objects provably hold none);
+        // the forced-scan run never touched the omap.
+        assert!(ri.stats.index_probes > 0);
+        assert!(ri.stats.index_postings >= expect as u64);
+        assert_eq!(rs.stats.index_probes, 0);
+        assert_eq!(rs.stats.index_postings, 0);
+        // Row queries agree too.
+        let qr = Query::scan("sensors")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 95.0))
+            .select(&["ts", "val"]);
+        let bi = d
+            .execute_with_access(&qr, push, Some(AccessForce::Index))
+            .unwrap()
+            .rows
+            .unwrap();
+        let bs = d
+            .execute_with_access(&qr, push, Some(AccessForce::Scan))
+            .unwrap()
+            .rows
+            .unwrap();
+        assert_eq!(bi.nrows(), expect);
+        assert_eq!(bs.nrows(), expect);
+        // A layout transform rewrites every object and re-stamps its
+        // postings; the probe path answers identically afterwards.
+        d.transform_layout("sensors", Layout::Row).unwrap();
+        let rt = d
+            .execute_with_access(&q, push, Some(AccessForce::Index))
+            .unwrap();
+        for (a, s) in rt.aggregates.iter().zip(&ri.aggregates) {
+            assert_eq!(a.to_bits(), s.to_bits());
+        }
+        assert!(rt.stats.index_probes > 0);
     }
 
     #[test]

@@ -530,6 +530,27 @@ pub fn run_pipeline_tiered(
     sorted_cols: &[String],
     tier: ExecTier,
 ) -> Result<(ExecOut, KernelWork)> {
+    run_pipeline_premasked(batch, spec, engine, sorted_cols, tier, None)
+}
+
+/// [`run_pipeline_tiered`] with an optional index-probe **pre-mask**: one
+/// bool per batch row, `true` for rows the secondary-index probe returned
+/// (a superset of the predicate's matches — probe windows only widen).
+/// The kernel still evaluates the full predicate and ANDs the pre-mask
+/// in, so results are bit-identical to an unindexed run by construction;
+/// what changes is the accounting: only pre-mask survivors inside the
+/// sorted window count as scanned, the rest are short-circuited, exactly
+/// like the sorted-window bookkeeping. A pre-mask forces the scalar tier
+/// — the compiled tier's chunk math charges whole spans, which would
+/// misprice a probe that already skipped most rows.
+pub fn run_pipeline_premasked(
+    batch: &Batch,
+    spec: &PipelineSpec,
+    engine: Option<&dyn ChunkCompute>,
+    sorted_cols: &[String],
+    tier: ExecTier,
+    premask: Option<&[bool]>,
+) -> Result<(ExecOut, KernelWork)> {
     let sorted = |c: &str| sorted_cols.iter().any(|s| s == c);
     let (wlo, whi) = sorted_window(&spec.predicate, batch, &sorted);
     let span = (whi - wlo) as u64;
@@ -540,18 +561,29 @@ pub fn run_pipeline_tiered(
     };
     let mut mask = Vec::new();
     spec.predicate.eval_into(batch, &mut mask)?;
+    if let Some(pm) = premask {
+        debug_assert_eq!(pm.len(), batch.nrows());
+        for (m, &p) in mask.iter_mut().zip(pm) {
+            *m = *m && p;
+        }
+        let hits = pm[wlo..whi.min(pm.len())].iter().filter(|&&p| p).count() as u64;
+        work.rows_scanned = hits;
+        work.rows_short_circuited = batch.nrows() as u64 - hits;
+    }
+    let charge_rows = work.rows_scanned;
 
     let numeric =
         |c: &str| matches!(batch.col(c), Ok(Column::F32(_) | Column::F64(_) | Column::I64(_)));
-    let use_compiled = match tier {
-        ExecTier::Scalar => false,
-        ExecTier::Compiled => compiled_eligible(spec, &numeric),
-        ExecTier::Auto(p) => {
-            compiled_eligible(spec, &numeric)
-                && !scalar_forced()
-                && p.compiled_wins(span, span * spec.aggs.len() as u64)
-        }
-    };
+    let use_compiled = premask.is_none()
+        && match tier {
+            ExecTier::Scalar => false,
+            ExecTier::Compiled => compiled_eligible(spec, &numeric),
+            ExecTier::Auto(p) => {
+                compiled_eligible(spec, &numeric)
+                    && !scalar_forced()
+                    && p.compiled_wins(span, span * spec.aggs.len() as u64)
+            }
+        };
     if use_compiled {
         let states = compiled_scalar_aggs(batch, spec, engine, &mask, (wlo, whi), &mut work)?;
         return Ok((ExecOut::Aggs(states), work));
@@ -579,7 +611,7 @@ pub fn run_pipeline_tiered(
                     }
                 }
                 _ => {
-                    work.agg_values += span;
+                    work.agg_values += charge_rows;
                     st.update_column(col, &mask)?;
                 }
             }
@@ -589,7 +621,7 @@ pub fn run_pipeline_tiered(
     }
     if !spec.aggs.is_empty() {
         // Grouped partials over a multi-column i64 key.
-        work.agg_values += span * spec.aggs.len() as u64;
+        work.agg_values += charge_rows * spec.aggs.len() as u64;
         let groups = grouped_partials(batch, &mask, &spec.keys, &spec.aggs)?;
         return Ok((ExecOut::Groups(groups), work));
     }
@@ -645,6 +677,7 @@ mod tests {
             sort: vec![],
             limit: None,
             zone_maps: true,
+            index: None,
         }
     }
 
@@ -717,6 +750,71 @@ mod tests {
         let p = ExecProfile::default();
         let want = 300.0 * p.row_pred_cost_s + 600.0 * p.val_agg_cost_s;
         assert!((work.server_seconds(&p) - want).abs() < 1e-18);
+    }
+
+    #[test]
+    fn premask_is_bit_transparent_and_recounts_work() {
+        let b = gen::sensor_table(400, 7);
+        let s = PipelineSpec {
+            predicate: Predicate::cmp("val", CmpOp::Gt, 50.0),
+            aggs: vec![
+                Aggregate::new(AggFunc::Sum, "val"),
+                Aggregate::new(AggFunc::Count, "ts"),
+            ],
+            ..spec()
+        };
+        let (base, _) = run_pipeline(&b, &s, None, &[]).unwrap();
+        let ExecOut::Aggs(base) = base else {
+            panic!("expected aggs");
+        };
+        // A probe pre-mask is any superset of the matching rows; widen
+        // the true mask with some extra rows, as a real probe would.
+        let mut pm = s.predicate.eval(&b).unwrap();
+        for m in pm.iter_mut().step_by(3) {
+            *m = true;
+        }
+        let hits = pm.iter().filter(|&&m| m).count() as u64;
+        let (out, work) =
+            run_pipeline_premasked(&b, &s, None, &[], ExecTier::Scalar, Some(&pm)).unwrap();
+        let ExecOut::Aggs(masked) = out else {
+            panic!("expected aggs");
+        };
+        assert_eq!(masked, base, "pre-mask must never change results");
+        // Only pre-mask survivors are scanned; the rest short-circuit.
+        assert_eq!(work.rows_scanned, hits);
+        assert_eq!(work.rows_short_circuited, 400 - hits);
+        assert_eq!(work.agg_values, hits * 2);
+        // Even under Auto (compiled-capable) the pre-mask forces scalar.
+        let (out, work) = run_pipeline_premasked(
+            &b,
+            &s,
+            None,
+            &[],
+            ExecTier::Auto(ExecProfile::default().with_compiled_tier()),
+            Some(&pm),
+        )
+        .unwrap();
+        let ExecOut::Aggs(auto) = out else {
+            panic!("expected aggs");
+        };
+        assert_eq!(auto, base);
+        assert_eq!(work.compiled_rows, 0);
+        assert_eq!(work.compiled_chunks, 0);
+        // Row pipelines agree too.
+        let rows = PipelineSpec {
+            predicate: Predicate::cmp("val", CmpOp::Gt, 50.0),
+            projection: Some(vec!["ts".into(), "val".into()]),
+            sort: vec![SortKey::desc("val")],
+            limit: Some(7),
+            ..spec()
+        };
+        let (base, _) = run_pipeline(&b, &rows, None, &[]).unwrap();
+        let (out, _) =
+            run_pipeline_premasked(&b, &rows, None, &[], ExecTier::Scalar, Some(&pm)).unwrap();
+        let (ExecOut::Rows(base), ExecOut::Rows(masked)) = (base, out) else {
+            panic!("expected rows");
+        };
+        assert_eq!(masked, base);
     }
 
     #[test]

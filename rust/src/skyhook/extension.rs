@@ -33,8 +33,8 @@
 //! `skyhook.agg` executes on it — the paper's storage-side compute
 //! offload running the very kernel the L1/L2 layers compiled.
 
-use super::exec_kernel::{self, run_pipeline_tiered, ExecTier};
-use super::logical::PipelineSpec;
+use super::exec_kernel::{self, run_pipeline_premasked, ExecTier};
+use super::logical::{index_probe_window, IndexProbe, PipelineSpec};
 use super::query::{AggState, Aggregate, Predicate};
 use crate::dataset::layout::{self, decode_batch, encode_batch, Layout, RangeSource};
 use crate::dataset::metadata::{ZoneMap, ZONE_MAP_XATTR};
@@ -180,6 +180,11 @@ pub struct ExecCounters {
     pub compiled_chunks: u64,
     /// Rows the compiled tier's chunked pass covered.
     pub compiled_rows: u64,
+    /// Secondary-index probes the handler served the request with (0 or
+    /// 1 per object: one `ix1/` omap range scan pre-masking the read).
+    pub index_probes: u64,
+    /// Row-id postings the probe returned (the pre-mask's population).
+    pub index_postings: u64,
 }
 
 /// Frame tag of a counter-carrying `skyhook.exec` response (payload tags
@@ -187,12 +192,14 @@ pub struct ExecCounters {
 const EXEC_FRAME_TAG: u8 = 4;
 
 fn frame_exec_out(counters: ExecCounters, inner: Vec<u8>) -> Vec<u8> {
-    let mut w = ByteWriter::with_capacity(inner.len() + 26);
+    let mut w = ByteWriter::with_capacity(inner.len() + 42);
     w.u8(EXEC_FRAME_TAG);
     w.u64(counters.rows_short_circuited);
     w.u8(counters.prefix_read as u8);
     w.u64(counters.compiled_chunks);
     w.u64(counters.compiled_rows);
+    w.u64(counters.index_probes);
+    w.u64(counters.index_postings);
     w.raw(&inner);
     w.finish()
 }
@@ -216,6 +223,8 @@ pub fn decode_exec_out_full(
             prefix_read: r.u8()? != 0,
             compiled_chunks: r.u64()?,
             compiled_rows: r.u64()?,
+            index_probes: r.u64()?,
+            index_postings: r.u64()?,
         };
         let inner = r.raw(r.remaining())?.to_vec();
         return Ok((decode_exec_payload(&inner, nkeys, naggs)?, counters));
@@ -264,6 +273,152 @@ fn decode_exec_payload(out: &[u8], nkeys: usize, naggs: usize) -> Result<ExecOut
 /// Order-preserving big-endian encoding of i64 (for omap index keys).
 pub fn index_key_i64(x: i64) -> [u8; 8] {
     ((x as u64) ^ (1u64 << 63)).to_be_bytes()
+}
+
+/// Order-preserving total-order encoding of f32 (for omap index keys):
+/// flip the sign bit of non-negatives, complement negatives. Byte order
+/// then matches `f32::total_cmp` exactly — `-NaN < -inf < … < -0.0 <
+/// +0.0 < … < +inf < NaN` — so every value, NaN included, has a
+/// well-defined slot and range probes over encoded keys are value-range
+/// probes.
+pub fn index_key_f32(x: f32) -> [u8; 4] {
+    let b = x.to_bits();
+    let b = if b & 0x8000_0000 != 0 {
+        !b
+    } else {
+        b | 0x8000_0000
+    };
+    b.to_be_bytes()
+}
+
+/// Versioned omap key prefix of one column's postings: `ix1/<col>/`.
+/// Full posting keys append the order-preserving value encoding plus the
+/// big-endian row id (making keys unique per row); values hold the row
+/// id little-endian. Bumping the `ix1` version retires old postings
+/// without a migration — probes only read their own scheme.
+fn index_prefix(col: &str) -> Vec<u8> {
+    let mut p = Vec::with_capacity(col.len() + 5);
+    p.extend_from_slice(b"ix1/");
+    p.extend_from_slice(col.as_bytes());
+    p.push(b'/');
+    p
+}
+
+/// One representable f32 step toward -inf, used to widen probe lower
+/// bounds: the predicate compares in f64, the index keys in f32, and the
+/// f64→f32 rounding can land up to half an ulp *past* the true bound —
+/// stepping once absorbs that, and widening a probe window is always
+/// safe (superset), narrowing never is. Zeros step below **-0.0**: the
+/// f64 comparison cannot tell the zeros apart, the total-order key
+/// encoding can.
+fn f32_step_down(x: f32) -> f32 {
+    if x.is_nan() || x == f32::NEG_INFINITY {
+        x
+    } else if x == 0.0 {
+        f32::from_bits(0x8000_0001)
+    } else if x.to_bits() & 0x8000_0000 == 0 {
+        f32::from_bits(x.to_bits() - 1)
+    } else {
+        f32::from_bits(x.to_bits() + 1)
+    }
+}
+
+/// One representable f32 step toward +inf (see [`f32_step_down`]).
+fn f32_step_up(x: f32) -> f32 {
+    if x.is_nan() || x == f32::INFINITY {
+        x
+    } else if x == 0.0 {
+        f32::from_bits(0x0000_0001)
+    } else if x.to_bits() & 0x8000_0000 == 0 {
+        f32::from_bits(x.to_bits() + 1)
+    } else {
+        f32::from_bits(x.to_bits() - 1)
+    }
+}
+
+/// Smallest i64 an index probe's lower bound must include so that every
+/// row satisfying `x > v` / `x >= v` (compared after i64→f64 widening,
+/// like [`Predicate`] does) is covered. Exact below 2^53, where the
+/// widening is lossless; above it the widening rounds by up to half an
+/// ulp, so the bound absorbs a 4-epsilon relative margin instead.
+fn i64_probe_lo(v: f64, inclusive: bool) -> i64 {
+    const EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+    if v.abs() <= EXACT {
+        if inclusive {
+            v.ceil() as i64
+        } else {
+            (v.floor() as i64).saturating_add(1)
+        }
+    } else {
+        (v - v.abs() * (4.0 * f64::EPSILON)) as i64
+    }
+}
+
+/// Largest i64 the probe's upper bound must include (see
+/// [`i64_probe_lo`]).
+fn i64_probe_hi(v: f64, inclusive: bool) -> i64 {
+    const EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+    if v.abs() <= EXACT {
+        if inclusive {
+            v.floor() as i64
+        } else {
+            (v.ceil() as i64).saturating_sub(1)
+        }
+    } else {
+        (v + v.abs() * (4.0 * f64::EPSILON)) as i64
+    }
+}
+
+/// Encode an [`IndexProbe`]'s value window as an omap key range over the
+/// column's `ix1/` postings: `(lo_key, hi_key, hi_inclusive)`, with
+/// bounds widened per the dtype rules above so rounding between the f64
+/// comparison domain and the stored encoding can only *add* candidate
+/// rows. An unbounded side becomes the column prefix itself (lo) or the
+/// prefix's exclusive successor (hi). Returns `None` for a dtype tag
+/// this version does not understand — the handler falls back to a scan.
+fn probe_key_range(col: &str, tag: &[u8], probe: &IndexProbe) -> Option<(Vec<u8>, Vec<u8>, bool)> {
+    let prefix = index_prefix(col);
+    let enc_lo: Vec<u8>;
+    let enc_hi: Option<Vec<u8>>;
+    match tag {
+        b"i64" => {
+            enc_lo = probe
+                .lo
+                .map(|(v, inc)| index_key_i64(i64_probe_lo(v, inc)).to_vec())
+                .unwrap_or_default();
+            enc_hi = probe
+                .hi
+                .map(|(v, inc)| index_key_i64(i64_probe_hi(v, inc)).to_vec());
+        }
+        b"f32" => {
+            enc_lo = probe
+                .lo
+                .map(|(v, _)| index_key_f32(f32_step_down(v as f32)).to_vec())
+                .unwrap_or_default();
+            enc_hi = probe
+                .hi
+                .map(|(v, _)| index_key_f32(f32_step_up(v as f32)).to_vec());
+        }
+        _ => return None,
+    }
+    let mut lo = prefix.clone();
+    lo.extend_from_slice(&enc_lo);
+    match enc_hi {
+        Some(enc) => {
+            let mut hi = prefix;
+            hi.extend_from_slice(&enc);
+            // Past any 4-byte row-id suffix of the bound value.
+            hi.extend_from_slice(&[0xff; 4]);
+            Some((lo, hi, true))
+        }
+        None => {
+            // Exclusive successor of the column prefix: bump the '/'
+            // terminator (never 0xff, so this cannot overflow).
+            let mut hi = prefix;
+            *hi.last_mut().expect("prefix is never empty") = b'/' + 1;
+            Some((lo, hi, false))
+        }
+    }
 }
 
 /// [`RangeSource`] over a `ClsBackend`: ranged reads are metered by the
@@ -539,36 +694,128 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
             return exec_empty_result(&schema, &spec);
         }
         let sorted_cols = zm.as_ref().map(ZoneMap::sorted_columns).unwrap_or_default();
+        let needed = exec_kernel::needed_columns(&spec);
+        let prof = b.exec_profile();
+        // Secondary-index probe (the IndexScan access path): the planner
+        // named an indexed column whose AND-spine window the `ix1/` omap
+        // postings can answer. The probe yields a *superset* row-id set —
+        // the full predicate still runs over the survivors — so every
+        // fallback below (missing index xattr, unknown dtype tag, no
+        // probe-able window) silently degrades to the plain scan with
+        // bit-identical results. Disabled with `zone_maps = false` so the
+        // unpruned baseline stays an honest full scan.
+        let mut postings: Option<Vec<u32>> = None;
+        let mut index_probes = 0u64;
+        if spec.zone_maps {
+            if let Some(col) = &spec.index {
+                if let Some(tag) = b.getxattr(&format!("index.{col}")) {
+                    if let Some(probe) = index_probe_window(&spec.predicate, col) {
+                        if probe.empty {
+                            // Contradictory conjuncts: prune without even
+                            // touching the index.
+                            index_probes = 1;
+                            postings = Some(Vec::new());
+                        } else if let Some((lo, hi, hi_inc)) = probe_key_range(col, &tag, &probe) {
+                            let bound = if hi_inc {
+                                std::ops::Bound::Included(hi.as_slice())
+                            } else {
+                                std::ops::Bound::Excluded(hi.as_slice())
+                            };
+                            let hits = b.omap_scan_range(&lo, bound);
+                            // An LSM probe consults every sorted run plus
+                            // the memtable; charge the read amplification
+                            // the store actually has right now.
+                            let amp = b.kv_stats().read_amp() as f64;
+                            b.charge_cpu(
+                                prof.index_probe_cost_s * amp
+                                    + hits.len() as f64 * prof.index_posting_cost_s,
+                            );
+                            index_probes = 1;
+                            let mut rows = Vec::with_capacity(hits.len());
+                            for (_, v) in hits {
+                                rows.push(u32::from_le_bytes(
+                                    v.as_slice()
+                                        .try_into()
+                                        .map_err(|_| Error::Corrupt("bad index entry".into()))?,
+                                ));
+                            }
+                            postings = Some(rows);
+                        }
+                    }
+                }
+            }
+        }
+        let index_postings = postings.as_ref().map_or(0, |r| r.len() as u64);
+        // Zero postings + a stamped schema: the probe proved the object
+        // contributes nothing — answer like a zone-map prune, but keep
+        // the probe on the books. Same error-parity guard as
+        // `prune_verdict`: a predicate that would fail evaluation
+        // (missing or string-typed column) must take the live path and
+        // fail there.
+        if let (Some(rows), Some(zm)) = (&postings, &zm) {
+            let evaluable = spec.predicate.columns().iter().all(|c| {
+                zm.schema
+                    .col_index(c)
+                    .is_ok_and(|i| zm.schema.col(i).dtype != DType::Str)
+            });
+            if rows.is_empty() && evaluable {
+                let counters = ExecCounters {
+                    index_probes,
+                    ..ExecCounters::default()
+                };
+                return Ok(frame_exec_out(counters, exec_empty_result(&zm.schema, &spec)?));
+            }
+        }
         // One read covering every column the chain touches (the kernel's
         // own definition of its read set) — bounded to the object's first
-        // k rows when the pipeline provably needs no more (head, or
-        // ascending top-k over a column the marker vouches for).
-        let needed = exec_kernel::needed_columns(&spec);
+        // k rows when the pipeline provably needs no more: a prefix-limit
+        // head/top-k, or an index probe whose highest posting row is k-1
+        // (rows past it have their indexed value outside the window, so
+        // the AND-spine conjunct — hence the predicate — rejects them).
         let sorted = |c: &str| sorted_cols.iter().any(|s| s == c);
-        let (batch, prefix_read) = match exec_kernel::prefix_limit(&spec, &sorted) {
-            Some(k) => {
-                let prefix = b.header_prefix();
-                let (batch, _, bounded) = layout::read_projected_rows(
-                    &mut BackendRange(b),
-                    needed.as_deref(),
-                    prefix,
-                    k,
-                )?;
-                (batch, bounded)
+        let (batch, prefix_read) = if let Some(rows) = &postings {
+            let k = rows.iter().max().map_or(0, |&m| m as u64 + 1);
+            let prefix = b.header_prefix();
+            let (batch, _, _) =
+                layout::read_projected_rows(&mut BackendRange(b), needed.as_deref(), prefix, k)?;
+            (batch, false)
+        } else {
+            match exec_kernel::prefix_limit(&spec, &sorted) {
+                Some(k) => {
+                    let prefix = b.header_prefix();
+                    let (batch, _, bounded) = layout::read_projected_rows(
+                        &mut BackendRange(b),
+                        needed.as_deref(),
+                        prefix,
+                        k,
+                    )?;
+                    (batch, bounded)
+                }
+                None => (read_needed(b, needed.as_deref())?, false),
             }
-            None => (read_needed(b, needed.as_deref())?, false),
         };
+        // The probe's row ids become the kernel's pre-mask (rows the
+        // bounded read dropped are provably non-matching).
+        let premask: Option<Vec<bool>> = postings.map(|rows| {
+            let mut pm = vec![false; batch.nrows()];
+            for r in rows {
+                if let Some(m) = pm.get_mut(r as usize) {
+                    *m = true;
+                }
+            }
+            pm
+        });
         // The backend's profile picks the execution tier (compiled when
         // it is enabled, the shape is eligible, and the tier wins on
         // cost); the kernel's per-tier counters are then priced at the
         // same rates the planner's estimator uses.
-        let prof = b.exec_profile();
-        let (out, work) = run_pipeline_tiered(
+        let (out, work) = run_pipeline_premasked(
             &batch,
             &spec,
             exec_engine.as_deref(),
             &sorted_cols,
             ExecTier::Auto(prof),
+            premask.as_deref(),
         )?;
         b.charge_cpu(work.server_seconds(&prof));
         let counters = ExecCounters {
@@ -576,6 +823,8 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
             prefix_read,
             compiled_chunks: work.compiled_chunks,
             compiled_rows: work.compiled_rows,
+            index_probes,
+            index_postings,
         };
         let mut w = ByteWriter::new();
         match out {
@@ -718,29 +967,49 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
         Ok(w.finish())
     });
 
-    // skyhook.build_index — omap index over an i64 column: key =
-    // `i/<col>/<be-value>/<row>` → row id. The paper's RocksDB indexing.
+    // skyhook.build_index — omap postings over an i64 or f32 column
+    // under the versioned `ix1/` scheme: key = `ix1/<col>/<enc><be-row>`
+    // → le-row, where `<enc>` is the dtype's order-preserving encoding
+    // (`index_key_i64` / `index_key_f32`). The `index.<col>` xattr
+    // records the dtype tag so probes pick the matching key encoding.
+    // Every row is indexed, NaN included (its total-order slot sits above
+    // +inf, where finite range probes never look). The paper's RocksDB
+    // indexing.
     r.register("skyhook", "build_index", |b, input| {
         let mut r = ByteReader::new(input);
         let col_name = r.str()?.to_string();
         let raw = b.read()?;
         let (batch, _) = decode_batch(&raw)?;
-        let keys = match batch.col(&col_name)? {
-            Column::I64(v) => v,
-            _ => return Err(Error::Query("index needs an i64 column".into())),
+        let prefix = index_prefix(&col_name);
+        let nrows = batch.nrows();
+        b.charge_cpu(nrows as f64 * 50e-9); // kv insert cost
+        let tag: &[u8] = match batch.col(&col_name)? {
+            Column::I64(v) => {
+                for (row, &k) in v.iter().enumerate() {
+                    let mut key = prefix.clone();
+                    key.extend_from_slice(&index_key_i64(k));
+                    key.extend_from_slice(&(row as u32).to_be_bytes());
+                    b.omap_set(&key, &(row as u32).to_le_bytes());
+                }
+                b"i64"
+            }
+            Column::F32(v) => {
+                for (row, &x) in v.iter().enumerate() {
+                    let mut key = prefix.clone();
+                    key.extend_from_slice(&index_key_f32(x));
+                    key.extend_from_slice(&(row as u32).to_be_bytes());
+                    b.omap_set(&key, &(row as u32).to_le_bytes());
+                }
+                b"f32"
+            }
+            _ => {
+                return Err(Error::Query(format!(
+                    "cannot index {col_name:?}: only i64 and f32 columns are indexable"
+                )))
+            }
         };
-        b.charge_cpu(keys.len() as f64 * 50e-9); // kv insert cost
-        for (row, &k) in keys.iter().enumerate() {
-            let mut key = Vec::with_capacity(col_name.len() + 16);
-            key.extend_from_slice(b"i/");
-            key.extend_from_slice(col_name.as_bytes());
-            key.push(b'/');
-            key.extend_from_slice(&index_key_i64(k));
-            key.extend_from_slice(&(row as u32).to_be_bytes());
-            b.omap_set(&key, &(row as u32).to_le_bytes());
-        }
-        b.setxattr(&format!("index.{col_name}"), b"1");
-        Ok((keys.len() as u64).to_le_bytes().to_vec())
+        b.setxattr(&format!("index.{col_name}"), tag);
+        Ok((nrows as u64).to_le_bytes().to_vec())
     });
 
     // skyhook.index_lookup — equality lookup: rows where col == value.
@@ -748,14 +1017,19 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
         let mut r = ByteReader::new(input);
         let col_name = r.str()?.to_string();
         let value = r.i64()?;
-        if b.getxattr(&format!("index.{col_name}")).is_none() {
+        let Some(tag) = b.getxattr(&format!("index.{col_name}")) else {
             return Err(Error::Query(format!("no index on {col_name:?}")));
+        };
+        let mut prefix = index_prefix(&col_name);
+        match tag.as_slice() {
+            b"i64" => prefix.extend_from_slice(&index_key_i64(value)),
+            b"f32" => prefix.extend_from_slice(&index_key_f32(value as f32)),
+            t => {
+                return Err(Error::Query(format!(
+                    "unknown index version on {col_name:?}: {t:?}"
+                )))
+            }
         }
-        let mut prefix = Vec::with_capacity(col_name.len() + 12);
-        prefix.extend_from_slice(b"i/");
-        prefix.extend_from_slice(col_name.as_bytes());
-        prefix.push(b'/');
-        prefix.extend_from_slice(&index_key_i64(value));
         let hits = b.omap_scan_prefix(&prefix);
         let mut w = ByteWriter::new();
         w.u32(hits.len() as u32);
@@ -1093,6 +1367,200 @@ mod tests {
         let mut sorted = encoded.clone();
         sorted.sort();
         assert_eq!(encoded, sorted);
+        // f32: byte order must equal total_cmp order, NaN and zeros
+        // included.
+        let mut vals: Vec<f32> = vec![
+            f32::NEG_INFINITY,
+            -1.5e30,
+            -2.0,
+            -f32::MIN_POSITIVE,
+            -0.0,
+            0.0,
+            f32::MIN_POSITIVE,
+            3.25,
+            1.5e30,
+            f32::INFINITY,
+            f32::NAN,
+            -f32::NAN,
+        ];
+        vals.sort_by(f32::total_cmp);
+        let encoded: Vec<[u8; 4]> = vals.iter().map(|&x| index_key_f32(x)).collect();
+        let mut sorted = encoded.clone();
+        sorted.sort();
+        assert_eq!(encoded, sorted);
+        // Distinct values get distinct keys (the zeros differ in key
+        // space on purpose — probes widen below -0.0).
+        let mut dedup = encoded.clone();
+        dedup.dedup();
+        assert_eq!(dedup.len(), encoded.len());
+    }
+
+    #[test]
+    fn build_index_accepts_f32_and_step_widening_is_safe() {
+        let r = registry();
+        let mut b = MemBackend::new(&table_object());
+        let mut w = ByteWriter::new();
+        w.str("val");
+        let out = r.get("skyhook", "build_index").unwrap()(&mut b, &w.finish()).unwrap();
+        assert_eq!(u64::from_le_bytes(out.try_into().unwrap()), 200);
+        assert_eq!(b.getxattr("index.val").unwrap(), b"f32".to_vec());
+        // Strings stay unindexable (a real Str column, not a missing one).
+        let strs = Batch::new(
+            TableSchema::new(&[("tag", DType::Str)]),
+            vec![Column::Str(vec!["a".into(), "b".into()])],
+        )
+        .unwrap();
+        let mut b2 = MemBackend::new(&encode_batch(&strs, Layout::Row));
+        let mut w = ByteWriter::new();
+        w.str("tag");
+        assert!(r.get("skyhook", "build_index").unwrap()(&mut b2, &w.finish()).is_err());
+        // Step widening brackets every value, zeros included.
+        for x in [0.0f32, -0.0, 1.0, -1.0, f32::MAX, f32::MIN_POSITIVE] {
+            assert!(f32_step_down(x).total_cmp(&x).is_lt() || x == f32::NEG_INFINITY);
+            assert!(f32_step_up(x).total_cmp(&x).is_gt() || x == f32::INFINITY);
+        }
+        // i64 probe bounds: exact in the exact range.
+        assert_eq!(i64_probe_lo(5.0, true), 5);
+        assert_eq!(i64_probe_lo(5.0, false), 6);
+        assert_eq!(i64_probe_lo(5.5, true), 6);
+        assert_eq!(i64_probe_hi(5.0, true), 5);
+        assert_eq!(i64_probe_hi(5.0, false), 4);
+        assert_eq!(i64_probe_hi(5.5, false), 5);
+        // Beyond 2^53 the margin only widens.
+        let v = 1.0e17;
+        assert!(i64_probe_lo(v, true) <= 100_000_000_000_000_000);
+        assert!(i64_probe_hi(v, true) >= 100_000_000_000_000_000);
+    }
+
+    #[test]
+    fn exec_index_probe_matches_scan_and_reports_counters() {
+        use crate::skyhook::query::SortKey;
+        let r = registry();
+        let batch = gen::sensor_table(500, 7);
+        let enc = encode_batch(&batch, Layout::Col);
+        let build = |b: &mut MemBackend, col: &str| {
+            let mut w = ByteWriter::new();
+            w.str(col);
+            r.get("skyhook", "build_index").unwrap()(b, &w.finish()).unwrap();
+        };
+        // Range over the indexed f32 column + an unindexed conjunct: the
+        // probe pre-masks, the full predicate still filters.
+        let pred = Predicate::cmp("val", CmpOp::Ge, 45.0)
+            .and(Predicate::cmp("val", CmpOp::Lt, 55.0))
+            .and(Predicate::cmp("sensor", CmpOp::Eq, 3.0));
+        for spec in [
+            PipelineSpec {
+                predicate: pred.clone(),
+                aggs: vec![
+                    Aggregate::new(AggFunc::Count, "val"),
+                    Aggregate::new(AggFunc::Sum, "ts"),
+                ],
+                ..exec_spec()
+            },
+            PipelineSpec {
+                predicate: pred.clone(),
+                projection: Some(vec!["ts".to_string(), "val".to_string()]),
+                sort: vec![SortKey::desc("val")],
+                limit: Some(5),
+                ..exec_spec()
+            },
+        ] {
+            let mut plain = MemBackend::new(&enc);
+            let want = r.get("skyhook", "exec").unwrap()(&mut plain, &spec.encode()).unwrap();
+            let (_, cw) = decode_exec_out_full(&want, 0, spec.aggs.len()).unwrap();
+            assert_eq!((cw.index_probes, cw.index_postings), (0, 0));
+            let mut ixd = MemBackend::new(&enc);
+            build(&mut ixd, "val");
+            let ispec = PipelineSpec {
+                index: Some("val".to_string()),
+                ..spec.clone()
+            };
+            let got = r.get("skyhook", "exec").unwrap()(&mut ixd, &ispec.encode()).unwrap();
+            let (gout, c) = decode_exec_out_full(&got, 0, spec.aggs.len()).unwrap();
+            let (wout, _) = decode_exec_out_full(&want, 0, spec.aggs.len()).unwrap();
+            assert_eq!(c.index_probes, 1);
+            assert!(c.index_postings > 0);
+            match (gout, wout) {
+                (ExecOut::Aggs(g), ExecOut::Aggs(w)) => assert_eq!(g, w),
+                (ExecOut::Rows(g), ExecOut::Rows(w)) => assert_eq!(g, w),
+                _ => panic!("probe changed the output shape"),
+            }
+        }
+        // An i64-indexed equality probe narrows to exactly the eq run.
+        let mut ixd = MemBackend::new(&enc);
+        build(&mut ixd, "sensor");
+        let eq = PipelineSpec {
+            predicate: Predicate::cmp("sensor", CmpOp::Eq, 3.0),
+            aggs: vec![Aggregate::new(AggFunc::Count, "sensor")],
+            index: Some("sensor".to_string()),
+            ..exec_spec()
+        };
+        let got = r.get("skyhook", "exec").unwrap()(&mut ixd, &eq.encode()).unwrap();
+        let (out, c) = decode_exec_out_full(&got, 0, 1).unwrap();
+        let ExecOut::Aggs(states) = out else {
+            panic!("expected aggs");
+        };
+        assert_eq!(c.index_probes, 1);
+        assert_eq!(c.index_postings, states[0].count);
+        // Missing index or no probe-able window: silent scan fallback.
+        let no_ix = PipelineSpec {
+            index: Some("ts".to_string()),
+            ..eq.clone()
+        };
+        let got = r.get("skyhook", "exec").unwrap()(&mut ixd, &no_ix.encode()).unwrap();
+        let (_, c) = decode_exec_out_full(&got, 0, 1).unwrap();
+        assert_eq!((c.index_probes, c.index_postings), (0, 0));
+        let no_window = PipelineSpec {
+            predicate: Predicate::cmp("sensor", CmpOp::Ne, 3.0),
+            ..eq.clone()
+        };
+        let got = r.get("skyhook", "exec").unwrap()(&mut ixd, &no_window.encode()).unwrap();
+        let (_, c) = decode_exec_out_full(&got, 0, 1).unwrap();
+        assert_eq!(c.index_probes, 0);
+        // The unpruned baseline never probes.
+        let baseline = PipelineSpec {
+            zone_maps: false,
+            ..eq.clone()
+        };
+        let got = r.get("skyhook", "exec").unwrap()(&mut ixd, &baseline.encode()).unwrap();
+        let (_, c) = decode_exec_out_full(&got, 0, 1).unwrap();
+        assert_eq!(c.index_probes, 0);
+    }
+
+    #[test]
+    fn exec_index_empty_probe_prunes_without_reading() {
+        let r = registry();
+        let batch = gen::sensor_table(200, 7);
+        let mut b = MemBackend::new(&encode_batch(&batch, Layout::Col));
+        let mut w = ByteWriter::new();
+        w.str("sensor");
+        r.get("skyhook", "build_index").unwrap()(&mut b, &w.finish()).unwrap();
+        b.setxattr(ZONE_MAP_XATTR, &ZoneMap::from_batch(&batch).encode());
+        // Destroy the data: only a pruned answer can survive. The zone
+        // map cannot prune `sensor == 3 AND sensor == 4` (each value is
+        // in range); the probe window's contradiction can.
+        b.data = vec![0xff; 16];
+        let spec = PipelineSpec {
+            predicate: Predicate::cmp("sensor", CmpOp::Eq, 3.0)
+                .and(Predicate::cmp("sensor", CmpOp::Eq, 4.0)),
+            aggs: vec![Aggregate::new(AggFunc::Count, "sensor")],
+            index: Some("sensor".to_string()),
+            ..exec_spec()
+        };
+        let out = r.get("skyhook", "exec").unwrap()(&mut b, &spec.encode()).unwrap();
+        let (ExecOut::Aggs(states), c) = decode_exec_out_full(&out, 0, 1).unwrap() else {
+            panic!("expected aggs");
+        };
+        assert_eq!(states[0].count, 0);
+        assert_eq!(c.index_probes, 1);
+        assert_eq!(c.index_postings, 0);
+        // Without the index hint the same spec must hit the (destroyed)
+        // data and fail — proving the probe is what pruned.
+        let unhinted = PipelineSpec {
+            index: None,
+            ..spec
+        };
+        assert!(r.get("skyhook", "exec").unwrap()(&mut b, &unhinted.encode()).is_err());
     }
 
     #[test]
@@ -1118,6 +1586,7 @@ mod tests {
             sort: vec![],
             limit: None,
             zone_maps: true,
+            index: None,
         }
     }
 
@@ -1324,6 +1793,7 @@ mod tests {
             sort: vec![SortKey::asc("val")],
             limit: Some(5),
             zone_maps: true,
+            index: None,
         };
         // Without the stamped marker: full read, no prefix flag.
         let mut plain = MemBackend::new(&enc);
@@ -1541,6 +2011,7 @@ mod tests {
             sort: vec![],
             limit: None,
             zone_maps: true,
+            index: None,
         };
         let out = r.get("skyhook", "exec").unwrap()(&mut b, &spec.encode()).unwrap();
         let ExecOut::Aggs(states) = decode_exec_out(&out, 0, 1).unwrap() else {

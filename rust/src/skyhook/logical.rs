@@ -396,6 +396,11 @@ pub struct PipelineSpec {
     pub limit: Option<u64>,
     /// May the handler consult the object's zone-map xattr?
     pub zone_maps: bool,
+    /// Column whose server-local secondary index the handler should
+    /// probe (`ix1/` omap postings) to pre-mask the scan. `None` = plain
+    /// scan. The handler falls back to a scan when the object carries no
+    /// index for the column or the predicate has no probe-able window.
+    pub index: Option<String>,
 }
 
 impl PipelineSpec {
@@ -438,6 +443,15 @@ impl PipelineSpec {
             }
         }
         w.u8(self.zone_maps as u8);
+        match &self.index {
+            Some(col) => {
+                w.u8(1);
+                w.str(col);
+            }
+            None => {
+                w.u8(0);
+            }
+        }
         w.finish()
     }
 
@@ -480,6 +494,11 @@ impl PipelineSpec {
             o => return Err(Error::Corrupt(format!("bad limit tag {o}"))),
         };
         let zone_maps = r.u8()? != 0;
+        let index = match r.u8()? {
+            0 => None,
+            1 => Some(r.str()?.to_string()),
+            o => return Err(Error::Corrupt(format!("bad index tag {o}"))),
+        };
         Ok(PipelineSpec {
             predicate,
             projection,
@@ -488,6 +507,7 @@ impl PipelineSpec {
             sort,
             limit,
             zone_maps,
+            index,
         })
     }
 
@@ -496,6 +516,99 @@ impl PipelineSpec {
     pub fn any_holistic(&self) -> bool {
         self.aggs.iter().any(|a| !a.func.is_algebraic())
     }
+}
+
+// ---- index probe windows ---------------------------------------------------
+
+/// The value window a secondary index on one column can serve for a
+/// predicate, extracted from the conjunctive (AND) spine. Bounds live in
+/// the query's f64 comparison domain; `None` means unbounded on that side.
+///
+/// The window is an *over*-approximation by construction: every row the
+/// full predicate accepts satisfies each AND-spine conjunct, so its column
+/// value falls inside the intersection window. Probing the index over the
+/// window therefore yields a superset of the matching rows, and the full
+/// predicate is still evaluated over the survivors — results are
+/// bit-identical to an unindexed scan no matter how loose the window is.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IndexProbe {
+    /// Lower bound as `(value, inclusive)`; `None` = unbounded below.
+    pub lo: Option<(f64, bool)>,
+    /// Upper bound as `(value, inclusive)`; `None` = unbounded above.
+    pub hi: Option<(f64, bool)>,
+    /// Contradictory conjuncts (or a NaN literal): no row can satisfy
+    /// the indexed conjuncts, so the whole object produces zero rows.
+    pub empty: bool,
+}
+
+/// Extract the probe-able window for `col`, or `None` when the predicate
+/// carries no eq/range conjunct on `col` (an index probe would degenerate
+/// to a full scan). Only the AND spine tightens the window: conjuncts
+/// under `Or`/`Not` (and `Ne`, which excludes a point) could shrink the
+/// row set below the true match set and are ignored.
+pub fn index_probe_window(pred: &Predicate, col: &str) -> Option<IndexProbe> {
+    let mut probe = IndexProbe {
+        lo: None,
+        hi: None,
+        empty: false,
+    };
+    collect_probe_bounds(pred, col, &mut probe);
+    if probe.lo.is_none() && probe.hi.is_none() && !probe.empty {
+        return None;
+    }
+    if let (Some((lo, lo_inc)), Some((hi, hi_inc))) = (probe.lo, probe.hi) {
+        if lo > hi || (lo == hi && !(lo_inc && hi_inc)) {
+            probe.empty = true;
+        }
+    }
+    Some(probe)
+}
+
+fn collect_probe_bounds(pred: &Predicate, col: &str, probe: &mut IndexProbe) {
+    match pred {
+        Predicate::And(a, b) => {
+            collect_probe_bounds(a, col, probe);
+            collect_probe_bounds(b, col, probe);
+        }
+        Predicate::Cmp { col: c, op, value } if c == col => {
+            if value.is_nan() {
+                // `x <op> NaN` is false for every ordering op, so the
+                // conjunct — and hence the predicate — matches nothing.
+                if !matches!(op, CmpOp::Ne) {
+                    probe.empty = true;
+                }
+                return;
+            }
+            match op {
+                CmpOp::Eq => {
+                    tighten_lo(probe, *value, true);
+                    tighten_hi(probe, *value, true);
+                }
+                CmpOp::Gt => tighten_lo(probe, *value, false),
+                CmpOp::Ge => tighten_lo(probe, *value, true),
+                CmpOp::Lt => tighten_hi(probe, *value, false),
+                CmpOp::Le => tighten_hi(probe, *value, true),
+                CmpOp::Ne => {}
+            }
+        }
+        _ => {}
+    }
+}
+
+fn tighten_lo(p: &mut IndexProbe, v: f64, inclusive: bool) {
+    p.lo = Some(match p.lo {
+        // Keep the existing bound when it is higher, or equal and at
+        // least as tight (exclusive beats inclusive at the same value).
+        Some((cur, ci)) if cur > v || (cur == v && (!ci || inclusive)) => (cur, ci),
+        _ => (v, inclusive),
+    });
+}
+
+fn tighten_hi(p: &mut IndexProbe, v: f64, inclusive: bool) {
+    p.hi = Some(match p.hi {
+        Some((cur, ci)) if cur < v || (cur == v && (!ci || inclusive)) => (cur, ci),
+        _ => (v, inclusive),
+    });
 }
 
 // ---- cardinality / selectivity estimation ----------------------------------
@@ -1134,6 +1247,7 @@ mod tests {
             sort: vec![SortKey::desc("val"), SortKey::asc("ts")],
             limit: Some(17),
             zone_maps: true,
+            index: Some("val".to_string()),
         };
         let dec = PipelineSpec::decode(&spec.encode()).unwrap();
         assert_eq!(dec, spec);
@@ -1146,10 +1260,51 @@ mod tests {
             sort: vec![],
             limit: None,
             zone_maps: false,
+            index: None,
         };
         assert_eq!(PipelineSpec::decode(&plain.encode()).unwrap(), plain);
         assert!(!plain.any_holistic());
         assert!(PipelineSpec::decode(b"\xff\xff").is_err());
+    }
+
+    #[test]
+    fn index_probe_window_takes_only_the_and_spine() {
+        // Conjunctive range: both sides tighten.
+        let p = Predicate::cmp("val", CmpOp::Ge, 10.0).and(Predicate::cmp("val", CmpOp::Lt, 20.0));
+        let w = index_probe_window(&p, "val").unwrap();
+        assert_eq!(w.lo, Some((10.0, true)));
+        assert_eq!(w.hi, Some((20.0, false)));
+        assert!(!w.empty);
+
+        // Eq pins both bounds; conjuncts on other columns don't leak in.
+        let p = Predicate::cmp("sensor", CmpOp::Eq, 3.0).and(Predicate::cmp("val", CmpOp::Gt, 0.0));
+        let w = index_probe_window(&p, "sensor").unwrap();
+        assert_eq!(w.lo, Some((3.0, true)));
+        assert_eq!(w.hi, Some((3.0, true)));
+        assert!(index_probe_window(&p, "ts").is_none());
+
+        // Tightest bound wins: exclusive beats inclusive at the same value.
+        let p = Predicate::cmp("val", CmpOp::Gt, 5.0).and(Predicate::cmp("val", CmpOp::Ge, 5.0));
+        let w = index_probe_window(&p, "val").unwrap();
+        assert_eq!(w.lo, Some((5.0, false)));
+
+        // Disjuncts and negations must not tighten (superset safety).
+        let p = Predicate::cmp("val", CmpOp::Gt, 100.0).or(Predicate::cmp("val", CmpOp::Lt, 0.0));
+        assert!(index_probe_window(&p, "val").is_none());
+        let p = Predicate::cmp("val", CmpOp::Lt, 1.0).not();
+        assert!(index_probe_window(&p, "val").is_none());
+        // Ne excludes a point — unusable as a range.
+        let p = Predicate::cmp("val", CmpOp::Ne, 7.0);
+        assert!(index_probe_window(&p, "val").is_none());
+
+        // Contradictions and NaN literals are provably-empty windows.
+        let p = Predicate::cmp("val", CmpOp::Gt, 9.0).and(Predicate::cmp("val", CmpOp::Lt, 3.0));
+        assert!(index_probe_window(&p, "val").unwrap().empty);
+        let p = Predicate::cmp("val", CmpOp::Eq, 4.0).and(Predicate::cmp("val", CmpOp::Lt, 4.0));
+        assert!(index_probe_window(&p, "val").unwrap().empty);
+        let p = Predicate::cmp("val", CmpOp::Le, f64::NAN);
+        assert!(index_probe_window(&p, "val").unwrap().empty);
+        assert!(index_probe_window(&Predicate::True, "val").is_none());
     }
 
     #[test]

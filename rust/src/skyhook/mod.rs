@@ -38,8 +38,8 @@ pub use logical::{
     PipelineSpec,
 };
 pub use plan::{
-    plan, plan_calibrated, plan_costed, plan_logical, plan_opts, CalibrationMap, ExecMode,
-    PlanStage, QueryPlan, SubQuery,
+    access_path_forced, plan, plan_calibrated, plan_costed, plan_logical, plan_opts,
+    plan_with_access, AccessForce, CalibrationMap, ExecMode, PlanStage, QueryPlan, SubQuery,
 };
 pub use query::{AggFunc, AggState, Aggregate, CmpOp, Predicate, Query, SortKey};
 pub use sketch::QuantileSketch;

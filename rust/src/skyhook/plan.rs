@@ -43,7 +43,10 @@
 //! (the baseline the paper improves on); the merge-side stages are
 //! client-side by nature in either mode.
 
-use super::logical::{estimate_groups, estimate_selectivity, LogicalPlan, PipelineSpec};
+use super::logical::{
+    estimate_groups, estimate_selectivity, index_probe_window, IndexProbe, LogicalPlan,
+    PipelineSpec,
+};
 use super::query::{Predicate, Query};
 use crate::dataset::metadata::{DatasetMeta, RowGroupMeta, ValueRange};
 use crate::dataset::{DType, Layout, TableSchema};
@@ -130,6 +133,34 @@ pub enum ExecMode {
     ClientSide,
 }
 
+/// Per-object access-path override: pins the planner's index-vs-scan
+/// choice for every surviving sub-query (the side choice — pushdown vs
+/// client — is orthogonal and stays with [`ExecMode`]). The property
+/// tests run the same query under `Index`, `Scan` and the free choice
+/// and require bit-identical results.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessForce {
+    /// Probe the secondary index wherever a probe window exists; scans
+    /// remain only for predicates no index covers.
+    Index,
+    /// Never probe; every sub-query scans.
+    Scan,
+}
+
+/// The `SKYHOOK_FORCE_ACCESS_PATH` env override (`"index"` / `"scan"`),
+/// the access-path analogue of `SKYHOOK_FORCE_SCALAR`: CI re-runs the
+/// suite with the planner's choice pinned to scan so every index-aware
+/// test also passes on the pure-scan path. Consulted by
+/// [`plan_calibrated`]; callers that must not race on the environment
+/// (parallel property tests) pin explicitly via [`plan_with_access`].
+pub fn access_path_forced() -> Option<AccessForce> {
+    match std::env::var("SKYHOOK_FORCE_ACCESS_PATH").ok()?.as_str() {
+        "index" => Some(AccessForce::Index),
+        "scan" => Some(AccessForce::Scan),
+        _ => None,
+    }
+}
+
 /// One operator stage of a compiled plan, tagged with where it runs —
 /// the per-operator offload boundary made visible (and testable).
 #[derive(Clone, Debug)]
@@ -176,6 +207,12 @@ pub struct SubQuery {
     /// reads match what the estimator priced. Storage-side handlers keep
     /// their backend's configured knob.
     pub header_prefix: usize,
+    /// Secondary-index column the storage-side handler should probe for
+    /// this object (the IndexScan access path): the worker stamps it
+    /// into the sub-query's [`PipelineSpec`] so the extension feeds the
+    /// postings in as a pre-mask. `None` = plain scan. Only ever set on
+    /// pushdown sub-queries — the client side has no omap to probe.
+    pub index_col: Option<String>,
 }
 
 /// A planned query.
@@ -227,6 +264,13 @@ pub struct QueryPlan {
     /// boundaries on its AND-spine range conjunct), when one applies to
     /// at least one surviving sub-query.
     pub earlystop: Option<String>,
+    /// Pushdown sub-queries the cost model routed through the IndexScan
+    /// access path (secondary-index probe feeding the kernel a
+    /// pre-mask) instead of a scan.
+    pub index_subqueries: usize,
+    /// The indexed column the first such sub-query probes (rendered by
+    /// [`QueryPlan::explain`]).
+    pub index_col: Option<String>,
 }
 
 impl QueryPlan {
@@ -274,6 +318,14 @@ impl QueryPlan {
                 "  clustered by {col:?}{}{}",
                 if exploits.is_empty() { "" } else { ": " },
                 exploits.join(", "),
+            );
+        }
+        if let Some(c) = &self.index_col {
+            let _ = writeln!(
+                out,
+                "  access path: IndexScan on {c:?} for {}/{} sub-queries",
+                self.index_subqueries,
+                self.subqueries.len(),
             );
         }
         for s in &self.stages {
@@ -357,10 +409,10 @@ pub fn plan_costed(
     plan_calibrated(query, meta, force_mode, prune, cost, &CalibrationMap::default())
 }
 
-/// [`plan_costed`] with a learned [`CalibrationMap`] — the full planner
-/// entry point. The driver plans through here with its accumulated
-/// per-column est-vs-actual corrections; one-shot callers pass an empty
-/// map via [`plan_costed`].
+/// [`plan_costed`] with a learned [`CalibrationMap`]. Consults the
+/// `SKYHOOK_FORCE_ACCESS_PATH` environment override for the index-vs-
+/// scan access-path choice; the driver plans through here with its
+/// accumulated per-column est-vs-actual corrections.
 pub fn plan_calibrated(
     query: &Query,
     meta: &DatasetMeta,
@@ -369,11 +421,37 @@ pub fn plan_calibrated(
     cost: &CostParams,
     calibration: &CalibrationMap,
 ) -> Result<QueryPlan> {
+    plan_with_access(
+        query,
+        meta,
+        force_mode,
+        prune,
+        cost,
+        calibration,
+        access_path_forced(),
+    )
+}
+
+/// The full planner entry point: [`plan_calibrated`] with the access
+/// path pinned programmatically (`None` = the cost model chooses,
+/// ignoring the environment — what parallel property tests need to
+/// avoid racing on env vars).
+#[allow(clippy::too_many_arguments)]
+pub fn plan_with_access(
+    query: &Query,
+    meta: &DatasetMeta,
+    force_mode: Option<ExecMode>,
+    prune: bool,
+    cost: &CostParams,
+    calibration: &CalibrationMap,
+    access: Option<AccessForce>,
+) -> Result<QueryPlan> {
     let DatasetMeta::Table {
         schema,
         layout,
         row_groups,
         cluster_by,
+        index_cols,
         ..
     } = meta
     else {
@@ -497,6 +575,8 @@ pub fn plan_calibrated(
     let mut n_client = 0usize;
     let mut prefix_subqueries = 0usize;
     let mut earlystop: Option<String> = None;
+    let mut index_subqueries = 0usize;
+    let mut plan_index_col: Option<String> = None;
     for (object, i) in survivors {
         let rg = &row_groups[i];
         // Columns whose sortedness marker this row group stamps — what
@@ -545,11 +625,76 @@ pub fn plan_calibrated(
                 earlystop = wcol;
             }
         }
+        // IndexScan access path: when the dataset keeps an `ix1/` index
+        // on a column the predicate's AND-spine bounds, price a probe-
+        // fed kernel pass as an alternative — the postings arrive as a
+        // pre-mask, so the per-row scan term shrinks to the estimated
+        // postings count while the priced read set stays the scan's
+        // (the handler still reads up to the highest posting — a
+        // deliberately conservative estimate). Among multiple covering
+        // indexes the tightest estimated window wins.
+        let mut index_candidate: Option<(String, AccessProfile)> = None;
+        if prune {
+            for col in index_cols {
+                let Some(probe) = index_probe_window(&query.predicate, col) else {
+                    continue;
+                };
+                let k = probe_rows_estimate(&probe, profile.rows, range(col));
+                if index_candidate
+                    .as_ref()
+                    .is_some_and(|(_, p)| p.rows <= k)
+                {
+                    continue;
+                }
+                let naggs = profile.agg_values / profile.rows.max(1);
+                index_candidate = Some((
+                    col.clone(),
+                    AccessProfile {
+                        rows: k,
+                        agg_values: k.saturating_mul(naggs),
+                        // A pre-masked pass never vectorizes.
+                        compiled_eligible: false,
+                        index_probes: 1.0,
+                        index_postings: k as f64,
+                        index_read_amp: cost.index_read_amp,
+                        ..profile
+                    },
+                ));
+            }
+        }
         // Each component once; their sum is the sub-query estimate
         // (exactly what `CostParams::estimate` computes).
         let io = cost.io_cost(&profile);
-        let cpu = cost.compute_cost(&profile);
+        let cpu_scan = cost.compute_cost(&profile);
         let reduce = cost.reduce_cost(&profile);
+        let (index_col, cpu) = match index_candidate {
+            Some((col, ixprof)) => {
+                let cpu_ix = cost.compute_cost(&ixprof);
+                let pick = match access {
+                    Some(AccessForce::Index) => true,
+                    Some(AccessForce::Scan) => false,
+                    // I/O and reduction are path-independent (the probe
+                    // path keeps the conservative read set and returns
+                    // the same partial), so compute decides.
+                    None => cpu_ix.pushdown_s < cpu_scan.pushdown_s,
+                };
+                if pick {
+                    // Hybrid estimate: the client side never probes (it
+                    // has no omap), so its cost stays the scan's.
+                    (
+                        Some(col),
+                        QueryCost {
+                            pushdown_s: cpu_ix.pushdown_s,
+                            client_s: cpu_scan.client_s,
+                            ..cpu_ix
+                        },
+                    )
+                } else {
+                    (None, cpu_scan)
+                }
+            }
+            None => (None, cpu_scan),
+        };
         let mut est = io;
         est.accumulate(&cpu);
         est.accumulate(&reduce);
@@ -572,6 +717,15 @@ pub fn plan_calibrated(
                 est_bytes += est.client_bytes;
             }
         }
+        // Only pushdown sub-queries can take the probe path — the
+        // client-side worker reads the object itself.
+        let index_col = if mode == ExecMode::Pushdown { index_col } else { None };
+        if let Some(c) = &index_col {
+            index_subqueries += 1;
+            if plan_index_col.is_none() {
+                plan_index_col = Some(c.clone());
+            }
+        }
         subqueries.push(SubQuery {
             object,
             mode,
@@ -580,6 +734,7 @@ pub fn plan_calibrated(
             zone_maps: prune,
             sorted_cols,
             header_prefix,
+            index_col,
         });
     }
     // Overall mode: forced, else the majority assignment (ties — and a
@@ -604,6 +759,11 @@ pub fn plan_calibrated(
                 let _ = write!(s.op, " (early-stop on {c})");
             }
         }
+        if s.op.starts_with("scan ") && index_subqueries > 0 {
+            if let Some(c) = &plan_index_col {
+                let _ = write!(s.op, " (index probe on {c})");
+            }
+        }
     }
     Ok(QueryPlan {
         query: query.clone(),
@@ -621,6 +781,8 @@ pub fn plan_calibrated(
         clustered: (!cluster_by.is_empty()).then(|| cluster_by.clone()),
         prefix_subqueries,
         earlystop,
+        index_subqueries,
+        index_col: plan_index_col,
     })
 }
 
@@ -813,8 +975,41 @@ impl QueryShape {
             sort_rows,
             objects_per_osd: 0.0,
             compiled_eligible: self.compiled_eligible,
+            index_probes: 0.0,
+            index_postings: 0.0,
+            index_read_amp: 0.0,
         }
     }
+}
+
+/// Estimated postings an `ix1/` probe of one row group returns: the
+/// probe window's uniform share of the column's zone-map value range.
+/// Like the probe itself this over-approximates the matching rows (the
+/// handler re-evaluates the full predicate under the pre-mask), so it is
+/// safe for pricing: an over-estimate only makes the index path look
+/// worse than it is, never better. Without a zone map the whole group is
+/// assumed; an equality pin mirrors `window_frac`'s 1% guess.
+fn probe_rows_estimate(probe: &IndexProbe, rows: u64, range: Option<ValueRange>) -> u64 {
+    if probe.empty {
+        return 0;
+    }
+    let Some(r) = range else {
+        return rows;
+    };
+    if !r.has_values() || r.hi <= r.lo {
+        return rows;
+    }
+    let lo = probe.lo.map(|(v, _)| v).unwrap_or(r.lo).max(r.lo);
+    let hi = probe.hi.map(|(v, _)| v).unwrap_or(r.hi).min(r.hi);
+    if hi < lo {
+        return 0;
+    }
+    let frac = if hi == lo {
+        0.01
+    } else {
+        ((hi - lo) / (r.hi - r.lo)).clamp(0.0, 1.0)
+    };
+    (frac * rows as f64).ceil() as u64
 }
 
 /// Estimated fraction of a row group's rows inside the filter window the
@@ -936,6 +1131,9 @@ pub fn server_pipeline(query: &Query, zone_maps: bool) -> PipelineSpec {
             None
         },
         zone_maps,
+        // The probe column is a per-object choice: the worker stamps it
+        // from its sub-query's `index_col` before encoding.
+        index: None,
     }
 }
 
@@ -1049,6 +1247,7 @@ mod tests {
                 .collect(),
             localities: vec![String::new(); groups],
             cluster_by: String::new(),
+            index_cols: vec![],
         }
     }
 
@@ -1079,6 +1278,7 @@ mod tests {
                 .collect(),
             localities: vec![String::new(); groups],
             cluster_by: String::new(),
+            index_cols: vec![],
         }
     }
 
@@ -1129,6 +1329,7 @@ mod tests {
                 .collect(),
             localities: vec![String::new(); groups],
             cluster_by: String::new(),
+            index_cols: vec![],
         }
     }
 
@@ -1347,6 +1548,7 @@ mod tests {
                 .collect(),
             localities: vec![String::new(); groups],
             cluster_by: "val".into(),
+            index_cols: vec![],
         }
     }
 
@@ -1564,6 +1766,7 @@ mod tests {
             }],
             localities: vec![String::new()],
             cluster_by: String::new(),
+            index_cols: vec![],
         };
         // Range predicates prune despite the NaNs…
         let q = Query::scan("ds").filter(Predicate::cmp("val", CmpOp::Gt, 5.0));
@@ -1592,6 +1795,7 @@ mod tests {
             ],
             localities: vec![String::new(); 2],
             cluster_by: String::new(),
+            index_cols: vec![],
         };
         let p = plan(&Query::scan("ds"), &m, None).unwrap();
         assert_eq!(p.subqueries.len(), 1);
@@ -1673,5 +1877,135 @@ mod tests {
         assert!(e.contains("[server] partial top-3 by [val desc]"));
         assert!(e.contains("[client] sort [val desc]"));
         assert!(e.contains("[client] limit 3"));
+    }
+
+    /// [`meta_sized`] with `val` declared indexed (what ingest stamps
+    /// when the dataset was written with `--index val`).
+    fn meta_indexed(groups: usize, rows: u64, bytes: u64) -> DatasetMeta {
+        let mut m = meta_sized(groups, rows, bytes);
+        let DatasetMeta::Table { index_cols, .. } = &mut m else {
+            unreachable!()
+        };
+        index_cols.push("val".into());
+        m
+    }
+
+    #[test]
+    fn planner_routes_needle_queries_through_the_index() {
+        let m = meta_indexed(4, 40_000, 1 << 20);
+        let cost = CostParams::default();
+        let cal = CalibrationMap::default();
+        // Needle regime: the probe window covers ~0.5% of the zone-map
+        // value range, so one probe plus ~200 postings undercuts the
+        // 40k-row scan term and the planner routes through the index.
+        let needle = Query::scan("ds")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 99.5))
+            .aggregate(AggFunc::Count, "val");
+        let p = plan_with_access(&needle, &m, None, true, &cost, &cal, None).unwrap();
+        assert_eq!(p.index_col.as_deref(), Some("val"), "cost {:?}", p.cost);
+        assert_eq!(p.index_subqueries, p.subqueries.len());
+        assert!(p
+            .subqueries
+            .iter()
+            .all(|s| s.index_col.as_deref() == Some("val")));
+        let e = p.explain();
+        assert!(e.contains("IndexScan on \"val\""), "{e}");
+        assert!(e.contains("(index probe on val)"), "{e}");
+        // Sweep regime: an 80% window makes the per-posting charges
+        // dwarf the scan it replaces; the planner keeps the scan path.
+        let sweep = Query::scan("ds")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 20.0))
+            .aggregate(AggFunc::Count, "val");
+        let ps = plan_with_access(&sweep, &m, None, true, &cost, &cal, None).unwrap();
+        assert_eq!(ps.index_subqueries, 0);
+        assert!(ps.index_col.is_none());
+        assert!(!ps.explain().contains("IndexScan"), "{}", ps.explain());
+        // The chosen index plan undercuts the same query pinned to scan
+        // on the pushdown side only — the client side cannot probe, so
+        // its estimate must not move.
+        let pscan =
+            plan_with_access(&needle, &m, None, true, &cost, &cal, Some(AccessForce::Scan))
+                .unwrap();
+        assert_eq!(pscan.index_subqueries, 0);
+        assert!(p.cost.pushdown_s < pscan.cost.pushdown_s);
+        assert!((p.cost.client_s - pscan.cost.client_s).abs() < 1e-12);
+        // A dataset without the index declaration never probes, however
+        // selective the predicate.
+        let pn = plan_with_access(
+            &needle,
+            &meta_sized(4, 40_000, 1 << 20),
+            None,
+            true,
+            &cost,
+            &cal,
+            None,
+        )
+        .unwrap();
+        assert_eq!(pn.index_subqueries, 0);
+    }
+
+    #[test]
+    fn access_force_pins_the_path_within_its_limits() {
+        let m = meta_indexed(3, 40_000, 1 << 20);
+        let cost = CostParams::default();
+        let cal = CalibrationMap::default();
+        let sweep = Query::scan("ds")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 20.0))
+            .aggregate(AggFunc::Count, "val");
+        // Forcing Index takes the probe path even where the cost model
+        // would scan (the unselective sweep)…
+        let pi = plan_with_access(
+            &sweep,
+            &m,
+            Some(ExecMode::Pushdown),
+            true,
+            &cost,
+            &cal,
+            Some(AccessForce::Index),
+        )
+        .unwrap();
+        assert_eq!(pi.index_subqueries, 3);
+        // …but cannot conjure a probe window: no index covers `ts`.
+        let uncovered = Query::scan("ds").filter(Predicate::cmp("ts", CmpOp::Gt, 100.0));
+        let pu = plan_with_access(
+            &uncovered,
+            &m,
+            Some(ExecMode::Pushdown),
+            true,
+            &cost,
+            &cal,
+            Some(AccessForce::Index),
+        )
+        .unwrap();
+        assert_eq!(pu.index_subqueries, 0);
+        // The unpruned baseline never probes regardless of force: its
+        // sub-queries may not consult xattrs at all.
+        let pb = plan_with_access(
+            &sweep,
+            &m,
+            Some(ExecMode::Pushdown),
+            false,
+            &cost,
+            &cal,
+            Some(AccessForce::Index),
+        )
+        .unwrap();
+        assert_eq!(pb.index_subqueries, 0);
+        // Client-side sub-queries drop the probe column: the worker
+        // reads the object itself and has no omap.
+        let pc = plan_with_access(
+            &sweep,
+            &m,
+            Some(ExecMode::ClientSide),
+            true,
+            &cost,
+            &cal,
+            Some(AccessForce::Index),
+        )
+        .unwrap();
+        assert_eq!(pc.index_subqueries, 0);
+        assert!(pc.subqueries.iter().all(|s| s.index_col.is_none()));
+        // The env override parses without panicking whatever CI set.
+        let _ = access_path_forced();
     }
 }

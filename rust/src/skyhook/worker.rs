@@ -72,6 +72,12 @@ pub struct SubResult {
     pub compiled_chunks: u64,
     /// Rows the storage server's compiled tier covered.
     pub compiled_rows: u64,
+    /// Secondary-index probes the storage server issued for this
+    /// sub-query (the IndexScan access path; from the response frame).
+    /// Always 0 client-side — the worker has no omap to probe.
+    pub index_probes: u64,
+    /// Postings those probes returned (the pre-mask population).
+    pub index_postings: u64,
     /// Virtual completion time.
     pub finish: f64,
 }
@@ -102,8 +108,15 @@ fn execute_pushdown(
     worker_cpu: &Timeline,
 ) -> Result<SubResult> {
     // The planner's server-side stage block, encoded and executed in a
-    // single pass on the OSD.
-    let input = spec.encode();
+    // single pass on the OSD. The probe column is a per-object planner
+    // choice, so it is stamped here rather than in the shared spec.
+    let input = if sub.index_col.is_some() {
+        let mut probed = spec.clone();
+        probed.index = sub.index_col.clone();
+        probed.encode()
+    } else {
+        spec.encode()
+    };
     let t = cluster.call(at, &sub.object, "skyhook", "exec", &input)?;
     let bytes = (input.len() + t.value.len()) as u64;
     let (out, counters) = decode_exec_out_full(&t.value, spec.keys.len(), spec.aggs.len())?;
@@ -126,6 +139,8 @@ fn execute_pushdown(
         rows_short_circuited: counters.rows_short_circuited,
         compiled_chunks: counters.compiled_chunks,
         compiled_rows: counters.compiled_rows,
+        index_probes: counters.index_probes,
+        index_postings: counters.index_postings,
         finish,
     })
 }
@@ -257,6 +272,8 @@ fn execute_client_side(
         rows_short_circuited: work.rows_short_circuited,
         compiled_chunks: 0,
         compiled_rows: 0,
+        index_probes: 0,
+        index_postings: 0,
         finish,
     })
 }
@@ -336,6 +353,7 @@ mod tests {
             zone_maps: true,
             sorted_cols: vec![],
             header_prefix: layout::HEADER_PREFIX,
+            index_col: None,
         };
         let sub_c = SubQuery {
             mode: ExecMode::ClientSide,
@@ -376,6 +394,7 @@ mod tests {
             zone_maps: true,
             sorted_cols: vec![],
             header_prefix: layout::HEADER_PREFIX,
+            index_col: None,
         };
         let rp = exec(&c, &q, &mk(ExecMode::Pushdown), &cpu).unwrap();
         let rc = exec(&c, &q, &mk(ExecMode::ClientSide), &cpu).unwrap();
@@ -409,6 +428,7 @@ mod tests {
             zone_maps: true,
             sorted_cols: vec![],
             header_prefix: layout::HEADER_PREFIX,
+            index_col: None,
         };
         let rp = exec(&c, &q, &mk(ExecMode::Pushdown), &cpu).unwrap();
         let rc = exec(&c, &q, &mk(ExecMode::ClientSide), &cpu).unwrap();
@@ -442,6 +462,7 @@ mod tests {
             zone_maps: true,
             sorted_cols: vec![],
             header_prefix: layout::HEADER_PREFIX,
+            index_col: None,
         };
         let rp = exec(&c, &q, &mk(ExecMode::Pushdown), &cpu).unwrap();
         let rc = exec(&c, &q, &mk(ExecMode::ClientSide), &cpu).unwrap();
@@ -473,6 +494,7 @@ mod tests {
             zone_maps: true,
             sorted_cols: vec![],
             header_prefix: layout::HEADER_PREFIX,
+            index_col: None,
         };
         let r = exec(&c, &q, &sub, &cpu).unwrap();
         let SubOutput::Rows(rows) = r.output else {
@@ -522,6 +544,7 @@ mod tests {
             zone_maps: true,
             sorted_cols: vec![],
             header_prefix: layout::HEADER_PREFIX,
+            index_col: None,
         };
         let r = exec(&c, &q, &sub, &cpu).unwrap();
         let SubOutput::Aggs(states) = r.output else {
@@ -573,6 +596,7 @@ mod tests {
                 zone_maps: true,
                 sorted_cols: vec![],
                 header_prefix: layout::HEADER_PREFIX,
+                index_col: None,
             };
             exec(&c, &q, &sub, &cpu).unwrap()
         };
@@ -628,6 +652,7 @@ mod tests {
             zone_maps: true,
             sorted_cols,
             header_prefix: layout::HEADER_PREFIX,
+            index_col: None,
         };
         let bounded = exec(&c, &q, &mk(vec!["val".into()]), &cpu).unwrap();
         let full = exec(&c, &q, &mk(vec![]), &cpu).unwrap();
@@ -659,6 +684,7 @@ mod tests {
             zone_maps: true,
             sorted_cols: vec![],
             header_prefix: layout::HEADER_PREFIX,
+            index_col: None,
         };
         assert!(exec(&c, &q, &sub, &cpu).is_err());
     }

@@ -521,6 +521,19 @@ impl Cluster {
             .map(|o| o.bytes_stored())
             .sum()
     }
+
+    /// Per-OSD LSM `KvStore` statistics (memtable/sstable shape, read
+    /// amplification): the live signal the driver stamps into
+    /// `CostParams::index_read_amp` before planning index probes, and
+    /// the metrics registry surfaces after index builds.
+    pub fn kv_stats(&self) -> Vec<crate::store::kvstore::KvStats> {
+        self.osds
+            .read()
+            .unwrap()
+            .iter()
+            .map(|o| o.kv_stats())
+            .collect()
+    }
 }
 
 #[cfg(test)]

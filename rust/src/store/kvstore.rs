@@ -39,9 +39,20 @@ pub struct KvStore {
 pub struct KvStats {
     pub live_keys: usize,
     pub runs: usize,
+    /// Entries currently buffered in the memtable (live + tombstones).
+    pub memtable_entries: usize,
     pub bytes_written: u64,
     pub bytes_flushed: u64,
     pub bytes_compacted: u64,
+}
+
+impl KvStats {
+    /// LSM read amplification: structures a point lookup may consult
+    /// (memtable + every sorted run). This is what the cost model uses
+    /// to price an index probe against this store.
+    pub fn read_amp(&self) -> usize {
+        self.runs + 1
+    }
 }
 
 impl Default for KvStore {
@@ -225,6 +236,7 @@ impl KvStore {
         KvStats {
             live_keys: live,
             runs: self.runs.len(),
+            memtable_entries: self.memtable.len(),
             bytes_written: self.bytes_written,
             bytes_flushed: self.bytes_flushed,
             bytes_compacted: self.bytes_compacted,
@@ -416,5 +428,81 @@ mod tests {
         assert!(kv.is_empty());
         assert!(kv.scan_prefix(b"x").is_empty());
         assert_eq!(kv.stats().live_keys, 0);
+    }
+
+    #[test]
+    fn scan_range_empty_windows() {
+        let mut kv = KvStore::new();
+        for k in ["a", "b", "c"] {
+            kv.put(k.as_bytes(), b"v");
+        }
+        // lo above everything.
+        assert!(kv.scan_range(b"z", Bound::Unbounded).is_empty());
+        // Degenerate window: lo == excluded hi.
+        assert!(kv.scan_range(b"b", Bound::Excluded(b"b" as &[u8])).is_empty());
+        // Inverted window: hi below lo.
+        assert!(kv.scan_range(b"c", Bound::Excluded(b"a" as &[u8])).is_empty());
+        // Included degenerate window hits exactly one key.
+        let hits = kv.scan_range(b"b", Bound::Included(b"b" as &[u8]));
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].0, b"b");
+    }
+
+    #[test]
+    fn scan_range_unbounded_hi_spans_runs_and_memtable() {
+        let mut kv = KvStore::with_memtable_limit(64);
+        // Enough writes to freeze several runs, plus fresh memtable keys.
+        for i in 0..40u32 {
+            kv.put(format!("k{i:02}").as_bytes(), &i.to_le_bytes());
+        }
+        kv.put(b"k99", b"tail");
+        assert!(kv.stats().runs > 0, "setup must span runs + memtable");
+        let hits = kv.scan_range(b"k20", Bound::Unbounded);
+        let keys: Vec<&[u8]> = hits.iter().map(|(k, _)| k.as_slice()).collect();
+        assert_eq!(keys.len(), 21); // k20..k39 and k99
+        assert_eq!(keys.first().unwrap(), b"k20");
+        assert_eq!(keys.last().unwrap(), b"k99");
+        assert!(keys.windows(2).all(|w| w[0] < w[1]), "ordered output");
+    }
+
+    #[test]
+    fn tombstones_hidden_from_scans_pre_and_post_compact() {
+        let mut kv = KvStore::with_memtable_limit(64);
+        for i in 0..30u32 {
+            kv.put(format!("t/{i:02}").as_bytes(), b"v");
+        }
+        // Tombstone one key that already lives in a frozen run and one
+        // that is still memtable-resident.
+        kv.delete(b"t/03");
+        kv.put(b"t/98", b"v");
+        kv.delete(b"t/98");
+        // Pre-compact: tombstones still physically present (runs keep
+        // them) but no scan surfaces the keys.
+        let pre = kv.scan_range(b"t/", Bound::Unbounded);
+        assert_eq!(pre.len(), 29);
+        assert!(!pre.iter().any(|(k, _)| k == b"t/03" || k == b"t/98"));
+        assert!(!kv.scan_prefix(b"t/0").iter().any(|(k, _)| k == b"t/03"));
+        // Post-compact: same visible set, tombstones physically dropped.
+        kv.compact();
+        let post = kv.scan_range(b"t/", Bound::Unbounded);
+        assert_eq!(post, pre);
+        assert_eq!(kv.stats().runs, 1);
+        assert_eq!(kv.stats().live_keys, 29);
+    }
+
+    #[test]
+    fn stats_track_memtable_and_read_amp() {
+        let mut kv = KvStore::with_memtable_limit(64);
+        assert_eq!(kv.stats().memtable_entries, 0);
+        assert_eq!(kv.stats().read_amp(), 1); // memtable only
+        for i in 0..40u32 {
+            kv.put(format!("key{i:04}").as_bytes(), &i.to_le_bytes());
+        }
+        let s = kv.stats();
+        assert!(s.runs > 0);
+        assert_eq!(s.read_amp(), s.runs + 1);
+        kv.compact();
+        assert_eq!(kv.stats().read_amp(), 2); // one run + memtable
+        assert_eq!(kv.stats().memtable_entries, 0);
     }
 }

@@ -37,6 +37,18 @@ pub trait ClsBackend {
     fn omap_get(&mut self, key: &[u8]) -> Option<Vec<u8>>;
     fn omap_set(&mut self, key: &[u8], value: &[u8]);
     fn omap_scan_prefix(&mut self, prefix: &[u8]) -> Vec<(Vec<u8>, Vec<u8>)>;
+    /// Ordered omap scan over `[lo, hi)` (hi per `Bound`), scoped to this
+    /// object's omap namespace. The index range-probe path lives on this.
+    fn omap_scan_range(
+        &mut self,
+        lo: &[u8],
+        hi: std::ops::Bound<&[u8]>,
+    ) -> Vec<(Vec<u8>, Vec<u8>)>;
+    /// LSM stats of the server-local KV store backing the omap — read
+    /// amplification prices index probes in the cost model.
+    fn kv_stats(&self) -> crate::store::kvstore::KvStats {
+        crate::store::kvstore::KvStats::default()
+    }
     /// Charge additional storage-side CPU seconds to this call (beyond
     /// the automatic per-byte device costs).
     fn charge_cpu(&mut self, seconds: f64);
@@ -234,6 +246,22 @@ impl ClsBackend for MemBackend {
         self.omap
             .iter()
             .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+    fn omap_scan_range(
+        &mut self,
+        lo: &[u8],
+        hi: std::ops::Bound<&[u8]>,
+    ) -> Vec<(Vec<u8>, Vec<u8>)> {
+        // BTreeMap::range panics on inverted bounds; empty window instead.
+        match hi {
+            std::ops::Bound::Included(h) if h < lo => return Vec::new(),
+            std::ops::Bound::Excluded(h) if h <= lo => return Vec::new(),
+            _ => {}
+        }
+        self.omap
+            .range::<[u8], _>((std::ops::Bound::Included(lo), hi))
             .map(|(k, v)| (k.clone(), v.clone()))
             .collect()
     }

@@ -315,6 +315,12 @@ impl Osd {
         self.inner.lock().unwrap().chunks.bytes_stored()
     }
 
+    /// Stats snapshot of the server-local KV store (xattrs, omap,
+    /// secondary indexes) — the RocksDB-shaped signal behind index costs.
+    pub fn kv_stats(&self) -> super::kvstore::KvStats {
+        self.inner.lock().unwrap().kv.stats()
+    }
+
     /// Number of objects.
     pub fn object_count(&self) -> usize {
         self.inner.lock().unwrap().objects.len()
@@ -431,6 +437,50 @@ impl ClsBackend for OsdBackend<'_> {
         hits.into_iter()
             .map(|(k, v)| (k[strip..].to_vec(), v))
             .collect()
+    }
+
+    fn omap_scan_range(
+        &mut self,
+        lo: &[u8],
+        hi: std::ops::Bound<&[u8]>,
+    ) -> Vec<(Vec<u8>, Vec<u8>)> {
+        // Frame bounds into this object's omap namespace; an unbounded hi
+        // must still stop at the end of the namespace, never leak into the
+        // next object's keys.
+        let full_lo = omap_key(&self.name, lo);
+        let frame = omap_key(&self.name, b"");
+        let strip = frame.len();
+        let framed_hi: Vec<u8>;
+        let hi_bound: std::ops::Bound<&[u8]> = match hi {
+            std::ops::Bound::Included(h) => {
+                framed_hi = omap_key(&self.name, h);
+                std::ops::Bound::Included(framed_hi.as_slice())
+            }
+            std::ops::Bound::Excluded(h) => {
+                framed_hi = omap_key(&self.name, h);
+                std::ops::Bound::Excluded(framed_hi.as_slice())
+            }
+            std::ops::Bound::Unbounded => {
+                // Successor of the namespace frame "m/<name>\0": bump the
+                // trailing 0x00 separator to 0x01.
+                let mut succ = frame.clone();
+                *succ.last_mut().unwrap() = 1;
+                framed_hi = succ;
+                std::ops::Bound::Excluded(framed_hi.as_slice())
+            }
+        };
+        let hits = self.inner.kv.scan_range(&full_lo, hi_bound);
+        self.bytes_read += hits
+            .iter()
+            .map(|(k, v)| (k.len() + v.len()) as u64)
+            .sum::<u64>();
+        hits.into_iter()
+            .map(|(k, v)| (k[strip..].to_vec(), v))
+            .collect()
+    }
+
+    fn kv_stats(&self) -> crate::store::kvstore::KvStats {
+        self.inner.kv.stats()
     }
 
     fn charge_cpu(&mut self, seconds: f64) {
@@ -585,6 +635,38 @@ mod tests {
         o.call(0.0, "o", "bytes", "decompress", &[]).unwrap();
         assert_eq!(o.read(0.0, "o").unwrap().value, data);
         assert!(o.counters().cls_cpu_seconds > 0.0);
+    }
+
+    #[test]
+    fn omap_scan_range_stays_in_object_namespace() {
+        let mut reg = ClassRegistry::with_builtins();
+        reg.register("t", "fill", |b, _| {
+            b.omap_set(b"k1", b"v1");
+            b.omap_set(b"k3", b"v3");
+            b.omap_set(b"k5", b"v5");
+            Ok(vec![])
+        });
+        reg.register("t", "range", |b, input| {
+            let hits = if input.is_empty() {
+                b.omap_scan_range(b"k2", std::ops::Bound::Unbounded)
+            } else {
+                b.omap_scan_range(b"k2", std::ops::Bound::Excluded(input))
+            };
+            Ok(hits.into_iter().flat_map(|(k, _)| k).collect())
+        });
+        let o = Osd::new(0, CostParams::paper_testbed(), Arc::new(reg));
+        o.write_full(0.0, "a", b"d").unwrap();
+        o.write_full(0.0, "b", b"d").unwrap();
+        o.call(0.0, "a", "t", "fill", &[]).unwrap();
+        o.call(0.0, "b", "t", "fill", &[]).unwrap();
+        // Unbounded hi on "a" sees a's keys >= k2 and nothing from "b".
+        let out = o.call(0.0, "a", "t", "range", &[]).unwrap().value;
+        assert_eq!(out, b"k3k5");
+        // Excluded hi trims the tail.
+        let out = o.call(0.0, "a", "t", "range", b"k5").unwrap().value;
+        assert_eq!(out, b"k3");
+        // The KV behind it all is observable.
+        assert!(o.kv_stats().live_keys >= 6);
     }
 
     #[test]

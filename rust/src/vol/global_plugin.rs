@@ -443,6 +443,7 @@ mod tests {
             row_groups: vec![],
             localities: vec![],
             cluster_by: String::new(),
+            index_cols: vec![],
         };
         metadata::save_meta(&c, 0.0, "tab", &meta, false).unwrap();
         let mut f = VolFile::open(Box::new(ForwardingBackend::new(c)));

@@ -1769,3 +1769,141 @@ fn vol_forwarding_matches_reference_buffer() {
         },
     );
 }
+
+#[test]
+fn indexed_and_unindexed_executions_agree_end_to_end() {
+    // The IndexScan access path must be invisible in results: the same
+    // random table ingested with and without declared index columns
+    // answers random eq/range/group/sort/limit plans bit-identically
+    // under the forced-index, forced-scan, and planner-chosen paths —
+    // the probe window over-approximates the AND-spine conjuncts and the
+    // kernel re-evaluates the full predicate, so any divergence is a bug
+    // in the encoding, the probe, or the pre-mask plumbing.
+    use skyhook_map::config::{ClusterConfig, DriverConfig};
+    use skyhook_map::dataset::partition::PartitionSpec;
+    use skyhook_map::skyhook::{register_skyhook_class, AccessForce, Driver, ExecMode, Query};
+    use skyhook_map::store::{ClassRegistry, Cluster};
+
+    forall_explain(
+        23,
+        8,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Xoshiro256::new(seed);
+            let mut reg = ClassRegistry::with_builtins();
+            register_skyhook_class(&mut reg, None);
+            let cluster = Cluster::new(
+                &ClusterConfig {
+                    osds: 3,
+                    replicas: 1,
+                    ..Default::default()
+                },
+                reg,
+            );
+            let driver = Driver::new(
+                cluster,
+                DriverConfig {
+                    workers: 2,
+                    ..Default::default()
+                },
+            );
+            let rows = rng.range(0, 400);
+            let batch = random_numeric_batch(&mut rng, rows, true);
+            let layout = if rng.chance(0.5) { Layout::Col } else { Layout::Row };
+            driver
+                .write_table("plain", &batch, layout, &PartitionSpec::with_target(2048), None)
+                .map_err(|e| e.to_string())?;
+            driver
+                .write_table(
+                    "ix",
+                    &batch,
+                    layout,
+                    &PartitionSpec::with_target(2048)
+                        .index("val")
+                        .index("ts")
+                        .index("sensor"),
+                    None,
+                )
+                .map_err(|e| e.to_string())?;
+            let pred = random_numeric_pred(&mut rng, 3);
+
+            // One execution per dataset × access pin; every result must
+            // match the unindexed dataset's byte for byte.
+            let paths: [(&str, Option<AccessForce>); 4] = [
+                ("plain", None),
+                ("ix", Some(AccessForce::Index)),
+                ("ix", Some(AccessForce::Scan)),
+                ("ix", None),
+            ];
+            let push = Some(ExecMode::Pushdown);
+
+            // Row pipeline: filter → project → sort+limit.
+            let mut row_ref: Option<Batch> = None;
+            for (ds, access) in &paths {
+                let q = Query::scan(ds)
+                    .filter(pred.clone())
+                    .select(&["ts", "val"])
+                    .top_k("ts", false, 17);
+                let r = driver
+                    .execute_with_access(&q, push, *access)
+                    .map_err(|e| e.to_string())?;
+                let got = r.rows.unwrap();
+                match &row_ref {
+                    None => row_ref = Some(got),
+                    Some(want) if batches_bit_equal(want, &got) => {}
+                    Some(_) => {
+                        return Err(format!("rows diverge on {ds}/{access:?}: {pred:?}"));
+                    }
+                }
+            }
+
+            // Algebraic aggregates (Sum folds in object order on every
+            // path, so even NaN-bearing sums must agree bitwise).
+            let mut agg_ref: Option<Vec<f64>> = None;
+            for (ds, access) in &paths {
+                let q = Query::scan(ds)
+                    .filter(pred.clone())
+                    .aggregate(AggFunc::Count, "val")
+                    .aggregate(AggFunc::Sum, "val");
+                let r = driver
+                    .execute_with_access(&q, push, *access)
+                    .map_err(|e| e.to_string())?;
+                match &agg_ref {
+                    None => agg_ref = Some(r.aggregates),
+                    Some(want)
+                        if want
+                            .iter()
+                            .zip(&r.aggregates)
+                            .all(|(a, b)| a.to_bits() == b.to_bits()) => {}
+                    Some(want) => {
+                        return Err(format!(
+                            "aggregates diverge on {ds}/{access:?}: {want:?} vs {:?} for {pred:?}",
+                            r.aggregates
+                        ));
+                    }
+                }
+            }
+
+            // Grouped counts.
+            let mut grp_ref: Option<Vec<(Vec<i64>, Vec<f64>)>> = None;
+            for (ds, access) in &paths {
+                let q = Query::scan(ds)
+                    .filter(pred.clone())
+                    .group("sensor")
+                    .aggregate(AggFunc::Count, "val");
+                let r = driver
+                    .execute_with_access(&q, push, *access)
+                    .map_err(|e| e.to_string())?;
+                let got = r.groups.unwrap();
+                match &grp_ref {
+                    None => grp_ref = Some(got),
+                    Some(want) if *want == got => {}
+                    Some(_) => {
+                        return Err(format!("groups diverge on {ds}/{access:?}: {pred:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -13,8 +13,10 @@
 #   BENCH_kernel.json     — E1 (estimator-side compiled-tier ablation,
 #                           E1b) + E2 (execution-side ablation, E2d):
 #                           the compiled-vs-scalar kernel trajectory
+#   BENCH_index.json      — E10 (secondary-index selectivity crossover:
+#                           index-probe vs scan, probes/postings, sim s)
 #
-# Usage: scripts/bench.sh [pushdown.json [compose.json [costmodel.json [physdesign.json [kernel.json]]]]]
+# Usage: scripts/bench.sh [pushdown.json [compose.json [costmodel.json [physdesign.json [kernel.json [index.json]]]]]]
 #
 # Each snapshot records wall time per bench plus the raw table output
 # (which includes bytes_moved / objects_pruned / sim_seconds columns).
@@ -26,6 +28,7 @@ compose_json=${2:-BENCH_compose.json}
 costmodel_json=${3:-BENCH_costmodel.json}
 physdesign_json=${4:-BENCH_physdesign.json}
 kernel_json=${5:-BENCH_kernel.json}
+index_json=${6:-BENCH_index.json}
 workdir=$(mktemp -d)
 trap 'rm -rf "$workdir"' EXIT
 
@@ -52,6 +55,7 @@ run_bench e5_composability || status=1
 run_bench e6_cost_model || status=1
 run_bench e4_physical_design || status=1
 run_bench e1_table1_forwarding || status=1
+run_bench e10_index || status=1
 
 snapshot() {
     local out=$1
@@ -95,5 +99,6 @@ snapshot "$compose_json" e5_composability
 snapshot "$costmodel_json" e6_cost_model
 snapshot "$physdesign_json" e4_physical_design
 snapshot "$kernel_json" e1_table1_forwarding e2_pushdown
+snapshot "$index_json" e10_index
 
 exit $status
