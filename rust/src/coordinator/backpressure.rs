@@ -1,15 +1,40 @@
-//! Credit-based backpressure for the streaming write path: the ingestion
-//! router grants a bounded number of in-flight object writes; producers
-//! block (or fail fast) when the storage tier can't keep up — the
-//! data-pipeline coordination role of L3.
+//! Credit-based backpressure: the router grants a bounded number of
+//! in-flight operations; producers block (or fail fast) when the storage
+//! tier can't keep up — the data-pipeline coordination role of L3.
+//!
+//! Two layers live here:
+//!
+//! - [`CreditGate`] — a counting semaphore handing out RAII [`Credit`]s.
+//!   Every lock/wait is poison-tolerant: a panic anywhere (including in a
+//!   credit holder, whose `Drop` then runs mid-unwind) must never leak a
+//!   credit or abort by double-panicking in `Drop`.
+//! - [`QueryGate`] — the query admission path: a global pool plus lazily
+//!   created per-tenant pools, with a bounded-wait [`QueryGate::admit`]
+//!   that rejects with a typed [`Error::Overloaded`] instead of queueing
+//!   unboundedly.
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+/// Poison-tolerant lock: a panic in some other holder must not take the
+/// gate down with it — the protected count is a plain integer that is
+/// always in a valid state, so we keep serving through the poison flag.
+fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 struct Inner {
     available: Mutex<usize>,
     cv: Condvar,
     capacity: usize,
+    /// Condvar wait iterations taken by `acquire_timeout` callers — the
+    /// observable the no-busy-spin tests bound: a correct deadline wait
+    /// wakes O(1) times per call, a poll loop wakes unboundedly.
+    timeout_polls: AtomicUsize,
 }
 
 /// A counting semaphore handing out write credits.
@@ -32,6 +57,7 @@ impl CreditGate {
                 available: Mutex::new(capacity),
                 cv: Condvar::new(),
                 capacity,
+                timeout_polls: AtomicUsize::new(0),
             }),
         }
     }
@@ -42,15 +68,25 @@ impl CreditGate {
 
     /// Currently available credits.
     pub fn available(&self) -> usize {
-        *self.inner.available.lock().unwrap()
+        *plock(&self.inner.available)
+    }
+
+    /// Total condvar wake-ups observed inside [`Self::acquire_timeout`]
+    /// waits since the gate was built (see `Inner::timeout_polls`).
+    pub fn timeout_poll_count(&self) -> usize {
+        self.inner.timeout_polls.load(Ordering::Relaxed)
     }
 
     /// Block until `n` credits are available, then take them.
     pub fn acquire(&self, n: usize) -> Credit {
         let n = n.min(self.inner.capacity).max(1);
-        let mut avail = self.inner.available.lock().unwrap();
+        let mut avail = plock(&self.inner.available);
         while *avail < n {
-            avail = self.inner.cv.wait(avail).unwrap();
+            avail = self
+                .inner
+                .cv
+                .wait(avail)
+                .unwrap_or_else(PoisonError::into_inner);
         }
         *avail -= n;
         Credit {
@@ -62,7 +98,7 @@ impl CreditGate {
     /// Take `n` credits without blocking; None if unavailable.
     pub fn try_acquire(&self, n: usize) -> Option<Credit> {
         let n = n.min(self.inner.capacity).max(1);
-        let mut avail = self.inner.available.lock().unwrap();
+        let mut avail = plock(&self.inner.available);
         if *avail < n {
             return None;
         }
@@ -73,11 +109,13 @@ impl CreditGate {
         })
     }
 
-    /// Acquire with a timeout; None on timeout.
+    /// Acquire with a timeout; None on timeout. The wait is
+    /// deadline-driven (one condvar sleep spanning the full remaining
+    /// window), never a poll loop — `timeout_poll_count` proves it.
     pub fn acquire_timeout(&self, n: usize, timeout: Duration) -> Option<Credit> {
         let n = n.min(self.inner.capacity).max(1);
         let deadline = std::time::Instant::now() + timeout;
-        let mut avail = self.inner.available.lock().unwrap();
+        let mut avail = plock(&self.inner.available);
         while *avail < n {
             let now = std::time::Instant::now();
             if now >= deadline {
@@ -87,8 +125,9 @@ impl CreditGate {
                 .inner
                 .cv
                 .wait_timeout(avail, deadline - now)
-                .unwrap();
+                .unwrap_or_else(PoisonError::into_inner);
             avail = g;
+            self.inner.timeout_polls.fetch_add(1, Ordering::Relaxed);
             if res.timed_out() && *avail < n {
                 return None;
             }
@@ -110,16 +149,128 @@ impl Credit {
 
 impl Drop for Credit {
     fn drop(&mut self) {
-        let mut avail = self.inner.available.lock().unwrap();
+        // Runs during unwind when the holder panicked: must not panic
+        // itself (a poisoned mutex would have made `.unwrap()` abort the
+        // process via double-panic) and must always return the credits.
+        let mut avail = plock(&self.inner.available);
         *avail += self.n;
         self.inner.cv.notify_all();
+    }
+}
+
+/// Sizing for the [`QueryGate`] admission path.
+#[derive(Debug, Clone)]
+pub struct QueryGateConfig {
+    /// Cluster-wide cap on concurrently admitted queries.
+    pub global_credits: usize,
+    /// Per-tenant cap (each tenant gets its own pool of this size).
+    pub tenant_credits: usize,
+    /// Bounded admission wait before rejecting with `Overloaded`.
+    pub admit_timeout: Duration,
+}
+
+impl Default for QueryGateConfig {
+    fn default() -> Self {
+        Self {
+            global_credits: 256,
+            tenant_credits: 64,
+            admit_timeout: Duration::from_millis(250),
+        }
+    }
+}
+
+/// Query admission: one global credit pool shared by every query, plus a
+/// lazily created pool per tenant so no tenant can saturate the cluster
+/// alone. `admit` waits at most `admit_timeout` end to end and rejects
+/// with a typed [`Error::Overloaded`] naming the exhausted pool.
+pub struct QueryGate {
+    global: CreditGate,
+    tenants: Mutex<HashMap<String, CreditGate>>,
+    cfg: QueryGateConfig,
+}
+
+/// Proof of admission; both credits release on drop (unwind-safe, since
+/// [`Credit`]'s `Drop` is).
+pub struct Admission {
+    _tenant: Option<Credit>,
+    _global: Credit,
+}
+
+impl QueryGate {
+    pub fn new(cfg: QueryGateConfig) -> Self {
+        Self {
+            global: CreditGate::new(cfg.global_credits),
+            tenants: Mutex::new(HashMap::new()),
+            cfg,
+        }
+    }
+
+    /// Globally available query credits.
+    pub fn available(&self) -> usize {
+        self.global.available()
+    }
+
+    /// Global capacity.
+    pub fn capacity(&self) -> usize {
+        self.global.capacity()
+    }
+
+    /// Available credits in `tenant`'s pool; None if the tenant has
+    /// never been admitted (its pool is created on first admit).
+    pub fn tenant_available(&self, tenant: &str) -> Option<usize> {
+        plock(&self.tenants).get(tenant).map(CreditGate::available)
+    }
+
+    fn tenant_gate(&self, tenant: &str) -> CreditGate {
+        plock(&self.tenants)
+            .entry(tenant.to_string())
+            .or_insert_with(|| CreditGate::new(self.cfg.tenant_credits))
+            .clone()
+    }
+
+    /// Admit one query, waiting at most `admit_timeout` across both
+    /// pools. Tenant first (a tenant over its own budget is turned away
+    /// before it touches the shared pool), then global with whatever
+    /// window remains; acquisition order is identical for every caller,
+    /// so the two-stage wait cannot deadlock.
+    pub fn admit(&self, tenant: Option<&str>) -> Result<Admission> {
+        let deadline = std::time::Instant::now() + self.cfg.admit_timeout;
+        let tenant_credit = match tenant {
+            None => None,
+            Some(t) => {
+                let gate = self.tenant_gate(t);
+                match gate.acquire_timeout(1, self.cfg.admit_timeout) {
+                    Some(c) => Some(c),
+                    None => {
+                        return Err(Error::Overloaded(format!(
+                            "tenant {t:?}: no query credit within {:?} \
+                             (pool of {})",
+                            self.cfg.admit_timeout, self.cfg.tenant_credits
+                        )))
+                    }
+                }
+            }
+        };
+        let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+        match self.global.acquire_timeout(1, remaining) {
+            Some(g) => Ok(Admission {
+                _tenant: tenant_credit,
+                _global: g,
+            }),
+            None => Err(Error::Overloaded(format!(
+                "global pool: no query credit within {:?} (pool of {})",
+                self.cfg.admit_timeout, self.cfg.global_credits
+            ))),
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Barrier;
 
     #[test]
     fn acquire_and_release() {
@@ -201,5 +352,153 @@ mod tests {
             h.join().unwrap();
         }
         assert!(peak.load(Ordering::SeqCst) <= 4);
+    }
+
+    #[test]
+    fn credits_restore_when_holder_panics() {
+        // The Credit Drop runs during the holder's unwind; the credit
+        // must come back and later acquirers must proceed.
+        let g = CreditGate::new(2);
+        let g2 = g.clone();
+        let joined = std::thread::spawn(move || {
+            let _c = g2.acquire(2);
+            panic!("holder dies with both credits");
+        })
+        .join();
+        assert!(joined.is_err());
+        assert_eq!(g.available(), 2, "panicking holder leaked credits");
+        let c = g.acquire_timeout(2, Duration::from_millis(100));
+        assert!(c.is_some(), "gate wedged after holder panic");
+    }
+
+    #[test]
+    fn gate_survives_poisoned_mutex() {
+        // Poison the gate's mutex directly (a panic while holding the
+        // lock). Every subsequent operation — including the Credit Drop,
+        // which would previously double-panic and abort — must keep
+        // working off the still-valid count.
+        let g = CreditGate::new(2);
+        let held = g.acquire(1);
+        let inner = Arc::clone(&g.inner);
+        let poisoned = std::thread::spawn(move || {
+            let _guard = inner.available.lock().unwrap();
+            panic!("poison the gate mutex");
+        })
+        .join();
+        assert!(poisoned.is_err());
+        assert!(g.inner.available.is_poisoned());
+        assert_eq!(g.available(), 1);
+        drop(held); // must restore, not abort
+        assert_eq!(g.available(), 2);
+        let c = g.acquire_timeout(2, Duration::from_millis(100)).unwrap();
+        drop(c);
+        assert_eq!(g.available(), 2);
+        assert!(g.try_acquire(1).is_some());
+    }
+
+    #[test]
+    fn stress_churn_always_restores_initial_credits() {
+        // Threads × barrier churn across every acquisition flavor, with
+        // some holders panicking mid-hold: after everything joins, the
+        // credit count is exactly the initial capacity — no leaks, no
+        // double-returns.
+        let g = CreditGate::new(6);
+        let threads = 12;
+        let rounds = 40;
+        let barrier = Arc::new(Barrier::new(threads));
+        let mut hs = Vec::new();
+        for t in 0..threads {
+            let g = g.clone();
+            let barrier = Arc::clone(&barrier);
+            hs.push(std::thread::spawn(move || {
+                barrier.wait(); // maximal contention from the first round
+                for i in 0..rounds {
+                    let n = 1 + (t + i) % 3;
+                    match (t + i) % 4 {
+                        0 => {
+                            let _c = g.acquire(n);
+                        }
+                        1 => {
+                            let _c = g.try_acquire(n);
+                        }
+                        2 => {
+                            let _c = g.acquire_timeout(n, Duration::from_millis(5));
+                        }
+                        _ => {
+                            // Panic while holding; unwind must return it.
+                            let r = catch_unwind(AssertUnwindSafe(|| {
+                                let _c = g.acquire(n);
+                                panic!("churn holder panic");
+                            }));
+                            assert!(r.is_err());
+                        }
+                    }
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(g.available(), g.capacity(), "credits leaked or forged");
+    }
+
+    #[test]
+    fn zero_credit_timeout_never_busy_spins() {
+        // With the only credit held and nobody releasing, a timed-out
+        // acquire must sleep the window in O(1) condvar waits — a poll
+        // loop would rack up hundreds of wake-ups in 60ms.
+        let g = CreditGate::new(1);
+        let _held = g.acquire(1);
+        let before = g.timeout_poll_count();
+        assert!(g.acquire_timeout(1, Duration::from_millis(60)).is_none());
+        let polls = g.timeout_poll_count() - before;
+        assert!(polls <= 8, "busy-spin: {polls} wake-ups for one timeout");
+    }
+
+    fn qcfg(global: usize, tenant: usize, ms: u64) -> QueryGateConfig {
+        QueryGateConfig {
+            global_credits: global,
+            tenant_credits: tenant,
+            admit_timeout: Duration::from_millis(ms),
+        }
+    }
+
+    #[test]
+    fn query_gate_per_tenant_isolation() {
+        let qg = QueryGate::new(qcfg(8, 1, 20));
+        let held = qg.admit(Some("a")).unwrap();
+        // Tenant a is at its cap: rejected with the typed error naming it.
+        let err = qg.admit(Some("a")).unwrap_err();
+        assert!(matches!(&err, Error::Overloaded(m) if m.contains("\"a\"")), "{err}");
+        // Tenant b is unaffected.
+        let b = qg.admit(Some("b")).unwrap();
+        drop(held);
+        assert_eq!(qg.tenant_available("a"), Some(1));
+        assert!(qg.admit(Some("a")).is_ok());
+        drop(b);
+    }
+
+    #[test]
+    fn query_gate_global_cap_spans_tenants() {
+        let qg = QueryGate::new(qcfg(2, 8, 20));
+        let a = qg.admit(Some("a")).unwrap();
+        let b = qg.admit(Some("b")).unwrap();
+        let err = qg.admit(Some("c")).unwrap_err();
+        assert!(matches!(&err, Error::Overloaded(m) if m.contains("global")), "{err}");
+        drop(a);
+        assert!(qg.admit(Some("c")).is_ok());
+        drop(b);
+        assert_eq!(qg.available(), 1);
+    }
+
+    #[test]
+    fn query_gate_anonymous_uses_global_only() {
+        let qg = QueryGate::new(qcfg(1, 1, 20));
+        let held = qg.admit(None).unwrap();
+        assert_eq!(qg.available(), 0);
+        assert!(qg.admit(None).is_err());
+        drop(held);
+        assert_eq!(qg.available(), 1);
+        assert_eq!(qg.tenant_available("nobody"), None);
     }
 }

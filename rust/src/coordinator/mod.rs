@@ -8,7 +8,7 @@ pub mod metrics;
 pub mod rebalance;
 pub mod router;
 
-pub use backpressure::{Credit, CreditGate};
+pub use backpressure::{Admission, Credit, CreditGate, QueryGate, QueryGateConfig};
 pub use batcher::{BatchPolicy, BatchStats, Batcher};
 pub use ingest::{IngestConfig, IngestReport, Ingestor};
 pub use metrics::Metrics;

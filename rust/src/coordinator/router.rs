@@ -1,15 +1,25 @@
 //! The front-door request router: the piece of L3 that a deployment would
 //! put its clients behind. Wraps the Skyhook driver with admission
-//! control (write credits), per-request metrics, and a uniform
+//! control (write credits on the ingest path, the global + per-tenant
+//! [`QueryGate`] on the query path), per-request metrics, and a uniform
 //! request/response surface used by the CLI `serve` loop and examples.
+//!
+//! The query path is safe to drive from many threads at once (the CLI
+//! `serve --concurrency` loop and the serving-layer tests do): admission
+//! bounds how many run, `router.queries_inflight` gauges how many are in
+//! right now, and a query turned away by the gate surfaces as the typed
+//! [`Error::Overloaded`](crate::Error::Overloaded) plus a
+//! `router.queries_rejected` count — load shedding a client can see and
+//! back off from, never an unbounded queue.
 
-use super::backpressure::CreditGate;
+use super::backpressure::{CreditGate, QueryGate, QueryGateConfig};
 use super::metrics::Metrics;
 use crate::dataset::partition::PartitionSpec;
 use crate::dataset::table::Batch;
 use crate::dataset::Layout;
 use crate::error::Result;
 use crate::skyhook::{Driver, ExecMode, Query, QueryResult, WriteReport};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -26,6 +36,10 @@ pub enum Request {
     Query {
         query: Query,
         force_mode: Option<ExecMode>,
+        /// Admission accounting: queries with a tenant draw from that
+        /// tenant's credit pool as well as the global one; `None` draws
+        /// from the global pool only.
+        tenant: Option<String>,
     },
     /// Build a secondary index.
     BuildIndex { dataset: String, column: String },
@@ -45,20 +59,57 @@ pub enum Response {
 pub struct Router {
     driver: Arc<Driver>,
     write_gate: CreditGate,
+    query_gate: QueryGate,
+    /// Queries currently executing (admitted, not yet returned). The
+    /// `router.queries_inflight` gauge mirrors this on every transition.
+    inflight: AtomicU64,
     pub metrics: Arc<Metrics>,
+}
+
+/// Keeps the in-flight count honest even when `Driver::execute` errors:
+/// the decrement rides the unwind path, so a failed query never leaves
+/// the gauge stuck above zero.
+struct InflightScope<'a> {
+    router: &'a Router,
+}
+
+impl Drop for InflightScope<'_> {
+    fn drop(&mut self) {
+        let now = self.router.inflight.fetch_sub(1, Ordering::SeqCst) - 1;
+        self.router.metrics.set("router.queries_inflight", now);
+    }
 }
 
 impl Router {
     pub fn new(driver: Arc<Driver>, write_credits: usize) -> Self {
+        Self::with_gates(driver, write_credits, QueryGateConfig::default())
+    }
+
+    /// Construct with explicit query-admission sizing. `new` uses
+    /// [`QueryGateConfig::default`], which is generous enough that
+    /// single-threaded callers never notice the gate exists.
+    pub fn with_gates(
+        driver: Arc<Driver>,
+        write_credits: usize,
+        gate_cfg: QueryGateConfig,
+    ) -> Self {
         Self {
             driver,
             write_gate: CreditGate::new(write_credits),
+            query_gate: QueryGate::new(gate_cfg),
+            inflight: AtomicU64::new(0),
             metrics: Arc::new(Metrics::new()),
         }
     }
 
     pub fn driver(&self) -> &Arc<Driver> {
         &self.driver
+    }
+
+    /// The query-admission gate (observability and tests: benches drain
+    /// it to provoke deterministic `Overloaded` rejections).
+    pub fn query_gate(&self) -> &QueryGate {
+        &self.query_gate
     }
 
     /// Route one request, recording metrics.
@@ -84,7 +135,24 @@ impl Router {
                     .observe("router.write_latency", start.elapsed().as_secs_f64());
                 Response::Write(rep)
             }
-            Request::Query { query, force_mode } => {
+            Request::Query {
+                query,
+                force_mode,
+                tenant,
+            } => {
+                // Admission: bounded wait for a credit, then shed. The
+                // credit pair (tenant + global) rides `_admission` and is
+                // returned when this arm exits, success or error.
+                let _admission = match self.query_gate.admit(tenant.as_deref()) {
+                    Ok(a) => a,
+                    Err(e) => {
+                        self.metrics.incr("router.queries_rejected", 1);
+                        return Err(e);
+                    }
+                };
+                let now = self.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+                self.metrics.set("router.queries_inflight", now);
+                let _scope = InflightScope { router: self };
                 self.metrics.incr("router.queries", 1);
                 let r = self.driver.execute(&query, force_mode)?;
                 self.metrics.incr("router.query_bytes_moved", r.stats.bytes_moved);
@@ -95,6 +163,8 @@ impl Router {
                     .incr("router.index_probes", r.stats.index_probes);
                 self.metrics
                     .incr("router.index_postings", r.stats.index_postings);
+                self.metrics
+                    .incr("router.shared_scan_hits", r.stats.shared_scan_hits);
                 if r.stats.index_probes > 0 {
                     // Probes pay per LSM run; keep the gauges current so
                     // the report explains the probe-vs-scan choice.
@@ -125,6 +195,12 @@ impl Router {
     /// Available write credits (observability).
     pub fn write_credits_available(&self) -> usize {
         self.write_gate.available()
+    }
+
+    /// Available global query credits (observability; the serving tests
+    /// assert this returns to capacity after bursts and failures).
+    pub fn query_credits_available(&self) -> usize {
+        self.query_gate.available()
     }
 
     /// Snapshot the OSDs' LSM state into gauge metrics, so index builds
@@ -184,6 +260,7 @@ mod tests {
             .handle(Request::Query {
                 query: Query::scan("s").aggregate(AggFunc::Count, "val"),
                 force_mode: None,
+                tenant: None,
             })
             .unwrap();
         let Response::Query(q) = resp else { panic!() };
@@ -244,8 +321,83 @@ mod tests {
             .handle(Request::Query {
                 query: Query::scan("ghost"),
                 force_mode: None,
+                tenant: None,
             })
             .is_err());
+    }
+
+    #[test]
+    fn serving_metrics_track_admission_and_inflight() {
+        use crate::coordinator::backpressure::QueryGateConfig;
+        use std::time::Duration;
+
+        let mut reg = ClassRegistry::with_builtins();
+        register_skyhook_class(&mut reg, None);
+        let cluster = Cluster::new(
+            &ClusterConfig {
+                osds: 4,
+                replicas: 1,
+                ..Default::default()
+            },
+            reg,
+        );
+        let driver = Arc::new(Driver::new(cluster, DriverConfig::default()));
+        let r = Router::with_gates(
+            driver,
+            4,
+            QueryGateConfig {
+                global_credits: 1,
+                tenant_credits: 1,
+                admit_timeout: Duration::from_millis(5),
+            },
+        );
+        r.handle(Request::WriteTable {
+            dataset: "s".into(),
+            batch: gen::sensor_table(800, 9),
+            layout: Layout::Col,
+            spec: PartitionSpec::with_target(8 * 1024),
+        })
+        .unwrap();
+
+        // A successful query leaves the gauge back at zero and credits
+        // fully restored -- even though it transited through 1 in-flight.
+        let q = || Request::Query {
+            query: Query::scan("s").aggregate(AggFunc::Count, "val"),
+            force_mode: None,
+            tenant: Some("t0".into()),
+        };
+        r.handle(q()).unwrap();
+        assert_eq!(r.metrics.counter("router.queries_inflight"), 0);
+        assert_eq!(r.query_credits_available(), 1);
+        assert_eq!(r.metrics.counter("router.queries_rejected"), 0);
+        // Serial queries never overlap, so the shared-scan counter exists
+        // but stays zero.
+        assert_eq!(r.metrics.counter("router.shared_scan_hits"), 0);
+
+        // Drain the single global credit out from under the router: the
+        // next query must shed with the typed error and count it.
+        let held = r.query_gate().admit(None).unwrap();
+        let err = r.handle(q()).unwrap_err();
+        assert!(matches!(err, crate::Error::Overloaded(_)));
+        assert_eq!(r.metrics.counter("router.queries_rejected"), 1);
+        assert_eq!(r.metrics.counter("router.queries_inflight"), 0);
+        drop(held);
+
+        // Gate restored: the same query is admitted again.
+        r.handle(q()).unwrap();
+        assert_eq!(r.metrics.counter("router.queries"), 2);
+        assert_eq!(r.query_credits_available(), 1);
+
+        // A failing query (ghost dataset) still returns its credit and
+        // decrements the gauge on the unwind path.
+        let bad = Request::Query {
+            query: Query::scan("ghost"),
+            force_mode: None,
+            tenant: None,
+        };
+        assert!(r.handle(bad).is_err());
+        assert_eq!(r.metrics.counter("router.queries_inflight"), 0);
+        assert_eq!(r.query_credits_available(), 1);
     }
 
     #[test]

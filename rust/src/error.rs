@@ -31,6 +31,11 @@ pub enum Error {
     #[error("unavailable: {0}")]
     Unavailable(String),
 
+    /// The serving layer shed the request: query admission timed out
+    /// waiting for a credit (global or per-tenant pool exhausted).
+    #[error("overloaded: {0}")]
+    Overloaded(String),
+
     /// Object-class extension error (pushdown handler failed).
     #[error("objclass error: {0}")]
     ObjClass(String),
@@ -73,6 +78,16 @@ mod tests {
         assert!(Error::Unavailable("osd.1 down".into()).is_retryable());
         assert!(!Error::NotFound("x".into()).is_retryable());
         assert!(!Error::Corrupt("x".into()).is_retryable());
+        // Overload is a *policy* rejection, not a replica fault: retrying
+        // against another replica cannot help, the client must back off.
+        assert!(!Error::Overloaded("x".into()).is_retryable());
+    }
+
+    #[test]
+    fn overloaded_display_names_the_pool() {
+        let e = Error::Overloaded("tenant \"t0\": no credit within 250ms".into());
+        assert!(e.to_string().starts_with("overloaded: "));
+        assert!(e.to_string().contains("t0"));
     }
 
     #[test]

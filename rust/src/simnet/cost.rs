@@ -217,6 +217,13 @@ pub struct CostParams {
     /// [`AccessProfile::index_read_amp`], so a store drowning in
     /// unmerged sorted runs prices index probes accordingly higher.
     pub index_read_amp: f64,
+    /// Live mean in-flight sub-queries per OSD, stamped by the driver at
+    /// plan time from `Cluster::mean_inflight` (like `index_read_amp`
+    /// from `KvStats`). `0.0` = idle. Adds to the per-plan
+    /// `objects_per_osd` fan-out inside [`Self::osd_saturation`], so
+    /// concurrent pushdown is priced client-ward under load and the
+    /// offload boundary flips dynamically.
+    pub queue_depth: f64,
 }
 
 impl CostParams {
@@ -241,6 +248,7 @@ impl CostParams {
             osds: 0,
             header_prefix: crate::dataset::layout::HEADER_PREFIX,
             index_read_amp: 1.0,
+            queue_depth: 0.0,
         }
     }
 
@@ -259,6 +267,7 @@ impl CostParams {
             osds: 0,
             header_prefix: crate::dataset::layout::HEADER_PREFIX,
             index_read_amp: 1.0,
+            queue_depth: 0.0,
         }
     }
 
@@ -277,6 +286,7 @@ impl CostParams {
             osds: 0,
             header_prefix: crate::dataset::layout::HEADER_PREFIX,
             index_read_amp: 1.0,
+            queue_depth: 0.0,
         }
     }
 
@@ -330,8 +340,13 @@ impl CostParams {
     /// per-object latencies, not a makespan prediction — like the rest
     /// of the estimator, which also sums per-object round trips on the
     /// client side without modeling worker parallelism.
+    /// Live concurrent load (`AccessProfile::queue_depth`, snapshotted
+    /// from the cluster at plan time) adds to this query's own fan-out:
+    /// a sub-query queues behind its plan's siblings *and* everyone
+    /// else's in-flight work. Idle clusters (`queue_depth == 0`) price
+    /// exactly as before.
     pub fn osd_saturation(&self, p: &AccessProfile) -> f64 {
-        p.objects_per_osd.max(1.0)
+        (p.objects_per_osd + p.queue_depth).max(1.0)
     }
 
     /// Estimated I/O cost of one sub-query on both sides of the offload
@@ -466,6 +481,11 @@ pub struct AccessProfile {
     /// Surviving sub-queries of this plan per storage server — the input
     /// of [`CostParams::osd_saturation`]. `0` = unknown (uncontended).
     pub objects_per_osd: f64,
+    /// Live mean in-flight sub-queries per OSD from *other* queries at
+    /// plan time (`CostParams::queue_depth`, stamped by the planner).
+    /// Adds to `objects_per_osd` in the saturation factor; the
+    /// `Default`-zero prices an idle cluster bit-identically to before.
+    pub queue_depth: f64,
     /// Is this sub-query's pipeline shape eligible for the compiled
     /// execution tier (`skyhook::exec_kernel::compiled_eligible` against
     /// the dataset schema)? The planner stamps it; profiles built by
@@ -936,6 +956,31 @@ mod tests {
         // Bytes estimates are contention-independent.
         assert_eq!(sat.pushdown_bytes, unsat.pushdown_bytes);
         assert_eq!(sat.client_bytes, unsat.client_bytes);
+    }
+
+    #[test]
+    fn queue_depth_shifts_boundary_client_ward() {
+        // Same crossover as above, but driven by *live* load from other
+        // queries (the serving-layer signal) instead of this plan's own
+        // fan-out: an idle cluster pushes the selective scan down; with a
+        // deep in-flight queue per OSD the serialized extension CPU makes
+        // the plain read path win. Client cost must not move — the queue
+        // models storage-server contention only.
+        let p = CostParams::paper_testbed();
+        let mut prof = full_scan_profile(512 * 1024, 18_000, 0.001);
+        let idle = p.estimate(&prof);
+        assert!(idle.pushdown_wins(), "idle cluster should push down");
+        prof.queue_depth = 64.0;
+        let loaded = p.estimate(&prof);
+        assert!((loaded.client_s - idle.client_s).abs() < 1e-15);
+        assert!(loaded.pushdown_s > idle.pushdown_s);
+        assert!(!loaded.pushdown_wins(), "loaded servers should shed work");
+        assert_eq!(loaded.pushdown_bytes, idle.pushdown_bytes);
+        // queue_depth and objects_per_osd compose additively.
+        let mut both = full_scan_profile(512 * 1024, 18_000, 0.001);
+        both.objects_per_osd = 32.0;
+        both.queue_depth = 32.0;
+        assert!((p.estimate(&both).pushdown_s - loaded.pushdown_s).abs() < 1e-12);
     }
 
     #[test]

@@ -69,6 +69,12 @@ pub struct QueryStats {
     /// Postings those probes returned — the pre-mask population the
     /// kernel then re-filtered with the full predicate.
     pub index_postings: u64,
+    /// Client-side sub-queries served from the **shared-scan cache**: a
+    /// concurrent in-flight query had already fetched and decoded the
+    /// same `(object, columns, prefix)` batch, so this one reused it and
+    /// moved zero bytes. Always zero for serial workloads — the cache
+    /// only lives while queries overlap.
+    pub shared_scan_hits: u64,
     /// Overall execution mode the planner chose (or was forced to).
     pub pushdown: bool,
     /// Sub-queries the cost model assigned to the storage servers.
@@ -120,6 +126,33 @@ pub struct Driver {
     worker_cpus: Vec<Arc<Timeline>>,
     cfg: DriverConfig,
     calibration: std::sync::RwLock<CalibrationMap>,
+    /// Shared-scan batching across concurrent queries (see
+    /// [`worker::ScanCache`]). Entries live only while queries overlap:
+    /// `active_queries` counts executions in flight and the cache is
+    /// cleared when it returns to zero (and on every write), so serial
+    /// workloads — including back-to-back identical benches — always
+    /// meter real fetches.
+    scan_cache: Arc<worker::ScanCache>,
+    active_queries: std::sync::atomic::AtomicUsize,
+}
+
+/// Counts one query out of [`Driver::active_queries`] on drop (panic-
+/// safe) and clears the shared-scan cache when the count hits zero —
+/// cache entries live exactly as long as some query overlaps them.
+struct ActiveQueryGuard<'a> {
+    driver: &'a Driver,
+}
+
+impl Drop for ActiveQueryGuard<'_> {
+    fn drop(&mut self) {
+        let prev = self
+            .driver
+            .active_queries
+            .fetch_sub(1, std::sync::atomic::Ordering::SeqCst);
+        if prev == 1 {
+            self.driver.scan_cache.clear();
+        }
+    }
 }
 
 impl Driver {
@@ -131,6 +164,8 @@ impl Driver {
             worker_cpus: (0..workers).map(|_| Arc::new(Timeline::new())).collect(),
             cfg,
             calibration: std::sync::RwLock::new(CalibrationMap::default()),
+            scan_cache: Arc::new(worker::ScanCache::new()),
+            active_queries: std::sync::atomic::AtomicUsize::new(0),
         }
     }
 
@@ -171,6 +206,9 @@ impl Driver {
         if metadata::load_meta(&self.cluster, 0.0, dataset).is_ok() {
             return Err(Error::AlreadyExists(format!("dataset {dataset}")));
         }
+        // New bytes are landing: concurrent shared scans must not serve
+        // a batch decoded before this write.
+        self.scan_cache.clear();
         if let Some(col) = &spec.cluster_by {
             // Fail fast on a ghost cluster column, before any object I/O.
             batch.schema.col_index(col)?;
@@ -317,11 +355,23 @@ impl Driver {
                 .map(|s| s.read_amp() as f64)
                 .fold(1.0, f64::max);
         }
+        // Live contention, same snapshot-at-plan-time pattern: the mean
+        // in-flight sub-query count per OSD feeds `osd_saturation`, so a
+        // busy cluster prices pushdown client-ward and the offload
+        // boundary flips dynamically under concurrent load.
+        cost.queue_depth = self.cluster.mean_inflight();
         cost
     }
 
     /// Execute a prepared plan.
     pub fn execute_plan(&self, plan: &QueryPlan) -> Result<QueryResult> {
+        // Scope the shared-scan cache to overlapping executions: count
+        // this query in, and (in the guard's Drop — panic-safe) clear
+        // the cache when the last in-flight query finishes, so nothing
+        // ever hits a batch cached by an already-completed serial run.
+        self.active_queries
+            .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        let _active = ActiveQueryGuard { driver: self };
         let wall = Instant::now();
         let at = self.cluster.clock.now();
         let query = &plan.query;
@@ -339,8 +389,20 @@ impl Driver {
         // every pool worker — both execution modes evaluate this exact
         // spec (pushdown on the OSD, client-side through the kernel).
         let spec = Arc::new(plan.pipeline.clone());
+        let scan_cache = Arc::clone(&self.scan_cache);
         let results: Vec<Result<SubResult>> = self.pool.map(subs, move |(i, sub)| {
-            worker::execute_subquery(&cluster, &spec, &sub, at, &worker_cpus[i % nw])
+            // Publish this sub-query on its primary OSD's live queue for
+            // as long as it runs (guard drops even on error/panic):
+            // that's the depth `plan_cost` snapshots for everyone else.
+            let _load = cluster.track_inflight(&sub.object);
+            worker::execute_subquery(
+                &cluster,
+                &spec,
+                &sub,
+                at,
+                &worker_cpus[i % nw],
+                Some(&scan_cache),
+            )
         });
 
         // Gather: merge partials in sub-query (object) order, so every
@@ -355,6 +417,7 @@ impl Driver {
         let mut compiled_rows = 0u64;
         let mut index_probes = 0u64;
         let mut index_postings = 0u64;
+        let mut shared_scan_hits = 0u64;
         let mut sim_finish = at;
         let mut row_parts: Vec<(Batch, bool)> = Vec::new();
         let mut agg_states: Vec<AggState> = Vec::new();
@@ -369,6 +432,7 @@ impl Driver {
             compiled_rows += r.compiled_rows;
             index_probes += r.index_probes;
             index_postings += r.index_postings;
+            shared_scan_hits += r.shared_scan_hits;
             sim_finish = sim_finish.max(r.finish);
             match r.output {
                 SubOutput::Rows(b) => row_parts.push((b, r.presorted)),
@@ -592,6 +656,7 @@ impl Driver {
                 compiled_rows,
                 index_probes,
                 index_postings,
+                shared_scan_hits,
                 pushdown,
                 objects_pushdown: plan.assignment.0,
                 objects_client: plan.assignment.1,
@@ -736,6 +801,7 @@ impl Driver {
     /// so the planner offers the IndexScan access path and later layout
     /// transforms rebuild it. Returns the total rows indexed.
     pub fn build_index(&self, dataset: &str, column: &str) -> Result<u64> {
+        self.scan_cache.clear();
         let (mut meta, _) = metadata::load_meta(&self.cluster, 0.0, dataset)?;
         let DatasetMeta::Table { schema, .. } = &meta else {
             return Err(Error::Query(format!(
@@ -781,6 +847,9 @@ impl Driver {
     /// Transform every object of a dataset to the target layout and update
     /// the dataset metadata (physical design management, §5).
     pub fn transform_layout(&self, dataset: &str, target: Layout) -> Result<WriteReport> {
+        // Objects are about to be rewritten in place: drop any batch a
+        // concurrent shared scan might otherwise reuse across the swap.
+        self.scan_cache.clear();
         let wall = Instant::now();
         let (meta, _) = metadata::load_meta(&self.cluster, 0.0, dataset)?;
         if !matches!(meta, DatasetMeta::Table { .. }) {

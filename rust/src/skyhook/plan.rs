@@ -596,6 +596,10 @@ pub fn plan_with_access(
         let sorted = |c: &str| sorted_cols.iter().any(|s| s == c);
         let mut profile = shape.profile(query, schema, *layout, rg);
         profile.objects_per_osd = objects_per_osd;
+        // Live cluster contention snapshotted by the driver at plan time
+        // (the serving layer's signal): concurrent in-flight work queues
+        // this sub-query behind strangers, exactly like its own fan-out.
+        profile.queue_depth = cost.queue_depth;
         // Price the sorted fast paths the execution side will take:
         // bounded prefix reads for head / ascending top-k, a skipped
         // per-object sort for single-key sorts over the sorted column,

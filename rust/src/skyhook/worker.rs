@@ -33,7 +33,10 @@ use crate::dataset::table::Batch;
 use crate::error::Result;
 use crate::simnet::Timeline;
 use crate::store::Cluster;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::Duration;
 
 /// What one sub-query produced.
 #[derive(Debug)]
@@ -78,25 +81,173 @@ pub struct SubResult {
     pub index_probes: u64,
     /// Postings those probes returned (the pre-mask population).
     pub index_postings: u64,
+    /// Did this client-side sub-query reuse a batch another in-flight
+    /// query fetched and decoded (the shared-scan cache)? `1` on a hit —
+    /// `bytes_moved` is then 0 because nothing crossed the network.
+    pub shared_scan_hits: u64,
     /// Virtual completion time.
     pub finish: f64,
+}
+
+// ---- shared-scan batching -------------------------------------------------
+
+/// Cache key: the exact inputs that determine the fetched batch bytes —
+/// object name, projected column set (`*` = all), and the bounded prefix
+/// limit (`u64::MAX` = unbounded). Same key ⇒ bit-identical batch, so a
+/// hit can never change results, only skip a fetch+decode.
+type ScanKey = (String, String, u64);
+
+enum SlotState {
+    /// A leader is fetching; followers wait on the condvar.
+    Pending,
+    /// The decoded batch, shareable, available from virtual time
+    /// `ready_at` (the leader's read frontier).
+    Ready { batch: Arc<Batch>, ready_at: f64 },
+    /// The leader errored or panicked; followers fall back to their own
+    /// direct fetch.
+    Failed,
+}
+
+struct ScanSlot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+/// Request-merging cache for client-side scans: when N in-flight queries
+/// need the same `(object, columns, prefix)` batch, one **leader**
+/// fetches and decodes it and every **follower** reuses the decoded
+/// batch — the shared-scan batching of the serving layer. The driver
+/// owns one of these and scopes its lifetime to overlapping queries
+/// (cleared when the last in-flight query finishes and on any write), so
+/// serial workloads never see a stale or surprising hit.
+pub struct ScanCache {
+    slots: Mutex<HashMap<ScanKey, Arc<ScanSlot>>>,
+    hits: AtomicU64,
+}
+
+impl Default for ScanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScanCache {
+    pub fn new() -> Self {
+        Self {
+            slots: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+        }
+    }
+
+    /// Lifetime shared-scan hits served.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Drop every entry (the driver calls this when the in-flight query
+    /// count reaches zero and after any write/transform/index build).
+    pub fn clear(&self) {
+        plock(&self.slots).clear();
+    }
+
+    /// Look up `key`, creating a `Pending` slot if absent. Returns the
+    /// slot and whether this caller is the leader (it created the slot
+    /// and owes it a fill or a fail).
+    fn slot(&self, key: &ScanKey) -> (Arc<ScanSlot>, bool) {
+        let mut slots = plock(&self.slots);
+        if let Some(s) = slots.get(key) {
+            return (Arc::clone(s), false);
+        }
+        let s = Arc::new(ScanSlot {
+            state: Mutex::new(SlotState::Pending),
+            cv: Condvar::new(),
+        });
+        slots.insert(key.clone(), Arc::clone(&s));
+        (s, true)
+    }
+}
+
+/// Poison-tolerant lock (same rationale as the backpressure gate: the
+/// protected state is always valid, a stranger's panic must not cascade).
+fn plock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl ScanSlot {
+    fn fill(&self, batch: Arc<Batch>, ready_at: f64) {
+        *plock(&self.state) = SlotState::Ready { batch, ready_at };
+        self.cv.notify_all();
+    }
+
+    fn fail(&self) {
+        *plock(&self.state) = SlotState::Failed;
+        self.cv.notify_all();
+    }
+
+    /// Wait for the leader's outcome: `Some` = the shared batch, `None` =
+    /// the leader failed (or the bounded wait elapsed — the leader runs
+    /// to completion on a pool thread, so this is a liveness backstop,
+    /// not an expected path); the follower then fetches directly, which
+    /// yields the identical batch.
+    fn wait_ready(&self) -> Option<(Arc<Batch>, f64)> {
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let mut st = plock(&self.state);
+        loop {
+            match &*st {
+                SlotState::Ready { batch, ready_at } => {
+                    return Some((Arc::clone(batch), *ready_at))
+                }
+                SlotState::Failed => return None,
+                SlotState::Pending => {
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        return None;
+                    }
+                    let (g, _) = self
+                        .cv
+                        .wait_timeout(st, deadline - now)
+                        .unwrap_or_else(PoisonError::into_inner);
+                    st = g;
+                }
+            }
+        }
+    }
+}
+
+/// Marks the slot `Failed` unless the leader disarms it by filling —
+/// covering both error returns and panics mid-fetch, so followers can
+/// never wait forever on a leader that died.
+struct LeaderGuard {
+    slot: Arc<ScanSlot>,
+    armed: bool,
+}
+
+impl Drop for LeaderGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            self.slot.fail();
+        }
+    }
 }
 
 /// Execute one sub-query against the cluster, charging worker-side work
 /// to `worker_cpu`. `spec` is the plan's server-side stage block
 /// (`QueryPlan::pipeline` / `plan::server_pipeline`), built once per
 /// plan and shared across every sub-query — the same chain runs on
-/// whichever side `sub.mode` chose.
+/// whichever side `sub.mode` chose. `shared` is the driver's shared-scan
+/// cache (client path only; pushdown decodes on the OSD): `None` runs
+/// every fetch directly.
 pub fn execute_subquery(
     cluster: &Arc<Cluster>,
     spec: &PipelineSpec,
     sub: &SubQuery,
     at: f64,
     worker_cpu: &Timeline,
+    shared: Option<&ScanCache>,
 ) -> Result<SubResult> {
     match sub.mode {
         ExecMode::Pushdown => execute_pushdown(cluster, spec, sub, at, worker_cpu),
-        ExecMode::ClientSide => execute_client_side(cluster, spec, sub, at, worker_cpu),
+        ExecMode::ClientSide => execute_client_side(cluster, spec, sub, at, worker_cpu, shared),
     }
 }
 
@@ -141,6 +292,7 @@ fn execute_pushdown(
         compiled_rows: counters.compiled_rows,
         index_probes: counters.index_probes,
         index_postings: counters.index_postings,
+        shared_scan_hits: 0,
         finish,
     })
 }
@@ -177,41 +329,50 @@ impl layout::RangeSource for ClusterRange<'_> {
     }
 }
 
-fn execute_client_side(
-    cluster: &Arc<Cluster>,
-    spec: &PipelineSpec,
+/// What one client-side fetch produced: the decoded (projected, possibly
+/// prefix-bounded) batch plus the metering the leader observed.
+struct FetchOut {
+    batch: Batch,
+    bytes: u64,
+    coalesced: u64,
+    prefix_reads: u64,
+    /// Virtual time at which the last read completed.
+    frontier: f64,
+}
+
+/// The client-side fetch: only the columns the pipeline touches
+/// (coalesced ranged reads on Col objects); Row objects must be read
+/// whole anyway, so skip the stat/prefix probing and issue the one full
+/// read directly (the pre-zone-map cost profile).
+fn fetch_client_batch(
+    cluster: &Cluster,
     sub: &SubQuery,
+    needed: Option<&[String]>,
+    plim: Option<u64>,
     at: f64,
-    worker_cpu: &Timeline,
-) -> Result<SubResult> {
-    // The client runs the *same* server-side stage block, through the
-    // same kernel: encode nothing, but evaluate the identical
-    // PipelineSpec locally. Fetch only the columns that pipeline touches
-    // (coalesced ranged reads on Col objects); Row objects must be read
-    // whole anyway, so skip the stat/prefix probing and issue the one
-    // full read directly (the pre-zone-map cost profile).
-    let needed = super::exec_kernel::needed_columns(spec);
+) -> Result<FetchOut> {
     let mut src = ClusterRange {
-        cluster: cluster.as_ref(),
+        cluster,
         object: &sub.object,
         at,
         fetched: 0,
     };
     let mut coalesced = 0u64;
     let mut prefix_reads = 0u64;
-    // Bounded prefix fetch: when the planner's sortedness markers prove
-    // the pipeline needs only the object's first k rows (head, or
-    // ascending top-k over the clustered column), fetch exactly that row
-    // prefix of the needed columns instead of whole extents — the
-    // clustered layout's bytes-moved payoff on the client path.
-    let sorted = |c: &str| sub.sorted_cols.iter().any(|s| s == c);
-    let plim = exec_kernel::prefix_limit(spec, &sorted);
+    let needed_refs: Option<Vec<&str>> =
+        needed.map(|cols| cols.iter().map(String::as_str).collect());
     let batch = if sub.layout == Layout::Col {
         match plim {
+            // Bounded prefix fetch: when the planner's sortedness markers
+            // prove the pipeline needs only the object's first k rows
+            // (head, or ascending top-k over the clustered column), fetch
+            // exactly that row prefix of the needed columns instead of
+            // whole extents — the clustered layout's bytes-moved payoff
+            // on the client path.
             Some(k) => {
                 let (batch, rstats, bounded) = layout::read_projected_rows(
                     &mut src,
-                    needed.as_deref(),
+                    needed_refs.as_deref(),
                     sub.header_prefix,
                     k,
                 )?;
@@ -222,7 +383,7 @@ fn execute_client_side(
             None => {
                 let (batch, rstats) = layout::read_projected_stats(
                     &mut src,
-                    needed.as_deref(),
+                    needed_refs.as_deref(),
                     sub.header_prefix,
                 )?;
                 coalesced = rstats.reads_coalesced as u64;
@@ -235,27 +396,109 @@ fn execute_client_side(
         // per matching row (the same batch shape the server-side
         // read_needed produces).
         let full = layout::read_projected(&mut src, None, sub.header_prefix)?;
-        match &needed {
-            Some(cols) => {
-                let refs: Vec<&str> = cols.iter().map(String::as_str).collect();
-                full.project(&refs)?
-            }
+        match &needed_refs {
+            Some(refs) => full.project(refs)?,
             None => full,
         }
     };
-    let bytes = src.fetched;
+    Ok(FetchOut {
+        batch,
+        bytes: src.fetched,
+        coalesced,
+        prefix_reads,
+        frontier: src.at,
+    })
+}
+
+fn execute_client_side(
+    cluster: &Arc<Cluster>,
+    spec: &PipelineSpec,
+    sub: &SubQuery,
+    at: f64,
+    worker_cpu: &Timeline,
+    shared: Option<&ScanCache>,
+) -> Result<SubResult> {
+    // The client runs the *same* server-side stage block, through the
+    // same kernel: encode nothing, but evaluate the identical
+    // PipelineSpec locally.
+    let needed = super::exec_kernel::needed_columns(spec);
+    let sorted = |c: &str| sub.sorted_cols.iter().any(|s| s == c);
+    let plim = exec_kernel::prefix_limit(spec, &sorted);
+
+    // Shared-scan batching: concurrent queries needing the same batch
+    // elect a leader per cache key; followers reuse its decode. The key
+    // pins everything that shapes the fetched bytes, so a hit is
+    // bit-identical to fetching — results can never differ, only the
+    // bytes-moved/CPU accounting improves.
+    let mut hit: Option<(Arc<Batch>, f64)> = None;
+    let mut leader: Option<LeaderGuard> = None;
+    if let Some(cache) = shared {
+        let cols_key = match &needed {
+            Some(cols) => cols.join(","),
+            None => "*".into(),
+        };
+        let key: ScanKey = (sub.object.clone(), cols_key, plim.unwrap_or(u64::MAX));
+        let (slot, is_leader) = cache.slot(&key);
+        if is_leader {
+            leader = Some(LeaderGuard { slot, armed: true });
+        } else {
+            hit = slot.wait_ready();
+            if hit.is_some() {
+                cache.hits.fetch_add(1, Ordering::Relaxed);
+            }
+            // A failed leader leaves `hit` None: fall through to a
+            // direct fetch of our own (same bytes, same batch).
+        }
+    }
+
+    let prof = &cluster.cost().exec;
+    let (batch, bytes, coalesced, prefix_reads, start, cpu_fetch, shared_scan_hits) = match hit {
+        Some((batch, ready_at)) => {
+            // The shared batch exists from the leader's read frontier;
+            // this sub-query pays no fetch and no decode, only its own
+            // kernel work below.
+            (batch, 0u64, 0u64, 0u64, at.max(ready_at), 0.0, 1u64)
+        }
+        None => {
+            let fetched = fetch_client_batch(cluster, sub, needed.as_deref(), plim, at);
+            let out = match fetched {
+                Ok(f) => f,
+                Err(e) => {
+                    // LeaderGuard's Drop marks the slot Failed so
+                    // followers fall back instead of waiting forever.
+                    return Err(e);
+                }
+            };
+            let batch = Arc::new(out.batch);
+            if let Some(mut g) = leader.take() {
+                g.armed = false;
+                g.slot.fill(Arc::clone(&batch), out.frontier);
+            }
+            let decode = prof.client_cpu(out.bytes, 0);
+            (
+                batch,
+                out.bytes,
+                out.coalesced,
+                out.prefix_reads,
+                out.frontier,
+                decode,
+                0u64,
+            )
+        }
+    };
+
     // One shared evaluator for both sides of the boundary: chained
     // plans (sort/limit/top-k, grouped multi-aggregates) execute here
     // exactly as they do in the storage servers, so partials are
     // bit-identical and — like pushdown — already sorted/truncated.
     let (out, work) = run_pipeline(&batch, spec, None, &sub.sorted_cols)?;
-    // Client pays decode + per-row scan CPU for what it fetched, plus
-    // the movable kernel work (aggregation, per-object sort) it just
-    // performed instead of the storage server — all priced by the
-    // cluster's single-sourced execution profile.
-    let prof = &cluster.cost().exec;
-    let cpu = prof.client_cpu(bytes, batch.nrows() as u64) + work.movable_seconds(prof);
-    let finish = worker_cpu.submit(src.at, cpu);
+    // Client pays decode + per-row scan CPU for what it fetched (a
+    // shared hit pays only the per-row part), plus the movable kernel
+    // work (aggregation, per-object sort) it just performed instead of
+    // the storage server — all priced by the cluster's single-sourced
+    // execution profile.
+    let cpu = cpu_fetch + prof.client_cpu(0, batch.nrows() as u64) + work.movable_seconds(prof);
+    let finish = worker_cpu.submit(start, cpu);
     let output = match out {
         ExecOut::Rows(b) => SubOutput::Rows(b),
         ExecOut::Aggs(states) => SubOutput::Aggs(states),
@@ -274,6 +517,7 @@ fn execute_client_side(
         compiled_rows: 0,
         index_probes: 0,
         index_postings: 0,
+        shared_scan_hits,
         finish,
     })
 }
@@ -314,7 +558,75 @@ mod tests {
     /// Build the plan's stage block for `q` and run one sub-query with
     /// it — what `Driver::execute_plan` does once per plan.
     fn exec(c: &Arc<Cluster>, q: &Query, sub: &SubQuery, cpu: &Timeline) -> Result<SubResult> {
-        execute_subquery(c, &server_pipeline(q, sub.zone_maps), sub, 0.0, cpu)
+        execute_subquery(c, &server_pipeline(q, sub.zone_maps), sub, 0.0, cpu, None)
+    }
+
+    #[test]
+    fn shared_scan_cache_serves_identical_batch_without_refetch() {
+        let c = cluster();
+        seed_object(&c, "t9", 300);
+        let q = Query::scan("ds")
+            .filter(Predicate::cmp("val", CmpOp::Gt, 40.0))
+            .select(&["ts", "val"]);
+        let cpu = Timeline::new();
+        let sub = SubQuery {
+            object: "t9".into(),
+            mode: ExecMode::ClientSide,
+            layout: Layout::Col,
+            keep_values: false,
+            zone_maps: true,
+            sorted_cols: vec![],
+            header_prefix: layout::HEADER_PREFIX,
+            index_col: None,
+        };
+        let spec = server_pipeline(&q, sub.zone_maps);
+        let cache = ScanCache::new();
+        // Leader: populates the slot, meters a real fetch.
+        let r1 = execute_subquery(&c, &spec, &sub, 0.0, &cpu, Some(&cache)).unwrap();
+        assert_eq!(r1.shared_scan_hits, 0);
+        assert!(r1.bytes_moved > 0);
+        // Follower (the slot is Ready): identical rows, zero bytes moved.
+        let r2 = execute_subquery(&c, &spec, &sub, 0.0, &cpu, Some(&cache)).unwrap();
+        assert_eq!(r2.shared_scan_hits, 1);
+        assert_eq!(r2.bytes_moved, 0);
+        assert_eq!(cache.hits(), 1);
+        let (SubOutput::Rows(a), SubOutput::Rows(b)) = (r1.output, r2.output) else {
+            panic!("expected rows")
+        };
+        assert_eq!(a, b, "shared hit must be bit-identical to the fetch");
+        // Cleared cache: back to a real fetch.
+        cache.clear();
+        let r3 = execute_subquery(&c, &spec, &sub, 0.0, &cpu, Some(&cache)).unwrap();
+        assert_eq!(r3.shared_scan_hits, 0);
+        assert!(r3.bytes_moved > 0);
+    }
+
+    #[test]
+    fn shared_scan_failed_leader_falls_back_to_direct_fetch() {
+        let c = cluster();
+        let q = Query::scan("ds").aggregate(AggFunc::Count, "val");
+        let cpu = Timeline::new();
+        let sub = SubQuery {
+            object: "missing".into(),
+            mode: ExecMode::ClientSide,
+            layout: Layout::Col,
+            keep_values: false,
+            zone_maps: true,
+            sorted_cols: vec![],
+            header_prefix: layout::HEADER_PREFIX,
+            index_col: None,
+        };
+        let spec = server_pipeline(&q, sub.zone_maps);
+        let cache = ScanCache::new();
+        // Leader errors (object absent): the guard marks the slot Failed.
+        assert!(execute_subquery(&c, &spec, &sub, 0.0, &cpu, Some(&cache)).is_err());
+        // Now the object exists; the follower must not trust the Failed
+        // slot — it fetches directly and succeeds.
+        seed_object(&c, "missing", 100);
+        let r = execute_subquery(&c, &spec, &sub, 0.0, &cpu, Some(&cache)).unwrap();
+        assert_eq!(r.shared_scan_hits, 0);
+        assert!(r.bytes_moved > 0);
+        assert_eq!(cache.hits(), 0);
     }
 
     fn cluster() -> Arc<Cluster> {

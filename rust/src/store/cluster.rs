@@ -534,6 +534,58 @@ impl Cluster {
             .map(|o| o.kv_stats())
             .collect()
     }
+
+    /// Per-OSD live queue depth: sub-queries currently in flight against
+    /// each OSD as primary (see [`Cluster::track_inflight`]).
+    pub fn inflight_per_osd(&self) -> Vec<usize> {
+        self.osds
+            .read()
+            .unwrap()
+            .iter()
+            .map(|o| o.inflight())
+            .collect()
+    }
+
+    /// Mean in-flight sub-queries per OSD — the live contention signal
+    /// the driver stamps into `CostParams::queue_depth` before planning,
+    /// exactly like `kv_stats` feeds `index_read_amp`: snapshotted once
+    /// per plan, so concurrent pushdown is priced client-ward under load
+    /// and the offload boundary flips dynamically.
+    pub fn mean_inflight(&self) -> f64 {
+        let osds = self.osds.read().unwrap();
+        if osds.is_empty() {
+            return 0.0;
+        }
+        osds.iter().map(|o| o.inflight() as f64).sum::<f64>() / osds.len() as f64
+    }
+
+    /// Mark one sub-query in flight against `name`'s primary OSD for the
+    /// lifetime of the returned guard. The driver wraps every sub-query
+    /// execution in one of these; benches hold batches of them to put a
+    /// deterministic synthetic load on the cost model. Decrement is in
+    /// `Drop`, so a panicking worker never leaks queue depth.
+    pub fn track_inflight(&self, name: &str) -> InflightGuard {
+        let placement = self.placement(name);
+        let osd = placement.first().map(|id| self.osd(*id));
+        if let Some(o) = &osd {
+            o.inflight_inc();
+        }
+        InflightGuard { osd }
+    }
+}
+
+/// RAII handle from [`Cluster::track_inflight`]; releases the queue-depth
+/// increment on drop (panic-safe).
+pub struct InflightGuard {
+    osd: Option<Arc<Osd>>,
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        if let Some(o) = &self.osd {
+            o.inflight_dec();
+        }
+    }
 }
 
 #[cfg(test)]

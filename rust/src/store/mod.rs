@@ -17,7 +17,7 @@ pub mod osd;
 pub mod placement;
 
 pub use chunkstore::{ChunkId, ChunkStore};
-pub use cluster::{Cluster, ClusterCounters};
+pub use cluster::{Cluster, ClusterCounters, InflightGuard};
 pub use kvstore::{KvStats, KvStore};
 pub use objclass::{ClassRegistry, ClsBackend, Handler};
 pub use osd::{ObjStat, Osd, OsdCounters, Timed};

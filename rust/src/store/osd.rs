@@ -10,7 +10,7 @@ use super::placement::OsdId;
 use crate::error::{Error, Result};
 use crate::simnet::{CostParams, Timeline};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// A value paired with the virtual time at which it became available.
@@ -65,6 +65,10 @@ pub struct Osd {
     registry: Arc<ClassRegistry>,
     down: AtomicBool,
     counters: Mutex<OsdCounters>,
+    /// Live queue depth: sub-queries currently executing against this
+    /// OSD (as primary). Snapshotted at plan time into
+    /// `CostParams::queue_depth` so concurrent load reprices pushdown.
+    inflight: AtomicUsize,
 }
 
 impl Osd {
@@ -77,6 +81,7 @@ impl Osd {
             registry,
             down: AtomicBool::new(false),
             counters: Mutex::new(OsdCounters::default()),
+            inflight: AtomicUsize::new(0),
         }
     }
 
@@ -115,6 +120,19 @@ impl Osd {
     /// Counters snapshot.
     pub fn counters(&self) -> OsdCounters {
         *self.counters.lock().unwrap()
+    }
+
+    /// Sub-queries currently in flight against this OSD (as primary).
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    pub(crate) fn inflight_inc(&self) {
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn inflight_dec(&self) {
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
     }
 
     /// Virtual time at which this OSD's device queue drains.

@@ -225,6 +225,102 @@ fn osd_death_mid_clustered_ingest_keeps_sortedness_markers_consistent() {
 }
 
 #[test]
+fn osd_death_mid_burst_recovers_cleanly() {
+    // Kill an OSD in the middle of a concurrent query burst through the
+    // router. Every in-flight query must either complete correctly
+    // (replication covers the dead primary) or fail with a *typed*
+    // error — never hang, never panic — and every admission credit must
+    // come back. After healing, the same query succeeds again.
+    use skyhook_map::coordinator::{Request, Response};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Barrier;
+
+    let s = stack(5, 2);
+    seed(&s, 20_000);
+    let q = || {
+        Query::scan("d")
+            .filter(skyhook_map::skyhook::Predicate::cmp(
+                "val",
+                skyhook_map::skyhook::CmpOp::Gt,
+                10.0,
+            ))
+            .aggregate(AggFunc::Count, "val")
+    };
+    let baseline = s.driver.execute(&q(), None).unwrap().aggregates[0];
+
+    let router = &s.router;
+    let cluster = &s.cluster;
+    let credits_before = router.query_credits_available();
+    let ok = AtomicUsize::new(0);
+    let failed = AtomicUsize::new(0);
+    // 12 query threads plus the killer thread start on one barrier: the
+    // victim goes down while the burst is genuinely in flight.
+    let barrier = Barrier::new(13);
+    std::thread::scope(|sc| {
+        for t in 0..12 {
+            let (ok, failed, barrier) = (&ok, &failed, &barrier);
+            sc.spawn(move || {
+                barrier.wait();
+                for _ in 0..6 {
+                    match router.handle(Request::Query {
+                        query: q(),
+                        force_mode: None,
+                        tenant: Some(format!("t{}", t % 4)),
+                    }) {
+                        Ok(Response::Query(r)) => {
+                            // A query that completes must complete
+                            // *correctly* -- replication means the dead
+                            // primary never changes the answer.
+                            assert_eq!(r.aggregates[0], baseline);
+                            ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok(_) => unreachable!(),
+                        // Typed failures are acceptable mid-death:
+                        // unavailability, a lost object, or shedding.
+                        Err(
+                            skyhook_map::Error::Unavailable(_)
+                            | skyhook_map::Error::NotFound(_)
+                            | skyhook_map::Error::Overloaded(_),
+                        ) => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => panic!("untyped failure mid-burst: {e}"),
+                    }
+                }
+            });
+        }
+        sc.spawn(|| {
+            barrier.wait();
+            cluster.set_down(1, true);
+        });
+    });
+    // No query hung: all 72 are accounted for, and with 2x replication
+    // the surviving replicas answered everything.
+    assert_eq!(
+        ok.load(Ordering::Relaxed) + failed.load(Ordering::Relaxed),
+        72
+    );
+    assert!(ok.load(Ordering::Relaxed) > 0);
+    // Admission credits all restored -- a dead OSD must not leak them.
+    assert_eq!(router.query_credits_available(), credits_before);
+
+    // Heal, rebalance, and serve again.
+    s.cluster.set_down(1, false);
+    s.cluster.rebalance().unwrap();
+    let Response::Query(r) = router
+        .handle(Request::Query {
+            query: q(),
+            force_mode: None,
+            tenant: None,
+        })
+        .unwrap()
+    else {
+        panic!()
+    };
+    assert_eq!(r.aggregates[0], baseline);
+}
+
+#[test]
 fn corruption_is_detected_not_silent() {
     // Write an object, corrupt the stored batch payload, and verify the
     // checksum turns it into an error instead of wrong data.

@@ -236,6 +236,7 @@ fn router_full_surface() {
                 .filter(parse_predicate("val > 50").unwrap())
                 .aggregate(AggFunc::Count, "val"),
             force_mode: None,
+            tenant: None,
         })
         .unwrap()
     else {

@@ -58,6 +58,89 @@ fn random_numeric_pred(r: &mut Xoshiro256, depth: usize) -> Predicate {
     }
 }
 
+/// Random full-surface plan over the numeric table: filter plus one of a
+/// row pipeline (projection / sort / limit / fused top-k), a scalar
+/// multi-aggregate (median exercises the holistic value-shipping path),
+/// or a grouped multi-aggregate with an optional HAVING filter. Shared by
+/// the mode-equivalence and the concurrent-serving properties, so both
+/// walk the same plan space.
+fn random_full_plan(r: &mut Xoshiro256, dataset: &str) -> skyhook_map::skyhook::Query {
+    let mut lp = LogicalPlan::scan(dataset).filter(random_numeric_pred(r, 3));
+    match r.range(0, 3) {
+        0 | 1 => {
+            // Row pipeline: optional projection, then sort / limit /
+            // fused top-k (sort key may fall outside the projection).
+            if r.chance(0.5) {
+                let cols: &[&str] = if r.chance(0.5) { &["ts", "val"] } else { &["ts"] };
+                lp = lp.project(cols);
+            }
+            let key = |r: &mut Xoshiro256| SortKey {
+                col: ["val", "ts", "sensor"][r.range(0, 2)].to_string(),
+                desc: r.chance(0.5),
+            };
+            match r.range(0, 3) {
+                0 => {}
+                1 => {
+                    let k = key(r);
+                    lp = lp.sort(vec![k, SortKey::asc("ts")]);
+                }
+                2 => lp = lp.limit(r.range(0, 40)),
+                _ => {
+                    let k = key(r);
+                    lp = lp.top_k(vec![k, SortKey::asc("ts")], r.range(0, 40));
+                }
+            }
+        }
+        2 => {
+            // Scalar multi-aggregate (median exercises the holistic
+            // value-shipping path).
+            let funcs = [
+                AggFunc::Count,
+                AggFunc::Sum,
+                AggFunc::Min,
+                AggFunc::Max,
+                AggFunc::Mean,
+                AggFunc::Var,
+                AggFunc::Median,
+            ];
+            let n = r.range(1, 3);
+            let aggs = (0..n)
+                .map(|_| Aggregate::new(funcs[r.range(0, 6)], "val"))
+                .collect();
+            lp = lp.aggregate(aggs, &[]);
+        }
+        _ => {
+            // Grouped multi-aggregate over one or two i64 keys,
+            // optionally topped with a HAVING filter (a Filter above
+            // the Aggregate) over group keys / aggregate values.
+            let aggs = vec![
+                Aggregate::new(AggFunc::Count, "val"),
+                Aggregate::new(AggFunc::Sum, "val"),
+            ];
+            let keys: &[&str] = if r.chance(0.5) {
+                &["sensor"]
+            } else {
+                &["sensor", "ts"]
+            };
+            lp = lp.aggregate(aggs, keys);
+            if r.chance(0.5) {
+                let hcol = if r.chance(0.5) { "count(val)" } else { "sensor" };
+                let hpred = Predicate::cmp(
+                    hcol,
+                    [CmpOp::Gt, CmpOp::Le, CmpOp::Ne][r.range(0, 2)],
+                    r.f64() * 12.0 - 2.0,
+                );
+                lp = lp.filter(if r.chance(0.3) {
+                    hpred.clone().or(Predicate::cmp("sum(val)", CmpOp::Ge, 0.0))
+                } else {
+                    hpred
+                });
+            }
+        }
+    }
+    lp.to_query().expect("generator builds accepted shapes")
+}
+
 /// Batch equality that treats NaN as equal to itself (bitwise on floats),
 /// so pruned/unpruned comparisons work on NaN-bearing data.
 fn batches_bit_equal(a: &Batch, b: &Batch) -> bool {
@@ -564,85 +647,8 @@ fn logical_plan_modes_agree_end_to_end() {
     // layouts, and NaN-bearing data.
     use skyhook_map::config::{ClusterConfig, DriverConfig};
     use skyhook_map::dataset::partition::PartitionSpec;
-    use skyhook_map::skyhook::{register_skyhook_class, Driver, ExecMode, Query};
+    use skyhook_map::skyhook::{register_skyhook_class, Driver, ExecMode};
     use skyhook_map::store::{ClassRegistry, Cluster};
-
-    fn random_plan(r: &mut Xoshiro256) -> Query {
-        let mut lp = LogicalPlan::scan("p").filter(random_numeric_pred(r, 3));
-        match r.range(0, 3) {
-            0 | 1 => {
-                // Row pipeline: optional projection, then sort / limit /
-                // fused top-k (sort key may fall outside the projection).
-                if r.chance(0.5) {
-                    let cols: &[&str] = if r.chance(0.5) { &["ts", "val"] } else { &["ts"] };
-                    lp = lp.project(cols);
-                }
-                let key = |r: &mut Xoshiro256| SortKey {
-                    col: ["val", "ts", "sensor"][r.range(0, 2)].to_string(),
-                    desc: r.chance(0.5),
-                };
-                match r.range(0, 3) {
-                    0 => {}
-                    1 => {
-                        let k = key(r);
-                        lp = lp.sort(vec![k, SortKey::asc("ts")]);
-                    }
-                    2 => lp = lp.limit(r.range(0, 40)),
-                    _ => {
-                        let k = key(r);
-                        lp = lp.top_k(vec![k, SortKey::asc("ts")], r.range(0, 40));
-                    }
-                }
-            }
-            2 => {
-                // Scalar multi-aggregate (median exercises the holistic
-                // value-shipping path).
-                let funcs = [
-                    AggFunc::Count,
-                    AggFunc::Sum,
-                    AggFunc::Min,
-                    AggFunc::Max,
-                    AggFunc::Mean,
-                    AggFunc::Var,
-                    AggFunc::Median,
-                ];
-                let n = r.range(1, 3);
-                let aggs = (0..n)
-                    .map(|_| Aggregate::new(funcs[r.range(0, 6)], "val"))
-                    .collect();
-                lp = lp.aggregate(aggs, &[]);
-            }
-            _ => {
-                // Grouped multi-aggregate over one or two i64 keys,
-                // optionally topped with a HAVING filter (a Filter above
-                // the Aggregate) over group keys / aggregate values.
-                let aggs = vec![
-                    Aggregate::new(AggFunc::Count, "val"),
-                    Aggregate::new(AggFunc::Sum, "val"),
-                ];
-                let keys: &[&str] = if r.chance(0.5) {
-                    &["sensor"]
-                } else {
-                    &["sensor", "ts"]
-                };
-                lp = lp.aggregate(aggs, keys);
-                if r.chance(0.5) {
-                    let hcol = if r.chance(0.5) { "count(val)" } else { "sensor" };
-                    let hpred = Predicate::cmp(
-                        hcol,
-                        [CmpOp::Gt, CmpOp::Le, CmpOp::Ne][r.range(0, 2)],
-                        r.f64() * 12.0 - 2.0,
-                    );
-                    lp = lp.filter(if r.chance(0.3) {
-                        hpred.clone().or(Predicate::cmp("sum(val)", CmpOp::Ge, 0.0))
-                    } else {
-                        hpred
-                    });
-                }
-            }
-        }
-        lp.to_query().expect("generator builds accepted shapes")
-    }
 
     forall_explain(
         15,
@@ -676,7 +682,7 @@ fn logical_plan_modes_agree_end_to_end() {
             let feq = |a: f64, b: f64| a == b || (a.is_nan() && b.is_nan());
 
             for _ in 0..4 {
-                let q = random_plan(&mut rng);
+                let q = random_full_plan(&mut rng, "p");
                 let run = |mode: Option<ExecMode>| driver.execute(&q, mode);
                 let (server, client, chosen) = match (
                     run(Some(ExecMode::Pushdown)),
@@ -1906,4 +1912,153 @@ fn indexed_and_unindexed_executions_agree_end_to_end() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn concurrent_serving_is_serially_equivalent() {
+    // The serving layer's headline property: N client threads hammering
+    // the router with a shared bag of random plans get answers
+    // bit-identical to a quiet serial pass over the same plans — under
+    // forced pushdown, forced client-side, and the planner's live
+    // cost-chosen modes. Concurrency may change *how* a query runs
+    // (contention shifts the offload boundary, overlapping scans share
+    // fetches) but never *what* it returns; error-ness must agree too.
+    // Honors SKYHOOK_PROP_SEED (unset → fixed, `random` → printed).
+    use skyhook_map::config::{ClusterConfig, DriverConfig};
+    use skyhook_map::coordinator::{Request, Response, Router};
+    use skyhook_map::dataset::partition::PartitionSpec;
+    use skyhook_map::skyhook::{
+        register_skyhook_class, Driver, ExecMode, Query, QueryResult,
+    };
+    use skyhook_map::store::{ClassRegistry, Cluster};
+    use std::sync::{Arc, Barrier, Mutex};
+
+    fn same_answer(q: &Query, want: &QueryResult, got: &QueryResult) -> Result<(), String> {
+        let feq = |a: f64, b: f64| a == b || (a.is_nan() && b.is_nan());
+        match (&want.rows, &got.rows) {
+            (None, None) => {}
+            (Some(a), Some(b)) if batches_bit_equal(a, b) => {}
+            _ => return Err(format!("rows diverge under concurrency for {q:?}")),
+        }
+        if want.aggregates.len() != got.aggregates.len()
+            || !want
+                .aggregates
+                .iter()
+                .zip(&got.aggregates)
+                .all(|(x, y)| feq(*x, *y))
+        {
+            return Err(format!("aggregates diverge under concurrency for {q:?}"));
+        }
+        match (&want.groups, &got.groups) {
+            (None, None) => Ok(()),
+            (Some(a), Some(b))
+                if a.len() == b.len()
+                    && a.iter().zip(b).all(|(x, y)| {
+                        x.0 == y.0
+                            && x.1.len() == y.1.len()
+                            && x.1.iter().zip(&y.1).all(|(p, v)| feq(*p, *v))
+                    }) =>
+            {
+                Ok(())
+            }
+            _ => Err(format!("groups diverge under concurrency for {q:?}")),
+        }
+    }
+
+    let seed = prop_seed(0xC0_5E_12_71);
+    let mut rng = Xoshiro256::new(seed);
+    for _round in 0..2 {
+        let mut reg = ClassRegistry::with_builtins();
+        register_skyhook_class(&mut reg, None);
+        let cluster = Cluster::new(
+            &ClusterConfig {
+                osds: 4,
+                replicas: 1,
+                ..Default::default()
+            },
+            reg,
+        );
+        let driver = Arc::new(Driver::new(
+            cluster,
+            DriverConfig {
+                workers: 4,
+                ..Default::default()
+            },
+        ));
+        let rows = 200 + rng.range(0, 1000);
+        let batch = random_numeric_batch(&mut rng, rows, true);
+        let layout = if rng.chance(0.5) { Layout::Col } else { Layout::Row };
+        driver
+            .write_table("p", &batch, layout, &PartitionSpec::with_target(4096), None)
+            .unwrap();
+
+        // A shared bag of (plan, forced-mode) cases: every random plan
+        // appears under all three modes.
+        let modes = [Some(ExecMode::Pushdown), Some(ExecMode::ClientSide), None];
+        let mut cases: Vec<(Query, Option<ExecMode>)> = Vec::new();
+        for _ in 0..8 {
+            let q = random_full_plan(&mut rng, "p");
+            for m in modes {
+                cases.push((q.clone(), m));
+            }
+        }
+        // Serial baseline on the quiet cluster. Only error-ness is kept
+        // for failures (e.g. `min` over an empty match set fails in
+        // every mode; it must also fail under concurrency).
+        let baseline: Vec<Result<QueryResult, ()>> = cases
+            .iter()
+            .map(|(q, m)| driver.execute(q, *m).map_err(|_| ()))
+            .collect();
+
+        // The default gate (global 256) admits everything here: this
+        // property is about equivalence, not shedding.
+        let router = Router::new(Arc::clone(&driver), 4);
+        let threads = 8;
+        let errors = Mutex::new(Vec::<String>::new());
+        let barrier = Barrier::new(threads);
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let (cases, baseline, router, errors, barrier) =
+                    (&cases, &baseline, &router, &errors, &barrier);
+                s.spawn(move || {
+                    barrier.wait();
+                    // Each thread walks the whole bag from a different
+                    // offset, so distinct plans overlap in shifting
+                    // combinations and identical plans collide on the
+                    // shared-scan cache.
+                    for k in 0..cases.len() {
+                        let i = (k + t * 5) % cases.len();
+                        let (q, m) = &cases[i];
+                        let got = router.handle(Request::Query {
+                            query: q.clone(),
+                            force_mode: *m,
+                            tenant: Some(format!("t{}", t % 3)),
+                        });
+                        let verdict = match (&baseline[i], got) {
+                            (Err(()), Err(_)) => Ok(()),
+                            (Ok(want), Ok(Response::Query(r))) => same_answer(q, want, &r),
+                            (Ok(_), Ok(_)) => unreachable!("query returns Response::Query"),
+                            (Ok(_), Err(e)) => {
+                                Err(format!("serial Ok, concurrent Err({e}) for {q:?}"))
+                            }
+                            (Err(()), Ok(_)) => {
+                                Err(format!("serial Err, concurrent Ok for {q:?}"))
+                            }
+                        };
+                        if let Err(e) = verdict {
+                            errors.lock().unwrap().push(e);
+                            return;
+                        }
+                    }
+                });
+            }
+        });
+        let errs = errors.into_inner().unwrap();
+        assert!(errs.is_empty(), "seed {seed}:\n{}", errs.join("\n"));
+        // The burst drained cleanly: every credit is back.
+        assert_eq!(
+            router.query_credits_available(),
+            router.query_gate().capacity()
+        );
+    }
 }

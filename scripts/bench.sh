@@ -15,8 +15,11 @@
 #                           the compiled-vs-scalar kernel trajectory
 #   BENCH_index.json      — E10 (secondary-index selectivity crossover:
 #                           index-probe vs scan, probes/postings, sim s)
+#   BENCH_concurrency.json — E11 (serving-layer concurrency sweep: tail
+#                           latency, admission shedding, the contention-
+#                           driven offload-boundary flip, shared scans)
 #
-# Usage: scripts/bench.sh [pushdown.json [compose.json [costmodel.json [physdesign.json [kernel.json [index.json]]]]]]
+# Usage: scripts/bench.sh [pushdown.json [compose.json [costmodel.json [physdesign.json [kernel.json [index.json [concurrency.json]]]]]]]
 #
 # Each snapshot records wall time per bench plus the raw table output
 # (which includes bytes_moved / objects_pruned / sim_seconds columns).
@@ -29,6 +32,7 @@ costmodel_json=${3:-BENCH_costmodel.json}
 physdesign_json=${4:-BENCH_physdesign.json}
 kernel_json=${5:-BENCH_kernel.json}
 index_json=${6:-BENCH_index.json}
+concurrency_json=${7:-BENCH_concurrency.json}
 workdir=$(mktemp -d)
 trap 'rm -rf "$workdir"' EXIT
 
@@ -56,6 +60,7 @@ run_bench e6_cost_model || status=1
 run_bench e4_physical_design || status=1
 run_bench e1_table1_forwarding || status=1
 run_bench e10_index || status=1
+run_bench e11_concurrency || status=1
 
 snapshot() {
     local out=$1
@@ -100,5 +105,6 @@ snapshot "$costmodel_json" e6_cost_model
 snapshot "$physdesign_json" e4_physical_design
 snapshot "$kernel_json" e1_table1_forwarding e2_pushdown
 snapshot "$index_json" e10_index
+snapshot "$concurrency_json" e11_concurrency
 
 exit $status
