@@ -12,10 +12,14 @@
 use skyhook_map::config::ClusterConfig;
 use skyhook_map::dataset::{Dataspace, Hyperslab};
 use skyhook_map::simnet::CostParams;
+use skyhook_map::skyhook::{CmpOp, Predicate};
 use skyhook_map::store::Cluster;
 use skyhook_map::util::bench::{black_box, report, Bench};
 use skyhook_map::util::rng::Xoshiro256;
-use skyhook_map::vol::{vol_registry, ForwardingBackend, NativeBackend, VolFile};
+use skyhook_map::vol::{
+    vol_registry, ForwardingBackend, NativeBackend, VolBackend, VolFile, VolPolicy,
+};
+use std::sync::Arc;
 
 fn native_file() -> VolFile {
     VolFile::open(Box::new(NativeBackend::new(CostParams::paper_testbed())))
@@ -115,6 +119,80 @@ fn main() {
         native_sim * 1e6,
         fwd_sim * 1e6,
         fwd_sim / native_sim
+    );
+
+    // E8d: plan-compiled filtered reads (zone-map pruning + cost-based
+    // offload) vs the static pre-planner rule. Two identical clusters so
+    // the A/B timelines don't queue behind each other. Left half of the
+    // dataset holds values in [0,1), one hot chunk holds [10,11); the
+    // predicate `v >= 10` makes every cold chunk provably dead, so the
+    // planner fetches exactly the hot chunk while the static rule
+    // fetches every existing one.
+    let mut rng = Xoshiro256::new(11);
+    let cold: Vec<f32> = (0..512 * 256).map(|_| rng.f32()).collect();
+    let hot: Vec<f32> = (0..128 * 128).map(|_| 10.0 + rng.f32()).collect();
+    let seeded = |cold: &[f32], hot: &[f32]| {
+        let c = Cluster::new(
+            &ClusterConfig {
+                osds: 4,
+                replicas: 1,
+                ..Default::default()
+            },
+            vol_registry(),
+        );
+        let mut f = VolFile::open(Box::new(ForwardingBackend::new(Arc::clone(&c))));
+        f.create_dataset("d", &space, &chunk).unwrap();
+        f.write("d", &Hyperslab::new(&[0, 0], &[512, 256]).unwrap(), cold)
+            .unwrap();
+        f.write("d", &Hyperslab::new(&[0, 256], &[128, 128]).unwrap(), hot)
+            .unwrap();
+        c
+    };
+    let whole = Hyperslab::whole(&space);
+    let pred = Predicate::cmp("v", CmpOp::Ge, 10.0);
+
+    let mut planned = ForwardingBackend::new(seeded(&cold, &hot));
+    let tp = planned.read_slab_where(0.0, "d", &whole, &pred).unwrap();
+    let mut baseline =
+        ForwardingBackend::new(seeded(&cold, &hot)).with_policy(VolPolicy::Static);
+    let tb = baseline.read_slab_where(0.0, "d", &whole, &pred).unwrap();
+
+    assert_eq!(tp.value.len(), tb.value.len());
+    for (a, b) in tp.value.iter().zip(&tb.value) {
+        assert_eq!(a.to_bits(), b.to_bits(), "planned vs static diverged");
+    }
+    let (ps, bs) = (planned.stats(), baseline.stats());
+    assert!(
+        ps.chunks_fetched < bs.chunks_fetched,
+        "planner must fetch strictly fewer chunks: {} vs {}",
+        ps.chunks_fetched,
+        bs.chunks_fetched
+    );
+    assert_eq!(ps.chunks_fetched, 1, "only the hot chunk survives pruning");
+    assert!(
+        tp.finish < tb.finish,
+        "planner must be strictly faster: {:.6}s vs {:.6}s",
+        tp.finish,
+        tb.finish
+    );
+    println!(
+        "\nE8d: filtered whole-dataset read, planned vs static (sim): \
+         chunks fetched {} vs {} (pruned {}, {} KiB skipped), \
+         simulated {:.1}µs vs {:.1}µs ({:.1}x)",
+        ps.chunks_fetched,
+        bs.chunks_fetched,
+        ps.chunks_pruned,
+        ps.bytes_skipped / 1024,
+        tp.finish * 1e6,
+        tb.finish * 1e6,
+        tb.finish / tp.finish
+    );
+    // Machine-readable snapshot line for scripts/bench.sh (BENCH_vol.json).
+    println!(
+        "E8D_JSON {{\"planned_chunks\": {}, \"static_chunks\": {}, \
+         \"chunks_pruned\": {}, \"bytes_skipped\": {}, \
+         \"planned_sim_s\": {:.9}, \"static_sim_s\": {:.9}}}",
+        ps.chunks_fetched, bs.chunks_fetched, ps.chunks_pruned, ps.bytes_skipped, tp.finish, tb.finish
     );
 
     println!("\ne8_vol_stack OK");

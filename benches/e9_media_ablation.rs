@@ -12,10 +12,12 @@
 
 use skyhook_map::config::{ClusterConfig, CostProfile};
 use skyhook_map::dataset::{Dataspace, Hyperslab};
+use skyhook_map::skyhook::{CmpOp, Predicate};
 use skyhook_map::store::Cluster;
 use skyhook_map::util::bench::table;
 use skyhook_map::util::rng::Xoshiro256;
-use skyhook_map::vol::{vol_registry, ForwardingBackend, NativeBackend, VolFile};
+use skyhook_map::vol::{vol_registry, ForwardingBackend, NativeBackend, VolBackend, VolFile};
+use std::sync::Arc;
 
 fn main() {
     let elems = 1usize << 20; // 4 MiB dataset
@@ -107,6 +109,71 @@ fn main() {
          bottleneck moved from device seek to fabric latency — exactly why\n\
          §1 calls the old buffering/layout assumptions outdated, and why\n\
          server-local (pushdown) access that avoids the round-trips wins."
+    );
+    // E9b: the cost-based per-chunk offload decision flips with the
+    // medium. Same filtered hyperslab read (32 full rows of a 256x4096
+    // array, chunked [64,256] → 16 half-chunk pieces, `v < 0.5` ≈ 50%
+    // selective) on HDD vs flash clusters. On HDD the 8 ms per-op floor
+    // dwarfs the wire, but a half-selective pushdown still halves the
+    // result bytes and skips the chunk decode — pushdown wins. On flash
+    // the device is so fast that hauling the whole 64 KiB chunk and
+    // filtering client-side beats paying the server scan — every chunk
+    // flips to client-side.
+    let space = Dataspace::new(&[256, 4096]).unwrap();
+    let chunk = vec![64u64, 256];
+    let data: Vec<f32> = {
+        let mut r = Xoshiro256::new(7);
+        (0..space.numel()).map(|_| r.f32()).collect()
+    };
+    let slab = Hyperslab::new(&[16, 0], &[32, 4096]).unwrap();
+    let pred = Predicate::cmp("v", CmpOp::Lt, 0.5);
+    let mut mixes = Vec::new();
+    for (profile, label) in [(CostProfile::Hdd, "hdd"), (CostProfile::Flash, "flash")] {
+        let cluster = Cluster::new(
+            &ClusterConfig {
+                osds: 8,
+                replicas: 1,
+                profile,
+                ..Default::default()
+            },
+            vol_registry(),
+        );
+        let mut w = VolFile::open(Box::new(ForwardingBackend::new(Arc::clone(&cluster))));
+        w.create_dataset("e9b", &space, &chunk).unwrap();
+        w.write_all("e9b", &data).unwrap();
+        let mut fb = ForwardingBackend::new(Arc::clone(&cluster));
+        let t = fb.read_slab_where(0.0, "e9b", &slab, &pred).unwrap();
+        mixes.push((label, fb.stats(), t.value));
+    }
+    let (hdd, flash) = (&mixes[0], &mixes[1]);
+    assert_eq!(hdd.2.len(), flash.2.len());
+    for (a, b) in hdd.2.iter().zip(&flash.2) {
+        assert_eq!(a.to_bits(), b.to_bits(), "cost profile changed the answer");
+    }
+    assert!(
+        hdd.1.chunks_pushdown > flash.1.chunks_pushdown,
+        "HDD must push more chunks than flash: {} vs {}",
+        hdd.1.chunks_pushdown,
+        flash.1.chunks_pushdown
+    );
+    assert!(
+        flash.1.chunks_client > hdd.1.chunks_client,
+        "flash must read more chunks client-side than HDD: {} vs {}",
+        flash.1.chunks_client,
+        hdd.1.chunks_client
+    );
+    println!(
+        "\nE9b: per-chunk offload mode mix (16 half-chunk pieces, v<0.5):\n\
+         hdd:   {} pushdown / {} client-side\n\
+         flash: {} pushdown / {} client-side\n\
+         — the same request, the same bytes, a different plan: the cost\n\
+         model re-prices the pushdown-vs-fetch boundary per medium.",
+        hdd.1.chunks_pushdown, hdd.1.chunks_client, flash.1.chunks_pushdown, flash.1.chunks_client
+    );
+    println!(
+        "E9B_JSON {{\"hdd_pushdown\": {}, \"hdd_client\": {}, \
+         \"flash_pushdown\": {}, \"flash_client\": {}}}",
+        hdd.1.chunks_pushdown, hdd.1.chunks_client, flash.1.chunks_pushdown, flash.1.chunks_client
     );
     println!("\ne9_media_ablation OK");
 }

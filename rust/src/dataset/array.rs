@@ -98,6 +98,52 @@ impl Hyperslab {
         }
     }
 
+    /// Visit every coordinate in row-major order through one reused
+    /// scratch buffer — the allocation-free form of [`Hyperslab::coords`]
+    /// for hot paths (`decompose`, slab copies) where a `Vec` per
+    /// coordinate dominates the profile.
+    pub fn for_each_coord(&self, mut f: impl FnMut(&[u64])) {
+        let mut cur = self.start.clone();
+        loop {
+            f(&cur);
+            // Odometer increment, innermost dimension fastest.
+            let mut d = self.ndim();
+            loop {
+                if d == 0 {
+                    return; // wrapped every dimension: done
+                }
+                d -= 1;
+                cur[d] += 1;
+                if cur[d] < self.start[d] + self.count[d] {
+                    break;
+                }
+                cur[d] = self.start[d];
+            }
+        }
+    }
+
+    /// Bounding box of two selections: the smallest hyperslab containing
+    /// both. Used to maintain per-chunk written-region zone maps across
+    /// successive partial writes.
+    pub fn bbox_union(&self, other: &Hyperslab) -> Result<Hyperslab> {
+        if self.ndim() != other.ndim() {
+            return Err(Error::Invalid(format!(
+                "bbox rank mismatch: {} vs {}",
+                self.ndim(),
+                other.ndim()
+            )));
+        }
+        let mut start = Vec::with_capacity(self.ndim());
+        let mut count = Vec::with_capacity(self.ndim());
+        for d in 0..self.ndim() {
+            let lo = self.start[d].min(other.start[d]);
+            let hi = (self.start[d] + self.count[d]).max(other.start[d] + other.count[d]);
+            start.push(lo);
+            count.push(hi - lo);
+        }
+        Ok(Hyperslab { start, count })
+    }
+
     /// Row-major iteration of contiguous runs: yields `(coord, run_len)`
     /// where a run spans the innermost dimension. This is what turns a
     /// hyperslab copy into O(rows) memcpys rather than O(elements) loads.
@@ -275,14 +321,35 @@ impl ChunkGrid {
             .collect();
         let count: Vec<u64> = lo.iter().zip(&hi).map(|(l, h)| h - l + 1).collect();
         let touched = Hyperslab::new(&lo, &count)?;
-        let mut out = Vec::new();
-        for coord in touched.coords() {
-            let idx = self.chunk_index(&coord)?;
-            let chunk_slab = self.chunk_slab(idx)?;
-            if let Some(piece) = slab.intersect(&chunk_slab) {
-                out.push((idx, piece));
+        // One pass over the touched chunk coords through a reused scratch
+        // buffer; the only allocations are the output pieces themselves.
+        // Every chunk in the touched box overlaps the (rectangular) slab
+        // in every dimension, so each visit yields exactly one piece.
+        let grid = self.grid_dims();
+        let ndim = slab.ndim();
+        let slab_end = slab.end();
+        let mut out = Vec::with_capacity(touched.numel() as usize);
+        touched.for_each_coord(|coord| {
+            let mut idx = 0u64;
+            let mut start = Vec::with_capacity(ndim);
+            let mut piece_count = Vec::with_capacity(ndim);
+            for d in 0..ndim {
+                idx = idx * grid[d] + coord[d];
+                let c0 = coord[d] * self.chunk[d];
+                let c1 = (c0 + self.chunk[d]).min(self.space.dims[d]);
+                let p_lo = slab.start[d].max(c0);
+                let p_hi = slab_end[d].min(c1);
+                start.push(p_lo);
+                piece_count.push(p_hi - p_lo);
             }
-        }
+            out.push((
+                idx,
+                Hyperslab {
+                    start,
+                    count: piece_count,
+                },
+            ));
+        });
         Ok(out)
     }
 }
@@ -320,20 +387,35 @@ pub fn copy_slab_f32(
     let src_strides = src_space.strides();
     let dst_strides = dst_space.strides();
     let last = src_slab.ndim() - 1;
-    for ((s_coord, run), (d_coord, _)) in src_slab.rows().zip(dst_slab.rows()) {
-        let s_off = s_coord
+    debug_assert!(src_strides[last] == 1 && dst_strides[last] == 1);
+    // The slabs share one `count`, so a single odometer over the outer
+    // dimensions drives both offsets incrementally — zero allocations per
+    // row beyond the one scratch index buffer.
+    let run = src_slab.count[last] as usize;
+    let rows = (src_slab.numel() / src_slab.count[last]) as usize;
+    let base = |start: &[u64], strides: &[u64]| {
+        start
             .iter()
-            .zip(&src_strides)
+            .zip(strides)
             .map(|(c, st)| c * st)
-            .sum::<u64>() as usize;
-        let d_off = d_coord
-            .iter()
-            .zip(&dst_strides)
-            .map(|(c, st)| c * st)
-            .sum::<u64>() as usize;
-        let run = run as usize;
-        debug_assert!(src_strides[last] == 1 && dst_strides[last] == 1);
+            .sum::<u64>() as usize
+    };
+    let mut s_off = base(&src_slab.start, &src_strides);
+    let mut d_off = base(&dst_slab.start, &dst_strides);
+    let mut odo = vec![0u64; last];
+    for _ in 0..rows {
         dst[d_off..d_off + run].copy_from_slice(&src[s_off..s_off + run]);
+        for d in (0..last).rev() {
+            odo[d] += 1;
+            s_off += src_strides[d] as usize;
+            d_off += dst_strides[d] as usize;
+            if odo[d] < src_slab.count[d] {
+                break;
+            }
+            odo[d] = 0;
+            s_off -= (src_slab.count[d] * src_strides[d]) as usize;
+            d_off -= (dst_slab.count[d] * dst_strides[d]) as usize;
+        }
     }
     Ok(())
 }
@@ -398,6 +480,30 @@ mod tests {
         assert_eq!(cs, vec![vec![5], vec![6], vec![7]]);
         let big = Hyperslab::new(&[0, 0, 0], &[3, 4, 5]).unwrap();
         assert_eq!(big.coords().count(), 60);
+    }
+
+    #[test]
+    fn for_each_coord_matches_coords() {
+        for slab in [
+            Hyperslab::new(&[1, 1], &[2, 2]).unwrap(),
+            Hyperslab::new(&[5], &[3]).unwrap(),
+            Hyperslab::new(&[0, 2, 1], &[3, 1, 4]).unwrap(),
+        ] {
+            let mut visited: Vec<Vec<u64>> = Vec::new();
+            slab.for_each_coord(|c| visited.push(c.to_vec()));
+            let expected: Vec<Vec<u64>> = slab.coords().collect();
+            assert_eq!(visited, expected);
+        }
+    }
+
+    #[test]
+    fn bbox_union_covers_both() {
+        let a = Hyperslab::new(&[1, 4], &[2, 2]).unwrap();
+        let b = Hyperslab::new(&[3, 0], &[1, 3]).unwrap();
+        let u = a.bbox_union(&b).unwrap();
+        assert_eq!(u, Hyperslab::new(&[1, 0], &[3, 6]).unwrap());
+        assert_eq!(a.bbox_union(&a).unwrap(), a);
+        assert!(a.bbox_union(&Hyperslab::new(&[0], &[1]).unwrap()).is_err());
     }
 
     #[test]
@@ -517,6 +623,21 @@ mod tests {
         assert_eq!(back[5], 5.0);
         assert_eq!(back[10], 10.0);
         assert_eq!(back[0], 0.0);
+    }
+
+    #[test]
+    fn copy_slab_3d_exercises_offset_carries() {
+        // 3-d slab copy: the outer-dimension odometer must carry across
+        // both non-innermost axes without drifting the offsets.
+        let src_space = space(&[3, 4, 5]);
+        let src: Vec<f32> = (0..60).map(|i| i as f32).collect();
+        let slab = Hyperslab::new(&[1, 1, 2], &[2, 3, 2]).unwrap();
+        let dst_space = space(&[2, 3, 2]);
+        let whole = Hyperslab::whole(&dst_space);
+        let mut out = vec![0f32; 12];
+        copy_slab_f32(&src, &src_space, &slab, &mut out, &dst_space, &whole).unwrap();
+        let expect: Vec<f32> = slab.coords().map(|c| (c[0] * 20 + c[1] * 5 + c[2]) as f32).collect();
+        assert_eq!(out, expect);
     }
 
     #[test]

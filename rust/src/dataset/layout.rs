@@ -689,6 +689,38 @@ pub fn encode_array_chunk(data: &[f32], dims: &[u64]) -> Result<Vec<u8>> {
     Ok(w.finish())
 }
 
+/// Byte length of the array-chunk header (`SKYA | version | ndim |
+/// dims | crc`) for a chunk of the given rank: the f32 payload starts
+/// at this offset. Ranged readers (the VOL planner and the
+/// `read_slab_where` handler) use it to price and issue row reads
+/// without fetching the whole object.
+pub fn array_chunk_header_len(ndim: usize) -> usize {
+    ARRAY_MAGIC.len() + 2 + 8 * ndim + 4
+}
+
+/// Parse just the header of an encoded array chunk and return the
+/// stored dims. `buf` needs only the header prefix. Like
+/// `read_projected_rows`, a partial read cannot verify the payload
+/// checksum — callers trade that check for moving fewer bytes.
+pub fn decode_array_chunk_header(buf: &[u8]) -> Result<Vec<u64>> {
+    let mut r = ByteReader::new(buf);
+    if r.raw(4)? != ARRAY_MAGIC {
+        return Err(Error::Corrupt("bad array magic".into()));
+    }
+    if r.u8()? != VERSION {
+        return Err(Error::Corrupt("unsupported array version".into()));
+    }
+    let ndim = r.u8()? as usize;
+    if ndim == 0 || ndim > 32 {
+        return Err(Error::Corrupt(format!("bad ndim {ndim}")));
+    }
+    let mut dims = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        dims.push(r.u64()?);
+    }
+    Ok(dims)
+}
+
 /// Deserialize an array chunk; returns (data, dims).
 pub fn decode_array_chunk(buf: &[u8]) -> Result<(Vec<f32>, Vec<u64>)> {
     let mut r = ByteReader::new(buf);
@@ -1145,5 +1177,22 @@ mod tests {
         bad = enc.clone();
         bad[0] = b'Q';
         assert!(decode_array_chunk(&bad).is_err());
+    }
+
+    #[test]
+    fn array_chunk_header_parses_from_prefix_alone() {
+        let data: Vec<f32> = (0..24).map(|i| i as f32 * 0.5).collect();
+        let enc = encode_array_chunk(&data, &[2, 3, 4]).unwrap();
+        let hlen = array_chunk_header_len(3);
+        assert_eq!(hlen, 4 + 2 + 8 * 3 + 4);
+        // The payload begins exactly at the header boundary.
+        assert_eq!(enc.len(), hlen + 4 * 24);
+        let dims = decode_array_chunk_header(&enc[..hlen]).unwrap();
+        assert_eq!(dims, vec![2, 3, 4]);
+        // A truncated header or bad magic is rejected.
+        assert!(decode_array_chunk_header(&enc[..hlen - 9]).is_err());
+        let mut bad = enc[..hlen].to_vec();
+        bad[0] = b'Q';
+        assert!(decode_array_chunk_header(&bad).is_err());
     }
 }

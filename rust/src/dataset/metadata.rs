@@ -34,6 +34,7 @@
 //! wire version 3 adds the marker; version-2 maps (and kind-3 dataset
 //! metadata) still decode, with every marker conservatively `false`.
 
+use super::array::Hyperslab;
 use super::naming;
 use super::schema::{Dataspace, TableSchema};
 use super::table::{Batch, Column};
@@ -41,6 +42,7 @@ use crate::dataset::layout::Layout;
 use crate::error::{Error, Result};
 use crate::store::Cluster;
 use crate::util::bytes::{ByteReader, ByteWriter};
+use std::collections::BTreeMap;
 
 const META_MAGIC: &[u8; 4] = b"SKYM";
 const ZONE_MAGIC: &[u8; 4] = b"SKYZ";
@@ -54,6 +56,32 @@ const ZONE_VERSION_MIN: u8 = 2;
 /// Object xattr key under which the write path stamps each row-group
 /// object's serialized [`ZoneMap`].
 pub const ZONE_MAP_XATTR: &str = "skyhook.zonemap";
+
+/// Object xattr key under which the VOL write path stamps each array
+/// chunk object's serialized [`ChunkZone`] — the n-d analogue of
+/// [`ZONE_MAP_XATTR`]: chunks are just row groups whose "columns" are
+/// coordinates plus one value column.
+pub const CHUNK_ZONE_XATTR: &str = "skyhook.vol.zonemap";
+
+/// Xattr on the `_meta` object carrying a content hash of the encoded
+/// metadata. Stamped by [`save_meta`] for array datasets so VOL clients
+/// can validate a cached `(Dataspace, chunk, zones)` tuple with one
+/// xattr round trip instead of re-reading the whole object.
+pub const META_VERSION_XATTR: &str = "skyhook.meta.ver";
+
+const CHUNK_ZONE_MAGIC: &[u8; 4] = b"SKYC";
+const CHUNK_ZONE_VERSION: u8 = 1;
+
+/// FNV-1a content hash of encoded metadata — the version token
+/// [`save_meta`] stamps under [`META_VERSION_XATTR`].
+pub fn content_version(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
 
 /// What a zone map knows about one column's values: the closed range of
 /// its non-NaN values (`lo > hi` means the column holds no non-NaN
@@ -273,6 +301,112 @@ impl ColumnStats {
             Column::Str(_) => ColumnStats::absent(),
         }
     }
+
+    /// Stats over a raw f32 buffer — what the VOL write path computes per
+    /// array chunk without building a [`Column`]. No sortedness marker:
+    /// element order inside an n-d chunk carries no query meaning.
+    pub fn from_f32s(vals: &[f32]) -> ColumnStats {
+        let (mut min, mut max) = (f64::INFINITY, f64::NEG_INFINITY);
+        let mut nans = 0u64;
+        for &x in vals {
+            if x.is_nan() {
+                nans += 1;
+            } else {
+                let x = x as f64;
+                if x < min {
+                    min = x;
+                }
+                if x > max {
+                    max = x;
+                }
+            }
+        }
+        if min > max && nans == 0 {
+            return ColumnStats::absent();
+        }
+        ColumnStats {
+            min,
+            max,
+            nan_count: nans,
+            sorted: false,
+        }
+    }
+}
+
+/// N-d zone map of one array chunk object: the coordinate bounding box
+/// of every write that touched the chunk (dataspace coordinates) plus
+/// value stats over the full stored chunk, zero fill included. The
+/// coordinate box prunes hyperslabs exactly like column min/max prunes
+/// predicates; the value stats feed [`crate::skyhook::Predicate::prune`]
+/// over the implicit value column `"v"`. Advisory like every zone map:
+/// absent or stale entries only disable pruning, never change results.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChunkZone {
+    /// Bounding box (dataspace coords) of the writes that touched this
+    /// chunk. Elements of the chunk outside it are known zero fill.
+    pub written: Hyperslab,
+    /// Value stats over the full stored chunk (including zero fill).
+    pub stats: ColumnStats,
+}
+
+impl ChunkZone {
+    pub fn encode_into(&self, w: &mut ByteWriter) {
+        w.u8(self.written.ndim() as u8);
+        for &s in &self.written.start {
+            w.u64(s);
+        }
+        for &c in &self.written.count {
+            w.u64(c);
+        }
+        self.stats.encode_into(w);
+    }
+
+    pub fn decode_from(r: &mut ByteReader) -> Result<ChunkZone> {
+        let ndim = r.u8()? as usize;
+        if !(1..=32).contains(&ndim) {
+            return Err(Error::Corrupt(format!("bad chunk zone rank {ndim}")));
+        }
+        let mut start = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            start.push(r.u64()?);
+        }
+        let mut count = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            count.push(r.u64()?);
+        }
+        if count.iter().any(|&c| c == 0) {
+            return Err(Error::Corrupt("zero-extent chunk zone".into()));
+        }
+        Ok(ChunkZone {
+            written: Hyperslab { start, count },
+            stats: ColumnStats::decode_from(r)?,
+        })
+    }
+
+    /// Self-framed encoding for the [`CHUNK_ZONE_XATTR`] object xattr.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::with_capacity(self.written.ndim() * 16 + 32);
+        w.raw(CHUNK_ZONE_MAGIC);
+        w.u8(CHUNK_ZONE_VERSION);
+        self.encode_into(&mut w);
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ChunkZone> {
+        let mut r = ByteReader::new(buf);
+        if r.raw(4)? != CHUNK_ZONE_MAGIC {
+            return Err(Error::Corrupt("bad chunk zone magic".into()));
+        }
+        let v = r.u8()?;
+        if v != CHUNK_ZONE_VERSION {
+            return Err(Error::Corrupt(format!("bad chunk zone version {v}")));
+        }
+        let z = ChunkZone::decode_from(&mut r)?;
+        if r.remaining() != 0 {
+            return Err(Error::Corrupt("trailing chunk zone bytes".into()));
+        }
+        Ok(z)
+    }
 }
 
 /// Self-contained zone map of one row-group object: schema + row count +
@@ -420,6 +554,11 @@ pub enum DatasetMeta {
     Array {
         space: Dataspace,
         chunk: Vec<u64>,
+        /// Per-chunk n-d zone maps keyed by linear chunk index, stamped
+        /// by the VOL write path (kind-6 encoding). Chunks never written
+        /// have no entry; legacy (kind-1) metadata decodes with an empty
+        /// map, which only disables pruning.
+        zones: BTreeMap<u64, ChunkZone>,
     },
 }
 
@@ -442,7 +581,7 @@ impl DatasetMeta {
                     }
                 })
                 .collect(),
-            DatasetMeta::Array { space, chunk } => {
+            DatasetMeta::Array { space, chunk, .. } => {
                 let grid = super::array::ChunkGrid::new(space.clone(), chunk)
                     .expect("validated at construction");
                 (0..grid.nchunks())
@@ -514,12 +653,26 @@ impl DatasetMeta {
                     w.str(c);
                 }
             }
-            DatasetMeta::Array { space, chunk } => {
-                w.u8(1);
+            DatasetMeta::Array {
+                space,
+                chunk,
+                zones,
+            } => {
+                // Kind 6: kind 1 (space + chunk shape) plus the per-chunk
+                // zone maps. A zone-less meta still encodes as kind 1,
+                // bit-identical to what pre-zone-map writers produced.
+                w.u8(if zones.is_empty() { 1 } else { 6 });
                 w.bytes(&space.encode());
                 w.u32(chunk.len() as u32);
                 for &c in chunk {
                     w.u64(c);
+                }
+                if !zones.is_empty() {
+                    w.u32(zones.len() as u32);
+                    for (&idx, z) in zones {
+                        w.u64(idx);
+                        z.encode_into(&mut w);
+                    }
                 }
             }
         }
@@ -597,7 +750,7 @@ impl DatasetMeta {
                     index_cols,
                 })
             }
-            1 => {
+            kind @ (1 | 6) => {
                 let space = Dataspace::decode(r.bytes()?)?;
                 let n = r.u32()? as usize;
                 if n != space.ndim() {
@@ -607,7 +760,28 @@ impl DatasetMeta {
                 for _ in 0..n {
                     chunk.push(r.u64()?);
                 }
-                Ok(DatasetMeta::Array { space, chunk })
+                let mut zones = BTreeMap::new();
+                if kind == 6 {
+                    let k = r.u32()? as usize;
+                    if k > 10_000_000 {
+                        return Err(Error::Corrupt("absurd chunk zone count".into()));
+                    }
+                    for _ in 0..k {
+                        let idx = r.u64()?;
+                        let z = ChunkZone::decode_from(&mut r)?;
+                        if z.written.ndim() != space.ndim() {
+                            return Err(Error::Corrupt(
+                                "chunk zone rank != space rank".into(),
+                            ));
+                        }
+                        zones.insert(idx, z);
+                    }
+                }
+                Ok(DatasetMeta::Array {
+                    space,
+                    chunk,
+                    zones,
+                })
             }
             o => Err(Error::Corrupt(format!("bad dataset kind {o}"))),
         }
@@ -645,7 +819,19 @@ pub fn save_meta(
     if !overwrite && cluster.object_exists(&obj) {
         return Err(Error::AlreadyExists(format!("dataset {dataset}")));
     }
-    Ok(cluster.write_object(at, &obj, &meta.encode())?.finish)
+    let enc = meta.encode();
+    let t = cluster.write_object(at, &obj, &enc)?;
+    if matches!(meta, DatasetMeta::Array { .. }) {
+        // Version-stamp array metadata so VOL clients can validate their
+        // cached (space, chunk, zones) tuple with one xattr round trip.
+        // Tables don't cache metadata client-side, so they skip the stamp
+        // (and its simulated cost).
+        let ver = content_version(&enc).to_le_bytes();
+        return Ok(cluster
+            .setxattr(t.finish, &obj, META_VERSION_XATTR, &ver)?
+            .finish);
+    }
+    Ok(t.finish)
 }
 
 /// Load dataset metadata from the cluster.
@@ -1131,8 +1317,120 @@ mod tests {
         let m = DatasetMeta::Array {
             space: Dataspace::new(&[100, 200]).unwrap(),
             chunk: vec![10, 50],
+            zones: BTreeMap::new(),
         };
         assert_eq!(DatasetMeta::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn array_meta_with_zones_roundtrips_kind6() {
+        let mut zones = BTreeMap::new();
+        zones.insert(
+            3u64,
+            ChunkZone {
+                written: Hyperslab::new(&[10, 50], &[5, 25]).unwrap(),
+                stats: ColumnStats::exact(-2.0, 8.5),
+            },
+        );
+        zones.insert(
+            7u64,
+            ChunkZone {
+                written: Hyperslab::new(&[0, 150], &[10, 50]).unwrap(),
+                stats: ColumnStats {
+                    min: 0.0,
+                    max: 1.0,
+                    nan_count: 4,
+                    sorted: false,
+                },
+            },
+        );
+        let m = DatasetMeta::Array {
+            space: Dataspace::new(&[100, 200]).unwrap(),
+            chunk: vec![10, 50],
+            zones,
+        };
+        let enc = m.encode();
+        assert_eq!(enc[4], 6, "zone-bearing array meta encodes as kind 6");
+        assert_eq!(DatasetMeta::decode(&enc).unwrap(), m);
+        assert!(DatasetMeta::decode(&enc[..enc.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn zoneless_array_meta_encodes_bit_identical_to_kind1() {
+        // A zone-less meta must produce exactly the legacy kind-1 bytes,
+        // so pre-zone-map readers (and content hashes) see no change.
+        let space = Dataspace::new(&[100, 200]).unwrap();
+        let m = DatasetMeta::Array {
+            space: space.clone(),
+            chunk: vec![10, 50],
+            zones: BTreeMap::new(),
+        };
+        let mut w = ByteWriter::new();
+        w.raw(META_MAGIC);
+        w.u8(1);
+        w.bytes(&space.encode());
+        w.u32(2);
+        w.u64(10);
+        w.u64(50);
+        assert_eq!(m.encode(), w.finish());
+    }
+
+    #[test]
+    fn chunk_zone_xattr_roundtrip() {
+        let z = ChunkZone {
+            written: Hyperslab::new(&[4, 0, 9], &[2, 3, 1]).unwrap(),
+            stats: ColumnStats::from_f32s(&[1.0, f32::NAN, -3.5]),
+        };
+        assert_eq!(z.stats.nan_count, 1);
+        assert_eq!(z.stats.range(), Some((-3.5, 1.0)));
+        assert_eq!(ChunkZone::decode(&z.encode()).unwrap(), z);
+        assert!(ChunkZone::decode(b"????").is_err());
+        let enc = z.encode();
+        assert!(ChunkZone::decode(&enc[..enc.len() - 1]).is_err());
+        let mut trailing = z.encode();
+        trailing.push(0);
+        assert!(ChunkZone::decode(&trailing).is_err());
+    }
+
+    #[test]
+    fn from_f32s_matches_from_column() {
+        for vals in [
+            vec![3.0f32, -1.0, 2.5],
+            vec![f32::NAN, f32::NAN],
+            vec![],
+            vec![0.0, f32::NAN, 7.0],
+        ] {
+            let a = ColumnStats::from_f32s(&vals);
+            let mut b = ColumnStats::from_column(&Column::F32(vals.clone()));
+            b.sorted = false; // from_f32s never stamps sortedness
+            assert_eq!(a, b, "{vals:?}");
+        }
+    }
+
+    #[test]
+    fn save_meta_stamps_array_version_xattr() {
+        let c = Cluster::with_defaults(&ClusterConfig::default());
+        let m = DatasetMeta::Array {
+            space: Dataspace::new(&[8, 8]).unwrap(),
+            chunk: vec![4, 4],
+            zones: BTreeMap::new(),
+        };
+        save_meta(&c, 0.0, "arr", &m, false).unwrap();
+        let obj = naming::meta_object("arr");
+        let ver = c
+            .getxattr(0.0, &obj, META_VERSION_XATTR)
+            .unwrap()
+            .value
+            .expect("array meta must carry a version stamp");
+        assert_eq!(ver, content_version(&m.encode()).to_le_bytes());
+        // Tables skip the stamp.
+        save_meta(&c, 0.0, "tbl", &table_meta(), false).unwrap();
+        let tobj = naming::meta_object("tbl");
+        assert!(c
+            .getxattr(0.0, &tobj, META_VERSION_XATTR)
+            .unwrap()
+            .value
+            .is_none());
     }
 
     #[test]
@@ -1156,6 +1454,7 @@ mod tests {
         let m = DatasetMeta::Array {
             space: Dataspace::new(&[10, 10]).unwrap(),
             chunk: vec![5, 5],
+            zones: BTreeMap::new(),
         };
         let names = m.object_names("arr");
         assert_eq!(names.len(), 4);

@@ -533,6 +533,32 @@ pub fn run_pipeline_tiered(
     run_pipeline_premasked(batch, spec, engine, sorted_cols, tier, None)
 }
 
+/// The kernel's filter stage alone: evaluate `predicate` over `batch`
+/// into a row mask, with the same sorted-window accounting the full
+/// pipeline charges ([`KernelWork::rows_scanned`] /
+/// [`KernelWork::rows_short_circuited`]). This is the unified entry the
+/// VOL read path uses on **both** sides of the storage boundary — the
+/// server-local `hdf5.read_slab_where` handler and the client-side
+/// fallback both call it, so a masked chunk read is priced and evaluated
+/// by exactly the machinery table scans use, never a private loop.
+pub fn filter_mask(
+    batch: &Batch,
+    predicate: &Predicate,
+    sorted_cols: &[String],
+) -> Result<(Vec<bool>, KernelWork)> {
+    let sorted = |c: &str| sorted_cols.iter().any(|s| s == c);
+    let (wlo, whi) = sorted_window(predicate, batch, &sorted);
+    let span = (whi - wlo) as u64;
+    let work = KernelWork {
+        rows_scanned: span,
+        rows_short_circuited: batch.nrows() as u64 - span,
+        ..Default::default()
+    };
+    let mut mask = Vec::new();
+    predicate.eval_into(batch, &mut mask)?;
+    Ok((mask, work))
+}
+
 /// [`run_pipeline_tiered`] with an optional index-probe **pre-mask**: one
 /// bool per batch row, `true` for rows the secondary-index probe returned
 /// (a superset of the predicate's matches — probe windows only widen).

@@ -20,6 +20,7 @@
 //! operator, not per query.
 
 use super::query::{AggFunc, AggState, Aggregate, CmpOp, Predicate, Query, SortKey};
+use crate::dataset::array::Hyperslab;
 use crate::dataset::metadata::ValueRange;
 use crate::dataset::table::{Batch, Column};
 use crate::error::{Error, Result};
@@ -30,8 +31,13 @@ use std::fmt::Write as _;
 /// A logical operator tree over one dataset.
 #[derive(Clone, Debug, PartialEq)]
 pub enum LogicalPlan {
-    /// Leaf: read a table dataset.
-    Scan { dataset: String },
+    /// Leaf: read a dataset. `slab` selects a hyperslab of an *array*
+    /// dataset (the VOL read path compiled into the IR); `None` is the
+    /// ordinary whole-table scan.
+    Scan {
+        dataset: String,
+        slab: Option<Hyperslab>,
+    },
     /// Keep rows matching a predicate.
     Filter {
         input: Box<LogicalPlan>,
@@ -69,6 +75,17 @@ impl LogicalPlan {
     pub fn scan(dataset: &str) -> LogicalPlan {
         LogicalPlan::Scan {
             dataset: dataset.to_string(),
+            slab: None,
+        }
+    }
+
+    /// Leaf constructor for a hyperslab selection over an array dataset —
+    /// what `read_slab`/`read_slab_where` compile to. The VOL planner
+    /// (`plan_vol_read`) is the only consumer; `to_query` rejects it.
+    pub fn scan_slab(dataset: &str, slab: Hyperslab) -> LogicalPlan {
+        LogicalPlan::Scan {
+            dataset: dataset.to_string(),
+            slab: Some(slab),
         }
     }
 
@@ -141,7 +158,13 @@ impl LogicalPlan {
     /// One-line description of this node (no inputs).
     fn describe(&self) -> String {
         match self {
-            LogicalPlan::Scan { dataset } => format!("Scan {dataset}"),
+            LogicalPlan::Scan { dataset, slab } => match slab {
+                None => format!("Scan {dataset}"),
+                Some(s) => format!(
+                    "Scan {dataset} slab start={:?} count={:?}",
+                    s.start, s.count
+                ),
+            },
             LogicalPlan::Filter { predicate, .. } => format!("Filter {predicate}"),
             LogicalPlan::Project { columns, .. } => {
                 format!("Project [{}]", columns.join(", "))
@@ -208,9 +231,14 @@ impl LogicalPlan {
                 None => break,
             }
         }
-        let Some(LogicalPlan::Scan { dataset }) = chain.pop() else {
+        let Some(LogicalPlan::Scan { dataset, slab }) = chain.pop() else {
             return Err(Error::Query("plan must bottom out in a Scan".into()));
         };
+        if slab.is_some() {
+            return Err(Error::Query(
+                "hyperslab scans compile via the VOL planner, not to_query".into(),
+            ));
+        }
         let mut q = Query::scan(dataset);
         let mut has_filter = false;
         let mut has_agg = false;
@@ -961,6 +989,21 @@ mod tests {
         assert_eq!(q.sort_keys, vec![SortKey::desc("val")]);
         assert_eq!(q.limit, Some(3));
         assert_eq!(q.logical().to_query().unwrap(), q);
+    }
+
+    #[test]
+    fn slab_scans_describe_and_reject_to_query() {
+        let slab = Hyperslab::new(&[16, 0], &[32, 4096]).unwrap();
+        let lp = LogicalPlan::scan_slab("arr", slab)
+            .filter(Predicate::cmp("v", CmpOp::Gt, 0.5));
+        let tree = lp.explain_tree();
+        assert!(tree.contains("Scan arr slab"), "{tree}");
+        assert!(tree.contains("start=[16, 0]"), "{tree}");
+        // Hyperslab scans are the VOL planner's input, not a Query shape.
+        let err = lp.to_query().unwrap_err();
+        assert!(err.to_string().contains("VOL planner"), "{err}");
+        // The plain scan is unchanged.
+        assert!(LogicalPlan::scan("t").to_query().is_ok());
     }
 
     #[test]

@@ -29,8 +29,8 @@ pub mod worker;
 
 pub use driver::{Driver, QueryResult, QueryStats, WriteReport};
 pub use exec_kernel::{
-    compiled_eligible, prefix_limit, run_pipeline, run_pipeline_tiered, scalar_forced,
-    ChunkCompute, ExecOut, ExecTier, KernelWork, CHUNK_ROWS,
+    compiled_eligible, filter_mask, prefix_limit, run_pipeline, run_pipeline_tiered,
+    scalar_forced, ChunkCompute, ExecOut, ExecTier, KernelWork, CHUNK_ROWS,
 };
 pub use extension::register_skyhook_class;
 pub use logical::{
@@ -39,7 +39,8 @@ pub use logical::{
 };
 pub use plan::{
     access_path_forced, plan, plan_calibrated, plan_costed, plan_logical, plan_opts,
-    plan_with_access, AccessForce, CalibrationMap, ExecMode, PlanStage, QueryPlan, SubQuery,
+    plan_vol_read, plan_with_access, vol_mode_forced, AccessForce, CalibrationMap, ExecMode,
+    PlanStage, QueryPlan, SubQuery, VolPlan, VolSubQuery,
 };
 pub use query::{AggFunc, AggState, Aggregate, CmpOp, Predicate, Query, SortKey};
 pub use sketch::QuantileSketch;

@@ -48,7 +48,9 @@ use super::logical::{
     PipelineSpec,
 };
 use super::query::{Predicate, Query};
-use crate::dataset::metadata::{DatasetMeta, RowGroupMeta, ValueRange};
+use crate::dataset::array::{ChunkGrid, Hyperslab};
+use crate::dataset::metadata::{ChunkZone, DatasetMeta, RowGroupMeta, ValueRange};
+use crate::dataset::table::{Batch, Column};
 use crate::dataset::{DType, Layout, TableSchema};
 use crate::error::{Error, Result};
 use crate::simnet::{AccessProfile, CostParams, QueryCost};
@@ -978,6 +980,7 @@ impl QueryShape {
             agg_values: rg.rows.saturating_mul(self.naggs),
             sort_rows,
             objects_per_osd: 0.0,
+            queue_depth: 0.0,
             compiled_eligible: self.compiled_eligible,
             index_probes: 0.0,
             index_postings: 0.0,
@@ -1228,6 +1231,275 @@ pub(crate) fn group_prunes(pred: &Predicate, schema: &TableSchema, rg: &RowGroup
             .ok()
             .and_then(|ci| rg.stats.get(ci))
             .and_then(|s| s.value_range())
+    })
+}
+
+// ---------------------------------------------------------------------------
+// VOL hyperslab planning
+// ---------------------------------------------------------------------------
+
+/// One surviving per-chunk sub-request of a compiled VOL read.
+#[derive(Clone, Debug)]
+pub struct VolSubQuery {
+    /// Linear chunk index (names the chunk object).
+    pub chunk_idx: u64,
+    /// The piece of the request slab this chunk holds, in dataspace
+    /// coordinates (where the client scatters the result).
+    pub piece: Hyperslab,
+    /// The same piece in chunk-local coordinates (what goes on the wire).
+    pub local: Hyperslab,
+    /// Cost-chosen execution side for this chunk.
+    pub mode: ExecMode,
+    /// The two-sided estimate that made the choice.
+    pub est: QueryCost,
+}
+
+/// A compiled VOL read: the per-chunk sub-requests that survived
+/// pruning, plus the regions the planner resolved without any I/O.
+#[derive(Clone, Debug, Default)]
+pub struct VolPlan {
+    /// Chunks that must actually be read, each with its priced mode.
+    pub pieces: Vec<VolSubQuery>,
+    /// Regions whose value is known without touching storage
+    /// (never-written chunks and zone-pruned chunks): the client
+    /// memsets each slab to the given fill value.
+    pub fills: Vec<(Hyperslab, f32)>,
+    /// Chunk objects dropped by zone-map pruning (written-region or
+    /// value-range) — dead chunks that never leave the planner.
+    pub chunks_pruned: usize,
+    /// Payload bytes of the pruned pieces the read provably skipped.
+    pub bytes_skipped: u64,
+}
+
+/// The `SKYHOOK_FORCE_VOL_MODE` environment override for VOL reads:
+/// `"push"` pins every surviving chunk to `Pushdown`, `"client"` to
+/// `ClientSide`. Mirrors `SKYHOOK_FORCE_ACCESS_PATH`; CI runs the
+/// suite under both values to pin result equivalence.
+pub fn vol_mode_forced() -> Option<ExecMode> {
+    match std::env::var("SKYHOOK_FORCE_VOL_MODE").as_deref() {
+        Ok("push") => Some(ExecMode::Pushdown),
+        Ok("client") => Some(ExecMode::ClientSide),
+        _ => None,
+    }
+}
+
+/// Evaluate the value predicate against a single scalar through the
+/// same kernel the execution paths use (`Predicate::eval_into` over a
+/// one-row batch), so planner fill decisions agree bit-for-bit with
+/// what a server or client mask pass would produce.
+fn pred_matches_value(pred: &Predicate, v: f32) -> Result<bool> {
+    let schema = TableSchema::new(&[("v", DType::F32)]);
+    let batch = Batch::new(schema, vec![Column::F32(vec![v])])?;
+    let mut mask = Vec::with_capacity(1);
+    pred.eval_into(&batch, &mut mask)?;
+    Ok(mask[0])
+}
+
+/// Compile a VOL hyperslab read into per-chunk sub-requests.
+///
+/// `lp` must be zero or more `Filter` nodes (AND-merged, referencing
+/// only the implicit value column `"v"`) over a `Scan` that carries a
+/// hyperslab; anything else is a planner-contract error. Per chunk
+/// piece from `ChunkGrid::decompose`:
+///
+/// 1. Chunk object never written (`chunk_exists` false): the region
+///    reads as zero fill — resolved planner-side, not counted pruned.
+/// 2. With `prune` set and a zone map recorded: a piece disjoint from
+///    the chunk's written bounding box is zero fill, and a value
+///    predicate that provably matches nothing in the chunk's value
+///    range masks the whole piece. Both are counted in
+///    `chunks_pruned` / `bytes_skipped` — the chunk never leaves the
+///    planner.
+/// 3. Survivors are priced through the same `AccessProfile` cost
+///    machinery as table sub-queries: pushdown ships the selected
+///    rows' bytes plus a sparse response, client mode fetches and
+///    decodes the whole encoded chunk. `force_mode` (or the
+///    `SKYHOOK_FORCE_VOL_MODE` override the caller resolves) pins the
+///    side for A/B runs.
+///
+/// The contention inputs (`objects_per_osd`) are computed *after*
+/// pruning, so dead chunks do not inflate the saturation model.
+pub fn plan_vol_read(
+    lp: &LogicalPlan,
+    grid: &ChunkGrid,
+    zones: &BTreeMap<u64, ChunkZone>,
+    chunk_exists: &dyn Fn(u64) -> bool,
+    cost: &CostParams,
+    prune: bool,
+    force_mode: Option<ExecMode>,
+) -> Result<VolPlan> {
+    // Peel Filter* down to the slab-carrying Scan, AND-merging the
+    // predicates in the order they nest.
+    let mut pred = Predicate::True;
+    let mut cur = lp;
+    let slab = loop {
+        match cur {
+            LogicalPlan::Filter { input, predicate } => {
+                pred = if matches!(pred, Predicate::True) {
+                    predicate.clone()
+                } else {
+                    pred.and(predicate.clone())
+                };
+                cur = input;
+            }
+            LogicalPlan::Scan {
+                slab: Some(slab), ..
+            } => break slab,
+            _ => {
+                return Err(Error::Query(
+                    "VOL plans are Filter* over a hyperslab Scan".into(),
+                ))
+            }
+        }
+    };
+    for col in pred.columns() {
+        if col != "v" {
+            return Err(Error::Query(format!(
+                "VOL predicates see a single value column \"v\", got \"{col}\""
+            )));
+        }
+    }
+
+    let has_pred = !matches!(pred, Predicate::True);
+    // Unwritten regions read as zeros; a predicate that rejects 0.0
+    // turns that fill into the masked sentinel.
+    let zero_fill = if !has_pred || pred_matches_value(&pred, 0.0)? {
+        0.0f32
+    } else {
+        f32::NAN
+    };
+
+    // Prune pass first: the contention model must see the post-prune
+    // fan-out, not the raw decomposition.
+    let mut survivors: Vec<(u64, Hyperslab)> = Vec::new();
+    let mut fills: Vec<(Hyperslab, f32)> = Vec::new();
+    let mut chunks_pruned = 0usize;
+    let mut bytes_skipped = 0u64;
+    for (idx, piece) in grid.decompose(slab)? {
+        if !chunk_exists(idx) {
+            fills.push((piece, zero_fill));
+            continue;
+        }
+        if prune {
+            if let Some(zone) = zones.get(&idx) {
+                if piece.intersect(&zone.written).is_none() {
+                    // The piece lies entirely in the chunk's zero
+                    // padding — same answer as an unwritten chunk, but
+                    // here an object exists and we provably skip it.
+                    chunks_pruned += 1;
+                    bytes_skipped += 4 * piece.numel();
+                    fills.push((piece, zero_fill));
+                    continue;
+                }
+                if has_pred
+                    && pred.prune(&|col: &str| {
+                        if col == "v" {
+                            zone.stats.value_range()
+                        } else {
+                            None
+                        }
+                    })
+                {
+                    // The chunk's value range proves the predicate
+                    // matches nothing in it: the whole piece masks out.
+                    chunks_pruned += 1;
+                    bytes_skipped += 4 * piece.numel();
+                    fills.push((piece, f32::NAN));
+                    continue;
+                }
+            }
+        }
+        survivors.push((idx, piece));
+    }
+
+    let ndim = grid.space.ndim();
+    let header = crate::dataset::layout::array_chunk_header_len(ndim) as u64;
+    let chunk_bytes = header + 4 * grid.chunk_numel();
+    let objects_per_osd = if cost.osds > 0 {
+        survivors.len() as f64 / cost.osds as f64
+    } else {
+        survivors.len() as f64
+    };
+    // Wire request: the slab argument (rank byte + start/count words)
+    // plus the encoded predicate.
+    let request_bytes = {
+        let mut w = crate::util::bytes::ByteWriter::new();
+        pred.encode_into(&mut w);
+        (1 + 16 * ndim + w.finish().len()) as u64
+    };
+
+    let mut pieces = Vec::with_capacity(survivors.len());
+    for (idx, piece) in survivors {
+        let p = piece.numel();
+        let sel = if has_pred {
+            estimate_selectivity(&pred, p, &|col: &str| {
+                if col == "v" {
+                    zones.get(&idx).and_then(|z| z.stats.value_range())
+                } else {
+                    None
+                }
+            })
+        } else {
+            1.0
+        };
+        let profile = AccessProfile {
+            rows: p,
+            // Pushdown ranged-reads the chunk header plus exactly the
+            // requested rows' payload bytes...
+            scan_bytes: header + 4 * p,
+            // ...while client mode fetches and decodes the whole
+            // encoded chunk object.
+            fetch_bytes: chunk_bytes,
+            fetch_round_trips: 1,
+            request_bytes,
+            // With a predicate the pushdown response is sparse (tag/rows
+            // header, match bitmap, matching values); without one the
+            // plain `read_slab` handler ships the dense selection.
+            result_bytes: if has_pred {
+                17 + p.div_ceil(8) + (4.0 * sel * p as f64) as u64
+            } else {
+                4 * p
+            },
+            agg_values: 0,
+            sort_rows: 0,
+            objects_per_osd,
+            queue_depth: cost.queue_depth,
+            compiled_eligible: false,
+            index_probes: 0.0,
+            index_postings: 0.0,
+            index_read_amp: 0.0,
+        };
+        let est = cost.estimate(&profile);
+        let mode = force_mode.unwrap_or(if est.pushdown_wins() {
+            ExecMode::Pushdown
+        } else {
+            ExecMode::ClientSide
+        });
+        let coord = grid.chunk_coord(idx)?;
+        let local_start: Vec<u64> = piece
+            .start
+            .iter()
+            .zip(coord.iter().zip(grid.chunk.iter()))
+            .map(|(s, (c, k))| s - c * k)
+            .collect();
+        let local = Hyperslab {
+            start: local_start,
+            count: piece.count.clone(),
+        };
+        pieces.push(VolSubQuery {
+            chunk_idx: idx,
+            piece,
+            local,
+            mode,
+            est,
+        });
+    }
+
+    Ok(VolPlan {
+        pieces,
+        fills,
+        chunks_pruned,
+        bytes_skipped,
     })
 }
 
@@ -1820,6 +2092,7 @@ mod tests {
         let m = DatasetMeta::Array {
             space: crate::dataset::Dataspace::new(&[4]).unwrap(),
             chunk: vec![2],
+            zones: BTreeMap::new(),
         };
         assert!(plan(&Query::scan("ds"), &m, None).is_err());
     }
@@ -2011,5 +2284,160 @@ mod tests {
         assert!(pc.subqueries.iter().all(|s| s.index_col.is_none()));
         // The env override parses without panicking whatever CI set.
         let _ = access_path_forced();
+    }
+
+    // ---- VOL hyperslab planning --------------------------------------------
+
+    fn vol_grid() -> ChunkGrid {
+        ChunkGrid::new(crate::dataset::Dataspace::new(&[8, 8]).unwrap(), &[4, 4]).unwrap()
+    }
+
+    fn zone(start: &[u64], count: &[u64], min: f64, max: f64) -> ChunkZone {
+        ChunkZone {
+            written: Hyperslab::new(start, count).unwrap(),
+            stats: crate::dataset::metadata::ColumnStats {
+                min,
+                max,
+                nan_count: 0,
+                sorted: false,
+            },
+        }
+    }
+
+    #[test]
+    fn vol_plan_rejects_non_slab_shapes() {
+        let grid = vol_grid();
+        let zones = BTreeMap::new();
+        let cost = CostParams::paper_testbed();
+        // A plain table scan has no hyperslab to decompose.
+        let lp = LogicalPlan::scan("arr");
+        assert!(plan_vol_read(&lp, &grid, &zones, &|_| true, &cost, true, None).is_err());
+        // Predicates must reference only the implicit value column "v".
+        let slab = Hyperslab::new(&[0, 0], &[8, 8]).unwrap();
+        let lp = LogicalPlan::scan_slab("arr", slab).filter(Predicate::cmp(
+            "temp",
+            CmpOp::Lt,
+            0.5,
+        ));
+        let err = plan_vol_read(&lp, &grid, &zones, &|_| true, &cost, true, None);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn vol_plan_prunes_by_written_region_and_value_range() {
+        let grid = vol_grid(); // 8x8 space, 4 chunks of [4,4]
+        let mut zones = BTreeMap::new();
+        // Chunk 0: written everywhere, values 0..10. Chunk 1: only its
+        // first row written, values 0..10. Chunk 2: written everywhere,
+        // values 0..0.1 (prunable by value). Chunk 3: no object.
+        zones.insert(0, zone(&[0, 0], &[4, 4], 0.0, 10.0));
+        zones.insert(1, zone(&[0, 4], &[1, 4], 0.0, 10.0));
+        zones.insert(2, zone(&[4, 0], &[4, 4], 0.0, 0.1));
+        let exists = |idx: u64| idx != 3;
+        let cost = CostParams::paper_testbed();
+        let slab = Hyperslab::new(&[2, 2], &[4, 4]).unwrap(); // touches all 4 chunks
+        let lp = LogicalPlan::scan_slab("arr", slab).filter(Predicate::cmp("v", CmpOp::Gt, 1.0));
+        let p = plan_vol_read(&lp, &grid, &zones, &exists, &cost, true, None).unwrap();
+        // Chunk 0 survives; chunk 1's piece (rows 2..4 of it) misses the
+        // written row 0 -> zero-fill prune; chunk 2's value range proves
+        // no match -> NaN-fill prune; chunk 3 has no object -> plain fill.
+        assert_eq!(p.pieces.len(), 1);
+        assert_eq!(p.pieces[0].chunk_idx, 0);
+        assert_eq!(p.chunks_pruned, 2);
+        // Each pruned piece is 2x2 = 4 elems = 16 bytes.
+        assert_eq!(p.bytes_skipped, 32);
+        assert_eq!(p.fills.len(), 3);
+        // The predicate v > 1.0 rejects 0.0, so zero-fill regions mask
+        // to NaN; the value-pruned chunk masks to NaN too.
+        for (_, fill) in &p.fills {
+            assert!(fill.is_nan());
+        }
+        // Without a predicate the same fills are literal zeros.
+        let slab = Hyperslab::new(&[2, 2], &[4, 4]).unwrap();
+        let lp = LogicalPlan::scan_slab("arr", slab);
+        let p0 = plan_vol_read(&lp, &grid, &zones, &exists, &cost, true, None).unwrap();
+        assert_eq!(p0.chunks_pruned, 1); // only the written-region prune applies
+        assert!(p0.fills.iter().all(|(_, f)| *f == 0.0));
+        // Pruning off: every existing chunk survives.
+        let slab = Hyperslab::new(&[2, 2], &[4, 4]).unwrap();
+        let lp = LogicalPlan::scan_slab("arr", slab).filter(Predicate::cmp("v", CmpOp::Gt, 1.0));
+        let pall = plan_vol_read(&lp, &grid, &zones, &exists, &cost, false, None).unwrap();
+        assert_eq!(pall.pieces.len(), 3);
+        assert_eq!(pall.chunks_pruned, 0);
+        assert_eq!(pall.bytes_skipped, 0);
+    }
+
+    #[test]
+    fn vol_plan_local_coords_and_forced_mode() {
+        let grid = vol_grid();
+        let zones = BTreeMap::new();
+        let cost = CostParams::paper_testbed();
+        let slab = Hyperslab::new(&[2, 2], &[4, 4]).unwrap();
+        let lp = LogicalPlan::scan_slab("arr", slab);
+        let p = plan_vol_read(
+            &lp,
+            &grid,
+            &zones,
+            &|_| true,
+            &cost,
+            true,
+            Some(ExecMode::ClientSide),
+        )
+        .unwrap();
+        assert_eq!(p.pieces.len(), 4);
+        assert!(p.pieces.iter().all(|s| s.mode == ExecMode::ClientSide));
+        for sq in &p.pieces {
+            let coord = grid.chunk_coord(sq.chunk_idx).unwrap();
+            for d in 0..2 {
+                assert_eq!(sq.local.start[d], sq.piece.start[d] - coord[d] * 4);
+                assert_eq!(sq.local.count[d], sq.piece.count[d]);
+                assert!(sq.local.start[d] + sq.local.count[d] <= 4);
+            }
+        }
+        // The env override parses without panicking whatever CI set.
+        let _ = vol_mode_forced();
+    }
+
+    #[test]
+    fn vol_mode_flips_between_hdd_and_flash() {
+        // The E9 workload in miniature: 256x4096 dataset, [64,256]
+        // chunks, a row band crossing 16 chunks, selectivity ~0.5.
+        // On spinning media the per-op seek dominates, so shipping only
+        // the requested rows' bytes + a sparse response wins; on flash
+        // the device read is nearly free and the contention-scaled
+        // server CPU + response latency make client-side fetch cheaper.
+        let grid = ChunkGrid::new(
+            crate::dataset::Dataspace::new(&[256, 4096]).unwrap(),
+            &[64, 256],
+        )
+        .unwrap();
+        let mut zones = BTreeMap::new();
+        for idx in 0..grid.nchunks() {
+            let slab = grid.chunk_slab(idx).unwrap();
+            zones.insert(idx, zone(&slab.start, &slab.count, 0.0, 1.0));
+        }
+        let slab = Hyperslab::new(&[16, 0], &[32, 4096]).unwrap();
+        let lp = LogicalPlan::scan_slab("arr", slab).filter(Predicate::cmp("v", CmpOp::Lt, 0.5));
+        let mut hdd = CostParams::hdd();
+        hdd.osds = 8;
+        let mut flash = CostParams::flash();
+        flash.osds = 8;
+        let ph = plan_vol_read(&lp, &grid, &zones, &|_| true, &hdd, true, None).unwrap();
+        let pf = plan_vol_read(&lp, &grid, &zones, &|_| true, &flash, true, None).unwrap();
+        assert_eq!(ph.pieces.len(), 16);
+        assert_eq!(pf.pieces.len(), 16);
+        let push = |p: &VolPlan| {
+            p.pieces
+                .iter()
+                .filter(|s| s.mode == ExecMode::Pushdown)
+                .count()
+        };
+        // The decision flips with the media profile: HDD pushes, flash
+        // pulls. Strict inequality is the E9 acceptance criterion.
+        assert_eq!(push(&ph), 16);
+        assert_eq!(push(&pf), 0);
+        // And the estimates actually disagree about the winner.
+        assert!(ph.pieces[0].est.pushdown_wins());
+        assert!(!pf.pieces[0].est.pushdown_wins());
     }
 }

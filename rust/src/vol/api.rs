@@ -8,11 +8,51 @@
 //! application code, which is the paper's independent-evolution goal
 //! (§2 goal 3).
 
-use crate::dataset::{Dataspace, Hyperslab};
+use crate::dataset::table::{Batch, Column};
+use crate::dataset::{DType, Dataspace, Hyperslab, TableSchema};
 use crate::error::{Error, Result};
+use crate::skyhook::exec_kernel::filter_mask;
+use crate::skyhook::query::Predicate;
 
 /// Virtual time + value pair re-exported for backends.
 pub use crate::store::Timed;
+
+/// Mask a dense value buffer against a predicate over the implicit
+/// value column `"v"`: matching elements keep their stored bits,
+/// non-matching ones become canonical `f32::NAN`. Returns the masked
+/// buffer plus how many elements the filter kept. The single
+/// definition every client-side filtered read goes through — it runs
+/// the same `filter_mask` kernel as the `hdf5.read_slab_where` server
+/// handler, so the mask is bit-identical on both sides of the offload
+/// boundary.
+pub fn apply_value_mask(vals: Vec<f32>, predicate: &Predicate) -> Result<(Vec<f32>, u64)> {
+    if matches!(predicate, Predicate::True) {
+        let n = vals.len() as u64;
+        return Ok((vals, n));
+    }
+    for col in predicate.columns() {
+        if col != "v" {
+            return Err(Error::Invalid(format!(
+                "filtered reads see a single value column \"v\", got \"{col}\""
+            )));
+        }
+    }
+    let schema = TableSchema::new(&[("v", DType::F32)]);
+    let batch = Batch::new(schema, vec![Column::F32(vals)])?;
+    let (mask, _work) = filter_mask(&batch, predicate, &[])?;
+    let Some(Column::F32(mut vals)) = batch.columns.into_iter().next() else {
+        return Err(Error::Runtime("value column changed dtype".into()));
+    };
+    let mut matched = 0u64;
+    for (v, keep) in vals.iter_mut().zip(&mask) {
+        if *keep {
+            matched += 1;
+        } else {
+            *v = f32::NAN;
+        }
+    }
+    Ok((vals, matched))
+}
 
 /// The storage-facing interface (the VOL boundary, Figure 1b). All
 /// methods carry virtual time so experiments can measure makespan.
@@ -41,6 +81,25 @@ pub trait VolBackend: Send {
     /// Read a hyperslab.
     fn read_slab(&mut self, at: f64, dataset: &str, slab: &Hyperslab)
         -> Result<Timed<Vec<f32>>>;
+
+    /// Read a hyperslab keeping only elements that match a value
+    /// predicate over the implicit column `"v"`; non-matching elements
+    /// read as `f32::NAN` ([`Predicate::True`] is exactly `read_slab`).
+    /// The default evaluates client-side after a plain `read_slab`;
+    /// backends with a storage-side plugin override it to compile the
+    /// selection into a plan and push the filter down.
+    fn read_slab_where(
+        &mut self,
+        at: f64,
+        dataset: &str,
+        slab: &Hyperslab,
+        predicate: &Predicate,
+    ) -> Result<Timed<Vec<f32>>> {
+        let t = self.read_slab(at, dataset, slab)?;
+        let finish = t.finish;
+        let (vals, _matched) = apply_value_mask(t.value, predicate)?;
+        Ok(Timed::new(vals, finish))
+    }
 
     /// Dataset's dataspace + chunk shape.
     fn shape(&mut self, at: f64, dataset: &str) -> Result<Timed<(Dataspace, Vec<u64>)>>;
@@ -127,6 +186,22 @@ impl VolFile {
     pub fn read_all(&mut self, dataset: &str) -> Result<Vec<f32>> {
         let (space, _) = self.shape(dataset)?;
         self.read(dataset, &Hyperslab::whole(&space))
+    }
+
+    /// Read a hyperslab, keeping only elements that match `predicate`
+    /// over the implicit value column `"v"`; masked elements read as
+    /// `f32::NAN`.
+    pub fn read_where(
+        &mut self,
+        dataset: &str,
+        slab: &Hyperslab,
+        predicate: &Predicate,
+    ) -> Result<Vec<f32>> {
+        let t = self
+            .backend
+            .read_slab_where(self.now, dataset, slab, predicate)?;
+        self.now = t.finish;
+        Ok(t.value)
     }
 
     /// Dataspace + chunk shape of a dataset.
@@ -227,6 +302,35 @@ pub fn conformance(make: impl Fn() -> VolFile) {
     f.write_all("one", &data).unwrap();
     let tail = f.read("one", &Hyperslab::new(&[90], &[10]).unwrap()).unwrap();
     assert_eq!(tail, &data[90..]);
+
+    // filtered read: kept elements bit-exact, masked ones NaN
+    use crate::skyhook::query::CmpOp;
+    let whole = Hyperslab::new(&[0], &[100]).unwrap();
+    let got = f
+        .read_where("one", &whole, &Predicate::cmp("v", CmpOp::Ge, 0.0))
+        .unwrap();
+    assert_eq!(got.len(), 100);
+    for (g, d) in got.iter().zip(&data) {
+        if *d >= 0.0 {
+            assert_eq!(g, d);
+        } else {
+            assert!(g.is_nan(), "rejected element must read NaN");
+        }
+    }
+    // Predicate::True is exactly read_slab
+    let got = f
+        .read_where("one", &Hyperslab::new(&[90], &[10]).unwrap(), &Predicate::True)
+        .unwrap();
+    assert_eq!(got, &data[90..]);
+    // a predicate no element satisfies masks everything
+    let got = f
+        .read_where("one", &whole, &Predicate::cmp("v", CmpOp::Gt, 2.0))
+        .unwrap();
+    assert!(got.iter().all(|v| v.is_nan()));
+    // foreign predicate columns are rejected
+    assert!(f
+        .read_where("one", &whole, &Predicate::cmp("x", CmpOp::Lt, 0.0))
+        .is_err());
 
     // 3-d dataset with uneven chunks
     let mut f = make();

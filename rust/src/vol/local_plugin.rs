@@ -7,13 +7,26 @@
 //! - `hdf5.read_slab`  — return only the selected elements of the chunk
 //!   (server-side selection: the network carries `slab.numel()*4` bytes,
 //!   not the whole chunk),
+//! - `hdf5.read_slab_where` — slab selection plus a value predicate over
+//!   the implicit column `"v"`: ranged-reads only the requested rows'
+//!   bytes off the device, evaluates the predicate through the shared
+//!   execution kernel, and ships a sparse response (match bitmap +
+//!   matching values only),
 //! - `hdf5.write_slab` — server-side read-modify-write of a sub-slab,
+//!   returning the chunk's recomputed whole-chunk value stats so the
+//!   writer can refresh its zone map without a second read,
 //! - `hdf5.stat`       — the chunk's stored dims.
 
 use crate::dataset::array::copy_slab_f32;
-use crate::dataset::layout::{decode_array_chunk, encode_array_chunk};
-use crate::dataset::{Dataspace, Hyperslab};
+use crate::dataset::layout::{
+    array_chunk_header_len, decode_array_chunk, decode_array_chunk_header, encode_array_chunk,
+};
+use crate::dataset::metadata::ColumnStats;
+use crate::dataset::table::{Batch, Column};
+use crate::dataset::{DType, Dataspace, Hyperslab, TableSchema};
 use crate::error::{Error, Result};
+use crate::skyhook::exec_kernel::filter_mask;
+use crate::skyhook::query::Predicate;
 use crate::store::objclass::ClassRegistry;
 use crate::util::bytes::{ByteReader, ByteWriter};
 
@@ -68,6 +81,66 @@ fn decode_slab_arg(input: &[u8], want_payload: bool) -> Result<(Hyperslab, Vec<f
     Ok((slab, payload))
 }
 
+/// Encode a slab selection + value predicate as `hdf5.read_slab_where`
+/// handler input (the request the VOL planner prices as
+/// `request_bytes`).
+pub fn encode_slab_where_arg(slab: &Hyperslab, pred: &Predicate) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.u8(slab.ndim() as u8);
+    for &s in &slab.start {
+        w.u64(s);
+    }
+    for &c in &slab.count {
+        w.u64(c);
+    }
+    pred.encode_into(&mut w);
+    w.finish()
+}
+
+/// Decode a `hdf5.read_slab_where` response into the dense masked slab:
+/// `numel` f32s in slab row-major order, matching elements holding
+/// their stored bits and masked elements `f32::NAN`. Returns
+/// `(values, rows_scanned, rows_matched)`.
+///
+/// Wire: `tag u8 | rows_scanned u64 | rows_matched u64`, then (tag 0
+/// only) an LSB-first match bitmap of `ceil(numel/8)` bytes followed by
+/// the matching values. Tag 1 is the all-masked short-circuit: nothing
+/// matched, no payload.
+pub fn decode_where_response(buf: &[u8], numel: u64) -> Result<(Vec<f32>, u64, u64)> {
+    let mut r = ByteReader::new(buf);
+    let tag = r.u8()?;
+    let scanned = r.u64()?;
+    let matched = r.u64()?;
+    if scanned != numel {
+        return Err(Error::Corrupt(format!(
+            "rows scanned {scanned} != slab numel {numel}"
+        )));
+    }
+    let mut out = vec![f32::NAN; numel as usize];
+    match tag {
+        1 => {
+            if matched != 0 || r.remaining() != 0 {
+                return Err(Error::Corrupt("malformed all-masked response".into()));
+            }
+        }
+        0 => {
+            let bits = r.raw(numel.div_ceil(8) as usize)?.to_vec();
+            let mut set = 0u64;
+            for (i, slot) in out.iter_mut().enumerate() {
+                if bits[i / 8] >> (i % 8) & 1 == 1 {
+                    *slot = r.f32()?;
+                    set += 1;
+                }
+            }
+            if set != matched || r.remaining() != 0 {
+                return Err(Error::Corrupt("match bitmap disagrees with count".into()));
+            }
+        }
+        t => return Err(Error::Corrupt(format!("bad read_slab_where tag {t}"))),
+    }
+    Ok((out, scanned, matched))
+}
+
 /// Register the `hdf5` object class. Call once when building the cluster's
 /// [`ClassRegistry`] (every storage server gets the same plugins, §4.2).
 pub fn register_hdf5_class(r: &mut ClassRegistry) {
@@ -105,6 +178,100 @@ pub fn register_hdf5_class(r: &mut ClassRegistry) {
         Ok(crate::util::bytes::f32s_to_bytes(&out))
     });
 
+    r.register("hdf5", "read_slab_where", |b, input| {
+        let mut r = ByteReader::new(input);
+        let ndim = r.u8()? as usize;
+        if ndim == 0 || ndim > 32 {
+            return Err(Error::Invalid(format!("bad slab ndim {ndim}")));
+        }
+        let mut start = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            start.push(r.u64()?);
+        }
+        let mut count = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            count.push(r.u64()?);
+        }
+        let slab = Hyperslab::new(&start, &count)?;
+        let pred = Predicate::decode_from(&mut r)?;
+        if r.remaining() != 0 {
+            return Err(Error::Invalid("trailing bytes after predicate".into()));
+        }
+        for col in pred.columns() {
+            if col != "v" {
+                return Err(Error::Invalid(format!(
+                    "read_slab_where predicates see a single value column \"v\", got \"{col}\""
+                )));
+            }
+        }
+        // Ranged header read: learn the stored dims without touching the
+        // payload. A partial read cannot verify the chunk checksum — the
+        // same trade `read_projected_rows` makes for tables.
+        let hlen = array_chunk_header_len(ndim);
+        let dims = decode_array_chunk_header(&b.read_range(0, hlen)?)?;
+        if dims.len() != ndim {
+            return Err(Error::Invalid(format!(
+                "slab rank {ndim} != chunk rank {}",
+                dims.len()
+            )));
+        }
+        let space = Dataspace::new(&dims)?;
+        if !slab.fits(&space) {
+            return Err(Error::Invalid("slab exceeds chunk".into()));
+        }
+        // Per-row ranged reads: exactly the requested rows' bytes come
+        // off the device (header + 4·numel total), never the whole
+        // chunk — this is the `scan_bytes` the planner priced.
+        let mut strides = vec![1u64; ndim];
+        for d in (0..ndim - 1).rev() {
+            strides[d] = strides[d + 1] * dims[d + 1];
+        }
+        let mut vals = Vec::with_capacity(slab.numel() as usize);
+        for (coord, run) in slab.rows() {
+            let off: u64 = coord.iter().zip(&strides).map(|(c, s)| c * s).sum();
+            let bytes = b.read_range(hlen + (off * 4) as usize, (run * 4) as usize)?;
+            vals.extend(crate::util::bytes::bytes_to_f32s(&bytes)?);
+        }
+        // Evaluate through the shared execution kernel so the mask is
+        // bit-identical to what a client-side pass would compute, and
+        // charge exactly what the kernel accounts plus the sparse
+        // response encode.
+        let schema = TableSchema::new(&[("v", DType::F32)]);
+        let batch = Batch::new(schema, vec![Column::F32(vals)])?;
+        let (mask, work) = filter_mask(&batch, &pred, &[])?;
+        let matched = mask.iter().filter(|&&m| m).count() as u64;
+        let prof = b.exec_profile();
+        b.charge_cpu(work.server_seconds(&prof) + matched as f64 * 1e-9);
+        let rows = batch.nrows() as u64;
+        let mut w = ByteWriter::new();
+        if matched == 0 {
+            // All-masked short-circuit: only the 17-byte header ships.
+            w.u8(1);
+            w.u64(rows);
+            w.u64(0);
+            return Ok(w.finish());
+        }
+        w.u8(0);
+        w.u64(rows);
+        w.u64(matched);
+        let mut bits = vec![0u8; mask.len().div_ceil(8)];
+        for (i, &m) in mask.iter().enumerate() {
+            if m {
+                bits[i / 8] |= 1 << (i % 8);
+            }
+        }
+        w.raw(&bits);
+        let Column::F32(vals) = &batch.columns[0] else {
+            return Err(Error::Runtime("value column changed dtype".into()));
+        };
+        for (i, &m) in mask.iter().enumerate() {
+            if m {
+                w.f32(vals[i]);
+            }
+        }
+        Ok(w.finish())
+    });
+
     r.register("hdf5", "write_slab", |b, input| {
         let (slab, payload) = decode_slab_arg(input, true)?;
         let raw = b.read()?;
@@ -124,13 +291,20 @@ pub fn register_hdf5_class(r: &mut ClassRegistry) {
             &slab,
         )?;
         b.write(&encode_array_chunk(&data, &dims)?)?;
-        Ok(Vec::new())
+        // Return the chunk's recomputed whole-chunk value stats (25
+        // bytes): only the server sees the merged chunk, so only it can
+        // produce the zone-map range the writer stamps — a second read
+        // just for stats would defeat the server-side RMW.
+        let mut w = ByteWriter::new();
+        ColumnStats::from_f32s(&data).encode_into(&mut w);
+        Ok(w.finish())
     });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::skyhook::query::CmpOp;
     use crate::store::objclass::MemBackend;
 
     fn registry() -> ClassRegistry {
@@ -181,7 +355,7 @@ mod tests {
         let r = registry();
         let mut b = MemBackend::new(&chunk_2x4());
         let slab = Hyperslab::new(&[1, 0], &[1, 2]).unwrap();
-        r.get("hdf5", "write_slab").unwrap()(
+        let out = r.get("hdf5", "write_slab").unwrap()(
             &mut b,
             &encode_slab_arg(&slab, Some(&[40.0, 50.0])),
         )
@@ -189,6 +363,125 @@ mod tests {
         let (data, dims) = decode_array_chunk(&b.data).unwrap();
         assert_eq!(dims, vec![2, 4]);
         assert_eq!(data, vec![0.0, 1.0, 2.0, 3.0, 40.0, 50.0, 6.0, 7.0]);
+        // The response carries the merged chunk's recomputed stats.
+        let stats = ColumnStats::decode_from(&mut ByteReader::new(&out)).unwrap();
+        assert_eq!((stats.min, stats.max, stats.nan_count), (0.0, 50.0, 0));
+    }
+
+    #[test]
+    fn read_slab_where_ships_sparse_matches() {
+        let r = registry();
+        let mut b = MemBackend::new(&chunk_2x4());
+        let slab = Hyperslab::new(&[0, 0], &[2, 4]).unwrap();
+        let pred = Predicate::cmp("v", CmpOp::Ge, 3.0);
+        let out = r.get("hdf5", "read_slab_where").unwrap()(
+            &mut b,
+            &encode_slab_where_arg(&slab, &pred),
+        )
+        .unwrap();
+        // tag/rows header + 1-byte bitmap + the 5 matching values only.
+        assert_eq!(out.len(), 17 + 1 + 20);
+        let (vals, scanned, matched) = decode_where_response(&out, 8).unwrap();
+        assert_eq!((scanned, matched), (8, 5));
+        for (i, v) in vals.iter().enumerate() {
+            if i >= 3 {
+                assert_eq!(*v, i as f32);
+            } else {
+                assert!(v.is_nan(), "masked element {i} must read NaN");
+            }
+        }
+        assert!(b.cpu > 0.0);
+    }
+
+    #[test]
+    fn read_slab_where_all_masked_short_circuits() {
+        let r = registry();
+        let mut b = MemBackend::new(&chunk_2x4());
+        let slab = Hyperslab::new(&[1, 1], &[1, 2]).unwrap();
+        let pred = Predicate::cmp("v", CmpOp::Gt, 100.0);
+        let out = r.get("hdf5", "read_slab_where").unwrap()(
+            &mut b,
+            &encode_slab_where_arg(&slab, &pred),
+        )
+        .unwrap();
+        assert_eq!(out.len(), 17, "only the header crosses the wire");
+        let (vals, scanned, matched) = decode_where_response(&out, 2).unwrap();
+        assert_eq!((scanned, matched), (2, 0));
+        assert!(vals.iter().all(|v| v.is_nan()));
+    }
+
+    #[test]
+    fn read_slab_where_nan_matches_only_ne() {
+        let r = registry();
+        let data = [f32::NAN, 1.0, 2.0, 3.0];
+        let mut b = MemBackend::new(&encode_array_chunk(&data, &[4]).unwrap());
+        let slab = Hyperslab::new(&[0], &[4]).unwrap();
+        // NaN != 2.0 holds, so the stored NaN survives the filter.
+        let pred = Predicate::cmp("v", CmpOp::Ne, 2.0);
+        let out = r.get("hdf5", "read_slab_where").unwrap()(
+            &mut b,
+            &encode_slab_where_arg(&slab, &pred),
+        )
+        .unwrap();
+        let (vals, _, matched) = decode_where_response(&out, 4).unwrap();
+        assert_eq!(matched, 3);
+        assert!(vals[0].is_nan());
+        assert_eq!((vals[1], vals[3]), (1.0, 3.0));
+        assert!(vals[2].is_nan(), "2.0 itself is masked");
+        // A comparison predicate never matches NaN rows.
+        let mut b = MemBackend::new(&encode_array_chunk(&data, &[4]).unwrap());
+        let pred = Predicate::cmp("v", CmpOp::Lt, 100.0);
+        let out = r.get("hdf5", "read_slab_where").unwrap()(
+            &mut b,
+            &encode_slab_where_arg(&slab, &pred),
+        )
+        .unwrap();
+        let (vals, _, matched) = decode_where_response(&out, 4).unwrap();
+        assert_eq!(matched, 3);
+        assert!(vals[0].is_nan());
+    }
+
+    #[test]
+    fn read_slab_where_true_predicate_matches_read_slab() {
+        let r = registry();
+        let slab = Hyperslab::new(&[0, 1], &[2, 2]).unwrap();
+        let mut b = MemBackend::new(&chunk_2x4());
+        let dense = r.get("hdf5", "read_slab").unwrap()(&mut b, &encode_slab_arg(&slab, None))
+            .unwrap();
+        let expect = crate::util::bytes::bytes_to_f32s(&dense).unwrap();
+        let mut b = MemBackend::new(&chunk_2x4());
+        let out = r.get("hdf5", "read_slab_where").unwrap()(
+            &mut b,
+            &encode_slab_where_arg(&slab, &Predicate::True),
+        )
+        .unwrap();
+        let (vals, _, matched) = decode_where_response(&out, 4).unwrap();
+        assert_eq!(matched, 4);
+        assert_eq!(vals, expect);
+    }
+
+    #[test]
+    fn read_slab_where_validates() {
+        let r = registry();
+        let h = r.get("hdf5", "read_slab_where").unwrap();
+        // Foreign predicate column.
+        let mut b = MemBackend::new(&chunk_2x4());
+        let slab = Hyperslab::new(&[0, 0], &[1, 1]).unwrap();
+        let pred = Predicate::cmp("temp", CmpOp::Gt, 0.0);
+        assert!(h(&mut b, &encode_slab_where_arg(&slab, &pred)).is_err());
+        // Out-of-bounds slab.
+        let mut b = MemBackend::new(&chunk_2x4());
+        let oob = Hyperslab::new(&[1, 3], &[2, 2]).unwrap();
+        assert!(h(&mut b, &encode_slab_where_arg(&oob, &Predicate::True)).is_err());
+        // Trailing bytes after the predicate.
+        let mut b = MemBackend::new(&chunk_2x4());
+        let mut arg = encode_slab_where_arg(&slab, &Predicate::True);
+        arg.push(9);
+        assert!(h(&mut b, &arg).is_err());
+        // Rank mismatch against the stored chunk.
+        let mut b = MemBackend::new(&chunk_2x4());
+        let flat = Hyperslab::new(&[0], &[1]).unwrap();
+        assert!(h(&mut b, &encode_slab_where_arg(&flat, &Predicate::True)).is_err());
     }
 
     #[test]

@@ -11,7 +11,9 @@ pub mod global_plugin;
 pub mod local_plugin;
 pub mod native;
 
-pub use api::{VolBackend, VolFile};
-pub use global_plugin::{vol_registry, ForwardingBackend};
-pub use local_plugin::register_hdf5_class;
+pub use api::{apply_value_mask, VolBackend, VolFile};
+pub use global_plugin::{vol_registry, ForwardingBackend, VolPolicy, VolStats};
+pub use local_plugin::{
+    decode_where_response, encode_slab_where_arg, register_hdf5_class,
+};
 pub use native::NativeBackend;

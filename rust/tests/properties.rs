@@ -2062,3 +2062,166 @@ fn concurrent_serving_is_serially_equivalent() {
         );
     }
 }
+
+#[test]
+fn vol_filtered_reads_agree_across_backends_and_modes() {
+    // The tentpole equivalence property for plan-compiled VOL reads: a
+    // zone-map-pruned, cost-planned (or mode-forced) filtered read over
+    // the forwarding backend must be bit-identical — NaN positions
+    // included — to the single-node native answer, across random
+    // dataspaces, chunk shapes, sparse write patterns (holes left
+    // unwritten), hyperslabs, and NaN-bearing value predicates.
+    use skyhook_map::config::ClusterConfig;
+    use skyhook_map::simnet::CostParams;
+    use skyhook_map::skyhook::ExecMode;
+    use skyhook_map::store::Cluster;
+    use skyhook_map::vol::{
+        vol_registry, ForwardingBackend, NativeBackend, VolFile, VolPolicy,
+    };
+    use std::sync::Arc;
+
+    fn vol_pred(r: &mut Xoshiro256) -> Predicate {
+        if r.chance(0.15) {
+            return Predicate::True;
+        }
+        let ops = [CmpOp::Lt, CmpOp::Le, CmpOp::Gt, CmpOp::Ge, CmpOp::Eq, CmpOp::Ne];
+        let cmp = |r: &mut Xoshiro256| {
+            Predicate::cmp("v", ops[r.range(0, 5)], r.f64() * 3.0 - 1.0)
+        };
+        let p = cmp(r);
+        if r.chance(0.3) {
+            p.and(cmp(r))
+        } else {
+            p
+        }
+    }
+
+    forall_explain(
+        prop_seed(0x701_f17e),
+        32,
+        |r: &mut Xoshiro256| r.next_u64(),
+        |&case: &u64| -> Result<(), String> {
+            let mut r = Xoshiro256::new(case ^ 0x9e37_79b9_7f4a_7c15);
+            let ndim = r.range(1, 3);
+            let dims: Vec<u64> = (0..ndim).map(|_| r.range_u64(1, 9)).collect();
+            let chunk: Vec<u64> = dims.iter().map(|&d| r.range_u64(1, d)).collect();
+            let space = Dataspace::new(&dims).map_err(|e| e.to_string())?;
+
+            let rand_slab = |r: &mut Xoshiro256| {
+                let start: Vec<u64> =
+                    dims.iter().map(|&d| r.range_u64(0, d - 1)).collect();
+                let count: Vec<u64> = start
+                    .iter()
+                    .zip(&dims)
+                    .map(|(&s, &d)| r.range_u64(1, d - s))
+                    .collect();
+                Hyperslab::new(&start, &count).unwrap()
+            };
+
+            // Sparse write pattern: 1–3 slabs, sometimes the whole
+            // space, with ~5% NaN cells — leaves unwritten holes for
+            // the written-region pruning arm to exercise.
+            let writes: Vec<(Hyperslab, Vec<f32>)> = (0..r.range(1, 3))
+                .map(|_| {
+                    let slab = if r.chance(0.3) {
+                        Hyperslab::whole(&space)
+                    } else {
+                        rand_slab(&mut r)
+                    };
+                    let data = (0..slab.numel())
+                        .map(|_| {
+                            if r.chance(0.05) {
+                                f32::NAN
+                            } else {
+                                r.f32() * 3.0 - 1.0
+                            }
+                        })
+                        .collect();
+                    (slab, data)
+                })
+                .collect();
+            let read_slab = rand_slab(&mut r);
+            let pred = vol_pred(&mut r);
+            let osds = r.range(1, 4);
+
+            // Reference: single-node native backend (default
+            // read_slab_where path: dense read + client-side mask).
+            let mut native =
+                VolFile::open(Box::new(NativeBackend::new(CostParams::paper_testbed())));
+            native
+                .create_dataset("d", &space, &chunk)
+                .map_err(|e| e.to_string())?;
+            for (slab, data) in &writes {
+                native.write("d", slab, data).map_err(|e| e.to_string())?;
+            }
+            let want = native
+                .read_where("d", &read_slab, &pred)
+                .map_err(|e| e.to_string())?;
+
+            // One shared cluster; policies only change the read path.
+            let cluster = Cluster::new(
+                &ClusterConfig {
+                    osds,
+                    replicas: 1,
+                    ..Default::default()
+                },
+                vol_registry(),
+            );
+            let mut w =
+                VolFile::open(Box::new(ForwardingBackend::new(Arc::clone(&cluster))));
+            w.create_dataset("d", &space, &chunk)
+                .map_err(|e| e.to_string())?;
+            for (slab, data) in &writes {
+                w.write("d", slab, data).map_err(|e| e.to_string())?;
+            }
+
+            let variants: Vec<(&str, ForwardingBackend)> = vec![
+                (
+                    "planned",
+                    ForwardingBackend::new(Arc::clone(&cluster)),
+                ),
+                (
+                    "planned-noprune",
+                    ForwardingBackend::new(Arc::clone(&cluster)).with_prune(false),
+                ),
+                (
+                    "static",
+                    ForwardingBackend::new(Arc::clone(&cluster))
+                        .with_policy(VolPolicy::Static),
+                ),
+                (
+                    "forced-push",
+                    ForwardingBackend::new(Arc::clone(&cluster))
+                        .with_policy(VolPolicy::Forced(ExecMode::Pushdown)),
+                ),
+                (
+                    "forced-client",
+                    ForwardingBackend::new(Arc::clone(&cluster))
+                        .with_policy(VolPolicy::Forced(ExecMode::ClientSide)),
+                ),
+            ];
+            for (name, backend) in variants {
+                let mut f = VolFile::open(Box::new(backend));
+                let got = f
+                    .read_where("d", &read_slab, &pred)
+                    .map_err(|e| format!("{name}: {e}"))?;
+                if got.len() != want.len() {
+                    return Err(format!(
+                        "{name}: length {} != native {}",
+                        got.len(),
+                        want.len()
+                    ));
+                }
+                for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!(
+                            "{name}: bit divergence at {i}: {a} vs {b} \
+                             (dims {dims:?} chunk {chunk:?} slab {read_slab:?} pred {pred:?})"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -18,8 +18,11 @@
 #   BENCH_concurrency.json — E11 (serving-layer concurrency sweep: tail
 #                           latency, admission shedding, the contention-
 #                           driven offload-boundary flip, shared scans)
+#   BENCH_vol.json        — E8 (VOL stack overhead + E8d planned-vs-static
+#                           filtered-read A/B) + E9 (media ablation + E9b
+#                           per-chunk offload mode flip)
 #
-# Usage: scripts/bench.sh [pushdown.json [compose.json [costmodel.json [physdesign.json [kernel.json [index.json [concurrency.json]]]]]]]
+# Usage: scripts/bench.sh [pushdown.json [compose.json [costmodel.json [physdesign.json [kernel.json [index.json [concurrency.json [vol.json]]]]]]]]
 #
 # Each snapshot records wall time per bench plus the raw table output
 # (which includes bytes_moved / objects_pruned / sim_seconds columns).
@@ -33,6 +36,7 @@ physdesign_json=${4:-BENCH_physdesign.json}
 kernel_json=${5:-BENCH_kernel.json}
 index_json=${6:-BENCH_index.json}
 concurrency_json=${7:-BENCH_concurrency.json}
+vol_json=${8:-BENCH_vol.json}
 workdir=$(mktemp -d)
 trap 'rm -rf "$workdir"' EXIT
 
@@ -61,6 +65,8 @@ run_bench e4_physical_design || status=1
 run_bench e1_table1_forwarding || status=1
 run_bench e10_index || status=1
 run_bench e11_concurrency || status=1
+run_bench e8_vol_stack || status=1
+run_bench e9_media_ablation || status=1
 
 snapshot() {
     local out=$1
@@ -106,5 +112,6 @@ snapshot "$physdesign_json" e4_physical_design
 snapshot "$kernel_json" e1_table1_forwarding e2_pushdown
 snapshot "$index_json" e10_index
 snapshot "$concurrency_json" e11_concurrency
+snapshot "$vol_json" e8_vol_stack e9_media_ablation
 
 exit $status
