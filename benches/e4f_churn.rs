@@ -1,0 +1,258 @@
+//! E4f — mutable datasets: churn-then-compact.
+//!
+//! The lifecycle claim behind delete vectors + row-group appends +
+//! re-clustering compaction, pinned with hard asserts:
+//!
+//!   1. churn (interleaved appends and tombstone deletes that keep the
+//!      live row count constant) must *strictly* degrade the cost of a
+//!      fixed clustered workload — dead rows ride along, appended
+//!      objects break the val-clustering, delete vectors add reads;
+//!   2. compaction must bring that cost back to within 10% of the
+//!      pre-churn baseline — same live rows, re-sorted, zero tombstones;
+//!   3. at every stage the answers are bit-identical to an independently
+//!      maintained reference model, and the three forced execution modes
+//!      agree with each other bit for bit.
+//!
+//! Run: `cargo bench --bench e4f_churn`
+
+use skyhook_map::config::Config;
+use skyhook_map::dataset::layout::decode_batch;
+use skyhook_map::dataset::metadata;
+use skyhook_map::dataset::partition::PartitionSpec;
+use skyhook_map::dataset::table::{gen, Batch, Column};
+use skyhook_map::dataset::Layout;
+use skyhook_map::launch::Stack;
+use skyhook_map::skyhook::{
+    sort_rows, AggFunc, CmpOp, ExecMode, Predicate, Query, SortKey,
+};
+use skyhook_map::util::bench::table;
+use skyhook_map::util::bytes::fmt_size;
+use std::collections::HashSet;
+
+/// Per-stage cost of the fixed workload (default planner mode), plus the
+/// physical-design signals the stages move.
+struct StageCost {
+    sim: f64,
+    bytes: u64,
+    prefix_reads: u64,
+    pruned: usize,
+}
+
+/// Run the fixed workload, assert reference equality and three-mode
+/// agreement, and return the stage's cost.
+fn run_stage(stack: &Stack, reference: &Batch, label: &str) -> StageCost {
+    let modes = [None, Some(ExecMode::Pushdown), Some(ExecMode::ClientSide)];
+
+    // q1 — ascending top-32 by the clustered column, ts tiebreak (total
+    // order, so the rows compare bit-exactly against the model).
+    let q1 = Query::scan("cb")
+        .select(&["ts", "val"])
+        .sort("val")
+        .sort("ts")
+        .limit(32);
+    let expected = sort_rows(reference, &[SortKey::asc("val"), SortKey::asc("ts")])
+        .unwrap()
+        .slice(0, reference.nrows().min(32))
+        .unwrap()
+        .project(&["ts", "val"])
+        .unwrap();
+    let mut q1_rows = Vec::new();
+    let mut sim = 0.0;
+    let mut bytes = 0;
+    let mut prefix_reads = 0;
+    let mut pruned = 0;
+    for mode in modes {
+        stack.driver.reset_time();
+        let r = stack.driver.execute(&q1, mode).unwrap();
+        if mode.is_none() {
+            sim += r.stats.sim_seconds;
+            bytes += r.stats.bytes_moved;
+            prefix_reads = r.stats.prefix_reads;
+        }
+        q1_rows.push(r.rows.unwrap());
+    }
+    assert_eq!(q1_rows[0], expected, "{label}: top-32 diverged from the model");
+    assert_eq!(q1_rows[0], q1_rows[1], "{label}: push vs default top-32");
+    assert_eq!(q1_rows[0], q1_rows[2], "{label}: client vs default top-32");
+
+    // q2 — range filter over the clustered column (pruning signal); the
+    // count is exact, so it cross-checks the model directly.
+    let q2 = Query::scan("cb")
+        .filter(Predicate::cmp("val", CmpOp::Lt, 35.0))
+        .aggregate(AggFunc::Count, "val");
+    let Column::F32(vals) = reference.col("val").unwrap() else {
+        unreachable!()
+    };
+    let want = vals.iter().filter(|&&v| (v as f64) < 35.0).count() as f64;
+    for mode in modes {
+        stack.driver.reset_time();
+        let r = stack.driver.execute(&q2, mode).unwrap();
+        if mode.is_none() {
+            sim += r.stats.sim_seconds;
+            bytes += r.stats.bytes_moved;
+            pruned = r.stats.objects_pruned;
+        }
+        assert_eq!(
+            r.aggregates[0], want,
+            "{label}: range count diverged from the model ({mode:?})"
+        );
+    }
+
+    // q3 — full-scan aggregate: count cross-checks the model, mean must
+    // agree bit for bit across the three modes (same partials, same
+    // merge order — the offload-transparency invariant).
+    let q3 = Query::scan("cb")
+        .aggregate(AggFunc::Count, "val")
+        .aggregate(AggFunc::Mean, "val");
+    let mut means = Vec::new();
+    for mode in modes {
+        stack.driver.reset_time();
+        let r = stack.driver.execute(&q3, mode).unwrap();
+        if mode.is_none() {
+            sim += r.stats.sim_seconds;
+            bytes += r.stats.bytes_moved;
+        }
+        assert_eq!(
+            r.aggregates[0],
+            reference.nrows() as f64,
+            "{label}: live count diverged ({mode:?})"
+        );
+        means.push(r.aggregates[1]);
+    }
+    assert!(
+        means[0].to_bits() == means[1].to_bits() && means[0].to_bits() == means[2].to_bits(),
+        "{label}: mean diverged across modes: {means:?}"
+    );
+
+    StageCost {
+        sim,
+        bytes,
+        prefix_reads,
+        pruned,
+    }
+}
+
+fn main() {
+    // The stages below assert on *unforced* trigger behavior; a leaked
+    // SKYHOOK_FORCE_COMPACT=1 would compact away the churn mid-stage.
+    std::env::remove_var("SKYHOOK_FORCE_COMPACT");
+
+    let cfg = Config::from_text("[cluster]\nosds = 4\nreplicas = 1\n").unwrap();
+    let stack = Stack::build(&cfg).unwrap();
+    let rows = 120_000usize;
+    let slab = 8_000usize;
+    let nslabs = 3usize;
+    let base = gen::sensor_table(rows, 33);
+    stack
+        .driver
+        .write_table(
+            "cb",
+            &base,
+            Layout::Col,
+            &PartitionSpec::with_target(256 * 1024).cluster_by("val"),
+            None,
+        )
+        .unwrap();
+    let mut reference = base;
+
+    // ---- stage 0: pre-churn baseline ------------------------------------
+    let c0 = run_stage(&stack, &reference, "baseline");
+
+    // ---- stage 1: churn -------------------------------------------------
+    // Appends and deletes of equal volume: the live row count is back at
+    // 120k, but 24k dead rows ride along under delete vectors and the
+    // three appended slabs are unsorted on val (the clustering claim is
+    // gone). Deletes stay under the auto-compaction threshold so the
+    // degradation is actually measurable.
+    for j in 0..nslabs {
+        let mut extra = gen::sensor_table(slab, 100 + j as u64);
+        let Column::I64(ts) = &mut extra.columns[0] else {
+            unreachable!()
+        };
+        for t in ts.iter_mut() {
+            *t += (rows + j * slab) as i64;
+        }
+        stack.driver.append("cb", &extra, 256 * 1024).unwrap();
+        reference.concat(&extra).unwrap();
+    }
+    let mut to_kill = nslabs * slab;
+    let mut dead: HashSet<i64> = HashSet::new();
+    let (meta, _) = metadata::load_meta(&stack.cluster, 0.0, "cb").unwrap();
+    let names = meta.object_names("cb");
+    for (oi, name) in names.iter().enumerate() {
+        if to_kill == 0 {
+            break;
+        }
+        let raw = stack.cluster.read_object(0.0, name).unwrap().value;
+        let (ob, _) = decode_batch(&raw).unwrap();
+        let k = ob.nrows().min(to_kill);
+        let ids: Vec<u32> = (0..k as u32).collect();
+        stack.driver.delete_rows("cb", oi, &ids).unwrap();
+        let Column::I64(ots) = &ob.columns[0] else {
+            unreachable!()
+        };
+        dead.extend(ots[..k].iter().copied());
+        to_kill -= k;
+    }
+    let Column::I64(rts) = &reference.columns[0] else {
+        unreachable!()
+    };
+    let keep: Vec<bool> = rts.iter().map(|t| !dead.contains(t)).collect();
+    reference = reference.filter(&keep).unwrap();
+    assert_eq!(reference.nrows(), rows, "appends and deletes must balance");
+    let c1 = run_stage(&stack, &reference, "churned");
+
+    // ---- stage 2: compaction --------------------------------------------
+    let rep = stack.driver.compact("cb").unwrap();
+    assert!(rep.objects > 0);
+    let (meta, _) = metadata::load_meta(&stack.cluster, 0.0, "cb").unwrap();
+    let muta = meta.mutability().unwrap();
+    assert!(muta.generation > 0 && muta.tombstones.is_empty());
+    assert_eq!(meta.cluster_column(), Some("val"), "claim restored");
+    let c2 = run_stage(&stack, &reference, "compacted");
+
+    table(
+        "E4f: churn-then-compact — fixed clustered workload (top-32 + range + full agg)",
+        &["stage", "sim seconds", "bytes moved", "prefix reads", "pruned"],
+        &[
+            vec![
+                "baseline".into(),
+                format!("{:.4}", c0.sim),
+                fmt_size(c0.bytes),
+                c0.prefix_reads.to_string(),
+                c0.pruned.to_string(),
+            ],
+            vec![
+                "churned".into(),
+                format!("{:.4}", c1.sim),
+                fmt_size(c1.bytes),
+                c1.prefix_reads.to_string(),
+                c1.pruned.to_string(),
+            ],
+            vec![
+                "compacted".into(),
+                format!("{:.4}", c2.sim),
+                fmt_size(c2.bytes),
+                c2.prefix_reads.to_string(),
+                c2.pruned.to_string(),
+            ],
+        ],
+    );
+
+    // The lifecycle asserts. Churn must cost strictly more than the
+    // baseline; compaction must return to within 10% of it.
+    assert!(
+        c1.sim > c0.sim,
+        "churn must strictly degrade cost: {:.4} vs {:.4}",
+        c1.sim,
+        c0.sim
+    );
+    assert!(
+        c2.sim <= 1.10 * c0.sim,
+        "compaction must return within 10% of baseline: {:.4} vs {:.4}",
+        c2.sim,
+        c0.sim
+    );
+
+    println!("\ne4f_churn OK");
+}

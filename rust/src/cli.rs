@@ -15,6 +15,7 @@
 //!                    [--cluster-by COL]
 //! skyhook-map index  --dataset D --column C
 //! skyhook-map transform --dataset D --layout row|col
+//! skyhook-map compact --dataset D [--if-needed]
 //! skyhook-map inspect                        # datasets + distribution
 //! skyhook-map serve  --requests N            # synthetic load + metrics
 //! ```
@@ -123,6 +124,7 @@ pub fn run(args: &[String]) -> Result<String> {
         "query" => cmd_query(&flags, &mut out)?,
         "index" => cmd_index(&flags, &mut out)?,
         "transform" => cmd_transform(&flags, &mut out)?,
+        "compact" => cmd_compact(&flags, &mut out)?,
         "inspect" => cmd_inspect(&flags, &mut out)?,
         "serve" => cmd_serve(&flags, &mut out)?,
         "help" | "--help" | "-h" => out.push_str(HELP),
@@ -158,7 +160,7 @@ pub const HELP: &str = "\
 skyhook-map — mapping datasets to object storage (paper reproduction)
 
 USAGE:
-  skyhook-map <demo|put|query|index|transform|inspect|serve> [flags]
+  skyhook-map <demo|put|query|index|transform|compact|inspect|serve> [flags]
 
 FLAGS:
   --config FILE     TOML config (see examples in README)
@@ -192,6 +194,9 @@ FLAGS:
   --force-mode M    pin every sub-query to one side: push|client
                     (default: the planner picks the cheaper side per object)
   --client-side     shorthand for --force-mode client
+  --if-needed       `compact` only when the driver's thresholds say so
+                    (tombstone fraction or unsorted row-group fraction);
+                    without it, compaction is unconditional
   --requests N      synthetic requests for `serve`
   --concurrency N   client threads for `serve` (default 1): requests are
                     issued through the router's query-admission gate from
@@ -477,6 +482,42 @@ fn cmd_transform(f: &Flags, out: &mut String) -> Result<()> {
     Ok(())
 }
 
+fn cmd_compact(f: &Flags, out: &mut String) -> Result<()> {
+    let cfg = build_config(f)?;
+    let stack = Stack::build(&cfg)?;
+    let dataset = require_dataset(f)?;
+    hydrate(&stack, &cfg, &dataset, Layout::Col, out)?;
+    let before = metadata::load_meta(&stack.cluster, 0.0, &dataset)?
+        .0
+        .mutability()
+        .map(|m| m.total_tombstones())
+        .unwrap_or(0);
+    if f.has("if-needed") {
+        if !stack.driver.maybe_compact(&dataset)? {
+            let _ = writeln!(
+                out,
+                "compaction not needed for {dataset:?} (thresholds not met)"
+            );
+            return Ok(());
+        }
+    } else {
+        stack.driver.compact(&dataset)?;
+    }
+    let (meta, _) = metadata::load_meta(&stack.cluster, 0.0, &dataset)?;
+    let m = meta
+        .mutability()
+        .ok_or_else(|| Error::Query(format!("{dataset} is not a table dataset")))?;
+    let _ = writeln!(
+        out,
+        "compacted {dataset:?}: generation {}, {} objects, {} live rows, {} tombstones dropped",
+        m.generation,
+        meta.object_names(&dataset).len(),
+        meta.total_items(),
+        before
+    );
+    Ok(())
+}
+
 fn cmd_inspect(f: &Flags, out: &mut String) -> Result<()> {
     let cfg = build_config(f)?;
     let stack = Stack::build(&cfg)?;
@@ -584,6 +625,35 @@ fn cmd_serve(f: &Flags, out: &mut String) -> Result<()> {
         Ok(())
     })?;
     let dt = start.elapsed().as_secs_f64();
+    // A serving deployment is also the write path: route a mutation mix
+    // through the router once the query storm drains. Every mutation
+    // consults the driver's compaction thresholds on the way out (and
+    // SKYHOOK_FORCE_COMPACT=1 forces a re-clustering pass right here),
+    // so this is the serve-integrated compaction trigger.
+    stack.router.handle(Request::Append {
+        dataset: "served".into(),
+        batch: gen::sensor_table(2_000, seed ^ 0xbeef),
+        target_bytes: 128 * 1024,
+    })?;
+    stack.router.handle(Request::Delete {
+        dataset: "served".into(),
+        object_index: 0,
+        rows: (0..64).collect(),
+    })?;
+    let live = match stack.router.handle(Request::Query {
+        query: Query::scan("served").aggregate(crate::skyhook::AggFunc::Count, "val"),
+        force_mode: None,
+        tenant: None,
+    })? {
+        Response::Query(r) => r.aggregates[0],
+        _ => unreachable!(),
+    };
+    let _ = writeln!(
+        out,
+        "mutations: appended 2000 rows, tombstoned 64, compactions {}, live rows {}",
+        router.metrics.counter("driver.compactions"),
+        live
+    );
     let _ = writeln!(
         out,
         "served {requests} requests in {dt:.2}s ({:.1} req/s, {concurrency} threads)",
@@ -699,10 +769,37 @@ mod tests {
         assert!(out.contains("4 threads"), "{out}");
         assert!(out.contains("serving: rejected "), "{out}");
         assert!(out.contains("shared-scan hits"), "{out}");
+        // The post-storm mutation mix routed through the router and the
+        // query afterwards sees exactly the mutated row count — whether
+        // or not SKYHOOK_FORCE_COMPACT=1 compacted in between.
+        assert!(out.contains("live rows 51936"), "{out}");
         // All credits come back and nothing is left in flight once the
         // burst drains.
         assert!(out.contains("in-flight now 0"), "{out}");
         assert!(run(&args(&["serve", "--requests", "4", "--concurrency", "0"])).is_err());
+    }
+
+    #[test]
+    fn compact_command_reports_generation() {
+        let out = run(&args(&[
+            "compact",
+            "--dataset",
+            "d",
+            "--cluster-by",
+            "val",
+        ]))
+        .unwrap();
+        assert!(out.contains("generation 1"), "{out}");
+        assert!(out.contains("20000 live rows"), "{out}");
+        // A freshly hydrated dataset never meets the thresholds.
+        let out = run(&args(&["compact", "--dataset", "d", "--if-needed"])).unwrap();
+        let forced = std::env::var("SKYHOOK_FORCE_COMPACT").map_or(false, |v| v == "1");
+        if forced {
+            assert!(out.contains("generation 1"), "{out}");
+        } else {
+            assert!(out.contains("not needed"), "{out}");
+        }
+        assert!(run(&args(&["compact"])).is_err(), "--dataset required");
     }
 
     #[test]

@@ -272,6 +272,7 @@ impl Ingestor {
             localities,
             cluster_by: self.cfg.cluster_by.clone().unwrap_or_default(),
             index_cols: self.cfg.index_cols.clone(),
+            muta: Default::default(),
         };
         let sim = metadata::save_meta(&self.cluster, s.sim_finish, &self.dataset, &meta, false)?;
         Ok(IngestReport {

@@ -45,6 +45,21 @@ pub enum Request {
     BuildIndex { dataset: String, column: String },
     /// Physical-design transform.
     Transform { dataset: String, target: Layout },
+    /// Tombstone rows of one row-group object (object-local row ids).
+    Delete {
+        dataset: String,
+        object_index: usize,
+        rows: Vec<u32>,
+    },
+    /// Append rows to an existing dataset as new row groups.
+    Append {
+        dataset: String,
+        batch: Batch,
+        target_bytes: u64,
+    },
+    /// Re-clustering compaction (explicit; the threshold-triggered kind
+    /// rides the Delete/Append paths automatically).
+    Compact { dataset: String },
 }
 
 /// Response union.
@@ -53,6 +68,9 @@ pub enum Response {
     Query(QueryResult),
     Index(u64),
     Transform(WriteReport),
+    /// Tombstone count of the targeted object after the delete.
+    Delete(u64),
+    Compact(WriteReport),
 }
 
 /// The router.
@@ -187,6 +205,51 @@ impl Router {
                 self.metrics.incr("router.transforms", 1);
                 let rep = self.driver.transform_layout(&dataset, target)?;
                 Response::Transform(rep)
+            }
+            Request::Delete {
+                dataset,
+                object_index,
+                rows,
+            } => {
+                // Mutations are writes for admission purposes.
+                let _credit = self.write_gate.acquire(1);
+                self.metrics.incr("router.deletes", 1);
+                self.metrics.incr("router.delete_rows", rows.len() as u64);
+                let n = self.driver.delete_rows(&dataset, object_index, &rows)?;
+                // `delete_rows` may have tripped the compaction threshold;
+                // keep the gauge current either way.
+                self.metrics
+                    .set("driver.compactions", self.driver.compactions());
+                self.metrics
+                    .observe("router.delete_latency", start.elapsed().as_secs_f64());
+                Response::Delete(n)
+            }
+            Request::Append {
+                dataset,
+                batch,
+                target_bytes,
+            } => {
+                let _credit = self.write_gate.acquire(1);
+                self.metrics.incr("router.appends", 1);
+                self.metrics
+                    .incr("router.append_rows", batch.nrows() as u64);
+                let rep = self.driver.append(&dataset, &batch, target_bytes)?;
+                self.metrics.incr("router.write_bytes", rep.bytes_written);
+                self.metrics
+                    .set("driver.compactions", self.driver.compactions());
+                self.metrics
+                    .observe("router.append_latency", start.elapsed().as_secs_f64());
+                Response::Write(rep)
+            }
+            Request::Compact { dataset } => {
+                let _credit = self.write_gate.acquire(1);
+                self.metrics.incr("router.compacts", 1);
+                let rep = self.driver.compact(&dataset)?;
+                self.metrics
+                    .set("driver.compactions", self.driver.compactions());
+                self.metrics
+                    .observe("router.compact_latency", start.elapsed().as_secs_f64());
+                Response::Compact(rep)
             }
         };
         Ok(out)
@@ -398,6 +461,87 @@ mod tests {
         assert!(r.handle(bad).is_err());
         assert_eq!(r.metrics.counter("router.queries_inflight"), 0);
         assert_eq!(r.query_credits_available(), 1);
+    }
+
+    #[test]
+    fn mutations_route_through_router_and_leave_metrics() {
+        let r = router();
+        let batch = gen::sensor_table(1200, 5);
+        r.handle(Request::WriteTable {
+            dataset: "m".into(),
+            batch: batch.clone(),
+            layout: Layout::Col,
+            spec: PartitionSpec::with_target(8 * 1024),
+        })
+        .unwrap();
+
+        // Delete a handful of rows from the first object.
+        let Response::Delete(n) = r
+            .handle(Request::Delete {
+                dataset: "m".into(),
+                object_index: 0,
+                rows: vec![0, 1, 2],
+            })
+            .unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(n, 3);
+        assert_eq!(r.metrics.counter("router.deletes"), 1);
+        assert_eq!(r.metrics.counter("router.delete_rows"), 3);
+
+        // Append a fresh slab of rows; the count visible to queries grows.
+        let extra = gen::sensor_table(300, 77);
+        let Response::Write(rep) = r
+            .handle(Request::Append {
+                dataset: "m".into(),
+                batch: extra,
+                target_bytes: 8 * 1024,
+            })
+            .unwrap()
+        else {
+            panic!()
+        };
+        assert!(rep.objects > 0);
+        assert_eq!(r.metrics.counter("router.appends"), 1);
+        assert_eq!(r.metrics.counter("router.append_rows"), 300);
+
+        let Response::Query(q) = r
+            .handle(Request::Query {
+                query: Query::scan("m").aggregate(AggFunc::Count, "val"),
+                force_mode: None,
+                tenant: None,
+            })
+            .unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(q.aggregates[0], (1200 - 3 + 300) as f64);
+
+        // Explicit compaction drops the tombstoned rows for good and the
+        // gauge reflects the driver's lifetime compaction count.
+        let Response::Compact(rep) = r.handle(Request::Compact { dataset: "m".into() }).unwrap()
+        else {
+            panic!()
+        };
+        assert!(rep.objects > 0);
+        assert_eq!(r.metrics.counter("router.compacts"), 1);
+        assert!(r.metrics.counter("driver.compactions") >= 1);
+
+        let Response::Query(q) = r
+            .handle(Request::Query {
+                query: Query::scan("m").aggregate(AggFunc::Count, "val"),
+                force_mode: None,
+                tenant: None,
+            })
+            .unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(q.aggregates[0], (1200 - 3 + 300) as f64);
+
+        // Mutation credits all came back.
+        assert_eq!(r.write_credits_available(), 4);
     }
 
     #[test]

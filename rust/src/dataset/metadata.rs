@@ -526,6 +526,54 @@ pub struct RowGroupMeta {
     pub stats: Vec<ColumnStats>,
 }
 
+/// Mutability state of a table dataset — everything delete vectors,
+/// row-group appends, and re-clustering compaction track beyond the
+/// write-once fields. Kept in one struct so a default-valued instance
+/// means "write-once dataset, nothing to see": metadata then encodes as
+/// kind 5, bit-identical to what pre-mutability writers produced.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Mutability {
+    /// Compaction generation. Data objects live under
+    /// [`naming::table_object_gen`]`(name, generation, i)`; generation 0
+    /// is the legacy `{dataset}/t/…` namespace. The compactor writes the
+    /// next generation's objects beside the current ones and bumping
+    /// this field in the committed metadata is the *single atomic flip*
+    /// that makes them visible — until it lands, readers only ever see
+    /// the old, complete generation.
+    pub generation: u64,
+    /// Per-row-group tombstone counts, parallel to `row_groups`; empty
+    /// means none anywhere. Maintained by `Driver::delete_rows` next to
+    /// the per-object `dv1/` bitmaps so the planner can discount
+    /// selectivity estimates (and skip delete-vector round trips for
+    /// clean objects) without touching the kvstore.
+    pub tombstones: Vec<u64>,
+    /// The column this dataset *wants* to be clustered by. Appends break
+    /// the `cluster_by` promise, so they clear it rather than lie to the
+    /// read path — but preserve the intent here, and compaction re-sorts
+    /// by it and restores `cluster_by`.
+    pub compact_by: String,
+}
+
+impl Mutability {
+    /// True when this is indistinguishable from a write-once dataset
+    /// (encode may use the legacy kind).
+    pub fn is_default(&self) -> bool {
+        self.generation == 0
+            && self.compact_by.is_empty()
+            && self.tombstones.iter().all(|&t| t == 0)
+    }
+
+    /// Tombstoned rows of row group `i` (0 when untracked).
+    pub fn tombstones_of(&self, i: usize) -> u64 {
+        self.tombstones.get(i).copied().unwrap_or(0)
+    }
+
+    /// Total tombstoned rows across the dataset.
+    pub fn total_tombstones(&self) -> u64 {
+        self.tombstones.iter().sum()
+    }
+}
+
 /// Metadata of one dataset.
 #[derive(Clone, Debug, PartialEq)]
 pub enum DatasetMeta {
@@ -550,6 +598,11 @@ pub enum DatasetMeta {
         /// index is never stale. The planner only considers the
         /// IndexScan access path for columns listed here.
         index_cols: Vec<String>,
+        /// Mutability state (compaction generation, tombstone counts,
+        /// re-cluster target). Default for write-once datasets, which
+        /// then encode as legacy kind 5; non-default state encodes as
+        /// kind 7.
+        muta: Mutability,
     },
     Array {
         space: Dataspace,
@@ -569,10 +622,11 @@ impl DatasetMeta {
             DatasetMeta::Table {
                 row_groups,
                 localities,
+                muta,
                 ..
             } => (0..row_groups.len() as u64)
                 .map(|i| {
-                    let base = naming::table_object(name, i);
+                    let base = naming::table_object_gen(name, muta.generation, i);
                     let loc = &localities[i as usize];
                     if loc.is_empty() {
                         base
@@ -601,6 +655,14 @@ impl DatasetMeta {
         }
     }
 
+    /// Mutation state (tables only; arrays are immutable).
+    pub fn mutability(&self) -> Option<&Mutability> {
+        match self {
+            DatasetMeta::Table { muta, .. } => Some(muta),
+            DatasetMeta::Array { .. } => None,
+        }
+    }
+
     /// Total logical rows (tables) or elements (arrays).
     pub fn total_items(&self) -> u64 {
         match self {
@@ -622,14 +684,17 @@ impl DatasetMeta {
                 localities,
                 cluster_by,
                 index_cols,
+                muta,
             } => {
                 // Kind 5: kind 4 (per-group zone maps with NaN counts and
                 // sortedness markers + the clustered column) plus the
                 // dataset's indexed-column list (kind 3 lacks
                 // markers/clustering, kind 2 is the min/max-only
                 // encoding, kind 0 the legacy stats-less one; all still
-                // decodable).
-                w.u8(5);
+                // decodable). Kind 7 is kind 5 plus the mutability
+                // trailer; a dataset that was never mutated keeps its
+                // kind-5 bytes bit-identical.
+                w.u8(if muta.is_default() { 5 } else { 7 });
                 w.bytes(&schema.encode());
                 w.u8(match layout {
                     Layout::Row => 0,
@@ -651,6 +716,14 @@ impl DatasetMeta {
                 w.u32(index_cols.len() as u32);
                 for c in index_cols {
                     w.str(c);
+                }
+                if !muta.is_default() {
+                    w.u64(muta.generation);
+                    w.str(&muta.compact_by);
+                    w.u32(muta.tombstones.len() as u32);
+                    for &t in &muta.tombstones {
+                        w.u64(t);
+                    }
                 }
             }
             DatasetMeta::Array {
@@ -685,7 +758,7 @@ impl DatasetMeta {
             return Err(Error::Corrupt("bad meta magic".into()));
         }
         match r.u8()? {
-            kind if kind == 0 || kind == 2 || kind == 3 || kind == 4 || kind == 5 => {
+            kind if kind == 0 || kind == 2 || kind == 3 || kind == 4 || kind == 5 || kind == 7 => {
                 let schema = TableSchema::decode(r.bytes()?)?;
                 let layout = match r.u8()? {
                     0 => Layout::Row,
@@ -708,7 +781,7 @@ impl DatasetMeta {
                         let mut stats = Vec::with_capacity(k);
                         for _ in 0..k {
                             stats.push(match kind {
-                                4 | 5 => ColumnStats::decode_from(&mut r)?,
+                                4 | 5 | 7 => ColumnStats::decode_from(&mut r)?,
                                 3 => ColumnStats::decode_v2_from(&mut r)?,
                                 _ => ColumnStats::decode_legacy_from(&mut r)?,
                             });
@@ -741,6 +814,25 @@ impl DatasetMeta {
                 } else {
                     Vec::new()
                 };
+                let muta = if kind == 7 {
+                    let generation = r.u64()?;
+                    let compact_by = r.str()?.to_string();
+                    let k = r.u32()? as usize;
+                    if k > 10_000_000 {
+                        return Err(Error::Corrupt("absurd tombstone count".into()));
+                    }
+                    let mut tombstones = Vec::with_capacity(k);
+                    for _ in 0..k {
+                        tombstones.push(r.u64()?);
+                    }
+                    Mutability {
+                        generation,
+                        tombstones,
+                        compact_by,
+                    }
+                } else {
+                    Mutability::default()
+                };
                 Ok(DatasetMeta::Table {
                     schema,
                     layout,
@@ -748,6 +840,7 @@ impl DatasetMeta {
                     localities,
                     cluster_by,
                     index_cols,
+                    muta,
                 })
             }
             kind @ (1 | 6) => {
@@ -904,6 +997,111 @@ pub fn verify_sortedness(cluster: &Cluster, dataset: &str) -> Result<Vec<String>
     Ok(findings)
 }
 
+/// Debug re-scan for secondary indexes, mirroring [`verify_sortedness`]:
+/// prove every declared `ix1/` index of `dataset` agrees exactly with
+/// the rows of its object — one posting per row, keyed by the row's
+/// actual value under the dtype's order-preserving encoding, no extras.
+/// Returns one human-readable finding per inconsistency.
+///
+/// The invariant this guards: an OSD death mid-indexed-ingest (or
+/// mid-compaction) may abort a dataset, but a *surviving, committed*
+/// object must never carry postings for rows it does not have — stale
+/// postings would let an index probe resurrect rows or, worse, pre-mask
+/// in garbage row ids.
+pub fn verify_index(cluster: &Cluster, dataset: &str) -> Result<Vec<String>> {
+    use super::layout;
+    use crate::skyhook::extension::{index_key_f32, index_key_i64};
+    let (meta, _) = load_meta(cluster, 0.0, dataset)?;
+    let DatasetMeta::Table { index_cols, .. } = &meta else {
+        return Ok(Vec::new());
+    };
+    let mut findings = Vec::new();
+    if index_cols.is_empty() {
+        return Ok(findings);
+    }
+    for name in meta.object_names(dataset) {
+        let raw = match cluster.read_object(0.0, &name) {
+            Ok(t) => t.value,
+            Err(e) => {
+                findings.push(format!("{name}: unreadable ({e})"));
+                continue;
+            }
+        };
+        let batch = match layout::decode_batch(&raw) {
+            Ok((b, _)) => b,
+            Err(e) => {
+                findings.push(format!("{name}: undecodable ({e})"));
+                continue;
+            }
+        };
+        for col in index_cols {
+            // Expected posting set, recomputed from the decoded rows:
+            // value encoding + big-endian row id, exactly what
+            // `skyhook.build_index` writes.
+            let mut want: Vec<(Vec<u8>, u32)> = Vec::with_capacity(batch.nrows());
+            match batch.col(col) {
+                Ok(Column::I64(v)) => {
+                    for (row, &x) in v.iter().enumerate() {
+                        let mut k = index_key_i64(x).to_vec();
+                        k.extend_from_slice(&(row as u32).to_be_bytes());
+                        want.push((k, row as u32));
+                    }
+                }
+                Ok(Column::F32(v)) => {
+                    for (row, &x) in v.iter().enumerate() {
+                        let mut k = index_key_f32(x).to_vec();
+                        k.extend_from_slice(&(row as u32).to_be_bytes());
+                        want.push((k, row as u32));
+                    }
+                }
+                Ok(_) => {
+                    findings.push(format!("{name}: index column {col:?} has unindexable dtype"));
+                    continue;
+                }
+                Err(_) => {
+                    findings.push(format!("{name}: index column {col:?} missing from data"));
+                    continue;
+                }
+            }
+            let mut arg = ByteWriter::new();
+            arg.str(col);
+            let out = match cluster.call(0.0, &name, "skyhook", "dump_index", &arg.finish()) {
+                Ok(t) => t.value,
+                Err(e) => {
+                    findings.push(format!("{name}: ix1/{col} dump failed ({e})"));
+                    continue;
+                }
+            };
+            let mut got: Vec<(Vec<u8>, u32)> = Vec::new();
+            let parse = (|| -> Result<()> {
+                let mut r = ByteReader::new(&out);
+                let n = r.u32()? as usize;
+                for _ in 0..n {
+                    let klen = r.u32()? as usize;
+                    let suffix = r.raw(klen)?.to_vec();
+                    got.push((suffix, r.u32()?));
+                }
+                Ok(())
+            })();
+            if let Err(e) = parse {
+                findings.push(format!("{name}: ix1/{col} dump undecodable ({e})"));
+                continue;
+            }
+            want.sort();
+            got.sort();
+            if want != got {
+                findings.push(format!(
+                    "{name}: ix1/{col} postings disagree with data \
+                     ({} stored vs {} expected)",
+                    got.len(),
+                    want.len()
+                ));
+            }
+        }
+    }
+    Ok(findings)
+}
+
 /// List datasets present in the cluster (by scanning for `_meta` objects).
 pub fn list_datasets(cluster: &Cluster) -> Vec<String> {
     cluster
@@ -951,6 +1149,7 @@ mod tests {
             localities: vec![String::new(), "grp1".into()],
             cluster_by: "b".into(),
             index_cols: vec!["b".into()],
+            muta: Mutability::default(),
         }
     }
 
@@ -958,6 +1157,59 @@ mod tests {
     fn table_meta_roundtrip() {
         let m = table_meta();
         assert_eq!(DatasetMeta::decode(&m.encode()).unwrap(), m);
+        // Never-mutated datasets keep the pre-mutability wire kind (5) so
+        // their encoded bytes are identical to what older writers produced.
+        assert_eq!(m.encode()[4], 5);
+    }
+
+    #[test]
+    fn mutability_roundtrips_as_kind_7() {
+        let DatasetMeta::Table {
+            schema,
+            layout,
+            row_groups,
+            localities,
+            cluster_by,
+            index_cols,
+            ..
+        } = table_meta()
+        else {
+            unreachable!()
+        };
+        let m = DatasetMeta::Table {
+            schema,
+            layout,
+            row_groups,
+            localities,
+            cluster_by,
+            index_cols,
+            muta: Mutability {
+                generation: 2,
+                tombstones: vec![5, 0],
+                compact_by: "b".into(),
+            },
+        };
+        let enc = m.encode();
+        assert_eq!(enc[4], 7, "non-default mutability promotes to kind 7");
+        assert_eq!(DatasetMeta::decode(&enc).unwrap(), m);
+        // Generation-aware object names: gen 0 uses the legacy namespace,
+        // gen N > 0 moves row groups under `{ds}/gN/t/…`.
+        let names = m.object_names("d");
+        assert_eq!(names[0], "d/g2/t/00000000");
+        assert_eq!(names[1], "grp1#d/g2/t/00000001");
+        // Tombstone accessors tolerate short vectors (appended groups).
+        if let DatasetMeta::Table { muta, .. } = &m {
+            assert_eq!(muta.tombstones_of(0), 5);
+            assert_eq!(muta.tombstones_of(9), 0);
+            assert_eq!(muta.total_tombstones(), 5);
+            assert!(!muta.is_default());
+        }
+        assert!(Mutability {
+            generation: 0,
+            tombstones: vec![0, 0, 0],
+            compact_by: String::new(),
+        }
+        .is_default());
     }
 
     #[test]
@@ -1295,6 +1547,7 @@ mod tests {
             localities: vec![String::new()],
             cluster_by: "k".into(),
             index_cols: vec![],
+            muta: Mutability::default(),
         };
         save_meta(&c, 0.0, "d", &meta, false).unwrap();
         assert_eq!(verify_sortedness(&c, "d").unwrap(), Vec::<String>::new());
@@ -1436,6 +1689,9 @@ mod tests {
     #[test]
     fn decode_rejects_garbage() {
         assert!(DatasetMeta::decode(b"????").is_err());
+        // Kind 8 is unassigned (7 is now the mutability trailer); a bare
+        // kind-7 header still fails on truncation.
+        assert!(DatasetMeta::decode(b"SKYM\x08").is_err());
         assert!(DatasetMeta::decode(b"SKYM\x07").is_err());
         let m = table_meta().encode();
         assert!(DatasetMeta::decode(&m[..m.len() - 3]).is_err());

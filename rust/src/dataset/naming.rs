@@ -20,6 +20,20 @@ pub fn table_object(dataset: &str, index: u64) -> String {
     format!("{dataset}/t/{index:08}")
 }
 
+/// Name of a table row-group object under a compaction generation.
+/// Generation 0 is the legacy namespace (`{dataset}/t/…`, bit-identical
+/// to [`table_object`]); generation N > 0 lives under `{dataset}/gN/t/…`
+/// so a compactor can write the next generation next to the current one
+/// and flip readers over atomically with the metadata commit.
+pub fn table_object_gen(dataset: &str, generation: u64, index: u64) -> String {
+    debug_assert!(index <= MAX_INDEX);
+    if generation == 0 {
+        table_object(dataset, index)
+    } else {
+        format!("{dataset}/g{generation}/t/{index:08}")
+    }
+}
+
 /// Name of an array chunk object.
 pub fn array_object(dataset: &str, index: u64) -> String {
     debug_assert!(index <= MAX_INDEX);
@@ -78,6 +92,15 @@ mod tests {
         };
         names.sort_by_key(|n| parse_object(n).unwrap().2);
         assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn generation_names() {
+        // Generation 0 is bit-identical to the legacy namespace.
+        assert_eq!(table_object_gen("d", 0, 7), table_object("d", 7));
+        assert_eq!(table_object_gen("d", 3, 7), "d/g3/t/00000007");
+        // Distinct generations never collide.
+        assert_ne!(table_object_gen("d", 1, 0), table_object_gen("d", 2, 0));
     }
 
     #[test]

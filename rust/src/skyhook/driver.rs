@@ -134,6 +134,9 @@ pub struct Driver {
     /// meter real fetches.
     scan_cache: Arc<worker::ScanCache>,
     active_queries: std::sync::atomic::AtomicUsize,
+    /// Lifetime re-clustering compactions this driver committed (feeds
+    /// the serve layer's `driver.compactions` gauge).
+    compactions: std::sync::atomic::AtomicU64,
 }
 
 /// Counts one query out of [`Driver::active_queries`] on drop (panic-
@@ -166,7 +169,13 @@ impl Driver {
             calibration: std::sync::RwLock::new(CalibrationMap::default()),
             scan_cache: Arc::new(worker::ScanCache::new()),
             active_queries: std::sync::atomic::AtomicUsize::new(0),
+            compactions: std::sync::atomic::AtomicU64::new(0),
         }
+    }
+
+    /// Lifetime compactions committed by this driver.
+    pub fn compactions(&self) -> u64 {
+        self.compactions.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     pub fn cluster(&self) -> &Arc<Cluster> {
@@ -278,6 +287,7 @@ impl Driver {
             localities,
             cluster_by: spec.cluster_by.clone().unwrap_or_default(),
             index_cols: spec.index_cols.clone(),
+            muta: Default::default(),
         };
         let t = metadata::save_meta(&self.cluster, sim_finish, dataset, &meta, false)?;
         Ok(WriteReport {
@@ -865,6 +875,7 @@ impl Driver {
             localities,
             cluster_by,
             index_cols,
+            muta,
         } = meta
         else {
             unreachable!("table kind checked above");
@@ -917,6 +928,7 @@ impl Driver {
             localities,
             cluster_by,
             index_cols,
+            muta,
         };
         metadata::save_meta(&self.cluster, sim, dataset, &meta, true)?;
         Ok(WriteReport {
@@ -925,6 +937,336 @@ impl Driver {
             sim_seconds: sim,
             wall_seconds: wall.elapsed().as_secs_f64(),
         })
+    }
+
+    // ---- mutation path ----------------------------------------------------
+
+    /// Tombstone `rows` (object-local row ids) of row group
+    /// `object_index`: stamps the object's `dv1/` delete-vector bitmap in
+    /// its OSD's kvstore and records the handler's authoritative popcount
+    /// in the dataset metadata, so the planner can discount selectivity
+    /// estimates and clean objects skip the delete-vector round trip
+    /// entirely. Idempotent — re-deleting the same rows changes nothing.
+    /// Returns the object's total tombstone count.
+    pub fn delete_rows(&self, dataset: &str, object_index: usize, rows: &[u32]) -> Result<u64> {
+        // The cluster mutation epoch invalidates shared scans on its own;
+        // clearing here as well keeps every Driver writer on the same
+        // choke point.
+        self.scan_cache.clear();
+        let (mut meta, _) = metadata::load_meta(&self.cluster, 0.0, dataset)?;
+        let n_groups = match &meta {
+            DatasetMeta::Table { row_groups, .. } => row_groups.len(),
+            _ => {
+                return Err(Error::Query(format!(
+                    "{dataset} is an array dataset; delete_rows expects a table"
+                )))
+            }
+        };
+        if object_index >= n_groups {
+            return Err(Error::Invalid(format!(
+                "row group {object_index} out of {n_groups}"
+            )));
+        }
+        let name = meta.object_names(dataset).swap_remove(object_index);
+        let mut w = crate::util::bytes::ByteWriter::new();
+        w.u32(rows.len() as u32);
+        for &r in rows {
+            w.u32(r);
+        }
+        let t = self
+            .cluster
+            .call(0.0, &name, "skyhook", "delete_rows", &w.finish())?;
+        let popcount = u64::from_le_bytes(
+            t.value
+                .as_slice()
+                .try_into()
+                .map_err(|_| Error::Corrupt("bad delete_rows reply".into()))?,
+        );
+        let DatasetMeta::Table { muta, .. } = &mut meta else {
+            unreachable!("table kind checked above");
+        };
+        if muta.tombstones.len() < n_groups {
+            muta.tombstones.resize(n_groups, 0);
+        }
+        muta.tombstones[object_index] = popcount;
+        metadata::save_meta(&self.cluster, t.finish, dataset, &meta, true)?;
+        self.maybe_compact(dataset)?;
+        Ok(popcount)
+    }
+
+    /// Append `batch` to an existing table dataset as new row groups,
+    /// through the same partition→write→index fan-out as the initial
+    /// ingest. Appended objects land after the existing groups in the
+    /// dataset's *current* generation namespace; their zone maps and
+    /// per-column sortedness markers are computed from the appended rows,
+    /// so per-object markers stay truthful. The dataset-level
+    /// `cluster_by` claim however is provably broken by any append (new
+    /// rows do not extend the global sort), so it is cleared rather than
+    /// lie to the read path — the intent moves to `muta.compact_by` and
+    /// compaction restores it.
+    pub fn append(&self, dataset: &str, batch: &Batch, target_bytes: u64) -> Result<WriteReport> {
+        self.scan_cache.clear();
+        let wall = Instant::now();
+        let (meta, _) = metadata::load_meta(&self.cluster, 0.0, dataset)?;
+        let DatasetMeta::Table {
+            schema,
+            layout,
+            mut row_groups,
+            mut localities,
+            cluster_by,
+            index_cols,
+            mut muta,
+        } = meta
+        else {
+            return Err(Error::Query(format!(
+                "{dataset} is an array dataset; append expects a table"
+            )));
+        };
+        if batch.schema != schema {
+            return Err(Error::Query(format!("append schema mismatch for {dataset}")));
+        }
+        if batch.nrows() == 0 {
+            return Ok(WriteReport {
+                objects: 0,
+                bytes_written: 0,
+                sim_seconds: 0.0,
+                wall_seconds: wall.elapsed().as_secs_f64(),
+            });
+        }
+        let groups = PartitionSpec::with_target(target_bytes).partition(batch)?;
+        let base = row_groups.len();
+        let cluster = Arc::clone(&self.cluster);
+        let items: Vec<(usize, Batch, String)> = groups
+            .into_iter()
+            .enumerate()
+            .map(|(i, g)| {
+                let name = naming::table_object_gen(dataset, muta.generation, (base + i) as u64);
+                (i, g, name)
+            })
+            .collect();
+        let objects = items.len();
+        let worker_cpus = self.worker_cpus.clone();
+        let nw = worker_cpus.len();
+        let rebuild_cols = index_cols.clone();
+        let results: Vec<Result<(u64, u64, f64, Vec<ColumnStats>)>> =
+            self.pool.map(items, move |(i, g, name)| {
+                let cpu = &worker_cpus[i % nw];
+                let (bytes, mut finish, stats) =
+                    worker::write_row_group(&cluster, &name, &g, layout, 0.0, cpu)?;
+                // Declared indexes ride the append fan-out exactly like
+                // the ingest one: appended objects are probe-able the
+                // moment the dataset metadata lands.
+                for col in &rebuild_cols {
+                    let mut w = crate::util::bytes::ByteWriter::new();
+                    w.str(col);
+                    let t = cluster.call(finish, &name, "skyhook", "build_index", &w.finish())?;
+                    finish = finish.max(t.finish);
+                }
+                Ok((g.nrows() as u64, bytes, finish, stats))
+            });
+        let mut bytes_written = 0u64;
+        let mut sim_finish: f64 = 0.0;
+        for r in results {
+            let (rows, bytes, finish, stats) = r?;
+            row_groups.push(RowGroupMeta { rows, bytes, stats });
+            localities.push(String::new());
+            bytes_written += bytes;
+            sim_finish = sim_finish.max(finish);
+        }
+        if !muta.tombstones.is_empty() {
+            muta.tombstones.resize(row_groups.len(), 0);
+        }
+        if !cluster_by.is_empty() {
+            muta.compact_by = cluster_by;
+        }
+        let meta = DatasetMeta::Table {
+            schema,
+            layout,
+            row_groups,
+            localities,
+            cluster_by: String::new(),
+            index_cols,
+            muta,
+        };
+        let t = metadata::save_meta(&self.cluster, sim_finish, dataset, &meta, true)?;
+        self.maybe_compact(dataset)?;
+        Ok(WriteReport {
+            objects,
+            bytes_written,
+            sim_seconds: t,
+            wall_seconds: wall.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Re-clustering compaction: rewrite the dataset as generation N+1 —
+    /// tombstoned rows dropped, rows re-sorted by the preserved
+    /// `compact_by` intent (or the current `cluster_by`), fresh zone maps
+    /// and sortedness markers stamped from the rewritten rows, declared
+    /// `ix1/` indexes rebuilt per object. The new generation's objects
+    /// are written *beside* the old ones under a distinct namespace, and
+    /// the single metadata overwrite at the end is the commit point: an
+    /// OSD death anywhere before it leaves the old generation fully
+    /// readable with the metadata still pointing at it, so no reader can
+    /// ever observe a half-compacted dataset. Superseded objects are
+    /// deleted best-effort after the commit.
+    pub fn compact(&self, dataset: &str) -> Result<WriteReport> {
+        self.scan_cache.clear();
+        let wall = Instant::now();
+        let (meta, _) = metadata::load_meta(&self.cluster, 0.0, dataset)?;
+        let old_names = meta.object_names(dataset);
+        let DatasetMeta::Table {
+            schema,
+            layout,
+            row_groups,
+            cluster_by,
+            index_cols,
+            muta,
+            ..
+        } = meta
+        else {
+            return Err(Error::Query(format!(
+                "{dataset} is an array dataset; compact expects a table"
+            )));
+        };
+        // Gather every live row client-side — object bytes plus the
+        // object's delete vector. Reads only: the old generation stays
+        // bit-identical until the commit below.
+        let mut live = Batch::empty(&schema);
+        let mut at = 0.0f64;
+        for name in &old_names {
+            let t = self.cluster.read_object(at, name)?;
+            at = t.finish;
+            let (mut b, _) = crate::dataset::layout::decode_batch(&t.value)?;
+            let dv = self.cluster.call(at, name, "skyhook", "read_dv", &[])?;
+            at = dv.finish;
+            if !dv.value.is_empty() {
+                let deleted = super::extension::decode_dv(&dv.value)?;
+                let keep: Vec<bool> = deleted.iter().map(|&d| !d).collect();
+                b = b.filter(&keep)?;
+            }
+            live.concat(&b)?;
+        }
+        let sort_key = if !muta.compact_by.is_empty() {
+            muta.compact_by.clone()
+        } else {
+            cluster_by
+        };
+        // Keep the incumbent per-object sizing.
+        let total_bytes: u64 = row_groups.iter().map(|g| g.bytes).sum();
+        let target = (total_bytes / row_groups.len().max(1) as u64).max(1024);
+        let mut spec = PartitionSpec::with_target(target);
+        if !sort_key.is_empty() {
+            spec.cluster_by = Some(sort_key.clone());
+        }
+        let groups = if live.nrows() == 0 {
+            Vec::new()
+        } else {
+            spec.partition(&live)?
+        };
+        let next_gen = muta.generation + 1;
+        let cluster = Arc::clone(&self.cluster);
+        let items: Vec<(usize, Batch, String)> = groups
+            .into_iter()
+            .enumerate()
+            .map(|(i, g)| {
+                let name = naming::table_object_gen(dataset, next_gen, i as u64);
+                (i, g, name)
+            })
+            .collect();
+        let objects = items.len();
+        let worker_cpus = self.worker_cpus.clone();
+        let nw = worker_cpus.len();
+        let rebuild_cols = index_cols.clone();
+        let results: Vec<Result<(u64, u64, f64, Vec<ColumnStats>)>> =
+            self.pool.map(items, move |(i, g, name)| {
+                let cpu = &worker_cpus[i % nw];
+                let (bytes, mut finish, stats) =
+                    worker::write_row_group(&cluster, &name, &g, layout, at, cpu)?;
+                for col in &rebuild_cols {
+                    let mut w = crate::util::bytes::ByteWriter::new();
+                    w.str(col);
+                    let t = cluster.call(finish, &name, "skyhook", "build_index", &w.finish())?;
+                    finish = finish.max(t.finish);
+                }
+                Ok((g.nrows() as u64, bytes, finish, stats))
+            });
+        let mut new_groups = Vec::with_capacity(objects);
+        let mut bytes_written = 0u64;
+        let mut sim_finish = at;
+        for r in results {
+            let (rows, bytes, finish, stats) = r?;
+            new_groups.push(RowGroupMeta { rows, bytes, stats });
+            bytes_written += bytes;
+            sim_finish = sim_finish.max(finish);
+        }
+        let meta = DatasetMeta::Table {
+            schema,
+            layout,
+            localities: vec![String::new(); new_groups.len()],
+            row_groups: new_groups,
+            // The re-sort restores the global ordering claim.
+            cluster_by: sort_key,
+            index_cols,
+            muta: metadata::Mutability {
+                generation: next_gen,
+                tombstones: Vec::new(),
+                compact_by: String::new(),
+            },
+        };
+        // THE commit point: one metadata overwrite flips every reader to
+        // the new generation atomically. Everything before this line was
+        // additive; everything after is cleanup.
+        let t = metadata::save_meta(&self.cluster, sim_finish, dataset, &meta, true)?;
+        for name in &old_names {
+            // Best-effort: a failed delete strands bytes, never results.
+            let _ = self.cluster.delete_object(t, name);
+        }
+        self.compactions
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(WriteReport {
+            objects,
+            bytes_written,
+            sim_seconds: t,
+            wall_seconds: wall.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// The compaction trigger every mutation path (and the serve loop)
+    /// shares: compacts when churn crossed a threshold — more than 25%
+    /// of rows tombstoned, or, when a clustering intent is pending
+    /// (`compact_by` stamped by an append), more than half the row
+    /// groups no longer sorted by it. `SKYHOOK_FORCE_COMPACT=1` compacts
+    /// after every mutation regardless (the CI's forced second pass).
+    /// Returns whether a compaction ran.
+    pub fn maybe_compact(&self, dataset: &str) -> Result<bool> {
+        let (meta, _) = metadata::load_meta(&self.cluster, 0.0, dataset)?;
+        let DatasetMeta::Table {
+            schema,
+            row_groups,
+            muta,
+            ..
+        } = &meta
+        else {
+            return Ok(false);
+        };
+        let forced = std::env::var("SKYHOOK_FORCE_COMPACT").map_or(false, |v| v == "1");
+        let total_rows: u64 = row_groups.iter().map(|g| g.rows).sum();
+        let dead = muta.total_tombstones();
+        let churned = total_rows > 0 && dead as f64 > 0.25 * total_rows as f64;
+        let unsorted = !muta.compact_by.is_empty()
+            && match schema.col_index(&muta.compact_by) {
+                Ok(ci) => {
+                    let n = row_groups.len();
+                    let u = row_groups.iter().filter(|g| !g.stats[ci].sorted).count();
+                    n > 0 && u as f64 > 0.5 * n as f64
+                }
+                Err(_) => false,
+            };
+        if forced || churned || unsorted {
+            self.compact(dataset)?;
+            return Ok(true);
+        }
+        Ok(false)
     }
 
     /// Batch size configured for dispatch rounds.
@@ -1742,6 +2084,153 @@ mod tests {
         // Query still reads everything.
         let r = d.execute(&Query::scan("loc"), None).unwrap();
         assert_eq!(r.rows.unwrap().nrows(), 2000);
+    }
+
+    #[test]
+    fn delete_append_compact_lifecycle() {
+        // This test walks the *unforced* lifecycle: it asserts the
+        // intermediate tombstone/claim states that SKYHOOK_FORCE_COMPACT=1
+        // deliberately collapses (every mutation compacts on the spot).
+        // The forced pass still covers mutations end to end via the
+        // router, CLI serve, and mutate-then-query property tests.
+        if std::env::var("SKYHOOK_FORCE_COMPACT").map_or(false, |v| v == "1") {
+            return;
+        }
+        let d = driver(4, 4);
+        let b = gen::sensor_table(4000, 99);
+        d.write_table(
+            "sensors",
+            &b,
+            Layout::Col,
+            &PartitionSpec::with_target(16 * 1024)
+                .cluster_by("ts")
+                .index("sensor"),
+            None,
+        )
+        .unwrap();
+        let count_q = Query::scan("sensors").aggregate(AggFunc::Count, "val");
+        let count = |d: &Driver, m: Option<ExecMode>| d.execute(&count_q, m).unwrap().aggregates[0];
+        assert_eq!(count(&d, None), 4000.0);
+
+        // Delete the first 50 rows of row group 0 (ts 0..50 — the
+        // cluster_by("ts") sort is the identity on this table).
+        let rows: Vec<u32> = (0..50).collect();
+        assert_eq!(d.delete_rows("sensors", 0, &rows).unwrap(), 50);
+        // Idempotent: stamping the same rows again changes nothing.
+        assert_eq!(d.delete_rows("sensors", 0, &rows).unwrap(), 50);
+        let (meta, _) = metadata::load_meta(d.cluster(), 0.0, "sensors").unwrap();
+        let DatasetMeta::Table { muta, .. } = &meta else {
+            unreachable!()
+        };
+        assert_eq!(muta.tombstones_of(0), 50);
+        // Every execution mode answers without the tombstoned rows.
+        assert_eq!(count(&d, Some(ExecMode::Pushdown)), 3950.0);
+        assert_eq!(count(&d, Some(ExecMode::ClientSide)), 3950.0);
+        assert_eq!(count(&d, None), 3950.0);
+        // Out-of-range requests fail without touching anything.
+        assert!(d.delete_rows("sensors", 99, &[0]).is_err());
+        assert!(d.delete_rows("sensors", 0, &[u32::MAX]).is_err());
+
+        // Append: counts rise, the global ordering claim drops, the
+        // clustering intent is preserved for the compactor.
+        let extra = gen::sensor_table(1000, 7);
+        let rep = d.append("sensors", &extra, 16 * 1024).unwrap();
+        assert!(rep.objects > 0);
+        assert_eq!(count(&d, Some(ExecMode::Pushdown)), 4950.0);
+        assert_eq!(count(&d, Some(ExecMode::ClientSide)), 4950.0);
+        let (meta, _) = metadata::load_meta(d.cluster(), 0.0, "sensors").unwrap();
+        let DatasetMeta::Table {
+            cluster_by, muta, ..
+        } = &meta
+        else {
+            unreachable!()
+        };
+        assert_eq!(cluster_by, "", "append must clear the global claim");
+        assert_eq!(muta.compact_by, "ts", "intent must be preserved");
+        assert_eq!(muta.generation, 0);
+        // Appends with a mismatched schema are rejected up front.
+        let bad = gen::sensor_table(10, 1).project(&["ts", "val"]).unwrap();
+        assert!(d.append("sensors", &bad, 16 * 1024).is_err());
+
+        // The reference the compacted dataset must answer like: live
+        // original rows then appended rows, stably re-sorted by ts.
+        let mut reference = b.slice(50, 4000).unwrap();
+        reference.concat(&extra).unwrap();
+        let expected = reference.sort_by_column("ts").unwrap();
+
+        // Compact: one generation flip — dead rows gone, re-sorted,
+        // markers and postings fresh, claim restored.
+        let old_names = meta.object_names("sensors");
+        let crep = d.compact("sensors").unwrap();
+        assert!(crep.objects > 0);
+        assert_eq!(d.compactions(), 1);
+        let (meta2, _) = metadata::load_meta(d.cluster(), 0.0, "sensors").unwrap();
+        let DatasetMeta::Table {
+            cluster_by, muta, ..
+        } = &meta2
+        else {
+            unreachable!()
+        };
+        assert_eq!(cluster_by, "ts", "compaction restores the claim");
+        assert_eq!(muta.generation, 1);
+        assert!(muta.tombstones.is_empty());
+        assert!(muta.compact_by.is_empty());
+        let new_names = meta2.object_names("sensors");
+        assert!(new_names.iter().all(|n| n.starts_with("sensors/g1/t/")));
+        // Old-generation objects are gone after the commit.
+        for n in &old_names {
+            assert!(d.cluster().read_object(0.0, n).is_err(), "{n} survived");
+        }
+        // Answers: the full scan equals the re-sorted reference bit for
+        // bit, in every mode.
+        for m in [None, Some(ExecMode::Pushdown), Some(ExecMode::ClientSide)] {
+            let got = d.execute(&Query::scan("sensors"), m).unwrap().rows.unwrap();
+            assert_eq!(got, expected);
+        }
+        // Markers and postings hold up under the debug re-scans.
+        assert_eq!(metadata::verify_sortedness(d.cluster(), "sensors").unwrap(), Vec::<String>::new());
+        assert_eq!(metadata::verify_index(d.cluster(), "sensors").unwrap(), Vec::<String>::new());
+        // The restored clustering serves bounded prefix reads again.
+        let head = d
+            .execute(&Query::scan("sensors").select(&["ts"]).top_k("ts", false, 5), None)
+            .unwrap();
+        assert!(head.stats.prefix_reads > 0, "clustered payoff lost");
+    }
+
+    #[test]
+    fn heavy_deletes_trigger_auto_compaction() {
+        let d = driver(3, 2);
+        let b = gen::sensor_table(500, 11);
+        d.write_table(
+            "churn",
+            &b,
+            Layout::Col,
+            &PartitionSpec::with_target(4 * 1024),
+            None,
+        )
+        .unwrap();
+        let (meta, _) = metadata::load_meta(d.cluster(), 0.0, "churn").unwrap();
+        let DatasetMeta::Table { row_groups, .. } = &meta else {
+            unreachable!()
+        };
+        assert!(row_groups.len() > 1, "need multiple groups");
+        let g0 = row_groups[0].rows;
+        assert!(
+            g0 as f64 > 0.25 * 500.0,
+            "group 0 ({g0} rows) too small to cross the threshold"
+        );
+        // Tombstone all of group 0: the delete itself must auto-compact.
+        let rows: Vec<u32> = (0..g0 as u32).collect();
+        d.delete_rows("churn", 0, &rows).unwrap();
+        assert_eq!(d.compactions(), 1, "threshold crossing must compact");
+        let (meta, _) = metadata::load_meta(d.cluster(), 0.0, "churn").unwrap();
+        let DatasetMeta::Table { muta, .. } = &meta else {
+            unreachable!()
+        };
+        assert_eq!(muta.generation, 1);
+        assert!(muta.tombstones.is_empty());
+        let r = d.execute(&Query::scan("churn"), None).unwrap();
+        assert_eq!(r.rows.unwrap(), b.slice(g0 as usize, 500).unwrap());
     }
 
     #[test]

@@ -295,13 +295,89 @@ pub fn index_key_f32(x: f32) -> [u8; 4] {
 /// Full posting keys append the order-preserving value encoding plus the
 /// big-endian row id (making keys unique per row); values hold the row
 /// id little-endian. Bumping the `ix1` version retires old postings
-/// without a migration — probes only read their own scheme.
-fn index_prefix(col: &str) -> Vec<u8> {
+/// without a migration — probes only read their own scheme. Public so
+/// `metadata::verify_index`'s debug re-scan can recompute the exact
+/// posting set an object ought to carry.
+pub fn index_prefix(col: &str) -> Vec<u8> {
     let mut p = Vec::with_capacity(col.len() + 5);
     p.extend_from_slice(b"ix1/");
     p.extend_from_slice(col.as_bytes());
     p.push(b'/');
     p
+}
+
+/// Versioned omap key of an object's delete vector (the `dv1/` scheme):
+/// one bitmap covering every row of the object, bit set = row
+/// tombstoned. The whole bitmap lives under a single key and is replaced
+/// wholesale on every delete — `ClsBackend` has no per-key omap delete,
+/// and object deletion already drops all omap keys, so whole-value
+/// overwrite is both the simplest and the only correct update primitive
+/// the store offers. Bumping `dv1` retires old vectors without a
+/// migration, exactly like `ix1/`.
+pub const DV_KEY: &[u8] = b"dv1/bitmap";
+
+/// Delete-vector wire magic; followed by a version byte, a little-endian
+/// u32 row count, and `ceil(rows/8)` bitmap bytes (LSB-first per byte).
+const DV_MAGIC: &[u8; 4] = b"SKDV";
+
+/// Encode a delete vector (`true` = row tombstoned).
+pub fn encode_dv(deleted: &[bool]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(9 + deleted.len() / 8 + 1);
+    out.extend_from_slice(DV_MAGIC);
+    out.push(1);
+    out.extend_from_slice(&(deleted.len() as u32).to_le_bytes());
+    let mut byte = 0u8;
+    for (i, &d) in deleted.iter().enumerate() {
+        if d {
+            byte |= 1 << (i % 8);
+        }
+        if i % 8 == 7 {
+            out.push(byte);
+            byte = 0;
+        }
+    }
+    if deleted.len() % 8 != 0 {
+        out.push(byte);
+    }
+    out
+}
+
+/// Decode a delete vector. Unknown versions and length mismatches are
+/// hard errors, not advisory fallbacks: a dv that cannot be read exactly
+/// must never silently resurrect deleted rows.
+pub fn decode_dv(raw: &[u8]) -> Result<Vec<bool>> {
+    if raw.len() < 9 || &raw[..4] != DV_MAGIC {
+        return Err(Error::Corrupt("bad delete-vector magic".into()));
+    }
+    if raw[4] != 1 {
+        return Err(Error::Corrupt(format!(
+            "unknown delete-vector version {}",
+            raw[4]
+        )));
+    }
+    let n = u32::from_le_bytes(raw[5..9].try_into().unwrap()) as usize;
+    let bits = &raw[9..];
+    if bits.len() != (n + 7) / 8 {
+        return Err(Error::Corrupt("delete-vector length mismatch".into()));
+    }
+    Ok((0..n).map(|i| bits[i / 8] & (1 << (i % 8)) != 0).collect())
+}
+
+/// AND the object's delete vector (if any) into a handler's eval mask:
+/// a tombstoned row can never contribute, whatever the handler computed
+/// for it. Mask index i is object row i — every read path here returns
+/// row-0-based prefixes, so truncated batches stay aligned.
+fn apply_dv_mask(b: &mut dyn ClsBackend, mask: &mut [bool]) -> Result<()> {
+    let Some(raw) = b.omap_get(DV_KEY) else {
+        return Ok(());
+    };
+    let deleted = decode_dv(&raw)?;
+    for (i, m) in mask.iter_mut().enumerate() {
+        if deleted.get(i).copied().unwrap_or(false) {
+            *m = false;
+        }
+    }
+    Ok(())
 }
 
 /// One representable f32 step toward -inf, used to widen probe lower
@@ -369,14 +445,28 @@ fn i64_probe_hi(v: f64, inclusive: bool) -> i64 {
     }
 }
 
+/// Outcome of encoding a probe window into the `ix1/` key space.
+enum ProbeKeys {
+    /// `(lo_key, hi_key, hi_inclusive)` — scan this omap range.
+    Range(Vec<u8>, Vec<u8>, bool),
+    /// The window is non-empty over f64 but contains no representable
+    /// key of this dtype (e.g. `x > 5 AND x < 6` over i64 tightens to
+    /// the inverted integer range `[6, 5]`): provably zero rows. The
+    /// caller must prune — issuing the inverted range as a `scan_range`
+    /// would hand `BTreeMap::range` a start past its end, which panics.
+    Empty,
+}
+
 /// Encode an [`IndexProbe`]'s value window as an omap key range over the
 /// column's `ix1/` postings: `(lo_key, hi_key, hi_inclusive)`, with
 /// bounds widened per the dtype rules above so rounding between the f64
 /// comparison domain and the stored encoding can only *add* candidate
 /// rows. An unbounded side becomes the column prefix itself (lo) or the
-/// prefix's exclusive successor (hi). Returns `None` for a dtype tag
-/// this version does not understand — the handler falls back to a scan.
-fn probe_key_range(col: &str, tag: &[u8], probe: &IndexProbe) -> Option<(Vec<u8>, Vec<u8>, bool)> {
+/// prefix's exclusive successor (hi). A window that inverts once encoded
+/// (lo key > hi key) is [`ProbeKeys::Empty`]. Returns `None` for a dtype
+/// tag this version does not understand — the handler falls back to a
+/// scan.
+fn probe_key_range(col: &str, tag: &[u8], probe: &IndexProbe) -> Option<ProbeKeys> {
     let prefix = index_prefix(col);
     let enc_lo: Vec<u8>;
     let enc_hi: Option<Vec<u8>>;
@@ -401,6 +491,16 @@ fn probe_key_range(col: &str, tag: &[u8], probe: &IndexProbe) -> Option<(Vec<u8>
         }
         _ => return None,
     }
+    // Inverted encoded window: both bounds present and the widened lower
+    // key sorts above the widened upper key (same fixed width per dtype,
+    // so lexicographic compare is value compare). `index_probe_window`
+    // catches f64-level contradictions; this catches the ones the
+    // integer tightening itself manufactures.
+    if let Some(enc) = &enc_hi {
+        if !enc_lo.is_empty() && enc_lo > *enc {
+            return Some(ProbeKeys::Empty);
+        }
+    }
     let mut lo = prefix.clone();
     lo.extend_from_slice(&enc_lo);
     match enc_hi {
@@ -409,14 +509,14 @@ fn probe_key_range(col: &str, tag: &[u8], probe: &IndexProbe) -> Option<(Vec<u8>
             hi.extend_from_slice(&enc);
             // Past any 4-byte row-id suffix of the bound value.
             hi.extend_from_slice(&[0xff; 4]);
-            Some((lo, hi, true))
+            Some(ProbeKeys::Range(lo, hi, true))
         }
         None => {
             // Exclusive successor of the column prefix: bump the '/'
             // terminator (never 0xff, so this cannot overflow).
             let mut hi = prefix;
             *hi.last_mut().expect("prefix is never empty") = b'/' + 1;
-            Some((lo, hi, false))
+            Some(ProbeKeys::Range(lo, hi, false))
         }
     }
 }
@@ -662,6 +762,7 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
         b.charge_cpu((whi - wlo) as f64 * prof.row_pred_cost_s);
         let mut mask = Vec::new();
         pred.eval_into(&batch, &mut mask)?;
+        apply_dv_mask(b, &mut mask)?;
         let filtered = batch.filter(&mask)?;
         let result = match projection {
             Some(cols) => {
@@ -715,31 +816,45 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
                             // touching the index.
                             index_probes = 1;
                             postings = Some(Vec::new());
-                        } else if let Some((lo, hi, hi_inc)) = probe_key_range(col, &tag, &probe) {
-                            let bound = if hi_inc {
-                                std::ops::Bound::Included(hi.as_slice())
-                            } else {
-                                std::ops::Bound::Excluded(hi.as_slice())
-                            };
-                            let hits = b.omap_scan_range(&lo, bound);
-                            // An LSM probe consults every sorted run plus
-                            // the memtable; charge the read amplification
-                            // the store actually has right now.
-                            let amp = b.kv_stats().read_amp() as f64;
-                            b.charge_cpu(
-                                prof.index_probe_cost_s * amp
-                                    + hits.len() as f64 * prof.index_posting_cost_s,
-                            );
-                            index_probes = 1;
-                            let mut rows = Vec::with_capacity(hits.len());
-                            for (_, v) in hits {
-                                rows.push(u32::from_le_bytes(
-                                    v.as_slice()
-                                        .try_into()
-                                        .map_err(|_| Error::Corrupt("bad index entry".into()))?,
-                                ));
+                        } else {
+                            match probe_key_range(col, &tag, &probe) {
+                                Some(ProbeKeys::Empty) => {
+                                    // The window survived f64 but holds no
+                                    // representable key: same prune, and
+                                    // never hand the inverted range to the
+                                    // kv store.
+                                    index_probes = 1;
+                                    postings = Some(Vec::new());
+                                }
+                                Some(ProbeKeys::Range(lo, hi, hi_inc)) => {
+                                    let bound = if hi_inc {
+                                        std::ops::Bound::Included(hi.as_slice())
+                                    } else {
+                                        std::ops::Bound::Excluded(hi.as_slice())
+                                    };
+                                    let hits = b.omap_scan_range(&lo, bound);
+                                    // An LSM probe consults every sorted
+                                    // run plus the memtable; charge the
+                                    // read amplification the store
+                                    // actually has right now.
+                                    let amp = b.kv_stats().read_amp() as f64;
+                                    b.charge_cpu(
+                                        prof.index_probe_cost_s * amp
+                                            + hits.len() as f64 * prof.index_posting_cost_s,
+                                    );
+                                    index_probes = 1;
+                                    let mut rows = Vec::with_capacity(hits.len());
+                                    for (_, v) in hits {
+                                        rows.push(u32::from_le_bytes(
+                                            v.as_slice().try_into().map_err(|_| {
+                                                Error::Corrupt("bad index entry".into())
+                                            })?,
+                                        ));
+                                    }
+                                    postings = Some(rows);
+                                }
+                                None => {}
                             }
-                            postings = Some(rows);
                         }
                     }
                 }
@@ -766,12 +881,32 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
                 return Ok(frame_exec_out(counters, exec_empty_result(&zm.schema, &spec)?));
             }
         }
+        // Delete vector: rows tombstoned by `skyhook.delete_rows` must
+        // never reach the kernel as live input. Consulted
+        // unconditionally — correctness cannot depend on the planner
+        // knowing the tombstone counts — and merged into the kernel's
+        // pre-mask, the same mechanism the index postings use. The
+        // zone-map prune and empty-postings short-circuits above stay
+        // sound without it: tombstones only remove rows.
+        let dv_deleted: Option<Vec<bool>> = match b.omap_get(DV_KEY) {
+            Some(raw) => {
+                let d = decode_dv(&raw)?;
+                b.charge_cpu(d.len() as f64 * prof.index_posting_cost_s);
+                Some(d)
+            }
+            None => None,
+        };
         // One read covering every column the chain touches (the kernel's
         // own definition of its read set) — bounded to the object's first
         // k rows when the pipeline provably needs no more: a prefix-limit
         // head/top-k, or an index probe whose highest posting row is k-1
         // (rows past it have their indexed value outside the window, so
         // the AND-spine conjunct — hence the predicate — rejects them).
+        // Tombstones break `prefix_limit`'s "first k rows suffice"
+        // argument (the k-th *live* row may sit past row k), so that
+        // bound is disabled while a dv is present; the postings bound
+        // stays sound — rows past the highest posting are rejected by
+        // the indexed conjunct, dead or alive.
         let sorted = |c: &str| sorted_cols.iter().any(|s| s == c);
         let (batch, prefix_read) = if let Some(rows) = &postings {
             let k = rows.iter().max().map_or(0, |&m| m as u64 + 1);
@@ -781,7 +916,7 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
             (batch, false)
         } else {
             match exec_kernel::prefix_limit(&spec, &sorted) {
-                Some(k) => {
+                Some(k) if dv_deleted.is_none() => {
                     let prefix = b.header_prefix();
                     let (batch, _, bounded) = layout::read_projected_rows(
                         &mut BackendRange(b),
@@ -791,20 +926,37 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
                     )?;
                     (batch, bounded)
                 }
-                None => (read_needed(b, needed.as_deref())?, false),
+                _ => (read_needed(b, needed.as_deref())?, false),
             }
         };
         // The probe's row ids become the kernel's pre-mask (rows the
-        // bounded read dropped are provably non-matching).
-        let premask: Option<Vec<bool>> = postings.map(|rows| {
-            let mut pm = vec![false; batch.nrows()];
-            for r in rows {
-                if let Some(m) = pm.get_mut(r as usize) {
-                    *m = true;
+        // bounded read dropped are provably non-matching), with the
+        // delete vector ANDed in.
+        let premask: Option<Vec<bool>> = match (postings, dv_deleted) {
+            (None, None) => None,
+            (rows, dv) => {
+                let mut pm = match rows {
+                    Some(rows) => {
+                        let mut pm = vec![false; batch.nrows()];
+                        for r in rows {
+                            if let Some(m) = pm.get_mut(r as usize) {
+                                *m = true;
+                            }
+                        }
+                        pm
+                    }
+                    None => vec![true; batch.nrows()],
+                };
+                if let Some(deleted) = dv {
+                    for (i, m) in pm.iter_mut().enumerate() {
+                        if deleted.get(i).copied().unwrap_or(false) {
+                            *m = false;
+                        }
+                    }
                 }
+                Some(pm)
             }
-            pm
-        });
+        };
         // The backend's profile picks the execution tier (compiled when
         // it is enabled, the shape is eligible, and the tier wins on
         // cost); the kernel's per-tier counters are then priced at the
@@ -891,6 +1043,7 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
         b.charge_cpu(span * prof.row_pred_cost_s);
         let mut mask = Vec::new();
         pred.eval_into(&batch, &mut mask)?;
+        apply_dv_mask(b, &mut mask)?;
         let mut w = ByteWriter::new();
         w.u32(cols.len() as u32);
         for col_name in &cols {
@@ -944,6 +1097,7 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
         b.charge_cpu(batch.nrows() as f64 * (prof.row_pred_cost_s + prof.val_agg_cost_s));
         let mut mask = Vec::new();
         pred.eval_into(&batch, &mut mask)?;
+        apply_dv_mask(b, &mut mask)?;
         let keys = match batch.col(&group_col)? {
             Column::I64(v) => v,
             _ => return Err(Error::Query("group_by needs an i64 column".into())),
@@ -1031,12 +1185,28 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
             }
         }
         let hits = b.omap_scan_prefix(&prefix);
-        let mut w = ByteWriter::new();
-        w.u32(hits.len() as u32);
+        // Tombstoned rows still carry postings (the dv is the single
+        // source of deletion truth); drop them here so direct lookups
+        // agree with the masked scan paths.
+        let deleted = match b.omap_get(DV_KEY) {
+            Some(raw) => decode_dv(&raw)?,
+            None => Vec::new(),
+        };
+        let mut rows = Vec::with_capacity(hits.len());
         for (_, v) in hits {
-            w.u32(u32::from_le_bytes(v.as_slice().try_into().map_err(|_| {
-                Error::Corrupt("bad index entry".into())
-            })?));
+            let row = u32::from_le_bytes(
+                v.as_slice()
+                    .try_into()
+                    .map_err(|_| Error::Corrupt("bad index entry".into()))?,
+            );
+            if !deleted.get(row as usize).copied().unwrap_or(false) {
+                rows.push(row);
+            }
+        }
+        let mut w = ByteWriter::new();
+        w.u32(rows.len() as u32);
+        for row in rows {
+            w.u32(row);
         }
         Ok(w.finish())
     });
@@ -1062,6 +1232,7 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
         b.charge_cpu(batch.nrows() as f64 * (prof.row_pred_cost_s + prof.val_agg_cost_s));
         let mut mask = Vec::new();
         pred.eval_into(&batch, &mut mask)?;
+        apply_dv_mask(b, &mut mask)?;
         let col = batch.col(&col_name)?;
         let mut values = Vec::with_capacity(mask.iter().filter(|&&m| m).count());
         for (i, &m) in mask.iter().enumerate() {
@@ -1089,8 +1260,87 @@ pub fn register_skyhook_class(r: &mut ClassRegistry, engine: Option<Arc<dyn Chun
             return Ok(vec![current as u8]);
         }
         b.charge_cpu(batch.nrows() as f64 * batch.ncols() as f64 * 3e-9);
+        // A layout transform preserves row order and count, so any
+        // existing delete vector (row-id-addressed) stays valid as-is.
         b.write(&encode_batch(&batch, target))?;
         Ok(vec![target as u8])
+    });
+
+    // skyhook.delete_rows — merge row ids into the object's `dv1/`
+    // delete vector. Input: u32 count + count little-endian u32 row ids.
+    // Output: the object's total tombstone count (u64 LE) after the
+    // merge — authoritative, so re-deleting a row cannot double-count in
+    // dataset metadata. Out-of-range rows are hard errors before any
+    // state changes.
+    r.register("skyhook", "delete_rows", |b, input| {
+        let mut r = ByteReader::new(input);
+        let n = r.u32()? as usize;
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            rows.push(r.u32()?);
+        }
+        // Row count: the stamped zone map knows it without a data read;
+        // an unstamped object pays one decode.
+        let nrows = match zone_map_of(b) {
+            Some(zm) => zm.rows as usize,
+            None => decode_batch(&b.read()?)?.0.nrows(),
+        };
+        let mut deleted = match b.omap_get(DV_KEY) {
+            Some(raw) => decode_dv(&raw)?,
+            None => vec![false; nrows],
+        };
+        if deleted.len() != nrows {
+            return Err(Error::Corrupt(
+                "delete vector does not cover the object's rows".into(),
+            ));
+        }
+        for &row in &rows {
+            match deleted.get_mut(row as usize) {
+                Some(d) => *d = true,
+                None => {
+                    return Err(Error::Invalid(format!(
+                        "row {row} out of range (object has {nrows} rows)"
+                    )))
+                }
+            }
+        }
+        let prof = b.exec_profile();
+        b.charge_cpu(rows.len() as f64 * prof.index_posting_cost_s);
+        let total = deleted.iter().filter(|&&d| d).count() as u64;
+        b.omap_set(DV_KEY, &encode_dv(&deleted));
+        Ok(total.to_le_bytes().to_vec())
+    });
+
+    // skyhook.read_dv — fetch the raw `dv1/` delete vector (empty when
+    // the object has none). The client-side worker merges it into its
+    // own kernel pre-mask, mirroring what `skyhook.exec` does on the
+    // server — both sides of the boundary read the same bytes.
+    r.register("skyhook", "read_dv", |b, _input| {
+        Ok(b.omap_get(DV_KEY).unwrap_or_default())
+    });
+
+    // skyhook.dump_index — debug re-scan support: every posting of one
+    // column's `ix1/` scheme, as (key suffix after the prefix, row id)
+    // pairs. `metadata::verify_index` recomputes the expected set from
+    // the object's decoded rows and compares. Not a query path.
+    r.register("skyhook", "dump_index", |b, input| {
+        let mut r = ByteReader::new(input);
+        let col_name = r.str()?.to_string();
+        let prefix = index_prefix(&col_name);
+        let hits = b.omap_scan_prefix(&prefix);
+        let mut w = ByteWriter::new();
+        w.u32(hits.len() as u32);
+        for (k, v) in hits {
+            let suffix = &k[prefix.len()..];
+            w.u32(suffix.len() as u32);
+            w.raw(suffix);
+            w.u32(u32::from_le_bytes(
+                v.as_slice()
+                    .try_into()
+                    .map_err(|_| Error::Corrupt("bad index entry".into()))?,
+            ));
+        }
+        Ok(w.finish())
     });
 }
 
@@ -2019,5 +2269,198 @@ mod tests {
         };
         assert_eq!(states[0].count, 200);
         assert_eq!(engine.0.load(std::sync::atomic::Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn delete_vector_roundtrip_and_rejects_garbage() {
+        for n in [0usize, 1, 7, 8, 9, 200] {
+            let deleted: Vec<bool> = (0..n).map(|i| i % 3 == 0).collect();
+            assert_eq!(decode_dv(&encode_dv(&deleted)).unwrap(), deleted);
+        }
+        assert!(decode_dv(b"").is_err());
+        assert!(decode_dv(b"XXXX\x01\x00\x00\x00\x00").is_err());
+        // Wrong version, truncated bitmap.
+        let mut enc = encode_dv(&[true; 9]);
+        enc[4] = 9;
+        assert!(decode_dv(&enc).is_err());
+        let enc = encode_dv(&[true; 9]);
+        assert!(decode_dv(&enc[..enc.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn delete_rows_masks_every_handler_path() {
+        let r = registry();
+        let batch = gen::sensor_table(200, 7);
+        let mut b = MemBackend::new(&encode_batch(&batch, Layout::Col));
+        b.setxattr(ZONE_MAP_XATTR, &ZoneMap::from_batch(&batch).encode());
+        // Tombstone rows 0..50, twice — the returned total must not
+        // double-count.
+        let del = |rows: &[u32]| {
+            let mut w = ByteWriter::new();
+            w.u32(rows.len() as u32);
+            for &x in rows {
+                w.u32(x);
+            }
+            w.finish()
+        };
+        let rows: Vec<u32> = (0..50).collect();
+        let out = r.get("skyhook", "delete_rows").unwrap()(&mut b, &del(&rows)).unwrap();
+        assert_eq!(u64::from_le_bytes(out.try_into().unwrap()), 50);
+        let out = r.get("skyhook", "delete_rows").unwrap()(&mut b, &del(&rows)).unwrap();
+        assert_eq!(u64::from_le_bytes(out.try_into().unwrap()), 50);
+        // Out-of-range row is a hard error.
+        assert!(r.get("skyhook", "delete_rows").unwrap()(&mut b, &del(&[200])).is_err());
+        // read_dv returns the stored vector.
+        let raw = r.get("skyhook", "read_dv").unwrap()(&mut b, &[]).unwrap();
+        let deleted = decode_dv(&raw).unwrap();
+        assert_eq!(deleted.iter().filter(|&&d| d).count(), 50);
+        // exec: a full scan must return exactly the live rows.
+        let out = r.get("skyhook", "exec").unwrap()(&mut b, &exec_spec().encode()).unwrap();
+        let (ExecOut::Rows(live), _) = decode_exec_out_full(&out, 0, 0).unwrap() else {
+            panic!("expected rows");
+        };
+        assert_eq!(live.nrows(), 150);
+        assert_eq!(live, batch.slice(50, 150).unwrap());
+        // scan handler honors the dv too.
+        let out = r.get("skyhook", "scan").unwrap()(
+            &mut b,
+            &encode_scan_arg(&Predicate::True, None, true),
+        )
+        .unwrap();
+        assert_eq!(decode_batch(&out).unwrap().0.nrows(), 150);
+        // agg: count over the live rows only.
+        let aggs = vec![Aggregate::new(AggFunc::Count, "val")];
+        let out = r.get("skyhook", "agg").unwrap()(
+            &mut b,
+            &encode_agg_arg(&Predicate::True, &aggs, false, true),
+        )
+        .unwrap();
+        assert_eq!(decode_agg_out(&out).unwrap()[0].count, 150);
+        // Head limit must deliver the first live rows, not the first
+        // stored rows (prefix_limit is disabled under a dv).
+        let spec = PipelineSpec {
+            limit: Some(7),
+            ..exec_spec()
+        };
+        let out = r.get("skyhook", "exec").unwrap()(&mut b, &spec.encode()).unwrap();
+        let (ExecOut::Rows(head), c) = decode_exec_out_full(&out, 0, 0).unwrap() else {
+            panic!("expected rows");
+        };
+        assert!(!c.prefix_read);
+        assert_eq!(head, batch.slice(50, 7).unwrap());
+        // index_lookup drops tombstoned rows.
+        let mut w = ByteWriter::new();
+        w.str("sensor");
+        r.get("skyhook", "build_index").unwrap()(&mut b, &w.finish()).unwrap();
+        let Column::I64(sensors) = batch.col("sensor").unwrap() else {
+            unreachable!()
+        };
+        let want = sensors
+            .iter()
+            .enumerate()
+            .filter(|&(i, &s)| i >= 50 && s == 3)
+            .count();
+        let mut w = ByteWriter::new();
+        w.str("sensor");
+        w.i64(3);
+        let out = r.get("skyhook", "index_lookup").unwrap()(&mut b, &w.finish()).unwrap();
+        let mut rr = ByteReader::new(&out);
+        assert_eq!(rr.u32().unwrap() as usize, want);
+    }
+
+    #[test]
+    fn inverted_probe_windows_prune_instead_of_panicking() {
+        // f64-level contradiction (`x > 5 AND x < 3`) over both index
+        // encodings, plus the encoded-domain inversion that survives the
+        // f64 check (`x > 5 AND x < 6` over i64 tightens to [6, 5]): all
+        // must answer a counted empty probe without touching data.
+        let r = registry();
+        let cases: [(&str, Predicate); 3] = [
+            (
+                "sensor", // i64
+                Predicate::cmp("sensor", CmpOp::Gt, 5.0)
+                    .and(Predicate::cmp("sensor", CmpOp::Lt, 3.0)),
+            ),
+            (
+                "val", // f32
+                Predicate::cmp("val", CmpOp::Gt, 5.0).and(Predicate::cmp("val", CmpOp::Lt, 3.0)),
+            ),
+            (
+                "sensor", // i64, non-empty over f64, empty over i64
+                Predicate::cmp("sensor", CmpOp::Gt, 5.0)
+                    .and(Predicate::cmp("sensor", CmpOp::Lt, 6.0)),
+            ),
+        ];
+        for (col, pred) in cases {
+            let batch = gen::sensor_table(200, 7);
+            let mut b = MemBackend::new(&encode_batch(&batch, Layout::Col));
+            let mut w = ByteWriter::new();
+            w.str(col);
+            r.get("skyhook", "build_index").unwrap()(&mut b, &w.finish()).unwrap();
+            b.setxattr(ZONE_MAP_XATTR, &ZoneMap::from_batch(&batch).encode());
+            // Destroy the data: only a probe-pruned answer survives.
+            b.data = vec![0xff; 16];
+            let spec = PipelineSpec {
+                predicate: pred,
+                aggs: vec![Aggregate::new(AggFunc::Count, col)],
+                index: Some(col.to_string()),
+                ..exec_spec()
+            };
+            let out = r.get("skyhook", "exec").unwrap()(&mut b, &spec.encode()).unwrap();
+            let (ExecOut::Aggs(states), c) = decode_exec_out_full(&out, 0, 1).unwrap() else {
+                panic!("expected aggs");
+            };
+            assert_eq!(states[0].count, 0, "{col}: inverted window must prune");
+            assert_eq!((c.index_probes, c.index_postings), (1, 0));
+        }
+        // The second i64 case goes through `probe_key_range` itself —
+        // assert the encoded inversion is detected at that level too.
+        let probe = index_probe_window(
+            &Predicate::cmp("x", CmpOp::Gt, 5.0).and(Predicate::cmp("x", CmpOp::Lt, 6.0)),
+            "x",
+        )
+        .unwrap();
+        assert!(!probe.empty, "f64 window [5,6] is non-empty");
+        assert!(matches!(
+            probe_key_range("x", b"i64", &probe),
+            Some(ProbeKeys::Empty)
+        ));
+        // A sane window still yields a scannable range.
+        let probe = index_probe_window(&Predicate::cmp("x", CmpOp::Ge, 3.0), "x").unwrap();
+        assert!(matches!(
+            probe_key_range("x", b"i64", &probe),
+            Some(ProbeKeys::Range(..))
+        ));
+    }
+
+    #[test]
+    fn dump_index_lists_all_postings() {
+        let r = registry();
+        let batch = gen::sensor_table(50, 7);
+        let mut b = MemBackend::new(&encode_batch(&batch, Layout::Col));
+        let mut w = ByteWriter::new();
+        w.str("sensor");
+        r.get("skyhook", "build_index").unwrap()(&mut b, &w.finish()).unwrap();
+        let mut w = ByteWriter::new();
+        w.str("sensor");
+        let out = r.get("skyhook", "dump_index").unwrap()(&mut b, &w.finish()).unwrap();
+        let mut rr = ByteReader::new(&out);
+        let n = rr.u32().unwrap() as usize;
+        assert_eq!(n, 50);
+        let Column::I64(sensors) = batch.col("sensor").unwrap() else {
+            unreachable!()
+        };
+        let mut seen = vec![false; 50];
+        for _ in 0..n {
+            let klen = rr.u32().unwrap() as usize;
+            let suffix = rr.raw(klen).unwrap().to_vec();
+            let row = rr.u32().unwrap() as usize;
+            // Suffix = order-preserving value encoding + BE row id.
+            let mut want = index_key_i64(sensors[row]).to_vec();
+            want.extend_from_slice(&(row as u32).to_be_bytes());
+            assert_eq!(suffix, want);
+            seen[row] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
     }
 }

@@ -215,6 +215,13 @@ pub struct SubQuery {
     /// postings in as a pre-mask. `None` = plain scan. Only ever set on
     /// pushdown sub-queries — the client side has no omap to probe.
     pub index_col: Option<String>,
+    /// Tombstoned rows this object carries per the dataset metadata.
+    /// The client-side worker fetches the object's `dv1/` delete vector
+    /// (and merges it into its kernel pre-mask) only when this is
+    /// non-zero, so never-mutated datasets pay no extra round trip;
+    /// storage-side handlers consult the dv unconditionally, so a stale
+    /// zero here can shift cost, never results.
+    pub tombstones: u64,
 }
 
 /// A planned query.
@@ -454,6 +461,7 @@ pub fn plan_with_access(
         row_groups,
         cluster_by,
         index_cols,
+        muta,
         ..
     } = meta
     else {
@@ -598,6 +606,17 @@ pub fn plan_with_access(
         let sorted = |c: &str| sorted_cols.iter().any(|s| s == c);
         let mut profile = shape.profile(query, schema, *layout, rg);
         profile.objects_per_osd = objects_per_osd;
+        // Tombstone discount: the kernel pre-masks deleted rows before
+        // any per-row work, so the expected per-row terms shrink to the
+        // live fraction — while the read set stays whole (dead rows
+        // still occupy bytes on the device until compaction).
+        let tombstones = muta.tombstones_of(i).min(rg.rows);
+        if tombstones > 0 && rg.rows > 0 {
+            let live = (rg.rows - tombstones) as f64 / rg.rows as f64;
+            let naggs = profile.agg_values / profile.rows.max(1);
+            profile.rows = (profile.rows as f64 * live).ceil() as u64;
+            profile.agg_values = profile.rows * naggs;
+        }
         // Live cluster contention snapshotted by the driver at plan time
         // (the serving layer's signal): concurrent in-flight work queues
         // this sub-query behind strangers, exactly like its own fan-out.
@@ -741,6 +760,7 @@ pub fn plan_with_access(
             sorted_cols,
             header_prefix,
             index_col,
+            tombstones,
         });
     }
     // Overall mode: forced, else the majority assignment (ties — and a
@@ -1524,6 +1544,7 @@ mod tests {
             localities: vec![String::new(); groups],
             cluster_by: String::new(),
             index_cols: vec![],
+            muta: Default::default(),
         }
     }
 
@@ -1555,6 +1576,7 @@ mod tests {
             localities: vec![String::new(); groups],
             cluster_by: String::new(),
             index_cols: vec![],
+            muta: Default::default(),
         }
     }
 
@@ -1606,6 +1628,7 @@ mod tests {
             localities: vec![String::new(); groups],
             cluster_by: String::new(),
             index_cols: vec![],
+            muta: Default::default(),
         }
     }
 
@@ -1825,6 +1848,7 @@ mod tests {
             localities: vec![String::new(); groups],
             cluster_by: "val".into(),
             index_cols: vec![],
+            muta: Default::default(),
         }
     }
 
@@ -2043,6 +2067,7 @@ mod tests {
             localities: vec![String::new()],
             cluster_by: String::new(),
             index_cols: vec![],
+            muta: Default::default(),
         };
         // Range predicates prune despite the NaNs…
         let q = Query::scan("ds").filter(Predicate::cmp("val", CmpOp::Gt, 5.0));
@@ -2072,6 +2097,7 @@ mod tests {
             localities: vec![String::new(); 2],
             cluster_by: String::new(),
             index_cols: vec![],
+            muta: Default::default(),
         };
         let p = plan(&Query::scan("ds"), &m, None).unwrap();
         assert_eq!(p.subqueries.len(), 1);

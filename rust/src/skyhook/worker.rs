@@ -118,11 +118,21 @@ struct ScanSlot {
 /// fetches and decodes it and every **follower** reuses the decoded
 /// batch — the shared-scan batching of the serving layer. The driver
 /// owns one of these and scopes its lifetime to overlapping queries
-/// (cleared when the last in-flight query finishes and on any write), so
-/// serial workloads never see a stale or surprising hit.
+/// (cleared when the last in-flight query finishes and on any write).
+///
+/// Driver-level clears alone are not enough: mutations can reach the
+/// cluster without going through `Driver::write` (direct
+/// `Cluster::write_object`/`delete_object`, delete-vector stamps,
+/// appends, compaction). Every slot lookup therefore also checks the
+/// cluster's [`Cluster::mutation_epoch`] — a counter every OSD bumps on
+/// any state change — and flushes the whole cache when it moved, so no
+/// mutation path can leave a stale decoded batch servable to followers.
 pub struct ScanCache {
     slots: Mutex<HashMap<ScanKey, Arc<ScanSlot>>>,
     hits: AtomicU64,
+    /// Cluster mutation epoch the current slot population was built
+    /// under; a lookup under a different epoch flushes first.
+    epoch: AtomicU64,
 }
 
 impl Default for ScanCache {
@@ -136,6 +146,7 @@ impl ScanCache {
         Self {
             slots: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
+            epoch: AtomicU64::new(0),
         }
     }
 
@@ -152,9 +163,15 @@ impl ScanCache {
 
     /// Look up `key`, creating a `Pending` slot if absent. Returns the
     /// slot and whether this caller is the leader (it created the slot
-    /// and owes it a fill or a fail).
-    fn slot(&self, key: &ScanKey) -> (Arc<ScanSlot>, bool) {
+    /// and owes it a fill or a fail). `epoch` is the cluster's current
+    /// mutation epoch: if any mutation landed since the slots were
+    /// populated, the stale population is flushed before the lookup —
+    /// the single invalidation choke point no mutation path can bypass.
+    fn slot(&self, key: &ScanKey, epoch: u64) -> (Arc<ScanSlot>, bool) {
         let mut slots = plock(&self.slots);
+        if self.epoch.swap(epoch, Ordering::AcqRel) != epoch {
+            slots.clear();
+        }
         if let Some(s) = slots.get(key) {
             return (Arc::clone(s), false);
         }
@@ -423,7 +440,33 @@ fn execute_client_side(
     // PipelineSpec locally.
     let needed = super::exec_kernel::needed_columns(spec);
     let sorted = |c: &str| sub.sorted_cols.iter().any(|s| s == c);
-    let plim = exec_kernel::prefix_limit(spec, &sorted);
+
+    // Tombstoned object: fetch its delete vector first and run the
+    // kernel pre-masked, exactly as the storage-side extension does, so
+    // deleted rows can never surface from the client path either. The
+    // planner stamps `sub.tombstones` from dataset metadata, so
+    // never-mutated datasets pay no extra round trip here.
+    let (dv_live, dv_bytes, at) = if sub.tombstones > 0 {
+        let t = cluster.call(at, &sub.object, "skyhook", "read_dv", &[])?;
+        let dv_bytes = t.value.len() as u64;
+        let live: Option<Vec<bool>> = if t.value.is_empty() {
+            None
+        } else {
+            let deleted = super::extension::decode_dv(&t.value)?;
+            Some(deleted.iter().map(|&d| !d).collect())
+        };
+        (live, dv_bytes, t.finish)
+    } else {
+        (None, 0u64, at)
+    };
+
+    // A delete vector voids the bounded-prefix shortcut: the first k
+    // stored rows are no longer the first k *live* rows.
+    let plim = if dv_live.is_some() {
+        None
+    } else {
+        exec_kernel::prefix_limit(spec, &sorted)
+    };
 
     // Shared-scan batching: concurrent queries needing the same batch
     // elect a leader per cache key; followers reuse its decode. The key
@@ -438,7 +481,7 @@ fn execute_client_side(
             None => "*".into(),
         };
         let key: ScanKey = (sub.object.clone(), cols_key, plim.unwrap_or(u64::MAX));
-        let (slot, is_leader) = cache.slot(&key);
+        let (slot, is_leader) = cache.slot(&key, cluster.mutation_epoch());
         if is_leader {
             leader = Some(LeaderGuard { slot, armed: true });
         } else {
@@ -490,8 +533,20 @@ fn execute_client_side(
     // One shared evaluator for both sides of the boundary: chained
     // plans (sort/limit/top-k, grouped multi-aggregates) execute here
     // exactly as they do in the storage servers, so partials are
-    // bit-identical and — like pushdown — already sorted/truncated.
-    let (out, work) = run_pipeline(&batch, spec, None, &sub.sorted_cols)?;
+    // bit-identical and — like pushdown — already sorted/truncated. A
+    // delete vector enters as a pre-mask, the same way the extension
+    // merges it server-side.
+    let (out, work) = match &dv_live {
+        Some(live) => exec_kernel::run_pipeline_premasked(
+            &batch,
+            spec,
+            None,
+            &sub.sorted_cols,
+            exec_kernel::ExecTier::Scalar,
+            Some(live.as_slice()),
+        )?,
+        None => run_pipeline(&batch, spec, None, &sub.sorted_cols)?,
+    };
     // Client pays decode + per-row scan CPU for what it fetched (a
     // shared hit pays only the per-row part), plus the movable kernel
     // work (aggregation, per-object sort) it just performed instead of
@@ -506,7 +561,7 @@ fn execute_client_side(
     };
     Ok(SubResult {
         output,
-        bytes_moved: bytes,
+        bytes_moved: bytes + dv_bytes,
         reads_coalesced: coalesced,
         // The kernel pre-sorts the partial whenever the spec carries
         // sort keys, on either side of the boundary.
@@ -578,6 +633,7 @@ mod tests {
             sorted_cols: vec![],
             header_prefix: layout::HEADER_PREFIX,
             index_col: None,
+            tombstones: 0,
         };
         let spec = server_pipeline(&q, sub.zone_maps);
         let cache = ScanCache::new();
@@ -602,6 +658,151 @@ mod tests {
     }
 
     #[test]
+    fn shared_scan_cache_drops_entries_when_cluster_mutates_underneath() {
+        // Regression: mutations that bypass the Driver (direct
+        // Cluster::write_object, delete-vector stamps, appends,
+        // compaction) used to leave stale decoded batches servable to
+        // followers, because only Driver-level writes called clear().
+        // The mutation-epoch check must flush the cache by itself.
+        let c = cluster();
+        seed_object(&c, "t9e", 300);
+        let q = Query::scan("ds").select(&["ts", "val"]);
+        let cpu = Timeline::new();
+        let sub = SubQuery {
+            object: "t9e".into(),
+            mode: ExecMode::ClientSide,
+            layout: Layout::Col,
+            keep_values: false,
+            zone_maps: true,
+            sorted_cols: vec![],
+            header_prefix: layout::HEADER_PREFIX,
+            index_col: None,
+            tombstones: 0,
+        };
+        let spec = server_pipeline(&q, sub.zone_maps);
+        let cache = ScanCache::new();
+        let r1 = execute_subquery(&c, &spec, &sub, 0.0, &cpu, Some(&cache)).unwrap();
+        let SubOutput::Rows(before) = r1.output else {
+            panic!("expected rows")
+        };
+        assert_eq!(before.nrows(), 300);
+        // Overwrite the object directly on the cluster — no Driver, no
+        // cache.clear(). Only the epoch check can save the next reader.
+        let replacement = gen::sensor_table(120, 7);
+        c.write_object(0.0, "t9e", &encode_batch(&replacement, Layout::Col))
+            .unwrap();
+        let r2 = execute_subquery(&c, &spec, &sub, 0.0, &cpu, Some(&cache)).unwrap();
+        assert_eq!(
+            r2.shared_scan_hits, 0,
+            "a mutation must invalidate the slot, not serve it"
+        );
+        assert!(r2.bytes_moved > 0, "the follower must re-fetch fresh bytes");
+        let SubOutput::Rows(after) = r2.output else {
+            panic!("expected rows")
+        };
+        assert_eq!(after.nrows(), 120, "stale pre-mutation batch was served");
+        // Steady state (no further mutations): hits work again.
+        let r3 = execute_subquery(&c, &spec, &sub, 0.0, &cpu, Some(&cache)).unwrap();
+        assert_eq!(r3.shared_scan_hits, 0, "leader after flush");
+        let r4 = execute_subquery(&c, &spec, &sub, 0.0, &cpu, Some(&cache)).unwrap();
+        assert_eq!(r4.shared_scan_hits, 1, "unchanged epoch keeps serving hits");
+    }
+
+    #[test]
+    fn client_side_delete_vector_masks_rows_and_voids_prefix_reads() {
+        // A SubQuery stamped with tombstones>0 must fetch dv1/ and
+        // pre-mask the kernel — and must NOT take the bounded-prefix
+        // shortcut, because the first k stored rows are no longer the
+        // first k live rows.
+        use crate::skyhook::extension::{encode_dv, DV_KEY};
+        let c = cluster();
+        let b = gen::sensor_table(10_000, 42).sort_by_column("val").unwrap();
+        c.write_object(0.0, "tdv", &encode_batch(&b, Layout::Col))
+            .unwrap();
+        // Tombstone the first 5 rows of the val-ascending order via the
+        // storage-side handler (stamps dv1/ in the object's omap).
+        let mut deleted = vec![false; 10_000];
+        for d in deleted.iter_mut().take(5) {
+            *d = true;
+        }
+        let mut arg = Vec::new();
+        arg.extend_from_slice(&5u32.to_le_bytes());
+        for row in 0u32..5 {
+            arg.extend_from_slice(&row.to_le_bytes());
+        }
+        let popcount = c
+            .call(0.0, "tdv", "skyhook", "delete_rows", &arg)
+            .unwrap()
+            .value;
+        assert_eq!(u64::from_le_bytes(popcount.try_into().unwrap()), 5);
+        let raw_dv = c.call(0.0, "tdv", "skyhook", "read_dv", &[]).unwrap().value;
+        assert_eq!(raw_dv, encode_dv(&deleted));
+        assert_eq!(DV_KEY, b"dv1/bitmap");
+
+        let q = Query::scan("ds").select(&["ts"]).top_k("val", false, 8);
+        let cpu = Timeline::new();
+        let mk = |tombstones: u64| SubQuery {
+            object: "tdv".into(),
+            mode: ExecMode::ClientSide,
+            layout: Layout::Col,
+            keep_values: false,
+            zone_maps: true,
+            sorted_cols: vec!["val".into()],
+            header_prefix: layout::HEADER_PREFIX,
+            index_col: None,
+            tombstones,
+        };
+        let spec = server_pipeline(&q, true);
+        let masked = execute_subquery(&c, &spec, &mk(5), 0.0, &cpu, None).unwrap();
+        assert_eq!(masked.prefix_reads, 0, "dv must void the prefix shortcut");
+        let SubOutput::Rows(rows) = masked.output else {
+            panic!("expected rows")
+        };
+        assert_eq!(rows.nrows(), 8);
+        // The bottom-8 sort keys must be those of rows 5..13 of the
+        // val-sorted table — the first five live rows — and none of the
+        // five deleted rows may surface.
+        let Column::F32(got_val) = rows.col("val").unwrap() else {
+            panic!("expected f32 val")
+        };
+        let Column::F32(all_val) = b.col("val").unwrap() else {
+            panic!("expected f32 val")
+        };
+        assert_eq!(&got_val[..], &all_val[5..13]);
+        let Column::I64(got_ts) = rows.col("ts").unwrap() else {
+            panic!("expected i64 ts")
+        };
+        let Column::I64(all_ts) = b.col("ts").unwrap() else {
+            panic!("expected i64 ts")
+        };
+        assert!(
+            all_ts[..5].iter().all(|t| !got_ts.contains(t)),
+            "a tombstoned row surfaced client-side"
+        );
+        // Pushdown over the same object agrees bit-for-bit (the
+        // extension consults dv1/ unconditionally).
+        let push = execute_subquery(
+            &c,
+            &spec,
+            &SubQuery {
+                mode: ExecMode::Pushdown,
+                ..mk(5)
+            },
+            0.0,
+            &cpu,
+            None,
+        )
+        .unwrap();
+        let SubOutput::Rows(prows) = push.output else {
+            panic!("expected rows")
+        };
+        let Column::I64(push_ts) = prows.col("ts").unwrap() else {
+            panic!("expected i64 ts")
+        };
+        assert_eq!(&push_ts[..], &got_ts[..]);
+    }
+
+    #[test]
     fn shared_scan_failed_leader_falls_back_to_direct_fetch() {
         let c = cluster();
         let q = Query::scan("ds").aggregate(AggFunc::Count, "val");
@@ -615,6 +816,7 @@ mod tests {
             sorted_cols: vec![],
             header_prefix: layout::HEADER_PREFIX,
             index_col: None,
+            tombstones: 0,
         };
         let spec = server_pipeline(&q, sub.zone_maps);
         let cache = ScanCache::new();
@@ -666,6 +868,7 @@ mod tests {
             sorted_cols: vec![],
             header_prefix: layout::HEADER_PREFIX,
             index_col: None,
+            tombstones: 0,
         };
         let sub_c = SubQuery {
             mode: ExecMode::ClientSide,
@@ -707,6 +910,7 @@ mod tests {
             sorted_cols: vec![],
             header_prefix: layout::HEADER_PREFIX,
             index_col: None,
+            tombstones: 0,
         };
         let rp = exec(&c, &q, &mk(ExecMode::Pushdown), &cpu).unwrap();
         let rc = exec(&c, &q, &mk(ExecMode::ClientSide), &cpu).unwrap();
@@ -741,6 +945,7 @@ mod tests {
             sorted_cols: vec![],
             header_prefix: layout::HEADER_PREFIX,
             index_col: None,
+            tombstones: 0,
         };
         let rp = exec(&c, &q, &mk(ExecMode::Pushdown), &cpu).unwrap();
         let rc = exec(&c, &q, &mk(ExecMode::ClientSide), &cpu).unwrap();
@@ -775,6 +980,7 @@ mod tests {
             sorted_cols: vec![],
             header_prefix: layout::HEADER_PREFIX,
             index_col: None,
+            tombstones: 0,
         };
         let rp = exec(&c, &q, &mk(ExecMode::Pushdown), &cpu).unwrap();
         let rc = exec(&c, &q, &mk(ExecMode::ClientSide), &cpu).unwrap();
@@ -807,6 +1013,7 @@ mod tests {
             sorted_cols: vec![],
             header_prefix: layout::HEADER_PREFIX,
             index_col: None,
+            tombstones: 0,
         };
         let r = exec(&c, &q, &sub, &cpu).unwrap();
         let SubOutput::Rows(rows) = r.output else {
@@ -857,6 +1064,7 @@ mod tests {
             sorted_cols: vec![],
             header_prefix: layout::HEADER_PREFIX,
             index_col: None,
+            tombstones: 0,
         };
         let r = exec(&c, &q, &sub, &cpu).unwrap();
         let SubOutput::Aggs(states) = r.output else {
@@ -909,6 +1117,7 @@ mod tests {
                 sorted_cols: vec![],
                 header_prefix: layout::HEADER_PREFIX,
                 index_col: None,
+                tombstones: 0,
             };
             exec(&c, &q, &sub, &cpu).unwrap()
         };
@@ -965,6 +1174,7 @@ mod tests {
             sorted_cols,
             header_prefix: layout::HEADER_PREFIX,
             index_col: None,
+            tombstones: 0,
         };
         let bounded = exec(&c, &q, &mk(vec!["val".into()]), &cpu).unwrap();
         let full = exec(&c, &q, &mk(vec![]), &cpu).unwrap();
@@ -997,6 +1207,7 @@ mod tests {
             sorted_cols: vec![],
             header_prefix: layout::HEADER_PREFIX,
             index_col: None,
+            tombstones: 0,
         };
         assert!(exec(&c, &q, &sub, &cpu).is_err());
     }

@@ -559,6 +559,23 @@ impl Cluster {
         osds.iter().map(|o| o.inflight() as f64).sum::<f64>() / osds.len() as f64
     }
 
+    /// Cluster-wide mutation epoch: the sum of every OSD's mutation
+    /// counter. Any state change — replicated writes, deletes, xattr
+    /// stamps, or objclass calls whose handlers wrote — moves the epoch,
+    /// no matter which API path performed it. Caches of decoded object
+    /// bytes (the driver's single-flight `ScanCache`) stamp the epoch at
+    /// fill time and discard entries on mismatch, which makes this the
+    /// single invalidation choke point: mutation cannot bypass it the
+    /// way it could bypass driver-level `clear()` calls.
+    pub fn mutation_epoch(&self) -> u64 {
+        self.osds
+            .read()
+            .unwrap()
+            .iter()
+            .map(|o| o.mutations())
+            .sum()
+    }
+
     /// Mark one sub-query in flight against `name`'s primary OSD for the
     /// lifetime of the returned guard. The driver wraps every sub-query
     /// execution in one of these; benches hold batches of them to put a
@@ -844,6 +861,24 @@ mod tests {
         let c = cluster(4, 3);
         c.write_object(0.0, "only.one", b"x").unwrap();
         assert_eq!(c.list_objects(), vec!["only.one".to_string()]);
+    }
+
+    #[test]
+    fn mutation_epoch_moves_on_every_write_path() {
+        let c = cluster(3, 2);
+        let e0 = c.mutation_epoch();
+        c.write_object(0.0, "m.1", b"data").unwrap();
+        let e1 = c.mutation_epoch();
+        assert!(e1 > e0, "replicated write must move the epoch");
+        // Read-only ops do not move it.
+        c.read_object(0.0, "m.1").unwrap();
+        c.call(0.0, "m.1", "bytes", "stat", &[]).unwrap();
+        assert_eq!(c.mutation_epoch(), e1);
+        c.setxattr(0.0, "m.1", "k", b"v").unwrap();
+        let e2 = c.mutation_epoch();
+        assert!(e2 > e1, "xattr stamp must move the epoch");
+        c.delete_object(0.0, "m.1").unwrap();
+        assert!(c.mutation_epoch() > e2, "delete must move the epoch");
     }
 
     #[test]

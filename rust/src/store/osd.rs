@@ -10,7 +10,7 @@ use super::placement::OsdId;
 use crate::error::{Error, Result};
 use crate::simnet::{CostParams, Timeline};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// A value paired with the virtual time at which it became available.
@@ -69,6 +69,14 @@ pub struct Osd {
     /// OSD (as primary). Snapshotted at plan time into
     /// `CostParams::queue_depth` so concurrent load reprices pushdown.
     inflight: AtomicUsize,
+    /// Monotone count of state-changing operations on this OSD: every
+    /// write/delete/setxattr, plus any objclass call whose handler wrote
+    /// bytes. Summed cluster-wide into [`crate::store::cluster::Cluster::
+    /// mutation_epoch`], the single invalidation signal caches key off —
+    /// so mutation through *any* path (driver, direct cluster op, cls
+    /// handler) is observable without each caller remembering to tell
+    /// each cache.
+    mutations: AtomicU64,
 }
 
 impl Osd {
@@ -82,6 +90,7 @@ impl Osd {
             down: AtomicBool::new(false),
             counters: Mutex::new(OsdCounters::default()),
             inflight: AtomicUsize::new(0),
+            mutations: AtomicU64::new(0),
         }
     }
 
@@ -127,6 +136,15 @@ impl Osd {
         self.inflight.load(Ordering::SeqCst)
     }
 
+    /// State-changing operations applied to this OSD so far.
+    pub fn mutations(&self) -> u64 {
+        self.mutations.load(Ordering::SeqCst)
+    }
+
+    fn note_mutation(&self) {
+        self.mutations.fetch_add(1, Ordering::SeqCst);
+    }
+
     pub(crate) fn inflight_inc(&self) {
         self.inflight.fetch_add(1, Ordering::SeqCst);
     }
@@ -159,6 +177,7 @@ impl Osd {
             }
         }
         drop(inner);
+        self.note_mutation();
         self.count(0, data.len() as u64);
         let finish = self.charge(at, self.cost.dev_write_time(data.len() as u64));
         Ok(Timed::new((), finish))
@@ -216,6 +235,7 @@ impl Osd {
             inner.kv.delete(&k);
         }
         drop(inner);
+        self.note_mutation();
         self.count(0, 0);
         let finish = self.charge(at, self.cost.op_overhead_s);
         Ok(Timed::new((), finish))
@@ -265,6 +285,7 @@ impl Osd {
         let mut inner = self.inner.lock().unwrap();
         inner.kv.put(&xattr_key(name, key), value);
         drop(inner);
+        self.note_mutation();
         self.count(0, value.len() as u64);
         let finish = self.charge(at, self.cost.op_overhead_s);
         Ok(Timed::new((), finish))
@@ -312,6 +333,12 @@ impl Osd {
         let out = handler(&mut backend, input)?;
         let (br, bw, cpu) = (backend.bytes_read, backend.bytes_written, backend.cpu);
         drop(inner);
+        // Only handlers that actually wrote (data, xattrs, or omap — all
+        // metered through `bytes_written`) count as mutations; read-only
+        // pushdown calls must not invalidate shared-scan caches.
+        if bw > 0 {
+            self.note_mutation();
+        }
         {
             let mut c = self.counters.lock().unwrap();
             c.ops += 1;

@@ -812,6 +812,7 @@ mod tests {
             localities: vec![],
             cluster_by: String::new(),
             index_cols: vec![],
+            muta: Default::default(),
         };
         metadata::save_meta(&c, 0.0, "tab", &meta, false).unwrap();
         let mut f = VolFile::open(Box::new(ForwardingBackend::new(c)));

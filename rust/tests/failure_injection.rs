@@ -170,6 +170,7 @@ fn osd_death_mid_clustered_ingest_keeps_sortedness_markers_consistent() {
         IngestConfig {
             target_object_bytes: 24 * 1024,
             cluster_by: Some("val".into()),
+            index_cols: vec!["sensor".into()],
             ..Default::default()
         },
     )
@@ -194,6 +195,13 @@ fn osd_death_mid_clustered_ingest_keeps_sortedness_markers_consistent() {
         metadata::verify_sortedness(&s.cluster, "cstream").unwrap(),
         Vec::<String>::new()
     );
+    // Same invariant for the indexed ingest: no `ix1/` posting may refer
+    // to a row group whose data object never sealed, and every sealed
+    // object's postings must match a recomputation from its bytes.
+    assert_eq!(
+        metadata::verify_index(&s.cluster, "cstream").unwrap(),
+        Vec::<String>::new()
+    );
     let (meta, _) = metadata::load_meta(&s.cluster, 0.0, "cstream").unwrap();
     assert_eq!(meta.cluster_column(), Some("val"));
     // The clustered dataset still answers exactly: count and an
@@ -215,11 +223,15 @@ fn osd_death_mid_clustered_ingest_keeps_sortedness_markers_consistent() {
     };
     let want = all.iter().copied().fold(f32::INFINITY, f32::min);
     assert_eq!(got[0], want);
-    // Heal and re-verify: rebalance must not disturb the markers either.
+    // Heal and re-verify: rebalance must not disturb markers or postings.
     s.cluster.set_down(2, false);
     s.cluster.rebalance().unwrap();
     assert_eq!(
         metadata::verify_sortedness(&s.cluster, "cstream").unwrap(),
+        Vec::<String>::new()
+    );
+    assert_eq!(
+        metadata::verify_index(&s.cluster, "cstream").unwrap(),
         Vec::<String>::new()
     );
 }
@@ -318,6 +330,121 @@ fn osd_death_mid_burst_recovers_cleanly() {
         panic!()
     };
     assert_eq!(r.aggregates[0], baseline);
+}
+
+#[test]
+fn osd_death_mid_compaction_never_surfaces_half_compacted_state() {
+    // The compaction commit protocol under failure injection: kill the
+    // OSD that will host the first next-generation object, with no
+    // replication to hide behind. The compaction attempt must fail
+    // *before* its single metadata commit — so the old generation stays
+    // the visible dataset, bit for bit — and a retry after healing
+    // completes the job. At no point is a half-compacted object
+    // reachable through the metadata.
+    use skyhook_map::dataset::metadata;
+    use skyhook_map::dataset::naming;
+    use skyhook_map::skyhook::ExecMode;
+
+    let s = stack(5, 1);
+    s.driver
+        .write_table(
+            "d",
+            &gen::sensor_table(12_000, 83),
+            Layout::Col,
+            &PartitionSpec::with_target(16 * 1024)
+                .cluster_by("ts")
+                .index("sensor"),
+            None,
+        )
+        .unwrap();
+    // Tombstone a slab so the compaction has real work to do. (Under
+    // SKYHOOK_FORCE_COMPACT=1 this delete already compacts once; the
+    // test is generation-relative, so that only shifts g.)
+    let rows: Vec<u32> = (0..40).collect();
+    s.driver.delete_rows("d", 0, &rows).unwrap();
+
+    let (meta0, _) = metadata::load_meta(&s.cluster, 0.0, "d").unwrap();
+    let g = meta0.mutability().unwrap().generation;
+    let old_names = meta0.object_names("d");
+    let count_q = Query::scan("d").aggregate(AggFunc::Count, "val");
+    let modes = [None, Some(ExecMode::Pushdown), Some(ExecMode::ClientSide)];
+    let baseline_rows = s
+        .driver
+        .execute(&Query::scan("d"), None)
+        .unwrap()
+        .rows
+        .unwrap();
+    let baseline_count = s.driver.execute(&count_q, None).unwrap().aggregates[0];
+    assert_eq!(baseline_count, 12_000.0 - 40.0);
+
+    // Kill the primary of the first object compaction will write.
+    let victim = s.cluster.placement(&naming::table_object_gen("d", g + 1, 0))[0];
+    s.cluster.set_down(victim, true);
+    assert!(
+        s.driver.compact("d").is_err(),
+        "no replicas: the new-generation write must fail"
+    );
+
+    // Heal. The failed attempt must have left no visible trace: same
+    // generation, same objects, same answers, clean markers + postings.
+    s.cluster.set_down(victim, false);
+    let (meta1, _) = metadata::load_meta(&s.cluster, 0.0, "d").unwrap();
+    assert_eq!(meta1.mutability().unwrap().generation, g);
+    assert_eq!(meta1.object_names("d"), old_names);
+    for n in &old_names {
+        s.cluster
+            .read_object(0.0, n)
+            .unwrap_or_else(|e| panic!("{n} unreadable after failed compaction: {e}"));
+    }
+    for m in modes {
+        assert_eq!(
+            s.driver.execute(&count_q, m).unwrap().aggregates[0],
+            baseline_count
+        );
+    }
+    assert_eq!(
+        s.driver.execute(&Query::scan("d"), None).unwrap().rows.unwrap(),
+        baseline_rows
+    );
+    assert_eq!(
+        metadata::verify_sortedness(&s.cluster, "d").unwrap(),
+        Vec::<String>::new()
+    );
+    assert_eq!(
+        metadata::verify_index(&s.cluster, "d").unwrap(),
+        Vec::<String>::new()
+    );
+
+    // Retry: the commit lands, the generation flips, answers unchanged,
+    // and the old generation is finally gone.
+    s.driver.compact("d").unwrap();
+    let (meta2, _) = metadata::load_meta(&s.cluster, 0.0, "d").unwrap();
+    assert_eq!(meta2.mutability().unwrap().generation, g + 1);
+    assert!(meta2.mutability().unwrap().tombstones.is_empty());
+    for m in modes {
+        assert_eq!(
+            s.driver.execute(&count_q, m).unwrap().aggregates[0],
+            baseline_count
+        );
+    }
+    assert_eq!(
+        s.driver.execute(&Query::scan("d"), None).unwrap().rows.unwrap(),
+        baseline_rows
+    );
+    for n in &old_names {
+        assert!(
+            s.cluster.read_object(0.0, n).is_err(),
+            "old generation {n} must be gone after the commit"
+        );
+    }
+    assert_eq!(
+        metadata::verify_sortedness(&s.cluster, "d").unwrap(),
+        Vec::<String>::new()
+    );
+    assert_eq!(
+        metadata::verify_index(&s.cluster, "d").unwrap(),
+        Vec::<String>::new()
+    );
 }
 
 #[test]

@@ -7,7 +7,7 @@ use skyhook_map::dataset::partition::{pack_units, packing_stats, LogicalUnit};
 use skyhook_map::dataset::table::{Batch, Column};
 use skyhook_map::dataset::{ChunkGrid, Dataspace, DType, Hyperslab, TableSchema};
 use skyhook_map::skyhook::{
-    AggFunc, AggState, Aggregate, CmpOp, LogicalPlan, Predicate, SortKey,
+    sort_rows, AggFunc, AggState, Aggregate, CmpOp, LogicalPlan, Predicate, Query, SortKey,
 };
 use skyhook_map::store::{hash_name, OsdMap};
 use skyhook_map::util::quick::{forall, forall_explain};
@@ -1020,6 +1020,73 @@ fn shuffled_numeric_batch(rng: &mut Xoshiro256, rows: usize, with_nan: bool) -> 
     b
 }
 
+/// A random plan whose results are comparable across physical row
+/// orders: projections keep ts, sorted shapes end in the unique ts
+/// key (total order), unsorted row results are canonicalized by the
+/// caller, aggregates/groups are order-free by construction. Shared by
+/// the clustered-vs-unclustered and mutate-then-query properties.
+fn random_comparable_plan(r: &mut Xoshiro256, dataset: &str) -> Query {
+    let q = Query::scan(dataset).filter(random_numeric_pred(r, 3));
+    match r.range(0, 3) {
+        0 | 1 => {
+            let mut q = if r.chance(0.5) {
+                q.select(&["ts", "val"])
+            } else {
+                q.select(&["ts"])
+            };
+            let key = ["val", "ts", "sensor"][r.range(0, 2)];
+            match r.range(0, 2) {
+                0 => {} // unsorted: canonicalized before comparison
+                1 => {
+                    q = if r.chance(0.5) { q.sort(key) } else { q.sort_desc(key) };
+                    q = q.sort("ts");
+                }
+                _ => {
+                    q = if r.chance(0.5) { q.sort(key) } else { q.sort_desc(key) };
+                    q = q.sort("ts").limit(r.range(0, 30));
+                }
+            }
+            q
+        }
+        2 => {
+            let funcs = [
+                AggFunc::Count,
+                AggFunc::Sum,
+                AggFunc::Min,
+                AggFunc::Max,
+                AggFunc::Mean,
+                AggFunc::Var,
+                AggFunc::Median,
+            ];
+            let mut q = q;
+            for _ in 0..r.range(1, 2) {
+                q = q.aggregate(funcs[r.range(0, 6)], "val");
+            }
+            q
+        }
+        _ => {
+            let mut q = q
+                .group("sensor")
+                .aggregate(AggFunc::Count, "val")
+                .aggregate(AggFunc::Sum, "val");
+            if r.chance(0.5) {
+                q = q.having(Predicate::cmp(
+                    "count(val)",
+                    CmpOp::Gt,
+                    r.f64() * 10.0,
+                ));
+            }
+            q
+        }
+    }
+}
+
+/// Canonical row order for comparing row sets across physical
+/// layouts: the unique ts column is a total key.
+fn canon(b: &Batch) -> Batch {
+    sort_rows(b, &[SortKey::asc("ts")]).expect("projections keep ts")
+}
+
 #[test]
 fn clustered_and_unclustered_ingests_agree_on_random_plans() {
     // The headline equivalence property of sort-aware clustered ingest:
@@ -1034,7 +1101,7 @@ fn clustered_and_unclustered_ingests_agree_on_random_plans() {
     // the clustered column must never get *worse* by clustering.
     use skyhook_map::config::{ClusterConfig, DriverConfig};
     use skyhook_map::dataset::partition::PartitionSpec;
-    use skyhook_map::skyhook::{register_skyhook_class, sort_rows, Driver, ExecMode, Query};
+    use skyhook_map::skyhook::{register_skyhook_class, Driver, ExecMode};
     use skyhook_map::store::{ClassRegistry, Cluster};
 
     fn driver() -> Driver {
@@ -1055,72 +1122,6 @@ fn clustered_and_unclustered_ingests_agree_on_random_plans() {
                 ..Default::default()
             },
         )
-    }
-
-    /// A random plan whose results are comparable across physical row
-    /// orders: projections keep ts, sorted shapes end in the unique ts
-    /// key (total order), unsorted row results are canonicalized by the
-    /// caller, aggregates/groups are order-free by construction.
-    fn random_comparable_plan(r: &mut Xoshiro256, dataset: &str) -> Query {
-        let q = Query::scan(dataset).filter(random_numeric_pred(r, 3));
-        match r.range(0, 3) {
-            0 | 1 => {
-                let mut q = if r.chance(0.5) {
-                    q.select(&["ts", "val"])
-                } else {
-                    q.select(&["ts"])
-                };
-                let key = ["val", "ts", "sensor"][r.range(0, 2)];
-                match r.range(0, 2) {
-                    0 => {} // unsorted: canonicalized before comparison
-                    1 => {
-                        q = if r.chance(0.5) { q.sort(key) } else { q.sort_desc(key) };
-                        q = q.sort("ts");
-                    }
-                    _ => {
-                        q = if r.chance(0.5) { q.sort(key) } else { q.sort_desc(key) };
-                        q = q.sort("ts").limit(r.range(0, 30));
-                    }
-                }
-                q
-            }
-            2 => {
-                let funcs = [
-                    AggFunc::Count,
-                    AggFunc::Sum,
-                    AggFunc::Min,
-                    AggFunc::Max,
-                    AggFunc::Mean,
-                    AggFunc::Var,
-                    AggFunc::Median,
-                ];
-                let mut q = q;
-                for _ in 0..r.range(1, 2) {
-                    q = q.aggregate(funcs[r.range(0, 6)], "val");
-                }
-                q
-            }
-            _ => {
-                let mut q = q
-                    .group("sensor")
-                    .aggregate(AggFunc::Count, "val")
-                    .aggregate(AggFunc::Sum, "val");
-                if r.chance(0.5) {
-                    q = q.having(Predicate::cmp(
-                        "count(val)",
-                        CmpOp::Gt,
-                        r.f64() * 10.0,
-                    ));
-                }
-                q
-            }
-        }
-    }
-
-    /// Canonical row order for comparing row sets across physical
-    /// layouts: the unique ts column is a total key.
-    fn canon(b: &Batch) -> Batch {
-        sort_rows(b, &[SortKey::asc("ts")]).expect("projections keep ts")
     }
 
     let feq = |a: f64, b: f64| {
@@ -1246,6 +1247,229 @@ fn clustered_and_unclustered_ingests_agree_on_random_plans() {
                     "clustering made pruning worse on {ccol}: {} < {}",
                     rc.stats.objects_pruned, ru.stats.objects_pruned
                 ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn mutated_and_rebuilt_datasets_agree_on_random_plans() {
+    // The mutability equivalence property: a dataset whose logical
+    // content was reached through a random interleaving of row-group
+    // appends, tombstone deletes, and re-clustering compactions must
+    // answer random plans exactly like the same logical table ingested
+    // from scratch — under all three forced modes. The model (the
+    // "rebuilt" table) is maintained client-side: appends concat, a
+    // delete drops the tombstoned rows by their unique ts key, compaction
+    // is a logical no-op. Honors SKYHOOK_PROP_SEED; under
+    // SKYHOOK_FORCE_COMPACT=1 every mutation also compacts, which only
+    // adds interleavings — the property must keep holding.
+    use skyhook_map::config::{ClusterConfig, DriverConfig};
+    use skyhook_map::dataset::metadata::{load_meta, verify_index, verify_sortedness};
+    use skyhook_map::dataset::partition::PartitionSpec;
+    use skyhook_map::skyhook::{register_skyhook_class, Driver, ExecMode};
+    use skyhook_map::store::{ClassRegistry, Cluster};
+    use std::collections::HashSet;
+
+    fn driver() -> Driver {
+        let mut reg = ClassRegistry::with_builtins();
+        register_skyhook_class(&mut reg, None);
+        let cluster = Cluster::new(
+            &ClusterConfig {
+                osds: 3,
+                replicas: 1,
+                ..Default::default()
+            },
+            reg,
+        );
+        Driver::new(
+            cluster,
+            DriverConfig {
+                workers: 2,
+                ..Default::default()
+            },
+        )
+    }
+
+    /// Rows with globally unique ts continuing at `*next_ts`, so ts stays
+    /// a total key across the whole mutated dataset — deletes can then be
+    /// mirrored into the model by key, and unsorted row results remain
+    /// canonicalizable.
+    fn fresh_rows(rng: &mut Xoshiro256, next_ts: &mut i64, rows: usize) -> Batch {
+        let mut b = random_numeric_batch(rng, rows, true);
+        let Column::I64(ts) = &mut b.columns[0] else {
+            unreachable!()
+        };
+        for t in ts.iter_mut() {
+            *t += *next_ts;
+        }
+        *next_ts += rows as i64;
+        b
+    }
+
+    let feq = |a: f64, b: f64| {
+        a == b || (a.is_nan() && b.is_nan()) || (a - b).abs() <= 1e-9 * (1.0 + a.abs())
+    };
+
+    forall_explain(
+        prop_seed(29),
+        6,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Xoshiro256::new(seed);
+            let d = driver();
+            let mut next_ts = 0i64;
+            let rows = rng.range(40, 160);
+            let mut reference = fresh_rows(&mut rng, &mut next_ts, rows);
+            let mut spec = PartitionSpec::with_target(2048);
+            match rng.range(0, 2) {
+                0 => {}
+                1 => spec = spec.cluster_by("ts"),
+                _ => spec = spec.cluster_by("val"),
+            }
+            if rng.chance(0.5) {
+                spec = spec.index("sensor");
+            }
+            d.write_table("m", &reference, Layout::Col, &spec, None)
+                .map_err(|e| e.to_string())?;
+
+            let steps = rng.range(3, 8);
+            for _ in 0..steps {
+                match rng.range(0, 2) {
+                    0 => {
+                        // Append a fresh slab; the model grows by concat.
+                        let extra = fresh_rows(&mut rng, &mut next_ts, rng.range(10, 60));
+                        d.append("m", &extra, 2048).map_err(|e| e.to_string())?;
+                        reference.concat(&extra).map_err(|e| e.to_string())?;
+                    }
+                    1 => {
+                        // Tombstone random rows of a random object, then
+                        // mirror the delete into the model by ts key (the
+                        // stored object names which rows the object-local
+                        // ids hit — re-picking already-dead ids is the
+                        // idempotence case and leaves the model alone).
+                        let (meta, _) =
+                            load_meta(d.cluster(), 0.0, "m").map_err(|e| e.to_string())?;
+                        let names = meta.object_names("m");
+                        if names.is_empty() {
+                            continue;
+                        }
+                        let oi = rng.range(0, names.len() - 1);
+                        let t = d
+                            .cluster()
+                            .read_object(0.0, &names[oi])
+                            .map_err(|e| e.to_string())?;
+                        let (ob, _) = decode_batch(&t.value).map_err(|e| e.to_string())?;
+                        if ob.nrows() == 0 {
+                            continue;
+                        }
+                        let k = rng.range(1, ob.nrows().min(25));
+                        let ids: Vec<u32> = (0..k)
+                            .map(|_| rng.range(0, ob.nrows() - 1) as u32)
+                            .collect();
+                        d.delete_rows("m", oi, &ids).map_err(|e| e.to_string())?;
+                        let Column::I64(ots) = &ob.columns[0] else {
+                            unreachable!()
+                        };
+                        let dead: HashSet<i64> =
+                            ids.iter().map(|&i| ots[i as usize]).collect();
+                        let Column::I64(rts) = &reference.columns[0] else {
+                            unreachable!()
+                        };
+                        let keep: Vec<bool> = rts.iter().map(|t| !dead.contains(t)).collect();
+                        reference = reference.filter(&keep).map_err(|e| e.to_string())?;
+                    }
+                    _ => {
+                        // Re-clustering compaction: a logical no-op.
+                        d.compact("m").map_err(|e| e.to_string())?;
+                    }
+                }
+            }
+
+            // The debug re-scans must hold at whatever state the
+            // interleaving left behind: markers never overclaim, and the
+            // postings match a recomputation from the stored bytes.
+            let bad = verify_sortedness(d.cluster(), "m").map_err(|e| e.to_string())?;
+            if !bad.is_empty() {
+                return Err(format!("sortedness markers broke: {bad:?}"));
+            }
+            let bad = verify_index(d.cluster(), "m").map_err(|e| e.to_string())?;
+            if !bad.is_empty() {
+                return Err(format!("index postings broke: {bad:?}"));
+            }
+
+            // Rebuild the model as a plain ingest and demand agreement on
+            // random plans in all three modes.
+            d.write_table(
+                "r",
+                &reference,
+                Layout::Col,
+                &PartitionSpec::with_target(2048),
+                None,
+            )
+            .map_err(|e| e.to_string())?;
+            for _ in 0..4 {
+                let qm = random_comparable_plan(&mut rng.clone(), "m");
+                let qr = random_comparable_plan(&mut rng, "r");
+                let ordered = !qm.sort_keys.is_empty();
+                for mode in [None, Some(ExecMode::Pushdown), Some(ExecMode::ClientSide)] {
+                    let (rm, rr) = match (d.execute(&qm, mode), d.execute(&qr, mode)) {
+                        (Err(_), Err(_)) => continue,
+                        (Ok(a), Ok(b)) => (a, b),
+                        _ => {
+                            return Err(format!(
+                                "error-ness diverges mutated-vs-rebuilt for {qm:?} ({mode:?})"
+                            ))
+                        }
+                    };
+                    match (&rm.rows, &rr.rows) {
+                        (None, None) => {}
+                        (Some(a), Some(b)) => {
+                            let (a, b) = if ordered {
+                                (a.clone(), b.clone())
+                            } else {
+                                (canon(a), canon(b))
+                            };
+                            if !batches_bit_equal(&a, &b) {
+                                return Err(format!(
+                                    "rows diverge mutated-vs-rebuilt for {qm:?} ({mode:?})"
+                                ));
+                            }
+                        }
+                        _ => return Err(format!("row presence diverges for {qm:?}")),
+                    }
+                    if rm.aggregates.len() != rr.aggregates.len()
+                        || !rm
+                            .aggregates
+                            .iter()
+                            .zip(&rr.aggregates)
+                            .all(|(x, y)| feq(*x, *y))
+                    {
+                        return Err(format!(
+                            "aggregates diverge mutated-vs-rebuilt for {qm:?} ({mode:?}): \
+                             {:?} vs {:?}",
+                            rm.aggregates, rr.aggregates
+                        ));
+                    }
+                    match (&rm.groups, &rr.groups) {
+                        (None, None) => {}
+                        (Some(a), Some(b)) => {
+                            if a.len() != b.len()
+                                || !a.iter().zip(b).all(|(x, y)| {
+                                    x.0 == y.0
+                                        && x.1.len() == y.1.len()
+                                        && x.1.iter().zip(&y.1).all(|(p, q)| feq(*p, *q))
+                                })
+                            {
+                                return Err(format!(
+                                    "groups diverge mutated-vs-rebuilt for {qm:?} ({mode:?})"
+                                ));
+                            }
+                        }
+                        _ => return Err(format!("group presence diverges for {qm:?}")),
+                    }
+                }
             }
             Ok(())
         },

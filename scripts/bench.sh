@@ -21,8 +21,12 @@
 #   BENCH_vol.json        — E8 (VOL stack overhead + E8d planned-vs-static
 #                           filtered-read A/B) + E9 (media ablation + E9b
 #                           per-chunk offload mode flip)
+#   BENCH_churn.json      — E4f (mutable datasets: churn-then-compact —
+#                           cost strictly degrades under appends+deletes,
+#                           returns within 10% of baseline after
+#                           compaction, bit-identical answers throughout)
 #
-# Usage: scripts/bench.sh [pushdown.json [compose.json [costmodel.json [physdesign.json [kernel.json [index.json [concurrency.json [vol.json]]]]]]]]
+# Usage: scripts/bench.sh [pushdown.json [compose.json [costmodel.json [physdesign.json [kernel.json [index.json [concurrency.json [vol.json [churn.json]]]]]]]]]
 #
 # Each snapshot records wall time per bench plus the raw table output
 # (which includes bytes_moved / objects_pruned / sim_seconds columns).
@@ -37,6 +41,7 @@ kernel_json=${5:-BENCH_kernel.json}
 index_json=${6:-BENCH_index.json}
 concurrency_json=${7:-BENCH_concurrency.json}
 vol_json=${8:-BENCH_vol.json}
+churn_json=${9:-BENCH_churn.json}
 workdir=$(mktemp -d)
 trap 'rm -rf "$workdir"' EXIT
 
@@ -67,6 +72,7 @@ run_bench e10_index || status=1
 run_bench e11_concurrency || status=1
 run_bench e8_vol_stack || status=1
 run_bench e9_media_ablation || status=1
+run_bench e4f_churn || status=1
 
 snapshot() {
     local out=$1
@@ -113,5 +119,6 @@ snapshot "$kernel_json" e1_table1_forwarding e2_pushdown
 snapshot "$index_json" e10_index
 snapshot "$concurrency_json" e11_concurrency
 snapshot "$vol_json" e8_vol_stack e9_media_ablation
+snapshot "$churn_json" e4f_churn
 
 exit $status
